@@ -1,0 +1,55 @@
+//! Morphological classification at depth (paper Fig. 3 left): train the MC
+//! task with an increasingly deep encoder and show that MGRIT layer-
+//! parallel training matches serial validation accuracy while exposing
+//! N/c_f-way parallelism.
+//!
+//! Run with:  cargo run --release --example morpho_tagging [--depth N]
+
+use layertime::config::{presets, MgritConfig};
+use layertime::coordinator::{Task, TrainRun};
+use layertime::mgrit::GridHierarchy;
+use layertime::model::{Init, ParamStore};
+use layertime::util::cli::Args;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env();
+    let depth = args.get_usize("depth", 32);
+    let steps = args.get_usize("steps", 100);
+
+    let mut rc = presets::mc_tiny();
+    rc.model.n_enc_layers = depth;
+    rc.mgrit = MgritConfig { cf: 2, levels: 2, fwd_iters: Some(2), bwd_iters: Some(1), fcf: true };
+    rc.train.steps = steps;
+    rc.train.eval_every = (steps / 5).max(1);
+    rc.train.opt = layertime::config::OptKind::Adam;
+    rc.train.lr = 3e-3;
+
+    let grid = GridHierarchy::new(depth, rc.mgrit.cf, rc.mgrit.levels);
+    println!(
+        "MC task, {} encoder layers; MGRIT grid {:?}, relaxation exposes {}-way parallelism",
+        depth,
+        grid.steps,
+        grid.relax_parallelism(0)
+    );
+
+    let init = ParamStore::init(&rc.model, Init::Default, rc.train.seed);
+    let mut serial_rc = rc.clone();
+    serial_rc.mgrit = MgritConfig::serial();
+    let mut serial = TrainRun::from_params(serial_rc, Task::Tag, init.deep_clone(), None)?;
+    let s_rep = serial.train()?;
+    let mut lp = TrainRun::from_params(rc, Task::Tag, init, None)?;
+    let p_rep = lp.train()?;
+
+    println!("\n        validation accuracy");
+    println!("step    serial   layer-parallel");
+    for (a, b) in s_rep.evals.iter().zip(&p_rep.evals) {
+        println!("{:>5}   {:<6.3}   {:<6.3}", a.step, a.metric, b.metric);
+    }
+    println!(
+        "\nfinal: serial {:.3} vs layer-parallel {:.3}  (Δ = {:+.3})",
+        s_rep.final_metric,
+        p_rep.final_metric,
+        p_rep.final_metric - s_rep.final_metric
+    );
+    Ok(())
+}

@@ -1,0 +1,111 @@
+"""AOT compiler: lower every L2 entry point to HLO *text* + manifest.json.
+
+Run once at build time (`make artifacts`); the rust coordinator then loads
+the artifacts through the PJRT C API and Python never appears on the
+training path.
+
+Interchange format is HLO text, NOT a serialized HloModuleProto: jax >= 0.5
+emits protos with 64-bit instruction ids that the crate's xla_extension
+0.5.1 rejects (`proto.id() <= INT_MAX`); the text parser reassigns ids and
+round-trips cleanly (see /opt/xla-example/README.md). Lowering goes through
+stablehlo -> XlaComputation with return_tuple=True, so the rust side always
+unwraps a tuple.
+
+Usage:
+    python -m compile.aot --out ../artifacts [--d-model 64 --seq 32 ...]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .kernels import attention, mlp, ref
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo MLIR -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    return comp.as_hlo_text()
+
+
+def _shape_desc(s) -> dict:
+    dt = {"float32": "f32", "int32": "i32"}[str(s.dtype)]
+    return {"shape": list(s.shape), "dtype": dt}
+
+
+def lower_all(cfg: model.ModelConfig, out_dir: str,
+              use_pallas: bool = True) -> dict:
+    """Lower every entry point; returns the manifest dict."""
+    os.makedirs(out_dir, exist_ok=True)
+    entries = {}
+    for name, (fn, args) in model.entry_points(cfg, use_pallas=use_pallas).items():
+        lowered = jax.jit(fn).lower(*args)
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(out_dir, fname), "w") as f:
+            f.write(text)
+        out_shapes = jax.eval_shape(fn, *args)
+        if not isinstance(out_shapes, (tuple, list)):
+            out_shapes = (out_shapes,)
+        entries[name] = {
+            "file": fname,
+            "inputs": [_shape_desc(a) for a in args],
+            "outputs": [_shape_desc(o) for o in out_shapes],
+        }
+        print(f"  lowered {name:<16} -> {fname} ({len(text)} chars)")
+
+    manifest = {
+        "format": "hlo-text/v1",
+        "use_pallas": use_pallas,
+        "config": cfg.to_json(),
+        "param_layout": ref.param_layout(cfg.dims),
+        "flops": {
+            "enc_step": model.step_flops(cfg, decoder=False),
+            "dec_step": model.step_flops(cfg, decoder=True),
+        },
+        "vmem": {
+            "attention_bytes": attention.vmem_footprint_bytes(
+                cfg.seq, cfg.seq, cfg.dims.head_dim, cfg.block_q, cfg.block_k),
+            "mlp_bytes": mlp.vmem_footprint_bytes(
+                cfg.d_model, cfg.d_ff, cfg.block_rows),
+        },
+        "entries": entries,
+    }
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    return manifest
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--vocab", type=int, default=64)
+    ap.add_argument("--d-model", type=int, default=64)
+    ap.add_argument("--n-heads", type=int, default=4)
+    ap.add_argument("--d-ff", type=int, default=128)
+    ap.add_argument("--seq", type=int, default=32)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--n-classes", type=int, default=8)
+    ap.add_argument("--no-pallas", action="store_true",
+                    help="lower the pure-jnp reference instead of Pallas")
+    args = ap.parse_args()
+
+    cfg = model.ModelConfig(
+        vocab=args.vocab, d_model=args.d_model, n_heads=args.n_heads,
+        d_ff=args.d_ff, seq=args.seq, batch=args.batch,
+        n_classes=args.n_classes)
+    print(f"AOT-lowering {cfg} -> {args.out}")
+    m = lower_all(cfg, args.out, use_pallas=not args.no_pallas)
+    print(f"wrote {len(m['entries'])} entry points + manifest.json")
+
+
+if __name__ == "__main__":
+    main()

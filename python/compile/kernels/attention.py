@@ -1,0 +1,128 @@
+"""Pallas flash-attention kernel — the L1 compute hot-spot.
+
+The paper's GPU hot-spot is the quadratic attention core inside phi1/phi3.
+Rethought for TPU (DESIGN.md §Hardware-Adaptation): instead of CUDA
+threadblocks + shared memory, we express the HBM<->VMEM schedule with a
+`BlockSpec` grid over (batch*heads, query tiles). Each grid program keeps a
+[block_q, head_dim] query tile plus a running (max, sum, acc) softmax state
+resident in VMEM and streams key/value tiles through it (the classic
+flash-attention recurrence). Contractions use `jnp.dot` with
+preferred_element_type=f32 so the TPU lowering targets the MXU.
+
+`interpret=True` is mandatory on this testbed: real TPU lowering emits a
+Mosaic custom-call the CPU PJRT plugin cannot execute. Correctness is
+pinned against the pure-jnp oracle `ref.attention_core` by pytest.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _pick_block(n: int, want: int) -> int:
+    """Largest divisor of n that is <= want (block shapes must tile exactly)."""
+    b = min(want, n)
+    while n % b != 0:
+        b -= 1
+    return b
+
+
+def _attention_kernel(q_ref, k_ref, v_ref, o_ref, *, block_k: int,
+                      seq_k: int, causal: bool, block_q: int):
+    """One grid program: queries tile (i, j) against all key/value tiles."""
+    qb = q_ref[0]  # [block_q, hd] VMEM-resident
+    hd = qb.shape[-1]
+    scale = 1.0 / math.sqrt(hd)
+
+    j = pl.program_id(1)
+    q_pos = j * block_q + jax.lax.broadcasted_iota(jnp.int32, (block_q, 1), 0)
+
+    m = jnp.full((block_q, 1), NEG_INF, dtype=jnp.float32)
+    l = jnp.zeros((block_q, 1), dtype=jnp.float32)
+    acc = jnp.zeros((block_q, hd), dtype=jnp.float32)
+
+    # Static (unrolled) stream over K/V tiles: each iteration touches one
+    # [block_k, hd] panel — this is the HBM->VMEM pipeline a TPU would
+    # double-buffer.
+    for kc in range(seq_k // block_k):
+        kb = k_ref[0, kc * block_k:(kc + 1) * block_k, :]
+        vb = v_ref[0, kc * block_k:(kc + 1) * block_k, :]
+        s = jnp.dot(qb, kb.T, preferred_element_type=jnp.float32) * scale
+        if causal:
+            k_pos = kc * block_k + jax.lax.broadcasted_iota(
+                jnp.int32, (1, block_k), 1)
+            s = jnp.where(q_pos >= k_pos, s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1, keepdims=True))
+        alpha = jnp.exp(m - m_new)
+        p = jnp.exp(s - m_new)
+        l = l * alpha + jnp.sum(p, axis=-1, keepdims=True)
+        acc = acc * alpha + jnp.dot(p, vb, preferred_element_type=jnp.float32)
+        m = m_new
+
+    o_ref[0] = acc / l
+
+
+def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                    causal: bool = False, block_q: int = 32,
+                    block_k: int = 32, interpret: bool = True) -> jnp.ndarray:
+    """softmax(q k^T / sqrt(hd)) v for q,k,v of shape [BH, S, hd].
+
+    Drop-in replacement for `ref.attention_core` (after head split); supports
+    self- and cross-attention (different key length) plus causal masking.
+    """
+    bh, sq, hd = q.shape
+    sk = k.shape[1]
+    bq = _pick_block(sq, block_q)
+    bk = _pick_block(sk, block_k)
+
+    kernel = functools.partial(_attention_kernel, block_k=bk, seq_k=sk,
+                               causal=causal, block_q=bq)
+    return pl.pallas_call(
+        kernel,
+        grid=(bh, sq // bq),
+        in_specs=[
+            pl.BlockSpec((1, bq, hd), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, sk, hd), lambda i, j: (i, 0, 0)),
+            pl.BlockSpec((1, sk, hd), lambda i, j: (i, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, hd), lambda i, j: (i, j, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, sq, hd), jnp.float32),
+        interpret=interpret,
+    )(q, k, v)
+
+
+def attention_core(q4: jnp.ndarray, k4: jnp.ndarray, v4: jnp.ndarray, *,
+                   causal: bool = False, interpret: bool = True,
+                   block_q: int = 32, block_k: int = 32) -> jnp.ndarray:
+    """[B,H,S,hd]-shaped wrapper matching `ref.attention_core`'s signature."""
+    b, h, sq, hd = q4.shape
+    sk = k4.shape[2]
+    out = flash_attention(
+        q4.reshape(b * h, sq, hd), k4.reshape(b * h, sk, hd),
+        v4.reshape(b * h, sk, hd), causal=causal,
+        block_q=block_q, block_k=block_k, interpret=interpret)
+    return out.reshape(b, h, sq, hd)
+
+
+def vmem_footprint_bytes(seq_q: int, seq_k: int, hd: int,
+                         block_q: int = 32, block_k: int = 32) -> int:
+    """Estimated VMEM bytes one grid program keeps live (f32).
+
+    q tile + k/v panels (double-buffered) + softmax state + acc + out tile.
+    Used by the §Perf roofline notes in EXPERIMENTS.md.
+    """
+    bq = _pick_block(seq_q, block_q)
+    bk = _pick_block(seq_k, block_k)
+    f = 4  # bytes per f32
+    q_tile = bq * hd * f
+    kv_panels = 2 * 2 * bk * hd * f  # k and v, double-buffered
+    state = (2 * bq + 2 * bq * hd) * f  # m, l, acc, out
+    scores = bq * bk * f
+    return q_tile + kv_panels + state + scores

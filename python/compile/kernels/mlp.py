@@ -1,0 +1,82 @@
+"""Pallas fused pre-LN MLP kernel (phi2 = MLP o LN) — second L1 hot-spot.
+
+TPU adaptation (DESIGN.md §Hardware-Adaptation): the activation matrix
+[B*S, D] is tiled into row blocks that stay VMEM-resident across the whole
+LN -> GEMM -> GELU -> GEMM chain, so the intermediate [block_rows, d_ff]
+tensor never round-trips to HBM — the fusion a GPU implementation gets from
+a handwritten epilogue kernel. Weight panels W1 [D,F], W2 [F,D] are small
+enough at the paper's widths to remain resident; both GEMMs use `jnp.dot`
+with preferred_element_type=f32 to target the MXU.
+
+interpret=True for CPU-PJRT execution; oracle is `ref.mlp(ref.layer_norm(.))`.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+LN_EPS = 1e-5
+
+
+def _pick_block(n: int, want: int) -> int:
+    b = min(want, n)
+    while n % b != 0:
+        b -= 1
+    return b
+
+
+def _ln_mlp_kernel(x_ref, g_ref, b_ref, w1_ref, b1_ref, w2_ref, b2_ref, o_ref):
+    """One row-tile: out = GELU(LN(x) @ W1 + b1) @ W2 + b2."""
+    x = x_ref[...]  # [block_rows, D]
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+    z = (x - mu) * jax.lax.rsqrt(var + LN_EPS) * g_ref[...] + b_ref[...]
+    hmid = jnp.dot(z, w1_ref[...], preferred_element_type=jnp.float32)
+    hmid = jax.nn.gelu(hmid + b1_ref[...], approximate=True)
+    o_ref[...] = jnp.dot(hmid, w2_ref[...],
+                         preferred_element_type=jnp.float32) + b2_ref[...]
+
+
+def fused_ln_mlp(x2d: jnp.ndarray, g: jnp.ndarray, b: jnp.ndarray,
+                 w1: jnp.ndarray, b1: jnp.ndarray, w2: jnp.ndarray,
+                 b2: jnp.ndarray, *, block_rows: int = 64,
+                 interpret: bool = True) -> jnp.ndarray:
+    """phi2 core on flattened activations: x2d [R, D] -> [R, D]."""
+    r, d = x2d.shape
+    f = w1.shape[1]
+    br = _pick_block(r, block_rows)
+
+    full = lambda i: (0,)            # 1-D params replicated to every program
+    full2 = lambda i: (0, 0)         # 2-D weight panels likewise
+    return pl.pallas_call(
+        _ln_mlp_kernel,
+        grid=(r // br,),
+        in_specs=[
+            pl.BlockSpec((br, d), lambda i: (i, 0)),
+            pl.BlockSpec((d,), full), pl.BlockSpec((d,), full),
+            pl.BlockSpec((d, f), full2), pl.BlockSpec((f,), full),
+            pl.BlockSpec((f, d), full2), pl.BlockSpec((d,), full),
+        ],
+        out_specs=pl.BlockSpec((br, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((r, d), jnp.float32),
+        interpret=interpret,
+    )(x2d, g, b, w1, b1, w2, b2)
+
+
+def phi2_pallas(x: jnp.ndarray, g, b, w1, b1, w2, b2, *,
+                block_rows: int = 64, interpret: bool = True) -> jnp.ndarray:
+    """[B,S,D]-shaped wrapper matching `ref.phi2` (params unpacked)."""
+    bsz, s, d = x.shape
+    out = fused_ln_mlp(x.reshape(bsz * s, d), g, b, w1, b1, w2, b2,
+                       block_rows=block_rows, interpret=interpret)
+    return out.reshape(bsz, s, d)
+
+
+def vmem_footprint_bytes(d: int, f: int, block_rows: int = 64) -> int:
+    """VMEM bytes one grid program holds (f32): x tile + weights + hidden."""
+    fb = 4
+    return (block_rows * d * 2 + d * f * 2 + block_rows * f + 2 * d + f) * fb

@@ -1,0 +1,243 @@
+"""Pure-jnp reference (oracle) for the neural-ODE transformer steps.
+
+Implements eq. (1)-(3) of "Layer-Parallel Training for Transformers":
+pre-LN transformer blocks viewed as a forward-Euler step
+
+    X_{n+1} = X_n + h * F_enc(t_n, X_n),
+    F_enc(x) = phi1(x) + phi2(x + phi1(x)),
+    phi1 = SA o LN,  phi2 = MLP o LN,
+
+and for encoder-decoder (eq. 2):
+
+    Ybar   = phi1(y) + phi3(y + phi1(y), X_enc),
+    Y_{n+1}= Y_n + h * (Ybar + phi2(Y_n + Ybar)),
+    phi3 = CA o LN   (cross-attention).
+
+Everything here is plain jax.numpy: this module is the correctness oracle
+the Pallas kernels (kernels/attention.py, kernels/mlp.py) are tested
+against, and it supplies the VJPs used by the AOT backward entry points.
+
+Parameter layout (flat theta vector) — MUST stay in sync with
+`param_layout()` below, which is exported to artifacts/manifest.json and
+consumed by the rust coordinator (rust/src/model/spec.rs).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+LN_EPS = 1e-5
+
+
+class ModelDims(NamedTuple):
+    """Shape hyperparameters of one transformer stack (see paper Table 2)."""
+
+    d_model: int
+    n_heads: int
+    d_ff: int
+
+    @property
+    def head_dim(self) -> int:
+        assert self.d_model % self.n_heads == 0
+        return self.d_model // self.n_heads
+
+
+# ---------------------------------------------------------------------------
+# flat parameter layout
+# ---------------------------------------------------------------------------
+
+def enc_layout(dims: ModelDims):
+    """(name, shape) pairs, in order, for one encoder (or decoder-only) layer."""
+    d, f = dims.d_model, dims.d_ff
+    return [
+        ("ln1_g", (d,)), ("ln1_b", (d,)),
+        ("wq", (d, d)), ("wk", (d, d)), ("wv", (d, d)), ("wo", (d, d)),
+        ("ln2_g", (d,)), ("ln2_b", (d,)),
+        ("w1", (d, f)), ("b1", (f,)),
+        ("w2", (f, d)), ("b2", (d,)),
+    ]
+
+
+def dec_layout(dims: ModelDims):
+    """Layout for one encoder-decoder *decoder* layer (adds LN3 + cross-attn)."""
+    d = dims.d_model
+    return enc_layout(dims) + [
+        ("ln3_g", (d,)), ("ln3_b", (d,)),
+        ("cq", (d, d)), ("ck", (d, d)), ("cv", (d, d)), ("co", (d, d)),
+    ]
+
+
+def layout_size(layout) -> int:
+    return sum(math.prod(s) for _, s in layout)
+
+
+def unflatten(theta: jnp.ndarray, layout) -> dict:
+    """Split a flat parameter vector into named tensors per the layout."""
+    out, off = {}, 0
+    for name, shape in layout:
+        n = math.prod(shape)
+        out[name] = theta[off:off + n].reshape(shape)
+        off += n
+    return out
+
+
+def flatten(params: dict, layout) -> jnp.ndarray:
+    return jnp.concatenate([params[name].reshape(-1) for name, _ in layout])
+
+
+def param_layout(dims: ModelDims) -> dict:
+    """Manifest-ready description of the per-layer flat layouts."""
+
+    def describe(layout):
+        entries, off = [], 0
+        for name, shape in layout:
+            n = math.prod(shape)
+            entries.append({"name": name, "shape": list(shape), "offset": off, "size": n})
+            off += n
+        return {"params": entries, "total": off}
+
+    return {"encoder_layer": describe(enc_layout(dims)),
+            "decoder_layer": describe(dec_layout(dims))}
+
+
+# ---------------------------------------------------------------------------
+# primitive blocks
+# ---------------------------------------------------------------------------
+
+def layer_norm(x: jnp.ndarray, g: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """LayerNorm over the trailing (feature) axis."""
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(var + LN_EPS) * g + b
+
+
+def split_heads(x: jnp.ndarray, n_heads: int) -> jnp.ndarray:
+    """[B,S,D] -> [B,H,S,hd]."""
+    b, s, d = x.shape
+    return x.reshape(b, s, n_heads, d // n_heads).transpose(0, 2, 1, 3)
+
+
+def merge_heads(x: jnp.ndarray) -> jnp.ndarray:
+    """[B,H,S,hd] -> [B,S,D]."""
+    b, h, s, hd = x.shape
+    return x.transpose(0, 2, 1, 3).reshape(b, s, h * hd)
+
+
+def attention_core(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                   causal: bool = False) -> jnp.ndarray:
+    """softmax(q k^T / sqrt(hd)) v over [B,H,Sq,hd] x [B,H,Sk,hd]."""
+    hd = q.shape[-1]
+    scores = jnp.einsum("bhqd,bhkd->bhqk", q, k) / jnp.sqrt(jnp.float32(hd))
+    if causal:
+        sq, sk = q.shape[2], k.shape[2]
+        mask = jnp.tril(jnp.ones((sq, sk), dtype=bool), k=sk - sq)
+        scores = jnp.where(mask, scores, jnp.float32(-1e30))
+    probs = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", probs, v)
+
+
+def mha(x: jnp.ndarray, kv: jnp.ndarray, wq, wk, wv, wo, n_heads: int,
+        causal: bool = False) -> jnp.ndarray:
+    """Multi-head attention; self-attention when kv is x, cross otherwise."""
+    q = split_heads(x @ wq, n_heads)
+    k = split_heads(kv @ wk, n_heads)
+    v = split_heads(kv @ wv, n_heads)
+    return merge_heads(attention_core(q, k, v, causal=causal)) @ wo
+
+
+def mlp(x: jnp.ndarray, w1, b1, w2, b2) -> jnp.ndarray:
+    """Position-wise feed-forward with GELU."""
+    return jax.nn.gelu(x @ w1 + b1, approximate=True) @ w2 + b2
+
+
+# ---------------------------------------------------------------------------
+# the paper's phi sublayers and Euler steps
+# ---------------------------------------------------------------------------
+
+def phi1(x, p, n_heads: int, causal: bool):
+    """phi1 = SA o LN (self-attention on the layer-normed input)."""
+    z = layer_norm(x, p["ln1_g"], p["ln1_b"])
+    return mha(z, z, p["wq"], p["wk"], p["wv"], p["wo"], n_heads, causal=causal)
+
+
+def phi2(x, p):
+    """phi2 = MLP o LN."""
+    return mlp(layer_norm(x, p["ln2_g"], p["ln2_b"]), p["w1"], p["b1"], p["w2"], p["b2"])
+
+
+def phi3(y, x_enc, p, n_heads: int):
+    """phi3 = CA o LN (cross-attention: queries from y, keys/values from X_enc)."""
+    z = layer_norm(y, p["ln3_g"], p["ln3_b"])
+    return mha(z, x_enc, p["cq"], p["ck"], p["cv"], p["co"], n_heads, causal=False)
+
+
+def f_enc(x, p, n_heads: int, causal: bool = False):
+    """F_enc(x) = phi1(x) + phi2(x + phi1(x))   (eq. 1)."""
+    a = phi1(x, p, n_heads, causal)
+    return a + phi2(x + a, p)
+
+
+def f_dec(y, x_enc, p, n_heads: int):
+    """F_dec(y, X_enc) = Ybar + phi2(y + Ybar), Ybar = phi1(y)+phi3(y+phi1(y)) (eq. 2)."""
+    a = phi1(y, p, n_heads, causal=True)
+    ybar = a + phi3(y + a, x_enc, p, n_heads)
+    return ybar + phi2(y + ybar, p)
+
+
+def enc_step(x: jnp.ndarray, theta: jnp.ndarray, h: jnp.ndarray,
+             dims: ModelDims, causal: bool = False) -> jnp.ndarray:
+    """One forward-Euler layer step X_{n+1} = X_n + h F_enc(X_n)  (eq. 3)."""
+    p = unflatten(theta, enc_layout(dims))
+    return x + h * f_enc(x, p, dims.n_heads, causal=causal)
+
+
+def dec_step(y: jnp.ndarray, x_enc: jnp.ndarray, theta: jnp.ndarray,
+             h: jnp.ndarray, dims: ModelDims) -> jnp.ndarray:
+    """One forward-Euler decoder step Y_{n+1} = Y_n + h F_dec(Y_n, X_enc)."""
+    p = unflatten(theta, dec_layout(dims))
+    return y + h * f_dec(y, x_enc, p, dims.n_heads)
+
+
+# ---------------------------------------------------------------------------
+# embeddings, heads, losses (entry points outside the ODE)
+# ---------------------------------------------------------------------------
+
+def embed(tokens: jnp.ndarray, w_emb: jnp.ndarray, w_pos: jnp.ndarray) -> jnp.ndarray:
+    """Token + positional embedding: i32[B,S] -> f32[B,S,D]."""
+    return w_emb[tokens] + w_pos[None, : tokens.shape[1], :]
+
+
+def lm_loss(x: jnp.ndarray, w_out: jnp.ndarray, targets: jnp.ndarray,
+            mask: jnp.ndarray):
+    """Masked token-level cross-entropy (MLM when mask marks masked slots,
+    causal LM when mask is all-ones). Returns (mean loss, #correct)."""
+    logits = x @ w_out  # [B,S,V]
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    denom = jnp.maximum(jnp.sum(mask), 1.0)
+    loss = jnp.sum(nll * mask) / denom
+    correct = jnp.sum((jnp.argmax(logits, axis=-1) == targets) * mask)
+    return loss, correct
+
+
+def cls_loss(x: jnp.ndarray, w_cls: jnp.ndarray, labels: jnp.ndarray):
+    """Mean-pooled sequence classification CE. Returns (mean loss, #correct)."""
+    pooled = jnp.mean(x, axis=1)  # [B,D]
+    logits = pooled @ w_cls  # [B,C]
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, labels[:, None], axis=-1)[:, 0]
+    correct = jnp.sum(jnp.argmax(logits, axis=-1) == labels)
+    return jnp.mean(nll), correct
+
+
+def tag_loss(x: jnp.ndarray, w_cls: jnp.ndarray, labels: jnp.ndarray):
+    """Per-token tagging CE (morphological classification task). labels i32[B,S]."""
+    logits = x @ w_cls  # [B,S,C]
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+    correct = jnp.sum(jnp.argmax(logits, axis=-1) == labels)
+    return jnp.mean(nll), correct

@@ -1,0 +1,263 @@
+"""L2: the neural-ODE transformer compute graph (build-time JAX).
+
+Composes the L1 Pallas kernels (kernels/attention.py, kernels/mlp.py) into
+the paper's Euler step functions Phi and exposes every AOT entry point the
+rust coordinator executes through PJRT:
+
+    enc_step / causal_step / dec_step        — Phi (forward propagator)
+    *_vjp                                    — adjoint step + parameter grads
+    embed / embed_vjp                        — token+positional embedding
+    lm_loss / lm_loss_vjp                    — (masked) token cross-entropy
+    cls_loss / cls_loss_vjp                  — sequence classification head
+    tag_loss / tag_loss_vjp                  — per-token tagging head
+
+Autodiff note: pallas_call has no built-in VJP rule, so each Pallas-backed
+step is wrapped in jax.custom_vjp whose backward pass differentiates the
+*reference* implementation (kernels/ref.py). pytest pins kernel == ref, so
+forward (Pallas) and backward (ref-VJP) are mutually consistent; a single
+lowered `*_vjp` program therefore contains the Pallas forward recompute and
+the exact adjoint in one fused HLO module.
+
+The step size h is a runtime scalar input: one artifact serves every MGRIT
+level (level l evaluates the same Phi with h * c_f^l).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field, asdict
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import ref
+from .kernels.attention import attention_core as pallas_attention
+from .kernels.mlp import phi2_pallas
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    """Full model + batch geometry baked into one artifact set."""
+
+    vocab: int = 64
+    d_model: int = 64
+    n_heads: int = 4
+    d_ff: int = 128
+    seq: int = 32
+    batch: int = 8
+    n_classes: int = 8
+    block_q: int = 32
+    block_k: int = 32
+    block_rows: int = 64
+
+    @property
+    def dims(self) -> ref.ModelDims:
+        return ref.ModelDims(self.d_model, self.n_heads, self.d_ff)
+
+    @property
+    def p_enc(self) -> int:
+        return ref.layout_size(ref.enc_layout(self.dims))
+
+    @property
+    def p_dec(self) -> int:
+        return ref.layout_size(ref.dec_layout(self.dims))
+
+    def to_json(self) -> dict:
+        d = asdict(self)
+        d["p_enc"] = self.p_enc
+        d["p_dec"] = self.p_dec
+        d["head_dim"] = self.dims.head_dim
+        return d
+
+
+# ---------------------------------------------------------------------------
+# Pallas-backed phi sublayers
+# ---------------------------------------------------------------------------
+
+def _phi1_pallas(x, p, cfg: ModelConfig, causal: bool):
+    """phi1 with the flash-attention Pallas core (projections stay in XLA,
+    which fuses them; the quadratic core runs in the kernel)."""
+    z = ref.layer_norm(x, p["ln1_g"], p["ln1_b"])
+    q = ref.split_heads(z @ p["wq"], cfg.n_heads)
+    k = ref.split_heads(z @ p["wk"], cfg.n_heads)
+    v = ref.split_heads(z @ p["wv"], cfg.n_heads)
+    a = pallas_attention(q, k, v, causal=causal,
+                         block_q=cfg.block_q, block_k=cfg.block_k)
+    return ref.merge_heads(a) @ p["wo"]
+
+
+def _phi3_pallas(y, x_enc, p, cfg: ModelConfig):
+    z = ref.layer_norm(y, p["ln3_g"], p["ln3_b"])
+    q = ref.split_heads(z @ p["cq"], cfg.n_heads)
+    k = ref.split_heads(x_enc @ p["ck"], cfg.n_heads)
+    v = ref.split_heads(x_enc @ p["cv"], cfg.n_heads)
+    a = pallas_attention(q, k, v, causal=False,
+                         block_q=cfg.block_q, block_k=cfg.block_k)
+    return ref.merge_heads(a) @ p["co"]
+
+
+def _phi2(x, p, cfg: ModelConfig):
+    return phi2_pallas(x, p["ln2_g"], p["ln2_b"], p["w1"], p["b1"],
+                       p["w2"], p["b2"], block_rows=cfg.block_rows)
+
+
+def _enc_step_pallas(x, theta, h, cfg: ModelConfig, causal: bool):
+    p = ref.unflatten(theta, ref.enc_layout(cfg.dims))
+    a = _phi1_pallas(x, p, cfg, causal)
+    return x + h * (a + _phi2(x + a, p, cfg))
+
+
+def _dec_step_pallas(y, x_enc, theta, h, cfg: ModelConfig):
+    p = ref.unflatten(theta, ref.dec_layout(cfg.dims))
+    a = _phi1_pallas(y, p, cfg, causal=True)
+    ybar = a + _phi3_pallas(y + a, x_enc, p, cfg)
+    return y + h * (ybar + _phi2(y + ybar, p, cfg))
+
+
+# ---------------------------------------------------------------------------
+# custom-vjp step functions (Pallas forward, ref adjoint)
+# ---------------------------------------------------------------------------
+
+def make_enc_step(cfg: ModelConfig, causal: bool, use_pallas: bool = True):
+    """Returns step(x, theta, h) -> x' with a ref-based custom VJP."""
+
+    def ref_step(x, theta, h):
+        return ref.enc_step(x, theta, h, cfg.dims, causal=causal)
+
+    if not use_pallas:
+        return ref_step
+
+    @jax.custom_vjp
+    def step(x, theta, h):
+        return _enc_step_pallas(x, theta, h, cfg, causal)
+
+    def fwd(x, theta, h):
+        return step(x, theta, h), (x, theta, h)
+
+    def bwd(res, ct):
+        x, theta, h = res
+        _, vjp = jax.vjp(ref_step, x, theta, h)
+        return vjp(ct)
+
+    step.defvjp(fwd, bwd)
+    return step
+
+
+def make_dec_step(cfg: ModelConfig, use_pallas: bool = True):
+    """Returns step(y, x_enc, theta, h) -> y' with a ref-based custom VJP."""
+
+    def ref_step(y, x_enc, theta, h):
+        return ref.dec_step(y, x_enc, theta, h, cfg.dims)
+
+    if not use_pallas:
+        return ref_step
+
+    @jax.custom_vjp
+    def step(y, x_enc, theta, h):
+        return _dec_step_pallas(y, x_enc, theta, h, cfg)
+
+    def fwd(y, x_enc, theta, h):
+        return step(y, x_enc, theta, h), (y, x_enc, theta, h)
+
+    def bwd(res, ct):
+        y, x_enc, theta, h = res
+        _, vjp = jax.vjp(ref_step, y, x_enc, theta, h)
+        return vjp(ct)
+
+    step.defvjp(fwd, bwd)
+    return step
+
+
+# ---------------------------------------------------------------------------
+# AOT entry points
+# ---------------------------------------------------------------------------
+
+def entry_points(cfg: ModelConfig, use_pallas: bool = True) -> dict:
+    """name -> (callable, example_args). Everything the rust runtime loads."""
+    f32, i32 = jnp.float32, jnp.int32
+    B, S, D, V, C = cfg.batch, cfg.seq, cfg.d_model, cfg.vocab, cfg.n_classes
+
+    x = jax.ShapeDtypeStruct((B, S, D), f32)
+    th_e = jax.ShapeDtypeStruct((cfg.p_enc,), f32)
+    th_d = jax.ShapeDtypeStruct((cfg.p_dec,), f32)
+    h = jax.ShapeDtypeStruct((), f32)
+    tok = jax.ShapeDtypeStruct((B, S), i32)
+    msk = jax.ShapeDtypeStruct((B, S), f32)
+    lbl = jax.ShapeDtypeStruct((B,), i32)
+
+    enc = make_enc_step(cfg, causal=False, use_pallas=use_pallas)
+    cau = make_enc_step(cfg, causal=True, use_pallas=use_pallas)
+    dec = make_dec_step(cfg, use_pallas=use_pallas)
+
+    def enc_vjp(xv, th, hv, ct):
+        _, vjp = jax.vjp(enc, xv, th, hv)
+        lam, g, _ = vjp(ct)
+        return lam, g
+
+    def cau_vjp(xv, th, hv, ct):
+        _, vjp = jax.vjp(cau, xv, th, hv)
+        lam, g, _ = vjp(ct)
+        return lam, g
+
+    def dec_vjp(yv, xe, th, hv, ct):
+        _, vjp = jax.vjp(dec, yv, xe, th, hv)
+        lam_y, lam_x, g, _ = vjp(ct)
+        return lam_y, lam_x, g
+
+    w_emb = jax.ShapeDtypeStruct((V, D), f32)
+    w_pos = jax.ShapeDtypeStruct((S, D), f32)
+    w_out = jax.ShapeDtypeStruct((D, V), f32)
+    w_cls = jax.ShapeDtypeStruct((D, C), f32)
+
+    def embed_vjp(tk, ct):
+        we = jnp.zeros((V, D), f32)
+        wp = jnp.zeros((S, D), f32)
+        _, vjp = jax.vjp(lambda we_, wp_: ref.embed(tk, we_, wp_), we, wp)
+        return vjp(ct)
+
+    def lm_loss_vjp(xv, w, tgt, m):
+        (loss, correct), vjp = jax.vjp(
+            lambda xv_, w_: ref.lm_loss(xv_, w_, tgt, m), xv, w)
+        lam, gw = vjp((jnp.float32(1.0), jnp.float32(0.0)))
+        return loss, correct, lam, gw
+
+    def cls_loss_vjp(xv, w, lb):
+        (loss, correct), vjp = jax.vjp(
+            lambda xv_, w_: ref.cls_loss(xv_, w_, lb), xv, w)
+        lam, gw = vjp((jnp.float32(1.0), jnp.float32(0.0)))
+        return loss, correct, lam, gw
+
+    def tag_loss_vjp(xv, w, lb):
+        (loss, correct), vjp = jax.vjp(
+            lambda xv_, w_: ref.tag_loss(xv_, w_, lb), xv, w)
+        lam, gw = vjp((jnp.float32(1.0), jnp.float32(0.0)))
+        return loss, correct, lam, gw
+
+    tags = jax.ShapeDtypeStruct((B, S), i32)
+
+    return {
+        "enc_step": (lambda a, b_, c: (enc(a, b_, c),), (x, th_e, h)),
+        "enc_step_vjp": (enc_vjp, (x, th_e, h, x)),
+        "causal_step": (lambda a, b_, c: (cau(a, b_, c),), (x, th_e, h)),
+        "causal_step_vjp": (cau_vjp, (x, th_e, h, x)),
+        "dec_step": (lambda a, b_, c, d: (dec(a, b_, c, d),), (x, x, th_d, h)),
+        "dec_step_vjp": (dec_vjp, (x, x, th_d, h, x)),
+        "embed": (lambda t, we, wp: (ref.embed(t, we, wp),), (tok, w_emb, w_pos)),
+        "embed_vjp": (embed_vjp, (tok, x)),
+        "lm_loss": (lambda a, w, t, m: ref.lm_loss(a, w, t, m), (x, w_out, tok, msk)),
+        "lm_loss_vjp": (lm_loss_vjp, (x, w_out, tok, msk)),
+        "cls_loss": (lambda a, w, l: ref.cls_loss(a, w, l), (x, w_cls, lbl)),
+        "cls_loss_vjp": (cls_loss_vjp, (x, w_cls, lbl)),
+        "tag_loss": (lambda a, w, l: ref.tag_loss(a, w, l), (x, w_cls, tags)),
+        "tag_loss_vjp": (tag_loss_vjp, (x, w_cls, tags)),
+    }
+
+
+def step_flops(cfg: ModelConfig, decoder: bool = False) -> int:
+    """Rough FLOP count of one Phi application (feeds the L3 simulator)."""
+    B, S, D, F = cfg.batch, cfg.seq, cfg.d_model, cfg.d_ff
+    attn = 4 * B * S * D * D * 2 + 2 * B * S * S * D * 2  # qkvo + core
+    mlp_f = 2 * B * S * D * F * 2
+    total = attn + mlp_f
+    if decoder:
+        total += attn  # cross-attention
+    return total

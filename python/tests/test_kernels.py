@@ -1,0 +1,135 @@
+"""L1 correctness: Pallas kernels vs the pure-jnp oracle (kernels/ref.py).
+
+hypothesis sweeps shapes / head counts / block sizes / masks; every case
+asserts allclose against the reference. This is the core correctness signal
+for the kernels that end up inside the AOT artifacts.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import attention, mlp, ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+RTOL = 2e-5
+ATOL = 2e-5
+
+
+def rand(key, shape, scale=1.0):
+    return jax.random.normal(jax.random.PRNGKey(key), shape) * scale
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=25, deadline=None)
+@given(
+    b=st.integers(1, 3),
+    h=st.sampled_from([1, 2, 4]),
+    sq=st.sampled_from([4, 8, 16, 24, 32]),
+    hd=st.sampled_from([4, 8, 16]),
+    causal=st.booleans(),
+    bq=st.sampled_from([4, 8, 16, 32]),
+    bk=st.sampled_from([4, 8, 16, 32]),
+)
+def test_flash_attention_matches_ref(b, h, sq, hd, causal, bq, bk):
+    q = rand(1, (b, h, sq, hd))
+    k = rand(2, (b, h, sq, hd))
+    v = rand(3, (b, h, sq, hd))
+    got = attention.attention_core(q, k, v, causal=causal,
+                                   block_q=bq, block_k=bk)
+    want = ref.attention_core(q, k, v, causal=causal)
+    np.testing.assert_allclose(got, want, rtol=RTOL, atol=ATOL)
+
+
+@settings(max_examples=10, deadline=None)
+@given(sq=st.sampled_from([4, 8, 16]), sk=st.sampled_from([8, 16, 32]))
+def test_flash_attention_cross_lengths(sq, sk):
+    """Cross-attention: query and key lengths differ."""
+    q = rand(1, (2, 2, sq, 8))
+    k = rand(2, (2, 2, sk, 8))
+    v = rand(3, (2, 2, sk, 8))
+    got = attention.attention_core(q, k, v, causal=False, block_q=4, block_k=8)
+    want = ref.attention_core(q, k, v, causal=False)
+    np.testing.assert_allclose(got, want, rtol=RTOL, atol=ATOL)
+
+
+def test_flash_attention_causal_masks_future():
+    """Output at position i must not depend on positions > i."""
+    q = rand(1, (1, 1, 16, 8))
+    k = rand(2, (1, 1, 16, 8))
+    v = rand(3, (1, 1, 16, 8))
+    base = attention.attention_core(q, k, v, causal=True, block_q=4, block_k=4)
+    k2 = k.at[:, :, 12:, :].set(99.0)
+    v2 = v.at[:, :, 12:, :].set(-99.0)
+    pert = attention.attention_core(q, k2, v2, causal=True, block_q=4, block_k=4)
+    np.testing.assert_allclose(base[:, :, :12], pert[:, :, :12],
+                               rtol=RTOL, atol=ATOL)
+
+
+def test_flash_attention_softmax_rows_convex():
+    """Attention output lies in the convex hull of the value rows."""
+    q = rand(1, (1, 1, 8, 4), scale=3.0)
+    k = rand(2, (1, 1, 8, 4), scale=3.0)
+    v = rand(3, (1, 1, 8, 4))
+    out = attention.attention_core(q, k, v, block_q=4, block_k=4)
+    assert float(jnp.max(out)) <= float(jnp.max(v)) + 1e-5
+    assert float(jnp.min(out)) >= float(jnp.min(v)) - 1e-5
+
+
+def test_pick_block_divides():
+    for n in [1, 2, 3, 7, 16, 24, 32, 100]:
+        for want in [1, 4, 8, 32, 64]:
+            b = attention._pick_block(n, want)
+            assert n % b == 0 and 1 <= b <= max(1, min(want, n))
+
+
+def test_vmem_footprint_reported():
+    bytes_ = attention.vmem_footprint_bytes(128, 128, 64)
+    assert 0 < bytes_ < 16 * 1024 * 1024  # fits VMEM
+
+
+# ---------------------------------------------------------------------------
+# fused LN+MLP
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=25, deadline=None)
+@given(
+    rows=st.sampled_from([4, 8, 32, 48, 64]),
+    d=st.sampled_from([8, 16, 32, 64]),
+    f=st.sampled_from([16, 32, 128]),
+    br=st.sampled_from([4, 16, 64]),
+)
+def test_fused_ln_mlp_matches_ref(rows, d, f, br):
+    x = rand(1, (rows, d))
+    g = rand(2, (d,), 0.2) + 1.0
+    b = rand(3, (d,), 0.2)
+    w1 = rand(4, (d, f), 0.3)
+    b1 = rand(5, (f,), 0.1)
+    w2 = rand(6, (f, d), 0.3)
+    b2 = rand(7, (d,), 0.1)
+    got = mlp.fused_ln_mlp(x, g, b, w1, b1, w2, b2, block_rows=br)
+    want = ref.mlp(ref.layer_norm(x, g, b), w1, b1, w2, b2)
+    np.testing.assert_allclose(got, want, rtol=5e-5, atol=5e-5)
+
+
+def test_phi2_pallas_3d_wrapper():
+    x = rand(1, (2, 8, 16))
+    g, b = jnp.ones(16), jnp.zeros(16)
+    w1, b1 = rand(2, (16, 32), 0.2), jnp.zeros(32)
+    w2, b2 = rand(3, (32, 16), 0.2), jnp.zeros(16)
+    got = mlp.phi2_pallas(x, g, b, w1, b1, w2, b2, block_rows=8)
+    want = ref.mlp(ref.layer_norm(x, g, b), w1, b1, w2, b2)
+    np.testing.assert_allclose(got, want, rtol=5e-5, atol=5e-5)
+
+
+def test_ln_zero_mean_unit_var():
+    x = rand(1, (4, 64), 5.0)
+    z = ref.layer_norm(x, jnp.ones(64), jnp.zeros(64))
+    np.testing.assert_allclose(jnp.mean(z, -1), 0.0, atol=1e-5)
+    np.testing.assert_allclose(jnp.std(z, -1), 1.0, atol=1e-3)

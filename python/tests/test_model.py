@@ -1,0 +1,222 @@
+"""L2 correctness: neural-ODE step functions, VJP entry points, losses.
+
+Checks (a) Pallas-backed steps == reference steps, (b) every *_vjp entry
+point == jax.grad of the forward, (c) the ODE/Euler structural properties
+the MGRIT theory relies on (h -> 0 limit, residual form), (d) loss heads.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels import ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+CFG = model.ModelConfig(vocab=32, d_model=32, n_heads=4, d_ff=64,
+                        seq=16, batch=2, n_classes=4)
+
+
+def rand(key, shape, scale=1.0):
+    return jax.random.normal(jax.random.PRNGKey(key), shape) * scale
+
+
+@pytest.fixture(scope="module")
+def data():
+    x = rand(0, (CFG.batch, CFG.seq, CFG.d_model))
+    th_e = rand(1, (CFG.p_enc,), 0.05)
+    th_d = rand(2, (CFG.p_dec,), 0.05)
+    return x, th_e, th_d
+
+
+# ---------------------------------------------------------------------------
+# step functions
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("causal", [False, True])
+def test_pallas_step_matches_ref(data, causal):
+    x, th_e, _ = data
+    h = jnp.float32(0.5)
+    step = model.make_enc_step(CFG, causal=causal)
+    got = step(x, th_e, h)
+    want = ref.enc_step(x, th_e, h, CFG.dims, causal=causal)
+    np.testing.assert_allclose(got, want, rtol=5e-5, atol=5e-5)
+
+
+def test_dec_step_matches_ref(data):
+    x, _, th_d = data
+    y = rand(3, x.shape)
+    h = jnp.float32(0.5)
+    step = model.make_dec_step(CFG)
+    got = step(y, x, th_d, h)
+    want = ref.dec_step(y, x, th_d, h, CFG.dims)
+    np.testing.assert_allclose(got, want, rtol=5e-5, atol=5e-5)
+
+
+def test_step_is_euler_residual(data):
+    """X' - X must scale linearly in h (forward-Euler structure, eq. 3)."""
+    x, th_e, _ = data
+    step = model.make_enc_step(CFG, causal=False, use_pallas=False)
+    d1 = step(x, th_e, jnp.float32(0.1)) - x
+    d2 = step(x, th_e, jnp.float32(0.2)) - x
+    np.testing.assert_allclose(2.0 * d1, d2, rtol=1e-4, atol=1e-5)
+
+
+def test_step_h_zero_is_identity(data):
+    x, th_e, _ = data
+    step = model.make_enc_step(CFG, causal=False)
+    np.testing.assert_allclose(step(x, th_e, jnp.float32(0.0)), x,
+                               rtol=1e-6, atol=1e-6)
+
+
+def test_causal_step_no_future_dependence(data):
+    """Causal step output at position i ignores tokens at positions > i."""
+    x, th_e, _ = data
+    step = model.make_enc_step(CFG, causal=True, use_pallas=False)
+    base = step(x, th_e, jnp.float32(1.0))
+    x2 = x.at[:, -4:, :].add(7.0)
+    pert = step(x2, th_e, jnp.float32(1.0))
+    np.testing.assert_allclose(base[:, :-4], pert[:, :-4], rtol=1e-5, atol=1e-5)
+
+
+def test_encoder_step_full_dependence(data):
+    """Non-causal step: early positions DO see late tokens.
+
+    Uses a larger parameter scale than the shared fixture: at scale 0.05 the
+    softmax sensitivity of position 0 to a tail perturbation underflows f32.
+    """
+    x, _, _ = data
+    th_e = rand(11, (CFG.p_enc,), 0.5)
+    step = model.make_enc_step(CFG, causal=False, use_pallas=False)
+    base = step(x, th_e, jnp.float32(1.0))
+    pert = step(x.at[:, -1, :].add(7.0), th_e, jnp.float32(1.0))
+    assert float(jnp.max(jnp.abs(base[:, 0] - pert[:, 0]))) > 1e-6
+
+
+# ---------------------------------------------------------------------------
+# VJP entry points vs jax.grad
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("causal", [False, True])
+def test_step_vjp_matches_grad(data, causal):
+    x, th_e, _ = data
+    h = jnp.float32(0.25)
+    ct = rand(9, x.shape)
+    step_ref = lambda xv, tv: ref.enc_step(xv, tv, h, CFG.dims, causal=causal)
+
+    step = model.make_enc_step(CFG, causal=causal)
+    _, vjp = jax.vjp(step, x, th_e, h)
+    lam, g_th, _ = vjp(ct)
+
+    def scalar(xv, tv):
+        return jnp.vdot(step_ref(xv, tv), ct)
+
+    g_x, g_t = jax.grad(scalar, argnums=(0, 1))(x, th_e)
+    np.testing.assert_allclose(lam, g_x, rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(g_th, g_t, rtol=1e-4, atol=1e-4)
+
+
+def test_dec_step_vjp_matches_grad(data):
+    x, _, th_d = data
+    y = rand(4, x.shape)
+    h = jnp.float32(0.25)
+    ct = rand(9, x.shape)
+    step = model.make_dec_step(CFG)
+    _, vjp = jax.vjp(step, y, x, th_d, h)
+    lam_y, lam_x, g_th, _ = vjp(ct)
+
+    def scalar(yv, xv, tv):
+        return jnp.vdot(ref.dec_step(yv, xv, tv, h, CFG.dims), ct)
+
+    gy, gx, gt = jax.grad(scalar, argnums=(0, 1, 2))(y, x, th_d)
+    np.testing.assert_allclose(lam_y, gy, rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(lam_x, gx, rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(g_th, gt, rtol=1e-4, atol=1e-4)
+
+
+def test_lm_loss_vjp_entry(data):
+    x, _, _ = data
+    w = rand(5, (CFG.d_model, CFG.vocab), 0.1)
+    tgt = jax.random.randint(jax.random.PRNGKey(6), (CFG.batch, CFG.seq), 0, CFG.vocab)
+    msk = jnp.ones((CFG.batch, CFG.seq), jnp.float32)
+    eps = model.entry_points(CFG, use_pallas=False)
+    loss, correct, lam, gw = eps["lm_loss_vjp"][0](x, w, tgt, msk)
+    gl_x, gl_w = jax.grad(lambda xv, wv: ref.lm_loss(xv, wv, tgt, msk)[0],
+                          argnums=(0, 1))(x, w)
+    np.testing.assert_allclose(lam, gl_x, rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(gw, gl_w, rtol=1e-4, atol=1e-5)
+    assert 0 <= float(correct) <= CFG.batch * CFG.seq
+
+
+def test_cls_and_tag_loss_vjp(data):
+    x, _, _ = data
+    w = rand(5, (CFG.d_model, CFG.n_classes), 0.1)
+    eps = model.entry_points(CFG, use_pallas=False)
+
+    lbl = jax.random.randint(jax.random.PRNGKey(7), (CFG.batch,), 0, CFG.n_classes)
+    loss, correct, lam, gw = eps["cls_loss_vjp"][0](x, w, lbl)
+    g = jax.grad(lambda xv: ref.cls_loss(xv, w, lbl)[0])(x)
+    np.testing.assert_allclose(lam, g, rtol=1e-4, atol=1e-5)
+
+    tags = jax.random.randint(jax.random.PRNGKey(8), (CFG.batch, CFG.seq), 0,
+                              CFG.n_classes)
+    loss, correct, lam, gw = eps["tag_loss_vjp"][0](x, w, tags)
+    g = jax.grad(lambda xv: ref.tag_loss(xv, w, tags)[0])(x)
+    np.testing.assert_allclose(lam, g, rtol=1e-4, atol=1e-5)
+
+
+def test_embed_and_vjp():
+    V, D, S, B = CFG.vocab, CFG.d_model, CFG.seq, CFG.batch
+    we, wp = rand(1, (V, D)), rand(2, (S, D))
+    tok = jax.random.randint(jax.random.PRNGKey(3), (B, S), 0, V)
+    x = ref.embed(tok, we, wp)
+    assert x.shape == (B, S, D)
+    np.testing.assert_allclose(x[0, 0], we[tok[0, 0]] + wp[0], rtol=1e-6)
+
+    eps = model.entry_points(CFG, use_pallas=False)
+    ct = rand(4, (B, S, D))
+    g_we, g_wp = eps["embed_vjp"][0](tok, ct)
+    gw = jax.grad(lambda w: jnp.vdot(ref.embed(tok, w, wp), ct))(we)
+    np.testing.assert_allclose(g_we, gw, rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# layouts / config
+# ---------------------------------------------------------------------------
+
+def test_flatten_unflatten_roundtrip():
+    layout = ref.enc_layout(CFG.dims)
+    theta = rand(1, (CFG.p_enc,))
+    p = ref.unflatten(theta, layout)
+    np.testing.assert_allclose(ref.flatten(p, layout), theta)
+
+
+def test_param_sizes():
+    d, f = CFG.d_model, CFG.d_ff
+    assert CFG.p_enc == 4 * d * d + 2 * d * f + 5 * d + f
+    assert CFG.p_dec == CFG.p_enc + 2 * d + 4 * d * d
+
+
+@settings(max_examples=10, deadline=None)
+@given(d=st.sampled_from([8, 16, 32]), hds=st.sampled_from([1, 2, 4]),
+       f=st.sampled_from([16, 32]))
+def test_param_layout_manifest_consistent(d, hds, f):
+    dims = ref.ModelDims(d, hds, f)
+    pl_ = ref.param_layout(dims)
+    for key, layout in (("encoder_layer", ref.enc_layout(dims)),
+                        ("decoder_layer", ref.dec_layout(dims))):
+        total = pl_[key]["total"]
+        assert total == ref.layout_size(layout)
+        off = 0
+        for e, (name, shape) in zip(pl_[key]["params"], layout):
+            assert e["name"] == name and tuple(e["shape"]) == shape
+            assert e["offset"] == off
+            off += e["size"]
+
+
+def test_step_flops_positive():
+    assert model.step_flops(CFG) > 0
+    assert model.step_flops(CFG, decoder=True) > model.step_flops(CFG)

@@ -1,0 +1,93 @@
+//! Figure 12 — buffer-layer ablation (Appendix B): decoder-only training
+//! with 20 layers, comparing
+//!   buffer:    2+2 serial open/close layers (Δt=1), middle 16 with Δt=1/16
+//!   no buffer: all 20 layers in the ParallelNet with Δt=1/20
+//! Left panel: the two *serial* runs have indistinguishable loss.
+//! Right panel: |serial − layer-parallel| loss gap — buffers shrink it.
+
+use layertime::config::{presets, MgritConfig, RunConfig};
+use layertime::coordinator::{Task, TrainReport, TrainRun};
+use layertime::model::{Init, ParamStore};
+use layertime::util::csv::CsvWriter;
+use layertime::util::table::{f, i, Table};
+
+fn run(rc: &RunConfig, serial: bool, init: &ParamStore) -> anyhow::Result<TrainReport> {
+    let mut rc = rc.clone();
+    if serial {
+        rc.mgrit = MgritConfig::serial();
+    }
+    rc.train.adaptive = false;
+    let mut r = TrainRun::from_params(rc, Task::Lm, init.deep_clone(), None)?;
+    r.warm_start = false;
+    r.train()
+}
+
+fn main() -> anyhow::Result<()> {
+    let steps = 80usize;
+    let mk = |buffers: bool| -> RunConfig {
+        let mut rc = presets::gpt_small();
+        presets::shrink_for_bench(&mut rc);
+        rc.model.n_dec_layers = 20;
+        rc.model.buffer_open = if buffers { 2 } else { 0 };
+        rc.model.buffer_close = if buffers { 2 } else { 0 };
+        rc.mgrit =
+            MgritConfig { cf: 4, levels: 2, fwd_iters: Some(1), bwd_iters: Some(1), fcf: true };
+        rc.train.steps = steps;
+        rc.train.eval_every = 1000;
+        rc.train.lr = 3e-3;
+        rc
+    };
+
+    let rc_buf = mk(true);
+    let rc_nobuf = mk(false);
+    println!(
+        "buffer config: middle {} layers at dt=1/{} | no-buffer: 20 layers at dt=1/20-equivalent (dt=1)",
+        rc_buf.model.parallel_layers(),
+        rc_buf.model.parallel_layers()
+    );
+
+    let init_b = ParamStore::init(&rc_buf.model, Init::Default, 0);
+    let s_buf = run(&rc_buf, true, &init_b)?;
+    let p_buf = run(&rc_buf, false, &init_b)?;
+    let init_n = ParamStore::init(&rc_nobuf.model, Init::Default, 0);
+    let s_nob = run(&rc_nobuf, true, &init_n)?;
+    let p_nob = run(&rc_nobuf, false, &init_n)?;
+
+    println!("\nFigure 12 (left): serial losses, buffer vs no-buffer\n");
+    let mut tbl = Table::new(&["step", "serial+buffer", "serial no-buffer"]);
+    for k in (0..steps).step_by((steps / 10).max(1)) {
+        tbl.row(vec![
+            i(s_buf.curve[k].step as i64),
+            f(s_buf.curve[k].loss as f64, 4),
+            f(s_nob.curve[k].loss as f64, 4),
+        ]);
+    }
+    tbl.print();
+
+    println!("\nFigure 12 (right): |layer-parallel − serial| loss gap\n");
+    let mut tbl = Table::new(&["step", "gap with buffer", "gap no buffer"]);
+    let mut csv = CsvWriter::create("bench_out/fig12_buffer.csv",
+        &["step", "gap_buffer", "gap_nobuffer"])?;
+    let (mut sum_b, mut sum_n) = (0.0f64, 0.0f64);
+    for k in 0..steps {
+        let gb = (p_buf.curve[k].loss - s_buf.curve[k].loss).abs() as f64;
+        let gn = (p_nob.curve[k].loss - s_nob.curve[k].loss).abs() as f64;
+        sum_b += gb;
+        sum_n += gn;
+        csv.row(&[k.to_string(), gb.to_string(), gn.to_string()])?;
+        if k % (steps / 10).max(1) == 0 {
+            tbl.row(vec![i(k as i64), f(gb, 5), f(gn, 5)]);
+        }
+    }
+    tbl.print();
+    csv.flush()?;
+    println!(
+        "\nmean gap: with buffers {:.5} vs without {:.5} ({}x reduction)",
+        sum_b / steps as f64,
+        sum_n / steps as f64,
+        f(sum_n / sum_b.max(1e-12), 1)
+    );
+    println!("paper shape check: serial dynamics agree; buffers significantly");
+    println!("reduce the layer-parallel vs serial loss difference.");
+    Ok(())
+}

@@ -1,0 +1,100 @@
+//! Figure 3 — long-term training behaviour, serial vs layer-parallel
+//! (bench-scale reproduction; DESIGN.md experiment index):
+//!   left   MC validation accuracy, 64 transformer layers, L=2, cf=2 —
+//!          layer-parallel matches serial accuracy.
+//!   right  MT validation BLEU, 6-6 layers, cf=3 — pure layer-parallel can
+//!          lag; switching parallel→serial ("2->1") recovers the serial
+//!          score.
+
+use layertime::config::{presets, MgritConfig};
+use layertime::coordinator::{Task, TrainRun};
+use layertime::model::{Init, ParamStore};
+use layertime::util::csv::CsvWriter;
+use layertime::util::table::{f, i, Table};
+
+fn main() -> anyhow::Result<()> {
+    // ---- left: MC, 64 layers, serial vs layer-parallel ---------------------
+    let mut rc = presets::mc_tiny();
+    presets::shrink_for_bench(&mut rc);
+    rc.model.n_enc_layers = 64;
+    rc.mgrit = MgritConfig { cf: 2, levels: 2, fwd_iters: Some(2), bwd_iters: Some(1), fcf: true };
+    rc.train.steps = 120;
+    rc.train.eval_every = 20;
+    rc.train.adaptive = false;
+    rc.train.opt = layertime::config::OptKind::Adam;
+    rc.train.lr = 2e-3;
+
+    let init = ParamStore::init(&rc.model, Init::DeepNet, rc.train.seed);
+    let mut serial_rc = rc.clone();
+    serial_rc.mgrit = MgritConfig::serial();
+    let mut s_run = TrainRun::from_params(serial_rc, Task::Tag, init.deep_clone(), None)?;
+    let s = s_run.train()?;
+    let mut p_run = TrainRun::from_params(rc, Task::Tag, init, None)?;
+    let p = p_run.train()?;
+
+    println!("Figure 3 (left): MC val accuracy, 64 layers, L=2, cf=2\n");
+    let mut tbl = Table::new(&["step", "serial (1 GPU)", "layer-parallel"]);
+    let mut csv = CsvWriter::create("bench_out/fig3_mc.csv", &["step", "serial", "parallel"])?;
+    for (a, b) in s.evals.iter().zip(&p.evals) {
+        tbl.row(vec![i(a.step as i64), f(a.metric, 3), f(b.metric, 3)]);
+        csv.row(&[a.step.to_string(), a.metric.to_string(), b.metric.to_string()])?;
+    }
+    tbl.print();
+    csv.flush()?;
+    println!(
+        "final Δ accuracy (parallel − serial): {:+.3}\n",
+        p.final_metric - s.final_metric
+    );
+
+    // ---- right: MT, 6-6 layers, serial vs pure-LP vs switch ----------------
+    let mut rc = presets::mt_small();
+    presets::shrink_for_bench(&mut rc);
+    rc.model.n_enc_layers = 6;
+    rc.model.n_dec_layers = 6;
+    rc.mgrit = MgritConfig { cf: 3, levels: 2, fwd_iters: Some(1), bwd_iters: Some(1), fcf: true };
+    rc.train.steps = 150;
+    rc.train.eval_every = 25;
+    rc.train.lr = 2e-3;
+    rc.train.warmup = 10;
+
+    let init = ParamStore::init(&rc.model, Init::Default, rc.train.seed);
+    let mut serial_rc = rc.clone();
+    serial_rc.mgrit = MgritConfig::serial();
+    serial_rc.train.adaptive = false;
+    let mut s_run = TrainRun::from_params(serial_rc, Task::Translate, init.deep_clone(), None)?;
+    let s = s_run.train()?;
+    let mut pure_rc = rc.clone();
+    pure_rc.train.adaptive = false;
+    let mut pure_run = TrainRun::from_params(pure_rc, Task::Translate, init.deep_clone(), None)?;
+    let pure = pure_run.train()?;
+    let mut sw_rc = rc.clone();
+    sw_rc.train.adaptive = true;
+    sw_rc.train.probe_every = 30;
+    let mut sw_run = TrainRun::from_params(sw_rc, Task::Translate, init, None)?;
+    let sw = sw_run.train()?;
+
+    println!("Figure 3 (right): MT val BLEU, 6-6 layers, cf=3\n");
+    let mut tbl = Table::new(&["step", "serial", "pure parallel", "2->1 switch"]);
+    let mut csv =
+        CsvWriter::create("bench_out/fig3_mt.csv", &["step", "serial", "pure", "switch"])?;
+    for ((a, b), c) in s.evals.iter().zip(&pure.evals).zip(&sw.evals) {
+        tbl.row(vec![i(a.step as i64), f(a.metric, 4), f(b.metric, 4), f(c.metric, 4)]);
+        csv.row(&[
+            a.step.to_string(),
+            a.metric.to_string(),
+            b.metric.to_string(),
+            c.metric.to_string(),
+        ])?;
+    }
+    tbl.print();
+    csv.flush()?;
+    println!(
+        "switched at: {} | final BLEU: serial {:.4}, pure {:.4}, switch {:.4}",
+        sw.switched_at.map(|s| s.to_string()).unwrap_or_else(|| "never".into()),
+        s.final_metric,
+        pure.final_metric,
+        sw.final_metric
+    );
+    println!("\npaper shape check: MC parallel ≈ serial; MT switch recovers serial BLEU.");
+    Ok(())
+}

@@ -1,0 +1,83 @@
+//! Figure 6 — speedup of layer-parallel training vs #devices for the three
+//! encoder-only tasks, L=2:
+//!   left   BERT (128 layers, cf=4, 1 fwd + 1 bwd iteration)
+//!   middle MC   (encoder, cf=2, 2 fwd + 1 bwd)
+//!   right  ViT  (32 layers, cf=4, serial fwd + 1 bwd)
+//!
+//! Produced by the calibrated performance simulator (DESIGN.md
+//! §Substitutions — 1 CPU core here): Φ cost comes from the artifact
+//! manifest FLOPs when available (or the paper-width FLOP formula), comm
+//! follows the V100/A100 α+β model. Expected shape: ≤1 speedup possible at
+//! 2 devices for small models, strong gains as depth/devices grow, then
+//! saturation at N/c_f-way parallelism.
+
+use layertime::parallel::{DeviceModel, SimConfig, Simulator};
+use layertime::util::csv::CsvWriter;
+use layertime::util::table::{f, i, Table};
+
+/// Paper-scale per-sample Φ FLOPs for width (d, ff, seq).
+fn phi_flops(seq: usize, d: usize, ff: usize) -> f64 {
+    (8 * seq * d * d + 4 * seq * seq * d + 4 * seq * d * ff) as f64
+}
+
+struct TaskRow {
+    name: &'static str,
+    layers: usize,
+    cf: usize,
+    fwd: Option<usize>,
+    bwd: Option<usize>,
+    seq: usize,
+    d: usize,
+    ff: usize,
+    batch: usize,
+    device: DeviceModel,
+}
+
+fn main() {
+    let tasks = [
+        TaskRow { name: "BERT", layers: 128, cf: 4, fwd: Some(1), bwd: Some(1),
+                  seq: 224, d: 768, ff: 3072, batch: 32, device: DeviceModel::a100() },
+        TaskRow { name: "MC", layers: 64, cf: 2, fwd: Some(2), bwd: Some(1),
+                  seq: 2048, d: 128, ff: 128, batch: 8, device: DeviceModel::v100() },
+        TaskRow { name: "ViT", layers: 32, cf: 4, fwd: None, bwd: Some(1),
+                  seq: 196, d: 768, ff: 3072, batch: 4, device: DeviceModel::a100() },
+    ];
+    let devices = [1usize, 2, 4, 8, 16, 32];
+
+    println!("Figure 6: layer-parallel speedup vs #GPUs (L=2), per task\n");
+    let mut csv = CsvWriter::create("bench_out/fig6_speedup.csv",
+        &["task", "devices", "time_s", "speedup"]).unwrap();
+    for t in &tasks {
+        let mut tbl = Table::new(&["devices", "time/batch (s)", "speedup"]);
+        for &p in &devices {
+            let sim = Simulator::new(SimConfig {
+                n_layers: t.layers,
+                cf: t.cf,
+                levels: 2,
+                fwd_iters: t.fwd,
+                bwd_iters: t.bwd,
+                fcf: true,
+                lp: p,
+                dp: 1,
+                flops_per_sample_step: phi_flops(t.seq, t.d, t.ff),
+                batch: t.batch,
+                state_bytes: (t.seq * t.d * 4) as f64,
+                param_bytes: (t.layers * (4 * t.d * t.d + 2 * t.d * t.ff)) as f64 * 4.0,
+                device: t.device,
+            });
+            let time = sim.batch_time().total;
+            let speedup = sim.speedup_vs_serial();
+            tbl.row(vec![i(p as i64), f(time, 5), f(speedup, 2)]);
+            csv.row(&[t.name.into(), p.to_string(), time.to_string(), speedup.to_string()])
+                .unwrap();
+        }
+        println!("{} ({} layers, cf={}, fwd={:?}, bwd={:?}, {}):",
+            t.name, t.layers, t.cf, t.fwd, t.bwd, t.device.name);
+        tbl.print();
+        println!();
+    }
+    csv.flush().unwrap();
+    println!("series written to bench_out/fig6_speedup.csv");
+    println!("paper shape check: 2-device speedup may be <1 (overhead), deeper tasks");
+    println!("gain more, curves saturate near N/c_f devices.");
+}

@@ -1,0 +1,53 @@
+//! Figure 7 — strong scaling of the encoder-decoder MT task with depth
+//! N_enc+N_dec ∈ {80, 160, 320}, MGRIT cf=4, L=2, 2 fwd + 1 bwd iterations
+//! (paper: Jean-Zay V100s). Time per batch vs #devices; deeper models keep
+//! scaling further — the paper's headline strong-scaling figure.
+
+use layertime::parallel::{DeviceModel, SimConfig, Simulator};
+use layertime::util::csv::CsvWriter;
+use layertime::util::table::{f, i, Table};
+
+fn main() {
+    let (seq, d, ff, batch) = (274usize, 512usize, 2048usize, 8usize);
+    let phi = (8 * seq * d * d + 4 * seq * seq * d + 4 * seq * d * ff) as f64
+        + (4 * seq * d * d + 2 * seq * seq * d) as f64; // + cross-attention
+    let depths = [80usize, 160, 320];
+    let devices = [1usize, 2, 4, 8, 16, 32, 64];
+
+    println!("Figure 7: MT strong scaling (cf=4, L=2, 2 fwd + 1 bwd, V100)\n");
+    let mut csv = CsvWriter::create("bench_out/fig7_strong_scaling.csv",
+        &["layers", "devices", "time_s", "speedup"]).unwrap();
+    let mut tbl = Table::new(&["devices", "80 layers", "160 layers", "320 layers"]);
+    let mut rows: Vec<Vec<String>> = devices.iter().map(|&p| vec![p.to_string()]).collect();
+    for &n in &depths {
+        for (ri, &p) in devices.iter().enumerate() {
+            let sim = Simulator::new(SimConfig {
+                n_layers: n,
+                cf: 4,
+                levels: 2,
+                fwd_iters: Some(2),
+                bwd_iters: Some(1),
+                fcf: true,
+                lp: p,
+                dp: 1,
+                flops_per_sample_step: phi,
+                batch,
+                state_bytes: (2 * seq * d * 4) as f64, // stacked [X, Y]
+                param_bytes: (n * (8 * d * d + 2 * d * ff)) as f64 * 4.0,
+                device: DeviceModel::v100(),
+            });
+            let time = sim.batch_time().total;
+            rows[ri].push(f(time, 4));
+            csv.row(&[n.to_string(), p.to_string(), time.to_string(),
+                      sim.speedup_vs_serial().to_string()]).unwrap();
+        }
+    }
+    for r in rows {
+        tbl.row(r);
+    }
+    tbl.print();
+    csv.flush().unwrap();
+    println!("\nseries written to bench_out/fig7_strong_scaling.csv");
+    println!("paper shape check: all depths speed up; the 320-layer model keeps");
+    println!("scaling to more devices than the 80-layer one.");
+}

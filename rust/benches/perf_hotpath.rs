@@ -1,0 +1,124 @@
+//! §Perf micro-benchmarks of the training hot path (EXPERIMENTS.md §Perf):
+//!   Φ latency         — XLA/PJRT (Pallas) vs pure-Rust reference
+//!   Φ-VJP latency     — same, backward
+//!   marshalling       — Tensor⇄Literal overhead per call
+//!   MGRIT V-cycle     — engine overhead on a trivial Φ (pure coordinator)
+//!   full train step   — tiny end-to-end batch (Rust Φ)
+//!
+//! Uses artifacts when present (`make artifacts`), otherwise skips the XLA
+//! rows.
+
+use std::cell::RefCell;
+use std::rc::Rc;
+
+use layertime::config::{presets, Arch, MgritConfig};
+use layertime::coordinator::{Task, TrainRun};
+use layertime::mgrit::MgritSolver;
+use layertime::ode::{LinearOde, Propagator, RustPropagator, XlaPropagator};
+use layertime::runtime::{Value, XlaEngine};
+use layertime::tensor::Tensor;
+use layertime::util::bench::BenchRunner;
+use layertime::util::rng::Rng;
+
+fn main() -> anyhow::Result<()> {
+    let runner = BenchRunner::new(3, 15);
+    println!("perf_hotpath — coordinator + runtime micro-benchmarks\n");
+
+    // --- MGRIT engine overhead on a free Φ --------------------------------
+    let mut rng = Rng::new(0);
+    let ode = LinearOde::random_stable(&mut rng, 8, 64, 0.05);
+    let z0 = Tensor::randn(&mut rng, &[8, 1], 1.0);
+    let solver = MgritSolver::new(
+        &ode,
+        MgritConfig { cf: 4, levels: 2, fwd_iters: Some(1), bwd_iters: Some(1), fcf: true },
+    );
+    runner.report("mgrit v-cycle (64 steps, trivial Φ)", || {
+        solver.forward(&z0, Some(1), None, false)
+    });
+    runner.report("mgrit serial solve (64 steps)", || solver.forward(&z0, None, None, false));
+
+    // --- rust reference Φ ---------------------------------------------------
+    let mut model = presets::mc_tiny().model;
+    model.vocab = 64;
+    model.d_model = 64;
+    model.n_heads = 4;
+    model.d_ff = 128;
+    model.seq = 32;
+    model.batch = 8;
+    model.arch = Arch::Encoder;
+    let params = Rc::new(RefCell::new(vec![rng.normal_vec(model.p_enc(), 0.02); 1]));
+    let rust_prop = RustPropagator::new(&model, 1.0, params.clone());
+    let z = Tensor::randn(&mut rng, &rust_prop.state_shape(), 1.0);
+    let ct = Tensor::randn(&mut rng, &rust_prop.state_shape(), 1.0);
+    runner.report("Φ fwd  (rust reference, d=64 s=32 b=8)", || rust_prop.step(0, 1.0, &z));
+    runner.report("Φ vjp  (rust reference)", || rust_prop.adjoint_step(0, 1.0, &z, &ct));
+
+    // --- XLA Φ (artifacts) --------------------------------------------------
+    let dir = std::env::var("LAYERTIME_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+    if std::path::Path::new(&dir).join("manifest.json").exists() {
+        let engine = Rc::new(XlaEngine::load(&dir)?);
+        engine.warmup()?;
+        let xla_prop = XlaPropagator::new(engine.clone(), &model, 1.0, params.clone())?;
+        runner.report("Φ fwd  (XLA/PJRT, Pallas kernels)", || xla_prop.step(0, 1.0, &z));
+        runner.report("Φ vjp  (XLA/PJRT)", || xla_prop.adjoint_step(0, 1.0, &z, &ct));
+
+        // L1 ablation: the same Φ lowered from the pure-jnp reference
+        // (no Pallas) — quantifies the interpret-mode overhead on CPU.
+        let ref_dir =
+            std::env::var("LAYERTIME_ARTIFACTS_REF").unwrap_or_else(|_| "artifacts_ref".into());
+        if std::path::Path::new(&ref_dir).join("manifest.json").exists() {
+            let engine_ref = Rc::new(XlaEngine::load(&ref_dir)?);
+            engine_ref.warmup()?;
+            let prop_ref = XlaPropagator::new(engine_ref, &model, 1.0, params.clone())?;
+            runner.report("Φ fwd  (XLA/PJRT, pure-jnp lowering)", || prop_ref.step(0, 1.0, &z));
+            runner
+                .report("Φ vjp  (XLA/PJRT, pure-jnp lowering)", || prop_ref.adjoint_step(0, 1.0, &z, &ct));
+        }
+
+        // marshalling: executable with pre-built args vs building args
+        let exe = engine.executable("enc_step")?;
+        let th = {
+            let p = params.borrow();
+            Tensor::from_vec(p[0].clone(), &[p[0].len()])
+        };
+        let args =
+            vec![Value::F32(z.clone()), Value::F32(th), Value::scalar(1.0)];
+        runner.report("enc_step call (prebuilt args)", || exe.call(&args).unwrap());
+
+        // MGRIT forward over XLA Φ, 8 layers
+        let params8 = Rc::new(RefCell::new(vec![rng.normal_vec(model.p_enc(), 0.02); 8]));
+        let prop8 = XlaPropagator::new(engine.clone(), &model, 1.0, params8)?;
+        let s8 = MgritSolver::new(
+            &prop8,
+            MgritConfig { cf: 4, levels: 2, fwd_iters: Some(1), bwd_iters: Some(1), fcf: true },
+        );
+        let z8 = Tensor::randn(&mut rng, &prop8.state_shape(), 1.0);
+        let st = runner.report("mgrit fwd solve (8 XLA layers, 1 iter)", || {
+            s8.forward(&z8, Some(1), None, false)
+        });
+        let serial_st =
+            runner.report("serial fwd (8 XLA layers)", || s8.forward(&z8, None, None, false));
+        let (_, stats) = s8.forward(&z8, Some(1), None, false);
+        println!(
+            "  -> mgrit Φ-evals/iter = {} (serial = 8); overhead ratio {:.2}x compute,",
+            stats.phi_evals, st.mean / serial_st.mean
+        );
+        println!("     exposed parallelism = 2 chunks (see fig6 for modeled wall-clock)");
+    } else {
+        println!("  (artifacts not built — XLA rows skipped; run `make artifacts`)");
+    }
+
+    // --- full train step ------------------------------------------------------
+    let mut rc = presets::mc_tiny();
+    presets::shrink_for_bench(&mut rc);
+    rc.model.n_enc_layers = 8;
+    rc.mgrit = MgritConfig { cf: 2, levels: 2, fwd_iters: Some(1), bwd_iters: Some(1), fcf: true };
+    rc.train.adaptive = false;
+    let mut run = TrainRun::new(rc, Task::Tag, None)?;
+    runner.report("full train step (8 layers, tiny, rust Φ)", || run.train_step());
+
+    Ok(())
+}
+
+// NOTE: run with LAYERTIME_ARTIFACTS_REF=artifacts_ref to also compare the
+// Pallas-kernel artifacts against the pure-jnp lowering (L1 ablation).

@@ -1,0 +1,190 @@
+//! Adaptive control of MGRIT inexactness (paper §3.2.3).
+//!
+//! Biased gradients from inexact MGRIT solves eventually stall or diverge
+//! training (paper Fig. 4). The controller monitors the MGRIT *convergence
+//! factor* ρ = ‖r^(k+1)‖/‖r^(k)‖: every `probe_every` batches it doubles
+//! the iteration count for one probe solve and inspects the final ρ.
+//! ρ ≥ 1 means extra iterations no longer contract the residual — the
+//! mitigation is either to raise the standing iteration count or to switch
+//! to serial (exact) propagation for the rest of training.
+
+use crate::config::MgritConfig;
+
+/// What the controller decided after a probe.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AdaptiveDecision {
+    /// ρ comfortably < 1: keep the current configuration.
+    Keep,
+    /// ρ drifting towards 1: double the standing iteration counts.
+    IncreaseIters,
+    /// ρ ≥ 1 (or iteration budget exhausted): switch to serial training.
+    SwitchSerial,
+}
+
+/// Controller state threaded through the training loop.
+#[derive(Debug, Clone)]
+pub struct AdaptiveController {
+    /// Probe cadence in batches (paper: every ~500).
+    pub probe_every: usize,
+    /// ρ at or above this triggers SwitchSerial (paper: 1.0).
+    pub rho_switch: f64,
+    /// ρ at or above this (but below `rho_switch`) triggers IncreaseIters.
+    pub rho_grow: f64,
+    /// Iteration count beyond which growing is pointless -> switch serial.
+    pub max_iters: usize,
+    /// Batch counter.
+    step: usize,
+    /// Sticky: once serial, stay serial (paper's scheme).
+    switched: bool,
+    /// History of (step, rho_fwd, rho_bwd, decision) for Fig. 5 logging.
+    pub history: Vec<ProbeRecord>,
+}
+
+/// One probe observation (drives the Fig. 5 indicator plot).
+#[derive(Debug, Clone)]
+pub struct ProbeRecord {
+    pub step: usize,
+    pub rho_fwd: Option<f64>,
+    pub rho_bwd: Option<f64>,
+    pub decision: AdaptiveDecision,
+}
+
+impl AdaptiveController {
+    pub fn new(probe_every: usize) -> AdaptiveController {
+        AdaptiveController {
+            probe_every,
+            rho_switch: 1.0,
+            rho_grow: 0.9,
+            max_iters: 8,
+            step: 0,
+            switched: false,
+            history: Vec::new(),
+        }
+    }
+
+    /// Has the controller permanently switched to serial?
+    pub fn is_serial(&self) -> bool {
+        self.switched
+    }
+
+    /// Advance the batch counter; true if this batch should run a probe
+    /// (doubled-iteration solve with residual tracking).
+    pub fn should_probe(&mut self) -> bool {
+        self.step += 1;
+        !self.switched && self.probe_every > 0 && self.step % self.probe_every == 0
+    }
+
+    /// Iteration counts to use for a probe solve (doubled, per the paper).
+    pub fn probe_iters(&self, cfg: &MgritConfig) -> (Option<usize>, Option<usize>) {
+        (cfg.fwd_iters.map(|k| k * 2), cfg.bwd_iters.map(|k| k * 2))
+    }
+
+    /// Digest the convergence factors observed in a probe and mutate `cfg`
+    /// accordingly. Returns the decision (also appended to `history`).
+    pub fn observe(
+        &mut self,
+        rho_fwd: Option<f64>,
+        rho_bwd: Option<f64>,
+        cfg: &mut MgritConfig,
+    ) -> AdaptiveDecision {
+        let worst = [rho_fwd, rho_bwd].into_iter().flatten().fold(0.0f64, f64::max);
+        let at_budget = cfg.fwd_iters.unwrap_or(0).max(cfg.bwd_iters.unwrap_or(0)) >= self.max_iters;
+        let decision = if worst >= self.rho_switch || (worst >= self.rho_grow && at_budget) {
+            self.switched = true;
+            cfg.fwd_iters = None;
+            cfg.bwd_iters = None;
+            AdaptiveDecision::SwitchSerial
+        } else if worst >= self.rho_grow {
+            cfg.fwd_iters = cfg.fwd_iters.map(|k| (k * 2).min(self.max_iters));
+            cfg.bwd_iters = cfg.bwd_iters.map(|k| (k * 2).min(self.max_iters));
+            AdaptiveDecision::IncreaseIters
+        } else {
+            AdaptiveDecision::Keep
+        };
+        self.history.push(ProbeRecord { step: self.step, rho_fwd, rho_bwd, decision });
+        decision
+    }
+
+    /// Manual override: force serial from the next batch (used when an
+    /// external signal — e.g. loss divergence — fires first).
+    pub fn force_serial(&mut self, cfg: &mut MgritConfig) {
+        self.switched = true;
+        cfg.fwd_iters = None;
+        cfg.bwd_iters = None;
+        self.history.push(ProbeRecord {
+            step: self.step,
+            rho_fwd: None,
+            rho_bwd: None,
+            decision: AdaptiveDecision::SwitchSerial,
+        });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> MgritConfig {
+        MgritConfig { cf: 4, levels: 2, fwd_iters: Some(1), bwd_iters: Some(1), fcf: true }
+    }
+
+    #[test]
+    fn probes_fire_on_cadence() {
+        let mut c = AdaptiveController::new(3);
+        let fires: Vec<bool> = (0..9).map(|_| c.should_probe()).collect();
+        assert_eq!(fires, vec![false, false, true, false, false, true, false, false, true]);
+    }
+
+    #[test]
+    fn healthy_rho_keeps_config() {
+        let mut c = AdaptiveController::new(1);
+        let mut m = cfg();
+        assert_eq!(c.observe(Some(0.3), Some(0.2), &mut m), AdaptiveDecision::Keep);
+        assert_eq!(m.fwd_iters, Some(1));
+        assert!(!c.is_serial());
+    }
+
+    #[test]
+    fn drifting_rho_doubles_iters_then_switches_at_budget() {
+        let mut c = AdaptiveController::new(1);
+        c.max_iters = 4;
+        let mut m = cfg();
+        assert_eq!(c.observe(Some(0.95), None, &mut m), AdaptiveDecision::IncreaseIters);
+        assert_eq!(m.fwd_iters, Some(2));
+        assert_eq!(c.observe(Some(0.95), None, &mut m), AdaptiveDecision::IncreaseIters);
+        assert_eq!(m.fwd_iters, Some(4));
+        // at budget and still drifting -> serial
+        assert_eq!(c.observe(Some(0.95), None, &mut m), AdaptiveDecision::SwitchSerial);
+        assert!(m.is_serial());
+        assert!(c.is_serial());
+    }
+
+    #[test]
+    fn rho_above_one_switches_immediately() {
+        let mut c = AdaptiveController::new(1);
+        let mut m = cfg();
+        assert_eq!(c.observe(Some(0.4), Some(1.3), &mut m), AdaptiveDecision::SwitchSerial);
+        assert!(m.is_serial());
+        // sticky: no more probes once serial
+        assert!(!c.should_probe());
+    }
+
+    #[test]
+    fn probe_iters_doubled() {
+        let c = AdaptiveController::new(5);
+        let m = cfg();
+        assert_eq!(c.probe_iters(&m), (Some(2), Some(2)));
+        let m2 = MgritConfig { fwd_iters: None, ..m };
+        assert_eq!(c.probe_iters(&m2), (None, Some(2)));
+    }
+
+    #[test]
+    fn history_records_everything() {
+        let mut c = AdaptiveController::new(1);
+        let mut m = cfg();
+        c.observe(Some(0.5), Some(0.6), &mut m);
+        c.force_serial(&mut m);
+        assert_eq!(c.history.len(), 2);
+        assert_eq!(c.history[1].decision, AdaptiveDecision::SwitchSerial);
+    }
+}

@@ -1,0 +1,98 @@
+//! Corpus BLEU-4 with smoothing — the validation metric of the MT task
+//! (paper Fig. 3 right).
+
+use std::collections::HashMap;
+
+fn ngram_counts(seq: &[i32], n: usize) -> HashMap<&[i32], usize> {
+    let mut m: HashMap<&[i32], usize> = HashMap::new();
+    if seq.len() >= n {
+        for i in 0..=seq.len() - n {
+            *m.entry(&seq[i..i + n]).or_insert(0) += 1;
+        }
+    }
+    m
+}
+
+/// Corpus-level BLEU-4 (uniform weights, +1 smoothing on higher orders,
+/// brevity penalty). `pairs` is (hypothesis, reference) token sequences.
+pub fn bleu4(pairs: &[(Vec<i32>, Vec<i32>)]) -> f64 {
+    let max_n = 4;
+    let mut match_n = [0usize; 4];
+    let mut total_n = [0usize; 4];
+    let mut hyp_len = 0usize;
+    let mut ref_len = 0usize;
+    for (hyp, rf) in pairs {
+        hyp_len += hyp.len();
+        ref_len += rf.len();
+        for n in 1..=max_n {
+            let h = ngram_counts(hyp, n);
+            let r = ngram_counts(rf, n);
+            for (g, c) in &h {
+                let rc = r.get(g).copied().unwrap_or(0);
+                match_n[n - 1] += (*c).min(rc);
+            }
+            total_n[n - 1] += hyp.len().saturating_sub(n - 1);
+        }
+    }
+    if hyp_len == 0 {
+        return 0.0;
+    }
+    let mut logsum = 0.0f64;
+    for n in 0..max_n {
+        // +1 smoothing for n >= 2 (Lin & Och smoothing-2)
+        let (m, t) = if n == 0 {
+            (match_n[0] as f64, total_n[0] as f64)
+        } else {
+            (match_n[n] as f64 + 1.0, total_n[n] as f64 + 1.0)
+        };
+        if m == 0.0 || t == 0.0 {
+            return 0.0;
+        }
+        logsum += (m / t).ln() / max_n as f64;
+    }
+    let bp = if hyp_len >= ref_len { 1.0 } else { (1.0 - ref_len as f64 / hyp_len as f64).exp() };
+    bp * logsum.exp()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn perfect_match_is_one() {
+        let s = vec![1, 2, 3, 4, 5, 6, 7, 8];
+        let b = bleu4(&[(s.clone(), s)]);
+        assert!((b - 1.0).abs() < 1e-9, "{}", b);
+    }
+
+    #[test]
+    fn disjoint_is_near_zero() {
+        let b = bleu4(&[(vec![1, 2, 3, 4, 5, 6], vec![7, 8, 9, 10, 11, 12])]);
+        assert!(b < 0.05, "{}", b);
+    }
+
+    #[test]
+    fn partial_overlap_between() {
+        let hyp = vec![1, 2, 3, 4, 9, 9, 9, 9];
+        let rf = vec![1, 2, 3, 4, 5, 6, 7, 8];
+        let b = bleu4(&[(hyp, rf)]);
+        assert!(b > 0.05 && b < 0.9, "{}", b);
+    }
+
+    #[test]
+    fn brevity_penalty_applies() {
+        let rf = vec![1, 2, 3, 4, 5, 6, 7, 8];
+        let full = bleu4(&[(rf.clone(), rf.clone())]);
+        let short = bleu4(&[(rf[..4].to_vec(), rf)]);
+        assert!(short < full);
+    }
+
+    #[test]
+    fn corpus_level_aggregates() {
+        let a = (vec![1, 2, 3, 4], vec![1, 2, 3, 4]);
+        let b = (vec![5, 6, 7, 8], vec![8, 7, 6, 5]);
+        let corpus = bleu4(&[a.clone(), b]);
+        let solo = bleu4(&[a]);
+        assert!(corpus < solo);
+    }
+}

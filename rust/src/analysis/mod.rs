@@ -1,0 +1,8 @@
+//! Analysis tooling: BLEU (MT metric), Monte-Carlo Lipschitz estimation
+//! (paper Appendix B, Figs. 10-11), and weight-drift tracking.
+
+pub mod bleu;
+pub mod lipschitz;
+
+pub use bleu::bleu4;
+pub use lipschitz::{estimate_layer_lipschitz, weight_drift};

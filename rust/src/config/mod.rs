@@ -1,0 +1,355 @@
+//! Configuration system: typed configs, JSON round-trip, CLI overrides,
+//! and presets mirroring the paper's Tables 2-3 (width-scaled; see
+//! DESIGN.md §Substitutions).
+
+pub mod presets_mod;
+
+pub use presets_mod as presets;
+
+use crate::util::cli::Args;
+use crate::util::json::{self, Json};
+
+/// Which transformer family a run uses (paper §3.1).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Arch {
+    /// Encoder-only (BERT, MC, ViT analogues).
+    Encoder,
+    /// Decoder-only with causal masking (GPT analogue).
+    Decoder,
+    /// Encoder-decoder with cross-attention (MT analogue).
+    EncDec,
+}
+
+impl Arch {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Arch::Encoder => "encoder",
+            Arch::Decoder => "decoder",
+            Arch::EncDec => "encdec",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Arch> {
+        match s {
+            "encoder" => Some(Arch::Encoder),
+            "decoder" => Some(Arch::Decoder),
+            "encdec" => Some(Arch::EncDec),
+            _ => None,
+        }
+    }
+}
+
+/// Model geometry — must match the artifact manifest when running on XLA.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ModelConfig {
+    pub arch: Arch,
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_heads: usize,
+    pub d_ff: usize,
+    pub seq: usize,
+    pub batch: usize,
+    pub n_classes: usize,
+    /// Encoder depth N_enc (layers = ODE time-steps).
+    pub n_enc_layers: usize,
+    /// Decoder depth N_dec (0 unless Arch::{Decoder, EncDec}).
+    pub n_dec_layers: usize,
+    /// Serial "buffer" layers at the open end (Appendix B).
+    pub buffer_open: usize,
+    /// Serial "buffer" layers at the close end (Appendix B).
+    pub buffer_close: usize,
+}
+
+impl ModelConfig {
+    /// Flat parameter vector length for one encoder-family layer
+    /// (mirrors ref.enc_layout; checked against the manifest at load).
+    pub fn p_enc(&self) -> usize {
+        let (d, f) = (self.d_model, self.d_ff);
+        4 * d * d + 2 * d * f + 5 * d + f
+    }
+
+    /// Flat parameter length of one cross-attending decoder layer.
+    pub fn p_dec(&self) -> usize {
+        self.p_enc() + 2 * self.d_model + 4 * self.d_model * self.d_model
+    }
+
+    /// Total ODE time-steps T = N_enc + N_dec (paper eq. 3).
+    pub fn total_layers(&self) -> usize {
+        self.n_enc_layers + self.n_dec_layers
+    }
+
+    /// Layers inside the ParallelNet (excluding serial buffers, Appendix B).
+    pub fn parallel_layers(&self) -> usize {
+        self.total_layers().saturating_sub(self.buffer_open + self.buffer_close)
+    }
+
+    /// Fine-level step size h for the ParallelNet: the paper uses h=1 for
+    /// standard runs and h = 1/L_mid when buffers are enabled (Appendix B).
+    pub fn fine_h(&self) -> f32 {
+        if self.buffer_open + self.buffer_close > 0 {
+            1.0 / self.parallel_layers().max(1) as f32
+        } else {
+            1.0
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        json::obj(vec![
+            ("arch", json::s(self.arch.as_str())),
+            ("vocab", json::int(self.vocab as i64)),
+            ("d_model", json::int(self.d_model as i64)),
+            ("n_heads", json::int(self.n_heads as i64)),
+            ("d_ff", json::int(self.d_ff as i64)),
+            ("seq", json::int(self.seq as i64)),
+            ("batch", json::int(self.batch as i64)),
+            ("n_classes", json::int(self.n_classes as i64)),
+            ("n_enc_layers", json::int(self.n_enc_layers as i64)),
+            ("n_dec_layers", json::int(self.n_dec_layers as i64)),
+            ("buffer_open", json::int(self.buffer_open as i64)),
+            ("buffer_close", json::int(self.buffer_close as i64)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Option<ModelConfig> {
+        Some(ModelConfig {
+            arch: Arch::parse(j.get("arch")?.str()?)?,
+            vocab: j.get("vocab")?.int()? as usize,
+            d_model: j.get("d_model")?.int()? as usize,
+            n_heads: j.get("n_heads")?.int()? as usize,
+            d_ff: j.get("d_ff")?.int()? as usize,
+            seq: j.get("seq")?.int()? as usize,
+            batch: j.get("batch")?.int()? as usize,
+            n_classes: j.get("n_classes")?.int()? as usize,
+            n_enc_layers: j.get("n_enc_layers")?.int()? as usize,
+            n_dec_layers: j.get("n_dec_layers")?.int()? as usize,
+            buffer_open: j.get("buffer_open").and_then(|v| v.int()).unwrap_or(0) as usize,
+            buffer_close: j.get("buffer_close").and_then(|v| v.int()).unwrap_or(0) as usize,
+        })
+    }
+}
+
+/// MGRIT algorithmic parameters (paper §3.2, Table 3).
+#[derive(Debug, Clone, PartialEq)]
+pub struct MgritConfig {
+    /// Coarsening factor c_f (2, 3, 4, 8 in the paper).
+    pub cf: usize,
+    /// Number of levels L (2 or 3 in the paper; 1 = serial).
+    pub levels: usize,
+    /// MGRIT iterations for the forward solve (None = serial forward).
+    pub fwd_iters: Option<usize>,
+    /// MGRIT iterations for the adjoint solve (None = serial backward).
+    pub bwd_iters: Option<usize>,
+    /// FCF- (true) vs F-relaxation (false). The paper uses F pre-smoothing
+    /// in the scaling runs (Table 3) and FCF in the method description.
+    pub fcf: bool,
+}
+
+impl Default for MgritConfig {
+    fn default() -> Self {
+        MgritConfig { cf: 4, levels: 2, fwd_iters: Some(1), bwd_iters: Some(1), fcf: true }
+    }
+}
+
+impl MgritConfig {
+    pub fn serial() -> MgritConfig {
+        MgritConfig { cf: 2, levels: 1, fwd_iters: None, bwd_iters: None, fcf: true }
+    }
+
+    pub fn is_serial(&self) -> bool {
+        self.fwd_iters.is_none() && self.bwd_iters.is_none()
+    }
+
+    pub fn to_json(&self) -> Json {
+        json::obj(vec![
+            ("cf", json::int(self.cf as i64)),
+            ("levels", json::int(self.levels as i64)),
+            (
+                "fwd_iters",
+                self.fwd_iters.map(|v| json::int(v as i64)).unwrap_or(Json::Null),
+            ),
+            (
+                "bwd_iters",
+                self.bwd_iters.map(|v| json::int(v as i64)).unwrap_or(Json::Null),
+            ),
+            ("fcf", Json::Bool(self.fcf)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Option<MgritConfig> {
+        let opt = |v: Option<&Json>| -> Option<usize> {
+            match v {
+                Some(Json::Null) | None => None,
+                Some(x) => x.int().map(|i| i as usize),
+            }
+        };
+        Some(MgritConfig {
+            cf: j.get("cf")?.int()? as usize,
+            levels: j.get("levels")?.int()? as usize,
+            fwd_iters: opt(j.get("fwd_iters")),
+            bwd_iters: opt(j.get("bwd_iters")),
+            fcf: j.get("fcf")?.bool()?,
+        })
+    }
+}
+
+/// Optimizer choice (paper Table 2 uses SGD/Adam/AdamW per task).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum OptKind {
+    Sgd,
+    Adam,
+    AdamW,
+}
+
+impl OptKind {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            OptKind::Sgd => "sgd",
+            OptKind::Adam => "adam",
+            OptKind::AdamW => "adamw",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<OptKind> {
+        match s {
+            "sgd" => Some(OptKind::Sgd),
+            "adam" => Some(OptKind::Adam),
+            "adamw" => Some(OptKind::AdamW),
+            _ => None,
+        }
+    }
+}
+
+/// Training-loop parameters.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TrainConfig {
+    pub steps: usize,
+    pub lr: f32,
+    pub warmup: usize,
+    pub weight_decay: f32,
+    pub grad_clip: f32,
+    pub opt: OptKind,
+    pub seed: u64,
+    /// Probe the MGRIT indicator every this many batches (paper: ~500).
+    pub probe_every: usize,
+    /// Evaluate on the validation split every this many steps.
+    pub eval_every: usize,
+    /// Adaptive controller enabled (§3.2.3).
+    pub adaptive: bool,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        TrainConfig {
+            steps: 200,
+            lr: 1e-3,
+            warmup: 20,
+            weight_decay: 0.01,
+            grad_clip: 1.0,
+            opt: OptKind::Adam,
+            seed: 0,
+            probe_every: 50,
+            eval_every: 25,
+            adaptive: true,
+        }
+    }
+}
+
+/// The full run description: model + MGRIT + training + parallel topology.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RunConfig {
+    pub name: String,
+    pub model: ModelConfig,
+    pub mgrit: MgritConfig,
+    pub train: TrainConfig,
+    /// Layer-parallel degree (devices along the layer/time dimension).
+    pub lp_degree: usize,
+    /// Data-parallel degree (replicas).
+    pub dp_degree: usize,
+}
+
+impl RunConfig {
+    /// Apply `--key value` overrides (the launcher's config surface).
+    pub fn apply_args(&mut self, a: &Args) {
+        self.model.n_enc_layers = a.get_usize("enc-layers", self.model.n_enc_layers);
+        self.model.n_dec_layers = a.get_usize("dec-layers", self.model.n_dec_layers);
+        self.model.batch = a.get_usize("batch", self.model.batch);
+        self.model.buffer_open = a.get_usize("buffer-open", self.model.buffer_open);
+        self.model.buffer_close = a.get_usize("buffer-close", self.model.buffer_close);
+        self.mgrit.cf = a.get_usize("cf", self.mgrit.cf);
+        self.mgrit.levels = a.get_usize("levels", self.mgrit.levels);
+        if let Some(v) = a.get("fwd-iters") {
+            self.mgrit.fwd_iters =
+                if v == "serial" { None } else { Some(v.parse().expect("--fwd-iters")) };
+        }
+        if let Some(v) = a.get("bwd-iters") {
+            self.mgrit.bwd_iters =
+                if v == "serial" { None } else { Some(v.parse().expect("--bwd-iters")) };
+        }
+        self.train.steps = a.get_usize("steps", self.train.steps);
+        self.train.lr = a.get_f32("lr", self.train.lr);
+        self.train.seed = a.get_u64("seed", self.train.seed);
+        self.lp_degree = a.get_usize("lp", self.lp_degree);
+        self.dp_degree = a.get_usize("dp", self.dp_degree);
+        if a.has_flag("no-adaptive") {
+            self.train.adaptive = false;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn param_counts_match_python_formula() {
+        // Mirrors python/tests/test_model.py::test_param_sizes
+        let m = presets::mc_tiny().model;
+        let (d, f) = (m.d_model, m.d_ff);
+        assert_eq!(m.p_enc(), 4 * d * d + 2 * d * f + 5 * d + f);
+        assert_eq!(m.p_dec(), m.p_enc() + 2 * d + 4 * d * d);
+    }
+
+    #[test]
+    fn model_json_roundtrip() {
+        let m = presets::mt_small().model;
+        let j = m.to_json();
+        let m2 = ModelConfig::from_json(&j).unwrap();
+        assert_eq!(m, m2);
+    }
+
+    #[test]
+    fn mgrit_json_roundtrip_with_serial_forward() {
+        let c = MgritConfig { cf: 3, levels: 2, fwd_iters: None, bwd_iters: Some(1), fcf: false };
+        let c2 = MgritConfig::from_json(&c.to_json()).unwrap();
+        assert_eq!(c, c2);
+    }
+
+    #[test]
+    fn buffer_layers_change_fine_h() {
+        let mut m = presets::gpt_small().model;
+        // paper Appendix B: 20 layers, 2+2 buffers -> middle 16 with dt=1/16
+        m.n_dec_layers = 20;
+        m.buffer_open = 2;
+        m.buffer_close = 2;
+        assert_eq!(m.parallel_layers(), 16);
+        assert!((m.fine_h() - 1.0 / 16.0).abs() < 1e-7);
+        m.buffer_open = 0;
+        m.buffer_close = 0;
+        assert_eq!(m.fine_h(), 1.0);
+    }
+
+    #[test]
+    fn cli_overrides() {
+        let mut rc = presets::mc_tiny();
+        let toks: Vec<String> =
+            ["--enc-layers", "128", "--cf", "8", "--fwd-iters", "serial", "--lp", "4"]
+                .iter()
+                .map(|s| s.to_string())
+                .collect();
+        rc.apply_args(&Args::parse(&toks).unwrap());
+        assert_eq!(rc.model.n_enc_layers, 128);
+        assert_eq!(rc.mgrit.cf, 8);
+        assert_eq!(rc.mgrit.fwd_iters, None);
+        assert_eq!(rc.lp_degree, 4);
+    }
+}

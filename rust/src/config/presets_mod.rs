@@ -1,0 +1,208 @@
+//! Task presets mirroring the paper's Tables 2-3, width-scaled to this
+//! testbed (1 CPU core) while preserving the paper's depth and MGRIT
+//! parameters — depth is the axis the paper studies (DESIGN.md §Substitutions).
+//!
+//! | Preset      | Paper analogue | Arch     | Depth      | MGRIT (Table 3)   |
+//! |-------------|----------------|----------|------------|-------------------|
+//! | `bert_deep` | BERT 128L      | encoder  | 128        | cf=4, L=2, 1F/1B  |
+//! | `mc_tiny`   | MC (GUM)       | encoder  | 4..64      | cf=8->2, L=2, 2F/1B |
+//! | `vit_small` | ViT 32L        | encoder  | 32         | cf=4, serial F/1B |
+//! | `mt_small`  | MT (OPUS de-en)| enc-dec  | 6+6        | cf=3, L=2, 3B     |
+//! | `gpt_small` | GPT2 20L       | decoder  | 20 (2+2 buf)| cf=4, serial F/1B |
+
+use super::{Arch, MgritConfig, ModelConfig, OptKind, RunConfig, TrainConfig};
+
+/// Default artifact geometry (must match `make artifacts`):
+/// vocab=64, d=64, H=4, d_ff=128, seq=32, batch=8, classes=8.
+fn artifact_model(arch: Arch) -> ModelConfig {
+    ModelConfig {
+        arch,
+        vocab: 64,
+        d_model: 64,
+        n_heads: 4,
+        d_ff: 128,
+        seq: 32,
+        batch: 8,
+        n_classes: 8,
+        n_enc_layers: 8,
+        n_dec_layers: 0,
+        buffer_open: 0,
+        buffer_close: 0,
+    }
+}
+
+/// BERT pre-training analogue: very deep encoder, MLM objective.
+/// Paper: 128 layers, cf=4, L=2, 1 fwd + 1 bwd iteration, AdamW.
+pub fn bert_deep() -> RunConfig {
+    let mut model = artifact_model(Arch::Encoder);
+    model.n_enc_layers = 128;
+    RunConfig {
+        name: "bert_deep".into(),
+        model,
+        mgrit: MgritConfig { cf: 4, levels: 2, fwd_iters: Some(1), bwd_iters: Some(1), fcf: true },
+        train: TrainConfig {
+            steps: 400,
+            lr: 3e-4,
+            warmup: 40,
+            weight_decay: 0.01,
+            opt: OptKind::AdamW,
+            ..TrainConfig::default()
+        },
+        lp_degree: 4,
+        dp_degree: 1,
+    }
+}
+
+/// Morphological-classification analogue: shallow encoder, SGD, tagging head.
+/// Paper: GUM corpus, 4..1024 layers in scaling studies, cf=2..8, L=2..3.
+pub fn mc_tiny() -> RunConfig {
+    let mut model = artifact_model(Arch::Encoder);
+    model.n_enc_layers = 8;
+    RunConfig {
+        name: "mc".into(),
+        model,
+        mgrit: MgritConfig { cf: 2, levels: 2, fwd_iters: Some(2), bwd_iters: Some(1), fcf: true },
+        train: TrainConfig {
+            steps: 300,
+            lr: 5e-2,
+            warmup: 0,
+            weight_decay: 0.0,
+            opt: OptKind::Sgd,
+            ..TrainConfig::default()
+        },
+        lp_degree: 2,
+        dp_degree: 1,
+    }
+}
+
+/// ViT analogue: encoder over procedural image patches, classification head.
+/// Paper: 32 layers, serial forward + 1 backward iteration, cf=4, Adam.
+pub fn vit_small() -> RunConfig {
+    let mut model = artifact_model(Arch::Encoder);
+    model.n_enc_layers = 32;
+    RunConfig {
+        name: "vit".into(),
+        model,
+        mgrit: MgritConfig { cf: 4, levels: 2, fwd_iters: None, bwd_iters: Some(1), fcf: true },
+        train: TrainConfig {
+            steps: 300,
+            lr: 1e-3,
+            warmup: 20,
+            weight_decay: 0.0,
+            opt: OptKind::Adam,
+            ..TrainConfig::default()
+        },
+        lp_degree: 2,
+        dp_degree: 1,
+    }
+}
+
+/// Machine-translation analogue: encoder-decoder, cipher translation pairs.
+/// Paper: 6+6 layers, cf=3, L=2, serial fwd + 3 bwd iterations, Adam.
+pub fn mt_small() -> RunConfig {
+    let mut model = artifact_model(Arch::EncDec);
+    model.n_enc_layers = 6;
+    model.n_dec_layers = 6;
+    RunConfig {
+        name: "mt".into(),
+        model,
+        mgrit: MgritConfig { cf: 3, levels: 2, fwd_iters: None, bwd_iters: Some(3), fcf: true },
+        train: TrainConfig {
+            steps: 400,
+            lr: 1e-3,
+            warmup: 40,
+            weight_decay: 0.0,
+            opt: OptKind::Adam,
+            ..TrainConfig::default()
+        },
+        lp_degree: 2,
+        dp_degree: 1,
+    }
+}
+
+/// GPT-2 pre-training analogue: decoder-only char-LM with buffer layers.
+/// Paper Appendix B: 20 layers, 2+2 serial buffers, middle 16 with dt=1/16;
+/// cf=4, serial forward + 1 backward iteration, AdamW.
+pub fn gpt_small() -> RunConfig {
+    let mut model = artifact_model(Arch::Decoder);
+    model.n_enc_layers = 0;
+    model.n_dec_layers = 20;
+    model.buffer_open = 2;
+    model.buffer_close = 2;
+    RunConfig {
+        name: "gpt".into(),
+        model,
+        mgrit: MgritConfig { cf: 4, levels: 2, fwd_iters: None, bwd_iters: Some(1), fcf: true },
+        train: TrainConfig {
+            steps: 400,
+            lr: 6e-4,
+            warmup: 40,
+            weight_decay: 0.01,
+            opt: OptKind::AdamW,
+            ..TrainConfig::default()
+        },
+        lp_degree: 2,
+        dp_degree: 1,
+    }
+}
+
+/// Look up a preset by name (the CLI surface).
+pub fn by_name(name: &str) -> Option<RunConfig> {
+    match name {
+        "bert" | "bert_deep" => Some(bert_deep()),
+        "mc" | "mc_tiny" => Some(mc_tiny()),
+        "vit" | "vit_small" => Some(vit_small()),
+        "mt" | "mt_small" => Some(mt_small()),
+        "gpt" | "gpt_small" => Some(gpt_small()),
+        _ => None,
+    }
+}
+
+/// All preset names (for `--help` and sweeps).
+pub const ALL: &[&str] = &["bert_deep", "mc_tiny", "vit_small", "mt_small", "gpt_small"];
+
+/// Shrink a run to bench scale: small width/seq/batch so the paper-shape
+/// experiments (Figs. 3-5, 12, Table 1) finish in seconds on one CPU core
+/// while keeping the preset's depth structure and MGRIT parameters.
+pub fn shrink_for_bench(rc: &mut RunConfig) {
+    rc.model.vocab = 32;
+    rc.model.d_model = 16;
+    rc.model.n_heads = 2;
+    rc.model.d_ff = 32;
+    rc.model.seq = 16;
+    rc.model.batch = 4;
+    rc.model.n_classes = 4;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_presets_resolve() {
+        for name in ALL {
+            let rc = by_name(name).unwrap();
+            assert!(rc.model.total_layers() > 0, "{}", name);
+            assert!(rc.mgrit.cf >= 2);
+        }
+    }
+
+    #[test]
+    fn gpt_matches_appendix_b() {
+        let rc = gpt_small();
+        assert_eq!(rc.model.n_dec_layers, 20);
+        assert_eq!(rc.model.parallel_layers(), 16);
+        assert!((rc.model.fine_h() - 1.0 / 16.0).abs() < 1e-7);
+        assert_eq!(rc.mgrit.fwd_iters, None); // serial forward (Table 3)
+        assert_eq!(rc.mgrit.bwd_iters, Some(1));
+    }
+
+    #[test]
+    fn mt_matches_table3() {
+        let rc = mt_small();
+        assert_eq!(rc.mgrit.cf, 3);
+        assert_eq!(rc.mgrit.bwd_iters, Some(3));
+        assert_eq!(rc.model.arch, Arch::EncDec);
+        assert_eq!(rc.model.total_layers(), 12);
+    }
+}

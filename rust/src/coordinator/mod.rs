@@ -1,0 +1,19 @@
+//! The training coordinator — the launcher-facing layer that composes
+//! embedding/heads ([`heads`]), the MGRIT engine, the adaptive controller,
+//! optimizers, and data pipelines into the paper's training procedure.
+//!
+//! * [`heads`] — pure-Rust embedding and loss heads (fwd+bwd). The ODE
+//!   layers dominate compute and run through XLA; heads are O(B·S·D·V)
+//!   and run on the coordinator.
+//! * [`range`] — a sub-range view of a propagator: buffer layers
+//!   (Appendix B) run serially outside the MGRIT domain.
+//! * [`trainer`] — `TrainRun`: batch loop, forward/adjoint MGRIT solves,
+//!   §3.2.3 probes, gradient clipping, optimizer updates, evaluation
+//!   (accuracy / BLEU), CSV run recording.
+
+pub mod heads;
+pub mod range;
+pub mod trainer;
+
+pub use range::RangeProp;
+pub use trainer::{Task, TrainReport, TrainRun};

@@ -1,0 +1,62 @@
+//! Synthetic data pipelines standing in for the paper's corpora
+//! (DESIGN.md §Substitutions — C4/OpenWebText/GUM/OPUS/ImageNet are not
+//! reachable offline; the paper's claims concern training *dynamics*, which
+//! reproduce on any learnable task with the same architectures):
+//!
+//! * [`charlm`]  — order-2 Markov character corpus (BERT-MLM + GPT-LM);
+//! * [`translate`] — deterministic cipher "translation" pairs (MT task);
+//! * [`morpho`] — suffix-rule morphological tagging (MC task, GUM analogue);
+//! * [`images`] — procedural shape images → patch tokens (ViT analogue).
+//!
+//! Every generator is deterministic in its seed and splits train/val by
+//! construction (disjoint streams), with vocab sizes matching the compiled
+//! artifact geometry.
+
+pub mod charlm;
+pub mod images;
+pub mod morpho;
+pub mod translate;
+
+/// One batch of token-level data. Targets/labels semantics depend on task:
+/// LM: next token; MLM: original token at masked slots; tagging: class ids.
+#[derive(Debug, Clone)]
+pub struct Batch {
+    /// Input token ids [B, S].
+    pub tokens: Vec<i32>,
+    /// Target ids [B, S] (LM/MLM/tagging) — empty for classification.
+    pub targets: Vec<i32>,
+    /// Loss mask [B, S] (1.0 = counted). All-ones for plain LM.
+    pub mask: Vec<f32>,
+    /// Sequence-level labels [B] (classification) — empty otherwise.
+    pub labels: Vec<i32>,
+    pub batch: usize,
+    pub seq: usize,
+}
+
+impl Batch {
+    pub fn empty(batch: usize, seq: usize) -> Batch {
+        Batch {
+            tokens: vec![0; batch * seq],
+            targets: vec![0; batch * seq],
+            mask: vec![1.0; batch * seq],
+            labels: vec![],
+            batch,
+            seq,
+        }
+    }
+}
+
+/// Source/target pair batch for the encoder-decoder task.
+#[derive(Debug, Clone)]
+pub struct PairBatch {
+    /// Encoder input [B, S].
+    pub src: Vec<i32>,
+    /// Decoder input (shifted right, BOS-prefixed) [B, S].
+    pub tgt_in: Vec<i32>,
+    /// Decoder targets [B, S].
+    pub tgt_out: Vec<i32>,
+    /// Loss mask over decoder targets [B, S].
+    pub mask: Vec<f32>,
+    pub batch: usize,
+    pub seq: usize,
+}

@@ -1,0 +1,116 @@
+//! Suffix-rule morphological tagging — the MC (GUM corpus) analogue.
+//!
+//! "Words" are short symbol spans; each word's morphological class is a
+//! deterministic function of its final symbols (as inflectional suffixes
+//! are in natural language). Every token position is labelled with its
+//! word's class, so an encoder must aggregate context to tag correctly —
+//! the per-token classification objective of the paper's MC task.
+
+use super::Batch;
+use crate::util::rng::Rng;
+
+pub struct MorphoTask {
+    vocab: usize,
+    n_classes: usize,
+    /// class of a word ending in symbol s = suffix_class[s]
+    suffix_class: Vec<i32>,
+    /// separator symbol (word boundary)
+    sep: i32,
+}
+
+impl MorphoTask {
+    pub fn new(vocab: usize, n_classes: usize, seed: u64) -> MorphoTask {
+        assert!(vocab >= 4 && n_classes >= 2);
+        let mut rng = Rng::new(seed ^ 0x5EED);
+        let suffix_class = (0..vocab).map(|_| rng.range(n_classes) as i32).collect();
+        MorphoTask { vocab, n_classes, suffix_class, sep: 0 }
+    }
+
+    pub fn n_classes(&self) -> usize {
+        self.n_classes
+    }
+
+    /// Tagging batch: tokens + per-token class labels (in `targets`).
+    pub fn batch(&self, rng: &mut Rng, batch: usize, seq: usize) -> Batch {
+        let mut out = Batch::empty(batch, seq);
+        for bi in 0..batch {
+            let mut t = 0;
+            while t < seq {
+                // word of length 2..5 followed by a separator
+                let wlen = (2 + rng.range(4)).min(seq - t);
+                let start = t;
+                for _ in 0..wlen {
+                    out.tokens[bi * seq + t] = (1 + rng.range(self.vocab - 1)) as i32;
+                    t += 1;
+                }
+                let last = out.tokens[bi * seq + t - 1];
+                let class = self.suffix_class[last as usize];
+                for k in start..t {
+                    out.targets[bi * seq + k] = class;
+                }
+                if t < seq {
+                    out.tokens[bi * seq + t] = self.sep;
+                    out.targets[bi * seq + t] = self.suffix_class[self.sep as usize];
+                    t += 1;
+                }
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn labels_follow_suffix_rule() {
+        let task = MorphoTask::new(16, 4, 1);
+        let mut rng = Rng::new(2);
+        let b = task.batch(&mut rng, 2, 32);
+        // scan words: label of every in-word position equals class of the
+        // word-final symbol
+        for bi in 0..2 {
+            let toks = &b.tokens[bi * 32..(bi + 1) * 32];
+            let labs = &b.targets[bi * 32..(bi + 1) * 32];
+            let mut start = 0;
+            for t in 0..32 {
+                if toks[t] == 0 || t == 31 {
+                    let end = if toks[t] == 0 { t } else { t + 1 };
+                    if end > start {
+                        let class = task.suffix_class[toks[end - 1] as usize];
+                        for k in start..end {
+                            assert_eq!(labs[k], class, "pos {} in word [{},{})", k, start, end);
+                        }
+                    }
+                    start = t + 1;
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn labels_in_range() {
+        let task = MorphoTask::new(16, 4, 3);
+        let mut rng = Rng::new(4);
+        let b = task.batch(&mut rng, 4, 64);
+        assert!(b.targets.iter().all(|&c| (0..4).contains(&c)));
+        assert!(b.tokens.iter().all(|&t| (0..16).contains(&t)));
+    }
+
+    #[test]
+    fn task_requires_context() {
+        // at least some positions are not word-final -> their class is not a
+        // function of their own token, so context is required
+        let task = MorphoTask::new(16, 4, 5);
+        let mut rng = Rng::new(6);
+        let b = task.batch(&mut rng, 8, 64);
+        let mut mismatch = 0;
+        for i in 0..b.tokens.len() {
+            if task.suffix_class[b.tokens[i] as usize] != b.targets[i] {
+                mismatch += 1;
+            }
+        }
+        assert!(mismatch > 0, "task degenerate: every label local");
+    }
+}

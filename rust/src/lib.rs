@@ -1,0 +1,45 @@
+//! # layertime
+//!
+//! A production-oriented reproduction of **“Layer-Parallel Training for
+//! Transformers”** (Jiang, Cyr, Salvadó-Benasco, Kopaničáková, Krause,
+//! Schroder — CS.LG 2026): MGRIT (multigrid-reduction-in-time) applied to
+//! the layer dimension of neural-ODE transformers, with inexact forward and
+//! adjoint propagation, an adaptive inexactness controller, and combined
+//! layer-×-data parallelism.
+//!
+//! ## Architecture (three layers, Python never on the training path)
+//!
+//! * **L3 (this crate)** — the coordinator: MGRIT engine ([`mgrit`]),
+//!   adaptive controller ([`adaptive`]), device topology + comm fabric +
+//!   performance simulator ([`parallel`]), training loop ([`coordinator`]),
+//!   optimizers ([`opt`]), data pipelines ([`data`]), analysis tools
+//!   ([`analysis`]).
+//! * **L2/L1 (build time)** — JAX neural-ODE step functions composed from
+//!   Pallas kernels, AOT-lowered to HLO text artifacts by
+//!   `python/compile/aot.py`; loaded at startup by [`runtime`] through the
+//!   PJRT C API and executed from the MGRIT hot loop.
+//!
+//! A pure-Rust reference transformer ([`reference`]) mirrors the JAX model
+//! so every algorithm in the crate is testable without artifacts.
+
+pub mod adaptive;
+pub mod analysis;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod mgrit;
+pub mod model;
+pub mod ode;
+pub mod opt;
+pub mod parallel;
+pub mod reference;
+pub mod runtime;
+pub mod tensor;
+pub mod util;
+
+/// Convenience re-exports for examples and downstream users.
+pub mod prelude {
+    pub use crate::config::{presets, MgritConfig, ModelConfig, TrainConfig};
+    pub use crate::tensor::Tensor;
+    pub use crate::util::rng::Rng;
+}

@@ -1,0 +1,261 @@
+//! `layertime` launcher — the L3 leader entrypoint.
+//!
+//! Subcommands:
+//!   train      run one training job (preset + overrides)
+//!   compare    serial vs layer-parallel vs adaptive-switch from one init
+//!   simulate   performance-model a topology (layers × lp × dp × MGRIT)
+//!   lipschitz  estimate per-layer Lipschitz constants (Appendix B)
+//!   info       print preset + artifact information
+//!
+//! Examples:
+//!   layertime train --preset mc --enc-layers 64 --cf 2 --steps 300
+//!   layertime train --preset gpt --artifacts artifacts --steps 200
+//!   layertime simulate --preset bert --lp 8 --dp 4
+//!   layertime compare --preset mc --steps 120
+
+use std::rc::Rc;
+
+use anyhow::{anyhow, bail, Result};
+
+use layertime::config::presets;
+use layertime::coordinator::{Task, TrainRun};
+use layertime::model::{Init, ParamStore};
+use layertime::ode::Propagator;
+use layertime::parallel::{DeviceModel, SimConfig, Simulator};
+use layertime::runtime::XlaEngine;
+use layertime::util::cli::Args;
+use layertime::util::csv::CsvWriter;
+use layertime::util::rng::Rng;
+use layertime::util::table::{f, i, Table};
+
+const USAGE: &str = "layertime <train|compare|simulate|lipschitz|info> [--preset NAME] [options]
+  common:     --preset {bert|mc|vit|mt|gpt}  --seed N
+  model:      --enc-layers N --dec-layers N --batch N --buffer-open N --buffer-close N
+  mgrit:      --cf N --levels N --fwd-iters {N|serial} --bwd-iters {N|serial}
+  training:   --steps N --lr F --no-adaptive --artifacts DIR (use AOT/PJRT Φ)
+  topology:   --lp N --dp N --device {v100|a100}
+  output:     --out runs/NAME.csv --checkpoint PATH";
+
+fn engine_from(args: &Args) -> Result<Option<Rc<XlaEngine>>> {
+    match args.get("artifacts") {
+        None => Ok(None),
+        Some(dir) => {
+            let e = XlaEngine::load(dir)?;
+            eprintln!("PJRT platform: {} ({} entry points)", e.platform(), e.manifest().entries.len());
+            Ok(Some(Rc::new(e)))
+        }
+    }
+}
+
+fn run_config(args: &Args) -> Result<layertime::config::RunConfig> {
+    let preset = args.get_str("preset", "mc");
+    let mut rc = presets::by_name(&preset)
+        .ok_or_else(|| anyhow!("unknown preset '{}' (have: {})", preset, presets::ALL.join(", ")))?;
+    rc.apply_args(args);
+    Ok(rc)
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let rc = run_config(args)?;
+    let task = Task::for_preset(&rc.name);
+    let engine = engine_from(args)?;
+    println!(
+        "training '{}' ({:?}): {} layers, MGRIT cf={} L={} fwd={:?} bwd={:?}, {} steps",
+        rc.name,
+        task,
+        rc.model.total_layers(),
+        rc.mgrit.cf,
+        rc.mgrit.levels,
+        rc.mgrit.fwd_iters,
+        rc.mgrit.bwd_iters,
+        rc.train.steps
+    );
+    let out = args.get("out").map(|s| s.to_string());
+    let checkpoint = args.get("checkpoint").map(|s| s.to_string());
+    let mut run = TrainRun::new(rc, task, engine)?;
+    let report = run.train()?;
+    let mut tbl = Table::new(&["step", "loss", "acc", "serial", "rho_fwd", "rho_bwd"]);
+    for r in report.curve.iter().step_by((report.curve.len() / 20).max(1)) {
+        tbl.row(vec![
+            i(r.step as i64),
+            f(r.loss as f64, 4),
+            f(r.acc as f64, 3),
+            r.serial.to_string(),
+            r.rho_fwd.map(|v| f(v, 3)).unwrap_or_else(|| "-".into()),
+            r.rho_bwd.map(|v| f(v, 3)).unwrap_or_else(|| "-".into()),
+        ]);
+    }
+    tbl.print();
+    println!(
+        "final loss {:.4}, final metric {:.4}, Φ fwd/vjp = {}/{}{}",
+        report.final_loss,
+        report.final_metric,
+        report.phi_fwd,
+        report.phi_vjp,
+        report
+            .switched_at
+            .map(|s| format!(", switched to serial at step {}", s))
+            .unwrap_or_default()
+    );
+    if let Some(path) = out {
+        let mut w = CsvWriter::create(&path, &["step", "loss", "acc", "serial"])?;
+        for r in &report.curve {
+            w.row(&[
+                r.step.to_string(),
+                r.loss.to_string(),
+                r.acc.to_string(),
+                (r.serial as u8).to_string(),
+            ])?;
+        }
+        w.flush()?;
+        println!("wrote {}", path);
+    }
+    if let Some(path) = checkpoint {
+        run.params.save(&path)?;
+        println!("saved checkpoint {}", path);
+    }
+    Ok(())
+}
+
+fn cmd_compare(args: &Args) -> Result<()> {
+    let rc = run_config(args)?;
+    let task = Task::for_preset(&rc.name);
+    let init = ParamStore::init(
+        &rc.model,
+        if rc.model.total_layers() >= 64 { Init::DeepNet } else { Init::Default },
+        rc.train.seed,
+    );
+    let mut variants: Vec<(&str, layertime::config::RunConfig)> = vec![];
+    let mut serial = rc.clone();
+    serial.mgrit = layertime::config::MgritConfig::serial();
+    serial.train.adaptive = false;
+    variants.push(("serial", serial));
+    let mut pure = rc.clone();
+    pure.train.adaptive = false;
+    variants.push(("layer-parallel", pure));
+    let mut adaptive = rc.clone();
+    adaptive.train.adaptive = true;
+    variants.push(("adaptive-switch", adaptive));
+
+    let mut tbl = Table::new(&["variant", "final loss", "final metric", "switched@"]);
+    for (name, vrc) in variants {
+        let engine = engine_from(args)?;
+        let mut run = TrainRun::from_params(vrc, task, init.deep_clone(), engine)?;
+        let rep = run.train()?;
+        tbl.row(vec![
+            name.into(),
+            f(rep.final_loss as f64, 4),
+            f(rep.final_metric, 4),
+            rep.switched_at.map(|s| s.to_string()).unwrap_or_else(|| "-".into()),
+        ]);
+    }
+    tbl.print();
+    Ok(())
+}
+
+fn cmd_simulate(args: &Args) -> Result<()> {
+    let rc = run_config(args)?;
+    let device = match args.get_str("device", "v100").as_str() {
+        "a100" => DeviceModel::a100(),
+        _ => DeviceModel::v100(),
+    };
+    let m = &rc.model;
+    let flops_per_sample = 12.0 * (m.seq * m.d_model * m.d_model) as f64
+        + 4.0 * (m.seq * m.seq * m.d_model) as f64
+        + 4.0 * (m.seq * m.d_model * m.d_ff) as f64;
+    let sim = Simulator::new(SimConfig {
+        n_layers: m.parallel_layers(),
+        cf: rc.mgrit.cf,
+        levels: rc.mgrit.levels,
+        fwd_iters: rc.mgrit.fwd_iters,
+        bwd_iters: rc.mgrit.bwd_iters,
+        fcf: rc.mgrit.fcf,
+        lp: rc.lp_degree,
+        dp: rc.dp_degree,
+        flops_per_sample_step: flops_per_sample,
+        batch: m.batch,
+        state_bytes: (m.seq * m.d_model * 4) as f64,
+        param_bytes: (m.total_layers() * m.p_enc() * 4) as f64,
+        device,
+    });
+    let rep = sim.batch_time();
+    println!(
+        "{} on {}: lp={} dp={} layers={}",
+        rc.name, sim.cfg.device.name, rc.lp_degree, rc.dp_degree, m.total_layers()
+    );
+    let mut tbl = Table::new(&["component", "seconds"]);
+    tbl.row(vec!["forward solve".into(), format!("{:.6}", rep.fwd)]);
+    tbl.row(vec!["adjoint solve".into(), format!("{:.6}", rep.bwd)]);
+    tbl.row(vec!["gradient pass".into(), format!("{:.6}", rep.grad)]);
+    tbl.row(vec!["dp allreduce".into(), format!("{:.6}", rep.allreduce)]);
+    tbl.row(vec!["TOTAL/batch".into(), format!("{:.6}", rep.total)]);
+    tbl.print();
+    println!("speedup vs 1-device serial: {:.2}x", sim.speedup_vs_serial());
+    Ok(())
+}
+
+fn cmd_lipschitz(args: &Args) -> Result<()> {
+    let rc = run_config(args)?;
+    let ps = ParamStore::init(&rc.model, Init::Default, rc.train.seed);
+    let prop = ps.rust_propagator();
+    let mut rng = Rng::new(rc.train.seed + 99);
+    let z0 = layertime::tensor::Tensor::randn(&mut rng, &prop.state_shape(), 1.0);
+    // serial forward for representative states
+    let mut states = vec![z0];
+    for l in 0..prop.n_steps() {
+        let next = prop.step(l, 1.0, &states[l]);
+        states.push(next);
+    }
+    let est = layertime::analysis::estimate_layer_lipschitz(&prop, &states, 16, 1e-2, &mut rng);
+    let mut tbl = Table::new(&["layer", "lipschitz"]);
+    for (l, v) in est.iter().enumerate() {
+        tbl.row(vec![i(l as i64), f(*v as f64, 4)]);
+    }
+    tbl.print();
+    Ok(())
+}
+
+fn cmd_info(args: &Args) -> Result<()> {
+    println!("presets:");
+    for name in presets::ALL {
+        let rc = presets::by_name(name).unwrap();
+        println!(
+            "  {:<10} arch={:<8} layers={:<4} cf={} L={} fwd={:?} bwd={:?} opt={}",
+            name,
+            rc.model.arch.as_str(),
+            rc.model.total_layers(),
+            rc.mgrit.cf,
+            rc.mgrit.levels,
+            rc.mgrit.fwd_iters,
+            rc.mgrit.bwd_iters,
+            rc.train.opt.as_str()
+        );
+    }
+    if let Some(engine) = engine_from(args)? {
+        let mf = engine.manifest();
+        println!("\nartifacts at {} (pallas={}):", mf.dir.display(), mf.use_pallas);
+        for (name, e) in &mf.entries {
+            println!("  {:<18} {} inputs, {} outputs", name, e.inputs.len(), e.outputs.len());
+        }
+        println!("  Φ flops: enc {:.2e}, dec {:.2e}", mf.flops_enc_step, mf.flops_dec_step);
+        println!("  kernel VMEM: attention {} B, mlp {} B", mf.vmem_attention, mf.vmem_mlp);
+    }
+    Ok(())
+}
+
+fn main() -> Result<()> {
+    let args = Args::from_env();
+    let cmd = args.subcommand().unwrap_or("help").to_string();
+    match cmd.as_str() {
+        "train" => cmd_train(&args),
+        "compare" => cmd_compare(&args),
+        "simulate" => cmd_simulate(&args),
+        "lipschitz" => cmd_lipschitz(&args),
+        "info" => cmd_info(&args),
+        "help" | "--help" => {
+            println!("{}", USAGE);
+            Ok(())
+        }
+        other => bail!("unknown subcommand '{}'\n{}", other, USAGE),
+    }
+}

@@ -1,0 +1,431 @@
+//! The FAS-MGRIT core: relaxation, restriction with τ-correction, V-cycle.
+//!
+//! Solves the all-at-once system  A(W) = G  where
+//!   A(W)_0 = W_0,          A(W)_n = W_n − Φ_{n-1}(W_{n-1})  (n ≥ 1)
+//! (paper §3.2.1). Nonlinear Φ requires the Full Approximation Scheme: the
+//! coarse level solves A_c(W_c) = A_c(R W) + R (G − A(W)) rather than an
+//! error equation. For linear Φ this reduces exactly to the residual/error
+//! form shown in the paper's Fig. 2.
+//!
+//! The core is generic over a [`LevelStepper`] so the *same* code runs the
+//! forward solve (over Φ) and the adjoint solve (over Φᵀ in reversed time).
+
+use crate::tensor::Tensor;
+
+/// One time-step on an arbitrary MGRIT level.
+///
+/// `fine_idx` is the fine-grid index of the step's *source* point and
+/// `stride` the level's step width: the stepper advances from `fine_idx`
+/// to `fine_idx + stride` using a single step of size `stride · h_fine`
+/// (rediscretization).
+pub trait LevelStepper {
+    /// Fine-grid step count N.
+    fn n(&self) -> usize;
+
+    /// Advance: returns the state at `fine_idx + stride`.
+    fn apply(&self, fine_idx: usize, stride: usize, z: &Tensor) -> Tensor;
+}
+
+/// Per-level storage (preallocated once, reused across V-cycles).
+struct Level {
+    /// Fine-index stride of one step on this level (c_f^ℓ).
+    stride: usize,
+    /// Steps on this level.
+    n: usize,
+    /// Solution iterate W (n+1 points).
+    w: Vec<Tensor>,
+    /// FAS right-hand side G (n+1 points; g[0] is the initial condition).
+    g: Vec<Tensor>,
+    /// Snapshot of the restricted iterate (for the FAS correction).
+    w_init: Vec<Tensor>,
+}
+
+/// Reusable FAS-MGRIT engine over one stepper.
+pub struct MgritCore {
+    cf: usize,
+    fcf: bool,
+    levels: Vec<Level>,
+}
+
+/// Per-solve statistics.
+#[derive(Debug, Clone, Default)]
+pub struct CoreStats {
+    /// Fine-grid residual norm after each V-cycle (only when tracking).
+    pub residuals: Vec<f64>,
+}
+
+impl MgritCore {
+    /// Build storage for `n` fine steps with state shaped like `proto`.
+    pub fn new(n: usize, cf: usize, max_levels: usize, fcf: bool, proto: &Tensor) -> MgritCore {
+        let grid = super::grid::GridHierarchy::new(n, cf, max_levels);
+        let levels = grid
+            .steps
+            .iter()
+            .enumerate()
+            .map(|(l, &nl)| Level {
+                stride: grid.stride(l),
+                n: nl,
+                w: vec![Tensor::zeros(proto.shape()); nl + 1],
+                g: vec![Tensor::zeros(proto.shape()); nl + 1],
+                w_init: vec![Tensor::zeros(proto.shape()); nl + 1],
+            })
+            .collect();
+        MgritCore { cf, fcf, levels }
+    }
+
+    pub fn n_levels(&self) -> usize {
+        self.levels.len()
+    }
+
+    /// Direct serial solve of A(W)=G on the fine grid (the baseline / L=1
+    /// path): W_0 = G_0, W_n = Φ(W_{n-1}) + G_n.
+    pub fn serial_solve<S: LevelStepper>(&mut self, stepper: &S, z0: &Tensor) -> &[Tensor] {
+        let lvl = &mut self.levels[0];
+        lvl.w[0] = z0.clone();
+        for i in 1..=lvl.n {
+            lvl.w[i] = stepper.apply(i - 1, 1, &lvl.w[i - 1]);
+        }
+        &lvl.w
+    }
+
+    /// Run `iters` V-cycles from an initial guess; returns stats.
+    ///
+    /// * `z0` — initial condition (becomes W_0 and G_0).
+    /// * `warm` — optional warm-start iterate for all fine points (e.g. the
+    ///   previous batch's states, TorchBraid-style); defaults to z0 copies.
+    /// * `track_residuals` — compute ‖G − A(W)‖ after every cycle (costs one
+    ///   extra fine sweep per cycle; used by the §3.2.3 indicator probes).
+    pub fn solve<S: LevelStepper>(
+        &mut self,
+        stepper: &S,
+        z0: &Tensor,
+        warm: Option<&[Tensor]>,
+        iters: usize,
+        track_residuals: bool,
+    ) -> CoreStats {
+        {
+            let lvl = &mut self.levels[0];
+            assert_eq!(lvl.n, stepper.n(), "stepper/grid size mismatch");
+            lvl.w[0] = z0.clone();
+            lvl.g[0] = z0.clone();
+            for i in 1..=lvl.n {
+                lvl.g[i].fill_zero();
+                match warm {
+                    Some(ws) => lvl.w[i] = ws[i].clone(),
+                    None => lvl.w[i] = z0.clone(),
+                }
+            }
+        }
+        let mut stats = CoreStats::default();
+        for _ in 0..iters {
+            Self::vcycle(&mut self.levels, stepper, self.cf, self.fcf);
+            if track_residuals {
+                stats.residuals.push(self.fine_residual_norm(stepper));
+            }
+        }
+        stats
+    }
+
+    /// Fine-grid solution points (valid after `solve`/`serial_solve`).
+    pub fn solution(&self) -> &[Tensor] {
+        &self.levels[0].w
+    }
+
+    /// Multilevel (FMG / nested-iteration) initialization, after Cyr,
+    /// Günther & Schroder 2019 ("Multilevel initialization for
+    /// layer-parallel deep neural network training", cited in the paper's
+    /// §2): solve the *coarsest* rediscretization serially (c_f^{L-1}×
+    /// cheaper than a fine sweep), then interpolate level by level —
+    /// inject to C-points, F-relax to fill F-points — producing a fine-grid
+    /// initial guess that typically saves V-cycles vs starting from z0
+    /// copies. Returns the iterate in-place; follow with `solve(...,
+    /// warm=Some(core.solution()))` or use `solve_fmg`.
+    pub fn fmg_init<S: LevelStepper>(&mut self, stepper: &S, z0: &Tensor) {
+        let n_levels = self.levels.len();
+        // zero RHS everywhere; initial condition on every level
+        for lvl in self.levels.iter_mut() {
+            lvl.g.iter_mut().for_each(|g| g.fill_zero());
+            lvl.g[0] = z0.clone();
+            lvl.w[0] = z0.clone();
+        }
+        // serial solve on the coarsest rediscretization
+        {
+            let lvl = self.levels.last_mut().unwrap();
+            for i in 1..=lvl.n {
+                lvl.w[i] = stepper.apply((i - 1) * lvl.stride, lvl.stride, &lvl.w[i - 1]);
+            }
+        }
+        // interpolate down: inject C-points, F-relax to fill the rest
+        for l in (0..n_levels - 1).rev() {
+            let (fine, coarse) = {
+                let (a, b) = self.levels.split_at_mut(l + 1);
+                (&mut a[l], &b[0])
+            };
+            for k in 0..=coarse.n {
+                fine.w[k * self.cf] = coarse.w[k].clone();
+            }
+            Self::f_relax(fine, stepper, self.cf);
+        }
+    }
+
+    /// FMG-initialized solve: nested-iteration initial guess followed by
+    /// `iters` V-cycles.
+    pub fn solve_fmg<S: LevelStepper>(
+        &mut self,
+        stepper: &S,
+        z0: &Tensor,
+        iters: usize,
+        track_residuals: bool,
+    ) -> CoreStats {
+        self.fmg_init(stepper, z0);
+        let warm: Vec<Tensor> = self.levels[0].w.clone();
+        self.solve(stepper, z0, Some(&warm), iters, track_residuals)
+    }
+
+    /// ‖G − A(W)‖ on the fine grid.
+    pub fn fine_residual_norm<S: LevelStepper>(&self, stepper: &S) -> f64 {
+        let lvl = &self.levels[0];
+        let mut acc = 0.0f64;
+        for i in 1..=lvl.n {
+            let pred = stepper.apply((i - 1) * lvl.stride, lvl.stride, &lvl.w[i - 1]);
+            let mut r = lvl.g[i].clone();
+            r.axpy(-1.0, &lvl.w[i]);
+            r.axpy(1.0, &pred);
+            let nrm = r.norm() as f64;
+            acc += nrm * nrm;
+        }
+        acc.sqrt()
+    }
+
+    // -- internals ----------------------------------------------------------
+
+    /// F-relaxation: from every C-point, re-propagate across the F-points
+    /// up to (not including) the next C-point. Each chunk is independent —
+    /// this is the N/c_f-way-parallel phase (paper Fig. 2, red/blue arrows).
+    fn f_relax<S: LevelStepper>(lvl: &mut Level, stepper: &S, cf: usize) {
+        let n_chunks = lvl.n / cf;
+        for k in 0..n_chunks {
+            let base = k * cf;
+            for i in 0..cf - 1 {
+                let idx = base + i;
+                let mut next = stepper.apply(idx * lvl.stride, lvl.stride, &lvl.w[idx]);
+                next.axpy(1.0, &lvl.g[idx + 1]);
+                lvl.w[idx + 1] = next;
+            }
+        }
+    }
+
+    /// C-relaxation: update every C-point from its preceding F-point.
+    fn c_relax<S: LevelStepper>(lvl: &mut Level, stepper: &S, cf: usize) {
+        let n_chunks = lvl.n / cf;
+        for k in 1..=n_chunks {
+            let idx = k * cf;
+            let mut next = stepper.apply((idx - 1) * lvl.stride, lvl.stride, &lvl.w[idx - 1]);
+            next.axpy(1.0, &lvl.g[idx]);
+            lvl.w[idx] = next;
+        }
+    }
+
+    fn vcycle<S: LevelStepper>(levels: &mut [Level], stepper: &S, cf: usize, fcf: bool) {
+        let (fine, coarser) = levels.split_first_mut().expect("at least one level");
+
+        if coarser.is_empty() {
+            // Coarsest level: exact serial solve W_n = Φ(W_{n-1}) + G_n.
+            fine.w[0] = fine.g[0].clone();
+            for i in 1..=fine.n {
+                let mut next = stepper.apply((i - 1) * fine.stride, fine.stride, &fine.w[i - 1]);
+                next.axpy(1.0, &fine.g[i]);
+                fine.w[i] = next;
+            }
+            return;
+        }
+        let coarse = &mut coarser[0];
+
+        // 1. relaxation (F or FCF)
+        Self::f_relax(fine, stepper, cf);
+        if fcf {
+            Self::c_relax(fine, stepper, cf);
+            Self::f_relax(fine, stepper, cf);
+        }
+
+        // 2. FAS restriction: W_c = R W (injection); G_c = A_c(W_c) + R r.
+        let nc = coarse.n;
+        for k in 0..=nc {
+            coarse.w[k] = fine.w[k * cf].clone();
+            coarse.w_init[k] = coarse.w[k].clone();
+        }
+        coarse.g[0] = coarse.w[0].clone();
+        for k in 1..=nc {
+            let fine_idx = k * cf;
+            // fine residual at the C-point: r = g - w + Φ_f(w_{prev})
+            let pred_f =
+                stepper.apply((fine_idx - 1) * fine.stride, fine.stride, &fine.w[fine_idx - 1]);
+            let mut r = fine.g[fine_idx].clone();
+            r.axpy(-1.0, &fine.w[fine_idx]);
+            r.axpy(1.0, &pred_f);
+            // τ-corrected coarse RHS: A_c(W_c)_k + r
+            let pred_c =
+                stepper.apply((k - 1) * coarse.stride, coarse.stride, &coarse.w[k - 1]);
+            let mut gk = coarse.w[k].clone();
+            gk.axpy(-1.0, &pred_c);
+            gk.axpy(1.0, &r);
+            coarse.g[k] = gk;
+        }
+
+        // 3. coarse solve (recursive)
+        Self::vcycle(coarser, stepper, cf, fcf);
+
+        // 4. FAS correction at C-points + final F-relax to spread it
+        let coarse = &coarser[0];
+        for k in 1..=nc {
+            let mut e = coarse.w[k].clone();
+            e.axpy(-1.0, &coarse.w_init[k]);
+            fine.w[k * cf].axpy(1.0, &e);
+        }
+        Self::f_relax(fine, stepper, cf);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ode::{LinearOde, Propagator};
+    use crate::util::rng::Rng;
+
+    /// Forward stepper over a Propagator (duplicated from solver.rs to keep
+    /// the core testable standalone).
+    struct Fwd<'a, P: Propagator>(&'a P);
+
+    impl<'a, P: Propagator> LevelStepper for Fwd<'a, P> {
+        fn n(&self) -> usize {
+            self.0.n_steps()
+        }
+
+        fn apply(&self, fine_idx: usize, stride: usize, z: &Tensor) -> Tensor {
+            self.0.step(fine_idx, stride as f32, z)
+        }
+    }
+
+    fn setup(n: usize, seed: u64) -> (LinearOde, Tensor) {
+        let mut rng = Rng::new(seed);
+        let ode = LinearOde::random_stable(&mut rng, 6, n, 0.05);
+        let z0 = Tensor::randn(&mut rng, &[6, 1], 1.0);
+        (ode, z0)
+    }
+
+    #[test]
+    fn serial_solve_matches_trajectory() {
+        let (ode, z0) = setup(16, 0);
+        let mut core = MgritCore::new(16, 4, 2, true, &z0);
+        let w = core.serial_solve(&Fwd(&ode), &z0).to_vec();
+        let traj = ode.serial_trajectory(&z0);
+        for (a, b) in w.iter().zip(&traj) {
+            assert!(a.allclose(b, 1e-6, 1e-6));
+        }
+    }
+
+    #[test]
+    fn mgrit_converges_to_serial_solution() {
+        let (ode, z0) = setup(32, 1);
+        let traj = ode.serial_trajectory(&z0);
+        let mut core = MgritCore::new(32, 4, 2, true, &z0);
+        let stats = core.solve(&Fwd(&ode), &z0, None, 8, true);
+        // residual decays monotonically and substantially
+        assert!(stats.residuals.last().unwrap() < &1e-5, "{:?}", stats.residuals);
+        for (w, t) in core.solution().iter().zip(&traj) {
+            assert!(w.allclose(t, 1e-4, 1e-4), "diff {}", w.max_abs_diff(t));
+        }
+    }
+
+    #[test]
+    fn mgrit_is_exact_after_enough_iterations() {
+        // FCF-MGRIT is a direct method after ~N/(2 c_f) cycles.
+        let (ode, z0) = setup(16, 2);
+        let traj = ode.serial_trajectory(&z0);
+        let mut core = MgritCore::new(16, 2, 2, true, &z0);
+        core.solve(&Fwd(&ode), &z0, None, 8, false);
+        for (w, t) in core.solution().iter().zip(&traj) {
+            assert!(w.allclose(t, 1e-5, 1e-5));
+        }
+    }
+
+    #[test]
+    fn three_level_hierarchy_converges() {
+        let (ode, z0) = setup(64, 3);
+        let traj = ode.serial_trajectory(&z0);
+        let mut core = MgritCore::new(64, 4, 3, true, &z0);
+        assert_eq!(core.n_levels(), 3);
+        let stats = core.solve(&Fwd(&ode), &z0, None, 10, true);
+        assert!(stats.residuals.last().unwrap() < &1e-4, "{:?}", stats.residuals);
+        let end = core.solution().last().unwrap();
+        assert!(end.allclose(traj.last().unwrap(), 1e-3, 1e-3));
+    }
+
+    #[test]
+    fn f_relaxation_only_also_converges_but_slower() {
+        let (ode, z0) = setup(32, 4);
+        let mut fcf = MgritCore::new(32, 4, 2, true, &z0);
+        let s_fcf = fcf.solve(&Fwd(&ode), &z0, None, 4, true);
+        let mut fonly = MgritCore::new(32, 4, 2, false, &z0);
+        let s_f = fonly.solve(&Fwd(&ode), &z0, None, 4, true);
+        assert!(
+            s_fcf.residuals.last().unwrap() <= s_f.residuals.last().unwrap(),
+            "FCF {:?} vs F {:?}",
+            s_fcf.residuals,
+            s_f.residuals
+        );
+    }
+
+    #[test]
+    fn warm_start_reduces_initial_residual() {
+        let (ode, z0) = setup(32, 5);
+        let mut core = MgritCore::new(32, 4, 2, true, &z0);
+        core.solve(&Fwd(&ode), &z0, None, 1, true);
+        let cold_w: Vec<Tensor> = core.solution().to_vec();
+        let s_cold = core.solve(&Fwd(&ode), &z0, None, 1, true);
+        let s_warm = core.solve(&Fwd(&ode), &z0, Some(&cold_w), 1, true);
+        assert!(s_warm.residuals[0] <= s_cold.residuals[0] * 1.01);
+    }
+
+    #[test]
+    fn fmg_init_beats_cold_start() {
+        // nested-iteration initial guess (Cyr et al. 2019) must reduce the
+        // first-cycle residual vs initializing every point with z0
+        let (ode, z0) = setup(64, 7);
+        let mut cold = MgritCore::new(64, 4, 3, true, &z0);
+        let s_cold = cold.solve(&Fwd(&ode), &z0, None, 1, true);
+        let mut fmg = MgritCore::new(64, 4, 3, true, &z0);
+        let s_fmg = fmg.solve_fmg(&Fwd(&ode), &z0, 1, true);
+        assert!(
+            s_fmg.residuals[0] < s_cold.residuals[0],
+            "fmg {} vs cold {}",
+            s_fmg.residuals[0],
+            s_cold.residuals[0]
+        );
+    }
+
+    #[test]
+    fn fmg_solution_converges_to_serial() {
+        let (ode, z0) = setup(32, 8);
+        let traj = ode.serial_trajectory(&z0);
+        let mut core = MgritCore::new(32, 4, 2, true, &z0);
+        core.solve_fmg(&Fwd(&ode), &z0, 4, false);
+        for (w, t) in core.solution().iter().zip(&traj) {
+            assert!(w.allclose(t, 1e-4, 1e-4));
+        }
+    }
+
+    #[test]
+    fn single_level_grid_serial_solves() {
+        // N not divisible by cf -> hierarchy clamps to 1 level; solve() must
+        // then behave like a serial solve per cycle.
+        let (ode, z0) = setup(10, 6);
+        let mut core = MgritCore::new(10, 4, 2, true, &z0);
+        assert_eq!(core.n_levels(), 1);
+        core.solve(&Fwd(&ode), &z0, None, 1, false);
+        let traj = ode.serial_trajectory(&z0);
+        for (w, t) in core.solution().iter().zip(&traj) {
+            assert!(w.allclose(t, 1e-5, 1e-5));
+        }
+    }
+}

@@ -1,0 +1,93 @@
+//! Time-grid hierarchy geometry.
+//!
+//! Level ℓ has N_ℓ = N / c_f^ℓ steps (points 0..=N_ℓ); level-ℓ point i sits
+//! at fine index i · c_f^ℓ. The effective number of levels is clamped so
+//! every level divides evenly and the coarsest level keeps at least one
+//! step (the paper's L ∈ {2, 3} configurations always satisfy this).
+
+/// Geometry of the MGRIT level hierarchy.
+#[derive(Debug, Clone)]
+pub struct GridHierarchy {
+    pub cf: usize,
+    /// Per-level step counts N_ℓ (levels[0] = fine N).
+    pub steps: Vec<usize>,
+}
+
+impl GridHierarchy {
+    /// Build for N fine steps, coarsening factor cf, at most `max_levels`.
+    pub fn new(n: usize, cf: usize, max_levels: usize) -> GridHierarchy {
+        assert!(n >= 1, "need at least one time step");
+        assert!(cf >= 2, "coarsening factor must be >= 2");
+        let mut steps = vec![n];
+        while steps.len() < max_levels {
+            let cur = *steps.last().unwrap();
+            if cur % cf != 0 || cur / cf < 1 {
+                break;
+            }
+            steps.push(cur / cf);
+        }
+        GridHierarchy { cf, steps }
+    }
+
+    pub fn levels(&self) -> usize {
+        self.steps.len()
+    }
+
+    /// Stride (in fine indices) of one step on level ℓ.
+    pub fn stride(&self, level: usize) -> usize {
+        self.cf.pow(level as u32)
+    }
+
+    /// Number of C-points (excluding t=0) on level ℓ, i.e. steps of ℓ+1.
+    pub fn coarse_steps(&self, level: usize) -> usize {
+        self.steps[level] / self.cf
+    }
+
+    /// Is level-ℓ index i a C-point?
+    pub fn is_c_point(&self, i: usize) -> bool {
+        i % self.cf == 0
+    }
+
+    /// Theoretical parallelism exposed by relaxation on level ℓ (paper §3.2:
+    /// N_ℓ / c_f concurrent chunks).
+    pub fn relax_parallelism(&self, level: usize) -> usize {
+        (self.steps[level] / self.cf).max(1)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builds_paper_configs() {
+        // BERT: 128 layers, cf=4, L=2
+        let g = GridHierarchy::new(128, 4, 2);
+        assert_eq!(g.steps, vec![128, 32]);
+        // MC scaling: 1024 layers, cf=2, L=4
+        let g = GridHierarchy::new(1024, 2, 4);
+        assert_eq!(g.steps, vec![1024, 512, 256, 128]);
+        // MT: 12 layers, cf=3, L=2
+        let g = GridHierarchy::new(12, 3, 2);
+        assert_eq!(g.steps, vec![12, 4]);
+    }
+
+    #[test]
+    fn clamps_when_not_divisible() {
+        let g = GridHierarchy::new(12, 8, 3);
+        assert_eq!(g.steps, vec![12]); // 12 % 8 != 0 -> single level
+        let g = GridHierarchy::new(16, 4, 5);
+        assert_eq!(g.steps, vec![16, 4, 1]); // 1/4 < 1 stops descent
+    }
+
+    #[test]
+    fn strides_and_cpoints() {
+        let g = GridHierarchy::new(16, 4, 2);
+        assert_eq!(g.stride(0), 1);
+        assert_eq!(g.stride(1), 4);
+        assert!(g.is_c_point(0) && g.is_c_point(8));
+        assert!(!g.is_c_point(3));
+        assert_eq!(g.coarse_steps(0), 4);
+        assert_eq!(g.relax_parallelism(0), 4);
+    }
+}

@@ -1,0 +1,18 @@
+//! MGRIT (multigrid-reduction-in-time) over the layer dimension — the
+//! paper's §3.2. Implemented as nonlinear FAS multigrid (Günther et al.
+//! 2020 / TorchBraid lineage):
+//!
+//! * a hierarchy of time grids with coarsening factor c_f ([`grid`]);
+//! * F-/C-/FCF-relaxation, injection restriction with τ-correction (FAS),
+//!   coarse-grid solve, C-point correction + final F-relax ([`core`]);
+//! * forward solver over Φ and adjoint solver over Φᵀ sharing the same
+//!   core ([`solver`]), with residual tracking and the convergence factor
+//!   ρ = ‖r^(k+1)‖/‖r^(k)‖ that drives the §3.2.3 indicator.
+
+mod core;
+mod grid;
+mod solver;
+
+pub use self::core::{LevelStepper, MgritCore};
+pub use grid::GridHierarchy;
+pub use solver::{MgritSolver, SolveStats};

@@ -1,0 +1,316 @@
+//! Model state: parameter store, initialization schemes, checkpoints.
+//!
+//! Layer parameters live in a shared `Rc<RefCell<Vec<Vec<f32>>>>` (one flat
+//! θ per layer, layout = manifest's `param_layout`) so the propagators and
+//! the optimizer view the same storage. Embedding/head parameters are plain
+//! vectors owned here.
+
+use std::cell::RefCell;
+use std::io::{Read, Write};
+use std::rc::Rc;
+
+use anyhow::{bail, Context, Result};
+
+use crate::config::{Arch, ModelConfig};
+use crate::ode::RustPropagator;
+use crate::util::rng::Rng;
+
+pub use crate::ode::SharedParams;
+
+/// All trainable state of one run.
+pub struct ParamStore {
+    pub model: ModelConfig,
+    /// Per-layer flat θ (enc layout; dec layout past n_enc for EncDec).
+    pub layers: Rc<RefCell<Vec<Vec<f32>>>>,
+    /// Token embedding [V, D].
+    pub w_emb: Vec<f32>,
+    /// Positional embedding [S, D].
+    pub w_pos: Vec<f32>,
+    /// LM head [D, V].
+    pub w_out: Vec<f32>,
+    /// Classifier head [D, C].
+    pub w_cls: Vec<f32>,
+}
+
+/// Initialization scheme.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Init {
+    /// N(0, 0.02) matrices, identity LayerNorm (GPT-2 style default).
+    Default,
+    /// Pre-LN stability scaling for very deep nets (paper Appendix C /
+    /// DeepNet): value/output/MLP projections divided by √(ln 2L).
+    DeepNet,
+}
+
+fn layer_theta_len(model: &ModelConfig, layer: usize) -> usize {
+    if model.arch == Arch::EncDec && layer >= model.n_enc_layers {
+        model.p_dec()
+    } else {
+        model.p_enc()
+    }
+}
+
+/// Fill one layer's flat θ according to the layout and scheme.
+fn init_layer(model: &ModelConfig, layer: usize, scheme: Init, rng: &mut Rng) -> Vec<f32> {
+    let (d, f) = (model.d_model, model.d_ff);
+    let n_layers = model.total_layers().max(1);
+    let deep_scale = match scheme {
+        Init::Default => 1.0,
+        Init::DeepNet => 1.0 / (2.0 * n_layers as f32).ln().sqrt(),
+    };
+    // (name, rows, cols, kind): kind g=gamma, b=bias/beta, w=plain, s=scaled
+    let mut fields: Vec<(&str, usize, usize, char)> = vec![
+        ("ln1_g", d, 1, 'g'),
+        ("ln1_b", d, 1, 'b'),
+        ("wq", d, d, 'w'),
+        ("wk", d, d, 'w'),
+        ("wv", d, d, 's'),
+        ("wo", d, d, 's'),
+        ("ln2_g", d, 1, 'g'),
+        ("ln2_b", d, 1, 'b'),
+        ("w1", d, f, 's'),
+        ("b1", f, 1, 'b'),
+        ("w2", f, d, 's'),
+        ("b2", d, 1, 'b'),
+    ];
+    if layer_theta_len(model, layer) == model.p_dec() {
+        fields.extend([
+            ("ln3_g", d, 1, 'g'),
+            ("ln3_b", d, 1, 'b'),
+            ("cq", d, d, 'w'),
+            ("ck", d, d, 'w'),
+            ("cv", d, d, 's'),
+            ("co", d, d, 's'),
+        ]);
+    }
+    let mut theta = Vec::with_capacity(layer_theta_len(model, layer));
+    for (_, rows, cols, kind) in fields {
+        let n = rows * cols;
+        match kind {
+            'g' => theta.extend(std::iter::repeat(1.0f32).take(n)),
+            'b' => theta.extend(std::iter::repeat(0.0f32).take(n)),
+            'w' => theta.extend(rng.normal_vec(n, 0.02)),
+            's' => theta.extend(rng.normal_vec(n, 0.02 * deep_scale)),
+            _ => unreachable!(),
+        }
+    }
+    debug_assert_eq!(theta.len(), layer_theta_len(model, layer));
+    theta
+}
+
+impl ParamStore {
+    /// Fresh parameters for a model config.
+    pub fn init(model: &ModelConfig, scheme: Init, seed: u64) -> ParamStore {
+        let mut rng = Rng::new(seed);
+        let layers: Vec<Vec<f32>> = (0..model.total_layers())
+            .map(|l| init_layer(model, l, scheme, &mut rng))
+            .collect();
+        let (v, d, s, c) = (model.vocab, model.d_model, model.seq, model.n_classes);
+        ParamStore {
+            model: model.clone(),
+            layers: Rc::new(RefCell::new(layers)),
+            w_emb: rng.normal_vec(v * d, 0.02),
+            w_pos: rng.normal_vec(s * d, 0.02),
+            w_out: rng.normal_vec(d * v, 0.02),
+            w_cls: rng.normal_vec(d * c, 0.02),
+        }
+    }
+
+    /// Total trainable parameter count.
+    pub fn n_params(&self) -> usize {
+        self.layers.borrow().iter().map(|l| l.len()).sum::<usize>()
+            + self.w_emb.len()
+            + self.w_pos.len()
+            + self.w_out.len()
+            + self.w_cls.len()
+    }
+
+    /// Flat-group sizes in optimizer order: layers…, emb, pos, out, cls.
+    pub fn group_sizes(&self) -> Vec<usize> {
+        let mut v: Vec<usize> = self.layers.borrow().iter().map(|l| l.len()).collect();
+        v.extend([self.w_emb.len(), self.w_pos.len(), self.w_out.len(), self.w_cls.len()]);
+        v
+    }
+
+    /// Deep copy (for serial-vs-parallel comparison runs from one init).
+    pub fn deep_clone(&self) -> ParamStore {
+        ParamStore {
+            model: self.model.clone(),
+            layers: Rc::new(RefCell::new(self.layers.borrow().clone())),
+            w_emb: self.w_emb.clone(),
+            w_pos: self.w_pos.clone(),
+            w_out: self.w_out.clone(),
+            w_cls: self.w_cls.clone(),
+        }
+    }
+
+    /// Binary checkpoint (magic + version + sizes + LE f32 payloads).
+    pub fn save(&self, path: &str) -> Result<()> {
+        if let Some(dir) = std::path::Path::new(path).parent() {
+            std::fs::create_dir_all(dir).ok();
+        }
+        let mut w =
+            std::io::BufWriter::new(std::fs::File::create(path).context("creating checkpoint")?);
+        w.write_all(b"LTCK")?;
+        w.write_all(&1u32.to_le_bytes())?;
+        let layers = self.layers.borrow();
+        w.write_all(&(layers.len() as u32).to_le_bytes())?;
+        let write_vec = |w: &mut dyn Write, v: &[f32]| -> Result<()> {
+            w.write_all(&(v.len() as u64).to_le_bytes())?;
+            for x in v {
+                w.write_all(&x.to_le_bytes())?;
+            }
+            Ok(())
+        };
+        for l in layers.iter() {
+            write_vec(&mut w, l)?;
+        }
+        for v in [&self.w_emb, &self.w_pos, &self.w_out, &self.w_cls] {
+            write_vec(&mut w, v)?;
+        }
+        Ok(())
+    }
+
+    /// Load a checkpoint saved by [`ParamStore::save`]; shapes must match.
+    pub fn load(model: &ModelConfig, path: &str) -> Result<ParamStore> {
+        let mut r =
+            std::io::BufReader::new(std::fs::File::open(path).context("opening checkpoint")?);
+        let mut magic = [0u8; 4];
+        r.read_exact(&mut magic)?;
+        if &magic != b"LTCK" {
+            bail!("not a layertime checkpoint");
+        }
+        let mut buf4 = [0u8; 4];
+        r.read_exact(&mut buf4)?;
+        if u32::from_le_bytes(buf4) != 1 {
+            bail!("unsupported checkpoint version");
+        }
+        r.read_exact(&mut buf4)?;
+        let n_layers = u32::from_le_bytes(buf4) as usize;
+        if n_layers != model.total_layers() {
+            bail!("checkpoint has {} layers, config needs {}", n_layers, model.total_layers());
+        }
+        let read_vec = |r: &mut dyn Read| -> Result<Vec<f32>> {
+            let mut b8 = [0u8; 8];
+            r.read_exact(&mut b8)?;
+            let n = u64::from_le_bytes(b8) as usize;
+            let mut out = vec![0.0f32; n];
+            let mut b4 = [0u8; 4];
+            for x in out.iter_mut() {
+                r.read_exact(&mut b4)?;
+                *x = f32::from_le_bytes(b4);
+            }
+            Ok(out)
+        };
+        let mut layers = Vec::with_capacity(n_layers);
+        for l in 0..n_layers {
+            let v = read_vec(&mut r)?;
+            if v.len() != layer_theta_len(model, l) {
+                bail!("layer {} length mismatch", l);
+            }
+            layers.push(v);
+        }
+        let w_emb = read_vec(&mut r)?;
+        let w_pos = read_vec(&mut r)?;
+        let w_out = read_vec(&mut r)?;
+        let w_cls = read_vec(&mut r)?;
+        Ok(ParamStore {
+            model: model.clone(),
+            layers: Rc::new(RefCell::new(layers)),
+            w_emb,
+            w_pos,
+            w_out,
+            w_cls,
+        })
+    }
+
+    /// Buffer-aware propagator over all layers (Δt per layer from
+    /// `ode::layer_hs`); the coordinator drives buffer layers serially and
+    /// MGRIT over the middle range.
+    pub fn rust_propagator(&self) -> RustPropagator {
+        RustPropagator::for_model(&self.model, self.layers.clone())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets;
+
+    #[test]
+    fn init_shapes_and_ln_identity() {
+        let m = presets::mc_tiny().model;
+        let ps = ParamStore::init(&m, Init::Default, 0);
+        let layers = ps.layers.borrow();
+        assert_eq!(layers.len(), m.total_layers());
+        assert_eq!(layers[0].len(), m.p_enc());
+        // ln1_g is all ones, ln1_b all zeros
+        let d = m.d_model;
+        assert!(layers[0][..d].iter().all(|&x| x == 1.0));
+        assert!(layers[0][d..2 * d].iter().all(|&x| x == 0.0));
+        assert!(ps.n_params() > 0);
+    }
+
+    #[test]
+    fn deepnet_scaling_shrinks_value_proj() {
+        let mut m = presets::bert_deep().model;
+        m.n_enc_layers = 128;
+        let a = ParamStore::init(&m, Init::Default, 1);
+        let b = ParamStore::init(&m, Init::DeepNet, 1);
+        let d = m.d_model;
+        // wv block starts after ln1(2d) + wq + wk
+        let off = 2 * d + 2 * d * d;
+        let std_of = |ps: &ParamStore| {
+            let layers = ps.layers.borrow();
+            let w = &layers[0][off..off + d * d];
+            (w.iter().map(|x| x * x).sum::<f32>() / w.len() as f32).sqrt()
+        };
+        let ratio = std_of(&b) / std_of(&a);
+        let want = 1.0 / (2.0 * 128.0f32).ln().sqrt();
+        assert!((ratio - want).abs() < 0.05, "ratio {} want {}", ratio, want);
+    }
+
+    #[test]
+    fn encdec_layers_have_two_lengths() {
+        let m = presets::mt_small().model;
+        let ps = ParamStore::init(&m, Init::Default, 2);
+        let layers = ps.layers.borrow();
+        assert_eq!(layers[0].len(), m.p_enc());
+        assert_eq!(layers[m.n_enc_layers].len(), m.p_dec());
+    }
+
+    #[test]
+    fn checkpoint_roundtrip() {
+        let m = presets::mc_tiny().model;
+        let ps = ParamStore::init(&m, Init::Default, 3);
+        let path = std::env::temp_dir().join("layertime_ck_test.bin");
+        let path = path.to_str().unwrap();
+        ps.save(path).unwrap();
+        let ps2 = ParamStore::load(&m, path).unwrap();
+        assert_eq!(*ps.layers.borrow(), *ps2.layers.borrow());
+        assert_eq!(ps.w_emb, ps2.w_emb);
+        assert_eq!(ps.w_cls, ps2.w_cls);
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn checkpoint_rejects_wrong_depth() {
+        let m = presets::mc_tiny().model;
+        let ps = ParamStore::init(&m, Init::Default, 4);
+        let path = std::env::temp_dir().join("layertime_ck_test2.bin");
+        let path = path.to_str().unwrap();
+        ps.save(path).unwrap();
+        let mut m2 = m.clone();
+        m2.n_enc_layers += 1;
+        assert!(ParamStore::load(&m2, path).is_err());
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn group_sizes_cover_everything() {
+        let m = presets::mc_tiny().model;
+        let ps = ParamStore::init(&m, Init::Default, 5);
+        assert_eq!(ps.group_sizes().iter().sum::<usize>(), ps.n_params());
+        assert_eq!(ps.group_sizes().len(), m.total_layers() + 4);
+    }
+}

@@ -1,0 +1,125 @@
+//! dz/dt = A z — the linear test problem the MGRIT literature (Dobrev et
+//! al. 2017) analyzes. Forward Euler: Φ(z) = (I + hA) z. Used to pin
+//! MGRIT's exactness, two-level convergence, and adjoint correctness.
+
+use super::propagator::{Propagator, StepCounters};
+use crate::tensor::{matmul, matmul_at, Tensor};
+
+/// Linear autonomous ODE with a dense system matrix A [d,d].
+pub struct LinearOde {
+    a: Tensor,
+    n_steps: usize,
+    h: f32,
+    dim: usize,
+    counters: StepCounters,
+}
+
+impl LinearOde {
+    pub fn new(a: Tensor, n_steps: usize, h: f32) -> LinearOde {
+        let dim = a.shape()[0];
+        assert_eq!(a.shape(), &[dim, dim]);
+        LinearOde { a, n_steps, h, dim, counters: StepCounters::default() }
+    }
+
+    /// Stable diagonal-ish random system: A = -I + 0.3·N(0,1)/√d.
+    pub fn random_stable(rng: &mut crate::util::rng::Rng, dim: usize, n_steps: usize, h: f32) -> LinearOde {
+        let mut a = Tensor::randn(rng, &[dim, dim], 0.3 / (dim as f32).sqrt());
+        for i in 0..dim {
+            a.data_mut()[i * dim + i] -= 1.0;
+        }
+        LinearOde::new(a, n_steps, h)
+    }
+
+    /// Exact serial Euler trajectory (ground truth for tests).
+    pub fn serial_trajectory(&self, z0: &Tensor) -> Vec<Tensor> {
+        let mut out = Vec::with_capacity(self.n_steps + 1);
+        out.push(z0.clone());
+        for n in 0..self.n_steps {
+            let prev = out[n].clone();
+            out.push(self.step(n, 1.0, &prev));
+        }
+        out
+    }
+}
+
+impl Propagator for LinearOde {
+    fn n_steps(&self) -> usize {
+        self.n_steps
+    }
+
+    fn state_shape(&self) -> Vec<usize> {
+        vec![self.dim, 1]
+    }
+
+    fn fine_h(&self, _layer: usize) -> f32 {
+        self.h
+    }
+
+    fn step(&self, _layer: usize, h_scale: f32, z: &Tensor) -> Tensor {
+        self.counters.count_fwd();
+        let h = self.h * h_scale;
+        let az = matmul(&self.a, z);
+        let mut out = z.clone();
+        out.axpy(h, &az);
+        out
+    }
+
+    fn adjoint_step(&self, _layer: usize, h_scale: f32, _z: &Tensor, lam_next: &Tensor) -> Tensor {
+        self.counters.count_vjp();
+        let h = self.h * h_scale;
+        // (I + hA)ᵀ λ = λ + h Aᵀ λ
+        let atl = matmul_at(&self.a, lam_next);
+        let mut out = lam_next.clone();
+        out.axpy(h, &atl);
+        out
+    }
+
+    fn accumulate_grad(&self, _layer: usize, _z: &Tensor, _lam: &Tensor, _grad: &mut [f32]) {
+        // A is fixed in the test problem — no trainable parameters.
+    }
+
+    fn theta_len(&self, _layer: usize) -> usize {
+        0
+    }
+
+    fn counters(&self) -> &StepCounters {
+        &self.counters
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn serial_trajectory_decays_for_stable_system() {
+        let mut rng = Rng::new(0);
+        let ode = LinearOde::random_stable(&mut rng, 8, 64, 0.1);
+        let z0 = Tensor::randn(&mut rng, &[8, 1], 1.0);
+        let traj = ode.serial_trajectory(&z0);
+        assert_eq!(traj.len(), 65);
+        assert!(traj[64].norm() < traj[0].norm());
+    }
+
+    #[test]
+    fn adjoint_is_transpose() {
+        // <Φ u, v> == <u, Φᵀ v>
+        let mut rng = Rng::new(1);
+        let ode = LinearOde::random_stable(&mut rng, 6, 4, 0.2);
+        let u = Tensor::randn(&mut rng, &[6, 1], 1.0);
+        let v = Tensor::randn(&mut rng, &[6, 1], 1.0);
+        let fu = ode.step(0, 2.0, &u);
+        let atv = ode.adjoint_step(0, 2.0, &u, &v);
+        assert!((fu.dot(&v) - u.dot(&atv)).abs() < 1e-4);
+    }
+
+    #[test]
+    fn counters_track_evals() {
+        let mut rng = Rng::new(2);
+        let ode = LinearOde::random_stable(&mut rng, 4, 8, 0.1);
+        let z0 = Tensor::randn(&mut rng, &[4, 1], 1.0);
+        ode.serial_trajectory(&z0);
+        assert_eq!(ode.counters().fwd(), 8);
+    }
+}

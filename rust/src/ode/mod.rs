@@ -1,0 +1,24 @@
+//! The neural-ODE abstraction MGRIT solves over: a [`Propagator`] is the
+//! discrete forward operator Φ (one Euler layer-step, paper eq. 3) together
+//! with its adjoint (VJP).
+//!
+//! Three implementations:
+//! * [`LinearOde`] — dz/dt = A z, the analytically-tractable test problem
+//!   the MGRIT convergence tests are pinned on;
+//! * [`RustPropagator`] — the pure-Rust reference transformer (artifact-free
+//!   testing and analysis tooling);
+//! * [`XlaPropagator`] — the production path: AOT artifacts through PJRT.
+//!
+//! Encoder-decoder architectures use the paper's *stacked* state
+//! Z = [X, Y] (eq. 3): Φ advances X during encoder time, Y during decoder
+//! time, holding the other component fixed.
+
+mod linear;
+mod propagator;
+mod rust_prop;
+mod xla_prop;
+
+pub use linear::LinearOde;
+pub use propagator::{Propagator, StepCounters};
+pub use rust_prop::{layer_hs, RustPropagator, SharedParams};
+pub use xla_prop::XlaPropagator;

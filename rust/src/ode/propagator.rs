@@ -1,0 +1,67 @@
+//! The Φ interface MGRIT is generic over.
+
+use std::cell::Cell;
+
+use crate::tensor::Tensor;
+
+/// Φ-evaluation counters (feed the performance simulator and §Perf logs).
+#[derive(Debug, Default, Clone)]
+pub struct StepCounters {
+    fwd: Cell<u64>,
+    vjp: Cell<u64>,
+}
+
+impl StepCounters {
+    pub fn count_fwd(&self) {
+        self.fwd.set(self.fwd.get() + 1);
+    }
+
+    pub fn count_vjp(&self) {
+        self.vjp.set(self.vjp.get() + 1);
+    }
+
+    pub fn fwd(&self) -> u64 {
+        self.fwd.get()
+    }
+
+    pub fn vjp(&self) -> u64 {
+        self.vjp.get()
+    }
+
+    pub fn reset(&self) {
+        self.fwd.set(0);
+        self.vjp.set(0);
+    }
+}
+
+/// One discrete neural-ODE propagator Φ over layers 0..n_steps().
+///
+/// `layer` is always a *fine-grid* layer index; MGRIT level ℓ calls Φ with
+/// `h_scale = c_f^ℓ` (rediscretization: same parameters, larger step), so
+/// the effective step is `h_scale · fine_h(layer)`.
+pub trait Propagator {
+    /// Number of fine time-steps N (layers inside the MGRIT domain).
+    fn n_steps(&self) -> usize;
+
+    /// Shape of the evolving state Z (e.g. [B,S,D], or [2,B,S,D] stacked).
+    fn state_shape(&self) -> Vec<usize>;
+
+    /// Fine-grid step size h at `layer` (paper: 1, or 1/L_mid with buffers).
+    fn fine_h(&self, layer: usize) -> f32;
+
+    /// Z_{n+1} = Φ(Z_n; θ_layer, h_scale · fine_h).
+    fn step(&self, layer: usize, h_scale: f32, z: &Tensor) -> Tensor;
+
+    /// Adjoint step: λ_n = (∂Φ/∂Z(Z_n; θ_layer, h_scale·fine_h))ᵀ λ_{n+1}.
+    fn adjoint_step(&self, layer: usize, h_scale: f32, z: &Tensor, lam_next: &Tensor) -> Tensor;
+
+    /// Parameter gradient of layer `layer`: ∂(λ_{n+1}ᵀ Φ(Z_n;θ))/∂θ,
+    /// accumulated into `grad` (always on the fine grid, h_scale = 1).
+    fn accumulate_grad(&self, layer: usize, z: &Tensor, lam_next: &Tensor, grad: &mut [f32]);
+
+    /// Flat parameter length of layer `layer`.
+    fn theta_len(&self, layer: usize) -> usize;
+
+    /// Evaluation counters.
+    fn counters(&self) -> &StepCounters;
+}

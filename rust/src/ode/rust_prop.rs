@@ -1,0 +1,289 @@
+//! Pure-Rust propagator: the reference transformer as a Φ.
+//!
+//! Used by unit/property tests (no artifacts needed), by the analysis
+//! tooling, and as a fallback engine. Mirrors the stacked encoder-decoder
+//! state handling of [`super::XlaPropagator`] exactly.
+
+use std::cell::RefCell;
+use std::rc::Rc;
+
+use super::propagator::{Propagator, StepCounters};
+use crate::config::{Arch, ModelConfig};
+use crate::reference::{self, RefDims};
+use crate::tensor::Tensor;
+
+/// Shared per-layer flat parameters (the trainer mutates through this Rc).
+pub type SharedParams = Rc<RefCell<Vec<Vec<f32>>>>;
+
+/// Reference-transformer propagator over the MGRIT domain.
+pub struct RustPropagator {
+    dims: RefDims,
+    arch: Arch,
+    n_enc: usize,
+    n_steps: usize,
+    /// per-layer fine step sizes (buffer layers get Δt=1, Appendix B)
+    hs: Vec<f32>,
+    params: SharedParams,
+    counters: StepCounters,
+}
+
+/// Per-layer fine h: buffer layers Δt=1, ParallelNet layers Δt=fine_h()
+/// (paper Appendix B).
+pub fn layer_hs(model: &ModelConfig, n_layers: usize) -> Vec<f32> {
+    let h_mid = model.fine_h();
+    (0..n_layers)
+        .map(|l| {
+            if l < model.buffer_open || l >= n_layers.saturating_sub(model.buffer_close) {
+                1.0
+            } else {
+                h_mid
+            }
+        })
+        .collect()
+}
+
+impl RustPropagator {
+    /// `params[l]` is layer l's flat θ (enc layout, or dec layout past
+    /// n_enc); uniform fine step `h` across all layers.
+    pub fn new(model: &ModelConfig, h: f32, params: SharedParams) -> RustPropagator {
+        let n = params.borrow().len();
+        Self::with_hs(model, vec![h; n], params)
+    }
+
+    /// Buffer-aware constructor: Δt per layer from [`layer_hs`].
+    pub fn for_model(model: &ModelConfig, params: SharedParams) -> RustPropagator {
+        let n = params.borrow().len();
+        Self::with_hs(model, layer_hs(model, n), params)
+    }
+
+    pub fn with_hs(model: &ModelConfig, hs: Vec<f32>, params: SharedParams) -> RustPropagator {
+        let n_steps = params.borrow().len();
+        assert_eq!(hs.len(), n_steps);
+        RustPropagator {
+            dims: RefDims {
+                batch: model.batch,
+                seq: model.seq,
+                d_model: model.d_model,
+                n_heads: model.n_heads,
+                d_ff: model.d_ff,
+            },
+            arch: model.arch,
+            n_enc: if model.arch == Arch::EncDec { model.n_enc_layers } else { 0 },
+            n_steps,
+            hs,
+            params,
+            counters: StepCounters::default(),
+        }
+    }
+
+    fn split_state<'a>(&self, z: &'a Tensor) -> (Tensor, Tensor, &'a [usize]) {
+        // stacked [2,B,S,D] -> (X, Y)
+        let half = z.len() / 2;
+        let inner = [self.dims.batch, self.dims.seq, self.dims.d_model];
+        let x = Tensor::from_vec(z.data()[..half].to_vec(), &inner);
+        let y = Tensor::from_vec(z.data()[half..].to_vec(), &inner);
+        (x, y, z.shape())
+    }
+
+    fn join_state(&self, x: &Tensor, y: &Tensor, shape: &[usize]) -> Tensor {
+        let mut data = Vec::with_capacity(x.len() * 2);
+        data.extend_from_slice(x.data());
+        data.extend_from_slice(y.data());
+        Tensor::from_vec(data, shape)
+    }
+}
+
+impl Propagator for RustPropagator {
+    fn n_steps(&self) -> usize {
+        self.n_steps
+    }
+
+    fn state_shape(&self) -> Vec<usize> {
+        let base = vec![self.dims.batch, self.dims.seq, self.dims.d_model];
+        match self.arch {
+            Arch::EncDec => {
+                let mut s = vec![2];
+                s.extend(base);
+                s
+            }
+            _ => base,
+        }
+    }
+
+    fn fine_h(&self, layer: usize) -> f32 {
+        self.hs[layer]
+    }
+
+    fn step(&self, layer: usize, h_scale: f32, z: &Tensor) -> Tensor {
+        self.counters.count_fwd();
+        let h = self.hs[layer] * h_scale;
+        let params = self.params.borrow();
+        let theta = &params[layer];
+        match self.arch {
+            Arch::Encoder => reference::enc_step_fwd(z, theta, h, &self.dims, false),
+            Arch::Decoder => reference::enc_step_fwd(z, theta, h, &self.dims, true),
+            Arch::EncDec => {
+                let (x, y, shape) = self.split_state(z);
+                if layer < self.n_enc {
+                    let x2 = reference::enc_step_fwd(&x, theta, h, &self.dims, false);
+                    self.join_state(&x2, &y, shape)
+                } else {
+                    let y2 = reference::dec_step_fwd(&y, &x, theta, h, &self.dims, self.dims.seq);
+                    self.join_state(&x, &y2, shape)
+                }
+            }
+        }
+    }
+
+    fn adjoint_step(&self, layer: usize, h_scale: f32, z: &Tensor, lam_next: &Tensor) -> Tensor {
+        self.counters.count_vjp();
+        let h = self.hs[layer] * h_scale;
+        let params = self.params.borrow();
+        let theta = &params[layer];
+        match self.arch {
+            Arch::Encoder => reference::enc_step_bwd(z, theta, h, &self.dims, false, lam_next).0,
+            Arch::Decoder => reference::enc_step_bwd(z, theta, h, &self.dims, true, lam_next).0,
+            Arch::EncDec => {
+                let (x, y, shape) = self.split_state(z);
+                let (lx, ly, _) = self.split_state(lam_next);
+                if layer < self.n_enc {
+                    // X evolves: λx back through enc step; λy passes through
+                    let (lx2, _) = reference::enc_step_bwd(&x, theta, h, &self.dims, false, &lx);
+                    self.join_state(&lx2, &ly, shape)
+                } else {
+                    // Y evolves: λy back through dec step; λx += ∂dec/∂X_enc
+                    let (ly2, lxe, _) =
+                        reference::dec_step_bwd(&y, &x, theta, h, &self.dims, self.dims.seq, &ly);
+                    let mut lx2 = lx;
+                    lx2.axpy(1.0, &lxe);
+                    self.join_state(&lx2, &ly2, shape)
+                }
+            }
+        }
+    }
+
+    fn accumulate_grad(&self, layer: usize, z: &Tensor, lam_next: &Tensor, grad: &mut [f32]) {
+        self.counters.count_vjp();
+        let h = self.hs[layer];
+        let params = self.params.borrow();
+        let theta = &params[layer];
+        let g = match self.arch {
+            Arch::Encoder => reference::enc_step_bwd(z, theta, h, &self.dims, false, lam_next).1,
+            Arch::Decoder => reference::enc_step_bwd(z, theta, h, &self.dims, true, lam_next).1,
+            Arch::EncDec => {
+                let (x, y, _) = self.split_state(z);
+                let (lx, ly, _) = self.split_state(lam_next);
+                if layer < self.n_enc {
+                    reference::enc_step_bwd(&x, theta, h, &self.dims, false, &lx).1
+                } else {
+                    reference::dec_step_bwd(&y, &x, theta, h, &self.dims, self.dims.seq, &ly).2
+                }
+            }
+        };
+        assert_eq!(g.len(), grad.len(), "grad length mismatch at layer {}", layer);
+        for (a, b) in grad.iter_mut().zip(&g) {
+            *a += b;
+        }
+    }
+
+    fn theta_len(&self, layer: usize) -> usize {
+        self.params.borrow()[layer].len()
+    }
+
+    fn counters(&self) -> &StepCounters {
+        &self.counters
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn tiny_model(arch: Arch) -> ModelConfig {
+        ModelConfig {
+            arch,
+            vocab: 8,
+            d_model: 8,
+            n_heads: 2,
+            d_ff: 16,
+            seq: 4,
+            batch: 1,
+            n_classes: 2,
+            n_enc_layers: if arch == Arch::EncDec { 2 } else { 4 },
+            n_dec_layers: if arch == Arch::EncDec { 2 } else { 0 },
+            buffer_open: 0,
+            buffer_close: 0,
+        }
+    }
+
+    pub fn make_params(model: &ModelConfig, rng: &mut Rng, std: f32) -> SharedParams {
+        let mut v = Vec::new();
+        for l in 0..model.total_layers() {
+            let len = if model.arch == Arch::EncDec && l >= model.n_enc_layers {
+                model.p_dec()
+            } else {
+                model.p_enc()
+            };
+            v.push(rng.normal_vec(len, std));
+        }
+        Rc::new(RefCell::new(v))
+    }
+
+    #[test]
+    fn encoder_step_shape_preserved() {
+        let model = tiny_model(Arch::Encoder);
+        let mut rng = Rng::new(0);
+        let params = make_params(&model, &mut rng, 0.1);
+        let prop = RustPropagator::new(&model, 1.0, params);
+        let z = Tensor::randn(&mut rng, &prop.state_shape(), 1.0);
+        let z2 = prop.step(0, 1.0, &z);
+        assert_eq!(z2.shape(), z.shape());
+    }
+
+    #[test]
+    fn encdec_encoder_phase_keeps_y_fixed() {
+        let model = tiny_model(Arch::EncDec);
+        let mut rng = Rng::new(1);
+        let params = make_params(&model, &mut rng, 0.1);
+        let prop = RustPropagator::new(&model, 1.0, params);
+        let z = Tensor::randn(&mut rng, &prop.state_shape(), 1.0);
+        let z2 = prop.step(0, 1.0, &z); // encoder phase
+        let half = z.len() / 2;
+        assert_eq!(&z2.data()[half..], &z.data()[half..], "Y must not move");
+        assert_ne!(&z2.data()[..half], &z.data()[..half], "X must move");
+        let z3 = prop.step(2, 1.0, &z); // decoder phase (n_enc = 2)
+        assert_eq!(&z3.data()[..half], &z.data()[..half], "X must not move");
+        assert_ne!(&z3.data()[half..], &z.data()[half..], "Y must move");
+    }
+
+    #[test]
+    fn adjoint_consistent_with_fd_dot_product() {
+        // <Φ(z+εu) - Φ(z), v> ≈ ε <u, Φ'ᵀ v>
+        let model = tiny_model(Arch::EncDec);
+        let mut rng = Rng::new(2);
+        let params = make_params(&model, &mut rng, 0.1);
+        let prop = RustPropagator::new(&model, 1.0, params);
+        for layer in [0usize, 2] {
+            let z = Tensor::randn(&mut rng, &prop.state_shape(), 0.7);
+            let u = Tensor::randn(&mut rng, &prop.state_shape(), 1.0);
+            let v = Tensor::randn(&mut rng, &prop.state_shape(), 1.0);
+            let eps = 1e-3;
+            let mut zp = z.clone();
+            zp.axpy(eps, &u);
+            let mut zm = z.clone();
+            zm.axpy(-eps, &u);
+            let fd = (prop.step(layer, 1.0, &zp).dot(&v) - prop.step(layer, 1.0, &zm).dot(&v))
+                / (2.0 * eps);
+            let adj = prop.adjoint_step(layer, 1.0, &z, &v);
+            let want = u.dot(&adj);
+            assert!(
+                (fd - want).abs() < 2e-2 * (1.0 + want.abs()),
+                "layer {}: fd={} adj={}",
+                layer,
+                fd,
+                want
+            );
+        }
+    }
+}

@@ -1,0 +1,301 @@
+//! Production propagator: Φ and its VJP as AOT-compiled XLA programs
+//! executed through PJRT. One compiled executable per entry point, reused
+//! across all layers and MGRIT levels (h is a runtime scalar).
+
+use std::rc::Rc;
+
+use super::propagator::{Propagator, StepCounters};
+use super::rust_prop::SharedParams;
+use crate::config::{Arch, ModelConfig};
+use crate::runtime::{Value, XlaEngine};
+use crate::tensor::Tensor;
+
+/// XLA-backed propagator over the MGRIT domain.
+pub struct XlaPropagator {
+    engine: Rc<XlaEngine>,
+    arch: Arch,
+    n_enc: usize,
+    n_steps: usize,
+    hs: Vec<f32>,
+    p_enc: usize,
+    p_dec: usize,
+    inner_shape: Vec<usize>,
+    params: SharedParams,
+    counters: StepCounters,
+}
+
+impl XlaPropagator {
+    pub fn new(
+        engine: Rc<XlaEngine>,
+        model: &ModelConfig,
+        h: f32,
+        params: SharedParams,
+    ) -> anyhow::Result<XlaPropagator> {
+        let n = params.borrow().len();
+        Self::with_hs(engine, model, vec![h; n], params)
+    }
+
+    /// Buffer-aware constructor (Δt per layer from `ode::layer_hs`).
+    pub fn for_model(
+        engine: Rc<XlaEngine>,
+        model: &ModelConfig,
+        params: SharedParams,
+    ) -> anyhow::Result<XlaPropagator> {
+        let n = params.borrow().len();
+        Self::with_hs(engine, model, super::rust_prop::layer_hs(model, n), params)
+    }
+
+    pub fn with_hs(
+        engine: Rc<XlaEngine>,
+        model: &ModelConfig,
+        hs: Vec<f32>,
+        params: SharedParams,
+    ) -> anyhow::Result<XlaPropagator> {
+        engine.manifest().validate_model(model)?;
+        let n_steps = params.borrow().len();
+        assert_eq!(hs.len(), n_steps);
+        Ok(XlaPropagator {
+            engine,
+            arch: model.arch,
+            n_enc: if model.arch == Arch::EncDec { model.n_enc_layers } else { 0 },
+            n_steps,
+            hs,
+            p_enc: model.p_enc(),
+            p_dec: model.p_dec(),
+            inner_shape: vec![model.batch, model.seq, model.d_model],
+            params,
+            counters: StepCounters::default(),
+        })
+    }
+
+    fn theta_value(&self, layer: usize) -> Value {
+        let params = self.params.borrow();
+        let th = &params[layer];
+        Value::F32(Tensor::from_vec(th.clone(), &[th.len()]))
+    }
+
+    fn split(&self, z: &Tensor) -> (Tensor, Tensor) {
+        let half = z.len() / 2;
+        (
+            Tensor::from_vec(z.data()[..half].to_vec(), &self.inner_shape),
+            Tensor::from_vec(z.data()[half..].to_vec(), &self.inner_shape),
+        )
+    }
+
+    fn join(&self, x: &Tensor, y: &Tensor) -> Tensor {
+        let mut data = Vec::with_capacity(x.len() * 2);
+        data.extend_from_slice(x.data());
+        data.extend_from_slice(y.data());
+        Tensor::from_vec(data, &self.state_shape())
+    }
+
+    fn enc_entry(&self) -> &'static str {
+        match self.arch {
+            Arch::Decoder => "causal_step",
+            _ => "enc_step",
+        }
+    }
+}
+
+impl Propagator for XlaPropagator {
+    fn n_steps(&self) -> usize {
+        self.n_steps
+    }
+
+    fn state_shape(&self) -> Vec<usize> {
+        match self.arch {
+            Arch::EncDec => {
+                let mut s = vec![2];
+                s.extend(self.inner_shape.clone());
+                s
+            }
+            _ => self.inner_shape.clone(),
+        }
+    }
+
+    fn fine_h(&self, layer: usize) -> f32 {
+        self.hs[layer]
+    }
+
+    fn step(&self, layer: usize, h_scale: f32, z: &Tensor) -> Tensor {
+        self.counters.count_fwd();
+        let h = self.hs[layer] * h_scale;
+        match self.arch {
+            Arch::Encoder | Arch::Decoder => {
+                let out = self
+                    .engine
+                    .call(
+                        self.enc_entry(),
+                        &[Value::F32(z.clone()), self.theta_value(layer), Value::scalar(h)],
+                    )
+                    .expect("Φ step failed");
+                out.into_iter().next().unwrap()
+            }
+            Arch::EncDec => {
+                let (x, y) = self.split(z);
+                if layer < self.n_enc {
+                    let out = self
+                        .engine
+                        .call(
+                            "enc_step",
+                            &[Value::F32(x), self.theta_value(layer), Value::scalar(h)],
+                        )
+                        .expect("enc Φ failed");
+                    self.join(&out[0], &y)
+                } else {
+                    let out = self
+                        .engine
+                        .call(
+                            "dec_step",
+                            &[
+                                Value::F32(y),
+                                Value::F32(x.clone()),
+                                self.theta_value(layer),
+                                Value::scalar(h),
+                            ],
+                        )
+                        .expect("dec Φ failed");
+                    self.join(&x, &out[0])
+                }
+            }
+        }
+    }
+
+    fn adjoint_step(&self, layer: usize, h_scale: f32, z: &Tensor, lam_next: &Tensor) -> Tensor {
+        self.counters.count_vjp();
+        let h = self.hs[layer] * h_scale;
+        match self.arch {
+            Arch::Encoder | Arch::Decoder => {
+                let entry = match self.arch {
+                    Arch::Decoder => "causal_step_vjp",
+                    _ => "enc_step_vjp",
+                };
+                let out = self
+                    .engine
+                    .call(
+                        entry,
+                        &[
+                            Value::F32(z.clone()),
+                            self.theta_value(layer),
+                            Value::scalar(h),
+                            Value::F32(lam_next.clone()),
+                        ],
+                    )
+                    .expect("adjoint step failed");
+                out.into_iter().next().unwrap()
+            }
+            Arch::EncDec => {
+                let (x, y) = self.split(z);
+                let (lx, ly) = self.split(lam_next);
+                if layer < self.n_enc {
+                    let out = self
+                        .engine
+                        .call(
+                            "enc_step_vjp",
+                            &[
+                                Value::F32(x),
+                                self.theta_value(layer),
+                                Value::scalar(h),
+                                Value::F32(lx),
+                            ],
+                        )
+                        .expect("enc adjoint failed");
+                    self.join(&out[0], &ly)
+                } else {
+                    let out = self
+                        .engine
+                        .call(
+                            "dec_step_vjp",
+                            &[
+                                Value::F32(y),
+                                Value::F32(x),
+                                self.theta_value(layer),
+                                Value::scalar(h),
+                                Value::F32(ly),
+                            ],
+                        )
+                        .expect("dec adjoint failed");
+                    let mut lx2 = lx;
+                    lx2.axpy(1.0, &out[1]); // λ_x += ∂dec/∂X_enc contribution
+                    self.join(&lx2, &out[0])
+                }
+            }
+        }
+    }
+
+    fn accumulate_grad(&self, layer: usize, z: &Tensor, lam_next: &Tensor, grad: &mut [f32]) {
+        self.counters.count_vjp();
+        let h = self.hs[layer];
+        let g = match self.arch {
+            Arch::Encoder | Arch::Decoder => {
+                let entry = match self.arch {
+                    Arch::Decoder => "causal_step_vjp",
+                    _ => "enc_step_vjp",
+                };
+                let out = self
+                    .engine
+                    .call(
+                        entry,
+                        &[
+                            Value::F32(z.clone()),
+                            self.theta_value(layer),
+                            Value::scalar(h),
+                            Value::F32(lam_next.clone()),
+                        ],
+                    )
+                    .expect("grad step failed");
+                out.into_iter().nth(1).unwrap()
+            }
+            Arch::EncDec => {
+                let (x, y) = self.split(z);
+                let (lx, ly) = self.split(lam_next);
+                if layer < self.n_enc {
+                    let out = self
+                        .engine
+                        .call(
+                            "enc_step_vjp",
+                            &[
+                                Value::F32(x),
+                                self.theta_value(layer),
+                                Value::scalar(h),
+                                Value::F32(lx),
+                            ],
+                        )
+                        .expect("enc grad failed");
+                    out.into_iter().nth(1).unwrap()
+                } else {
+                    let out = self
+                        .engine
+                        .call(
+                            "dec_step_vjp",
+                            &[
+                                Value::F32(y),
+                                Value::F32(x),
+                                self.theta_value(layer),
+                                Value::scalar(h),
+                                Value::F32(ly),
+                            ],
+                        )
+                        .expect("dec grad failed");
+                    out.into_iter().nth(2).unwrap()
+                }
+            }
+        };
+        assert_eq!(g.len(), grad.len());
+        for (a, b) in grad.iter_mut().zip(g.data()) {
+            *a += b;
+        }
+    }
+
+    fn theta_len(&self, layer: usize) -> usize {
+        if self.arch == Arch::EncDec && layer >= self.n_enc {
+            self.p_dec
+        } else {
+            self.p_enc
+        }
+    }
+
+    fn counters(&self) -> &StepCounters {
+        &self.counters
+    }
+}

@@ -1,0 +1,232 @@
+//! Optimizers (SGD+momentum, Adam, AdamW) and LR schedules.
+//!
+//! The trainer keeps parameters as flat `f32` groups (per-layer θ vectors
+//! plus embedding/head matrices); the optimizer holds per-group moment
+//! state. AdamW applies decoupled weight decay (the paper's BERT/GPT runs);
+//! Adam couples none; SGD matches the MC task's configuration (Table 2).
+
+use crate::config::OptKind;
+
+/// Warmup + decay learning-rate schedule.
+#[derive(Debug, Clone)]
+pub struct LrSchedule {
+    pub base_lr: f32,
+    pub warmup: usize,
+    pub decay: Decay,
+}
+
+/// Post-warmup decay law.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Decay {
+    Constant,
+    /// lr · √(warmup/step) (transformer classic).
+    InvSqrt,
+    /// Cosine to `min_frac·lr` over `total` steps.
+    Cosine { total: usize, min_frac: f32 },
+}
+
+impl LrSchedule {
+    pub fn constant(lr: f32) -> LrSchedule {
+        LrSchedule { base_lr: lr, warmup: 0, decay: Decay::Constant }
+    }
+
+    /// LR at 1-based step `t`.
+    pub fn at(&self, t: usize) -> f32 {
+        let t = t.max(1);
+        if self.warmup > 0 && t <= self.warmup {
+            return self.base_lr * t as f32 / self.warmup as f32;
+        }
+        match self.decay {
+            Decay::Constant => self.base_lr,
+            Decay::InvSqrt => {
+                let w = self.warmup.max(1) as f32;
+                self.base_lr * (w / t as f32).sqrt()
+            }
+            Decay::Cosine { total, min_frac } => {
+                let total = total.max(self.warmup + 1);
+                let prog = ((t - self.warmup) as f32 / (total - self.warmup) as f32).min(1.0);
+                let cos = 0.5 * (1.0 + (std::f32::consts::PI * prog).cos());
+                self.base_lr * (min_frac + (1.0 - min_frac) * cos)
+            }
+        }
+    }
+}
+
+/// Uniform optimizer over named flat parameter groups.
+pub struct Optimizer {
+    kind: OptKind,
+    /// Adam moments / SGD momentum per group.
+    m: Vec<Vec<f32>>,
+    v: Vec<Vec<f32>>,
+    t: u64,
+    pub beta1: f32,
+    pub beta2: f32,
+    pub eps: f32,
+    pub momentum: f32,
+    pub weight_decay: f32,
+}
+
+impl Optimizer {
+    pub fn new(kind: OptKind, group_sizes: &[usize], weight_decay: f32) -> Optimizer {
+        Optimizer {
+            kind,
+            m: group_sizes.iter().map(|&n| vec![0.0; n]).collect(),
+            v: group_sizes.iter().map(|&n| vec![0.0; n]).collect(),
+            t: 0,
+            beta1: 0.9,
+            beta2: 0.999,
+            eps: 1e-8,
+            momentum: 0.9,
+            weight_decay,
+        }
+    }
+
+    pub fn n_groups(&self) -> usize {
+        self.m.len()
+    }
+
+    /// Begin an optimizer step (advances Adam's bias-correction counter).
+    pub fn begin_step(&mut self) {
+        self.t += 1;
+    }
+
+    /// Update one group in place. Call `begin_step` once per batch first.
+    pub fn update(&mut self, group: usize, lr: f32, params: &mut [f32], grads: &[f32]) {
+        assert_eq!(params.len(), grads.len());
+        assert_eq!(params.len(), self.m[group].len(), "group {} size changed", group);
+        match self.kind {
+            OptKind::Sgd => {
+                let mom = &mut self.m[group];
+                for i in 0..params.len() {
+                    mom[i] = self.momentum * mom[i] + grads[i];
+                    params[i] -= lr * mom[i];
+                }
+            }
+            OptKind::Adam | OptKind::AdamW => {
+                let t = self.t.max(1) as i32;
+                let bc1 = 1.0 - self.beta1.powi(t);
+                let bc2 = 1.0 - self.beta2.powi(t);
+                let (m, v) = (&mut self.m[group], &mut self.v[group]);
+                let decoupled = self.kind == OptKind::AdamW;
+                for i in 0..params.len() {
+                    let mut g = grads[i];
+                    if !decoupled && self.weight_decay > 0.0 {
+                        g += self.weight_decay * params[i];
+                    }
+                    m[i] = self.beta1 * m[i] + (1.0 - self.beta1) * g;
+                    v[i] = self.beta2 * v[i] + (1.0 - self.beta2) * g * g;
+                    let mhat = m[i] / bc1;
+                    let vhat = v[i] / bc2;
+                    if decoupled && self.weight_decay > 0.0 {
+                        params[i] -= lr * self.weight_decay * params[i];
+                    }
+                    params[i] -= lr * mhat / (vhat.sqrt() + self.eps);
+                }
+            }
+        }
+    }
+}
+
+/// Global-norm gradient clipping over several flat grads; returns the norm.
+pub fn clip_global_norm(grads: &mut [&mut [f32]], max_norm: f32) -> f32 {
+    let mut sq = 0.0f64;
+    for g in grads.iter() {
+        for &x in g.iter() {
+            sq += (x as f64) * (x as f64);
+        }
+    }
+    let norm = sq.sqrt() as f32;
+    if max_norm > 0.0 && norm > max_norm {
+        let scale = max_norm / norm;
+        for g in grads.iter_mut() {
+            for x in g.iter_mut() {
+                *x *= scale;
+            }
+        }
+    }
+    norm
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Minimize f(w) = ||w - target||² with each optimizer.
+    fn converges(kind: OptKind, lr: f32) -> f32 {
+        let target = [1.0f32, -2.0, 0.5, 3.0];
+        let mut w = vec![0.0f32; 4];
+        let mut opt = Optimizer::new(kind, &[4], 0.0);
+        for _ in 0..400 {
+            let grads: Vec<f32> = w.iter().zip(&target).map(|(a, b)| 2.0 * (a - b)).collect();
+            opt.begin_step();
+            opt.update(0, lr, &mut w, &grads);
+        }
+        w.iter().zip(&target).map(|(a, b)| (a - b).abs()).fold(0.0, f32::max)
+    }
+
+    #[test]
+    fn all_optimizers_minimize_quadratic() {
+        assert!(converges(OptKind::Sgd, 0.05) < 1e-3);
+        assert!(converges(OptKind::Adam, 0.05) < 1e-2);
+        assert!(converges(OptKind::AdamW, 0.05) < 1e-2);
+    }
+
+    #[test]
+    fn adamw_decays_weights_decoupled() {
+        // zero gradients: AdamW still shrinks params, Adam does not
+        let mut w1 = vec![1.0f32; 2];
+        let mut w2 = vec![1.0f32; 2];
+        let g = vec![0.0f32; 2];
+        let mut aw = Optimizer::new(OptKind::AdamW, &[2], 0.1);
+        let mut a = Optimizer::new(OptKind::Adam, &[2], 0.0);
+        for _ in 0..10 {
+            aw.begin_step();
+            a.begin_step();
+            aw.update(0, 0.1, &mut w1, &g);
+            a.update(0, 0.1, &mut w2, &g);
+        }
+        assert!(w1[0] < 0.95);
+        assert!((w2[0] - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn warmup_ramps_linearly() {
+        let s = LrSchedule { base_lr: 1.0, warmup: 10, decay: Decay::Constant };
+        assert!((s.at(1) - 0.1).abs() < 1e-6);
+        assert!((s.at(5) - 0.5).abs() < 1e-6);
+        assert!((s.at(10) - 1.0).abs() < 1e-6);
+        assert!((s.at(50) - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn inv_sqrt_decays() {
+        let s = LrSchedule { base_lr: 1.0, warmup: 100, decay: Decay::InvSqrt };
+        assert!((s.at(100) - 1.0).abs() < 1e-6);
+        assert!((s.at(400) - 0.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn cosine_reaches_floor() {
+        let s = LrSchedule {
+            base_lr: 1.0,
+            warmup: 0,
+            decay: Decay::Cosine { total: 100, min_frac: 0.1 },
+        };
+        assert!((s.at(1) - 1.0).abs() < 1e-2);
+        assert!((s.at(100) - 0.1).abs() < 1e-3);
+        assert!((s.at(1000) - 0.1).abs() < 1e-3);
+    }
+
+    #[test]
+    fn clip_rescales_to_max_norm() {
+        let mut a = vec![3.0f32, 0.0];
+        let mut b = vec![0.0f32, 4.0];
+        let norm = {
+            let mut refs: Vec<&mut [f32]> = vec![&mut a, &mut b];
+            clip_global_norm(&mut refs, 1.0)
+        };
+        assert!((norm - 5.0).abs() < 1e-5);
+        let new_norm = (a[0] * a[0] + b[1] * b[1]).sqrt();
+        assert!((new_norm - 1.0).abs() < 1e-5);
+    }
+}

@@ -1,0 +1,197 @@
+//! Channel-based message fabric — the in-process substitute for GPU-aware
+//! MPI (DESIGN.md §Substitutions). Every rank gets an [`Endpoint`] with
+//! point-to-point send/recv plus collective helpers; global counters track
+//! messages and bytes for the §Perf logs and simulator calibration.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
+
+/// A tagged message between ranks.
+#[derive(Debug)]
+pub struct Msg {
+    pub from: usize,
+    pub tag: u64,
+    pub data: Vec<f32>,
+}
+
+/// Global traffic counters.
+#[derive(Debug, Default)]
+pub struct Counters {
+    pub messages: AtomicU64,
+    pub bytes: AtomicU64,
+}
+
+/// All-to-all mesh of mpsc channels for `n` ranks.
+pub struct Fabric {
+    endpoints: Vec<Option<Endpoint>>,
+    pub counters: Arc<Counters>,
+}
+
+/// One rank's view of the fabric.
+pub struct Endpoint {
+    pub rank: usize,
+    pub n_ranks: usize,
+    senders: Vec<Sender<Msg>>,
+    receiver: Receiver<Msg>,
+    /// out-of-order buffer for selective recv
+    stash: Vec<Msg>,
+    counters: Arc<Counters>,
+}
+
+impl Fabric {
+    pub fn new(n: usize) -> Fabric {
+        let counters = Arc::new(Counters::default());
+        let mut senders = Vec::with_capacity(n);
+        let mut receivers = Vec::with_capacity(n);
+        for _ in 0..n {
+            let (tx, rx) = channel();
+            senders.push(tx);
+            receivers.push(rx);
+        }
+        let endpoints = receivers
+            .into_iter()
+            .enumerate()
+            .map(|(rank, receiver)| {
+                Some(Endpoint {
+                    rank,
+                    n_ranks: n,
+                    senders: senders.clone(),
+                    receiver,
+                    stash: Vec::new(),
+                    counters: counters.clone(),
+                })
+            })
+            .collect();
+        Fabric { endpoints, counters }
+    }
+
+    /// Take rank `r`'s endpoint (each can be taken once, then moved into a
+    /// worker thread).
+    pub fn take(&mut self, r: usize) -> Endpoint {
+        self.endpoints[r].take().expect("endpoint already taken")
+    }
+
+    /// Take all remaining endpoints.
+    pub fn take_all(&mut self) -> Vec<Endpoint> {
+        (0..self.endpoints.len()).map(|r| self.take(r)).collect()
+    }
+}
+
+impl Endpoint {
+    /// Send `data` to rank `to` with a tag.
+    pub fn send(&self, to: usize, tag: u64, data: Vec<f32>) {
+        self.counters.messages.fetch_add(1, Ordering::Relaxed);
+        self.counters.bytes.fetch_add(4 * data.len() as u64, Ordering::Relaxed);
+        self.senders[to]
+            .send(Msg { from: self.rank, tag, data })
+            .expect("fabric receiver dropped");
+    }
+
+    /// Blocking receive of the next message matching (from, tag).
+    pub fn recv(&mut self, from: usize, tag: u64) -> Vec<f32> {
+        if let Some(i) = self.stash.iter().position(|m| m.from == from && m.tag == tag) {
+            return self.stash.swap_remove(i).data;
+        }
+        loop {
+            let m = self.receiver.recv().expect("fabric sender dropped");
+            if m.from == from && m.tag == tag {
+                return m.data;
+            }
+            self.stash.push(m);
+        }
+    }
+
+    /// Sum-allreduce across all ranks (flat binary-tree reduce + broadcast).
+    /// Deterministic reduction order regardless of arrival order.
+    pub fn allreduce_sum(&mut self, tag: u64, mut data: Vec<f32>) -> Vec<f32> {
+        let n = self.n_ranks;
+        // reduce to rank 0 over a binary tree
+        let mut gap = 1;
+        while gap < n {
+            if self.rank % (2 * gap) == 0 {
+                let partner = self.rank + gap;
+                if partner < n {
+                    let other = self.recv(partner, tag);
+                    for (a, b) in data.iter_mut().zip(&other) {
+                        *a += b;
+                    }
+                }
+            } else if self.rank % (2 * gap) == gap {
+                self.send(self.rank - gap, tag, data.clone());
+            }
+            gap *= 2;
+        }
+        // broadcast back down the same tree
+        gap /= 2;
+        while gap >= 1 {
+            if self.rank % (2 * gap) == 0 {
+                let partner = self.rank + gap;
+                if partner < n {
+                    self.send(partner, tag + 1, data.clone());
+                }
+            } else if self.rank % (2 * gap) == gap {
+                data = self.recv(self.rank - gap, tag + 1);
+            }
+            if gap == 1 {
+                break;
+            }
+            gap /= 2;
+        }
+        data
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::thread;
+
+    #[test]
+    fn point_to_point_roundtrip() {
+        let mut fabric = Fabric::new(2);
+        let a = fabric.take(0);
+        let mut b = fabric.take(1);
+        a.send(1, 7, vec![1.0, 2.0]);
+        assert_eq!(b.recv(0, 7), vec![1.0, 2.0]);
+        assert_eq!(fabric.counters.messages.load(Ordering::Relaxed), 1);
+        assert_eq!(fabric.counters.bytes.load(Ordering::Relaxed), 8);
+    }
+
+    #[test]
+    fn selective_recv_stashes_out_of_order() {
+        let mut fabric = Fabric::new(2);
+        let a = fabric.take(0);
+        let mut b = fabric.take(1);
+        a.send(1, 1, vec![1.0]);
+        a.send(1, 2, vec![2.0]);
+        // ask for tag 2 first: tag-1 message must be stashed, not lost
+        assert_eq!(b.recv(0, 2), vec![2.0]);
+        assert_eq!(b.recv(0, 1), vec![1.0]);
+    }
+
+    #[test]
+    fn allreduce_sums_across_threads() {
+        for n in [1usize, 2, 3, 4, 7, 8] {
+            let mut fabric = Fabric::new(n);
+            let eps = fabric.take_all();
+            let results: Vec<Vec<f32>> = thread::scope(|s| {
+                let handles: Vec<_> = eps
+                    .into_iter()
+                    .map(|mut ep| {
+                        s.spawn(move || {
+                            let contribution = vec![ep.rank as f32 + 1.0, 1.0];
+                            ep.allreduce_sum(100, contribution)
+                        })
+                    })
+                    .collect();
+                handles.into_iter().map(|h| h.join().unwrap()).collect()
+            });
+            let want_sum: f32 = (1..=n).map(|r| r as f32).sum();
+            for r in &results {
+                assert_eq!(r[0], want_sum, "n={}", n);
+                assert_eq!(r[1], n as f32);
+            }
+        }
+    }
+}

@@ -1,0 +1,22 @@
+//! Layer-×-data parallel runtime and performance model.
+//!
+//! * [`comm`] — channel-based message fabric between ranks (the GPU-aware
+//!   MPI substitute): typed sends, tree allreduce, byte/message counters.
+//! * [`topology`] — the lp×dp device grid and contiguous layer-slab
+//!   assignment (paper Fig. 2's distribution of F_k across devices).
+//! * [`exec`] — real multi-worker execution of the F-relaxation phase over
+//!   OS threads with halo exchange, proving the decomposition + fabric
+//!   (numerically identical to the single-threaded engine).
+//! * [`simulator`] — discrete-event makespan model calibrated with the
+//!   measured Φ cost and an α+β communication model; generates the paper's
+//!   scaling figures (6-9) on this single-core testbed (DESIGN.md
+//!   §Substitutions).
+
+pub mod comm;
+pub mod exec;
+pub mod simulator;
+pub mod topology;
+
+pub use comm::Fabric;
+pub use simulator::{DeviceModel, SimConfig, Simulator};
+pub use topology::{slab_partition, Topology};

@@ -1,0 +1,362 @@
+//! Discrete-event performance model of layer-parallel training — the
+//! engine behind the paper's scaling figures (6-9) on this testbed.
+//!
+//! The sandbox has one CPU core and no GPUs (DESIGN.md §Substitutions), so
+//! wall-clock scaling cannot be measured directly. But MGRIT's runtime is a
+//! deterministic function of (a) Φ evaluations on the critical path, (b)
+//! messages/bytes crossed between layer slabs, and (c) the data-parallel
+//! allreduce — the same quantities the MGRIT literature's performance
+//! models count. Φ cost is calibrated from the artifact manifest's FLOP
+//! counts (or measured wall-clock via `calibrate`), communication follows
+//! an α+β model with V100/A100-class parameters.
+
+/// A device class (paper: Jean-Zay V100 nodes, Singra A100).
+#[derive(Debug, Clone, Copy)]
+pub struct DeviceModel {
+    pub name: &'static str,
+    /// Sustained f32 FLOP/s on transformer blocks.
+    pub flops: f64,
+    /// Message latency (s).
+    pub alpha: f64,
+    /// Inverse bandwidth (s/byte), intra-node (NVLink class).
+    pub beta: f64,
+    /// Inverse bandwidth (s/byte) across nodes (IB class) — a ring
+    /// allreduce spanning nodes is bottlenecked by its slowest link.
+    pub beta_inter: f64,
+    /// GPUs per node.
+    pub node_size: usize,
+    /// Micro-batch size at which the device reaches half of peak
+    /// throughput (throughput-saturation model: eff(b) = b/(b+half)).
+    /// Captures why per-device batches of 1-2 samples waste the GPU —
+    /// the effect that bounds useful data-parallelism in paper Fig. 9.
+    pub batch_half: f64,
+}
+
+impl DeviceModel {
+    /// V100 16GB, 8-GPU NVLink nodes + 25 GB/s IB (Jean-Zay class).
+    pub fn v100() -> DeviceModel {
+        DeviceModel {
+            name: "V100",
+            flops: 5.5e12,
+            alpha: 5e-6,
+            beta: 1.0 / 150e9,
+            beta_inter: 1.0 / 25e9,
+            node_size: 8,
+            batch_half: 4.0,
+        }
+    }
+
+    /// A100 80GB (Singra) — faster compute and links, 4-GPU nodes.
+    pub fn a100() -> DeviceModel {
+        DeviceModel {
+            name: "A100",
+            flops: 9.0e12,
+            alpha: 4e-6,
+            beta: 1.0 / 300e9,
+            beta_inter: 1.0 / 50e9,
+            node_size: 4,
+            batch_half: 4.0,
+        }
+    }
+
+    /// This testbed: Φ cost measured on the CPU PJRT runtime (`calibrate`),
+    /// channel comm ≈ memcpy bandwidth.
+    pub fn cpu_measured(phi_seconds: f64, flops_per_phi: f64) -> DeviceModel {
+        DeviceModel {
+            name: "CPU-measured",
+            flops: flops_per_phi / phi_seconds.max(1e-12),
+            alpha: 2e-6,
+            beta: 1.0 / 8e9,
+            beta_inter: 1.0 / 8e9,
+            node_size: 1,
+            batch_half: 0.0, // CPU throughput is batch-size independent here
+        }
+    }
+}
+
+/// One simulated run configuration.
+#[derive(Debug, Clone)]
+pub struct SimConfig {
+    /// Layers inside the MGRIT domain.
+    pub n_layers: usize,
+    pub cf: usize,
+    pub levels: usize,
+    /// None = serial forward (Table 3 dashes).
+    pub fwd_iters: Option<usize>,
+    pub bwd_iters: Option<usize>,
+    pub fcf: bool,
+    /// Layer-parallel devices.
+    pub lp: usize,
+    /// Data-parallel replicas.
+    pub dp: usize,
+    /// FLOPs of one Φ on one *sample* (manifest flops / artifact batch).
+    pub flops_per_sample_step: f64,
+    /// Global batch size (split over dp replicas).
+    pub batch: usize,
+    /// Bytes of one state tensor crossing a slab boundary (per replica).
+    pub state_bytes: f64,
+    /// Total parameter bytes (for the dp gradient allreduce).
+    pub param_bytes: f64,
+    pub device: DeviceModel,
+}
+
+/// Cost breakdown of one training batch (seconds).
+#[derive(Debug, Clone, Default)]
+pub struct SimReport {
+    pub fwd: f64,
+    pub bwd: f64,
+    pub grad: f64,
+    pub allreduce: f64,
+    pub comm: f64,
+    pub total: f64,
+    /// Φ evaluations on the critical path (fwd+bwd).
+    pub critical_phi: u64,
+}
+
+/// The simulator. All methods are pure functions of the config.
+pub struct Simulator {
+    pub cfg: SimConfig,
+}
+
+impl Simulator {
+    pub fn new(cfg: SimConfig) -> Simulator {
+        Simulator { cfg }
+    }
+
+    fn phi_t(&self) -> f64 {
+        // per-replica micro-batch, with throughput saturation: a device at
+        // micro-batch b sustains flops·b/(b+batch_half), so
+        // t = flops_per_sample·(b + batch_half)/flops.
+        let b = (self.cfg.batch as f64 / self.cfg.dp as f64).max(1.0);
+        self.cfg.flops_per_sample_step * (b + self.cfg.device.batch_half)
+            / self.cfg.device.flops
+    }
+
+    /// VJP ≈ 2× forward cost (recompute + transposed ops).
+    fn vjp_t(&self) -> f64 {
+        2.0 * self.phi_t()
+    }
+
+    fn comm1(&self) -> f64 {
+        let per_dev_batch = (self.cfg.batch as f64 / self.cfg.dp as f64).max(1.0);
+        self.cfg.device.alpha + self.cfg.state_bytes * per_dev_batch * self.cfg.device.beta
+    }
+
+    /// Critical-path time + Φ count of one MGRIT V-cycle over all levels.
+    fn vcycle(&self, t_step: f64) -> (f64, u64, f64) {
+        let cf = self.cfg.cf;
+        let mut time = 0.0;
+        let mut phis = 0u64;
+        let mut comm = 0.0;
+        let mut n_l = self.cfg.n_layers;
+        let mut level = 0;
+        loop {
+            let coarsest = level + 1 >= self.cfg.levels || n_l % cf != 0 || n_l / cf < 1;
+            if coarsest {
+                // serial solve on one device, then broadcast the C-points
+                time += n_l as f64 * t_step;
+                phis += n_l as u64;
+                let bc = (self.cfg.lp as f64).log2().ceil().max(0.0) * self.comm1();
+                time += bc;
+                comm += bc;
+                break;
+            }
+            let chunks = n_l / cf;
+            let p_eff = self.cfg.lp.min(chunks).max(1);
+            let per_dev = chunks.div_ceil(p_eff) as f64;
+            // relaxation: F (cf-1 steps/chunk), FCF adds C (1) + F (cf-1)
+            let relax_steps = if self.cfg.fcf { 2 * (cf - 1) + 1 } else { cf - 1 } as f64;
+            // residual + FAS restriction: 2 Φ per C-point
+            let restrict_steps = 2.0;
+            // post-correction F-relax: cf-1 steps per chunk
+            let post_steps = (cf - 1) as f64;
+            let steps = per_dev * (relax_steps + restrict_steps + post_steps);
+            time += steps * t_step;
+            phis += steps as u64;
+            // halo exchanges: C-relax boundary + restriction gather + correction scatter
+            let halos = if self.cfg.fcf { 3.0 } else { 2.0 };
+            let c = halos * self.comm1();
+            time += c;
+            comm += c;
+            n_l /= cf;
+            level += 1;
+        }
+        (time, phis, comm)
+    }
+
+    /// Time of one solve (forward if `t_step = phi_t`): serial when
+    /// `iters = None` (activations stream through all lp slabs), MGRIT
+    /// V-cycles otherwise.
+    fn solve(&self, iters: Option<usize>, t_step: f64) -> (f64, u64, f64) {
+        match iters {
+            None => {
+                let comm = (self.cfg.lp.saturating_sub(1)) as f64 * self.comm1();
+                (self.cfg.n_layers as f64 * t_step + comm, self.cfg.n_layers as u64, comm)
+            }
+            Some(k) => {
+                let (t, p, c) = self.vcycle(t_step);
+                (t * k as f64, p * k as u64, c * k as f64)
+            }
+        }
+    }
+
+    /// Full batch cost: forward + adjoint + gradient pass + dp allreduce.
+    pub fn batch_time(&self) -> SimReport {
+        let (fwd, pf, cf_) = self.solve(self.cfg.fwd_iters, self.phi_t());
+        let (bwd, pb, cb) = self.solve(self.cfg.bwd_iters, self.vjp_t());
+        // gradient assembly: each lp rank handles its slab in parallel
+        let per_dev_layers = self.cfg.n_layers.div_ceil(self.cfg.lp) as f64;
+        let grad = per_dev_layers * self.vjp_t();
+        // dp ring allreduce over each slab's parameters. The dp group spans
+        // rank stride lp, so once lp·dp exceeds a node the ring crosses the
+        // inter-node fabric and is bottlenecked by its slowest link (the
+        // paper §4.2: "the final all-to-all … becomes prohibitively
+        // expensive" at high dp).
+        let allreduce = if self.cfg.dp > 1 {
+            let bytes = self.cfg.param_bytes / self.cfg.lp as f64;
+            let d = self.cfg.dp as f64;
+            let spans_nodes = self.cfg.dp * self.cfg.lp > self.cfg.device.node_size;
+            let beta =
+                if spans_nodes { self.cfg.device.beta_inter } else { self.cfg.device.beta };
+            2.0 * (d - 1.0) * self.cfg.device.alpha
+                + 2.0 * (d - 1.0) / d * bytes * beta
+        } else {
+            0.0
+        };
+        let comm = cf_ + cb + allreduce;
+        SimReport {
+            fwd,
+            bwd,
+            grad,
+            allreduce,
+            comm,
+            total: fwd + bwd + grad + allreduce,
+            critical_phi: pf + pb,
+        }
+    }
+
+    /// Speedup of this config vs the same model serial on one device.
+    pub fn speedup_vs_serial(&self) -> f64 {
+        let mut serial_cfg = self.cfg.clone();
+        serial_cfg.lp = 1;
+        serial_cfg.dp = 1;
+        serial_cfg.fwd_iters = None;
+        serial_cfg.bwd_iters = None;
+        serial_cfg.batch = self.cfg.batch / self.cfg.dp.max(1); // same per-replica work
+        let serial = Simulator::new(serial_cfg).batch_time().total;
+        serial / self.batch_time().total
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn base(lp: usize, n_layers: usize) -> SimConfig {
+        SimConfig {
+            n_layers,
+            cf: 4,
+            levels: 2,
+            fwd_iters: Some(1),
+            bwd_iters: Some(1),
+            fcf: true,
+            lp,
+            dp: 1,
+            flops_per_sample_step: 50e6,
+            batch: 32,
+            state_bytes: 64.0 * 32.0 * 4.0,
+            param_bytes: 1e6,
+            device: DeviceModel::v100(),
+        }
+    }
+
+    #[test]
+    fn deeper_models_speed_up_more() {
+        // paper Fig. 8 right: benefits grow with depth
+        let s64 = Simulator::new(base(8, 64)).speedup_vs_serial();
+        let s256 = Simulator::new(base(8, 256)).speedup_vs_serial();
+        let s1024 = Simulator::new(base(8, 1024)).speedup_vs_serial();
+        assert!(s256 > s64, "{} vs {}", s256, s64);
+        assert!(s1024 > s256, "{} vs {}", s1024, s256);
+    }
+
+    #[test]
+    fn speedup_grows_then_saturates_with_devices() {
+        // paper Fig. 6: more devices help up to N/cf-way parallelism
+        let sp: Vec<f64> = [1usize, 2, 4, 8, 16, 32]
+            .iter()
+            .map(|&p| Simulator::new(base(p, 128)).speedup_vs_serial())
+            .collect();
+        assert!(sp[2] > sp[1] && sp[3] > sp[2], "{:?}", sp);
+        // saturation: doubling past the chunk count gains nothing
+        let last_gain = sp[5] / sp[4];
+        let early_gain = sp[2] / sp[1];
+        assert!(last_gain < early_gain, "{:?}", sp);
+    }
+
+    #[test]
+    fn small_problem_on_two_devices_can_lose() {
+        // paper §4.2: MGRIT overhead can exceed serial time for small N
+        let mut c = base(2, 8);
+        c.fwd_iters = Some(2);
+        c.bwd_iters = Some(2);
+        let s = Simulator::new(c).speedup_vs_serial();
+        assert!(s < 1.2, "tiny model should not speed up much, got {}", s);
+    }
+
+    #[test]
+    fn more_levels_beat_two_for_deep_models() {
+        // paper Fig. 8 left: scalability improves with level count (the
+        // coarse serial solve shrinks by cf per level)
+        let mut two = base(32, 1024);
+        two.cf = 2;
+        two.levels = 2;
+        let mut four = two.clone();
+        four.levels = 4;
+        let t2 = Simulator::new(two).batch_time().total;
+        let t4 = Simulator::new(four).batch_time().total;
+        assert!(t4 < t2, "L=4 {} should beat L=2 {}", t4, t2);
+    }
+
+    #[test]
+    fn dp_lp_tradeoff_is_convex() {
+        // paper Fig. 9: fixed budget of 32 devices, batch 32 -> time per
+        // batch is convex in the dp degree with an interior-ish optimum.
+        let budget = 32usize;
+        let times: Vec<f64> = [1usize, 2, 4, 8, 16, 32]
+            .iter()
+            .map(|&dp| {
+                let mut c = base(budget / dp, 64);
+                c.dp = dp;
+                c.batch = 32;
+                c.param_bytes = 50e6;
+                Simulator::new(c).batch_time().total
+            })
+            .collect();
+        // endpoints are worse than the best interior point
+        let best = times.iter().cloned().fold(f64::INFINITY, f64::min);
+        assert!(times[0] > best, "{:?}", times);
+        assert!(times[5] > best, "{:?}", times);
+    }
+
+    #[test]
+    fn serial_forward_config_matches_table3() {
+        // 'serial fwd + 1 bwd iter' (ViT/GPT rows) must still beat
+        // all-serial when layers are deep, because the adjoint parallelizes.
+        let mut c = base(8, 128);
+        c.fwd_iters = None;
+        c.bwd_iters = Some(1);
+        let s = Simulator::new(c).speedup_vs_serial();
+        assert!(s > 1.0, "speedup {}", s);
+    }
+
+    #[test]
+    fn report_components_positive_and_sum() {
+        let mut c = base(4, 64);
+        c.dp = 2;
+        let r = Simulator::new(c).batch_time();
+        assert!(r.fwd > 0.0 && r.bwd > 0.0 && r.grad > 0.0 && r.allreduce > 0.0);
+        assert!((r.total - (r.fwd + r.bwd + r.grad + r.allreduce)).abs() < 1e-12);
+        assert!(r.critical_phi > 0);
+    }
+}

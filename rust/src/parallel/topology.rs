@@ -1,0 +1,105 @@
+//! Device grid: lp_degree ranks along the layer/time dimension ×
+//! dp_degree data-parallel replicas (paper §4.2, Fig. 9).
+
+/// The lp×dp grid. Rank layout: rank = dp_idx * lp + lp_idx.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Topology {
+    pub lp: usize,
+    pub dp: usize,
+}
+
+impl Topology {
+    pub fn new(lp: usize, dp: usize) -> Topology {
+        assert!(lp >= 1 && dp >= 1);
+        Topology { lp, dp }
+    }
+
+    pub fn n_ranks(&self) -> usize {
+        self.lp * self.dp
+    }
+
+    pub fn lp_index(&self, rank: usize) -> usize {
+        rank % self.lp
+    }
+
+    pub fn dp_index(&self, rank: usize) -> usize {
+        rank / self.lp
+    }
+
+    pub fn rank_of(&self, lp_idx: usize, dp_idx: usize) -> usize {
+        dp_idx * self.lp + lp_idx
+    }
+
+    /// Ranks in the same data-parallel replica (one layer-parallel group).
+    pub fn lp_group(&self, dp_idx: usize) -> Vec<usize> {
+        (0..self.lp).map(|l| self.rank_of(l, dp_idx)).collect()
+    }
+
+    /// Ranks holding the same layer slab across replicas (the gradient
+    /// allreduce group).
+    pub fn dp_group(&self, lp_idx: usize) -> Vec<usize> {
+        (0..self.dp).map(|d| self.rank_of(lp_idx, d)).collect()
+    }
+}
+
+/// Contiguous partition of `n_items` over `parts` owners: the first
+/// `n_items % parts` owners get one extra. Returns (start, end) per owner.
+pub fn slab_partition(n_items: usize, parts: usize) -> Vec<(usize, usize)> {
+    assert!(parts >= 1);
+    let base = n_items / parts;
+    let extra = n_items % parts;
+    let mut out = Vec::with_capacity(parts);
+    let mut start = 0;
+    for p in 0..parts {
+        let len = base + usize::from(p < extra);
+        out.push((start, start + len));
+        start += len;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::forall;
+
+    #[test]
+    fn grid_indexing_roundtrip() {
+        let t = Topology::new(4, 2);
+        assert_eq!(t.n_ranks(), 8);
+        for rank in 0..8 {
+            assert_eq!(t.rank_of(t.lp_index(rank), t.dp_index(rank)), rank);
+        }
+        assert_eq!(t.lp_group(1), vec![4, 5, 6, 7]);
+        assert_eq!(t.dp_group(2), vec![2, 6]);
+    }
+
+    #[test]
+    fn prop_partition_covers_exactly() {
+        forall("slab-partition", 100, |rng| {
+            let n = rng.range(200);
+            let parts = 1 + rng.range(16);
+            let slabs = slab_partition(n, parts);
+            assert_eq!(slabs.len(), parts);
+            assert_eq!(slabs[0].0, 0);
+            assert_eq!(slabs[parts - 1].1, n);
+            for w in slabs.windows(2) {
+                assert_eq!(w[0].1, w[1].0, "contiguous");
+            }
+            // balanced within 1
+            let sizes: Vec<usize> = slabs.iter().map(|(a, b)| b - a).collect();
+            let (min, max) =
+                (sizes.iter().min().unwrap(), sizes.iter().max().unwrap());
+            assert!(max - min <= 1);
+        });
+    }
+
+    #[test]
+    fn paper_example_fig9() {
+        // 32 GPUs, dp=8 -> lp=4, 64-layer model -> 16 layers per device
+        let t = Topology::new(4, 8);
+        assert_eq!(t.n_ranks(), 32);
+        let slabs = slab_partition(64, t.lp);
+        assert!(slabs.iter().all(|(a, b)| b - a == 16));
+    }
+}

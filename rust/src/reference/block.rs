@@ -1,0 +1,782 @@
+//! Neural-ODE transformer step Φ: forward and hand-derived backward.
+//!
+//! Matches `ref.py` exactly (pre-LN, tanh-GELU, eq. 1-3):
+//!
+//!   encoder:  x' = x + h (φ1(x) + φ2(x + φ1(x)))
+//!   decoder:  ȳ  = φ1(y) + φ3(y + φ1(y), X_enc)
+//!             y' = y + h (ȳ + φ2(y + ȳ))
+//!
+//! The backward functions recompute the forward internally (no cache
+//! plumbing — this path is a correctness oracle, not the hot path) and
+//! return the adjoint state λ plus flat parameter gradients.
+
+use super::math::{gelu, gelu_grad, layer_norm_bwd, layer_norm_fwd};
+use super::params::{DecGrads, DecParams, EncGrads, EncParams};
+use crate::tensor::Tensor;
+
+/// Shape context for one Φ application.
+#[derive(Debug, Clone, Copy)]
+pub struct RefDims {
+    pub batch: usize,
+    pub seq: usize,
+    pub d_model: usize,
+    pub n_heads: usize,
+    pub d_ff: usize,
+}
+
+impl RefDims {
+    pub fn head_dim(&self) -> usize {
+        self.d_model / self.n_heads
+    }
+
+    pub fn rows(&self) -> usize {
+        self.batch * self.seq
+    }
+}
+
+// ---------------------------------------------------------------------------
+// raw matmul helpers (row-major slices)
+// ---------------------------------------------------------------------------
+
+/// out (+)= a[m,k] @ b[k,n]
+fn mm(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, out: &mut [f32], acc: bool) {
+    if !acc {
+        out.iter_mut().for_each(|v| *v = 0.0);
+    }
+    for i in 0..m {
+        let arow = &a[i * k..(i + 1) * k];
+        let orow = &mut out[i * n..(i + 1) * n];
+        for (kk, &av) in arow.iter().enumerate() {
+            if av == 0.0 {
+                continue;
+            }
+            let brow = &b[kk * n..(kk + 1) * n];
+            for (o, &bv) in orow.iter_mut().zip(brow) {
+                *o += av * bv;
+            }
+        }
+    }
+}
+
+/// out += aᵀ @ b where a is [k,m], b is [k,n] -> out [m,n] (weight grads)
+fn mm_at(a: &[f32], b: &[f32], k: usize, m: usize, n: usize, out: &mut [f32]) {
+    for kk in 0..k {
+        let arow = &a[kk * m..(kk + 1) * m];
+        let brow = &b[kk * n..(kk + 1) * n];
+        for (i, &av) in arow.iter().enumerate() {
+            if av == 0.0 {
+                continue;
+            }
+            let orow = &mut out[i * n..(i + 1) * n];
+            for (o, &bv) in orow.iter_mut().zip(brow) {
+                *o += av * bv;
+            }
+        }
+    }
+}
+
+/// out += a @ bᵀ where a is [m,k], b is [n,k] -> out [m,n] (input grads)
+fn mm_bt(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, out: &mut [f32]) {
+    for i in 0..m {
+        let arow = &a[i * k..(i + 1) * k];
+        let orow = &mut out[i * n..(i + 1) * n];
+        for (j, o) in orow.iter_mut().enumerate() {
+            let brow = &b[j * k..(j + 1) * k];
+            let mut acc = 0.0;
+            for kk in 0..k {
+                acc += arow[kk] * brow[kk];
+            }
+            *o += acc;
+        }
+    }
+}
+
+/// Copy head block h of a [b, s, d] activation into a contiguous [s, hd] buffer.
+fn gather_head(src: &[f32], b: usize, s: usize, d: usize, h: usize, hd: usize, out: &mut [f32]) {
+    for t in 0..s {
+        let base = (b * s + t) * d + h * hd;
+        out[t * hd..(t + 1) * hd].copy_from_slice(&src[base..base + hd]);
+    }
+}
+
+/// Accumulate a contiguous [s, hd] head buffer back into [b, s, d] layout.
+fn scatter_head_add(dst: &mut [f32], b: usize, s: usize, d: usize, h: usize, hd: usize, src: &[f32]) {
+    for t in 0..s {
+        let base = (b * s + t) * d + h * hd;
+        for i in 0..hd {
+            dst[base + i] += src[t * hd + i];
+        }
+    }
+}
+
+/// Row-wise softmax with optional causal mask; operates on [sq, sk].
+fn masked_softmax(scores: &mut [f32], sq: usize, sk: usize, causal: bool) {
+    for qi in 0..sq {
+        let row = &mut scores[qi * sk..(qi + 1) * sk];
+        if causal {
+            // allow k <= q + (sk - sq)  (matches ref.py tril with k = sk-sq)
+            let limit = qi + (sk - sq);
+            for (ki, v) in row.iter_mut().enumerate() {
+                if ki > limit {
+                    *v = f32::NEG_INFINITY;
+                }
+            }
+        }
+        let max = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let mut sum = 0.0;
+        for v in row.iter_mut() {
+            *v = (*v - max).exp();
+            sum += *v;
+        }
+        let inv = 1.0 / sum;
+        row.iter_mut().for_each(|v| *v *= inv);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// attention (generic over self/cross): q from zq [bq rows], k/v from kv
+// ---------------------------------------------------------------------------
+
+struct AttnShapes {
+    batch: usize,
+    sq: usize,
+    sk: usize,
+    d: usize,
+    nh: usize,
+}
+
+/// merged = MHA_core(zq @ wq, kv @ wk, kv @ wv); out = merged @ wo
+#[allow(clippy::too_many_arguments)]
+fn attention_fwd(
+    zq: &[f32],
+    kv: &[f32],
+    wq: &[f32],
+    wk: &[f32],
+    wv: &[f32],
+    wo: &[f32],
+    sh: &AttnShapes,
+    causal: bool,
+    out: &mut [f32],
+) {
+    let AttnShapes { batch, sq, sk, d, nh } = *sh;
+    let hd = d / nh;
+    let scale = 1.0 / (hd as f32).sqrt();
+    let (rq, rk) = (batch * sq, batch * sk);
+
+    let mut q = vec![0.0; rq * d];
+    let mut k = vec![0.0; rk * d];
+    let mut v = vec![0.0; rk * d];
+    mm(zq, wq, rq, d, d, &mut q, false);
+    mm(kv, wk, rk, d, d, &mut k, false);
+    mm(kv, wv, rk, d, d, &mut v, false);
+
+    let mut merged = vec![0.0; rq * d];
+    let mut qh = vec![0.0; sq * hd];
+    let mut kh = vec![0.0; sk * hd];
+    let mut vh = vec![0.0; sk * hd];
+    let mut scores = vec![0.0; sq * sk];
+    let mut oh = vec![0.0; sq * hd];
+    for b in 0..batch {
+        for h in 0..nh {
+            gather_head(&q, b, sq, d, h, hd, &mut qh);
+            gather_head(&k, b, sk, d, h, hd, &mut kh);
+            gather_head(&v, b, sk, d, h, hd, &mut vh);
+            mm_bt(&qh, &kh, sq, hd, sk, {
+                scores.iter_mut().for_each(|x| *x = 0.0);
+                &mut scores
+            });
+            scores.iter_mut().for_each(|x| *x *= scale);
+            masked_softmax(&mut scores, sq, sk, causal);
+            mm(&scores, &vh, sq, sk, hd, &mut oh, false);
+            scatter_head_add(&mut merged, b, sq, d, h, hd, &oh);
+        }
+    }
+    mm(&merged, wo, rq, d, d, out, false);
+}
+
+/// Backward of `attention_fwd` (recomputes internals).
+/// Accumulates d_zq, d_kv and the four weight grads.
+#[allow(clippy::too_many_arguments)]
+fn attention_bwd(
+    zq: &[f32],
+    kv: &[f32],
+    wq: &[f32],
+    wk: &[f32],
+    wv: &[f32],
+    wo: &[f32],
+    sh: &AttnShapes,
+    causal: bool,
+    d_out: &[f32],
+    d_zq: &mut [f32],
+    d_kv: &mut [f32],
+    dwq: &mut [f32],
+    dwk: &mut [f32],
+    dwv: &mut [f32],
+    dwo: &mut [f32],
+) {
+    let AttnShapes { batch, sq, sk, d, nh } = *sh;
+    let hd = d / nh;
+    let scale = 1.0 / (hd as f32).sqrt();
+    let (rq, rk) = (batch * sq, batch * sk);
+
+    // recompute projections
+    let mut q = vec![0.0; rq * d];
+    let mut k = vec![0.0; rk * d];
+    let mut v = vec![0.0; rk * d];
+    mm(zq, wq, rq, d, d, &mut q, false);
+    mm(kv, wk, rk, d, d, &mut k, false);
+    mm(kv, wv, rk, d, d, &mut v, false);
+
+    // recompute merged (needed for dwo)
+    let mut merged = vec![0.0; rq * d];
+    {
+        let mut qh = vec![0.0; sq * hd];
+        let mut kh = vec![0.0; sk * hd];
+        let mut vh = vec![0.0; sk * hd];
+        let mut scores = vec![0.0; sq * sk];
+        let mut oh = vec![0.0; sq * hd];
+        for b in 0..batch {
+            for h in 0..nh {
+                gather_head(&q, b, sq, d, h, hd, &mut qh);
+                gather_head(&k, b, sk, d, h, hd, &mut kh);
+                gather_head(&v, b, sk, d, h, hd, &mut vh);
+                scores.iter_mut().for_each(|x| *x = 0.0);
+                mm_bt(&qh, &kh, sq, hd, sk, &mut scores);
+                scores.iter_mut().for_each(|x| *x *= scale);
+                masked_softmax(&mut scores, sq, sk, causal);
+                mm(&scores, &vh, sq, sk, hd, &mut oh, false);
+                scatter_head_add(&mut merged, b, sq, d, h, hd, &oh);
+            }
+        }
+    }
+
+    // out = merged @ wo
+    mm_at(&merged, d_out, rq, d, d, dwo);
+    let mut d_merged = vec![0.0; rq * d];
+    mm_bt(d_out, wo, rq, d, d, &mut d_merged);
+
+    let mut dq = vec![0.0; rq * d];
+    let mut dk = vec![0.0; rk * d];
+    let mut dv = vec![0.0; rk * d];
+    {
+        let mut qh = vec![0.0; sq * hd];
+        let mut kh = vec![0.0; sk * hd];
+        let mut vh = vec![0.0; sk * hd];
+        let mut p = vec![0.0; sq * sk];
+        let mut doh = vec![0.0; sq * hd];
+        let mut dp = vec![0.0; sq * sk];
+        let mut ds = vec![0.0; sq * sk];
+        let mut dqh = vec![0.0; sq * hd];
+        let mut dkh = vec![0.0; sk * hd];
+        let mut dvh = vec![0.0; sk * hd];
+        for b in 0..batch {
+            for h in 0..nh {
+                gather_head(&q, b, sq, d, h, hd, &mut qh);
+                gather_head(&k, b, sk, d, h, hd, &mut kh);
+                gather_head(&v, b, sk, d, h, hd, &mut vh);
+                p.iter_mut().for_each(|x| *x = 0.0);
+                mm_bt(&qh, &kh, sq, hd, sk, &mut p);
+                p.iter_mut().for_each(|x| *x *= scale);
+                masked_softmax(&mut p, sq, sk, causal);
+
+                gather_head(&d_merged, b, sq, d, h, hd, &mut doh);
+                // dP = dO @ Vᵀ ; dV = Pᵀ @ dO
+                dp.iter_mut().for_each(|x| *x = 0.0);
+                mm_bt(&doh, &vh, sq, hd, sk, &mut dp);
+                dvh.iter_mut().for_each(|x| *x = 0.0);
+                mm_at(&p, &doh, sq, sk, hd, &mut dvh);
+                // softmax backward: dS = P ∘ (dP - rowsum(dP ∘ P))
+                for qi in 0..sq {
+                    let prow = &p[qi * sk..(qi + 1) * sk];
+                    let dprow = &dp[qi * sk..(qi + 1) * sk];
+                    let dot: f32 = prow.iter().zip(dprow).map(|(a, b2)| a * b2).sum();
+                    let dsrow = &mut ds[qi * sk..(qi + 1) * sk];
+                    for ki in 0..sk {
+                        dsrow[ki] = prow[ki] * (dprow[ki] - dot);
+                    }
+                }
+                // dQ = scale * dS @ K ; dK = scale * dSᵀ @ Q
+                dqh.iter_mut().for_each(|x| *x = 0.0);
+                mm(&ds, &kh, sq, sk, hd, &mut dqh, false);
+                dqh.iter_mut().for_each(|x| *x *= scale);
+                dkh.iter_mut().for_each(|x| *x = 0.0);
+                mm_at(&ds, &qh, sq, sk, hd, &mut dkh);
+                dkh.iter_mut().for_each(|x| *x *= scale);
+
+                scatter_head_add(&mut dq, b, sq, d, h, hd, &dqh);
+                scatter_head_add(&mut dk, b, sk, d, h, hd, &dkh);
+                scatter_head_add(&mut dv, b, sk, d, h, hd, &dvh);
+            }
+        }
+    }
+
+    // projection backward
+    mm_bt(&dq, wq, rq, d, d, d_zq);
+    mm_bt(&dk, wk, rk, d, d, d_kv);
+    mm_bt(&dv, wv, rk, d, d, d_kv);
+    mm_at(zq, &dq, rq, d, d, dwq);
+    mm_at(kv, &dk, rk, d, d, dwk);
+    mm_at(kv, &dv, rk, d, d, dwv);
+}
+
+// ---------------------------------------------------------------------------
+// phi sublayers
+// ---------------------------------------------------------------------------
+
+/// φ1(x) = SA(LN1(x)) — forward.
+fn phi1_fwd(x: &[f32], p: &EncParams, dm: &RefDims, causal: bool, out: &mut [f32]) {
+    let (r, d) = (dm.rows(), dm.d_model);
+    let mut z = vec![0.0; r * d];
+    layer_norm_fwd(x, p.ln1_g, p.ln1_b, d, &mut z);
+    let sh = AttnShapes { batch: dm.batch, sq: dm.seq, sk: dm.seq, d, nh: dm.n_heads };
+    attention_fwd(&z, &z, p.wq, p.wk, p.wv, p.wo, &sh, causal, out);
+}
+
+/// φ1 backward: accumulates dx and parameter grads.
+fn phi1_bwd(
+    x: &[f32],
+    p: &EncParams,
+    g: &mut EncGrads,
+    dm: &RefDims,
+    causal: bool,
+    d_out: &[f32],
+    dx: &mut [f32],
+) {
+    let (r, d) = (dm.rows(), dm.d_model);
+    let mut z = vec![0.0; r * d];
+    let stats = layer_norm_fwd(x, p.ln1_g, p.ln1_b, d, &mut z);
+    let sh = AttnShapes { batch: dm.batch, sq: dm.seq, sk: dm.seq, d, nh: dm.n_heads };
+    // self-attention: zq and kv are the SAME tensor -> sum both grad paths
+    let mut dz_q = vec![0.0; r * d];
+    let mut dz_kv = vec![0.0; r * d];
+    attention_bwd(&z, &z, p.wq, p.wk, p.wv, p.wo, &sh, causal, d_out, &mut dz_q, &mut dz_kv,
+                  g.wq, g.wk, g.wv, g.wo);
+    for (a2, b2) in dz_q.iter_mut().zip(&dz_kv) {
+        *a2 += b2;
+    }
+    layer_norm_bwd(&dz_q, x, p.ln1_g, &stats, d, dx, g.ln1_g, g.ln1_b);
+}
+
+/// φ2(u) = MLP(LN2(u)) — forward.
+fn phi2_fwd(u: &[f32], p: &EncParams, dm: &RefDims, out: &mut [f32]) {
+    let (r, d, f) = (dm.rows(), dm.d_model, dm.d_ff);
+    let mut z = vec![0.0; r * d];
+    layer_norm_fwd(u, p.ln2_g, p.ln2_b, d, &mut z);
+    let mut hpre = vec![0.0; r * f];
+    mm(&z, p.w1, r, d, f, &mut hpre, false);
+    for row in 0..r {
+        for j in 0..f {
+            hpre[row * f + j] += p.b1[j];
+        }
+    }
+    let hmid: Vec<f32> = hpre.iter().map(|&v| gelu(v)).collect();
+    mm(&hmid, p.w2, r, f, d, out, false);
+    for row in 0..r {
+        for j in 0..d {
+            out[row * d + j] += p.b2[j];
+        }
+    }
+}
+
+/// φ2 backward: accumulates du and parameter grads.
+fn phi2_bwd(
+    u: &[f32],
+    p: &EncParams,
+    g: &mut EncGrads,
+    dm: &RefDims,
+    d_out: &[f32],
+    du: &mut [f32],
+) {
+    let (r, d, f) = (dm.rows(), dm.d_model, dm.d_ff);
+    let mut z = vec![0.0; r * d];
+    let stats = layer_norm_fwd(u, p.ln2_g, p.ln2_b, d, &mut z);
+    let mut hpre = vec![0.0; r * f];
+    mm(&z, p.w1, r, d, f, &mut hpre, false);
+    for row in 0..r {
+        for j in 0..f {
+            hpre[row * f + j] += p.b1[j];
+        }
+    }
+    let hmid: Vec<f32> = hpre.iter().map(|&v| gelu(v)).collect();
+
+    // out = hmid @ w2 + b2
+    mm_at(&hmid, d_out, r, f, d, g.w2);
+    for row in 0..r {
+        for j in 0..d {
+            g.b2[j] += d_out[row * d + j];
+        }
+    }
+    let mut d_hmid = vec![0.0; r * f];
+    mm_bt(d_out, p.w2, r, d, f, &mut d_hmid);
+    // gelu
+    let d_hpre: Vec<f32> =
+        d_hmid.iter().zip(&hpre).map(|(dh, &hp)| dh * gelu_grad(hp)).collect();
+    // hpre = z @ w1 + b1
+    mm_at(&z, &d_hpre, r, d, f, g.w1);
+    for row in 0..r {
+        for j in 0..f {
+            g.b1[j] += d_hpre[row * f + j];
+        }
+    }
+    let mut dz = vec![0.0; r * d];
+    mm_bt(&d_hpre, p.w1, r, f, d, &mut dz);
+    layer_norm_bwd(&dz, u, p.ln2_g, &stats, d, du, g.ln2_g, g.ln2_b);
+}
+
+/// φ3(u, x_enc) = CA(LN3(u), x_enc) — forward. Keys/values from raw x_enc
+/// (not layer-normed), matching ref.py.
+fn phi3_fwd(
+    u: &[f32],
+    x_enc: &[f32],
+    p: &DecParams,
+    dm_q: &RefDims,
+    seq_k: usize,
+    out: &mut [f32],
+) {
+    let (r, d) = (dm_q.rows(), dm_q.d_model);
+    let mut z = vec![0.0; r * d];
+    layer_norm_fwd(u, p.ln3_g, p.ln3_b, d, &mut z);
+    let sh = AttnShapes { batch: dm_q.batch, sq: dm_q.seq, sk: seq_k, d, nh: dm_q.n_heads };
+    attention_fwd(&z, x_enc, p.cq, p.ck, p.cv, p.co, &sh, false, out);
+}
+
+/// φ3 backward: accumulates du, dx_enc and parameter grads.
+#[allow(clippy::too_many_arguments)]
+fn phi3_bwd(
+    u: &[f32],
+    x_enc: &[f32],
+    p: &DecParams,
+    g: &mut DecGrads,
+    dm_q: &RefDims,
+    seq_k: usize,
+    d_out: &[f32],
+    du: &mut [f32],
+    dx_enc: &mut [f32],
+) {
+    let (r, d) = (dm_q.rows(), dm_q.d_model);
+    let mut z = vec![0.0; r * d];
+    let stats = layer_norm_fwd(u, p.ln3_g, p.ln3_b, d, &mut z);
+    let sh = AttnShapes { batch: dm_q.batch, sq: dm_q.seq, sk: seq_k, d, nh: dm_q.n_heads };
+    let mut dz = vec![0.0; r * d];
+    attention_bwd(&z, x_enc, p.cq, p.ck, p.cv, p.co, &sh, false, d_out, &mut dz, dx_enc,
+                  g.cq, g.ck, g.cv, g.co);
+    layer_norm_bwd(&dz, u, p.ln3_g, &stats, d, du, g.ln3_g, g.ln3_b);
+}
+
+// ---------------------------------------------------------------------------
+// public step functions
+// ---------------------------------------------------------------------------
+
+/// Encoder (or causal decoder-only) step: x' = x + h (φ1(x) + φ2(x + φ1(x))).
+pub fn enc_step_fwd(x: &Tensor, theta: &[f32], h: f32, dm: &RefDims, causal: bool) -> Tensor {
+    let p = EncParams::view(theta, dm.d_model, dm.d_ff);
+    let n = x.len();
+    let mut a = vec![0.0; n];
+    phi1_fwd(x.data(), &p, dm, causal, &mut a);
+    let u: Vec<f32> = x.data().iter().zip(&a).map(|(xv, av)| xv + av).collect();
+    let mut m = vec![0.0; n];
+    phi2_fwd(&u, &p, dm, &mut m);
+    let out: Vec<f32> = x
+        .data()
+        .iter()
+        .zip(a.iter().zip(&m))
+        .map(|(xv, (av, mv))| xv + h * (av + mv))
+        .collect();
+    Tensor::from_vec(out, x.shape())
+}
+
+/// Encoder step VJP: returns (λ = ∂/∂x, grad_theta) for upstream ct.
+pub fn enc_step_bwd(
+    x: &Tensor,
+    theta: &[f32],
+    h: f32,
+    dm: &RefDims,
+    causal: bool,
+    ct: &Tensor,
+) -> (Tensor, Vec<f32>) {
+    let p = EncParams::view(theta, dm.d_model, dm.d_ff);
+    let mut gtheta = vec![0.0; theta.len()];
+    let n = x.len();
+
+    // forward pieces needed: a = φ1(x), u = x + a
+    let mut a = vec![0.0; n];
+    phi1_fwd(x.data(), &p, dm, causal, &mut a);
+    let u: Vec<f32> = x.data().iter().zip(&a).map(|(xv, av)| xv + av).collect();
+
+    // out = x + h (a + m), m = φ2(u)
+    let d_out = ct.data();
+    let d_f: Vec<f32> = d_out.iter().map(|v| h * v).collect(); // into (a + m)
+    let mut dx: Vec<f32> = d_out.to_vec(); // identity path
+
+    // φ2 path
+    let mut du = vec![0.0; n];
+    {
+        let mut g = EncGrads::view(&mut gtheta, dm.d_model, dm.d_ff);
+        phi2_bwd(&u, &p, &mut g, dm, &d_f, &mut du);
+    }
+    // u = x + a
+    for i in 0..n {
+        dx[i] += du[i];
+    }
+    // total gradient into a: direct h·ct + via u
+    let da: Vec<f32> = d_f.iter().zip(&du).map(|(dfv, duv)| dfv + duv).collect();
+    {
+        let mut g = EncGrads::view(&mut gtheta, dm.d_model, dm.d_ff);
+        phi1_bwd(x.data(), &p, &mut g, dm, causal, &da, &mut dx);
+    }
+    (Tensor::from_vec(dx, x.shape()), gtheta)
+}
+
+/// Encoder-decoder decoder step (eq. 2).
+pub fn dec_step_fwd(
+    y: &Tensor,
+    x_enc: &Tensor,
+    theta: &[f32],
+    h: f32,
+    dm: &RefDims,
+    seq_enc: usize,
+) -> Tensor {
+    let p = DecParams::view(theta, dm.d_model, dm.d_ff);
+    let n = y.len();
+    let mut a = vec![0.0; n];
+    phi1_fwd(y.data(), &p.enc, dm, true, &mut a);
+    let u3: Vec<f32> = y.data().iter().zip(&a).map(|(yv, av)| yv + av).collect();
+    let mut c = vec![0.0; n];
+    phi3_fwd(&u3, x_enc.data(), &p, dm, seq_enc, &mut c);
+    let ybar: Vec<f32> = a.iter().zip(&c).map(|(av, cv)| av + cv).collect();
+    let u2: Vec<f32> = y.data().iter().zip(&ybar).map(|(yv, bv)| yv + bv).collect();
+    let mut m = vec![0.0; n];
+    phi2_fwd(&u2, &p.enc, dm, &mut m);
+    let out: Vec<f32> = y
+        .data()
+        .iter()
+        .zip(ybar.iter().zip(&m))
+        .map(|(yv, (bv, mv))| yv + h * (bv + mv))
+        .collect();
+    Tensor::from_vec(out, y.shape())
+}
+
+/// Decoder step VJP: returns (λ_y, λ_x_enc, grad_theta).
+pub fn dec_step_bwd(
+    y: &Tensor,
+    x_enc: &Tensor,
+    theta: &[f32],
+    h: f32,
+    dm: &RefDims,
+    seq_enc: usize,
+    ct: &Tensor,
+) -> (Tensor, Tensor, Vec<f32>) {
+    let p = DecParams::view(theta, dm.d_model, dm.d_ff);
+    let mut gtheta = vec![0.0; theta.len()];
+    let n = y.len();
+
+    // recompute forward pieces
+    let mut a = vec![0.0; n];
+    phi1_fwd(y.data(), &p.enc, dm, true, &mut a);
+    let u3: Vec<f32> = y.data().iter().zip(&a).map(|(yv, av)| yv + av).collect();
+    let mut c = vec![0.0; n];
+    phi3_fwd(&u3, x_enc.data(), &p, dm, seq_enc, &mut c);
+    let ybar: Vec<f32> = a.iter().zip(&c).map(|(av, cv)| av + cv).collect();
+    let u2: Vec<f32> = y.data().iter().zip(&ybar).map(|(yv, bv)| yv + bv).collect();
+
+    // out = y + h (ybar + m)
+    let d_out = ct.data();
+    let d_f: Vec<f32> = d_out.iter().map(|v| h * v).collect();
+    let mut dy: Vec<f32> = d_out.to_vec();
+    let mut dx_enc = vec![0.0; x_enc.len()];
+
+    // φ2 path at u2
+    let mut du2 = vec![0.0; n];
+    {
+        let mut g = DecGrads::view(&mut gtheta, dm.d_model, dm.d_ff);
+        phi2_bwd(&u2, &p.enc, &mut g.enc, dm, &d_f, &mut du2);
+    }
+    for i in 0..n {
+        dy[i] += du2[i];
+    }
+    // d_ybar = h·ct (direct) + du2 (via u2)
+    let d_ybar: Vec<f32> = d_f.iter().zip(&du2).map(|(a2, b2)| a2 + b2).collect();
+
+    // ybar = a + φ3(u3, x_enc):  d_a += d_ybar;  φ3 gets d_ybar
+    let mut du3 = vec![0.0; n];
+    {
+        let mut g = DecGrads::view(&mut gtheta, dm.d_model, dm.d_ff);
+        phi3_bwd(&u3, x_enc.data(), &p, &mut g, dm, seq_enc, &d_ybar, &mut du3, &mut dx_enc);
+    }
+    // u3 = y + a
+    for i in 0..n {
+        dy[i] += du3[i];
+    }
+    let da: Vec<f32> = d_ybar.iter().zip(&du3).map(|(a2, b2)| a2 + b2).collect();
+    {
+        let mut g = DecGrads::view(&mut gtheta, dm.d_model, dm.d_ff);
+        phi1_bwd(y.data(), &p.enc, &mut g.enc, dm, true, &da, &mut dy);
+    }
+    (
+        Tensor::from_vec(dy, y.shape()),
+        Tensor::from_vec(dx_enc, x_enc.shape()),
+        gtheta,
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn dims() -> RefDims {
+        RefDims { batch: 2, seq: 4, d_model: 8, n_heads: 2, d_ff: 16 }
+    }
+
+    fn p_enc(dm: &RefDims) -> usize {
+        let (d, f) = (dm.d_model, dm.d_ff);
+        4 * d * d + 2 * d * f + 5 * d + f
+    }
+
+    fn p_dec(dm: &RefDims) -> usize {
+        p_enc(dm) + 2 * dm.d_model + 4 * dm.d_model * dm.d_model
+    }
+
+    #[test]
+    fn enc_step_h_zero_is_identity() {
+        let dm = dims();
+        let mut rng = Rng::new(0);
+        let x = Tensor::randn(&mut rng, &[dm.batch, dm.seq, dm.d_model], 1.0);
+        let theta = rng.normal_vec(p_enc(&dm), 0.1);
+        let out = enc_step_fwd(&x, &theta, 0.0, &dm, false);
+        assert!(out.allclose(&x, 1e-6, 1e-6));
+    }
+
+    #[test]
+    fn enc_step_residual_linear_in_h() {
+        let dm = dims();
+        let mut rng = Rng::new(1);
+        let x = Tensor::randn(&mut rng, &[dm.batch, dm.seq, dm.d_model], 1.0);
+        let theta = rng.normal_vec(p_enc(&dm), 0.1);
+        let d1 = enc_step_fwd(&x, &theta, 0.1, &dm, false).sub(&x);
+        let mut d2 = enc_step_fwd(&x, &theta, 0.2, &dm, false).sub(&x);
+        d2.scale(0.5);
+        assert!(d1.allclose(&d2, 1e-4, 1e-5));
+    }
+
+    #[test]
+    fn causal_step_no_future_dependence() {
+        let dm = dims();
+        let mut rng = Rng::new(2);
+        let x = Tensor::randn(&mut rng, &[dm.batch, dm.seq, dm.d_model], 1.0);
+        let theta = rng.normal_vec(p_enc(&dm), 0.3);
+        let base = enc_step_fwd(&x, &theta, 1.0, &dm, true);
+        let mut x2 = x.clone();
+        // perturb last position of each sequence
+        let d = dm.d_model;
+        for b in 0..dm.batch {
+            let off = (b * dm.seq + dm.seq - 1) * d;
+            for i in 0..d {
+                x2.data_mut()[off + i] += 5.0;
+            }
+        }
+        let pert = enc_step_fwd(&x2, &theta, 1.0, &dm, true);
+        for b in 0..dm.batch {
+            for t in 0..dm.seq - 1 {
+                let off = (b * dm.seq + t) * d;
+                for i in 0..d {
+                    assert!(
+                        (base.data()[off + i] - pert.data()[off + i]).abs() < 1e-5,
+                        "future leaked at b={} t={}",
+                        b,
+                        t
+                    );
+                }
+            }
+        }
+    }
+
+    /// Central finite-difference check of the full encoder-step VJP.
+    #[test]
+    fn enc_step_bwd_matches_fd() {
+        let dm = RefDims { batch: 1, seq: 3, d_model: 4, n_heads: 2, d_ff: 8 };
+        let mut rng = Rng::new(3);
+        let x = Tensor::randn(&mut rng, &[1, dm.seq, dm.d_model], 0.7);
+        let theta = rng.normal_vec(p_enc(&dm), 0.2);
+        let ct = Tensor::randn(&mut rng, &[1, dm.seq, dm.d_model], 1.0);
+        let h = 0.7;
+        let (dx, dth) = enc_step_bwd(&x, &theta, h, &dm, false, &ct);
+
+        let f_x = |xv: &Tensor| enc_step_fwd(xv, &theta, h, &dm, false).dot(&ct);
+        let eps = 2e-3;
+        for i in 0..x.len() {
+            let mut xp = x.clone();
+            xp.data_mut()[i] += eps;
+            let mut xm = x.clone();
+            xm.data_mut()[i] -= eps;
+            let fd = (f_x(&xp) - f_x(&xm)) / (2.0 * eps);
+            assert!(
+                (dx.data()[i] - fd).abs() < 3e-2 * (1.0 + fd.abs()),
+                "dx[{}]={} fd={}",
+                i,
+                dx.data()[i],
+                fd
+            );
+        }
+        // spot-check a spread of parameter coordinates
+        let f_t = |tv: &[f32]| enc_step_fwd(&x, tv, h, &dm, false).dot(&ct);
+        let stride = (theta.len() / 23).max(1);
+        for i in (0..theta.len()).step_by(stride) {
+            let mut tp = theta.clone();
+            tp[i] += eps;
+            let mut tm = theta.clone();
+            tm[i] -= eps;
+            let fd = (f_t(&tp) - f_t(&tm)) / (2.0 * eps);
+            assert!(
+                (dth[i] - fd).abs() < 3e-2 * (1.0 + fd.abs()),
+                "dtheta[{}]={} fd={}",
+                i,
+                dth[i],
+                fd
+            );
+        }
+    }
+
+    #[test]
+    fn dec_step_bwd_matches_fd() {
+        let dm = RefDims { batch: 1, seq: 3, d_model: 4, n_heads: 2, d_ff: 8 };
+        let seq_enc = 5;
+        let mut rng = Rng::new(4);
+        let y = Tensor::randn(&mut rng, &[1, dm.seq, dm.d_model], 0.7);
+        let xe = Tensor::randn(&mut rng, &[1, seq_enc, dm.d_model], 0.7);
+        let theta = rng.normal_vec(p_dec(&dm), 0.2);
+        let ct = Tensor::randn(&mut rng, &[1, dm.seq, dm.d_model], 1.0);
+        let h = 0.5;
+        let (dy, dxe, dth) = dec_step_bwd(&y, &xe, &theta, h, &dm, seq_enc, &ct);
+
+        let eps = 2e-3;
+        let f_y = |yv: &Tensor| dec_step_fwd(yv, &xe, &theta, h, &dm, seq_enc).dot(&ct);
+        for i in 0..y.len() {
+            let mut yp = y.clone();
+            yp.data_mut()[i] += eps;
+            let mut ym = y.clone();
+            ym.data_mut()[i] -= eps;
+            let fd = (f_y(&yp) - f_y(&ym)) / (2.0 * eps);
+            assert!((dy.data()[i] - fd).abs() < 3e-2 * (1.0 + fd.abs()), "dy[{}]", i);
+        }
+        let f_e = |ev: &Tensor| dec_step_fwd(&y, ev, &theta, h, &dm, seq_enc).dot(&ct);
+        for i in 0..xe.len() {
+            let mut ep = xe.clone();
+            ep.data_mut()[i] += eps;
+            let mut em = xe.clone();
+            em.data_mut()[i] -= eps;
+            let fd = (f_e(&ep) - f_e(&em)) / (2.0 * eps);
+            assert!((dxe.data()[i] - fd).abs() < 3e-2 * (1.0 + fd.abs()), "dxe[{}]", i);
+        }
+        let f_t = |tv: &[f32]| dec_step_fwd(&y, &xe, tv, h, &dm, seq_enc).dot(&ct);
+        let stride = (theta.len() / 19).max(1);
+        for i in (0..theta.len()).step_by(stride) {
+            let mut tp = theta.clone();
+            tp[i] += eps;
+            let mut tm = theta.clone();
+            tm[i] -= eps;
+            let fd = (f_t(&tp) - f_t(&tm)) / (2.0 * eps);
+            assert!((dth[i] - fd).abs() < 3e-2 * (1.0 + fd.abs()), "dth[{}]", i);
+        }
+    }
+}

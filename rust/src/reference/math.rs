@@ -1,0 +1,206 @@
+//! Scalar/row math for the reference transformer: LayerNorm (fwd + bwd)
+//! and tanh-approximate GELU (matching `jax.nn.gelu(approximate=True)`).
+
+pub const LN_EPS: f32 = 1e-5;
+
+/// GELU, tanh approximation: 0.5 x (1 + tanh(√(2/π)(x + 0.044715 x³))).
+pub fn gelu(x: f32) -> f32 {
+    const C: f32 = 0.7978845608; // sqrt(2/pi)
+    const A: f32 = 0.044715;
+    0.5 * x * (1.0 + (C * (x + A * x * x * x)).tanh())
+}
+
+/// d gelu / dx for the tanh approximation.
+pub fn gelu_grad(x: f32) -> f32 {
+    const C: f32 = 0.7978845608;
+    const A: f32 = 0.044715;
+    let u = C * (x + A * x * x * x);
+    let t = u.tanh();
+    0.5 * (1.0 + t) + 0.5 * x * (1.0 - t * t) * C * (1.0 + 3.0 * A * x * x)
+}
+
+/// LayerNorm forward over rows of length `d`.
+///
+/// Writes the normalized output into `out` and returns `(mu, inv_sigma)`
+/// per row for the backward pass.
+pub fn layer_norm_fwd(
+    x: &[f32],
+    g: &[f32],
+    b: &[f32],
+    d: usize,
+    out: &mut [f32],
+) -> Vec<(f32, f32)> {
+    let rows = x.len() / d;
+    let mut stats = Vec::with_capacity(rows);
+    for r in 0..rows {
+        let xr = &x[r * d..(r + 1) * d];
+        let or = &mut out[r * d..(r + 1) * d];
+        let mu = xr.iter().sum::<f32>() / d as f32;
+        let var = xr.iter().map(|v| (v - mu) * (v - mu)).sum::<f32>() / d as f32;
+        let inv = 1.0 / (var + LN_EPS).sqrt();
+        for i in 0..d {
+            or[i] = (xr[i] - mu) * inv * g[i] + b[i];
+        }
+        stats.push((mu, inv));
+    }
+    stats
+}
+
+/// LayerNorm backward.
+///
+/// Given upstream `dz` on the LN output, the original input `x`, and the
+/// per-row `(mu, inv_sigma)` stats, accumulates `dx += …`, `dg += …`,
+/// `db += …` (accumulation lets callers sum over a batch).
+pub fn layer_norm_bwd(
+    dz: &[f32],
+    x: &[f32],
+    g: &[f32],
+    stats: &[(f32, f32)],
+    d: usize,
+    dx: &mut [f32],
+    dg: &mut [f32],
+    db: &mut [f32],
+) {
+    let rows = x.len() / d;
+    for r in 0..rows {
+        let (mu, inv) = stats[r];
+        let xr = &x[r * d..(r + 1) * d];
+        let dzr = &dz[r * d..(r + 1) * d];
+        let dxr = &mut dx[r * d..(r + 1) * d];
+        // y = (x - mu) * inv (normalized); dy = dz * g
+        let mut mean_dy = 0.0f32;
+        let mut mean_dy_y = 0.0f32;
+        for i in 0..d {
+            let y = (xr[i] - mu) * inv;
+            let dy = dzr[i] * g[i];
+            mean_dy += dy;
+            mean_dy_y += dy * y;
+            dg[i] += dzr[i] * y;
+            db[i] += dzr[i];
+        }
+        mean_dy /= d as f32;
+        mean_dy_y /= d as f32;
+        for i in 0..d {
+            let y = (xr[i] - mu) * inv;
+            let dy = dzr[i] * g[i];
+            dxr[i] += inv * (dy - mean_dy - y * mean_dy_y);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::forall;
+
+    #[test]
+    fn gelu_known_values() {
+        assert!((gelu(0.0)).abs() < 1e-7);
+        assert!((gelu(100.0) - 100.0).abs() < 1e-3);
+        assert!(gelu(-100.0).abs() < 1e-3);
+        // symmetric-ish point: gelu(1) ≈ 0.8412
+        assert!((gelu(1.0) - 0.8412).abs() < 1e-3);
+    }
+
+    #[test]
+    fn prop_gelu_grad_matches_fd() {
+        forall("gelu-grad-fd", 100, |rng| {
+            let x = rng.normal() * 3.0;
+            let eps = 1e-3f32;
+            let fd = (gelu(x + eps) - gelu(x - eps)) / (2.0 * eps);
+            assert!((gelu_grad(x) - fd).abs() < 1e-3, "x={} grad={} fd={}", x, gelu_grad(x), fd);
+        });
+    }
+
+    #[test]
+    fn ln_fwd_normalizes() {
+        let d = 16;
+        let mut rng = crate::util::rng::Rng::new(0);
+        let x = rng.normal_vec(3 * d, 5.0);
+        let g = vec![1.0; d];
+        let b = vec![0.0; d];
+        let mut out = vec![0.0; 3 * d];
+        layer_norm_fwd(&x, &g, &b, d, &mut out);
+        for r in 0..3 {
+            let row = &out[r * d..(r + 1) * d];
+            let mu = row.iter().sum::<f32>() / d as f32;
+            let var = row.iter().map(|v| (v - mu) * (v - mu)).sum::<f32>() / d as f32;
+            assert!(mu.abs() < 1e-5);
+            assert!((var - 1.0).abs() < 1e-2);
+        }
+    }
+
+    #[test]
+    fn prop_ln_bwd_matches_fd() {
+        forall("ln-bwd-fd", 25, |rng| {
+            let d = 2 + rng.range(8);
+            let x = rng.normal_vec(d, 1.0);
+            let g: Vec<f32> = (0..d).map(|_| 1.0 + 0.3 * rng.normal()).collect();
+            let b = rng.normal_vec(d, 0.3);
+            let dz = rng.normal_vec(d, 1.0);
+
+            let mut out = vec![0.0; d];
+            let stats = layer_norm_fwd(&x, &g, &b, d, &mut out);
+            let mut dx = vec![0.0; d];
+            let mut dg = vec![0.0; d];
+            let mut db = vec![0.0; d];
+            layer_norm_bwd(&dz, &x, &g, &stats, d, &mut dx, &mut dg, &mut db);
+
+            // scalar objective: sum(dz * ln(x))
+            let f = |xv: &[f32]| -> f32 {
+                let mut o = vec![0.0; d];
+                layer_norm_fwd(xv, &g, &b, d, &mut o);
+                o.iter().zip(&dz).map(|(a, c)| a * c).sum()
+            };
+            let eps = 3e-3f32;
+            for i in 0..d {
+                let mut xp = x.clone();
+                xp[i] += eps;
+                let mut xm = x.clone();
+                xm[i] -= eps;
+                let fd = (f(&xp) - f(&xm)) / (2.0 * eps);
+                assert!(
+                    (dx[i] - fd).abs() < 5e-2 * (1.0 + fd.abs()),
+                    "dx[{}]={} fd={}",
+                    i,
+                    dx[i],
+                    fd
+                );
+            }
+        });
+    }
+
+    #[test]
+    fn ln_bwd_param_grads_match_fd() {
+        let d = 6;
+        let mut rng = crate::util::rng::Rng::new(7);
+        let x = rng.normal_vec(d, 1.0);
+        let g: Vec<f32> = (0..d).map(|_| 1.0 + 0.2 * rng.normal()).collect();
+        let b = rng.normal_vec(d, 0.2);
+        let dz = rng.normal_vec(d, 1.0);
+        let mut out = vec![0.0; d];
+        let stats = layer_norm_fwd(&x, &g, &b, d, &mut out);
+        let (mut dx, mut dg, mut db) = (vec![0.0; d], vec![0.0; d], vec![0.0; d]);
+        layer_norm_bwd(&dz, &x, &g, &stats, d, &mut dx, &mut dg, &mut db);
+        let f = |gv: &[f32], bv: &[f32]| -> f32 {
+            let mut o = vec![0.0; d];
+            layer_norm_fwd(&x, gv, bv, d, &mut o);
+            o.iter().zip(&dz).map(|(a, c)| a * c).sum()
+        };
+        let eps = 1e-3f32;
+        for i in 0..d {
+            let mut gp = g.clone();
+            gp[i] += eps;
+            let mut gm = g.clone();
+            gm[i] -= eps;
+            let fd = (f(&gp, &b) - f(&gm, &b)) / (2.0 * eps);
+            assert!((dg[i] - fd).abs() < 1e-2, "dg[{}]={} fd={}", i, dg[i], fd);
+            let mut bp = b.clone();
+            bp[i] += eps;
+            let mut bm = b.clone();
+            bm[i] -= eps;
+            let fdb = (f(&g, &bp) - f(&g, &bm)) / (2.0 * eps);
+            assert!((db[i] - fdb).abs() < 1e-2);
+        }
+    }
+}

@@ -1,0 +1,22 @@
+//! Pure-Rust reference transformer (forward **and** manual backward).
+//!
+//! Mirrors `python/compile/kernels/ref.py` exactly — same pre-LN neural-ODE
+//! step (paper eq. 1-3), same flat parameter layout — so that:
+//!
+//! 1. every MGRIT/coordinator algorithm in this crate is testable without
+//!    Python or artifacts (`cargo test` is self-contained);
+//! 2. the PJRT runtime integration test can pin the AOT artifacts against
+//!    an independent implementation;
+//! 3. analysis tooling (Lipschitz estimation, Appendix B) can evaluate Φ
+//!    cheaply at arbitrary widths.
+//!
+//! The backward pass is hand-derived (no autodiff in Rust) and validated
+//! against central finite differences in `tests`.
+
+mod block;
+mod math;
+mod params;
+
+pub use block::{dec_step_bwd, dec_step_fwd, enc_step_bwd, enc_step_fwd, RefDims};
+pub use math::{gelu, gelu_grad, layer_norm_bwd, layer_norm_fwd};
+pub use params::{DecGrads, DecParams, EncGrads, EncParams};

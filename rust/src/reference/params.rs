@@ -1,0 +1,203 @@
+//! Views into the flat per-layer parameter vector.
+//!
+//! Layout MUST match `ref.enc_layout` / `ref.dec_layout` on the Python side
+//! (exported via artifacts/manifest.json and asserted at runtime load):
+//!
+//! encoder layer: ln1_g[D] ln1_b[D] wq[D,D] wk[D,D] wv[D,D] wo[D,D]
+//!                ln2_g[D] ln2_b[D] w1[D,F] b1[F] w2[F,D] b2[D]
+//! decoder layer: encoder layout ++ ln3_g[D] ln3_b[D] cq ck cv co [D,D]
+
+/// Borrowed slices over one encoder-family layer's flat parameters.
+#[derive(Debug, Clone, Copy)]
+pub struct EncParams<'a> {
+    pub ln1_g: &'a [f32],
+    pub ln1_b: &'a [f32],
+    pub wq: &'a [f32],
+    pub wk: &'a [f32],
+    pub wv: &'a [f32],
+    pub wo: &'a [f32],
+    pub ln2_g: &'a [f32],
+    pub ln2_b: &'a [f32],
+    pub w1: &'a [f32],
+    pub b1: &'a [f32],
+    pub w2: &'a [f32],
+    pub b2: &'a [f32],
+}
+
+/// Encoder params + the cross-attention block of a decoder layer.
+#[derive(Debug, Clone, Copy)]
+pub struct DecParams<'a> {
+    pub enc: EncParams<'a>,
+    pub ln3_g: &'a [f32],
+    pub ln3_b: &'a [f32],
+    pub cq: &'a [f32],
+    pub ck: &'a [f32],
+    pub cv: &'a [f32],
+    pub co: &'a [f32],
+}
+
+/// Field sizes, in layout order, for an encoder layer.
+pub fn enc_field_sizes(d: usize, f: usize) -> [usize; 12] {
+    [d, d, d * d, d * d, d * d, d * d, d, d, d * f, f, f * d, d]
+}
+
+/// Field sizes for the decoder-only tail (ln3 + cross-attention).
+pub fn dec_extra_sizes(d: usize) -> [usize; 6] {
+    [d, d, d * d, d * d, d * d, d * d]
+}
+
+fn split<'a>(theta: &'a [f32], sizes: &[usize]) -> Vec<&'a [f32]> {
+    let mut out = Vec::with_capacity(sizes.len());
+    let mut off = 0;
+    for &s in sizes {
+        out.push(&theta[off..off + s]);
+        off += s;
+    }
+    assert_eq!(off, theta.len(), "parameter vector length mismatch");
+    out
+}
+
+fn split_mut<'a>(theta: &'a mut [f32], sizes: &[usize]) -> Vec<&'a mut [f32]> {
+    let mut out = Vec::with_capacity(sizes.len());
+    let mut rest = theta;
+    for &s in sizes {
+        let (head, tail) = rest.split_at_mut(s);
+        out.push(head);
+        rest = tail;
+    }
+    assert!(rest.is_empty(), "parameter vector length mismatch");
+    out
+}
+
+impl<'a> EncParams<'a> {
+    pub fn view(theta: &'a [f32], d: usize, f: usize) -> EncParams<'a> {
+        let v = split(theta, &enc_field_sizes(d, f));
+        EncParams {
+            ln1_g: v[0],
+            ln1_b: v[1],
+            wq: v[2],
+            wk: v[3],
+            wv: v[4],
+            wo: v[5],
+            ln2_g: v[6],
+            ln2_b: v[7],
+            w1: v[8],
+            b1: v[9],
+            w2: v[10],
+            b2: v[11],
+        }
+    }
+}
+
+/// Mutable views for gradient accumulation (same layout).
+pub struct EncGrads<'a> {
+    pub ln1_g: &'a mut [f32],
+    pub ln1_b: &'a mut [f32],
+    pub wq: &'a mut [f32],
+    pub wk: &'a mut [f32],
+    pub wv: &'a mut [f32],
+    pub wo: &'a mut [f32],
+    pub ln2_g: &'a mut [f32],
+    pub ln2_b: &'a mut [f32],
+    pub w1: &'a mut [f32],
+    pub b1: &'a mut [f32],
+    pub w2: &'a mut [f32],
+    pub b2: &'a mut [f32],
+}
+
+impl<'a> EncGrads<'a> {
+    pub fn view(theta: &'a mut [f32], d: usize, f: usize) -> EncGrads<'a> {
+        let mut v = split_mut(theta, &enc_field_sizes(d, f));
+        // drain in order to move the mutable borrows out of the Vec
+        let mut it = v.drain(..);
+        EncGrads {
+            ln1_g: it.next().unwrap(),
+            ln1_b: it.next().unwrap(),
+            wq: it.next().unwrap(),
+            wk: it.next().unwrap(),
+            wv: it.next().unwrap(),
+            wo: it.next().unwrap(),
+            ln2_g: it.next().unwrap(),
+            ln2_b: it.next().unwrap(),
+            w1: it.next().unwrap(),
+            b1: it.next().unwrap(),
+            w2: it.next().unwrap(),
+            b2: it.next().unwrap(),
+        }
+    }
+}
+
+impl<'a> DecParams<'a> {
+    pub fn view(theta: &'a [f32], d: usize, f: usize) -> DecParams<'a> {
+        let enc_len: usize = enc_field_sizes(d, f).iter().sum();
+        let enc = EncParams::view(&theta[..enc_len], d, f);
+        let v = split(&theta[enc_len..], &dec_extra_sizes(d));
+        DecParams { enc, ln3_g: v[0], ln3_b: v[1], cq: v[2], ck: v[3], cv: v[4], co: v[5] }
+    }
+}
+
+/// Mutable decoder gradient views.
+pub struct DecGrads<'a> {
+    pub enc: EncGrads<'a>,
+    pub ln3_g: &'a mut [f32],
+    pub ln3_b: &'a mut [f32],
+    pub cq: &'a mut [f32],
+    pub ck: &'a mut [f32],
+    pub cv: &'a mut [f32],
+    pub co: &'a mut [f32],
+}
+
+impl<'a> DecGrads<'a> {
+    pub fn view(theta: &'a mut [f32], d: usize, f: usize) -> DecGrads<'a> {
+        let enc_len: usize = enc_field_sizes(d, f).iter().sum();
+        let (enc_part, rest) = theta.split_at_mut(enc_len);
+        let enc = EncGrads::view(enc_part, d, f);
+        let mut v = split_mut(rest, &dec_extra_sizes(d));
+        let mut it = v.drain(..);
+        DecGrads {
+            enc,
+            ln3_g: it.next().unwrap(),
+            ln3_b: it.next().unwrap(),
+            cq: it.next().unwrap(),
+            ck: it.next().unwrap(),
+            cv: it.next().unwrap(),
+            co: it.next().unwrap(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn enc_view_covers_whole_vector() {
+        let (d, f) = (8, 16);
+        let len: usize = enc_field_sizes(d, f).iter().sum();
+        assert_eq!(len, 4 * d * d + 2 * d * f + 5 * d + f); // config::p_enc formula
+        let theta: Vec<f32> = (0..len).map(|i| i as f32).collect();
+        let p = EncParams::view(&theta, d, f);
+        assert_eq!(p.ln1_g[0], 0.0);
+        assert_eq!(p.b2.len(), d);
+        assert_eq!(p.b2[d - 1], (len - 1) as f32);
+    }
+
+    #[test]
+    fn dec_view_extends_enc() {
+        let (d, f) = (4, 8);
+        let enc_len: usize = enc_field_sizes(d, f).iter().sum();
+        let dec_len = enc_len + 2 * d + 4 * d * d;
+        let theta: Vec<f32> = (0..dec_len).map(|i| i as f32).collect();
+        let p = DecParams::view(&theta, d, f);
+        assert_eq!(p.ln3_g[0] as usize, enc_len);
+        assert_eq!(p.co.len(), d * d);
+        assert_eq!(p.co[d * d - 1] as usize, dec_len - 1);
+    }
+
+    #[test]
+    #[should_panic]
+    fn wrong_length_rejected() {
+        let theta = vec![0.0; 10];
+        EncParams::view(&theta, 8, 16);
+    }
+}

@@ -1,0 +1,197 @@
+//! `XlaEngine`: PJRT CPU client + compiled-executable cache + marshalling.
+//!
+//! Follows the /opt/xla-example/load_hlo pattern: HLO **text** →
+//! `HloModuleProto::from_text_file` → `XlaComputation` → `client.compile`.
+//! Every entry point is compiled once (lazily) and cached; the MGRIT hot
+//! loop then only pays Literal marshalling + execution.
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::rc::Rc;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use super::manifest::{ArtifactManifest, DType, EntrySpec};
+use crate::tensor::Tensor;
+
+/// An operand crossing the PJRT boundary.
+#[derive(Debug, Clone)]
+pub enum Value {
+    F32(Tensor),
+    I32(Vec<i32>, Vec<usize>),
+}
+
+impl Value {
+    pub fn tensor(t: Tensor) -> Value {
+        Value::F32(t)
+    }
+
+    pub fn scalar(v: f32) -> Value {
+        Value::F32(Tensor::scalar(v))
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        match self {
+            Value::F32(t) => t.shape(),
+            Value::I32(_, s) => s,
+        }
+    }
+
+    pub fn dtype(&self) -> DType {
+        match self {
+            Value::F32(_) => DType::F32,
+            Value::I32(..) => DType::I32,
+        }
+    }
+
+    pub fn as_tensor(&self) -> Result<&Tensor> {
+        match self {
+            Value::F32(t) => Ok(t),
+            Value::I32(..) => bail!("expected f32 value, got i32"),
+        }
+    }
+
+    fn to_literal(&self) -> Result<xla::Literal> {
+        let dims: Vec<i64> = self.shape().iter().map(|&d| d as i64).collect();
+        let lit = match self {
+            Value::F32(t) => xla::Literal::vec1(t.data()).reshape(&dims)?,
+            Value::I32(v, _) => xla::Literal::vec1(v).reshape(&dims)?,
+        };
+        Ok(lit)
+    }
+}
+
+/// One compiled entry point.
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+    spec: EntrySpec,
+    name: String,
+}
+
+impl Executable {
+    /// Execute with shape/dtype validation; returns the decomposed tuple.
+    pub fn call(&self, args: &[Value]) -> Result<Vec<Tensor>> {
+        if args.len() != self.spec.inputs.len() {
+            bail!("{}: expected {} args, got {}", self.name, self.spec.inputs.len(), args.len());
+        }
+        for (i, (a, s)) in args.iter().zip(&self.spec.inputs).enumerate() {
+            if a.shape() != s.shape.as_slice() || a.dtype() != s.dtype {
+                bail!(
+                    "{}: arg {} shape/dtype mismatch: got {:?}/{:?}, manifest says {:?}/{:?}",
+                    self.name, i, a.shape(), a.dtype(), s.shape, s.dtype
+                );
+            }
+        }
+        let lits: Vec<xla::Literal> =
+            args.iter().map(|a| a.to_literal()).collect::<Result<_>>()?;
+        let result = self.exe.execute::<xla::Literal>(&lits)?[0][0]
+            .to_literal_sync()
+            .with_context(|| format!("executing {}", self.name))?;
+        // AOT lowering always uses return_tuple=True
+        let parts = result.to_tuple()?;
+        if parts.len() != self.spec.outputs.len() {
+            bail!("{}: expected {} outputs, got {}", self.name, self.spec.outputs.len(), parts.len());
+        }
+        let mut out = Vec::with_capacity(parts.len());
+        for (p, s) in parts.into_iter().zip(&self.spec.outputs) {
+            // i32 outputs (correct-counts) are converted to f32 tensors
+            let data: Vec<f32> = match s.dtype {
+                DType::F32 => p.to_vec::<f32>()?,
+                DType::I32 => p.to_vec::<i32>()?.into_iter().map(|v| v as f32).collect(),
+            };
+            out.push(Tensor::from_vec(data, &s.shape));
+        }
+        Ok(out)
+    }
+
+    pub fn spec(&self) -> &EntrySpec {
+        &self.spec
+    }
+}
+
+/// PJRT client + lazy executable cache.
+pub struct XlaEngine {
+    client: xla::PjRtClient,
+    manifest: ArtifactManifest,
+    cache: RefCell<HashMap<String, Rc<Executable>>>,
+    /// Counters for the §Perf pass.
+    pub calls: RefCell<HashMap<String, u64>>,
+}
+
+impl XlaEngine {
+    /// Create a CPU PJRT client over the artifact directory.
+    pub fn load(dir: &str) -> Result<XlaEngine> {
+        let manifest = ArtifactManifest::load(dir)?;
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {:?}", e))?;
+        Ok(XlaEngine {
+            client,
+            manifest,
+            cache: RefCell::new(HashMap::new()),
+            calls: RefCell::new(HashMap::new()),
+        })
+    }
+
+    pub fn manifest(&self) -> &ArtifactManifest {
+        &self.manifest
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Fetch (compiling on first use) an entry point.
+    pub fn executable(&self, name: &str) -> Result<Rc<Executable>> {
+        if let Some(e) = self.cache.borrow().get(name) {
+            return Ok(e.clone());
+        }
+        let spec = self.manifest.entry(name)?.clone();
+        let path = spec
+            .file
+            .to_str()
+            .ok_or_else(|| anyhow!("non-utf8 artifact path"))?
+            .to_string();
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .with_context(|| format!("parsing HLO text {}", path))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling entry point {}", name))?;
+        let e = Rc::new(Executable { exe, spec, name: name.to_string() });
+        self.cache.borrow_mut().insert(name.to_string(), e.clone());
+        Ok(e)
+    }
+
+    /// Convenience: execute an entry point by name.
+    pub fn call(&self, name: &str, args: &[Value]) -> Result<Vec<Tensor>> {
+        *self.calls.borrow_mut().entry(name.to_string()).or_insert(0) += 1;
+        self.executable(name)?.call(args)
+    }
+
+    /// Pre-compile every entry point (startup cost paid once, not mid-run).
+    pub fn warmup(&self) -> Result<()> {
+        let names: Vec<String> = self.manifest.entries.keys().cloned().collect();
+        for n in names {
+            self.executable(&n)?;
+        }
+        Ok(())
+    }
+}
+
+// Integration tests against real artifacts live in rust/tests/runtime_integration.rs
+// (they skip gracefully when artifacts/ has not been built).
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn value_shapes_and_dtypes() {
+        let v = Value::scalar(2.5);
+        assert_eq!(v.shape(), &[] as &[usize]);
+        assert_eq!(v.dtype(), DType::F32);
+        let t = Value::I32(vec![1, 2, 3, 4], vec![2, 2]);
+        assert_eq!(t.shape(), &[2, 2]);
+        assert_eq!(t.dtype(), DType::I32);
+        assert!(t.as_tensor().is_err());
+    }
+}

@@ -1,0 +1,226 @@
+//! Typed view of `artifacts/manifest.json` (written by python/compile/aot.py).
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::config::ModelConfig;
+use crate::util::json::Json;
+
+/// Element type of an entry-point operand.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I32,
+}
+
+impl DType {
+    fn parse(s: &str) -> Result<DType> {
+        match s {
+            "f32" => Ok(DType::F32),
+            "i32" => Ok(DType::I32),
+            other => bail!("unknown dtype '{}' in manifest", other),
+        }
+    }
+}
+
+/// Shape + dtype of one operand.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TensorSpec {
+    pub shape: Vec<usize>,
+    pub dtype: DType,
+}
+
+impl TensorSpec {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    fn from_json(j: &Json) -> Result<TensorSpec> {
+        let shape = j
+            .get("shape")
+            .and_then(|s| s.arr())
+            .ok_or_else(|| anyhow!("operand missing shape"))?
+            .iter()
+            .map(|d| d.int().map(|v| v as usize).ok_or_else(|| anyhow!("bad dim")))
+            .collect::<Result<Vec<_>>>()?;
+        let dtype = DType::parse(
+            j.get("dtype").and_then(|d| d.str()).ok_or_else(|| anyhow!("operand missing dtype"))?,
+        )?;
+        Ok(TensorSpec { shape, dtype })
+    }
+}
+
+/// One AOT entry point: its HLO file and operand signatures.
+#[derive(Debug, Clone)]
+pub struct EntrySpec {
+    pub file: PathBuf,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+}
+
+/// The whole manifest.
+#[derive(Debug, Clone)]
+pub struct ArtifactManifest {
+    pub dir: PathBuf,
+    pub use_pallas: bool,
+    /// Geometry echoed by the compiler (vocab, d_model, … p_enc, p_dec).
+    pub config: BTreeMap<String, i64>,
+    pub entries: BTreeMap<String, EntrySpec>,
+    /// FLOPs of one Φ application (feeds the performance simulator).
+    pub flops_enc_step: f64,
+    pub flops_dec_step: f64,
+    /// Pallas kernel VMEM footprints (bytes), for the §Perf notes.
+    pub vmem_attention: u64,
+    pub vmem_mlp: u64,
+}
+
+impl ArtifactManifest {
+    /// Load and validate `dir/manifest.json`.
+    pub fn load<P: AsRef<Path>>(dir: P) -> Result<ArtifactManifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {} (run `make artifacts`)", path.display()))?;
+        let j = Json::parse(&text).map_err(|e| anyhow!("parsing manifest: {}", e))?;
+
+        let format = j.get("format").and_then(|f| f.str()).unwrap_or("");
+        if format != "hlo-text/v1" {
+            bail!("unsupported manifest format '{}'", format);
+        }
+
+        let mut config = BTreeMap::new();
+        for (k, v) in j.get("config").and_then(|c| c.obj()).ok_or_else(|| anyhow!("no config"))? {
+            if let Some(i) = v.int() {
+                config.insert(k.clone(), i);
+            }
+        }
+
+        let mut entries = BTreeMap::new();
+        for (name, e) in
+            j.get("entries").and_then(|c| c.obj()).ok_or_else(|| anyhow!("no entries"))?
+        {
+            let file =
+                dir.join(e.get("file").and_then(|f| f.str()).ok_or_else(|| anyhow!("no file"))?);
+            let parse_specs = |key: &str| -> Result<Vec<TensorSpec>> {
+                e.get(key)
+                    .and_then(|x| x.arr())
+                    .ok_or_else(|| anyhow!("entry {} missing {}", name, key))?
+                    .iter()
+                    .map(TensorSpec::from_json)
+                    .collect()
+            };
+            entries.insert(
+                name.clone(),
+                EntrySpec { file, inputs: parse_specs("inputs")?, outputs: parse_specs("outputs")? },
+            );
+        }
+
+        Ok(ArtifactManifest {
+            dir,
+            use_pallas: j.get("use_pallas").and_then(|v| v.bool()).unwrap_or(true),
+            flops_enc_step: j.at(&["flops", "enc_step"]).and_then(|v| v.num()).unwrap_or(0.0),
+            flops_dec_step: j.at(&["flops", "dec_step"]).and_then(|v| v.num()).unwrap_or(0.0),
+            vmem_attention: j
+                .at(&["vmem", "attention_bytes"])
+                .and_then(|v| v.num())
+                .unwrap_or(0.0) as u64,
+            vmem_mlp: j.at(&["vmem", "mlp_bytes"]).and_then(|v| v.num()).unwrap_or(0.0) as u64,
+            config,
+            entries,
+        })
+    }
+
+    pub fn entry(&self, name: &str) -> Result<&EntrySpec> {
+        self.entries
+            .get(name)
+            .ok_or_else(|| anyhow!("entry point '{}' not in manifest ({} present)", name, self.entries.len()))
+    }
+
+    pub fn cfg(&self, key: &str) -> Result<usize> {
+        self.config
+            .get(key)
+            .map(|v| *v as usize)
+            .ok_or_else(|| anyhow!("config key '{}' not in manifest", key))
+    }
+
+    /// Assert the rust-side model geometry matches the compiled artifacts.
+    pub fn validate_model(&self, m: &ModelConfig) -> Result<()> {
+        let checks = [
+            ("vocab", m.vocab),
+            ("d_model", m.d_model),
+            ("n_heads", m.n_heads),
+            ("d_ff", m.d_ff),
+            ("seq", m.seq),
+            ("batch", m.batch),
+            ("n_classes", m.n_classes),
+            ("p_enc", m.p_enc()),
+            ("p_dec", m.p_dec()),
+        ];
+        for (key, want) in checks {
+            let got = self.cfg(key)?;
+            if got != want {
+                bail!(
+                    "artifact/config mismatch on {}: artifacts have {}, run config needs {} \
+                     (re-run `make artifacts` with matching dims)",
+                    key,
+                    got,
+                    want
+                );
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn write_fixture(dir: &Path) {
+        std::fs::create_dir_all(dir).unwrap();
+        let manifest = r#"{
+          "format": "hlo-text/v1",
+          "use_pallas": true,
+          "config": {"vocab": 8, "d_model": 4, "n_heads": 2, "d_ff": 8, "seq": 4,
+                     "batch": 1, "n_classes": 2, "p_enc": 156, "p_dec": 228},
+          "param_layout": {},
+          "flops": {"enc_step": 1000, "dec_step": 1500},
+          "vmem": {"attention_bytes": 4096, "mlp_bytes": 8192},
+          "entries": {
+            "enc_step": {
+              "file": "enc_step.hlo.txt",
+              "inputs": [{"shape": [1,4,4], "dtype": "f32"},
+                          {"shape": [156], "dtype": "f32"},
+                          {"shape": [], "dtype": "f32"}],
+              "outputs": [{"shape": [1,4,4], "dtype": "f32"}]
+            }
+          }
+        }"#;
+        std::fs::write(dir.join("manifest.json"), manifest).unwrap();
+    }
+
+    #[test]
+    fn loads_fixture() {
+        let dir = std::env::temp_dir().join("layertime_manifest_test");
+        write_fixture(&dir);
+        let m = ArtifactManifest::load(&dir).unwrap();
+        assert!(m.use_pallas);
+        assert_eq!(m.cfg("d_model").unwrap(), 4);
+        let e = m.entry("enc_step").unwrap();
+        assert_eq!(e.inputs.len(), 3);
+        assert_eq!(e.inputs[0].shape, vec![1, 4, 4]);
+        assert_eq!(e.inputs[2].shape, Vec::<usize>::new()); // h scalar
+        assert_eq!(e.inputs[0].dtype, DType::F32);
+        assert_eq!(m.flops_enc_step, 1000.0);
+        assert!(m.entry("nope").is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn missing_dir_is_helpful() {
+        let err = ArtifactManifest::load("/nonexistent/path").unwrap_err();
+        assert!(format!("{:#}", err).contains("make artifacts"));
+    }
+}

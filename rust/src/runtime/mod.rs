@@ -1,0 +1,16 @@
+//! PJRT runtime: load the AOT HLO-text artifacts and execute them from the
+//! L3 hot path. Python is never touched here — the artifacts are
+//! self-contained XLA programs.
+//!
+//! * [`manifest`] — typed view of `artifacts/manifest.json` (shapes, param
+//!   layout, FLOP estimates), validated against the crate's own
+//!   [`crate::config::ModelConfig`] at engine construction.
+//! * [`engine`] — [`XlaEngine`]: one `PjRtClient` plus a cache of compiled
+//!   executables keyed by entry-point name, with `Tensor`⇄`Literal`
+//!   marshalling (f32 and i32).
+
+pub mod engine;
+pub mod manifest;
+
+pub use engine::{Value, XlaEngine};
+pub use manifest::{ArtifactManifest, DType, EntrySpec, TensorSpec};

@@ -1,0 +1,9 @@
+//! Host tensor substrate: a dense f32 tensor with the algebra the MGRIT
+//! engine needs (axpy/scale/norm), plus the small matmuls and reductions
+//! the pure-Rust reference transformer is built from.
+
+mod ops;
+mod tensor;
+
+pub use ops::{matmul, matmul_at, matmul_bt, softmax_rows};
+pub use tensor::Tensor;

@@ -1,0 +1,177 @@
+//! Matrix / reduction kernels for the pure-Rust reference transformer.
+//!
+//! These are deliberately simple row-major loops (with a k-blocked inner
+//! loop for cache friendliness); the *production* hot path runs in XLA via
+//! the AOT artifacts — these ops exist so algorithms are testable without
+//! artifacts and to power the Lipschitz/analysis tooling.
+
+use super::Tensor;
+
+/// c[m,n] = a[m,k] @ b[k,n]
+pub fn matmul(a: &Tensor, b: &Tensor) -> Tensor {
+    let (m, k) = (a.shape()[0], a.shape()[1]);
+    let (k2, n) = (b.shape()[0], b.shape()[1]);
+    assert_eq!(k, k2, "matmul inner dim mismatch");
+    let mut c = vec![0.0f32; m * n];
+    let ad = a.data();
+    let bd = b.data();
+    for i in 0..m {
+        let arow = &ad[i * k..(i + 1) * k];
+        let crow = &mut c[i * n..(i + 1) * n];
+        for (kk, &av) in arow.iter().enumerate() {
+            if av == 0.0 {
+                continue;
+            }
+            let brow = &bd[kk * n..(kk + 1) * n];
+            for (cv, &bv) in crow.iter_mut().zip(brow.iter()) {
+                *cv += av * bv;
+            }
+        }
+    }
+    Tensor::from_vec(c, &[m, n])
+}
+
+/// c[m,n] = aᵀ[m,k] @ b[k,n]  where a is stored [k,m] (gradient helper).
+pub fn matmul_at(a: &Tensor, b: &Tensor) -> Tensor {
+    let (k, m) = (a.shape()[0], a.shape()[1]);
+    let (k2, n) = (b.shape()[0], b.shape()[1]);
+    assert_eq!(k, k2, "matmul_at inner dim mismatch");
+    let mut c = vec![0.0f32; m * n];
+    let ad = a.data();
+    let bd = b.data();
+    for kk in 0..k {
+        let arow = &ad[kk * m..(kk + 1) * m];
+        let brow = &bd[kk * n..(kk + 1) * n];
+        for (i, &av) in arow.iter().enumerate() {
+            if av == 0.0 {
+                continue;
+            }
+            let crow = &mut c[i * n..(i + 1) * n];
+            for (cv, &bv) in crow.iter_mut().zip(brow.iter()) {
+                *cv += av * bv;
+            }
+        }
+    }
+    Tensor::from_vec(c, &[m, n])
+}
+
+/// c[m,n] = a[m,k] @ bᵀ[k,n]  where b is stored [n,k] (gradient helper).
+pub fn matmul_bt(a: &Tensor, b: &Tensor) -> Tensor {
+    let (m, k) = (a.shape()[0], a.shape()[1]);
+    let (n, k2) = (b.shape()[0], b.shape()[1]);
+    assert_eq!(k, k2, "matmul_bt inner dim mismatch");
+    let mut c = vec![0.0f32; m * n];
+    let ad = a.data();
+    let bd = b.data();
+    for i in 0..m {
+        let arow = &ad[i * k..(i + 1) * k];
+        for j in 0..n {
+            let brow = &bd[j * k..(j + 1) * k];
+            let mut acc = 0.0f32;
+            for kk in 0..k {
+                acc += arow[kk] * brow[kk];
+            }
+            c[i * n + j] = acc;
+        }
+    }
+    Tensor::from_vec(c, &[m, n])
+}
+
+/// Row-wise softmax over the last axis of a [m,n] tensor (in place).
+pub fn softmax_rows(x: &mut Tensor) {
+    let n = *x.shape().last().expect("softmax needs rank >= 1");
+    let rows = x.len() / n;
+    let d = x.data_mut();
+    for r in 0..rows {
+        let row = &mut d[r * n..(r + 1) * n];
+        let max = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let mut sum = 0.0;
+        for v in row.iter_mut() {
+            *v = (*v - max).exp();
+            sum += *v;
+        }
+        let inv = 1.0 / sum;
+        for v in row.iter_mut() {
+            *v *= inv;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::forall;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn matmul_small_known() {
+        let a = Tensor::from_vec(vec![1.0, 2.0, 3.0, 4.0], &[2, 2]);
+        let b = Tensor::from_vec(vec![1.0, 1.0, 1.0, 1.0], &[2, 2]);
+        let c = matmul(&a, &b);
+        assert_eq!(c.data(), &[3.0, 3.0, 7.0, 7.0]);
+    }
+
+    #[test]
+    fn prop_transpose_variants_agree() {
+        forall("matmul-transpose", 30, |rng| {
+            let (m, k, n) = (1 + rng.range(6), 1 + rng.range(6), 1 + rng.range(6));
+            let a = Tensor::randn(rng, &[m, k], 1.0);
+            let b = Tensor::randn(rng, &[k, n], 1.0);
+            let c = matmul(&a, &b);
+
+            // a stored transposed
+            let mut at = vec![0.0; m * k];
+            for i in 0..m {
+                for j in 0..k {
+                    at[j * m + i] = a.data()[i * k + j];
+                }
+            }
+            let c2 = matmul_at(&Tensor::from_vec(at, &[k, m]), &b);
+            assert!(c.allclose(&c2, 1e-4, 1e-4));
+
+            // b stored transposed
+            let mut bt = vec![0.0; k * n];
+            for i in 0..k {
+                for j in 0..n {
+                    bt[j * k + i] = b.data()[i * n + j];
+                }
+            }
+            let c3 = matmul_bt(&a, &Tensor::from_vec(bt, &[n, k]));
+            assert!(c.allclose(&c3, 1e-4, 1e-4));
+        });
+    }
+
+    #[test]
+    fn prop_matmul_associates_with_identity() {
+        forall("matmul-identity", 20, |rng| {
+            let n = 1 + rng.range(8);
+            let mut eye = Tensor::zeros(&[n, n]);
+            for i in 0..n {
+                eye.data_mut()[i * n + i] = 1.0;
+            }
+            let a = Tensor::randn(rng, &[n, n], 1.0);
+            assert!(matmul(&a, &eye).allclose(&a, 1e-6, 1e-6));
+            assert!(matmul(&eye, &a).allclose(&a, 1e-6, 1e-6));
+        });
+    }
+
+    #[test]
+    fn softmax_rows_normalizes() {
+        let mut rng = Rng::new(1);
+        let mut x = Tensor::randn(&mut rng, &[5, 7], 3.0);
+        softmax_rows(&mut x);
+        for r in 0..5 {
+            let s: f32 = x.data()[r * 7..(r + 1) * 7].iter().sum();
+            assert!((s - 1.0).abs() < 1e-5);
+            assert!(x.data()[r * 7..(r + 1) * 7].iter().all(|&v| v >= 0.0));
+        }
+    }
+
+    #[test]
+    fn softmax_handles_large_logits() {
+        let mut x = Tensor::from_vec(vec![1000.0, 1001.0], &[1, 2]);
+        softmax_rows(&mut x);
+        assert!((x.data()[0] + x.data()[1] - 1.0).abs() < 1e-6);
+        assert!(x.data()[1] > x.data()[0]);
+    }
+}

@@ -1,0 +1,244 @@
+//! Dense row-major f32 tensor.
+
+use std::fmt;
+
+/// Dense f32 tensor with explicit shape; the state/adjoint type flowing
+/// through the MGRIT engine and the PJRT runtime boundary.
+#[derive(Clone, PartialEq)]
+pub struct Tensor {
+    data: Vec<f32>,
+    shape: Vec<usize>,
+}
+
+impl fmt::Debug for Tensor {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "Tensor{:?}(", self.shape)?;
+        let n = self.data.len().min(6);
+        for (i, v) in self.data[..n].iter().enumerate() {
+            if i > 0 {
+                write!(f, ", ")?;
+            }
+            write!(f, "{:.4}", v)?;
+        }
+        if self.data.len() > n {
+            write!(f, ", …")?;
+        }
+        write!(f, ")")
+    }
+}
+
+impl Tensor {
+    /// Zero-filled tensor.
+    pub fn zeros(shape: &[usize]) -> Tensor {
+        Tensor { data: vec![0.0; shape.iter().product()], shape: shape.to_vec() }
+    }
+
+    /// Construct from data, validating the element count.
+    pub fn from_vec(data: Vec<f32>, shape: &[usize]) -> Tensor {
+        assert_eq!(data.len(), shape.iter().product::<usize>(), "shape/data mismatch");
+        Tensor { data, shape: shape.to_vec() }
+    }
+
+    /// Scalar (rank-0) tensor.
+    pub fn scalar(v: f32) -> Tensor {
+        Tensor { data: vec![v], shape: vec![] }
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+
+    pub fn data_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    pub fn into_vec(self) -> Vec<f32> {
+        self.data
+    }
+
+    /// First element (for scalar outputs).
+    pub fn item(&self) -> f32 {
+        self.data[0]
+    }
+
+    /// Reinterpret with a new shape of equal element count.
+    pub fn reshape(mut self, shape: &[usize]) -> Tensor {
+        assert_eq!(self.len(), shape.iter().product::<usize>(), "reshape count mismatch");
+        self.shape = shape.to_vec();
+        self
+    }
+
+    /// self += alpha * other  (the MGRIT correction/residual primitive).
+    pub fn axpy(&mut self, alpha: f32, other: &Tensor) {
+        debug_assert_eq!(self.shape, other.shape, "axpy shape mismatch");
+        for (a, b) in self.data.iter_mut().zip(other.data.iter()) {
+            *a += alpha * b;
+        }
+    }
+
+    /// self *= alpha.
+    pub fn scale(&mut self, alpha: f32) {
+        for a in self.data.iter_mut() {
+            *a *= alpha;
+        }
+    }
+
+    /// Element-wise difference.
+    pub fn sub(&self, other: &Tensor) -> Tensor {
+        debug_assert_eq!(self.shape, other.shape, "sub shape mismatch");
+        let data = self.data.iter().zip(&other.data).map(|(a, b)| a - b).collect();
+        Tensor { data, shape: self.shape.clone() }
+    }
+
+    /// Element-wise sum.
+    pub fn add(&self, other: &Tensor) -> Tensor {
+        debug_assert_eq!(self.shape, other.shape, "add shape mismatch");
+        let data = self.data.iter().zip(&other.data).map(|(a, b)| a + b).collect();
+        Tensor { data, shape: self.shape.clone() }
+    }
+
+    /// Euclidean norm.
+    pub fn norm(&self) -> f32 {
+        self.data.iter().map(|x| x * x).sum::<f32>().sqrt()
+    }
+
+    /// ‖self − other‖.
+    pub fn dist(&self, other: &Tensor) -> f32 {
+        debug_assert_eq!(self.shape, other.shape);
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b) * (a - b))
+            .sum::<f32>()
+            .sqrt()
+    }
+
+    /// Dot product (flattened).
+    pub fn dot(&self, other: &Tensor) -> f32 {
+        debug_assert_eq!(self.len(), other.len());
+        self.data.iter().zip(&other.data).map(|(a, b)| a * b).sum()
+    }
+
+    /// Max |a-b| over elements.
+    pub fn max_abs_diff(&self, other: &Tensor) -> f32 {
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f32::max)
+    }
+
+    /// Mixed relative/absolute closeness (numpy-style).
+    pub fn allclose(&self, other: &Tensor, rtol: f32, atol: f32) -> bool {
+        self.shape == other.shape
+            && self
+                .data
+                .iter()
+                .zip(&other.data)
+                .all(|(a, b)| (a - b).abs() <= atol + rtol * b.abs())
+    }
+
+    /// Gaussian-filled tensor.
+    pub fn randn(rng: &mut crate::util::rng::Rng, shape: &[usize], std: f32) -> Tensor {
+        Tensor::from_vec(rng.normal_vec(shape.iter().product(), std), shape)
+    }
+
+    /// Fill with zeros in place (buffer reuse on the hot path).
+    pub fn fill_zero(&mut self) {
+        self.data.iter_mut().for_each(|x| *x = 0.0);
+    }
+
+    /// Copy contents from another tensor of identical shape.
+    pub fn copy_from(&mut self, other: &Tensor) {
+        debug_assert_eq!(self.shape, other.shape);
+        self.data.copy_from_slice(&other.data);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::forall;
+
+    #[test]
+    fn construct_and_reshape() {
+        let t = Tensor::from_vec(vec![1.0, 2.0, 3.0, 4.0], &[2, 2]);
+        assert_eq!(t.shape(), &[2, 2]);
+        let t = t.reshape(&[4]);
+        assert_eq!(t.shape(), &[4]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn reshape_rejects_bad_count() {
+        Tensor::zeros(&[2, 2]).reshape(&[3]);
+    }
+
+    #[test]
+    fn axpy_scale_norm() {
+        let mut a = Tensor::from_vec(vec![1.0, 2.0], &[2]);
+        let b = Tensor::from_vec(vec![3.0, 4.0], &[2]);
+        a.axpy(2.0, &b);
+        assert_eq!(a.data(), &[7.0, 10.0]);
+        a.scale(0.5);
+        assert_eq!(a.data(), &[3.5, 5.0]);
+        assert!((Tensor::from_vec(vec![3.0, 4.0], &[2]).norm() - 5.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn allclose_tolerances() {
+        let a = Tensor::from_vec(vec![1.0, 100.0], &[2]);
+        let b = Tensor::from_vec(vec![1.0 + 1e-6, 100.0 + 1e-4], &[2]);
+        assert!(a.allclose(&b, 1e-5, 1e-5));
+        let c = Tensor::from_vec(vec![1.1, 100.0], &[2]);
+        assert!(!a.allclose(&c, 1e-5, 1e-5));
+    }
+
+    #[test]
+    fn prop_axpy_linear() {
+        forall("axpy-linear", 50, |rng| {
+            let n = 1 + rng.range(32);
+            let x = Tensor::randn(rng, &[n], 1.0);
+            let y = Tensor::randn(rng, &[n], 1.0);
+            let alpha = rng.normal();
+            // (y + a x) - y == a x
+            let mut z = y.clone();
+            z.axpy(alpha, &x);
+            let d = z.sub(&y);
+            let mut ax = x.clone();
+            ax.scale(alpha);
+            assert!(d.allclose(&ax, 1e-5, 1e-5));
+        });
+    }
+
+    #[test]
+    fn prop_norm_triangle_inequality() {
+        forall("norm-triangle", 50, |rng| {
+            let n = 1 + rng.range(16);
+            let a = Tensor::randn(rng, &[n], 1.0);
+            let b = Tensor::randn(rng, &[n], 1.0);
+            assert!(a.add(&b).norm() <= a.norm() + b.norm() + 1e-4);
+        });
+    }
+
+    #[test]
+    fn randn_respects_std() {
+        let mut rng = crate::util::rng::Rng::new(0);
+        let t = Tensor::randn(&mut rng, &[10_000], 0.5);
+        let mean = t.data().iter().sum::<f32>() / t.len() as f32;
+        let var = t.data().iter().map(|x| (x - mean) * (x - mean)).sum::<f32>() / t.len() as f32;
+        assert!((var.sqrt() - 0.5).abs() < 0.02);
+    }
+}

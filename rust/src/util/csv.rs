@@ -1,0 +1,66 @@
+//! CSV run-log writer: every bench/experiment writes its series under
+//! `bench_out/` so figures can be re-plotted outside the repo.
+
+use std::fs::{self, File};
+use std::io::{BufWriter, Write};
+use std::path::Path;
+
+/// Buffered CSV writer with a fixed header.
+pub struct CsvWriter {
+    w: BufWriter<File>,
+    cols: usize,
+}
+
+impl CsvWriter {
+    /// Create (directories included) and write the header row.
+    pub fn create<P: AsRef<Path>>(path: P, header: &[&str]) -> std::io::Result<CsvWriter> {
+        if let Some(dir) = path.as_ref().parent() {
+            fs::create_dir_all(dir)?;
+        }
+        let mut w = BufWriter::new(File::create(path)?);
+        writeln!(w, "{}", header.join(","))?;
+        Ok(CsvWriter { w, cols: header.len() })
+    }
+
+    /// Write one row of already-formatted cells.
+    pub fn row(&mut self, cells: &[String]) -> std::io::Result<()> {
+        debug_assert_eq!(cells.len(), self.cols, "csv row width mismatch");
+        writeln!(self.w, "{}", cells.join(","))
+    }
+
+    /// Write one row of f64 values.
+    pub fn row_f64(&mut self, cells: &[f64]) -> std::io::Result<()> {
+        let cells: Vec<String> = cells.iter().map(|v| format!("{}", v)).collect();
+        self.row(&cells)
+    }
+
+    pub fn flush(&mut self) -> std::io::Result<()> {
+        self.w.flush()
+    }
+}
+
+/// Default output directory for bench CSVs (created on demand).
+pub fn bench_out(name: &str) -> String {
+    format!("bench_out/{}", name)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn writes_header_and_rows() {
+        let dir = std::env::temp_dir().join("layertime_csv_test");
+        let path = dir.join("t.csv");
+        {
+            let mut w = CsvWriter::create(&path, &["a", "b"]).unwrap();
+            w.row(&["1".into(), "x".into()]).unwrap();
+            w.row_f64(&[2.5, 3.0]).unwrap();
+            w.flush().unwrap();
+        }
+        let text = std::fs::read_to_string(&path).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines, vec!["a,b", "1,x", "2.5,3"]);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,18 @@
+//! Substrate utilities built in-repo (the offline registry has no serde /
+//! clap / criterion / proptest / rand), each unit-tested:
+//!
+//! * [`json`] — minimal JSON parser + writer (manifest, configs, run logs)
+//! * [`rng`] — SplitMix64 PRNG with normal sampling and shuffles
+//! * [`cli`] — `--key value` argument parser
+//! * [`bench`] — timing harness (warmup, samples, mean/p50/p95)
+//! * [`proptest`] — mini property-test driver with seed reporting
+//! * [`csv`] — CSV run-log writer
+//! * [`table`] — aligned text tables for bench output
+
+pub mod bench;
+pub mod cli;
+pub mod csv;
+pub mod json;
+pub mod proptest;
+pub mod rng;
+pub mod table;

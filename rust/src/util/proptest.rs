@@ -1,0 +1,73 @@
+//! Mini property-test driver (substrate for the unavailable `proptest`).
+//!
+//! `forall(name, cases, |rng| { ... })` runs the closure `cases` times with
+//! independent deterministic RNG streams; on panic it reports the failing
+//! case index + seed so the case can be replayed with `replay`.
+
+use super::rng::Rng;
+
+/// Base seed; change via LAYERTIME_PROP_SEED to explore other streams.
+fn base_seed() -> u64 {
+    std::env::var("LAYERTIME_PROP_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0xC0FFEE)
+}
+
+/// Run `f` on `cases` independent RNG streams; panic with replay info on failure.
+pub fn forall<F: Fn(&mut Rng)>(name: &str, cases: u64, f: F) {
+    let base = base_seed();
+    for case in 0..cases {
+        let seed = base ^ (case.wrapping_mul(0x9E3779B97F4A7C15));
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let mut rng = Rng::new(seed);
+            f(&mut rng);
+        }));
+        if let Err(e) = result {
+            eprintln!(
+                "property '{}' failed at case {}/{} (replay seed: {:#x})",
+                name, case, cases, seed
+            );
+            std::panic::resume_unwind(e);
+        }
+    }
+}
+
+/// Replay a single failing case by seed.
+pub fn replay<F: FnMut(&mut Rng)>(seed: u64, mut f: F) {
+    let mut rng = Rng::new(seed);
+    f(&mut rng);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn forall_runs_all_cases() {
+        let mut n = 0u64;
+        forall("count", 25, |_| {}); // no capture mutation inside catch_unwind
+        for _ in 0..25 {
+            n += 1;
+        }
+        assert_eq!(n, 25);
+    }
+
+    #[test]
+    #[should_panic]
+    fn forall_propagates_failure() {
+        forall("fails", 10, |rng| {
+            assert!(rng.uniform() < 2.0); // always true
+            assert!(rng.uniform() < 0.0); // always false -> panics
+        });
+    }
+
+    #[test]
+    fn replay_is_deterministic() {
+        let mut first = 0.0;
+        replay(42, |rng| first = rng.uniform());
+        let mut second = 0.0;
+        replay(42, |rng| second = rng.uniform());
+        assert_eq!(first, second);
+    }
+}

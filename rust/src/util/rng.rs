@@ -1,0 +1,160 @@
+//! SplitMix64 PRNG with gaussian sampling.
+//!
+//! Substrate replacement for the `rand` crate (unavailable offline).
+//! Deterministic and seedable — every experiment in `EXPERIMENTS.md` records
+//! its seed; the paper's multi-seed BERT runs (Fig. 4, grey band) are
+//! reproduced by sweeping this seed.
+
+/// SplitMix64: tiny, fast, passes BigCrush when used as a stream.
+#[derive(Debug, Clone)]
+pub struct Rng {
+    state: u64,
+    /// Cached second Box-Muller sample.
+    spare: Option<f32>,
+}
+
+impl Rng {
+    pub fn new(seed: u64) -> Self {
+        Rng { state: seed.wrapping_add(0x9E3779B97F4A7C15), spare: None }
+    }
+
+    /// Derive an independent stream (for per-worker RNGs).
+    pub fn split(&mut self) -> Rng {
+        Rng::new(self.next_u64() ^ 0xA5A5_5A5A_DEAD_BEEF)
+    }
+
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_add(0x9E3779B97F4A7C15);
+        let mut z = self.state;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+        z ^ (z >> 31)
+    }
+
+    /// Uniform in [0, 1).
+    pub fn uniform(&mut self) -> f32 {
+        (self.next_u64() >> 40) as f32 / (1u64 << 24) as f32
+    }
+
+    /// Uniform integer in [0, n).
+    pub fn range(&mut self, n: usize) -> usize {
+        assert!(n > 0, "range(0)");
+        (self.next_u64() % n as u64) as usize
+    }
+
+    /// Standard normal via Box-Muller (cached pair).
+    pub fn normal(&mut self) -> f32 {
+        if let Some(s) = self.spare.take() {
+            return s;
+        }
+        loop {
+            let u1 = self.uniform();
+            if u1 <= f32::MIN_POSITIVE {
+                continue;
+            }
+            let u2 = self.uniform();
+            let r = (-2.0 * u1.ln()).sqrt();
+            let (sin, cos) = (2.0 * std::f32::consts::PI * u2).sin_cos();
+            self.spare = Some(r * sin);
+            return r * cos;
+        }
+    }
+
+    /// Vector of normals scaled by `std`.
+    pub fn normal_vec(&mut self, n: usize, std: f32) -> Vec<f32> {
+        (0..n).map(|_| self.normal() * std).collect()
+    }
+
+    /// Fisher-Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            xs.swap(i, self.range(i + 1));
+        }
+    }
+
+    /// Sample from an unnormalized discrete distribution.
+    pub fn categorical(&mut self, weights: &[f32]) -> usize {
+        let total: f32 = weights.iter().sum();
+        let mut u = self.uniform() * total;
+        for (i, w) in weights.iter().enumerate() {
+            u -= w;
+            if u <= 0.0 {
+                return i;
+            }
+        }
+        weights.len() - 1
+    }
+
+    /// Random alphanumeric char (test-data helper).
+    pub fn alnum(&mut self) -> char {
+        const CS: &[u8] = b"abcdefghijklmnopqrstuvwxyz0123456789";
+        CS[self.range(CS.len())] as char
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_per_seed() {
+        let a: Vec<u64> = (0..8).map({ let mut r = Rng::new(7); move |_| r.next_u64() }).collect();
+        let b: Vec<u64> = (0..8).map({ let mut r = Rng::new(7); move |_| r.next_u64() }).collect();
+        let c: Vec<u64> = (0..8).map({ let mut r = Rng::new(8); move |_| r.next_u64() }).collect();
+        assert_eq!(a, b);
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn uniform_in_unit_interval() {
+        let mut r = Rng::new(1);
+        for _ in 0..10_000 {
+            let u = r.uniform();
+            assert!((0.0..1.0).contains(&u));
+        }
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut r = Rng::new(2);
+        let n = 200_000;
+        let xs: Vec<f32> = (0..n).map(|_| r.normal()).collect();
+        let mean = xs.iter().sum::<f32>() / n as f32;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f32>() / n as f32;
+        assert!(mean.abs() < 0.02, "mean {}", mean);
+        assert!((var - 1.0).abs() < 0.03, "var {}", var);
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut r = Rng::new(3);
+        let mut xs: Vec<usize> = (0..100).collect();
+        r.shuffle(&mut xs);
+        let mut sorted = xs.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..100).collect::<Vec<_>>());
+        assert_ne!(xs, (0..100).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn categorical_respects_weights() {
+        let mut r = Rng::new(4);
+        let mut counts = [0usize; 3];
+        for _ in 0..30_000 {
+            counts[r.categorical(&[1.0, 2.0, 1.0])] += 1;
+        }
+        assert!(counts[1] > counts[0] && counts[1] > counts[2]);
+        let frac = counts[1] as f64 / 30_000.0;
+        assert!((frac - 0.5).abs() < 0.03, "frac {}", frac);
+    }
+
+    #[test]
+    fn split_streams_differ() {
+        let mut r = Rng::new(5);
+        let mut a = r.split();
+        let mut b = r.split();
+        let xs: Vec<u64> = (0..4).map(|_| a.next_u64()).collect();
+        let ys: Vec<u64> = (0..4).map(|_| b.next_u64()).collect();
+        assert_ne!(xs, ys);
+    }
+}

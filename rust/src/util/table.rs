@@ -1,0 +1,96 @@
+//! Aligned text tables: the bench harnesses print each paper table/figure
+//! as rows the same shape the paper reports.
+
+/// Column-aligned text table builder.
+#[derive(Debug, Default)]
+pub struct Table {
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(header: &[&str]) -> Table {
+        Table { header: header.iter().map(|s| s.to_string()).collect(), rows: Vec::new() }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) -> &mut Self {
+        debug_assert_eq!(cells.len(), self.header.len(), "table row width mismatch");
+        self.rows.push(cells);
+        self
+    }
+
+    /// Render with per-column width = max cell width.
+    pub fn render(&self) -> String {
+        let ncol = self.header.len();
+        let mut widths: Vec<usize> = self.header.iter().map(|h| h.chars().count()).collect();
+        for r in &self.rows {
+            for c in 0..ncol {
+                widths[c] = widths[c].max(r[c].chars().count());
+            }
+        }
+        let mut out = String::new();
+        let fmt_row = |cells: &[String], widths: &[usize]| -> String {
+            let mut line = String::new();
+            for (c, cell) in cells.iter().enumerate() {
+                if c > 0 {
+                    line.push_str("  ");
+                }
+                line.push_str(cell);
+                for _ in cell.chars().count()..widths[c] {
+                    line.push(' ');
+                }
+            }
+            line.trim_end().to_string()
+        };
+        out.push_str(&fmt_row(&self.header, &widths));
+        out.push('\n');
+        let total: usize = widths.iter().sum::<usize>() + 2 * (ncol - 1);
+        out.push_str(&"-".repeat(total));
+        out.push('\n');
+        for r in &self.rows {
+            out.push_str(&fmt_row(r, &widths));
+            out.push('\n');
+        }
+        out
+    }
+
+    pub fn print(&self) {
+        print!("{}", self.render());
+    }
+}
+
+/// Format helper: fixed-precision float cell.
+pub fn f(v: f64, prec: usize) -> String {
+    format!("{:.*}", prec, v)
+}
+
+/// Format helper: integer cell.
+pub fn i(v: i64) -> String {
+    format!("{}", v)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_aligned() {
+        let mut t = Table::new(&["task", "speedup"]);
+        t.row(vec!["BERT".into(), f(3.25, 2)]);
+        t.row(vec!["MC-long-name".into(), f(10.0, 2)]);
+        let s = t.render();
+        let lines: Vec<&str> = s.lines().collect();
+        assert_eq!(lines.len(), 4);
+        assert!(lines[0].starts_with("task"));
+        assert!(lines[2].starts_with("BERT"));
+        // all data lines align the second column
+        let col = lines[2].find("3.25").unwrap();
+        assert_eq!(lines[3].find("10.00").unwrap(), col);
+    }
+
+    #[test]
+    fn format_helpers() {
+        assert_eq!(f(1.23456, 3), "1.235");
+        assert_eq!(i(-7), "-7");
+    }
+}

@@ -1,0 +1,217 @@
+//! MGRIT over real transformers: the pure-Rust propagator (always) and the
+//! XLA/PJRT propagator (when artifacts are built).
+//!
+//! Pins the paper's core claims at test scale:
+//! * MGRIT forward/adjoint converge to the serial result on a nonlinear
+//!   neural-ODE transformer (encoder, decoder-causal, and encoder-decoder);
+//! * few-iteration MGRIT yields *inexact but close* gradients (the paper's
+//!   working regime);
+//! * the XLA and Rust propagators agree through the whole MGRIT stack.
+
+use std::cell::RefCell;
+use std::rc::Rc;
+
+use layertime::config::{Arch, MgritConfig, ModelConfig};
+use layertime::mgrit::MgritSolver;
+use layertime::ode::{Propagator, RustPropagator, XlaPropagator};
+use layertime::runtime::XlaEngine;
+use layertime::tensor::Tensor;
+use layertime::util::rng::Rng;
+
+fn model(arch: Arch, n_layers: usize) -> ModelConfig {
+    ModelConfig {
+        arch,
+        vocab: 16,
+        d_model: 8,
+        n_heads: 2,
+        d_ff: 16,
+        seq: 4,
+        batch: 2,
+        n_classes: 4,
+        n_enc_layers: if arch == Arch::EncDec { n_layers / 2 } else { n_layers },
+        n_dec_layers: if arch == Arch::EncDec { n_layers / 2 } else { 0 },
+        buffer_open: 0,
+        buffer_close: 0,
+    }
+}
+
+fn params(m: &ModelConfig, rng: &mut Rng, std: f32) -> Rc<RefCell<Vec<Vec<f32>>>> {
+    let mut v = Vec::new();
+    for l in 0..m.total_layers() {
+        let len = if m.arch == Arch::EncDec && l >= m.n_enc_layers { m.p_dec() } else { m.p_enc() };
+        v.push(rng.normal_vec(len, std));
+    }
+    Rc::new(RefCell::new(v))
+}
+
+fn mgcfg(cf: usize, levels: usize) -> MgritConfig {
+    MgritConfig { cf, levels, fwd_iters: Some(2), bwd_iters: Some(1), fcf: true }
+}
+
+#[test]
+fn mgrit_forward_converges_on_transformer() {
+    for arch in [Arch::Encoder, Arch::Decoder, Arch::EncDec] {
+        let m = model(arch, 16);
+        let mut rng = Rng::new(7);
+        let prop = RustPropagator::new(&m, 0.25, params(&m, &mut rng, 0.1));
+        let z0 = Tensor::randn(&mut rng, &prop.state_shape(), 1.0);
+        let solver = MgritSolver::new(&prop, mgcfg(4, 2));
+
+        let (serial, _) = solver.forward(&z0, None, None, false);
+        let (mg, stats) = solver.forward(&z0, Some(6), None, true);
+        assert!(
+            stats.residuals.last().unwrap() < &1e-3,
+            "{:?}: residuals {:?}",
+            arch,
+            stats.residuals
+        );
+        let rel = mg.last().unwrap().dist(serial.last().unwrap())
+            / serial.last().unwrap().norm().max(1e-9);
+        assert!(rel < 1e-3, "{:?}: relative final-state error {}", arch, rel);
+    }
+}
+
+#[test]
+fn mgrit_adjoint_and_gradients_converge_on_transformer() {
+    let m = model(Arch::Encoder, 16);
+    let mut rng = Rng::new(8);
+    let ps = params(&m, &mut rng, 0.1);
+    let prop = RustPropagator::new(&m, 0.25, ps);
+    let z0 = Tensor::randn(&mut rng, &prop.state_shape(), 1.0);
+    let ct = Tensor::randn(&mut rng, &prop.state_shape(), 1.0);
+    let solver = MgritSolver::new(&prop, mgcfg(4, 2));
+
+    let (states, _) = solver.forward(&z0, None, None, false);
+    let (lam_exact, _) = solver.adjoint(&states, &ct, None, false);
+    let g_exact = solver.gradients(&states, &lam_exact);
+
+    // converged MGRIT adjoint reproduces exact gradients
+    let (lam_mg, _) = solver.adjoint(&states, &ct, Some(6), false);
+    let g_mg = solver.gradients(&states, &lam_mg);
+    for (a, b) in g_mg.iter().zip(&g_exact) {
+        let diff: f32 = a.iter().zip(b.iter()).map(|(x, y)| (x - y).abs()).fold(0.0, f32::max);
+        assert!(diff < 1e-3, "grad diff {}", diff);
+    }
+
+    // one-iteration MGRIT adjoint is inexact but close (the paper's regime)
+    let (lam_1, _) = solver.adjoint(&states, &ct, Some(1), false);
+    let g_1 = solver.gradients(&states, &lam_1);
+    let mut num = 0.0f64;
+    let mut den = 0.0f64;
+    for (a, b) in g_1.iter().zip(&g_exact) {
+        for (x, y) in a.iter().zip(b.iter()) {
+            num += ((x - y) as f64).powi(2);
+            den += (*y as f64).powi(2);
+        }
+    }
+    let rel = (num / den.max(1e-30)).sqrt();
+    assert!(rel < 0.5, "one-iter gradient relative error {}", rel);
+    assert!(rel > 1e-6, "one-iter gradient should be inexact, rel={}", rel);
+}
+
+#[test]
+fn mgrit_inexact_forward_bias_shrinks_with_iterations() {
+    // The paper's premise: iteration count controls the inexactness.
+    let m = model(Arch::Decoder, 16);
+    let mut rng = Rng::new(9);
+    let prop = RustPropagator::new(&m, 0.25, params(&m, &mut rng, 0.1));
+    let z0 = Tensor::randn(&mut rng, &prop.state_shape(), 1.0);
+    let solver = MgritSolver::new(&prop, mgcfg(2, 2));
+    let (serial, _) = solver.forward(&z0, None, None, false);
+    let exact = serial.last().unwrap();
+    let mut prev = f32::INFINITY;
+    for k in [1usize, 2, 4] {
+        let (mg, _) = solver.forward(&z0, Some(k), None, false);
+        let err = mg.last().unwrap().dist(exact);
+        assert!(err <= prev * 1.001, "error should shrink: k={} err={} prev={}", k, err, prev);
+        prev = err;
+    }
+}
+
+#[test]
+fn xla_propagator_matches_rust_through_mgrit() {
+    let dir = std::env::var("LAYERTIME_ARTIFACTS").unwrap_or_else(|_| "artifacts".to_string());
+    if !std::path::Path::new(&dir).join("manifest.json").exists() {
+        eprintln!("skipping: no artifacts (run `make artifacts`)");
+        return;
+    }
+    let engine = Rc::new(XlaEngine::load(&dir).unwrap());
+    let mf = engine.manifest();
+    let m = ModelConfig {
+        arch: Arch::Encoder,
+        vocab: mf.cfg("vocab").unwrap(),
+        d_model: mf.cfg("d_model").unwrap(),
+        n_heads: mf.cfg("n_heads").unwrap(),
+        d_ff: mf.cfg("d_ff").unwrap(),
+        seq: mf.cfg("seq").unwrap(),
+        batch: mf.cfg("batch").unwrap(),
+        n_classes: mf.cfg("n_classes").unwrap(),
+        n_enc_layers: 8,
+        n_dec_layers: 0,
+        buffer_open: 0,
+        buffer_close: 0,
+    };
+    let mut rng = Rng::new(10);
+    let ps = params(&m, &mut rng, 0.05);
+    let xla = XlaPropagator::new(engine, &m, 1.0, ps.clone()).unwrap();
+    let rust = RustPropagator::new(&m, 1.0, ps);
+    let z0 = Tensor::randn(&mut rng, &xla.state_shape(), 1.0);
+
+    let cfg = mgcfg(4, 2);
+    let xs = MgritSolver::new(&xla, cfg.clone());
+    let rs = MgritSolver::new(&rust, cfg);
+
+    let (wx, sx) = xs.forward(&z0, Some(2), None, true);
+    let (wr, sr) = rs.forward(&z0, Some(2), None, true);
+    for (a, b) in wx.iter().zip(&wr) {
+        assert!(a.allclose(b, 1e-3, 1e-3), "state diff {}", a.max_abs_diff(b));
+    }
+    // identical algorithm => identical residual history, up to fp noise
+    // (skip once residuals are at roundoff level)
+    for (a, b) in sx.residuals.iter().zip(&sr.residuals) {
+        if *b > 1e-4 {
+            assert!((a - b).abs() / b < 1e-2, "residuals {} vs {}", a, b);
+        }
+    }
+
+    // adjoint path too
+    let ct = Tensor::randn(&mut rng, &xla.state_shape(), 1.0);
+    let (lx, _) = xs.adjoint(&wx, &ct, Some(1), false);
+    let (lr, _) = rs.adjoint(&wr, &ct, Some(1), false);
+    for (a, b) in lx.iter().zip(&lr) {
+        assert!(a.allclose(b, 1e-3, 1e-3), "lambda diff {}", a.max_abs_diff(b));
+    }
+    let gx = xs.gradients(&wx, &lx);
+    let gr = rs.gradients(&wr, &lr);
+    for (a, b) in gx.iter().zip(&gr) {
+        let diff: f32 = a.iter().zip(b.iter()).map(|(x, y)| (x - y).abs()).fold(0.0, f32::max);
+        assert!(diff < 5e-3, "grad diff {}", diff);
+    }
+}
+
+#[test]
+fn encdec_mgrit_full_pipeline() {
+    // The paper's novel encoder-decoder neural-ODE: stacked state through
+    // MGRIT end to end with gradient extraction.
+    let m = model(Arch::EncDec, 12);
+    let mut rng = Rng::new(11);
+    let prop = RustPropagator::new(&m, 0.3, params(&m, &mut rng, 0.1));
+    let z0 = Tensor::randn(&mut rng, &prop.state_shape(), 1.0);
+    let ct = Tensor::randn(&mut rng, &prop.state_shape(), 1.0);
+    let solver = MgritSolver::new(&prop, MgritConfig {
+        cf: 3,
+        levels: 2,
+        fwd_iters: Some(3),
+        bwd_iters: Some(3),
+        fcf: true,
+    });
+    let (states, fs) = solver.forward(&z0, Some(3), None, true);
+    assert!(fs.residuals.last().unwrap() < &1e-2);
+    let (lams, _) = solver.adjoint(&states, &ct, Some(3), false);
+    let grads = solver.gradients(&states, &lams);
+    assert_eq!(grads.len(), 12);
+    assert_eq!(grads[0].len(), m.p_enc());
+    assert_eq!(grads[11].len(), m.p_dec());
+    assert!(grads.iter().all(|g| g.iter().all(|v| v.is_finite())));
+    assert!(grads.iter().any(|g| g.iter().any(|v| v.abs() > 0.0)));
+}

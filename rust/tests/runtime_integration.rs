@@ -1,0 +1,211 @@
+//! Integration: load the real AOT artifacts through PJRT and pin their
+//! numerics against the independent pure-Rust reference transformer.
+//!
+//! These tests skip (pass vacuously with a notice) when `artifacts/` has not
+//! been built — run `make artifacts` first for full coverage.
+
+use layertime::reference::{self, RefDims};
+use layertime::runtime::{Value, XlaEngine};
+use layertime::tensor::Tensor;
+use layertime::util::rng::Rng;
+
+fn artifacts_dir() -> Option<String> {
+    let dir = std::env::var("LAYERTIME_ARTIFACTS").unwrap_or_else(|_| "artifacts".to_string());
+    if std::path::Path::new(&dir).join("manifest.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!("skipping: no artifacts at {} (run `make artifacts`)", dir);
+        None
+    }
+}
+
+fn dims_from(engine: &XlaEngine) -> RefDims {
+    let m = engine.manifest();
+    RefDims {
+        batch: m.cfg("batch").unwrap(),
+        seq: m.cfg("seq").unwrap(),
+        d_model: m.cfg("d_model").unwrap(),
+        n_heads: m.cfg("n_heads").unwrap(),
+        d_ff: m.cfg("d_ff").unwrap(),
+    }
+}
+
+#[test]
+fn enc_step_matches_rust_reference() {
+    let Some(dir) = artifacts_dir() else { return };
+    let engine = XlaEngine::load(&dir).unwrap();
+    let dm = dims_from(&engine);
+    let p_enc = engine.manifest().cfg("p_enc").unwrap();
+
+    let mut rng = Rng::new(11);
+    let x = Tensor::randn(&mut rng, &[dm.batch, dm.seq, dm.d_model], 1.0);
+    let theta = rng.normal_vec(p_enc, 0.05);
+    let h = 0.5f32;
+
+    for (entry, causal) in [("enc_step", false), ("causal_step", true)] {
+        let out = engine
+            .call(
+                entry,
+                &[
+                    Value::F32(x.clone()),
+                    Value::F32(Tensor::from_vec(theta.clone(), &[p_enc])),
+                    Value::scalar(h),
+                ],
+            )
+            .unwrap();
+        let want = reference::enc_step_fwd(&x, &theta, h, &dm, causal);
+        assert!(
+            out[0].allclose(&want, 2e-4, 2e-4),
+            "{}: max diff {}",
+            entry,
+            out[0].max_abs_diff(&want)
+        );
+    }
+}
+
+#[test]
+fn enc_step_vjp_matches_rust_reference() {
+    let Some(dir) = artifacts_dir() else { return };
+    let engine = XlaEngine::load(&dir).unwrap();
+    let dm = dims_from(&engine);
+    let p_enc = engine.manifest().cfg("p_enc").unwrap();
+
+    let mut rng = Rng::new(12);
+    let x = Tensor::randn(&mut rng, &[dm.batch, dm.seq, dm.d_model], 1.0);
+    let theta = rng.normal_vec(p_enc, 0.05);
+    let ct = Tensor::randn(&mut rng, &[dm.batch, dm.seq, dm.d_model], 1.0);
+    let h = 0.5f32;
+
+    let out = engine
+        .call(
+            "enc_step_vjp",
+            &[
+                Value::F32(x.clone()),
+                Value::F32(Tensor::from_vec(theta.clone(), &[p_enc])),
+                Value::scalar(h),
+                Value::F32(ct.clone()),
+            ],
+        )
+        .unwrap();
+    let (lam, gtheta) = reference::enc_step_bwd(&x, &theta, h, &dm, false, &ct);
+    assert!(out[0].allclose(&lam, 5e-4, 5e-4), "lambda diff {}", out[0].max_abs_diff(&lam));
+    let g = Tensor::from_vec(gtheta, &[p_enc]);
+    assert!(out[1].allclose(&g, 5e-4, 5e-4), "grad diff {}", out[1].max_abs_diff(&g));
+}
+
+#[test]
+fn dec_step_and_vjp_match_rust_reference() {
+    let Some(dir) = artifacts_dir() else { return };
+    let engine = XlaEngine::load(&dir).unwrap();
+    let dm = dims_from(&engine);
+    let p_dec = engine.manifest().cfg("p_dec").unwrap();
+
+    let mut rng = Rng::new(13);
+    let y = Tensor::randn(&mut rng, &[dm.batch, dm.seq, dm.d_model], 1.0);
+    let xe = Tensor::randn(&mut rng, &[dm.batch, dm.seq, dm.d_model], 1.0);
+    let theta = rng.normal_vec(p_dec, 0.05);
+    let h = 1.0f32;
+
+    let out = engine
+        .call(
+            "dec_step",
+            &[
+                Value::F32(y.clone()),
+                Value::F32(xe.clone()),
+                Value::F32(Tensor::from_vec(theta.clone(), &[p_dec])),
+                Value::scalar(h),
+            ],
+        )
+        .unwrap();
+    let want = reference::dec_step_fwd(&y, &xe, &theta, h, &dm, dm.seq);
+    assert!(out[0].allclose(&want, 2e-4, 2e-4), "dec diff {}", out[0].max_abs_diff(&want));
+
+    let ct = Tensor::randn(&mut rng, &[dm.batch, dm.seq, dm.d_model], 1.0);
+    let out = engine
+        .call(
+            "dec_step_vjp",
+            &[
+                Value::F32(y.clone()),
+                Value::F32(xe.clone()),
+                Value::F32(Tensor::from_vec(theta.clone(), &[p_dec])),
+                Value::scalar(h),
+                Value::F32(ct.clone()),
+            ],
+        )
+        .unwrap();
+    let (dy, dxe, gt) = reference::dec_step_bwd(&y, &xe, &theta, h, &dm, dm.seq, &ct);
+    assert!(out[0].allclose(&dy, 5e-4, 5e-4), "dy diff {}", out[0].max_abs_diff(&dy));
+    assert!(out[1].allclose(&dxe, 5e-4, 5e-4), "dxe diff {}", out[1].max_abs_diff(&dxe));
+    let gt = Tensor::from_vec(gt, &[p_dec]);
+    assert!(out[2].allclose(&gt, 5e-4, 5e-4), "gt diff {}", out[2].max_abs_diff(&gt));
+}
+
+#[test]
+fn loss_entry_points_run() {
+    let Some(dir) = artifacts_dir() else { return };
+    let engine = XlaEngine::load(&dir).unwrap();
+    let m = engine.manifest();
+    let (b, s, d, v) =
+        (m.cfg("batch").unwrap(), m.cfg("seq").unwrap(), m.cfg("d_model").unwrap(), m.cfg("vocab").unwrap());
+
+    let mut rng = Rng::new(14);
+    let x = Tensor::randn(&mut rng, &[b, s, d], 0.5);
+    let w = Tensor::randn(&mut rng, &[d, v], 0.1);
+    let targets: Vec<i32> = (0..b * s).map(|_| rng.range(v) as i32).collect();
+    let mask = Tensor::from_vec(vec![1.0; b * s], &[b, s]);
+
+    let out = engine
+        .call(
+            "lm_loss_vjp",
+            &[
+                Value::F32(x.clone()),
+                Value::F32(w.clone()),
+                Value::I32(targets.clone(), vec![b, s]),
+                Value::F32(mask),
+            ],
+        )
+        .unwrap();
+    let loss = out[0].item();
+    assert!(loss.is_finite() && loss > 0.0, "loss {}", loss);
+    // random init: loss near ln(vocab)
+    assert!((loss - (v as f32).ln()).abs() < 1.0, "loss {} vs ln V {}", loss, (v as f32).ln());
+    // lambda has x's shape, grad has w's shape
+    assert_eq!(out[2].shape(), x.shape());
+    assert_eq!(out[3].shape(), w.shape());
+}
+
+#[test]
+fn embed_roundtrip() {
+    let Some(dir) = artifacts_dir() else { return };
+    let engine = XlaEngine::load(&dir).unwrap();
+    let m = engine.manifest();
+    let (b, s, d, v) =
+        (m.cfg("batch").unwrap(), m.cfg("seq").unwrap(), m.cfg("d_model").unwrap(), m.cfg("vocab").unwrap());
+
+    let mut rng = Rng::new(15);
+    let we = Tensor::randn(&mut rng, &[v, d], 1.0);
+    let wp = Tensor::randn(&mut rng, &[s, d], 1.0);
+    let toks: Vec<i32> = (0..b * s).map(|_| rng.range(v) as i32).collect();
+    let out = engine
+        .call(
+            "embed",
+            &[Value::I32(toks.clone(), vec![b, s]), Value::F32(we.clone()), Value::F32(wp.clone())],
+        )
+        .unwrap();
+    // spot-check position (0, 0)
+    let tok0 = toks[0] as usize;
+    for i in 0..d {
+        let want = we.data()[tok0 * d + i] + wp.data()[i];
+        assert!((out[0].data()[i] - want).abs() < 1e-5);
+    }
+}
+
+#[test]
+fn executable_rejects_bad_shapes() {
+    let Some(dir) = artifacts_dir() else { return };
+    let engine = XlaEngine::load(&dir).unwrap();
+    let bad = Tensor::zeros(&[1, 2, 3]);
+    let err = engine.call("enc_step", &[Value::F32(bad)]).unwrap_err();
+    let msg = format!("{}", err);
+    assert!(msg.contains("expected"), "{}", msg);
+}

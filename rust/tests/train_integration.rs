@@ -1,0 +1,188 @@
+//! End-to-end training integration: short runs of every task on tiny
+//! models through the full coordinator (embed → MGRIT → loss → adjoint →
+//! optimizer), artifact-free (pure-Rust propagator) so `cargo test` is
+//! self-contained.
+
+use layertime::config::{presets, MgritConfig};
+use layertime::coordinator::{Task, TrainRun};
+use layertime::model::{Init, ParamStore};
+
+/// Shrink a preset to test scale (tiny width, few layers, few steps).
+fn tiny(preset: &str, steps: usize) -> layertime::config::RunConfig {
+    let mut rc = presets::by_name(preset).unwrap();
+    rc.model.vocab = 16;
+    rc.model.d_model = 16;
+    rc.model.n_heads = 2;
+    rc.model.d_ff = 32;
+    rc.model.seq = 8;
+    rc.model.batch = 4;
+    rc.model.n_classes = 4;
+    rc.model.buffer_open = 0;
+    rc.model.buffer_close = 0;
+    rc.train.steps = steps;
+    rc.train.eval_every = steps;
+    rc.train.probe_every = 0; // probes off unless the test wants them
+    rc.train.adaptive = false;
+    rc.train.warmup = 0;
+    rc
+}
+
+#[test]
+fn tag_task_learns_with_mgrit() {
+    let mut rc = tiny("mc", 120);
+    rc.model.n_enc_layers = 4;
+    rc.mgrit = MgritConfig { cf: 2, levels: 2, fwd_iters: Some(2), bwd_iters: Some(1), fcf: true };
+    rc.train.opt = layertime::config::OptKind::Adam;
+    rc.train.lr = 5e-3;
+    let mut run = TrainRun::new(rc, Task::Tag, None).unwrap();
+    let report = run.train().unwrap();
+    let first = report.curve[0].loss;
+    let last = report.final_loss;
+    assert!(last < first * 0.8, "loss did not drop: {} -> {}", first, last);
+    // better than chance (4 classes)
+    assert!(report.final_metric > 0.3, "metric {}", report.final_metric);
+}
+
+#[test]
+fn lm_task_learns_with_buffers() {
+    // GPT-like: buffers + serial forward + 1 MGRIT backward iteration
+    let mut rc = tiny("gpt", 120);
+    rc.model.n_dec_layers = 8;
+    rc.model.buffer_open = 2;
+    rc.model.buffer_close = 2;
+    rc.mgrit = MgritConfig { cf: 2, levels: 2, fwd_iters: None, bwd_iters: Some(1), fcf: true };
+    rc.train.opt = layertime::config::OptKind::Adam;
+    rc.train.lr = 5e-3;
+    let mut run = TrainRun::new(rc, Task::Lm, None).unwrap();
+    let report = run.train().unwrap();
+    assert!(report.final_loss < report.curve[0].loss, "{} -> {}",
+        report.curve[0].loss, report.final_loss);
+    assert!(report.final_loss.is_finite());
+}
+
+#[test]
+fn translate_task_runs_encdec() {
+    let mut rc = tiny("mt", 80);
+    rc.model.n_enc_layers = 3;
+    rc.model.n_dec_layers = 3;
+    rc.mgrit = MgritConfig { cf: 3, levels: 2, fwd_iters: Some(2), bwd_iters: Some(2), fcf: true };
+    rc.train.lr = 5e-3;
+    let mut run = TrainRun::new(rc, Task::Translate, None).unwrap();
+    let report = run.train().unwrap();
+    assert!(report.final_loss < report.curve[0].loss);
+    // BLEU is defined and finite
+    assert!((0.0..=1.0).contains(&report.final_metric));
+}
+
+#[test]
+fn cls_task_runs_vit_style() {
+    let mut rc = tiny("vit", 30);
+    rc.model.seq = 16; // must be square for the image task
+    rc.model.n_enc_layers = 4;
+    rc.mgrit = MgritConfig { cf: 2, levels: 2, fwd_iters: None, bwd_iters: Some(1), fcf: true };
+    rc.train.lr = 1e-3;
+    let mut run = TrainRun::new(rc, Task::Cls, None).unwrap();
+    let report = run.train().unwrap();
+    assert!(report.final_loss.is_finite());
+    assert!(report.final_loss < report.curve[0].loss * 1.2);
+}
+
+#[test]
+fn serial_and_converged_mgrit_produce_same_dynamics() {
+    // The paper's central accuracy claim at test scale: layer-parallel with
+    // enough iterations reproduces serial training step for step.
+    let mut rc_serial = tiny("mc", 12);
+    rc_serial.model.n_enc_layers = 8;
+    rc_serial.mgrit = MgritConfig::serial();
+    rc_serial.train.lr = 0.02;
+    let mut rc_mg = rc_serial.clone();
+    rc_mg.mgrit =
+        MgritConfig { cf: 2, levels: 2, fwd_iters: Some(8), bwd_iters: Some(8), fcf: true };
+
+    let mut run_a = TrainRun::new(rc_serial, Task::Tag, None).unwrap();
+    run_a.warm_start = false;
+    let mut run_b = TrainRun::new(rc_mg, Task::Tag, None).unwrap();
+    run_b.warm_start = false;
+    let ra = run_a.train().unwrap();
+    let rb = run_b.train().unwrap();
+    for (a, b) in ra.curve.iter().zip(&rb.curve) {
+        assert!(
+            (a.loss - b.loss).abs() < 5e-3 * (1.0 + a.loss.abs()),
+            "step {}: serial {} vs mgrit {}",
+            a.step,
+            a.loss,
+            b.loss
+        );
+    }
+}
+
+#[test]
+fn one_iteration_mgrit_diverges_from_serial_dynamics() {
+    // ... and with too few iterations the trajectories drift apart — the
+    // inexactness the adaptive controller exists to catch (Fig. 4).
+    let mut rc_serial = tiny("mc", 40);
+    rc_serial.model.n_enc_layers = 16;
+    rc_serial.mgrit = MgritConfig::serial();
+    rc_serial.train.opt = layertime::config::OptKind::Adam;
+    rc_serial.train.lr = 0.01;
+    let mut rc_mg = rc_serial.clone();
+    rc_mg.mgrit =
+        MgritConfig { cf: 4, levels: 2, fwd_iters: Some(1), bwd_iters: Some(1), fcf: true };
+
+    let mut run_a = TrainRun::new(rc_serial, Task::Tag, None).unwrap();
+    run_a.warm_start = false;
+    let mut run_b = TrainRun::new(rc_mg, Task::Tag, None).unwrap();
+    run_b.warm_start = false;
+    let ra = run_a.train().unwrap();
+    let rb = run_b.train().unwrap();
+    let drift: f32 = ra
+        .curve
+        .iter()
+        .zip(&rb.curve)
+        .map(|(a, b)| (a.loss - b.loss).abs())
+        .fold(0.0, f32::max);
+    assert!(drift > 1e-6, "expected visible drift, got {}", drift);
+}
+
+#[test]
+fn adaptive_probe_records_convergence_factors() {
+    let mut rc = tiny("mc", 20);
+    rc.model.n_enc_layers = 8;
+    rc.mgrit = MgritConfig { cf: 2, levels: 2, fwd_iters: Some(1), bwd_iters: Some(1), fcf: true };
+    rc.train.adaptive = true;
+    rc.train.probe_every = 5;
+    let mut run = TrainRun::new(rc, Task::Tag, None).unwrap();
+    let report = run.train().unwrap();
+    assert!(!report.probes.is_empty(), "no probes recorded");
+    for p in &report.probes {
+        assert!(p.rho_fwd.is_some() || p.rho_bwd.is_some());
+        if let Some(r) = p.rho_fwd {
+            assert!(r.is_finite() && r >= 0.0);
+        }
+    }
+}
+
+#[test]
+fn dp_microbatching_averages_gradients() {
+    let mut rc = tiny("mc", 10);
+    rc.model.n_enc_layers = 4;
+    rc.dp_degree = 2;
+    rc.mgrit = MgritConfig::serial();
+    let mut run = TrainRun::new(rc, Task::Tag, None).unwrap();
+    let report = run.train().unwrap();
+    assert!(report.final_loss.is_finite());
+    assert_eq!(report.curve.len(), 10);
+}
+
+#[test]
+fn finetune_from_checkpoint_preserves_params() {
+    let rc = tiny("mc", 5);
+    let ps = ParamStore::init(&rc.model, Init::Default, 42);
+    let path = std::env::temp_dir().join("layertime_ft_test.bin");
+    ps.save(path.to_str().unwrap()).unwrap();
+    let loaded = ParamStore::load(&rc.model, path.to_str().unwrap()).unwrap();
+    let mut run = TrainRun::from_params(rc, Task::Tag, loaded, None).unwrap();
+    let report = run.train().unwrap();
+    assert_eq!(report.curve.len(), 5);
+    std::fs::remove_file(path).ok();
+}
