@@ -3,10 +3,11 @@
 //! parallel training matches serial validation accuracy while exposing
 //! N/c_f-way parallelism.
 //!
-//! Run with:  cargo run --release --example morpho_tagging [--depth N]
+//! Run with:  cargo run --release --example morpho_tagging
+//!            [-- --depth N] [--steps N] [--workers N]
 
 use layertime::config::{presets, MgritConfig};
-use layertime::coordinator::{Task, TrainRun};
+use layertime::coordinator::{Serial, Session, Task};
 use layertime::mgrit::GridHierarchy;
 use layertime::model::{Init, ParamStore};
 use layertime::util::cli::Args;
@@ -15,6 +16,7 @@ fn main() -> anyhow::Result<()> {
     let args = Args::from_env();
     let depth = args.get_usize("depth", 32);
     let steps = args.get_usize("steps", 100);
+    let workers = args.get_usize("workers", 1);
 
     let mut rc = presets::mc_tiny();
     rc.model.n_enc_layers = depth;
@@ -26,22 +28,31 @@ fn main() -> anyhow::Result<()> {
 
     let grid = GridHierarchy::new(depth, rc.mgrit.cf, rc.mgrit.levels);
     println!(
-        "MC task, {} encoder layers; MGRIT grid {:?}, relaxation exposes {}-way parallelism",
+        "MC task, {} encoder layers; MGRIT grid {:?}, relaxation exposes {}-way parallelism ({} worker(s))",
         depth,
         grid.steps,
-        grid.relax_parallelism(0)
+        grid.relax_parallelism(0),
+        workers.max(1)
     );
 
     let init = ParamStore::init(&rc.model, Init::Default, rc.train.seed);
-    let mut serial_rc = rc.clone();
-    serial_rc.mgrit = MgritConfig::serial();
-    let mut serial = TrainRun::from_params(serial_rc, Task::Tag, init.deep_clone(), None)?;
+    let mut serial = Session::builder()
+        .config(rc.clone())
+        .task(Task::Tag)
+        .params(init.deep_clone())
+        .backend(Box::new(Serial))
+        .build()?;
     let s_rep = serial.train()?;
-    let mut lp = TrainRun::from_params(rc, Task::Tag, init, None)?;
+    let mut lp = Session::builder()
+        .config(rc)
+        .task(Task::Tag)
+        .params(init)
+        .workers(workers)
+        .build()?;
     let p_rep = lp.train()?;
 
     println!("\n        validation accuracy");
-    println!("step    serial   layer-parallel");
+    println!("step    serial   layer-parallel ({})", lp.backend_name());
     for (a, b) in s_rep.evals.iter().zip(&p_rep.evals) {
         println!("{:>5}   {:<6.3}   {:<6.3}", a.step, a.metric, b.metric);
     }

@@ -6,14 +6,17 @@
 //!
 //! Requires artifacts:  make artifacts
 //! Run with:            cargo run --release --example pretrain_charlm
-//!                      [--steps N] [--layers N] [--no-xla]
+//!                      [--steps N] [--layers N] [--workers N] [--no-xla]
+//!
+//! `--workers N` (N > 1) runs the MGRIT adjoint relaxation on the
+//! ThreadedMgrit backend — bitwise identical losses, real OS threads.
 //!
 //! The run is recorded in EXPERIMENTS.md §End-to-end.
 
-use std::rc::Rc;
+use std::sync::Arc;
 
 use layertime::config::{presets, MgritConfig};
-use layertime::coordinator::{Task, TrainRun};
+use layertime::coordinator::{Session, Task};
 use layertime::runtime::XlaEngine;
 use layertime::util::cli::Args;
 use layertime::util::csv::CsvWriter;
@@ -22,6 +25,7 @@ fn main() -> anyhow::Result<()> {
     let args = Args::from_env();
     let steps = args.get_usize("steps", 200);
     let layers = args.get_usize("layers", 20);
+    let workers = args.get_usize("workers", 1);
     let use_xla = !args.has_flag("no-xla");
 
     // GPT preset (paper Appendix B): 2+2 buffer layers, serial forward,
@@ -37,7 +41,7 @@ fn main() -> anyhow::Result<()> {
     rc.train.warmup = steps / 10;
 
     let engine = if use_xla {
-        let e = Rc::new(XlaEngine::load("artifacts")?);
+        let e = Arc::new(XlaEngine::load("artifacts")?);
         e.warmup()?; // compile all entry points up front
         println!("PJRT platform: {}", e.platform());
         Some(e)
@@ -55,7 +59,13 @@ fn main() -> anyhow::Result<()> {
         if use_xla { "XLA/PJRT (Pallas kernels)" } else { "rust reference" }
     );
 
-    let mut run = TrainRun::new(rc, Task::Lm, engine)?;
+    let mut run = Session::builder()
+        .config(rc)
+        .task(Task::Lm)
+        .engine(engine)
+        .workers(workers)
+        .build()?;
+    println!("backend: {} ({} worker(s))", run.backend_name(), workers.max(1));
     let t0 = std::time::Instant::now();
     let report = run.train()?;
     let wall = t0.elapsed().as_secs_f64();

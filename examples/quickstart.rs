@@ -1,16 +1,21 @@
-//! Quickstart: layer-parallel training in ~30 lines.
+//! Quickstart: layer-parallel training in ~30 lines of the Session API.
 //!
 //! Trains the morphological-classification preset with MGRIT layer-
 //! parallelism and compares the result against exact serial training from
 //! the same initialization — the paper's core accuracy claim in miniature.
 //!
-//! Run with:  cargo run --release --example quickstart
+//! Run with:  cargo run --release --example quickstart [-- --workers N]
+//!            (N > 1 runs the relaxation on the ThreadedMgrit backend)
 
-use layertime::config::{presets, MgritConfig};
-use layertime::coordinator::{Task, TrainRun};
+use layertime::config::presets;
+use layertime::coordinator::{Serial, Session, Task};
 use layertime::model::{Init, ParamStore};
+use layertime::util::cli::Args;
 
 fn main() -> anyhow::Result<()> {
+    let args = Args::from_env();
+    let workers = args.get_usize("workers", 1);
+
     // 1. pick a preset (paper Table 2/3 analogue) and shrink the run
     let mut rc = presets::mc_tiny();
     rc.model.n_enc_layers = 16;
@@ -20,17 +25,27 @@ fn main() -> anyhow::Result<()> {
     // 2. one shared initialization for a fair comparison
     let init = ParamStore::init(&rc.model, Init::Default, rc.train.seed);
 
-    // 3. serial baseline
-    let mut serial_rc = rc.clone();
-    serial_rc.mgrit = MgritConfig::serial();
-    let mut serial = TrainRun::from_params(serial_rc, Task::Tag, init.deep_clone(), None)?;
+    // 3. serial baseline (the Serial backend propagates exactly)
+    let mut serial = Session::builder()
+        .config(rc.clone())
+        .task(Task::Tag)
+        .params(init.deep_clone())
+        .backend(Box::new(Serial))
+        .build()?;
     let serial_report = serial.train()?;
 
-    // 4. layer-parallel (MGRIT, cf=2, 2 levels, 2 fwd + 1 bwd iterations)
-    let mut lp = TrainRun::from_params(rc, Task::Tag, init, None)?;
+    // 4. layer-parallel (MGRIT, cf=2, 2 levels, 2 fwd + 1 bwd iterations);
+    //    --workers N>1 drives the relaxation over N threads, bitwise equal
+    let mut lp = Session::builder()
+        .config(rc)
+        .task(Task::Tag)
+        .params(init)
+        .workers(workers)
+        .build()?;
     let lp_report = lp.train()?;
 
     // 5. compare
+    println!("backends: {} vs {}", serial.backend_name(), lp.backend_name());
     println!("step   serial-loss   layer-parallel-loss");
     for (a, b) in serial_report.curve.iter().zip(&lp_report.curve).step_by(10) {
         println!("{:>4}   {:>11.4}   {:>19.4}", a.step, a.loss, b.loss);

@@ -5,16 +5,18 @@
 //! *stacked* state Z = [X, Y], comparing pure layer-parallel against the
 //! parallel→serial switching scheme of Fig. 3 (right), and reports BLEU.
 //!
-//! Run with:  cargo run --release --example translate_seq2seq [--steps N]
+//! Run with:  cargo run --release --example translate_seq2seq
+//!            [-- --steps N] [--workers N]
 
 use layertime::config::{presets, MgritConfig};
-use layertime::coordinator::{Task, TrainRun};
+use layertime::coordinator::{Session, Task};
 use layertime::model::{Init, ParamStore};
 use layertime::util::cli::Args;
 
 fn main() -> anyhow::Result<()> {
     let args = Args::from_env();
     let steps = args.get_usize("steps", 150);
+    let workers = args.get_usize("workers", 1);
 
     let mut rc = presets::mt_small();
     rc.model.n_enc_layers = 6;
@@ -31,16 +33,27 @@ fn main() -> anyhow::Result<()> {
     // pure layer-parallel (no switching)
     let mut pure_rc = rc.clone();
     pure_rc.train.adaptive = false;
-    let mut pure = TrainRun::from_params(pure_rc, Task::Translate, init.deep_clone(), None)?;
+    let mut pure = Session::builder()
+        .config(pure_rc)
+        .task(Task::Translate)
+        .params(init.deep_clone())
+        .workers(workers)
+        .build()?;
     let pure_rep = pure.train()?;
 
     // adaptive: parallel phase then switch to serial (Fig. 3 right, "2->1")
     let mut ada_rc = rc.clone();
     ada_rc.train.adaptive = true;
     ada_rc.train.probe_every = (steps / 5).max(5);
-    let mut ada = TrainRun::from_params(ada_rc, Task::Translate, init, None)?;
+    let mut ada = Session::builder()
+        .config(ada_rc)
+        .task(Task::Translate)
+        .params(init)
+        .workers(workers)
+        .build()?;
     let ada_rep = ada.train()?;
 
+    println!("backend: {} ({} worker(s))", pure.backend_name(), workers.max(1));
     println!("step   pure-LP loss   adaptive loss");
     for (a, b) in pure_rep.curve.iter().zip(&ada_rep.curve).step_by((steps / 15).max(1)) {
         println!("{:>4}   {:>12.4}   {:>13.4}", a.step, a.loss, b.loss);

@@ -28,7 +28,7 @@ fn main() -> anyhow::Result<()> {
     let n_layers = rc.model.total_layers();
     let checkpoints = [0usize, 30, 60, 90, 120];
     let mut run = TrainRun::new(rc, Task::Lm, None)?;
-    let w0: Vec<Vec<f32>> = run.params.layers.borrow().clone();
+    let w0: Vec<Vec<f32>> = run.params.layers.read().unwrap().clone();
 
     let mut rng = Rng::new(777);
     let mut lip_rows: Vec<(usize, Vec<f32>)> = vec![];
@@ -48,7 +48,7 @@ fn main() -> anyhow::Result<()> {
             states.push(next);
         }
         let lip = estimate_layer_lipschitz(&prop, &states, 8, 1e-2, &mut rng);
-        let drift = weight_drift(&run.params.layers.borrow(), &w0);
+        let drift = weight_drift(&run.params.layers.read().unwrap(), &w0);
         lip_rows.push((cp, lip));
         drift_rows.push((cp, drift));
     }

@@ -8,13 +8,12 @@
 //! Uses artifacts when present (`make artifacts`), otherwise skips the XLA
 //! rows.
 
-use std::cell::RefCell;
-use std::rc::Rc;
+use std::sync::Arc;
 
 use layertime::config::{presets, Arch, MgritConfig};
 use layertime::coordinator::{Task, TrainRun};
 use layertime::mgrit::MgritSolver;
-use layertime::ode::{LinearOde, Propagator, RustPropagator, XlaPropagator};
+use layertime::ode::{shared_params, LinearOde, Propagator, RustPropagator, XlaPropagator};
 use layertime::runtime::{Value, XlaEngine};
 use layertime::tensor::Tensor;
 use layertime::util::bench::BenchRunner;
@@ -46,7 +45,7 @@ fn main() -> anyhow::Result<()> {
     model.seq = 32;
     model.batch = 8;
     model.arch = Arch::Encoder;
-    let params = Rc::new(RefCell::new(vec![rng.normal_vec(model.p_enc(), 0.02); 1]));
+    let params = shared_params(vec![rng.normal_vec(model.p_enc(), 0.02); 1]);
     let rust_prop = RustPropagator::new(&model, 1.0, params.clone());
     let z = Tensor::randn(&mut rng, &rust_prop.state_shape(), 1.0);
     let ct = Tensor::randn(&mut rng, &rust_prop.state_shape(), 1.0);
@@ -56,7 +55,7 @@ fn main() -> anyhow::Result<()> {
     // --- XLA Φ (artifacts) --------------------------------------------------
     let dir = std::env::var("LAYERTIME_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
     if std::path::Path::new(&dir).join("manifest.json").exists() {
-        let engine = Rc::new(XlaEngine::load(&dir)?);
+        let engine = Arc::new(XlaEngine::load(&dir)?);
         engine.warmup()?;
         let xla_prop = XlaPropagator::new(engine.clone(), &model, 1.0, params.clone())?;
         runner.report("Φ fwd  (XLA/PJRT, Pallas kernels)", || xla_prop.step(0, 1.0, &z));
@@ -67,7 +66,7 @@ fn main() -> anyhow::Result<()> {
         let ref_dir =
             std::env::var("LAYERTIME_ARTIFACTS_REF").unwrap_or_else(|_| "artifacts_ref".into());
         if std::path::Path::new(&ref_dir).join("manifest.json").exists() {
-            let engine_ref = Rc::new(XlaEngine::load(&ref_dir)?);
+            let engine_ref = Arc::new(XlaEngine::load(&ref_dir)?);
             engine_ref.warmup()?;
             let prop_ref = XlaPropagator::new(engine_ref, &model, 1.0, params.clone())?;
             runner.report("Φ fwd  (XLA/PJRT, pure-jnp lowering)", || prop_ref.step(0, 1.0, &z));
@@ -78,7 +77,7 @@ fn main() -> anyhow::Result<()> {
         // marshalling: executable with pre-built args vs building args
         let exe = engine.executable("enc_step")?;
         let th = {
-            let p = params.borrow();
+            let p = params.read().unwrap();
             Tensor::from_vec(p[0].clone(), &[p[0].len()])
         };
         let args =
@@ -86,7 +85,7 @@ fn main() -> anyhow::Result<()> {
         runner.report("enc_step call (prebuilt args)", || exe.call(&args).unwrap());
 
         // MGRIT forward over XLA Φ, 8 layers
-        let params8 = Rc::new(RefCell::new(vec![rng.normal_vec(model.p_enc(), 0.02); 8]));
+        let params8 = shared_params(vec![rng.normal_vec(model.p_enc(), 0.02); 8]);
         let prop8 = XlaPropagator::new(engine.clone(), &model, 1.0, params8)?;
         let s8 = MgritSolver::new(
             &prop8,

@@ -1,0 +1,197 @@
+//! `Backend`: the execution strategy of a [`super::Session`]'s forward and
+//! adjoint solves.
+//!
+//! Three first-class implementations:
+//!
+//! * [`Serial`] — exact serial propagation, ignoring the configured MGRIT
+//!   iteration budget (the baseline / post-switch mode of §3.2.3);
+//! * [`Mgrit`] — the single-threaded MGRIT solver (`None` iterations still
+//!   mean an exact solve, matching [`crate::config::MgritConfig`]);
+//! * [`ThreadedMgrit`] — real multi-worker MGRIT: every relaxation sweep of
+//!   the forward *and* adjoint V-cycles runs through
+//!   [`crate::parallel::exec::parallel_fc_relax`] on OS threads with
+//!   channel-fabric halo exchange, bitwise identical to [`Mgrit`].
+//!
+//! All three share the solver plumbing through the trait's default
+//! methods, so a custom backend only overrides what it changes.
+
+use crate::config::MgritConfig;
+use crate::mgrit::{MgritSolver, SolveStats};
+use crate::ode::Propagator;
+use crate::tensor::Tensor;
+
+/// Execution strategy for the MGRIT-shaped solves of one training step.
+pub trait Backend: Send + Sync {
+    /// Short name for logs (`"serial"`, `"mgrit"`, `"threaded-mgrit"`).
+    fn name(&self) -> &'static str;
+
+    /// Relaxation worker threads (1 = single-threaded schedule).
+    fn workers(&self) -> usize {
+        1
+    }
+
+    /// Map the configured iteration budget to this backend's solve mode
+    /// (`None` = exact serial propagation).
+    fn solve_iters(&self, configured: Option<usize>) -> Option<usize> {
+        configured
+    }
+
+    /// Does this backend always propagate exactly (serially)?
+    fn forces_exact(&self) -> bool {
+        self.solve_iters(Some(1)).is_none()
+    }
+
+    /// Forward solve over `prop` from `z0`; returns all fine-grid states
+    /// Z_0..Z_N and statistics.
+    fn forward(
+        &self,
+        prop: &dyn Propagator,
+        cfg: &MgritConfig,
+        z0: &Tensor,
+        iters: Option<usize>,
+        warm: Option<&[Tensor]>,
+        track_residuals: bool,
+    ) -> (Vec<Tensor>, SolveStats) {
+        MgritSolver::with_workers(prop, cfg.clone(), self.workers()).forward(
+            z0,
+            self.solve_iters(iters),
+            warm,
+            track_residuals,
+        )
+    }
+
+    /// Adjoint solve over the frozen `states` from the cotangent `ct`;
+    /// returns λ_0..λ_N.
+    fn adjoint(
+        &self,
+        prop: &dyn Propagator,
+        cfg: &MgritConfig,
+        states: &[Tensor],
+        ct: &Tensor,
+        iters: Option<usize>,
+        track_residuals: bool,
+    ) -> (Vec<Tensor>, SolveStats) {
+        MgritSolver::with_workers(prop, cfg.clone(), self.workers()).adjoint(
+            states,
+            ct,
+            self.solve_iters(iters),
+            track_residuals,
+        )
+    }
+
+    /// Per-layer parameter gradients on the fine grid.
+    fn gradients(
+        &self,
+        prop: &dyn Propagator,
+        cfg: &MgritConfig,
+        states: &[Tensor],
+        lambdas: &[Tensor],
+    ) -> Vec<Vec<f32>> {
+        MgritSolver::with_workers(prop, cfg.clone(), self.workers()).gradients(states, lambdas)
+    }
+}
+
+/// Exact serial propagation regardless of the configured iteration budget.
+pub struct Serial;
+
+impl Backend for Serial {
+    fn name(&self) -> &'static str {
+        "serial"
+    }
+
+    fn solve_iters(&self, _configured: Option<usize>) -> Option<usize> {
+        None
+    }
+}
+
+/// The single-threaded MGRIT solver (the pre-v2 training path).
+pub struct Mgrit;
+
+impl Backend for Mgrit {
+    fn name(&self) -> &'static str {
+        "mgrit"
+    }
+}
+
+/// Multi-worker MGRIT: relaxation sweeps execute on `workers` OS threads
+/// with halo exchange over the channel fabric — the paper's Fig. 2
+/// decomposition on the real training hot loop.
+///
+/// Threads are spawned per relaxation sweep (scoped, so borrows of Φ and
+/// the level state need no `'static` plumbing). On this 1-core testbed
+/// the win is schedule correctness, not wall-clock; a persistent worker
+/// pool that amortizes spawn cost across sweeps is the natural next step
+/// once multi-core hosts are in play (see ROADMAP).
+pub struct ThreadedMgrit {
+    pub workers: usize,
+}
+
+impl ThreadedMgrit {
+    pub fn new(workers: usize) -> ThreadedMgrit {
+        ThreadedMgrit { workers }
+    }
+}
+
+impl Backend for ThreadedMgrit {
+    fn name(&self) -> &'static str {
+        "threaded-mgrit"
+    }
+
+    fn workers(&self) -> usize {
+        self.workers.max(1)
+    }
+}
+
+/// Pick a backend from a worker count (the CLI's `--workers N` surface).
+pub fn backend_for_workers(workers: usize) -> Box<dyn Backend> {
+    if workers > 1 {
+        Box::new(ThreadedMgrit::new(workers))
+    } else {
+        Box::new(Mgrit)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ode::LinearOde;
+    use crate::util::rng::Rng;
+
+    fn cfg() -> MgritConfig {
+        MgritConfig { cf: 4, levels: 2, fwd_iters: Some(2), bwd_iters: Some(1), fcf: true }
+    }
+
+    #[test]
+    fn serial_backend_forces_exact_solves() {
+        assert!(Serial.forces_exact());
+        assert!(!Mgrit.forces_exact());
+        assert!(!ThreadedMgrit::new(4).forces_exact());
+        assert_eq!(Serial.solve_iters(Some(3)), None);
+        assert_eq!(Mgrit.solve_iters(Some(3)), Some(3));
+    }
+
+    #[test]
+    fn backends_share_the_solver_plumbing() {
+        let mut rng = Rng::new(0);
+        let ode = LinearOde::random_stable(&mut rng, 4, 16, 0.1);
+        let z0 = Tensor::randn(&mut rng, &[4, 1], 1.0);
+        let (w_serial, st) = Serial.forward(&ode, &cfg(), &z0, Some(2), None, false);
+        assert!(st.serial);
+        let (w_mg, st) = Mgrit.forward(&ode, &cfg(), &z0, Some(8), None, false);
+        assert!(!st.serial);
+        // converged MGRIT ≈ serial
+        assert!(w_mg.last().unwrap().allclose(w_serial.last().unwrap(), 1e-4, 1e-4));
+        // threaded == single-threaded, bitwise
+        let (w_thr, _) = ThreadedMgrit::new(3).forward(&ode, &cfg(), &z0, Some(8), None, false);
+        for (a, b) in w_mg.iter().zip(&w_thr) {
+            assert_eq!(a.data(), b.data());
+        }
+    }
+
+    #[test]
+    fn workers_map_to_backends() {
+        assert_eq!(backend_for_workers(1).name(), "mgrit");
+        assert_eq!(backend_for_workers(4).name(), "threaded-mgrit");
+        assert_eq!(backend_for_workers(4).workers(), 4);
+    }
+}

@@ -1,19 +1,40 @@
 //! The training coordinator — the launcher-facing layer that composes
-//! embedding/heads ([`heads`]), the MGRIT engine, the adaptive controller,
-//! optimizers, and data pipelines into the paper's training procedure.
+//! embedding/heads, the MGRIT engine, the adaptive controller, optimizers,
+//! and data pipelines into the paper's training procedure.
 //!
+//! Session API v2 layering:
+//!
+//! * [`session`] — [`Session`] + [`SessionBuilder`]: the composable run
+//!   (`Session::builder().preset(..).propagator(..).backend(..)
+//!   .objective(..).build()?`).
+//! * [`backend`] — [`Backend`]: execution strategy of the forward/adjoint
+//!   solves (`Serial` / `Mgrit` / `ThreadedMgrit`, the last driving
+//!   multi-worker relaxation through `parallel::exec` on the hot loop).
+//! * [`objective`] — [`Objective`]: open workload interface (data
+//!   sampling, loss head, validation metric) replacing the closed task
+//!   enums.
 //! * [`heads`] — pure-Rust embedding and loss heads (fwd+bwd). The ODE
 //!   layers dominate compute and run through XLA; heads are O(B·S·D·V)
 //!   and run on the coordinator.
 //! * [`range`] — a sub-range view of a propagator: buffer layers
 //!   (Appendix B) run serially outside the MGRIT domain.
-//! * [`trainer`] — `TrainRun`: batch loop, forward/adjoint MGRIT solves,
-//!   §3.2.3 probes, gradient clipping, optimizer updates, evaluation
-//!   (accuracy / BLEU), CSV run recording.
+//! * [`trainer`] — the preset→[`Task`]→objective mapping and the v1
+//!   [`TrainRun`] compatibility alias.
 
+pub mod backend;
 pub mod heads;
+pub mod objective;
 pub mod range;
+pub mod session;
 pub mod trainer;
 
+pub use backend::{backend_for_workers, Backend, Mgrit, Serial, ThreadedMgrit};
+pub use objective::{
+    ClsObjective, EvalAccum, HeadGrads, LmObjective, LossOut, Objective, TagObjective,
+    TrainBatch, TranslateObjective,
+};
 pub use range::RangeProp;
-pub use trainer::{Task, TrainReport, TrainRun};
+pub use session::{
+    EvalRecord, PropagatorKind, Session, SessionBuilder, StepRecord, TrainReport,
+};
+pub use trainer::{Task, TrainRun};

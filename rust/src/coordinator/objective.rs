@@ -1,0 +1,430 @@
+//! `Objective`: the open training-workload interface of the Session API.
+//!
+//! An objective owns its data source and defines how a batch is sampled,
+//! how the loss head maps the final activation to (loss, cotangent, head
+//! gradients), and how validation batches fold into a metric. The paper's
+//! five tasks ship as four implementations ([`LmObjective`] covers both
+//! causal LM and MLM); new workloads plug in by implementing the trait —
+//! the coordinator never enumerates tasks.
+
+use crate::config::ModelConfig;
+use crate::data::charlm::CharCorpus;
+use crate::data::images::ImageTask;
+use crate::data::morpho::MorphoTask;
+use crate::data::translate::TranslateTask;
+use crate::model::ParamStore;
+use crate::tensor::Tensor;
+use crate::util::rng::Rng;
+
+use super::heads;
+
+/// One sampled training/validation batch in the coordinator's unified
+/// layout (unused fields stay empty/None).
+#[derive(Debug, Clone)]
+pub struct TrainBatch {
+    /// Input token ids [B, S] (encoder side for EncDec).
+    pub tokens: Vec<i32>,
+    /// Token-level targets [B, S] — empty for classification.
+    pub targets: Vec<i32>,
+    /// Loss mask [B, S] — empty for classification.
+    pub mask: Vec<f32>,
+    /// Sequence-level labels [B] — classification only.
+    pub labels: Vec<i32>,
+    /// Decoder input (shifted right) [B, S] — EncDec only; its presence
+    /// selects the stacked state Z = [X, Y].
+    pub tgt_in: Option<Vec<i32>>,
+}
+
+/// What the loss head produced for one micro-batch.
+pub struct LossOut {
+    pub loss: f32,
+    /// Correct predictions (numerator of the batch accuracy).
+    pub correct: f32,
+    /// Accuracy denominator (masked tokens / tokens / sequences).
+    pub denom: f32,
+    /// Loss cotangent w.r.t. the head-side final activation [B, S, D].
+    pub lam_head: Tensor,
+    /// Gradients of the head parameter groups this objective touches.
+    pub head: HeadGrads,
+}
+
+/// Accumulator for validation metrics across eval batches.
+#[derive(Debug, Clone, Default)]
+pub struct EvalAccum {
+    pub correct: f64,
+    pub total: f64,
+    /// (prediction, reference) token sequences for corpus-level metrics
+    /// (BLEU); empty for accuracy-style objectives.
+    pub pairs: Vec<(Vec<i32>, Vec<i32>)>,
+}
+
+/// A training workload: data source + loss head + validation metric.
+///
+/// Implementations must be deterministic in the `Rng` they are handed so
+/// backend-parity holds bitwise across execution strategies. `Send + Sync`
+/// keeps whole `Session`s movable across threads, matching the
+/// [`crate::ode::Propagator`] / [`super::backend::Backend`] contracts.
+pub trait Objective: Send + Sync {
+    /// Short name for logs (`"mlm"`, `"tag"`, …).
+    fn name(&self) -> &'static str;
+
+    /// Sample one batch (training and validation share this; the caller
+    /// controls the stream via the `Rng`).
+    fn sample(&self, rng: &mut Rng, m: &ModelConfig) -> TrainBatch;
+
+    /// Loss + cotangent + head-parameter gradients at the final activation
+    /// `x_final` [B, S, D] (decoder half for EncDec).
+    fn loss(
+        &self,
+        x_final: &Tensor,
+        params: &ParamStore,
+        batch: &TrainBatch,
+        m: &ModelConfig,
+    ) -> LossOut;
+
+    /// Fold one validation batch into the accumulator.
+    fn eval_batch(
+        &self,
+        x_final: &Tensor,
+        params: &ParamStore,
+        batch: &TrainBatch,
+        m: &ModelConfig,
+        acc: &mut EvalAccum,
+    );
+
+    /// Final metric from the accumulated validation state (accuracy, BLEU).
+    fn metric(&self, acc: &EvalAccum) -> f64;
+}
+
+/// Character language modeling: causal (GPT) or masked (BERT).
+pub struct LmObjective {
+    corpus: CharCorpus,
+    /// `Some(mask_id)` → MLM with that mask token; `None` → causal LM.
+    mask_id: Option<i32>,
+    mask_rate: f32,
+}
+
+impl LmObjective {
+    pub fn causal(corpus: CharCorpus) -> LmObjective {
+        LmObjective { corpus, mask_id: None, mask_rate: 0.0 }
+    }
+
+    pub fn masked(corpus: CharCorpus, mask_id: i32, mask_rate: f32) -> LmObjective {
+        LmObjective { corpus, mask_id: Some(mask_id), mask_rate }
+    }
+}
+
+impl Objective for LmObjective {
+    fn name(&self) -> &'static str {
+        if self.mask_id.is_some() {
+            "mlm"
+        } else {
+            "lm"
+        }
+    }
+
+    fn sample(&self, rng: &mut Rng, m: &ModelConfig) -> TrainBatch {
+        let b = match self.mask_id {
+            Some(id) => self.corpus.mlm_batch(rng, m.batch, m.seq, self.mask_rate, id),
+            None => self.corpus.lm_batch(rng, m.batch, m.seq),
+        };
+        TrainBatch { tokens: b.tokens, targets: b.targets, mask: b.mask, labels: vec![], tgt_in: None }
+    }
+
+    fn loss(
+        &self,
+        x_final: &Tensor,
+        params: &ParamStore,
+        batch: &TrainBatch,
+        m: &ModelConfig,
+    ) -> LossOut {
+        let (loss, correct, lam_head, gw) =
+            heads::lm_loss(x_final, &params.w_out, &batch.targets, &batch.mask, m.vocab);
+        let denom = batch.mask.iter().sum::<f32>().max(1.0);
+        LossOut { loss, correct, denom, lam_head, head: HeadGrads::out(gw) }
+    }
+
+    fn eval_batch(
+        &self,
+        x_final: &Tensor,
+        params: &ParamStore,
+        batch: &TrainBatch,
+        m: &ModelConfig,
+        acc: &mut EvalAccum,
+    ) {
+        let (_, c, _, _) =
+            heads::lm_loss(x_final, &params.w_out, &batch.targets, &batch.mask, m.vocab);
+        acc.correct += c as f64;
+        acc.total += batch.mask.iter().sum::<f32>() as f64;
+    }
+
+    fn metric(&self, acc: &EvalAccum) -> f64 {
+        acc.correct / acc.total.max(1.0)
+    }
+}
+
+/// Per-token morphological tagging (the paper's MC task).
+pub struct TagObjective {
+    task: MorphoTask,
+}
+
+impl TagObjective {
+    pub fn new(task: MorphoTask) -> TagObjective {
+        TagObjective { task }
+    }
+}
+
+impl Objective for TagObjective {
+    fn name(&self) -> &'static str {
+        "tag"
+    }
+
+    fn sample(&self, rng: &mut Rng, m: &ModelConfig) -> TrainBatch {
+        let b = self.task.batch(rng, m.batch, m.seq);
+        TrainBatch { tokens: b.tokens, targets: b.targets, mask: b.mask, labels: vec![], tgt_in: None }
+    }
+
+    fn loss(
+        &self,
+        x_final: &Tensor,
+        params: &ParamStore,
+        batch: &TrainBatch,
+        m: &ModelConfig,
+    ) -> LossOut {
+        let (loss, correct, lam_head, gw) =
+            heads::tag_loss(x_final, &params.w_cls, &batch.targets, m.n_classes);
+        LossOut {
+            loss,
+            correct,
+            denom: (m.batch * m.seq) as f32,
+            lam_head,
+            head: HeadGrads::cls(gw),
+        }
+    }
+
+    fn eval_batch(
+        &self,
+        x_final: &Tensor,
+        params: &ParamStore,
+        batch: &TrainBatch,
+        m: &ModelConfig,
+        acc: &mut EvalAccum,
+    ) {
+        let (_, c, _, _) = heads::tag_loss(x_final, &params.w_cls, &batch.targets, m.n_classes);
+        acc.correct += c as f64;
+        acc.total += (m.batch * m.seq) as f64;
+    }
+
+    fn metric(&self, acc: &EvalAccum) -> f64 {
+        acc.correct / acc.total.max(1.0)
+    }
+}
+
+/// Sequence classification over patch tokens (the paper's ViT task).
+pub struct ClsObjective {
+    task: ImageTask,
+}
+
+impl ClsObjective {
+    pub fn new(task: ImageTask) -> ClsObjective {
+        ClsObjective { task }
+    }
+}
+
+impl Objective for ClsObjective {
+    fn name(&self) -> &'static str {
+        "cls"
+    }
+
+    fn sample(&self, rng: &mut Rng, m: &ModelConfig) -> TrainBatch {
+        let b = self.task.batch(rng, m.batch);
+        TrainBatch { tokens: b.tokens, targets: vec![], mask: vec![], labels: b.labels, tgt_in: None }
+    }
+
+    fn loss(
+        &self,
+        x_final: &Tensor,
+        params: &ParamStore,
+        batch: &TrainBatch,
+        m: &ModelConfig,
+    ) -> LossOut {
+        let (loss, correct, lam_head, gw) =
+            heads::cls_loss(x_final, &params.w_cls, &batch.labels, m.n_classes);
+        LossOut { loss, correct, denom: m.batch as f32, lam_head, head: HeadGrads::cls(gw) }
+    }
+
+    fn eval_batch(
+        &self,
+        x_final: &Tensor,
+        params: &ParamStore,
+        batch: &TrainBatch,
+        m: &ModelConfig,
+        acc: &mut EvalAccum,
+    ) {
+        let (_, c, _, _) = heads::cls_loss(x_final, &params.w_cls, &batch.labels, m.n_classes);
+        acc.correct += c as f64;
+        acc.total += m.batch as f64;
+    }
+
+    fn metric(&self, acc: &EvalAccum) -> f64 {
+        acc.correct / acc.total.max(1.0)
+    }
+}
+
+/// Encoder-decoder translation over the stacked state Z = [X, Y] (the
+/// paper's MT task); validation metric is BLEU-4.
+pub struct TranslateObjective {
+    task: TranslateTask,
+}
+
+impl TranslateObjective {
+    pub fn new(task: TranslateTask) -> TranslateObjective {
+        TranslateObjective { task }
+    }
+}
+
+impl Objective for TranslateObjective {
+    fn name(&self) -> &'static str {
+        "translate"
+    }
+
+    fn sample(&self, rng: &mut Rng, m: &ModelConfig) -> TrainBatch {
+        let b = self.task.batch(rng, m.batch, m.seq);
+        TrainBatch {
+            tokens: b.src,
+            targets: b.tgt_out,
+            mask: b.mask,
+            labels: vec![],
+            tgt_in: Some(b.tgt_in),
+        }
+    }
+
+    fn loss(
+        &self,
+        x_final: &Tensor,
+        params: &ParamStore,
+        batch: &TrainBatch,
+        m: &ModelConfig,
+    ) -> LossOut {
+        let (loss, correct, lam_head, gw) =
+            heads::lm_loss(x_final, &params.w_out, &batch.targets, &batch.mask, m.vocab);
+        let denom = batch.mask.iter().sum::<f32>().max(1.0);
+        LossOut { loss, correct, denom, lam_head, head: HeadGrads::out(gw) }
+    }
+
+    fn eval_batch(
+        &self,
+        x_final: &Tensor,
+        params: &ParamStore,
+        batch: &TrainBatch,
+        m: &ModelConfig,
+        acc: &mut EvalAccum,
+    ) {
+        let preds = heads::argmax_tokens(x_final, &params.w_out, m.vocab);
+        for b in 0..m.batch {
+            acc.pairs.push((
+                preds[b * m.seq..(b + 1) * m.seq].to_vec(),
+                batch.targets[b * m.seq..(b + 1) * m.seq].to_vec(),
+            ));
+        }
+    }
+
+    fn metric(&self, acc: &EvalAccum) -> f64 {
+        crate::analysis::bleu4(&acc.pairs)
+    }
+}
+
+/// Gradients of the non-layer parameter groups (embeddings + heads).
+pub struct HeadGrads {
+    pub emb: Vec<f32>,
+    pub pos: Vec<f32>,
+    pub out: Vec<f32>,
+    pub cls: Vec<f32>,
+}
+
+impl HeadGrads {
+    /// LM-head gradient only.
+    pub fn out(gw: Vec<f32>) -> HeadGrads {
+        HeadGrads { emb: vec![], pos: vec![], out: gw, cls: vec![] }
+    }
+
+    /// Classifier-head gradient only.
+    pub fn cls(gw: Vec<f32>) -> HeadGrads {
+        HeadGrads { emb: vec![], pos: vec![], out: vec![], cls: gw }
+    }
+
+    pub(super) fn ensure_like(v: &mut Vec<f32>, n: usize) {
+        if v.is_empty() {
+            v.resize(n, 0.0);
+        }
+    }
+
+    pub(super) fn add(&mut self, other: &HeadGrads) {
+        for (a, b) in [
+            (&mut self.emb, &other.emb),
+            (&mut self.pos, &other.pos),
+            (&mut self.out, &other.out),
+            (&mut self.cls, &other.cls),
+        ] {
+            if b.is_empty() {
+                continue;
+            }
+            Self::ensure_like(a, b.len());
+            for (x, y) in a.iter_mut().zip(b) {
+                *x += y;
+            }
+        }
+    }
+
+    pub(super) fn scale(&mut self, s: f32) {
+        for v in [&mut self.emb, &mut self.pos, &mut self.out, &mut self.cls] {
+            v.iter_mut().for_each(|x| *x *= s);
+        }
+    }
+
+    pub(super) fn as_mut_refs(&mut self) -> Vec<&mut [f32]> {
+        [&mut self.emb, &mut self.pos, &mut self.out, &mut self.cls]
+            .into_iter()
+            .filter(|v| !v.is_empty())
+            .map(|v| v.as_mut_slice())
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets;
+
+    #[test]
+    fn objectives_sample_consistent_shapes() {
+        let m = presets::mc_tiny().model;
+        let mut rng = Rng::new(0);
+        let obj = TagObjective::new(MorphoTask::new(m.vocab, m.n_classes, 1));
+        let b = obj.sample(&mut rng, &m);
+        assert_eq!(b.tokens.len(), m.batch * m.seq);
+        assert_eq!(b.targets.len(), m.batch * m.seq);
+        assert!(b.tgt_in.is_none());
+        assert_eq!(obj.name(), "tag");
+    }
+
+    #[test]
+    fn translate_samples_decoder_input() {
+        let m = presets::mt_small().model;
+        let mut rng = Rng::new(0);
+        let obj = TranslateObjective::new(TranslateTask::new(m.vocab, 1, false));
+        let b = obj.sample(&mut rng, &m);
+        assert_eq!(b.tgt_in.as_ref().unwrap().len(), m.batch * m.seq);
+    }
+
+    #[test]
+    fn head_grads_accumulate_and_scale() {
+        let mut a = HeadGrads::out(vec![1.0, 2.0]);
+        let b = HeadGrads::out(vec![3.0, 4.0]);
+        a.add(&b);
+        assert_eq!(a.out, vec![4.0, 6.0]);
+        a.scale(0.5);
+        assert_eq!(a.out, vec![2.0, 3.0]);
+        assert!(a.as_mut_refs().len() == 1);
+    }
+}

@@ -1,0 +1,606 @@
+//! `Session`: the composable training run of the Session API v2.
+//!
+//! A session is assembled from four orthogonal pieces by
+//! [`SessionBuilder`]:
+//!
+//! ```text
+//! Session::builder()
+//!     .preset("mc")                         // or .config(RunConfig)
+//!     .propagator(PropagatorKind::Rust)     // or Xla(Arc<XlaEngine>)
+//!     .backend(Box::new(ThreadedMgrit::new(4)))   // or .workers(4)
+//!     .objective(Box::new(TagObjective::new(..))) // or .task(Task::Tag)
+//!     .build()?
+//! ```
+//!
+//! Per batch: embed → (serial open buffers via `step_range`) → backend
+//! forward solve over the ParallelNet → (serial close buffers) → objective
+//! loss head → backend adjoint solve → parameter gradients → clip →
+//! optimizer. The §3.2.3 controller probes the MGRIT convergence factor on
+//! a cadence and can raise iteration counts or switch the run to serial.
+//!
+//! Data parallelism is executed as `dp` sequential micro-batches with
+//! gradient averaging — bit-identical math to distributed replicas (the
+//! *time* dimension of dp lives in `parallel::simulator`; this box has one
+//! core, DESIGN.md §Substitutions).
+
+use std::sync::Arc;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::adaptive::{AdaptiveController, ProbeRecord};
+use crate::config::{presets, Arch, RunConfig};
+use crate::model::{Init, ParamStore};
+use crate::ode::{Propagator, RustPropagator, XlaPropagator};
+use crate::opt::{clip_global_norm, Decay, LrSchedule, Optimizer};
+use crate::runtime::XlaEngine;
+use crate::tensor::Tensor;
+use crate::util::rng::Rng;
+
+use super::backend::{backend_for_workers, Backend, Mgrit};
+use super::heads;
+use super::objective::{EvalAccum, HeadGrads, Objective, TrainBatch};
+use super::range::RangeProp;
+use super::trainer::Task;
+
+/// One training-step record (drives the Fig. 3/4 curves).
+#[derive(Debug, Clone)]
+pub struct StepRecord {
+    pub step: usize,
+    pub loss: f32,
+    pub acc: f32,
+    pub lr: f32,
+    pub serial: bool,
+    pub rho_fwd: Option<f64>,
+    pub rho_bwd: Option<f64>,
+}
+
+/// Validation record: metric is accuracy (or BLEU for Translate).
+#[derive(Debug, Clone)]
+pub struct EvalRecord {
+    pub step: usize,
+    pub metric: f64,
+}
+
+/// Everything a run produced.
+#[derive(Debug, Clone, Default)]
+pub struct TrainReport {
+    pub curve: Vec<StepRecord>,
+    pub evals: Vec<EvalRecord>,
+    pub probes: Vec<ProbeRecord>,
+    pub final_loss: f32,
+    pub final_metric: f64,
+    pub phi_fwd: u64,
+    pub phi_vjp: u64,
+    pub switched_at: Option<usize>,
+}
+
+/// Which Φ implementation a session runs on.
+pub enum PropagatorKind {
+    /// The pure-Rust reference transformer (artifact-free).
+    Rust,
+    /// AOT artifacts through PJRT (the production path).
+    Xla(Arc<XlaEngine>),
+}
+
+/// Composable constructor for [`Session`]; every piece has a sensible
+/// default derived from the run config.
+pub struct SessionBuilder {
+    rc: Option<RunConfig>,
+    preset: Option<String>,
+    task: Option<Task>,
+    objective: Option<Box<dyn Objective>>,
+    backend: Option<Box<dyn Backend>>,
+    propagator: PropagatorKind,
+    params: Option<ParamStore>,
+    workers: Option<usize>,
+    warm_start: bool,
+}
+
+impl SessionBuilder {
+    /// Start from a named preset (resolved at `build`; unknown names error
+    /// with the list of valid presets).
+    pub fn preset(mut self, name: &str) -> Self {
+        self.preset = Some(name.to_string());
+        self
+    }
+
+    /// Start from an explicit run config (takes precedence over `preset`).
+    pub fn config(mut self, rc: RunConfig) -> Self {
+        self.rc = Some(rc);
+        self
+    }
+
+    /// Select one of the paper's five tasks (default: derived from the
+    /// config's preset name).
+    pub fn task(mut self, task: Task) -> Self {
+        self.task = Some(task);
+        self
+    }
+
+    /// Plug in a custom training objective (overrides `task`).
+    pub fn objective(mut self, objective: Box<dyn Objective>) -> Self {
+        self.objective = Some(objective);
+        self
+    }
+
+    /// Select the execution backend (default: [`Mgrit`], or
+    /// `ThreadedMgrit` when `.workers(n > 1)` was given).
+    pub fn backend(mut self, backend: Box<dyn Backend>) -> Self {
+        self.backend = Some(backend);
+        self
+    }
+
+    /// Convenience backend selection: `n > 1` → `ThreadedMgrit { n }`.
+    pub fn workers(mut self, n: usize) -> Self {
+        self.workers = Some(n);
+        self
+    }
+
+    /// Select the Φ implementation (default: pure Rust).
+    pub fn propagator(mut self, kind: PropagatorKind) -> Self {
+        self.propagator = kind;
+        self
+    }
+
+    /// Convenience: `Some(engine)` → XLA Φ, `None` → Rust Φ.
+    pub fn engine(self, engine: Option<Arc<XlaEngine>>) -> Self {
+        match engine {
+            Some(e) => self.propagator(PropagatorKind::Xla(e)),
+            None => self.propagator(PropagatorKind::Rust),
+        }
+    }
+
+    /// Train from existing parameters (fine-tuning / comparison runs).
+    pub fn params(mut self, params: ParamStore) -> Self {
+        self.params = Some(params);
+        self
+    }
+
+    /// Toggle TorchBraid-style warm starts of the forward solve.
+    pub fn warm_start(mut self, on: bool) -> Self {
+        self.warm_start = on;
+        self
+    }
+
+    /// Assemble the session, resolving defaults and validating the preset
+    /// and task names.
+    pub fn build(self) -> Result<Session> {
+        let rc = match (self.rc, self.preset) {
+            (Some(rc), _) => rc,
+            (None, Some(name)) => presets::by_name(&name).ok_or_else(|| {
+                anyhow!("unknown preset '{}' (valid: {})", name, presets::ALL.join(", "))
+            })?,
+            (None, None) => bail!("Session::builder() needs .preset(..) or .config(..)"),
+        };
+        let objective: Box<dyn Objective> = match (self.objective, self.task) {
+            (Some(o), _) => o,
+            (None, Some(t)) => t.objective(&rc.model, rc.train.seed),
+            (None, None) => Task::for_preset(&rc.name)?.objective(&rc.model, rc.train.seed),
+        };
+        let backend: Box<dyn Backend> = match (self.backend, self.workers) {
+            (Some(_), Some(_)) => {
+                bail!("SessionBuilder: .backend(..) and .workers(..) are both set — pick one \
+                       (workers is shorthand for selecting Mgrit/ThreadedMgrit)")
+            }
+            (Some(b), None) => b,
+            (None, Some(n)) => backend_for_workers(n),
+            (None, None) => Box::new(Mgrit),
+        };
+        let params = match self.params {
+            Some(p) => p,
+            None => {
+                let scheme =
+                    if rc.model.total_layers() >= 64 { Init::DeepNet } else { Init::Default };
+                ParamStore::init(&rc.model, scheme, rc.train.seed)
+            }
+        };
+        let prop: Box<dyn Propagator> = match self.propagator {
+            PropagatorKind::Rust => {
+                Box::new(RustPropagator::for_model(&rc.model, params.layers.clone()))
+            }
+            PropagatorKind::Xla(e) => {
+                Box::new(XlaPropagator::for_model(e, &rc.model, params.layers.clone())?)
+            }
+        };
+        let opt = Optimizer::new(rc.train.opt, &params.group_sizes(), rc.train.weight_decay);
+        let sched = LrSchedule {
+            base_lr: rc.train.lr,
+            warmup: rc.train.warmup,
+            decay: if rc.train.warmup > 0 {
+                Decay::Cosine { total: rc.train.steps, min_frac: 0.1 }
+            } else {
+                Decay::Constant
+            },
+        };
+        let controller = AdaptiveController::new(if rc.train.adaptive {
+            rc.train.probe_every
+        } else {
+            0
+        });
+        let seed = rc.train.seed;
+        Ok(Session {
+            rc,
+            params,
+            objective,
+            backend,
+            prop,
+            opt,
+            sched,
+            controller,
+            train_rng: Rng::new(seed.wrapping_mul(2) + 1),
+            val_rng_seed: seed.wrapping_mul(2) + 2,
+            warm: None,
+            warm_start: self.warm_start,
+            step: 0,
+            initial_loss: None,
+            switched_at: None,
+        })
+    }
+}
+
+/// A fully-wired training run (the paper's end-to-end procedure).
+pub struct Session {
+    pub rc: RunConfig,
+    pub params: ParamStore,
+    objective: Box<dyn Objective>,
+    backend: Box<dyn Backend>,
+    prop: Box<dyn Propagator>,
+    opt: Optimizer,
+    sched: LrSchedule,
+    pub controller: AdaptiveController,
+    train_rng: Rng,
+    val_rng_seed: u64,
+    /// Warm-start iterate for the MGRIT forward solve (TorchBraid-style).
+    warm: Option<Vec<Tensor>>,
+    pub warm_start: bool,
+    step: usize,
+    initial_loss: Option<f32>,
+    switched_at: Option<usize>,
+}
+
+impl Session {
+    /// Start assembling a session.
+    pub fn builder() -> SessionBuilder {
+        SessionBuilder {
+            rc: None,
+            preset: None,
+            task: None,
+            objective: None,
+            backend: None,
+            propagator: PropagatorKind::Rust,
+            params: None,
+            workers: None,
+            warm_start: true,
+        }
+    }
+
+    /// Compat shim for the v1 `TrainRun::new` signature: fresh parameters,
+    /// `engine = None` → pure-Rust Φ.
+    pub fn new(rc: RunConfig, task: Task, engine: Option<Arc<XlaEngine>>) -> Result<Session> {
+        Session::builder().config(rc).task(task).engine(engine).build()
+    }
+
+    /// Compat shim for the v1 `TrainRun::from_params` signature.
+    pub fn from_params(
+        rc: RunConfig,
+        task: Task,
+        params: ParamStore,
+        engine: Option<Arc<XlaEngine>>,
+    ) -> Result<Session> {
+        Session::builder().config(rc).task(task).params(params).engine(engine).build()
+    }
+
+    /// The active objective's short name.
+    pub fn objective_name(&self) -> &'static str {
+        self.objective.name()
+    }
+
+    /// The active backend's short name.
+    pub fn backend_name(&self) -> &'static str {
+        self.backend.name()
+    }
+
+    fn mid_range(&self) -> (usize, usize) {
+        let n = self.rc.model.total_layers();
+        let bo = self.rc.model.buffer_open;
+        let bc = self.rc.model.buffer_close;
+        (bo, n - bo - bc)
+    }
+
+    /// Embed a batch into the propagator's state shape.
+    fn embed(&self, tokens: &[i32], tgt_in: Option<&[i32]>) -> Tensor {
+        let m = &self.rc.model;
+        let x = heads::embed_fwd(tokens, &self.params.w_emb, &self.params.w_pos, m.batch, m.seq, m.d_model);
+        match tgt_in {
+            None => x,
+            Some(t) => {
+                let y = heads::embed_fwd(t, &self.params.w_emb, &self.params.w_pos, m.batch, m.seq, m.d_model);
+                let mut data = Vec::with_capacity(x.len() * 2);
+                data.extend_from_slice(x.data());
+                data.extend_from_slice(y.data());
+                Tensor::from_vec(data, &self.prop.state_shape())
+            }
+        }
+    }
+
+    /// Final decoder-side activation (the Y half for EncDec, x otherwise).
+    fn head_view(&self, z: &Tensor) -> Tensor {
+        let m = &self.rc.model;
+        if m.arch == Arch::EncDec {
+            let half = z.len() / 2;
+            Tensor::from_vec(z.data()[half..].to_vec(), &[m.batch, m.seq, m.d_model])
+        } else {
+            z.clone()
+        }
+    }
+
+    /// Lift a head cotangent back into the state shape.
+    fn lift_ct(&self, lam_head: Tensor) -> Tensor {
+        let m = &self.rc.model;
+        if m.arch == Arch::EncDec {
+            let mut data = vec![0.0f32; lam_head.len() * 2];
+            data[lam_head.len()..].copy_from_slice(lam_head.data());
+            Tensor::from_vec(data, &self.prop.state_shape())
+        } else {
+            lam_head
+        }
+    }
+
+    /// One micro-batch: forward, loss, adjoint, gradients (no update).
+    /// Returns (loss, acc, rho_fwd, rho_bwd, layer_grads, head_grads).
+    #[allow(clippy::type_complexity)]
+    fn micro_batch(
+        &mut self,
+        probe: bool,
+    ) -> (f32, f32, Option<f64>, Option<f64>, Vec<Vec<f32>>, HeadGrads) {
+        let m = self.rc.model.clone();
+        let n_layers = m.total_layers();
+        let (bo, n_mid) = self.mid_range();
+
+        // --- sample a batch ---------------------------------------------
+        let batch: TrainBatch = self.objective.sample(&mut self.train_rng, &m);
+
+        // --- forward ------------------------------------------------------
+        let z0 = self.embed(&batch.tokens, batch.tgt_in.as_deref());
+        let mut states: Vec<Tensor> = Vec::with_capacity(n_layers + 1);
+        states.push(z0);
+        if bo > 0 {
+            // open buffers: serial, batched under one dispatch (v2)
+            let buf = self.prop.step_range(0, bo, 1.0, &states[0]);
+            states.extend(buf);
+        }
+        let mid = RangeProp::new(self.prop.as_ref(), bo, n_mid);
+        let fwd_iters = if probe {
+            self.controller.probe_iters(&self.rc.mgrit).0
+        } else {
+            self.rc.mgrit.fwd_iters
+        };
+        let warm = if self.warm_start { self.warm.as_deref() } else { None };
+        let (mid_states, fstats) =
+            self.backend.forward(&mid, &self.rc.mgrit, &states[bo], fwd_iters, warm, probe);
+        if self.warm_start && !fstats.serial {
+            self.warm = Some(mid_states.clone());
+        }
+        states.extend(mid_states.into_iter().skip(1));
+        if bo + n_mid < n_layers {
+            // close buffers: serial
+            let buf = self.prop.step_range(bo + n_mid, n_layers, 1.0, &states[bo + n_mid]);
+            states.extend(buf);
+        }
+
+        // --- loss head ------------------------------------------------------
+        let x_final = self.head_view(&states[n_layers]);
+        let out = self.objective.loss(&x_final, &self.params, &batch, &m);
+        let acc = out.correct / out.denom;
+
+        // --- adjoint ---------------------------------------------------------
+        let mut lams: Vec<Option<Tensor>> = vec![None; n_layers + 1];
+        lams[n_layers] = Some(self.lift_ct(out.lam_head));
+        let mut grads: Vec<Vec<f32>> = (0..n_layers)
+            .map(|l| vec![0.0f32; self.prop.theta_len(l)])
+            .collect();
+        // close buffers: serial adjoint + grads
+        for l in ((bo + n_mid)..n_layers).rev() {
+            let lam_next = lams[l + 1].take().unwrap();
+            self.prop.accumulate_grad(l, &states[l], &lam_next, &mut grads[l]);
+            lams[l] = Some(self.prop.adjoint_step(l, 1.0, &states[l], &lam_next));
+            lams[l + 1] = Some(lam_next);
+        }
+        // backend adjoint solve over the middle
+        let bwd_iters = if probe {
+            self.controller.probe_iters(&self.rc.mgrit).1
+        } else {
+            self.rc.mgrit.bwd_iters
+        };
+        let mid_states_ref = &states[bo..=bo + n_mid];
+        let ct = lams[bo + n_mid].clone().unwrap();
+        let (mid_lams, bstats) =
+            self.backend.adjoint(&mid, &self.rc.mgrit, mid_states_ref, &ct, bwd_iters, probe);
+        let mid_grads = self.backend.gradients(&mid, &self.rc.mgrit, mid_states_ref, &mid_lams);
+        for (i, g) in mid_grads.into_iter().enumerate() {
+            grads[bo + i] = g;
+        }
+        for (i, lam) in mid_lams.into_iter().enumerate() {
+            lams[bo + i] = Some(lam);
+        }
+        // open buffers
+        for l in (0..bo).rev() {
+            let lam_next = lams[l + 1].take().unwrap();
+            self.prop.accumulate_grad(l, &states[l], &lam_next, &mut grads[l]);
+            lams[l] = Some(self.prop.adjoint_step(l, 1.0, &states[l], &lam_next));
+            lams[l + 1] = Some(lam_next);
+        }
+
+        // --- embedding gradients ----------------------------------------------
+        let lam0 = lams[0].take().unwrap();
+        let mut g_emb = vec![0.0f32; self.params.w_emb.len()];
+        let mut g_pos = vec![0.0f32; self.params.w_pos.len()];
+        if m.arch == Arch::EncDec {
+            let half = lam0.len() / 2;
+            let inner = [m.batch, m.seq, m.d_model];
+            let lx = Tensor::from_vec(lam0.data()[..half].to_vec(), &inner);
+            let ly = Tensor::from_vec(lam0.data()[half..].to_vec(), &inner);
+            heads::embed_bwd(&batch.tokens, &lx, m.batch, m.seq, m.d_model, &mut g_emb, &mut g_pos);
+            heads::embed_bwd(
+                batch.tgt_in.as_ref().unwrap(),
+                &ly,
+                m.batch,
+                m.seq,
+                m.d_model,
+                &mut g_emb,
+                &mut g_pos,
+            );
+        } else {
+            heads::embed_bwd(&batch.tokens, &lam0, m.batch, m.seq, m.d_model, &mut g_emb, &mut g_pos);
+        }
+
+        let head = HeadGrads { emb: g_emb, pos: g_pos, ..out.head };
+        (out.loss, acc, fstats.conv_factor(), bstats.conv_factor(), grads, head)
+    }
+
+    /// One full training step (dp micro-batches + probe + update).
+    pub fn train_step(&mut self) -> StepRecord {
+        self.step += 1;
+        let probe = self.controller.should_probe();
+        let dp = self.rc.dp_degree.max(1);
+
+        let mut loss_sum = 0.0f32;
+        let mut acc_sum = 0.0f32;
+        let (mut rho_f, mut rho_b) = (None, None);
+        let mut layer_grads: Option<Vec<Vec<f32>>> = None;
+        let mut head_grads: Option<HeadGrads> = None;
+        for rep in 0..dp {
+            let (l, a, rf, rb, lg, hg) = self.micro_batch(probe && rep == 0);
+            loss_sum += l;
+            acc_sum += a;
+            if rep == 0 {
+                rho_f = rf;
+                rho_b = rb;
+            }
+            // gradient allreduce (sum; averaged below)
+            match (&mut layer_grads, lg) {
+                (None, lg) => layer_grads = Some(lg),
+                (Some(acc), lg) => {
+                    for (a2, b2) in acc.iter_mut().zip(lg) {
+                        for (x, y) in a2.iter_mut().zip(b2) {
+                            *x += y;
+                        }
+                    }
+                }
+            }
+            match (&mut head_grads, hg) {
+                (None, hg) => head_grads = Some(hg),
+                (Some(acc), hg) => acc.add(&hg),
+            }
+        }
+        let mut layer_grads = layer_grads.unwrap();
+        let mut head = head_grads.unwrap();
+        if dp > 1 {
+            let inv = 1.0 / dp as f32;
+            for g in layer_grads.iter_mut() {
+                g.iter_mut().for_each(|x| *x *= inv);
+            }
+            head.scale(inv);
+        }
+        let loss = loss_sum / dp as f32;
+        let acc = acc_sum / dp as f32;
+
+        // adaptive controller (probe result + divergence watchdog)
+        if probe {
+            self.controller.observe(rho_f, rho_b, &mut self.rc.mgrit);
+            if self.controller.is_serial() && self.switched_at.is_none() {
+                self.switched_at = Some(self.step);
+            }
+        }
+        if self.initial_loss.is_none() {
+            self.initial_loss = Some(loss);
+        }
+        if self.rc.train.adaptive
+            && !self.controller.is_serial()
+            && (!loss.is_finite() || loss > 3.0 * self.initial_loss.unwrap() + 1.0)
+        {
+            self.controller.force_serial(&mut self.rc.mgrit);
+            self.switched_at = Some(self.step);
+        }
+
+        // clip + update
+        {
+            let mut refs: Vec<&mut [f32]> = layer_grads.iter_mut().map(|g| g.as_mut_slice()).collect();
+            let mut head_refs = head.as_mut_refs();
+            refs.append(&mut head_refs);
+            clip_global_norm(&mut refs, self.rc.train.grad_clip);
+        }
+        // tasks only touch one head: fill the untouched groups with zeros
+        HeadGrads::ensure_like(&mut head.emb, self.params.w_emb.len());
+        HeadGrads::ensure_like(&mut head.pos, self.params.w_pos.len());
+        HeadGrads::ensure_like(&mut head.out, self.params.w_out.len());
+        HeadGrads::ensure_like(&mut head.cls, self.params.w_cls.len());
+        let lr = self.sched.at(self.step);
+        self.opt.begin_step();
+        {
+            // the only write-lock acquisition on the training path
+            let mut layers = self.params.layers.write().unwrap();
+            for (i, g) in layer_grads.iter().enumerate() {
+                self.opt.update(i, lr, &mut layers[i], g);
+            }
+        }
+        let nl = self.rc.model.total_layers();
+        self.opt.update(nl, lr, &mut self.params.w_emb, &head.emb);
+        self.opt.update(nl + 1, lr, &mut self.params.w_pos, &head.pos);
+        self.opt.update(nl + 2, lr, &mut self.params.w_out, &head.out);
+        self.opt.update(nl + 3, lr, &mut self.params.w_cls, &head.cls);
+
+        StepRecord {
+            step: self.step,
+            loss,
+            acc,
+            lr,
+            serial: self.rc.mgrit.is_serial()
+                || self.controller.is_serial()
+                || self.backend.forces_exact(),
+            rho_fwd: rho_f,
+            rho_bwd: rho_b,
+        }
+    }
+
+    /// Validation metric over `n_batches` fresh batches (exact forward).
+    /// Accuracy for token/sequence tasks; BLEU-4 for Translate.
+    pub fn evaluate(&mut self, n_batches: usize) -> f64 {
+        let m = self.rc.model.clone();
+        let n_layers = m.total_layers();
+        let mut rng = Rng::new(self.val_rng_seed);
+        let mut acc = EvalAccum::default();
+        for _ in 0..n_batches {
+            let batch = self.objective.sample(&mut rng, &m);
+            // exact serial forward for evaluation: rolling state, one
+            // dispatch (lock/executable) for the whole sweep
+            let z0 = self.embed(&batch.tokens, batch.tgt_in.as_deref());
+            let z = self.prop.step_to(0, n_layers, 1.0, &z0);
+            let x_final = self.head_view(&z);
+            self.objective.eval_batch(&x_final, &self.params, &batch, &m, &mut acc);
+        }
+        self.objective.metric(&acc)
+    }
+
+    /// Full training loop with periodic evaluation.
+    pub fn train(&mut self) -> Result<TrainReport> {
+        let mut report = TrainReport::default();
+        let steps = self.rc.train.steps;
+        let eval_every = self.rc.train.eval_every.max(1);
+        for _ in 0..steps {
+            let rec = self.train_step();
+            if self.step % eval_every == 0 || self.step == steps {
+                let metric = self.evaluate(2);
+                report.evals.push(EvalRecord { step: self.step, metric });
+            }
+            report.curve.push(rec);
+        }
+        report.final_loss = report.curve.last().map(|r| r.loss).unwrap_or(f32::NAN);
+        report.final_metric = report.evals.last().map(|e| e.metric).unwrap_or(0.0);
+        report.probes = self.controller.history.clone();
+        report.phi_fwd = self.prop.counters().fwd();
+        report.phi_vjp = self.prop.counters().vjp();
+        report.switched_at = self.switched_at;
+        Ok(report)
+    }
+}

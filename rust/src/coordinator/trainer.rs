@@ -1,36 +1,43 @@
-//! `TrainRun`: the end-to-end training procedure of the paper.
+//! Task selection and the v1 compatibility surface of the trainer.
 //!
-//! Per batch: embed → (serial open buffers) → MGRIT forward over the
-//! ParallelNet → (serial close buffers) → loss head → adjoint (serial
-//! close, MGRIT middle, serial open) → parameter gradients → clip →
-//! optimizer. The §3.2.3 controller probes the MGRIT convergence factor on
-//! a cadence and can raise iteration counts or switch the run to serial.
+//! ## Architecture (Session API v2)
 //!
-//! Data parallelism is executed as `dp` sequential micro-batches with
-//! gradient averaging — bit-identical math to distributed replicas (the
-//! *time* dimension of dp lives in `parallel::simulator`; this box has one
-//! core, DESIGN.md §Substitutions).
+//! The training engine lives in [`super::session`] and is composed of
+//! three orthogonal abstractions:
+//!
+//! * [`super::session::Session`] — the run itself: batch loop, buffer-layer
+//!   sweeps (batched through `Propagator::step_range`), §3.2.3 probes,
+//!   gradient clipping, optimizer updates, evaluation, run recording.
+//!   Built via `Session::builder()` (preset/config → propagator → backend
+//!   → objective).
+//! * [`super::backend::Backend`] — the execution strategy of the forward
+//!   and adjoint solves: `Serial` (exact), `Mgrit` (single-threaded
+//!   V-cycles), `ThreadedMgrit` (multi-worker relaxation through
+//!   `parallel::exec`, bitwise identical to `Mgrit`).
+//! * [`super::objective::Objective`] — the workload: data sampling, loss
+//!   head, validation metric. The paper's five tasks are provided; new
+//!   workloads implement the trait without touching the coordinator.
+//!
+//! This module keeps the closed [`Task`] enum as the preset→objective
+//! mapping plus [`TrainRun`], a type alias so v1 call sites
+//! (`TrainRun::new(rc, task, engine)`) keep working.
 
-use std::rc::Rc;
+use anyhow::{anyhow, bail, Result};
 
-use anyhow::Result;
+use crate::config::{presets, ModelConfig};
+use crate::data::charlm::CharCorpus;
+use crate::data::images::ImageTask;
+use crate::data::morpho::MorphoTask;
+use crate::data::translate::TranslateTask;
 
-use crate::adaptive::{AdaptiveController, ProbeRecord};
-use crate::analysis::bleu4;
-use crate::config::{Arch, RunConfig};
-use crate::data::{charlm::CharCorpus, images::ImageTask, morpho::MorphoTask, translate::TranslateTask};
-use crate::mgrit::MgritSolver;
-use crate::model::{Init, ParamStore};
-use crate::ode::{Propagator, RustPropagator, XlaPropagator};
-use crate::opt::{clip_global_norm, Decay, LrSchedule, Optimizer};
-use crate::runtime::XlaEngine;
-use crate::tensor::Tensor;
-use crate::util::rng::Rng;
+use super::objective::{ClsObjective, LmObjective, Objective, TagObjective, TranslateObjective};
+use super::session::Session;
 
-use super::heads;
-use super::range::RangeProp;
+/// The v1 name of [`Session`] (constructors `new` / `from_params` are
+/// provided as inherent methods for compatibility).
+pub type TrainRun = Session;
 
-/// Training objective (maps presets to the paper's five tasks).
+/// Training objective selector (maps presets to the paper's five tasks).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Task {
     /// Masked-language modeling (BERT).
@@ -46,581 +53,81 @@ pub enum Task {
 }
 
 impl Task {
-    /// Default task for a preset name.
-    pub fn for_preset(name: &str) -> Task {
-        match name {
-            "bert_deep" | "bert" => Task::Mlm,
-            "gpt" | "gpt_small" => Task::Lm,
-            "vit" | "vit_small" => Task::Cls,
-            "mt" | "mt_small" => Task::Translate,
-            _ => Task::Tag,
+    /// Task for a preset name. Errors on unknown presets instead of
+    /// silently defaulting, listing the valid names. Alias knowledge lives
+    /// only in [`presets::by_name`]; this maps the canonical names.
+    pub fn for_preset(name: &str) -> Result<Task> {
+        let canonical = presets::by_name(name)
+            .ok_or_else(|| {
+                anyhow!(
+                    "unknown preset '{}' (valid presets: {}; short aliases \
+                     bert, mc, vit, mt, gpt also accepted)",
+                    name,
+                    presets::ALL.join(", ")
+                )
+            })?
+            .name;
+        match canonical.as_str() {
+            "bert_deep" => Ok(Task::Mlm),
+            "gpt_small" => Ok(Task::Lm),
+            "vit_small" => Ok(Task::Cls),
+            "mt_small" => Ok(Task::Translate),
+            "mc_tiny" => Ok(Task::Tag),
+            other => bail!(
+                "preset '{}' resolves to '{}', which has no task mapping — \
+                 update Task::for_preset alongside presets::by_name",
+                name,
+                other
+            ),
+        }
+    }
+
+    /// Instantiate this task's objective (data source seeded from the run
+    /// seed, geometry from the model config).
+    pub fn objective(self, m: &ModelConfig, seed: u64) -> Box<dyn Objective> {
+        match self {
+            Task::Mlm => Box::new(LmObjective::masked(
+                CharCorpus::new(m.vocab - 1, seed, 3),
+                (m.vocab - 1) as i32,
+                0.2,
+            )),
+            Task::Lm => Box::new(LmObjective::causal(CharCorpus::new(m.vocab - 1, seed, 3))),
+            Task::Tag => Box::new(TagObjective::new(MorphoTask::new(m.vocab, m.n_classes, seed))),
+            Task::Cls => Box::new(ClsObjective::new(ImageTask::new(m.seq, m.vocab, m.n_classes))),
+            Task::Translate => {
+                Box::new(TranslateObjective::new(TranslateTask::new(m.vocab, seed, false)))
+            }
         }
     }
 }
 
-/// One training-step record (drives the Fig. 3/4 curves).
-#[derive(Debug, Clone)]
-pub struct StepRecord {
-    pub step: usize,
-    pub loss: f32,
-    pub acc: f32,
-    pub lr: f32,
-    pub serial: bool,
-    pub rho_fwd: Option<f64>,
-    pub rho_bwd: Option<f64>,
-}
+#[cfg(test)]
+mod tests {
+    use super::*;
 
-/// Validation record: metric is accuracy (or BLEU for Translate).
-#[derive(Debug, Clone)]
-pub struct EvalRecord {
-    pub step: usize,
-    pub metric: f64,
-}
-
-/// Everything a run produced.
-#[derive(Debug, Clone, Default)]
-pub struct TrainReport {
-    pub curve: Vec<StepRecord>,
-    pub evals: Vec<EvalRecord>,
-    pub probes: Vec<ProbeRecord>,
-    pub final_loss: f32,
-    pub final_metric: f64,
-    pub phi_fwd: u64,
-    pub phi_vjp: u64,
-    pub switched_at: Option<usize>,
-}
-
-/// Task data sources (seed-split train/val).
-enum DataGen {
-    Char(CharCorpus),
-    Morpho(MorphoTask),
-    Images(ImageTask),
-    Pairs(TranslateTask),
-}
-
-/// A fully-wired training run.
-pub struct TrainRun {
-    pub rc: RunConfig,
-    pub task: Task,
-    pub params: ParamStore,
-    prop: Box<dyn Propagator>,
-    opt: Optimizer,
-    sched: LrSchedule,
-    pub controller: AdaptiveController,
-    data: DataGen,
-    train_rng: Rng,
-    val_rng_seed: u64,
-    /// Warm-start iterate for the MGRIT forward solve (TorchBraid-style).
-    warm: Option<Vec<Tensor>>,
-    pub warm_start: bool,
-    step: usize,
-    initial_loss: Option<f32>,
-    switched_at: Option<usize>,
-}
-
-impl TrainRun {
-    /// Build from a preset run config. `engine = None` uses the pure-Rust
-    /// propagator; `Some` runs Φ through the AOT artifacts on PJRT.
-    pub fn new(rc: RunConfig, task: Task, engine: Option<Rc<XlaEngine>>) -> Result<TrainRun> {
-        let scheme =
-            if rc.model.total_layers() >= 64 { Init::DeepNet } else { Init::Default };
-        let params = ParamStore::init(&rc.model, scheme, rc.train.seed);
-        Self::from_params(rc, task, params, engine)
+    #[test]
+    fn preset_task_mapping_is_total_over_known_presets() {
+        for name in presets::ALL {
+            assert!(Task::for_preset(name).is_ok(), "{}", name);
+        }
+        assert_eq!(Task::for_preset("mc").unwrap(), Task::Tag);
+        assert_eq!(Task::for_preset("bert").unwrap(), Task::Mlm);
     }
 
-    /// Build around existing parameters (fine-tuning / comparison runs).
-    pub fn from_params(
-        rc: RunConfig,
-        task: Task,
-        params: ParamStore,
-        engine: Option<Rc<XlaEngine>>,
-    ) -> Result<TrainRun> {
-        let prop: Box<dyn Propagator> = match engine {
-            Some(e) => Box::new(XlaPropagator::for_model(e, &rc.model, params.layers.clone())?),
-            None => Box::new(RustPropagator::for_model(&rc.model, params.layers.clone())),
-        };
-        let m = &rc.model;
-        let data = match task {
-            Task::Mlm | Task::Lm => DataGen::Char(CharCorpus::new(m.vocab - 1, rc.train.seed, 3)),
-            Task::Tag => DataGen::Morpho(MorphoTask::new(m.vocab, m.n_classes, rc.train.seed)),
-            Task::Cls => DataGen::Images(ImageTask::new(m.seq, m.vocab, m.n_classes)),
-            Task::Translate => DataGen::Pairs(TranslateTask::new(m.vocab, rc.train.seed, false)),
-        };
-        let opt = Optimizer::new(rc.train.opt, &params.group_sizes(), rc.train.weight_decay);
-        let sched = LrSchedule {
-            base_lr: rc.train.lr,
-            warmup: rc.train.warmup,
-            decay: if rc.train.warmup > 0 {
-                Decay::Cosine { total: rc.train.steps, min_frac: 0.1 }
-            } else {
-                Decay::Constant
-            },
-        };
-        let controller = AdaptiveController::new(if rc.train.adaptive {
-            rc.train.probe_every
-        } else {
-            0
-        });
-        let seed = rc.train.seed;
-        Ok(TrainRun {
-            rc,
-            task,
-            params,
-            prop,
-            opt,
-            sched,
-            controller,
-            data,
-            train_rng: Rng::new(seed.wrapping_mul(2) + 1),
-            val_rng_seed: seed.wrapping_mul(2) + 2,
-            warm: None,
-            warm_start: true,
-            step: 0,
-            initial_loss: None,
-            switched_at: None,
-        })
+    #[test]
+    fn unknown_preset_errors_with_valid_names() {
+        let err = Task::for_preset("nope").unwrap_err().to_string();
+        assert!(err.contains("nope"), "{}", err);
+        assert!(err.contains("mc_tiny"), "error should list presets: {}", err);
     }
 
-    fn mid_range(&self) -> (usize, usize) {
-        let n = self.rc.model.total_layers();
-        let bo = self.rc.model.buffer_open;
-        let bc = self.rc.model.buffer_close;
-        (bo, n - bo - bc)
-    }
-
-    /// Embed a batch into the propagator's state shape.
-    fn embed(&self, tokens: &[i32], tgt_in: Option<&[i32]>) -> Tensor {
-        let m = &self.rc.model;
-        let x = heads::embed_fwd(tokens, &self.params.w_emb, &self.params.w_pos, m.batch, m.seq, m.d_model);
-        match tgt_in {
-            None => x,
-            Some(t) => {
-                let y = heads::embed_fwd(t, &self.params.w_emb, &self.params.w_pos, m.batch, m.seq, m.d_model);
-                let mut data = Vec::with_capacity(x.len() * 2);
-                data.extend_from_slice(x.data());
-                data.extend_from_slice(y.data());
-                Tensor::from_vec(data, &self.prop.state_shape())
-            }
-        }
-    }
-
-    /// Final decoder-side activation (the Y half for EncDec, x otherwise).
-    fn head_view(&self, z: &Tensor) -> Tensor {
-        let m = &self.rc.model;
-        if m.arch == Arch::EncDec {
-            let half = z.len() / 2;
-            Tensor::from_vec(z.data()[half..].to_vec(), &[m.batch, m.seq, m.d_model])
-        } else {
-            z.clone()
-        }
-    }
-
-    /// Lift a head cotangent back into the state shape.
-    fn lift_ct(&self, lam_head: Tensor) -> Tensor {
-        let m = &self.rc.model;
-        if m.arch == Arch::EncDec {
-            let mut data = vec![0.0f32; lam_head.len() * 2];
-            data[lam_head.len()..].copy_from_slice(lam_head.data());
-            Tensor::from_vec(data, &self.prop.state_shape())
-        } else {
-            lam_head
-        }
-    }
-
-    /// One micro-batch: forward, loss, adjoint, gradients (no update).
-    /// Returns (loss, acc, rho_fwd, rho_bwd, layer_grads, head_grads).
-    #[allow(clippy::type_complexity)]
-    fn micro_batch(
-        &mut self,
-        probe: bool,
-    ) -> (f32, f32, Option<f64>, Option<f64>, Vec<Vec<f32>>, HeadGrads) {
-        let m = self.rc.model.clone();
-        let n_layers = m.total_layers();
-        let (bo, n_mid) = self.mid_range();
-
-        // --- sample a batch ---------------------------------------------
-        let (tokens, targets, mask, labels, tgt_in): (Vec<i32>, Vec<i32>, Vec<f32>, Vec<i32>, Option<Vec<i32>>) =
-            match (&self.data, self.task) {
-                (DataGen::Char(c), Task::Lm) => {
-                    let b = c.lm_batch(&mut self.train_rng, m.batch, m.seq);
-                    (b.tokens, b.targets, b.mask, vec![], None)
-                }
-                (DataGen::Char(c), Task::Mlm) => {
-                    let b = c.mlm_batch(&mut self.train_rng, m.batch, m.seq, 0.2, (m.vocab - 1) as i32);
-                    (b.tokens, b.targets, b.mask, vec![], None)
-                }
-                (DataGen::Morpho(t), _) => {
-                    let b = t.batch(&mut self.train_rng, m.batch, m.seq);
-                    (b.tokens, b.targets, b.mask, vec![], None)
-                }
-                (DataGen::Images(t), _) => {
-                    let b = t.batch(&mut self.train_rng, m.batch);
-                    (b.tokens, vec![], vec![], b.labels, None)
-                }
-                (DataGen::Pairs(t), _) => {
-                    let b = t.batch(&mut self.train_rng, m.batch, m.seq);
-                    (b.src, b.tgt_out, b.mask, vec![], Some(b.tgt_in))
-                }
-                _ => unreachable!("task/data mismatch"),
-            };
-
-        // --- forward ------------------------------------------------------
-        let z0 = self.embed(&tokens, tgt_in.as_deref());
-        let mut states: Vec<Tensor> = Vec::with_capacity(n_layers + 1);
-        states.push(z0);
-        for l in 0..bo {
-            let next = self.prop.step(l, 1.0, &states[l]);
-            states.push(next);
-        }
-        let mid = RangeProp::new(self.prop.as_ref(), bo, n_mid);
-        let solver = MgritSolver::new(&mid, self.rc.mgrit.clone());
-        let fwd_iters = if probe {
-            self.controller.probe_iters(&self.rc.mgrit).0
-        } else {
-            self.rc.mgrit.fwd_iters
-        };
-        let warm = if self.warm_start { self.warm.as_deref() } else { None };
-        let (mid_states, fstats) = solver.forward(&states[bo], fwd_iters, warm, probe);
-        if self.warm_start && !fstats.serial {
-            self.warm = Some(mid_states.clone());
-        }
-        states.extend(mid_states.into_iter().skip(1));
-        for l in (bo + n_mid)..n_layers {
-            let next = self.prop.step(l, 1.0, &states[l]);
-            states.push(next);
-        }
-
-        // --- loss head ------------------------------------------------------
-        let x_final = self.head_view(&states[n_layers]);
-        let (loss, correct, lam_head, head_grad, denom) = match self.task {
-            Task::Lm | Task::Mlm | Task::Translate => {
-                let (l, c, lam, gw) =
-                    heads::lm_loss(&x_final, &self.params.w_out, &targets, &mask, m.vocab);
-                let denom = mask.iter().sum::<f32>().max(1.0);
-                (l, c, lam, HeadGrads::out(gw), denom)
-            }
-            Task::Tag => {
-                let (l, c, lam, gw) =
-                    heads::tag_loss(&x_final, &self.params.w_cls, &targets, m.n_classes);
-                (l, c, lam, HeadGrads::cls(gw), (m.batch * m.seq) as f32)
-            }
-            Task::Cls => {
-                let (l, c, lam, gw) =
-                    heads::cls_loss(&x_final, &self.params.w_cls, &labels, m.n_classes);
-                (l, c, lam, HeadGrads::cls(gw), m.batch as f32)
-            }
-        };
-        let acc = correct / denom;
-
-        // --- adjoint ---------------------------------------------------------
-        let mut lams: Vec<Option<Tensor>> = vec![None; n_layers + 1];
-        lams[n_layers] = Some(self.lift_ct(lam_head));
-        let mut grads: Vec<Vec<f32>> = (0..n_layers)
-            .map(|l| vec![0.0f32; self.prop.theta_len(l)])
-            .collect();
-        // close buffers: serial adjoint + grads
-        for l in ((bo + n_mid)..n_layers).rev() {
-            let lam_next = lams[l + 1].take().unwrap();
-            self.prop.accumulate_grad(l, &states[l], &lam_next, &mut grads[l]);
-            lams[l] = Some(self.prop.adjoint_step(l, 1.0, &states[l], &lam_next));
-            lams[l + 1] = Some(lam_next);
-        }
-        // MGRIT adjoint over the middle
-        let bwd_iters = if probe {
-            self.controller.probe_iters(&self.rc.mgrit).1
-        } else {
-            self.rc.mgrit.bwd_iters
-        };
-        let mid_states_ref = &states[bo..=bo + n_mid];
-        let ct = lams[bo + n_mid].clone().unwrap();
-        let (mid_lams, bstats) = solver.adjoint(mid_states_ref, &ct, bwd_iters, probe);
-        let mid_grads = solver.gradients(mid_states_ref, &mid_lams);
-        for (i, g) in mid_grads.into_iter().enumerate() {
-            grads[bo + i] = g;
-        }
-        for (i, lam) in mid_lams.into_iter().enumerate() {
-            lams[bo + i] = Some(lam);
-        }
-        // open buffers
-        for l in (0..bo).rev() {
-            let lam_next = lams[l + 1].take().unwrap();
-            self.prop.accumulate_grad(l, &states[l], &lam_next, &mut grads[l]);
-            lams[l] = Some(self.prop.adjoint_step(l, 1.0, &states[l], &lam_next));
-            lams[l + 1] = Some(lam_next);
-        }
-
-        // --- embedding gradients ----------------------------------------------
-        let lam0 = lams[0].take().unwrap();
-        let mut g_emb = vec![0.0f32; self.params.w_emb.len()];
-        let mut g_pos = vec![0.0f32; self.params.w_pos.len()];
-        if m.arch == Arch::EncDec {
-            let half = lam0.len() / 2;
-            let inner = [m.batch, m.seq, m.d_model];
-            let lx = Tensor::from_vec(lam0.data()[..half].to_vec(), &inner);
-            let ly = Tensor::from_vec(lam0.data()[half..].to_vec(), &inner);
-            heads::embed_bwd(&tokens, &lx, m.batch, m.seq, m.d_model, &mut g_emb, &mut g_pos);
-            heads::embed_bwd(tgt_in.as_ref().unwrap(), &ly, m.batch, m.seq, m.d_model, &mut g_emb, &mut g_pos);
-        } else {
-            heads::embed_bwd(&tokens, &lam0, m.batch, m.seq, m.d_model, &mut g_emb, &mut g_pos);
-        }
-
-        let head = HeadGrads { emb: g_emb, pos: g_pos, ..head_grad };
-        (loss, acc, fstats.conv_factor(), bstats.conv_factor(), grads, head)
-    }
-
-    /// One full training step (dp micro-batches + probe + update).
-    pub fn train_step(&mut self) -> StepRecord {
-        self.step += 1;
-        let probe = self.controller.should_probe();
-        let dp = self.rc.dp_degree.max(1);
-
-        let mut loss_sum = 0.0f32;
-        let mut acc_sum = 0.0f32;
-        let (mut rho_f, mut rho_b) = (None, None);
-        let mut layer_grads: Option<Vec<Vec<f32>>> = None;
-        let mut head_grads: Option<HeadGrads> = None;
-        for rep in 0..dp {
-            let (l, a, rf, rb, lg, hg) = self.micro_batch(probe && rep == 0);
-            loss_sum += l;
-            acc_sum += a;
-            if rep == 0 {
-                rho_f = rf;
-                rho_b = rb;
-            }
-            // gradient allreduce (sum; averaged below)
-            match (&mut layer_grads, lg) {
-                (None, lg) => layer_grads = Some(lg),
-                (Some(acc), lg) => {
-                    for (a2, b2) in acc.iter_mut().zip(lg) {
-                        for (x, y) in a2.iter_mut().zip(b2) {
-                            *x += y;
-                        }
-                    }
-                }
-            }
-            match (&mut head_grads, hg) {
-                (None, hg) => head_grads = Some(hg),
-                (Some(acc), hg) => acc.add(&hg),
-            }
-        }
-        let mut layer_grads = layer_grads.unwrap();
-        let mut head = head_grads.unwrap();
-        if dp > 1 {
-            let inv = 1.0 / dp as f32;
-            for g in layer_grads.iter_mut() {
-                g.iter_mut().for_each(|x| *x *= inv);
-            }
-            head.scale(inv);
-        }
-        let loss = loss_sum / dp as f32;
-        let acc = acc_sum / dp as f32;
-
-        // adaptive controller (probe result + divergence watchdog)
-        if probe {
-            self.controller.observe(rho_f, rho_b, &mut self.rc.mgrit);
-            if self.controller.is_serial() && self.switched_at.is_none() {
-                self.switched_at = Some(self.step);
-            }
-        }
-        if self.initial_loss.is_none() {
-            self.initial_loss = Some(loss);
-        }
-        if self.rc.train.adaptive
-            && !self.controller.is_serial()
-            && (!loss.is_finite() || loss > 3.0 * self.initial_loss.unwrap() + 1.0)
-        {
-            self.controller.force_serial(&mut self.rc.mgrit);
-            self.switched_at = Some(self.step);
-        }
-
-        // clip + update
-        {
-            let mut refs: Vec<&mut [f32]> = layer_grads.iter_mut().map(|g| g.as_mut_slice()).collect();
-            let mut head_refs = head.as_mut_refs();
-            refs.append(&mut head_refs);
-            clip_global_norm(&mut refs, self.rc.train.grad_clip);
-        }
-        // tasks only touch one head: fill the untouched groups with zeros
-        HeadGrads::ensure_like(&mut head.emb, self.params.w_emb.len());
-        HeadGrads::ensure_like(&mut head.pos, self.params.w_pos.len());
-        HeadGrads::ensure_like(&mut head.out, self.params.w_out.len());
-        HeadGrads::ensure_like(&mut head.cls, self.params.w_cls.len());
-        let lr = self.sched.at(self.step);
-        self.opt.begin_step();
-        {
-            let mut layers = self.params.layers.borrow_mut();
-            for (i, g) in layer_grads.iter().enumerate() {
-                self.opt.update(i, lr, &mut layers[i], g);
-            }
-        }
-        let nl = self.rc.model.total_layers();
-        self.opt.update(nl, lr, &mut self.params.w_emb, &head.emb);
-        self.opt.update(nl + 1, lr, &mut self.params.w_pos, &head.pos);
-        self.opt.update(nl + 2, lr, &mut self.params.w_out, &head.out);
-        self.opt.update(nl + 3, lr, &mut self.params.w_cls, &head.cls);
-
-        StepRecord {
-            step: self.step,
-            loss,
-            acc,
-            lr,
-            serial: self.rc.mgrit.is_serial() || self.controller.is_serial(),
-            rho_fwd: rho_f,
-            rho_bwd: rho_b,
-        }
-    }
-
-    /// Validation metric over `n_batches` fresh batches (exact forward).
-    /// Accuracy for token/sequence tasks; BLEU-4 for Translate.
-    pub fn evaluate(&mut self, n_batches: usize) -> f64 {
-        let m = self.rc.model.clone();
-        let n_layers = m.total_layers();
-        let mut rng = Rng::new(self.val_rng_seed);
-        let mut correct = 0.0f64;
-        let mut total = 0.0f64;
-        let mut pairs: Vec<(Vec<i32>, Vec<i32>)> = Vec::new();
-        for _ in 0..n_batches {
-            let (tokens, targets, mask, labels, tgt_in): (Vec<i32>, Vec<i32>, Vec<f32>, Vec<i32>, Option<Vec<i32>>) =
-                match (&self.data, self.task) {
-                    (DataGen::Char(c), Task::Lm) => {
-                        let b = c.lm_batch(&mut rng, m.batch, m.seq);
-                        (b.tokens, b.targets, b.mask, vec![], None)
-                    }
-                    (DataGen::Char(c), Task::Mlm) => {
-                        let b = c.mlm_batch(&mut rng, m.batch, m.seq, 0.2, (m.vocab - 1) as i32);
-                        (b.tokens, b.targets, b.mask, vec![], None)
-                    }
-                    (DataGen::Morpho(t), _) => {
-                        let b = t.batch(&mut rng, m.batch, m.seq);
-                        (b.tokens, b.targets, b.mask, vec![], None)
-                    }
-                    (DataGen::Images(t), _) => {
-                        let b = t.batch(&mut rng, m.batch);
-                        (b.tokens, vec![], vec![], b.labels, None)
-                    }
-                    (DataGen::Pairs(t), _) => {
-                        let b = t.batch(&mut rng, m.batch, m.seq);
-                        (b.src, b.tgt_out, b.mask, vec![], Some(b.tgt_in))
-                    }
-                    _ => unreachable!(),
-                };
-            // exact serial forward for evaluation
-            let mut z = self.embed(&tokens, tgt_in.as_deref());
-            for l in 0..n_layers {
-                z = self.prop.step(l, 1.0, &z);
-            }
-            let x_final = self.head_view(&z);
-            match self.task {
-                Task::Lm | Task::Mlm => {
-                    let (_, c, _, _) =
-                        heads::lm_loss(&x_final, &self.params.w_out, &targets, &mask, m.vocab);
-                    correct += c as f64;
-                    total += mask.iter().sum::<f32>() as f64;
-                }
-                Task::Tag => {
-                    let (_, c, _, _) =
-                        heads::tag_loss(&x_final, &self.params.w_cls, &targets, m.n_classes);
-                    correct += c as f64;
-                    total += (m.batch * m.seq) as f64;
-                }
-                Task::Cls => {
-                    let (_, c, _, _) =
-                        heads::cls_loss(&x_final, &self.params.w_cls, &labels, m.n_classes);
-                    correct += c as f64;
-                    total += m.batch as f64;
-                }
-                Task::Translate => {
-                    let preds = heads::argmax_tokens(&x_final, &self.params.w_out, m.vocab);
-                    for b in 0..m.batch {
-                        pairs.push((
-                            preds[b * m.seq..(b + 1) * m.seq].to_vec(),
-                            targets[b * m.seq..(b + 1) * m.seq].to_vec(),
-                        ));
-                    }
-                }
-            }
-        }
-        if self.task == Task::Translate {
-            bleu4(&pairs)
-        } else {
-            correct / total.max(1.0)
-        }
-    }
-
-    /// Full training loop with periodic evaluation.
-    pub fn train(&mut self) -> Result<TrainReport> {
-        let mut report = TrainReport::default();
-        let steps = self.rc.train.steps;
-        let eval_every = self.rc.train.eval_every.max(1);
-        for _ in 0..steps {
-            let rec = self.train_step();
-            if self.step % eval_every == 0 || self.step == steps {
-                let metric = self.evaluate(2);
-                report.evals.push(EvalRecord { step: self.step, metric });
-            }
-            report.curve.push(rec);
-        }
-        report.final_loss = report.curve.last().map(|r| r.loss).unwrap_or(f32::NAN);
-        report.final_metric = report.evals.last().map(|e| e.metric).unwrap_or(0.0);
-        report.probes = self.controller.history.clone();
-        report.phi_fwd = self.prop.counters().fwd();
-        report.phi_vjp = self.prop.counters().vjp();
-        report.switched_at = self.switched_at;
-        Ok(report)
-    }
-}
-
-/// Gradients of the non-layer parameter groups.
-pub struct HeadGrads {
-    pub emb: Vec<f32>,
-    pub pos: Vec<f32>,
-    pub out: Vec<f32>,
-    pub cls: Vec<f32>,
-}
-
-impl HeadGrads {
-    fn out(gw: Vec<f32>) -> HeadGrads {
-        HeadGrads { emb: vec![], pos: vec![], out: gw, cls: vec![] }
-    }
-
-    fn cls(gw: Vec<f32>) -> HeadGrads {
-        HeadGrads { emb: vec![], pos: vec![], out: vec![], cls: gw }
-    }
-
-    pub(super) fn ensure_like(v: &mut Vec<f32>, n: usize) {
-        if v.is_empty() {
-            v.resize(n, 0.0);
-        }
-    }
-
-    fn add(&mut self, other: &HeadGrads) {
-        for (a, b) in [
-            (&mut self.emb, &other.emb),
-            (&mut self.pos, &other.pos),
-            (&mut self.out, &other.out),
-            (&mut self.cls, &other.cls),
-        ] {
-            if b.is_empty() {
-                continue;
-            }
-            Self::ensure_like(a, b.len());
-            for (x, y) in a.iter_mut().zip(b) {
-                *x += y;
-            }
-        }
-    }
-
-    fn scale(&mut self, s: f32) {
-        for v in [&mut self.emb, &mut self.pos, &mut self.out, &mut self.cls] {
-            v.iter_mut().for_each(|x| *x *= s);
-        }
-    }
-
-    fn as_mut_refs(&mut self) -> Vec<&mut [f32]> {
-        [&mut self.emb, &mut self.pos, &mut self.out, &mut self.cls]
-            .into_iter()
-            .filter(|v| !v.is_empty())
-            .map(|v| v.as_mut_slice())
-            .collect()
+    #[test]
+    fn tasks_build_matching_objectives() {
+        let m = presets::mc_tiny().model;
+        assert_eq!(Task::Tag.objective(&m, 0).name(), "tag");
+        assert_eq!(Task::Lm.objective(&m, 0).name(), "lm");
+        assert_eq!(Task::Mlm.objective(&m, 0).name(), "mlm");
+        assert_eq!(Task::Cls.objective(&m, 0).name(), "cls");
+        assert_eq!(Task::Translate.objective(&m, 0).name(), "translate");
     }
 }

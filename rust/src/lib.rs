@@ -7,13 +7,43 @@
 //! adjoint propagation, an adaptive inexactness controller, and combined
 //! layer-×-data parallelism.
 //!
-//! ## Architecture (three layers, Python never on the training path)
+//! ## Architecture (Session API v2)
+//!
+//! The public surface is a composable [`coordinator::Session`], assembled
+//! from four orthogonal pieces:
+//!
+//! ```text
+//! Session::builder()
+//!     .preset("mc")                                   // config layer
+//!     .propagator(PropagatorKind::Xla(engine))        // Φ layer
+//!     .backend(Box::new(ThreadedMgrit::new(4)))       // execution layer
+//!     .objective(Box::new(TagObjective::new(task)))   // workload layer
+//!     .build()?
+//! ```
+//!
+//! * **Config** — presets + typed overrides ([`config`]).
+//! * **Φ (propagator)** — the discrete neural-ODE step and its VJP
+//!   ([`ode`]); v2 propagators are `Send + Sync` with atomic counters and
+//!   a batched `step_range` entry point, so one Φ serves many relaxation
+//!   workers. Implementations: pure-Rust reference, XLA/PJRT artifacts.
+//! * **Execution backend** — how the MGRIT-shaped forward/adjoint solves
+//!   run ([`coordinator::backend`]): `Serial` (exact), `Mgrit`
+//!   (single-threaded V-cycles), `ThreadedMgrit` (multi-worker relaxation
+//!   through [`parallel::exec`] with channel-fabric halo exchange — the
+//!   paper's Fig. 2 decomposition on the real training hot loop, bitwise
+//!   identical to the single-threaded solver).
+//! * **Objective** — the open workload interface
+//!   ([`coordinator::objective`]): data sampling, loss head, validation
+//!   metric. The paper's five tasks ship as implementations; new workloads
+//!   plug in without touching the coordinator.
+//!
+//! ## Stack (Python never on the training path)
 //!
 //! * **L3 (this crate)** — the coordinator: MGRIT engine ([`mgrit`]),
 //!   adaptive controller ([`adaptive`]), device topology + comm fabric +
-//!   performance simulator ([`parallel`]), training loop ([`coordinator`]),
-//!   optimizers ([`opt`]), data pipelines ([`data`]), analysis tools
-//!   ([`analysis`]).
+//!   threaded executor + performance simulator ([`parallel`]), session
+//!   layer ([`coordinator`]), optimizers ([`opt`]), data pipelines
+//!   ([`data`]), analysis tools ([`analysis`]).
 //! * **L2/L1 (build time)** — JAX neural-ODE step functions composed from
 //!   Pallas kernels, AOT-lowered to HLO text artifacts by
 //!   `python/compile/aot.py`; loaded at startup by [`runtime`] through the
@@ -40,6 +70,10 @@ pub mod util;
 /// Convenience re-exports for examples and downstream users.
 pub mod prelude {
     pub use crate::config::{presets, MgritConfig, ModelConfig, TrainConfig};
+    pub use crate::coordinator::{
+        Backend, Mgrit, Objective, PropagatorKind, Serial, Session, SessionBuilder, Task,
+        ThreadedMgrit, TrainReport,
+    };
     pub use crate::tensor::Tensor;
     pub use crate::util::rng::Rng;
 }

@@ -13,12 +13,12 @@
 //!   layertime simulate --preset bert --lp 8 --dp 4
 //!   layertime compare --preset mc --steps 120
 
-use std::rc::Rc;
+use std::sync::Arc;
 
 use anyhow::{anyhow, bail, Result};
 
 use layertime::config::presets;
-use layertime::coordinator::{Task, TrainRun};
+use layertime::coordinator::{backend_for_workers, Serial, Session, Task};
 use layertime::model::{Init, ParamStore};
 use layertime::ode::Propagator;
 use layertime::parallel::{DeviceModel, SimConfig, Simulator};
@@ -33,16 +33,17 @@ const USAGE: &str = "layertime <train|compare|simulate|lipschitz|info> [--preset
   model:      --enc-layers N --dec-layers N --batch N --buffer-open N --buffer-close N
   mgrit:      --cf N --levels N --fwd-iters {N|serial} --bwd-iters {N|serial}
   training:   --steps N --lr F --no-adaptive --artifacts DIR (use AOT/PJRT Φ)
+  backend:    --workers N (N>1 selects the ThreadedMgrit backend)
   topology:   --lp N --dp N --device {v100|a100}
   output:     --out runs/NAME.csv --checkpoint PATH";
 
-fn engine_from(args: &Args) -> Result<Option<Rc<XlaEngine>>> {
+fn engine_from(args: &Args) -> Result<Option<Arc<XlaEngine>>> {
     match args.get("artifacts") {
         None => Ok(None),
         Some(dir) => {
             let e = XlaEngine::load(dir)?;
             eprintln!("PJRT platform: {} ({} entry points)", e.platform(), e.manifest().entries.len());
-            Ok(Some(Rc::new(e)))
+            Ok(Some(Arc::new(e)))
         }
     }
 }
@@ -57,10 +58,11 @@ fn run_config(args: &Args) -> Result<layertime::config::RunConfig> {
 
 fn cmd_train(args: &Args) -> Result<()> {
     let rc = run_config(args)?;
-    let task = Task::for_preset(&rc.name);
+    let task = Task::for_preset(&rc.name)?;
     let engine = engine_from(args)?;
+    let workers = args.get_usize("workers", 1);
     println!(
-        "training '{}' ({:?}): {} layers, MGRIT cf={} L={} fwd={:?} bwd={:?}, {} steps",
+        "training '{}' ({:?}): {} layers, MGRIT cf={} L={} fwd={:?} bwd={:?}, {} steps, {} worker(s)",
         rc.name,
         task,
         rc.model.total_layers(),
@@ -68,11 +70,18 @@ fn cmd_train(args: &Args) -> Result<()> {
         rc.mgrit.levels,
         rc.mgrit.fwd_iters,
         rc.mgrit.bwd_iters,
-        rc.train.steps
+        rc.train.steps,
+        workers
     );
     let out = args.get("out").map(|s| s.to_string());
     let checkpoint = args.get("checkpoint").map(|s| s.to_string());
-    let mut run = TrainRun::new(rc, task, engine)?;
+    let mut run = Session::builder()
+        .config(rc)
+        .task(task)
+        .engine(engine)
+        .workers(workers)
+        .build()?;
+    println!("backend: {}, objective: {}", run.backend_name(), run.objective_name());
     let report = run.train()?;
     let mut tbl = Table::new(&["step", "loss", "acc", "serial", "rho_fwd", "rho_bwd"]);
     for r in report.curve.iter().step_by((report.curve.len() / 20).max(1)) {
@@ -119,7 +128,8 @@ fn cmd_train(args: &Args) -> Result<()> {
 
 fn cmd_compare(args: &Args) -> Result<()> {
     let rc = run_config(args)?;
-    let task = Task::for_preset(&rc.name);
+    let task = Task::for_preset(&rc.name)?;
+    let workers = args.get_usize("workers", 1);
     let init = ParamStore::init(
         &rc.model,
         if rc.model.total_layers() >= 64 { Init::DeepNet } else { Init::Default },
@@ -140,7 +150,17 @@ fn cmd_compare(args: &Args) -> Result<()> {
     let mut tbl = Table::new(&["variant", "final loss", "final metric", "switched@"]);
     for (name, vrc) in variants {
         let engine = engine_from(args)?;
-        let mut run = TrainRun::from_params(vrc, task, init.deep_clone(), engine)?;
+        let mut builder = Session::builder()
+            .config(vrc)
+            .task(task)
+            .engine(engine)
+            .params(init.deep_clone());
+        builder = if name == "serial" {
+            builder.backend(Box::new(Serial))
+        } else {
+            builder.backend(backend_for_workers(workers))
+        };
+        let mut run = builder.build()?;
         let rep = run.train()?;
         tbl.row(vec![
             name.into(),

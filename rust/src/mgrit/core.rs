@@ -9,7 +9,14 @@
 //!
 //! The core is generic over a [`LevelStepper`] so the *same* code runs the
 //! forward solve (over Φ) and the adjoint solve (over Φᵀ in reversed time).
+//!
+//! With `with_workers(n > 1)` every relaxation sweep (the parallel phase of
+//! paper Fig. 2) executes through the multi-worker slab executor in
+//! [`crate::parallel::exec`] — OS threads + channel-fabric halo exchange —
+//! producing bitwise the same iterates as the single-threaded schedule.
+//! This is the engine room of the `ThreadedMgrit` backend.
 
+use crate::parallel::exec;
 use crate::tensor::Tensor;
 
 /// One time-step on an arbitrary MGRIT level.
@@ -17,8 +24,9 @@ use crate::tensor::Tensor;
 /// `fine_idx` is the fine-grid index of the step's *source* point and
 /// `stride` the level's step width: the stepper advances from `fine_idx`
 /// to `fine_idx + stride` using a single step of size `stride · h_fine`
-/// (rediscretization).
-pub trait LevelStepper {
+/// (rediscretization). `Sync` because threaded relaxation applies the
+/// stepper from worker threads.
+pub trait LevelStepper: Sync {
     /// Fine-grid step count N.
     fn n(&self) -> usize;
 
@@ -44,6 +52,8 @@ struct Level {
 pub struct MgritCore {
     cf: usize,
     fcf: bool,
+    /// Relaxation worker threads (1 = single-threaded schedule).
+    workers: usize,
     levels: Vec<Level>,
 }
 
@@ -70,7 +80,15 @@ impl MgritCore {
                 w_init: vec![Tensor::zeros(proto.shape()); nl + 1],
             })
             .collect();
-        MgritCore { cf, fcf, levels }
+        MgritCore { cf, fcf, workers: 1, levels }
+    }
+
+    /// Route every relaxation sweep through `workers` slab threads
+    /// (bitwise identical to the single-threaded schedule; see
+    /// [`crate::parallel::exec`]).
+    pub fn with_workers(mut self, workers: usize) -> MgritCore {
+        self.workers = workers.max(1);
+        self
     }
 
     pub fn n_levels(&self) -> usize {
@@ -118,7 +136,7 @@ impl MgritCore {
         }
         let mut stats = CoreStats::default();
         for _ in 0..iters {
-            Self::vcycle(&mut self.levels, stepper, self.cf, self.fcf);
+            Self::vcycle(&mut self.levels, stepper, self.cf, self.fcf, self.workers);
             if track_residuals {
                 stats.residuals.push(self.fine_residual_norm(stepper));
             }
@@ -226,7 +244,55 @@ impl MgritCore {
         }
     }
 
-    fn vcycle<S: LevelStepper>(levels: &mut [Level], stepper: &S, cf: usize, fcf: bool) {
+    /// Does threading this level pay? Needs >1 workers, even coarsening
+    /// (always true below the coarsest level), and at least two chunks —
+    /// a single-chunk level has no parallelism to expose, only spawn and
+    /// slab-copy overhead.
+    fn thread_level(lvl: &Level, cf: usize, workers: usize) -> bool {
+        workers > 1 && lvl.n % cf == 0 && lvl.n / cf >= 2
+    }
+
+    /// F-relaxation, threaded when [`Self::thread_level`] says it pays.
+    fn f_relax_exec<S: LevelStepper>(lvl: &mut Level, stepper: &S, cf: usize, workers: usize) {
+        if Self::thread_level(lvl, cf, workers) {
+            let stride = lvl.stride;
+            let g = std::mem::take(&mut lvl.g);
+            let w = std::mem::take(&mut lvl.w);
+            lvl.w = exec::parallel_f_relax(w, Some(&g[..]), cf, workers, |idx, z| {
+                stepper.apply(idx * stride, stride, z)
+            });
+            lvl.g = g;
+        } else {
+            Self::f_relax(lvl, stepper, cf);
+        }
+    }
+
+    /// Full FCF sweep (slab F-relax, C-relax with halo exchange, second
+    /// F-relax — paper Fig. 2), threaded when [`Self::thread_level`] says
+    /// it pays.
+    fn fcf_relax_exec<S: LevelStepper>(lvl: &mut Level, stepper: &S, cf: usize, workers: usize) {
+        if Self::thread_level(lvl, cf, workers) {
+            let stride = lvl.stride;
+            let g = std::mem::take(&mut lvl.g);
+            let w = std::mem::take(&mut lvl.w);
+            lvl.w = exec::parallel_fc_relax(w, Some(&g[..]), cf, workers, |idx, z| {
+                stepper.apply(idx * stride, stride, z)
+            });
+            lvl.g = g;
+        } else {
+            Self::f_relax(lvl, stepper, cf);
+            Self::c_relax(lvl, stepper, cf);
+            Self::f_relax(lvl, stepper, cf);
+        }
+    }
+
+    fn vcycle<S: LevelStepper>(
+        levels: &mut [Level],
+        stepper: &S,
+        cf: usize,
+        fcf: bool,
+        workers: usize,
+    ) {
         let (fine, coarser) = levels.split_first_mut().expect("at least one level");
 
         if coarser.is_empty() {
@@ -242,10 +308,10 @@ impl MgritCore {
         let coarse = &mut coarser[0];
 
         // 1. relaxation (F or FCF)
-        Self::f_relax(fine, stepper, cf);
         if fcf {
-            Self::c_relax(fine, stepper, cf);
-            Self::f_relax(fine, stepper, cf);
+            Self::fcf_relax_exec(fine, stepper, cf, workers);
+        } else {
+            Self::f_relax_exec(fine, stepper, cf, workers);
         }
 
         // 2. FAS restriction: W_c = R W (injection); G_c = A_c(W_c) + R r.
@@ -273,7 +339,7 @@ impl MgritCore {
         }
 
         // 3. coarse solve (recursive)
-        Self::vcycle(coarser, stepper, cf, fcf);
+        Self::vcycle(coarser, stepper, cf, fcf, workers);
 
         // 4. FAS correction at C-points + final F-relax to spread it
         let coarse = &coarser[0];
@@ -282,7 +348,7 @@ impl MgritCore {
             e.axpy(-1.0, &coarse.w_init[k]);
             fine.w[k * cf].axpy(1.0, &e);
         }
-        Self::f_relax(fine, stepper, cf);
+        Self::f_relax_exec(fine, stepper, cf, workers);
     }
 }
 
@@ -412,6 +478,30 @@ mod tests {
         core.solve_fmg(&Fwd(&ode), &z0, 4, false);
         for (w, t) in core.solution().iter().zip(&traj) {
             assert!(w.allclose(t, 1e-4, 1e-4));
+        }
+    }
+
+    #[test]
+    fn threaded_vcycles_match_single_thread_bitwise() {
+        // the ThreadedMgrit guarantee at core level: identical iterates,
+        // bit for bit, for any worker count
+        let (ode, z0) = setup(32, 9);
+        let mut a = MgritCore::new(32, 4, 2, true, &z0);
+        a.solve(&Fwd(&ode), &z0, None, 3, false);
+        for workers in [2usize, 4, 7] {
+            let mut b = MgritCore::new(32, 4, 2, true, &z0).with_workers(workers);
+            b.solve(&Fwd(&ode), &z0, None, 3, false);
+            for (x, y) in a.solution().iter().zip(b.solution()) {
+                assert_eq!(x.data(), y.data(), "workers={}", workers);
+            }
+        }
+        // F-only relaxation path too
+        let mut a = MgritCore::new(32, 4, 2, false, &z0);
+        a.solve(&Fwd(&ode), &z0, None, 3, false);
+        let mut b = MgritCore::new(32, 4, 2, false, &z0).with_workers(3);
+        b.solve(&Fwd(&ode), &z0, None, 3, false);
+        for (x, y) in a.solution().iter().zip(b.solution()) {
+            assert_eq!(x.data(), y.data());
         }
     }
 

@@ -73,11 +73,25 @@ impl<'a, P: Propagator + ?Sized> LevelStepper for AdjStepper<'a, P> {
 pub struct MgritSolver<'a, P: Propagator + ?Sized> {
     prop: &'a P,
     pub cfg: MgritConfig,
+    /// Relaxation worker threads (1 = single-threaded; >1 routes every
+    /// relaxation sweep — forward *and* adjoint — through the slab
+    /// executor in `parallel::exec`, bitwise identical results).
+    workers: usize,
 }
 
 impl<'a, P: Propagator + ?Sized> MgritSolver<'a, P> {
     pub fn new(prop: &'a P, cfg: MgritConfig) -> Self {
-        MgritSolver { prop, cfg }
+        MgritSolver { prop, cfg, workers: 1 }
+    }
+
+    /// Multi-worker solver (the `ThreadedMgrit` backend's entry point).
+    pub fn with_workers(prop: &'a P, cfg: MgritConfig, workers: usize) -> Self {
+        MgritSolver { prop, cfg, workers: workers.max(1) }
+    }
+
+    /// Worker threads this solver relaxes with.
+    pub fn workers(&self) -> usize {
+        self.workers
     }
 
     fn proto(&self) -> Tensor {
@@ -102,7 +116,8 @@ impl<'a, P: Propagator + ?Sized> MgritSolver<'a, P> {
         let stepper = FwdStepper(self.prop);
         let n = self.prop.n_steps();
         let before = self.prop.counters().fwd();
-        let mut core = MgritCore::new(n, self.cfg.cf, self.cfg.levels, self.cfg.fcf, &self.proto());
+        let mut core = MgritCore::new(n, self.cfg.cf, self.cfg.levels, self.cfg.fcf, &self.proto())
+            .with_workers(self.workers);
         let stats = match iters {
             None => {
                 core.serial_solve(&stepper, z0);
@@ -140,7 +155,8 @@ impl<'a, P: Propagator + ?Sized> MgritSolver<'a, P> {
         let stepper = FwdStepper(self.prop);
         let n = self.prop.n_steps();
         let before = self.prop.counters().fwd();
-        let mut core = MgritCore::new(n, self.cfg.cf, self.cfg.levels, self.cfg.fcf, &self.proto());
+        let mut core = MgritCore::new(n, self.cfg.cf, self.cfg.levels, self.cfg.fcf, &self.proto())
+            .with_workers(self.workers);
         let s = core.solve_fmg(&stepper, z0, iters, track_residuals);
         let stats = SolveStats {
             iterations: iters,
@@ -165,7 +181,8 @@ impl<'a, P: Propagator + ?Sized> MgritSolver<'a, P> {
         assert_eq!(states.len(), n + 1, "need all fine states for the adjoint");
         let stepper = AdjStepper { prop: self.prop, states };
         let before = self.prop.counters().vjp();
-        let mut core = MgritCore::new(n, self.cfg.cf, self.cfg.levels, self.cfg.fcf, &self.proto());
+        let mut core = MgritCore::new(n, self.cfg.cf, self.cfg.levels, self.cfg.fcf, &self.proto())
+            .with_workers(self.workers);
         let stats = match iters {
             None => {
                 core.serial_solve(&stepper, ct);
@@ -274,6 +291,28 @@ mod tests {
         assert!(st.residuals.last().unwrap() < &1e-5);
         for (a, b) in lam_mg.iter().zip(&expect) {
             assert!(a.allclose(b, 1e-4, 1e-4), "diff {}", a.max_abs_diff(b));
+        }
+    }
+
+    #[test]
+    fn threaded_solver_is_bitwise_identical_forward_and_adjoint() {
+        let mut rng = Rng::new(5);
+        let ode = LinearOde::random_stable(&mut rng, 5, 32, 0.05);
+        let z0 = Tensor::randn(&mut rng, &[5, 1], 1.0);
+        let ct = Tensor::randn(&mut rng, &[5, 1], 1.0);
+        let single = MgritSolver::new(&ode, cfg(4, 2));
+        let (w1, _) = single.forward(&z0, Some(3), None, false);
+        let (l1, _) = single.adjoint(&w1, &ct, Some(2), false);
+        for workers in [2usize, 4] {
+            let multi = MgritSolver::with_workers(&ode, cfg(4, 2), workers);
+            let (w2, _) = multi.forward(&z0, Some(3), None, false);
+            for (a, b) in w1.iter().zip(&w2) {
+                assert_eq!(a.data(), b.data(), "fwd workers={}", workers);
+            }
+            let (l2, _) = multi.adjoint(&w2, &ct, Some(2), false);
+            for (a, b) in l1.iter().zip(&l2) {
+                assert_eq!(a.data(), b.data(), "adj workers={}", workers);
+            }
         }
     }
 

@@ -1,13 +1,11 @@
 //! Model state: parameter store, initialization schemes, checkpoints.
 //!
-//! Layer parameters live in a shared `Rc<RefCell<Vec<Vec<f32>>>>` (one flat
-//! θ per layer, layout = manifest's `param_layout`) so the propagators and
-//! the optimizer view the same storage. Embedding/head parameters are plain
-//! vectors owned here.
+//! Layer parameters live in a shared `Arc<RwLock<Vec<Vec<f32>>>>` (one flat
+//! θ per layer, layout = manifest's `param_layout`) so the propagators —
+//! including threaded-backend workers — and the optimizer view the same
+//! storage. Embedding/head parameters are plain vectors owned here.
 
-use std::cell::RefCell;
 use std::io::{Read, Write};
-use std::rc::Rc;
 
 use anyhow::{bail, Context, Result};
 
@@ -15,13 +13,13 @@ use crate::config::{Arch, ModelConfig};
 use crate::ode::RustPropagator;
 use crate::util::rng::Rng;
 
-pub use crate::ode::SharedParams;
+pub use crate::ode::{shared_params, SharedParams};
 
 /// All trainable state of one run.
 pub struct ParamStore {
     pub model: ModelConfig,
     /// Per-layer flat θ (enc layout; dec layout past n_enc for EncDec).
-    pub layers: Rc<RefCell<Vec<Vec<f32>>>>,
+    pub layers: SharedParams,
     /// Token embedding [V, D].
     pub w_emb: Vec<f32>,
     /// Positional embedding [S, D].
@@ -108,7 +106,7 @@ impl ParamStore {
         let (v, d, s, c) = (model.vocab, model.d_model, model.seq, model.n_classes);
         ParamStore {
             model: model.clone(),
-            layers: Rc::new(RefCell::new(layers)),
+            layers: shared_params(layers),
             w_emb: rng.normal_vec(v * d, 0.02),
             w_pos: rng.normal_vec(s * d, 0.02),
             w_out: rng.normal_vec(d * v, 0.02),
@@ -118,7 +116,7 @@ impl ParamStore {
 
     /// Total trainable parameter count.
     pub fn n_params(&self) -> usize {
-        self.layers.borrow().iter().map(|l| l.len()).sum::<usize>()
+        self.layers.read().unwrap().iter().map(|l| l.len()).sum::<usize>()
             + self.w_emb.len()
             + self.w_pos.len()
             + self.w_out.len()
@@ -127,7 +125,7 @@ impl ParamStore {
 
     /// Flat-group sizes in optimizer order: layers…, emb, pos, out, cls.
     pub fn group_sizes(&self) -> Vec<usize> {
-        let mut v: Vec<usize> = self.layers.borrow().iter().map(|l| l.len()).collect();
+        let mut v: Vec<usize> = self.layers.read().unwrap().iter().map(|l| l.len()).collect();
         v.extend([self.w_emb.len(), self.w_pos.len(), self.w_out.len(), self.w_cls.len()]);
         v
     }
@@ -136,7 +134,7 @@ impl ParamStore {
     pub fn deep_clone(&self) -> ParamStore {
         ParamStore {
             model: self.model.clone(),
-            layers: Rc::new(RefCell::new(self.layers.borrow().clone())),
+            layers: shared_params(self.layers.read().unwrap().clone()),
             w_emb: self.w_emb.clone(),
             w_pos: self.w_pos.clone(),
             w_out: self.w_out.clone(),
@@ -153,7 +151,7 @@ impl ParamStore {
             std::io::BufWriter::new(std::fs::File::create(path).context("creating checkpoint")?);
         w.write_all(b"LTCK")?;
         w.write_all(&1u32.to_le_bytes())?;
-        let layers = self.layers.borrow();
+        let layers = self.layers.read().unwrap();
         w.write_all(&(layers.len() as u32).to_le_bytes())?;
         let write_vec = |w: &mut dyn Write, v: &[f32]| -> Result<()> {
             w.write_all(&(v.len() as u64).to_le_bytes())?;
@@ -216,7 +214,7 @@ impl ParamStore {
         let w_cls = read_vec(&mut r)?;
         Ok(ParamStore {
             model: model.clone(),
-            layers: Rc::new(RefCell::new(layers)),
+            layers: shared_params(layers),
             w_emb,
             w_pos,
             w_out,
@@ -241,7 +239,7 @@ mod tests {
     fn init_shapes_and_ln_identity() {
         let m = presets::mc_tiny().model;
         let ps = ParamStore::init(&m, Init::Default, 0);
-        let layers = ps.layers.borrow();
+        let layers = ps.layers.read().unwrap();
         assert_eq!(layers.len(), m.total_layers());
         assert_eq!(layers[0].len(), m.p_enc());
         // ln1_g is all ones, ln1_b all zeros
@@ -261,7 +259,7 @@ mod tests {
         // wv block starts after ln1(2d) + wq + wk
         let off = 2 * d + 2 * d * d;
         let std_of = |ps: &ParamStore| {
-            let layers = ps.layers.borrow();
+            let layers = ps.layers.read().unwrap();
             let w = &layers[0][off..off + d * d];
             (w.iter().map(|x| x * x).sum::<f32>() / w.len() as f32).sqrt()
         };
@@ -274,7 +272,7 @@ mod tests {
     fn encdec_layers_have_two_lengths() {
         let m = presets::mt_small().model;
         let ps = ParamStore::init(&m, Init::Default, 2);
-        let layers = ps.layers.borrow();
+        let layers = ps.layers.read().unwrap();
         assert_eq!(layers[0].len(), m.p_enc());
         assert_eq!(layers[m.n_enc_layers].len(), m.p_dec());
     }
@@ -287,7 +285,7 @@ mod tests {
         let path = path.to_str().unwrap();
         ps.save(path).unwrap();
         let ps2 = ParamStore::load(&m, path).unwrap();
-        assert_eq!(*ps.layers.borrow(), *ps2.layers.borrow());
+        assert_eq!(*ps.layers.read().unwrap(), *ps2.layers.read().unwrap());
         assert_eq!(ps.w_emb, ps2.w_emb);
         assert_eq!(ps.w_cls, ps2.w_cls);
         std::fs::remove_file(path).ok();

@@ -20,5 +20,5 @@ mod xla_prop;
 
 pub use linear::LinearOde;
 pub use propagator::{Propagator, StepCounters};
-pub use rust_prop::{layer_hs, RustPropagator, SharedParams};
+pub use rust_prop::{layer_hs, shared_params, RustPropagator, SharedParams};
 pub use xla_prop::XlaPropagator;

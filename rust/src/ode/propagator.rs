@@ -1,36 +1,50 @@
-//! The Φ interface MGRIT is generic over.
+//! The Φ interface MGRIT is generic over (Propagator v2).
+//!
+//! v2 contract: every propagator is `Send + Sync` so the threaded MGRIT
+//! backend can drive relaxation chunks from worker threads against one
+//! shared Φ. Evaluation counters are atomics; parameter stores behind the
+//! implementations use `Arc<RwLock<..>>` (see [`super::SharedParams`]).
 
-use std::cell::Cell;
+use std::sync::atomic::{AtomicU64, Ordering};
 
 use crate::tensor::Tensor;
 
 /// Φ-evaluation counters (feed the performance simulator and §Perf logs).
-#[derive(Debug, Default, Clone)]
+///
+/// Relaxed atomics: counts are statistics, not synchronization — workers
+/// bump them concurrently during threaded relaxation.
+#[derive(Debug, Default)]
 pub struct StepCounters {
-    fwd: Cell<u64>,
-    vjp: Cell<u64>,
+    fwd: AtomicU64,
+    vjp: AtomicU64,
+}
+
+impl Clone for StepCounters {
+    fn clone(&self) -> StepCounters {
+        StepCounters { fwd: AtomicU64::new(self.fwd()), vjp: AtomicU64::new(self.vjp()) }
+    }
 }
 
 impl StepCounters {
     pub fn count_fwd(&self) {
-        self.fwd.set(self.fwd.get() + 1);
+        self.fwd.fetch_add(1, Ordering::Relaxed);
     }
 
     pub fn count_vjp(&self) {
-        self.vjp.set(self.vjp.get() + 1);
+        self.vjp.fetch_add(1, Ordering::Relaxed);
     }
 
     pub fn fwd(&self) -> u64 {
-        self.fwd.get()
+        self.fwd.load(Ordering::Relaxed)
     }
 
     pub fn vjp(&self) -> u64 {
-        self.vjp.get()
+        self.vjp.load(Ordering::Relaxed)
     }
 
     pub fn reset(&self) {
-        self.fwd.set(0);
-        self.vjp.set(0);
+        self.fwd.store(0, Ordering::Relaxed);
+        self.vjp.store(0, Ordering::Relaxed);
     }
 }
 
@@ -39,7 +53,10 @@ impl StepCounters {
 /// `layer` is always a *fine-grid* layer index; MGRIT level ℓ calls Φ with
 /// `h_scale = c_f^ℓ` (rediscretization: same parameters, larger step), so
 /// the effective step is `h_scale · fine_h(layer)`.
-pub trait Propagator {
+///
+/// `Send + Sync` is part of the contract: the `ThreadedMgrit` backend
+/// shares one propagator across relaxation workers.
+pub trait Propagator: Send + Sync {
     /// Number of fine time-steps N (layers inside the MGRIT domain).
     fn n_steps(&self) -> usize;
 
@@ -51,6 +68,32 @@ pub trait Propagator {
 
     /// Z_{n+1} = Φ(Z_n; θ_layer, h_scale · fine_h).
     fn step(&self, layer: usize, h_scale: f32, z: &Tensor) -> Tensor;
+
+    /// Batched propagation over consecutive layers `[layer_lo, layer_hi)`:
+    /// returns the state after each step (`layer_hi − layer_lo` tensors,
+    /// the last being Z_{layer_hi}). Implementations override this to
+    /// amortize per-call dispatch (parameter-lock acquisition, executable
+    /// lookup) across a whole chunk — the serial buffer sweeps, evaluation
+    /// forwards, and relaxation chunks all step consecutive layers.
+    fn step_range(&self, layer_lo: usize, layer_hi: usize, h_scale: f32, z: &Tensor) -> Vec<Tensor> {
+        let mut out: Vec<Tensor> = Vec::with_capacity(layer_hi.saturating_sub(layer_lo));
+        for layer in layer_lo..layer_hi {
+            let next = self.step(layer, h_scale, out.last().unwrap_or(z));
+            out.push(next);
+        }
+        out
+    }
+
+    /// Like [`Propagator::step_range`] but returns only the final state
+    /// Z_{layer_hi} — the rolling-state variant for full forwards where
+    /// intermediates are not needed (evaluation): O(1) state memory.
+    fn step_to(&self, layer_lo: usize, layer_hi: usize, h_scale: f32, z: &Tensor) -> Tensor {
+        let mut cur = z.clone();
+        for layer in layer_lo..layer_hi {
+            cur = self.step(layer, h_scale, &cur);
+        }
+        cur
+    }
 
     /// Adjoint step: λ_n = (∂Φ/∂Z(Z_n; θ_layer, h_scale·fine_h))ᵀ λ_{n+1}.
     fn adjoint_step(&self, layer: usize, h_scale: f32, z: &Tensor, lam_next: &Tensor) -> Tensor;
@@ -64,4 +107,38 @@ pub trait Propagator {
 
     /// Evaluation counters.
     fn counters(&self) -> &StepCounters;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_are_thread_safe() {
+        let c = StepCounters::default();
+        std::thread::scope(|s| {
+            for _ in 0..4 {
+                s.spawn(|| {
+                    for _ in 0..100 {
+                        c.count_fwd();
+                        c.count_vjp();
+                    }
+                });
+            }
+        });
+        assert_eq!(c.fwd(), 400);
+        assert_eq!(c.vjp(), 400);
+        c.reset();
+        assert_eq!(c.fwd(), 0);
+    }
+
+    #[test]
+    fn clone_snapshots_counts() {
+        let c = StepCounters::default();
+        c.count_fwd();
+        let d = c.clone();
+        c.count_fwd();
+        assert_eq!(d.fwd(), 1);
+        assert_eq!(c.fwd(), 2);
+    }
 }

@@ -4,16 +4,25 @@
 //! tooling, and as a fallback engine. Mirrors the stacked encoder-decoder
 //! state handling of [`super::XlaPropagator`] exactly.
 
-use std::cell::RefCell;
-use std::rc::Rc;
+use std::sync::{Arc, RwLock};
 
 use super::propagator::{Propagator, StepCounters};
 use crate::config::{Arch, ModelConfig};
 use crate::reference::{self, RefDims};
 use crate::tensor::Tensor;
 
-/// Shared per-layer flat parameters (the trainer mutates through this Rc).
-pub type SharedParams = Rc<RefCell<Vec<Vec<f32>>>>;
+/// Shared per-layer flat parameters (the trainer mutates through this Arc).
+///
+/// v2: `Arc<RwLock<..>>` instead of `Rc<RefCell<..>>` so propagators are
+/// `Send + Sync` and the threaded MGRIT backend can evaluate Φ from worker
+/// threads. The training loop takes the write lock only inside the
+/// optimizer update; all solves hold read locks.
+pub type SharedParams = Arc<RwLock<Vec<Vec<f32>>>>;
+
+/// Build a [`SharedParams`] from per-layer flat vectors.
+pub fn shared_params(layers: Vec<Vec<f32>>) -> SharedParams {
+    Arc::new(RwLock::new(layers))
+}
 
 /// Reference-transformer propagator over the MGRIT domain.
 pub struct RustPropagator {
@@ -46,18 +55,18 @@ impl RustPropagator {
     /// `params[l]` is layer l's flat θ (enc layout, or dec layout past
     /// n_enc); uniform fine step `h` across all layers.
     pub fn new(model: &ModelConfig, h: f32, params: SharedParams) -> RustPropagator {
-        let n = params.borrow().len();
+        let n = params.read().unwrap().len();
         Self::with_hs(model, vec![h; n], params)
     }
 
     /// Buffer-aware constructor: Δt per layer from [`layer_hs`].
     pub fn for_model(model: &ModelConfig, params: SharedParams) -> RustPropagator {
-        let n = params.borrow().len();
+        let n = params.read().unwrap().len();
         Self::with_hs(model, layer_hs(model, n), params)
     }
 
     pub fn with_hs(model: &ModelConfig, hs: Vec<f32>, params: SharedParams) -> RustPropagator {
-        let n_steps = params.borrow().len();
+        let n_steps = params.read().unwrap().len();
         assert_eq!(hs.len(), n_steps);
         RustPropagator {
             dims: RefDims {
@@ -91,6 +100,24 @@ impl RustPropagator {
         data.extend_from_slice(y.data());
         Tensor::from_vec(data, shape)
     }
+
+    /// One Φ application with the parameter lock already resolved to θ.
+    fn apply_theta(&self, layer: usize, theta: &[f32], h: f32, z: &Tensor) -> Tensor {
+        match self.arch {
+            Arch::Encoder => reference::enc_step_fwd(z, theta, h, &self.dims, false),
+            Arch::Decoder => reference::enc_step_fwd(z, theta, h, &self.dims, true),
+            Arch::EncDec => {
+                let (x, y, shape) = self.split_state(z);
+                if layer < self.n_enc {
+                    let x2 = reference::enc_step_fwd(&x, theta, h, &self.dims, false);
+                    self.join_state(&x2, &y, shape)
+                } else {
+                    let y2 = reference::dec_step_fwd(&y, &x, theta, h, &self.dims, self.dims.seq);
+                    self.join_state(&x, &y2, shape)
+                }
+            }
+        }
+    }
 }
 
 impl Propagator for RustPropagator {
@@ -117,28 +144,40 @@ impl Propagator for RustPropagator {
     fn step(&self, layer: usize, h_scale: f32, z: &Tensor) -> Tensor {
         self.counters.count_fwd();
         let h = self.hs[layer] * h_scale;
-        let params = self.params.borrow();
-        let theta = &params[layer];
-        match self.arch {
-            Arch::Encoder => reference::enc_step_fwd(z, theta, h, &self.dims, false),
-            Arch::Decoder => reference::enc_step_fwd(z, theta, h, &self.dims, true),
-            Arch::EncDec => {
-                let (x, y, shape) = self.split_state(z);
-                if layer < self.n_enc {
-                    let x2 = reference::enc_step_fwd(&x, theta, h, &self.dims, false);
-                    self.join_state(&x2, &y, shape)
-                } else {
-                    let y2 = reference::dec_step_fwd(&y, &x, theta, h, &self.dims, self.dims.seq);
-                    self.join_state(&x, &y2, shape)
-                }
-            }
+        let params = self.params.read().unwrap();
+        self.apply_theta(layer, &params[layer], h, z)
+    }
+
+    /// Batched steps under a single read-lock acquisition (the v2
+    /// dispatch-amortization entry point).
+    fn step_range(&self, layer_lo: usize, layer_hi: usize, h_scale: f32, z: &Tensor) -> Vec<Tensor> {
+        let params = self.params.read().unwrap();
+        let mut out: Vec<Tensor> = Vec::with_capacity(layer_hi.saturating_sub(layer_lo));
+        for layer in layer_lo..layer_hi {
+            self.counters.count_fwd();
+            let h = self.hs[layer] * h_scale;
+            let next = self.apply_theta(layer, &params[layer], h, out.last().unwrap_or(z));
+            out.push(next);
         }
+        out
+    }
+
+    /// Rolling full forward under a single read-lock acquisition.
+    fn step_to(&self, layer_lo: usize, layer_hi: usize, h_scale: f32, z: &Tensor) -> Tensor {
+        let params = self.params.read().unwrap();
+        let mut cur = z.clone();
+        for layer in layer_lo..layer_hi {
+            self.counters.count_fwd();
+            let h = self.hs[layer] * h_scale;
+            cur = self.apply_theta(layer, &params[layer], h, &cur);
+        }
+        cur
     }
 
     fn adjoint_step(&self, layer: usize, h_scale: f32, z: &Tensor, lam_next: &Tensor) -> Tensor {
         self.counters.count_vjp();
         let h = self.hs[layer] * h_scale;
-        let params = self.params.borrow();
+        let params = self.params.read().unwrap();
         let theta = &params[layer];
         match self.arch {
             Arch::Encoder => reference::enc_step_bwd(z, theta, h, &self.dims, false, lam_next).0,
@@ -165,7 +204,7 @@ impl Propagator for RustPropagator {
     fn accumulate_grad(&self, layer: usize, z: &Tensor, lam_next: &Tensor, grad: &mut [f32]) {
         self.counters.count_vjp();
         let h = self.hs[layer];
-        let params = self.params.borrow();
+        let params = self.params.read().unwrap();
         let theta = &params[layer];
         let g = match self.arch {
             Arch::Encoder => reference::enc_step_bwd(z, theta, h, &self.dims, false, lam_next).1,
@@ -187,7 +226,7 @@ impl Propagator for RustPropagator {
     }
 
     fn theta_len(&self, layer: usize) -> usize {
-        self.params.borrow()[layer].len()
+        self.params.read().unwrap()[layer].len()
     }
 
     fn counters(&self) -> &StepCounters {
@@ -227,7 +266,7 @@ mod tests {
             };
             v.push(rng.normal_vec(len, std));
         }
-        Rc::new(RefCell::new(v))
+        shared_params(v)
     }
 
     #[test]
@@ -255,6 +294,47 @@ mod tests {
         let z3 = prop.step(2, 1.0, &z); // decoder phase (n_enc = 2)
         assert_eq!(&z3.data()[..half], &z.data()[..half], "X must not move");
         assert_ne!(&z3.data()[half..], &z.data()[half..], "Y must move");
+    }
+
+    #[test]
+    fn step_range_matches_repeated_steps_bitwise() {
+        let model = tiny_model(Arch::Encoder);
+        let mut rng = Rng::new(5);
+        let params = make_params(&model, &mut rng, 0.1);
+        let prop = RustPropagator::new(&model, 1.0, params);
+        let z = Tensor::randn(&mut rng, &prop.state_shape(), 1.0);
+        let batched = prop.step_range(0, 4, 1.0, &z);
+        assert_eq!(batched.len(), 4);
+        let mut cur = z.clone();
+        for (l, b) in batched.iter().enumerate() {
+            cur = prop.step(l, 1.0, &cur);
+            assert_eq!(cur.data(), b.data(), "layer {}", l);
+        }
+        // the rolling variant lands on the same final state
+        let rolled = prop.step_to(0, 4, 1.0, &z);
+        assert_eq!(rolled.data(), batched.last().unwrap().data());
+    }
+
+    #[test]
+    fn propagator_is_shareable_across_threads() {
+        // the v2 contract: &RustPropagator can be used from worker threads
+        let model = tiny_model(Arch::Encoder);
+        let mut rng = Rng::new(6);
+        let params = make_params(&model, &mut rng, 0.1);
+        let prop = RustPropagator::new(&model, 1.0, params);
+        let z = Tensor::randn(&mut rng, &prop.state_shape(), 1.0);
+        let want = prop.step(0, 1.0, &z);
+        let outs: Vec<Tensor> = std::thread::scope(|s| {
+            (0..4)
+                .map(|_| s.spawn(|| prop.step(0, 1.0, &z)))
+                .collect::<Vec<_>>()
+                .into_iter()
+                .map(|h| h.join().unwrap())
+                .collect()
+        });
+        for o in outs {
+            assert_eq!(o.data(), want.data());
+        }
     }
 
     #[test]

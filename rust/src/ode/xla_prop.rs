@@ -1,8 +1,12 @@
 //! Production propagator: Φ and its VJP as AOT-compiled XLA programs
 //! executed through PJRT. One compiled executable per entry point, reused
 //! across all layers and MGRIT levels (h is a runtime scalar).
+//!
+//! v2: the engine is shared as `Arc<XlaEngine>` and the propagator is
+//! `Send + Sync`, so the threaded MGRIT backend can execute Φ from worker
+//! threads (PJRT executables are thread-safe; see `runtime::engine`).
 
-use std::rc::Rc;
+use std::sync::Arc;
 
 use super::propagator::{Propagator, StepCounters};
 use super::rust_prop::SharedParams;
@@ -12,7 +16,7 @@ use crate::tensor::Tensor;
 
 /// XLA-backed propagator over the MGRIT domain.
 pub struct XlaPropagator {
-    engine: Rc<XlaEngine>,
+    engine: Arc<XlaEngine>,
     arch: Arch,
     n_enc: usize,
     n_steps: usize,
@@ -26,33 +30,33 @@ pub struct XlaPropagator {
 
 impl XlaPropagator {
     pub fn new(
-        engine: Rc<XlaEngine>,
+        engine: Arc<XlaEngine>,
         model: &ModelConfig,
         h: f32,
         params: SharedParams,
     ) -> anyhow::Result<XlaPropagator> {
-        let n = params.borrow().len();
+        let n = params.read().unwrap().len();
         Self::with_hs(engine, model, vec![h; n], params)
     }
 
     /// Buffer-aware constructor (Δt per layer from `ode::layer_hs`).
     pub fn for_model(
-        engine: Rc<XlaEngine>,
+        engine: Arc<XlaEngine>,
         model: &ModelConfig,
         params: SharedParams,
     ) -> anyhow::Result<XlaPropagator> {
-        let n = params.borrow().len();
+        let n = params.read().unwrap().len();
         Self::with_hs(engine, model, super::rust_prop::layer_hs(model, n), params)
     }
 
     pub fn with_hs(
-        engine: Rc<XlaEngine>,
+        engine: Arc<XlaEngine>,
         model: &ModelConfig,
         hs: Vec<f32>,
         params: SharedParams,
     ) -> anyhow::Result<XlaPropagator> {
         engine.manifest().validate_model(model)?;
-        let n_steps = params.borrow().len();
+        let n_steps = params.read().unwrap().len();
         assert_eq!(hs.len(), n_steps);
         Ok(XlaPropagator {
             engine,
@@ -69,7 +73,7 @@ impl XlaPropagator {
     }
 
     fn theta_value(&self, layer: usize) -> Value {
-        let params = self.params.borrow();
+        let params = self.params.read().unwrap();
         let th = &params[layer];
         Value::F32(Tensor::from_vec(th.clone(), &[th.len()]))
     }
@@ -94,6 +98,54 @@ impl XlaPropagator {
             Arch::Decoder => "causal_step",
             _ => "enc_step",
         }
+    }
+
+    /// Shared body of `step_range`/`step_to`: consecutive Φ applications
+    /// over `[layer_lo, layer_hi)` with the executable resolved once.
+    /// `keep_intermediates` keeps every state (for relaxation/buffer
+    /// sweeps); otherwise only the final state survives (O(1) memory,
+    /// for evaluation forwards).
+    fn drive_range(
+        &self,
+        layer_lo: usize,
+        layer_hi: usize,
+        h_scale: f32,
+        z: &Tensor,
+        keep_intermediates: bool,
+    ) -> Vec<Tensor> {
+        let n = layer_hi.saturating_sub(layer_lo);
+        let cap = if keep_intermediates { n } else { n.min(1) };
+        let mut out: Vec<Tensor> = Vec::with_capacity(cap);
+        match self.arch {
+            Arch::Encoder | Arch::Decoder => {
+                let entry = self.enc_entry();
+                let exe = self.engine.executable(entry).expect("Φ entry point missing");
+                self.engine.note_calls(entry, n as u64);
+                for layer in layer_lo..layer_hi {
+                    self.counters.count_fwd();
+                    let h = self.hs[layer] * h_scale;
+                    let prev = out.last().unwrap_or(z).clone();
+                    let args = [Value::F32(prev), self.theta_value(layer), Value::scalar(h)];
+                    let next = exe.call(&args).expect("Φ step failed").into_iter().next().unwrap();
+                    if !keep_intermediates {
+                        out.clear();
+                    }
+                    out.push(next);
+                }
+            }
+            // the stacked state alternates enc/dec entry points — fall back
+            // to per-step dispatch
+            Arch::EncDec => {
+                for layer in layer_lo..layer_hi {
+                    let next = self.step(layer, h_scale, out.last().unwrap_or(z));
+                    if !keep_intermediates {
+                        out.clear();
+                    }
+                    out.push(next);
+                }
+            }
+        }
+        out
     }
 }
 
@@ -159,6 +211,20 @@ impl Propagator for XlaPropagator {
                 }
             }
         }
+    }
+
+    /// Batched steps with the executable resolved once (the v2
+    /// dispatch-amortization entry point: one cache lookup, one call-counter
+    /// bump, per chunk instead of per layer).
+    fn step_range(&self, layer_lo: usize, layer_hi: usize, h_scale: f32, z: &Tensor) -> Vec<Tensor> {
+        self.drive_range(layer_lo, layer_hi, h_scale, z, true)
+    }
+
+    /// Rolling full forward with the executable resolved once.
+    fn step_to(&self, layer_lo: usize, layer_hi: usize, h_scale: f32, z: &Tensor) -> Tensor {
+        self.drive_range(layer_lo, layer_hi, h_scale, z, false)
+            .pop()
+            .unwrap_or_else(|| z.clone())
     }
 
     fn adjoint_step(&self, layer: usize, h_scale: f32, z: &Tensor, lam_next: &Tensor) -> Tensor {

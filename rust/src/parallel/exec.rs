@@ -1,27 +1,132 @@
 //! Real multi-worker execution of the MGRIT relaxation phase.
 //!
-//! Demonstrates (and tests) that the layer-slab decomposition + channel
-//! fabric compute *bitwise the same result* as the single-threaded engine:
-//! each worker owns a contiguous slab of chunks, applies F-relaxation
+//! Each worker owns a contiguous slab of chunks, applies F-relaxation
 //! locally (no communication — the parallel phase of paper Fig. 2), then
-//! C-relaxation with a halo exchange of the slab-boundary state.
+//! C-relaxation with a halo exchange of the slab-boundary state over the
+//! channel [`Fabric`]. The update schedule is value-for-value identical to
+//! the single-threaded engine, so threaded solves are *bitwise* equal to
+//! serial ones.
 //!
-//! The step function is a plain `Fn(layer, &[f32]) -> Vec<f32> + Sync`
-//! closure so any thread-safe Φ can plug in; on this 1-core machine the
-//! win is correctness evidence, not wall-clock (see `simulator` for the
-//! performance model).
+//! v2: the executors are generic over a [`RelaxState`] (plain `Vec<f32>`
+//! slabs in the standalone tests, [`Tensor`] states on the real MGRIT hot
+//! loop) and accept the FAS right-hand side G so they can run *inside*
+//! `mgrit::core`'s V-cycle — this is the execution layer behind the
+//! `ThreadedMgrit` backend, not just correctness evidence.
 
 use std::thread;
 
 use super::comm::Fabric;
 use super::topology::slab_partition;
+use crate::tensor::Tensor;
 
-/// One F-relax + C-relax sweep over `n` fine steps executed by `workers`
-/// threads. `w` holds states at points 0..=n (C-points must be valid on
-/// entry; F-points are overwritten). Returns the updated states.
-pub fn parallel_fc_relax<F>(w: Vec<Vec<f32>>, cf: usize, workers: usize, step: F) -> Vec<Vec<f32>>
+/// A state vector the relaxation executors can carry across threads and
+/// through the channel fabric.
+pub trait RelaxState: Clone + Send + Sync {
+    /// x += y elementwise (the RHS update of one relaxation step; must use
+    /// the same arithmetic as the serial engine for bitwise parity).
+    fn add_in_place(&mut self, other: &Self);
+
+    /// Flatten for a fabric message.
+    fn to_flat(&self) -> Vec<f32>;
+
+    /// Rebuild from a fabric message (`like` supplies shape metadata).
+    fn from_flat(like: &Self, data: Vec<f32>) -> Self;
+}
+
+impl RelaxState for Vec<f32> {
+    fn add_in_place(&mut self, other: &Self) {
+        for (a, b) in self.iter_mut().zip(other) {
+            *a += *b;
+        }
+    }
+
+    fn to_flat(&self) -> Vec<f32> {
+        self.clone()
+    }
+
+    fn from_flat(_like: &Self, data: Vec<f32>) -> Self {
+        data
+    }
+}
+
+impl RelaxState for Tensor {
+    fn add_in_place(&mut self, other: &Self) {
+        self.axpy(1.0, other);
+    }
+
+    fn to_flat(&self) -> Vec<f32> {
+        self.data().to_vec()
+    }
+
+    fn from_flat(like: &Self, data: Vec<f32>) -> Self {
+        Tensor::from_vec(data, like.shape())
+    }
+}
+
+/// One relaxation step with the FAS right-hand side applied — the single
+/// place the g-indexing convention (`g[point_written]`, i.e. `lo+idx+1`)
+/// lives; every F- and C-point update in both executors routes through
+/// it, so the bitwise-parity invariant cannot silently fork.
+fn relax_point<T, F>(lo: usize, idx: usize, z: &T, g: Option<&[T]>, step: &F) -> T
 where
-    F: Fn(usize, &[f32]) -> Vec<f32> + Sync,
+    T: RelaxState,
+    F: Fn(usize, &T) -> T,
+{
+    let mut next = step(lo + idx, z);
+    if let Some(g) = g {
+        next.add_in_place(&g[lo + idx + 1]);
+    }
+    next
+}
+
+/// One F-point sweep over a slab's local copy: for every owned chunk,
+/// re-propagate its F-points from the chunk's leading C-point (`lo` is
+/// the level index of `local[0]`). Shared by both executors.
+fn f_sweep_local<T, F>(
+    local: &mut [T],
+    lo: usize,
+    n_chunks: usize,
+    cf: usize,
+    g: Option<&[T]>,
+    step: &F,
+) where
+    T: RelaxState,
+    F: Fn(usize, &T) -> T,
+{
+    for c in 0..n_chunks {
+        for i in 0..cf - 1 {
+            let idx = c * cf + i;
+            local[idx + 1] = relax_point(lo, idx, &local[idx], g, step);
+        }
+    }
+}
+
+/// Stitch per-slab worker results back into the full point array.
+fn stitch<T>(mut out: Vec<T>, mut results: Vec<(usize, Vec<T>)>) -> Vec<T> {
+    results.sort_by_key(|(lo, _)| *lo);
+    for (lo, local) in results {
+        for (i, v) in local.into_iter().enumerate() {
+            out[lo + i] = v;
+        }
+    }
+    out
+}
+
+/// One F-relax + C-relax + F-relax (FCF) sweep over `n` fine steps executed
+/// by `workers` threads. `w` holds states at points 0..=n (C-points must be
+/// valid on entry; F-points are overwritten). `g`, when present, is the FAS
+/// right-hand side added after every step (index-aligned with `w`).
+/// Returns the updated states — bitwise identical to the serial schedule.
+pub fn parallel_fc_relax<T, F>(
+    w: Vec<T>,
+    g: Option<&[T]>,
+    cf: usize,
+    workers: usize,
+    step: F,
+) -> Vec<T>
+where
+    T: RelaxState,
+    F: Fn(usize, &T) -> T + Sync,
 {
     let n = w.len() - 1;
     assert_eq!(n % cf, 0, "n must be a multiple of cf");
@@ -33,7 +138,7 @@ where
     let step_ref = &step;
     let w_ref = &w;
 
-    let mut results: Vec<(usize, Vec<Vec<f32>>)> = thread::scope(|s| {
+    let results: Vec<(usize, Vec<T>)> = thread::scope(|s| {
         let handles: Vec<_> = endpoints
             .into_iter()
             .zip(slabs.iter().cloned())
@@ -45,37 +150,28 @@ where
                     // plus read access to the C-point at c0*cf.
                     let lo = c0 * cf;
                     let hi = c1 * cf;
-                    let mut local: Vec<Vec<f32>> = w_ref[lo..=hi].to_vec();
+                    let mut local: Vec<T> = w_ref[lo..=hi].to_vec();
                     // F-relaxation: every chunk independently (parallel phase)
-                    for c in 0..(c1 - c0) {
-                        for i in 0..cf - 1 {
-                            let idx = c * cf + i;
-                            local[idx + 1] = step_ref(lo + idx, &local[idx]);
-                        }
-                    }
+                    f_sweep_local(&mut local, lo, c1 - c0, cf, g, step_ref);
                     // C-relaxation: the final step of each chunk; the first
                     // C-point of the *next* slab is produced here, so send
                     // the boundary value right after computing it.
                     for c in 0..(c1 - c0) {
                         let idx = (c + 1) * cf - 1;
-                        local[idx + 1] = step_ref(lo + idx, &local[idx]);
+                        local[idx + 1] = relax_point(lo, idx, &local[idx], g, step_ref);
                     }
                     // second F-relax needs the incoming C-point from the left
                     // neighbour's C-relax (FCF); exchange halos:
                     if rank + 1 < ep.n_ranks {
-                        let boundary = local.last().unwrap().clone();
+                        let boundary = local.last().unwrap().to_flat();
                         ep.send(rank + 1, 42, boundary);
                     }
                     if rank > 0 {
-                        local[0] = ep.recv(rank - 1, 42);
+                        let data = ep.recv(rank - 1, 42);
+                        local[0] = T::from_flat(&local[0], data);
                     }
                     // final F-relaxation with the fresh left C-point
-                    for c in 0..(c1 - c0) {
-                        for i in 0..cf - 1 {
-                            let idx = c * cf + i;
-                            local[idx + 1] = step_ref(lo + idx, &local[idx]);
-                        }
-                    }
+                    f_sweep_local(&mut local, lo, c1 - c0, cf, g, step_ref);
                     (lo, local)
                 })
             })
@@ -83,15 +179,50 @@ where
         handles.into_iter().map(|h| h.join().unwrap()).collect()
     });
 
-    // stitch slabs back together
-    let mut out = w;
-    results.sort_by_key(|(lo, _)| *lo);
-    for (lo, local) in results {
-        for (i, v) in local.into_iter().enumerate() {
-            out[lo + i] = v;
-        }
-    }
-    out
+    stitch(w, results)
+}
+
+/// One F-relaxation sweep over `workers` threads: every chunk re-propagates
+/// its F-points from its (read-only) leading C-point — no communication at
+/// all, the embarrassingly-parallel phase of paper Fig. 2. `g` as in
+/// [`parallel_fc_relax`].
+pub fn parallel_f_relax<T, F>(
+    w: Vec<T>,
+    g: Option<&[T]>,
+    cf: usize,
+    workers: usize,
+    step: F,
+) -> Vec<T>
+where
+    T: RelaxState,
+    F: Fn(usize, &T) -> T + Sync,
+{
+    let n = w.len() - 1;
+    assert_eq!(n % cf, 0, "n must be a multiple of cf");
+    let chunks = n / cf;
+    let workers = workers.min(chunks).max(1);
+    let slabs = slab_partition(chunks, workers);
+    let step_ref = &step;
+    let w_ref = &w;
+
+    let results: Vec<(usize, Vec<T>)> = thread::scope(|s| {
+        let handles: Vec<_> = slabs
+            .iter()
+            .cloned()
+            .map(|(c0, c1)| {
+                s.spawn(move || {
+                    let lo = c0 * cf;
+                    let hi = c1 * cf;
+                    let mut local: Vec<T> = w_ref[lo..=hi].to_vec();
+                    f_sweep_local(&mut local, lo, c1 - c0, cf, g, step_ref);
+                    (lo, local)
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    });
+
+    stitch(w, results)
 }
 
 /// Single-threaded FCF sweep with the same update order (oracle for tests).
@@ -133,13 +264,17 @@ mod tests {
             .collect()
     }
 
+    fn vec_step(layer: usize, z: &Vec<f32>) -> Vec<f32> {
+        affine_step(layer, z)
+    }
+
     #[test]
     fn parallel_matches_serial_exactly() {
         for (n, cf, workers) in [(16, 4, 2), (16, 4, 4), (24, 3, 3), (32, 2, 5), (8, 8, 1)] {
             let mut rng = Rng::new(n as u64);
             let w: Vec<Vec<f32>> = (0..=n).map(|_| rng.normal_vec(6, 1.0)).collect();
             let serial = serial_fc_relax(w.clone(), cf, affine_step);
-            let parallel = parallel_fc_relax(w, cf, workers, affine_step);
+            let parallel = parallel_fc_relax(w, None, cf, workers, vec_step);
             for (a, b) in parallel.iter().zip(&serial) {
                 assert_eq!(a, b, "n={} cf={} workers={}", n, cf, workers);
             }
@@ -151,9 +286,83 @@ mod tests {
         let mut rng = Rng::new(9);
         let w: Vec<Vec<f32>> = (0..=8).map(|_| rng.normal_vec(4, 1.0)).collect();
         let serial = serial_fc_relax(w.clone(), 4, affine_step);
-        let parallel = parallel_fc_relax(w, 4, 16, affine_step); // 2 chunks only
+        let parallel = parallel_fc_relax(w, None, 4, 16, vec_step); // 2 chunks only
         for (a, b) in parallel.iter().zip(&serial) {
             assert_eq!(a, b);
+        }
+    }
+
+    #[test]
+    fn rhs_aware_sweep_matches_serial_with_rhs() {
+        // FAS form: every step adds g — compare against a hand-rolled
+        // serial FCF sweep with the same adds.
+        let (n, cf) = (16usize, 4usize);
+        let mut rng = Rng::new(3);
+        let w: Vec<Vec<f32>> = (0..=n).map(|_| rng.normal_vec(5, 1.0)).collect();
+        let g: Vec<Vec<f32>> = (0..=n).map(|_| rng.normal_vec(5, 0.1)).collect();
+        let mut serial = w.clone();
+        let chunks = n / cf;
+        let sweep_f = |w: &mut Vec<Vec<f32>>| {
+            for c in 0..chunks {
+                for i in 0..cf - 1 {
+                    let idx = c * cf + i;
+                    let mut next = affine_step(idx, &w[idx]);
+                    next.add_in_place(&g[idx + 1]);
+                    w[idx + 1] = next;
+                }
+            }
+        };
+        sweep_f(&mut serial);
+        for c in 0..chunks {
+            let idx = (c + 1) * cf - 1;
+            let mut next = affine_step(idx, &serial[idx]);
+            next.add_in_place(&g[idx + 1]);
+            serial[idx + 1] = next;
+        }
+        sweep_f(&mut serial);
+        for workers in [1usize, 2, 4] {
+            let parallel = parallel_fc_relax(w.clone(), Some(&g[..]), cf, workers, vec_step);
+            for (a, b) in parallel.iter().zip(&serial) {
+                assert_eq!(a, b, "workers={}", workers);
+            }
+        }
+    }
+
+    #[test]
+    fn f_only_sweep_touches_only_f_points() {
+        let (n, cf) = (12usize, 3usize);
+        let mut rng = Rng::new(4);
+        let w: Vec<Vec<f32>> = (0..=n).map(|_| rng.normal_vec(4, 1.0)).collect();
+        let out = parallel_f_relax(w.clone(), None, cf, 3, vec_step);
+        for i in (0..=n).step_by(cf) {
+            assert_eq!(out[i], w[i], "C-point {} must be untouched", i);
+        }
+        // F-points follow the chain from their chunk's C-point
+        for c in 0..n / cf {
+            let mut cur = w[c * cf].clone();
+            for i in 0..cf - 1 {
+                cur = affine_step(c * cf + i, &cur);
+                assert_eq!(out[c * cf + i + 1], cur);
+            }
+        }
+    }
+
+    #[test]
+    fn tensor_states_round_trip_the_fabric() {
+        // Tensor-typed relaxation (the real MGRIT hot-loop shape) matches
+        // the Vec<f32> executor bit for bit.
+        let (n, cf, workers) = (16usize, 4usize, 4usize);
+        let mut rng = Rng::new(5);
+        let w_vec: Vec<Vec<f32>> = (0..=n).map(|_| rng.normal_vec(6, 1.0)).collect();
+        let w_t: Vec<Tensor> =
+            w_vec.iter().map(|v| Tensor::from_vec(v.clone(), &[2, 3])).collect();
+        let t_step = |l: usize, z: &Tensor| -> Tensor {
+            Tensor::from_vec(affine_step(l, z.data()), &[2, 3])
+        };
+        let out_vec = parallel_fc_relax(w_vec, None, cf, workers, vec_step);
+        let out_t = parallel_fc_relax(w_t, None, cf, workers, t_step);
+        for (a, b) in out_t.iter().zip(&out_vec) {
+            assert_eq!(a.data(), b.as_slice());
         }
     }
 }

@@ -4,9 +4,11 @@
 //!   MPI substitute): typed sends, tree allreduce, byte/message counters.
 //! * [`topology`] — the lp×dp device grid and contiguous layer-slab
 //!   assignment (paper Fig. 2's distribution of F_k across devices).
-//! * [`exec`] — real multi-worker execution of the F-relaxation phase over
-//!   OS threads with halo exchange, proving the decomposition + fabric
-//!   (numerically identical to the single-threaded engine).
+//! * [`exec`] — real multi-worker execution of the F/C-relaxation phases
+//!   over OS threads with halo exchange, bitwise identical to the
+//!   single-threaded engine. Since the Session API v2 redesign this is the
+//!   execution layer of the `ThreadedMgrit` backend: `mgrit::core` routes
+//!   its V-cycle relaxation sweeps (forward *and* adjoint) through it.
 //! * [`simulator`] — discrete-event makespan model calibrated with the
 //!   measured Φ cost and an α+β communication model; generates the paper's
 //!   scaling figures (6-9) on this single-core testbed (DESIGN.md
@@ -18,5 +20,6 @@ pub mod simulator;
 pub mod topology;
 
 pub use comm::Fabric;
+pub use exec::RelaxState;
 pub use simulator::{DeviceModel, SimConfig, Simulator};
 pub use topology::{slab_partition, Topology};

@@ -4,10 +4,14 @@
 //! `HloModuleProto::from_text_file` → `XlaComputation` → `client.compile`.
 //! Every entry point is compiled once (lazily) and cached; the MGRIT hot
 //! loop then only pays Literal marshalling + execution.
+//!
+//! v2: the engine is `Send + Sync` (Mutex-guarded cache and call counters,
+//! `Arc`-shared executables) so one engine can serve the threaded MGRIT
+//! backend's relaxation workers. The PJRT C API guarantees clients and
+//! loaded executables are safe to invoke from multiple threads.
 
-use std::cell::RefCell;
 use std::collections::HashMap;
-use std::rc::Rc;
+use std::sync::{Arc, Mutex};
 
 use anyhow::{anyhow, bail, Context, Result};
 
@@ -68,6 +72,16 @@ pub struct Executable {
     name: String,
 }
 
+// SAFETY: `PjRtLoadedExecutable` wraps a PJRT executable handle; the PJRT
+// C API specifies that loaded executables are immutable after compilation
+// and that `Execute` may be called concurrently from multiple threads.
+// AUDIT ON SWAP: these blanket impls cover every field. When replacing
+// rust/vendor/xla with real bindings, confirm their `PjRtLoadedExecutable`
+// wrapper has no non-atomic interior state (e.g. `Rc` refcounts) before
+// keeping these impls — the compiler cannot flag a violation here.
+unsafe impl Send for Executable {}
+unsafe impl Sync for Executable {}
+
 impl Executable {
     /// Execute with shape/dtype validation; returns the decomposed tuple.
     pub fn call(&self, args: &[Value]) -> Result<Vec<Tensor>> {
@@ -109,14 +123,22 @@ impl Executable {
     }
 }
 
-/// PJRT client + lazy executable cache.
+/// PJRT client + lazy executable cache (thread-safe).
 pub struct XlaEngine {
     client: xla::PjRtClient,
     manifest: ArtifactManifest,
-    cache: RefCell<HashMap<String, Rc<Executable>>>,
+    cache: Mutex<HashMap<String, Arc<Executable>>>,
     /// Counters for the §Perf pass.
-    pub calls: RefCell<HashMap<String, u64>>,
+    calls: Mutex<HashMap<String, u64>>,
 }
+
+// SAFETY: the PJRT C API specifies that clients are thread-safe; all
+// interior mutability in the engine itself is Mutex-guarded.
+// AUDIT ON SWAP: see the note on `Executable` — re-verify the real
+// bindings' `PjRtClient` before trusting this impl, and keep new fields
+// on this struct `Send + Sync` in their own right.
+unsafe impl Send for XlaEngine {}
+unsafe impl Sync for XlaEngine {}
 
 impl XlaEngine {
     /// Create a CPU PJRT client over the artifact directory.
@@ -126,8 +148,8 @@ impl XlaEngine {
         Ok(XlaEngine {
             client,
             manifest,
-            cache: RefCell::new(HashMap::new()),
-            calls: RefCell::new(HashMap::new()),
+            cache: Mutex::new(HashMap::new()),
+            calls: Mutex::new(HashMap::new()),
         })
     }
 
@@ -140,8 +162,8 @@ impl XlaEngine {
     }
 
     /// Fetch (compiling on first use) an entry point.
-    pub fn executable(&self, name: &str) -> Result<Rc<Executable>> {
-        if let Some(e) = self.cache.borrow().get(name) {
+    pub fn executable(&self, name: &str) -> Result<Arc<Executable>> {
+        if let Some(e) = self.cache.lock().unwrap().get(name) {
             return Ok(e.clone());
         }
         let spec = self.manifest.entry(name)?.clone();
@@ -157,15 +179,28 @@ impl XlaEngine {
             .client
             .compile(&comp)
             .with_context(|| format!("compiling entry point {}", name))?;
-        let e = Rc::new(Executable { exe, spec, name: name.to_string() });
-        self.cache.borrow_mut().insert(name.to_string(), e.clone());
-        Ok(e)
+        let e = Arc::new(Executable { exe, spec, name: name.to_string() });
+        // a racing thread may have compiled the same entry concurrently;
+        // keep whichever landed first so callers share one executable
+        let mut cache = self.cache.lock().unwrap();
+        Ok(cache.entry(name.to_string()).or_insert(e).clone())
     }
 
     /// Convenience: execute an entry point by name.
     pub fn call(&self, name: &str, args: &[Value]) -> Result<Vec<Tensor>> {
-        *self.calls.borrow_mut().entry(name.to_string()).or_insert(0) += 1;
+        self.note_calls(name, 1);
         self.executable(name)?.call(args)
+    }
+
+    /// Record `n` invocations of an entry point in the §Perf counters
+    /// (used by batched callers that hold an [`Executable`] directly).
+    pub fn note_calls(&self, name: &str, n: u64) {
+        *self.calls.lock().unwrap().entry(name.to_string()).or_insert(0) += n;
+    }
+
+    /// Snapshot of the per-entry-point invocation counters.
+    pub fn call_counts(&self) -> HashMap<String, u64> {
+        self.calls.lock().unwrap().clone()
     }
 
     /// Pre-compile every entry point (startup cost paid once, not mid-run).

@@ -1,0 +1,146 @@
+//! Backend parity: the Session API's acceptance property.
+//!
+//! From one seed on the `mc` preset, the `Serial`, `Mgrit` (with the
+//! iteration budget in exact mode), and `ThreadedMgrit` (workers ∈
+//! {1, 2, 4}) backends must produce **bitwise-identical** losses and
+//! gradients — threading and backend plumbing may never change a single
+//! bit of the training trajectory. Inexact MGRIT (finite iteration budget)
+//! must likewise be bitwise invariant across worker counts, and converge
+//! to the serial trajectory as the budget grows.
+
+use layertime::config::{presets, MgritConfig, RunConfig};
+use layertime::coordinator::{Backend, Mgrit, Serial, Session, Task, ThreadedMgrit};
+use layertime::mgrit::MgritSolver;
+use layertime::ode::{shared_params, Propagator, RustPropagator};
+use layertime::tensor::Tensor;
+use layertime::util::proptest::forall;
+use layertime::util::rng::Rng;
+
+/// The `mc` preset shrunk to parity-test scale.
+fn tiny_mc(seed: u64, cf: usize, fwd: Option<usize>, bwd: Option<usize>) -> RunConfig {
+    let mut rc = presets::by_name("mc").unwrap();
+    rc.model.vocab = 16;
+    rc.model.d_model = 16;
+    rc.model.n_heads = 2;
+    rc.model.d_ff = 32;
+    rc.model.seq = 8;
+    rc.model.batch = 2;
+    rc.model.n_classes = 4;
+    rc.model.n_enc_layers = 8;
+    rc.model.buffer_open = 0;
+    rc.model.buffer_close = 0;
+    rc.mgrit = MgritConfig { cf, levels: 2, fwd_iters: fwd, bwd_iters: bwd, fcf: true };
+    rc.train.steps = 3;
+    rc.train.eval_every = 100;
+    rc.train.probe_every = 0;
+    rc.train.adaptive = false;
+    rc.train.warmup = 0;
+    rc.train.seed = seed;
+    rc
+}
+
+/// Train `steps` steps; return (per-step loss bits, final layer params).
+fn run(backend: Box<dyn Backend>, rc: RunConfig, steps: usize) -> (Vec<u32>, Vec<Vec<f32>>) {
+    let mut s = Session::builder().config(rc).task(Task::Tag).backend(backend).build().unwrap();
+    let losses: Vec<u32> = (0..steps).map(|_| s.train_step().loss.to_bits()).collect();
+    let layers = s.params.layers.read().unwrap().clone();
+    (losses, layers)
+}
+
+fn assert_identical(tag: &str, a: &(Vec<u32>, Vec<Vec<f32>>), b: &(Vec<u32>, Vec<Vec<f32>>)) {
+    assert_eq!(a.0, b.0, "{}: losses must be bitwise identical", tag);
+    assert_eq!(a.1.len(), b.1.len());
+    for (l, (x, y)) in a.1.iter().zip(&b.1).enumerate() {
+        assert_eq!(x, y, "{}: layer {} gradients/params must be bitwise identical", tag, l);
+    }
+}
+
+#[test]
+fn prop_exact_backends_are_bitwise_identical() {
+    // Serial ≡ Mgrit(iters → exact/None) ≡ ThreadedMgrit{1,2,4}(exact):
+    // all three backends reduce to the same exact propagation.
+    forall("exact-backend-parity", 4, |rng| {
+        let seed = rng.range(1000) as u64;
+        let rc = tiny_mc(seed, 2, None, None);
+        let baseline = run(Box::new(Serial), rc.clone(), 3);
+        let mgrit = run(Box::new(Mgrit), rc.clone(), 3);
+        assert_identical("serial-vs-mgrit", &baseline, &mgrit);
+        for workers in [1usize, 2, 4] {
+            let thr = run(Box::new(ThreadedMgrit::new(workers)), rc.clone(), 3);
+            assert_identical("serial-vs-threaded", &baseline, &thr);
+        }
+    });
+}
+
+#[test]
+fn prop_threaded_mgrit_is_bitwise_identical_to_single_threaded() {
+    // The real-thread guarantee on the inexact (iterative) path: the
+    // relaxation schedule is invariant under slab decomposition.
+    forall("threaded-mgrit-parity", 4, |rng| {
+        let seed = rng.range(1000) as u64;
+        let cf = [2usize, 4][rng.range(2)];
+        let rc = tiny_mc(seed, cf, Some(2), Some(1));
+        let single = run(Box::new(Mgrit), rc.clone(), 3);
+        for workers in [1usize, 2, 4] {
+            let thr = run(Box::new(ThreadedMgrit::new(workers)), rc.clone(), 3);
+            assert_identical("mgrit-vs-threaded", &single, &thr);
+        }
+    });
+}
+
+#[test]
+fn converged_mgrit_matches_serial_dynamics() {
+    // FCF-MGRIT is a direct method after enough cycles: with the budget
+    // cranked up, the (inexact-by-construction) backends land on the
+    // serial trajectory to fp tolerance.
+    let rc_serial = tiny_mc(7, 2, None, None);
+    let rc_mg = tiny_mc(7, 2, Some(8), Some(8));
+    let (a, _) = run(Box::new(Serial), rc_serial, 3);
+    let (b, _) = run(Box::new(Mgrit), rc_mg, 3);
+    for (x, y) in a.iter().zip(&b) {
+        let (x, y) = (f32::from_bits(*x), f32::from_bits(*y));
+        assert!((x - y).abs() < 5e-3 * (1.0 + x.abs()), "serial {} vs mgrit {}", x, y);
+    }
+}
+
+#[test]
+fn solver_level_losses_and_gradients_bitwise_across_workers() {
+    // Below the Session layer: forward states, adjoint λ, and per-layer
+    // parameter gradients out of the MGRIT solver itself are bitwise
+    // invariant under the worker count — forward AND adjoint sweeps.
+    let m = {
+        let mut m = presets::by_name("mc").unwrap().model;
+        m.vocab = 16;
+        m.d_model = 16;
+        m.n_heads = 2;
+        m.d_ff = 32;
+        m.seq = 8;
+        m.batch = 2;
+        m.n_enc_layers = 8;
+        m
+    };
+    let mut rng = Rng::new(11);
+    let params: Vec<Vec<f32>> = (0..8).map(|_| rng.normal_vec(m.p_enc(), 0.1)).collect();
+    let prop = RustPropagator::new(&m, 0.25, shared_params(params));
+    let z0 = Tensor::randn(&mut rng, &prop.state_shape(), 1.0);
+    let ct = Tensor::randn(&mut rng, &prop.state_shape(), 1.0);
+    let cfg = MgritConfig { cf: 2, levels: 2, fwd_iters: Some(3), bwd_iters: Some(2), fcf: true };
+
+    let s1 = MgritSolver::new(&prop, cfg.clone());
+    let (w1, _) = s1.forward(&z0, Some(3), None, false);
+    let (l1, _) = s1.adjoint(&w1, &ct, Some(2), false);
+    let g1 = s1.gradients(&w1, &l1);
+    for workers in [2usize, 4] {
+        let sn = MgritSolver::with_workers(&prop, cfg.clone(), workers);
+        let (wn, _) = sn.forward(&z0, Some(3), None, false);
+        for (a, b) in w1.iter().zip(&wn) {
+            assert_eq!(a.data(), b.data(), "forward state, workers={}", workers);
+        }
+        let (ln, _) = sn.adjoint(&wn, &ct, Some(2), false);
+        for (a, b) in l1.iter().zip(&ln) {
+            assert_eq!(a.data(), b.data(), "adjoint state, workers={}", workers);
+        }
+        let gn = sn.gradients(&wn, &ln);
+        assert_eq!(g1, gn, "gradients, workers={}", workers);
+    }
+}

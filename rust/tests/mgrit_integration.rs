@@ -8,12 +8,11 @@
 //!   working regime);
 //! * the XLA and Rust propagators agree through the whole MGRIT stack.
 
-use std::cell::RefCell;
-use std::rc::Rc;
+use std::sync::Arc;
 
 use layertime::config::{Arch, MgritConfig, ModelConfig};
 use layertime::mgrit::MgritSolver;
-use layertime::ode::{Propagator, RustPropagator, XlaPropagator};
+use layertime::ode::{shared_params, Propagator, RustPropagator, SharedParams, XlaPropagator};
 use layertime::runtime::XlaEngine;
 use layertime::tensor::Tensor;
 use layertime::util::rng::Rng;
@@ -35,13 +34,13 @@ fn model(arch: Arch, n_layers: usize) -> ModelConfig {
     }
 }
 
-fn params(m: &ModelConfig, rng: &mut Rng, std: f32) -> Rc<RefCell<Vec<Vec<f32>>>> {
+fn params(m: &ModelConfig, rng: &mut Rng, std: f32) -> SharedParams {
     let mut v = Vec::new();
     for l in 0..m.total_layers() {
         let len = if m.arch == Arch::EncDec && l >= m.n_enc_layers { m.p_dec() } else { m.p_enc() };
         v.push(rng.normal_vec(len, std));
     }
-    Rc::new(RefCell::new(v))
+    shared_params(v)
 }
 
 fn mgcfg(cf: usize, levels: usize) -> MgritConfig {
@@ -135,7 +134,7 @@ fn xla_propagator_matches_rust_through_mgrit() {
         eprintln!("skipping: no artifacts (run `make artifacts`)");
         return;
     }
-    let engine = Rc::new(XlaEngine::load(&dir).unwrap());
+    let engine = Arc::new(XlaEngine::load(&dir).unwrap());
     let mf = engine.manifest();
     let m = ModelConfig {
         arch: Arch::Encoder,

@@ -9,12 +9,9 @@
 //!   transformer-scale problem;
 //! * the convergence factor predicts contraction (ρ < 1 ⇔ residual drops).
 
-use std::cell::RefCell;
-use std::rc::Rc;
-
 use layertime::config::{Arch, MgritConfig, ModelConfig};
 use layertime::mgrit::MgritSolver;
-use layertime::ode::{Propagator, RustPropagator};
+use layertime::ode::{shared_params, Propagator, RustPropagator};
 use layertime::parallel::exec::{parallel_fc_relax, serial_fc_relax};
 use layertime::tensor::Tensor;
 use layertime::util::rng::Rng;
@@ -41,7 +38,7 @@ fn prop_h(n_layers: usize, seed: u64, std: f32, h: f32) -> RustPropagator {
     let mut rng = Rng::new(seed);
     let params: Vec<Vec<f32>> =
         (0..n_layers).map(|_| rng.normal_vec(m.p_enc(), std)).collect();
-    RustPropagator::new(&m, h, Rc::new(RefCell::new(params)))
+    RustPropagator::new(&m, h, shared_params(params))
 }
 
 fn prop(n_layers: usize, seed: u64, std: f32) -> RustPropagator {
@@ -167,7 +164,7 @@ fn threaded_slab_executor_matches_engine_on_transformer_phi() {
     let w: Vec<Vec<f32>> =
         (0..=n).map(|_| rng.normal_vec(m.batch * m.seq * m.d_model, 1.0)).collect();
     let serial = serial_fc_relax(w.clone(), 4, &step);
-    let parallel = parallel_fc_relax(w, 4, 4, &step);
+    let parallel = parallel_fc_relax(w, None, 4, 4, |l: usize, z: &Vec<f32>| step(l, z));
     for (a, b) in parallel.iter().zip(&serial) {
         assert_eq!(a, b, "threaded execution must be bitwise identical");
     }

@@ -1,0 +1,192 @@
+//! Offline stub of the `xla` (xla-rs) binding surface consumed by
+//! `layertime::runtime::engine`.
+//!
+//! The real crate links the PJRT C API and executes compiled HLO. This
+//! stub keeps the workspace buildable and testable in environments
+//! without the XLA extension libraries: every entry point that would
+//! touch PJRT returns a descriptive error, so `XlaEngine::load` fails
+//! fast and all artifact-gated tests/benches skip cleanly (they guard on
+//! `artifacts/manifest.json` existing). Swap this path dependency for the
+//! real bindings to run the AOT artifacts.
+//!
+//! Only the API subset `runtime::engine` uses is provided; signatures
+//! mirror xla-rs so the swap is a Cargo.toml change, not a code change.
+
+use std::borrow::Borrow;
+use std::fmt;
+
+/// Error type (the real bindings surface PJRT status codes).
+#[derive(Debug, Clone)]
+pub struct Error(pub String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn unavailable<T>(what: &str) -> Result<T> {
+    Err(Error(format!(
+        "{}: XLA/PJRT runtime not available — layertime was built against the vendored \
+         stub (rust/vendor/xla); link the real xla bindings to execute AOT artifacts",
+        what
+    )))
+}
+
+/// Typed storage behind a [`Literal`].
+#[derive(Debug, Clone)]
+pub enum Storage {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+/// Element types a [`Literal`] can hold.
+pub trait NativeType: Copy {
+    fn store(data: Vec<Self>) -> Storage;
+    fn load(storage: &Storage) -> Option<Vec<Self>>;
+}
+
+impl NativeType for f32 {
+    fn store(data: Vec<Self>) -> Storage {
+        Storage::F32(data)
+    }
+
+    fn load(storage: &Storage) -> Option<Vec<Self>> {
+        match storage {
+            Storage::F32(v) => Some(v.clone()),
+            _ => None,
+        }
+    }
+}
+
+impl NativeType for i32 {
+    fn store(data: Vec<Self>) -> Storage {
+        Storage::I32(data)
+    }
+
+    fn load(storage: &Storage) -> Option<Vec<Self>> {
+        match storage {
+            Storage::I32(v) => Some(v.clone()),
+            _ => None,
+        }
+    }
+}
+
+/// Host-side typed array (shape + data).
+#[derive(Debug, Clone)]
+pub struct Literal {
+    storage: Storage,
+    dims: Vec<i64>,
+}
+
+impl Literal {
+    /// Rank-1 literal from a slice.
+    pub fn vec1<T: NativeType>(data: &[T]) -> Literal {
+        Literal { storage: T::store(data.to_vec()), dims: vec![data.len() as i64] }
+    }
+
+    /// Reinterpret with new dimensions.
+    pub fn reshape(mut self, dims: &[i64]) -> Result<Literal> {
+        let n: i64 = dims.iter().product();
+        let len = match &self.storage {
+            Storage::F32(v) => v.len(),
+            Storage::I32(v) => v.len(),
+        } as i64;
+        if n != len {
+            return Err(Error(format!("reshape: {} elements into dims {:?}", len, dims)));
+        }
+        self.dims = dims.to_vec();
+        Ok(self)
+    }
+
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+
+    /// Copy out as a typed vector.
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        T::load(&self.storage).ok_or_else(|| Error("literal element type mismatch".into()))
+    }
+
+    /// Decompose a tuple literal.
+    pub fn to_tuple(&self) -> Result<Vec<Literal>> {
+        unavailable("decomposing result tuple")
+    }
+}
+
+/// PJRT client handle (stub: construction always fails).
+pub struct PjRtClient(());
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        unavailable("creating PJRT CPU client")
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        unavailable("compiling XLA computation")
+    }
+}
+
+/// Compiled executable handle.
+pub struct PjRtLoadedExecutable(());
+
+impl PjRtLoadedExecutable {
+    pub fn execute<T: Borrow<Literal>>(&self, _args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        unavailable("executing compiled entry point")
+    }
+}
+
+/// Device buffer handle.
+pub struct PjRtBuffer(());
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        unavailable("fetching device buffer")
+    }
+}
+
+/// Parsed HLO module.
+pub struct HloModuleProto(());
+
+impl HloModuleProto {
+    pub fn from_text_file(path: &str) -> Result<HloModuleProto> {
+        unavailable(&format!("parsing HLO text {}", path))
+    }
+}
+
+/// XLA computation wrapper.
+pub struct XlaComputation(());
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip_and_reshape() {
+        let l = Literal::vec1(&[1.0f32, 2.0, 3.0, 4.0]).reshape(&[2, 2]).unwrap();
+        assert_eq!(l.dims(), &[2, 2]);
+        assert_eq!(l.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+        assert!(l.to_vec::<i32>().is_err());
+        assert!(Literal::vec1(&[1i32]).reshape(&[7]).is_err());
+    }
+
+    #[test]
+    fn pjrt_entry_points_fail_fast_with_context() {
+        let err = PjRtClient::cpu().err().unwrap();
+        assert!(format!("{}", err).contains("vendored stub"));
+    }
+}
