@@ -1,9 +1,15 @@
 //! §Perf micro-benchmarks of the training hot path (EXPERIMENTS.md §Perf):
 //!   Φ latency         — XLA/PJRT (Pallas) vs pure-Rust reference
 //!   Φ-VJP latency     — same, backward
+//!   buffer reuse      — step_into/adjoint_step_into vs allocating step
 //!   marshalling       — Tensor⇄Literal overhead per call
 //!   MGRIT V-cycle     — engine overhead on a trivial Φ (pure coordinator)
 //!   full train step   — tiny end-to-end batch (Rust Φ)
+//!
+//! Flags:
+//!   --json   write machine-readable results to BENCH_hotpath.json
+//!            (ns/op per row) so the perf trajectory is tracked across PRs
+//!   --fast   1 warmup + 5 samples per row (CI smoke mode)
 //!
 //! Uses artifacts when present (`make artifacts`), otherwise skips the XLA
 //! rows.
@@ -16,11 +22,27 @@ use layertime::mgrit::MgritSolver;
 use layertime::ode::{shared_params, LinearOde, Propagator, RustPropagator, XlaPropagator};
 use layertime::runtime::{Value, XlaEngine};
 use layertime::tensor::Tensor;
-use layertime::util::bench::BenchRunner;
+use layertime::util::bench::{BenchLog, BenchRunner, Stats};
 use layertime::util::rng::Rng;
 
+/// Time a row and record it in the JSON log under the same label.
+fn timed<T, F: FnMut() -> T>(
+    runner: &BenchRunner,
+    log: &mut BenchLog,
+    label: &str,
+    f: F,
+) -> Stats {
+    let st = runner.report(label, f);
+    log.push(label, st);
+    st
+}
+
 fn main() -> anyhow::Result<()> {
-    let runner = BenchRunner::new(3, 15);
+    let args: Vec<String> = std::env::args().collect();
+    let json_out = args.iter().any(|a| a == "--json");
+    let fast = args.iter().any(|a| a == "--fast");
+    let runner = if fast { BenchRunner::new(1, 5) } else { BenchRunner::new(3, 15) };
+    let mut log = BenchLog::new();
     println!("perf_hotpath — coordinator + runtime micro-benchmarks\n");
 
     // --- MGRIT engine overhead on a free Φ --------------------------------
@@ -31,10 +53,12 @@ fn main() -> anyhow::Result<()> {
         &ode,
         MgritConfig { cf: 4, levels: 2, fwd_iters: Some(1), bwd_iters: Some(1), fcf: true },
     );
-    runner.report("mgrit v-cycle (64 steps, trivial Φ)", || {
+    timed(&runner, &mut log, "mgrit v-cycle (64 steps, trivial Φ)", || {
         solver.forward(&z0, Some(1), None, false)
     });
-    runner.report("mgrit serial solve (64 steps)", || solver.forward(&z0, None, None, false));
+    timed(&runner, &mut log, "mgrit serial solve (64 steps)", || {
+        solver.forward(&z0, None, None, false)
+    });
 
     // --- rust reference Φ ---------------------------------------------------
     let mut model = presets::mc_tiny().model;
@@ -49,8 +73,21 @@ fn main() -> anyhow::Result<()> {
     let rust_prop = RustPropagator::new(&model, 1.0, params.clone());
     let z = Tensor::randn(&mut rng, &rust_prop.state_shape(), 1.0);
     let ct = Tensor::randn(&mut rng, &rust_prop.state_shape(), 1.0);
-    runner.report("Φ fwd  (rust reference, d=64 s=32 b=8)", || rust_prop.step(0, 1.0, &z));
-    runner.report("Φ vjp  (rust reference)", || rust_prop.adjoint_step(0, 1.0, &z, &ct));
+    timed(&runner, &mut log, "Φ fwd  (rust reference, d=64 s=32 b=8)", || {
+        rust_prop.step(0, 1.0, &z)
+    });
+    timed(&runner, &mut log, "Φ vjp  (rust reference)", || {
+        rust_prop.adjoint_step(0, 1.0, &z, &ct)
+    });
+    // buffer-reusing entry points (the MGRIT sweep path): same math, zero
+    // steady-state allocations
+    let mut out = Tensor::zeros(&rust_prop.state_shape());
+    timed(&runner, &mut log, "Φ fwd  (step_into, reused buffers)", || {
+        rust_prop.step_into(0, 1.0, &z, &mut out)
+    });
+    timed(&runner, &mut log, "Φ vjp  (adjoint_step_into)", || {
+        rust_prop.adjoint_step_into(0, 1.0, &z, &ct, &mut out)
+    });
 
     // --- XLA Φ (artifacts) --------------------------------------------------
     let dir = std::env::var("LAYERTIME_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
@@ -58,8 +95,10 @@ fn main() -> anyhow::Result<()> {
         let engine = Arc::new(XlaEngine::load(&dir)?);
         engine.warmup()?;
         let xla_prop = XlaPropagator::new(engine.clone(), &model, 1.0, params.clone())?;
-        runner.report("Φ fwd  (XLA/PJRT, Pallas kernels)", || xla_prop.step(0, 1.0, &z));
-        runner.report("Φ vjp  (XLA/PJRT)", || xla_prop.adjoint_step(0, 1.0, &z, &ct));
+        timed(&runner, &mut log, "Φ fwd  (XLA/PJRT, Pallas kernels)", || {
+            xla_prop.step(0, 1.0, &z)
+        });
+        timed(&runner, &mut log, "Φ vjp  (XLA/PJRT)", || xla_prop.adjoint_step(0, 1.0, &z, &ct));
 
         // L1 ablation: the same Φ lowered from the pure-jnp reference
         // (no Pallas) — quantifies the interpret-mode overhead on CPU.
@@ -69,9 +108,12 @@ fn main() -> anyhow::Result<()> {
             let engine_ref = Arc::new(XlaEngine::load(&ref_dir)?);
             engine_ref.warmup()?;
             let prop_ref = XlaPropagator::new(engine_ref, &model, 1.0, params.clone())?;
-            runner.report("Φ fwd  (XLA/PJRT, pure-jnp lowering)", || prop_ref.step(0, 1.0, &z));
-            runner
-                .report("Φ vjp  (XLA/PJRT, pure-jnp lowering)", || prop_ref.adjoint_step(0, 1.0, &z, &ct));
+            timed(&runner, &mut log, "Φ fwd  (XLA/PJRT, pure-jnp lowering)", || {
+                prop_ref.step(0, 1.0, &z)
+            });
+            timed(&runner, &mut log, "Φ vjp  (XLA/PJRT, pure-jnp lowering)", || {
+                prop_ref.adjoint_step(0, 1.0, &z, &ct)
+            });
         }
 
         // marshalling: executable with pre-built args vs building args
@@ -80,9 +122,8 @@ fn main() -> anyhow::Result<()> {
             let p = params.read().unwrap();
             Tensor::from_vec(p[0].clone(), &[p[0].len()])
         };
-        let args =
-            vec![Value::F32(z.clone()), Value::F32(th), Value::scalar(1.0)];
-        runner.report("enc_step call (prebuilt args)", || exe.call(&args).unwrap());
+        let args_v = vec![Value::F32(z.clone()), Value::F32(th), Value::scalar(1.0)];
+        timed(&runner, &mut log, "enc_step call (prebuilt args)", || exe.call(&args_v).unwrap());
 
         // MGRIT forward over XLA Φ, 8 layers
         let params8 = shared_params(vec![rng.normal_vec(model.p_enc(), 0.02); 8]);
@@ -92,15 +133,17 @@ fn main() -> anyhow::Result<()> {
             MgritConfig { cf: 4, levels: 2, fwd_iters: Some(1), bwd_iters: Some(1), fcf: true },
         );
         let z8 = Tensor::randn(&mut rng, &prop8.state_shape(), 1.0);
-        let st = runner.report("mgrit fwd solve (8 XLA layers, 1 iter)", || {
+        let st = timed(&runner, &mut log, "mgrit fwd solve (8 XLA layers, 1 iter)", || {
             s8.forward(&z8, Some(1), None, false)
         });
-        let serial_st =
-            runner.report("serial fwd (8 XLA layers)", || s8.forward(&z8, None, None, false));
+        let serial_st = timed(&runner, &mut log, "serial fwd (8 XLA layers)", || {
+            s8.forward(&z8, None, None, false)
+        });
         let (_, stats) = s8.forward(&z8, Some(1), None, false);
         println!(
             "  -> mgrit Φ-evals/iter = {} (serial = 8); overhead ratio {:.2}x compute,",
-            stats.phi_evals, st.mean / serial_st.mean
+            stats.phi_evals,
+            st.mean / serial_st.mean
         );
         println!("     exposed parallelism = 2 chunks (see fig6 for modeled wall-clock)");
     } else {
@@ -114,7 +157,13 @@ fn main() -> anyhow::Result<()> {
     rc.mgrit = MgritConfig { cf: 2, levels: 2, fwd_iters: Some(1), bwd_iters: Some(1), fcf: true };
     rc.train.adaptive = false;
     let mut run = TrainRun::new(rc, Task::Tag, None)?;
-    runner.report("full train step (8 layers, tiny, rust Φ)", || run.train_step());
+    timed(&runner, &mut log, "full train step (8 layers, tiny, rust Φ)", || run.train_step());
+
+    if json_out {
+        let path = "BENCH_hotpath.json";
+        log.write(path)?;
+        println!("\nwrote {}", path);
+    }
 
     Ok(())
 }

@@ -9,15 +9,19 @@
 //!   mean an exact solve, matching [`crate::config::MgritConfig`]);
 //! * [`ThreadedMgrit`] — real multi-worker MGRIT: every relaxation sweep of
 //!   the forward *and* adjoint V-cycles runs through
-//!   [`crate::parallel::exec::parallel_fc_relax`] on OS threads with
-//!   channel-fabric halo exchange, bitwise identical to [`Mgrit`].
+//!   [`crate::parallel::exec::pool_fc_relax`] on a persistent per-backend
+//!   [`WorkerPool`] (threads parked between sweeps) with channel-fabric
+//!   halo exchange, bitwise identical to [`Mgrit`].
 //!
 //! All three share the solver plumbing through the trait's default
 //! methods, so a custom backend only overrides what it changes.
 
+use std::sync::{Arc, Mutex};
+
 use crate::config::MgritConfig;
 use crate::mgrit::{MgritSolver, SolveStats};
 use crate::ode::Propagator;
+use crate::parallel::WorkerPool;
 use crate::tensor::Tensor;
 
 /// Execution strategy for the MGRIT-shaped solves of one training step.
@@ -28,6 +32,14 @@ pub trait Backend: Send + Sync {
     /// Relaxation worker threads (1 = single-threaded schedule).
     fn workers(&self) -> usize {
         1
+    }
+
+    /// Persistent relaxation worker pool, if this backend keeps one. The
+    /// default (None) makes multi-worker sweeps fall back to per-sweep
+    /// scoped spawns; `ThreadedMgrit` overrides it with a lazily-created
+    /// per-backend (i.e. per-`Session`) pool.
+    fn pool(&self) -> Option<Arc<WorkerPool>> {
+        None
     }
 
     /// Map the configured iteration budget to this backend's solve mode
@@ -52,12 +64,9 @@ pub trait Backend: Send + Sync {
         warm: Option<&[Tensor]>,
         track_residuals: bool,
     ) -> (Vec<Tensor>, SolveStats) {
-        MgritSolver::with_workers(prop, cfg.clone(), self.workers()).forward(
-            z0,
-            self.solve_iters(iters),
-            warm,
-            track_residuals,
-        )
+        MgritSolver::with_workers(prop, cfg.clone(), self.workers())
+            .pooled(self.pool())
+            .forward(z0, self.solve_iters(iters), warm, track_residuals)
     }
 
     /// Adjoint solve over the frozen `states` from the cotangent `ct`;
@@ -71,12 +80,9 @@ pub trait Backend: Send + Sync {
         iters: Option<usize>,
         track_residuals: bool,
     ) -> (Vec<Tensor>, SolveStats) {
-        MgritSolver::with_workers(prop, cfg.clone(), self.workers()).adjoint(
-            states,
-            ct,
-            self.solve_iters(iters),
-            track_residuals,
-        )
+        MgritSolver::with_workers(prop, cfg.clone(), self.workers())
+            .pooled(self.pool())
+            .adjoint(states, ct, self.solve_iters(iters), track_residuals)
     }
 
     /// Per-layer parameter gradients on the fine grid.
@@ -117,18 +123,22 @@ impl Backend for Mgrit {
 /// with halo exchange over the channel fabric — the paper's Fig. 2
 /// decomposition on the real training hot loop.
 ///
-/// Threads are spawned per relaxation sweep (scoped, so borrows of Φ and
-/// the level state need no `'static` plumbing). On this 1-core testbed
-/// the win is schedule correctness, not wall-clock; a persistent worker
-/// pool that amortizes spawn cost across sweeps is the natural next step
-/// once multi-core hosts are in play (see ROADMAP).
+/// The backend owns a persistent [`WorkerPool`] (created lazily on the
+/// first solve): `workers` long-lived threads park between sweeps instead
+/// of being respawned ~2× per level per V-cycle, amortizing spawn cost
+/// across a whole training run while executing bitwise the same slab
+/// schedule (pinned by `rust/tests/backend_parity.rs`). The pool lives as
+/// long as the backend — i.e. per `Session` — and its threads shut down
+/// when the session drops. A pool poisoned by a panicked sweep (stale
+/// halo messages) is rebuilt on the next solve instead of reused.
 pub struct ThreadedMgrit {
     pub workers: usize,
+    pool: Mutex<Option<Arc<WorkerPool>>>,
 }
 
 impl ThreadedMgrit {
     pub fn new(workers: usize) -> ThreadedMgrit {
-        ThreadedMgrit { workers }
+        ThreadedMgrit { workers, pool: Mutex::new(None) }
     }
 }
 
@@ -139,6 +149,23 @@ impl Backend for ThreadedMgrit {
 
     fn workers(&self) -> usize {
         self.workers.max(1)
+    }
+
+    fn pool(&self) -> Option<Arc<WorkerPool>> {
+        if self.workers() <= 1 {
+            // single-worker sweeps run the in-thread serial schedule; no
+            // pool threads needed
+            return None;
+        }
+        let mut slot = self.pool.lock().unwrap();
+        match slot.as_ref() {
+            Some(p) if !p.is_poisoned() => Some(p.clone()),
+            _ => {
+                let p = Arc::new(WorkerPool::new(self.workers()));
+                *slot = Some(p.clone());
+                Some(p)
+            }
+        }
     }
 }
 
@@ -186,6 +213,26 @@ mod tests {
         for (a, b) in w_mg.iter().zip(&w_thr) {
             assert_eq!(a.data(), b.data());
         }
+    }
+
+    #[test]
+    fn threaded_backend_keeps_one_persistent_pool() {
+        let t = ThreadedMgrit::new(3);
+        let p1 = t.pool().expect("multi-worker backend has a pool");
+        let p2 = t.pool().unwrap();
+        assert!(Arc::ptr_eq(&p1, &p2), "pool must persist across solves");
+        assert_eq!(p1.size(), 3);
+        // degenerate worker counts run in-thread, no pool
+        assert!(ThreadedMgrit::new(1).pool().is_none());
+        assert!(ThreadedMgrit::new(0).pool().is_none());
+        // other backends default to no pool
+        assert!(Serial.pool().is_none());
+        assert!(Mgrit.pool().is_none());
+        // a poisoned pool is rebuilt, not reused
+        p1.poison();
+        let p3 = t.pool().unwrap();
+        assert!(!Arc::ptr_eq(&p1, &p3), "poisoned pool must be rebuilt");
+        assert!(!p3.is_poisoned());
     }
 
     #[test]

@@ -36,8 +36,25 @@ impl<'a> Propagator for RangeProp<'a> {
         self.inner.step(self.start + layer, h_scale, z)
     }
 
+    fn step_into(&self, layer: usize, h_scale: f32, z: &Tensor, out: &mut Tensor) {
+        // forward rather than taking the default so the inner propagator's
+        // buffer-reusing path stays on the MGRIT hot loop
+        self.inner.step_into(self.start + layer, h_scale, z, out)
+    }
+
     fn adjoint_step(&self, layer: usize, h_scale: f32, z: &Tensor, lam_next: &Tensor) -> Tensor {
         self.inner.adjoint_step(self.start + layer, h_scale, z, lam_next)
+    }
+
+    fn adjoint_step_into(
+        &self,
+        layer: usize,
+        h_scale: f32,
+        z: &Tensor,
+        lam_next: &Tensor,
+        out: &mut Tensor,
+    ) {
+        self.inner.adjoint_step_into(self.start + layer, h_scale, z, lam_next, out)
     }
 
     fn accumulate_grad(&self, layer: usize, z: &Tensor, lam_next: &Tensor, grad: &mut [f32]) {

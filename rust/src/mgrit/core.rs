@@ -10,13 +10,25 @@
 //! The core is generic over a [`LevelStepper`] so the *same* code runs the
 //! forward solve (over Φ) and the adjoint solve (over Φᵀ in reversed time).
 //!
+//! Hot-loop discipline: all level storage is preallocated once and every
+//! relaxation/restriction update goes through [`LevelStepper::apply_into`]
+//! plus two reusable residual scratch tensors — the V-cycle itself performs
+//! no per-point allocations or clones (the old implementation cloned ~17
+//! tensors per cycle).
+//!
 //! With `with_workers(n > 1)` every relaxation sweep (the parallel phase of
 //! paper Fig. 2) executes through the multi-worker slab executor in
 //! [`crate::parallel::exec`] — OS threads + channel-fabric halo exchange —
 //! producing bitwise the same iterates as the single-threaded schedule.
-//! This is the engine room of the `ThreadedMgrit` backend.
+//! `with_pool` routes those sweeps onto a persistent
+//! [`WorkerPool`](crate::parallel::WorkerPool) instead of per-sweep scoped
+//! spawns (same schedule, amortized spawn cost). This is the engine room of
+//! the `ThreadedMgrit` backend.
+
+use std::sync::Arc;
 
 use crate::parallel::exec;
+use crate::parallel::pool::WorkerPool;
 use crate::tensor::Tensor;
 
 /// One time-step on an arbitrary MGRIT level.
@@ -32,6 +44,14 @@ pub trait LevelStepper: Sync {
 
     /// Advance: returns the state at `fine_idx + stride`.
     fn apply(&self, fine_idx: usize, stride: usize, z: &Tensor) -> Tensor;
+
+    /// Advance, writing into an existing state tensor (fully overwritten).
+    /// Default allocates via [`LevelStepper::apply`]; the solver's steppers
+    /// forward to `Propagator::step_into` / `adjoint_step_into` so the
+    /// relaxation sweeps run allocation-free.
+    fn apply_into(&self, fine_idx: usize, stride: usize, z: &Tensor, out: &mut Tensor) {
+        *out = self.apply(fine_idx, stride, z);
+    }
 }
 
 /// Per-level storage (preallocated once, reused across V-cycles).
@@ -54,7 +74,12 @@ pub struct MgritCore {
     fcf: bool,
     /// Relaxation worker threads (1 = single-threaded schedule).
     workers: usize,
+    /// Persistent workers for the relaxation sweeps (None = scoped spawns).
+    pool: Option<Arc<WorkerPool>>,
     levels: Vec<Level>,
+    /// Residual/restriction scratch (state-shaped), reused across cycles.
+    tmp_pred: Tensor,
+    tmp_r: Tensor,
 }
 
 /// Per-solve statistics.
@@ -80,7 +105,15 @@ impl MgritCore {
                 w_init: vec![Tensor::zeros(proto.shape()); nl + 1],
             })
             .collect();
-        MgritCore { cf, fcf, workers: 1, levels }
+        MgritCore {
+            cf,
+            fcf,
+            workers: 1,
+            pool: None,
+            levels,
+            tmp_pred: Tensor::zeros(proto.shape()),
+            tmp_r: Tensor::zeros(proto.shape()),
+        }
     }
 
     /// Route every relaxation sweep through `workers` slab threads
@@ -88,6 +121,15 @@ impl MgritCore {
     /// [`crate::parallel::exec`]).
     pub fn with_workers(mut self, workers: usize) -> MgritCore {
         self.workers = workers.max(1);
+        self
+    }
+
+    /// Route relaxation sweeps through a persistent worker pool (same slab
+    /// schedule as `with_workers(pool.size())`, threads parked between
+    /// sweeps instead of respawned).
+    pub fn with_pool(mut self, pool: Arc<WorkerPool>) -> MgritCore {
+        self.workers = pool.size().max(1);
+        self.pool = Some(pool);
         self
     }
 
@@ -99,9 +141,10 @@ impl MgritCore {
     /// path): W_0 = G_0, W_n = Φ(W_{n-1}) + G_n.
     pub fn serial_solve<S: LevelStepper>(&mut self, stepper: &S, z0: &Tensor) -> &[Tensor] {
         let lvl = &mut self.levels[0];
-        lvl.w[0] = z0.clone();
+        lvl.w[0].copy_from(z0);
         for i in 1..=lvl.n {
-            lvl.w[i] = stepper.apply(i - 1, 1, &lvl.w[i - 1]);
+            let (head, tail) = lvl.w.split_at_mut(i);
+            stepper.apply_into(i - 1, 1, &head[i - 1], &mut tail[0]);
         }
         &lvl.w
     }
@@ -124,19 +167,28 @@ impl MgritCore {
         {
             let lvl = &mut self.levels[0];
             assert_eq!(lvl.n, stepper.n(), "stepper/grid size mismatch");
-            lvl.w[0] = z0.clone();
-            lvl.g[0] = z0.clone();
+            lvl.w[0].copy_from(z0);
+            lvl.g[0].copy_from(z0);
             for i in 1..=lvl.n {
                 lvl.g[i].fill_zero();
                 match warm {
-                    Some(ws) => lvl.w[i] = ws[i].clone(),
-                    None => lvl.w[i] = z0.clone(),
+                    Some(ws) => lvl.w[i].copy_from(&ws[i]),
+                    None => lvl.w[i].copy_from(z0),
                 }
             }
         }
         let mut stats = CoreStats::default();
         for _ in 0..iters {
-            Self::vcycle(&mut self.levels, stepper, self.cf, self.fcf, self.workers);
+            Self::vcycle(
+                &mut self.levels,
+                stepper,
+                self.cf,
+                self.fcf,
+                self.workers,
+                self.pool.as_deref(),
+                &mut self.tmp_pred,
+                &mut self.tmp_r,
+            );
             if track_residuals {
                 stats.residuals.push(self.fine_residual_norm(stepper));
             }
@@ -163,14 +215,15 @@ impl MgritCore {
         // zero RHS everywhere; initial condition on every level
         for lvl in self.levels.iter_mut() {
             lvl.g.iter_mut().for_each(|g| g.fill_zero());
-            lvl.g[0] = z0.clone();
-            lvl.w[0] = z0.clone();
+            lvl.g[0].copy_from(z0);
+            lvl.w[0].copy_from(z0);
         }
         // serial solve on the coarsest rediscretization
         {
             let lvl = self.levels.last_mut().unwrap();
             for i in 1..=lvl.n {
-                lvl.w[i] = stepper.apply((i - 1) * lvl.stride, lvl.stride, &lvl.w[i - 1]);
+                let (head, tail) = lvl.w.split_at_mut(i);
+                stepper.apply_into((i - 1) * lvl.stride, lvl.stride, &head[i - 1], &mut tail[0]);
             }
         }
         // interpolate down: inject C-points, F-relax to fill the rest
@@ -180,7 +233,7 @@ impl MgritCore {
                 (&mut a[l], &b[0])
             };
             for k in 0..=coarse.n {
-                fine.w[k * self.cf] = coarse.w[k].clone();
+                fine.w[k * self.cf].copy_from(&coarse.w[k]);
             }
             Self::f_relax(fine, stepper, self.cf);
         }
@@ -200,15 +253,17 @@ impl MgritCore {
         self.solve(stepper, z0, Some(&warm), iters, track_residuals)
     }
 
-    /// ‖G − A(W)‖ on the fine grid.
-    pub fn fine_residual_norm<S: LevelStepper>(&self, stepper: &S) -> f64 {
+    /// ‖G − A(W)‖ on the fine grid (allocation-free: reuses the core's
+    /// residual scratch).
+    pub fn fine_residual_norm<S: LevelStepper>(&mut self, stepper: &S) -> f64 {
         let lvl = &self.levels[0];
+        let (pred, r) = (&mut self.tmp_pred, &mut self.tmp_r);
         let mut acc = 0.0f64;
         for i in 1..=lvl.n {
-            let pred = stepper.apply((i - 1) * lvl.stride, lvl.stride, &lvl.w[i - 1]);
-            let mut r = lvl.g[i].clone();
+            stepper.apply_into((i - 1) * lvl.stride, lvl.stride, &lvl.w[i - 1], pred);
+            r.copy_from(&lvl.g[i]);
             r.axpy(-1.0, &lvl.w[i]);
-            r.axpy(1.0, &pred);
+            r.axpy(1.0, pred);
             let nrm = r.norm() as f64;
             acc += nrm * nrm;
         }
@@ -217,18 +272,23 @@ impl MgritCore {
 
     // -- internals ----------------------------------------------------------
 
+    /// One in-place relaxation update of point `idx + 1` from point `idx`:
+    /// w[idx+1] = Φ(w[idx]) + g[idx+1], written straight into the level
+    /// storage (no temporaries).
+    fn relax_into<S: LevelStepper>(lvl: &mut Level, stepper: &S, idx: usize) {
+        let (head, tail) = lvl.w.split_at_mut(idx + 1);
+        stepper.apply_into(idx * lvl.stride, lvl.stride, &head[idx], &mut tail[0]);
+        tail[0].axpy(1.0, &lvl.g[idx + 1]);
+    }
+
     /// F-relaxation: from every C-point, re-propagate across the F-points
     /// up to (not including) the next C-point. Each chunk is independent —
     /// this is the N/c_f-way-parallel phase (paper Fig. 2, red/blue arrows).
     fn f_relax<S: LevelStepper>(lvl: &mut Level, stepper: &S, cf: usize) {
         let n_chunks = lvl.n / cf;
         for k in 0..n_chunks {
-            let base = k * cf;
             for i in 0..cf - 1 {
-                let idx = base + i;
-                let mut next = stepper.apply(idx * lvl.stride, lvl.stride, &lvl.w[idx]);
-                next.axpy(1.0, &lvl.g[idx + 1]);
-                lvl.w[idx + 1] = next;
+                Self::relax_into(lvl, stepper, k * cf + i);
             }
         }
     }
@@ -237,30 +297,39 @@ impl MgritCore {
     fn c_relax<S: LevelStepper>(lvl: &mut Level, stepper: &S, cf: usize) {
         let n_chunks = lvl.n / cf;
         for k in 1..=n_chunks {
-            let idx = k * cf;
-            let mut next = stepper.apply((idx - 1) * lvl.stride, lvl.stride, &lvl.w[idx - 1]);
-            next.axpy(1.0, &lvl.g[idx]);
-            lvl.w[idx] = next;
+            Self::relax_into(lvl, stepper, k * cf - 1);
         }
     }
 
     /// Does threading this level pay? Needs >1 workers, even coarsening
     /// (always true below the coarsest level), and at least two chunks —
-    /// a single-chunk level has no parallelism to expose, only spawn and
-    /// slab-copy overhead.
+    /// a single-chunk level has no parallelism to expose, only dispatch
+    /// and slab-copy overhead.
     fn thread_level(lvl: &Level, cf: usize, workers: usize) -> bool {
         workers > 1 && lvl.n % cf == 0 && lvl.n / cf >= 2
     }
 
-    /// F-relaxation, threaded when [`Self::thread_level`] says it pays.
-    fn f_relax_exec<S: LevelStepper>(lvl: &mut Level, stepper: &S, cf: usize, workers: usize) {
+    /// F-relaxation, threaded when [`Self::thread_level`] says it pays —
+    /// through the persistent pool when one is attached, scoped spawns
+    /// otherwise (identical schedules).
+    fn f_relax_exec<S: LevelStepper>(
+        lvl: &mut Level,
+        stepper: &S,
+        cf: usize,
+        workers: usize,
+        pool: Option<&WorkerPool>,
+    ) {
         if Self::thread_level(lvl, cf, workers) {
             let stride = lvl.stride;
             let g = std::mem::take(&mut lvl.g);
             let w = std::mem::take(&mut lvl.w);
-            lvl.w = exec::parallel_f_relax(w, Some(&g[..]), cf, workers, |idx, z| {
-                stepper.apply(idx * stride, stride, z)
-            });
+            let step = |idx: usize, z: &Tensor, out: &mut Tensor| {
+                stepper.apply_into(idx * stride, stride, z, out)
+            };
+            lvl.w = match pool {
+                Some(p) => exec::pool_f_relax(p, w, Some(&g[..]), cf, step),
+                None => exec::parallel_f_relax(w, Some(&g[..]), cf, workers, step),
+            };
             lvl.g = g;
         } else {
             Self::f_relax(lvl, stepper, cf);
@@ -270,14 +339,24 @@ impl MgritCore {
     /// Full FCF sweep (slab F-relax, C-relax with halo exchange, second
     /// F-relax — paper Fig. 2), threaded when [`Self::thread_level`] says
     /// it pays.
-    fn fcf_relax_exec<S: LevelStepper>(lvl: &mut Level, stepper: &S, cf: usize, workers: usize) {
+    fn fcf_relax_exec<S: LevelStepper>(
+        lvl: &mut Level,
+        stepper: &S,
+        cf: usize,
+        workers: usize,
+        pool: Option<&WorkerPool>,
+    ) {
         if Self::thread_level(lvl, cf, workers) {
             let stride = lvl.stride;
             let g = std::mem::take(&mut lvl.g);
             let w = std::mem::take(&mut lvl.w);
-            lvl.w = exec::parallel_fc_relax(w, Some(&g[..]), cf, workers, |idx, z| {
-                stepper.apply(idx * stride, stride, z)
-            });
+            let step = |idx: usize, z: &Tensor, out: &mut Tensor| {
+                stepper.apply_into(idx * stride, stride, z, out)
+            };
+            lvl.w = match pool {
+                Some(p) => exec::pool_fc_relax(p, w, Some(&g[..]), cf, step),
+                None => exec::parallel_fc_relax(w, Some(&g[..]), cf, workers, step),
+            };
             lvl.g = g;
         } else {
             Self::f_relax(lvl, stepper, cf);
@@ -286,22 +365,24 @@ impl MgritCore {
         }
     }
 
+    #[allow(clippy::too_many_arguments)]
     fn vcycle<S: LevelStepper>(
         levels: &mut [Level],
         stepper: &S,
         cf: usize,
         fcf: bool,
         workers: usize,
+        pool: Option<&WorkerPool>,
+        tmp_pred: &mut Tensor,
+        tmp_r: &mut Tensor,
     ) {
         let (fine, coarser) = levels.split_first_mut().expect("at least one level");
 
         if coarser.is_empty() {
             // Coarsest level: exact serial solve W_n = Φ(W_{n-1}) + G_n.
-            fine.w[0] = fine.g[0].clone();
+            fine.w[0].copy_from(&fine.g[0]);
             for i in 1..=fine.n {
-                let mut next = stepper.apply((i - 1) * fine.stride, fine.stride, &fine.w[i - 1]);
-                next.axpy(1.0, &fine.g[i]);
-                fine.w[i] = next;
+                Self::relax_into(fine, stepper, i - 1);
             }
             return;
         }
@@ -309,46 +390,52 @@ impl MgritCore {
 
         // 1. relaxation (F or FCF)
         if fcf {
-            Self::fcf_relax_exec(fine, stepper, cf, workers);
+            Self::fcf_relax_exec(fine, stepper, cf, workers, pool);
         } else {
-            Self::f_relax_exec(fine, stepper, cf, workers);
+            Self::f_relax_exec(fine, stepper, cf, workers, pool);
         }
 
         // 2. FAS restriction: W_c = R W (injection); G_c = A_c(W_c) + R r.
         let nc = coarse.n;
         for k in 0..=nc {
-            coarse.w[k] = fine.w[k * cf].clone();
-            coarse.w_init[k] = coarse.w[k].clone();
+            coarse.w[k].copy_from(&fine.w[k * cf]);
+            coarse.w_init[k].copy_from(&coarse.w[k]);
         }
-        coarse.g[0] = coarse.w[0].clone();
+        {
+            let (g0, w0) = (&mut coarse.g[0], &coarse.w[0]);
+            g0.copy_from(w0);
+        }
         for k in 1..=nc {
             let fine_idx = k * cf;
             // fine residual at the C-point: r = g - w + Φ_f(w_{prev})
-            let pred_f =
-                stepper.apply((fine_idx - 1) * fine.stride, fine.stride, &fine.w[fine_idx - 1]);
-            let mut r = fine.g[fine_idx].clone();
-            r.axpy(-1.0, &fine.w[fine_idx]);
-            r.axpy(1.0, &pred_f);
+            stepper.apply_into(
+                (fine_idx - 1) * fine.stride,
+                fine.stride,
+                &fine.w[fine_idx - 1],
+                tmp_pred,
+            );
+            tmp_r.copy_from(&fine.g[fine_idx]);
+            tmp_r.axpy(-1.0, &fine.w[fine_idx]);
+            tmp_r.axpy(1.0, tmp_pred);
             // τ-corrected coarse RHS: A_c(W_c)_k + r
-            let pred_c =
-                stepper.apply((k - 1) * coarse.stride, coarse.stride, &coarse.w[k - 1]);
-            let mut gk = coarse.w[k].clone();
-            gk.axpy(-1.0, &pred_c);
-            gk.axpy(1.0, &r);
-            coarse.g[k] = gk;
+            stepper.apply_into((k - 1) * coarse.stride, coarse.stride, &coarse.w[k - 1], tmp_pred);
+            let gk = &mut coarse.g[k];
+            gk.copy_from(&coarse.w[k]);
+            gk.axpy(-1.0, tmp_pred);
+            gk.axpy(1.0, tmp_r);
         }
 
         // 3. coarse solve (recursive)
-        Self::vcycle(coarser, stepper, cf, fcf, workers);
+        Self::vcycle(coarser, stepper, cf, fcf, workers, pool, tmp_pred, tmp_r);
 
         // 4. FAS correction at C-points + final F-relax to spread it
         let coarse = &coarser[0];
         for k in 1..=nc {
-            let mut e = coarse.w[k].clone();
-            e.axpy(-1.0, &coarse.w_init[k]);
-            fine.w[k * cf].axpy(1.0, &e);
+            tmp_r.copy_from(&coarse.w[k]);
+            tmp_r.axpy(-1.0, &coarse.w_init[k]);
+            fine.w[k * cf].axpy(1.0, tmp_r);
         }
-        Self::f_relax_exec(fine, stepper, cf, workers);
+        Self::f_relax_exec(fine, stepper, cf, workers, pool);
     }
 }
 
@@ -359,7 +446,9 @@ mod tests {
     use crate::util::rng::Rng;
 
     /// Forward stepper over a Propagator (duplicated from solver.rs to keep
-    /// the core testable standalone).
+    /// the core testable standalone). Uses the trait's default
+    /// `apply_into` — the in-place engine must work with allocating
+    /// steppers too.
     struct Fwd<'a, P: Propagator>(&'a P);
 
     impl<'a, P: Propagator> LevelStepper for Fwd<'a, P> {
@@ -484,7 +573,8 @@ mod tests {
     #[test]
     fn threaded_vcycles_match_single_thread_bitwise() {
         // the ThreadedMgrit guarantee at core level: identical iterates,
-        // bit for bit, for any worker count
+        // bit for bit, for any worker count — scoped spawns AND the
+        // persistent pool
         let (ode, z0) = setup(32, 9);
         let mut a = MgritCore::new(32, 4, 2, true, &z0);
         a.solve(&Fwd(&ode), &z0, None, 3, false);
@@ -494,6 +584,12 @@ mod tests {
             for (x, y) in a.solution().iter().zip(b.solution()) {
                 assert_eq!(x.data(), y.data(), "workers={}", workers);
             }
+            let pool = Arc::new(WorkerPool::new(workers));
+            let mut c = MgritCore::new(32, 4, 2, true, &z0).with_pool(pool);
+            c.solve(&Fwd(&ode), &z0, None, 3, false);
+            for (x, y) in a.solution().iter().zip(c.solution()) {
+                assert_eq!(x.data(), y.data(), "pooled workers={}", workers);
+            }
         }
         // F-only relaxation path too
         let mut a = MgritCore::new(32, 4, 2, false, &z0);
@@ -501,6 +597,11 @@ mod tests {
         let mut b = MgritCore::new(32, 4, 2, false, &z0).with_workers(3);
         b.solve(&Fwd(&ode), &z0, None, 3, false);
         for (x, y) in a.solution().iter().zip(b.solution()) {
+            assert_eq!(x.data(), y.data());
+        }
+        let mut c = MgritCore::new(32, 4, 2, false, &z0).with_pool(Arc::new(WorkerPool::new(3)));
+        c.solve(&Fwd(&ode), &z0, None, 3, false);
+        for (x, y) in a.solution().iter().zip(c.solution()) {
             assert_eq!(x.data(), y.data());
         }
     }

@@ -5,8 +5,11 @@
 //! Jacobian in reversed time coordinates; gradients are then assembled on
 //! the fine grid from (states, adjoints).
 
+use std::sync::Arc;
+
 use crate::config::MgritConfig;
 use crate::ode::Propagator;
+use crate::parallel::WorkerPool;
 use crate::tensor::Tensor;
 
 use super::core::{LevelStepper, MgritCore};
@@ -46,6 +49,12 @@ impl<'a, P: Propagator + ?Sized> LevelStepper for FwdStepper<'a, P> {
     fn apply(&self, fine_idx: usize, stride: usize, z: &Tensor) -> Tensor {
         self.0.step(fine_idx, stride as f32, z)
     }
+
+    fn apply_into(&self, fine_idx: usize, stride: usize, z: &Tensor, out: &mut Tensor) {
+        // buffer-reusing dispatch: the MGRIT sweeps update grid points in
+        // place through the propagator's zero-allocation path
+        self.0.step_into(fine_idx, stride as f32, z, out)
+    }
 }
 
 /// Adjoint problem in reversed coordinates: Λ_j := λ_{N−j}. One step of
@@ -67,6 +76,12 @@ impl<'a, P: Propagator + ?Sized> LevelStepper for AdjStepper<'a, P> {
         let layer = n - fine_idx - stride;
         self.prop.adjoint_step(layer, stride as f32, &self.states[layer], lam)
     }
+
+    fn apply_into(&self, fine_idx: usize, stride: usize, lam: &Tensor, out: &mut Tensor) {
+        let n = self.prop.n_steps();
+        let layer = n - fine_idx - stride;
+        self.prop.adjoint_step_into(layer, stride as f32, &self.states[layer], lam, out)
+    }
 }
 
 /// High-level MGRIT driver bound to one propagator + one configuration.
@@ -77,16 +92,30 @@ pub struct MgritSolver<'a, P: Propagator + ?Sized> {
     /// relaxation sweep — forward *and* adjoint — through the slab
     /// executor in `parallel::exec`, bitwise identical results).
     workers: usize,
+    /// Persistent relaxation workers (None = per-sweep scoped spawns).
+    pool: Option<Arc<WorkerPool>>,
 }
 
 impl<'a, P: Propagator + ?Sized> MgritSolver<'a, P> {
     pub fn new(prop: &'a P, cfg: MgritConfig) -> Self {
-        MgritSolver { prop, cfg, workers: 1 }
+        MgritSolver { prop, cfg, workers: 1, pool: None }
     }
 
     /// Multi-worker solver (the `ThreadedMgrit` backend's entry point).
     pub fn with_workers(prop: &'a P, cfg: MgritConfig, workers: usize) -> Self {
-        MgritSolver { prop, cfg, workers: workers.max(1) }
+        MgritSolver { prop, cfg, workers: workers.max(1), pool: None }
+    }
+
+    /// Attach a persistent worker pool: relaxation sweeps run on its
+    /// parked threads with `pool.size()` workers (bitwise identical to the
+    /// scoped-spawn schedule for the same worker count). `None` is a no-op
+    /// so backends can thread an optional pool straight through.
+    pub fn pooled(mut self, pool: Option<Arc<WorkerPool>>) -> Self {
+        if let Some(p) = pool {
+            self.workers = p.size().max(1);
+            self.pool = Some(p);
+        }
+        self
     }
 
     /// Worker threads this solver relaxes with.
@@ -96,6 +125,17 @@ impl<'a, P: Propagator + ?Sized> MgritSolver<'a, P> {
 
     fn proto(&self) -> Tensor {
         Tensor::zeros(&self.prop.state_shape())
+    }
+
+    /// Build the preallocated FAS core for `n` fine steps, wired to this
+    /// solver's execution mode (workers and optional pool).
+    fn core(&self, n: usize) -> MgritCore {
+        let core = MgritCore::new(n, self.cfg.cf, self.cfg.levels, self.cfg.fcf, &self.proto())
+            .with_workers(self.workers);
+        match &self.pool {
+            Some(p) => core.with_pool(p.clone()),
+            None => core,
+        }
     }
 
     /// Forward propagation (paper §3.2.1).
@@ -116,8 +156,7 @@ impl<'a, P: Propagator + ?Sized> MgritSolver<'a, P> {
         let stepper = FwdStepper(self.prop);
         let n = self.prop.n_steps();
         let before = self.prop.counters().fwd();
-        let mut core = MgritCore::new(n, self.cfg.cf, self.cfg.levels, self.cfg.fcf, &self.proto())
-            .with_workers(self.workers);
+        let mut core = self.core(n);
         let stats = match iters {
             None => {
                 core.serial_solve(&stepper, z0);
@@ -155,8 +194,7 @@ impl<'a, P: Propagator + ?Sized> MgritSolver<'a, P> {
         let stepper = FwdStepper(self.prop);
         let n = self.prop.n_steps();
         let before = self.prop.counters().fwd();
-        let mut core = MgritCore::new(n, self.cfg.cf, self.cfg.levels, self.cfg.fcf, &self.proto())
-            .with_workers(self.workers);
+        let mut core = self.core(n);
         let s = core.solve_fmg(&stepper, z0, iters, track_residuals);
         let stats = SolveStats {
             iterations: iters,
@@ -181,8 +219,7 @@ impl<'a, P: Propagator + ?Sized> MgritSolver<'a, P> {
         assert_eq!(states.len(), n + 1, "need all fine states for the adjoint");
         let stepper = AdjStepper { prop: self.prop, states };
         let before = self.prop.counters().vjp();
-        let mut core = MgritCore::new(n, self.cfg.cf, self.cfg.levels, self.cfg.fcf, &self.proto())
-            .with_workers(self.workers);
+        let mut core = self.core(n);
         let stats = match iters {
             None => {
                 core.serial_solve(&stepper, ct);
@@ -310,6 +347,30 @@ mod tests {
                 assert_eq!(a.data(), b.data(), "fwd workers={}", workers);
             }
             let (l2, _) = multi.adjoint(&w2, &ct, Some(2), false);
+            for (a, b) in l1.iter().zip(&l2) {
+                assert_eq!(a.data(), b.data(), "adj workers={}", workers);
+            }
+        }
+    }
+
+    #[test]
+    fn pooled_solver_is_bitwise_identical_to_scoped_spawns() {
+        // the persistent-pool guarantee at solver level, forward + adjoint
+        let mut rng = Rng::new(6);
+        let ode = LinearOde::random_stable(&mut rng, 5, 32, 0.05);
+        let z0 = Tensor::randn(&mut rng, &[5, 1], 1.0);
+        let ct = Tensor::randn(&mut rng, &[5, 1], 1.0);
+        for workers in [1usize, 2, 4] {
+            let scoped = MgritSolver::with_workers(&ode, cfg(4, 2), workers);
+            let (w1, _) = scoped.forward(&z0, Some(3), None, false);
+            let (l1, _) = scoped.adjoint(&w1, &ct, Some(2), false);
+            let pool = Arc::new(WorkerPool::new(workers));
+            let pooled = MgritSolver::new(&ode, cfg(4, 2)).pooled(Some(pool));
+            let (w2, _) = pooled.forward(&z0, Some(3), None, false);
+            for (a, b) in w1.iter().zip(&w2) {
+                assert_eq!(a.data(), b.data(), "fwd workers={}", workers);
+            }
+            let (l2, _) = pooled.adjoint(&w2, &ct, Some(2), false);
             for (a, b) in l1.iter().zip(&l2) {
                 assert_eq!(a.data(), b.data(), "adj workers={}", workers);
             }

@@ -115,6 +115,20 @@ mod tests {
     }
 
     #[test]
+    fn default_into_entry_points_match_allocating_ones() {
+        // LinearOde relies on the trait's default step_into/adjoint_step_into
+        let mut rng = Rng::new(3);
+        let ode = LinearOde::random_stable(&mut rng, 5, 4, 0.2);
+        let z = Tensor::randn(&mut rng, &[5, 1], 1.0);
+        let lam = Tensor::randn(&mut rng, &[5, 1], 1.0);
+        let mut out = Tensor::randn(&mut rng, &[5, 1], 1.0); // garbage: overwritten
+        ode.step_into(1, 2.0, &z, &mut out);
+        assert_eq!(out.data(), ode.step(1, 2.0, &z).data());
+        ode.adjoint_step_into(1, 2.0, &z, &lam, &mut out);
+        assert_eq!(out.data(), ode.adjoint_step(1, 2.0, &z, &lam).data());
+    }
+
+    #[test]
     fn counters_track_evals() {
         let mut rng = Rng::new(2);
         let ode = LinearOde::random_stable(&mut rng, 4, 8, 0.1);

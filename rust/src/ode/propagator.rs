@@ -69,6 +69,16 @@ pub trait Propagator: Send + Sync {
     /// Z_{n+1} = Φ(Z_n; θ_layer, h_scale · fine_h).
     fn step(&self, layer: usize, h_scale: f32, z: &Tensor) -> Tensor;
 
+    /// Buffer-reusing step: write Φ(Z_n) into `out`, which must be
+    /// state-shaped and is **fully overwritten** (no need to zero it).
+    /// The default delegates to [`Propagator::step`], so implementations
+    /// are semantically untouched; `RustPropagator` overrides this with a
+    /// zero-allocation path and the MGRIT relaxation sweeps call it to
+    /// update grid points in place.
+    fn step_into(&self, layer: usize, h_scale: f32, z: &Tensor, out: &mut Tensor) {
+        *out = self.step(layer, h_scale, z);
+    }
+
     /// Batched propagation over consecutive layers `[layer_lo, layer_hi)`:
     /// returns the state after each step (`layer_hi − layer_lo` tensors,
     /// the last being Z_{layer_hi}). Implementations override this to
@@ -97,6 +107,20 @@ pub trait Propagator: Send + Sync {
 
     /// Adjoint step: λ_n = (∂Φ/∂Z(Z_n; θ_layer, h_scale·fine_h))ᵀ λ_{n+1}.
     fn adjoint_step(&self, layer: usize, h_scale: f32, z: &Tensor, lam_next: &Tensor) -> Tensor;
+
+    /// Buffer-reusing adjoint step; `out` must be state-shaped and is
+    /// fully overwritten. Default delegates to
+    /// [`Propagator::adjoint_step`].
+    fn adjoint_step_into(
+        &self,
+        layer: usize,
+        h_scale: f32,
+        z: &Tensor,
+        lam_next: &Tensor,
+        out: &mut Tensor,
+    ) {
+        *out = self.adjoint_step(layer, h_scale, z, lam_next);
+    }
 
     /// Parameter gradient of layer `layer`: ∂(λ_{n+1}ᵀ Φ(Z_n;θ))/∂θ,
     /// accumulated into `grad` (always on the fine grid, h_scale = 1).

@@ -1,14 +1,24 @@
 //! Pure-Rust propagator: the reference transformer as a Φ.
 //!
-//! Used by unit/property tests (no artifacts needed), by the analysis
-//! tooling, and as a fallback engine. Mirrors the stacked encoder-decoder
-//! state handling of [`super::XlaPropagator`] exactly.
+//! With `rust/vendor/xla` as an offline stub this is the production hot
+//! path for every solve, so it is built around buffer reuse:
+//!
+//! * `step_into` / `adjoint_step_into` write into caller-provided state
+//!   tensors and route all temporaries through a pooled
+//!   [`crate::reference::Scratch`] workspace — **zero heap allocations** at
+//!   steady state (pinned by `rust/tests/alloc_audit.rs`);
+//! * the stacked encoder-decoder state Z = [X, Y] is processed through
+//!   slices of the state buffer directly (no split/join copies);
+//! * per-layer θ lengths are cached at construction so `theta_len` never
+//!   touches the params read-lock.
+//!
+//! Mirrors the stacked state handling of [`super::XlaPropagator`] exactly.
 
-use std::sync::{Arc, RwLock};
+use std::sync::{Arc, Mutex, RwLock};
 
 use super::propagator::{Propagator, StepCounters};
 use crate::config::{Arch, ModelConfig};
-use crate::reference::{self, RefDims};
+use crate::reference::{self, RefDims, Scratch};
 use crate::tensor::Tensor;
 
 /// Shared per-layer flat parameters (the trainer mutates through this Arc).
@@ -33,6 +43,16 @@ pub struct RustPropagator {
     /// per-layer fine step sizes (buffer layers get Δt=1, Appendix B)
     hs: Vec<f32>,
     params: SharedParams,
+    /// Cached per-layer θ lengths (avoids the params read-lock on
+    /// `theta_len`, which MGRIT calls per layer per step).
+    theta_lens: Vec<usize>,
+    /// Pool of per-thread scratch workspaces: each Φ evaluation checks one
+    /// out and returns it, so concurrent relaxation workers never share a
+    /// workspace and the steady state allocates nothing. The Mutex costs
+    /// two uncontended lock ops (~tens of ns) per Φ eval — noise next to a
+    /// Φ application; revisit (thread-local workspaces) only if profiles
+    /// ever show contention with large worker counts on tiny models.
+    scratch: Mutex<Vec<Scratch>>,
     counters: StepCounters,
 }
 
@@ -66,7 +86,8 @@ impl RustPropagator {
     }
 
     pub fn with_hs(model: &ModelConfig, hs: Vec<f32>, params: SharedParams) -> RustPropagator {
-        let n_steps = params.read().unwrap().len();
+        let theta_lens: Vec<usize> = params.read().unwrap().iter().map(|t| t.len()).collect();
+        let n_steps = theta_lens.len();
         assert_eq!(hs.len(), n_steps);
         RustPropagator {
             dims: RefDims {
@@ -81,39 +102,87 @@ impl RustPropagator {
             n_steps,
             hs,
             params,
+            theta_lens,
+            scratch: Mutex::new(Vec::new()),
             counters: StepCounters::default(),
         }
     }
 
-    fn split_state<'a>(&self, z: &'a Tensor) -> (Tensor, Tensor, &'a [usize]) {
-        // stacked [2,B,S,D] -> (X, Y)
-        let half = z.len() / 2;
-        let inner = [self.dims.batch, self.dims.seq, self.dims.d_model];
-        let x = Tensor::from_vec(z.data()[..half].to_vec(), &inner);
-        let y = Tensor::from_vec(z.data()[half..].to_vec(), &inner);
-        (x, y, z.shape())
+    /// Run `f` with a pooled scratch workspace (checked back in after).
+    fn with_scratch<R>(&self, f: impl FnOnce(&mut Scratch) -> R) -> R {
+        let mut s = self.scratch.lock().unwrap().pop().unwrap_or_default();
+        let out = f(&mut s);
+        self.scratch.lock().unwrap().push(s);
+        out
     }
 
-    fn join_state(&self, x: &Tensor, y: &Tensor, shape: &[usize]) -> Tensor {
-        let mut data = Vec::with_capacity(x.len() * 2);
-        data.extend_from_slice(x.data());
-        data.extend_from_slice(y.data());
-        Tensor::from_vec(data, shape)
-    }
-
-    /// One Φ application with the parameter lock already resolved to θ.
-    fn apply_theta(&self, layer: usize, theta: &[f32], h: f32, z: &Tensor) -> Tensor {
-        match self.arch {
-            Arch::Encoder => reference::enc_step_fwd(z, theta, h, &self.dims, false),
-            Arch::Decoder => reference::enc_step_fwd(z, theta, h, &self.dims, true),
+    /// One Φ application with the parameter lock already resolved to θ,
+    /// operating on raw state slices (`out` fully overwritten). For the
+    /// stacked EncDec state the two halves are processed in place — no
+    /// split/join copies.
+    fn apply_into(&self, layer: usize, theta: &[f32], h: f32, z: &[f32], out: &mut [f32]) {
+        self.with_scratch(|s| match self.arch {
+            Arch::Encoder => reference::enc_step_fwd_into(z, theta, h, &self.dims, false, out, s),
+            Arch::Decoder => reference::enc_step_fwd_into(z, theta, h, &self.dims, true, out, s),
             Arch::EncDec => {
-                let (x, y, shape) = self.split_state(z);
+                let half = z.len() / 2;
+                let (zx, zy) = z.split_at(half);
+                let (ox, oy) = out.split_at_mut(half);
                 if layer < self.n_enc {
-                    let x2 = reference::enc_step_fwd(&x, theta, h, &self.dims, false);
-                    self.join_state(&x2, &y, shape)
+                    reference::enc_step_fwd_into(zx, theta, h, &self.dims, false, ox, s);
+                    oy.copy_from_slice(zy);
                 } else {
-                    let y2 = reference::dec_step_fwd(&y, &x, theta, h, &self.dims, self.dims.seq);
-                    self.join_state(&x, &y2, shape)
+                    let seq = self.dims.seq;
+                    reference::dec_step_fwd_into(zy, zx, theta, h, &self.dims, seq, oy, s);
+                    ox.copy_from_slice(zx);
+                }
+            }
+        })
+    }
+
+    /// One adjoint application with θ resolved (`out` fully overwritten);
+    /// `gtheta` receives the (discarded or consumed) parameter gradient.
+    #[allow(clippy::too_many_arguments)]
+    fn adjoint_into(
+        &self,
+        layer: usize,
+        theta: &[f32],
+        h: f32,
+        z: &[f32],
+        lam: &[f32],
+        out: &mut [f32],
+        gtheta: &mut [f32],
+        s: &mut Scratch,
+    ) {
+        match self.arch {
+            Arch::Encoder => {
+                reference::enc_step_bwd_into(z, theta, h, &self.dims, false, lam, out, gtheta, s)
+            }
+            Arch::Decoder => {
+                reference::enc_step_bwd_into(z, theta, h, &self.dims, true, lam, out, gtheta, s)
+            }
+            Arch::EncDec => {
+                let half = z.len() / 2;
+                let (zx, zy) = z.split_at(half);
+                let (lx, ly) = lam.split_at(half);
+                let (ox, oy) = out.split_at_mut(half);
+                if layer < self.n_enc {
+                    // X evolves: λx back through enc step; λy passes through
+                    reference::enc_step_bwd_into(
+                        zx, theta, h, &self.dims, false, lx, ox, gtheta, s,
+                    );
+                    oy.copy_from_slice(ly);
+                } else {
+                    // Y evolves: λy back through dec step; λx += ∂dec/∂X_enc
+                    // (dec_step_bwd_into fully overwrites dxe)
+                    let mut dxe = s.take_any(half);
+                    reference::dec_step_bwd_into(
+                        zy, zx, theta, h, &self.dims, self.dims.seq, ly, oy, &mut dxe, gtheta, s,
+                    );
+                    for ((o, &l), &d) in ox.iter_mut().zip(lx).zip(dxe.iter()) {
+                        *o = l + d;
+                    }
+                    s.give(dxe);
                 }
             }
         }
@@ -142,10 +211,18 @@ impl Propagator for RustPropagator {
     }
 
     fn step(&self, layer: usize, h_scale: f32, z: &Tensor) -> Tensor {
+        let mut out = Tensor::zeros(z.shape());
+        self.step_into(layer, h_scale, z, &mut out);
+        out
+    }
+
+    /// Zero-allocation step at steady state: state slices in, state slices
+    /// out, pooled scratch for every temporary.
+    fn step_into(&self, layer: usize, h_scale: f32, z: &Tensor, out: &mut Tensor) {
         self.counters.count_fwd();
         let h = self.hs[layer] * h_scale;
         let params = self.params.read().unwrap();
-        self.apply_theta(layer, &params[layer], h, z)
+        self.apply_into(layer, &params[layer], h, z.data(), out.data_mut());
     }
 
     /// Batched steps under a single read-lock acquisition (the v2
@@ -156,49 +233,58 @@ impl Propagator for RustPropagator {
         for layer in layer_lo..layer_hi {
             self.counters.count_fwd();
             let h = self.hs[layer] * h_scale;
-            let next = self.apply_theta(layer, &params[layer], h, out.last().unwrap_or(z));
+            let next = {
+                let prev = out.last().unwrap_or(z);
+                let mut t = Tensor::zeros(z.shape());
+                self.apply_into(layer, &params[layer], h, prev.data(), t.data_mut());
+                t
+            };
             out.push(next);
         }
         out
     }
 
-    /// Rolling full forward under a single read-lock acquisition.
+    /// Rolling full forward under a single read-lock acquisition: two
+    /// ping-pong state buffers, no per-step allocation.
     fn step_to(&self, layer_lo: usize, layer_hi: usize, h_scale: f32, z: &Tensor) -> Tensor {
         let params = self.params.read().unwrap();
         let mut cur = z.clone();
+        let mut next = Tensor::zeros(z.shape());
         for layer in layer_lo..layer_hi {
             self.counters.count_fwd();
             let h = self.hs[layer] * h_scale;
-            cur = self.apply_theta(layer, &params[layer], h, &cur);
+            self.apply_into(layer, &params[layer], h, cur.data(), next.data_mut());
+            std::mem::swap(&mut cur, &mut next);
         }
         cur
     }
 
     fn adjoint_step(&self, layer: usize, h_scale: f32, z: &Tensor, lam_next: &Tensor) -> Tensor {
+        let mut out = Tensor::zeros(lam_next.shape());
+        self.adjoint_step_into(layer, h_scale, z, lam_next, &mut out);
+        out
+    }
+
+    fn adjoint_step_into(
+        &self,
+        layer: usize,
+        h_scale: f32,
+        z: &Tensor,
+        lam_next: &Tensor,
+        out: &mut Tensor,
+    ) {
         self.counters.count_vjp();
         let h = self.hs[layer] * h_scale;
         let params = self.params.read().unwrap();
         let theta = &params[layer];
-        match self.arch {
-            Arch::Encoder => reference::enc_step_bwd(z, theta, h, &self.dims, false, lam_next).0,
-            Arch::Decoder => reference::enc_step_bwd(z, theta, h, &self.dims, true, lam_next).0,
-            Arch::EncDec => {
-                let (x, y, shape) = self.split_state(z);
-                let (lx, ly, _) = self.split_state(lam_next);
-                if layer < self.n_enc {
-                    // X evolves: λx back through enc step; λy passes through
-                    let (lx2, _) = reference::enc_step_bwd(&x, theta, h, &self.dims, false, &lx);
-                    self.join_state(&lx2, &ly, shape)
-                } else {
-                    // Y evolves: λy back through dec step; λx += ∂dec/∂X_enc
-                    let (ly2, lxe, _) =
-                        reference::dec_step_bwd(&y, &x, theta, h, &self.dims, self.dims.seq, &ly);
-                    let mut lx2 = lx;
-                    lx2.axpy(1.0, &lxe);
-                    self.join_state(&lx2, &ly2, shape)
-                }
-            }
-        }
+        self.with_scratch(|s| {
+            // the adjoint discards θ-gradients; accumulate them into a
+            // pooled zeroed buffer instead of allocating one per call
+            let mut gtheta = s.take(theta.len());
+            let (zd, ld) = (z.data(), lam_next.data());
+            self.adjoint_into(layer, theta, h, zd, ld, out.data_mut(), &mut gtheta, s);
+            s.give(gtheta);
+        });
     }
 
     fn accumulate_grad(&self, layer: usize, z: &Tensor, lam_next: &Tensor, grad: &mut [f32]) {
@@ -206,27 +292,45 @@ impl Propagator for RustPropagator {
         let h = self.hs[layer];
         let params = self.params.read().unwrap();
         let theta = &params[layer];
-        let g = match self.arch {
-            Arch::Encoder => reference::enc_step_bwd(z, theta, h, &self.dims, false, lam_next).1,
-            Arch::Decoder => reference::enc_step_bwd(z, theta, h, &self.dims, true, lam_next).1,
-            Arch::EncDec => {
-                let (x, y, _) = self.split_state(z);
-                let (lx, ly, _) = self.split_state(lam_next);
-                if layer < self.n_enc {
-                    reference::enc_step_bwd(&x, theta, h, &self.dims, false, &lx).1
-                } else {
-                    reference::dec_step_bwd(&y, &x, theta, h, &self.dims, self.dims.seq, &ly).2
+        assert_eq!(theta.len(), grad.len(), "grad length mismatch at layer {}", layer);
+        self.with_scratch(|s| {
+            let lam_len = match self.arch {
+                Arch::EncDec => z.len() / 2,
+                _ => z.len(),
+            };
+            // the bwd entry points fully overwrite their λ outputs
+            let mut dz = s.take_any(lam_len);
+            match self.arch {
+                Arch::Encoder => reference::enc_step_bwd_into(
+                    z.data(), theta, h, &self.dims, false, lam_next.data(), &mut dz, grad, s,
+                ),
+                Arch::Decoder => reference::enc_step_bwd_into(
+                    z.data(), theta, h, &self.dims, true, lam_next.data(), &mut dz, grad, s,
+                ),
+                Arch::EncDec => {
+                    let half = z.len() / 2;
+                    let (zx, zy) = z.data().split_at(half);
+                    let (lx, ly) = lam_next.data().split_at(half);
+                    if layer < self.n_enc {
+                        reference::enc_step_bwd_into(
+                            zx, theta, h, &self.dims, false, lx, &mut dz, grad, s,
+                        );
+                    } else {
+                        let mut dxe = s.take_any(half);
+                        reference::dec_step_bwd_into(
+                            zy, zx, theta, h, &self.dims, self.dims.seq, ly, &mut dz, &mut dxe,
+                            grad, s,
+                        );
+                        s.give(dxe);
+                    }
                 }
             }
-        };
-        assert_eq!(g.len(), grad.len(), "grad length mismatch at layer {}", layer);
-        for (a, b) in grad.iter_mut().zip(&g) {
-            *a += b;
-        }
+            s.give(dz);
+        });
     }
 
     fn theta_len(&self, layer: usize) -> usize {
-        self.params.read().unwrap()[layer].len()
+        self.theta_lens[layer]
     }
 
     fn counters(&self) -> &StepCounters {
@@ -297,6 +401,36 @@ mod tests {
     }
 
     #[test]
+    fn prop_step_into_bitwise_matches_step_all_arches() {
+        // The *_into acceptance property: for every Arch variant and layer
+        // phase, the buffer-reusing entry points must reproduce the
+        // allocating ones bit for bit, with `out` pre-filled with garbage
+        // (pins the full-overwrite contract) and the scratch pool warm.
+        for arch in [Arch::Encoder, Arch::Decoder, Arch::EncDec] {
+            let model = tiny_model(arch);
+            let mut rng = Rng::new(7);
+            let params = make_params(&model, &mut rng, 0.15);
+            let prop = RustPropagator::new(&model, 0.5, params);
+            for layer in 0..model.total_layers() {
+                for h_scale in [1.0f32, 2.0] {
+                    let z = Tensor::randn(&mut rng, &prop.state_shape(), 0.8);
+                    let lam = Tensor::randn(&mut rng, &prop.state_shape(), 1.0);
+
+                    let want = prop.step(layer, h_scale, &z);
+                    let mut out = Tensor::randn(&mut rng, &prop.state_shape(), 9.0);
+                    prop.step_into(layer, h_scale, &z, &mut out);
+                    assert_eq!(out.data(), want.data(), "{:?} fwd layer {}", arch, layer);
+
+                    let want = prop.adjoint_step(layer, h_scale, &z, &lam);
+                    let mut out = Tensor::randn(&mut rng, &prop.state_shape(), 9.0);
+                    prop.adjoint_step_into(layer, h_scale, &z, &lam, &mut out);
+                    assert_eq!(out.data(), want.data(), "{:?} adj layer {}", arch, layer);
+                }
+            }
+        }
+    }
+
+    #[test]
     fn step_range_matches_repeated_steps_bitwise() {
         let model = tiny_model(Arch::Encoder);
         let mut rng = Rng::new(5);
@@ -313,6 +447,23 @@ mod tests {
         // the rolling variant lands on the same final state
         let rolled = prop.step_to(0, 4, 1.0, &z);
         assert_eq!(rolled.data(), batched.last().unwrap().data());
+    }
+
+    #[test]
+    fn theta_len_is_cached_per_layer() {
+        let model = tiny_model(Arch::EncDec);
+        let mut rng = Rng::new(9);
+        let params = make_params(&model, &mut rng, 0.1);
+        let prop = RustPropagator::new(&model, 1.0, params.clone());
+        assert_eq!(prop.theta_len(0), model.p_enc());
+        assert_eq!(prop.theta_len(1), model.p_enc());
+        assert_eq!(prop.theta_len(2), model.p_dec());
+        assert_eq!(prop.theta_len(3), model.p_dec());
+        // cache agrees with the live store
+        let live = params.read().unwrap();
+        for l in 0..4 {
+            assert_eq!(prop.theta_len(l), live[l].len());
+        }
     }
 
     #[test]

@@ -3,21 +3,38 @@
 //! Each worker owns a contiguous slab of chunks, applies F-relaxation
 //! locally (no communication — the parallel phase of paper Fig. 2), then
 //! C-relaxation with a halo exchange of the slab-boundary state over the
-//! channel [`Fabric`]. The update schedule is value-for-value identical to
-//! the single-threaded engine, so threaded solves are *bitwise* equal to
-//! serial ones.
+//! channel [`Fabric`](super::comm::Fabric). The update schedule is
+//! value-for-value identical to the single-threaded engine, so threaded
+//! solves are *bitwise* equal to serial ones.
 //!
-//! v2: the executors are generic over a [`RelaxState`] (plain `Vec<f32>`
-//! slabs in the standalone tests, [`Tensor`] states on the real MGRIT hot
-//! loop) and accept the FAS right-hand side G so they can run *inside*
-//! `mgrit::core`'s V-cycle — this is the execution layer behind the
-//! `ThreadedMgrit` backend, not just correctness evidence.
+//! Two dispatch modes share the exact same slab bodies:
+//!
+//! * `parallel_f_relax` / `parallel_fc_relax` — scoped threads spawned per
+//!   sweep (self-contained; used by ad-hoc solver calls and as the parity
+//!   oracle for the pool);
+//! * `pool_f_relax` / `pool_fc_relax` — the same sweeps dispatched onto a
+//!   persistent [`WorkerPool`] (per-`Session` threads parked between
+//!   sweeps, amortizing spawn cost; the `ThreadedMgrit` backend's path).
+//!
+//! Buffer-reuse contract (v3): the step closure has write-into form
+//! `step(idx, z, out)` — `out` is an existing state slot that must be
+//! **fully overwritten** — so the executors update grid points in place
+//! via `Propagator::step_into` and never clone states on the sweep path.
+//! The FAS right-hand side G, when present, is added after every step with
+//! the same arithmetic as the serial engine (bitwise parity).
 
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::mpsc::channel;
 use std::thread;
 
+use super::comm::Endpoint;
 use super::comm::Fabric;
+use super::pool::WorkerPool;
 use super::topology::slab_partition;
 use crate::tensor::Tensor;
+
+/// Fabric tag for the FCF halo exchange.
+const HALO_TAG: u64 = 42;
 
 /// A state vector the relaxation executors can carry across threads and
 /// through the channel fabric.
@@ -25,6 +42,9 @@ pub trait RelaxState: Clone + Send + Sync {
     /// x += y elementwise (the RHS update of one relaxation step; must use
     /// the same arithmetic as the serial engine for bitwise parity).
     fn add_in_place(&mut self, other: &Self);
+
+    /// Flattened element count (halo-message sanity checks).
+    fn flat_len(&self) -> usize;
 
     /// Flatten for a fabric message.
     fn to_flat(&self) -> Vec<f32>;
@@ -38,6 +58,10 @@ impl RelaxState for Vec<f32> {
         for (a, b) in self.iter_mut().zip(other) {
             *a += *b;
         }
+    }
+
+    fn flat_len(&self) -> usize {
+        self.len()
     }
 
     fn to_flat(&self) -> Vec<f32> {
@@ -54,6 +78,10 @@ impl RelaxState for Tensor {
         self.axpy(1.0, other);
     }
 
+    fn flat_len(&self) -> usize {
+        self.len()
+    }
+
     fn to_flat(&self) -> Vec<f32> {
         self.data().to_vec()
     }
@@ -63,25 +91,26 @@ impl RelaxState for Tensor {
     }
 }
 
-/// One relaxation step with the FAS right-hand side applied — the single
-/// place the g-indexing convention (`g[point_written]`, i.e. `lo+idx+1`)
-/// lives; every F- and C-point update in both executors routes through
-/// it, so the bitwise-parity invariant cannot silently fork.
-fn relax_point<T, F>(lo: usize, idx: usize, z: &T, g: Option<&[T]>, step: &F) -> T
+/// One relaxation step with the FAS right-hand side applied, writing the
+/// updated point `local[idx + 1]` in place — the single place the
+/// g-indexing convention (`g[point_written]`, i.e. `lo+idx+1`) lives;
+/// every F- and C-point update in all executors routes through it, so the
+/// bitwise-parity invariant cannot silently fork.
+fn relax_point_into<T, F>(lo: usize, idx: usize, local: &mut [T], g: Option<&[T]>, step: &F)
 where
     T: RelaxState,
-    F: Fn(usize, &T) -> T,
+    F: Fn(usize, &T, &mut T),
 {
-    let mut next = step(lo + idx, z);
+    let (head, tail) = local.split_at_mut(idx + 1);
+    step(lo + idx, &head[idx], &mut tail[0]);
     if let Some(g) = g {
-        next.add_in_place(&g[lo + idx + 1]);
+        tail[0].add_in_place(&g[lo + idx + 1]);
     }
-    next
 }
 
 /// One F-point sweep over a slab's local copy: for every owned chunk,
 /// re-propagate its F-points from the chunk's leading C-point (`lo` is
-/// the level index of `local[0]`). Shared by both executors.
+/// the level index of `local[0]`). Shared by all executors.
 fn f_sweep_local<T, F>(
     local: &mut [T],
     lo: usize,
@@ -91,14 +120,88 @@ fn f_sweep_local<T, F>(
     step: &F,
 ) where
     T: RelaxState,
-    F: Fn(usize, &T) -> T,
+    F: Fn(usize, &T, &mut T),
 {
     for c in 0..n_chunks {
         for i in 0..cf - 1 {
-            let idx = c * cf + i;
-            local[idx + 1] = relax_point(lo, idx, &local[idx], g, step);
+            relax_point_into(lo, c * cf + i, local, g, step);
         }
     }
+}
+
+/// The full FCF slab body (F-relax, C-relax, halo exchange, second
+/// F-relax) for the slab covering chunks [c0, c1). `active` is the number
+/// of ranks participating in this sweep (halo neighbours are gated on it,
+/// not on the fabric size, so a pool larger than the sweep still runs the
+/// exact scoped schedule).
+#[allow(clippy::too_many_arguments)]
+fn fcf_slab<T, F>(
+    w_all: &[T],
+    g: Option<&[T]>,
+    cf: usize,
+    c0: usize,
+    c1: usize,
+    active: usize,
+    ep: &mut Endpoint,
+    step: &F,
+) -> (usize, Vec<T>)
+where
+    T: RelaxState,
+    F: Fn(usize, &T, &mut T),
+{
+    let rank = ep.rank;
+    // local copy of this slab's points: chunk c covers fine indices
+    // [c*cf, (c+1)*cf]; we own points (c0*cf, c1*cf] plus read access to
+    // the C-point at c0*cf.
+    let lo = c0 * cf;
+    let hi = c1 * cf;
+    let mut local: Vec<T> = w_all[lo..=hi].to_vec();
+    // F-relaxation: every chunk independently (parallel phase)
+    f_sweep_local(&mut local, lo, c1 - c0, cf, g, step);
+    // C-relaxation: the final step of each chunk; the first C-point of the
+    // *next* slab is produced here, so send the boundary value right after
+    // computing it.
+    for c in 0..(c1 - c0) {
+        relax_point_into(lo, (c + 1) * cf - 1, &mut local, g, step);
+    }
+    // second F-relax needs the incoming C-point from the left neighbour's
+    // C-relax (FCF); exchange halos:
+    if rank + 1 < active {
+        let boundary = local.last().unwrap().to_flat();
+        ep.send(rank + 1, HALO_TAG, boundary);
+    }
+    if rank > 0 {
+        let data = ep.recv(rank - 1, HALO_TAG);
+        assert_eq!(
+            data.len(),
+            local[0].flat_len(),
+            "malformed halo message (left-neighbour worker panicked?)"
+        );
+        local[0] = T::from_flat(&local[0], data);
+    }
+    // final F-relaxation with the fresh left C-point
+    f_sweep_local(&mut local, lo, c1 - c0, cf, g, step);
+    (lo, local)
+}
+
+/// The F-only slab body (no communication at all).
+fn f_slab<T, F>(
+    w_all: &[T],
+    g: Option<&[T]>,
+    cf: usize,
+    c0: usize,
+    c1: usize,
+    step: &F,
+) -> (usize, Vec<T>)
+where
+    T: RelaxState,
+    F: Fn(usize, &T, &mut T),
+{
+    let lo = c0 * cf;
+    let hi = c1 * cf;
+    let mut local: Vec<T> = w_all[lo..=hi].to_vec();
+    f_sweep_local(&mut local, lo, c1 - c0, cf, g, step);
+    (lo, local)
 }
 
 /// Stitch per-slab worker results back into the full point array.
@@ -113,9 +216,9 @@ fn stitch<T>(mut out: Vec<T>, mut results: Vec<(usize, Vec<T>)>) -> Vec<T> {
 }
 
 /// One F-relax + C-relax + F-relax (FCF) sweep over `n` fine steps executed
-/// by `workers` threads. `w` holds states at points 0..=n (C-points must be
-/// valid on entry; F-points are overwritten). `g`, when present, is the FAS
-/// right-hand side added after every step (index-aligned with `w`).
+/// by `workers` scoped threads. `w` holds states at points 0..=n (C-points
+/// must be valid on entry; F-points are overwritten). `g`, when present, is
+/// the FAS right-hand side added after every step (index-aligned with `w`).
 /// Returns the updated states — bitwise identical to the serial schedule.
 pub fn parallel_fc_relax<T, F>(
     w: Vec<T>,
@@ -126,7 +229,7 @@ pub fn parallel_fc_relax<T, F>(
 ) -> Vec<T>
 where
     T: RelaxState,
-    F: Fn(usize, &T) -> T + Sync,
+    F: Fn(usize, &T, &mut T) + Sync,
 {
     let n = w.len() - 1;
     assert_eq!(n % cf, 0, "n must be a multiple of cf");
@@ -143,37 +246,7 @@ where
             .into_iter()
             .zip(slabs.iter().cloned())
             .map(|(mut ep, (c0, c1))| {
-                s.spawn(move || {
-                    let rank = ep.rank;
-                    // local copy of this slab's points: chunk c covers fine
-                    // indices [c*cf, (c+1)*cf]; we own points (c0*cf, c1*cf]
-                    // plus read access to the C-point at c0*cf.
-                    let lo = c0 * cf;
-                    let hi = c1 * cf;
-                    let mut local: Vec<T> = w_ref[lo..=hi].to_vec();
-                    // F-relaxation: every chunk independently (parallel phase)
-                    f_sweep_local(&mut local, lo, c1 - c0, cf, g, step_ref);
-                    // C-relaxation: the final step of each chunk; the first
-                    // C-point of the *next* slab is produced here, so send
-                    // the boundary value right after computing it.
-                    for c in 0..(c1 - c0) {
-                        let idx = (c + 1) * cf - 1;
-                        local[idx + 1] = relax_point(lo, idx, &local[idx], g, step_ref);
-                    }
-                    // second F-relax needs the incoming C-point from the left
-                    // neighbour's C-relax (FCF); exchange halos:
-                    if rank + 1 < ep.n_ranks {
-                        let boundary = local.last().unwrap().to_flat();
-                        ep.send(rank + 1, 42, boundary);
-                    }
-                    if rank > 0 {
-                        let data = ep.recv(rank - 1, 42);
-                        local[0] = T::from_flat(&local[0], data);
-                    }
-                    // final F-relaxation with the fresh left C-point
-                    f_sweep_local(&mut local, lo, c1 - c0, cf, g, step_ref);
-                    (lo, local)
-                })
+                s.spawn(move || fcf_slab(w_ref, g, cf, c0, c1, workers, &mut ep, step_ref))
             })
             .collect();
         handles.into_iter().map(|h| h.join().unwrap()).collect()
@@ -182,10 +255,10 @@ where
     stitch(w, results)
 }
 
-/// One F-relaxation sweep over `workers` threads: every chunk re-propagates
-/// its F-points from its (read-only) leading C-point — no communication at
-/// all, the embarrassingly-parallel phase of paper Fig. 2. `g` as in
-/// [`parallel_fc_relax`].
+/// One F-relaxation sweep over `workers` scoped threads: every chunk
+/// re-propagates its F-points from its (read-only) leading C-point — no
+/// communication at all, the embarrassingly-parallel phase of paper
+/// Fig. 2. `g` as in [`parallel_fc_relax`].
 pub fn parallel_f_relax<T, F>(
     w: Vec<T>,
     g: Option<&[T]>,
@@ -195,7 +268,7 @@ pub fn parallel_f_relax<T, F>(
 ) -> Vec<T>
 where
     T: RelaxState,
-    F: Fn(usize, &T) -> T + Sync,
+    F: Fn(usize, &T, &mut T) + Sync,
 {
     let n = w.len() - 1;
     assert_eq!(n % cf, 0, "n must be a multiple of cf");
@@ -209,19 +282,136 @@ where
         let handles: Vec<_> = slabs
             .iter()
             .cloned()
-            .map(|(c0, c1)| {
-                s.spawn(move || {
-                    let lo = c0 * cf;
-                    let hi = c1 * cf;
-                    let mut local: Vec<T> = w_ref[lo..=hi].to_vec();
-                    f_sweep_local(&mut local, lo, c1 - c0, cf, g, step_ref);
-                    (lo, local)
-                })
-            })
+            .map(|(c0, c1)| s.spawn(move || f_slab(w_ref, g, cf, c0, c1, step_ref)))
             .collect();
         handles.into_iter().map(|h| h.join().unwrap()).collect()
     });
 
+    stitch(w, results)
+}
+
+/// [`parallel_fc_relax`] dispatched onto a persistent [`WorkerPool`]
+/// instead of per-sweep scoped spawns. The slab partition uses
+/// `min(pool.size(), chunks)` active ranks, so a pool of size k produces
+/// bitwise the same states as `parallel_fc_relax(.., workers = k, ..)`.
+///
+/// Panic containment: if a slab body panics (e.g. a shape assert inside
+/// Φ), its job sends a zero-length *poison* halo so the right neighbour —
+/// possibly blocked on `recv` — fails its halo length check instead of
+/// deadlocking the sweep barrier; the chain unwinds rank by rank, the
+/// barrier completes, and the original panic is re-raised here. A sweep
+/// that panics **poisons the pool** (stale halo messages may remain
+/// queued); `WorkerPool::run_scoped` refuses poisoned pools and
+/// `ThreadedMgrit` rebuilds its pool automatically.
+pub fn pool_fc_relax<T, F>(
+    pool: &WorkerPool,
+    w: Vec<T>,
+    g: Option<&[T]>,
+    cf: usize,
+    step: F,
+) -> Vec<T>
+where
+    T: RelaxState,
+    F: Fn(usize, &T, &mut T) + Sync,
+{
+    let n = w.len() - 1;
+    assert_eq!(n % cf, 0, "n must be a multiple of cf");
+    let chunks = n / cf;
+    let active = pool.size().min(chunks).max(1);
+    let slabs = slab_partition(chunks, active);
+    let step_ref = &step;
+    let w_ref = &w;
+    let results = pool_dispatch(pool, &slabs, true, |c0: usize, c1: usize, ep: &mut Endpoint| {
+        fcf_slab(w_ref, g, cf, c0, c1, active, ep, step_ref)
+    });
+    stitch(w, results)
+}
+
+/// Shared dispatch scaffold for the pooled executors: one job per slab,
+/// result/panic channels, and the completion barrier. On any panic the
+/// pool is **poisoned** (stale halo messages may remain queued in the
+/// fabric) and the first payload is re-raised after the barrier; with
+/// `poison_halo` a panicking rank first sends a zero-length halo so a
+/// blocked right neighbour fails its length check instead of deadlocking
+/// (the chain unwinds rank by rank).
+fn pool_dispatch<T, B>(
+    pool: &WorkerPool,
+    slabs: &[(usize, usize)],
+    poison_halo: bool,
+    body: B,
+) -> Vec<(usize, Vec<T>)>
+where
+    T: RelaxState,
+    B: Fn(usize, usize, &mut Endpoint) -> (usize, Vec<T>) + Sync,
+{
+    let active = slabs.len();
+    let body_ref = &body;
+    let (res_tx, res_rx) = channel::<(usize, Vec<T>)>();
+    let (err_tx, err_rx) = channel::<Box<dyn std::any::Any + Send>>();
+    let jobs: Vec<Box<dyn FnOnce(&mut Endpoint) + Send + '_>> = slabs
+        .iter()
+        .cloned()
+        .map(|(c0, c1)| {
+            let tx = res_tx.clone();
+            let etx = err_tx.clone();
+            Box::new(move |ep: &mut Endpoint| {
+                match catch_unwind(AssertUnwindSafe(|| body_ref(c0, c1, ep))) {
+                    Ok(r) => {
+                        let _ = tx.send(r);
+                    }
+                    Err(payload) => {
+                        // zero-length poison halo: real states are never
+                        // empty, so the neighbour's length check fires
+                        if poison_halo && ep.rank + 1 < active {
+                            ep.send(ep.rank + 1, HALO_TAG, Vec::new());
+                        }
+                        let _ = etx.send(payload);
+                    }
+                }
+            }) as Box<dyn FnOnce(&mut Endpoint) + Send + '_>
+        })
+        .collect();
+    drop(res_tx);
+    drop(err_tx);
+    pool.run_scoped(jobs);
+
+    if let Ok(payload) = err_rx.try_recv() {
+        pool.poison();
+        resume_unwind(payload);
+    }
+    let results: Vec<(usize, Vec<T>)> = res_rx.try_iter().collect();
+    if results.len() != active {
+        pool.poison();
+        panic!("a pool worker died mid-sweep");
+    }
+    results
+}
+
+/// [`parallel_f_relax`] on a persistent [`WorkerPool`]. F-only sweeps have
+/// no halo waits, so a panicking slab simply surfaces its payload here
+/// after the barrier (no poisoning needed).
+pub fn pool_f_relax<T, F>(
+    pool: &WorkerPool,
+    w: Vec<T>,
+    g: Option<&[T]>,
+    cf: usize,
+    step: F,
+) -> Vec<T>
+where
+    T: RelaxState,
+    F: Fn(usize, &T, &mut T) + Sync,
+{
+    let n = w.len() - 1;
+    assert_eq!(n % cf, 0, "n must be a multiple of cf");
+    let chunks = n / cf;
+    let active = pool.size().min(chunks).max(1);
+    let slabs = slab_partition(chunks, active);
+    let step_ref = &step;
+    let w_ref = &w;
+    let results =
+        pool_dispatch(pool, &slabs, false, |c0: usize, c1: usize, _ep: &mut Endpoint| {
+            f_slab(w_ref, g, cf, c0, c1, step_ref)
+        });
     stitch(w, results)
 }
 
@@ -264,8 +454,9 @@ mod tests {
             .collect()
     }
 
-    fn vec_step(layer: usize, z: &Vec<f32>) -> Vec<f32> {
-        affine_step(layer, z)
+    #[allow(clippy::ptr_arg)]
+    fn vec_step(layer: usize, z: &Vec<f32>, out: &mut Vec<f32>) {
+        *out = affine_step(layer, z);
     }
 
     #[test]
@@ -278,6 +469,71 @@ mod tests {
             for (a, b) in parallel.iter().zip(&serial) {
                 assert_eq!(a, b, "n={} cf={} workers={}", n, cf, workers);
             }
+        }
+    }
+
+    #[test]
+    fn pool_matches_scoped_spawns_bitwise() {
+        // the persistent-pool acceptance property: for 1–4 workers, the
+        // pool executor reproduces the scoped-spawn executor bit for bit,
+        // FCF and F-only, with and without a FAS right-hand side — across
+        // repeated sweeps through the *same* parked threads.
+        for workers in 1usize..=4 {
+            let pool = WorkerPool::new(workers);
+            for (n, cf) in [(16usize, 4usize), (24, 3), (32, 2), (8, 8)] {
+                let mut rng = Rng::new((workers * 100 + n) as u64);
+                let w: Vec<Vec<f32>> = (0..=n).map(|_| rng.normal_vec(5, 1.0)).collect();
+                let g: Vec<Vec<f32>> = (0..=n).map(|_| rng.normal_vec(5, 0.1)).collect();
+                for round in 0..2 {
+                    let g_opt = if round == 0 { None } else { Some(&g[..]) };
+                    let scoped = parallel_fc_relax(w.clone(), g_opt, cf, workers, vec_step);
+                    let pooled = pool_fc_relax(&pool, w.clone(), g_opt, cf, vec_step);
+                    for (a, b) in pooled.iter().zip(&scoped) {
+                        assert_eq!(a, b, "fcf n={} cf={} workers={}", n, cf, workers);
+                    }
+                    let scoped = parallel_f_relax(w.clone(), g_opt, cf, workers, vec_step);
+                    let pooled = pool_f_relax(&pool, w.clone(), g_opt, cf, vec_step);
+                    for (a, b) in pooled.iter().zip(&scoped) {
+                        assert_eq!(a, b, "f n={} cf={} workers={}", n, cf, workers);
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn pooled_sweep_panics_loudly_instead_of_deadlocking() {
+        // a panicking Φ inside a pooled FCF sweep must surface the panic
+        // through pool_fc_relax (poison-halo chain), not hang the barrier
+        // — and the pool's threads must still shut down cleanly on drop
+        use std::panic::{catch_unwind as cu, AssertUnwindSafe as Aus};
+        let pool = WorkerPool::new(2);
+        let mut rng = Rng::new(13);
+        let w: Vec<Vec<f32>> = (0..=8).map(|_| rng.normal_vec(3, 1.0)).collect();
+        let boom = |l: usize, z: &Vec<f32>, out: &mut Vec<f32>| {
+            assert_ne!(l, 1, "boom");
+            *out = affine_step(l, z);
+        };
+        let result = cu(Aus(|| pool_fc_relax(&pool, w.clone(), None, 2, boom)));
+        assert!(result.is_err(), "worker panic must propagate to the caller");
+        // the failed sweep poisons the pool (stale halos may be queued);
+        // further sweeps refuse loudly instead of computing on stale state
+        assert!(pool.is_poisoned());
+        let retry = cu(Aus(|| pool_fc_relax(&pool, w, None, 2, vec_step)));
+        assert!(retry.is_err(), "poisoned pool must refuse further sweeps");
+    }
+
+    #[test]
+    fn oversized_pool_is_clamped_to_chunks() {
+        // 2 chunks but a 6-worker pool: only ranks 0..2 participate and
+        // the result still matches the serial schedule
+        let pool = WorkerPool::new(6);
+        let mut rng = Rng::new(77);
+        let w: Vec<Vec<f32>> = (0..=8).map(|_| rng.normal_vec(4, 1.0)).collect();
+        let serial = serial_fc_relax(w.clone(), 4, affine_step);
+        let pooled = pool_fc_relax(&pool, w, None, 4, vec_step);
+        for (a, b) in pooled.iter().zip(&serial) {
+            assert_eq!(a, b);
         }
     }
 
@@ -350,18 +606,23 @@ mod tests {
     #[test]
     fn tensor_states_round_trip_the_fabric() {
         // Tensor-typed relaxation (the real MGRIT hot-loop shape) matches
-        // the Vec<f32> executor bit for bit.
+        // the Vec<f32> executor bit for bit — scoped and pooled.
         let (n, cf, workers) = (16usize, 4usize, 4usize);
         let mut rng = Rng::new(5);
         let w_vec: Vec<Vec<f32>> = (0..=n).map(|_| rng.normal_vec(6, 1.0)).collect();
         let w_t: Vec<Tensor> =
             w_vec.iter().map(|v| Tensor::from_vec(v.clone(), &[2, 3])).collect();
-        let t_step = |l: usize, z: &Tensor| -> Tensor {
-            Tensor::from_vec(affine_step(l, z.data()), &[2, 3])
+        let t_step = |l: usize, z: &Tensor, out: &mut Tensor| {
+            *out = Tensor::from_vec(affine_step(l, z.data()), &[2, 3]);
         };
         let out_vec = parallel_fc_relax(w_vec, None, cf, workers, vec_step);
-        let out_t = parallel_fc_relax(w_t, None, cf, workers, t_step);
+        let out_t = parallel_fc_relax(w_t.clone(), None, cf, workers, t_step);
         for (a, b) in out_t.iter().zip(&out_vec) {
+            assert_eq!(a.data(), b.as_slice());
+        }
+        let pool = WorkerPool::new(workers);
+        let out_p = pool_fc_relax(&pool, w_t, None, cf, t_step);
+        for (a, b) in out_p.iter().zip(&out_vec) {
             assert_eq!(a.data(), b.as_slice());
         }
     }

@@ -9,6 +9,10 @@
 //!   single-threaded engine. Since the Session API v2 redesign this is the
 //!   execution layer of the `ThreadedMgrit` backend: `mgrit::core` routes
 //!   its V-cycle relaxation sweeps (forward *and* adjoint) through it.
+//! * [`pool`] — persistent relaxation workers (one [`WorkerPool`] per
+//!   `ThreadedMgrit` backend / `Session`): the same slab sweeps as `exec`'s
+//!   scoped spawns, dispatched onto long-lived threads that park between
+//!   sweeps.
 //! * [`simulator`] — discrete-event makespan model calibrated with the
 //!   measured Φ cost and an α+β communication model; generates the paper's
 //!   scaling figures (6-9) on this single-core testbed (DESIGN.md
@@ -16,10 +20,12 @@
 
 pub mod comm;
 pub mod exec;
+pub mod pool;
 pub mod simulator;
 pub mod topology;
 
 pub use comm::Fabric;
 pub use exec::RelaxState;
+pub use pool::WorkerPool;
 pub use simulator::{DeviceModel, SimConfig, Simulator};
 pub use topology::{slab_partition, Topology};

@@ -1,0 +1,245 @@
+//! Persistent relaxation worker pool.
+//!
+//! `ThreadedMgrit` used to spawn scoped threads for every relaxation sweep
+//! (~2 spawns × levels per V-cycle). A [`WorkerPool`] instead keeps
+//! `size` long-lived threads, each owning one [`Endpoint`] of a shared
+//! channel [`Fabric`] for halo exchange; between sweeps the workers park
+//! on their job channel. One pool lives per `ThreadedMgrit` backend (i.e.
+//! per `Session`), amortizing spawn cost across every sweep of a training
+//! run while executing the *identical* slab schedule — bitwise parity with
+//! the scoped-spawn executor is pinned by tests in
+//! [`crate::parallel::exec`] and `rust/tests/backend_parity.rs`.
+//!
+//! ## Lifecycle
+//!
+//! * `WorkerPool::new(n)` builds the fabric, takes all endpoints, and
+//!   spawns `n` named threads that block on `Receiver::recv` (parked).
+//! * `run_scoped(jobs)` sends one closure per active rank (a prefix of the
+//!   workers) and **blocks until every job has finished** — that barrier
+//!   is what makes lending non-`'static` borrows to the workers sound,
+//!   and it also guarantees every in-sweep halo message is consumed
+//!   before the next sweep starts.
+//! * `Drop` closes the job channels and joins the threads.
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Mutex;
+use std::thread::JoinHandle;
+
+use super::comm::{Endpoint, Fabric};
+
+/// A type-erased sweep job executed on one worker.
+type Job = Box<dyn FnOnce(&mut Endpoint) + Send + 'static>;
+
+/// Long-lived relaxation workers with a persistent halo-exchange fabric.
+pub struct WorkerPool {
+    size: usize,
+    /// Job senders, rank-indexed. Behind a Mutex so the pool is `Sync`
+    /// (backends hand out `Arc<WorkerPool>`); sends are cheap and the
+    /// lock is only held while enqueueing one sweep.
+    senders: Mutex<Vec<Sender<Job>>>,
+    /// Set after a panicked/failed sweep: stale halo messages may be
+    /// queued in the fabric, so further sweeps would silently consume
+    /// previous-sweep state. `run_scoped` refuses a poisoned pool;
+    /// owners (`ThreadedMgrit`) rebuild instead of reusing.
+    poisoned: AtomicBool,
+    handles: Vec<JoinHandle<()>>,
+}
+
+/// Sends the completion signal even if the job panics (the unwind drops
+/// the guard). Note this alone does not unblock a *peer* job waiting on a
+/// fabric message from the panicked one — the pooled executors in
+/// [`crate::parallel::exec`] handle that by poisoning the halo chain.
+struct DoneGuard(Sender<()>);
+
+impl Drop for DoneGuard {
+    fn drop(&mut self) {
+        let _ = self.0.send(());
+    }
+}
+
+impl WorkerPool {
+    /// Spawn `size` parked worker threads sharing one halo fabric.
+    pub fn new(size: usize) -> WorkerPool {
+        let size = size.max(1);
+        let mut fabric = Fabric::new(size);
+        let mut senders = Vec::with_capacity(size);
+        let mut handles = Vec::with_capacity(size);
+        for rank in 0..size {
+            let (tx, rx): (Sender<Job>, Receiver<Job>) = channel();
+            let mut ep = fabric.take(rank);
+            let handle = std::thread::Builder::new()
+                .name(format!("mgrit-worker-{}", rank))
+                .spawn(move || {
+                    while let Ok(job) = rx.recv() {
+                        // a panicking job must not kill the worker: the
+                        // sweep's barrier reports it instead (missing
+                        // result), and later sweeps still have `size` ranks
+                        let _ = catch_unwind(AssertUnwindSafe(|| job(&mut ep)));
+                    }
+                })
+                .expect("spawn mgrit worker");
+            senders.push(tx);
+            handles.push(handle);
+        }
+        WorkerPool { size, senders: Mutex::new(senders), poisoned: AtomicBool::new(false), handles }
+    }
+
+    /// Number of worker threads (= fabric ranks).
+    pub fn size(&self) -> usize {
+        self.size
+    }
+
+    /// Mark the pool unusable (a sweep panicked or lost a worker; the
+    /// fabric may hold stale halo messages). Subsequent `run_scoped`
+    /// calls panic immediately instead of computing on stale state.
+    pub fn poison(&self) {
+        self.poisoned.store(true, Ordering::SeqCst);
+    }
+
+    /// Has this pool been through a failed sweep?
+    pub fn is_poisoned(&self) -> bool {
+        self.poisoned.load(Ordering::SeqCst)
+    }
+
+    /// Run one job per rank `0..jobs.len()` and block until all complete.
+    ///
+    /// Jobs may borrow from the caller's stack: the barrier guarantees the
+    /// borrows outlive every access. Results travel through whatever
+    /// channel the caller baked into the closures.
+    ///
+    /// Ranks only ever wait on *lower* ranks (the left-to-right halo flow
+    /// in `exec`), so if dispatch fails at rank r — a worker thread died —
+    /// the already-dispatched prefix `0..r` is self-contained: the barrier
+    /// still completes for it before this method reports the dead worker.
+    pub fn run_scoped<'scope>(&self, jobs: Vec<Box<dyn FnOnce(&mut Endpoint) + Send + 'scope>>) {
+        assert!(
+            !self.is_poisoned(),
+            "worker pool poisoned by an earlier failed sweep; drop and rebuild it"
+        );
+        assert!(jobs.len() <= self.size, "more jobs than pool workers");
+        let (done_tx, done_rx) = channel::<()>();
+        let mut attempted = 0usize;
+        let mut dead_worker = false;
+        {
+            let senders = self.senders.lock().unwrap();
+            for (rank, job) in jobs.into_iter().enumerate() {
+                let guard = DoneGuard(done_tx.clone());
+                let wrapped: Box<dyn FnOnce(&mut Endpoint) + Send + 'scope> =
+                    Box::new(move |ep: &mut Endpoint| {
+                        let _guard = guard;
+                        job(ep);
+                    });
+                // SAFETY: the job may borrow data with lifetime 'scope.
+                // Every wrapped job signals `done_tx` exactly once — when
+                // it finishes or unwinds on a worker (DoneGuard), or
+                // immediately below if the send fails (the returned
+                // SendError drops the job, firing its guard) — and we
+                // block until all `attempted` signals arrive before
+                // returning OR panicking, so no borrow is accessed after
+                // run_scoped exits by any path. The transmute only erases
+                // the lifetime bound; the trait-object layout is
+                // unchanged.
+                let job_static: Job = unsafe {
+                    std::mem::transmute::<
+                        Box<dyn FnOnce(&mut Endpoint) + Send + 'scope>,
+                        Box<dyn FnOnce(&mut Endpoint) + Send + 'static>,
+                    >(wrapped)
+                };
+                attempted += 1;
+                if senders[rank].send(job_static).is_err() {
+                    // never panic mid-dispatch: jobs already on workers
+                    // still borrow the caller's stack — finish the barrier
+                    // first, then report
+                    dead_worker = true;
+                    break;
+                }
+            }
+        }
+        drop(done_tx);
+        for _ in 0..attempted {
+            done_rx.recv().expect("mgrit worker dropped its sweep job");
+        }
+        if dead_worker {
+            self.poison();
+            panic!("mgrit worker thread died; sweep aborted");
+        }
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        // closing the job channels lets the recv loops exit
+        self.senders.lock().unwrap().clear();
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn jobs_run_on_distinct_parked_workers() {
+        let pool = WorkerPool::new(3);
+        let hits = AtomicUsize::new(0);
+        let ranks = Mutex::new(Vec::new());
+        // several sweeps through the same threads (persistence)
+        for _ in 0..4 {
+            let jobs: Vec<Box<dyn FnOnce(&mut Endpoint) + Send + '_>> = (0..3)
+                .map(|_| {
+                    Box::new(|ep: &mut Endpoint| {
+                        hits.fetch_add(1, Ordering::SeqCst);
+                        ranks.lock().unwrap().push(ep.rank);
+                    }) as Box<dyn FnOnce(&mut Endpoint) + Send + '_>
+                })
+                .collect();
+            pool.run_scoped(jobs);
+        }
+        assert_eq!(hits.load(Ordering::SeqCst), 12);
+        let mut seen = ranks.lock().unwrap().clone();
+        seen.sort_unstable();
+        // each of the three ranks ran once per sweep, four sweeps
+        assert_eq!(seen, vec![0, 0, 0, 0, 1, 1, 1, 1, 2, 2, 2, 2]);
+    }
+
+    #[test]
+    fn workers_exchange_halos_over_the_persistent_fabric() {
+        let pool = WorkerPool::new(2);
+        for sweep in 0..3u64 {
+            let out = Mutex::new(0.0f32);
+            let jobs: Vec<Box<dyn FnOnce(&mut Endpoint) + Send + '_>> = vec![
+                Box::new(move |ep: &mut Endpoint| {
+                    ep.send(1, 7, vec![sweep as f32 + 0.5]);
+                }),
+                Box::new(|ep: &mut Endpoint| {
+                    let v = ep.recv(0, 7);
+                    *out.lock().unwrap() = v[0];
+                }),
+            ];
+            pool.run_scoped(jobs);
+            assert_eq!(*out.lock().unwrap(), sweep as f32 + 0.5);
+        }
+    }
+
+    #[test]
+    fn partial_sweeps_use_a_rank_prefix() {
+        let pool = WorkerPool::new(4);
+        let ranks = Mutex::new(Vec::new());
+        let jobs: Vec<Box<dyn FnOnce(&mut Endpoint) + Send + '_>> = (0..2)
+            .map(|_| {
+                Box::new(|ep: &mut Endpoint| {
+                    ranks.lock().unwrap().push(ep.rank);
+                }) as Box<dyn FnOnce(&mut Endpoint) + Send + '_>
+            })
+            .collect();
+        pool.run_scoped(jobs);
+        let mut seen = ranks.into_inner().unwrap();
+        seen.sort_unstable();
+        assert_eq!(seen, vec![0, 1]);
+    }
+}

@@ -7,12 +7,21 @@
 //!             y' = y + h (ȳ + φ2(y + ȳ))
 //!
 //! The backward functions recompute the forward internally (no cache
-//! plumbing — this path is a correctness oracle, not the hot path) and
-//! return the adjoint state λ plus flat parameter gradients.
+//! plumbing) and accumulate the adjoint state λ plus flat parameter
+//! gradients.
+//!
+//! All kernels are slice-based and route their temporaries through a
+//! caller-provided [`Scratch`] workspace: the `*_into` entry points
+//! (`enc_step_fwd_into`, …) are allocation-free at steady state and form
+//! the training hot path via [`crate::ode::RustPropagator`]. The
+//! Tensor-level wrappers (`enc_step_fwd`, …) allocate a throwaway
+//! workspace and exist for tests and one-off analysis calls. Matrix work
+//! runs on the blocked kernels in [`crate::tensor::ops`].
 
-use super::math::{gelu, gelu_grad, layer_norm_bwd, layer_norm_fwd};
+use super::math::{gelu, gelu_grad, layer_norm_bwd, layer_norm_fwd_into, layer_norm_fwd_stats};
 use super::params::{DecGrads, DecParams, EncGrads, EncParams};
-use crate::tensor::Tensor;
+use super::scratch::Scratch;
+use crate::tensor::{mm_at_into, mm_bt_into, mm_into, Tensor};
 
 /// Shape context for one Φ application.
 #[derive(Debug, Clone, Copy)]
@@ -35,61 +44,8 @@ impl RefDims {
 }
 
 // ---------------------------------------------------------------------------
-// raw matmul helpers (row-major slices)
+// head gather/scatter + masked softmax
 // ---------------------------------------------------------------------------
-
-/// out (+)= a[m,k] @ b[k,n]
-fn mm(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, out: &mut [f32], acc: bool) {
-    if !acc {
-        out.iter_mut().for_each(|v| *v = 0.0);
-    }
-    for i in 0..m {
-        let arow = &a[i * k..(i + 1) * k];
-        let orow = &mut out[i * n..(i + 1) * n];
-        for (kk, &av) in arow.iter().enumerate() {
-            if av == 0.0 {
-                continue;
-            }
-            let brow = &b[kk * n..(kk + 1) * n];
-            for (o, &bv) in orow.iter_mut().zip(brow) {
-                *o += av * bv;
-            }
-        }
-    }
-}
-
-/// out += aᵀ @ b where a is [k,m], b is [k,n] -> out [m,n] (weight grads)
-fn mm_at(a: &[f32], b: &[f32], k: usize, m: usize, n: usize, out: &mut [f32]) {
-    for kk in 0..k {
-        let arow = &a[kk * m..(kk + 1) * m];
-        let brow = &b[kk * n..(kk + 1) * n];
-        for (i, &av) in arow.iter().enumerate() {
-            if av == 0.0 {
-                continue;
-            }
-            let orow = &mut out[i * n..(i + 1) * n];
-            for (o, &bv) in orow.iter_mut().zip(brow) {
-                *o += av * bv;
-            }
-        }
-    }
-}
-
-/// out += a @ bᵀ where a is [m,k], b is [n,k] -> out [m,n] (input grads)
-fn mm_bt(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, out: &mut [f32]) {
-    for i in 0..m {
-        let arow = &a[i * k..(i + 1) * k];
-        let orow = &mut out[i * n..(i + 1) * n];
-        for (j, o) in orow.iter_mut().enumerate() {
-            let brow = &b[j * k..(j + 1) * k];
-            let mut acc = 0.0;
-            for kk in 0..k {
-                acc += arow[kk] * brow[kk];
-            }
-            *o += acc;
-        }
-    }
-}
 
 /// Copy head block h of a [b, s, d] activation into a contiguous [s, hd] buffer.
 fn gather_head(src: &[f32], b: usize, s: usize, d: usize, h: usize, hd: usize, out: &mut [f32]) {
@@ -133,6 +89,15 @@ fn masked_softmax(scores: &mut [f32], sq: usize, sk: usize, causal: bool) {
     }
 }
 
+/// Add a length-`n` bias to every row of a [rows, n] buffer.
+fn add_bias_rows(x: &mut [f32], bias: &[f32], n: usize) {
+    for row in x.chunks_exact_mut(n) {
+        for (v, &bv) in row.iter_mut().zip(bias) {
+            *v += bv;
+        }
+    }
+}
+
 // ---------------------------------------------------------------------------
 // attention (generic over self/cross): q from zq [bq rows], k/v from kv
 // ---------------------------------------------------------------------------
@@ -146,6 +111,7 @@ struct AttnShapes {
 }
 
 /// merged = MHA_core(zq @ wq, kv @ wk, kv @ wv); out = merged @ wo
+/// (`out` fully overwritten).
 #[allow(clippy::too_many_arguments)]
 fn attention_fwd(
     zq: &[f32],
@@ -157,41 +123,48 @@ fn attention_fwd(
     sh: &AttnShapes,
     causal: bool,
     out: &mut [f32],
+    s: &mut Scratch,
 ) {
     let AttnShapes { batch, sq, sk, d, nh } = *sh;
     let hd = d / nh;
     let scale = 1.0 / (hd as f32).sqrt();
     let (rq, rk) = (batch * sq, batch * sk);
 
-    let mut q = vec![0.0; rq * d];
-    let mut k = vec![0.0; rk * d];
-    let mut v = vec![0.0; rk * d];
-    mm(zq, wq, rq, d, d, &mut q, false);
-    mm(kv, wk, rk, d, d, &mut k, false);
-    mm(kv, wv, rk, d, d, &mut v, false);
+    let mut q = s.take_any(rq * d);
+    let mut k = s.take_any(rk * d);
+    let mut v = s.take_any(rk * d);
+    mm_into(zq, wq, rq, d, d, &mut q, false);
+    mm_into(kv, wk, rk, d, d, &mut k, false);
+    mm_into(kv, wv, rk, d, d, &mut v, false);
 
-    let mut merged = vec![0.0; rq * d];
-    let mut qh = vec![0.0; sq * hd];
-    let mut kh = vec![0.0; sk * hd];
-    let mut vh = vec![0.0; sk * hd];
-    let mut scores = vec![0.0; sq * sk];
-    let mut oh = vec![0.0; sq * hd];
+    let mut merged = s.take(rq * d); // zeroed: scatter_head_add accumulates
+    let mut qh = s.take_any(sq * hd);
+    let mut kh = s.take_any(sk * hd);
+    let mut vh = s.take_any(sk * hd);
+    let mut scores = s.take_any(sq * sk);
+    let mut oh = s.take_any(sq * hd);
     for b in 0..batch {
         for h in 0..nh {
             gather_head(&q, b, sq, d, h, hd, &mut qh);
             gather_head(&k, b, sk, d, h, hd, &mut kh);
             gather_head(&v, b, sk, d, h, hd, &mut vh);
-            mm_bt(&qh, &kh, sq, hd, sk, {
-                scores.iter_mut().for_each(|x| *x = 0.0);
-                &mut scores
-            });
+            mm_bt_into(&qh, &kh, sq, hd, sk, &mut scores, false);
             scores.iter_mut().for_each(|x| *x *= scale);
             masked_softmax(&mut scores, sq, sk, causal);
-            mm(&scores, &vh, sq, sk, hd, &mut oh, false);
+            mm_into(&scores, &vh, sq, sk, hd, &mut oh, false);
             scatter_head_add(&mut merged, b, sq, d, h, hd, &oh);
         }
     }
-    mm(&merged, wo, rq, d, d, out, false);
+    mm_into(&merged, wo, rq, d, d, out, false);
+    s.give(oh);
+    s.give(scores);
+    s.give(vh);
+    s.give(kh);
+    s.give(qh);
+    s.give(merged);
+    s.give(v);
+    s.give(k);
+    s.give(q);
 }
 
 /// Backward of `attention_fwd` (recomputes internals).
@@ -213,6 +186,7 @@ fn attention_bwd(
     dwk: &mut [f32],
     dwv: &mut [f32],
     dwo: &mut [f32],
+    s: &mut Scratch,
 ) {
     let AttnShapes { batch, sq, sk, d, nh } = *sh;
     let hd = d / nh;
@@ -220,71 +194,62 @@ fn attention_bwd(
     let (rq, rk) = (batch * sq, batch * sk);
 
     // recompute projections
-    let mut q = vec![0.0; rq * d];
-    let mut k = vec![0.0; rk * d];
-    let mut v = vec![0.0; rk * d];
-    mm(zq, wq, rq, d, d, &mut q, false);
-    mm(kv, wk, rk, d, d, &mut k, false);
-    mm(kv, wv, rk, d, d, &mut v, false);
+    let mut q = s.take_any(rq * d);
+    let mut k = s.take_any(rk * d);
+    let mut v = s.take_any(rk * d);
+    mm_into(zq, wq, rq, d, d, &mut q, false);
+    mm_into(kv, wk, rk, d, d, &mut k, false);
+    mm_into(kv, wv, rk, d, d, &mut v, false);
+
+    let mut qh = s.take_any(sq * hd);
+    let mut kh = s.take_any(sk * hd);
+    let mut vh = s.take_any(sk * hd);
+    let mut p = s.take_any(sq * sk);
+    let mut oh = s.take_any(sq * hd);
 
     // recompute merged (needed for dwo)
-    let mut merged = vec![0.0; rq * d];
-    {
-        let mut qh = vec![0.0; sq * hd];
-        let mut kh = vec![0.0; sk * hd];
-        let mut vh = vec![0.0; sk * hd];
-        let mut scores = vec![0.0; sq * sk];
-        let mut oh = vec![0.0; sq * hd];
-        for b in 0..batch {
-            for h in 0..nh {
-                gather_head(&q, b, sq, d, h, hd, &mut qh);
-                gather_head(&k, b, sk, d, h, hd, &mut kh);
-                gather_head(&v, b, sk, d, h, hd, &mut vh);
-                scores.iter_mut().for_each(|x| *x = 0.0);
-                mm_bt(&qh, &kh, sq, hd, sk, &mut scores);
-                scores.iter_mut().for_each(|x| *x *= scale);
-                masked_softmax(&mut scores, sq, sk, causal);
-                mm(&scores, &vh, sq, sk, hd, &mut oh, false);
-                scatter_head_add(&mut merged, b, sq, d, h, hd, &oh);
-            }
+    let mut merged = s.take(rq * d);
+    for b in 0..batch {
+        for h in 0..nh {
+            gather_head(&q, b, sq, d, h, hd, &mut qh);
+            gather_head(&k, b, sk, d, h, hd, &mut kh);
+            gather_head(&v, b, sk, d, h, hd, &mut vh);
+            mm_bt_into(&qh, &kh, sq, hd, sk, &mut p, false);
+            p.iter_mut().for_each(|x| *x *= scale);
+            masked_softmax(&mut p, sq, sk, causal);
+            mm_into(&p, &vh, sq, sk, hd, &mut oh, false);
+            scatter_head_add(&mut merged, b, sq, d, h, hd, &oh);
         }
     }
 
     // out = merged @ wo
-    mm_at(&merged, d_out, rq, d, d, dwo);
-    let mut d_merged = vec![0.0; rq * d];
-    mm_bt(d_out, wo, rq, d, d, &mut d_merged);
+    mm_at_into(&merged, d_out, rq, d, d, dwo, true);
+    let mut d_merged = s.take_any(rq * d);
+    mm_bt_into(d_out, wo, rq, d, d, &mut d_merged, false);
 
-    let mut dq = vec![0.0; rq * d];
-    let mut dk = vec![0.0; rk * d];
-    let mut dv = vec![0.0; rk * d];
+    let mut dq = s.take(rq * d);
+    let mut dk = s.take(rk * d);
+    let mut dv = s.take(rk * d);
     {
-        let mut qh = vec![0.0; sq * hd];
-        let mut kh = vec![0.0; sk * hd];
-        let mut vh = vec![0.0; sk * hd];
-        let mut p = vec![0.0; sq * sk];
-        let mut doh = vec![0.0; sq * hd];
-        let mut dp = vec![0.0; sq * sk];
-        let mut ds = vec![0.0; sq * sk];
-        let mut dqh = vec![0.0; sq * hd];
-        let mut dkh = vec![0.0; sk * hd];
-        let mut dvh = vec![0.0; sk * hd];
+        let mut doh = s.take_any(sq * hd);
+        let mut dp = s.take_any(sq * sk);
+        let mut ds = s.take_any(sq * sk);
+        let mut dqh = s.take_any(sq * hd);
+        let mut dkh = s.take_any(sk * hd);
+        let mut dvh = s.take_any(sk * hd);
         for b in 0..batch {
             for h in 0..nh {
                 gather_head(&q, b, sq, d, h, hd, &mut qh);
                 gather_head(&k, b, sk, d, h, hd, &mut kh);
                 gather_head(&v, b, sk, d, h, hd, &mut vh);
-                p.iter_mut().for_each(|x| *x = 0.0);
-                mm_bt(&qh, &kh, sq, hd, sk, &mut p);
+                mm_bt_into(&qh, &kh, sq, hd, sk, &mut p, false);
                 p.iter_mut().for_each(|x| *x *= scale);
                 masked_softmax(&mut p, sq, sk, causal);
 
                 gather_head(&d_merged, b, sq, d, h, hd, &mut doh);
                 // dP = dO @ Vᵀ ; dV = Pᵀ @ dO
-                dp.iter_mut().for_each(|x| *x = 0.0);
-                mm_bt(&doh, &vh, sq, hd, sk, &mut dp);
-                dvh.iter_mut().for_each(|x| *x = 0.0);
-                mm_at(&p, &doh, sq, sk, hd, &mut dvh);
+                mm_bt_into(&doh, &vh, sq, hd, sk, &mut dp, false);
+                mm_at_into(&p, &doh, sq, sk, hd, &mut dvh, false);
                 // softmax backward: dS = P ∘ (dP - rowsum(dP ∘ P))
                 for qi in 0..sq {
                     let prow = &p[qi * sk..(qi + 1) * sk];
@@ -296,11 +261,9 @@ fn attention_bwd(
                     }
                 }
                 // dQ = scale * dS @ K ; dK = scale * dSᵀ @ Q
-                dqh.iter_mut().for_each(|x| *x = 0.0);
-                mm(&ds, &kh, sq, sk, hd, &mut dqh, false);
+                mm_into(&ds, &kh, sq, sk, hd, &mut dqh, false);
                 dqh.iter_mut().for_each(|x| *x *= scale);
-                dkh.iter_mut().for_each(|x| *x = 0.0);
-                mm_at(&ds, &qh, sq, sk, hd, &mut dkh);
+                mm_at_into(&ds, &qh, sq, sk, hd, &mut dkh, false);
                 dkh.iter_mut().for_each(|x| *x *= scale);
 
                 scatter_head_add(&mut dq, b, sq, d, h, hd, &dqh);
@@ -308,31 +271,53 @@ fn attention_bwd(
                 scatter_head_add(&mut dv, b, sk, d, h, hd, &dvh);
             }
         }
+        s.give(dvh);
+        s.give(dkh);
+        s.give(dqh);
+        s.give(ds);
+        s.give(dp);
+        s.give(doh);
     }
 
     // projection backward
-    mm_bt(&dq, wq, rq, d, d, d_zq);
-    mm_bt(&dk, wk, rk, d, d, d_kv);
-    mm_bt(&dv, wv, rk, d, d, d_kv);
-    mm_at(zq, &dq, rq, d, d, dwq);
-    mm_at(kv, &dk, rk, d, d, dwk);
-    mm_at(kv, &dv, rk, d, d, dwv);
+    mm_bt_into(&dq, wq, rq, d, d, d_zq, true);
+    mm_bt_into(&dk, wk, rk, d, d, d_kv, true);
+    mm_bt_into(&dv, wv, rk, d, d, d_kv, true);
+    mm_at_into(zq, &dq, rq, d, d, dwq, true);
+    mm_at_into(kv, &dk, rk, d, d, dwk, true);
+    mm_at_into(kv, &dv, rk, d, d, dwv, true);
+
+    s.give(dv);
+    s.give(dk);
+    s.give(dq);
+    s.give(d_merged);
+    s.give(merged);
+    s.give(oh);
+    s.give(p);
+    s.give(vh);
+    s.give(kh);
+    s.give(qh);
+    s.give(v);
+    s.give(k);
+    s.give(q);
 }
 
 // ---------------------------------------------------------------------------
 // phi sublayers
 // ---------------------------------------------------------------------------
 
-/// φ1(x) = SA(LN1(x)) — forward.
-fn phi1_fwd(x: &[f32], p: &EncParams, dm: &RefDims, causal: bool, out: &mut [f32]) {
+/// φ1(x) = SA(LN1(x)) — forward (`out` fully overwritten).
+fn phi1_fwd(x: &[f32], p: &EncParams, dm: &RefDims, causal: bool, out: &mut [f32], s: &mut Scratch) {
     let (r, d) = (dm.rows(), dm.d_model);
-    let mut z = vec![0.0; r * d];
-    layer_norm_fwd(x, p.ln1_g, p.ln1_b, d, &mut z);
+    let mut z = s.take_any(r * d);
+    layer_norm_fwd_into(x, p.ln1_g, p.ln1_b, d, &mut z);
     let sh = AttnShapes { batch: dm.batch, sq: dm.seq, sk: dm.seq, d, nh: dm.n_heads };
-    attention_fwd(&z, &z, p.wq, p.wk, p.wv, p.wo, &sh, causal, out);
+    attention_fwd(&z, &z, p.wq, p.wk, p.wv, p.wo, &sh, causal, out, s);
+    s.give(z);
 }
 
 /// φ1 backward: accumulates dx and parameter grads.
+#[allow(clippy::too_many_arguments)]
 fn phi1_bwd(
     x: &[f32],
     p: &EncParams,
@@ -341,41 +326,42 @@ fn phi1_bwd(
     causal: bool,
     d_out: &[f32],
     dx: &mut [f32],
+    s: &mut Scratch,
 ) {
     let (r, d) = (dm.rows(), dm.d_model);
-    let mut z = vec![0.0; r * d];
-    let stats = layer_norm_fwd(x, p.ln1_g, p.ln1_b, d, &mut z);
+    let mut z = s.take_any(r * d);
+    let mut stats = s.take_stats();
+    layer_norm_fwd_stats(x, p.ln1_g, p.ln1_b, d, &mut z, &mut stats);
     let sh = AttnShapes { batch: dm.batch, sq: dm.seq, sk: dm.seq, d, nh: dm.n_heads };
     // self-attention: zq and kv are the SAME tensor -> sum both grad paths
-    let mut dz_q = vec![0.0; r * d];
-    let mut dz_kv = vec![0.0; r * d];
+    let mut dz_q = s.take(r * d);
+    let mut dz_kv = s.take(r * d);
     attention_bwd(&z, &z, p.wq, p.wk, p.wv, p.wo, &sh, causal, d_out, &mut dz_q, &mut dz_kv,
-                  g.wq, g.wk, g.wv, g.wo);
-    for (a2, b2) in dz_q.iter_mut().zip(&dz_kv) {
-        *a2 += b2;
+                  g.wq, g.wk, g.wv, g.wo, s);
+    for (a2, b2) in dz_q.iter_mut().zip(dz_kv.iter()) {
+        *a2 += *b2;
     }
     layer_norm_bwd(&dz_q, x, p.ln1_g, &stats, d, dx, g.ln1_g, g.ln1_b);
+    s.give(dz_kv);
+    s.give(dz_q);
+    s.give(z);
+    s.give_stats(stats);
 }
 
-/// φ2(u) = MLP(LN2(u)) — forward.
-fn phi2_fwd(u: &[f32], p: &EncParams, dm: &RefDims, out: &mut [f32]) {
+/// φ2(u) = MLP(LN2(u)) — forward (`out` fully overwritten).
+fn phi2_fwd(u: &[f32], p: &EncParams, dm: &RefDims, out: &mut [f32], s: &mut Scratch) {
     let (r, d, f) = (dm.rows(), dm.d_model, dm.d_ff);
-    let mut z = vec![0.0; r * d];
-    layer_norm_fwd(u, p.ln2_g, p.ln2_b, d, &mut z);
-    let mut hpre = vec![0.0; r * f];
-    mm(&z, p.w1, r, d, f, &mut hpre, false);
-    for row in 0..r {
-        for j in 0..f {
-            hpre[row * f + j] += p.b1[j];
-        }
-    }
-    let hmid: Vec<f32> = hpre.iter().map(|&v| gelu(v)).collect();
-    mm(&hmid, p.w2, r, f, d, out, false);
-    for row in 0..r {
-        for j in 0..d {
-            out[row * d + j] += p.b2[j];
-        }
-    }
+    let mut z = s.take_any(r * d);
+    layer_norm_fwd_into(u, p.ln2_g, p.ln2_b, d, &mut z);
+    let mut hpre = s.take_any(r * f);
+    mm_into(&z, p.w1, r, d, f, &mut hpre, false);
+    add_bias_rows(&mut hpre, p.b1, f);
+    // gelu in place: hpre becomes hmid
+    hpre.iter_mut().for_each(|v| *v = gelu(*v));
+    mm_into(&hpre, p.w2, r, f, d, out, false);
+    add_bias_rows(out, p.b2, d);
+    s.give(hpre);
+    s.give(z);
 }
 
 /// φ2 backward: accumulates du and parameter grads.
@@ -386,45 +372,53 @@ fn phi2_bwd(
     dm: &RefDims,
     d_out: &[f32],
     du: &mut [f32],
+    s: &mut Scratch,
 ) {
     let (r, d, f) = (dm.rows(), dm.d_model, dm.d_ff);
-    let mut z = vec![0.0; r * d];
-    let stats = layer_norm_fwd(u, p.ln2_g, p.ln2_b, d, &mut z);
-    let mut hpre = vec![0.0; r * f];
-    mm(&z, p.w1, r, d, f, &mut hpre, false);
-    for row in 0..r {
-        for j in 0..f {
-            hpre[row * f + j] += p.b1[j];
-        }
+    let mut z = s.take_any(r * d);
+    let mut stats = s.take_stats();
+    layer_norm_fwd_stats(u, p.ln2_g, p.ln2_b, d, &mut z, &mut stats);
+    let mut hpre = s.take_any(r * f);
+    mm_into(&z, p.w1, r, d, f, &mut hpre, false);
+    add_bias_rows(&mut hpre, p.b1, f);
+    let mut hmid = s.take_any(r * f);
+    for (hm, &hp) in hmid.iter_mut().zip(hpre.iter()) {
+        *hm = gelu(hp);
     }
-    let hmid: Vec<f32> = hpre.iter().map(|&v| gelu(v)).collect();
 
     // out = hmid @ w2 + b2
-    mm_at(&hmid, d_out, r, f, d, g.w2);
-    for row in 0..r {
-        for j in 0..d {
-            g.b2[j] += d_out[row * d + j];
+    mm_at_into(&hmid, d_out, r, f, d, g.w2, true);
+    for row in d_out.chunks_exact(d) {
+        for (gb, &dv) in g.b2.iter_mut().zip(row) {
+            *gb += dv;
         }
     }
-    let mut d_hmid = vec![0.0; r * f];
-    mm_bt(d_out, p.w2, r, d, f, &mut d_hmid);
-    // gelu
-    let d_hpre: Vec<f32> =
-        d_hmid.iter().zip(&hpre).map(|(dh, &hp)| dh * gelu_grad(hp)).collect();
+    let mut d_hmid = s.take_any(r * f);
+    mm_bt_into(d_out, p.w2, r, d, f, &mut d_hmid, false);
+    // gelu backward in place: d_hmid becomes d_hpre
+    for (dh, &hp) in d_hmid.iter_mut().zip(hpre.iter()) {
+        *dh *= gelu_grad(hp);
+    }
     // hpre = z @ w1 + b1
-    mm_at(&z, &d_hpre, r, d, f, g.w1);
-    for row in 0..r {
-        for j in 0..f {
-            g.b1[j] += d_hpre[row * f + j];
+    mm_at_into(&z, &d_hmid, r, d, f, g.w1, true);
+    for row in d_hmid.chunks_exact(f) {
+        for (gb, &dv) in g.b1.iter_mut().zip(row) {
+            *gb += dv;
         }
     }
-    let mut dz = vec![0.0; r * d];
-    mm_bt(&d_hpre, p.w1, r, f, d, &mut dz);
+    let mut dz = s.take_any(r * d);
+    mm_bt_into(&d_hmid, p.w1, r, f, d, &mut dz, false);
     layer_norm_bwd(&dz, u, p.ln2_g, &stats, d, du, g.ln2_g, g.ln2_b);
+    s.give(dz);
+    s.give(d_hmid);
+    s.give(hmid);
+    s.give(hpre);
+    s.give(z);
+    s.give_stats(stats);
 }
 
 /// φ3(u, x_enc) = CA(LN3(u), x_enc) — forward. Keys/values from raw x_enc
-/// (not layer-normed), matching ref.py.
+/// (not layer-normed), matching ref.py. `out` fully overwritten.
 fn phi3_fwd(
     u: &[f32],
     x_enc: &[f32],
@@ -432,12 +426,14 @@ fn phi3_fwd(
     dm_q: &RefDims,
     seq_k: usize,
     out: &mut [f32],
+    s: &mut Scratch,
 ) {
     let (r, d) = (dm_q.rows(), dm_q.d_model);
-    let mut z = vec![0.0; r * d];
-    layer_norm_fwd(u, p.ln3_g, p.ln3_b, d, &mut z);
+    let mut z = s.take_any(r * d);
+    layer_norm_fwd_into(u, p.ln3_g, p.ln3_b, d, &mut z);
     let sh = AttnShapes { batch: dm_q.batch, sq: dm_q.seq, sk: seq_k, d, nh: dm_q.n_heads };
-    attention_fwd(&z, x_enc, p.cq, p.ck, p.cv, p.co, &sh, false, out);
+    attention_fwd(&z, x_enc, p.cq, p.ck, p.cv, p.co, &sh, false, out, s);
+    s.give(z);
 }
 
 /// φ3 backward: accumulates du, dx_enc and parameter grads.
@@ -452,37 +448,120 @@ fn phi3_bwd(
     d_out: &[f32],
     du: &mut [f32],
     dx_enc: &mut [f32],
+    s: &mut Scratch,
 ) {
     let (r, d) = (dm_q.rows(), dm_q.d_model);
-    let mut z = vec![0.0; r * d];
-    let stats = layer_norm_fwd(u, p.ln3_g, p.ln3_b, d, &mut z);
+    let mut z = s.take_any(r * d);
+    let mut stats = s.take_stats();
+    layer_norm_fwd_stats(u, p.ln3_g, p.ln3_b, d, &mut z, &mut stats);
     let sh = AttnShapes { batch: dm_q.batch, sq: dm_q.seq, sk: seq_k, d, nh: dm_q.n_heads };
-    let mut dz = vec![0.0; r * d];
+    let mut dz = s.take(r * d);
     attention_bwd(&z, x_enc, p.cq, p.ck, p.cv, p.co, &sh, false, d_out, &mut dz, dx_enc,
-                  g.cq, g.ck, g.cv, g.co);
+                  g.cq, g.ck, g.cv, g.co, s);
     layer_norm_bwd(&dz, u, p.ln3_g, &stats, d, du, g.ln3_g, g.ln3_b);
+    s.give(dz);
+    s.give(z);
+    s.give_stats(stats);
 }
 
 // ---------------------------------------------------------------------------
-// public step functions
+// public step functions (slice-based `_into` + Tensor wrappers)
 // ---------------------------------------------------------------------------
 
-/// Encoder (or causal decoder-only) step: x' = x + h (φ1(x) + φ2(x + φ1(x))).
-pub fn enc_step_fwd(x: &Tensor, theta: &[f32], h: f32, dm: &RefDims, causal: bool) -> Tensor {
+/// Encoder (or causal decoder-only) step into a caller buffer:
+/// out = x + h (φ1(x) + φ2(x + φ1(x))). `out` is fully overwritten;
+/// allocation-free at steady state given a warm `Scratch`.
+pub fn enc_step_fwd_into(
+    x: &[f32],
+    theta: &[f32],
+    h: f32,
+    dm: &RefDims,
+    causal: bool,
+    out: &mut [f32],
+    s: &mut Scratch,
+) {
     let p = EncParams::view(theta, dm.d_model, dm.d_ff);
     let n = x.len();
-    let mut a = vec![0.0; n];
-    phi1_fwd(x.data(), &p, dm, causal, &mut a);
-    let u: Vec<f32> = x.data().iter().zip(&a).map(|(xv, av)| xv + av).collect();
-    let mut m = vec![0.0; n];
-    phi2_fwd(&u, &p, dm, &mut m);
-    let out: Vec<f32> = x
-        .data()
-        .iter()
-        .zip(a.iter().zip(&m))
-        .map(|(xv, (av, mv))| xv + h * (av + mv))
-        .collect();
-    Tensor::from_vec(out, x.shape())
+    let mut a = s.take_any(n);
+    phi1_fwd(x, &p, dm, causal, &mut a, s);
+    let mut u = s.take_any(n);
+    for i in 0..n {
+        u[i] = x[i] + a[i];
+    }
+    let mut m = s.take_any(n);
+    phi2_fwd(&u, &p, dm, &mut m, s);
+    for i in 0..n {
+        out[i] = x[i] + h * (a[i] + m[i]);
+    }
+    s.give(m);
+    s.give(u);
+    s.give(a);
+}
+
+/// Encoder step: x' = x + h (φ1(x) + φ2(x + φ1(x))).
+pub fn enc_step_fwd(x: &Tensor, theta: &[f32], h: f32, dm: &RefDims, causal: bool) -> Tensor {
+    let mut s = Scratch::new();
+    let mut out = Tensor::zeros(x.shape());
+    enc_step_fwd_into(x.data(), theta, h, dm, causal, out.data_mut(), &mut s);
+    out
+}
+
+/// Encoder step VJP into caller buffers: `dx` is overwritten with
+/// λ = ∂/∂x, `gtheta` is *accumulated* with the parameter gradient.
+#[allow(clippy::too_many_arguments)]
+pub fn enc_step_bwd_into(
+    x: &[f32],
+    theta: &[f32],
+    h: f32,
+    dm: &RefDims,
+    causal: bool,
+    ct: &[f32],
+    dx: &mut [f32],
+    gtheta: &mut [f32],
+    s: &mut Scratch,
+) {
+    let p = EncParams::view(theta, dm.d_model, dm.d_ff);
+    let n = x.len();
+
+    // forward pieces needed: a = φ1(x), u = x + a
+    let mut a = s.take_any(n);
+    phi1_fwd(x, &p, dm, causal, &mut a, s);
+    let mut u = s.take_any(n);
+    for i in 0..n {
+        u[i] = x[i] + a[i];
+    }
+
+    // out = x + h (a + m), m = φ2(u)
+    let mut d_f = s.take_any(n); // gradient into (a + m)
+    for i in 0..n {
+        d_f[i] = h * ct[i];
+    }
+    dx.copy_from_slice(ct); // identity path
+
+    // φ2 path
+    let mut du = s.take(n);
+    {
+        let mut g = EncGrads::view(gtheta, dm.d_model, dm.d_ff);
+        phi2_bwd(&u, &p, &mut g, dm, &d_f, &mut du, s);
+    }
+    // u = x + a
+    for i in 0..n {
+        dx[i] += du[i];
+    }
+    // total gradient into a: direct h·ct + via u
+    let mut da = s.take_any(n);
+    for i in 0..n {
+        da[i] = d_f[i] + du[i];
+    }
+    {
+        let mut g = EncGrads::view(gtheta, dm.d_model, dm.d_ff);
+        phi1_bwd(x, &p, &mut g, dm, causal, &da, dx, s);
+    }
+    s.give(da);
+    s.give(du);
+    s.give(d_f);
+    s.give(u);
+    s.give(a);
 }
 
 /// Encoder step VJP: returns (λ = ∂/∂x, grad_theta) for upstream ct.
@@ -494,37 +573,55 @@ pub fn enc_step_bwd(
     causal: bool,
     ct: &Tensor,
 ) -> (Tensor, Vec<f32>) {
-    let p = EncParams::view(theta, dm.d_model, dm.d_ff);
+    let mut s = Scratch::new();
     let mut gtheta = vec![0.0; theta.len()];
-    let n = x.len();
-
-    // forward pieces needed: a = φ1(x), u = x + a
-    let mut a = vec![0.0; n];
-    phi1_fwd(x.data(), &p, dm, causal, &mut a);
-    let u: Vec<f32> = x.data().iter().zip(&a).map(|(xv, av)| xv + av).collect();
-
-    // out = x + h (a + m), m = φ2(u)
-    let d_out = ct.data();
-    let d_f: Vec<f32> = d_out.iter().map(|v| h * v).collect(); // into (a + m)
-    let mut dx: Vec<f32> = d_out.to_vec(); // identity path
-
-    // φ2 path
-    let mut du = vec![0.0; n];
-    {
-        let mut g = EncGrads::view(&mut gtheta, dm.d_model, dm.d_ff);
-        phi2_bwd(&u, &p, &mut g, dm, &d_f, &mut du);
-    }
-    // u = x + a
-    for i in 0..n {
-        dx[i] += du[i];
-    }
-    // total gradient into a: direct h·ct + via u
-    let da: Vec<f32> = d_f.iter().zip(&du).map(|(dfv, duv)| dfv + duv).collect();
-    {
-        let mut g = EncGrads::view(&mut gtheta, dm.d_model, dm.d_ff);
-        phi1_bwd(x.data(), &p, &mut g, dm, causal, &da, &mut dx);
-    }
+    let mut dx = vec![0.0; x.len()];
+    enc_step_bwd_into(x.data(), theta, h, dm, causal, ct.data(), &mut dx, &mut gtheta, &mut s);
     (Tensor::from_vec(dx, x.shape()), gtheta)
+}
+
+/// Encoder-decoder decoder step into a caller buffer (eq. 2); `out` is
+/// fully overwritten.
+#[allow(clippy::too_many_arguments)]
+pub fn dec_step_fwd_into(
+    y: &[f32],
+    x_enc: &[f32],
+    theta: &[f32],
+    h: f32,
+    dm: &RefDims,
+    seq_enc: usize,
+    out: &mut [f32],
+    s: &mut Scratch,
+) {
+    let p = DecParams::view(theta, dm.d_model, dm.d_ff);
+    let n = y.len();
+    let mut a = s.take_any(n);
+    phi1_fwd(y, &p.enc, dm, true, &mut a, s);
+    let mut u3 = s.take_any(n);
+    for i in 0..n {
+        u3[i] = y[i] + a[i];
+    }
+    let mut c = s.take_any(n);
+    phi3_fwd(&u3, x_enc, &p, dm, seq_enc, &mut c, s);
+    let mut ybar = s.take_any(n);
+    for i in 0..n {
+        ybar[i] = a[i] + c[i];
+    }
+    let mut u2 = s.take_any(n);
+    for i in 0..n {
+        u2[i] = y[i] + ybar[i];
+    }
+    let mut m = s.take_any(n);
+    phi2_fwd(&u2, &p.enc, dm, &mut m, s);
+    for i in 0..n {
+        out[i] = y[i] + h * (ybar[i] + m[i]);
+    }
+    s.give(m);
+    s.give(u2);
+    s.give(ybar);
+    s.give(c);
+    s.give(u3);
+    s.give(a);
 }
 
 /// Encoder-decoder decoder step (eq. 2).
@@ -536,24 +633,100 @@ pub fn dec_step_fwd(
     dm: &RefDims,
     seq_enc: usize,
 ) -> Tensor {
+    let mut s = Scratch::new();
+    let mut out = Tensor::zeros(y.shape());
+    dec_step_fwd_into(y.data(), x_enc.data(), theta, h, dm, seq_enc, out.data_mut(), &mut s);
+    out
+}
+
+/// Decoder step VJP into caller buffers: `dy` and `dx_enc` are
+/// overwritten (λ_y, λ_x_enc); `gtheta` is *accumulated*.
+#[allow(clippy::too_many_arguments)]
+pub fn dec_step_bwd_into(
+    y: &[f32],
+    x_enc: &[f32],
+    theta: &[f32],
+    h: f32,
+    dm: &RefDims,
+    seq_enc: usize,
+    ct: &[f32],
+    dy: &mut [f32],
+    dx_enc: &mut [f32],
+    gtheta: &mut [f32],
+    s: &mut Scratch,
+) {
     let p = DecParams::view(theta, dm.d_model, dm.d_ff);
     let n = y.len();
-    let mut a = vec![0.0; n];
-    phi1_fwd(y.data(), &p.enc, dm, true, &mut a);
-    let u3: Vec<f32> = y.data().iter().zip(&a).map(|(yv, av)| yv + av).collect();
-    let mut c = vec![0.0; n];
-    phi3_fwd(&u3, x_enc.data(), &p, dm, seq_enc, &mut c);
-    let ybar: Vec<f32> = a.iter().zip(&c).map(|(av, cv)| av + cv).collect();
-    let u2: Vec<f32> = y.data().iter().zip(&ybar).map(|(yv, bv)| yv + bv).collect();
-    let mut m = vec![0.0; n];
-    phi2_fwd(&u2, &p.enc, dm, &mut m);
-    let out: Vec<f32> = y
-        .data()
-        .iter()
-        .zip(ybar.iter().zip(&m))
-        .map(|(yv, (bv, mv))| yv + h * (bv + mv))
-        .collect();
-    Tensor::from_vec(out, y.shape())
+
+    // recompute forward pieces
+    let mut a = s.take_any(n);
+    phi1_fwd(y, &p.enc, dm, true, &mut a, s);
+    let mut u3 = s.take_any(n);
+    for i in 0..n {
+        u3[i] = y[i] + a[i];
+    }
+    let mut c = s.take_any(n);
+    phi3_fwd(&u3, x_enc, &p, dm, seq_enc, &mut c, s);
+    let mut ybar = s.take_any(n);
+    for i in 0..n {
+        ybar[i] = a[i] + c[i];
+    }
+    let mut u2 = s.take_any(n);
+    for i in 0..n {
+        u2[i] = y[i] + ybar[i];
+    }
+
+    // out = y + h (ybar + m)
+    let mut d_f = s.take_any(n);
+    for i in 0..n {
+        d_f[i] = h * ct[i];
+    }
+    dy.copy_from_slice(ct);
+    dx_enc.fill(0.0);
+
+    // φ2 path at u2
+    let mut du2 = s.take(n);
+    {
+        let mut g = DecGrads::view(gtheta, dm.d_model, dm.d_ff);
+        phi2_bwd(&u2, &p.enc, &mut g.enc, dm, &d_f, &mut du2, s);
+    }
+    for i in 0..n {
+        dy[i] += du2[i];
+    }
+    // d_ybar = h·ct (direct) + du2 (via u2)
+    let mut d_ybar = s.take_any(n);
+    for i in 0..n {
+        d_ybar[i] = d_f[i] + du2[i];
+    }
+
+    // ybar = a + φ3(u3, x_enc):  d_a += d_ybar;  φ3 gets d_ybar
+    let mut du3 = s.take(n);
+    {
+        let mut g = DecGrads::view(gtheta, dm.d_model, dm.d_ff);
+        phi3_bwd(&u3, x_enc, &p, &mut g, dm, seq_enc, &d_ybar, &mut du3, dx_enc, s);
+    }
+    // u3 = y + a
+    for i in 0..n {
+        dy[i] += du3[i];
+    }
+    let mut da = s.take_any(n);
+    for i in 0..n {
+        da[i] = d_ybar[i] + du3[i];
+    }
+    {
+        let mut g = DecGrads::view(gtheta, dm.d_model, dm.d_ff);
+        phi1_bwd(y, &p.enc, &mut g.enc, dm, true, &da, dy, s);
+    }
+    s.give(da);
+    s.give(du3);
+    s.give(d_ybar);
+    s.give(du2);
+    s.give(d_f);
+    s.give(u2);
+    s.give(ybar);
+    s.give(c);
+    s.give(u3);
+    s.give(a);
 }
 
 /// Decoder step VJP: returns (λ_y, λ_x_enc, grad_theta).
@@ -566,52 +739,23 @@ pub fn dec_step_bwd(
     seq_enc: usize,
     ct: &Tensor,
 ) -> (Tensor, Tensor, Vec<f32>) {
-    let p = DecParams::view(theta, dm.d_model, dm.d_ff);
+    let mut s = Scratch::new();
     let mut gtheta = vec![0.0; theta.len()];
-    let n = y.len();
-
-    // recompute forward pieces
-    let mut a = vec![0.0; n];
-    phi1_fwd(y.data(), &p.enc, dm, true, &mut a);
-    let u3: Vec<f32> = y.data().iter().zip(&a).map(|(yv, av)| yv + av).collect();
-    let mut c = vec![0.0; n];
-    phi3_fwd(&u3, x_enc.data(), &p, dm, seq_enc, &mut c);
-    let ybar: Vec<f32> = a.iter().zip(&c).map(|(av, cv)| av + cv).collect();
-    let u2: Vec<f32> = y.data().iter().zip(&ybar).map(|(yv, bv)| yv + bv).collect();
-
-    // out = y + h (ybar + m)
-    let d_out = ct.data();
-    let d_f: Vec<f32> = d_out.iter().map(|v| h * v).collect();
-    let mut dy: Vec<f32> = d_out.to_vec();
+    let mut dy = vec![0.0; y.len()];
     let mut dx_enc = vec![0.0; x_enc.len()];
-
-    // φ2 path at u2
-    let mut du2 = vec![0.0; n];
-    {
-        let mut g = DecGrads::view(&mut gtheta, dm.d_model, dm.d_ff);
-        phi2_bwd(&u2, &p.enc, &mut g.enc, dm, &d_f, &mut du2);
-    }
-    for i in 0..n {
-        dy[i] += du2[i];
-    }
-    // d_ybar = h·ct (direct) + du2 (via u2)
-    let d_ybar: Vec<f32> = d_f.iter().zip(&du2).map(|(a2, b2)| a2 + b2).collect();
-
-    // ybar = a + φ3(u3, x_enc):  d_a += d_ybar;  φ3 gets d_ybar
-    let mut du3 = vec![0.0; n];
-    {
-        let mut g = DecGrads::view(&mut gtheta, dm.d_model, dm.d_ff);
-        phi3_bwd(&u3, x_enc.data(), &p, &mut g, dm, seq_enc, &d_ybar, &mut du3, &mut dx_enc);
-    }
-    // u3 = y + a
-    for i in 0..n {
-        dy[i] += du3[i];
-    }
-    let da: Vec<f32> = d_ybar.iter().zip(&du3).map(|(a2, b2)| a2 + b2).collect();
-    {
-        let mut g = DecGrads::view(&mut gtheta, dm.d_model, dm.d_ff);
-        phi1_bwd(y.data(), &p.enc, &mut g.enc, dm, true, &da, &mut dy);
-    }
+    dec_step_bwd_into(
+        y.data(),
+        x_enc.data(),
+        theta,
+        h,
+        dm,
+        seq_enc,
+        ct.data(),
+        &mut dy,
+        &mut dx_enc,
+        &mut gtheta,
+        &mut s,
+    );
     (
         Tensor::from_vec(dy, y.shape()),
         Tensor::from_vec(dx_enc, x_enc.shape()),
@@ -657,6 +801,56 @@ mod tests {
         let mut d2 = enc_step_fwd(&x, &theta, 0.2, &dm, false).sub(&x);
         d2.scale(0.5);
         assert!(d1.allclose(&d2, 1e-4, 1e-5));
+    }
+
+    #[test]
+    fn into_variants_match_wrappers_bitwise_and_reuse_scratch() {
+        // one warm Scratch reused across calls must reproduce the
+        // allocating wrappers bit for bit, with `out` pre-filled with
+        // garbage (pins the full-overwrite contract)
+        let dm = dims();
+        let mut rng = Rng::new(42);
+        let mut s = Scratch::new();
+        for trial in 0..3 {
+            let x = Tensor::randn(&mut rng, &[dm.batch, dm.seq, dm.d_model], 1.0);
+            let theta = rng.normal_vec(p_enc(&dm), 0.2);
+            let ct = Tensor::randn(&mut rng, &[dm.batch, dm.seq, dm.d_model], 1.0);
+            let h = 0.3 + 0.1 * trial as f32;
+
+            let want = enc_step_fwd(&x, &theta, h, &dm, true);
+            let mut out = vec![f32::NAN; x.len()];
+            enc_step_fwd_into(x.data(), &theta, h, &dm, true, &mut out, &mut s);
+            assert_eq!(out, want.data());
+
+            let (wdx, wgt) = enc_step_bwd(&x, &theta, h, &dm, true, &ct);
+            let mut dx = vec![f32::NAN; x.len()];
+            let mut gt = vec![0.0; theta.len()];
+            enc_step_bwd_into(x.data(), &theta, h, &dm, true, ct.data(), &mut dx, &mut gt, &mut s);
+            assert_eq!(dx, wdx.data());
+            assert_eq!(gt, wgt);
+
+            // decoder family
+            let seq_enc = 5;
+            let thd = rng.normal_vec(p_dec(&dm), 0.2);
+            let y = Tensor::randn(&mut rng, &[dm.batch, dm.seq, dm.d_model], 1.0);
+            let xe = Tensor::randn(&mut rng, &[dm.batch, seq_enc, dm.d_model], 1.0);
+            let want = dec_step_fwd(&y, &xe, &thd, h, &dm, seq_enc);
+            let mut out = vec![f32::NAN; y.len()];
+            dec_step_fwd_into(y.data(), xe.data(), &thd, h, &dm, seq_enc, &mut out, &mut s);
+            assert_eq!(out, want.data());
+
+            let (wdy, wdxe, wgt) = dec_step_bwd(&y, &xe, &thd, h, &dm, seq_enc, &ct);
+            let mut dy = vec![f32::NAN; y.len()];
+            let mut dxe = vec![f32::NAN; xe.len()];
+            let mut gt = vec![0.0; thd.len()];
+            dec_step_bwd_into(
+                y.data(), xe.data(), &thd, h, &dm, seq_enc, ct.data(),
+                &mut dy, &mut dxe, &mut gt, &mut s,
+            );
+            assert_eq!(dy, wdy.data());
+            assert_eq!(dxe, wdxe.data());
+            assert_eq!(gt, wgt.as_slice());
+        }
     }
 
     #[test]

@@ -19,19 +19,35 @@ pub fn gelu_grad(x: f32) -> f32 {
     0.5 * (1.0 + t) + 0.5 * x * (1.0 - t * t) * C * (1.0 + 3.0 * A * x * x)
 }
 
-/// LayerNorm forward over rows of length `d`.
-///
-/// Writes the normalized output into `out` and returns `(mu, inv_sigma)`
-/// per row for the backward pass.
-pub fn layer_norm_fwd(
+/// LayerNorm forward over rows of length `d`, no stats capture (the hot
+/// forward path — allocation-free).
+pub fn layer_norm_fwd_into(x: &[f32], g: &[f32], b: &[f32], d: usize, out: &mut [f32]) {
+    let rows = x.len() / d;
+    for r in 0..rows {
+        let xr = &x[r * d..(r + 1) * d];
+        let or = &mut out[r * d..(r + 1) * d];
+        let mu = xr.iter().sum::<f32>() / d as f32;
+        let var = xr.iter().map(|v| (v - mu) * (v - mu)).sum::<f32>() / d as f32;
+        let inv = 1.0 / (var + LN_EPS).sqrt();
+        for i in 0..d {
+            or[i] = (xr[i] - mu) * inv * g[i] + b[i];
+        }
+    }
+}
+
+/// LayerNorm forward capturing per-row `(mu, inv_sigma)` into a reusable
+/// buffer (cleared first) for the backward pass.
+pub fn layer_norm_fwd_stats(
     x: &[f32],
     g: &[f32],
     b: &[f32],
     d: usize,
     out: &mut [f32],
-) -> Vec<(f32, f32)> {
+    stats: &mut Vec<(f32, f32)>,
+) {
     let rows = x.len() / d;
-    let mut stats = Vec::with_capacity(rows);
+    stats.clear();
+    stats.reserve(rows);
     for r in 0..rows {
         let xr = &x[r * d..(r + 1) * d];
         let or = &mut out[r * d..(r + 1) * d];
@@ -43,6 +59,22 @@ pub fn layer_norm_fwd(
         }
         stats.push((mu, inv));
     }
+}
+
+/// LayerNorm forward over rows of length `d`.
+///
+/// Writes the normalized output into `out` and returns `(mu, inv_sigma)`
+/// per row for the backward pass. Allocates the stats vector; hot paths
+/// use [`layer_norm_fwd_into`] / [`layer_norm_fwd_stats`] instead.
+pub fn layer_norm_fwd(
+    x: &[f32],
+    g: &[f32],
+    b: &[f32],
+    d: usize,
+    out: &mut [f32],
+) -> Vec<(f32, f32)> {
+    let mut stats = Vec::new();
+    layer_norm_fwd_stats(x, g, b, d, out, &mut stats);
     stats
 }
 

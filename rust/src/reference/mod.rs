@@ -16,7 +16,14 @@
 mod block;
 mod math;
 mod params;
+mod scratch;
 
-pub use block::{dec_step_bwd, dec_step_fwd, enc_step_bwd, enc_step_fwd, RefDims};
-pub use math::{gelu, gelu_grad, layer_norm_bwd, layer_norm_fwd};
+pub use block::{
+    dec_step_bwd, dec_step_bwd_into, dec_step_fwd, dec_step_fwd_into, enc_step_bwd,
+    enc_step_bwd_into, enc_step_fwd, enc_step_fwd_into, RefDims,
+};
+pub use math::{
+    gelu, gelu_grad, layer_norm_bwd, layer_norm_fwd, layer_norm_fwd_into, layer_norm_fwd_stats,
+};
 pub use params::{DecGrads, DecParams, EncGrads, EncParams};
+pub use scratch::Scratch;

@@ -46,23 +46,28 @@ pub fn dec_extra_sizes(d: usize) -> [usize; 6] {
     [d, d, d * d, d * d, d * d, d * d]
 }
 
-fn split<'a>(theta: &'a [f32], sizes: &[usize]) -> Vec<&'a [f32]> {
-    let mut out = Vec::with_capacity(sizes.len());
+/// Split a flat θ into per-field slices. Fixed-size output (no heap
+/// allocation — these views sit on the zero-allocation Φ hot path).
+fn split<'a, const N: usize>(theta: &'a [f32], sizes: &[usize; N]) -> [&'a [f32]; N] {
+    let mut out: [&'a [f32]; N] = [&[]; N];
     let mut off = 0;
-    for &s in sizes {
-        out.push(&theta[off..off + s]);
+    for (o, &s) in out.iter_mut().zip(sizes.iter()) {
+        *o = &theta[off..off + s];
         off += s;
     }
     assert_eq!(off, theta.len(), "parameter vector length mismatch");
     out
 }
 
-fn split_mut<'a>(theta: &'a mut [f32], sizes: &[usize]) -> Vec<&'a mut [f32]> {
-    let mut out = Vec::with_capacity(sizes.len());
+fn split_mut<'a, const N: usize>(
+    theta: &'a mut [f32],
+    sizes: &[usize; N],
+) -> [&'a mut [f32]; N] {
+    let mut out: [&'a mut [f32]; N] = std::array::from_fn(|_| Default::default());
     let mut rest = theta;
-    for &s in sizes {
+    for (o, &s) in out.iter_mut().zip(sizes.iter()) {
         let (head, tail) = rest.split_at_mut(s);
-        out.push(head);
+        *o = head;
         rest = tail;
     }
     assert!(rest.is_empty(), "parameter vector length mismatch");
@@ -71,21 +76,9 @@ fn split_mut<'a>(theta: &'a mut [f32], sizes: &[usize]) -> Vec<&'a mut [f32]> {
 
 impl<'a> EncParams<'a> {
     pub fn view(theta: &'a [f32], d: usize, f: usize) -> EncParams<'a> {
-        let v = split(theta, &enc_field_sizes(d, f));
-        EncParams {
-            ln1_g: v[0],
-            ln1_b: v[1],
-            wq: v[2],
-            wk: v[3],
-            wv: v[4],
-            wo: v[5],
-            ln2_g: v[6],
-            ln2_b: v[7],
-            w1: v[8],
-            b1: v[9],
-            w2: v[10],
-            b2: v[11],
-        }
+        let [ln1_g, ln1_b, wq, wk, wv, wo, ln2_g, ln2_b, w1, b1, w2, b2] =
+            split(theta, &enc_field_sizes(d, f));
+        EncParams { ln1_g, ln1_b, wq, wk, wv, wo, ln2_g, ln2_b, w1, b1, w2, b2 }
     }
 }
 
@@ -107,23 +100,9 @@ pub struct EncGrads<'a> {
 
 impl<'a> EncGrads<'a> {
     pub fn view(theta: &'a mut [f32], d: usize, f: usize) -> EncGrads<'a> {
-        let mut v = split_mut(theta, &enc_field_sizes(d, f));
-        // drain in order to move the mutable borrows out of the Vec
-        let mut it = v.drain(..);
-        EncGrads {
-            ln1_g: it.next().unwrap(),
-            ln1_b: it.next().unwrap(),
-            wq: it.next().unwrap(),
-            wk: it.next().unwrap(),
-            wv: it.next().unwrap(),
-            wo: it.next().unwrap(),
-            ln2_g: it.next().unwrap(),
-            ln2_b: it.next().unwrap(),
-            w1: it.next().unwrap(),
-            b1: it.next().unwrap(),
-            w2: it.next().unwrap(),
-            b2: it.next().unwrap(),
-        }
+        let [ln1_g, ln1_b, wq, wk, wv, wo, ln2_g, ln2_b, w1, b1, w2, b2] =
+            split_mut(theta, &enc_field_sizes(d, f));
+        EncGrads { ln1_g, ln1_b, wq, wk, wv, wo, ln2_g, ln2_b, w1, b1, w2, b2 }
     }
 }
 
@@ -131,8 +110,8 @@ impl<'a> DecParams<'a> {
     pub fn view(theta: &'a [f32], d: usize, f: usize) -> DecParams<'a> {
         let enc_len: usize = enc_field_sizes(d, f).iter().sum();
         let enc = EncParams::view(&theta[..enc_len], d, f);
-        let v = split(&theta[enc_len..], &dec_extra_sizes(d));
-        DecParams { enc, ln3_g: v[0], ln3_b: v[1], cq: v[2], ck: v[3], cv: v[4], co: v[5] }
+        let [ln3_g, ln3_b, cq, ck, cv, co] = split(&theta[enc_len..], &dec_extra_sizes(d));
+        DecParams { enc, ln3_g, ln3_b, cq, ck, cv, co }
     }
 }
 
@@ -152,17 +131,8 @@ impl<'a> DecGrads<'a> {
         let enc_len: usize = enc_field_sizes(d, f).iter().sum();
         let (enc_part, rest) = theta.split_at_mut(enc_len);
         let enc = EncGrads::view(enc_part, d, f);
-        let mut v = split_mut(rest, &dec_extra_sizes(d));
-        let mut it = v.drain(..);
-        DecGrads {
-            enc,
-            ln3_g: it.next().unwrap(),
-            ln3_b: it.next().unwrap(),
-            cq: it.next().unwrap(),
-            ck: it.next().unwrap(),
-            cv: it.next().unwrap(),
-            co: it.next().unwrap(),
-        }
+        let [ln3_g, ln3_b, cq, ck, cv, co] = split_mut(rest, &dec_extra_sizes(d));
+        DecGrads { enc, ln3_g, ln3_b, cq, ck, cv, co }
     }
 }
 

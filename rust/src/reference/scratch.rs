@@ -1,0 +1,128 @@
+//! Reusable workspace for the reference-transformer kernels.
+//!
+//! Every Φ forward/backward needs a handful of temporaries (projections,
+//! attention scores, FFN activations, adjoint partials). Allocating them
+//! per call dominated the pre-optimization profile, so [`Scratch`] keeps a
+//! LIFO pool of `Vec<f32>` buffers (plus a small pool of LayerNorm stat
+//! vectors): `take(len)` pops a buffer, zero-fills it to `len`, and hands
+//! it out; `give` returns it. Because every Φ application requests the
+//! same buffer lengths in the same order, capacities stabilize after the
+//! first couple of calls and the steady state performs **zero heap
+//! allocations** (pinned by `rust/tests/alloc_audit.rs`).
+//!
+//! A `Scratch` is *not* shared across threads — each relaxation worker
+//! checks one out of the propagator's pool (see
+//! [`crate::ode::RustPropagator`]).
+
+/// LIFO buffer pool for the Φ hot path.
+#[derive(Debug, Default)]
+pub struct Scratch {
+    bufs: Vec<Vec<f32>>,
+    stats: Vec<Vec<(f32, f32)>>,
+}
+
+impl Scratch {
+    pub fn new() -> Scratch {
+        Scratch::default()
+    }
+
+    /// Check out a zero-filled buffer of exactly `len` elements (for
+    /// accumulation targets).
+    pub fn take(&mut self, len: usize) -> Vec<f32> {
+        let mut v = self.bufs.pop().unwrap_or_default();
+        v.clear();
+        v.resize(len, 0.0);
+        v
+    }
+
+    /// Check out a buffer of `len` elements with **unspecified contents**,
+    /// for consumers that fully overwrite it — skips `take`'s memset on
+    /// the hot path. Using this for a buffer that is only accumulated into
+    /// is a determinism bug; the bitwise `_into`-vs-wrapper property tests
+    /// catch such misuse because the wrappers run on a fresh (all-zero)
+    /// workspace while the hot path sees recycled contents.
+    pub fn take_any(&mut self, len: usize) -> Vec<f32> {
+        let mut v = self.bufs.pop().unwrap_or_default();
+        if v.len() > len {
+            v.truncate(len);
+        } else {
+            v.resize(len, 0.0);
+        }
+        v
+    }
+
+    /// Return a buffer to the pool (its capacity is what gets reused).
+    pub fn give(&mut self, v: Vec<f32>) {
+        self.bufs.push(v);
+    }
+
+    /// Check out a cleared LayerNorm-stats buffer.
+    pub fn take_stats(&mut self) -> Vec<(f32, f32)> {
+        let mut v = self.stats.pop().unwrap_or_default();
+        v.clear();
+        v
+    }
+
+    /// Return a stats buffer to the pool.
+    pub fn give_stats(&mut self, v: Vec<(f32, f32)>) {
+        self.stats.push(v);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn take_zeroes_and_reuses_capacity() {
+        let mut s = Scratch::new();
+        let mut a = s.take(8);
+        a.iter_mut().for_each(|v| *v = 7.0);
+        let cap = a.capacity();
+        let ptr = a.as_ptr();
+        s.give(a);
+        let b = s.take(4);
+        assert_eq!(b, vec![0.0; 4], "reused buffer must be zeroed");
+        assert_eq!(b.as_ptr(), ptr, "same allocation must be reused");
+        assert!(b.capacity() >= 4 && cap >= 8);
+    }
+
+    #[test]
+    fn lifo_order_matches_nested_use() {
+        let mut s = Scratch::new();
+        let a = s.take(16);
+        let b = s.take(4);
+        s.give(b);
+        s.give(a);
+        // next taker of a 16-length buffer gets the 16-capacity one back
+        let c = s.take(16);
+        assert!(c.capacity() >= 16);
+        s.give(c);
+    }
+
+    #[test]
+    fn take_any_skips_the_memset_but_sizes_correctly() {
+        let mut s = Scratch::new();
+        let mut a = s.take(8);
+        a.iter_mut().for_each(|v| *v = 3.0);
+        s.give(a);
+        // shrink: old contents retained (unspecified but deterministic)
+        let b = s.take_any(4);
+        assert_eq!(b.len(), 4);
+        assert_eq!(b, vec![3.0; 4]);
+        s.give(b);
+        // grow: appended elements are zeroed, prefix retained
+        let c = s.take_any(6);
+        assert_eq!(c, vec![3.0, 3.0, 3.0, 3.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn stats_pool_round_trips() {
+        let mut s = Scratch::new();
+        let mut st = s.take_stats();
+        st.push((1.0, 2.0));
+        s.give_stats(st);
+        let st2 = s.take_stats();
+        assert!(st2.is_empty(), "stats buffers are cleared on take");
+    }
+}

@@ -5,5 +5,8 @@
 mod ops;
 mod tensor;
 
-pub use ops::{matmul, matmul_at, matmul_bt, softmax_rows};
+pub use ops::{
+    matmul, matmul_at, matmul_at_into, matmul_bt, matmul_bt_into, matmul_into, mm_at_into,
+    mm_bt_into, mm_into, softmax_rows,
+};
 pub use tensor::Tensor;

@@ -1,34 +1,203 @@
 //! Matrix / reduction kernels for the pure-Rust reference transformer.
 //!
-//! These are deliberately simple row-major loops (with a k-blocked inner
-//! loop for cache friendliness); the *production* hot path runs in XLA via
-//! the AOT artifacts — these ops exist so algorithms are testable without
-//! artifacts and to power the Lipschitz/analysis tooling.
+//! With `rust/vendor/xla` as an offline stub these kernels ARE the
+//! production hot path, so they are written for throughput:
+//!
+//! * Slice-level `mm_into` / `mm_at_into` / `mm_bt_into` kernels write into
+//!   caller-provided buffers (the buffer-reuse contract: `out` must have
+//!   exactly `m*n` elements; with `acc = false` it is fully overwritten, so
+//!   it need not be zeroed) — no per-call heap allocation.
+//! * `mm_into` processes four output rows per pass so every row of `b` is
+//!   streamed once per four rows of `a` (register/cache blocking), and
+//!   `mm_at_into` batches four k-steps per pass over `out`.
+//! * Inner loops are branch-free: the old `av == 0.0` skip is gone. It
+//!   defeated autovectorization *and* was an IEEE-correctness bug — skipping
+//!   a row dropped `0.0 * NaN = NaN` / `0.0 * inf = NaN` propagation. The
+//!   property tests below pin kernel outputs against a naive triple loop.
+//!
+//! Numerical contract: `mm_into` and `mm_at_into` accumulate each output
+//! element over `k` in ascending order with one rounding per term — bitwise
+//! identical to the naive `i,j,k` triple loop. `mm_bt_into` runs its dot
+//! products over eight partial lanes (a vectorizable reduction), which
+//! reassociates the sum: results agree with the naive loop to relative
+//! rounding error, and IEEE specials (NaN/inf) still propagate.
+//!
+//! The Tensor-level wrappers (`matmul*`, `matmul*_into`) add shape checks;
+//! the `*_into` forms are the hot-path entry points used by
+//! [`crate::reference`].
 
 use super::Tensor;
+
+/// out (+)= a[m,k] @ b[k,n] (row-major slices).
+///
+/// Bitwise identical to the naive triple loop (ascending-k accumulation).
+pub fn mm_into(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, out: &mut [f32], acc: bool) {
+    debug_assert_eq!(a.len(), m * k, "mm_into: a length");
+    debug_assert_eq!(b.len(), k * n, "mm_into: b length");
+    debug_assert_eq!(out.len(), m * n, "mm_into: out length");
+    if !acc {
+        out.fill(0.0);
+    }
+    if m == 0 || n == 0 {
+        return;
+    }
+    // Four output rows per pass: one streamed read of b serves four rows
+    // of a, quadrupling arithmetic intensity over row-at-a-time.
+    let mut blocks = out.chunks_exact_mut(4 * n);
+    let mut i = 0;
+    for oblock in blocks.by_ref() {
+        let (o0, rest) = oblock.split_at_mut(n);
+        let (o1, rest) = rest.split_at_mut(n);
+        let (o2, o3) = rest.split_at_mut(n);
+        let a0 = &a[i * k..(i + 1) * k];
+        let a1 = &a[(i + 1) * k..(i + 2) * k];
+        let a2 = &a[(i + 2) * k..(i + 3) * k];
+        let a3 = &a[(i + 3) * k..(i + 4) * k];
+        for kk in 0..k {
+            let brow = &b[kk * n..(kk + 1) * n];
+            let (v0, v1, v2, v3) = (a0[kk], a1[kk], a2[kk], a3[kk]);
+            for j in 0..n {
+                let bv = brow[j];
+                o0[j] += v0 * bv;
+                o1[j] += v1 * bv;
+                o2[j] += v2 * bv;
+                o3[j] += v3 * bv;
+            }
+        }
+        i += 4;
+    }
+    for orow in blocks.into_remainder().chunks_exact_mut(n) {
+        let arow = &a[i * k..(i + 1) * k];
+        for (kk, &av) in arow.iter().enumerate() {
+            let brow = &b[kk * n..(kk + 1) * n];
+            for (o, &bv) in orow.iter_mut().zip(brow) {
+                *o += av * bv;
+            }
+        }
+        i += 1;
+    }
+}
+
+/// out (+)= aᵀ @ b where a is stored [k,m], b is [k,n] → out [m,n]
+/// (weight-gradient helper).
+///
+/// Bitwise identical to the naive triple loop: the four-step unroll only
+/// batches row loads — each output element still receives one rounded
+/// addition per k term, in ascending k order.
+pub fn mm_at_into(a: &[f32], b: &[f32], k: usize, m: usize, n: usize, out: &mut [f32], acc: bool) {
+    debug_assert_eq!(a.len(), k * m, "mm_at_into: a length");
+    debug_assert_eq!(b.len(), k * n, "mm_at_into: b length");
+    debug_assert_eq!(out.len(), m * n, "mm_at_into: out length");
+    if !acc {
+        out.fill(0.0);
+    }
+    if m == 0 || n == 0 {
+        return;
+    }
+    let mut kk = 0;
+    while kk + 4 <= k {
+        let a0 = &a[kk * m..(kk + 1) * m];
+        let a1 = &a[(kk + 1) * m..(kk + 2) * m];
+        let a2 = &a[(kk + 2) * m..(kk + 3) * m];
+        let a3 = &a[(kk + 3) * m..(kk + 4) * m];
+        let b0 = &b[kk * n..(kk + 1) * n];
+        let b1 = &b[(kk + 1) * n..(kk + 2) * n];
+        let b2 = &b[(kk + 2) * n..(kk + 3) * n];
+        let b3 = &b[(kk + 3) * n..(kk + 4) * n];
+        for i in 0..m {
+            let (v0, v1, v2, v3) = (a0[i], a1[i], a2[i], a3[i]);
+            let orow = &mut out[i * n..(i + 1) * n];
+            for j in 0..n {
+                let mut o = orow[j];
+                o += v0 * b0[j];
+                o += v1 * b1[j];
+                o += v2 * b2[j];
+                o += v3 * b3[j];
+                orow[j] = o;
+            }
+        }
+        kk += 4;
+    }
+    while kk < k {
+        let arow = &a[kk * m..(kk + 1) * m];
+        let brow = &b[kk * n..(kk + 1) * n];
+        for (i, &av) in arow.iter().enumerate() {
+            let orow = &mut out[i * n..(i + 1) * n];
+            for (o, &bv) in orow.iter_mut().zip(brow) {
+                *o += av * bv;
+            }
+        }
+        kk += 1;
+    }
+}
+
+/// Eight-lane dot product (vectorizable reduction). Reassociates the sum
+/// order; NaN/inf inputs still poison the result per IEEE semantics.
+#[inline]
+fn dot_lanes(x: &[f32], y: &[f32]) -> f32 {
+    debug_assert_eq!(x.len(), y.len());
+    let split = x.len() - x.len() % 8;
+    let (xh, xt) = x.split_at(split);
+    let (yh, yt) = y.split_at(split);
+    let mut lanes = [0.0f32; 8];
+    for (xc, yc) in xh.chunks_exact(8).zip(yh.chunks_exact(8)) {
+        for l in 0..8 {
+            lanes[l] += xc[l] * yc[l];
+        }
+    }
+    let mut tail = 0.0f32;
+    for (xv, yv) in xt.iter().zip(yt) {
+        tail += xv * yv;
+    }
+    let head = ((lanes[0] + lanes[1]) + (lanes[2] + lanes[3]))
+        + ((lanes[4] + lanes[5]) + (lanes[6] + lanes[7]));
+    head + tail
+}
+
+/// out (+)= a @ bᵀ where a is [m,k], b is stored [n,k] → out [m,n]
+/// (attention scores / input-gradient helper).
+pub fn mm_bt_into(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, out: &mut [f32], acc: bool) {
+    debug_assert_eq!(a.len(), m * k, "mm_bt_into: a length");
+    debug_assert_eq!(b.len(), n * k, "mm_bt_into: b length");
+    debug_assert_eq!(out.len(), m * n, "mm_bt_into: out length");
+    if !acc {
+        out.fill(0.0);
+    }
+    for i in 0..m {
+        let arow = &a[i * k..(i + 1) * k];
+        let orow = &mut out[i * n..(i + 1) * n];
+        for (j, o) in orow.iter_mut().enumerate() {
+            *o += dot_lanes(arow, &b[j * k..(j + 1) * k]);
+        }
+    }
+}
+
+/// c[m,n] = a[m,k] @ b[k,n], writing into `out` (shape-checked).
+pub fn matmul_into(a: &Tensor, b: &Tensor, out: &mut Tensor) {
+    let (m, k) = (a.shape()[0], a.shape()[1]);
+    let (k2, n) = (b.shape()[0], b.shape()[1]);
+    assert_eq!(k, k2, "matmul inner dim mismatch");
+    assert_eq!(out.len(), m * n, "matmul out size mismatch");
+    mm_into(a.data(), b.data(), m, k, n, out.data_mut(), false);
+}
 
 /// c[m,n] = a[m,k] @ b[k,n]
 pub fn matmul(a: &Tensor, b: &Tensor) -> Tensor {
     let (m, k) = (a.shape()[0], a.shape()[1]);
     let (k2, n) = (b.shape()[0], b.shape()[1]);
     assert_eq!(k, k2, "matmul inner dim mismatch");
-    let mut c = vec![0.0f32; m * n];
-    let ad = a.data();
-    let bd = b.data();
-    for i in 0..m {
-        let arow = &ad[i * k..(i + 1) * k];
-        let crow = &mut c[i * n..(i + 1) * n];
-        for (kk, &av) in arow.iter().enumerate() {
-            if av == 0.0 {
-                continue;
-            }
-            let brow = &bd[kk * n..(kk + 1) * n];
-            for (cv, &bv) in crow.iter_mut().zip(brow.iter()) {
-                *cv += av * bv;
-            }
-        }
-    }
-    Tensor::from_vec(c, &[m, n])
+    let mut c = Tensor::zeros(&[m, n]);
+    mm_into(a.data(), b.data(), m, k, n, c.data_mut(), false);
+    c
+}
+
+/// c[m,n] = aᵀ[m,k] @ b[k,n] where a is stored [k,m], writing into `out`.
+pub fn matmul_at_into(a: &Tensor, b: &Tensor, out: &mut Tensor) {
+    let (k, m) = (a.shape()[0], a.shape()[1]);
+    let (k2, n) = (b.shape()[0], b.shape()[1]);
+    assert_eq!(k, k2, "matmul_at inner dim mismatch");
+    assert_eq!(out.len(), m * n, "matmul_at out size mismatch");
+    mm_at_into(a.data(), b.data(), k, m, n, out.data_mut(), false);
 }
 
 /// c[m,n] = aᵀ[m,k] @ b[k,n]  where a is stored [k,m] (gradient helper).
@@ -36,23 +205,18 @@ pub fn matmul_at(a: &Tensor, b: &Tensor) -> Tensor {
     let (k, m) = (a.shape()[0], a.shape()[1]);
     let (k2, n) = (b.shape()[0], b.shape()[1]);
     assert_eq!(k, k2, "matmul_at inner dim mismatch");
-    let mut c = vec![0.0f32; m * n];
-    let ad = a.data();
-    let bd = b.data();
-    for kk in 0..k {
-        let arow = &ad[kk * m..(kk + 1) * m];
-        let brow = &bd[kk * n..(kk + 1) * n];
-        for (i, &av) in arow.iter().enumerate() {
-            if av == 0.0 {
-                continue;
-            }
-            let crow = &mut c[i * n..(i + 1) * n];
-            for (cv, &bv) in crow.iter_mut().zip(brow.iter()) {
-                *cv += av * bv;
-            }
-        }
-    }
-    Tensor::from_vec(c, &[m, n])
+    let mut c = Tensor::zeros(&[m, n]);
+    mm_at_into(a.data(), b.data(), k, m, n, c.data_mut(), false);
+    c
+}
+
+/// c[m,n] = a[m,k] @ bᵀ[k,n] where b is stored [n,k], writing into `out`.
+pub fn matmul_bt_into(a: &Tensor, b: &Tensor, out: &mut Tensor) {
+    let (m, k) = (a.shape()[0], a.shape()[1]);
+    let (n, k2) = (b.shape()[0], b.shape()[1]);
+    assert_eq!(k, k2, "matmul_bt inner dim mismatch");
+    assert_eq!(out.len(), m * n, "matmul_bt out size mismatch");
+    mm_bt_into(a.data(), b.data(), m, k, n, out.data_mut(), false);
 }
 
 /// c[m,n] = a[m,k] @ bᵀ[k,n]  where b is stored [n,k] (gradient helper).
@@ -60,21 +224,9 @@ pub fn matmul_bt(a: &Tensor, b: &Tensor) -> Tensor {
     let (m, k) = (a.shape()[0], a.shape()[1]);
     let (n, k2) = (b.shape()[0], b.shape()[1]);
     assert_eq!(k, k2, "matmul_bt inner dim mismatch");
-    let mut c = vec![0.0f32; m * n];
-    let ad = a.data();
-    let bd = b.data();
-    for i in 0..m {
-        let arow = &ad[i * k..(i + 1) * k];
-        for j in 0..n {
-            let brow = &bd[j * k..(j + 1) * k];
-            let mut acc = 0.0f32;
-            for kk in 0..k {
-                acc += arow[kk] * brow[kk];
-            }
-            c[i * n + j] = acc;
-        }
-    }
-    Tensor::from_vec(c, &[m, n])
+    let mut c = Tensor::zeros(&[m, n]);
+    mm_bt_into(a.data(), b.data(), m, k, n, c.data_mut(), false);
+    c
 }
 
 /// Row-wise softmax over the last axis of a [m,n] tensor (in place).
@@ -103,12 +255,142 @@ mod tests {
     use crate::util::proptest::forall;
     use crate::util::rng::Rng;
 
+    /// Reference oracle: the naive i,j,k triple loop, no special-casing.
+    fn naive_mm(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+        let mut c = vec![0.0f32; m * n];
+        for i in 0..m {
+            for j in 0..n {
+                for kk in 0..k {
+                    c[i * n + j] += a[i * k + kk] * b[kk * n + j];
+                }
+            }
+        }
+        c
+    }
+
     #[test]
     fn matmul_small_known() {
         let a = Tensor::from_vec(vec![1.0, 2.0, 3.0, 4.0], &[2, 2]);
         let b = Tensor::from_vec(vec![1.0, 1.0, 1.0, 1.0], &[2, 2]);
         let c = matmul(&a, &b);
         assert_eq!(c.data(), &[3.0, 3.0, 7.0, 7.0]);
+    }
+
+    #[test]
+    fn prop_mm_bitwise_matches_naive_triple_loop() {
+        // mm_into and mm_at_into keep the naive ascending-k accumulation
+        // order, so they must agree with the oracle bit for bit — including
+        // sizes that hit both the blocked body and the remainder paths.
+        forall("mm-bitwise-naive", 40, |rng| {
+            let (m, k, n) = (1 + rng.range(13), 1 + rng.range(13), 1 + rng.range(13));
+            let a: Vec<f32> = rng.normal_vec(m * k, 1.0);
+            let b: Vec<f32> = rng.normal_vec(k * n, 1.0);
+            let want = naive_mm(&a, &b, m, k, n);
+
+            let mut c = vec![0.0f32; m * n];
+            mm_into(&a, &b, m, k, n, &mut c, false);
+            assert_eq!(c, want, "mm_into m={} k={} n={}", m, k, n);
+
+            // aᵀ stored [k,m]
+            let mut at = vec![0.0; k * m];
+            for i in 0..m {
+                for j in 0..k {
+                    at[j * m + i] = a[i * k + j];
+                }
+            }
+            let mut c2 = vec![0.0f32; m * n];
+            mm_at_into(&at, &b, k, m, n, &mut c2, false);
+            assert_eq!(c2, want, "mm_at_into m={} k={} n={}", m, k, n);
+        });
+    }
+
+    #[test]
+    fn prop_mm_bt_matches_naive_up_to_rounding() {
+        // mm_bt_into reassociates its dot products (eight lanes), so pin
+        // it to the oracle with a relative tolerance instead of bitwise.
+        forall("mm-bt-naive", 40, |rng| {
+            let (m, k, n) = (1 + rng.range(13), 1 + rng.range(20), 1 + rng.range(13));
+            let a: Vec<f32> = rng.normal_vec(m * k, 1.0);
+            let b: Vec<f32> = rng.normal_vec(k * n, 1.0);
+            let want = naive_mm(&a, &b, m, k, n);
+            let mut bt = vec![0.0; n * k];
+            for i in 0..k {
+                for j in 0..n {
+                    bt[j * k + i] = b[i * n + j];
+                }
+            }
+            let mut c = vec![0.0f32; m * n];
+            mm_bt_into(&a, &bt, m, k, n, &mut c, false);
+            for (x, y) in c.iter().zip(&want) {
+                assert!((x - y).abs() <= 1e-4 + 1e-4 * y.abs(), "{} vs {}", x, y);
+            }
+        });
+    }
+
+    #[test]
+    fn prop_kernels_propagate_ieee_specials() {
+        // Regression for the `av == 0.0` skip: 0.0 * NaN must poison the
+        // output exactly where the naive triple loop says it does.
+        forall("mm-ieee-nan", 25, |rng| {
+            let (m, k, n) = (1 + rng.range(6), 2 + rng.range(6), 1 + rng.range(6));
+            let mut a: Vec<f32> = rng.normal_vec(m * k, 1.0);
+            let mut b: Vec<f32> = rng.normal_vec(k * n, 1.0);
+            // sprinkle zeros into a and specials into b
+            a[rng.range(m * k)] = 0.0;
+            a[rng.range(m * k)] = 0.0;
+            b[rng.range(k * n)] = f32::NAN;
+            b[rng.range(k * n)] = f32::INFINITY;
+            let want = naive_mm(&a, &b, m, k, n);
+
+            let mut c = vec![0.0f32; m * n];
+            mm_into(&a, &b, m, k, n, &mut c, false);
+            let mut at = vec![0.0; k * m];
+            for i in 0..m {
+                for j in 0..k {
+                    at[j * m + i] = a[i * k + j];
+                }
+            }
+            let mut c_at = vec![0.0f32; m * n];
+            mm_at_into(&at, &b, k, m, n, &mut c_at, false);
+            let mut bt = vec![0.0; n * k];
+            for i in 0..k {
+                for j in 0..n {
+                    bt[j * k + i] = b[i * n + j];
+                }
+            }
+            let mut c_bt = vec![0.0f32; m * n];
+            mm_bt_into(&a, &bt, m, k, n, &mut c_bt, false);
+
+            for i in 0..m * n {
+                assert_eq!(c[i].is_nan(), want[i].is_nan(), "mm NaN mask at {}", i);
+                assert_eq!(c_at[i].is_nan(), want[i].is_nan(), "mm_at NaN mask at {}", i);
+                assert_eq!(c_bt[i].is_nan(), want[i].is_nan(), "mm_bt NaN mask at {}", i);
+            }
+        });
+    }
+
+    #[test]
+    fn zero_times_nan_poisons_output() {
+        // The exact shape of the old bug: a == 0.0 used to skip the row.
+        let a = Tensor::from_vec(vec![0.0], &[1, 1]);
+        let b = Tensor::from_vec(vec![f32::NAN], &[1, 1]);
+        assert!(matmul(&a, &b).data()[0].is_nan());
+        assert!(matmul_at(&a, &b).data()[0].is_nan());
+        assert!(matmul_bt(&a, &b).data()[0].is_nan());
+    }
+
+    #[test]
+    fn into_variants_accumulate_and_overwrite() {
+        let a = Tensor::from_vec(vec![1.0, 2.0, 3.0, 4.0], &[2, 2]);
+        let b = Tensor::from_vec(vec![1.0, 0.0, 0.0, 1.0], &[2, 2]);
+        // acc = false fully overwrites garbage in out
+        let mut out = Tensor::from_vec(vec![9.0; 4], &[2, 2]);
+        matmul_into(&a, &b, &mut out);
+        assert_eq!(out.data(), a.data());
+        // acc = true adds on top
+        let mut c = vec![1.0f32; 4];
+        mm_into(a.data(), b.data(), 2, 2, 2, &mut c, true);
+        assert_eq!(c, vec![2.0, 3.0, 4.0, 5.0]);
     }
 
     #[test]

@@ -3,8 +3,12 @@
 //! `BenchRunner` does warmup + fixed-count sampling and reports
 //! mean/std/p50/p95 wall-clock per iteration. Used by every
 //! `rust/benches/*.rs` harness and by the §Perf pass in EXPERIMENTS.md.
+//! [`BenchLog`] collects labelled rows for machine-readable JSON output so
+//! the perf trajectory can be tracked across PRs (`perf_hotpath --json`).
 
 use std::time::Instant;
+
+use crate::util::json::{self, Json};
 
 /// Summary statistics over per-iteration wall-clock samples (seconds).
 #[derive(Debug, Clone, Copy)]
@@ -96,9 +100,67 @@ impl BenchRunner {
     }
 }
 
+/// Labelled benchmark rows, serializable to JSON (`BENCH_*.json`).
+#[derive(Debug, Default)]
+pub struct BenchLog {
+    rows: Vec<(String, Stats)>,
+}
+
+impl BenchLog {
+    pub fn new() -> BenchLog {
+        BenchLog::default()
+    }
+
+    /// Record one benchmark row.
+    pub fn push(&mut self, label: &str, st: Stats) {
+        self.rows.push((label.to_string(), st));
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.rows.is_empty()
+    }
+
+    /// `{"rows": [{"label", "ns_per_op", "p50_ns", "p95_ns", "samples"}]}`
+    pub fn to_json(&self) -> Json {
+        let rows = self
+            .rows
+            .iter()
+            .map(|(label, st)| {
+                json::obj(vec![
+                    ("label", json::s(label)),
+                    ("ns_per_op", json::num(st.mean * 1e9)),
+                    ("p50_ns", json::num(st.p50 * 1e9)),
+                    ("p95_ns", json::num(st.p95 * 1e9)),
+                    ("samples", json::int(st.samples as i64)),
+                ])
+            })
+            .collect();
+        json::obj(vec![("rows", json::arr(rows))])
+    }
+
+    /// Write the JSON document to `path`.
+    pub fn write(&self, path: &str) -> std::io::Result<()> {
+        std::fs::write(path, self.to_json().to_string_pretty())
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn bench_log_serializes_rows() {
+        let mut log = BenchLog::new();
+        assert!(log.is_empty());
+        log.push("phi fwd", Stats::from_samples(vec![2e-6; 4]));
+        let j = log.to_json();
+        let rows = j.obj().unwrap()["rows"].arr().unwrap();
+        assert_eq!(rows.len(), 1);
+        let row = rows[0].obj().unwrap();
+        assert_eq!(row["label"].str().unwrap(), "phi fwd");
+        assert!((row["ns_per_op"].num().unwrap() - 2000.0).abs() < 1e-6);
+        assert_eq!(row["samples"].int().unwrap(), 4);
+    }
 
     #[test]
     fn stats_of_constant() {

@@ -7,6 +7,12 @@
 //! bit of the training trajectory. Inexact MGRIT (finite iteration budget)
 //! must likewise be bitwise invariant across worker counts, and converge
 //! to the serial trajectory as the budget grows.
+//!
+//! Since the zero-allocation hot-path rework, `ThreadedMgrit` solves here
+//! run their relaxation sweeps on the backend's **persistent worker pool**
+//! and every state update flows through the buffer-reusing
+//! `step_into`/`adjoint_step_into` entry points — so these properties now
+//! pin the pool schedule and the `*_into` math against the serial oracle.
 
 use layertime::config::{presets, MgritConfig, RunConfig};
 use layertime::coordinator::{Backend, Mgrit, Serial, Session, Task, ThreadedMgrit};

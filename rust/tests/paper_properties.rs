@@ -164,7 +164,10 @@ fn threaded_slab_executor_matches_engine_on_transformer_phi() {
     let w: Vec<Vec<f32>> =
         (0..=n).map(|_| rng.normal_vec(m.batch * m.seq * m.d_model, 1.0)).collect();
     let serial = serial_fc_relax(w.clone(), 4, &step);
-    let parallel = parallel_fc_relax(w, None, 4, 4, |l: usize, z: &Vec<f32>| step(l, z));
+    let parallel =
+        parallel_fc_relax(w, None, 4, 4, |l: usize, z: &Vec<f32>, out: &mut Vec<f32>| {
+            *out = step(l, z)
+        });
     for (a, b) in parallel.iter().zip(&serial) {
         assert_eq!(a, b, "threaded execution must be bitwise identical");
     }
