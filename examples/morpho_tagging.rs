@@ -62,5 +62,9 @@ fn main() -> anyhow::Result<()> {
         p_rep.final_metric,
         p_rep.final_metric - s_rep.final_metric
     );
+    println!(
+        "(solve contexts: {} MGRIT hierarchies built across the whole run)",
+        lp.solve_core_builds()
+    );
     Ok(())
 }

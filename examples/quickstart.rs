@@ -58,6 +58,11 @@ fn main() -> anyhow::Result<()> {
         "Φ evaluations: serial {} fwd / {} vjp; layer-parallel {} fwd / {} vjp",
         serial_report.phi_fwd, serial_report.phi_vjp, lp_report.phi_fwd, lp_report.phi_vjp
     );
+    println!(
+        "MGRIT hierarchies built: {} over {} solves (persistent per-session contexts)",
+        lp.solve_core_builds(),
+        2 * lp_report.curve.len()
+    );
     println!("\n(the extra Φ evals are the price of the exposed parallelism: on P");
     println!(" devices the layer-parallel evals run concurrently — see");
     println!(" `cargo bench --bench fig6_speedup` for the modeled wall-clock.)");

@@ -156,8 +156,22 @@ fn main() -> anyhow::Result<()> {
     rc.model.n_enc_layers = 8;
     rc.mgrit = MgritConfig { cf: 2, levels: 2, fwd_iters: Some(1), bwd_iters: Some(1), fcf: true };
     rc.train.adaptive = false;
-    let mut run = TrainRun::new(rc, Task::Tag, None)?;
+    let mut run = TrainRun::new(rc.clone(), Task::Tag, None)?;
     timed(&runner, &mut log, "full train step (8 layers, tiny, rust Φ)", || run.train_step());
+
+    // --- persistent solve contexts: cached vs fresh hierarchies --------------
+    // "cached ctx" is the steady-state path (cores + workspace reused across
+    // steps); "fresh ctx" drops the cached hierarchies before every step,
+    // i.e. the pre-context behavior of one MgritCore::new per solve. The
+    // gap between the two rows is what hierarchy caching buys per step.
+    let mut run_cached = TrainRun::new(rc.clone(), Task::Tag, None)?;
+    run_cached.train_step(); // build both cores once, outside the timing
+    timed(&runner, &mut log, "full train step (cached ctx)", || run_cached.train_step());
+    let mut run_fresh = TrainRun::new(rc, Task::Tag, None)?;
+    timed(&runner, &mut log, "full train step (fresh ctx)", || {
+        run_fresh.invalidate_solve_context();
+        run_fresh.train_step()
+    });
 
     if json_out {
         let path = "BENCH_hotpath.json";

@@ -13,18 +13,20 @@
 //!   [`WorkerPool`] (threads parked between sweeps) with channel-fabric
 //!   halo exchange, bitwise identical to [`Mgrit`].
 //!
-//! All three share the solver plumbing through the trait's default
-//! methods, so a custom backend only overrides what it changes.
+//! Since the persistent-context refactor a backend is a pure *strategy*:
+//! it names the execution mode (worker count, relaxation pool, iteration
+//! mapping) and the actual solves run on a per-`Session`
+//! [`super::context::SolveContext`] that the session creates once from its
+//! backend and holds for its lifetime — the context caches the MGRIT
+//! hierarchies and re-consults the backend per solve (so e.g. pool
+//! replacement after a poisoned sweep still works).
 
 use std::sync::{Arc, Mutex};
 
-use crate::config::MgritConfig;
-use crate::mgrit::{MgritSolver, SolveStats};
-use crate::ode::Propagator;
 use crate::parallel::WorkerPool;
-use crate::tensor::Tensor;
 
 /// Execution strategy for the MGRIT-shaped solves of one training step.
+/// Solves themselves are methods on [`super::context::SolveContext`].
 pub trait Backend: Send + Sync {
     /// Short name for logs (`"serial"`, `"mgrit"`, `"threaded-mgrit"`).
     fn name(&self) -> &'static str;
@@ -51,49 +53,6 @@ pub trait Backend: Send + Sync {
     /// Does this backend always propagate exactly (serially)?
     fn forces_exact(&self) -> bool {
         self.solve_iters(Some(1)).is_none()
-    }
-
-    /// Forward solve over `prop` from `z0`; returns all fine-grid states
-    /// Z_0..Z_N and statistics.
-    fn forward(
-        &self,
-        prop: &dyn Propagator,
-        cfg: &MgritConfig,
-        z0: &Tensor,
-        iters: Option<usize>,
-        warm: Option<&[Tensor]>,
-        track_residuals: bool,
-    ) -> (Vec<Tensor>, SolveStats) {
-        MgritSolver::with_workers(prop, cfg.clone(), self.workers())
-            .pooled(self.pool())
-            .forward(z0, self.solve_iters(iters), warm, track_residuals)
-    }
-
-    /// Adjoint solve over the frozen `states` from the cotangent `ct`;
-    /// returns λ_0..λ_N.
-    fn adjoint(
-        &self,
-        prop: &dyn Propagator,
-        cfg: &MgritConfig,
-        states: &[Tensor],
-        ct: &Tensor,
-        iters: Option<usize>,
-        track_residuals: bool,
-    ) -> (Vec<Tensor>, SolveStats) {
-        MgritSolver::with_workers(prop, cfg.clone(), self.workers())
-            .pooled(self.pool())
-            .adjoint(states, ct, self.solve_iters(iters), track_residuals)
-    }
-
-    /// Per-layer parameter gradients on the fine grid.
-    fn gradients(
-        &self,
-        prop: &dyn Propagator,
-        cfg: &MgritConfig,
-        states: &[Tensor],
-        lambdas: &[Tensor],
-    ) -> Vec<Vec<f32>> {
-        MgritSolver::with_workers(prop, cfg.clone(), self.workers()).gradients(states, lambdas)
     }
 }
 
@@ -181,11 +140,18 @@ pub fn backend_for_workers(workers: usize) -> Box<dyn Backend> {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::config::MgritConfig;
+    use crate::coordinator::context::{SolveContext, StepWorkspace};
     use crate::ode::LinearOde;
+    use crate::tensor::Tensor;
     use crate::util::rng::Rng;
 
     fn cfg() -> MgritConfig {
         MgritConfig { cf: 4, levels: 2, fwd_iters: Some(2), bwd_iters: Some(1), fcf: true }
+    }
+
+    fn ctx_for(backend: Box<dyn Backend>, n: usize, shape: &[usize]) -> SolveContext {
+        SolveContext::new(backend, StepWorkspace::new(n, shape, shape, &vec![0; n], [0, 0, 0, 0]))
     }
 
     #[test]
@@ -198,18 +164,21 @@ mod tests {
     }
 
     #[test]
-    fn backends_share_the_solver_plumbing() {
+    fn backends_share_the_context_plumbing() {
         let mut rng = Rng::new(0);
         let ode = LinearOde::random_stable(&mut rng, 4, 16, 0.1);
         let z0 = Tensor::randn(&mut rng, &[4, 1], 1.0);
-        let (w_serial, st) = Serial.forward(&ode, &cfg(), &z0, Some(2), None, false);
+        let (w_serial, st) =
+            ctx_for(Box::new(Serial), 16, &[4, 1]).forward(&ode, &cfg(), &z0, Some(2), None, false);
         assert!(st.serial);
-        let (w_mg, st) = Mgrit.forward(&ode, &cfg(), &z0, Some(8), None, false);
+        let (w_mg, st) =
+            ctx_for(Box::new(Mgrit), 16, &[4, 1]).forward(&ode, &cfg(), &z0, Some(8), None, false);
         assert!(!st.serial);
         // converged MGRIT ≈ serial
         assert!(w_mg.last().unwrap().allclose(w_serial.last().unwrap(), 1e-4, 1e-4));
         // threaded == single-threaded, bitwise
-        let (w_thr, _) = ThreadedMgrit::new(3).forward(&ode, &cfg(), &z0, Some(8), None, false);
+        let (w_thr, _) = ctx_for(Box::new(ThreadedMgrit::new(3)), 16, &[4, 1])
+            .forward(&ode, &cfg(), &z0, Some(8), None, false);
         for (a, b) in w_mg.iter().zip(&w_thr) {
             assert_eq!(a.data(), b.data());
         }

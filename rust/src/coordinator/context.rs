@@ -1,0 +1,755 @@
+//! Persistent per-`Session` solve state: cached MGRIT hierarchies, the
+//! warm-start iterate, and the reusable fine-grid step workspace.
+//!
+//! Before this module existed every forward/adjoint solve rebuilt the full
+//! MGRIT level hierarchy (`MgritCore::new` allocates W/G/W_init storage on
+//! every level) and handed its solution back as a `to_vec()` clone, and
+//! `Session::micro_batch` reallocated its `states`/`lams`/`grads` vectors
+//! per batch. The grid structure only depends on (n_steps, cf, levels,
+//! fcf, state shape) — fixed for the lifetime of a session — so all of
+//! that is pure per-step overhead, growing with depth exactly where
+//! layer-parallel training is supposed to win (Günther et al. 2020 and the
+//! source paper both amortize the hierarchy across the whole run).
+//!
+//! [`SolveContext`] owns:
+//!
+//! * two cached [`MgritCore`]s (forward + adjoint), keyed on the
+//!   grid-shape-determining inputs; iteration-count changes (the §3.2.3
+//!   `IncreaseIters` transition) reuse the cores, serial mode bypasses
+//!   them entirely (exact sweeps run in place on the workspace — no core
+//!   is built, touched, or copied through, and the session frees the
+//!   cached pair at the sticky switch), and a cf / levels / fcf change
+//!   mid-run triggers an explicit rebuild;
+//! * the TorchBraid-style warm start — tracked as a validity flag over
+//!   the workspace states (the previous solve's solution is already
+//!   sitting there, so warm-starting is copy-free), dropped as soon as a
+//!   solve runs serially: stale after the §3.2.3 switch, and it would
+//!   poison a later non-serial run restored from the same session;
+//! * a [`StepWorkspace`] with every fine-grid buffer a training step
+//!   needs, so with the single-threaded backends the steady-state step
+//!   allocates nothing outside the data pipeline and loss head (pinned by
+//!   `rust/tests/alloc_audit.rs`). The `ThreadedMgrit` backend still
+//!   stages per-sweep slab copies inside `parallel::exec`; the context
+//!   removes the hierarchy/solution-handoff allocations for it too, but
+//!   not the slab staging.
+//!
+//! The context is created once per `Session` from the session's
+//! [`Backend`] and held for the session's lifetime; the backend supplies
+//! the execution strategy (worker count, persistent relaxation pool,
+//! iteration-budget mapping) and is re-consulted per solve so pool
+//! replacement after a poisoned sweep still works with cached cores.
+
+use crate::config::MgritConfig;
+use crate::mgrit::{accumulate_layer_grads, MgritCore, MgritSolver, SolveStats};
+use crate::ode::Propagator;
+use crate::tensor::Tensor;
+
+use super::backend::Backend;
+use super::objective::HeadGrads;
+
+/// Reusable fine-grid buffers for one training step: states Z_0..Z_N,
+/// adjoints λ_0..λ_N, and every gradient accumulator. Sized once at
+/// session build, reused every batch.
+pub struct StepWorkspace {
+    /// Fine-grid states Z_0..Z_N (N = total layers), state-shaped.
+    pub states: Vec<Tensor>,
+    /// Fine-grid adjoints λ_0..λ_N, state-shaped.
+    pub lams: Vec<Tensor>,
+    /// Per-layer parameter gradient accumulators (θ-shaped). Zeroed once
+    /// per optimizer step; `accumulate_grad` adds into them, and dp > 1
+    /// micro-batches sum replica-style via
+    /// [`StepWorkspace::stash_grads`]/[`StepWorkspace::fold_stashed_grads`].
+    pub grads: Vec<Vec<f32>>,
+    /// Embedding-table gradient accumulator (always full-size).
+    pub g_emb: Vec<f32>,
+    /// Positional-embedding gradient accumulator.
+    pub g_pos: Vec<f32>,
+    /// LM-head gradient accumulator.
+    pub g_out: Vec<f32>,
+    /// Classifier-head gradient accumulator.
+    pub g_cls: Vec<f32>,
+    /// Head-side activation buffer [B,S,D] (the decoder half of the
+    /// stacked EncDec state; unused for flat-state architectures).
+    pub head: Tensor,
+    /// Second ping-pong buffer for rolling (evaluation) forwards.
+    pub pp: Tensor,
+    /// Second gradient-accumulator set for dp > 1 micro-batch summation
+    /// (see [`StepWorkspace::stash_grads`]); lazily allocated on the first
+    /// multi-micro-batch step so dp = 1 never pays for it.
+    pub(crate) dp_scratch: Option<GradScratch>,
+}
+
+/// The parked running sum while a dp micro-batch computes its own totals.
+pub(crate) struct GradScratch {
+    grads: Vec<Vec<f32>>,
+    g_emb: Vec<f32>,
+    g_pos: Vec<f32>,
+    g_out: Vec<f32>,
+    g_cls: Vec<f32>,
+}
+
+impl StepWorkspace {
+    /// Allocate all buffers up front. `head_sizes` is
+    /// `[w_emb, w_pos, w_out, w_cls]` flat lengths.
+    pub fn new(
+        n_layers: usize,
+        state_shape: &[usize],
+        head_shape: &[usize],
+        theta_lens: &[usize],
+        head_sizes: [usize; 4],
+    ) -> StepWorkspace {
+        assert_eq!(theta_lens.len(), n_layers, "need one θ length per layer");
+        StepWorkspace {
+            states: (0..=n_layers).map(|_| Tensor::zeros(state_shape)).collect(),
+            lams: (0..=n_layers).map(|_| Tensor::zeros(state_shape)).collect(),
+            grads: theta_lens.iter().map(|&t| vec![0.0f32; t]).collect(),
+            g_emb: vec![0.0f32; head_sizes[0]],
+            g_pos: vec![0.0f32; head_sizes[1]],
+            g_out: vec![0.0f32; head_sizes[2]],
+            g_cls: vec![0.0f32; head_sizes[3]],
+            head: Tensor::zeros(head_shape),
+            pp: Tensor::zeros(state_shape),
+            dp_scratch: None,
+        }
+    }
+
+    /// Park the running gradient sum in the dp scratch set and zero the
+    /// primary accumulators, so the next micro-batch computes its totals
+    /// independently. Paired with [`StepWorkspace::fold_stashed_grads`] —
+    /// together they reproduce the distributed-replica allreduce order
+    /// bitwise: each micro-batch sums into fresh zeroed buffers and the
+    /// per-micro-batch *totals* are then added (v1 semantics), instead of
+    /// interleaving one micro-batch's element updates onto another's
+    /// partial sums (FP addition is not associative).
+    pub fn stash_grads(&mut self) {
+        if self.dp_scratch.is_none() {
+            self.dp_scratch = Some(GradScratch {
+                grads: self.grads.iter().map(|g| vec![0.0f32; g.len()]).collect(),
+                g_emb: vec![0.0f32; self.g_emb.len()],
+                g_pos: vec![0.0f32; self.g_pos.len()],
+                g_out: vec![0.0f32; self.g_out.len()],
+                g_cls: vec![0.0f32; self.g_cls.len()],
+            });
+        }
+        let s = self.dp_scratch.as_mut().unwrap();
+        std::mem::swap(&mut self.grads, &mut s.grads);
+        std::mem::swap(&mut self.g_emb, &mut s.g_emb);
+        std::mem::swap(&mut self.g_pos, &mut s.g_pos);
+        std::mem::swap(&mut self.g_out, &mut s.g_out);
+        std::mem::swap(&mut self.g_cls, &mut s.g_cls);
+        self.zero_grads();
+    }
+
+    /// Fold the parked running sum back in: primary = stashed + primary
+    /// per element (running sum on the left, matching the v1 allreduce;
+    /// bitwise equal by commutativity of IEEE addition).
+    pub fn fold_stashed_grads(&mut self) {
+        let s = self.dp_scratch.as_ref().expect("fold_stashed_grads without stash_grads");
+        for (p, sg) in self.grads.iter_mut().zip(s.grads.iter()) {
+            for (a, b) in p.iter_mut().zip(sg.iter()) {
+                *a = *b + *a;
+            }
+        }
+        for (p, sg) in [
+            (&mut self.g_emb, &s.g_emb),
+            (&mut self.g_pos, &s.g_pos),
+            (&mut self.g_out, &s.g_out),
+            (&mut self.g_cls, &s.g_cls),
+        ] {
+            for (a, b) in p.iter_mut().zip(sg.iter()) {
+                *a = *b + *a;
+            }
+        }
+    }
+
+    /// Zero every gradient accumulator (start of a training step).
+    pub fn zero_grads(&mut self) {
+        for g in self.grads.iter_mut() {
+            g.iter_mut().for_each(|x| *x = 0.0);
+        }
+        for g in [&mut self.g_emb, &mut self.g_pos, &mut self.g_out, &mut self.g_cls] {
+            g.iter_mut().for_each(|x| *x = 0.0);
+        }
+    }
+
+    /// Scale every gradient accumulator (dp gradient averaging).
+    pub fn scale_grads(&mut self, s: f32) {
+        for g in self.grads.iter_mut() {
+            g.iter_mut().for_each(|x| *x *= s);
+        }
+        for g in [&mut self.g_emb, &mut self.g_pos, &mut self.g_out, &mut self.g_cls] {
+            g.iter_mut().for_each(|x| *x *= s);
+        }
+    }
+
+    /// Fold the head gradients an objective's loss head produced into the
+    /// persistent accumulators. Objectives fill only the groups they
+    /// touch; empty groups are skipped (the accumulators are full-size
+    /// and zero, so untouched groups stay zero for the optimizer).
+    pub fn add_head_grads(&mut self, head: &HeadGrads) {
+        for (acc, src) in [
+            (&mut self.g_emb, &head.emb),
+            (&mut self.g_pos, &head.pos),
+            (&mut self.g_out, &head.out),
+            (&mut self.g_cls, &head.cls),
+        ] {
+            if src.is_empty() {
+                continue;
+            }
+            assert_eq!(acc.len(), src.len(), "head gradient group size mismatch");
+            for (a, b) in acc.iter_mut().zip(src.iter()) {
+                *a += b;
+            }
+        }
+    }
+}
+
+/// One cached hierarchy plus the inputs its storage was built from.
+struct CachedCore {
+    n: usize,
+    cf: usize,
+    levels: usize,
+    fcf: bool,
+    workers: usize,
+    shape: Vec<usize>,
+    core: MgritCore,
+}
+
+/// Persistent solve state of one `Session` (see module docs).
+pub struct SolveContext {
+    backend: Box<dyn Backend>,
+    fwd: Option<CachedCore>,
+    adj: Option<CachedCore>,
+    /// Warm-start validity for the MGRIT forward solve (TorchBraid-style).
+    /// The iterate itself is not stored separately: after every V-cycle
+    /// solve `ws.states[bo..=bo+n]` *is* the converged mid-range iterate,
+    /// and nothing between solves overwrites its interior (buffer sweeps
+    /// touch `..=bo` and `bo+n..`, evaluation ping-pongs `states[0]`/`pp`)
+    /// — so the next solve warm-starts straight from the workspace with no
+    /// copy. The flag is dropped the moment a solve runs serial (the
+    /// §3.2.3 switch leaves a stale trajectory).
+    warm_valid: bool,
+    /// Fine-grid step buffers (public: the session's serial buffer-layer
+    /// sweeps and loss head operate on them directly).
+    pub ws: StepWorkspace,
+    core_builds: u64,
+}
+
+impl SolveContext {
+    /// Wrap a backend and a pre-sized workspace into a context. Cores are
+    /// built lazily on the first solve per direction.
+    pub fn new(backend: Box<dyn Backend>, ws: StepWorkspace) -> SolveContext {
+        SolveContext { backend, fwd: None, adj: None, warm_valid: false, ws, core_builds: 0 }
+    }
+
+    /// The execution strategy this context solves with.
+    pub fn backend(&self) -> &dyn Backend {
+        self.backend.as_ref()
+    }
+
+    /// How many `MgritCore` hierarchies this context has built — the
+    /// cache-validity acceptance counter: exactly one per direction per
+    /// session unless cf/levels/fcf (or the grid size) change mid-run.
+    pub fn core_builds(&self) -> u64 {
+        self.core_builds
+    }
+
+    /// Is a warm-start iterate currently valid in the workspace?
+    pub fn has_warm(&self) -> bool {
+        self.warm_valid
+    }
+
+    /// Drop the warm-start iterate (stale after a serial switch; also
+    /// called by `forward_mid` itself whenever a solve ran serially).
+    pub fn clear_warm(&mut self) {
+        self.warm_valid = false;
+    }
+
+    /// Drop the cached hierarchies: the next solve per direction rebuilds
+    /// from scratch. The explicit-rebuild hook for callers that mutate
+    /// solver geometry out-of-band (also what the "fresh ctx" benchmark
+    /// row exercises).
+    pub fn invalidate(&mut self) {
+        self.fwd = None;
+        self.adj = None;
+    }
+
+    /// Fetch (or build) the cached core for one direction. Allocation-free
+    /// on a cache hit; a miss builds storage for the new key.
+    fn core_for<'a>(
+        slot: &'a mut Option<CachedCore>,
+        builds: &mut u64,
+        n: usize,
+        cfg: &MgritConfig,
+        workers: usize,
+        shape: &[usize],
+    ) -> &'a mut MgritCore {
+        let hit = matches!(
+            slot,
+            Some(c) if c.n == n
+                && c.cf == cfg.cf
+                && c.levels == cfg.levels
+                && c.fcf == cfg.fcf
+                && c.workers == workers
+                && c.shape[..] == *shape
+                // a panicked threaded sweep leaves the core with taken-out
+                // level storage; rebuild instead of reusing it gutted
+                && c.core.is_intact()
+        );
+        if !hit {
+            let proto = Tensor::zeros(shape);
+            let core =
+                MgritCore::new(n, cfg.cf, cfg.levels, cfg.fcf, &proto).with_workers(workers);
+            *slot = Some(CachedCore {
+                n,
+                cf: cfg.cf,
+                levels: cfg.levels,
+                fcf: cfg.fcf,
+                workers,
+                shape: shape.to_vec(),
+                core,
+            });
+            *builds += 1;
+        }
+        &mut slot.as_mut().unwrap().core
+    }
+
+    /// Per-solve backend re-consultation, single-sourced for every entry
+    /// point: fetch (or build) the cached core for one direction and
+    /// re-attach the backend's *current* pool (a pool poisoned by a
+    /// panicked sweep is rebuilt by the backend; the cached hierarchy must
+    /// pick the replacement up, not pin the dead one).
+    fn configured_core<'a>(
+        backend: &dyn Backend,
+        slot: &'a mut Option<CachedCore>,
+        builds: &mut u64,
+        n: usize,
+        cfg: &MgritConfig,
+        shape: &[usize],
+    ) -> &'a mut MgritCore {
+        let core = Self::core_for(slot, builds, n, cfg, backend.workers(), shape);
+        core.set_pool(backend.pool());
+        core
+    }
+
+    /// Forward solve over the mid (ParallelNet) range: reads Z_{bo} from
+    /// `ws.states[bo]`, writes the solution into `ws.states[bo..=bo+n]`
+    /// (n = `prop.n_steps()`, the mid view's step count). Serial mode
+    /// (`iters = None` after backend mapping — the Serial backend or the
+    /// §3.2.3 switch) bypasses the hierarchy entirely: it sweeps in place
+    /// on the workspace without building, touching, or copying through a
+    /// core, and drops the now-dead warm iterate. V-cycle mode runs on the
+    /// cached core and refreshes the warm iterate in place when `use_warm`
+    /// is set. Allocation-free at steady state with the single-threaded
+    /// backends (threaded sweeps stage exec slabs).
+    pub fn forward_mid(
+        &mut self,
+        prop: &dyn Propagator,
+        cfg: &MgritConfig,
+        bo: usize,
+        iters: Option<usize>,
+        use_warm: bool,
+        track_residuals: bool,
+    ) -> SolveStats {
+        let n = prop.n_steps();
+        let SolveContext { backend, fwd, warm_valid, ws, core_builds, .. } = self;
+        assert!(bo + n < ws.states.len(), "mid range outside the workspace");
+        let mapped = backend.solve_iters(iters);
+        if mapped.is_none() {
+            // exact propagation: no hierarchy, no handoff copy, and the
+            // warm trajectory is stale the moment the run goes serial (it
+            // would poison a later non-serial run from this session)
+            *warm_valid = false;
+            let before = prop.counters().fwd();
+            prop.step_seq_into(0, 1.0, &mut ws.states[bo..=bo + n]);
+            return SolveStats {
+                iterations: 0,
+                residuals: vec![],
+                phi_evals: prop.counters().fwd() - before,
+                serial: true,
+            };
+        }
+        let core =
+            Self::configured_core(&**backend, fwd, core_builds, n, cfg, ws.states[bo].shape());
+        let solver = MgritSolver::new(prop, cfg.clone());
+        // the previous solve's solution is still sitting in the workspace:
+        // warm-start from it directly, no stored copy (the core snapshots
+        // warm[1..=n] into its own storage before anything is written)
+        let warm_ref: Option<&[Tensor]> =
+            if use_warm && *warm_valid { Some(&ws.states[bo..=bo + n]) } else { None };
+        let stats = solver.forward_with(core, &ws.states[bo], mapped, warm_ref, track_residuals);
+        core.solution_into(&mut ws.states[bo..=bo + n]);
+        *warm_valid = use_warm;
+        stats
+    }
+
+    /// Adjoint solve over the mid range: reads the frozen states from
+    /// `ws.states[bo..=bo+n]` and the cotangent from `ws.lams[bo+n]`,
+    /// writes λ back into `ws.lams[bo..=bo+n]` in natural order. Serial
+    /// mode sweeps the transposed Jacobian in place (no hierarchy);
+    /// V-cycle mode runs on the cached core. Allocation-free at steady
+    /// state with the single-threaded backends (threaded sweeps stage
+    /// exec slabs).
+    pub fn adjoint_mid(
+        &mut self,
+        prop: &dyn Propagator,
+        cfg: &MgritConfig,
+        bo: usize,
+        iters: Option<usize>,
+        track_residuals: bool,
+    ) -> SolveStats {
+        let n = prop.n_steps();
+        let SolveContext { backend, adj, ws, core_builds, .. } = self;
+        assert!(bo + n < ws.lams.len(), "mid range outside the workspace");
+        let mapped = backend.solve_iters(iters);
+        let StepWorkspace { states, lams, .. } = ws;
+        if mapped.is_none() {
+            // exact backward sweep over the frozen states, in place
+            let before = prop.counters().vjp();
+            for l in (0..n).rev() {
+                let (lam_lo, lam_hi) = lams.split_at_mut(bo + l + 1);
+                prop.adjoint_step_into(l, 1.0, &states[bo + l], &lam_hi[0], &mut lam_lo[bo + l]);
+            }
+            return SolveStats {
+                iterations: 0,
+                residuals: vec![],
+                phi_evals: prop.counters().vjp() - before,
+                serial: true,
+            };
+        }
+        let core =
+            Self::configured_core(&**backend, adj, core_builds, n, cfg, states[bo].shape());
+        let solver = MgritSolver::new(prop, cfg.clone());
+        let stats =
+            solver.adjoint_with(core, &states[bo..=bo + n], &lams[bo + n], mapped, track_residuals);
+        core.solution_rev_into(&mut lams[bo..=bo + n]);
+        stats
+    }
+
+    /// Accumulate the mid-range per-layer parameter gradients from the
+    /// workspace states/adjoints into `ws.grads[bo..bo+n]` (added, not
+    /// overwritten — zero once per optimizer step). The loop itself is
+    /// [`accumulate_layer_grads`], shared with `MgritSolver`.
+    pub fn gradients_mid(&mut self, prop: &dyn Propagator, bo: usize) {
+        let StepWorkspace { states, lams, grads, .. } = &mut self.ws;
+        accumulate_layer_grads(prop, states, lams, grads, bo);
+    }
+
+    /// Standalone forward solve on the cached hierarchy (the serving-style
+    /// many-solves-one-hierarchy entry point; same signature shape as the
+    /// pre-context `Backend::forward`, allocating its result).
+    pub fn forward(
+        &mut self,
+        prop: &dyn Propagator,
+        cfg: &MgritConfig,
+        z0: &Tensor,
+        iters: Option<usize>,
+        warm: Option<&[Tensor]>,
+        track_residuals: bool,
+    ) -> (Vec<Tensor>, SolveStats) {
+        let mapped = self.backend.solve_iters(iters);
+        if mapped.is_none() {
+            // exact propagation has no hierarchy worth caching: run the
+            // one-shot solver (transient storage, freed on return)
+            return MgritSolver::new(prop, cfg.clone()).forward(z0, None, warm, track_residuals);
+        }
+        let SolveContext { backend, fwd, core_builds, .. } = self;
+        let core =
+            Self::configured_core(&**backend, fwd, core_builds, prop.n_steps(), cfg, z0.shape());
+        let solver = MgritSolver::new(prop, cfg.clone());
+        let stats = solver.forward_with(core, z0, mapped, warm, track_residuals);
+        (core.solution().to_vec(), stats)
+    }
+
+    /// Standalone adjoint solve on the cached hierarchy; returns λ_0..λ_N
+    /// in natural order.
+    pub fn adjoint(
+        &mut self,
+        prop: &dyn Propagator,
+        cfg: &MgritConfig,
+        states: &[Tensor],
+        ct: &Tensor,
+        iters: Option<usize>,
+        track_residuals: bool,
+    ) -> (Vec<Tensor>, SolveStats) {
+        let n = prop.n_steps();
+        let mapped = self.backend.solve_iters(iters);
+        if mapped.is_none() {
+            return MgritSolver::new(prop, cfg.clone()).adjoint(states, ct, None, track_residuals);
+        }
+        let SolveContext { backend, adj, core_builds, .. } = self;
+        let core = Self::configured_core(&**backend, adj, core_builds, n, cfg, ct.shape());
+        let solver = MgritSolver::new(prop, cfg.clone());
+        let stats = solver.adjoint_with(core, states, ct, mapped, track_residuals);
+        let sol = core.solution();
+        let lambdas: Vec<Tensor> = (0..=n).map(|i| sol[n - i].clone()).collect();
+        (lambdas, stats)
+    }
+
+    /// Standalone per-layer gradients on the fine grid (allocating; the
+    /// training path uses [`SolveContext::gradients_mid`]).
+    pub fn gradients(
+        &self,
+        prop: &dyn Propagator,
+        states: &[Tensor],
+        lambdas: &[Tensor],
+    ) -> Vec<Vec<f32>> {
+        let mut grads: Vec<Vec<f32>> =
+            (0..prop.n_steps()).map(|l| vec![0.0f32; prop.theta_len(l)]).collect();
+        accumulate_layer_grads(prop, states, lambdas, &mut grads, 0);
+        grads
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::backend::{Mgrit, Serial, ThreadedMgrit};
+    use crate::ode::LinearOde;
+    use crate::util::rng::Rng;
+
+    fn cfg(cf: usize, levels: usize) -> MgritConfig {
+        MgritConfig { cf, levels, fwd_iters: Some(2), bwd_iters: Some(1), fcf: true }
+    }
+
+    fn tiny_ws(n: usize, shape: &[usize]) -> StepWorkspace {
+        StepWorkspace::new(n, shape, shape, &vec![0usize; n], [0, 0, 0, 0])
+    }
+
+    #[test]
+    fn cores_are_built_once_and_reused_across_solves() {
+        let mut rng = Rng::new(0);
+        let ode = LinearOde::random_stable(&mut rng, 4, 16, 0.1);
+        let z0 = Tensor::randn(&mut rng, &[4, 1], 1.0);
+        let ct = Tensor::randn(&mut rng, &[4, 1], 1.0);
+        let mut ctx = SolveContext::new(Box::new(Mgrit), tiny_ws(16, &[4, 1]));
+        assert_eq!(ctx.core_builds(), 0, "cores are lazy");
+        let (w, _) = ctx.forward(&ode, &cfg(4, 2), &z0, Some(3), None, false);
+        let (l, _) = ctx.adjoint(&ode, &cfg(4, 2), &w, &ct, Some(2), false);
+        assert_eq!(ctx.core_builds(), 2, "one core per direction");
+        for _ in 0..5 {
+            let (w2, _) = ctx.forward(&ode, &cfg(4, 2), &z0, Some(3), None, false);
+            let (l2, _) = ctx.adjoint(&ode, &cfg(4, 2), &w2, &ct, Some(2), false);
+            for (a, b) in w.iter().zip(&w2) {
+                assert_eq!(a.data(), b.data(), "cached forward must be bitwise stable");
+            }
+            for (a, b) in l.iter().zip(&l2) {
+                assert_eq!(a.data(), b.data(), "cached adjoint must be bitwise stable");
+            }
+        }
+        assert_eq!(ctx.core_builds(), 2, "steady state builds nothing");
+        // iteration-count changes (the §3.2.3 IncreaseIters transition)
+        // reuse the cores; the serial switch (iters = None) bypasses them
+        ctx.forward(&ode, &cfg(4, 2), &z0, Some(6), None, false);
+        ctx.forward(&ode, &cfg(4, 2), &z0, None, None, false);
+        assert_eq!(ctx.core_builds(), 2);
+        // a cf change is a different grid: explicit rebuild
+        ctx.forward(&ode, &cfg(2, 2), &z0, Some(3), None, false);
+        assert_eq!(ctx.core_builds(), 3);
+        // and switching back rebuilds again (the cache is 1-deep by design)
+        ctx.forward(&ode, &cfg(4, 2), &z0, Some(3), None, false);
+        assert_eq!(ctx.core_builds(), 4);
+    }
+
+    #[test]
+    fn cached_context_matches_fresh_solver_bitwise() {
+        let mut rng = Rng::new(1);
+        let ode = LinearOde::random_stable(&mut rng, 5, 32, 0.05);
+        let z0 = Tensor::randn(&mut rng, &[5, 1], 1.0);
+        let ct = Tensor::randn(&mut rng, &[5, 1], 1.0);
+        for workers in [1usize, 2, 4] {
+            let solver = MgritSolver::with_workers(&ode, cfg(4, 2), workers);
+            let (wf, _) = solver.forward(&z0, Some(3), None, false);
+            let (lf, _) = solver.adjoint(&wf, &ct, Some(2), false);
+            let gf = solver.gradients(&wf, &lf);
+            let backend: Box<dyn Backend> = if workers > 1 {
+                Box::new(ThreadedMgrit::new(workers))
+            } else {
+                Box::new(Mgrit)
+            };
+            let mut ctx = SolveContext::new(backend, tiny_ws(32, &[5, 1]));
+            for round in 0..3 {
+                let (wc, _) = ctx.forward(&ode, &cfg(4, 2), &z0, Some(3), None, false);
+                let (lc, _) = ctx.adjoint(&ode, &cfg(4, 2), &wc, &ct, Some(2), false);
+                let gc = ctx.gradients(&ode, &wc, &lc);
+                for (a, b) in wf.iter().zip(&wc) {
+                    assert_eq!(a.data(), b.data(), "fwd workers={} round={}", workers, round);
+                }
+                for (a, b) in lf.iter().zip(&lc) {
+                    assert_eq!(a.data(), b.data(), "adj workers={} round={}", workers, round);
+                }
+                assert_eq!(gf, gc, "grads workers={} round={}", workers, round);
+            }
+            assert_eq!(ctx.core_builds(), 2);
+        }
+    }
+
+    #[test]
+    fn workspace_solves_match_standalone_and_manage_warm() {
+        let mut rng = Rng::new(2);
+        let n = 16;
+        let ode = LinearOde::random_stable(&mut rng, 4, n, 0.1);
+        let z0 = Tensor::randn(&mut rng, &[4, 1], 1.0);
+        let ct = Tensor::randn(&mut rng, &[4, 1], 1.0);
+        let mut ctx = SolveContext::new(Box::new(Mgrit), tiny_ws(n, &[4, 1]));
+        ctx.ws.states[0].copy_from(&z0);
+        let c = cfg(4, 2);
+        let stats = ctx.forward_mid(&ode, &c, 0, Some(3), true, false);
+        assert!(!stats.serial);
+        assert!(ctx.has_warm(), "V-cycle solve with use_warm stores the iterate");
+        ctx.ws.lams[n].copy_from(&ct);
+        ctx.adjoint_mid(&ode, &c, 0, Some(2), false);
+        // reference: one-shot solver from the same inputs (cold start —
+        // so compare against a cold context run, i.e. the first call)
+        let solver = MgritSolver::new(&ode, c.clone());
+        let (wf, _) = solver.forward(&z0, Some(3), None, false);
+        for (a, b) in ctx.ws.states.iter().zip(&wf) {
+            assert_eq!(a.data(), b.data(), "ws forward must match the one-shot solver");
+        }
+        let (lf, _) = solver.adjoint(&wf, &ct, Some(2), false);
+        for (a, b) in ctx.ws.lams.iter().zip(&lf) {
+            assert_eq!(a.data(), b.data(), "ws adjoint must match the one-shot solver");
+        }
+        // a serial solve drops the warm iterate (the §3.2.3 switch)
+        let stats = ctx.forward_mid(&ode, &c, 0, None, true, false);
+        assert!(stats.serial);
+        assert!(!ctx.has_warm(), "serial switch must drop the stale iterate");
+    }
+
+    #[test]
+    fn serial_backend_forces_serial_solves_through_the_context() {
+        let mut rng = Rng::new(3);
+        let ode = LinearOde::random_stable(&mut rng, 4, 16, 0.1);
+        let z0 = Tensor::randn(&mut rng, &[4, 1], 1.0);
+        let mut ctx = SolveContext::new(Box::new(Serial), tiny_ws(16, &[4, 1]));
+        let (w, stats) = ctx.forward(&ode, &cfg(4, 2), &z0, Some(8), None, false);
+        assert!(stats.serial, "Serial backend maps every budget to an exact solve");
+        let traj = ode.serial_trajectory(&z0);
+        for (a, b) in w.iter().zip(&traj) {
+            assert!(a.allclose(b, 1e-6, 1e-6));
+        }
+    }
+
+    #[test]
+    fn workspace_grad_accumulators_fold_scale_and_zero() {
+        let mut ws = StepWorkspace::new(2, &[2, 1], &[2, 1], &[3, 3], [2, 2, 2, 1]);
+        ws.grads[0][1] = 4.0;
+        let head = HeadGrads::out(vec![1.0, 2.0]);
+        ws.add_head_grads(&head);
+        ws.add_head_grads(&head);
+        assert_eq!(ws.g_out, vec![2.0, 4.0]);
+        assert_eq!(ws.g_cls, vec![0.0], "untouched groups stay zero");
+        ws.scale_grads(0.5);
+        assert_eq!(ws.g_out, vec![1.0, 2.0]);
+        assert_eq!(ws.grads[0][1], 2.0);
+        ws.zero_grads();
+        assert_eq!(ws.g_out, vec![0.0, 0.0]);
+        assert_eq!(ws.grads[0], vec![0.0; 3]);
+    }
+
+    #[test]
+    fn dp_stash_fold_sums_independent_micro_batch_totals() {
+        // replica-allreduce order: each micro-batch's totals are computed
+        // in fresh zeroed buffers, then the totals are added
+        let mut ws = StepWorkspace::new(1, &[2, 1], &[2, 1], &[2], [1, 1, 1, 1]);
+        ws.zero_grads();
+        ws.grads[0][0] = 0.1; // micro-batch 0 totals
+        ws.g_emb[0] = 0.3;
+        ws.stash_grads();
+        assert_eq!(ws.grads[0][0], 0.0, "primary must be zeroed for the next micro-batch");
+        assert_eq!(ws.g_emb[0], 0.0);
+        ws.grads[0][0] = 0.2; // micro-batch 1 totals
+        ws.g_emb[0] = 0.5;
+        ws.fold_stashed_grads();
+        assert_eq!(ws.grads[0][0], 0.1f32 + 0.2f32);
+        assert_eq!(ws.g_emb[0], 0.3f32 + 0.5f32);
+        // a second dp step reuses the scratch set from a clean slate
+        ws.zero_grads();
+        ws.grads[0][0] = 1.0;
+        ws.stash_grads();
+        ws.grads[0][0] = 2.0;
+        ws.fold_stashed_grads();
+        assert_eq!(ws.grads[0][0], 3.0);
+    }
+
+    #[test]
+    fn panicked_threaded_sweep_is_recovered_by_core_rebuild() {
+        // A Φ panic inside a pooled relaxation sweep unwinds while the
+        // level storage is taken out of the cached core. The context must
+        // detect the gutted core (cache miss), and the backend must
+        // replace its poisoned pool, so a retry on the same session
+        // solves cleanly and matches a fresh solver bitwise.
+        use std::panic::{catch_unwind, AssertUnwindSafe};
+        use std::sync::atomic::{AtomicBool, Ordering};
+
+        use crate::ode::StepCounters;
+
+        struct PanicOnce<'a> {
+            inner: &'a LinearOde,
+            armed: AtomicBool,
+        }
+        impl Propagator for PanicOnce<'_> {
+            fn n_steps(&self) -> usize {
+                self.inner.n_steps()
+            }
+            fn state_shape(&self) -> Vec<usize> {
+                self.inner.state_shape()
+            }
+            fn fine_h(&self, layer: usize) -> f32 {
+                self.inner.fine_h(layer)
+            }
+            fn step(&self, layer: usize, h_scale: f32, z: &Tensor) -> Tensor {
+                if self.armed.swap(false, Ordering::SeqCst) {
+                    panic!("injected Φ panic");
+                }
+                self.inner.step(layer, h_scale, z)
+            }
+            fn adjoint_step(&self, layer: usize, h_scale: f32, z: &Tensor, lam: &Tensor) -> Tensor {
+                self.inner.adjoint_step(layer, h_scale, z, lam)
+            }
+            fn accumulate_grad(&self, layer: usize, z: &Tensor, lam: &Tensor, grad: &mut [f32]) {
+                self.inner.accumulate_grad(layer, z, lam, grad)
+            }
+            fn theta_len(&self, layer: usize) -> usize {
+                self.inner.theta_len(layer)
+            }
+            fn counters(&self) -> &StepCounters {
+                self.inner.counters()
+            }
+        }
+
+        let mut rng = Rng::new(9);
+        let ode = LinearOde::random_stable(&mut rng, 4, 32, 0.05);
+        let z0 = Tensor::randn(&mut rng, &[4, 1], 1.0);
+        let mut ctx = SolveContext::new(Box::new(ThreadedMgrit::new(2)), tiny_ws(32, &[4, 1]));
+        let prop = PanicOnce { inner: &ode, armed: AtomicBool::new(true) };
+        let r = catch_unwind(AssertUnwindSafe(|| {
+            ctx.forward(&prop, &cfg(4, 2), &z0, Some(3), None, false)
+        }));
+        assert!(r.is_err(), "the injected panic must re-raise at the call site");
+        // retry on the same context: gutted core rebuilt, poisoned pool
+        // replaced, bitwise-identical result to a fresh solver
+        let (w, _) = ctx.forward(&prop, &cfg(4, 2), &z0, Some(3), None, false);
+        let (want, _) =
+            MgritSolver::with_workers(&ode, cfg(4, 2), 2).forward(&z0, Some(3), None, false);
+        for (a, b) in w.iter().zip(&want) {
+            assert_eq!(a.data(), b.data(), "post-recovery solve must match a fresh solver");
+        }
+        assert_eq!(ctx.core_builds(), 2, "the panicked core plus its rebuild");
+    }
+
+    #[test]
+    fn invalidate_forces_rebuild_with_identical_results() {
+        let mut rng = Rng::new(4);
+        let ode = LinearOde::random_stable(&mut rng, 4, 16, 0.1);
+        let z0 = Tensor::randn(&mut rng, &[4, 1], 1.0);
+        let mut ctx = SolveContext::new(Box::new(Mgrit), tiny_ws(16, &[4, 1]));
+        let (w1, _) = ctx.forward(&ode, &cfg(4, 2), &z0, Some(3), None, false);
+        ctx.invalidate();
+        let (w2, _) = ctx.forward(&ode, &cfg(4, 2), &z0, Some(3), None, false);
+        assert_eq!(ctx.core_builds(), 2, "invalidate → one rebuild");
+        for (a, b) in w1.iter().zip(&w2) {
+            assert_eq!(a.data(), b.data(), "rebuilt core must be bitwise identical");
+        }
+    }
+}

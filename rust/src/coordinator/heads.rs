@@ -16,6 +16,23 @@ pub fn embed_fwd(
     d: usize,
 ) -> Tensor {
     let mut x = vec![0.0f32; batch * seq * d];
+    embed_into(tokens, w_emb, w_pos, batch, seq, d, &mut x);
+    Tensor::from_vec(x, &[batch, seq, d])
+}
+
+/// Buffer-reusing embed: writes x[b,s,:] = w_emb[token] + w_pos[s] into a
+/// caller-owned `[B·S·D]` slice (fully overwritten) — the zero-allocation
+/// entry point the session's step workspace routes through.
+pub fn embed_into(
+    tokens: &[i32],
+    w_emb: &[f32],
+    w_pos: &[f32],
+    batch: usize,
+    seq: usize,
+    d: usize,
+    x: &mut [f32],
+) {
+    assert_eq!(x.len(), batch * seq * d, "embed_into: destination size mismatch");
     for b in 0..batch {
         for s in 0..seq {
             let tok = tokens[b * seq + s] as usize;
@@ -27,20 +44,19 @@ pub fn embed_fwd(
             }
         }
     }
-    Tensor::from_vec(x, &[batch, seq, d])
 }
 
-/// Scatter-add the embedding gradients: (g_emb, g_pos) += from λ_x.
+/// Scatter-add the embedding gradients: (g_emb, g_pos) += from λ_x
+/// (a `[B·S·D]` slice, so stacked-state halves pass without a copy).
 pub fn embed_bwd(
     tokens: &[i32],
-    lam: &Tensor,
+    l: &[f32],
     batch: usize,
     seq: usize,
     d: usize,
     g_emb: &mut [f32],
     g_pos: &mut [f32],
 ) {
-    let l = lam.data();
     for b in 0..batch {
         for s in 0..seq {
             let tok = tokens[b * seq + s] as usize;
@@ -251,7 +267,7 @@ mod tests {
     fn embed_bwd_scatter_adds() {
         let (b, s, d, v) = (1, 2, 3, 4);
         let toks = vec![2, 2]; // same token twice -> grads add
-        let lam = Tensor::from_vec(vec![1.0; b * s * d], &[b, s, d]);
+        let lam = vec![1.0f32; b * s * d];
         let mut ge = vec![0.0; v * d];
         let mut gp = vec![0.0; s * d];
         embed_bwd(&toks, &lam, b, s, d, &mut ge, &mut gp);

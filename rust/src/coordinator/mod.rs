@@ -10,6 +10,11 @@
 //! * [`backend`] — [`Backend`]: execution strategy of the forward/adjoint
 //!   solves (`Serial` / `Mgrit` / `ThreadedMgrit`, the last driving
 //!   multi-worker relaxation through `parallel::exec` on the hot loop).
+//! * [`context`] — [`SolveContext`] + [`StepWorkspace`]: the persistent
+//!   per-session solve state — cached forward/adjoint MGRIT hierarchies,
+//!   the warm-start iterate, and the reusable fine-grid step buffers. The
+//!   session creates one context from its backend and every solve of the
+//!   run replays on it (no `MgritCore` construction at steady state).
 //! * [`objective`] — [`Objective`]: open workload interface (data
 //!   sampling, loss head, validation metric) replacing the closed task
 //!   enums.
@@ -22,6 +27,7 @@
 //!   [`TrainRun`] compatibility alias.
 
 pub mod backend;
+pub mod context;
 pub mod heads;
 pub mod objective;
 pub mod range;
@@ -29,6 +35,7 @@ pub mod session;
 pub mod trainer;
 
 pub use backend::{backend_for_workers, Backend, Mgrit, Serial, ThreadedMgrit};
+pub use context::{SolveContext, StepWorkspace};
 pub use objective::{
     ClsObjective, EvalAccum, HeadGrads, LmObjective, LossOut, Objective, TagObjective,
     TrainBatch, TranslateObjective,

@@ -128,7 +128,13 @@ impl Objective for LmObjective {
             Some(id) => self.corpus.mlm_batch(rng, m.batch, m.seq, self.mask_rate, id),
             None => self.corpus.lm_batch(rng, m.batch, m.seq),
         };
-        TrainBatch { tokens: b.tokens, targets: b.targets, mask: b.mask, labels: vec![], tgt_in: None }
+        TrainBatch {
+            tokens: b.tokens,
+            targets: b.targets,
+            mask: b.mask,
+            labels: vec![],
+            tgt_in: None,
+        }
     }
 
     fn loss(
@@ -181,7 +187,13 @@ impl Objective for TagObjective {
 
     fn sample(&self, rng: &mut Rng, m: &ModelConfig) -> TrainBatch {
         let b = self.task.batch(rng, m.batch, m.seq);
-        TrainBatch { tokens: b.tokens, targets: b.targets, mask: b.mask, labels: vec![], tgt_in: None }
+        TrainBatch {
+            tokens: b.tokens,
+            targets: b.targets,
+            mask: b.mask,
+            labels: vec![],
+            tgt_in: None,
+        }
     }
 
     fn loss(
@@ -238,7 +250,13 @@ impl Objective for ClsObjective {
 
     fn sample(&self, rng: &mut Rng, m: &ModelConfig) -> TrainBatch {
         let b = self.task.batch(rng, m.batch);
-        TrainBatch { tokens: b.tokens, targets: vec![], mask: vec![], labels: b.labels, tgt_in: None }
+        TrainBatch {
+            tokens: b.tokens,
+            targets: vec![],
+            mask: vec![],
+            labels: b.labels,
+            tgt_in: None,
+        }
     }
 
     fn loss(
@@ -334,7 +352,11 @@ impl Objective for TranslateObjective {
     }
 }
 
-/// Gradients of the non-layer parameter groups (embeddings + heads).
+/// Gradients of the non-layer parameter groups (embeddings + heads) an
+/// objective's loss head produced. Objectives fill only the groups they
+/// touch (the rest stay empty); the training step folds them into the
+/// full-size accumulators of
+/// [`crate::coordinator::context::StepWorkspace`].
 pub struct HeadGrads {
     pub emb: Vec<f32>,
     pub pos: Vec<f32>,
@@ -351,43 +373,6 @@ impl HeadGrads {
     /// Classifier-head gradient only.
     pub fn cls(gw: Vec<f32>) -> HeadGrads {
         HeadGrads { emb: vec![], pos: vec![], out: vec![], cls: gw }
-    }
-
-    pub(super) fn ensure_like(v: &mut Vec<f32>, n: usize) {
-        if v.is_empty() {
-            v.resize(n, 0.0);
-        }
-    }
-
-    pub(super) fn add(&mut self, other: &HeadGrads) {
-        for (a, b) in [
-            (&mut self.emb, &other.emb),
-            (&mut self.pos, &other.pos),
-            (&mut self.out, &other.out),
-            (&mut self.cls, &other.cls),
-        ] {
-            if b.is_empty() {
-                continue;
-            }
-            Self::ensure_like(a, b.len());
-            for (x, y) in a.iter_mut().zip(b) {
-                *x += y;
-            }
-        }
-    }
-
-    pub(super) fn scale(&mut self, s: f32) {
-        for v in [&mut self.emb, &mut self.pos, &mut self.out, &mut self.cls] {
-            v.iter_mut().for_each(|x| *x *= s);
-        }
-    }
-
-    pub(super) fn as_mut_refs(&mut self) -> Vec<&mut [f32]> {
-        [&mut self.emb, &mut self.pos, &mut self.out, &mut self.cls]
-            .into_iter()
-            .filter(|v| !v.is_empty())
-            .map(|v| v.as_mut_slice())
-            .collect()
     }
 }
 
@@ -418,13 +403,12 @@ mod tests {
     }
 
     #[test]
-    fn head_grads_accumulate_and_scale() {
-        let mut a = HeadGrads::out(vec![1.0, 2.0]);
-        let b = HeadGrads::out(vec![3.0, 4.0]);
-        a.add(&b);
-        assert_eq!(a.out, vec![4.0, 6.0]);
-        a.scale(0.5);
-        assert_eq!(a.out, vec![2.0, 3.0]);
-        assert!(a.as_mut_refs().len() == 1);
+    fn head_grads_constructors_touch_one_group() {
+        let a = HeadGrads::out(vec![1.0, 2.0]);
+        assert_eq!(a.out, vec![1.0, 2.0]);
+        assert!(a.emb.is_empty() && a.pos.is_empty() && a.cls.is_empty());
+        let b = HeadGrads::cls(vec![3.0]);
+        assert_eq!(b.cls, vec![3.0]);
+        assert!(b.emb.is_empty() && b.pos.is_empty() && b.out.is_empty());
     }
 }

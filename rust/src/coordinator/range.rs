@@ -42,6 +42,31 @@ impl<'a> Propagator for RangeProp<'a> {
         self.inner.step_into(self.start + layer, h_scale, z, out)
     }
 
+    fn step_range(&self, lo: usize, hi: usize, h_scale: f32, z: &Tensor) -> Vec<Tensor> {
+        // forward so the inner dispatch amortization (one lock/executable
+        // acquisition per sweep) also covers sub-range views
+        self.inner.step_range(self.start + lo, self.start + hi, h_scale, z)
+    }
+
+    fn step_to(&self, lo: usize, hi: usize, h_scale: f32, z: &Tensor) -> Tensor {
+        self.inner.step_to(self.start + lo, self.start + hi, h_scale, z)
+    }
+
+    fn step_to_into(
+        &self,
+        lo: usize,
+        hi: usize,
+        h_scale: f32,
+        cur: &mut Tensor,
+        scratch: &mut Tensor,
+    ) {
+        self.inner.step_to_into(self.start + lo, self.start + hi, h_scale, cur, scratch)
+    }
+
+    fn step_seq_into(&self, layer_lo: usize, h_scale: f32, states: &mut [Tensor]) {
+        self.inner.step_seq_into(self.start + layer_lo, h_scale, states)
+    }
+
     fn adjoint_step(&self, layer: usize, h_scale: f32, z: &Tensor, lam_next: &Tensor) -> Tensor {
         self.inner.adjoint_step(self.start + layer, h_scale, z, lam_next)
     }

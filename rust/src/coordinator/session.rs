@@ -12,11 +12,16 @@
 //!     .build()?
 //! ```
 //!
-//! Per batch: embed → (serial open buffers via `step_range`) → backend
-//! forward solve over the ParallelNet → (serial close buffers) → objective
-//! loss head → backend adjoint solve → parameter gradients → clip →
-//! optimizer. The §3.2.3 controller probes the MGRIT convergence factor on
-//! a cadence and can raise iteration counts or switch the run to serial.
+//! Per batch: embed → (serial open buffers, in place) → forward solve over
+//! the ParallelNet → (serial close buffers) → objective loss head →
+//! adjoint solve → parameter gradients → clip → optimizer. Every solve
+//! runs on the session's persistent [`SolveContext`]: the MGRIT
+//! hierarchies are cached across steps, states/λ/gradients live in its
+//! [`StepWorkspace`], and (with the single-threaded backends) the
+//! steady-state step performs no solver-side allocations. The §3.2.3
+//! controller probes the MGRIT convergence factor
+//! on a cadence and can raise iteration counts or switch the run to
+//! serial (which also drops the now-stale warm-start iterate).
 //!
 //! Data parallelism is executed as `dp` sequential micro-batches with
 //! gradient averaging — bit-identical math to distributed replicas (the
@@ -37,8 +42,9 @@ use crate::tensor::Tensor;
 use crate::util::rng::Rng;
 
 use super::backend::{backend_for_workers, Backend, Mgrit};
+use super::context::{SolveContext, StepWorkspace};
 use super::heads;
-use super::objective::{EvalAccum, HeadGrads, Objective, TrainBatch};
+use super::objective::{EvalAccum, Objective, TrainBatch};
 use super::range::RangeProp;
 use super::trainer::Task;
 
@@ -218,18 +224,30 @@ impl SessionBuilder {
             0
         });
         let seed = rc.train.seed;
+        // persistent solve context: cached MGRIT hierarchies + the step
+        // workspace, sized once from the session geometry
+        let n_layers = rc.model.total_layers();
+        let theta_lens: Vec<usize> = (0..n_layers).map(|l| prop.theta_len(l)).collect();
+        let head_shape = [rc.model.batch, rc.model.seq, rc.model.d_model];
+        let ws = StepWorkspace::new(
+            n_layers,
+            &prop.state_shape(),
+            &head_shape,
+            &theta_lens,
+            [params.w_emb.len(), params.w_pos.len(), params.w_out.len(), params.w_cls.len()],
+        );
+        let ctx = SolveContext::new(backend, ws);
         Ok(Session {
             rc,
             params,
             objective,
-            backend,
+            ctx,
             prop,
             opt,
             sched,
             controller,
             train_rng: Rng::new(seed.wrapping_mul(2) + 1),
             val_rng_seed: seed.wrapping_mul(2) + 2,
-            warm: None,
             warm_start: self.warm_start,
             step: 0,
             initial_loss: None,
@@ -243,15 +261,15 @@ pub struct Session {
     pub rc: RunConfig,
     pub params: ParamStore,
     objective: Box<dyn Objective>,
-    backend: Box<dyn Backend>,
+    /// Persistent solve state: the backend strategy, both cached MGRIT
+    /// hierarchies, the warm-start iterate, and the step workspace.
+    ctx: SolveContext,
     prop: Box<dyn Propagator>,
     opt: Optimizer,
     sched: LrSchedule,
     pub controller: AdaptiveController,
     train_rng: Rng,
     val_rng_seed: u64,
-    /// Warm-start iterate for the MGRIT forward solve (TorchBraid-style).
-    warm: Option<Vec<Tensor>>,
     pub warm_start: bool,
     step: usize,
     initial_loss: Option<f32>,
@@ -297,7 +315,26 @@ impl Session {
 
     /// The active backend's short name.
     pub fn backend_name(&self) -> &'static str {
-        self.backend.name()
+        self.ctx.backend().name()
+    }
+
+    /// Cached-hierarchy introspection: how many MGRIT cores this session's
+    /// solve context has built so far (2 at steady state — one per solve
+    /// direction — plus explicit rebuilds on cf/levels changes).
+    pub fn solve_core_builds(&self) -> u64 {
+        self.ctx.core_builds()
+    }
+
+    /// Drop the cached MGRIT hierarchies; the next solve rebuilds them.
+    /// The explicit-rebuild hook for out-of-band solver-geometry changes
+    /// (and the "fresh ctx" benchmark baseline).
+    pub fn invalidate_solve_context(&mut self) {
+        self.ctx.invalidate();
+    }
+
+    /// Is a TorchBraid-style warm-start iterate currently held?
+    pub fn has_warm_iterate(&self) -> bool {
+        self.ctx.has_warm()
     }
 
     fn mid_range(&self) -> (usize, usize) {
@@ -307,67 +344,42 @@ impl Session {
         (bo, n - bo - bc)
     }
 
-    /// Embed a batch into the propagator's state shape.
-    fn embed(&self, tokens: &[i32], tgt_in: Option<&[i32]>) -> Tensor {
+    /// Embed a batch into the propagator's state shape, written straight
+    /// into the workspace's Z_0 buffer (no allocation).
+    fn embed_into(&mut self, tokens: &[i32], tgt_in: Option<&[i32]>) {
         let m = &self.rc.model;
-        let x = heads::embed_fwd(tokens, &self.params.w_emb, &self.params.w_pos, m.batch, m.seq, m.d_model);
+        let dst = self.ctx.ws.states[0].data_mut();
+        let (we, wp) = (&self.params.w_emb, &self.params.w_pos);
         match tgt_in {
-            None => x,
+            None => heads::embed_into(tokens, we, wp, m.batch, m.seq, m.d_model, dst),
             Some(t) => {
-                let y = heads::embed_fwd(t, &self.params.w_emb, &self.params.w_pos, m.batch, m.seq, m.d_model);
-                let mut data = Vec::with_capacity(x.len() * 2);
-                data.extend_from_slice(x.data());
-                data.extend_from_slice(y.data());
-                Tensor::from_vec(data, &self.prop.state_shape())
+                let half = dst.len() / 2;
+                let (x, y) = dst.split_at_mut(half);
+                heads::embed_into(tokens, we, wp, m.batch, m.seq, m.d_model, x);
+                heads::embed_into(t, we, wp, m.batch, m.seq, m.d_model, y);
             }
         }
     }
 
-    /// Final decoder-side activation (the Y half for EncDec, x otherwise).
-    fn head_view(&self, z: &Tensor) -> Tensor {
-        let m = &self.rc.model;
-        if m.arch == Arch::EncDec {
-            let half = z.len() / 2;
-            Tensor::from_vec(z.data()[half..].to_vec(), &[m.batch, m.seq, m.d_model])
-        } else {
-            z.clone()
-        }
-    }
-
-    /// Lift a head cotangent back into the state shape.
-    fn lift_ct(&self, lam_head: Tensor) -> Tensor {
-        let m = &self.rc.model;
-        if m.arch == Arch::EncDec {
-            let mut data = vec![0.0f32; lam_head.len() * 2];
-            data[lam_head.len()..].copy_from_slice(lam_head.data());
-            Tensor::from_vec(data, &self.prop.state_shape())
-        } else {
-            lam_head
-        }
-    }
-
     /// One micro-batch: forward, loss, adjoint, gradients (no update).
-    /// Returns (loss, acc, rho_fwd, rho_bwd, layer_grads, head_grads).
-    #[allow(clippy::type_complexity)]
-    fn micro_batch(
-        &mut self,
-        probe: bool,
-    ) -> (f32, f32, Option<f64>, Option<f64>, Vec<Vec<f32>>, HeadGrads) {
+    /// Every state/adjoint/gradient lives in the solve context's step
+    /// workspace; gradients *accumulate* there (zeroed once per training
+    /// step, so dp micro-batches sum naturally). Returns
+    /// (loss, acc, rho_fwd, rho_bwd).
+    fn micro_batch(&mut self, probe: bool) -> (f32, f32, Option<f64>, Option<f64>) {
         let m = self.rc.model.clone();
         let n_layers = m.total_layers();
         let (bo, n_mid) = self.mid_range();
+        let stacked = m.arch == Arch::EncDec;
 
         // --- sample a batch ---------------------------------------------
         let batch: TrainBatch = self.objective.sample(&mut self.train_rng, &m);
 
         // --- forward ------------------------------------------------------
-        let z0 = self.embed(&batch.tokens, batch.tgt_in.as_deref());
-        let mut states: Vec<Tensor> = Vec::with_capacity(n_layers + 1);
-        states.push(z0);
+        self.embed_into(&batch.tokens, batch.tgt_in.as_deref());
         if bo > 0 {
-            // open buffers: serial, batched under one dispatch (v2)
-            let buf = self.prop.step_range(0, bo, 1.0, &states[0]);
-            states.extend(buf);
+            // open buffers: serial, in place, one dispatch for the sweep
+            self.prop.step_seq_into(0, 1.0, &mut self.ctx.ws.states[..=bo]);
         }
         let mid = RangeProp::new(self.prop.as_ref(), bo, n_mid);
         let fwd_iters = if probe {
@@ -375,87 +387,89 @@ impl Session {
         } else {
             self.rc.mgrit.fwd_iters
         };
-        let warm = if self.warm_start { self.warm.as_deref() } else { None };
-        let (mid_states, fstats) =
-            self.backend.forward(&mid, &self.rc.mgrit, &states[bo], fwd_iters, warm, probe);
-        if self.warm_start && !fstats.serial {
-            self.warm = Some(mid_states.clone());
-        }
-        states.extend(mid_states.into_iter().skip(1));
+        let fstats =
+            self.ctx.forward_mid(&mid, &self.rc.mgrit, bo, fwd_iters, self.warm_start, probe);
         if bo + n_mid < n_layers {
-            // close buffers: serial
-            let buf = self.prop.step_range(bo + n_mid, n_layers, 1.0, &states[bo + n_mid]);
-            states.extend(buf);
+            // close buffers: serial, in place, one dispatch for the sweep
+            self.prop.step_seq_into(bo + n_mid, 1.0, &mut self.ctx.ws.states[bo + n_mid..]);
         }
 
         // --- loss head ------------------------------------------------------
-        let x_final = self.head_view(&states[n_layers]);
-        let out = self.objective.loss(&x_final, &self.params, &batch, &m);
+        let x_final = stage_head_view(&mut self.ctx.ws, n_layers, stacked);
+        let out = self.objective.loss(x_final, &self.params, &batch, &m);
         let acc = out.correct / out.denom;
 
         // --- adjoint ---------------------------------------------------------
-        let mut lams: Vec<Option<Tensor>> = vec![None; n_layers + 1];
-        lams[n_layers] = Some(self.lift_ct(out.lam_head));
-        let mut grads: Vec<Vec<f32>> = (0..n_layers)
-            .map(|l| vec![0.0f32; self.prop.theta_len(l)])
-            .collect();
-        // close buffers: serial adjoint + grads
-        for l in ((bo + n_mid)..n_layers).rev() {
-            let lam_next = lams[l + 1].take().unwrap();
-            self.prop.accumulate_grad(l, &states[l], &lam_next, &mut grads[l]);
-            lams[l] = Some(self.prop.adjoint_step(l, 1.0, &states[l], &lam_next));
-            lams[l + 1] = Some(lam_next);
+        {
+            // seed λ_N: lift the head cotangent into the state shape
+            let lam_n = &mut self.ctx.ws.lams[n_layers];
+            if stacked {
+                let half = lam_n.len() / 2;
+                let d = lam_n.data_mut();
+                d[..half].fill(0.0);
+                d[half..].copy_from_slice(out.lam_head.data());
+            } else {
+                lam_n.copy_from(&out.lam_head);
+            }
         }
-        // backend adjoint solve over the middle
+        {
+            // close buffers: serial adjoint + grads
+            let StepWorkspace { states, lams, grads, .. } = &mut self.ctx.ws;
+            for l in ((bo + n_mid)..n_layers).rev() {
+                let (lam_lo, lam_hi) = lams.split_at_mut(l + 1);
+                self.prop.accumulate_grad(l, &states[l], &lam_hi[0], &mut grads[l]);
+                self.prop.adjoint_step_into(l, 1.0, &states[l], &lam_hi[0], &mut lam_lo[l]);
+            }
+        }
+        // backend adjoint solve + mid-range gradients on the cached cores
         let bwd_iters = if probe {
             self.controller.probe_iters(&self.rc.mgrit).1
         } else {
             self.rc.mgrit.bwd_iters
         };
-        let mid_states_ref = &states[bo..=bo + n_mid];
-        let ct = lams[bo + n_mid].clone().unwrap();
-        let (mid_lams, bstats) =
-            self.backend.adjoint(&mid, &self.rc.mgrit, mid_states_ref, &ct, bwd_iters, probe);
-        let mid_grads = self.backend.gradients(&mid, &self.rc.mgrit, mid_states_ref, &mid_lams);
-        for (i, g) in mid_grads.into_iter().enumerate() {
-            grads[bo + i] = g;
-        }
-        for (i, lam) in mid_lams.into_iter().enumerate() {
-            lams[bo + i] = Some(lam);
-        }
-        // open buffers
-        for l in (0..bo).rev() {
-            let lam_next = lams[l + 1].take().unwrap();
-            self.prop.accumulate_grad(l, &states[l], &lam_next, &mut grads[l]);
-            lams[l] = Some(self.prop.adjoint_step(l, 1.0, &states[l], &lam_next));
-            lams[l + 1] = Some(lam_next);
+        let bstats = self.ctx.adjoint_mid(&mid, &self.rc.mgrit, bo, bwd_iters, probe);
+        self.ctx.gradients_mid(&mid, bo);
+        {
+            // open buffers
+            let StepWorkspace { states, lams, grads, .. } = &mut self.ctx.ws;
+            for l in (0..bo).rev() {
+                let (lam_lo, lam_hi) = lams.split_at_mut(l + 1);
+                self.prop.accumulate_grad(l, &states[l], &lam_hi[0], &mut grads[l]);
+                self.prop.adjoint_step_into(l, 1.0, &states[l], &lam_hi[0], &mut lam_lo[l]);
+            }
         }
 
         // --- embedding gradients ----------------------------------------------
-        let lam0 = lams[0].take().unwrap();
-        let mut g_emb = vec![0.0f32; self.params.w_emb.len()];
-        let mut g_pos = vec![0.0f32; self.params.w_pos.len()];
-        if m.arch == Arch::EncDec {
-            let half = lam0.len() / 2;
-            let inner = [m.batch, m.seq, m.d_model];
-            let lx = Tensor::from_vec(lam0.data()[..half].to_vec(), &inner);
-            let ly = Tensor::from_vec(lam0.data()[half..].to_vec(), &inner);
-            heads::embed_bwd(&batch.tokens, &lx, m.batch, m.seq, m.d_model, &mut g_emb, &mut g_pos);
-            heads::embed_bwd(
-                batch.tgt_in.as_ref().unwrap(),
-                &ly,
-                m.batch,
-                m.seq,
-                m.d_model,
-                &mut g_emb,
-                &mut g_pos,
-            );
-        } else {
-            heads::embed_bwd(&batch.tokens, &lam0, m.batch, m.seq, m.d_model, &mut g_emb, &mut g_pos);
+        {
+            let StepWorkspace { lams, g_emb, g_pos, .. } = &mut self.ctx.ws;
+            let lam0 = lams[0].data();
+            if stacked {
+                let half = lam0.len() / 2;
+                heads::embed_bwd(
+                    &batch.tokens,
+                    &lam0[..half],
+                    m.batch,
+                    m.seq,
+                    m.d_model,
+                    g_emb,
+                    g_pos,
+                );
+                heads::embed_bwd(
+                    batch.tgt_in.as_ref().unwrap(),
+                    &lam0[half..],
+                    m.batch,
+                    m.seq,
+                    m.d_model,
+                    g_emb,
+                    g_pos,
+                );
+            } else {
+                heads::embed_bwd(&batch.tokens, lam0, m.batch, m.seq, m.d_model, g_emb, g_pos);
+            }
         }
-
-        let head = HeadGrads { emb: g_emb, pos: g_pos, ..out.head };
-        (out.loss, acc, fstats.conv_factor(), bstats.conv_factor(), grads, head)
+        // head-parameter gradients from the loss head
+        self.ctx.ws.add_head_grads(&out.head);
+        (out.loss, acc, fstats.conv_factor(), bstats.conv_factor())
     }
 
     /// One full training step (dp micro-batches + probe + update).
@@ -463,44 +477,33 @@ impl Session {
         self.step += 1;
         let probe = self.controller.should_probe();
         let dp = self.rc.dp_degree.max(1);
+        self.ctx.ws.zero_grads();
 
         let mut loss_sum = 0.0f32;
         let mut acc_sum = 0.0f32;
         let (mut rho_f, mut rho_b) = (None, None);
-        let mut layer_grads: Option<Vec<Vec<f32>>> = None;
-        let mut head_grads: Option<HeadGrads> = None;
         for rep in 0..dp {
-            let (l, a, rf, rb, lg, hg) = self.micro_batch(probe && rep == 0);
+            // gradient allreduce with replica semantics: each micro-batch
+            // sums into fresh zeroed accumulators (the running sum is
+            // parked in the dp scratch set meanwhile) and the per-replica
+            // totals are then added — bit-identical to v1 / distributed
+            // summation, unlike accumulating element updates in place
+            if rep > 0 {
+                self.ctx.ws.stash_grads();
+            }
+            let (l, a, rf, rb) = self.micro_batch(probe && rep == 0);
+            if rep > 0 {
+                self.ctx.ws.fold_stashed_grads();
+            }
             loss_sum += l;
             acc_sum += a;
             if rep == 0 {
                 rho_f = rf;
                 rho_b = rb;
             }
-            // gradient allreduce (sum; averaged below)
-            match (&mut layer_grads, lg) {
-                (None, lg) => layer_grads = Some(lg),
-                (Some(acc), lg) => {
-                    for (a2, b2) in acc.iter_mut().zip(lg) {
-                        for (x, y) in a2.iter_mut().zip(b2) {
-                            *x += y;
-                        }
-                    }
-                }
-            }
-            match (&mut head_grads, hg) {
-                (None, hg) => head_grads = Some(hg),
-                (Some(acc), hg) => acc.add(&hg),
-            }
         }
-        let mut layer_grads = layer_grads.unwrap();
-        let mut head = head_grads.unwrap();
         if dp > 1 {
-            let inv = 1.0 / dp as f32;
-            for g in layer_grads.iter_mut() {
-                g.iter_mut().for_each(|x| *x *= inv);
-            }
-            head.scale(inv);
+            self.ctx.ws.scale_grads(1.0 / dp as f32);
         }
         let loss = loss_sum / dp as f32;
         let acc = acc_sum / dp as f32;
@@ -522,33 +525,42 @@ impl Session {
             self.controller.force_serial(&mut self.rc.mgrit);
             self.switched_at = Some(self.step);
         }
+        if self.controller.is_serial() {
+            // the switch is sticky: the warm iterate is dead memory (and
+            // would poison a later non-serial run restored from this
+            // session) and the cached hierarchies will never be solved on
+            // again — drop both at the switch, not lazily
+            self.ctx.clear_warm();
+            self.ctx.invalidate();
+        }
 
-        // clip + update
+        // clip + update straight from the workspace accumulators (the
+        // untouched head groups are full-size zeros, so including them
+        // changes neither the norm nor the updates)
         {
-            let mut refs: Vec<&mut [f32]> = layer_grads.iter_mut().map(|g| g.as_mut_slice()).collect();
-            let mut head_refs = head.as_mut_refs();
-            refs.append(&mut head_refs);
+            let StepWorkspace { grads, g_emb, g_pos, g_out, g_cls, .. } = &mut self.ctx.ws;
+            let mut refs: Vec<&mut [f32]> = Vec::with_capacity(grads.len() + 4);
+            refs.extend(grads.iter_mut().map(|g| g.as_mut_slice()));
+            refs.push(g_emb);
+            refs.push(g_pos);
+            refs.push(g_out);
+            refs.push(g_cls);
             clip_global_norm(&mut refs, self.rc.train.grad_clip);
         }
-        // tasks only touch one head: fill the untouched groups with zeros
-        HeadGrads::ensure_like(&mut head.emb, self.params.w_emb.len());
-        HeadGrads::ensure_like(&mut head.pos, self.params.w_pos.len());
-        HeadGrads::ensure_like(&mut head.out, self.params.w_out.len());
-        HeadGrads::ensure_like(&mut head.cls, self.params.w_cls.len());
         let lr = self.sched.at(self.step);
         self.opt.begin_step();
         {
             // the only write-lock acquisition on the training path
             let mut layers = self.params.layers.write().unwrap();
-            for (i, g) in layer_grads.iter().enumerate() {
+            for (i, g) in self.ctx.ws.grads.iter().enumerate() {
                 self.opt.update(i, lr, &mut layers[i], g);
             }
         }
         let nl = self.rc.model.total_layers();
-        self.opt.update(nl, lr, &mut self.params.w_emb, &head.emb);
-        self.opt.update(nl + 1, lr, &mut self.params.w_pos, &head.pos);
-        self.opt.update(nl + 2, lr, &mut self.params.w_out, &head.out);
-        self.opt.update(nl + 3, lr, &mut self.params.w_cls, &head.cls);
+        self.opt.update(nl, lr, &mut self.params.w_emb, &self.ctx.ws.g_emb);
+        self.opt.update(nl + 1, lr, &mut self.params.w_pos, &self.ctx.ws.g_pos);
+        self.opt.update(nl + 2, lr, &mut self.params.w_out, &self.ctx.ws.g_out);
+        self.opt.update(nl + 3, lr, &mut self.params.w_cls, &self.ctx.ws.g_cls);
 
         StepRecord {
             step: self.step,
@@ -557,27 +569,32 @@ impl Session {
             lr,
             serial: self.rc.mgrit.is_serial()
                 || self.controller.is_serial()
-                || self.backend.forces_exact(),
+                || self.ctx.backend().forces_exact(),
             rho_fwd: rho_f,
             rho_bwd: rho_b,
         }
     }
 
     /// Validation metric over `n_batches` fresh batches (exact forward).
-    /// Accuracy for token/sequence tasks; BLEU-4 for Translate.
+    /// Accuracy for token/sequence tasks; BLEU-4 for Translate. The sweep
+    /// runs through the propagator's zero-allocation `step_into` ping-pong
+    /// over two persistent workspace buffers — no per-batch state
+    /// allocations (and still one dispatch for the whole sweep).
     pub fn evaluate(&mut self, n_batches: usize) -> f64 {
         let m = self.rc.model.clone();
         let n_layers = m.total_layers();
+        let stacked = m.arch == Arch::EncDec;
         let mut rng = Rng::new(self.val_rng_seed);
         let mut acc = EvalAccum::default();
         for _ in 0..n_batches {
             let batch = self.objective.sample(&mut rng, &m);
-            // exact serial forward for evaluation: rolling state, one
-            // dispatch (lock/executable) for the whole sweep
-            let z0 = self.embed(&batch.tokens, batch.tgt_in.as_deref());
-            let z = self.prop.step_to(0, n_layers, 1.0, &z0);
-            let x_final = self.head_view(&z);
-            self.objective.eval_batch(&x_final, &self.params, &batch, &m, &mut acc);
+            self.embed_into(&batch.tokens, batch.tgt_in.as_deref());
+            {
+                let StepWorkspace { states, pp, .. } = &mut self.ctx.ws;
+                self.prop.step_to_into(0, n_layers, 1.0, &mut states[0], pp);
+            }
+            let x_final = stage_head_view(&mut self.ctx.ws, 0, stacked);
+            self.objective.eval_batch(x_final, &self.params, &batch, &m, &mut acc);
         }
         self.objective.metric(&acc)
     }
@@ -602,5 +619,19 @@ impl Session {
         report.phi_vjp = self.prop.counters().vjp();
         report.switched_at = self.switched_at;
         Ok(report)
+    }
+}
+
+/// Stage the loss head's input for workspace state `idx`: stacked EncDec
+/// states copy their decoder half into `ws.head` (a persistent [B,S,D]
+/// buffer); flat states are handed to the head directly.
+fn stage_head_view(ws: &mut StepWorkspace, idx: usize, stacked: bool) -> &Tensor {
+    if stacked {
+        let half = ws.states[idx].len() / 2;
+        let StepWorkspace { states, head, .. } = &mut *ws;
+        head.data_mut().copy_from_slice(&states[idx].data()[half..]);
+        &ws.head
+    } else {
+        &ws.states[idx]
     }
 }

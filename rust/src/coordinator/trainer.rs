@@ -1,19 +1,32 @@
 //! Task selection and the v1 compatibility surface of the trainer.
 //!
-//! ## Architecture (Session API v2)
+//! ## Architecture (Session API v2 + persistent solve contexts)
 //!
 //! The training engine lives in [`super::session`] and is composed of
-//! three orthogonal abstractions:
+//! four orthogonal abstractions:
 //!
 //! * [`super::session::Session`] — the run itself: batch loop, buffer-layer
-//!   sweeps (batched through `Propagator::step_range`), §3.2.3 probes,
+//!   sweeps (in place through `Propagator::step_into`), §3.2.3 probes,
 //!   gradient clipping, optimizer updates, evaluation, run recording.
 //!   Built via `Session::builder()` (preset/config → propagator → backend
 //!   → objective).
-//! * [`super::backend::Backend`] — the execution strategy of the forward
+//! * [`super::backend::Backend`] — the execution *strategy* of the forward
 //!   and adjoint solves: `Serial` (exact), `Mgrit` (single-threaded
 //!   V-cycles), `ThreadedMgrit` (multi-worker relaxation through
-//!   `parallel::exec`, bitwise identical to `Mgrit`).
+//!   `parallel::exec` on a persistent worker pool, bitwise identical to
+//!   `Mgrit`). A backend only names the mode — worker count, relaxation
+//!   pool, iteration-budget mapping; it no longer runs solves itself.
+//! * [`super::context::SolveContext`] — the execution *state*: the session
+//!   creates one context from its backend at build time and holds it for
+//!   its lifetime. The context owns both cached MGRIT hierarchies
+//!   (forward + adjoint, built at most once per direction and reused
+//!   across every solve of the run — §3.2.3 iteration doubling reuses
+//!   them, the serial switch bypasses them, cf/levels changes rebuild
+//!   them), the TorchBraid-style warm-start iterate (dropped at the
+//!   serial switch), and the `StepWorkspace` with every fine-grid
+//!   states/λ/gradient buffer, so the steady-state training step
+//!   performs no solver-side allocations (`rust/tests/alloc_audit.rs`,
+//!   `rust/tests/core_reuse.rs`).
 //! * [`super::objective::Objective`] — the workload: data sampling, loss
 //!   head, validation metric. The paper's five tasks are provided; new
 //!   workloads implement the trait without touching the coordinator.

@@ -31,7 +31,12 @@
 //!   (single-threaded V-cycles), `ThreadedMgrit` (multi-worker relaxation
 //!   through [`parallel::exec`] with channel-fabric halo exchange — the
 //!   paper's Fig. 2 decomposition on the real training hot loop, bitwise
-//!   identical to the single-threaded solver).
+//!   identical to the single-threaded solver). Each session turns its
+//!   backend into a persistent [`coordinator::SolveContext`] that caches
+//!   the forward/adjoint MGRIT hierarchies, the warm-start iterate, and
+//!   the fine-grid step workspace across the whole run — with the
+//!   single-threaded backends the steady-state training step performs no
+//!   solver-side allocations (threaded sweeps still stage their slabs).
 //! * **Objective** — the open workload interface
 //!   ([`coordinator::objective`]): data sampling, loss head, validation
 //!   metric. The paper's five tasks ship as implementations; new workloads

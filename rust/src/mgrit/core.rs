@@ -25,11 +25,19 @@
 //! spawns (same schedule, amortized spawn cost). This is the engine room of
 //! the `ThreadedMgrit` backend.
 
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 
 use crate::parallel::exec;
 use crate::parallel::pool::WorkerPool;
 use crate::tensor::Tensor;
+
+/// Process-wide count of [`MgritCore`] constructions. The persistent
+/// solve-context design promises that cores are built at most once per
+/// `Session` per direction (plus explicit rebuilds on cf/levels changes);
+/// `rust/tests/core_reuse.rs` pins that promise by watching this counter
+/// across steady-state training steps.
+static CORE_CONSTRUCTIONS: AtomicU64 = AtomicU64::new(0);
 
 /// One time-step on an arbitrary MGRIT level.
 ///
@@ -92,6 +100,7 @@ pub struct CoreStats {
 impl MgritCore {
     /// Build storage for `n` fine steps with state shaped like `proto`.
     pub fn new(n: usize, cf: usize, max_levels: usize, fcf: bool, proto: &Tensor) -> MgritCore {
+        CORE_CONSTRUCTIONS.fetch_add(1, Ordering::Relaxed);
         let grid = super::grid::GridHierarchy::new(n, cf, max_levels);
         let levels = grid
             .steps
@@ -133,8 +142,47 @@ impl MgritCore {
         self
     }
 
+    /// Process-wide number of `MgritCore::new` calls so far (see
+    /// [`CORE_CONSTRUCTIONS`]): the hierarchy-reuse acceptance counter.
+    pub fn total_constructed() -> u64 {
+        CORE_CONSTRUCTIONS.load(Ordering::Relaxed)
+    }
+
+    /// (Re-)attach the relaxation execution mode for the next solve.
+    ///
+    /// Cached cores outlive individual solves, but the backend's worker
+    /// pool does not have to (a pool poisoned by a panicked sweep is
+    /// rebuilt): callers refresh the attachment per solve. `Some(pool)`
+    /// routes sweeps onto the pool and adopts its worker count; `None`
+    /// detaches the pool but keeps the configured worker count (scoped
+    /// spawns / single-threaded schedule).
+    pub fn set_pool(&mut self, pool: Option<Arc<WorkerPool>>) {
+        if let Some(p) = &pool {
+            self.workers = p.size().max(1);
+        }
+        self.pool = pool;
+    }
+
     pub fn n_levels(&self) -> usize {
         self.levels.len()
+    }
+
+    /// Fine steps N this core's storage was built for.
+    pub fn n_fine_steps(&self) -> usize {
+        self.levels[0].n
+    }
+
+    /// Structural health check for cores cached across solves. A panicked
+    /// *threaded* relaxation sweep unwinds through the slab executor while
+    /// a level's `w`/`g` vectors are `mem::take`n out, leaving them empty;
+    /// a fresh-per-solve core simply drops, but a cached one would be
+    /// reused gutted. The per-`Session` solve context treats a non-intact
+    /// core as a cache miss and rebuilds it (alongside the poisoned-pool
+    /// replacement in the backend).
+    pub fn is_intact(&self) -> bool {
+        self.levels
+            .iter()
+            .all(|l| l.w.len() == l.n + 1 && l.g.len() == l.n + 1 && l.w_init.len() == l.n + 1)
     }
 
     /// Direct serial solve of A(W)=G on the fine grid (the baseline / L=1
@@ -199,6 +247,35 @@ impl MgritCore {
     /// Fine-grid solution points (valid after `solve`/`serial_solve`).
     pub fn solution(&self) -> &[Tensor] {
         &self.levels[0].w
+    }
+
+    /// Copy the fine-grid solution into caller-owned buffers (`out` must
+    /// hold N+1 state-shaped tensors, fully overwritten). The `_into`
+    /// handoff for cached cores: no `to_vec()` clone, no allocation once
+    /// the destination buffers exist.
+    pub fn solution_into(&self, out: &mut [Tensor]) {
+        let w = &self.levels[0].w;
+        assert_eq!(out.len(), w.len(), "solution_into: need N+1 destination tensors");
+        for (dst, src) in out.iter_mut().zip(w) {
+            dst.copy_from(src);
+        }
+    }
+
+    /// Like [`MgritCore::solution_into`] but in reversed point order
+    /// (`out[i] = W[N−i]`): the adjoint solve runs in reversed time
+    /// coordinates and hands its λ back on the natural fine grid.
+    pub fn solution_rev_into(&self, out: &mut [Tensor]) {
+        let w = &self.levels[0].w;
+        assert_eq!(out.len(), w.len(), "solution_rev_into: need N+1 destination tensors");
+        for (dst, src) in out.iter_mut().zip(w.iter().rev()) {
+            dst.copy_from(src);
+        }
+    }
+
+    /// Consume the core and move the fine-grid solution out (the one-shot
+    /// path: fresh core per solve, zero-copy extraction).
+    pub fn into_solution(mut self) -> Vec<Tensor> {
+        std::mem::take(&mut self.levels[0].w)
     }
 
     /// Multilevel (FMG / nested-iteration) initialization, after Cyr,

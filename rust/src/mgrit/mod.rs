@@ -15,4 +15,4 @@ mod solver;
 
 pub use self::core::{LevelStepper, MgritCore};
 pub use grid::GridHierarchy;
-pub use solver::{MgritSolver, SolveStats};
+pub use solver::{accumulate_layer_grads, MgritSolver, SolveStats};

@@ -127,9 +127,13 @@ impl<'a, P: Propagator + ?Sized> MgritSolver<'a, P> {
         Tensor::zeros(&self.prop.state_shape())
     }
 
-    /// Build the preallocated FAS core for `n` fine steps, wired to this
-    /// solver's execution mode (workers and optional pool).
-    fn core(&self, n: usize) -> MgritCore {
+    /// Build the preallocated FAS core for this solver's propagator, wired
+    /// to its execution mode (workers and optional pool). Public since the
+    /// persistent-context refactor: a [`crate::coordinator::SolveContext`]
+    /// builds a core once per direction and then replays solves on it via
+    /// [`MgritSolver::forward_with`] / [`MgritSolver::adjoint_with`].
+    pub fn build_core(&self) -> MgritCore {
+        let n = self.prop.n_steps();
         let core = MgritCore::new(n, self.cfg.cf, self.cfg.levels, self.cfg.fcf, &self.proto())
             .with_workers(self.workers);
         match &self.pool {
@@ -145,7 +149,9 @@ impl<'a, P: Propagator + ?Sized> MgritSolver<'a, P> {
     /// * `iters = Some(k)` → k MGRIT V-cycles; `warm` optionally seeds the
     ///   iterate with the previous batch's states.
     ///
-    /// Returns all fine-grid states Z_0..Z_N and statistics.
+    /// One-shot convenience: builds a fresh core and moves the solution
+    /// out. The steady-state training path keeps a cached core instead and
+    /// calls [`MgritSolver::forward_with`].
     pub fn forward(
         &self,
         z0: &Tensor,
@@ -153,11 +159,26 @@ impl<'a, P: Propagator + ?Sized> MgritSolver<'a, P> {
         warm: Option<&[Tensor]>,
         track_residuals: bool,
     ) -> (Vec<Tensor>, SolveStats) {
+        let mut core = self.build_core();
+        let stats = self.forward_with(&mut core, z0, iters, warm, track_residuals);
+        (core.into_solution(), stats)
+    }
+
+    /// Forward solve on a caller-owned core (cached across solves by the
+    /// per-`Session` solve context). The solution stays in the core; hand
+    /// it off with [`MgritCore::solution_into`] / `solution()`.
+    pub fn forward_with(
+        &self,
+        core: &mut MgritCore,
+        z0: &Tensor,
+        iters: Option<usize>,
+        warm: Option<&[Tensor]>,
+        track_residuals: bool,
+    ) -> SolveStats {
+        assert_eq!(core.n_fine_steps(), self.prop.n_steps(), "core/propagator size mismatch");
         let stepper = FwdStepper(self.prop);
-        let n = self.prop.n_steps();
         let before = self.prop.counters().fwd();
-        let mut core = self.core(n);
-        let stats = match iters {
+        match iters {
             None => {
                 core.serial_solve(&stepper, z0);
                 SolveStats {
@@ -176,8 +197,7 @@ impl<'a, P: Propagator + ?Sized> MgritSolver<'a, P> {
                     serial: false,
                 }
             }
-        };
-        (core.solution().to_vec(), stats)
+        }
     }
 
     /// Forward solve with multilevel (FMG / nested-iteration)
@@ -192,9 +212,8 @@ impl<'a, P: Propagator + ?Sized> MgritSolver<'a, P> {
         track_residuals: bool,
     ) -> (Vec<Tensor>, SolveStats) {
         let stepper = FwdStepper(self.prop);
-        let n = self.prop.n_steps();
         let before = self.prop.counters().fwd();
-        let mut core = self.core(n);
+        let mut core = self.build_core();
         let s = core.solve_fmg(&stepper, z0, iters, track_residuals);
         let stats = SolveStats {
             iterations: iters,
@@ -202,7 +221,7 @@ impl<'a, P: Propagator + ?Sized> MgritSolver<'a, P> {
             phi_evals: self.prop.counters().fwd() - before,
             serial: false,
         };
-        (core.solution().to_vec(), stats)
+        (core.into_solution(), stats)
     }
 
     /// Adjoint propagation (paper §3.2.2): solves the discretized adjoint
@@ -215,12 +234,31 @@ impl<'a, P: Propagator + ?Sized> MgritSolver<'a, P> {
         iters: Option<usize>,
         track_residuals: bool,
     ) -> (Vec<Tensor>, SolveStats) {
+        let mut core = self.build_core();
+        let stats = self.adjoint_with(&mut core, states, ct, iters, track_residuals);
+        // reverse back to natural ordering: λ_fine[n] = Λ[N − n]
+        let mut lambdas = core.into_solution();
+        lambdas.reverse();
+        (lambdas, stats)
+    }
+
+    /// Adjoint solve on a caller-owned core. The solution stays in the
+    /// core **in reversed time coordinates** (Λ_j = λ_{N−j}); hand it back
+    /// on the natural grid with [`MgritCore::solution_rev_into`].
+    pub fn adjoint_with(
+        &self,
+        core: &mut MgritCore,
+        states: &[Tensor],
+        ct: &Tensor,
+        iters: Option<usize>,
+        track_residuals: bool,
+    ) -> SolveStats {
         let n = self.prop.n_steps();
         assert_eq!(states.len(), n + 1, "need all fine states for the adjoint");
+        assert_eq!(core.n_fine_steps(), n, "core/propagator size mismatch");
         let stepper = AdjStepper { prop: self.prop, states };
         let before = self.prop.counters().vjp();
-        let mut core = self.core(n);
-        let stats = match iters {
+        match iters {
             None => {
                 core.serial_solve(&stepper, ct);
                 SolveStats {
@@ -239,24 +277,44 @@ impl<'a, P: Propagator + ?Sized> MgritSolver<'a, P> {
                     serial: false,
                 }
             }
-        };
-        // reverse back to natural ordering: λ_fine[n] = Λ[N − n]
-        let sol = core.solution();
-        let lambdas: Vec<Tensor> = (0..=n).map(|i| sol[n - i].clone()).collect();
-        (lambdas, stats)
+        }
     }
 
     /// Assemble per-layer parameter gradients on the fine grid:
     /// g_n = ∂(λ_{n+1}ᵀ Φ(Z_n; θ_n))/∂θ_n.
     pub fn gradients(&self, states: &[Tensor], lambdas: &[Tensor]) -> Vec<Vec<f32>> {
         let n = self.prop.n_steps();
-        let mut grads = Vec::with_capacity(n);
-        for layer in 0..n {
-            let mut g = vec![0.0f32; self.prop.theta_len(layer)];
-            self.prop.accumulate_grad(layer, &states[layer], &lambdas[layer + 1], &mut g);
-            grads.push(g);
-        }
+        let mut grads: Vec<Vec<f32>> =
+            (0..n).map(|layer| vec![0.0f32; self.prop.theta_len(layer)]).collect();
+        self.gradients_into(states, lambdas, &mut grads);
         grads
+    }
+
+    /// Accumulate per-layer parameter gradients into caller-owned buffers
+    /// (`grads[l]` must have `theta_len(l)` elements; contributions are
+    /// **added**, so zero the buffers once per optimizer step).
+    pub fn gradients_into(&self, states: &[Tensor], lambdas: &[Tensor], grads: &mut [Vec<f32>]) {
+        assert_eq!(grads.len(), self.prop.n_steps(), "need one gradient buffer per layer");
+        accumulate_layer_grads(self.prop, states, lambdas, grads, 0);
+    }
+}
+
+/// The one gradient-assembly loop every caller shares:
+/// g_l += ∂(λ_{l+1}ᵀ Φ(Z_l; θ_l))/∂θ_l for each of `prop`'s layers,
+/// offset by `at` into the caller's fine-grid slices (contributions are
+/// added — zero the buffers once per optimizer step). Used by
+/// [`MgritSolver::gradients_into`] and the per-`Session`
+/// [`crate::coordinator::SolveContext`] so gradient conventions cannot
+/// silently diverge between the solver-level and context-level paths.
+pub fn accumulate_layer_grads<P: Propagator + ?Sized>(
+    prop: &P,
+    states: &[Tensor],
+    lams: &[Tensor],
+    grads: &mut [Vec<f32>],
+    at: usize,
+) {
+    for l in 0..prop.n_steps() {
+        prop.accumulate_grad(l, &states[at + l], &lams[at + l + 1], &mut grads[at + l]);
     }
 }
 

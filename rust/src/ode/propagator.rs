@@ -85,7 +85,13 @@ pub trait Propagator: Send + Sync {
     /// amortize per-call dispatch (parameter-lock acquisition, executable
     /// lookup) across a whole chunk — the serial buffer sweeps, evaluation
     /// forwards, and relaxation chunks all step consecutive layers.
-    fn step_range(&self, layer_lo: usize, layer_hi: usize, h_scale: f32, z: &Tensor) -> Vec<Tensor> {
+    fn step_range(
+        &self,
+        layer_lo: usize,
+        layer_hi: usize,
+        h_scale: f32,
+        z: &Tensor,
+    ) -> Vec<Tensor> {
         let mut out: Vec<Tensor> = Vec::with_capacity(layer_hi.saturating_sub(layer_lo));
         for layer in layer_lo..layer_hi {
             let next = self.step(layer, h_scale, out.last().unwrap_or(z));
@@ -103,6 +109,40 @@ pub trait Propagator: Send + Sync {
             cur = self.step(layer, h_scale, &cur);
         }
         cur
+    }
+
+    /// Buffer-reusing rolling forward: `cur` holds Z_{layer_lo} on entry
+    /// and Z_{layer_hi} on return; `scratch` is a second state-shaped
+    /// ping-pong buffer (contents unspecified afterwards). Zero
+    /// allocations when [`Propagator::step_into`] is; evaluation sweeps
+    /// route through this with two persistent workspace tensors.
+    fn step_to_into(
+        &self,
+        layer_lo: usize,
+        layer_hi: usize,
+        h_scale: f32,
+        cur: &mut Tensor,
+        scratch: &mut Tensor,
+    ) {
+        for layer in layer_lo..layer_hi {
+            self.step_into(layer, h_scale, cur, scratch);
+            std::mem::swap(cur, scratch);
+        }
+    }
+
+    /// Buffer-reusing batched propagation over consecutive layers:
+    /// `states[0]` holds Z_{layer_lo} on entry; on return `states[i]`
+    /// holds Z_{layer_lo+i}, i.e. the sweep advances `states.len() − 1`
+    /// layers keeping every intermediate. The in-place counterpart of
+    /// [`Propagator::step_range`]: implementations amortize per-call
+    /// dispatch (parameter lock, executable lookup) across the sweep
+    /// without its allocations — the session's serial buffer-layer sweeps
+    /// run through this on persistent workspace tensors.
+    fn step_seq_into(&self, layer_lo: usize, h_scale: f32, states: &mut [Tensor]) {
+        for i in 1..states.len() {
+            let (head, tail) = states.split_at_mut(i);
+            self.step_into(layer_lo + i - 1, h_scale, &head[i - 1], &mut tail[0]);
+        }
     }
 
     /// Adjoint step: λ_n = (∂Φ/∂Z(Z_n; θ_layer, h_scale·fine_h))ᵀ λ_{n+1}.

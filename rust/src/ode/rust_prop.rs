@@ -227,7 +227,13 @@ impl Propagator for RustPropagator {
 
     /// Batched steps under a single read-lock acquisition (the v2
     /// dispatch-amortization entry point).
-    fn step_range(&self, layer_lo: usize, layer_hi: usize, h_scale: f32, z: &Tensor) -> Vec<Tensor> {
+    fn step_range(
+        &self,
+        layer_lo: usize,
+        layer_hi: usize,
+        h_scale: f32,
+        z: &Tensor,
+    ) -> Vec<Tensor> {
         let params = self.params.read().unwrap();
         let mut out: Vec<Tensor> = Vec::with_capacity(layer_hi.saturating_sub(layer_lo));
         for layer in layer_lo..layer_hi {
@@ -247,16 +253,42 @@ impl Propagator for RustPropagator {
     /// Rolling full forward under a single read-lock acquisition: two
     /// ping-pong state buffers, no per-step allocation.
     fn step_to(&self, layer_lo: usize, layer_hi: usize, h_scale: f32, z: &Tensor) -> Tensor {
-        let params = self.params.read().unwrap();
         let mut cur = z.clone();
         let mut next = Tensor::zeros(z.shape());
+        self.step_to_into(layer_lo, layer_hi, h_scale, &mut cur, &mut next);
+        cur
+    }
+
+    /// Caller-owned ping-pong buffers, still one read-lock acquisition for
+    /// the whole sweep: the fully zero-allocation evaluation forward.
+    fn step_to_into(
+        &self,
+        layer_lo: usize,
+        layer_hi: usize,
+        h_scale: f32,
+        cur: &mut Tensor,
+        scratch: &mut Tensor,
+    ) {
+        let params = self.params.read().unwrap();
         for layer in layer_lo..layer_hi {
             self.counters.count_fwd();
             let h = self.hs[layer] * h_scale;
-            self.apply_into(layer, &params[layer], h, cur.data(), next.data_mut());
-            std::mem::swap(&mut cur, &mut next);
+            self.apply_into(layer, &params[layer], h, cur.data(), scratch.data_mut());
+            std::mem::swap(cur, scratch);
         }
-        cur
+    }
+
+    /// In-place batched sweep under a single read-lock acquisition (the
+    /// zero-allocation counterpart of `step_range`; buffer-layer sweeps).
+    fn step_seq_into(&self, layer_lo: usize, h_scale: f32, states: &mut [Tensor]) {
+        let params = self.params.read().unwrap();
+        for i in 1..states.len() {
+            self.counters.count_fwd();
+            let layer = layer_lo + i - 1;
+            let h = self.hs[layer] * h_scale;
+            let (head, tail) = states.split_at_mut(i);
+            self.apply_into(layer, &params[layer], h, head[i - 1].data(), tail[0].data_mut());
+        }
     }
 
     fn adjoint_step(&self, layer: usize, h_scale: f32, z: &Tensor, lam_next: &Tensor) -> Tensor {

@@ -216,7 +216,13 @@ impl Propagator for XlaPropagator {
     /// Batched steps with the executable resolved once (the v2
     /// dispatch-amortization entry point: one cache lookup, one call-counter
     /// bump, per chunk instead of per layer).
-    fn step_range(&self, layer_lo: usize, layer_hi: usize, h_scale: f32, z: &Tensor) -> Vec<Tensor> {
+    fn step_range(
+        &self,
+        layer_lo: usize,
+        layer_hi: usize,
+        h_scale: f32,
+        z: &Tensor,
+    ) -> Vec<Tensor> {
         self.drive_range(layer_lo, layer_hi, h_scale, z, true)
     }
 
@@ -225,6 +231,35 @@ impl Propagator for XlaPropagator {
         self.drive_range(layer_lo, layer_hi, h_scale, z, false)
             .pop()
             .unwrap_or_else(|| z.clone())
+    }
+
+    /// Buffer-reusing rolling forward. XLA marshals fresh output buffers
+    /// per call anyway, so this delegates to the amortized `step_to` (one
+    /// executable lookup for the sweep) and copies the result into `cur`
+    /// — the zero-allocation contract is the Rust propagator's.
+    fn step_to_into(
+        &self,
+        layer_lo: usize,
+        layer_hi: usize,
+        h_scale: f32,
+        cur: &mut Tensor,
+        _scratch: &mut Tensor,
+    ) {
+        let out = self.step_to(layer_lo, layer_hi, h_scale, cur);
+        cur.copy_from(&out);
+    }
+
+    /// In-place batched sweep: one executable lookup for the whole chunk
+    /// (via `step_range`), results copied into the caller's buffers.
+    fn step_seq_into(&self, layer_lo: usize, h_scale: f32, states: &mut [Tensor]) {
+        let n = states.len().saturating_sub(1);
+        if n == 0 {
+            return;
+        }
+        let out = self.step_range(layer_lo, layer_lo + n, h_scale, &states[0]);
+        for (dst, src) in states[1..].iter_mut().zip(&out) {
+            dst.copy_from(src);
+        }
     }
 
     fn adjoint_step(&self, layer: usize, h_scale: f32, z: &Tensor, lam_next: &Tensor) -> Tensor {

@@ -20,6 +20,17 @@
 //!   and it also guarantees every in-sweep halo message is consumed
 //!   before the next sweep starts.
 //! * `Drop` closes the job channels and joins the threads.
+//!
+//! ## Wiring with persistent solve contexts
+//!
+//! Since the solve-context refactor, the MGRIT hierarchies that drive the
+//! sweeps are themselves cached per `Session`
+//! ([`crate::coordinator::SolveContext`]). A cached
+//! [`crate::mgrit::MgritCore`] does **not** pin the pool it last ran with:
+//! the context re-fetches `Backend::pool()` before every solve and
+//! re-attaches it via `MgritCore::set_pool`, so a pool that was poisoned
+//! and rebuilt mid-run is picked up transparently while the (expensive)
+//! level storage stays cached.
 
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicBool, Ordering};
@@ -44,6 +55,14 @@ pub struct WorkerPool {
     /// previous-sweep state. `run_scoped` refuses a poisoned pool;
     /// owners (`ThreadedMgrit`) rebuild instead of reusing.
     poisoned: AtomicBool,
+    /// Serializes whole sweeps. The fabric's halo messages are tagged by
+    /// position within a sweep, not by sweep identity, so two sweeps
+    /// interleaving on the same pool would dequeue each other's boundary
+    /// states — wrong data, silently. In-tree callers are already
+    /// serialized (one solve at a time per `Session`), but the pool is
+    /// handed out as `Arc` clones; this guard makes concurrent callers
+    /// block instead of corrupt.
+    sweep: Mutex<()>,
     handles: Vec<JoinHandle<()>>,
 }
 
@@ -83,7 +102,13 @@ impl WorkerPool {
             senders.push(tx);
             handles.push(handle);
         }
-        WorkerPool { size, senders: Mutex::new(senders), poisoned: AtomicBool::new(false), handles }
+        WorkerPool {
+            size,
+            senders: Mutex::new(senders),
+            poisoned: AtomicBool::new(false),
+            sweep: Mutex::new(()),
+            handles,
+        }
     }
 
     /// Number of worker threads (= fabric ranks).
@@ -114,6 +139,10 @@ impl WorkerPool {
     /// the already-dispatched prefix `0..r` is self-contained: the barrier
     /// still completes for it before this method reports the dead worker.
     pub fn run_scoped<'scope>(&self, jobs: Vec<Box<dyn FnOnce(&mut Endpoint) + Send + 'scope>>) {
+        // one sweep at a time on the shared fabric (see the `sweep` field);
+        // mutex poisoning is ignored — the pool's own `poisoned` flag is
+        // the authoritative failed-sweep signal and is checked right after
+        let _sweep = self.sweep.lock().unwrap_or_else(|e| e.into_inner());
         assert!(
             !self.is_poisoned(),
             "worker pool poisoned by an earlier failed sweep; drop and rebuild it"

@@ -15,7 +15,9 @@
 //! pin the pool schedule and the `*_into` math against the serial oracle.
 
 use layertime::config::{presets, MgritConfig, RunConfig};
-use layertime::coordinator::{Backend, Mgrit, Serial, Session, Task, ThreadedMgrit};
+use layertime::coordinator::{
+    backend_for_workers, Backend, Mgrit, Serial, Session, Task, ThreadedMgrit,
+};
 use layertime::mgrit::MgritSolver;
 use layertime::ode::{shared_params, Propagator, RustPropagator};
 use layertime::tensor::Tensor;
@@ -90,6 +92,70 @@ fn prop_threaded_mgrit_is_bitwise_identical_to_single_threaded() {
         for workers in [1usize, 2, 4] {
             let thr = run(Box::new(ThreadedMgrit::new(workers)), rc.clone(), 3);
             assert_identical("mgrit-vs-threaded", &single, &thr);
+        }
+    });
+}
+
+#[test]
+fn prop_cached_cores_match_fresh_cores_across_adaptive_transitions() {
+    // The persistent-context acceptance property: a run whose controller
+    // fires IncreaseIters and then SwitchSerial mid-run produces bitwise
+    // identical curves whether the MGRIT hierarchies are cached across
+    // steps (the steady-state path) or rebuilt fresh before every step
+    // (`invalidate_solve_context`), for 1/2/4 workers. The transitions are
+    // driven through the controller's public API so both arms see the
+    // exact same config mutations at the exact same steps.
+    forall("cached-vs-fresh-adaptive", 3, |rng| {
+        let seed = rng.range(1000) as u64;
+        let rc = tiny_mc(seed, 2, Some(1), Some(1));
+        for workers in [1usize, 2, 4] {
+            let mk = || {
+                Session::builder()
+                    .config(rc.clone())
+                    .task(Task::Tag)
+                    .backend(backend_for_workers(workers))
+                    .build()
+                    .unwrap()
+            };
+            let mut cached = mk();
+            let mut fresh = mk();
+            let (mut curve_c, mut curve_f) = (Vec::new(), Vec::new());
+            for step in 0..6 {
+                if step == 2 {
+                    // ρ = 0.95 ∈ [rho_grow, rho_switch): IncreaseIters —
+                    // iteration counts double, the cached cores must be
+                    // reused as-is
+                    cached.controller.observe(Some(0.95), None, &mut cached.rc.mgrit);
+                    fresh.controller.observe(Some(0.95), None, &mut fresh.rc.mgrit);
+                    assert_eq!(cached.rc.mgrit.fwd_iters, Some(2));
+                }
+                if step == 4 {
+                    // SwitchSerial: the cached cores are bypassed
+                    cached.controller.force_serial(&mut cached.rc.mgrit);
+                    fresh.controller.force_serial(&mut fresh.rc.mgrit);
+                }
+                fresh.invalidate_solve_context();
+                curve_c.push(cached.train_step().loss.to_bits());
+                curve_f.push(fresh.train_step().loss.to_bits());
+            }
+            assert_eq!(curve_c, curve_f, "loss curves, workers={}", workers);
+            let a = cached.params.layers.read().unwrap().clone();
+            let b = fresh.params.layers.read().unwrap().clone();
+            for (l, (x, y)) in a.iter().zip(&b).enumerate() {
+                assert_eq!(x, y, "layer {} params, workers={}", l, workers);
+            }
+            assert!(cached.controller.is_serial());
+            assert_eq!(
+                cached.solve_core_builds(),
+                2,
+                "cached arm must keep its two cores across both transitions (workers={})",
+                workers
+            );
+            assert!(
+                !cached.has_warm_iterate(),
+                "the warm iterate must be dropped at the serial switch (workers={})",
+                workers
+            );
         }
     });
 }

@@ -1,0 +1,64 @@
+//! Acceptance pin for the persistent solve contexts: **no `MgritCore`
+//! construction on the steady-state training path** — cores are built at
+//! most once per `Session` per direction, plus explicit rebuilds on
+//! cf/levels changes.
+//!
+//! Watches the process-wide `MgritCore::total_constructed()` counter, so
+//! this file must stay a single-`#[test]` binary (tests within one binary
+//! run concurrently and any other test constructing cores would perturb
+//! the count).
+
+use layertime::config::{presets, MgritConfig};
+use layertime::coordinator::{Mgrit, Session, Task};
+use layertime::mgrit::MgritCore;
+
+#[test]
+fn steady_state_training_constructs_no_cores() {
+    let mut rc = presets::by_name("mc").expect("mc preset");
+    rc.model.vocab = 16;
+    rc.model.d_model = 16;
+    rc.model.n_heads = 2;
+    rc.model.d_ff = 32;
+    rc.model.seq = 8;
+    rc.model.batch = 2;
+    rc.model.n_classes = 4;
+    rc.model.n_enc_layers = 8;
+    rc.model.buffer_open = 0;
+    rc.model.buffer_close = 0;
+    rc.mgrit = MgritConfig { cf: 2, levels: 2, fwd_iters: Some(2), bwd_iters: Some(1), fcf: true };
+    rc.train.probe_every = 0;
+    rc.train.adaptive = false;
+    let mut s = Session::builder()
+        .config(rc)
+        .task(Task::Tag)
+        .backend(Box::new(Mgrit))
+        .build()
+        .expect("session");
+
+    assert_eq!(s.solve_core_builds(), 0, "cores are built lazily, not at session build");
+    s.train_step();
+    assert_eq!(s.solve_core_builds(), 2, "first step builds one core per direction");
+
+    // steady state: training steps and evaluation sweeps construct nothing
+    let global = MgritCore::total_constructed();
+    for _ in 0..5 {
+        s.train_step();
+    }
+    s.evaluate(2);
+    assert_eq!(
+        MgritCore::total_constructed(),
+        global,
+        "steady-state training must not construct MGRIT cores"
+    );
+    assert_eq!(s.solve_core_builds(), 2);
+
+    // a mid-run cf change is a different grid: exactly one explicit
+    // rebuild per direction, then steady again
+    s.rc.mgrit.cf = 4;
+    s.train_step();
+    assert_eq!(s.solve_core_builds(), 4, "cf change rebuilds both directions");
+    assert_eq!(MgritCore::total_constructed(), global + 2);
+    let global = MgritCore::total_constructed();
+    s.train_step();
+    assert_eq!(MgritCore::total_constructed(), global, "and the rebuilt cores are cached");
+}
