@@ -6,10 +6,16 @@
 //!   MGRIT V-cycle     — engine overhead on a trivial Φ (pure coordinator)
 //!   full train step   — tiny end-to-end batch (Rust Φ)
 //!
+//!   threaded sweeps   — staged (slab-copy + stitch) vs in-place shared-grid
+//!                       relaxation on the persistent worker pool, and
+//!                       full-solve / train-step scaling over worker counts
+//!
 //! Flags:
-//!   --json   write machine-readable results to BENCH_hotpath.json
-//!            (ns/op per row) so the perf trajectory is tracked across PRs
-//!   --fast   1 warmup + 5 samples per row (CI smoke mode)
+//!   --json        write machine-readable results to BENCH_hotpath.json
+//!                 (ns/op per row) so the perf trajectory is tracked across PRs
+//!   --fast        1 warmup + 5 samples per row (CI smoke mode)
+//!   --workers N   add worker count N to the threaded scaling sweep
+//!                 (default sweep: 1, 2, 4)
 //!
 //! Uses artifacts when present (`make artifacts`), otherwise skips the XLA
 //! rows.
@@ -20,6 +26,7 @@ use layertime::config::{presets, Arch, MgritConfig};
 use layertime::coordinator::{Task, TrainRun};
 use layertime::mgrit::MgritSolver;
 use layertime::ode::{shared_params, LinearOde, Propagator, RustPropagator, XlaPropagator};
+use layertime::parallel::{exec, WorkerPool};
 use layertime::runtime::{Value, XlaEngine};
 use layertime::tensor::Tensor;
 use layertime::util::bench::{BenchLog, BenchRunner, Stats};
@@ -167,11 +174,100 @@ fn main() -> anyhow::Result<()> {
     let mut run_cached = TrainRun::new(rc.clone(), Task::Tag, None)?;
     run_cached.train_step(); // build both cores once, outside the timing
     timed(&runner, &mut log, "full train step (cached ctx)", || run_cached.train_step());
-    let mut run_fresh = TrainRun::new(rc, Task::Tag, None)?;
+    let mut run_fresh = TrainRun::new(rc.clone(), Task::Tag, None)?;
     timed(&runner, &mut log, "full train step (fresh ctx)", || {
         run_fresh.invalidate_solve_context();
         run_fresh.train_step()
     });
+
+    // --- threaded sweeps: staged vs in-place, workers scaling ----------------
+    // "staged" is the previous executor (per-sweep slab copies + stitch,
+    // boxed-job dispatch); "in-place" is the zero-copy shared-grid path the
+    // ThreadedMgrit backend runs on. The gap between the paired rows is what
+    // the zero-copy refactor buys per FCF sweep; the cross-worker rows record
+    // the layer-parallel scaling trajectory in BENCH_hotpath.json.
+    let mut worker_sweep = vec![1usize, 2, 4];
+    if let Some(i) = args.iter().position(|a| a == "--workers") {
+        if let Some(n) = args.get(i + 1).and_then(|v| v.parse::<usize>().ok()) {
+            if !worker_sweep.contains(&n) {
+                worker_sweep.push(n);
+            }
+        }
+    }
+    {
+        // a relaxation-shaped workload: 64 points of [64, 8] states with a
+        // cheap Φ, so the rows measure executor overhead (copies, dispatch,
+        // halo traffic), not kernel time
+        let (n_pts, cf) = (64usize, 4usize);
+        let mut rng = Rng::new(42);
+        let proto: Vec<Tensor> =
+            (0..=n_pts).map(|_| Tensor::randn(&mut rng, &[64, 8], 1.0)).collect();
+        let bias = Tensor::randn(&mut rng, &[64, 8], 0.1);
+        let sweep_step = |_l: usize, z: &Tensor, out: &mut Tensor| {
+            out.copy_from(z);
+            out.scale(0.95);
+            out.axpy(0.01, &bias);
+        };
+        for &wk in &worker_sweep {
+            let pool = WorkerPool::new(wk);
+            let mut w_staged = proto.clone();
+            timed(
+                &runner,
+                &mut log,
+                &format!("threaded FCF sweep (staged, {} workers)", wk),
+                || {
+                    w_staged = exec::pool_fc_relax(
+                        &pool,
+                        std::mem::take(&mut w_staged),
+                        None,
+                        cf,
+                        sweep_step,
+                    );
+                },
+            );
+            let mut w_inplace = proto.clone();
+            timed(
+                &runner,
+                &mut log,
+                &format!("threaded FCF sweep (in-place, {} workers)", wk),
+                || exec::pool_fc_relax_mut(&pool, &mut w_inplace, None, cf, sweep_step),
+            );
+        }
+    }
+    // full forward MGRIT solves and train steps across the worker sweep
+    // (ThreadedMgrit backend: in-place sweeps on the persistent pool)
+    {
+        let mut rng = Rng::new(7);
+        let ode = LinearOde::random_stable(&mut rng, 32, 64, 0.05);
+        let z64 = Tensor::randn(&mut rng, &[32, 1], 1.0);
+        let cfg64 =
+            MgritConfig { cf: 4, levels: 2, fwd_iters: Some(1), bwd_iters: Some(1), fcf: true };
+        for &wk in &worker_sweep {
+            let pool = if wk > 1 { Some(std::sync::Arc::new(WorkerPool::new(wk))) } else { None };
+            let solver = MgritSolver::with_workers(&ode, cfg64.clone(), wk).pooled(pool);
+            let mut core = solver.build_core();
+            timed(
+                &runner,
+                &mut log,
+                &format!("threaded fwd solve (64 steps, {} workers, in-place)", wk),
+                || solver.forward_with(&mut core, &z64, Some(1), None, false),
+            );
+        }
+        for &wk in &worker_sweep {
+            let mut run_wk = layertime::coordinator::Session::builder()
+                .config(rc.clone())
+                .task(Task::Tag)
+                .workers(wk)
+                .build()?;
+            run_wk.train_step(); // build cores + pool outside the timing
+            timed(
+                &runner,
+                &mut log,
+                &format!("full train step ({} workers)", wk),
+                || run_wk.train_step(),
+            );
+        }
+    }
 
     if json_out {
         let path = "BENCH_hotpath.json";

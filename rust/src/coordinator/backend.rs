@@ -9,9 +9,11 @@
 //!   mean an exact solve, matching [`crate::config::MgritConfig`]);
 //! * [`ThreadedMgrit`] — real multi-worker MGRIT: every relaxation sweep of
 //!   the forward *and* adjoint V-cycles runs through
-//!   [`crate::parallel::exec::pool_fc_relax`] on a persistent per-backend
-//!   [`WorkerPool`] (threads parked between sweeps) with channel-fabric
-//!   halo exchange, bitwise identical to [`Mgrit`].
+//!   [`crate::parallel::exec::pool_fc_relax_mut`] on a persistent
+//!   per-backend [`WorkerPool`] (threads parked between sweeps), relaxing
+//!   in place on the shared level storage with channel-fabric halo
+//!   exchange — bitwise identical to [`Mgrit`] and allocation-free at
+//!   steady state.
 //!
 //! Since the persistent-context refactor a backend is a pure *strategy*:
 //! it names the execution mode (worker count, relaxation pool, iteration

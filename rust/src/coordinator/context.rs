@@ -25,13 +25,14 @@
 //!   sitting there, so warm-starting is copy-free), dropped as soon as a
 //!   solve runs serially: stale after the §3.2.3 switch, and it would
 //!   poison a later non-serial run restored from the same session;
-//! * a [`StepWorkspace`] with every fine-grid buffer a training step
-//!   needs, so with the single-threaded backends the steady-state step
-//!   allocates nothing outside the data pipeline and loss head (pinned by
-//!   `rust/tests/alloc_audit.rs`). The `ThreadedMgrit` backend still
-//!   stages per-sweep slab copies inside `parallel::exec`; the context
-//!   removes the hierarchy/solution-handoff allocations for it too, but
-//!   not the slab staging.
+//! * a [`StepWorkspace`] with every buffer a training step needs — the
+//!   fine-grid states/λ/gradients *and* the loss-head side (the head
+//!   cotangent buffer plus logits/pooled scratch) — so the steady-state
+//!   `train_step` performs **zero** heap allocations with the
+//!   single-threaded backends (pinned by `rust/tests/alloc_audit.rs`,
+//!   empty allowlist). `ThreadedMgrit` sweeps now relax in place on the
+//!   shared level storage (`parallel::exec`'s `_mut` executors), so the
+//!   threaded solve round is allocation-free at steady state too.
 //!
 //! The context is created once per `Session` from the session's
 //! [`Backend`] and held for the session's lifetime; the backend supplies
@@ -45,7 +46,7 @@ use crate::ode::Propagator;
 use crate::tensor::Tensor;
 
 use super::backend::Backend;
-use super::objective::HeadGrads;
+use super::objective::{HeadGrads, LossScratch, LossSink};
 
 /// Reusable fine-grid buffers for one training step: states Z_0..Z_N,
 /// adjoints λ_0..λ_N, and every gradient accumulator. Sized once at
@@ -71,6 +72,11 @@ pub struct StepWorkspace {
     /// Head-side activation buffer [B,S,D] (the decoder half of the
     /// stacked EncDec state; unused for flat-state architectures).
     pub head: Tensor,
+    /// Loss-head cotangent buffer [B,S,D] (filled by
+    /// [`crate::coordinator::Objective::loss_into`], then lifted into λ_N).
+    pub lam_head: Tensor,
+    /// Reusable loss-head numeric scratch (logits / pooled rows).
+    pub loss_scratch: LossScratch,
     /// Second ping-pong buffer for rolling (evaluation) forwards.
     pub pp: Tensor,
     /// Second gradient-accumulator set for dp > 1 micro-batch summation
@@ -108,9 +114,66 @@ impl StepWorkspace {
             g_out: vec![0.0f32; head_sizes[2]],
             g_cls: vec![0.0f32; head_sizes[3]],
             head: Tensor::zeros(head_shape),
+            lam_head: Tensor::zeros(head_shape),
+            loss_scratch: LossScratch::default(),
             pp: Tensor::zeros(state_shape),
             dp_scratch: None,
         }
+    }
+
+    /// Split-borrow the loss head's input and output buffers: the final
+    /// activation view for workspace state `idx` (stacked EncDec states
+    /// copy their decoder half into the persistent `head` buffer) plus a
+    /// [`LossSink`] over the cotangent buffer, head-gradient accumulators,
+    /// and numeric scratch — disjoint fields, so the objective can read
+    /// x_final while writing the sink, with zero allocations.
+    pub fn head_view_and_sink(&mut self, idx: usize, stacked: bool) -> (&Tensor, LossSink<'_>) {
+        let StepWorkspace {
+            states, head, lam_head, g_emb, g_pos, g_out, g_cls, loss_scratch, ..
+        } = self;
+        let x_final = staged_head_view(states, head, idx, stacked);
+        let sink = LossSink {
+            lam_head,
+            g_emb,
+            g_pos,
+            g_out,
+            g_cls,
+            scratch: loss_scratch,
+        };
+        (x_final, sink)
+    }
+
+    /// Global-norm gradient clipping over every accumulator, without
+    /// materializing a ref-list (the allocation-free twin of
+    /// [`crate::opt::clip_global_norm`]; identical accumulation and
+    /// scaling order, so the clipped values are bitwise the same).
+    pub fn clip_global(&mut self, max_norm: f32) -> f32 {
+        let mut sq = 0.0f64;
+        for g in self.grads.iter() {
+            for &x in g.iter() {
+                sq += (x as f64) * (x as f64);
+            }
+        }
+        for g in [&self.g_emb, &self.g_pos, &self.g_out, &self.g_cls] {
+            for &x in g.iter() {
+                sq += (x as f64) * (x as f64);
+            }
+        }
+        let norm = sq.sqrt() as f32;
+        if max_norm > 0.0 && norm > max_norm {
+            let scale = max_norm / norm;
+            for g in self.grads.iter_mut() {
+                for x in g.iter_mut() {
+                    *x *= scale;
+                }
+            }
+            for g in [&mut self.g_emb, &mut self.g_pos, &mut self.g_out, &mut self.g_cls] {
+                for x in g.iter_mut() {
+                    *x *= scale;
+                }
+            }
+        }
+        norm
     }
 
     /// Park the running gradient sum in the dp scratch set and zero the
@@ -201,6 +264,27 @@ impl StepWorkspace {
                 *a += b;
             }
         }
+    }
+}
+
+/// Stage the loss head's input for workspace state `idx`: stacked EncDec
+/// states copy their decoder half into the persistent `head` buffer; flat
+/// states are handed to the head directly. The one place the decoder-half
+/// split lives — shared by the training path
+/// ([`StepWorkspace::head_view_and_sink`]) and the session's evaluation
+/// sweep, so the two cannot drift.
+pub(crate) fn staged_head_view<'a>(
+    states: &'a [Tensor],
+    head: &'a mut Tensor,
+    idx: usize,
+    stacked: bool,
+) -> &'a Tensor {
+    if stacked {
+        let half = states[idx].len() / 2;
+        head.data_mut().copy_from_slice(&states[idx].data()[half..]);
+        head
+    } else {
+        &states[idx]
     }
 }
 
@@ -340,8 +424,8 @@ impl SolveContext {
     /// on the workspace without building, touching, or copying through a
     /// core, and drops the now-dead warm iterate. V-cycle mode runs on the
     /// cached core and refreshes the warm iterate in place when `use_warm`
-    /// is set. Allocation-free at steady state with the single-threaded
-    /// backends (threaded sweeps stage exec slabs).
+    /// is set. Allocation-free at steady state on every backend (threaded
+    /// sweeps relax in place on the shared level storage).
     pub fn forward_mid(
         &mut self,
         prop: &dyn Propagator,
@@ -388,8 +472,7 @@ impl SolveContext {
     /// writes λ back into `ws.lams[bo..=bo+n]` in natural order. Serial
     /// mode sweeps the transposed Jacobian in place (no hierarchy);
     /// V-cycle mode runs on the cached core. Allocation-free at steady
-    /// state with the single-threaded backends (threaded sweeps stage
-    /// exec slabs).
+    /// state on every backend.
     pub fn adjoint_mid(
         &mut self,
         prop: &dyn Propagator,
@@ -673,12 +756,14 @@ mod tests {
     }
 
     #[test]
-    fn panicked_threaded_sweep_is_recovered_by_core_rebuild() {
-        // A Φ panic inside a pooled relaxation sweep unwinds while the
-        // level storage is taken out of the cached core. The context must
-        // detect the gutted core (cache miss), and the backend must
-        // replace its poisoned pool, so a retry on the same session
-        // solves cleanly and matches a fresh solver bitwise.
+    fn panicked_threaded_sweep_is_recovered_without_a_core_rebuild() {
+        // A Φ panic inside a pooled relaxation sweep unwinds out of the
+        // in-place slab executors, leaving the cached core structurally
+        // whole (torn point values only — `solve` reinitializes them).
+        // The backend must replace its poisoned pool, the context must
+        // keep the cached hierarchy (`is_intact` holds), and a retry on
+        // the same session must solve cleanly and match a fresh solver
+        // bitwise.
         use std::panic::{catch_unwind, AssertUnwindSafe};
         use std::sync::atomic::{AtomicBool, Ordering};
 
@@ -727,15 +812,20 @@ mod tests {
             ctx.forward(&prop, &cfg(4, 2), &z0, Some(3), None, false)
         }));
         assert!(r.is_err(), "the injected panic must re-raise at the call site");
-        // retry on the same context: gutted core rebuilt, poisoned pool
-        // replaced, bitwise-identical result to a fresh solver
+        // retry on the same context: cached core kept (in-place sweeps
+        // never gut it), poisoned pool replaced, bitwise-identical result
+        // to a fresh solver
         let (w, _) = ctx.forward(&prop, &cfg(4, 2), &z0, Some(3), None, false);
         let (want, _) =
             MgritSolver::with_workers(&ode, cfg(4, 2), 2).forward(&z0, Some(3), None, false);
         for (a, b) in w.iter().zip(&want) {
             assert_eq!(a.data(), b.data(), "post-recovery solve must match a fresh solver");
         }
-        assert_eq!(ctx.core_builds(), 2, "the panicked core plus its rebuild");
+        assert_eq!(
+            ctx.core_builds(),
+            1,
+            "panic recovery must reuse the cached hierarchy, not rebuild it"
+        );
     }
 
     #[test]

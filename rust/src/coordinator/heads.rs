@@ -78,17 +78,51 @@ pub fn lm_loss(
     mask: &[f32],
     vocab: usize,
 ) -> (f32, f32, Tensor, Vec<f32>) {
-    let shape = x.shape().to_vec();
-    let d = shape[2];
-    let rows = shape[0] * shape[1];
+    let d = x.shape()[2];
+    let mut lam = Tensor::zeros(x.shape());
+    let mut gw = vec![0.0f32; d * vocab];
+    let mut logits = Vec::new();
+    let (loss, correct, _denom) =
+        lm_loss_into(x, w_out, targets, Some(mask), vocab, &mut lam, &mut gw, &mut logits);
+    (loss, correct, lam, gw)
+}
+
+/// Workspace-reusing form of [`lm_loss`]: the cotangent is written into
+/// `lam` (x-shaped, fully overwritten), the head gradient is **added**
+/// into `gw` (the caller's zeroed-per-step accumulator), and the per-row
+/// logits live in the caller's reusable scratch — zero allocations once
+/// the scratch capacity is warm. `mask = None` means all-ones (the
+/// tagging objective), with the identical arithmetic (an explicit 1.0
+/// mask summed row-by-row equals the row count exactly in f32 for any
+/// realistic batch). Returns (mean loss, #correct, accuracy denominator)
+/// — the denominator is handed back so callers don't re-sum the mask.
+#[allow(clippy::too_many_arguments)]
+pub fn lm_loss_into(
+    x: &Tensor,
+    w_out: &[f32],
+    targets: &[i32],
+    mask: Option<&[f32]>,
+    vocab: usize,
+    lam: &mut Tensor,
+    gw: &mut [f32],
+    logits: &mut Vec<f32>,
+) -> (f32, f32, f32) {
+    let d = x.shape()[2];
+    let rows = x.shape()[0] * x.shape()[1];
     let xd = x.data();
-    let denom: f32 = mask.iter().sum::<f32>().max(1.0);
+    assert_eq!(lam.len(), x.len(), "lm_loss_into: λ buffer must be x-shaped");
+    assert_eq!(gw.len(), d * vocab, "lm_loss_into: head-gradient size mismatch");
+    let denom: f32 = match mask {
+        Some(m) => m.iter().sum::<f32>().max(1.0),
+        None => (rows as f32).max(1.0),
+    };
     let mut loss = 0.0f64;
     let mut correct = 0.0f32;
-    let mut lam = vec![0.0f32; x.len()];
-    let mut gw = vec![0.0f32; d * vocab];
+    let lam = lam.data_mut();
+    lam.fill(0.0);
+    logits.clear();
+    logits.resize(vocab, 0.0);
 
-    let mut logits = vec![0.0f32; vocab];
     for r in 0..rows {
         let xr = &xd[r * d..(r + 1) * d];
         // logits = xr @ w_out
@@ -114,7 +148,7 @@ pub fn lm_loss(
             sum += (l - max).exp();
         }
         let logz = max + sum.ln();
-        let m = mask[r];
+        let m = mask.map_or(1.0, |mk| mk[r]);
         if m > 0.0 {
             loss += (m * (logz - logits[tgt])) as f64;
             if argmax == tgt {
@@ -136,12 +170,7 @@ pub fn lm_loss(
             }
         }
     }
-    (
-        (loss / denom as f64) as f32,
-        correct,
-        Tensor::from_vec(lam, &shape),
-        gw,
-    )
+    ((loss / denom as f64) as f32, correct, denom)
 }
 
 /// Mean-pooled sequence classification CE.
@@ -152,17 +181,45 @@ pub fn cls_loss(
     labels: &[i32],
     n_classes: usize,
 ) -> (f32, f32, Tensor, Vec<f32>) {
-    let shape = x.shape().to_vec();
-    let (batch, seq, d) = (shape[0], shape[1], shape[2]);
+    let d = x.shape()[2];
+    let mut lam = Tensor::zeros(x.shape());
+    let mut gw = vec![0.0f32; d * n_classes];
+    let (mut logits, mut pooled) = (Vec::new(), Vec::new());
+    let (loss, correct) =
+        cls_loss_into(x, w_cls, labels, n_classes, &mut lam, &mut gw, &mut logits, &mut pooled);
+    (loss, correct, lam, gw)
+}
+
+/// Workspace-reusing form of [`cls_loss`]: λ into `lam` (overwritten),
+/// head gradient **added** into `gw`, logits/pooled in caller scratch.
+/// Returns (mean loss, #correct).
+#[allow(clippy::too_many_arguments)]
+pub fn cls_loss_into(
+    x: &Tensor,
+    w_cls: &[f32],
+    labels: &[i32],
+    n_classes: usize,
+    lam: &mut Tensor,
+    gw: &mut [f32],
+    logits: &mut Vec<f32>,
+    pooled: &mut Vec<f32>,
+) -> (f32, f32) {
+    let (batch, seq, d) = (x.shape()[0], x.shape()[1], x.shape()[2]);
     let xd = x.data();
+    assert_eq!(lam.len(), x.len(), "cls_loss_into: λ buffer must be x-shaped");
+    assert_eq!(gw.len(), d * n_classes, "cls_loss_into: head-gradient size mismatch");
     let mut loss = 0.0f64;
     let mut correct = 0.0f32;
-    let mut lam = vec![0.0f32; x.len()];
-    let mut gw = vec![0.0f32; d * n_classes];
+    let lam = lam.data_mut();
+    lam.fill(0.0);
+    logits.clear();
+    logits.resize(n_classes, 0.0);
+    pooled.clear();
+    pooled.resize(d, 0.0);
 
     for b in 0..batch {
         // pooled = mean over seq
-        let mut pooled = vec![0.0f32; d];
+        pooled.iter_mut().for_each(|v| *v = 0.0);
         for s in 0..seq {
             let xr = &xd[(b * seq + s) * d..(b * seq + s + 1) * d];
             for i in 0..d {
@@ -170,7 +227,7 @@ pub fn cls_loss(
             }
         }
         pooled.iter_mut().for_each(|v| *v /= seq as f32);
-        let mut logits = vec![0.0f32; n_classes];
+        logits.iter_mut().for_each(|v| *v = 0.0);
         for (i, &pv) in pooled.iter().enumerate() {
             let wrow = &w_cls[i * n_classes..(i + 1) * n_classes];
             for (lg, &w) in logits.iter_mut().zip(wrow) {
@@ -201,12 +258,7 @@ pub fn cls_loss(
             }
         }
     }
-    (
-        (loss / batch as f64) as f32,
-        correct,
-        Tensor::from_vec(lam, &shape),
-        gw,
-    )
+    ((loss / batch as f64) as f32, correct)
 }
 
 /// Per-token tagging CE (labels i32[B,S]): thin wrapper over `lm_loss`
@@ -220,6 +272,20 @@ pub fn tag_loss(
 ) -> (f32, f32, Tensor, Vec<f32>) {
     let mask = vec![1.0f32; x.shape()[0] * x.shape()[1]];
     lm_loss(x, w_cls, labels, &mask, n_classes)
+}
+
+/// Workspace-reusing form of [`tag_loss`]: [`lm_loss_into`] with the
+/// implicit all-ones mask (no mask vector is materialized).
+pub fn tag_loss_into(
+    x: &Tensor,
+    w_cls: &[f32],
+    labels: &[i32],
+    n_classes: usize,
+    lam: &mut Tensor,
+    gw: &mut [f32],
+    logits: &mut Vec<f32>,
+) -> (f32, f32, f32) {
+    lm_loss_into(x, w_cls, labels, None, n_classes, lam, gw, logits)
 }
 
 /// Argmax predictions of the LM head (greedy, teacher-forced) — feeds BLEU.
@@ -344,6 +410,53 @@ mod tests {
             let fd = (f(&x, &wp) - f(&x, &wm)) / (2.0 * eps);
             assert!((gw[i] - fd).abs() < 2e-3, "gw[{}]", i);
         }
+    }
+
+    #[test]
+    fn into_heads_match_allocating_heads_bitwise() {
+        // the workspace-reusing kernels are the hot path; the allocating
+        // wrappers delegate to them, and direct calls with reused (dirty)
+        // scratch must produce identical bits
+        let (b, s, d, v) = (2, 3, 4, 5);
+        let mut rng = Rng::new(9);
+        let x = Tensor::randn(&mut rng, &[b, s, d], 0.5);
+        let w = rng.normal_vec(d * v, 0.3);
+        let tgt = vec![1, 4, 2, 0, 3, 1];
+        let mask = vec![1.0, 0.0, 1.0, 1.0, 1.0, 0.0];
+        let (l0, c0, lam0, gw0) = lm_loss(&x, &w, &tgt, &mask, v);
+        let mut lam = Tensor::randn(&mut rng, &[b, s, d], 1.0); // dirty buffers
+        let mut gw = vec![0.0f32; d * v];
+        let mut logits = vec![7.0f32; 2];
+        let (l1, c1, d1) =
+            lm_loss_into(&x, &w, &tgt, Some(&mask), v, &mut lam, &mut gw, &mut logits);
+        assert_eq!((l0, c0), (l1, c1));
+        assert_eq!(d1, mask.iter().sum::<f32>());
+        assert_eq!(lam0.data(), lam.data());
+        assert_eq!(gw0, gw);
+        // gw accumulates: a second call doubles it exactly
+        lm_loss_into(&x, &w, &tgt, Some(&mask), v, &mut lam, &mut gw, &mut logits);
+        for (a, b) in gw.iter().zip(&gw0) {
+            assert_eq!(*a, b + b);
+        }
+        // tagging: implicit all-ones mask == materialized all-ones mask
+        let labels = vec![0, 1, 2, 3, 0, 1];
+        let (l0, c0, lam0, gw0) = tag_loss(&x, &w, &labels, v);
+        let mut gw = vec![0.0f32; d * v];
+        let (l1, c1, d1) = tag_loss_into(&x, &w, &labels, v, &mut lam, &mut gw, &mut logits);
+        assert_eq!((l0, c0), (l1, c1));
+        assert_eq!(d1, (b * s) as f32);
+        assert_eq!(lam0.data(), lam.data());
+        assert_eq!(gw0, gw);
+        // classification
+        let labels = vec![1, 2];
+        let (l0, c0, lam0, gw0) = cls_loss(&x, &w[..d * 3], &labels, 3);
+        let mut gw = vec![0.0f32; d * 3];
+        let mut pooled = Vec::new();
+        let (l1, c1) =
+            cls_loss_into(&x, &w[..d * 3], &labels, 3, &mut lam, &mut gw, &mut logits, &mut pooled);
+        assert_eq!((l0, c0), (l1, c1));
+        assert_eq!(lam0.data(), lam.data());
+        assert_eq!(gw0, gw);
     }
 
     #[test]

@@ -37,8 +37,8 @@ pub mod trainer;
 pub use backend::{backend_for_workers, Backend, Mgrit, Serial, ThreadedMgrit};
 pub use context::{SolveContext, StepWorkspace};
 pub use objective::{
-    ClsObjective, EvalAccum, HeadGrads, LmObjective, LossOut, Objective, TagObjective,
-    TrainBatch, TranslateObjective,
+    ClsObjective, EvalAccum, HeadGrads, LmObjective, LossOut, LossScratch, LossSink, LossStats,
+    Objective, TagObjective, TrainBatch, TranslateObjective,
 };
 pub use range::RangeProp;
 pub use session::{

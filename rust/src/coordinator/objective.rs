@@ -7,6 +7,8 @@
 //! causal LM and MLM); new workloads plug in by implementing the trait —
 //! the coordinator never enumerates tasks.
 
+use std::sync::Mutex;
+
 use crate::config::ModelConfig;
 use crate::data::charlm::CharCorpus;
 use crate::data::images::ImageTask;
@@ -19,8 +21,10 @@ use crate::util::rng::Rng;
 use super::heads;
 
 /// One sampled training/validation batch in the coordinator's unified
-/// layout (unused fields stay empty/None).
-#[derive(Debug, Clone)]
+/// layout (unused fields stay empty/None). `Default` is the empty batch —
+/// the session keeps one long-lived instance and refills it in place via
+/// [`Objective::sample_into`] every step.
+#[derive(Debug, Clone, Default)]
 pub struct TrainBatch {
     /// Input token ids [B, S] (encoder side for EncDec).
     pub tokens: Vec<i32>,
@@ -48,6 +52,42 @@ pub struct LossOut {
     pub head: HeadGrads,
 }
 
+/// Scalar results of a workspace-reusing loss-head evaluation (the
+/// cotangent and head gradients land in the caller's [`LossSink`]).
+#[derive(Debug, Clone, Copy)]
+pub struct LossStats {
+    pub loss: f32,
+    /// Correct predictions (numerator of the batch accuracy).
+    pub correct: f32,
+    /// Accuracy denominator (masked tokens / tokens / sequences).
+    pub denom: f32,
+}
+
+/// Destination buffers for [`Objective::loss_into`]: the head-shaped
+/// cotangent buffer (fully overwritten), the step's head-parameter
+/// gradient accumulators (**added** into — they are zeroed once per
+/// optimizer step by the training loop), and the reusable numeric
+/// scratch. All of it lives in the session's persistent
+/// [`crate::coordinator::StepWorkspace`], so a steady-state loss-head
+/// evaluation allocates nothing.
+pub struct LossSink<'a> {
+    pub lam_head: &'a mut Tensor,
+    pub g_emb: &'a mut [f32],
+    pub g_pos: &'a mut [f32],
+    pub g_out: &'a mut [f32],
+    pub g_cls: &'a mut [f32],
+    pub scratch: &'a mut LossScratch,
+}
+
+/// Reusable numeric scratch of the loss heads (sized on first use).
+#[derive(Debug, Default)]
+pub struct LossScratch {
+    /// Per-row logits (vocab- or class-sized).
+    pub logits: Vec<f32>,
+    /// Mean-pooled activation (classification head).
+    pub pooled: Vec<f32>,
+}
+
 /// Accumulator for validation metrics across eval batches.
 #[derive(Debug, Clone, Default)]
 pub struct EvalAccum {
@@ -72,6 +112,15 @@ pub trait Objective: Send + Sync {
     /// controls the stream via the `Rng`).
     fn sample(&self, rng: &mut Rng, m: &ModelConfig) -> TrainBatch;
 
+    /// Workspace-reusing sampler: refill `out` in place. The default
+    /// delegates to [`Objective::sample`] (allocating); the in-tree
+    /// objectives override it so steady-state sampling allocates nothing.
+    /// Must consume the `Rng` identically to `sample` — the training data
+    /// stream may not depend on which entry point produced it.
+    fn sample_into(&self, rng: &mut Rng, m: &ModelConfig, out: &mut TrainBatch) {
+        *out = self.sample(rng, m);
+    }
+
     /// Loss + cotangent + head-parameter gradients at the final activation
     /// `x_final` [B, S, D] (decoder half for EncDec).
     fn loss(
@@ -81,6 +130,39 @@ pub trait Objective: Send + Sync {
         batch: &TrainBatch,
         m: &ModelConfig,
     ) -> LossOut;
+
+    /// Workspace-reusing loss head: write the cotangent into
+    /// `sink.lam_head`, **accumulate** head-parameter gradients into the
+    /// sink's group accumulators, and return the scalar stats. The default
+    /// delegates to [`Objective::loss`] and copies; the in-tree objectives
+    /// override it with the `heads::*_into` kernels so the steady-state
+    /// step allocates nothing (pinned by `rust/tests/alloc_audit.rs`).
+    fn loss_into(
+        &self,
+        x_final: &Tensor,
+        params: &ParamStore,
+        batch: &TrainBatch,
+        m: &ModelConfig,
+        sink: LossSink<'_>,
+    ) -> LossStats {
+        let out = self.loss(x_final, params, batch, m);
+        sink.lam_head.copy_from(&out.lam_head);
+        for (acc, src) in [
+            (sink.g_emb, &out.head.emb),
+            (sink.g_pos, &out.head.pos),
+            (sink.g_out, &out.head.out),
+            (sink.g_cls, &out.head.cls),
+        ] {
+            if src.is_empty() {
+                continue;
+            }
+            assert_eq!(acc.len(), src.len(), "head gradient group size mismatch");
+            for (a, b) in acc.iter_mut().zip(src.iter()) {
+                *a += b;
+            }
+        }
+        LossStats { loss: out.loss, correct: out.correct, denom: out.denom }
+    }
 
     /// Fold one validation batch into the accumulator.
     fn eval_batch(
@@ -124,17 +206,34 @@ impl Objective for LmObjective {
     }
 
     fn sample(&self, rng: &mut Rng, m: &ModelConfig) -> TrainBatch {
-        let b = match self.mask_id {
-            Some(id) => self.corpus.mlm_batch(rng, m.batch, m.seq, self.mask_rate, id),
-            None => self.corpus.lm_batch(rng, m.batch, m.seq),
-        };
-        TrainBatch {
-            tokens: b.tokens,
-            targets: b.targets,
-            mask: b.mask,
-            labels: vec![],
-            tgt_in: None,
+        let mut out = TrainBatch::default();
+        self.sample_into(rng, m, &mut out);
+        out
+    }
+
+    fn sample_into(&self, rng: &mut Rng, m: &ModelConfig, out: &mut TrainBatch) {
+        match self.mask_id {
+            Some(id) => self.corpus.mlm_batch_into(
+                rng,
+                m.batch,
+                m.seq,
+                self.mask_rate,
+                id,
+                &mut out.tokens,
+                &mut out.targets,
+                &mut out.mask,
+            ),
+            None => self.corpus.lm_batch_into(
+                rng,
+                m.batch,
+                m.seq,
+                &mut out.tokens,
+                &mut out.targets,
+                &mut out.mask,
+            ),
         }
+        out.labels.clear();
+        out.tgt_in = None;
     }
 
     fn loss(
@@ -148,6 +247,27 @@ impl Objective for LmObjective {
             heads::lm_loss(x_final, &params.w_out, &batch.targets, &batch.mask, m.vocab);
         let denom = batch.mask.iter().sum::<f32>().max(1.0);
         LossOut { loss, correct, denom, lam_head, head: HeadGrads::out(gw) }
+    }
+
+    fn loss_into(
+        &self,
+        x_final: &Tensor,
+        params: &ParamStore,
+        batch: &TrainBatch,
+        m: &ModelConfig,
+        sink: LossSink<'_>,
+    ) -> LossStats {
+        let (loss, correct, denom) = heads::lm_loss_into(
+            x_final,
+            &params.w_out,
+            &batch.targets,
+            Some(&batch.mask),
+            m.vocab,
+            sink.lam_head,
+            sink.g_out,
+            &mut sink.scratch.logits,
+        );
+        LossStats { loss, correct, denom }
     }
 
     fn eval_batch(
@@ -186,14 +306,17 @@ impl Objective for TagObjective {
     }
 
     fn sample(&self, rng: &mut Rng, m: &ModelConfig) -> TrainBatch {
-        let b = self.task.batch(rng, m.batch, m.seq);
-        TrainBatch {
-            tokens: b.tokens,
-            targets: b.targets,
-            mask: b.mask,
-            labels: vec![],
-            tgt_in: None,
-        }
+        let mut out = TrainBatch::default();
+        self.sample_into(rng, m, &mut out);
+        out
+    }
+
+    fn sample_into(&self, rng: &mut Rng, m: &ModelConfig, out: &mut TrainBatch) {
+        self.task.batch_into(rng, m.batch, m.seq, &mut out.tokens, &mut out.targets);
+        out.mask.clear();
+        out.mask.resize(m.batch * m.seq, 1.0);
+        out.labels.clear();
+        out.tgt_in = None;
     }
 
     fn loss(
@@ -212,6 +335,27 @@ impl Objective for TagObjective {
             lam_head,
             head: HeadGrads::cls(gw),
         }
+    }
+
+    fn loss_into(
+        &self,
+        x_final: &Tensor,
+        params: &ParamStore,
+        batch: &TrainBatch,
+        m: &ModelConfig,
+        sink: LossSink<'_>,
+    ) -> LossStats {
+        let (loss, correct, denom) = heads::tag_loss_into(
+            x_final,
+            &params.w_cls,
+            &batch.targets,
+            m.n_classes,
+            sink.lam_head,
+            sink.g_cls,
+            &mut sink.scratch.logits,
+        );
+        // the kernel's all-ones denominator is exactly (batch * seq) as f32
+        LossStats { loss, correct, denom }
     }
 
     fn eval_batch(
@@ -235,11 +379,15 @@ impl Objective for TagObjective {
 /// Sequence classification over patch tokens (the paper's ViT task).
 pub struct ClsObjective {
     task: ImageTask,
+    /// Reusable pixel buffer for the procedural renderer (`sample_into`
+    /// takes `&self`, so the scratch hides behind an uncontended mutex —
+    /// sampling is single-threaded per session).
+    img_scratch: Mutex<Vec<f32>>,
 }
 
 impl ClsObjective {
     pub fn new(task: ImageTask) -> ClsObjective {
-        ClsObjective { task }
+        ClsObjective { task, img_scratch: Mutex::new(Vec::new()) }
     }
 }
 
@@ -249,14 +397,17 @@ impl Objective for ClsObjective {
     }
 
     fn sample(&self, rng: &mut Rng, m: &ModelConfig) -> TrainBatch {
-        let b = self.task.batch(rng, m.batch);
-        TrainBatch {
-            tokens: b.tokens,
-            targets: vec![],
-            mask: vec![],
-            labels: b.labels,
-            tgt_in: None,
-        }
+        let mut out = TrainBatch::default();
+        self.sample_into(rng, m, &mut out);
+        out
+    }
+
+    fn sample_into(&self, rng: &mut Rng, m: &ModelConfig, out: &mut TrainBatch) {
+        let mut img = self.img_scratch.lock().unwrap();
+        self.task.batch_into(rng, m.batch, &mut out.tokens, &mut out.labels, &mut img);
+        out.targets.clear();
+        out.mask.clear();
+        out.tgt_in = None;
     }
 
     fn loss(
@@ -269,6 +420,27 @@ impl Objective for ClsObjective {
         let (loss, correct, lam_head, gw) =
             heads::cls_loss(x_final, &params.w_cls, &batch.labels, m.n_classes);
         LossOut { loss, correct, denom: m.batch as f32, lam_head, head: HeadGrads::cls(gw) }
+    }
+
+    fn loss_into(
+        &self,
+        x_final: &Tensor,
+        params: &ParamStore,
+        batch: &TrainBatch,
+        m: &ModelConfig,
+        sink: LossSink<'_>,
+    ) -> LossStats {
+        let (loss, correct) = heads::cls_loss_into(
+            x_final,
+            &params.w_cls,
+            &batch.labels,
+            m.n_classes,
+            sink.lam_head,
+            sink.g_cls,
+            &mut sink.scratch.logits,
+            &mut sink.scratch.pooled,
+        );
+        LossStats { loss, correct, denom: m.batch as f32 }
     }
 
     fn eval_batch(
@@ -307,14 +479,26 @@ impl Objective for TranslateObjective {
     }
 
     fn sample(&self, rng: &mut Rng, m: &ModelConfig) -> TrainBatch {
-        let b = self.task.batch(rng, m.batch, m.seq);
-        TrainBatch {
-            tokens: b.src,
-            targets: b.tgt_out,
-            mask: b.mask,
-            labels: vec![],
-            tgt_in: Some(b.tgt_in),
+        let mut out = TrainBatch::default();
+        self.sample_into(rng, m, &mut out);
+        out
+    }
+
+    fn sample_into(&self, rng: &mut Rng, m: &ModelConfig, out: &mut TrainBatch) {
+        if out.tgt_in.is_none() {
+            out.tgt_in = Some(Vec::new());
         }
+        let tgt_in = out.tgt_in.as_mut().expect("tgt_in ensured above");
+        self.task.batch_into(
+            rng,
+            m.batch,
+            m.seq,
+            &mut out.tokens,
+            tgt_in,
+            &mut out.targets,
+            &mut out.mask,
+        );
+        out.labels.clear();
     }
 
     fn loss(
@@ -328,6 +512,27 @@ impl Objective for TranslateObjective {
             heads::lm_loss(x_final, &params.w_out, &batch.targets, &batch.mask, m.vocab);
         let denom = batch.mask.iter().sum::<f32>().max(1.0);
         LossOut { loss, correct, denom, lam_head, head: HeadGrads::out(gw) }
+    }
+
+    fn loss_into(
+        &self,
+        x_final: &Tensor,
+        params: &ParamStore,
+        batch: &TrainBatch,
+        m: &ModelConfig,
+        sink: LossSink<'_>,
+    ) -> LossStats {
+        let (loss, correct, denom) = heads::lm_loss_into(
+            x_final,
+            &params.w_out,
+            &batch.targets,
+            Some(&batch.mask),
+            m.vocab,
+            sink.lam_head,
+            sink.g_out,
+            &mut sink.scratch.logits,
+        );
+        LossStats { loss, correct, denom }
     }
 
     fn eval_batch(
@@ -400,6 +605,86 @@ mod tests {
         let obj = TranslateObjective::new(TranslateTask::new(m.vocab, 1, false));
         let b = obj.sample(&mut rng, &m);
         assert_eq!(b.tgt_in.as_ref().unwrap().len(), m.batch * m.seq);
+    }
+
+    #[test]
+    fn sample_into_matches_sample_for_every_objective() {
+        // the workspace-reusing sampler must consume the rng identically
+        // and refill a dirty reused batch into the exact same contents
+        let check = |obj: &dyn Objective, m: &ModelConfig| {
+            let mut r1 = Rng::new(42);
+            let fresh = obj.sample(&mut r1, m);
+            // start from a dirty, wrongly-sized reused batch
+            let mut reused = TrainBatch {
+                tokens: vec![9; 3],
+                targets: vec![9; 99],
+                mask: vec![0.5; 7],
+                labels: vec![4],
+                tgt_in: Some(vec![1]),
+            };
+            let mut r2 = Rng::new(42);
+            obj.sample_into(&mut r2, m, &mut reused);
+            // identical rng consumption: the streams stay in lockstep
+            assert_eq!(r1.next_u64(), r2.next_u64(), "rng stream diverged ({})", obj.name());
+            assert_eq!(reused.tokens, fresh.tokens, "{}", obj.name());
+            assert_eq!(reused.targets, fresh.targets, "{}", obj.name());
+            assert_eq!(reused.mask, fresh.mask, "{}", obj.name());
+            assert_eq!(reused.labels, fresh.labels, "{}", obj.name());
+            assert_eq!(reused.tgt_in, fresh.tgt_in, "{}", obj.name());
+            // a steady-state refill of the now-right-sized batch matches too
+            let mut r3 = Rng::new(42);
+            obj.sample_into(&mut r3, m, &mut reused);
+            assert_eq!(reused.tokens, fresh.tokens, "steady refill ({})", obj.name());
+            assert_eq!(reused.tgt_in, fresh.tgt_in, "steady refill ({})", obj.name());
+        };
+        let m = presets::mc_tiny().model;
+        check(&TagObjective::new(MorphoTask::new(m.vocab, m.n_classes, 1)), &m);
+        let corpus = || CharCorpus::new(m.vocab, 3, 3);
+        check(&LmObjective::causal(corpus()), &m);
+        check(&LmObjective::masked(corpus(), (m.vocab - 1) as i32, 0.2), &m);
+        let mt = presets::mt_small().model;
+        check(&TranslateObjective::new(TranslateTask::new(mt.vocab, 1, false)), &mt);
+        let mut vit = m.clone();
+        vit.seq = 16;
+        check(&ClsObjective::new(ImageTask::new(16, vit.vocab, vit.n_classes)), &vit);
+    }
+
+    #[test]
+    fn loss_into_matches_loss_bitwise() {
+        use crate::model::{Init, ParamStore};
+        let m = presets::mc_tiny().model;
+        let params = ParamStore::init(&m, Init::Default, 7);
+        let obj = TagObjective::new(MorphoTask::new(m.vocab, m.n_classes, 1));
+        let mut rng = Rng::new(5);
+        let batch = obj.sample(&mut rng, &m);
+        let x = Tensor::randn(&mut rng, &[m.batch, m.seq, m.d_model], 0.6);
+        let out = obj.loss(&x, &params, &batch, &m);
+        let mut lam_head = Tensor::zeros(&[m.batch, m.seq, m.d_model]);
+        let mut g_emb = vec![0.0f32; params.w_emb.len()];
+        let mut g_pos = vec![0.0f32; params.w_pos.len()];
+        let mut g_out = vec![0.0f32; params.w_out.len()];
+        let mut g_cls = vec![0.0f32; params.w_cls.len()];
+        let mut scratch = LossScratch::default();
+        let stats = obj.loss_into(
+            &x,
+            &params,
+            &batch,
+            &m,
+            LossSink {
+                lam_head: &mut lam_head,
+                g_emb: &mut g_emb,
+                g_pos: &mut g_pos,
+                g_out: &mut g_out,
+                g_cls: &mut g_cls,
+                scratch: &mut scratch,
+            },
+        );
+        assert_eq!(stats.loss, out.loss);
+        assert_eq!(stats.correct, out.correct);
+        assert_eq!(stats.denom, out.denom);
+        assert_eq!(lam_head.data(), out.lam_head.data());
+        assert_eq!(g_cls, out.head.cls);
+        assert!(g_out.iter().all(|&v| v == 0.0), "untouched groups stay zero");
     }
 
     #[test]

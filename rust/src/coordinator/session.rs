@@ -16,9 +16,11 @@
 //! the ParallelNet → (serial close buffers) → objective loss head →
 //! adjoint solve → parameter gradients → clip → optimizer. Every solve
 //! runs on the session's persistent [`SolveContext`]: the MGRIT
-//! hierarchies are cached across steps, states/λ/gradients live in its
-//! [`StepWorkspace`], and (with the single-threaded backends) the
-//! steady-state step performs no solver-side allocations. The §3.2.3
+//! hierarchies are cached across steps, states/λ/gradients *and* the
+//! batch/loss-head buffers live in its [`StepWorkspace`] (plus the
+//! session's long-lived `TrainBatch`), so the steady-state `train_step`
+//! performs **zero** heap allocations — sampling, loss head, clipping and
+//! all (pinned by `rust/tests/alloc_audit.rs`). The §3.2.3
 //! controller probes the MGRIT convergence factor
 //! on a cadence and can raise iteration counts or switch the run to
 //! serial (which also drops the now-stale warm-start iterate).
@@ -36,7 +38,7 @@ use crate::adaptive::{AdaptiveController, ProbeRecord};
 use crate::config::{presets, Arch, RunConfig};
 use crate::model::{Init, ParamStore};
 use crate::ode::{Propagator, RustPropagator, XlaPropagator};
-use crate::opt::{clip_global_norm, Decay, LrSchedule, Optimizer};
+use crate::opt::{Decay, LrSchedule, Optimizer};
 use crate::runtime::XlaEngine;
 use crate::tensor::Tensor;
 use crate::util::rng::Rng;
@@ -241,6 +243,7 @@ impl SessionBuilder {
             rc,
             params,
             objective,
+            batch_buf: TrainBatch::default(),
             ctx,
             prop,
             opt,
@@ -261,6 +264,11 @@ pub struct Session {
     pub rc: RunConfig,
     pub params: ParamStore,
     objective: Box<dyn Objective>,
+    /// Long-lived batch buffer, refilled in place by
+    /// `Objective::sample_into` every micro-batch/eval batch (taken out of
+    /// the session during the batch body to keep the borrows disjoint —
+    /// a pointer move, not an allocation).
+    batch_buf: TrainBatch,
     /// Persistent solve state: the backend strategy, both cached MGRIT
     /// hierarchies, the warm-start iterate, and the step workspace.
     ctx: SolveContext,
@@ -372,8 +380,9 @@ impl Session {
         let (bo, n_mid) = self.mid_range();
         let stacked = m.arch == Arch::EncDec;
 
-        // --- sample a batch ---------------------------------------------
-        let batch: TrainBatch = self.objective.sample(&mut self.train_rng, &m);
+        // --- sample a batch (into the session's long-lived buffer) ------
+        let mut batch = std::mem::take(&mut self.batch_buf);
+        self.objective.sample_into(&mut self.train_rng, &m, &mut batch);
 
         // --- forward ------------------------------------------------------
         self.embed_into(&batch.tokens, batch.tgt_in.as_deref());
@@ -394,22 +403,26 @@ impl Session {
             self.prop.step_seq_into(bo + n_mid, 1.0, &mut self.ctx.ws.states[bo + n_mid..]);
         }
 
-        // --- loss head ------------------------------------------------------
-        let x_final = stage_head_view(&mut self.ctx.ws, n_layers, stacked);
-        let out = self.objective.loss(x_final, &self.params, &batch, &m);
+        // --- loss head (workspace-reusing: cotangent into ws.lam_head,
+        //     head gradients straight into the step accumulators) --------
+        let out = {
+            let (x_final, sink) = self.ctx.ws.head_view_and_sink(n_layers, stacked);
+            self.objective.loss_into(x_final, &self.params, &batch, &m, sink)
+        };
         let acc = out.correct / out.denom;
 
         // --- adjoint ---------------------------------------------------------
         {
             // seed λ_N: lift the head cotangent into the state shape
-            let lam_n = &mut self.ctx.ws.lams[n_layers];
+            let StepWorkspace { lams, lam_head, .. } = &mut self.ctx.ws;
+            let lam_n = &mut lams[n_layers];
             if stacked {
                 let half = lam_n.len() / 2;
                 let d = lam_n.data_mut();
                 d[..half].fill(0.0);
-                d[half..].copy_from_slice(out.lam_head.data());
+                d[half..].copy_from_slice(lam_head.data());
             } else {
-                lam_n.copy_from(&out.lam_head);
+                lam_n.copy_from(lam_head);
             }
         }
         {
@@ -467,8 +480,9 @@ impl Session {
                 heads::embed_bwd(&batch.tokens, lam0, m.batch, m.seq, m.d_model, g_emb, g_pos);
             }
         }
-        // head-parameter gradients from the loss head
-        self.ctx.ws.add_head_grads(&out.head);
+        // hand the batch buffer back for the next micro-batch (the head
+        // gradients were already accumulated by loss_into)
+        self.batch_buf = batch;
         (out.loss, acc, fstats.conv_factor(), bstats.conv_factor())
     }
 
@@ -536,17 +550,9 @@ impl Session {
 
         // clip + update straight from the workspace accumulators (the
         // untouched head groups are full-size zeros, so including them
-        // changes neither the norm nor the updates)
-        {
-            let StepWorkspace { grads, g_emb, g_pos, g_out, g_cls, .. } = &mut self.ctx.ws;
-            let mut refs: Vec<&mut [f32]> = Vec::with_capacity(grads.len() + 4);
-            refs.extend(grads.iter_mut().map(|g| g.as_mut_slice()));
-            refs.push(g_emb);
-            refs.push(g_pos);
-            refs.push(g_out);
-            refs.push(g_cls);
-            clip_global_norm(&mut refs, self.rc.train.grad_clip);
-        }
+        // changes neither the norm nor the updates); clip_global walks the
+        // accumulators directly — no per-step ref-list allocation
+        self.ctx.ws.clip_global(self.rc.train.grad_clip);
         let lr = self.sched.at(self.step);
         self.opt.begin_step();
         {
@@ -587,7 +593,8 @@ impl Session {
         let mut rng = Rng::new(self.val_rng_seed);
         let mut acc = EvalAccum::default();
         for _ in 0..n_batches {
-            let batch = self.objective.sample(&mut rng, &m);
+            let mut batch = std::mem::take(&mut self.batch_buf);
+            self.objective.sample_into(&mut rng, &m, &mut batch);
             self.embed_into(&batch.tokens, batch.tgt_in.as_deref());
             {
                 let StepWorkspace { states, pp, .. } = &mut self.ctx.ws;
@@ -595,6 +602,7 @@ impl Session {
             }
             let x_final = stage_head_view(&mut self.ctx.ws, 0, stacked);
             self.objective.eval_batch(x_final, &self.params, &batch, &m, &mut acc);
+            self.batch_buf = batch;
         }
         self.objective.metric(&acc)
     }
@@ -622,16 +630,9 @@ impl Session {
     }
 }
 
-/// Stage the loss head's input for workspace state `idx`: stacked EncDec
-/// states copy their decoder half into `ws.head` (a persistent [B,S,D]
-/// buffer); flat states are handed to the head directly.
+/// Stage the loss head's input for workspace state `idx` (delegates to the
+/// single decoder-half-split implementation in `context`).
 fn stage_head_view(ws: &mut StepWorkspace, idx: usize, stacked: bool) -> &Tensor {
-    if stacked {
-        let half = ws.states[idx].len() / 2;
-        let StepWorkspace { states, head, .. } = &mut *ws;
-        head.data_mut().copy_from_slice(&states[idx].data()[half..]);
-        &ws.head
-    } else {
-        &ws.states[idx]
-    }
+    let StepWorkspace { states, head, .. } = ws;
+    super::context::staged_head_view(states, head, idx, stacked)
 }

@@ -50,34 +50,75 @@ impl CharCorpus {
         self.vocab
     }
 
-    /// Sample a token stream of length n.
-    pub fn sample(&self, rng: &mut Rng, n: usize) -> Vec<i32> {
-        let mut out = Vec::with_capacity(n);
+    /// Drive the Markov chain for `n` symbols, handing each to `f(i, sym)`
+    /// — the allocation-free core of [`CharCorpus::sample`] and the
+    /// `_into` batchers (all three consume the identical rng sequence, so
+    /// the data stream is independent of which entry point sampled it).
+    fn stream_with(&self, rng: &mut Rng, n: usize, mut f: impl FnMut(usize, i32)) {
         let (mut a, mut b) = (rng.range(self.vocab), rng.range(self.vocab));
-        for _ in 0..n {
+        for i in 0..n {
             let next = if rng.uniform() < self.mix2 {
                 rng.categorical(&self.table[a * self.vocab + b])
             } else {
                 rng.categorical(&self.table1[b])
             };
-            out.push(next as i32);
+            f(i, next as i32);
             a = b;
             b = next;
         }
+    }
+
+    /// Sample a token stream of length n.
+    pub fn sample(&self, rng: &mut Rng, n: usize) -> Vec<i32> {
+        let mut out = Vec::with_capacity(n);
+        self.stream_with(rng, n, |_, sym| out.push(sym));
         out
+    }
+
+    /// Sample a token stream straight into a caller-owned slice — the
+    /// allocation-free form of [`CharCorpus::sample`] (same rng sequence).
+    pub fn sample_into_slice(&self, rng: &mut Rng, out: &mut [i32]) {
+        self.stream_with(rng, out.len(), |i, sym| out[i] = sym);
     }
 
     /// Causal LM batch: inputs = tokens, targets = next tokens, full mask.
     pub fn lm_batch(&self, rng: &mut Rng, batch: usize, seq: usize) -> Batch {
         let mut out = Batch::empty(batch, seq);
-        for bi in 0..batch {
-            let stream = self.sample(rng, seq + 1);
-            for t in 0..seq {
-                out.tokens[bi * seq + t] = stream[t];
-                out.targets[bi * seq + t] = stream[t + 1];
-            }
-        }
+        self.lm_batch_into(rng, batch, seq, &mut out.tokens, &mut out.targets, &mut out.mask);
         out
+    }
+
+    /// Buffer-reusing causal LM batch: refills caller-owned `[B·S]`
+    /// buffers in place (resized on first use, allocation-free at steady
+    /// state). Identical rng consumption and values to
+    /// [`CharCorpus::lm_batch`].
+    pub fn lm_batch_into(
+        &self,
+        rng: &mut Rng,
+        batch: usize,
+        seq: usize,
+        tokens: &mut Vec<i32>,
+        targets: &mut Vec<i32>,
+        mask: &mut Vec<f32>,
+    ) {
+        tokens.clear();
+        tokens.resize(batch * seq, 0);
+        targets.clear();
+        targets.resize(batch * seq, 0);
+        mask.clear();
+        mask.resize(batch * seq, 1.0);
+        for bi in 0..batch {
+            // the (seq+1)-long stream lands directly in the two rows:
+            // element t is token t (t < seq) and target t-1 (t > 0)
+            self.stream_with(rng, seq + 1, |t, sym| {
+                if t < seq {
+                    tokens[bi * seq + t] = sym;
+                }
+                if t > 0 {
+                    targets[bi * seq + t - 1] = sym;
+                }
+            });
+        }
     }
 
     /// BERT-style MLM batch: `mask_frac` of slots replaced by `mask_id`,
@@ -91,27 +132,59 @@ impl CharCorpus {
         mask_id: i32,
     ) -> Batch {
         let mut out = Batch::empty(batch, seq);
-        out.mask.iter_mut().for_each(|m| *m = 0.0);
+        self.mlm_batch_into(
+            rng,
+            batch,
+            seq,
+            mask_frac,
+            mask_id,
+            &mut out.tokens,
+            &mut out.targets,
+            &mut out.mask,
+        );
+        out
+    }
+
+    /// Buffer-reusing MLM batch (see [`CharCorpus::lm_batch_into`]): the
+    /// clean stream is staged in the `targets` row (where it belongs
+    /// anyway), then the masking pass derives `tokens`/`mask` from it —
+    /// no scratch, same rng order as the allocating batcher.
+    #[allow(clippy::too_many_arguments)]
+    pub fn mlm_batch_into(
+        &self,
+        rng: &mut Rng,
+        batch: usize,
+        seq: usize,
+        mask_frac: f32,
+        mask_id: i32,
+        tokens: &mut Vec<i32>,
+        targets: &mut Vec<i32>,
+        mask: &mut Vec<f32>,
+    ) {
+        tokens.clear();
+        tokens.resize(batch * seq, 0);
+        targets.clear();
+        targets.resize(batch * seq, 0);
+        mask.clear();
+        mask.resize(batch * seq, 0.0);
         for bi in 0..batch {
-            let stream = self.sample(rng, seq);
+            self.stream_with(rng, seq, |t, sym| targets[bi * seq + t] = sym);
             for t in 0..seq {
                 let idx = bi * seq + t;
-                out.targets[idx] = stream[t];
                 if rng.uniform() < mask_frac {
-                    out.tokens[idx] = mask_id;
-                    out.mask[idx] = 1.0;
+                    tokens[idx] = mask_id;
+                    mask[idx] = 1.0;
                 } else {
-                    out.tokens[idx] = stream[t];
+                    tokens[idx] = targets[idx];
                 }
             }
             // guarantee at least one masked slot per sequence
-            if out.mask[bi * seq..(bi + 1) * seq].iter().all(|&m| m == 0.0) {
+            if mask[bi * seq..(bi + 1) * seq].iter().all(|&m| m == 0.0) {
                 let t = rng.range(seq);
-                out.tokens[bi * seq + t] = mask_id;
-                out.mask[bi * seq + t] = 1.0;
+                tokens[bi * seq + t] = mask_id;
+                mask[bi * seq + t] = 1.0;
             }
         }
-        out
     }
 
     /// Entropy (nats) of the unigram stationary-ish distribution — an upper

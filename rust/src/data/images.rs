@@ -26,9 +26,12 @@ impl ImageTask {
         ImageTask { side, patch: 4, vocab, n_classes: n_classes.min(8) }
     }
 
-    fn render(&self, class: usize, rng: &mut Rng) -> Vec<f32> {
+    /// Render one image into a caller-owned pixel buffer (resized in
+    /// place; allocation-free once the capacity is warm).
+    fn render_into(&self, class: usize, rng: &mut Rng, img: &mut Vec<f32>) {
         let n = self.side * self.patch;
-        let mut img = vec![0.0f32; n * n];
+        img.clear();
+        img.resize(n * n, 0.0);
         let phase = rng.range(4) as f32;
         for y in 0..n {
             for x in 0..n {
@@ -49,19 +52,39 @@ impl ImageTask {
                 img[y * n + x] = v + 0.15 * rng.normal();
             }
         }
-        img
     }
 
     /// Patch-tokenized classification batch (labels in `labels`).
     pub fn batch(&self, rng: &mut Rng, batch: usize) -> Batch {
         let seq = self.side * self.side;
         let mut out = Batch::empty(batch, seq);
-        out.labels = vec![0; batch];
+        let mut img = Vec::new();
+        self.batch_into(rng, batch, &mut out.tokens, &mut out.labels, &mut img);
+        out
+    }
+
+    /// Buffer-reusing classification batch: token/label buffers are
+    /// refilled in place; `img` is the reusable pixel scratch one image
+    /// renders into. Identical rng consumption and values to
+    /// [`ImageTask::batch`].
+    pub fn batch_into(
+        &self,
+        rng: &mut Rng,
+        batch: usize,
+        tokens: &mut Vec<i32>,
+        labels: &mut Vec<i32>,
+        img: &mut Vec<f32>,
+    ) {
+        let seq = self.side * self.side;
+        tokens.clear();
+        tokens.resize(batch * seq, 0);
+        labels.clear();
+        labels.resize(batch, 0);
         let n = self.side * self.patch;
         for bi in 0..batch {
             let class = rng.range(self.n_classes);
-            out.labels[bi] = class as i32;
-            let img = self.render(class, rng);
+            labels[bi] = class as i32;
+            self.render_into(class, rng, img);
             for py in 0..self.side {
                 for px in 0..self.side {
                     let mut mean = 0.0f32;
@@ -72,11 +95,10 @@ impl ImageTask {
                     }
                     mean /= (self.patch * self.patch) as f32;
                     let tok = ((mean.clamp(0.0, 1.0)) * (self.vocab - 1) as f32).round() as i32;
-                    out.tokens[bi * seq + py * self.side + px] = tok;
+                    tokens[bi * seq + py * self.side + px] = tok;
                 }
             }
         }
-        out
     }
 }
 

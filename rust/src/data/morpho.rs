@@ -33,6 +33,25 @@ impl MorphoTask {
     /// Tagging batch: tokens + per-token class labels (in `targets`).
     pub fn batch(&self, rng: &mut Rng, batch: usize, seq: usize) -> Batch {
         let mut out = Batch::empty(batch, seq);
+        self.batch_into(rng, batch, seq, &mut out.tokens, &mut out.targets);
+        out
+    }
+
+    /// Buffer-reusing tagging batch: refills caller-owned `[B·S]` buffers
+    /// in place (every position is overwritten). Identical rng consumption
+    /// and values to [`MorphoTask::batch`].
+    pub fn batch_into(
+        &self,
+        rng: &mut Rng,
+        batch: usize,
+        seq: usize,
+        tokens: &mut Vec<i32>,
+        targets: &mut Vec<i32>,
+    ) {
+        tokens.clear();
+        tokens.resize(batch * seq, 0);
+        targets.clear();
+        targets.resize(batch * seq, 0);
         for bi in 0..batch {
             let mut t = 0;
             while t < seq {
@@ -40,22 +59,21 @@ impl MorphoTask {
                 let wlen = (2 + rng.range(4)).min(seq - t);
                 let start = t;
                 for _ in 0..wlen {
-                    out.tokens[bi * seq + t] = (1 + rng.range(self.vocab - 1)) as i32;
+                    tokens[bi * seq + t] = (1 + rng.range(self.vocab - 1)) as i32;
                     t += 1;
                 }
-                let last = out.tokens[bi * seq + t - 1];
+                let last = tokens[bi * seq + t - 1];
                 let class = self.suffix_class[last as usize];
                 for k in start..t {
-                    out.targets[bi * seq + k] = class;
+                    targets[bi * seq + k] = class;
                 }
                 if t < seq {
-                    out.tokens[bi * seq + t] = self.sep;
-                    out.targets[bi * seq + t] = self.suffix_class[self.sep as usize];
+                    tokens[bi * seq + t] = self.sep;
+                    targets[bi * seq + t] = self.suffix_class[self.sep as usize];
                     t += 1;
                 }
             }
         }
-        out
     }
 }
 

@@ -47,23 +47,52 @@ impl TranslateTask {
     /// Teacher-forced batch: decoder input is BOS + target[..S-1].
     pub fn batch(&self, rng: &mut Rng, batch: usize, seq: usize) -> PairBatch {
         let mut pb = PairBatch {
-            src: vec![0; batch * seq],
-            tgt_in: vec![0; batch * seq],
-            tgt_out: vec![0; batch * seq],
-            mask: vec![1.0; batch * seq],
+            src: Vec::new(),
+            tgt_in: Vec::new(),
+            tgt_out: Vec::new(),
+            mask: Vec::new(),
             batch,
             seq,
         };
+        self.batch_into(rng, batch, seq, &mut pb.src, &mut pb.tgt_in, &mut pb.tgt_out, &mut pb.mask);
+        pb
+    }
+
+    /// Buffer-reusing teacher-forced batch: all four `[B·S]` buffers are
+    /// refilled in place. The target rows are derived from the source row
+    /// already written into `src` (the cipher is per-symbol, the reversal
+    /// an index map), so no intermediate sequence is materialized.
+    /// Identical rng consumption and values to [`TranslateTask::batch`].
+    #[allow(clippy::too_many_arguments)]
+    pub fn batch_into(
+        &self,
+        rng: &mut Rng,
+        batch: usize,
+        seq: usize,
+        src: &mut Vec<i32>,
+        tgt_in: &mut Vec<i32>,
+        tgt_out: &mut Vec<i32>,
+        mask: &mut Vec<f32>,
+    ) {
+        src.clear();
+        src.resize(batch * seq, 0);
+        tgt_in.clear();
+        tgt_in.resize(batch * seq, 0);
+        tgt_out.clear();
+        tgt_out.resize(batch * seq, 0);
+        mask.clear();
+        mask.resize(batch * seq, 1.0);
         for bi in 0..batch {
-            let src = self.corpus.sample(rng, seq);
-            let tgt = self.translate(&src);
+            let row = bi * seq;
+            self.corpus.sample_into_slice(rng, &mut src[row..row + seq]);
             for t in 0..seq {
-                pb.src[bi * seq + t] = src[t];
-                pb.tgt_out[bi * seq + t] = tgt[t];
-                pb.tgt_in[bi * seq + t] = if t == 0 { self.bos() } else { tgt[t - 1] };
+                let s = if self.reverse { seq - 1 - t } else { t };
+                tgt_out[row + t] = self.subst[src[row + s] as usize];
+            }
+            for t in 0..seq {
+                tgt_in[row + t] = if t == 0 { self.bos() } else { tgt_out[row + t - 1] };
             }
         }
-        pb
     }
 }
 

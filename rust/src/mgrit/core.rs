@@ -20,10 +20,14 @@
 //! paper Fig. 2) executes through the multi-worker slab executor in
 //! [`crate::parallel::exec`] — OS threads + channel-fabric halo exchange —
 //! producing bitwise the same iterates as the single-threaded schedule.
-//! `with_pool` routes those sweeps onto a persistent
+//! Since the zero-copy refactor the workers relax **in place on this
+//! core's level storage** (disjoint `&mut` slab views; no staging copies,
+//! no stitch-back). `with_pool` routes those sweeps onto a persistent
 //! [`WorkerPool`](crate::parallel::WorkerPool) instead of per-sweep scoped
-//! spawns (same schedule, amortized spawn cost). This is the engine room of
-//! the `ThreadedMgrit` backend.
+//! spawns (same schedule, amortized spawn cost, and — with the pool's
+//! persistent workspaces and the fabric's recycled halo buffers — zero
+//! steady-state allocations). This is the engine room of the
+//! `ThreadedMgrit` backend.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
@@ -172,13 +176,14 @@ impl MgritCore {
         self.levels[0].n
     }
 
-    /// Structural health check for cores cached across solves. A panicked
-    /// *threaded* relaxation sweep unwinds through the slab executor while
-    /// a level's `w`/`g` vectors are `mem::take`n out, leaving them empty;
-    /// a fresh-per-solve core simply drops, but a cached one would be
-    /// reused gutted. The per-`Session` solve context treats a non-intact
-    /// core as a cache miss and rebuilds it (alongside the poisoned-pool
-    /// replacement in the backend).
+    /// Structural health check for cores cached across solves. Since the
+    /// in-place relaxation executors, threaded sweeps no longer
+    /// `mem::take` the level storage, so a panicked sweep leaves the core
+    /// structurally whole (possibly with torn point values, which the
+    /// next `solve` fully reinitializes) — cached cores survive panic
+    /// recovery and only the poisoned pool is replaced. The check is kept
+    /// as a defensive invariant for the per-`Session` solve context,
+    /// which still treats a non-intact core as a cache miss.
     pub fn is_intact(&self) -> bool {
         self.levels
             .iter()
@@ -388,7 +393,9 @@ impl MgritCore {
 
     /// F-relaxation, threaded when [`Self::thread_level`] says it pays —
     /// through the persistent pool when one is attached, scoped spawns
-    /// otherwise (identical schedules).
+    /// otherwise (identical schedules). Workers relax **in place** on the
+    /// level's point storage (disjoint slab views; no staging copies, no
+    /// stitch — see `parallel::exec`).
     fn f_relax_exec<S: LevelStepper>(
         lvl: &mut Level,
         stepper: &S,
@@ -398,16 +405,14 @@ impl MgritCore {
     ) {
         if Self::thread_level(lvl, cf, workers) {
             let stride = lvl.stride;
-            let g = std::mem::take(&mut lvl.g);
-            let w = std::mem::take(&mut lvl.w);
             let step = |idx: usize, z: &Tensor, out: &mut Tensor| {
                 stepper.apply_into(idx * stride, stride, z, out)
             };
-            lvl.w = match pool {
-                Some(p) => exec::pool_f_relax(p, w, Some(&g[..]), cf, step),
-                None => exec::parallel_f_relax(w, Some(&g[..]), cf, workers, step),
-            };
-            lvl.g = g;
+            let Level { w, g, .. } = lvl;
+            match pool {
+                Some(p) => exec::pool_f_relax_mut(p, w, Some(&g[..]), cf, step),
+                None => exec::parallel_f_relax_mut(w, Some(&g[..]), cf, workers, step),
+            }
         } else {
             Self::f_relax(lvl, stepper, cf);
         }
@@ -415,7 +420,8 @@ impl MgritCore {
 
     /// Full FCF sweep (slab F-relax, C-relax with halo exchange, second
     /// F-relax — paper Fig. 2), threaded when [`Self::thread_level`] says
-    /// it pays.
+    /// it pays. In place on the shared level storage, like
+    /// [`Self::f_relax_exec`].
     fn fcf_relax_exec<S: LevelStepper>(
         lvl: &mut Level,
         stepper: &S,
@@ -425,16 +431,14 @@ impl MgritCore {
     ) {
         if Self::thread_level(lvl, cf, workers) {
             let stride = lvl.stride;
-            let g = std::mem::take(&mut lvl.g);
-            let w = std::mem::take(&mut lvl.w);
             let step = |idx: usize, z: &Tensor, out: &mut Tensor| {
                 stepper.apply_into(idx * stride, stride, z, out)
             };
-            lvl.w = match pool {
-                Some(p) => exec::pool_fc_relax(p, w, Some(&g[..]), cf, step),
-                None => exec::parallel_fc_relax(w, Some(&g[..]), cf, workers, step),
-            };
-            lvl.g = g;
+            let Level { w, g, .. } = lvl;
+            match pool {
+                Some(p) => exec::pool_fc_relax_mut(p, w, Some(&g[..]), cf, step),
+                None => exec::parallel_fc_relax_mut(w, Some(&g[..]), cf, workers, step),
+            }
         } else {
             Self::f_relax(lvl, stepper, cf);
             Self::c_relax(lvl, stepper, cf);

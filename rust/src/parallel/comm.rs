@@ -2,10 +2,34 @@
 //! MPI (DESIGN.md §Substitutions). Every rank gets an [`Endpoint`] with
 //! point-to-point send/recv plus collective helpers; global counters track
 //! messages and bytes for the §Perf logs and simulator calibration.
+//!
+//! ## Allocation discipline
+//!
+//! The fabric is on the MGRIT relaxation hot path (one halo exchange per
+//! FCF sweep per slab boundary), so its steady state must not touch the
+//! heap:
+//!
+//! * mailboxes are preallocated `Mutex<VecDeque<Msg>>` per rank — a send
+//!   moves the message's `Vec<f32>` payload into the receiver's deque
+//!   (pointer move, no copy, no node allocation; the deque's capacity is
+//!   retained across sweeps);
+//! * [`Endpoint::send_scratch`] / [`Endpoint::recv_scratch`] implement a
+//!   buffer-recycling protocol: the sender fills a persistent flat scratch
+//!   buffer, the receiver consumes it and mails the *same* buffer back on
+//!   the paired return tag (`tag | RETURN_BIT`), and the sender reclaims
+//!   it on its next send. After the first exchange of a given size no
+//!   flat buffer is ever allocated again.
+//!
+//! Return-tag traffic is bookkeeping, not simulated communication, so it
+//! is excluded from the byte/message counters.
 
-use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::mpsc::{channel, Receiver, Sender};
-use std::sync::Arc;
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard};
+
+/// Tag bit marking a recycled-buffer return message (see module docs).
+/// User tags must stay below it.
+pub const RETURN_BIT: u64 = 1 << 63;
 
 /// A tagged message between ranks.
 #[derive(Debug)]
@@ -22,9 +46,35 @@ pub struct Counters {
     pub bytes: AtomicU64,
 }
 
-/// All-to-all mesh of mpsc channels for `n` ranks.
+/// One rank's preallocated inbox.
+struct Mailbox {
+    q: Mutex<VecDeque<Msg>>,
+    cv: Condvar,
+}
+
+impl Mailbox {
+    /// Poison-tolerant lock: a receiver that panics mid-`recv` (e.g. on a
+    /// poison halo) poisons its own mailbox mutex, but the queue state is
+    /// always consistent at that point — and senders/drops touching the
+    /// box afterwards must not double-panic during unwind.
+    fn lock(&self) -> MutexGuard<'_, VecDeque<Msg>> {
+        self.q.lock().unwrap_or_else(|e| e.into_inner())
+    }
+}
+
+/// Shared state of the whole mesh.
+struct Mesh {
+    boxes: Vec<Mailbox>,
+    /// Per-rank liveness: cleared when that rank's endpoint drops, so a
+    /// recv blocked on a message from a dead sender (e.g. a panicked
+    /// scoped-spawn slab) fails loudly instead of hanging the sweep.
+    alive: Vec<AtomicBool>,
+}
+
+/// All-to-all mesh of mailboxes for `n` ranks.
 pub struct Fabric {
-    endpoints: Vec<Option<Endpoint>>,
+    mesh: Arc<Mesh>,
+    taken: Vec<bool>,
     pub counters: Arc<Counters>,
 }
 
@@ -32,74 +82,110 @@ pub struct Fabric {
 pub struct Endpoint {
     pub rank: usize,
     pub n_ranks: usize,
-    senders: Vec<Sender<Msg>>,
-    receiver: Receiver<Msg>,
-    /// out-of-order buffer for selective recv
-    stash: Vec<Msg>,
+    mesh: Arc<Mesh>,
     counters: Arc<Counters>,
+    /// Reusable flat buffer for [`Endpoint::send_scratch`]. Empty while a
+    /// send is in flight (the buffer travels with the message and comes
+    /// home on the return tag).
+    scratch: Vec<f32>,
+    /// `(peer, return_tag)` of an outstanding scratch loan, reclaimed
+    /// lazily at the next `send_scratch`.
+    loan: Option<(usize, u64)>,
 }
 
 impl Fabric {
     pub fn new(n: usize) -> Fabric {
-        let counters = Arc::new(Counters::default());
-        let mut senders = Vec::with_capacity(n);
-        let mut receivers = Vec::with_capacity(n);
-        for _ in 0..n {
-            let (tx, rx) = channel();
-            senders.push(tx);
-            receivers.push(rx);
-        }
-        let endpoints = receivers
-            .into_iter()
-            .enumerate()
-            .map(|(rank, receiver)| {
-                Some(Endpoint {
-                    rank,
-                    n_ranks: n,
-                    senders: senders.clone(),
-                    receiver,
-                    stash: Vec::new(),
-                    counters: counters.clone(),
-                })
-            })
-            .collect();
-        Fabric { endpoints, counters }
+        let mesh = Arc::new(Mesh {
+            boxes: (0..n)
+                .map(|_| Mailbox { q: Mutex::new(VecDeque::with_capacity(4)), cv: Condvar::new() })
+                .collect(),
+            alive: (0..n).map(|_| AtomicBool::new(true)).collect(),
+        });
+        Fabric { mesh, taken: vec![false; n], counters: Arc::new(Counters::default()) }
     }
 
     /// Take rank `r`'s endpoint (each can be taken once, then moved into a
     /// worker thread).
     pub fn take(&mut self, r: usize) -> Endpoint {
-        self.endpoints[r].take().expect("endpoint already taken")
+        assert!(!self.taken[r], "endpoint already taken");
+        self.taken[r] = true;
+        Endpoint {
+            rank: r,
+            n_ranks: self.taken.len(),
+            mesh: self.mesh.clone(),
+            counters: self.counters.clone(),
+            scratch: Vec::new(),
+            loan: None,
+        }
     }
 
     /// Take all remaining endpoints.
     pub fn take_all(&mut self) -> Vec<Endpoint> {
-        (0..self.endpoints.len()).map(|r| self.take(r)).collect()
+        (0..self.taken.len()).map(|r| self.take(r)).collect()
     }
 }
 
 impl Endpoint {
-    /// Send `data` to rank `to` with a tag.
+    /// Send `data` to rank `to` with a tag. Return-tag messages (buffer
+    /// recycling) bypass the traffic counters.
     pub fn send(&self, to: usize, tag: u64, data: Vec<f32>) {
-        self.counters.messages.fetch_add(1, Ordering::Relaxed);
-        self.counters.bytes.fetch_add(4 * data.len() as u64, Ordering::Relaxed);
-        self.senders[to]
-            .send(Msg { from: self.rank, tag, data })
-            .expect("fabric receiver dropped");
+        if tag & RETURN_BIT == 0 {
+            self.counters.messages.fetch_add(1, Ordering::Relaxed);
+            self.counters.bytes.fetch_add(4 * data.len() as u64, Ordering::Relaxed);
+        }
+        let mb = &self.mesh.boxes[to];
+        let mut q = mb.lock();
+        q.push_back(Msg { from: self.rank, tag, data });
+        drop(q);
+        mb.cv.notify_all();
     }
 
-    /// Blocking receive of the next message matching (from, tag).
+    /// Blocking receive of the next message matching (from, tag). Panics
+    /// if the sending rank's endpoint has dropped with no matching message
+    /// queued (the old channel-disconnect semantics; this is how a
+    /// panicked scoped-spawn slab unwinds its blocked right neighbour).
     pub fn recv(&mut self, from: usize, tag: u64) -> Vec<f32> {
-        if let Some(i) = self.stash.iter().position(|m| m.from == from && m.tag == tag) {
-            return self.stash.swap_remove(i).data;
-        }
+        let mb = &self.mesh.boxes[self.rank];
+        let mut q = mb.lock();
         loop {
-            let m = self.receiver.recv().expect("fabric sender dropped");
-            if m.from == from && m.tag == tag {
-                return m.data;
+            if let Some(i) = q.iter().position(|m| m.from == from && m.tag == tag) {
+                return q.remove(i).expect("indexed message").data;
             }
-            self.stash.push(m);
+            assert!(
+                self.mesh.alive[from].load(Ordering::SeqCst),
+                "fabric sender dropped"
+            );
+            q = mb.cv.wait(q).unwrap_or_else(|e| e.into_inner());
         }
+    }
+
+    /// Allocation-free (at steady state) send: fill the endpoint's
+    /// persistent flat scratch and mail it. If a previous scratch send is
+    /// still outstanding, the buffer is first reclaimed from the paired
+    /// return message (blocking — the receiver posts it the moment it has
+    /// consumed the payload, so in the sweep-barrier discipline of the
+    /// worker pool it is always already queued).
+    pub fn send_scratch(&mut self, to: usize, tag: u64, fill: impl FnOnce(&mut Vec<f32>)) {
+        debug_assert_eq!(tag & RETURN_BIT, 0, "user tags must not set RETURN_BIT");
+        let mut buf = match self.loan.take() {
+            Some((peer, rtag)) => self.recv(peer, rtag),
+            None => std::mem::take(&mut self.scratch),
+        };
+        buf.clear();
+        fill(&mut buf);
+        self.send(to, tag, buf);
+        self.loan = Some((to, tag | RETURN_BIT));
+    }
+
+    /// Receiving half of the recycling protocol: consume the payload, then
+    /// mail the transport buffer straight back to the sender so its next
+    /// `send_scratch` reuses it. If `consume` panics (e.g. a poison-halo
+    /// length check), the buffer is dropped with the unwind — the failed
+    /// sweep poisons the pool and the fabric is rebuilt anyway.
+    pub fn recv_scratch(&mut self, from: usize, tag: u64, consume: impl FnOnce(&[f32])) {
+        let data = self.recv(from, tag);
+        consume(&data);
+        self.send(from, tag | RETURN_BIT, data);
     }
 
     /// Sum-allreduce across all ranks (flat binary-tree reduce + broadcast).
@@ -142,6 +228,19 @@ impl Endpoint {
     }
 }
 
+impl Drop for Endpoint {
+    fn drop(&mut self) {
+        self.mesh.alive[self.rank].store(false, Ordering::SeqCst);
+        // wake every blocked recv so it re-checks sender liveness (the
+        // lock round-trip orders the flag write before the wakeup; drops
+        // run during unwinds, so the lock must be poison-tolerant)
+        for mb in &self.mesh.boxes {
+            drop(mb.lock());
+            mb.cv.notify_all();
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -165,9 +264,54 @@ mod tests {
         let mut b = fabric.take(1);
         a.send(1, 1, vec![1.0]);
         a.send(1, 2, vec![2.0]);
-        // ask for tag 2 first: tag-1 message must be stashed, not lost
+        // ask for tag 2 first: tag-1 message must stay queued, not be lost
         assert_eq!(b.recv(0, 2), vec![2.0]);
         assert_eq!(b.recv(0, 1), vec![1.0]);
+    }
+
+    #[test]
+    fn recv_from_dropped_sender_panics() {
+        let mut fabric = Fabric::new(2);
+        let a = fabric.take(0);
+        let mut b = fabric.take(1);
+        a.send(1, 3, vec![9.0]);
+        drop(a);
+        // a queued message is still deliverable after the sender dies...
+        assert_eq!(b.recv(0, 3), vec![9.0]);
+        // ...but waiting for one that never arrives fails loudly
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| b.recv(0, 4)));
+        assert!(r.is_err(), "recv from a dead sender must panic, not hang");
+    }
+
+    #[test]
+    fn scratch_sends_recycle_the_transport_buffer() {
+        let mut fabric = Fabric::new(2);
+        let mut a = fabric.take(0);
+        let mut b = fabric.take(1);
+        for round in 0..4 {
+            a.send_scratch(1, 11, |buf| buf.extend_from_slice(&[round as f32, 2.5]));
+            let mut got = Vec::new();
+            b.recv_scratch(0, 11, |data| got.extend_from_slice(data));
+            assert_eq!(got, vec![round as f32, 2.5]);
+        }
+        // return-tag traffic must not inflate the simulated-comm counters:
+        // 4 payload messages of 2 floats each
+        assert_eq!(fabric.counters.messages.load(Ordering::Relaxed), 4);
+        assert_eq!(fabric.counters.bytes.load(Ordering::Relaxed), 4 * 8);
+    }
+
+    #[test]
+    fn scratch_sends_survive_size_changes() {
+        let mut fabric = Fabric::new(2);
+        let mut a = fabric.take(0);
+        let mut b = fabric.take(1);
+        for n in [3usize, 7, 2, 7] {
+            a.send_scratch(1, 5, |buf| buf.extend(std::iter::repeat(n as f32).take(n)));
+            b.recv_scratch(0, 5, |data| {
+                assert_eq!(data.len(), n);
+                assert!(data.iter().all(|&v| v == n as f32));
+            });
+        }
     }
 
     #[test]

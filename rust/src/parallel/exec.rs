@@ -7,14 +7,27 @@
 //! value-for-value identical to the single-threaded engine, so threaded
 //! solves are *bitwise* equal to serial ones.
 //!
-//! Two dispatch modes share the exact same slab bodies:
+//! ## Zero-copy in-place executors (the hot path)
 //!
-//! * `parallel_f_relax` / `parallel_fc_relax` — scoped threads spawned per
-//!   sweep (self-contained; used by ad-hoc solver calls and as the parity
-//!   oracle for the pool);
-//! * `pool_f_relax` / `pool_fc_relax` — the same sweeps dispatched onto a
-//!   persistent [`WorkerPool`] (per-`Session` threads parked between
-//!   sweeps, amortizing spawn cost; the `ThreadedMgrit` backend's path).
+//! `parallel_{f,fc}_relax_mut` / `pool_{f,fc}_relax_mut` relax **in place
+//! on the shared fine-grid storage**: every worker takes a disjoint
+//! `&mut [T]` view of the level's point array (see the ownership protocol
+//! in [`crate::parallel`]'s module docs) and writes results where they
+//! live — no per-sweep slab copy, no stitch copy-back, no flat-buffer
+//! allocation (halo messages recycle one persistent scratch per rank via
+//! [`Endpoint::send_scratch`]). With the condvar dispatch of
+//! [`WorkerPool::run_sweep`] a steady-state pooled sweep performs zero
+//! heap allocations (pinned by `rust/tests/alloc_audit.rs`).
+//!
+//! ## Staged executors (oracle + bench baseline)
+//!
+//! `parallel_{f,fc}_relax` / `pool_{f,fc}_relax` are the previous
+//! implementation: each slab copies its points out of the grid
+//! (`w_all[lo..=hi].to_vec()`), relaxes the copy, and the results are
+//! stitched back. They are kept as the independently-derived parity
+//! oracle for the in-place path and as the `perf_hotpath` "staged"
+//! baseline rows; both dispatch modes of each family share one slab body,
+//! so the bitwise-parity invariant cannot silently fork per executor.
 //!
 //! Buffer-reuse contract (v3): the step closure has write-into form
 //! `step(idx, z, out)` — `out` is an existing state slot that must be
@@ -23,18 +36,32 @@
 //! The FAS right-hand side G, when present, is added after every step with
 //! the same arithmetic as the serial engine (bitwise parity).
 
+use std::marker::PhantomData;
 use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
 use std::sync::mpsc::channel;
 use std::thread;
 
 use super::comm::Endpoint;
 use super::comm::Fabric;
-use super::pool::WorkerPool;
-use super::topology::slab_partition;
+use super::pool::{WorkerPool, Workspace};
+use super::topology::slab_range;
 use crate::tensor::Tensor;
 
 /// Fabric tag for the FCF halo exchange.
 const HALO_TAG: u64 = 42;
+
+/// Cold halo-corruption exit. Out of line so the sweep body's length
+/// check compiles to one compare-and-branch — the panic formatting
+/// machinery (format args, payload boxing) is not materialized in the
+/// hot loop.
+#[cold]
+#[inline(never)]
+fn bad_halo(got: usize, want: usize) -> ! {
+    panic!(
+        "malformed halo message: {} floats, expected {} (left-neighbour worker panicked?)",
+        got, want
+    )
+}
 
 /// A state vector the relaxation executors can carry across threads and
 /// through the channel fabric.
@@ -51,6 +78,19 @@ pub trait RelaxState: Clone + Send + Sync {
 
     /// Rebuild from a fabric message (`like` supplies shape metadata).
     fn from_flat(like: &Self, data: Vec<f32>) -> Self;
+
+    /// Append the flattened state to a reusable flat buffer (the
+    /// allocation-free flatten of the in-place halo path). Must produce
+    /// the exact bytes of [`RelaxState::to_flat`].
+    fn write_flat(&self, out: &mut Vec<f32>) {
+        out.extend_from_slice(&self.to_flat());
+    }
+
+    /// Overwrite this state from a flat message in place (shape is kept;
+    /// the allocation-free inverse of [`RelaxState::write_flat`]).
+    fn copy_from_flat(&mut self, data: &[f32]) {
+        *self = Self::from_flat(self, data.to_vec());
+    }
 }
 
 impl RelaxState for Vec<f32> {
@@ -71,6 +111,14 @@ impl RelaxState for Vec<f32> {
     fn from_flat(_like: &Self, data: Vec<f32>) -> Self {
         data
     }
+
+    fn write_flat(&self, out: &mut Vec<f32>) {
+        out.extend_from_slice(self);
+    }
+
+    fn copy_from_flat(&mut self, data: &[f32]) {
+        self.copy_from_slice(data);
+    }
 }
 
 impl RelaxState for Tensor {
@@ -89,13 +137,307 @@ impl RelaxState for Tensor {
     fn from_flat(like: &Self, data: Vec<f32>) -> Self {
         Tensor::from_vec(data, like.shape())
     }
+
+    fn write_flat(&self, out: &mut Vec<f32>) {
+        out.extend_from_slice(self.data());
+    }
+
+    fn copy_from_flat(&mut self, data: &[f32]) {
+        self.data_mut().copy_from_slice(data);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// shared-grid (in-place) executors
+// ---------------------------------------------------------------------------
+
+/// Hands concurrently-running slab bodies disjoint `&mut [T]` windows of
+/// one shared point array. The only unsafe ingredient of the in-place
+/// executors: a raw pointer + length pair standing in for the `&mut [T]`
+/// the caller lent for the duration of the sweep (the pool barrier /
+/// scoped join guarantees the borrow outlives every access).
+struct SharedGrid<'a, T> {
+    ptr: *mut T,
+    len: usize,
+    _borrow: PhantomData<&'a mut [T]>,
+}
+
+// SAFETY: the grid only ever hands out slices of `T`; moving those
+// accesses across threads is exactly as safe as sending `&mut [T]`.
+unsafe impl<T: Send> Sync for SharedGrid<'_, T> {}
+
+impl<'a, T> SharedGrid<'a, T> {
+    fn new(data: &'a mut [T]) -> SharedGrid<'a, T> {
+        SharedGrid { ptr: data.as_mut_ptr(), len: data.len(), _borrow: PhantomData }
+    }
+
+    /// Reborrow the window `[start, start + len)`.
+    ///
+    /// SAFETY: callers must hand pairwise-disjoint windows to concurrently
+    /// running threads. The executors derive every window from
+    /// [`slab_view`], whose ranges are disjoint by construction
+    /// (`topology::slab_range` partitions the chunk space).
+    // the returned borrow is tied to the grid's 'a (the caller's loan of
+    // the whole array), not to &self — the mut_from_ref shape is the point
+    #[allow(clippy::mut_from_ref)]
+    unsafe fn window(&self, start: usize, len: usize) -> &'a mut [T] {
+        assert!(start + len <= self.len, "grid window out of bounds");
+        std::slice::from_raw_parts_mut(self.ptr.add(start), len)
+    }
+}
+
+/// Point-ownership geometry of one slab (see the protocol in
+/// [`crate::parallel`]): rank `r` of `active` owns grid points
+/// `[B_r, B_{r+1})` where `B_r = slab_range(..).0 * cf`, and the last
+/// rank additionally owns the final point `n`. Returns
+/// `(start_point, point_count, chunk_count)`.
+fn slab_view(chunks: usize, cf: usize, active: usize, rank: usize) -> (usize, usize, usize) {
+    let (c0, c1) = slab_range(chunks, active, rank);
+    let start = c0 * cf;
+    let cl = c1 - c0;
+    (start, cl * cf + usize::from(rank + 1 == active), cl)
 }
 
 /// One relaxation step with the FAS right-hand side applied, writing the
-/// updated point `local[idx + 1]` in place — the single place the
-/// g-indexing convention (`g[point_written]`, i.e. `lo+idx+1`) lives;
-/// every F- and C-point update in all executors routes through it, so the
-/// bitwise-parity invariant cannot silently fork.
+/// updated point `view[idx + 1]` in place. `vlo` is the grid index of
+/// `view[0]`; the g-indexing convention is `g[point_written]` — identical
+/// to the staged executors' [`relax_point_into`], so the bitwise-parity
+/// invariant cannot silently fork between the two families.
+fn relax_view_point<T, F>(vlo: usize, idx: usize, view: &mut [T], g: Option<&[T]>, step: &F)
+where
+    T: RelaxState,
+    F: Fn(usize, &T, &mut T),
+{
+    let (head, tail) = view.split_at_mut(idx + 1);
+    step(vlo + idx, &head[idx], &mut tail[0]);
+    if let Some(g) = g {
+        tail[0].add_in_place(&g[vlo + idx + 1]);
+    }
+}
+
+/// One F-point sweep over a slab's in-place view: for every owned chunk,
+/// re-propagate its F-points from the chunk's leading C-point. C-points
+/// (every `cf`-th view slot, including the read-only entry `view[0]`) are
+/// never written.
+fn f_sweep_view<T, F>(view: &mut [T], vlo: usize, cl: usize, cf: usize, g: Option<&[T]>, step: &F)
+where
+    T: RelaxState,
+    F: Fn(usize, &T, &mut T),
+{
+    for c in 0..cl {
+        for i in 0..cf - 1 {
+            relax_view_point(vlo, c * cf + i, view, g, step);
+        }
+    }
+}
+
+/// The full FCF slab body on the shared grid (F-relax, C-relax with the
+/// right boundary sent to its owner, halo recv into the entry C-point,
+/// second F-relax). `temp` holds the boundary C-step result while it is
+/// flattened for the fabric; only non-last ranks need one.
+#[allow(clippy::too_many_arguments)]
+fn fcf_slab_mut<T, F>(
+    view: &mut [T],
+    vlo: usize,
+    cl: usize,
+    cf: usize,
+    g: Option<&[T]>,
+    rank: usize,
+    active: usize,
+    mut temp: Option<&mut T>,
+    ep: &mut Endpoint,
+    step: &F,
+) where
+    T: RelaxState,
+    F: Fn(usize, &T, &mut T),
+{
+    // F-relaxation: every chunk independently (parallel phase)
+    f_sweep_view(view, vlo, cl, cf, g, step);
+    // C-relaxation in chunk order. Interior chunk-boundary C-points are
+    // owned by this slab and updated in place; the slab's *right* boundary
+    // point belongs to the right neighbour — its value is computed into
+    // `temp` and sent the moment it exists (the neighbour writes it where
+    // it lives), exactly the staged schedule's boundary handoff.
+    for c in 0..cl {
+        let dest = (c + 1) * cf;
+        if dest < view.len() {
+            relax_view_point(vlo, dest - 1, view, g, step);
+        } else {
+            debug_assert_eq!(c, cl - 1, "only the last chunk ends off-slab");
+            debug_assert!(rank + 1 < active, "the last rank owns its final point");
+            let out: &mut T = temp.as_mut().expect("non-last ranks carry a boundary temp");
+            step(vlo + dest - 1, &view[dest - 1], out);
+            if let Some(g) = g {
+                out.add_in_place(&g[vlo + dest]);
+            }
+            ep.send_scratch(rank + 1, HALO_TAG, |buf| out.write_flat(buf));
+        }
+    }
+    // second F-relax needs the refreshed entry C-point produced by the
+    // left neighbour's C-relax (FCF); receive it straight into the grid
+    if rank > 0 {
+        let entry = &mut view[0];
+        ep.recv_scratch(rank - 1, HALO_TAG, |data| {
+            if data.len() != entry.flat_len() {
+                bad_halo(data.len(), entry.flat_len());
+            }
+            entry.copy_from_flat(data);
+        });
+    }
+    f_sweep_view(view, vlo, cl, cf, g, step);
+}
+
+/// In-place FCF sweep on `workers` scoped threads: the zero-copy form of
+/// [`parallel_fc_relax`] — `w` holds states at points 0..=n and is
+/// relaxed where it lives (C-points must be valid on entry; F-points and
+/// chunk-boundary C-points are overwritten). Bitwise identical to the
+/// serial schedule and to the staged executors.
+pub fn parallel_fc_relax_mut<T, F>(w: &mut [T], g: Option<&[T]>, cf: usize, workers: usize, step: F)
+where
+    T: RelaxState,
+    F: Fn(usize, &T, &mut T) + Sync,
+{
+    let n = w.len() - 1;
+    assert_eq!(n % cf, 0, "n must be a multiple of cf");
+    let chunks = n / cf;
+    let active = workers.min(chunks).max(1);
+    let mut fabric = Fabric::new(active);
+    let endpoints = fabric.take_all();
+    let step_ref = &step;
+
+    // safe sequential split into the per-rank disjoint windows
+    let mut views: Vec<&mut [T]> = Vec::with_capacity(active);
+    let mut rest = w;
+    for rank in 0..active {
+        let (_, len, _) = slab_view(chunks, cf, active, rank);
+        let (head, tail) = rest.split_at_mut(len);
+        views.push(head);
+        rest = tail;
+    }
+    debug_assert!(rest.is_empty(), "slab views must cover the whole grid");
+
+    thread::scope(|s| {
+        for ((rank, mut ep), view) in endpoints.into_iter().enumerate().zip(views) {
+            s.spawn(move || {
+                let (vlo, _, cl) = slab_view(chunks, cf, active, rank);
+                let mut temp = if rank + 1 < active { Some(view[0].clone()) } else { None };
+                fcf_slab_mut(view, vlo, cl, cf, g, rank, active, temp.as_mut(), &mut ep, step_ref);
+            });
+        }
+    });
+}
+
+/// In-place F-only sweep on scoped threads (no communication at all): the
+/// zero-copy form of [`parallel_f_relax`].
+pub fn parallel_f_relax_mut<T, F>(w: &mut [T], g: Option<&[T]>, cf: usize, workers: usize, step: F)
+where
+    T: RelaxState,
+    F: Fn(usize, &T, &mut T) + Sync,
+{
+    let n = w.len() - 1;
+    assert_eq!(n % cf, 0, "n must be a multiple of cf");
+    let chunks = n / cf;
+    let active = workers.min(chunks).max(1);
+    let step_ref = &step;
+
+    let mut views: Vec<&mut [T]> = Vec::with_capacity(active);
+    let mut rest = w;
+    for rank in 0..active {
+        let (_, len, _) = slab_view(chunks, cf, active, rank);
+        let (head, tail) = rest.split_at_mut(len);
+        views.push(head);
+        rest = tail;
+    }
+    debug_assert!(rest.is_empty(), "slab views must cover the whole grid");
+
+    thread::scope(|s| {
+        for (rank, view) in views.into_iter().enumerate() {
+            s.spawn(move || {
+                let (vlo, _, cl) = slab_view(chunks, cf, active, rank);
+                f_sweep_view(view, vlo, cl, cf, g, step_ref);
+            });
+        }
+    });
+}
+
+/// In-place FCF sweep on a persistent [`WorkerPool`]: the zero-allocation
+/// hot path of the `ThreadedMgrit` backend. Same slab schedule as
+/// [`parallel_fc_relax_mut`] with `workers = pool.size()`, dispatched as
+/// one shared borrowed body ([`WorkerPool::run_sweep`]); each worker's
+/// boundary temp lives in its persistent [`Workspace`] and halo messages
+/// recycle the endpoints' flat scratch.
+///
+/// Panic containment: a panicking slab first sends a zero-length *poison*
+/// halo so its right neighbour — possibly blocked on the halo recv —
+/// fails the length check instead of deadlocking the sweep barrier; the
+/// chain unwinds rank by rank, the barrier completes, the pool is
+/// **poisoned**, and the original payload re-raises here.
+pub fn pool_fc_relax_mut<T, F>(pool: &WorkerPool, w: &mut [T], g: Option<&[T]>, cf: usize, step: F)
+where
+    T: RelaxState + 'static,
+    F: Fn(usize, &T, &mut T) + Sync,
+{
+    let n = w.len() - 1;
+    assert_eq!(n % cf, 0, "n must be a multiple of cf");
+    let chunks = n / cf;
+    let active = pool.size().min(chunks).max(1);
+    let grid = SharedGrid::new(w);
+    let step_ref = &step;
+    pool.run_sweep(active, &|rank: usize, ep: &mut Endpoint, ws: &mut Workspace| {
+        let res = catch_unwind(AssertUnwindSafe(|| {
+            let (vlo, vlen, cl) = slab_view(chunks, cf, active, rank);
+            // SAFETY: slab_view windows are pairwise disjoint across the
+            // active ranks of one sweep (see SharedGrid::window).
+            let view = unsafe { grid.window(vlo, vlen) };
+            if rank + 1 < active {
+                let want = view[0].flat_len();
+                let temp = ws.typed::<T, _, _>(|t| t.flat_len() == want, || view[0].clone());
+                fcf_slab_mut(view, vlo, cl, cf, g, rank, active, Some(temp), ep, step_ref);
+            } else {
+                fcf_slab_mut(view, vlo, cl, cf, g, rank, active, None, ep, step_ref);
+            }
+        }));
+        if let Err(payload) = res {
+            // zero-length poison halo: real states are never empty, so the
+            // neighbour's length check fires instead of waiting forever
+            if rank + 1 < active {
+                ep.send(rank + 1, HALO_TAG, Vec::new());
+            }
+            resume_unwind(payload);
+        }
+    });
+}
+
+/// In-place F-only sweep on a persistent [`WorkerPool`]. No halo waits, so
+/// a panicking slab simply re-raises at the dispatch site after the
+/// barrier (the pool is still poisoned by `run_sweep`).
+pub fn pool_f_relax_mut<T, F>(pool: &WorkerPool, w: &mut [T], g: Option<&[T]>, cf: usize, step: F)
+where
+    T: RelaxState + 'static,
+    F: Fn(usize, &T, &mut T) + Sync,
+{
+    let n = w.len() - 1;
+    assert_eq!(n % cf, 0, "n must be a multiple of cf");
+    let chunks = n / cf;
+    let active = pool.size().min(chunks).max(1);
+    let grid = SharedGrid::new(w);
+    let step_ref = &step;
+    pool.run_sweep(active, &|rank: usize, _ep: &mut Endpoint, _ws: &mut Workspace| {
+        let (vlo, vlen, cl) = slab_view(chunks, cf, active, rank);
+        // SAFETY: disjoint windows, as in pool_fc_relax_mut.
+        let view = unsafe { grid.window(vlo, vlen) };
+        f_sweep_view(view, vlo, cl, cf, g, step_ref);
+    });
+}
+
+// ---------------------------------------------------------------------------
+// staged executors (parity oracle + bench baseline)
+// ---------------------------------------------------------------------------
+
+/// One relaxation step with the FAS right-hand side applied, writing the
+/// updated point `local[idx + 1]` in place — the staged twin of
+/// [`relax_view_point`] (same g-indexing convention: `g[point_written]`,
+/// i.e. `lo+idx+1`).
 fn relax_point_into<T, F>(lo: usize, idx: usize, local: &mut [T], g: Option<&[T]>, step: &F)
 where
     T: RelaxState,
@@ -110,7 +452,7 @@ where
 
 /// One F-point sweep over a slab's local copy: for every owned chunk,
 /// re-propagate its F-points from the chunk's leading C-point (`lo` is
-/// the level index of `local[0]`). Shared by all executors.
+/// the level index of `local[0]`).
 fn f_sweep_local<T, F>(
     local: &mut [T],
     lo: usize,
@@ -129,11 +471,11 @@ fn f_sweep_local<T, F>(
     }
 }
 
-/// The full FCF slab body (F-relax, C-relax, halo exchange, second
-/// F-relax) for the slab covering chunks [c0, c1). `active` is the number
-/// of ranks participating in this sweep (halo neighbours are gated on it,
-/// not on the fabric size, so a pool larger than the sweep still runs the
-/// exact scoped schedule).
+/// The staged FCF slab body (slab copy, F-relax, C-relax, halo exchange,
+/// second F-relax) for the slab covering chunks [c0, c1). `active` is the
+/// number of ranks participating in this sweep (halo neighbours are gated
+/// on it, not on the fabric size, so a pool larger than the sweep still
+/// runs the exact scoped schedule).
 #[allow(clippy::too_many_arguments)]
 fn fcf_slab<T, F>(
     w_all: &[T],
@@ -172,11 +514,9 @@ where
     }
     if rank > 0 {
         let data = ep.recv(rank - 1, HALO_TAG);
-        assert_eq!(
-            data.len(),
-            local[0].flat_len(),
-            "malformed halo message (left-neighbour worker panicked?)"
-        );
+        if data.len() != local[0].flat_len() {
+            bad_halo(data.len(), local[0].flat_len());
+        }
         local[0] = T::from_flat(&local[0], data);
     }
     // final F-relaxation with the fresh left C-point
@@ -184,7 +524,7 @@ where
     (lo, local)
 }
 
-/// The F-only slab body (no communication at all).
+/// The staged F-only slab body (no communication at all).
 fn f_slab<T, F>(
     w_all: &[T],
     g: Option<&[T]>,
@@ -215,11 +555,13 @@ fn stitch<T>(mut out: Vec<T>, mut results: Vec<(usize, Vec<T>)>) -> Vec<T> {
     out
 }
 
-/// One F-relax + C-relax + F-relax (FCF) sweep over `n` fine steps executed
-/// by `workers` scoped threads. `w` holds states at points 0..=n (C-points
-/// must be valid on entry; F-points are overwritten). `g`, when present, is
-/// the FAS right-hand side added after every step (index-aligned with `w`).
-/// Returns the updated states — bitwise identical to the serial schedule.
+/// Staged FCF sweep over `n` fine steps executed by `workers` scoped
+/// threads (slab copies + stitch; see the module docs — the training hot
+/// path uses [`parallel_fc_relax_mut`]). `w` holds states at points 0..=n
+/// (C-points must be valid on entry; F-points are overwritten). `g`, when
+/// present, is the FAS right-hand side added after every step
+/// (index-aligned with `w`). Returns the updated states — bitwise
+/// identical to the serial schedule.
 pub fn parallel_fc_relax<T, F>(
     w: Vec<T>,
     g: Option<&[T]>,
@@ -235,7 +577,6 @@ where
     assert_eq!(n % cf, 0, "n must be a multiple of cf");
     let chunks = n / cf;
     let workers = workers.min(chunks).max(1);
-    let slabs = slab_partition(chunks, workers);
     let mut fabric = Fabric::new(workers);
     let endpoints = fabric.take_all();
     let step_ref = &step;
@@ -244,8 +585,9 @@ where
     let results: Vec<(usize, Vec<T>)> = thread::scope(|s| {
         let handles: Vec<_> = endpoints
             .into_iter()
-            .zip(slabs.iter().cloned())
-            .map(|(mut ep, (c0, c1))| {
+            .enumerate()
+            .map(|(rank, mut ep)| {
+                let (c0, c1) = slab_range(chunks, workers, rank);
                 s.spawn(move || fcf_slab(w_ref, g, cf, c0, c1, workers, &mut ep, step_ref))
             })
             .collect();
@@ -255,7 +597,7 @@ where
     stitch(w, results)
 }
 
-/// One F-relaxation sweep over `workers` scoped threads: every chunk
+/// Staged F-relaxation sweep over `workers` scoped threads: every chunk
 /// re-propagates its F-points from its (read-only) leading C-point — no
 /// communication at all, the embarrassingly-parallel phase of paper
 /// Fig. 2. `g` as in [`parallel_fc_relax`].
@@ -274,15 +616,15 @@ where
     assert_eq!(n % cf, 0, "n must be a multiple of cf");
     let chunks = n / cf;
     let workers = workers.min(chunks).max(1);
-    let slabs = slab_partition(chunks, workers);
     let step_ref = &step;
     let w_ref = &w;
 
     let results: Vec<(usize, Vec<T>)> = thread::scope(|s| {
-        let handles: Vec<_> = slabs
-            .iter()
-            .cloned()
-            .map(|(c0, c1)| s.spawn(move || f_slab(w_ref, g, cf, c0, c1, step_ref)))
+        let handles: Vec<_> = (0..workers)
+            .map(|rank| {
+                let (c0, c1) = slab_range(chunks, workers, rank);
+                s.spawn(move || f_slab(w_ref, g, cf, c0, c1, step_ref))
+            })
             .collect();
         handles.into_iter().map(|h| h.join().unwrap()).collect()
     });
@@ -291,18 +633,10 @@ where
 }
 
 /// [`parallel_fc_relax`] dispatched onto a persistent [`WorkerPool`]
-/// instead of per-sweep scoped spawns. The slab partition uses
+/// through the boxed-job compatibility path (staged slab copies; the hot
+/// path is [`pool_fc_relax_mut`]). The slab partition uses
 /// `min(pool.size(), chunks)` active ranks, so a pool of size k produces
 /// bitwise the same states as `parallel_fc_relax(.., workers = k, ..)`.
-///
-/// Panic containment: if a slab body panics (e.g. a shape assert inside
-/// Φ), its job sends a zero-length *poison* halo so the right neighbour —
-/// possibly blocked on `recv` — fails its halo length check instead of
-/// deadlocking the sweep barrier; the chain unwinds rank by rank, the
-/// barrier completes, and the original panic is re-raised here. A sweep
-/// that panics **poisons the pool** (stale halo messages may remain
-/// queued); `WorkerPool::run_scoped` refuses poisoned pools and
-/// `ThreadedMgrit` rebuilds its pool automatically.
 pub fn pool_fc_relax<T, F>(
     pool: &WorkerPool,
     w: Vec<T>,
@@ -318,25 +652,25 @@ where
     assert_eq!(n % cf, 0, "n must be a multiple of cf");
     let chunks = n / cf;
     let active = pool.size().min(chunks).max(1);
-    let slabs = slab_partition(chunks, active);
     let step_ref = &step;
     let w_ref = &w;
-    let results = pool_dispatch(pool, &slabs, true, |c0: usize, c1: usize, ep: &mut Endpoint| {
-        fcf_slab(w_ref, g, cf, c0, c1, active, ep, step_ref)
-    });
+    let results =
+        pool_dispatch(pool, chunks, active, true, |c0: usize, c1: usize, ep: &mut Endpoint| {
+            fcf_slab(w_ref, g, cf, c0, c1, active, ep, step_ref)
+        });
     stitch(w, results)
 }
 
-/// Shared dispatch scaffold for the pooled executors: one job per slab,
-/// result/panic channels, and the completion barrier. On any panic the
-/// pool is **poisoned** (stale halo messages may remain queued in the
-/// fabric) and the first payload is re-raised after the barrier; with
-/// `poison_halo` a panicking rank first sends a zero-length halo so a
-/// blocked right neighbour fails its length check instead of deadlocking
-/// (the chain unwinds rank by rank).
+/// Shared dispatch scaffold for the staged pooled executors: one boxed job
+/// per slab, result/panic channels, and the completion barrier. On any
+/// panic the first payload is re-raised after the barrier (poisoning is
+/// handled by `run_sweep` underneath); with `poison_halo` a panicking rank
+/// first sends a zero-length halo so a blocked right neighbour fails its
+/// length check instead of deadlocking (the chain unwinds rank by rank).
 fn pool_dispatch<T, B>(
     pool: &WorkerPool,
-    slabs: &[(usize, usize)],
+    chunks: usize,
+    active: usize,
     poison_halo: bool,
     body: B,
 ) -> Vec<(usize, Vec<T>)>
@@ -344,16 +678,12 @@ where
     T: RelaxState,
     B: Fn(usize, usize, &mut Endpoint) -> (usize, Vec<T>) + Sync,
 {
-    let active = slabs.len();
     let body_ref = &body;
     let (res_tx, res_rx) = channel::<(usize, Vec<T>)>();
-    let (err_tx, err_rx) = channel::<Box<dyn std::any::Any + Send>>();
-    let jobs: Vec<Box<dyn FnOnce(&mut Endpoint) + Send + '_>> = slabs
-        .iter()
-        .cloned()
-        .map(|(c0, c1)| {
+    let jobs: Vec<Box<dyn FnOnce(&mut Endpoint) + Send + '_>> = (0..active)
+        .map(|rank| {
+            let (c0, c1) = slab_range(chunks, active, rank);
             let tx = res_tx.clone();
-            let etx = err_tx.clone();
             Box::new(move |ep: &mut Endpoint| {
                 match catch_unwind(AssertUnwindSafe(|| body_ref(c0, c1, ep))) {
                     Ok(r) => {
@@ -365,31 +695,22 @@ where
                         if poison_halo && ep.rank + 1 < active {
                             ep.send(ep.rank + 1, HALO_TAG, Vec::new());
                         }
-                        let _ = etx.send(payload);
+                        resume_unwind(payload);
                     }
                 }
             }) as Box<dyn FnOnce(&mut Endpoint) + Send + '_>
         })
         .collect();
     drop(res_tx);
-    drop(err_tx);
     pool.run_scoped(jobs);
-
-    if let Ok(payload) = err_rx.try_recv() {
-        pool.poison();
-        resume_unwind(payload);
-    }
     let results: Vec<(usize, Vec<T>)> = res_rx.try_iter().collect();
-    if results.len() != active {
-        pool.poison();
-        panic!("a pool worker died mid-sweep");
-    }
+    assert_eq!(results.len(), active, "a pool worker dropped its sweep result");
     results
 }
 
-/// [`parallel_f_relax`] on a persistent [`WorkerPool`]. F-only sweeps have
-/// no halo waits, so a panicking slab simply surfaces its payload here
-/// after the barrier (no poisoning needed).
+/// [`parallel_f_relax`] on a persistent [`WorkerPool`] (staged; the hot
+/// path is [`pool_f_relax_mut`]). F-only sweeps have no halo waits, so a
+/// panicking slab simply surfaces its payload after the barrier.
 pub fn pool_f_relax<T, F>(
     pool: &WorkerPool,
     w: Vec<T>,
@@ -405,11 +726,10 @@ where
     assert_eq!(n % cf, 0, "n must be a multiple of cf");
     let chunks = n / cf;
     let active = pool.size().min(chunks).max(1);
-    let slabs = slab_partition(chunks, active);
     let step_ref = &step;
     let w_ref = &w;
     let results =
-        pool_dispatch(pool, &slabs, false, |c0: usize, c1: usize, _ep: &mut Endpoint| {
+        pool_dispatch(pool, chunks, active, false, |c0: usize, c1: usize, _ep: &mut Endpoint| {
             f_slab(w_ref, g, cf, c0, c1, step_ref)
         });
     stitch(w, results)
@@ -473,6 +793,41 @@ mod tests {
     }
 
     #[test]
+    fn inplace_matches_staged_bitwise() {
+        // the zero-copy acceptance property: for every worker count and
+        // grid shape, the in-place executors reproduce the staged (slab
+        // copy + stitch) executors bit for bit — FCF and F-only, with and
+        // without a FAS right-hand side, scoped and pooled.
+        for workers in 1usize..=5 {
+            let pool = WorkerPool::new(workers);
+            for (n, cf) in [(16usize, 4usize), (24, 3), (32, 2), (8, 8), (6, 2), (4, 2)] {
+                let mut rng = Rng::new((workers * 1000 + n) as u64);
+                let w: Vec<Vec<f32>> = (0..=n).map(|_| rng.normal_vec(5, 1.0)).collect();
+                let g: Vec<Vec<f32>> = (0..=n).map(|_| rng.normal_vec(5, 0.1)).collect();
+                for round in 0..2 {
+                    let g_opt = if round == 0 { None } else { Some(&g[..]) };
+
+                    let staged = parallel_fc_relax(w.clone(), g_opt, cf, workers, vec_step);
+                    let mut inplace = w.clone();
+                    parallel_fc_relax_mut(&mut inplace, g_opt, cf, workers, vec_step);
+                    assert_eq!(inplace, staged, "scoped fcf n={} cf={} wk={}", n, cf, workers);
+                    let mut pooled = w.clone();
+                    pool_fc_relax_mut(&pool, &mut pooled, g_opt, cf, vec_step);
+                    assert_eq!(pooled, staged, "pooled fcf n={} cf={} wk={}", n, cf, workers);
+
+                    let staged = parallel_f_relax(w.clone(), g_opt, cf, workers, vec_step);
+                    let mut inplace = w.clone();
+                    parallel_f_relax_mut(&mut inplace, g_opt, cf, workers, vec_step);
+                    assert_eq!(inplace, staged, "scoped f n={} cf={} wk={}", n, cf, workers);
+                    let mut pooled = w.clone();
+                    pool_f_relax_mut(&pool, &mut pooled, g_opt, cf, vec_step);
+                    assert_eq!(pooled, staged, "pooled f n={} cf={} wk={}", n, cf, workers);
+                }
+            }
+        }
+    }
+
+    #[test]
     fn pool_matches_scoped_spawns_bitwise() {
         // the persistent-pool acceptance property: for 1–4 workers, the
         // pool executor reproduces the scoped-spawn executor bit for bit,
@@ -502,25 +857,86 @@ mod tests {
     }
 
     #[test]
-    fn pooled_sweep_panics_loudly_instead_of_deadlocking() {
-        // a panicking Φ inside a pooled FCF sweep must surface the panic
-        // through pool_fc_relax (poison-halo chain), not hang the barrier
-        // — and the pool's threads must still shut down cleanly on drop
+    fn pool_workspaces_are_reused_across_inplace_sweeps() {
+        // boundary temps are built once per sending rank, survive repeated
+        // sweeps, and rebuild exactly once per rank on a state-shape change
+        let pool = WorkerPool::new(2);
+        let mut rng = Rng::new(21);
+        let sweep = |pool: &WorkerPool, rng: &mut Rng, dim: usize| {
+            let mut w: Vec<Vec<f32>> = (0..=8).map(|_| rng.normal_vec(dim, 1.0)).collect();
+            pool_fc_relax_mut(pool, &mut w, None, 2, vec_step);
+        };
+        sweep(&pool, &mut rng, 5);
+        // 2 active ranks, 1 sender (rank 0) -> exactly one temp built
+        assert_eq!(pool.workspace_builds(), 1);
+        for _ in 0..4 {
+            sweep(&pool, &mut rng, 5);
+        }
+        assert_eq!(pool.workspace_builds(), 1, "stable shapes must not rebuild temps");
+        sweep(&pool, &mut rng, 9);
+        assert_eq!(pool.workspace_builds(), 2, "a shape change rebuilds exactly once");
+        for _ in 0..3 {
+            sweep(&pool, &mut rng, 9);
+        }
+        assert_eq!(pool.workspace_builds(), 2);
+    }
+
+    #[test]
+    fn poisoned_pool_rebuild_recreates_workspaces() {
+        // a panic-poisoned pool is replaced wholesale by its owner; the
+        // replacement starts with fresh workspaces that rebuild on first
+        // use — the same recycle-don't-reuse policy as poisoned cores
         use std::panic::{catch_unwind as cu, AssertUnwindSafe as Aus};
         let pool = WorkerPool::new(2);
+        let mut rng = Rng::new(22);
+        let w: Vec<Vec<f32>> = (0..=8).map(|_| rng.normal_vec(3, 1.0)).collect();
+        let mut wp = w.clone();
+        pool_fc_relax_mut(&pool, &mut wp, None, 2, vec_step);
+        assert_eq!(pool.workspace_builds(), 1);
+        let boom = |l: usize, z: &Vec<f32>, out: &mut Vec<f32>| {
+            assert_ne!(l, 1, "boom");
+            *out = affine_step(l, z);
+        };
+        let mut wb = w.clone();
+        let r = cu(Aus(|| pool_fc_relax_mut(&pool, &mut wb, None, 2, boom)));
+        assert!(r.is_err());
+        assert!(pool.is_poisoned());
+        // the owner's replacement pool: fresh workspaces, one rebuild
+        let pool2 = WorkerPool::new(2);
+        assert_eq!(pool2.workspace_builds(), 0);
+        let mut w2 = w.clone();
+        pool_fc_relax_mut(&pool2, &mut w2, None, 2, vec_step);
+        assert_eq!(pool2.workspace_builds(), 1);
+        let want = serial_fc_relax(w, 2, affine_step);
+        assert_eq!(w2, want);
+    }
+
+    #[test]
+    fn pooled_sweep_panics_loudly_instead_of_deadlocking() {
+        // a panicking Φ inside a pooled FCF sweep must surface the panic
+        // through the executor (poison-halo chain), not hang the barrier
+        // — staged and in-place
+        use std::panic::{catch_unwind as cu, AssertUnwindSafe as Aus};
         let mut rng = Rng::new(13);
         let w: Vec<Vec<f32>> = (0..=8).map(|_| rng.normal_vec(3, 1.0)).collect();
         let boom = |l: usize, z: &Vec<f32>, out: &mut Vec<f32>| {
             assert_ne!(l, 1, "boom");
             *out = affine_step(l, z);
         };
+        let pool = WorkerPool::new(2);
         let result = cu(Aus(|| pool_fc_relax(&pool, w.clone(), None, 2, boom)));
         assert!(result.is_err(), "worker panic must propagate to the caller");
         // the failed sweep poisons the pool (stale halos may be queued);
         // further sweeps refuse loudly instead of computing on stale state
         assert!(pool.is_poisoned());
-        let retry = cu(Aus(|| pool_fc_relax(&pool, w, None, 2, vec_step)));
+        let retry = cu(Aus(|| pool_fc_relax(&pool, w.clone(), None, 2, vec_step)));
         assert!(retry.is_err(), "poisoned pool must refuse further sweeps");
+
+        let pool = WorkerPool::new(2);
+        let mut wi = w.clone();
+        let result = cu(Aus(|| pool_fc_relax_mut(&pool, &mut wi, None, 2, boom)));
+        assert!(result.is_err(), "in-place worker panic must propagate");
+        assert!(pool.is_poisoned());
     }
 
     #[test]
@@ -531,10 +947,13 @@ mod tests {
         let mut rng = Rng::new(77);
         let w: Vec<Vec<f32>> = (0..=8).map(|_| rng.normal_vec(4, 1.0)).collect();
         let serial = serial_fc_relax(w.clone(), 4, affine_step);
-        let pooled = pool_fc_relax(&pool, w, None, 4, vec_step);
+        let pooled = pool_fc_relax(&pool, w.clone(), None, 4, vec_step);
         for (a, b) in pooled.iter().zip(&serial) {
             assert_eq!(a, b);
         }
+        let mut inplace = w;
+        pool_fc_relax_mut(&pool, &mut inplace, None, 4, vec_step);
+        assert_eq!(inplace, serial);
     }
 
     #[test]
@@ -542,10 +961,13 @@ mod tests {
         let mut rng = Rng::new(9);
         let w: Vec<Vec<f32>> = (0..=8).map(|_| rng.normal_vec(4, 1.0)).collect();
         let serial = serial_fc_relax(w.clone(), 4, affine_step);
-        let parallel = parallel_fc_relax(w, None, 4, 16, vec_step); // 2 chunks only
+        let parallel = parallel_fc_relax(w.clone(), None, 4, 16, vec_step); // 2 chunks only
         for (a, b) in parallel.iter().zip(&serial) {
             assert_eq!(a, b);
         }
+        let mut inplace = w;
+        parallel_fc_relax_mut(&mut inplace, None, 4, 16, vec_step);
+        assert_eq!(inplace, serial);
     }
 
     #[test]
@@ -581,6 +1003,9 @@ mod tests {
             for (a, b) in parallel.iter().zip(&serial) {
                 assert_eq!(a, b, "workers={}", workers);
             }
+            let mut inplace = w.clone();
+            parallel_fc_relax_mut(&mut inplace, Some(&g[..]), cf, workers, vec_step);
+            assert_eq!(inplace, serial, "in-place workers={}", workers);
         }
     }
 
@@ -590,6 +1015,9 @@ mod tests {
         let mut rng = Rng::new(4);
         let w: Vec<Vec<f32>> = (0..=n).map(|_| rng.normal_vec(4, 1.0)).collect();
         let out = parallel_f_relax(w.clone(), None, cf, 3, vec_step);
+        let mut out_mut = w.clone();
+        parallel_f_relax_mut(&mut out_mut, None, cf, 3, vec_step);
+        assert_eq!(out_mut, out);
         for i in (0..=n).step_by(cf) {
             assert_eq!(out[i], w[i], "C-point {} must be untouched", i);
         }
@@ -606,7 +1034,8 @@ mod tests {
     #[test]
     fn tensor_states_round_trip_the_fabric() {
         // Tensor-typed relaxation (the real MGRIT hot-loop shape) matches
-        // the Vec<f32> executor bit for bit — scoped and pooled.
+        // the Vec<f32> executor bit for bit — scoped and pooled, staged
+        // and in-place.
         let (n, cf, workers) = (16usize, 4usize, 4usize);
         let mut rng = Rng::new(5);
         let w_vec: Vec<Vec<f32>> = (0..=n).map(|_| rng.normal_vec(6, 1.0)).collect();
@@ -621,8 +1050,13 @@ mod tests {
             assert_eq!(a.data(), b.as_slice());
         }
         let pool = WorkerPool::new(workers);
-        let out_p = pool_fc_relax(&pool, w_t, None, cf, t_step);
+        let out_p = pool_fc_relax(&pool, w_t.clone(), None, cf, t_step);
         for (a, b) in out_p.iter().zip(&out_vec) {
+            assert_eq!(a.data(), b.as_slice());
+        }
+        let mut out_ip = w_t;
+        pool_fc_relax_mut(&pool, &mut out_ip, None, cf, t_step);
+        for (a, b) in out_ip.iter().zip(&out_vec) {
             assert_eq!(a.data(), b.as_slice());
         }
     }

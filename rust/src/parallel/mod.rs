@@ -1,7 +1,9 @@
 //! Layer-×-data parallel runtime and performance model.
 //!
 //! * [`comm`] — channel-based message fabric between ranks (the GPU-aware
-//!   MPI substitute): typed sends, tree allreduce, byte/message counters.
+//!   MPI substitute): typed sends, tree allreduce, byte/message counters,
+//!   and the recycled-scratch send path that keeps steady-state halo
+//!   exchange allocation-free.
 //! * [`topology`] — the lp×dp device grid and contiguous layer-slab
 //!   assignment (paper Fig. 2's distribution of F_k across devices).
 //! * [`exec`] — real multi-worker execution of the F/C-relaxation phases
@@ -11,12 +13,62 @@
 //!   its V-cycle relaxation sweeps (forward *and* adjoint) through it.
 //! * [`pool`] — persistent relaxation workers (one [`WorkerPool`] per
 //!   `ThreadedMgrit` backend / `Session`): the same slab sweeps as `exec`'s
-//!   scoped spawns, dispatched onto long-lived threads that park between
-//!   sweeps.
+//!   scoped spawns, dispatched as one shared borrowed closure onto
+//!   long-lived threads that park between sweeps.
 //! * [`simulator`] — discrete-event makespan model calibrated with the
 //!   measured Φ cost and an α+β communication model; generates the paper's
 //!   scaling figures (6-9) on this single-core testbed (DESIGN.md
 //!   §Substitutions).
+//!
+//! # Shared-grid slab ownership and the halo protocol
+//!
+//! The in-place executors (`exec::{parallel,pool}_{f,fc}_relax_mut`) relax
+//! directly on the level's point array `w[0..=n]` — no slab copies, no
+//! stitch-back. Correctness rests on a strict ownership protocol:
+//!
+//! **Point ownership.** A sweep over `n = chunks · cf` fine steps with
+//! `active` ranks partitions the *chunk* space contiguously
+//! ([`topology::slab_range`]); rank `r`'s chunk range `[c_r, c_{r+1})`
+//! makes it the exclusive owner of grid points `[B_r, B_{r+1})` with
+//! `B_r = c_r · cf`, and the last rank additionally owns the final point
+//! `n`. Ranks receive pairwise-disjoint `&mut [T]` windows of `w`, so no
+//! two threads can ever alias a point.
+//!
+//! **Who writes what, when.**
+//!
+//! 1. *First F-relax* — rank `r` rewrites the F-points of its chunks from
+//!    each chunk's leading C-point. Every write lands inside its own
+//!    window; the entry C-point `w[B_r] = view[0]` is read-only here (its
+//!    pre-sweep value is exactly what the staged schedule read from its
+//!    slab copy).
+//! 2. *C-relax* — rank `r` updates each chunk's trailing C-point.
+//!    Interior boundaries are its own points (in-place writes). The
+//!    *right* boundary `w[B_{r+1}]` belongs to rank `r+1`: its new value
+//!    is computed into the worker's persistent boundary temp
+//!    ([`pool::Workspace`]) and **sent** to rank `r+1` the moment it
+//!    exists — the owner writes it into the grid, so each point still has
+//!    exactly one writer.
+//! 3. *Halo recv* — rank `r > 0` receives its refreshed entry C-point
+//!    from the left and overwrites `view[0]` in place
+//!    (`RelaxState::copy_from_flat`; a zero-length message is a poison
+//!    halo from a panicked neighbour and fails the cold length check).
+//! 4. *Second F-relax* — as (1), now reading the refreshed entry point.
+//!
+//! F-only sweeps are phase (1) alone: no C-point is written anywhere, so
+//! the boundary reads need no communication at all.
+//!
+//! **Buffer recycling.** Halo payloads travel as `Vec<f32>` owned by the
+//! message. The sender fills its endpoint's persistent flat scratch
+//! ([`comm::Endpoint::send_scratch`]); the receiver consumes the payload
+//! and mails the same buffer back on the paired return tag
+//! ([`comm::RETURN_BIT`]), where the sender reclaims it on its next send.
+//! Combined with the pool's generation-bump dispatch this makes the
+//! steady-state threaded sweep perform zero heap allocations (pinned by
+//! `rust/tests/alloc_audit.rs`).
+//!
+//! The pre-refactor staged executors (slab `to_vec` + stitch) are kept in
+//! [`exec`] as the independently-derived parity oracle and the
+//! `perf_hotpath` "staged" baseline.
 
 pub mod comm;
 pub mod exec;
@@ -26,6 +78,6 @@ pub mod topology;
 
 pub use comm::Fabric;
 pub use exec::RelaxState;
-pub use pool::WorkerPool;
+pub use pool::{WorkerPool, Workspace};
 pub use simulator::{DeviceModel, SimConfig, Simulator};
-pub use topology::{slab_partition, Topology};
+pub use topology::{slab_partition, slab_range, Topology};

@@ -3,23 +3,49 @@
 //! `ThreadedMgrit` used to spawn scoped threads for every relaxation sweep
 //! (~2 spawns × levels per V-cycle). A [`WorkerPool`] instead keeps
 //! `size` long-lived threads, each owning one [`Endpoint`] of a shared
-//! channel [`Fabric`] for halo exchange; between sweeps the workers park
-//! on their job channel. One pool lives per `ThreadedMgrit` backend (i.e.
-//! per `Session`), amortizing spawn cost across every sweep of a training
-//! run while executing the *identical* slab schedule — bitwise parity with
-//! the scoped-spawn executor is pinned by tests in
-//! [`crate::parallel::exec`] and `rust/tests/backend_parity.rs`.
+//! channel [`Fabric`] for halo exchange plus a persistent [`Workspace`];
+//! between sweeps the workers park on a condition variable. One pool lives
+//! per `ThreadedMgrit` backend (i.e. per `Session`), amortizing spawn cost
+//! across every sweep of a training run while executing the *identical*
+//! slab schedule — bitwise parity with the scoped-spawn executor is pinned
+//! by tests in [`crate::parallel::exec`] and `rust/tests/backend_parity.rs`.
+//!
+//! ## Allocation discipline
+//!
+//! [`WorkerPool::run_sweep`] is the hot dispatch path: the caller hands
+//! *one* shared `&dyn Fn(rank, &mut Endpoint, &mut Workspace)` body and an
+//! active-rank count. Dispatch is a generation bump + `notify_all`, the
+//! barrier a counted condvar — no per-sweep boxing, no job channels, no
+//! result channels. Together with the in-place slab bodies in
+//! [`crate::parallel::exec`] and the buffer-recycling fabric this makes a
+//! steady-state threaded relaxation sweep perform **zero** heap
+//! allocations (pinned by `rust/tests/alloc_audit.rs`).
+//!
+//! The boxed-closure [`WorkerPool::run_scoped`] API is kept as a thin
+//! compatibility wrapper (per-rank `FnOnce` jobs, allocating); the staged
+//! executors and ad-hoc callers use it.
 //!
 //! ## Lifecycle
 //!
-//! * `WorkerPool::new(n)` builds the fabric, takes all endpoints, and
-//!   spawns `n` named threads that block on `Receiver::recv` (parked).
-//! * `run_scoped(jobs)` sends one closure per active rank (a prefix of the
-//!   workers) and **blocks until every job has finished** — that barrier
-//!   is what makes lending non-`'static` borrows to the workers sound,
-//!   and it also guarantees every in-sweep halo message is consumed
-//!   before the next sweep starts.
-//! * `Drop` closes the job channels and joins the threads.
+//! * `WorkerPool::new(n)` builds the fabric and spawns `n` named threads
+//!   that park on the job condvar.
+//! * `run_sweep(active, body)` runs `body(rank, ..)` on ranks
+//!   `0..active` and **blocks until every worker has passed the sweep
+//!   barrier** — that is what makes lending non-`'static` borrows to the
+//!   workers sound, and it also guarantees every in-sweep halo message is
+//!   consumed before the next sweep starts.
+//! * `Drop` sets the shutdown flag and joins the threads.
+//!
+//! ## Per-worker workspaces
+//!
+//! Each worker owns a [`Workspace`]: a type-erased slot for whatever
+//! typed scratch the sweep body needs (the in-place FCF executor keeps
+//! its boundary-step state there). The slot is sized on the first sweep
+//! that needs it and rebuilt only when the requested type/shape changes;
+//! [`WorkerPool::workspace_builds`] counts (re)builds so tests can pin the
+//! reuse. A pool poisoned by a panicked sweep is rebuilt by its owner,
+//! which also replaces every workspace — panic-poisoned workspaces are
+//! recycled exactly like poisoned cores.
 //!
 //! ## Wiring with persistent solve contexts
 //!
@@ -32,27 +58,77 @@
 //! and rebuilt mid-run is picked up transparently while the (expensive)
 //! level storage stays cached.
 
-use std::panic::{catch_unwind, AssertUnwindSafe};
-use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::mpsc::{channel, Receiver, Sender};
-use std::sync::Mutex;
+use std::any::Any;
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 
 use super::comm::{Endpoint, Fabric};
 
-/// A type-erased sweep job executed on one worker.
-type Job = Box<dyn FnOnce(&mut Endpoint) + Send + 'static>;
+/// The shared sweep body: one closure for all ranks, borrowed from the
+/// caller's stack for the duration of one sweep.
+type SweepBody = dyn Fn(usize, &mut Endpoint, &mut Workspace) + Sync;
+
+/// Per-worker persistent scratch (see module docs). Owned by the worker
+/// thread itself; sweep bodies reach it through their `&mut Workspace`
+/// argument and fetch typed storage with [`Workspace::typed`].
+pub struct Workspace {
+    slot: Option<Box<dyn Any + Send>>,
+    builds: Arc<AtomicU64>,
+}
+
+impl Workspace {
+    /// Fetch this worker's typed scratch, (re)building it when the cached
+    /// value is missing, of another type, or rejected by `matches` (shape
+    /// change). Rebuilds are counted in [`WorkerPool::workspace_builds`].
+    /// (Named generics rather than `impl Trait` so callers can turbofish
+    /// the storage type: `ws.typed::<T, _, _>(..)`.)
+    pub fn typed<T, M, K>(&mut self, matches: M, make: K) -> &mut T
+    where
+        T: Any + Send,
+        M: FnOnce(&T) -> bool,
+        K: FnOnce() -> T,
+    {
+        let ok = self.slot.as_ref().and_then(|b| b.downcast_ref::<T>()).is_some_and(matches);
+        if !ok {
+            self.slot = Some(Box::new(make()));
+            self.builds.fetch_add(1, Ordering::Relaxed);
+        }
+        self.slot.as_mut().unwrap().downcast_mut::<T>().unwrap()
+    }
+}
+
+/// One dispatched sweep, published to the workers under the job mutex.
+struct JobSlot {
+    /// Sweep sequence number; a bump wakes every parked worker exactly once.
+    gen: u64,
+    /// Ranks `0..active` run the body; the rest just pass the barrier.
+    active: usize,
+    /// The shared body, lifetime-erased (sound: `run_sweep` holds the
+    /// caller's borrow across the barrier and clears the slot before
+    /// returning).
+    body: Option<&'static SweepBody>,
+}
+
+struct Shared {
+    job: Mutex<JobSlot>,
+    job_cv: Condvar,
+    /// Barrier: workers yet to finish the current sweep.
+    remaining: Mutex<usize>,
+    done_cv: Condvar,
+    /// Panic payloads captured during the current sweep (cold path).
+    panics: Mutex<Vec<Box<dyn Any + Send>>>,
+    shutdown: AtomicBool,
+}
 
 /// Long-lived relaxation workers with a persistent halo-exchange fabric.
 pub struct WorkerPool {
     size: usize,
-    /// Job senders, rank-indexed. Behind a Mutex so the pool is `Sync`
-    /// (backends hand out `Arc<WorkerPool>`); sends are cheap and the
-    /// lock is only held while enqueueing one sweep.
-    senders: Mutex<Vec<Sender<Job>>>,
+    shared: Arc<Shared>,
     /// Set after a panicked/failed sweep: stale halo messages may be
     /// queued in the fabric, so further sweeps would silently consume
-    /// previous-sweep state. `run_scoped` refuses a poisoned pool;
+    /// previous-sweep state. `run_sweep` refuses a poisoned pool;
     /// owners (`ThreadedMgrit`) rebuild instead of reusing.
     poisoned: AtomicBool,
     /// Serializes whole sweeps. The fabric's halo messages are tagged by
@@ -63,19 +139,8 @@ pub struct WorkerPool {
     /// handed out as `Arc` clones; this guard makes concurrent callers
     /// block instead of corrupt.
     sweep: Mutex<()>,
+    ws_builds: Arc<AtomicU64>,
     handles: Vec<JoinHandle<()>>,
-}
-
-/// Sends the completion signal even if the job panics (the unwind drops
-/// the guard). Note this alone does not unblock a *peer* job waiting on a
-/// fabric message from the panicked one — the pooled executors in
-/// [`crate::parallel::exec`] handle that by poisoning the halo chain.
-struct DoneGuard(Sender<()>);
-
-impl Drop for DoneGuard {
-    fn drop(&mut self) {
-        let _ = self.0.send(());
-    }
 }
 
 impl WorkerPool {
@@ -83,30 +148,64 @@ impl WorkerPool {
     pub fn new(size: usize) -> WorkerPool {
         let size = size.max(1);
         let mut fabric = Fabric::new(size);
-        let mut senders = Vec::with_capacity(size);
+        let shared = Arc::new(Shared {
+            job: Mutex::new(JobSlot { gen: 0, active: 0, body: None }),
+            job_cv: Condvar::new(),
+            remaining: Mutex::new(0),
+            done_cv: Condvar::new(),
+            panics: Mutex::new(Vec::new()),
+            shutdown: AtomicBool::new(false),
+        });
+        let ws_builds = Arc::new(AtomicU64::new(0));
         let mut handles = Vec::with_capacity(size);
         for rank in 0..size {
-            let (tx, rx): (Sender<Job>, Receiver<Job>) = channel();
             let mut ep = fabric.take(rank);
+            let shared = shared.clone();
+            let mut ws = Workspace { slot: None, builds: ws_builds.clone() };
             let handle = std::thread::Builder::new()
                 .name(format!("mgrit-worker-{}", rank))
                 .spawn(move || {
-                    while let Ok(job) = rx.recv() {
-                        // a panicking job must not kill the worker: the
-                        // sweep's barrier reports it instead (missing
-                        // result), and later sweeps still have `size` ranks
-                        let _ = catch_unwind(AssertUnwindSafe(|| job(&mut ep)));
+                    let mut seen = 0u64;
+                    loop {
+                        let (body, active) = {
+                            let mut slot = shared.job.lock().unwrap();
+                            loop {
+                                if shared.shutdown.load(Ordering::SeqCst) {
+                                    return;
+                                }
+                                if slot.gen != seen {
+                                    seen = slot.gen;
+                                    break (slot.body.expect("published sweep body"), slot.active);
+                                }
+                                slot = shared.job_cv.wait(slot).unwrap();
+                            }
+                        };
+                        if rank < active {
+                            // a panicking body must not kill the worker:
+                            // the payload is recorded and re-raised at the
+                            // dispatch site after the barrier
+                            if let Err(p) =
+                                catch_unwind(AssertUnwindSafe(|| body(rank, &mut ep, &mut ws)))
+                            {
+                                shared.panics.lock().unwrap().push(p);
+                            }
+                        }
+                        let mut rem = shared.remaining.lock().unwrap();
+                        *rem -= 1;
+                        if *rem == 0 {
+                            shared.done_cv.notify_all();
+                        }
                     }
                 })
                 .expect("spawn mgrit worker");
-            senders.push(tx);
             handles.push(handle);
         }
         WorkerPool {
             size,
-            senders: Mutex::new(senders),
+            shared,
             poisoned: AtomicBool::new(false),
             sweep: Mutex::new(()),
+            ws_builds,
             handles,
         }
     }
@@ -116,9 +215,16 @@ impl WorkerPool {
         self.size
     }
 
-    /// Mark the pool unusable (a sweep panicked or lost a worker; the
-    /// fabric may hold stale halo messages). Subsequent `run_scoped`
-    /// calls panic immediately instead of computing on stale state.
+    /// How many per-worker typed workspaces have been (re)built on this
+    /// pool so far — the workspace-reuse acceptance counter: stable shapes
+    /// build once per participating worker and then never again.
+    pub fn workspace_builds(&self) -> u64 {
+        self.ws_builds.load(Ordering::Relaxed)
+    }
+
+    /// Mark the pool unusable (a sweep panicked; the fabric may hold stale
+    /// halo messages and desynced recycled buffers). Subsequent sweeps
+    /// panic immediately instead of computing on stale state.
     pub fn poison(&self) {
         self.poisoned.store(true, Ordering::SeqCst);
     }
@@ -128,17 +234,20 @@ impl WorkerPool {
         self.poisoned.load(Ordering::SeqCst)
     }
 
-    /// Run one job per rank `0..jobs.len()` and block until all complete.
+    /// Run `body(rank, endpoint, workspace)` on ranks `0..active` of the
+    /// parked workers and block until **all** `size` workers have passed
+    /// the sweep barrier (inactive ranks pass it without running the
+    /// body). The allocation-free dispatch primitive: one shared borrowed
+    /// closure, no boxing, no channels.
     ///
-    /// Jobs may borrow from the caller's stack: the barrier guarantees the
-    /// borrows outlive every access. Results travel through whatever
-    /// channel the caller baked into the closures.
-    ///
-    /// Ranks only ever wait on *lower* ranks (the left-to-right halo flow
-    /// in `exec`), so if dispatch fails at rank r — a worker thread died —
-    /// the already-dispatched prefix `0..r` is self-contained: the barrier
-    /// still completes for it before this method reports the dead worker.
-    pub fn run_scoped<'scope>(&self, jobs: Vec<Box<dyn FnOnce(&mut Endpoint) + Send + 'scope>>) {
+    /// The body may borrow from the caller's stack: the barrier guarantees
+    /// the borrows outlive every access. A body panic on any rank is
+    /// re-raised here after the barrier, with the pool poisoned first.
+    pub fn run_sweep(
+        &self,
+        active: usize,
+        body: &(dyn Fn(usize, &mut Endpoint, &mut Workspace) + Sync),
+    ) {
         // one sweep at a time on the shared fabric (see the `sweep` field);
         // mutex poisoning is ignored — the pool's own `poisoned` flag is
         // the authoritative failed-sweep signal and is checked right after
@@ -147,60 +256,88 @@ impl WorkerPool {
             !self.is_poisoned(),
             "worker pool poisoned by an earlier failed sweep; drop and rebuild it"
         );
-        assert!(jobs.len() <= self.size, "more jobs than pool workers");
-        let (done_tx, done_rx) = channel::<()>();
-        let mut attempted = 0usize;
-        let mut dead_worker = false;
+        assert!(active <= self.size, "more active ranks than pool workers");
+        // SAFETY: the transmute only erases the borrow's lifetime; the
+        // trait-object layout is unchanged. Every worker passes the
+        // barrier below before this method returns by any path, so the
+        // erased borrow is never accessed after it expires.
+        let body_static: &'static SweepBody = unsafe {
+            std::mem::transmute::<&SweepBody, &'static SweepBody>(body)
+        };
+        *self.shared.remaining.lock().unwrap() = self.size;
         {
-            let senders = self.senders.lock().unwrap();
-            for (rank, job) in jobs.into_iter().enumerate() {
-                let guard = DoneGuard(done_tx.clone());
-                let wrapped: Box<dyn FnOnce(&mut Endpoint) + Send + 'scope> =
-                    Box::new(move |ep: &mut Endpoint| {
-                        let _guard = guard;
-                        job(ep);
-                    });
-                // SAFETY: the job may borrow data with lifetime 'scope.
-                // Every wrapped job signals `done_tx` exactly once — when
-                // it finishes or unwinds on a worker (DoneGuard), or
-                // immediately below if the send fails (the returned
-                // SendError drops the job, firing its guard) — and we
-                // block until all `attempted` signals arrive before
-                // returning OR panicking, so no borrow is accessed after
-                // run_scoped exits by any path. The transmute only erases
-                // the lifetime bound; the trait-object layout is
-                // unchanged.
-                let job_static: Job = unsafe {
-                    std::mem::transmute::<
-                        Box<dyn FnOnce(&mut Endpoint) + Send + 'scope>,
-                        Box<dyn FnOnce(&mut Endpoint) + Send + 'static>,
-                    >(wrapped)
-                };
-                attempted += 1;
-                if senders[rank].send(job_static).is_err() {
-                    // never panic mid-dispatch: jobs already on workers
-                    // still borrow the caller's stack — finish the barrier
-                    // first, then report
-                    dead_worker = true;
-                    break;
+            let mut slot = self.shared.job.lock().unwrap();
+            slot.gen += 1;
+            slot.active = active;
+            slot.body = Some(body_static);
+        }
+        self.shared.job_cv.notify_all();
+        {
+            // counted barrier with a liveness backstop: a worker thread
+            // that dies outside the body catch (it "never" should) would
+            // otherwise leave `remaining` stuck and freeze training
+            // silently — fail loudly and poison instead, like the old
+            // boxed-job dispatcher did.
+            let mut rem = self.shared.remaining.lock().unwrap();
+            while *rem > 0 {
+                let (guard, timeout) = self
+                    .shared
+                    .done_cv
+                    .wait_timeout(rem, std::time::Duration::from_millis(200))
+                    .unwrap();
+                rem = guard;
+                if timeout.timed_out()
+                    && *rem > 0
+                    && self.handles.iter().any(|h| h.is_finished())
+                {
+                    drop(rem);
+                    self.poison();
+                    panic!("mgrit worker thread died; sweep aborted");
                 }
             }
         }
-        drop(done_tx);
-        for _ in 0..attempted {
-            done_rx.recv().expect("mgrit worker dropped its sweep job");
-        }
-        if dead_worker {
+        // the borrow expires with this frame: drop the erased copy first
+        self.shared.job.lock().unwrap().body = None;
+        let payload = {
+            let mut panics = self.shared.panics.lock().unwrap();
+            if panics.is_empty() {
+                None
+            } else {
+                let first = panics.swap_remove(0);
+                panics.clear();
+                Some(first)
+            }
+        };
+        if let Some(p) = payload {
             self.poison();
-            panic!("mgrit worker thread died; sweep aborted");
+            resume_unwind(p);
         }
+    }
+
+    /// Compatibility dispatch: one boxed `FnOnce` job per rank
+    /// `0..jobs.len()`, executed through [`WorkerPool::run_sweep`]. Used
+    /// by the staged executors and ad-hoc callers; allocates per sweep
+    /// (the in-place hot path uses `run_sweep` directly).
+    pub fn run_scoped<'scope>(&self, jobs: Vec<Box<dyn FnOnce(&mut Endpoint) + Send + 'scope>>) {
+        assert!(jobs.len() <= self.size, "more jobs than pool workers");
+        let active = jobs.len();
+        type JobSlotCell<'s> = Mutex<Option<Box<dyn FnOnce(&mut Endpoint) + Send + 's>>>;
+        let slots: Vec<JobSlotCell<'scope>> =
+            jobs.into_iter().map(|j| Mutex::new(Some(j))).collect();
+        self.run_sweep(active, &|rank: usize, ep: &mut Endpoint, _ws: &mut Workspace| {
+            let job = slots[rank].lock().unwrap().take().expect("job dispatched once");
+            job(ep);
+        });
     }
 }
 
 impl Drop for WorkerPool {
     fn drop(&mut self) {
-        // closing the job channels lets the recv loops exit
-        self.senders.lock().unwrap().clear();
+        self.shared.shutdown.store(true, Ordering::SeqCst);
+        // grab the job lock so parked workers are guaranteed to observe
+        // the flag on wakeup
+        drop(self.shared.job.lock().unwrap());
+        self.shared.job_cv.notify_all();
         for h in self.handles.drain(..) {
             let _ = h.join();
         }
@@ -237,6 +374,21 @@ mod tests {
     }
 
     #[test]
+    fn run_sweep_shares_one_body_across_ranks() {
+        let pool = WorkerPool::new(4);
+        let ranks = Mutex::new(Vec::new());
+        for _ in 0..3 {
+            pool.run_sweep(4, &|rank: usize, ep: &mut Endpoint, _ws: &mut Workspace| {
+                assert_eq!(rank, ep.rank);
+                ranks.lock().unwrap().push(rank);
+            });
+        }
+        let mut seen = ranks.into_inner().unwrap();
+        seen.sort_unstable();
+        assert_eq!(seen, vec![0, 0, 0, 1, 1, 1, 2, 2, 2, 3, 3, 3]);
+    }
+
+    #[test]
     fn workers_exchange_halos_over_the_persistent_fabric() {
         let pool = WorkerPool::new(2);
         for sweep in 0..3u64 {
@@ -259,16 +411,54 @@ mod tests {
     fn partial_sweeps_use_a_rank_prefix() {
         let pool = WorkerPool::new(4);
         let ranks = Mutex::new(Vec::new());
-        let jobs: Vec<Box<dyn FnOnce(&mut Endpoint) + Send + '_>> = (0..2)
-            .map(|_| {
-                Box::new(|ep: &mut Endpoint| {
-                    ranks.lock().unwrap().push(ep.rank);
-                }) as Box<dyn FnOnce(&mut Endpoint) + Send + '_>
-            })
-            .collect();
-        pool.run_scoped(jobs);
+        pool.run_sweep(2, &|rank: usize, _ep: &mut Endpoint, _ws: &mut Workspace| {
+            ranks.lock().unwrap().push(rank);
+        });
         let mut seen = ranks.into_inner().unwrap();
         seen.sort_unstable();
         assert_eq!(seen, vec![0, 1]);
+    }
+
+    #[test]
+    fn workspaces_persist_and_rebuild_on_shape_change() {
+        let pool = WorkerPool::new(2);
+        assert_eq!(pool.workspace_builds(), 0);
+        let sweep = |len: usize| {
+            pool.run_sweep(2, &|_rank: usize, _ep: &mut Endpoint, ws: &mut Workspace| {
+                let v = ws.typed::<Vec<f32>, _, _>(|v| v.len() == len, || vec![0.0; len]);
+                assert_eq!(v.len(), len);
+            });
+        };
+        // first sweep builds one workspace per active worker...
+        sweep(8);
+        assert_eq!(pool.workspace_builds(), 2);
+        // ...steady-state sweeps reuse them...
+        for _ in 0..5 {
+            sweep(8);
+        }
+        assert_eq!(pool.workspace_builds(), 2, "stable shapes must not rebuild");
+        // ...and a shape change rebuilds exactly once per worker
+        sweep(16);
+        assert_eq!(pool.workspace_builds(), 4);
+        for _ in 0..3 {
+            sweep(16);
+        }
+        assert_eq!(pool.workspace_builds(), 4);
+    }
+
+    #[test]
+    fn sweep_panic_poisons_and_reraises_after_the_barrier() {
+        use std::panic::{catch_unwind as cu, AssertUnwindSafe as Aus};
+        let pool = WorkerPool::new(3);
+        let r = cu(Aus(|| {
+            pool.run_sweep(3, &|rank: usize, _ep: &mut Endpoint, _ws: &mut Workspace| {
+                assert_ne!(rank, 1, "boom");
+            });
+        }));
+        assert!(r.is_err(), "a body panic must re-raise at the dispatch site");
+        assert!(pool.is_poisoned());
+        let noop = |_r: usize, _e: &mut Endpoint, _w: &mut Workspace| {};
+        let retry = cu(Aus(|| pool.run_sweep(3, &noop)));
+        assert!(retry.is_err(), "poisoned pool must refuse further sweeps");
     }
 }

@@ -46,16 +46,20 @@ impl Topology {
 /// `n_items % parts` owners get one extra. Returns (start, end) per owner.
 pub fn slab_partition(n_items: usize, parts: usize) -> Vec<(usize, usize)> {
     assert!(parts >= 1);
+    (0..parts).map(|p| slab_range(n_items, parts, p)).collect()
+}
+
+/// O(1) form of [`slab_partition`]: owner `p`'s (start, end) range without
+/// materializing the whole partition. The allocation-free per-worker form
+/// the in-place relaxation executors compute inside each slab body; by
+/// construction the ranges of distinct owners are pairwise disjoint and
+/// cover `0..n_items` contiguously (pinned by `prop_partition_covers_exactly`).
+pub fn slab_range(n_items: usize, parts: usize, p: usize) -> (usize, usize) {
+    assert!(parts >= 1 && p < parts, "owner {} of {} parts", p, parts);
     let base = n_items / parts;
     let extra = n_items % parts;
-    let mut out = Vec::with_capacity(parts);
-    let mut start = 0;
-    for p in 0..parts {
-        let len = base + usize::from(p < extra);
-        out.push((start, start + len));
-        start += len;
-    }
-    out
+    let start = p * base + p.min(extra);
+    (start, start + base + usize::from(p < extra))
 }
 
 #[cfg(test)]

@@ -2,7 +2,7 @@
 //!
 //! Installs a counting global allocator (this file is its own test binary,
 //! and it contains exactly one #[test] so no concurrent test can perturb
-//! the counter) and pins three acceptance criteria:
+//! the counter) and pins four acceptance criteria:
 //!
 //! 1. once the scratch pool and parameter views are warm,
 //!    `RustPropagator::step_into` performs **zero heap allocations** per
@@ -10,39 +10,31 @@
 //!    encoder-decoder state;
 //! 2. the persistent solve context performs **zero heap allocations** for
 //!    a complete steady-state forward-solve + adjoint-solve + gradients
-//!    round (cached hierarchies, workspace handoff, warm-start refresh);
-//! 3. a full `Session::train_step` at steady state allocates only from
-//!    the documented allowlist below — nothing from the solver side —
-//!    and the per-step count is *flat* (no drift across steps).
-//!
-//! ## train_step allocation allowlist
-//!
-//! The solve path (embed, buffer sweeps, MGRIT forward/adjoint, gradient
-//! accumulation, clipping math, optimizer moments) is allocation-free by
-//! construction. What remains, by design outside this PR's scope:
-//!
-//! * data sampling — `Objective::sample` builds one `TrainBatch`
-//!   (tokens/targets/mask vectors, ~3 Vecs for the Tag task);
-//! * the loss head — `tag_loss` allocates its logits scratch, the λ_head
-//!   cotangent tensor, and the head-gradient vector (~4-6 allocations);
-//! * the clip ref-list — one `Vec<&mut [f32]>` per step.
-//!
-//! `TRAIN_STEP_ALLOC_BUDGET` bounds the sum with headroom; making the
-//! objective side workspace-reusing would bring it to literally zero.
+//!    round on the single-threaded `Mgrit` backend (cached hierarchies,
+//!    workspace handoff, warm-start refresh);
+//! 3. the same round on the `ThreadedMgrit` backend (workers ∈ {2, 4}) is
+//!    **also zero-allocation** after warmup: the in-place slab executors
+//!    relax on the shared level storage, `WorkerPool::run_sweep`
+//!    dispatches one borrowed closure (no boxing, no channels), halo
+//!    messages recycle the endpoints' flat scratch (`comm::RETURN_BIT`
+//!    protocol), and the per-worker boundary temps persist in the pool
+//!    workspaces;
+//! 4. a full `Session::train_step` at steady state allocates **exactly
+//!    zero** times — the allowlist that used to cover data sampling, the
+//!    loss head, and the clip ref-list is empty: `Objective::sample_into`
+//!    refills the session's long-lived `TrainBatch`, `Objective::loss_into`
+//!    writes into the workspace's cotangent buffer and accumulates head
+//!    gradients directly, and `StepWorkspace::clip_global` walks the
+//!    accumulators without a ref-list.
 
 use std::alloc::{GlobalAlloc, Layout, System};
 use std::sync::atomic::{AtomicU64, Ordering};
 
 use layertime::config::{presets, Arch, MgritConfig, ModelConfig};
-use layertime::coordinator::{Mgrit, Session, SolveContext, StepWorkspace, Task};
+use layertime::coordinator::{Mgrit, Session, SolveContext, StepWorkspace, Task, ThreadedMgrit};
 use layertime::ode::{shared_params, Propagator, RustPropagator};
 use layertime::tensor::Tensor;
 use layertime::util::rng::Rng;
-
-/// Upper bound on steady-state allocations of one `train_step` (see the
-/// allowlist in the module docs; generous headroom over the enumerated
-/// sources so task/data tweaks don't flake the audit).
-const TRAIN_STEP_ALLOC_BUDGET: u64 = 64;
 
 struct CountingAlloc;
 
@@ -127,8 +119,11 @@ fn audit_arch(arch: Arch) {
 }
 
 /// The persistent-context pin: a steady-state forward + adjoint +
-/// gradients round on cached cores allocates nothing at all.
-fn audit_solve_context() {
+/// gradients round on cached cores allocates nothing at all. `workers = 1`
+/// runs the single-threaded `Mgrit` backend; `workers > 1` runs
+/// `ThreadedMgrit` with its persistent pool and the in-place slab
+/// executors — the zero-copy acceptance criterion of the threaded path.
+fn audit_solve_context(workers: usize) {
     let model = tiny_model(Arch::Encoder);
     let n = model.total_layers();
     let mut rng = Rng::new(12);
@@ -137,7 +132,12 @@ fn audit_solve_context() {
     let prop = RustPropagator::new(&model, 1.0, shared_params(layers));
     let shape = prop.state_shape();
     let ws = StepWorkspace::new(n, &shape, &shape, &theta_lens, [0, 0, 0, 0]);
-    let mut ctx = SolveContext::new(Box::new(Mgrit), ws);
+    let backend: Box<dyn layertime::coordinator::Backend> = if workers > 1 {
+        Box::new(ThreadedMgrit::new(workers))
+    } else {
+        Box::new(Mgrit)
+    };
+    let mut ctx = SolveContext::new(backend, ws);
     let cfg = MgritConfig { cf: 2, levels: 2, fwd_iters: Some(1), bwd_iters: Some(1), fcf: true };
     let z = Tensor::randn(&mut rng, &shape, 0.8);
     let ct = Tensor::randn(&mut rng, &shape, 1.0);
@@ -149,7 +149,8 @@ fn audit_solve_context() {
         ctx.gradients_mid(&prop, 0);
     };
 
-    // warm up: builds both cores, the warm iterate, and the Φ scratch pool
+    // warm up: builds both cores, the worker pool + workspaces + halo
+    // scratch (threaded), the warm iterate, and the Φ scratch pool
     ctx.ws.states[0].copy_from(&z);
     for _ in 0..5 {
         round(&mut ctx);
@@ -164,14 +165,15 @@ fn audit_solve_context() {
     assert_eq!(
         after - before,
         0,
-        "solve context allocated {} times over 5 steady-state rounds",
+        "solve context (workers={}) allocated {} times over 5 steady-state rounds",
+        workers,
         after - before
     );
     assert_eq!(ctx.core_builds(), 2, "steady state must not rebuild cores");
 }
 
-/// The full-step pin: per-step allocations stay flat and within the
-/// documented allowlist budget.
+/// The full-step pin: a steady-state `train_step` allocates literally
+/// zero times (empty allowlist — see the module docs).
 fn audit_train_step() {
     let mut rc = presets::by_name("mc").expect("mc preset");
     rc.model.vocab = 16;
@@ -195,37 +197,33 @@ fn audit_train_step() {
         .build()
         .expect("session");
 
-    // warm up: lazy core construction, warm iterate, scratch pool growth
+    // warm up: lazy core construction, warm iterate, batch buffer and
+    // loss-head scratch sizing, Φ scratch pool growth
     for _ in 0..4 {
         s.train_step();
     }
 
-    let mut deltas = [0u64; 2];
-    for d in deltas.iter_mut() {
+    for step in 0..3 {
         let before = ALLOCS.load(Ordering::SeqCst);
         s.train_step();
-        *d = ALLOCS.load(Ordering::SeqCst) - before;
+        let delta = ALLOCS.load(Ordering::SeqCst) - before;
+        assert_eq!(
+            delta, 0,
+            "train_step allocated {} times at steady state (step {}); the allowlist is empty",
+            delta, step
+        );
     }
-    assert_eq!(
-        deltas[0], deltas[1],
-        "per-step allocations must be flat at steady state: {:?}",
-        deltas
-    );
-    assert!(
-        deltas[0] <= TRAIN_STEP_ALLOC_BUDGET,
-        "train_step allocated {} times; allowlist budget is {} (see module docs)",
-        deltas[0],
-        TRAIN_STEP_ALLOC_BUDGET
-    );
 }
 
 /// Single test (see module docs): the steady-state hot path is
-/// allocation-free (Φ and the solve context) and the full train step
-/// stays within the documented allowlist.
+/// allocation-free — Φ, the solve context on both the single-threaded and
+/// the threaded (in-place sweep) backends, and the entire train step.
 #[test]
 fn steady_state_hot_path_is_allocation_free() {
     audit_arch(Arch::Encoder);
     audit_arch(Arch::EncDec);
-    audit_solve_context();
+    audit_solve_context(1);
+    audit_solve_context(2);
+    audit_solve_context(4);
     audit_train_step();
 }
