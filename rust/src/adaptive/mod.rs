@@ -9,6 +9,11 @@
 //! to serial (exact) propagation for the rest of training.
 
 use crate::config::MgritConfig;
+use crate::util::json::{self, Json};
+
+/// Default retained probe-history window (see
+/// [`AdaptiveController::set_history_cap`]).
+pub const DEFAULT_HISTORY_CAP: usize = 512;
 
 /// What the controller decided after a probe.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -19,6 +24,16 @@ pub enum AdaptiveDecision {
     IncreaseIters,
     /// ρ ≥ 1 (or iteration budget exhausted): switch to serial training.
     SwitchSerial,
+}
+
+impl AdaptiveDecision {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            AdaptiveDecision::Keep => "keep",
+            AdaptiveDecision::IncreaseIters => "increase_iters",
+            AdaptiveDecision::SwitchSerial => "switch_serial",
+        }
+    }
 }
 
 /// Controller state threaded through the training loop.
@@ -36,17 +51,38 @@ pub struct AdaptiveController {
     step: usize,
     /// Sticky: once serial, stay serial (paper's scheme).
     switched: bool,
-    /// History of (step, rho_fwd, rho_bwd, decision) for Fig. 5 logging.
-    pub history: Vec<ProbeRecord>,
+    /// Rolling window of probe observations (Fig. 5 logging). Bounded by
+    /// `history_cap`: long runs probe indefinitely, so an unbounded log
+    /// would grow forever — the oldest record is evicted at the cap.
+    history: Vec<ProbeRecord>,
+    /// Maximum retained history records (≥ 1).
+    history_cap: usize,
 }
 
 /// One probe observation (drives the Fig. 5 indicator plot).
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct ProbeRecord {
     pub step: usize,
     pub rho_fwd: Option<f64>,
     pub rho_bwd: Option<f64>,
     pub decision: AdaptiveDecision,
+}
+
+impl ProbeRecord {
+    pub fn to_json(&self) -> Json {
+        // JSON numbers cannot encode NaN/Inf (a 0/0 convergence factor or
+        // a diverged solve would emit unparseable output) — map to null
+        let rho = |v: Option<f64>| match v {
+            Some(x) if x.is_finite() => json::num(x),
+            _ => Json::Null,
+        };
+        json::obj(vec![
+            ("step", json::int(self.step as i64)),
+            ("rho_fwd", rho(self.rho_fwd)),
+            ("rho_bwd", rho(self.rho_bwd)),
+            ("decision", json::s(self.decision.as_str())),
+        ])
+    }
 }
 
 impl AdaptiveController {
@@ -59,12 +95,77 @@ impl AdaptiveController {
             step: 0,
             switched: false,
             history: Vec::new(),
+            history_cap: DEFAULT_HISTORY_CAP,
+        }
+    }
+
+    /// Rebuild a controller from checkpointed state (the exact counterpart
+    /// of the accessors: `batch_step`, `is_serial`, `history`,
+    /// `history_cap`). `history` longer than `cap` keeps the tail.
+    #[allow(clippy::too_many_arguments)]
+    pub fn restore(
+        probe_every: usize,
+        rho_switch: f64,
+        rho_grow: f64,
+        max_iters: usize,
+        step: usize,
+        switched: bool,
+        history_cap: usize,
+        mut history: Vec<ProbeRecord>,
+    ) -> AdaptiveController {
+        let history_cap = history_cap.max(1);
+        if history.len() > history_cap {
+            history.drain(..history.len() - history_cap);
+        }
+        AdaptiveController {
+            probe_every,
+            rho_switch,
+            rho_grow,
+            max_iters,
+            step,
+            switched,
+            history,
+            history_cap,
         }
     }
 
     /// Has the controller permanently switched to serial?
     pub fn is_serial(&self) -> bool {
         self.switched
+    }
+
+    /// Batch counter (checkpointing; advanced by `should_probe`).
+    pub fn batch_step(&self) -> usize {
+        self.step
+    }
+
+    /// The retained probe-history window, oldest first.
+    pub fn history(&self) -> &[ProbeRecord] {
+        &self.history
+    }
+
+    /// Current history bound.
+    pub fn history_cap(&self) -> usize {
+        self.history_cap
+    }
+
+    /// Bound the retained probe history (clamped to ≥ 1); an over-full
+    /// window is trimmed to the most recent `cap` records immediately.
+    pub fn set_history_cap(&mut self, cap: usize) {
+        self.history_cap = cap.max(1);
+        if self.history.len() > self.history_cap {
+            self.history.drain(..self.history.len() - self.history_cap);
+        }
+    }
+
+    /// Append to the bounded history, evicting the oldest at the cap
+    /// (`remove(0)` is O(cap), and probes fire every `probe_every`
+    /// batches — negligible next to a solve).
+    fn push_history(&mut self, rec: ProbeRecord) {
+        if self.history.len() >= self.history_cap {
+            self.history.remove(0);
+        }
+        self.history.push(rec);
     }
 
     /// Advance the batch counter; true if this batch should run a probe
@@ -101,7 +202,7 @@ impl AdaptiveController {
         } else {
             AdaptiveDecision::Keep
         };
-        self.history.push(ProbeRecord { step: self.step, rho_fwd, rho_bwd, decision });
+        self.push_history(ProbeRecord { step: self.step, rho_fwd, rho_bwd, decision });
         decision
     }
 
@@ -111,7 +212,7 @@ impl AdaptiveController {
         self.switched = true;
         cfg.fwd_iters = None;
         cfg.bwd_iters = None;
-        self.history.push(ProbeRecord {
+        self.push_history(ProbeRecord {
             step: self.step,
             rho_fwd: None,
             rho_bwd: None,
@@ -184,7 +285,78 @@ mod tests {
         let mut m = cfg();
         c.observe(Some(0.5), Some(0.6), &mut m);
         c.force_serial(&mut m);
-        assert_eq!(c.history.len(), 2);
-        assert_eq!(c.history[1].decision, AdaptiveDecision::SwitchSerial);
+        assert_eq!(c.history().len(), 2);
+        assert_eq!(c.history()[1].decision, AdaptiveDecision::SwitchSerial);
+    }
+
+    #[test]
+    fn history_is_bounded_by_the_cap() {
+        let mut c = AdaptiveController::new(1);
+        c.set_history_cap(4);
+        let mut m = cfg();
+        for _ in 0..20 {
+            c.observe(Some(0.1), Some(0.1), &mut m);
+        }
+        assert_eq!(c.history().len(), 4, "history must not outgrow the cap");
+        // the retained window is the most recent one (observe is called
+        // without should_probe here, so steps stay 0 — tag via rho instead)
+        let mut c = AdaptiveController::new(1);
+        c.set_history_cap(3);
+        for i in 0..10 {
+            c.observe(Some(i as f64 / 100.0), None, &mut m);
+        }
+        let kept: Vec<f64> = c.history().iter().map(|r| r.rho_fwd.unwrap()).collect();
+        assert_eq!(kept, vec![0.07, 0.08, 0.09], "eviction must drop the oldest records");
+        // shrinking the cap trims immediately
+        c.set_history_cap(1);
+        assert_eq!(c.history().len(), 1);
+        assert_eq!(c.history()[0].rho_fwd, Some(0.09));
+    }
+
+    #[test]
+    fn restore_roundtrips_controller_state() {
+        let mut c = AdaptiveController::new(3);
+        c.set_history_cap(8);
+        let mut m = cfg();
+        for _ in 0..7 {
+            c.should_probe();
+        }
+        c.observe(Some(0.95), None, &mut m); // IncreaseIters
+        c.observe(Some(0.5), Some(0.4), &mut m); // Keep
+        let r = AdaptiveController::restore(
+            c.probe_every,
+            c.rho_switch,
+            c.rho_grow,
+            c.max_iters,
+            c.batch_step(),
+            c.is_serial(),
+            c.history_cap(),
+            c.history().to_vec(),
+        );
+        assert_eq!(r.batch_step(), c.batch_step());
+        assert_eq!(r.is_serial(), c.is_serial());
+        assert_eq!(r.history(), c.history());
+        assert_eq!(r.history_cap(), c.history_cap());
+        // the restored controller continues the probe cadence in lockstep
+        let mut c2 = c.clone();
+        let mut r2 = r;
+        for _ in 0..6 {
+            assert_eq!(c2.should_probe(), r2.should_probe());
+        }
+    }
+
+    #[test]
+    fn probe_record_json_shape() {
+        let r = ProbeRecord {
+            step: 5,
+            rho_fwd: Some(0.25),
+            rho_bwd: None,
+            decision: AdaptiveDecision::Keep,
+        };
+        let j = r.to_json();
+        assert_eq!(j.get("step").unwrap().int(), Some(5));
+        assert_eq!(j.get("rho_fwd").unwrap().num(), Some(0.25));
+        assert_eq!(j.get("rho_bwd"), Some(&crate::util::json::Json::Null));
+        assert_eq!(j.get("decision").unwrap().str(), Some("keep"));
     }
 }

@@ -1,0 +1,632 @@
+//! Versioned binary checkpoints for whole training sessions.
+//!
+//! A [`Checkpoint`] captures everything a [`crate::coordinator::Session`]
+//! needs to continue a run **bitwise identically**: the full
+//! [`RunConfig`] (including the MGRIT iteration counts the §3.2.3
+//! controller may have mutated), every parameter group, the optimizer
+//! moments and bias-correction counter, the adaptive controller (batch
+//! counter, sticky serial switch, retained ρ-history window), the training
+//! RNG stream (state word + cached Box-Muller spare), the step counter,
+//! and — when valid — the TorchBraid-style warm-start iterate, so the
+//! first post-resume solve warm-starts exactly like the uninterrupted
+//! run's would have.
+//!
+//! ## File format (version 1, all integers little-endian)
+//!
+//! ```text
+//! magic        b"LTCP"
+//! version      u32                  (= 1)
+//! config       u32 len + RunConfig JSON (utf-8; u64 seed as string)
+//! run state    u64 step
+//!              u8 flag + f32        initial_loss    (divergence watchdog)
+//!              u8 flag + u64        switched_at
+//!              u8                   warm_start option
+//!              u64 + u8 flag + f32  training-RNG state word / spare
+//! controller   u64 probe_every, f64 rho_switch, f64 rho_grow,
+//!              u64 max_iters, u64 batch step, u8 switched,
+//!              u64 history_cap, u32 n records
+//!              per record: u64 step, (u8+f64) ρ_fwd, (u8+f64) ρ_bwd,
+//!                          u8 decision (0 keep / 1 grow / 2 serial)
+//! optimizer    u64 t (bias-correction counter)
+//! tensor table u32 n entries; per entry u16 name-len + name + u64 count
+//!              then every payload (count × f32) in entry order
+//! checksum     u64 FNV-1a over every preceding byte
+//! ```
+//!
+//! Tensor-table entry names are structural and **validated against the
+//! model config on read**: `param.layer.{i}` (length
+//! [`crate::config::ModelConfig::layer_theta_len`]), `param.{emb,pos,out,cls}`,
+//! `opt.{m,v}.{g}` for every optimizer group (layers…, emb, pos, out, cls),
+//! and optionally `warm.{j}` for the `parallel_layers() + 1` mid-range
+//! states (each of `state_shape()` element count). Any missing, reordered,
+//! unknown, or wrongly-sized entry is a hard error, as are a bad magic,
+//! an unknown version, a truncated file, or a checksum mismatch.
+//!
+//! ## Versioning rules
+//!
+//! The version is bumped whenever the byte layout or the entry-name
+//! contract changes; readers reject versions they don't know (no silent
+//! best-effort decoding of foreign layouts). New *optional* tensor-table
+//! entries may be added within a version only if absence keeps old files
+//! readable (the warm-start section works this way).
+
+use anyhow::{bail, Context, Result};
+
+use crate::adaptive::{AdaptiveDecision, ProbeRecord};
+use crate::config::RunConfig;
+use crate::tensor::Tensor;
+use crate::util::json::Json;
+
+/// File magic ("LayerTime CheckPoint").
+pub const MAGIC: &[u8; 4] = b"LTCP";
+/// Current format version.
+pub const VERSION: u32 = 1;
+
+/// Adaptive-controller snapshot carried by a checkpoint (mirrors the
+/// accessors on [`crate::adaptive::AdaptiveController`]).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ControllerState {
+    pub probe_every: usize,
+    pub rho_switch: f64,
+    pub rho_grow: f64,
+    pub max_iters: usize,
+    pub step: usize,
+    pub switched: bool,
+    pub history_cap: usize,
+    /// The retained ρ-history window only (the controller's cap bounds it).
+    pub history: Vec<ProbeRecord>,
+}
+
+/// In-memory image of one session checkpoint (see module docs).
+#[derive(Debug, Clone)]
+pub struct Checkpoint {
+    /// The run description at save time — including controller-mutated
+    /// MGRIT iteration counts, so a resumed run solves identically.
+    pub rc: RunConfig,
+    /// Completed optimizer steps.
+    pub step: usize,
+    /// First-step loss (the divergence watchdog's reference point).
+    pub initial_loss: Option<f32>,
+    /// Step at which the run switched to serial, if it did.
+    pub switched_at: Option<usize>,
+    /// The session's warm-start *option* (builder setting).
+    pub warm_start: bool,
+    /// Training-RNG state word.
+    pub rng_state: u64,
+    /// Training-RNG cached Box-Muller spare.
+    pub rng_spare: Option<f32>,
+    pub controller: ControllerState,
+    /// Optimizer bias-correction counter.
+    pub opt_t: u64,
+    /// First optimizer moment per group (layers…, emb, pos, out, cls).
+    pub opt_m: Vec<Vec<f32>>,
+    /// Second optimizer moment per group.
+    pub opt_v: Vec<Vec<f32>>,
+    /// Per-layer flat θ.
+    pub layers: Vec<Vec<f32>>,
+    pub w_emb: Vec<f32>,
+    pub w_pos: Vec<f32>,
+    pub w_out: Vec<f32>,
+    pub w_cls: Vec<f32>,
+    /// Mid-range warm-start iterate `Z_{bo}..Z_{bo+n_mid}` when the saved
+    /// session held a valid one (`None` otherwise).
+    pub warm: Option<Vec<Tensor>>,
+}
+
+impl Checkpoint {
+    /// Serialize and write to `path` (parent directories are created).
+    pub fn write(&self, path: &str) -> Result<()> {
+        if let Some(dir) = std::path::Path::new(path).parent() {
+            std::fs::create_dir_all(dir).ok();
+        }
+        let bytes = self.encode();
+        std::fs::write(path, bytes).with_context(|| format!("writing checkpoint {}", path))?;
+        Ok(())
+    }
+
+    /// Read and fully validate a checkpoint written by [`Checkpoint::write`].
+    pub fn read(path: &str) -> Result<Checkpoint> {
+        let bytes =
+            std::fs::read(path).with_context(|| format!("opening checkpoint {}", path))?;
+        Checkpoint::decode(&bytes).with_context(|| format!("reading checkpoint {}", path))
+    }
+
+    /// The expected tensor-table layout for a config: (name, element count)
+    /// for the parameter and optimizer entries, in file order.
+    fn expected_entries(rc: &RunConfig) -> Vec<(String, usize)> {
+        let m = &rc.model;
+        let n_layers = m.total_layers();
+        let head_sizes = [
+            ("emb", m.vocab * m.d_model),
+            ("pos", m.seq * m.d_model),
+            ("out", m.d_model * m.vocab),
+            ("cls", m.d_model * m.n_classes),
+        ];
+        let mut out = Vec::with_capacity(4 * n_layers + 12);
+        for l in 0..n_layers {
+            out.push((format!("param.layer.{}", l), m.layer_theta_len(l)));
+        }
+        for (name, len) in head_sizes {
+            out.push((format!("param.{}", name), len));
+        }
+        // optimizer groups mirror ParamStore::group_sizes order
+        for which in ["m", "v"] {
+            for l in 0..n_layers {
+                out.push((format!("opt.{}.{}", which, l), m.layer_theta_len(l)));
+            }
+            for (i, (_, len)) in head_sizes.iter().enumerate() {
+                out.push((format!("opt.{}.{}", which, n_layers + i), *len));
+            }
+        }
+        out
+    }
+
+    fn encode(&self) -> Vec<u8> {
+        let mut b = Buf(Vec::new());
+        b.bytes(MAGIC);
+        b.u32(VERSION);
+        let cfg = self.rc.to_json().to_string_compact();
+        b.u32(cfg.len() as u32);
+        b.bytes(cfg.as_bytes());
+        b.u64(self.step as u64);
+        b.opt_f32(self.initial_loss);
+        b.opt_u64(self.switched_at.map(|v| v as u64));
+        b.u8(self.warm_start as u8);
+        b.u64(self.rng_state);
+        b.opt_f32(self.rng_spare);
+        let c = &self.controller;
+        b.u64(c.probe_every as u64);
+        b.f64(c.rho_switch);
+        b.f64(c.rho_grow);
+        b.u64(c.max_iters as u64);
+        b.u64(c.step as u64);
+        b.u8(c.switched as u8);
+        b.u64(c.history_cap as u64);
+        b.u32(c.history.len() as u32);
+        for r in &c.history {
+            b.u64(r.step as u64);
+            b.opt_f64(r.rho_fwd);
+            b.opt_f64(r.rho_bwd);
+            b.u8(match r.decision {
+                AdaptiveDecision::Keep => 0,
+                AdaptiveDecision::IncreaseIters => 1,
+                AdaptiveDecision::SwitchSerial => 2,
+            });
+        }
+        b.u64(self.opt_t);
+        // tensor table: params, opt moments, optional warm states
+        let heads = [&self.w_emb, &self.w_pos, &self.w_out, &self.w_cls];
+        let mut entries: Vec<(String, &[f32])> = Vec::new();
+        for (l, v) in self.layers.iter().enumerate() {
+            entries.push((format!("param.layer.{}", l), v));
+        }
+        for (name, v) in ["emb", "pos", "out", "cls"].iter().zip(heads) {
+            entries.push((format!("param.{}", name), v));
+        }
+        for (which, groups) in [("m", &self.opt_m), ("v", &self.opt_v)] {
+            for (g, v) in groups.iter().enumerate() {
+                entries.push((format!("opt.{}.{}", which, g), v));
+            }
+        }
+        if let Some(warm) = &self.warm {
+            for (j, t) in warm.iter().enumerate() {
+                entries.push((format!("warm.{}", j), t.data()));
+            }
+        }
+        b.u32(entries.len() as u32);
+        for (name, data) in &entries {
+            b.u16(name.len() as u16);
+            b.bytes(name.as_bytes());
+            b.u64(data.len() as u64);
+        }
+        for (_, data) in &entries {
+            for x in *data {
+                b.bytes(&x.to_le_bytes());
+            }
+        }
+        let sum = fnv1a64(&b.0);
+        b.u64(sum);
+        b.0
+    }
+
+    fn decode(bytes: &[u8]) -> Result<Checkpoint> {
+        // checksum first: everything else assumes uncorrupted bytes
+        if bytes.len() < MAGIC.len() + 4 + 8 {
+            bail!("truncated checkpoint ({} bytes)", bytes.len());
+        }
+        let (body, tail) = bytes.split_at(bytes.len() - 8);
+        let stored = u64::from_le_bytes(tail.try_into().expect("8-byte tail"));
+        let computed = fnv1a64(body);
+        if stored != computed {
+            bail!("checksum mismatch (file corrupt or truncated mid-record)");
+        }
+        let mut r = Rdr { b: body, i: 0 };
+        if r.take(4)? != MAGIC {
+            bail!("bad magic: not a layertime session checkpoint");
+        }
+        let version = r.u32()?;
+        if version != VERSION {
+            bail!("unsupported checkpoint version {} (this build reads {})", version, VERSION);
+        }
+        let cfg_len = r.u32()? as usize;
+        let cfg_text = std::str::from_utf8(r.take(cfg_len)?).context("config is not utf-8")?;
+        let cfg_json = Json::parse(cfg_text).context("config JSON")?;
+        let rc = RunConfig::from_json(&cfg_json)
+            .ok_or_else(|| anyhow::anyhow!("config JSON is missing required fields"))?;
+        let step = r.u64()? as usize;
+        let initial_loss = r.opt_f32()?;
+        let switched_at = r.opt_u64()?.map(|v| v as usize);
+        let warm_start = r.u8()? != 0;
+        let rng_state = r.u64()?;
+        let rng_spare = r.opt_f32()?;
+        let controller = ControllerState {
+            probe_every: r.u64()? as usize,
+            rho_switch: r.f64()?,
+            rho_grow: r.f64()?,
+            max_iters: r.u64()? as usize,
+            step: r.u64()? as usize,
+            switched: r.u8()? != 0,
+            history_cap: r.u64()? as usize,
+            history: {
+                let n = r.u32()? as usize;
+                let mut h = Vec::with_capacity(n.min(1 << 16));
+                for _ in 0..n {
+                    h.push(ProbeRecord {
+                        step: r.u64()? as usize,
+                        rho_fwd: r.opt_f64()?,
+                        rho_bwd: r.opt_f64()?,
+                        decision: match r.u8()? {
+                            0 => AdaptiveDecision::Keep,
+                            1 => AdaptiveDecision::IncreaseIters,
+                            2 => AdaptiveDecision::SwitchSerial,
+                            d => bail!("unknown probe decision tag {}", d),
+                        },
+                    });
+                }
+                h
+            },
+        };
+        let opt_t = r.u64()?;
+
+        // tensor table, validated name-by-name against the config
+        let n_entries = r.u32()? as usize;
+        let mut names = Vec::with_capacity(n_entries);
+        let mut counts = Vec::with_capacity(n_entries);
+        for _ in 0..n_entries {
+            let nl = r.u16()? as usize;
+            let name = std::str::from_utf8(r.take(nl)?)
+                .context("tensor-table entry name is not utf-8")?
+                .to_string();
+            names.push(name);
+            counts.push(r.u64()? as usize);
+        }
+        let expected = Self::expected_entries(&rc);
+        if n_entries < expected.len() {
+            bail!(
+                "tensor table has {} entries, config requires at least {}",
+                n_entries,
+                expected.len()
+            );
+        }
+        for (i, (want_name, want_len)) in expected.iter().enumerate() {
+            if &names[i] != want_name {
+                bail!("tensor-table entry {}: expected '{}', found '{}'", i, want_name, names[i]);
+            }
+            if counts[i] != *want_len {
+                bail!(
+                    "tensor '{}' has {} elements, config requires {}",
+                    want_name,
+                    counts[i],
+                    want_len
+                );
+            }
+        }
+        // trailing entries must be exactly the warm-start section
+        let n_warm = n_entries - expected.len();
+        let state_shape = rc.model.state_shape();
+        let state_elems: usize = state_shape.iter().product();
+        if n_warm != 0 {
+            if n_warm != rc.model.parallel_layers() + 1 {
+                bail!(
+                    "warm-start section has {} states, config requires {} (parallel_layers + 1)",
+                    n_warm,
+                    rc.model.parallel_layers() + 1
+                );
+            }
+            for (j, (name, count)) in
+                names[expected.len()..].iter().zip(&counts[expected.len()..]).enumerate()
+            {
+                if name != &format!("warm.{}", j) {
+                    bail!("unexpected tensor-table entry '{}' in the warm section", name);
+                }
+                if *count != state_elems {
+                    bail!(
+                        "warm state {} has {} elements, state shape {:?} requires {}",
+                        j,
+                        count,
+                        state_shape,
+                        state_elems
+                    );
+                }
+            }
+        }
+
+        // payloads, in table order
+        let mut payloads = Vec::with_capacity(n_entries);
+        for &count in &counts {
+            payloads.push(r.f32s(count)?);
+        }
+        if r.i != body.len() {
+            bail!("{} trailing bytes after the last payload", body.len() - r.i);
+        }
+        let n_layers = rc.model.total_layers();
+        let mut it = payloads.into_iter();
+        let layers: Vec<Vec<f32>> = (0..n_layers).map(|_| it.next().unwrap()).collect();
+        let w_emb = it.next().unwrap();
+        let w_pos = it.next().unwrap();
+        let w_out = it.next().unwrap();
+        let w_cls = it.next().unwrap();
+        let opt_m: Vec<Vec<f32>> = (0..n_layers + 4).map(|_| it.next().unwrap()).collect();
+        let opt_v: Vec<Vec<f32>> = (0..n_layers + 4).map(|_| it.next().unwrap()).collect();
+        let warm = if n_warm > 0 {
+            Some(it.map(|v| Tensor::from_vec(v, &state_shape)).collect())
+        } else {
+            None
+        };
+        Ok(Checkpoint {
+            rc,
+            step,
+            initial_loss,
+            switched_at,
+            warm_start,
+            rng_state,
+            rng_spare,
+            controller,
+            opt_t,
+            opt_m,
+            opt_v,
+            layers,
+            w_emb,
+            w_pos,
+            w_out,
+            w_cls,
+            warm,
+        })
+    }
+}
+
+/// FNV-1a (64-bit) over a byte slice — the corruption tripwire appended to
+/// every checkpoint. Not cryptographic; it catches torn writes and bit rot.
+fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf29ce484222325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+/// Little-endian byte-sink used by the encoder.
+struct Buf(Vec<u8>);
+
+impl Buf {
+    fn bytes(&mut self, b: &[u8]) {
+        self.0.extend_from_slice(b);
+    }
+    fn u8(&mut self, v: u8) {
+        self.0.push(v);
+    }
+    fn u16(&mut self, v: u16) {
+        self.bytes(&v.to_le_bytes());
+    }
+    fn u32(&mut self, v: u32) {
+        self.bytes(&v.to_le_bytes());
+    }
+    fn u64(&mut self, v: u64) {
+        self.bytes(&v.to_le_bytes());
+    }
+    fn f64(&mut self, v: f64) {
+        self.bytes(&v.to_le_bytes());
+    }
+    fn opt_f32(&mut self, v: Option<f32>) {
+        self.u8(v.is_some() as u8);
+        self.bytes(&v.unwrap_or(0.0).to_le_bytes());
+    }
+    fn opt_f64(&mut self, v: Option<f64>) {
+        self.u8(v.is_some() as u8);
+        self.f64(v.unwrap_or(0.0));
+    }
+    fn opt_u64(&mut self, v: Option<u64>) {
+        self.u8(v.is_some() as u8);
+        self.u64(v.unwrap_or(0));
+    }
+}
+
+/// Bounds-checked little-endian reader over the (checksum-verified) body.
+struct Rdr<'a> {
+    b: &'a [u8],
+    i: usize,
+}
+
+impl<'a> Rdr<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.i + n > self.b.len() {
+            bail!("truncated checkpoint (wanted {} bytes at offset {})", n, self.i);
+        }
+        let s = &self.b[self.i..self.i + n];
+        self.i += n;
+        Ok(s)
+    }
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+    fn u16(&mut self) -> Result<u16> {
+        Ok(u16::from_le_bytes(self.take(2)?.try_into().unwrap()))
+    }
+    fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+    fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+    fn f32(&mut self) -> Result<f32> {
+        Ok(f32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+    fn f64(&mut self) -> Result<f64> {
+        Ok(f64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+    fn opt_f32(&mut self) -> Result<Option<f32>> {
+        let flag = self.u8()? != 0;
+        let v = self.f32()?;
+        Ok(flag.then_some(v))
+    }
+    fn opt_f64(&mut self) -> Result<Option<f64>> {
+        let flag = self.u8()? != 0;
+        let v = self.f64()?;
+        Ok(flag.then_some(v))
+    }
+    fn opt_u64(&mut self) -> Result<Option<u64>> {
+        let flag = self.u8()? != 0;
+        let v = self.u64()?;
+        Ok(flag.then_some(v))
+    }
+    fn f32s(&mut self, n: usize) -> Result<Vec<f32>> {
+        let raw = self.take(n * 4)?;
+        Ok(raw.chunks_exact(4).map(|c| f32::from_le_bytes(c.try_into().unwrap())).collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets;
+    use crate::model::{Init, ParamStore};
+
+    fn tiny_checkpoint() -> Checkpoint {
+        let mut rc = presets::mc_tiny();
+        presets::shrink_for_bench(&mut rc);
+        rc.model.n_enc_layers = 3;
+        let ps = ParamStore::init(&rc.model, Init::Default, 7);
+        let n = rc.model.total_layers();
+        let sizes = ps.group_sizes();
+        let layers = ps.layers.read().unwrap().clone();
+        Checkpoint {
+            rc: rc.clone(),
+            step: 42,
+            initial_loss: Some(1.5),
+            switched_at: None,
+            warm_start: true,
+            rng_state: u64::MAX - 3,
+            rng_spare: Some(-0.25),
+            controller: ControllerState {
+                probe_every: 50,
+                rho_switch: 1.0,
+                rho_grow: 0.9,
+                max_iters: 8,
+                step: 42,
+                switched: false,
+                history_cap: 512,
+                history: vec![ProbeRecord {
+                    step: 40,
+                    rho_fwd: Some(0.3),
+                    rho_bwd: None,
+                    decision: AdaptiveDecision::Keep,
+                }],
+            },
+            opt_t: 42,
+            opt_m: sizes.iter().map(|&s| vec![0.5; s]).collect(),
+            opt_v: sizes.iter().map(|&s| vec![0.25; s]).collect(),
+            layers,
+            w_emb: ps.w_emb.clone(),
+            w_pos: ps.w_pos.clone(),
+            w_out: ps.w_out.clone(),
+            w_cls: ps.w_cls.clone(),
+            warm: Some(
+                (0..=n).map(|j| Tensor::from_vec(
+                    vec![j as f32; rc.model.state_shape().iter().product()],
+                    &rc.model.state_shape(),
+                )).collect(),
+            ),
+        }
+    }
+
+    #[test]
+    fn encode_decode_roundtrip() {
+        let ck = tiny_checkpoint();
+        let bytes = ck.encode();
+        let back = Checkpoint::decode(&bytes).unwrap();
+        assert_eq!(back.rc, ck.rc);
+        assert_eq!(back.step, ck.step);
+        assert_eq!(back.initial_loss, ck.initial_loss);
+        assert_eq!(back.switched_at, ck.switched_at);
+        assert_eq!(back.warm_start, ck.warm_start);
+        assert_eq!(back.rng_state, ck.rng_state);
+        assert_eq!(back.rng_spare, ck.rng_spare);
+        assert_eq!(back.controller, ck.controller);
+        assert_eq!(back.opt_t, ck.opt_t);
+        assert_eq!(back.opt_m, ck.opt_m);
+        assert_eq!(back.opt_v, ck.opt_v);
+        assert_eq!(back.layers, ck.layers);
+        assert_eq!(back.w_emb, ck.w_emb);
+        assert_eq!(back.w_cls, ck.w_cls);
+        let (a, b) = (back.warm.unwrap(), ck.warm.unwrap());
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.shape(), y.shape());
+            assert_eq!(x.data(), y.data());
+        }
+    }
+
+    #[test]
+    fn truncated_and_corrupt_bytes_are_rejected() {
+        let bytes = tiny_checkpoint().encode();
+        // truncation at every-ish prefix length fails cleanly
+        for cut in [0, 3, 11, bytes.len() / 2, bytes.len() - 1] {
+            assert!(Checkpoint::decode(&bytes[..cut]).is_err(), "cut at {}", cut);
+        }
+        // a single flipped payload byte trips the checksum
+        let mut bad = bytes.clone();
+        let mid = bad.len() / 2;
+        bad[mid] ^= 0x40;
+        let err = Checkpoint::decode(&bad).unwrap_err().to_string();
+        assert!(err.contains("checksum"), "{}", err);
+        // bad magic (fix the checksum so the magic check itself fires)
+        let mut bad = bytes.clone();
+        bad[0] = b'X';
+        let n = bad.len();
+        let sum = fnv1a64(&bad[..n - 8]);
+        bad[n - 8..].copy_from_slice(&sum.to_le_bytes());
+        let err = Checkpoint::decode(&bad).unwrap_err().to_string();
+        assert!(err.contains("magic"), "{}", err);
+        // unknown version
+        let mut bad = bytes.clone();
+        bad[4..8].copy_from_slice(&99u32.to_le_bytes());
+        let sum = fnv1a64(&bad[..n - 8]);
+        bad[n - 8..].copy_from_slice(&sum.to_le_bytes());
+        let err = Checkpoint::decode(&bad).unwrap_err().to_string();
+        assert!(err.contains("version"), "{}", err);
+    }
+
+    #[test]
+    fn config_mismatches_are_rejected() {
+        // a layer payload whose length disagrees with the config
+        let mut ck = tiny_checkpoint();
+        ck.layers[0].pop();
+        let err = Checkpoint::decode(&ck.encode()).unwrap_err().to_string();
+        assert!(err.contains("param.layer.0"), "{}", err);
+        // wrong warm-state count
+        let mut ck = tiny_checkpoint();
+        ck.warm.as_mut().unwrap().pop();
+        let err = Checkpoint::decode(&ck.encode()).unwrap_err().to_string();
+        assert!(err.contains("warm"), "{}", err);
+        // wrong optimizer group size
+        let mut ck = tiny_checkpoint();
+        ck.opt_v.last_mut().unwrap().push(0.0);
+        let err = Checkpoint::decode(&ck.encode()).unwrap_err().to_string();
+        assert!(err.contains("opt.v"), "{}", err);
+        // no warm section at all is fine
+        let mut ck = tiny_checkpoint();
+        ck.warm = None;
+        assert!(Checkpoint::decode(&ck.encode()).unwrap().warm.is_none());
+    }
+}

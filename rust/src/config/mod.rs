@@ -93,6 +93,27 @@ impl ModelConfig {
         }
     }
 
+    /// Flat parameter length of layer `layer` (dec layout past `n_enc` for
+    /// EncDec, enc layout otherwise) — the shape contract checkpoints are
+    /// validated against.
+    pub fn layer_theta_len(&self, layer: usize) -> usize {
+        if self.arch == Arch::EncDec && layer >= self.n_enc_layers {
+            self.p_dec()
+        } else {
+            self.p_enc()
+        }
+    }
+
+    /// Shape of the evolving ODE state for this geometry: `[B, S, D]`, or
+    /// the stacked `[2, B, S, D]` for the encoder-decoder architecture.
+    /// Propagators mirror this (`Propagator::state_shape`).
+    pub fn state_shape(&self) -> Vec<usize> {
+        match self.arch {
+            Arch::EncDec => vec![2, self.batch, self.seq, self.d_model],
+            _ => vec![self.batch, self.seq, self.d_model],
+        }
+    }
+
     pub fn to_json(&self) -> Json {
         json::obj(vec![
             ("arch", json::s(self.arch.as_str())),
@@ -254,6 +275,44 @@ impl Default for TrainConfig {
     }
 }
 
+impl TrainConfig {
+    pub fn to_json(&self) -> Json {
+        json::obj(vec![
+            ("steps", json::int(self.steps as i64)),
+            ("lr", json::num(self.lr as f64)),
+            ("warmup", json::int(self.warmup as i64)),
+            ("weight_decay", json::num(self.weight_decay as f64)),
+            ("grad_clip", json::num(self.grad_clip as f64)),
+            ("opt", json::s(self.opt.as_str())),
+            // the seed is a full-range u64; JSON numbers are f64 and would
+            // silently round it, so it travels as a decimal string
+            ("seed", json::s(&self.seed.to_string())),
+            ("probe_every", json::int(self.probe_every as i64)),
+            ("eval_every", json::int(self.eval_every as i64)),
+            ("adaptive", Json::Bool(self.adaptive)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Option<TrainConfig> {
+        let seed = match j.get("seed")? {
+            Json::Str(s) => s.parse::<u64>().ok()?,
+            n => n.int()? as u64,
+        };
+        Some(TrainConfig {
+            steps: j.get("steps")?.int()? as usize,
+            lr: j.get("lr")?.num()? as f32,
+            warmup: j.get("warmup")?.int()? as usize,
+            weight_decay: j.get("weight_decay")?.num()? as f32,
+            grad_clip: j.get("grad_clip")?.num()? as f32,
+            opt: OptKind::parse(j.get("opt")?.str()?)?,
+            seed,
+            probe_every: j.get("probe_every")?.int()? as usize,
+            eval_every: j.get("eval_every")?.int()? as usize,
+            adaptive: j.get("adaptive")?.bool()?,
+        })
+    }
+}
+
 /// The full run description: model + MGRIT + training + parallel topology.
 #[derive(Debug, Clone, PartialEq)]
 pub struct RunConfig {
@@ -268,6 +327,29 @@ pub struct RunConfig {
 }
 
 impl RunConfig {
+    /// Full-run JSON (the checkpoint header payload).
+    pub fn to_json(&self) -> Json {
+        json::obj(vec![
+            ("name", json::s(&self.name)),
+            ("model", self.model.to_json()),
+            ("mgrit", self.mgrit.to_json()),
+            ("train", self.train.to_json()),
+            ("lp_degree", json::int(self.lp_degree as i64)),
+            ("dp_degree", json::int(self.dp_degree as i64)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Option<RunConfig> {
+        Some(RunConfig {
+            name: j.get("name")?.str()?.to_string(),
+            model: ModelConfig::from_json(j.get("model")?)?,
+            mgrit: MgritConfig::from_json(j.get("mgrit")?)?,
+            train: TrainConfig::from_json(j.get("train")?)?,
+            lp_degree: j.get("lp_degree")?.int()? as usize,
+            dp_degree: j.get("dp_degree")?.int()? as usize,
+        })
+    }
+
     /// Apply `--key value` overrides (the launcher's config surface).
     pub fn apply_args(&mut self, a: &Args) {
         self.model.n_enc_layers = a.get_usize("enc-layers", self.model.n_enc_layers);
@@ -315,6 +397,30 @@ mod tests {
         let j = m.to_json();
         let m2 = ModelConfig::from_json(&j).unwrap();
         assert_eq!(m, m2);
+    }
+
+    #[test]
+    fn run_config_json_roundtrip_preserves_the_seed_exactly() {
+        let mut rc = presets::gpt_small();
+        rc.train.seed = u64::MAX - 12345; // not representable as f64
+        rc.mgrit.fwd_iters = None;
+        let rc2 = RunConfig::from_json(&rc.to_json()).unwrap();
+        assert_eq!(rc, rc2);
+        // and through a serialize → parse → deserialize cycle
+        let text = rc.to_json().to_string_pretty();
+        let rc3 = RunConfig::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(rc, rc3);
+    }
+
+    #[test]
+    fn layer_theta_len_and_state_shape_follow_the_arch() {
+        let m = presets::mt_small().model;
+        assert_eq!(m.layer_theta_len(0), m.p_enc());
+        assert_eq!(m.layer_theta_len(m.n_enc_layers), m.p_dec());
+        assert_eq!(m.state_shape(), vec![2, m.batch, m.seq, m.d_model]);
+        let e = presets::mc_tiny().model;
+        assert_eq!(e.layer_theta_len(e.total_layers() - 1), e.p_enc());
+        assert_eq!(e.state_shape(), vec![e.batch, e.seq, e.d_model]);
     }
 
     #[test]

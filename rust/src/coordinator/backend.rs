@@ -143,7 +143,7 @@ pub fn backend_for_workers(workers: usize) -> Box<dyn Backend> {
 mod tests {
     use super::*;
     use crate::config::MgritConfig;
-    use crate::coordinator::context::{SolveContext, StepWorkspace};
+    use crate::coordinator::context::{ForwardWorkspace, SolveContext, StepWorkspace};
     use crate::ode::LinearOde;
     use crate::tensor::Tensor;
     use crate::util::rng::Rng;
@@ -153,7 +153,11 @@ mod tests {
     }
 
     fn ctx_for(backend: Box<dyn Backend>, n: usize, shape: &[usize]) -> SolveContext {
-        SolveContext::new(backend, StepWorkspace::new(n, shape, shape, &vec![0; n], [0, 0, 0, 0]))
+        SolveContext::new(
+            backend,
+            ForwardWorkspace::new(n, shape, shape),
+            StepWorkspace::new(n, shape, shape, &vec![0; n], [0, 0, 0, 0]),
+        )
     }
 
     #[test]

@@ -1,5 +1,6 @@
-//! Persistent per-`Session` solve state: cached MGRIT hierarchies, the
-//! warm-start iterate, and the reusable fine-grid step workspace.
+//! Persistent per-session solve state: the shared train/infer **forward
+//! core**, the adjoint-side extension the training session adds on top,
+//! and the reusable fine-grid workspaces.
 //!
 //! Before this module existed every forward/adjoint solve rebuilt the full
 //! MGRIT level hierarchy (`MgritCore::new` allocates W/G/W_init storage on
@@ -11,49 +12,99 @@
 //! layer-parallel training is supposed to win (Günther et al. 2020 and the
 //! source paper both amortize the hierarchy across the whole run).
 //!
-//! [`SolveContext`] owns:
+//! ## The train/infer split
 //!
-//! * two cached [`MgritCore`]s (forward + adjoint), keyed on the
-//!   grid-shape-determining inputs; iteration-count changes (the §3.2.3
-//!   `IncreaseIters` transition) reuse the cores, serial mode bypasses
-//!   them entirely (exact sweeps run in place on the workspace — no core
-//!   is built, touched, or copied through, and the session frees the
-//!   cached pair at the sticky switch), and a cf / levels / fcf change
-//!   mid-run triggers an explicit rebuild;
-//! * the TorchBraid-style warm start — tracked as a validity flag over
-//!   the workspace states (the previous solve's solution is already
-//!   sitting there, so warm-starting is copy-free), dropped as soon as a
-//!   solve runs serially: stale after the §3.2.3 switch, and it would
-//!   poison a later non-serial run restored from the same session;
-//! * a [`StepWorkspace`] with every buffer a training step needs — the
-//!   fine-grid states/λ/gradients *and* the loss-head side (the head
-//!   cotangent buffer plus logits/pooled scratch) — so the steady-state
-//!   `train_step` performs **zero** heap allocations with the
-//!   single-threaded backends (pinned by `rust/tests/alloc_audit.rs`,
-//!   empty allowlist). `ThreadedMgrit` sweeps now relax in place on the
-//!   shared level storage (`parallel::exec`'s `_mut` executors), so the
-//!   threaded solve round is allocation-free at steady state too.
+//! The forward solve is the part of a training step that *serving* needs
+//! too — batched decoding is nothing but repeated forward solves over the
+//! same cached hierarchy. The ownership is therefore layered:
 //!
-//! The context is created once per `Session` from the session's
-//! [`Backend`] and held for the session's lifetime; the backend supplies
-//! the execution strategy (worker count, persistent relaxation pool,
-//! iteration-budget mapping) and is re-consulted per solve so pool
-//! replacement after a poisoned sweep still works with cached cores.
+//! * [`ForwardWorkspace`] — forward-only fine-grid buffers: the states
+//!   Z_0..Z_N, the `[B,S,D]` head-staging tensor (decoder half of the
+//!   stacked EncDec state), and the ping-pong tensor for rolling
+//!   (evaluation-style) forwards.
+//! * [`ForwardContext`] — the shared **train/infer forward core**: the
+//!   [`Backend`] strategy, the cached forward [`MgritCore`], the
+//!   TorchBraid-style warm-start flag, and a [`ForwardWorkspace`]. Both
+//!   [`crate::coordinator::Session`] (training) and
+//!   [`crate::infer::InferSession`] (batched decoding/prediction) own one
+//!   and drive every forward solve through it —
+//!   [`ForwardContext::forward_mid`] for the ParallelNet mid-range,
+//!   [`ForwardContext::forward_full`] for the whole stack including the
+//!   serial buffer layers (Appendix B).
+//! * [`StepWorkspace`] — the training-only extension: adjoints λ_0..λ_N,
+//!   per-layer and head gradient accumulators, the loss-head cotangent
+//!   buffer and numeric scratch, and the dp stash/fold scratch set.
+//! * [`SolveContext`] — a [`ForwardContext`] plus the cached **adjoint**
+//!   hierarchy and a [`StepWorkspace`]; what a training `Session` owns.
+//!
+//! Warm starts are tracked as a validity flag over the forward workspace
+//! (the previous solve's solution is already sitting there, so
+//! warm-starting is copy-free) and dropped the moment any solve runs
+//! serial: stale after the §3.2.3 switch, and it would poison a later
+//! non-serial run restored from the same session. Serial mode (`iters =
+//! None` after backend mapping) bypasses the hierarchy entirely — exact
+//! sweeps run in place on the workspace, no core is built, touched, or
+//! copied through. Iteration-count changes (the §3.2.3 `IncreaseIters`
+//! transition) reuse the cached cores; a cf / levels / fcf change triggers
+//! an explicit rebuild. Everything is allocation-free at steady state on
+//! every backend (threaded sweeps relax in place on the shared level
+//! storage; pinned by `rust/tests/alloc_audit.rs`, training step *and*
+//! decode loop).
+//!
+//! The backend is re-consulted per solve so pool replacement after a
+//! poisoned sweep still works with cached cores.
 
-use crate::config::MgritConfig;
+use crate::config::{MgritConfig, ModelConfig};
 use crate::mgrit::{accumulate_layer_grads, MgritCore, MgritSolver, SolveStats};
 use crate::ode::Propagator;
 use crate::tensor::Tensor;
 
 use super::backend::Backend;
 use super::objective::{HeadGrads, LossScratch, LossSink};
+use super::range::RangeProp;
 
-/// Reusable fine-grid buffers for one training step: states Z_0..Z_N,
-/// adjoints λ_0..λ_N, and every gradient accumulator. Sized once at
-/// session build, reused every batch.
-pub struct StepWorkspace {
+/// (buffer_open, parallel mid-range length) for a model — the split
+/// between serial buffer layers and the MGRIT domain, shared by the
+/// training session and the inference session so the two cannot drift.
+pub fn mid_range(m: &ModelConfig) -> (usize, usize) {
+    (m.buffer_open, m.parallel_layers())
+}
+
+/// Forward-only fine-grid buffers: states Z_0..Z_N plus the head-staging
+/// and ping-pong tensors. Sized once at session build, reused every batch
+/// by training *and* inference (the shared train/infer core's storage).
+pub struct ForwardWorkspace {
     /// Fine-grid states Z_0..Z_N (N = total layers), state-shaped.
     pub states: Vec<Tensor>,
+    /// Head-side activation buffer [B,S,D] (the decoder half of the
+    /// stacked EncDec state; unused for flat-state architectures).
+    pub head: Tensor,
+    /// Second ping-pong buffer for rolling (evaluation) forwards.
+    pub pp: Tensor,
+}
+
+impl ForwardWorkspace {
+    pub fn new(n_layers: usize, state_shape: &[usize], head_shape: &[usize]) -> ForwardWorkspace {
+        ForwardWorkspace {
+            states: (0..=n_layers).map(|_| Tensor::zeros(state_shape)).collect(),
+            head: Tensor::zeros(head_shape),
+            pp: Tensor::zeros(state_shape),
+        }
+    }
+
+    /// Stage the loss/inference head's input for workspace state `idx`:
+    /// stacked EncDec states copy their decoder half into the persistent
+    /// `head` buffer; flat states are handed to the head directly.
+    pub fn staged_head_view(&mut self, idx: usize, stacked: bool) -> &Tensor {
+        staged_head_view(&self.states, &mut self.head, idx, stacked)
+    }
+}
+
+/// Training-only step buffers: adjoints λ_0..λ_N and every gradient
+/// accumulator plus the loss-head side. Sized once at session build,
+/// reused every batch. The forward-side buffers live in the session's
+/// [`ForwardWorkspace`] — an `InferSession` never allocates any of this.
+pub struct StepWorkspace {
     /// Fine-grid adjoints λ_0..λ_N, state-shaped.
     pub lams: Vec<Tensor>,
     /// Per-layer parameter gradient accumulators (θ-shaped). Zeroed once
@@ -69,16 +120,11 @@ pub struct StepWorkspace {
     pub g_out: Vec<f32>,
     /// Classifier-head gradient accumulator.
     pub g_cls: Vec<f32>,
-    /// Head-side activation buffer [B,S,D] (the decoder half of the
-    /// stacked EncDec state; unused for flat-state architectures).
-    pub head: Tensor,
     /// Loss-head cotangent buffer [B,S,D] (filled by
     /// [`crate::coordinator::Objective::loss_into`], then lifted into λ_N).
     pub lam_head: Tensor,
     /// Reusable loss-head numeric scratch (logits / pooled rows).
     pub loss_scratch: LossScratch,
-    /// Second ping-pong buffer for rolling (evaluation) forwards.
-    pub pp: Tensor,
     /// Second gradient-accumulator set for dp > 1 micro-batch summation
     /// (see [`StepWorkspace::stash_grads`]); lazily allocated on the first
     /// multi-micro-batch step so dp = 1 never pays for it.
@@ -95,7 +141,7 @@ pub(crate) struct GradScratch {
 }
 
 impl StepWorkspace {
-    /// Allocate all buffers up front. `head_sizes` is
+    /// Allocate all adjoint-side buffers up front. `head_sizes` is
     /// `[w_emb, w_pos, w_out, w_cls]` flat lengths.
     pub fn new(
         n_layers: usize,
@@ -106,41 +152,16 @@ impl StepWorkspace {
     ) -> StepWorkspace {
         assert_eq!(theta_lens.len(), n_layers, "need one θ length per layer");
         StepWorkspace {
-            states: (0..=n_layers).map(|_| Tensor::zeros(state_shape)).collect(),
             lams: (0..=n_layers).map(|_| Tensor::zeros(state_shape)).collect(),
             grads: theta_lens.iter().map(|&t| vec![0.0f32; t]).collect(),
             g_emb: vec![0.0f32; head_sizes[0]],
             g_pos: vec![0.0f32; head_sizes[1]],
             g_out: vec![0.0f32; head_sizes[2]],
             g_cls: vec![0.0f32; head_sizes[3]],
-            head: Tensor::zeros(head_shape),
             lam_head: Tensor::zeros(head_shape),
             loss_scratch: LossScratch::default(),
-            pp: Tensor::zeros(state_shape),
             dp_scratch: None,
         }
-    }
-
-    /// Split-borrow the loss head's input and output buffers: the final
-    /// activation view for workspace state `idx` (stacked EncDec states
-    /// copy their decoder half into the persistent `head` buffer) plus a
-    /// [`LossSink`] over the cotangent buffer, head-gradient accumulators,
-    /// and numeric scratch — disjoint fields, so the objective can read
-    /// x_final while writing the sink, with zero allocations.
-    pub fn head_view_and_sink(&mut self, idx: usize, stacked: bool) -> (&Tensor, LossSink<'_>) {
-        let StepWorkspace {
-            states, head, lam_head, g_emb, g_pos, g_out, g_cls, loss_scratch, ..
-        } = self;
-        let x_final = staged_head_view(states, head, idx, stacked);
-        let sink = LossSink {
-            lam_head,
-            g_emb,
-            g_pos,
-            g_out,
-            g_cls,
-            scratch: loss_scratch,
-        };
-        (x_final, sink)
     }
 
     /// Global-norm gradient clipping over every accumulator, without
@@ -271,8 +292,8 @@ impl StepWorkspace {
 /// states copy their decoder half into the persistent `head` buffer; flat
 /// states are handed to the head directly. The one place the decoder-half
 /// split lives — shared by the training path
-/// ([`StepWorkspace::head_view_and_sink`]) and the session's evaluation
-/// sweep, so the two cannot drift.
+/// ([`SolveContext::head_view_and_sink`]), the session's evaluation sweep,
+/// and the inference head dispatch, so none of them can drift.
 pub(crate) fn staged_head_view<'a>(
     states: &'a [Tensor],
     head: &'a mut Tensor,
@@ -299,11 +320,70 @@ struct CachedCore {
     core: MgritCore,
 }
 
-/// Persistent solve state of one `Session` (see module docs).
-pub struct SolveContext {
+/// Fetch (or build) the cached core for one direction. Allocation-free on
+/// a cache hit; a miss builds storage for the new key.
+fn core_for<'a>(
+    slot: &'a mut Option<CachedCore>,
+    builds: &mut u64,
+    n: usize,
+    cfg: &MgritConfig,
+    workers: usize,
+    shape: &[usize],
+) -> &'a mut MgritCore {
+    let hit = matches!(
+        slot,
+        Some(c) if c.n == n
+            && c.cf == cfg.cf
+            && c.levels == cfg.levels
+            && c.fcf == cfg.fcf
+            && c.workers == workers
+            && c.shape[..] == *shape
+            // a panicked threaded sweep leaves the core with taken-out
+            // level storage; rebuild instead of reusing it gutted
+            && c.core.is_intact()
+    );
+    if !hit {
+        let proto = Tensor::zeros(shape);
+        let core = MgritCore::new(n, cfg.cf, cfg.levels, cfg.fcf, &proto).with_workers(workers);
+        *slot = Some(CachedCore {
+            n,
+            cf: cfg.cf,
+            levels: cfg.levels,
+            fcf: cfg.fcf,
+            workers,
+            shape: shape.to_vec(),
+            core,
+        });
+        *builds += 1;
+    }
+    &mut slot.as_mut().unwrap().core
+}
+
+/// Per-solve backend re-consultation, single-sourced for every entry
+/// point: fetch (or build) the cached core for one direction and re-attach
+/// the backend's *current* pool (a pool poisoned by a panicked sweep is
+/// rebuilt by the backend; the cached hierarchy must pick the replacement
+/// up, not pin the dead one).
+fn configured_core<'a>(
+    backend: &dyn Backend,
+    slot: &'a mut Option<CachedCore>,
+    builds: &mut u64,
+    n: usize,
+    cfg: &MgritConfig,
+    shape: &[usize],
+) -> &'a mut MgritCore {
+    let core = core_for(slot, builds, n, cfg, backend.workers(), shape);
+    core.set_pool(backend.pool());
+    core
+}
+
+/// The shared train/infer **forward core** (see module docs): backend
+/// strategy + cached forward hierarchy + warm-start flag + forward
+/// workspace. A training [`SolveContext`] wraps one; an
+/// [`crate::infer::InferSession`] owns one directly.
+pub struct ForwardContext {
     backend: Box<dyn Backend>,
     fwd: Option<CachedCore>,
-    adj: Option<CachedCore>,
     /// Warm-start validity for the MGRIT forward solve (TorchBraid-style).
     /// The iterate itself is not stored separately: after every V-cycle
     /// solve `ws.states[bo..=bo+n]` *is* the converged mid-range iterate,
@@ -313,17 +393,17 @@ pub struct SolveContext {
     /// copy. The flag is dropped the moment a solve runs serial (the
     /// §3.2.3 switch leaves a stale trajectory).
     warm_valid: bool,
-    /// Fine-grid step buffers (public: the session's serial buffer-layer
-    /// sweeps and loss head operate on them directly).
-    pub ws: StepWorkspace,
+    /// Forward fine-grid buffers (public: buffer-layer sweeps, embedding
+    /// and the heads operate on them directly).
+    pub ws: ForwardWorkspace,
     core_builds: u64,
 }
 
-impl SolveContext {
-    /// Wrap a backend and a pre-sized workspace into a context. Cores are
-    /// built lazily on the first solve per direction.
-    pub fn new(backend: Box<dyn Backend>, ws: StepWorkspace) -> SolveContext {
-        SolveContext { backend, fwd: None, adj: None, warm_valid: false, ws, core_builds: 0 }
+impl ForwardContext {
+    /// Wrap a backend and a pre-sized forward workspace. The core is built
+    /// lazily on the first V-cycle solve.
+    pub fn new(backend: Box<dyn Backend>, ws: ForwardWorkspace) -> ForwardContext {
+        ForwardContext { backend, fwd: None, warm_valid: false, ws, core_builds: 0 }
     }
 
     /// The execution strategy this context solves with.
@@ -331,9 +411,7 @@ impl SolveContext {
         self.backend.as_ref()
     }
 
-    /// How many `MgritCore` hierarchies this context has built — the
-    /// cache-validity acceptance counter: exactly one per direction per
-    /// session unless cf/levels/fcf (or the grid size) change mid-run.
+    /// How many forward `MgritCore` hierarchies this context has built.
     pub fn core_builds(&self) -> u64 {
         self.core_builds
     }
@@ -349,71 +427,15 @@ impl SolveContext {
         self.warm_valid = false;
     }
 
-    /// Drop the cached hierarchies: the next solve per direction rebuilds
-    /// from scratch. The explicit-rebuild hook for callers that mutate
-    /// solver geometry out-of-band (also what the "fresh ctx" benchmark
-    /// row exercises).
+    /// Declare the workspace's current mid-range contents a valid warm
+    /// iterate (checkpoint restore: the saved iterate was just copied in).
+    pub fn mark_warm(&mut self) {
+        self.warm_valid = true;
+    }
+
+    /// Drop the cached hierarchy: the next V-cycle solve rebuilds it.
     pub fn invalidate(&mut self) {
         self.fwd = None;
-        self.adj = None;
-    }
-
-    /// Fetch (or build) the cached core for one direction. Allocation-free
-    /// on a cache hit; a miss builds storage for the new key.
-    fn core_for<'a>(
-        slot: &'a mut Option<CachedCore>,
-        builds: &mut u64,
-        n: usize,
-        cfg: &MgritConfig,
-        workers: usize,
-        shape: &[usize],
-    ) -> &'a mut MgritCore {
-        let hit = matches!(
-            slot,
-            Some(c) if c.n == n
-                && c.cf == cfg.cf
-                && c.levels == cfg.levels
-                && c.fcf == cfg.fcf
-                && c.workers == workers
-                && c.shape[..] == *shape
-                // a panicked threaded sweep leaves the core with taken-out
-                // level storage; rebuild instead of reusing it gutted
-                && c.core.is_intact()
-        );
-        if !hit {
-            let proto = Tensor::zeros(shape);
-            let core =
-                MgritCore::new(n, cfg.cf, cfg.levels, cfg.fcf, &proto).with_workers(workers);
-            *slot = Some(CachedCore {
-                n,
-                cf: cfg.cf,
-                levels: cfg.levels,
-                fcf: cfg.fcf,
-                workers,
-                shape: shape.to_vec(),
-                core,
-            });
-            *builds += 1;
-        }
-        &mut slot.as_mut().unwrap().core
-    }
-
-    /// Per-solve backend re-consultation, single-sourced for every entry
-    /// point: fetch (or build) the cached core for one direction and
-    /// re-attach the backend's *current* pool (a pool poisoned by a
-    /// panicked sweep is rebuilt by the backend; the cached hierarchy must
-    /// pick the replacement up, not pin the dead one).
-    fn configured_core<'a>(
-        backend: &dyn Backend,
-        slot: &'a mut Option<CachedCore>,
-        builds: &mut u64,
-        n: usize,
-        cfg: &MgritConfig,
-        shape: &[usize],
-    ) -> &'a mut MgritCore {
-        let core = Self::core_for(slot, builds, n, cfg, backend.workers(), shape);
-        core.set_pool(backend.pool());
-        core
     }
 
     /// Forward solve over the mid (ParallelNet) range: reads Z_{bo} from
@@ -436,7 +458,7 @@ impl SolveContext {
         track_residuals: bool,
     ) -> SolveStats {
         let n = prop.n_steps();
-        let SolveContext { backend, fwd, warm_valid, ws, core_builds, .. } = self;
+        let ForwardContext { backend, fwd, warm_valid, ws, core_builds } = self;
         assert!(bo + n < ws.states.len(), "mid range outside the workspace");
         let mapped = backend.solve_iters(iters);
         if mapped.is_none() {
@@ -453,8 +475,7 @@ impl SolveContext {
                 serial: true,
             };
         }
-        let core =
-            Self::configured_core(&**backend, fwd, core_builds, n, cfg, ws.states[bo].shape());
+        let core = configured_core(&**backend, fwd, core_builds, n, cfg, ws.states[bo].shape());
         let solver = MgritSolver::new(prop, cfg.clone());
         // the previous solve's solution is still sitting in the workspace:
         // warm-start from it directly, no stored copy (the core snapshots
@@ -467,55 +488,36 @@ impl SolveContext {
         stats
     }
 
-    /// Adjoint solve over the mid range: reads the frozen states from
-    /// `ws.states[bo..=bo+n]` and the cotangent from `ws.lams[bo+n]`,
-    /// writes λ back into `ws.lams[bo..=bo+n]` in natural order. Serial
-    /// mode sweeps the transposed Jacobian in place (no hierarchy);
-    /// V-cycle mode runs on the cached core. Allocation-free at steady
-    /// state on every backend.
-    pub fn adjoint_mid(
+    /// Full forward pass over the whole stack, from the embedded Z_0
+    /// already sitting in `ws.states[0]`: serial open-buffer sweep →
+    /// mid-range solve ([`ForwardContext::forward_mid`] over a
+    /// [`RangeProp`] view) → serial close-buffer sweep. The one forward
+    /// path both the training micro-batch and batched inference run
+    /// through (Appendix B buffer handling included). `prop` is the
+    /// full-depth propagator; `(bo, n_mid)` from [`mid_range`].
+    #[allow(clippy::too_many_arguments)]
+    pub fn forward_full(
         &mut self,
         prop: &dyn Propagator,
         cfg: &MgritConfig,
         bo: usize,
+        n_mid: usize,
         iters: Option<usize>,
+        use_warm: bool,
         track_residuals: bool,
     ) -> SolveStats {
-        let n = prop.n_steps();
-        let SolveContext { backend, adj, ws, core_builds, .. } = self;
-        assert!(bo + n < ws.lams.len(), "mid range outside the workspace");
-        let mapped = backend.solve_iters(iters);
-        let StepWorkspace { states, lams, .. } = ws;
-        if mapped.is_none() {
-            // exact backward sweep over the frozen states, in place
-            let before = prop.counters().vjp();
-            for l in (0..n).rev() {
-                let (lam_lo, lam_hi) = lams.split_at_mut(bo + l + 1);
-                prop.adjoint_step_into(l, 1.0, &states[bo + l], &lam_hi[0], &mut lam_lo[bo + l]);
-            }
-            return SolveStats {
-                iterations: 0,
-                residuals: vec![],
-                phi_evals: prop.counters().vjp() - before,
-                serial: true,
-            };
+        let n_layers = prop.n_steps();
+        if bo > 0 {
+            // open buffers: serial, in place, one dispatch for the sweep
+            prop.step_seq_into(0, 1.0, &mut self.ws.states[..=bo]);
         }
-        let core =
-            Self::configured_core(&**backend, adj, core_builds, n, cfg, states[bo].shape());
-        let solver = MgritSolver::new(prop, cfg.clone());
-        let stats =
-            solver.adjoint_with(core, &states[bo..=bo + n], &lams[bo + n], mapped, track_residuals);
-        core.solution_rev_into(&mut lams[bo..=bo + n]);
+        let mid = RangeProp::new(prop, bo, n_mid);
+        let stats = self.forward_mid(&mid, cfg, bo, iters, use_warm, track_residuals);
+        if bo + n_mid < n_layers {
+            // close buffers: serial, in place, one dispatch for the sweep
+            prop.step_seq_into(bo + n_mid, 1.0, &mut self.ws.states[bo + n_mid..]);
+        }
         stats
-    }
-
-    /// Accumulate the mid-range per-layer parameter gradients from the
-    /// workspace states/adjoints into `ws.grads[bo..bo+n]` (added, not
-    /// overwritten — zero once per optimizer step). The loop itself is
-    /// [`accumulate_layer_grads`], shared with `MgritSolver`.
-    pub fn gradients_mid(&mut self, prop: &dyn Propagator, bo: usize) {
-        let StepWorkspace { states, lams, grads, .. } = &mut self.ws;
-        accumulate_layer_grads(prop, states, lams, grads, bo);
     }
 
     /// Standalone forward solve on the cached hierarchy (the serving-style
@@ -536,12 +538,167 @@ impl SolveContext {
             // one-shot solver (transient storage, freed on return)
             return MgritSolver::new(prop, cfg.clone()).forward(z0, None, warm, track_residuals);
         }
-        let SolveContext { backend, fwd, core_builds, .. } = self;
+        let ForwardContext { backend, fwd, core_builds, .. } = self;
         let core =
-            Self::configured_core(&**backend, fwd, core_builds, prop.n_steps(), cfg, z0.shape());
+            configured_core(&**backend, fwd, core_builds, prop.n_steps(), cfg, z0.shape());
         let solver = MgritSolver::new(prop, cfg.clone());
         let stats = solver.forward_with(core, z0, mapped, warm, track_residuals);
         (core.solution().to_vec(), stats)
+    }
+}
+
+/// Persistent solve state of one training `Session`: the shared forward
+/// core plus the cached adjoint hierarchy and the training-only step
+/// buffers (see module docs).
+pub struct SolveContext {
+    /// The shared train/infer forward core.
+    pub fwd: ForwardContext,
+    adj: Option<CachedCore>,
+    adj_builds: u64,
+    /// Training-only step buffers (public: the session's adjoint sweeps,
+    /// λ-seeding and optimizer updates operate on them directly).
+    pub ws: StepWorkspace,
+}
+
+impl SolveContext {
+    /// Wrap a backend and pre-sized workspaces into a context. Cores are
+    /// built lazily on the first solve per direction.
+    pub fn new(
+        backend: Box<dyn Backend>,
+        fwd_ws: ForwardWorkspace,
+        ws: StepWorkspace,
+    ) -> SolveContext {
+        SolveContext {
+            fwd: ForwardContext::new(backend, fwd_ws),
+            adj: None,
+            adj_builds: 0,
+            ws,
+        }
+    }
+
+    /// The execution strategy this context solves with.
+    pub fn backend(&self) -> &dyn Backend {
+        self.fwd.backend()
+    }
+
+    /// How many `MgritCore` hierarchies this context has built — the
+    /// cache-validity acceptance counter: exactly one per direction per
+    /// session unless cf/levels/fcf (or the grid size) change mid-run.
+    pub fn core_builds(&self) -> u64 {
+        self.fwd.core_builds() + self.adj_builds
+    }
+
+    /// Is a warm-start iterate currently valid in the workspace?
+    pub fn has_warm(&self) -> bool {
+        self.fwd.has_warm()
+    }
+
+    /// Drop the warm-start iterate (stale after a serial switch).
+    pub fn clear_warm(&mut self) {
+        self.fwd.clear_warm();
+    }
+
+    /// Drop the cached hierarchies: the next solve per direction rebuilds
+    /// from scratch. The explicit-rebuild hook for callers that mutate
+    /// solver geometry out-of-band (also what the "fresh ctx" benchmark
+    /// row exercises).
+    pub fn invalidate(&mut self) {
+        self.fwd.invalidate();
+        self.adj = None;
+    }
+
+    /// Split-borrow the loss head's input and output buffers: the final
+    /// activation view for forward-workspace state `idx` (stacked EncDec
+    /// states copy their decoder half into the persistent `head` buffer)
+    /// plus a [`LossSink`] over the cotangent buffer, head-gradient
+    /// accumulators, and numeric scratch — disjoint fields, so the
+    /// objective can read x_final while writing the sink, with zero
+    /// allocations.
+    pub fn head_view_and_sink(&mut self, idx: usize, stacked: bool) -> (&Tensor, LossSink<'_>) {
+        let SolveContext { fwd, ws, .. } = self;
+        let x_final = staged_head_view(&fwd.ws.states, &mut fwd.ws.head, idx, stacked);
+        let StepWorkspace { lam_head, g_emb, g_pos, g_out, g_cls, loss_scratch, .. } = ws;
+        let sink = LossSink { lam_head, g_emb, g_pos, g_out, g_cls, scratch: loss_scratch };
+        (x_final, sink)
+    }
+
+    /// Forward solve over the mid range on the shared forward core (see
+    /// [`ForwardContext::forward_mid`]).
+    pub fn forward_mid(
+        &mut self,
+        prop: &dyn Propagator,
+        cfg: &MgritConfig,
+        bo: usize,
+        iters: Option<usize>,
+        use_warm: bool,
+        track_residuals: bool,
+    ) -> SolveStats {
+        self.fwd.forward_mid(prop, cfg, bo, iters, use_warm, track_residuals)
+    }
+
+    /// Adjoint solve over the mid range: reads the frozen states from the
+    /// forward workspace `fwd.ws.states[bo..=bo+n]` and the cotangent from
+    /// `ws.lams[bo+n]`, writes λ back into `ws.lams[bo..=bo+n]` in natural
+    /// order. Serial mode sweeps the transposed Jacobian in place (no
+    /// hierarchy); V-cycle mode runs on the cached core. Allocation-free
+    /// at steady state on every backend.
+    pub fn adjoint_mid(
+        &mut self,
+        prop: &dyn Propagator,
+        cfg: &MgritConfig,
+        bo: usize,
+        iters: Option<usize>,
+        track_residuals: bool,
+    ) -> SolveStats {
+        let n = prop.n_steps();
+        let SolveContext { fwd, adj, adj_builds, ws } = self;
+        let states = &fwd.ws.states;
+        let lams = &mut ws.lams;
+        assert!(bo + n < lams.len(), "mid range outside the workspace");
+        let mapped = fwd.backend.solve_iters(iters);
+        if mapped.is_none() {
+            // exact backward sweep over the frozen states, in place
+            let before = prop.counters().vjp();
+            for l in (0..n).rev() {
+                let (lam_lo, lam_hi) = lams.split_at_mut(bo + l + 1);
+                prop.adjoint_step_into(l, 1.0, &states[bo + l], &lam_hi[0], &mut lam_lo[bo + l]);
+            }
+            return SolveStats {
+                iterations: 0,
+                residuals: vec![],
+                phi_evals: prop.counters().vjp() - before,
+                serial: true,
+            };
+        }
+        let core = configured_core(&*fwd.backend, adj, adj_builds, n, cfg, states[bo].shape());
+        let solver = MgritSolver::new(prop, cfg.clone());
+        let stats =
+            solver.adjoint_with(core, &states[bo..=bo + n], &lams[bo + n], mapped, track_residuals);
+        core.solution_rev_into(&mut lams[bo..=bo + n]);
+        stats
+    }
+
+    /// Accumulate the mid-range per-layer parameter gradients from the
+    /// workspace states/adjoints into `ws.grads[bo..bo+n]` (added, not
+    /// overwritten — zero once per optimizer step). The loop itself is
+    /// [`accumulate_layer_grads`], shared with `MgritSolver`.
+    pub fn gradients_mid(&mut self, prop: &dyn Propagator, bo: usize) {
+        let SolveContext { fwd, ws, .. } = self;
+        accumulate_layer_grads(prop, &fwd.ws.states, &ws.lams, &mut ws.grads, bo);
+    }
+
+    /// Standalone forward solve on the cached hierarchy (see
+    /// [`ForwardContext::forward`]).
+    pub fn forward(
+        &mut self,
+        prop: &dyn Propagator,
+        cfg: &MgritConfig,
+        z0: &Tensor,
+        iters: Option<usize>,
+        warm: Option<&[Tensor]>,
+        track_residuals: bool,
+    ) -> (Vec<Tensor>, SolveStats) {
+        self.fwd.forward(prop, cfg, z0, iters, warm, track_residuals)
     }
 
     /// Standalone adjoint solve on the cached hierarchy; returns λ_0..λ_N
@@ -556,12 +713,12 @@ impl SolveContext {
         track_residuals: bool,
     ) -> (Vec<Tensor>, SolveStats) {
         let n = prop.n_steps();
-        let mapped = self.backend.solve_iters(iters);
+        let mapped = self.fwd.backend.solve_iters(iters);
         if mapped.is_none() {
             return MgritSolver::new(prop, cfg.clone()).adjoint(states, ct, None, track_residuals);
         }
-        let SolveContext { backend, adj, core_builds, .. } = self;
-        let core = Self::configured_core(&**backend, adj, core_builds, n, cfg, ct.shape());
+        let SolveContext { fwd, adj, adj_builds, .. } = self;
+        let core = configured_core(&*fwd.backend, adj, adj_builds, n, cfg, ct.shape());
         let solver = MgritSolver::new(prop, cfg.clone());
         let stats = solver.adjoint_with(core, states, ct, mapped, track_residuals);
         let sol = core.solution();
@@ -595,8 +752,12 @@ mod tests {
         MgritConfig { cf, levels, fwd_iters: Some(2), bwd_iters: Some(1), fcf: true }
     }
 
-    fn tiny_ws(n: usize, shape: &[usize]) -> StepWorkspace {
-        StepWorkspace::new(n, shape, shape, &vec![0usize; n], [0, 0, 0, 0])
+    fn tiny_ctx(backend: Box<dyn Backend>, n: usize, shape: &[usize]) -> SolveContext {
+        SolveContext::new(
+            backend,
+            ForwardWorkspace::new(n, shape, shape),
+            StepWorkspace::new(n, shape, shape, &vec![0usize; n], [0, 0, 0, 0]),
+        )
     }
 
     #[test]
@@ -605,7 +766,7 @@ mod tests {
         let ode = LinearOde::random_stable(&mut rng, 4, 16, 0.1);
         let z0 = Tensor::randn(&mut rng, &[4, 1], 1.0);
         let ct = Tensor::randn(&mut rng, &[4, 1], 1.0);
-        let mut ctx = SolveContext::new(Box::new(Mgrit), tiny_ws(16, &[4, 1]));
+        let mut ctx = tiny_ctx(Box::new(Mgrit), 16, &[4, 1]);
         assert_eq!(ctx.core_builds(), 0, "cores are lazy");
         let (w, _) = ctx.forward(&ode, &cfg(4, 2), &z0, Some(3), None, false);
         let (l, _) = ctx.adjoint(&ode, &cfg(4, 2), &w, &ct, Some(2), false);
@@ -650,7 +811,7 @@ mod tests {
             } else {
                 Box::new(Mgrit)
             };
-            let mut ctx = SolveContext::new(backend, tiny_ws(32, &[5, 1]));
+            let mut ctx = tiny_ctx(backend, 32, &[5, 1]);
             for round in 0..3 {
                 let (wc, _) = ctx.forward(&ode, &cfg(4, 2), &z0, Some(3), None, false);
                 let (lc, _) = ctx.adjoint(&ode, &cfg(4, 2), &wc, &ct, Some(2), false);
@@ -674,8 +835,8 @@ mod tests {
         let ode = LinearOde::random_stable(&mut rng, 4, n, 0.1);
         let z0 = Tensor::randn(&mut rng, &[4, 1], 1.0);
         let ct = Tensor::randn(&mut rng, &[4, 1], 1.0);
-        let mut ctx = SolveContext::new(Box::new(Mgrit), tiny_ws(n, &[4, 1]));
-        ctx.ws.states[0].copy_from(&z0);
+        let mut ctx = tiny_ctx(Box::new(Mgrit), n, &[4, 1]);
+        ctx.fwd.ws.states[0].copy_from(&z0);
         let c = cfg(4, 2);
         let stats = ctx.forward_mid(&ode, &c, 0, Some(3), true, false);
         assert!(!stats.serial);
@@ -686,7 +847,7 @@ mod tests {
         // so compare against a cold context run, i.e. the first call)
         let solver = MgritSolver::new(&ode, c.clone());
         let (wf, _) = solver.forward(&z0, Some(3), None, false);
-        for (a, b) in ctx.ws.states.iter().zip(&wf) {
+        for (a, b) in ctx.fwd.ws.states.iter().zip(&wf) {
             assert_eq!(a.data(), b.data(), "ws forward must match the one-shot solver");
         }
         let (lf, _) = solver.adjoint(&wf, &ct, Some(2), false);
@@ -697,6 +858,43 @@ mod tests {
         let stats = ctx.forward_mid(&ode, &c, 0, None, true, false);
         assert!(stats.serial);
         assert!(!ctx.has_warm(), "serial switch must drop the stale iterate");
+        // mark_warm (checkpoint restore) re-arms it
+        ctx.fwd.mark_warm();
+        assert!(ctx.has_warm());
+    }
+
+    #[test]
+    fn forward_full_matches_manual_buffer_plus_mid_composition() {
+        // forward_full must equal (serial open sweep, mid solve, serial
+        // close sweep) composed by hand — the pre-split session behavior
+        let mut rng = Rng::new(7);
+        let n = 12;
+        let (bo, bc) = (2usize, 2usize);
+        let n_mid = n - bo - bc;
+        let ode = LinearOde::random_stable(&mut rng, 4, n, 0.1);
+        let z0 = Tensor::randn(&mut rng, &[4, 1], 1.0);
+        let c = cfg(2, 2);
+        for iters in [Some(2), None] {
+            let mut ctx = ForwardContext::new(
+                Box::new(Mgrit),
+                ForwardWorkspace::new(n, &[4, 1], &[4, 1]),
+            );
+            ctx.ws.states[0].copy_from(&z0);
+            ctx.forward_full(&ode, &c, bo, n_mid, iters, false, false);
+            // manual composition on a second context
+            let mut manual = ForwardContext::new(
+                Box::new(Mgrit),
+                ForwardWorkspace::new(n, &[4, 1], &[4, 1]),
+            );
+            manual.ws.states[0].copy_from(&z0);
+            ode.step_seq_into(0, 1.0, &mut manual.ws.states[..=bo]);
+            let mid = RangeProp::new(&ode, bo, n_mid);
+            manual.forward_mid(&mid, &c, bo, iters, false, false);
+            ode.step_seq_into(bo + n_mid, 1.0, &mut manual.ws.states[bo + n_mid..]);
+            for (i, (a, b)) in ctx.ws.states.iter().zip(&manual.ws.states).enumerate() {
+                assert_eq!(a.data(), b.data(), "state {} (iters {:?})", i, iters);
+            }
+        }
     }
 
     #[test]
@@ -704,7 +902,7 @@ mod tests {
         let mut rng = Rng::new(3);
         let ode = LinearOde::random_stable(&mut rng, 4, 16, 0.1);
         let z0 = Tensor::randn(&mut rng, &[4, 1], 1.0);
-        let mut ctx = SolveContext::new(Box::new(Serial), tiny_ws(16, &[4, 1]));
+        let mut ctx = tiny_ctx(Box::new(Serial), 16, &[4, 1]);
         let (w, stats) = ctx.forward(&ode, &cfg(4, 2), &z0, Some(8), None, false);
         assert!(stats.serial, "Serial backend maps every budget to an exact solve");
         let traj = ode.serial_trajectory(&z0);
@@ -806,7 +1004,7 @@ mod tests {
         let mut rng = Rng::new(9);
         let ode = LinearOde::random_stable(&mut rng, 4, 32, 0.05);
         let z0 = Tensor::randn(&mut rng, &[4, 1], 1.0);
-        let mut ctx = SolveContext::new(Box::new(ThreadedMgrit::new(2)), tiny_ws(32, &[4, 1]));
+        let mut ctx = tiny_ctx(Box::new(ThreadedMgrit::new(2)), 32, &[4, 1]);
         let prop = PanicOnce { inner: &ode, armed: AtomicBool::new(true) };
         let r = catch_unwind(AssertUnwindSafe(|| {
             ctx.forward(&prop, &cfg(4, 2), &z0, Some(3), None, false)
@@ -833,7 +1031,7 @@ mod tests {
         let mut rng = Rng::new(4);
         let ode = LinearOde::random_stable(&mut rng, 4, 16, 0.1);
         let z0 = Tensor::randn(&mut rng, &[4, 1], 1.0);
-        let mut ctx = SolveContext::new(Box::new(Mgrit), tiny_ws(16, &[4, 1]));
+        let mut ctx = tiny_ctx(Box::new(Mgrit), 16, &[4, 1]);
         let (w1, _) = ctx.forward(&ode, &cfg(4, 2), &z0, Some(3), None, false);
         ctx.invalidate();
         let (w2, _) = ctx.forward(&ode, &cfg(4, 2), &z0, Some(3), None, false);

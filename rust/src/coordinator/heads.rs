@@ -4,7 +4,7 @@
 //! masking and pooling semantics); validated against finite differences
 //! here and against the XLA entry points in the runtime integration tests.
 
-use crate::tensor::Tensor;
+use crate::tensor::{mm_into, Tensor};
 
 /// x[b,s,:] = w_emb[token] + w_pos[s].
 pub fn embed_fwd(
@@ -42,6 +42,34 @@ pub fn embed_into(
             for i in 0..d {
                 out[i] = emb[i] + pos[i];
             }
+        }
+    }
+}
+
+/// Embed a batch straight into a propagator-state-shaped slice: the flat
+/// `[B·S·D]` layout for encoder/decoder states, or both halves of the
+/// stacked `[2·B·S·D]` EncDec state when a decoder input is present. The
+/// single embedding entry point of the shared train/infer forward core —
+/// `Session::micro_batch`, evaluation, and `InferSession` all route
+/// through it, so the state layout cannot drift between them.
+#[allow(clippy::too_many_arguments)]
+pub fn embed_state_into(
+    tokens: &[i32],
+    tgt_in: Option<&[i32]>,
+    w_emb: &[f32],
+    w_pos: &[f32],
+    batch: usize,
+    seq: usize,
+    d: usize,
+    dst: &mut [f32],
+) {
+    match tgt_in {
+        None => embed_into(tokens, w_emb, w_pos, batch, seq, d, dst),
+        Some(t) => {
+            let half = dst.len() / 2;
+            let (x, y) = dst.split_at_mut(half);
+            embed_into(tokens, w_emb, w_pos, batch, seq, d, x);
+            embed_into(t, w_emb, w_pos, batch, seq, d, y);
         }
     }
 }
@@ -288,6 +316,75 @@ pub fn tag_loss_into(
     lm_loss_into(x, w_cls, labels, None, n_classes, lam, gw, logits)
 }
 
+// ---------------------------------------------------------------------------
+// Logits-only inference entry points. The loss heads above compute loss +
+// cotangent + head gradients in one pass; serving needs none of that — these
+// kernels produce raw logits into caller-owned scratch (fully overwritten,
+// zero allocations once the buffers are sized), and the `infer` module does
+// selection (argmax / top-k sampling) on top.
+// ---------------------------------------------------------------------------
+
+/// LM-head logits at one sequence position for every batch row:
+/// `out[b·V .. (b+1)·V] = x[b, pos, :] @ w_out`. The autoregressive-decode
+/// kernel — each decode step needs exactly one position's logits, so the
+/// O(B·S·V) full-grid projection is skipped. Projection runs on the
+/// blocked [`mm_into`] kernel (one row per batch element — the rows are
+/// not contiguous in x, so this is B single-row matmuls).
+pub fn lm_infer_into(x: &Tensor, w_out: &[f32], pos: usize, vocab: usize, out: &mut [f32]) {
+    let (batch, seq, d) = (x.shape()[0], x.shape()[1], x.shape()[2]);
+    assert!(pos < seq, "lm_infer_into: position {} outside seq {}", pos, seq);
+    assert_eq!(out.len(), batch * vocab, "lm_infer_into: logits buffer size mismatch");
+    let xd = x.data();
+    for b in 0..batch {
+        let xr = &xd[(b * seq + pos) * d..(b * seq + pos + 1) * d];
+        mm_into(xr, w_out, 1, d, vocab, &mut out[b * vocab..(b + 1) * vocab], false);
+    }
+}
+
+/// Per-token logits for every row: `out[r·C .. (r+1)·C] = x[r, :] @ w`
+/// over all `B·S` rows — batched tagging prediction (w = w_cls) and
+/// masked-LM / teacher-forced prediction (w = w_out, C = vocab). One
+/// blocked [`mm_into`] over the whole grid.
+pub fn tag_infer_into(x: &Tensor, w: &[f32], n_classes: usize, out: &mut [f32]) {
+    let d = x.shape()[2];
+    let rows = x.len() / d;
+    assert_eq!(w.len(), d * n_classes, "tag_infer_into: head size mismatch");
+    assert_eq!(out.len(), rows * n_classes, "tag_infer_into: logits buffer size mismatch");
+    mm_into(x.data(), w, rows, d, n_classes, out, false);
+}
+
+/// Batched classification logits: mean-pool each sequence then project —
+/// `out[b·C .. (b+1)·C] = mean_s(x[b, s, :]) @ w_cls`. Identical pooling
+/// arithmetic to [`cls_loss_into`], so predictions match training
+/// accuracy accounting bitwise; the projection is one blocked
+/// [`mm_into`] over the pooled `[B, D]` grid. `pooled` is reusable
+/// `[B·D]` scratch.
+pub fn cls_infer_into(
+    x: &Tensor,
+    w_cls: &[f32],
+    n_classes: usize,
+    pooled: &mut Vec<f32>,
+    out: &mut [f32],
+) {
+    let (batch, seq, d) = (x.shape()[0], x.shape()[1], x.shape()[2]);
+    assert_eq!(w_cls.len(), d * n_classes, "cls_infer_into: head size mismatch");
+    assert_eq!(out.len(), batch * n_classes, "cls_infer_into: logits buffer size mismatch");
+    let xd = x.data();
+    pooled.clear();
+    pooled.resize(batch * d, 0.0);
+    for b in 0..batch {
+        let row = &mut pooled[b * d..(b + 1) * d];
+        for s in 0..seq {
+            let xr = &xd[(b * seq + s) * d..(b * seq + s + 1) * d];
+            for i in 0..d {
+                row[i] += xr[i];
+            }
+        }
+        row.iter_mut().for_each(|v| *v /= seq as f32);
+    }
+    mm_into(pooled, w_cls, batch, d, n_classes, out, false);
+}
+
 /// Argmax predictions of the LM head (greedy, teacher-forced) — feeds BLEU.
 pub fn argmax_tokens(x: &Tensor, w_out: &[f32], vocab: usize) -> Vec<i32> {
     let d = x.shape()[2];
@@ -457,6 +554,76 @@ mod tests {
         assert_eq!((l0, c0), (l1, c1));
         assert_eq!(lam0.data(), lam.data());
         assert_eq!(gw0, gw);
+    }
+
+    #[test]
+    fn embed_state_into_matches_flat_and_stacked_layouts() {
+        let (b, s, d, v) = (2, 3, 4, 8);
+        let mut rng = Rng::new(21);
+        let we = rng.normal_vec(v * d, 1.0);
+        let wp = rng.normal_vec(s * d, 1.0);
+        let toks = vec![1, 2, 3, 4, 5, 6];
+        let tgt = vec![6, 5, 4, 3, 2, 1];
+        // flat == embed_fwd
+        let mut flat = vec![9.0f32; b * s * d];
+        embed_state_into(&toks, None, &we, &wp, b, s, d, &mut flat);
+        assert_eq!(flat, embed_fwd(&toks, &we, &wp, b, s, d).into_vec());
+        // stacked = [embed(src), embed(tgt)]
+        let mut stacked = vec![9.0f32; 2 * b * s * d];
+        embed_state_into(&toks, Some(&tgt), &we, &wp, b, s, d, &mut stacked);
+        assert_eq!(&stacked[..b * s * d], &flat[..]);
+        assert_eq!(&stacked[b * s * d..], &embed_fwd(&tgt, &we, &wp, b, s, d).into_vec()[..]);
+    }
+
+    #[test]
+    fn infer_kernels_agree_with_the_loss_heads() {
+        let (b, s, d, v) = (2, 3, 4, 5);
+        let mut rng = Rng::new(33);
+        let x = Tensor::randn(&mut rng, &[b, s, d], 0.7);
+        let w = rng.normal_vec(d * v, 0.4);
+        // per-row logits (tag_infer_into) argmax == argmax_tokens
+        let mut lg = vec![7.0f32; b * s * v];
+        tag_infer_into(&x, &w, v, &mut lg);
+        let preds: Vec<i32> = (0..b * s)
+            .map(|r| {
+                (0..v)
+                    .max_by(|&i, &j| lg[r * v + i].partial_cmp(&lg[r * v + j]).unwrap())
+                    .unwrap() as i32
+            })
+            .collect();
+        assert_eq!(preds, argmax_tokens(&x, &w, v));
+        // per-position logits (lm_infer_into) agree row-by-row with the
+        // full per-token grid
+        let mut pos_lg = vec![0.0f32; b * v];
+        for pos in 0..s {
+            lm_infer_into(&x, &w, pos, v, &mut pos_lg);
+            for bi in 0..b {
+                assert_eq!(
+                    &pos_lg[bi * v..(bi + 1) * v],
+                    &lg[(bi * s + pos) * v..(bi * s + pos + 1) * v],
+                    "pos {} row {}",
+                    pos,
+                    bi
+                );
+            }
+        }
+        // classification logits argmax == cls_loss's accuracy accounting
+        let c = 3;
+        let wc = &w[..d * c];
+        let labels = vec![1, 2];
+        let (_, correct, _, _) = cls_loss(&x, wc, &labels, c);
+        let mut pooled = Vec::new();
+        let mut clg = vec![0.0f32; b * c];
+        cls_infer_into(&x, wc, c, &mut pooled, &mut clg);
+        let agree: f32 = (0..b)
+            .map(|bi| {
+                let am = (0..c)
+                    .max_by(|&i, &j| clg[bi * c + i].partial_cmp(&clg[bi * c + j]).unwrap())
+                    .unwrap();
+                (am as i32 == labels[bi]) as u8 as f32
+            })
+            .sum();
+        assert_eq!(agree, correct);
     }
 
     #[test]

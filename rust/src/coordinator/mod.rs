@@ -10,11 +10,15 @@
 //! * [`backend`] — [`Backend`]: execution strategy of the forward/adjoint
 //!   solves (`Serial` / `Mgrit` / `ThreadedMgrit`, the last driving
 //!   multi-worker relaxation through `parallel::exec` on the hot loop).
-//! * [`context`] — [`SolveContext`] + [`StepWorkspace`]: the persistent
-//!   per-session solve state — cached forward/adjoint MGRIT hierarchies,
-//!   the warm-start iterate, and the reusable fine-grid step buffers. The
-//!   session creates one context from its backend and every solve of the
-//!   run replays on it (no `MgritCore` construction at steady state).
+//! * [`context`] — the persistent solve state, layered for the train/infer
+//!   split: [`ForwardContext`] + [`ForwardWorkspace`] are the shared
+//!   **forward core** (backend strategy, cached forward MGRIT hierarchy,
+//!   warm-start iterate, fine-grid states) that batched inference
+//!   ([`crate::infer::InferSession`]) reuses verbatim; [`SolveContext`] +
+//!   [`StepWorkspace`] add the cached adjoint hierarchy and the
+//!   training-only λ/gradient/loss-head buffers on top. The session
+//!   creates one context from its backend and every solve of the run
+//!   replays on it (no `MgritCore` construction at steady state).
 //! * [`objective`] — [`Objective`]: open workload interface (data
 //!   sampling, loss head, validation metric) replacing the closed task
 //!   enums.
@@ -35,7 +39,7 @@ pub mod session;
 pub mod trainer;
 
 pub use backend::{backend_for_workers, Backend, Mgrit, Serial, ThreadedMgrit};
-pub use context::{SolveContext, StepWorkspace};
+pub use context::{mid_range, ForwardContext, ForwardWorkspace, SolveContext, StepWorkspace};
 pub use objective::{
     ClsObjective, EvalAccum, HeadGrads, LmObjective, LossOut, LossScratch, LossSink, LossStats,
     Objective, TagObjective, TrainBatch, TranslateObjective,

@@ -12,18 +12,31 @@
 //!     .build()?
 //! ```
 //!
-//! Per batch: embed → (serial open buffers, in place) → forward solve over
-//! the ParallelNet → (serial close buffers) → objective loss head →
-//! adjoint solve → parameter gradients → clip → optimizer. Every solve
-//! runs on the session's persistent [`SolveContext`]: the MGRIT
-//! hierarchies are cached across steps, states/λ/gradients *and* the
-//! batch/loss-head buffers live in its [`StepWorkspace`] (plus the
-//! session's long-lived `TrainBatch`), so the steady-state `train_step`
-//! performs **zero** heap allocations — sampling, loss head, clipping and
-//! all (pinned by `rust/tests/alloc_audit.rs`). The §3.2.3
-//! controller probes the MGRIT convergence factor
-//! on a cadence and can raise iteration counts or switch the run to
-//! serial (which also drops the now-stale warm-start iterate).
+//! Per batch: embed → full forward on the shared train/infer core
+//! ([`super::context::ForwardContext::forward_full`]: serial open
+//! buffers, MGRIT mid solve, serial close buffers) → objective loss head
+//! → adjoint solve →
+//! parameter gradients → clip → optimizer. Every solve runs on the
+//! session's persistent [`SolveContext`]: the MGRIT hierarchies are cached
+//! across steps, states/λ/gradients *and* the batch/loss-head buffers live
+//! in its workspaces (plus the session's long-lived `TrainBatch`), so the
+//! steady-state `train_step` performs **zero** heap allocations —
+//! sampling, loss head, clipping and all (pinned by
+//! `rust/tests/alloc_audit.rs`). The §3.2.3 controller probes the MGRIT
+//! convergence factor on a cadence and can raise iteration counts or
+//! switch the run to serial (which also drops the now-stale warm-start
+//! iterate).
+//!
+//! ## Checkpointing
+//!
+//! [`Session::save`] writes a [`crate::checkpoint::Checkpoint`] capturing
+//! the run config (including controller-mutated MGRIT iteration counts),
+//! parameters, optimizer moments, adaptive-controller state, the training
+//! RNG stream, the step counter, and the warm-start iterate.
+//! [`Session::resume`] (or [`SessionBuilder::resume`], to also pick a
+//! backend/propagator) rebuilds a session that continues the run **bitwise
+//! identically** to the uninterrupted original — pinned by
+//! `rust/tests/checkpoint_roundtrip.rs`.
 //!
 //! Data parallelism is executed as `dp` sequential micro-batches with
 //! gradient averaging — bit-identical math to distributed replicas (the
@@ -35,19 +48,19 @@ use std::sync::Arc;
 use anyhow::{anyhow, bail, Result};
 
 use crate::adaptive::{AdaptiveController, ProbeRecord};
+use crate::checkpoint::{Checkpoint, ControllerState};
 use crate::config::{presets, Arch, RunConfig};
 use crate::model::{Init, ParamStore};
 use crate::ode::{Propagator, RustPropagator, XlaPropagator};
 use crate::opt::{Decay, LrSchedule, Optimizer};
 use crate::runtime::XlaEngine;
-use crate::tensor::Tensor;
+use crate::util::json::{self, Json};
 use crate::util::rng::Rng;
 
 use super::backend::{backend_for_workers, Backend, Mgrit};
-use super::context::{SolveContext, StepWorkspace};
+use super::context::{mid_range, ForwardWorkspace, SolveContext, StepWorkspace};
 use super::heads;
 use super::objective::{EvalAccum, Objective, TrainBatch};
-use super::range::RangeProp;
 use super::trainer::Task;
 
 /// One training-step record (drives the Fig. 3/4 curves).
@@ -62,11 +75,45 @@ pub struct StepRecord {
     pub rho_bwd: Option<f64>,
 }
 
+impl StepRecord {
+    pub fn to_json(&self) -> Json {
+        let rho = |v: Option<f64>| v.map(finite_num).unwrap_or(Json::Null);
+        json::obj(vec![
+            ("step", json::int(self.step as i64)),
+            ("loss", finite_num(self.loss as f64)),
+            ("acc", finite_num(self.acc as f64)),
+            ("lr", finite_num(self.lr as f64)),
+            ("serial", Json::Bool(self.serial)),
+            ("rho_fwd", rho(self.rho_fwd)),
+            ("rho_bwd", rho(self.rho_bwd)),
+        ])
+    }
+}
+
 /// Validation record: metric is accuracy (or BLEU for Translate).
 #[derive(Debug, Clone)]
 pub struct EvalRecord {
     pub step: usize,
     pub metric: f64,
+}
+
+impl EvalRecord {
+    pub fn to_json(&self) -> Json {
+        json::obj(vec![
+            ("step", json::int(self.step as i64)),
+            ("metric", finite_num(self.metric)),
+        ])
+    }
+}
+
+/// JSON numbers are IEEE doubles with no NaN/Inf encoding; map them to
+/// null so a diverged run still writes a parseable report.
+fn finite_num(v: f64) -> Json {
+    if v.is_finite() {
+        json::num(v)
+    } else {
+        Json::Null
+    }
 }
 
 /// Everything a run produced.
@@ -80,6 +127,28 @@ pub struct TrainReport {
     pub phi_fwd: u64,
     pub phi_vjp: u64,
     pub switched_at: Option<usize>,
+}
+
+impl TrainReport {
+    /// Machine-readable run record (`layertime train --report out.json`):
+    /// the full step curve, eval points, and the retained §3.2.3 probe
+    /// history — everything the Fig. 4/5-style plots need, with no stdout
+    /// scraping.
+    pub fn to_json(&self) -> Json {
+        json::obj(vec![
+            ("curve", json::arr(self.curve.iter().map(|r| r.to_json()).collect())),
+            ("evals", json::arr(self.evals.iter().map(|e| e.to_json()).collect())),
+            ("probes", json::arr(self.probes.iter().map(|p| p.to_json()).collect())),
+            ("final_loss", finite_num(self.final_loss as f64)),
+            ("final_metric", finite_num(self.final_metric)),
+            ("phi_fwd", json::int(self.phi_fwd as i64)),
+            ("phi_vjp", json::int(self.phi_vjp as i64)),
+            (
+                "switched_at",
+                self.switched_at.map(|s| json::int(s as i64)).unwrap_or(Json::Null),
+            ),
+        ])
+    }
 }
 
 /// Which Φ implementation a session runs on.
@@ -102,6 +171,7 @@ pub struct SessionBuilder {
     params: Option<ParamStore>,
     workers: Option<usize>,
     warm_start: bool,
+    resume: Option<String>,
 }
 
 impl SessionBuilder {
@@ -115,6 +185,18 @@ impl SessionBuilder {
     /// Start from an explicit run config (takes precedence over `preset`).
     pub fn config(mut self, rc: RunConfig) -> Self {
         self.rc = Some(rc);
+        self
+    }
+
+    /// Resume from a checkpoint written by [`Session::save`]. The run
+    /// config, parameters, optimizer moments, adaptive state, RNG stream,
+    /// step counter and warm-start iterate all come from the file —
+    /// mutually exclusive with `.preset` / `.config` / `.params`. The
+    /// execution pieces (`.backend` / `.workers` / `.propagator`) remain
+    /// free: solves are bitwise identical across backends, so resuming on
+    /// a different worker count continues the exact same run.
+    pub fn resume(mut self, path: &str) -> Self {
+        self.resume = Some(path.to_string());
         self
     }
 
@@ -171,14 +253,27 @@ impl SessionBuilder {
     }
 
     /// Assemble the session, resolving defaults and validating the preset
-    /// and task names.
+    /// and task names (and, when resuming, the checkpoint).
     pub fn build(self) -> Result<Session> {
-        let rc = match (self.rc, self.preset) {
-            (Some(rc), _) => rc,
-            (None, Some(name)) => presets::by_name(&name).ok_or_else(|| {
+        let ck = match &self.resume {
+            Some(path) => {
+                if self.rc.is_some() || self.preset.is_some() || self.params.is_some() {
+                    bail!(
+                        "SessionBuilder: .resume(..) carries its own config and parameters — \
+                         drop .preset/.config/.params"
+                    );
+                }
+                Some(Checkpoint::read(path)?)
+            }
+            None => None,
+        };
+        let rc = match (&ck, self.rc, self.preset) {
+            (Some(c), _, _) => c.rc.clone(),
+            (None, Some(rc), _) => rc,
+            (None, None, Some(name)) => presets::by_name(&name).ok_or_else(|| {
                 anyhow!("unknown preset '{}' (valid: {})", name, presets::ALL.join(", "))
             })?,
-            (None, None) => bail!("Session::builder() needs .preset(..) or .config(..)"),
+            (None, None, None) => bail!("Session::builder() needs .preset(..) or .config(..)"),
         };
         let objective: Box<dyn Objective> = match (self.objective, self.task) {
             (Some(o), _) => o,
@@ -194,13 +289,23 @@ impl SessionBuilder {
             (None, Some(n)) => backend_for_workers(n),
             (None, None) => Box::new(Mgrit),
         };
-        let params = match self.params {
-            Some(p) => p,
-            None => {
-                let scheme =
-                    if rc.model.total_layers() >= 64 { Init::DeepNet } else { Init::Default };
-                ParamStore::init(&rc.model, scheme, rc.train.seed)
-            }
+        let params = match &ck {
+            Some(c) => ParamStore::from_parts(
+                rc.model.clone(),
+                c.layers.clone(),
+                c.w_emb.clone(),
+                c.w_pos.clone(),
+                c.w_out.clone(),
+                c.w_cls.clone(),
+            ),
+            None => match self.params {
+                Some(p) => p,
+                None => {
+                    let scheme =
+                        if rc.model.total_layers() >= 64 { Init::DeepNet } else { Init::Default };
+                    ParamStore::init(&rc.model, scheme, rc.train.seed)
+                }
+            },
         };
         let prop: Box<dyn Propagator> = match self.propagator {
             PropagatorKind::Rust => {
@@ -210,7 +315,7 @@ impl SessionBuilder {
                 Box::new(XlaPropagator::for_model(e, &rc.model, params.layers.clone())?)
             }
         };
-        let opt = Optimizer::new(rc.train.opt, &params.group_sizes(), rc.train.weight_decay);
+        let mut opt = Optimizer::new(rc.train.opt, &params.group_sizes(), rc.train.weight_decay);
         let sched = LrSchedule {
             base_lr: rc.train.lr,
             warmup: rc.train.warmup,
@@ -226,19 +331,56 @@ impl SessionBuilder {
             0
         });
         let seed = rc.train.seed;
-        // persistent solve context: cached MGRIT hierarchies + the step
-        // workspace, sized once from the session geometry
+        // persistent solve context: cached MGRIT hierarchies + the shared
+        // forward workspace + the training step workspace, sized once from
+        // the session geometry
         let n_layers = rc.model.total_layers();
         let theta_lens: Vec<usize> = (0..n_layers).map(|l| prop.theta_len(l)).collect();
         let head_shape = [rc.model.batch, rc.model.seq, rc.model.d_model];
+        let state_shape = prop.state_shape();
+        let fwd_ws = ForwardWorkspace::new(n_layers, &state_shape, &head_shape);
         let ws = StepWorkspace::new(
             n_layers,
-            &prop.state_shape(),
+            &state_shape,
             &head_shape,
             &theta_lens,
             [params.w_emb.len(), params.w_pos.len(), params.w_out.len(), params.w_cls.len()],
         );
-        let ctx = SolveContext::new(backend, ws);
+        let mut ctx = SolveContext::new(backend, fwd_ws, ws);
+        // checkpoint restore: every stateful piece beyond params/config
+        let (mut train_rng, mut step, mut initial_loss, mut switched_at, mut warm_start) =
+            (Rng::new(seed.wrapping_mul(2) + 1), 0usize, None, None, self.warm_start);
+        let controller = match ck {
+            None => controller,
+            Some(c) => {
+                opt.restore_moments(c.opt_m, c.opt_v, c.opt_t);
+                train_rng = Rng::from_parts(c.rng_state, c.rng_spare);
+                step = c.step;
+                initial_loss = c.initial_loss;
+                switched_at = c.switched_at;
+                warm_start = c.warm_start;
+                if let Some(warm) = c.warm {
+                    let (bo, n_mid) = mid_range(&rc.model);
+                    // Checkpoint::read validated count and element sizes
+                    // against the config's state shape
+                    for (dst, src) in ctx.fwd.ws.states[bo..=bo + n_mid].iter_mut().zip(&warm) {
+                        dst.copy_from(src);
+                    }
+                    ctx.fwd.mark_warm();
+                }
+                let cs = c.controller;
+                AdaptiveController::restore(
+                    cs.probe_every,
+                    cs.rho_switch,
+                    cs.rho_grow,
+                    cs.max_iters,
+                    cs.step,
+                    cs.switched,
+                    cs.history_cap,
+                    cs.history,
+                )
+            }
+        };
         Ok(Session {
             rc,
             params,
@@ -249,12 +391,12 @@ impl SessionBuilder {
             opt,
             sched,
             controller,
-            train_rng: Rng::new(seed.wrapping_mul(2) + 1),
+            train_rng,
             val_rng_seed: seed.wrapping_mul(2) + 2,
-            warm_start: self.warm_start,
-            step: 0,
-            initial_loss: None,
-            switched_at: None,
+            warm_start,
+            step,
+            initial_loss,
+            switched_at,
         })
     }
 }
@@ -269,8 +411,9 @@ pub struct Session {
     /// the session during the batch body to keep the borrows disjoint —
     /// a pointer move, not an allocation).
     batch_buf: TrainBatch,
-    /// Persistent solve state: the backend strategy, both cached MGRIT
-    /// hierarchies, the warm-start iterate, and the step workspace.
+    /// Persistent solve state: the shared train/infer forward core (with
+    /// both cached MGRIT hierarchies and the warm-start iterate) plus the
+    /// training step workspace.
     ctx: SolveContext,
     prop: Box<dyn Propagator>,
     opt: Optimizer,
@@ -297,6 +440,7 @@ impl Session {
             params: None,
             workers: None,
             warm_start: true,
+            resume: None,
         }
     }
 
@@ -316,6 +460,58 @@ impl Session {
         Session::builder().config(rc).task(task).params(params).engine(engine).build()
     }
 
+    /// Resume a checkpointed run with default execution pieces (pure-Rust
+    /// Φ, `Mgrit` backend). Use `Session::builder().resume(path)` to pick
+    /// a backend, worker count, or the XLA propagator.
+    pub fn resume(path: &str) -> Result<Session> {
+        Session::builder().resume(path).build()
+    }
+
+    /// Write a full session checkpoint (config, parameters, optimizer
+    /// moments, adaptive state, RNG stream, step counter, warm iterate) —
+    /// see [`crate::checkpoint`] for the format. A session resumed from it
+    /// continues bitwise identically.
+    pub fn save(&self, path: &str) -> Result<()> {
+        let (bo, n_mid) = self.mid_range();
+        let warm = if self.ctx.has_warm() {
+            Some(self.ctx.fwd.ws.states[bo..=bo + n_mid].to_vec())
+        } else {
+            None
+        };
+        let (rng_state, rng_spare) = self.train_rng.state_parts();
+        let (m, v) = self.opt.moments();
+        let c = &self.controller;
+        let ck = Checkpoint {
+            rc: self.rc.clone(),
+            step: self.step,
+            initial_loss: self.initial_loss,
+            switched_at: self.switched_at,
+            warm_start: self.warm_start,
+            rng_state,
+            rng_spare,
+            controller: ControllerState {
+                probe_every: c.probe_every,
+                rho_switch: c.rho_switch,
+                rho_grow: c.rho_grow,
+                max_iters: c.max_iters,
+                step: c.batch_step(),
+                switched: c.is_serial(),
+                history_cap: c.history_cap(),
+                history: c.history().to_vec(),
+            },
+            opt_t: self.opt.step_count(),
+            opt_m: m.to_vec(),
+            opt_v: v.to_vec(),
+            layers: self.params.layers.read().unwrap().clone(),
+            w_emb: self.params.w_emb.clone(),
+            w_pos: self.params.w_pos.clone(),
+            w_out: self.params.w_out.clone(),
+            w_cls: self.params.w_cls.clone(),
+            warm,
+        };
+        ck.write(path)
+    }
+
     /// The active objective's short name.
     pub fn objective_name(&self) -> &'static str {
         self.objective.name()
@@ -324,6 +520,22 @@ impl Session {
     /// The active backend's short name.
     pub fn backend_name(&self) -> &'static str {
         self.ctx.backend().name()
+    }
+
+    /// Completed optimizer steps (checkpoint-resumed sessions start from
+    /// the saved counter, not 0).
+    pub fn step(&self) -> usize {
+        self.step
+    }
+
+    /// Adjust the total run length (`train` runs until this step count),
+    /// keeping the cosine LR horizon in sync — the `--resume --steps N`
+    /// surface. No-op on the schedule when the decay is not cosine.
+    pub fn set_total_steps(&mut self, steps: usize) {
+        self.rc.train.steps = steps;
+        if let Decay::Cosine { min_frac, .. } = self.sched.decay {
+            self.sched.decay = Decay::Cosine { total: steps, min_frac };
+        }
     }
 
     /// Cached-hierarchy introspection: how many MGRIT cores this session's
@@ -346,32 +558,28 @@ impl Session {
     }
 
     fn mid_range(&self) -> (usize, usize) {
-        let n = self.rc.model.total_layers();
-        let bo = self.rc.model.buffer_open;
-        let bc = self.rc.model.buffer_close;
-        (bo, n - bo - bc)
+        mid_range(&self.rc.model)
     }
 
     /// Embed a batch into the propagator's state shape, written straight
-    /// into the workspace's Z_0 buffer (no allocation).
+    /// into the forward workspace's Z_0 buffer (no allocation).
     fn embed_into(&mut self, tokens: &[i32], tgt_in: Option<&[i32]>) {
         let m = &self.rc.model;
-        let dst = self.ctx.ws.states[0].data_mut();
-        let (we, wp) = (&self.params.w_emb, &self.params.w_pos);
-        match tgt_in {
-            None => heads::embed_into(tokens, we, wp, m.batch, m.seq, m.d_model, dst),
-            Some(t) => {
-                let half = dst.len() / 2;
-                let (x, y) = dst.split_at_mut(half);
-                heads::embed_into(tokens, we, wp, m.batch, m.seq, m.d_model, x);
-                heads::embed_into(t, we, wp, m.batch, m.seq, m.d_model, y);
-            }
-        }
+        heads::embed_state_into(
+            tokens,
+            tgt_in,
+            &self.params.w_emb,
+            &self.params.w_pos,
+            m.batch,
+            m.seq,
+            m.d_model,
+            self.ctx.fwd.ws.states[0].data_mut(),
+        );
     }
 
     /// One micro-batch: forward, loss, adjoint, gradients (no update).
-    /// Every state/adjoint/gradient lives in the solve context's step
-    /// workspace; gradients *accumulate* there (zeroed once per training
+    /// Every state/adjoint/gradient lives in the solve context's
+    /// workspaces; gradients *accumulate* there (zeroed once per training
     /// step, so dp micro-batches sum naturally). Returns
     /// (loss, acc, rho_fwd, rho_bwd).
     fn micro_batch(&mut self, probe: bool) -> (f32, f32, Option<f64>, Option<f64>) {
@@ -384,29 +592,27 @@ impl Session {
         let mut batch = std::mem::take(&mut self.batch_buf);
         self.objective.sample_into(&mut self.train_rng, &m, &mut batch);
 
-        // --- forward ------------------------------------------------------
+        // --- forward (the shared train/infer core) -----------------------
         self.embed_into(&batch.tokens, batch.tgt_in.as_deref());
-        if bo > 0 {
-            // open buffers: serial, in place, one dispatch for the sweep
-            self.prop.step_seq_into(0, 1.0, &mut self.ctx.ws.states[..=bo]);
-        }
-        let mid = RangeProp::new(self.prop.as_ref(), bo, n_mid);
         let fwd_iters = if probe {
             self.controller.probe_iters(&self.rc.mgrit).0
         } else {
             self.rc.mgrit.fwd_iters
         };
-        let fstats =
-            self.ctx.forward_mid(&mid, &self.rc.mgrit, bo, fwd_iters, self.warm_start, probe);
-        if bo + n_mid < n_layers {
-            // close buffers: serial, in place, one dispatch for the sweep
-            self.prop.step_seq_into(bo + n_mid, 1.0, &mut self.ctx.ws.states[bo + n_mid..]);
-        }
+        let fstats = self.ctx.fwd.forward_full(
+            self.prop.as_ref(),
+            &self.rc.mgrit,
+            bo,
+            n_mid,
+            fwd_iters,
+            self.warm_start,
+            probe,
+        );
 
         // --- loss head (workspace-reusing: cotangent into ws.lam_head,
         //     head gradients straight into the step accumulators) --------
         let out = {
-            let (x_final, sink) = self.ctx.ws.head_view_and_sink(n_layers, stacked);
+            let (x_final, sink) = self.ctx.head_view_and_sink(n_layers, stacked);
             self.objective.loss_into(x_final, &self.params, &batch, &m, sink)
         };
         let acc = out.correct / out.denom;
@@ -427,7 +633,8 @@ impl Session {
         }
         {
             // close buffers: serial adjoint + grads
-            let StepWorkspace { states, lams, grads, .. } = &mut self.ctx.ws;
+            let states = &self.ctx.fwd.ws.states;
+            let StepWorkspace { lams, grads, .. } = &mut self.ctx.ws;
             for l in ((bo + n_mid)..n_layers).rev() {
                 let (lam_lo, lam_hi) = lams.split_at_mut(l + 1);
                 self.prop.accumulate_grad(l, &states[l], &lam_hi[0], &mut grads[l]);
@@ -440,11 +647,13 @@ impl Session {
         } else {
             self.rc.mgrit.bwd_iters
         };
+        let mid = super::range::RangeProp::new(self.prop.as_ref(), bo, n_mid);
         let bstats = self.ctx.adjoint_mid(&mid, &self.rc.mgrit, bo, bwd_iters, probe);
         self.ctx.gradients_mid(&mid, bo);
         {
             // open buffers
-            let StepWorkspace { states, lams, grads, .. } = &mut self.ctx.ws;
+            let states = &self.ctx.fwd.ws.states;
+            let StepWorkspace { lams, grads, .. } = &mut self.ctx.ws;
             for l in (0..bo).rev() {
                 let (lam_lo, lam_hi) = lams.split_at_mut(l + 1);
                 self.prop.accumulate_grad(l, &states[l], &lam_hi[0], &mut grads[l]);
@@ -597,22 +806,24 @@ impl Session {
             self.objective.sample_into(&mut rng, &m, &mut batch);
             self.embed_into(&batch.tokens, batch.tgt_in.as_deref());
             {
-                let StepWorkspace { states, pp, .. } = &mut self.ctx.ws;
+                let ForwardWorkspace { states, pp, .. } = &mut self.ctx.fwd.ws;
                 self.prop.step_to_into(0, n_layers, 1.0, &mut states[0], pp);
             }
-            let x_final = stage_head_view(&mut self.ctx.ws, 0, stacked);
+            let x_final = self.ctx.fwd.ws.staged_head_view(0, stacked);
             self.objective.eval_batch(x_final, &self.params, &batch, &m, &mut acc);
             self.batch_buf = batch;
         }
         self.objective.metric(&acc)
     }
 
-    /// Full training loop with periodic evaluation.
+    /// Full training loop with periodic evaluation, running until the
+    /// configured total step count (a resumed session picks up at its
+    /// saved step and trains the remaining ones).
     pub fn train(&mut self) -> Result<TrainReport> {
         let mut report = TrainReport::default();
         let steps = self.rc.train.steps;
         let eval_every = self.rc.train.eval_every.max(1);
-        for _ in 0..steps {
+        while self.step < steps {
             let rec = self.train_step();
             if self.step % eval_every == 0 || self.step == steps {
                 let metric = self.evaluate(2);
@@ -622,17 +833,10 @@ impl Session {
         }
         report.final_loss = report.curve.last().map(|r| r.loss).unwrap_or(f32::NAN);
         report.final_metric = report.evals.last().map(|e| e.metric).unwrap_or(0.0);
-        report.probes = self.controller.history.clone();
+        report.probes = self.controller.history().to_vec();
         report.phi_fwd = self.prop.counters().fwd();
         report.phi_vjp = self.prop.counters().vjp();
         report.switched_at = self.switched_at;
         Ok(report)
     }
-}
-
-/// Stage the loss head's input for workspace state `idx` (delegates to the
-/// single decoder-half-split implementation in `context`).
-fn stage_head_view(ws: &mut StepWorkspace, idx: usize, stacked: bool) -> &Tensor {
-    let StepWorkspace { states, head, .. } = ws;
-    super::context::staged_head_view(states, head, idx, stacked)
 }

@@ -80,12 +80,15 @@ impl Task {
                 )
             })?
             .name;
+        // accept both the constructor-style canonical names and the
+        // RunConfig::name fields ("mc", "vit", …) — resumed checkpoints
+        // and InferSession route the *stored* name back through here
         match canonical.as_str() {
-            "bert_deep" => Ok(Task::Mlm),
-            "gpt_small" => Ok(Task::Lm),
-            "vit_small" => Ok(Task::Cls),
-            "mt_small" => Ok(Task::Translate),
-            "mc_tiny" => Ok(Task::Tag),
+            "bert" | "bert_deep" => Ok(Task::Mlm),
+            "gpt" | "gpt_small" => Ok(Task::Lm),
+            "vit" | "vit_small" => Ok(Task::Cls),
+            "mt" | "mt_small" => Ok(Task::Translate),
+            "mc" | "mc_tiny" => Ok(Task::Tag),
             other => bail!(
                 "preset '{}' resolves to '{}', which has no task mapping — \
                  update Task::for_preset alongside presets::by_name",
@@ -122,9 +125,16 @@ mod tests {
     fn preset_task_mapping_is_total_over_known_presets() {
         for name in presets::ALL {
             assert!(Task::for_preset(name).is_ok(), "{}", name);
+            // the RunConfig::name field must resolve too: checkpoints
+            // store it, and resume/inference map it back to a task
+            let stored = presets::by_name(name).unwrap().name;
+            assert!(Task::for_preset(&stored).is_ok(), "stored name '{}'", stored);
         }
         assert_eq!(Task::for_preset("mc").unwrap(), Task::Tag);
         assert_eq!(Task::for_preset("bert").unwrap(), Task::Mlm);
+        assert_eq!(Task::for_preset("gpt").unwrap(), Task::Lm);
+        assert_eq!(Task::for_preset("vit").unwrap(), Task::Cls);
+        assert_eq!(Task::for_preset("mt").unwrap(), Task::Translate);
     }
 
     #[test]

@@ -42,6 +42,42 @@
 //!   metric. The paper's five tasks ship as implementations; new workloads
 //!   plug in without touching the coordinator.
 //!
+//! ## The train/infer forward core
+//!
+//! The forward solve is shared between training and serving. Its state is
+//! layered so inference never allocates training machinery:
+//!
+//! * [`coordinator::ForwardContext`] (+ [`coordinator::ForwardWorkspace`])
+//!   — backend strategy, the cached forward MGRIT hierarchy, the
+//!   TorchBraid-style warm-start flag, and the fine-grid states Z_0..Z_N.
+//!   `forward_full` runs the whole stack: serial open buffers → mid-range
+//!   solve (V-cycles on the cached core, or the exact serial bypass) →
+//!   serial close buffers (Appendix B).
+//! * [`coordinator::SolveContext`] — a `ForwardContext` plus the cached
+//!   **adjoint** hierarchy and the training-only
+//!   [`coordinator::StepWorkspace`] (λ, gradient accumulators, loss-head
+//!   cotangent + scratch). Owned by [`coordinator::Session`].
+//! * [`infer::InferSession`] — a `ForwardContext` plus logits-only head
+//!   kernels (`coordinator::heads::{lm,tag,cls}_infer_into`): batched
+//!   greedy/top-k autoregressive decoding (LM + Translate) and batched
+//!   classification/tagging prediction, allocation-free at steady state
+//!   like the training step (`rust/tests/alloc_audit.rs`).
+//!
+//! ## Checkpoints ([`checkpoint`])
+//!
+//! `layertime train --save ckpt` / [`coordinator::Session::save`] write a
+//! versioned little-endian binary: `LTCP` magic + version, the full
+//! `RunConfig` as JSON (u64 seed as a string — JSON numbers are doubles),
+//! run/controller/optimizer scalar state, a **named tensor table**
+//! (`param.layer.{i}`, `param.{emb,pos,out,cls}`, `opt.{m,v}.{g}`,
+//! optional `warm.{j}` mid-range states) with payloads, and a trailing
+//! FNV-1a checksum. Every entry is validated against the model config on
+//! read; resume ([`coordinator::Session::resume`], `--resume`) continues
+//! the run **bitwise identically** — weights, Adam moments, RNG streams,
+//! adaptive ρ-history, warm iterate and all
+//! (`rust/tests/checkpoint_roundtrip.rs`). Version bumps gate any layout
+//! change; unknown versions are rejected rather than half-read.
+//!
 //! ## Stack (Python never on the training path)
 //!
 //! * **L3 (this crate)** — the coordinator: MGRIT engine ([`mgrit`]),
@@ -59,9 +95,11 @@
 
 pub mod adaptive;
 pub mod analysis;
+pub mod checkpoint;
 pub mod config;
 pub mod coordinator;
 pub mod data;
+pub mod infer;
 pub mod mgrit;
 pub mod model;
 pub mod ode;
@@ -74,11 +112,13 @@ pub mod util;
 
 /// Convenience re-exports for examples and downstream users.
 pub mod prelude {
+    pub use crate::checkpoint::Checkpoint;
     pub use crate::config::{presets, MgritConfig, ModelConfig, TrainConfig};
     pub use crate::coordinator::{
         Backend, Mgrit, Objective, PropagatorKind, Serial, Session, SessionBuilder, Task,
         ThreadedMgrit, TrainReport,
     };
+    pub use crate::infer::{DecodeOptions, InferSession};
     pub use crate::tensor::Tensor;
     pub use crate::util::rng::Rng;
 }

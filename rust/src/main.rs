@@ -1,7 +1,10 @@
 //! `layertime` launcher — the L3 leader entrypoint.
 //!
 //! Subcommands:
-//!   train      run one training job (preset + overrides)
+//!   train      run one training job (preset + overrides; --save/--resume
+//!              for full-session checkpoints, --report for JSON run logs)
+//!   generate   batched autoregressive decoding from a checkpoint
+//!   predict    batched classification/tagging/LM prediction from a checkpoint
 //!   compare    serial vs layer-parallel vs adaptive-switch from one init
 //!   simulate   performance-model a topology (layers × lp × dp × MGRIT)
 //!   lipschitz  estimate per-layer Lipschitz constants (Appendix B)
@@ -9,33 +12,43 @@
 //!
 //! Examples:
 //!   layertime train --preset mc --enc-layers 64 --cf 2 --steps 300
-//!   layertime train --preset gpt --artifacts artifacts --steps 200
+//!   layertime train --preset gpt --steps 200 --save runs/gpt.ltcp
+//!   layertime train --resume runs/gpt.ltcp --steps 400
+//!   layertime generate --ckpt runs/gpt.ltcp --top-k 4 --max-new 16
+//!   layertime predict --ckpt runs/mc.ltcp --batches 8
 //!   layertime simulate --preset bert --lp 8 --dp 4
-//!   layertime compare --preset mc --steps 120
 
 use std::sync::Arc;
 
 use anyhow::{anyhow, bail, Result};
 
 use layertime::config::presets;
-use layertime::coordinator::{backend_for_workers, Serial, Session, Task};
+use layertime::coordinator::{backend_for_workers, Objective, Serial, Session, Task};
+use layertime::infer::{DecodeOptions, InferSession};
 use layertime::model::{Init, ParamStore};
 use layertime::ode::Propagator;
 use layertime::parallel::{DeviceModel, SimConfig, Simulator};
 use layertime::runtime::XlaEngine;
 use layertime::util::cli::Args;
 use layertime::util::csv::CsvWriter;
+use layertime::util::json;
 use layertime::util::rng::Rng;
 use layertime::util::table::{f, i, Table};
 
-const USAGE: &str = "layertime <train|compare|simulate|lipschitz|info> [--preset NAME] [options]
+const USAGE: &str = "layertime <train|generate|predict|compare|simulate|lipschitz|info> [options]
   common:     --preset {bert|mc|vit|mt|gpt}  --seed N
   model:      --enc-layers N --dec-layers N --batch N --buffer-open N --buffer-close N
   mgrit:      --cf N --levels N --fwd-iters {N|serial} --bwd-iters {N|serial}
   training:   --steps N --lr F --no-adaptive --artifacts DIR (use AOT/PJRT Φ)
   backend:    --workers N (N>1 selects the ThreadedMgrit backend)
   topology:   --lp N --dp N --device {v100|a100}
-  output:     --out runs/NAME.csv --checkpoint PATH";
+  checkpoint: --save PATH (full session), --resume PATH (continue bitwise;
+              only --steps/--workers/--out/--report/--save apply on top),
+              --checkpoint PATH (weights-only, legacy)
+  inference:  generate|predict --ckpt PATH [--workers N] [--fwd-iters {N|serial}]
+              generate: --max-new N --top-k K --temperature F --seed N
+              predict:  --batches N
+  output:     --out runs/NAME.csv --report runs/NAME.json";
 
 fn engine_from(args: &Args) -> Result<Option<Arc<XlaEngine>>> {
     match args.get("artifacts") {
@@ -57,30 +70,55 @@ fn run_config(args: &Args) -> Result<layertime::config::RunConfig> {
 }
 
 fn cmd_train(args: &Args) -> Result<()> {
-    let rc = run_config(args)?;
-    let task = Task::for_preset(&rc.name)?;
     let engine = engine_from(args)?;
     let workers = args.get_usize("workers", 1);
-    println!(
-        "training '{}' ({:?}): {} layers, MGRIT cf={} L={} fwd={:?} bwd={:?}, {} steps, {} worker(s)",
-        rc.name,
-        task,
-        rc.model.total_layers(),
-        rc.mgrit.cf,
-        rc.mgrit.levels,
-        rc.mgrit.fwd_iters,
-        rc.mgrit.bwd_iters,
-        rc.train.steps,
-        workers
-    );
-    let out = args.get("out").map(|s| s.to_string());
-    let checkpoint = args.get("checkpoint").map(|s| s.to_string());
-    let mut run = Session::builder()
-        .config(rc)
-        .task(task)
-        .engine(engine)
-        .workers(workers)
-        .build()?;
+    let mut run = match args.get("resume") {
+        Some(path) => {
+            // the checkpoint carries config + parameters + all run state;
+            // only execution choices and the run length apply on top
+            let mut run =
+                Session::builder().resume(path).engine(engine).workers(workers).build()?;
+            if args.get("steps").is_some() {
+                run.set_total_steps(args.get_usize("steps", run.rc.train.steps));
+            }
+            println!(
+                "resumed '{}' from {} at step {} (training to step {}, {} worker(s))",
+                run.rc.name,
+                path,
+                run.step(),
+                run.rc.train.steps,
+                workers
+            );
+            if run.step() >= run.rc.train.steps {
+                // a checkpoint saved at run completion has step == steps;
+                // without a new target the loop below would train nothing
+                println!(
+                    "note: the checkpoint already reached its configured {} steps — pass \
+                     --steps N (> {}) to train further",
+                    run.rc.train.steps,
+                    run.step()
+                );
+            }
+            run
+        }
+        None => {
+            let rc = run_config(args)?;
+            let task = Task::for_preset(&rc.name)?;
+            println!(
+                "training '{}' ({:?}): {} layers, MGRIT cf={} L={} fwd={:?} bwd={:?}, {} steps, {} worker(s)",
+                rc.name,
+                task,
+                rc.model.total_layers(),
+                rc.mgrit.cf,
+                rc.mgrit.levels,
+                rc.mgrit.fwd_iters,
+                rc.mgrit.bwd_iters,
+                rc.train.steps,
+                workers
+            );
+            Session::builder().config(rc).task(task).engine(engine).workers(workers).build()?
+        }
+    };
     println!("backend: {}, objective: {}", run.backend_name(), run.objective_name());
     let report = run.train()?;
     let mut tbl = Table::new(&["step", "loss", "acc", "serial", "rho_fwd", "rho_bwd"]);
@@ -106,8 +144,8 @@ fn cmd_train(args: &Args) -> Result<()> {
             .map(|s| format!(", switched to serial at step {}", s))
             .unwrap_or_default()
     );
-    if let Some(path) = out {
-        let mut w = CsvWriter::create(&path, &["step", "loss", "acc", "serial"])?;
+    if let Some(path) = args.get("out") {
+        let mut w = CsvWriter::create(path, &["step", "loss", "acc", "serial"])?;
         for r in &report.curve {
             w.row(&[
                 r.step.to_string(),
@@ -119,11 +157,193 @@ fn cmd_train(args: &Args) -> Result<()> {
         w.flush()?;
         println!("wrote {}", path);
     }
-    if let Some(path) = checkpoint {
-        run.params.save(&path)?;
-        println!("saved checkpoint {}", path);
+    if let Some(path) = args.get("report") {
+        // Fig. 4/5-style plots read this instead of scraping stdout
+        let j = json::obj(vec![("config", run.rc.to_json()), ("report", report.to_json())]);
+        std::fs::write(path, j.to_string_pretty())?;
+        println!("wrote {}", path);
+    }
+    if let Some(path) = args.get("save") {
+        run.save(path)?;
+        println!("saved session checkpoint {} (resume with --resume)", path);
+    }
+    if let Some(path) = args.get("checkpoint") {
+        run.params.save(path)?;
+        println!("saved weights-only checkpoint {}", path);
     }
     Ok(())
+}
+
+/// Load an inference session from `--ckpt`, honoring `--workers` and a
+/// `--fwd-iters` override.
+fn infer_from(args: &Args) -> Result<InferSession> {
+    let ckpt = args
+        .get("ckpt")
+        .ok_or_else(|| anyhow!("--ckpt PATH is required (a file written by train --save)"))?;
+    let workers = args.get_usize("workers", 1);
+    let mut inf = InferSession::from_checkpoint_with(ckpt, workers)?;
+    if let Some(v) = args.get("fwd-iters") {
+        inf.set_fwd_iters(if v == "serial" { None } else { Some(v.parse()?) });
+    }
+    println!(
+        "checkpoint '{}' ({:?}): {} layers, backend {}, forward {}",
+        inf.rc.name,
+        inf.task(),
+        inf.rc.model.total_layers(),
+        inf.backend_name(),
+        match inf.rc.mgrit.fwd_iters {
+            Some(k) => {
+                format!("mgrit cf={} L={} {} iter(s)", inf.rc.mgrit.cf, inf.rc.mgrit.levels, k)
+            }
+            None => "serial (exact)".into(),
+        }
+    );
+    Ok(inf)
+}
+
+fn fmt_tokens(toks: &[i32]) -> String {
+    toks.iter().map(|t| t.to_string()).collect::<Vec<_>>().join(" ")
+}
+
+fn cmd_generate(args: &Args) -> Result<()> {
+    let mut inf = infer_from(args)?;
+    let m = inf.rc.model.clone();
+    match inf.task() {
+        // tagging/classification have no LM head; the bidirectional MLM
+        // head cannot autoregress (logits would attend over the unfilled
+        // future board) — all three serve batched predictions instead
+        Task::Tag | Task::Cls | Task::Mlm => {
+            println!(
+                "task {:?} has no autoregressive head — running batched prediction instead",
+                inf.task()
+            );
+            return predict_run(args, &mut inf);
+        }
+        _ => {}
+    }
+    let opts = DecodeOptions {
+        top_k: args.get_usize("top-k", 0),
+        temperature: args.get_f32("temperature", 1.0),
+        seed: args.get_u64("seed", 0),
+    };
+    // sample inputs from the task's deterministic data source
+    let obj = Task::for_preset(&inf.rc.name)?.objective(&m, inf.rc.train.seed);
+    let mut rng = Rng::new(args.get_u64("seed", 0) ^ 0x5EED);
+    let batch = obj.sample(&mut rng, &m);
+    match inf.task() {
+        Task::Translate => {
+            let preds = inf.translate(&batch.tokens, &opts)?;
+            let mut pairs = Vec::with_capacity(m.batch);
+            for b in 0..m.batch.min(4) {
+                println!("src {}: {}", b, fmt_tokens(&batch.tokens[b * m.seq..(b + 1) * m.seq]));
+                println!("out {}: {}", b, fmt_tokens(&preds[b * m.seq..(b + 1) * m.seq]));
+                println!("ref {}: {}", b, fmt_tokens(&batch.targets[b * m.seq..(b + 1) * m.seq]));
+            }
+            for b in 0..m.batch {
+                pairs.push((
+                    preds[b * m.seq..(b + 1) * m.seq].to_vec(),
+                    batch.targets[b * m.seq..(b + 1) * m.seq].to_vec(),
+                ));
+            }
+            let bleu = layertime::analysis::bleu4(&pairs);
+            println!("BLEU-4 over {} sequences: {:.4}", m.batch, bleu);
+        }
+        _ => {
+            let max_new = args.get_usize("max-new", m.seq / 2).clamp(1, m.seq - 1);
+            let plen = m.seq - max_new;
+            let mut prompts = Vec::with_capacity(m.batch * plen);
+            for b in 0..m.batch {
+                prompts.extend_from_slice(&batch.tokens[b * m.seq..b * m.seq + plen]);
+            }
+            let out = inf.generate(&prompts, plen, &opts)?;
+            println!(
+                "generated {} tokens per sequence ({} sequences, {}):",
+                max_new,
+                m.batch,
+                if opts.top_k == 0 { "greedy".into() } else { format!("top-{}", opts.top_k) }
+            );
+            for b in 0..m.batch.min(4) {
+                println!(
+                    "seq {}: {} | {}",
+                    b,
+                    fmt_tokens(&out[b * m.seq..b * m.seq + plen]),
+                    fmt_tokens(&out[b * m.seq + plen..(b + 1) * m.seq])
+                );
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Batched prediction over `--batches` sampled batches with the task's own
+/// accounting (accuracy; BLEU for translation).
+fn predict_run(args: &Args, inf: &mut InferSession) -> Result<()> {
+    let m = inf.rc.model.clone();
+    let n_batches = args.get_usize("batches", 4);
+    let obj = Task::for_preset(&inf.rc.name)?.objective(&m, inf.rc.train.seed);
+    let mut rng = Rng::new(args.get_u64("seed", 0) ^ 0x5EED);
+    let opts = DecodeOptions { seed: args.get_u64("seed", 0), ..DecodeOptions::default() };
+    let mut correct = 0.0f64;
+    let mut total = 0.0f64;
+    let mut pairs: Vec<(Vec<i32>, Vec<i32>)> = Vec::new();
+    let mut preds = Vec::new();
+    for _ in 0..n_batches {
+        let batch = obj.sample(&mut rng, &m);
+        match inf.task() {
+            Task::Translate => {
+                inf.translate_into(&batch.tokens, &opts, &mut preds)?;
+                for b in 0..m.batch {
+                    pairs.push((
+                        preds[b * m.seq..(b + 1) * m.seq].to_vec(),
+                        batch.targets[b * m.seq..(b + 1) * m.seq].to_vec(),
+                    ));
+                }
+            }
+            Task::Cls => {
+                inf.predict_into(&batch.tokens, &mut preds)?;
+                for (p, l) in preds.iter().zip(&batch.labels) {
+                    correct += (p == l) as u8 as f64;
+                    total += 1.0;
+                }
+            }
+            Task::Tag => {
+                inf.predict_into(&batch.tokens, &mut preds)?;
+                for (p, t) in preds.iter().zip(&batch.targets) {
+                    correct += (p == t) as u8 as f64;
+                    total += 1.0;
+                }
+            }
+            Task::Lm | Task::Mlm => {
+                inf.predict_into(&batch.tokens, &mut preds)?;
+                // score only in-mask positions (all for causal LM)
+                for ((p, t), &mk) in preds.iter().zip(&batch.targets).zip(&batch.mask) {
+                    if mk > 0.0 {
+                        correct += (p == t) as u8 as f64;
+                        total += 1.0;
+                    }
+                }
+            }
+        }
+    }
+    match inf.task() {
+        Task::Translate => println!(
+            "BLEU-4 over {} sequences: {:.4}",
+            pairs.len(),
+            layertime::analysis::bleu4(&pairs)
+        ),
+        t => println!(
+            "{:?} accuracy over {} predictions: {:.4}",
+            t,
+            total as u64,
+            correct / total.max(1.0)
+        ),
+    }
+    Ok(())
+}
+
+fn cmd_predict(args: &Args) -> Result<()> {
+    let mut inf = infer_from(args)?;
+    predict_run(args, &mut inf)
 }
 
 fn cmd_compare(args: &Args) -> Result<()> {
@@ -268,6 +488,8 @@ fn main() -> Result<()> {
     let cmd = args.subcommand().unwrap_or("help").to_string();
     match cmd.as_str() {
         "train" => cmd_train(&args),
+        "generate" => cmd_generate(&args),
+        "predict" => cmd_predict(&args),
         "compare" => cmd_compare(&args),
         "simulate" => cmd_simulate(&args),
         "lipschitz" => cmd_lipschitz(&args),

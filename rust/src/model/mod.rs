@@ -9,7 +9,7 @@ use std::io::{Read, Write};
 
 use anyhow::{bail, Context, Result};
 
-use crate::config::{Arch, ModelConfig};
+use crate::config::ModelConfig;
 use crate::ode::RustPropagator;
 use crate::util::rng::Rng;
 
@@ -40,14 +40,6 @@ pub enum Init {
     DeepNet,
 }
 
-fn layer_theta_len(model: &ModelConfig, layer: usize) -> usize {
-    if model.arch == Arch::EncDec && layer >= model.n_enc_layers {
-        model.p_dec()
-    } else {
-        model.p_enc()
-    }
-}
-
 /// Fill one layer's flat θ according to the layout and scheme.
 fn init_layer(model: &ModelConfig, layer: usize, scheme: Init, rng: &mut Rng) -> Vec<f32> {
     let (d, f) = (model.d_model, model.d_ff);
@@ -71,7 +63,7 @@ fn init_layer(model: &ModelConfig, layer: usize, scheme: Init, rng: &mut Rng) ->
         ("w2", f, d, 's'),
         ("b2", d, 1, 'b'),
     ];
-    if layer_theta_len(model, layer) == model.p_dec() {
+    if model.layer_theta_len(layer) == model.p_dec() {
         fields.extend([
             ("ln3_g", d, 1, 'g'),
             ("ln3_b", d, 1, 'b'),
@@ -81,7 +73,7 @@ fn init_layer(model: &ModelConfig, layer: usize, scheme: Init, rng: &mut Rng) ->
             ("co", d, d, 's'),
         ]);
     }
-    let mut theta = Vec::with_capacity(layer_theta_len(model, layer));
+    let mut theta = Vec::with_capacity(model.layer_theta_len(layer));
     for (_, rows, cols, kind) in fields {
         let n = rows * cols;
         match kind {
@@ -92,7 +84,7 @@ fn init_layer(model: &ModelConfig, layer: usize, scheme: Init, rng: &mut Rng) ->
             _ => unreachable!(),
         }
     }
-    debug_assert_eq!(theta.len(), layer_theta_len(model, layer));
+    debug_assert_eq!(theta.len(), model.layer_theta_len(layer));
     theta
 }
 
@@ -128,6 +120,20 @@ impl ParamStore {
         let mut v: Vec<usize> = self.layers.read().unwrap().iter().map(|l| l.len()).collect();
         v.extend([self.w_emb.len(), self.w_pos.len(), self.w_out.len(), self.w_cls.len()]);
         v
+    }
+
+    /// Assemble a store from already-validated flat groups (the session
+    /// checkpoint loader's entry point; [`crate::checkpoint`] has checked
+    /// every length against `model` before this is called).
+    pub fn from_parts(
+        model: ModelConfig,
+        layers: Vec<Vec<f32>>,
+        w_emb: Vec<f32>,
+        w_pos: Vec<f32>,
+        w_out: Vec<f32>,
+        w_cls: Vec<f32>,
+    ) -> ParamStore {
+        ParamStore { model, layers: shared_params(layers), w_emb, w_pos, w_out, w_cls }
     }
 
     /// Deep copy (for serial-vs-parallel comparison runs from one init).
@@ -203,7 +209,7 @@ impl ParamStore {
         let mut layers = Vec::with_capacity(n_layers);
         for l in 0..n_layers {
             let v = read_vec(&mut r)?;
-            if v.len() != layer_theta_len(model, l) {
+            if v.len() != model.layer_theta_len(l) {
                 bail!("layer {} length mismatch", l);
             }
             layers.push(v);

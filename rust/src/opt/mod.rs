@@ -85,6 +85,35 @@ impl Optimizer {
         self.m.len()
     }
 
+    /// Bias-correction step counter (checkpointing).
+    pub fn step_count(&self) -> u64 {
+        self.t
+    }
+
+    /// Per-group moment state `(m, v)` for checkpointing. SGD uses only
+    /// `m` (momentum); `v` stays zero-filled and round-trips as such.
+    pub fn moments(&self) -> (&[Vec<f32>], &[Vec<f32>]) {
+        (&self.m, &self.v)
+    }
+
+    /// Restore moment state saved by [`Optimizer::moments`] plus the step
+    /// counter. Group count and sizes must match this optimizer exactly
+    /// (the checkpoint loader validates them against the model config
+    /// before this is reached, so a mismatch here is a logic error).
+    pub fn restore_moments(&mut self, m: Vec<Vec<f32>>, v: Vec<Vec<f32>>, t: u64) {
+        assert_eq!(m.len(), self.m.len(), "optimizer group count changed");
+        assert_eq!(v.len(), self.v.len(), "optimizer group count changed");
+        for (g, (a, b)) in m.iter().zip(&self.m).enumerate() {
+            assert_eq!(a.len(), b.len(), "optimizer group {} size changed", g);
+        }
+        for (g, (a, b)) in v.iter().zip(&self.v).enumerate() {
+            assert_eq!(a.len(), b.len(), "optimizer group {} size changed", g);
+        }
+        self.m = m;
+        self.v = v;
+        self.t = t;
+    }
+
     /// Begin an optimizer step (advances Adam's bias-correction counter).
     pub fn begin_step(&mut self) {
         self.t += 1;
@@ -215,6 +244,47 @@ mod tests {
         assert!((s.at(1) - 1.0).abs() < 1e-2);
         assert!((s.at(100) - 0.1).abs() < 1e-3);
         assert!((s.at(1000) - 0.1).abs() < 1e-3);
+    }
+
+    #[test]
+    fn moments_roundtrip_restores_the_trajectory() {
+        // two optimizers, same gradients; B is restored from A's snapshot
+        // mid-run and must produce bitwise-identical parameters afterwards
+        let target = [1.0f32, -2.0, 0.5];
+        let grads_at = |w: &[f32]| -> Vec<f32> {
+            w.iter().zip(&target).map(|(a, b)| 2.0 * (a - b)).collect()
+        };
+        let mut wa = vec![0.0f32; 3];
+        let mut a = Optimizer::new(OptKind::Adam, &[3], 0.0);
+        for _ in 0..5 {
+            let g = grads_at(&wa);
+            a.begin_step();
+            a.update(0, 0.05, &mut wa, &g);
+        }
+        let (m, v) = a.moments();
+        let (m, v, t) = (m.to_vec(), v.to_vec(), a.step_count());
+        let mut wb = wa.clone();
+        let mut b = Optimizer::new(OptKind::Adam, &[3], 0.0);
+        b.restore_moments(m, v, t);
+        for _ in 0..5 {
+            let ga = grads_at(&wa);
+            a.begin_step();
+            a.update(0, 0.05, &mut wa, &ga);
+            let gb = grads_at(&wb);
+            b.begin_step();
+            b.update(0, 0.05, &mut wb, &gb);
+        }
+        assert_eq!(
+            wa.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+            wb.iter().map(|x| x.to_bits()).collect::<Vec<_>>()
+        );
+    }
+
+    #[test]
+    #[should_panic]
+    fn restore_rejects_wrong_group_sizes() {
+        let mut o = Optimizer::new(OptKind::Adam, &[3], 0.0);
+        o.restore_moments(vec![vec![0.0; 2]], vec![vec![0.0; 2]], 1);
     }
 
     #[test]

@@ -23,6 +23,20 @@ impl Rng {
         Rng::new(self.next_u64() ^ 0xA5A5_5A5A_DEAD_BEEF)
     }
 
+    /// Raw generator state for checkpointing: the SplitMix64 state word and
+    /// the cached Box-Muller spare. Restoring via [`Rng::from_parts`]
+    /// continues the stream exactly where it left off.
+    pub fn state_parts(&self) -> (u64, Option<f32>) {
+        (self.state, self.spare)
+    }
+
+    /// Rebuild a generator from [`Rng::state_parts`] output. Unlike
+    /// [`Rng::new`], the state word is installed verbatim (no seed
+    /// scrambling) so the resumed stream is bit-identical.
+    pub fn from_parts(state: u64, spare: Option<f32>) -> Rng {
+        Rng { state, spare }
+    }
+
     pub fn next_u64(&mut self) -> u64 {
         self.state = self.state.wrapping_add(0x9E3779B97F4A7C15);
         let mut z = self.state;
@@ -146,6 +160,23 @@ mod tests {
         assert!(counts[1] > counts[0] && counts[1] > counts[2]);
         let frac = counts[1] as f64 / 30_000.0;
         assert!((frac - 0.5).abs() < 0.03, "frac {}", frac);
+    }
+
+    #[test]
+    fn state_parts_resume_bitwise() {
+        let mut r = Rng::new(17);
+        // consume an odd number of normals so the Box-Muller spare is live
+        let _ = r.normal();
+        let (state, spare) = r.state_parts();
+        assert!(spare.is_some(), "odd normal draw must cache a spare");
+        let mut resumed = Rng::from_parts(state, spare);
+        let a: Vec<f32> = (0..16).map(|_| r.normal()).collect();
+        let b: Vec<f32> = (0..16).map(|_| resumed.normal()).collect();
+        assert_eq!(
+            a.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+            b.iter().map(|x| x.to_bits()).collect::<Vec<_>>()
+        );
+        assert_eq!(r.next_u64(), resumed.next_u64());
     }
 
     #[test]

@@ -25,13 +25,21 @@
 //!    refills the session's long-lived `TrainBatch`, `Objective::loss_into`
 //!    writes into the workspace's cotangent buffer and accumulates head
 //!    gradients directly, and `StepWorkspace::clip_global` walks the
-//!    accumulators without a ref-list.
+//!    accumulators without a ref-list;
+//! 5. the steady-state **batched decode loop** of an `InferSession`
+//!    (embed → full forward on the shared train/infer core → logits-only
+//!    head → token selection) allocates exactly zero times, for both the
+//!    greedy and the top-k sampling paths — the serving twin of pin 4.
 
 use std::alloc::{GlobalAlloc, Layout, System};
 use std::sync::atomic::{AtomicU64, Ordering};
 
 use layertime::config::{presets, Arch, MgritConfig, ModelConfig};
-use layertime::coordinator::{Mgrit, Session, SolveContext, StepWorkspace, Task, ThreadedMgrit};
+use layertime::coordinator::{
+    ForwardWorkspace, Mgrit, Session, SolveContext, StepWorkspace, Task, ThreadedMgrit,
+};
+use layertime::infer::{DecodeOptions, InferSession};
+use layertime::model::{Init, ParamStore};
 use layertime::ode::{shared_params, Propagator, RustPropagator};
 use layertime::tensor::Tensor;
 use layertime::util::rng::Rng;
@@ -131,13 +139,14 @@ fn audit_solve_context(workers: usize) {
     let theta_lens: Vec<usize> = layers.iter().map(|t| t.len()).collect();
     let prop = RustPropagator::new(&model, 1.0, shared_params(layers));
     let shape = prop.state_shape();
+    let fwd_ws = ForwardWorkspace::new(n, &shape, &shape);
     let ws = StepWorkspace::new(n, &shape, &shape, &theta_lens, [0, 0, 0, 0]);
     let backend: Box<dyn layertime::coordinator::Backend> = if workers > 1 {
         Box::new(ThreadedMgrit::new(workers))
     } else {
         Box::new(Mgrit)
     };
-    let mut ctx = SolveContext::new(backend, ws);
+    let mut ctx = SolveContext::new(backend, fwd_ws, ws);
     let cfg = MgritConfig { cf: 2, levels: 2, fwd_iters: Some(1), bwd_iters: Some(1), fcf: true };
     let z = Tensor::randn(&mut rng, &shape, 0.8);
     let ct = Tensor::randn(&mut rng, &shape, 1.0);
@@ -151,7 +160,7 @@ fn audit_solve_context(workers: usize) {
 
     // warm up: builds both cores, the worker pool + workspaces + halo
     // scratch (threaded), the warm iterate, and the Φ scratch pool
-    ctx.ws.states[0].copy_from(&z);
+    ctx.fwd.ws.states[0].copy_from(&z);
     for _ in 0..5 {
         round(&mut ctx);
     }
@@ -215,9 +224,53 @@ fn audit_train_step() {
     }
 }
 
+/// The decode pin: the steady-state batched autoregressive decode loop of
+/// an `InferSession` allocates exactly zero times, greedy and top-k both.
+/// Runs the MGRIT forward (cached hierarchy) so the whole serving stack —
+/// embed, solve, logits head, selection — is covered.
+fn audit_decode() {
+    let mut rc = presets::by_name("gpt").expect("gpt preset");
+    rc.model.vocab = 16;
+    rc.model.d_model = 16;
+    rc.model.n_heads = 2;
+    rc.model.d_ff = 32;
+    rc.model.seq = 8;
+    rc.model.batch = 2;
+    rc.model.n_classes = 4;
+    rc.model.n_dec_layers = 6;
+    rc.model.buffer_open = 1;
+    rc.model.buffer_close = 1;
+    rc.mgrit = MgritConfig { cf: 2, levels: 2, fwd_iters: Some(1), bwd_iters: Some(1), fcf: true };
+    let params = ParamStore::init(&rc.model, Init::Default, 5);
+    let mut inf = InferSession::from_parts(rc.clone(), params, Box::new(Mgrit)).expect("session");
+    let plen = rc.model.seq / 2;
+    let prompts: Vec<i32> = vec![1; rc.model.batch * plen];
+    let mut out = Vec::new();
+    for (label, opts) in [
+        ("greedy", DecodeOptions::default()),
+        ("top-k", DecodeOptions { top_k: 4, temperature: 0.9, seed: 3 }),
+    ] {
+        // warm up: out/scratch sizing, core + Φ scratch pool construction
+        for _ in 0..3 {
+            inf.generate_into(&prompts, plen, &opts, &mut out).expect("decode");
+        }
+        let before = ALLOCS.load(Ordering::SeqCst);
+        for _ in 0..3 {
+            inf.generate_into(&prompts, plen, &opts, &mut out).expect("decode");
+        }
+        let delta = ALLOCS.load(Ordering::SeqCst) - before;
+        assert_eq!(
+            delta, 0,
+            "{} decode allocated {} times over 3 steady-state generate calls",
+            label, delta
+        );
+    }
+}
+
 /// Single test (see module docs): the steady-state hot path is
 /// allocation-free — Φ, the solve context on both the single-threaded and
-/// the threaded (in-place sweep) backends, and the entire train step.
+/// the threaded (in-place sweep) backends, the entire train step, and the
+/// batched decode loop.
 #[test]
 fn steady_state_hot_path_is_allocation_free() {
     audit_arch(Arch::Encoder);
@@ -226,4 +279,5 @@ fn steady_state_hot_path_is_allocation_free() {
     audit_solve_context(2);
     audit_solve_context(4);
     audit_train_step();
+    audit_decode();
 }

@@ -1,0 +1,235 @@
+//! Checkpoint round-trip acceptance: `save → resume` continues a training
+//! run **bitwise identically** — the resumed `Session` must produce the
+//! exact `StepRecord` stream (loss/acc/lr/ρ bits) and final parameters of
+//! the uninterrupted run. Covers weights, optimizer moments (Adam m/v/t),
+//! the training RNG stream (incl. the Box-Muller spare), the §3.2.3
+//! controller (batch counter, ρ-history, sticky switch), the divergence
+//! watchdog's initial-loss anchor, and the TorchBraid warm-start iterate.
+//! Also pins the inference path on checkpoints and the corrupt-file /
+//! config-mismatch error surfaces end-to-end.
+
+use layertime::checkpoint::Checkpoint;
+use layertime::config::{presets, MgritConfig, OptKind, RunConfig};
+use layertime::coordinator::{Session, StepRecord, Task};
+use layertime::infer::{DecodeOptions, InferSession};
+
+fn tmp(name: &str) -> String {
+    let p = std::env::temp_dir().join(name);
+    p.to_str().unwrap().to_string()
+}
+
+/// Tiny but feature-dense config: MGRIT forward+adjoint (so the warm
+/// iterate matters), Adam (so moments matter), adaptive probes on a short
+/// cadence (so controller state matters), warmup+cosine LR.
+fn tiny_rc(name: &str, task_steps: usize) -> RunConfig {
+    let mut rc = presets::by_name(name).unwrap();
+    presets::shrink_for_bench(&mut rc);
+    rc.mgrit = MgritConfig { cf: 2, levels: 2, fwd_iters: Some(1), bwd_iters: Some(1), fcf: true };
+    rc.train.steps = task_steps;
+    rc.train.opt = OptKind::Adam;
+    rc.train.warmup = 2;
+    rc.train.adaptive = true;
+    rc.train.probe_every = 3;
+    rc.train.eval_every = 1000; // drive train_step directly
+    rc
+}
+
+fn bits(r: &StepRecord) -> (usize, u32, u32, u32, bool, Option<u64>, Option<u64>) {
+    (
+        r.step,
+        r.loss.to_bits(),
+        r.acc.to_bits(),
+        r.lr.to_bits(),
+        r.serial,
+        r.rho_fwd.map(f64::to_bits),
+        r.rho_bwd.map(f64::to_bits),
+    )
+}
+
+fn params_bits(s: &Session) -> Vec<Vec<u32>> {
+    let mut out: Vec<Vec<u32>> = s
+        .params
+        .layers
+        .read()
+        .unwrap()
+        .iter()
+        .map(|l| l.iter().map(|x| x.to_bits()).collect())
+        .collect();
+    for g in [&s.params.w_emb, &s.params.w_pos, &s.params.w_out, &s.params.w_cls] {
+        out.push(g.iter().map(|x| x.to_bits()).collect());
+    }
+    out
+}
+
+/// Run `total` steps uninterrupted; run `cut` steps, save, resume, run the
+/// rest; every record and the final parameters must match bitwise.
+fn roundtrip_case(rc: RunConfig, task: Task, total: usize, cut: usize, file: &str) {
+    let mut a = Session::builder().config(rc.clone()).task(task).build().unwrap();
+    let recs_a: Vec<StepRecord> = (0..total).map(|_| a.train_step()).collect();
+
+    let mut b = Session::builder().config(rc).task(task).build().unwrap();
+    for _ in 0..cut {
+        b.train_step();
+    }
+    let path = tmp(file);
+    b.save(&path).unwrap();
+    // keep training `b` past the save too: saving must not perturb it
+    let recs_b_tail: Vec<StepRecord> = (0..total - cut).map(|_| b.train_step()).collect();
+    for (x, y) in recs_a[cut..].iter().zip(&recs_b_tail) {
+        assert_eq!(bits(x), bits(y), "saving mid-run must not perturb the run");
+    }
+
+    let mut c = Session::resume(&path).unwrap();
+    assert_eq!(c.step(), cut, "resume must pick up at the saved step");
+    let recs_c: Vec<StepRecord> = (0..total - cut).map(|_| c.train_step()).collect();
+    for (x, y) in recs_a[cut..].iter().zip(&recs_c) {
+        assert_eq!(
+            bits(x),
+            bits(y),
+            "resumed step records must match the uninterrupted run bitwise"
+        );
+    }
+    assert_eq!(
+        params_bits(&a),
+        params_bits(&c),
+        "final parameters must match the uninterrupted run bitwise"
+    );
+    assert_eq!(
+        a.controller.history(),
+        c.controller.history(),
+        "probe history must continue seamlessly"
+    );
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn resume_is_bitwise_identical_encoder_tagging() {
+    // MC task: encoder arch, MGRIT both directions, warm starts active
+    roundtrip_case(tiny_rc("mc", 12), Task::Tag, 12, 5, "lt_rt_mc.ltcp");
+}
+
+#[test]
+fn resume_is_bitwise_identical_encdec_dp2() {
+    // MT task: stacked EncDec state + dp micro-batch stash/fold on top
+    let mut rc = tiny_rc("mt", 8);
+    rc.dp_degree = 2;
+    roundtrip_case(rc, Task::Translate, 8, 3, "lt_rt_mt.ltcp");
+}
+
+#[test]
+fn resume_is_bitwise_identical_decoder_buffers() {
+    // GPT task: decoder arch with serial buffer layers and a serial
+    // forward (buffer sweeps + mid adjoint solve through the checkpoint)
+    let mut rc = tiny_rc("gpt", 8);
+    rc.model.n_dec_layers = 6;
+    rc.model.buffer_open = 1;
+    rc.model.buffer_close = 1;
+    rc.mgrit.fwd_iters = None;
+    roundtrip_case(rc, Task::Lm, 8, 4, "lt_rt_gpt.ltcp");
+}
+
+#[test]
+fn resume_after_a_forced_serial_switch_stays_serial() {
+    let mut rc = tiny_rc("mc", 10);
+    rc.train.probe_every = 2;
+    let mut s = Session::builder().config(rc.clone()).task(Task::Tag).build().unwrap();
+    for _ in 0..3 {
+        s.train_step();
+    }
+    s.controller.force_serial(&mut s.rc.mgrit);
+    s.train_step();
+    let path = tmp("lt_rt_serial.ltcp");
+    s.save(&path).unwrap();
+    let want: Vec<_> = (0..3).map(|_| bits(&s.train_step())).collect();
+    let mut r = Session::resume(&path).unwrap();
+    assert!(r.controller.is_serial(), "the sticky switch must survive the round-trip");
+    assert!(r.rc.mgrit.is_serial(), "the mutated MGRIT config must survive too");
+    let got: Vec<_> = (0..3).map(|_| bits(&r.train_step())).collect();
+    assert_eq!(want, got);
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn inference_runs_off_a_training_checkpoint() {
+    // the train --save → generate/predict pipeline, in-process
+    let rc = tiny_rc("mc", 4);
+    let mut s = Session::builder().config(rc.clone()).task(Task::Tag).build().unwrap();
+    for _ in 0..4 {
+        s.train_step();
+    }
+    let path = tmp("lt_rt_infer.ltcp");
+    s.save(&path).unwrap();
+    let mut inf = InferSession::from_checkpoint(&path).unwrap();
+    let (b, seq) = (inf.rc.model.batch, inf.rc.model.seq);
+    let tokens: Vec<i32> = (0..b * seq).map(|i| (i % 7) as i32).collect();
+    let preds = inf.predict(&tokens).unwrap();
+    assert_eq!(preds.len(), b * seq);
+    // deterministic across a fresh load of the same file
+    let mut inf2 = InferSession::from_checkpoint(&path).unwrap();
+    assert_eq!(preds, inf2.predict(&tokens).unwrap());
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn corrupt_truncated_and_mismatched_files_error_cleanly() {
+    let rc = tiny_rc("mc", 3);
+    let mut s = Session::builder().config(rc).task(Task::Tag).build().unwrap();
+    s.train_step();
+    let path = tmp("lt_rt_err.ltcp");
+    s.save(&path).unwrap();
+    let bytes = std::fs::read(&path).unwrap();
+
+    // truncated file
+    let cut_path = tmp("lt_rt_err_cut.ltcp");
+    std::fs::write(&cut_path, &bytes[..bytes.len() / 2]).unwrap();
+    assert!(Session::resume(&cut_path).is_err());
+    assert!(InferSession::from_checkpoint(&cut_path).is_err());
+
+    // flipped byte → checksum failure
+    let mut bad = bytes.clone();
+    let mid = bad.len() / 2;
+    bad[mid] ^= 0x10;
+    let bad_path = tmp("lt_rt_err_bad.ltcp");
+    std::fs::write(&bad_path, &bad).unwrap();
+    // {:#} renders the anyhow context chain (the root cause names the checksum)
+    let err = format!("{:#}", Session::resume(&bad_path).unwrap_err());
+    assert!(err.contains("checksum"), "{}", err);
+
+    // config mismatch: a checkpoint whose tensor table disagrees with its
+    // own config (decode catches it before any session state is built)
+    let mut ck = Checkpoint::read(&path).unwrap();
+    ck.layers[1].pop();
+    let mm_path = tmp("lt_rt_err_mm.ltcp");
+    ck.write(&mm_path).unwrap();
+    let err = format!("{:#}", Session::resume(&mm_path).unwrap_err());
+    assert!(err.contains("param.layer.1"), "{}", err);
+
+    // missing file
+    assert!(Session::resume(&tmp("lt_rt_err_missing.ltcp")).is_err());
+
+    for p in [&path, &cut_path, &bad_path, &mm_path] {
+        std::fs::remove_file(p).ok();
+    }
+}
+
+#[test]
+fn generate_after_save_works_for_the_decoder_preset() {
+    let mut rc = tiny_rc("gpt", 3);
+    rc.model.n_dec_layers = 4;
+    rc.model.buffer_open = 1;
+    rc.model.buffer_close = 1;
+    let mut s = Session::builder().config(rc).task(Task::Lm).build().unwrap();
+    for _ in 0..3 {
+        s.train_step();
+    }
+    let path = tmp("lt_rt_gen.ltcp");
+    s.save(&path).unwrap();
+    let mut inf = InferSession::from_checkpoint(&path).unwrap();
+    let (b, seq, vocab) = (inf.rc.model.batch, inf.rc.model.seq, inf.rc.model.vocab);
+    let plen = seq / 2;
+    let prompts: Vec<i32> = (0..b * plen).map(|i| (i % 5) as i32).collect();
+    let out = inf.generate(&prompts, plen, &DecodeOptions::default()).unwrap();
+    assert_eq!(out.len(), b * seq);
+    assert!(out.iter().all(|&t| (t as usize) < vocab));
+    std::fs::remove_file(&path).ok();
+}
