@@ -33,6 +33,7 @@ use layertime::model::{Init, ParamStore};
 use layertime::ode::{shared_params, LinearOde, Propagator, RustPropagator, XlaPropagator};
 use layertime::parallel::{exec, WorkerPool};
 use layertime::runtime::{Value, XlaEngine};
+use layertime::serve::{drive_load, GenerateRequest, ServeLoop};
 use layertime::tensor::Tensor;
 use layertime::util::bench::{BenchLog, BenchRunner, Stats};
 use layertime::util::rng::Rng;
@@ -316,6 +317,69 @@ fn main() -> anyhow::Result<()> {
                     (batch * gen_positions) as f64 / st.mean.max(1e-12)
                 );
             }
+        }
+    }
+
+    // --- serve scheduler occupancy sweep -------------------------------------
+    // Continuous-batching throughput on the same decoder LM as the batched-
+    // decode rows: a closed-loop driver keeps `occ` requests in flight
+    // (active + queued) through the bounded queue, with ragged prompt
+    // lengths so joins and retirements interleave. Every request generates
+    // exactly 4 tokens, so tokens/sec = requests · 4 / time; the gap to the
+    // batched-decode rows at the same effective batch is pure scheduler
+    // overhead (admission, per-slot sampling, metrics).
+    {
+        let mut rc = presets::gpt_small();
+        presets::shrink_for_bench(&mut rc);
+        rc.model.n_dec_layers = 8;
+        rc.model.buffer_open = 1;
+        rc.model.buffer_close = 1;
+        rc.model.batch = rc.model.batch.max(8);
+        rc.mgrit =
+            MgritConfig { cf: 2, levels: 2, fwd_iters: Some(1), bwd_iters: Some(1), fcf: true };
+        let (b, seq, vocab) = (rc.model.batch, rc.model.seq, rc.model.vocab);
+        let params = ParamStore::init(&rc.model, Init::Default, 0);
+        let inf = InferSession::from_parts(rc, params, Box::new(Mgrit))?;
+        let mut srv = ServeLoop::new(inf, 2 * b)?;
+        let max_new = 4usize;
+        let mut req_rng = Rng::new(0xBE7C);
+        let mut next_id = 0u64;
+        let mut make_batch = move |count: usize| -> Vec<GenerateRequest> {
+            (0..count)
+                .map(|_| {
+                    next_id += 1;
+                    let plen = 1 + req_rng.range(seq / 2);
+                    let prompt = (0..plen).map(|_| req_rng.range(vocab) as i32).collect();
+                    GenerateRequest {
+                        id: next_id,
+                        prompt,
+                        max_new,
+                        top_k: 8,
+                        temperature: 0.9,
+                        seed: next_id,
+                    }
+                })
+                .collect()
+        };
+        let mut completed = Vec::new();
+        // warm the cached hierarchy + scratch outside the timings
+        drive_load(&mut srv, &make_batch(b), b, &mut completed)?;
+        for &occ in &[1usize, b / 2, b] {
+            let work = 2 * b;
+            completed.clear();
+            completed.reserve(work);
+            let label = format!("serve sweep (occupancy {}, batch {})", occ, b);
+            let st = timed(&runner, &mut log, &label, || {
+                let reqs = make_batch(work);
+                completed.clear();
+                drive_load(&mut srv, &reqs, occ, &mut completed).unwrap();
+                completed.len()
+            });
+            println!(
+                "  -> {:.0} tokens/sec at mean occupancy {:.2}",
+                (work * max_new) as f64 / st.mean.max(1e-12),
+                srv.metrics.mean_occupancy()
+            );
         }
     }
 

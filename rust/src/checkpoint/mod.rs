@@ -62,6 +62,60 @@ pub const MAGIC: &[u8; 4] = b"LTCP";
 /// Current format version.
 pub const VERSION: u32 = 1;
 
+/// Autosave file name for step `step` next to the base save path:
+/// `run.ltcp` → `run.step00000040.ltcp`. The step is zero-padded so
+/// lexicographic order equals chronological order — retention pruning and
+/// the serve hot-reload watcher both rely on that.
+pub fn autosave_path(base: &str, step: usize) -> String {
+    let p = std::path::Path::new(base);
+    let stem = p.file_stem().and_then(|s| s.to_str()).unwrap_or("ckpt");
+    let name = format!("{}.step{:08}.ltcp", stem, step);
+    match p.parent() {
+        Some(dir) if !dir.as_os_str().is_empty() => {
+            dir.join(name).to_string_lossy().into_owned()
+        }
+        _ => name,
+    }
+}
+
+/// Prune old autosaves next to `base`, keeping the newest `keep` files of
+/// the `{stem}.step*.ltcp` family (lexicographic = chronological by the
+/// [`autosave_path`] naming). Returns how many files were removed; unlink
+/// errors are ignored — retention is best-effort and must never take the
+/// training loop down.
+pub fn prune_autosaves(base: &str, keep: usize) -> usize {
+    let p = std::path::Path::new(base);
+    let stem = match p.file_stem().and_then(|s| s.to_str()) {
+        Some(s) => s,
+        None => return 0,
+    };
+    let dir = match p.parent() {
+        Some(d) if !d.as_os_str().is_empty() => d.to_path_buf(),
+        _ => std::path::PathBuf::from("."),
+    };
+    let prefix = format!("{}.step", stem);
+    let mut family: Vec<String> = match std::fs::read_dir(&dir) {
+        Ok(entries) => entries
+            .filter_map(|e| e.ok())
+            .filter_map(|e| e.file_name().to_str().map(String::from))
+            .filter(|n| n.starts_with(&prefix) && n.ends_with(".ltcp"))
+            .collect(),
+        Err(_) => return 0,
+    };
+    if family.len() <= keep {
+        return 0;
+    }
+    family.sort();
+    let excess = family.len() - keep;
+    let mut removed = 0;
+    for name in family.iter().take(excess) {
+        if std::fs::remove_file(dir.join(name)).is_ok() {
+            removed += 1;
+        }
+    }
+    removed
+}
+
 /// Adaptive-controller snapshot carried by a checkpoint (mirrors the
 /// accessors on [`crate::adaptive::AdaptiveController`]).
 #[derive(Debug, Clone, PartialEq)]
@@ -548,6 +602,41 @@ mod tests {
                 )).collect(),
             ),
         }
+    }
+
+    #[test]
+    fn autosave_naming_is_chronological() {
+        assert_eq!(
+            autosave_path("runs/gpt.ltcp", 40),
+            format!("runs{}gpt.step00000040.ltcp", std::path::MAIN_SEPARATOR)
+        );
+        assert_eq!(autosave_path("gpt.ltcp", 7), "gpt.step00000007.ltcp");
+        let a = autosave_path("m.ltcp", 9);
+        let b = autosave_path("m.ltcp", 10);
+        assert!(a < b, "zero-padding keeps lexicographic = chronological");
+    }
+
+    #[test]
+    fn prune_keeps_the_newest_autosaves() {
+        let dir = std::env::temp_dir().join(format!("layertime_prune_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let base_buf = dir.join("m.ltcp");
+        let base = base_buf.to_str().unwrap();
+        for step in [1usize, 2, 3, 4] {
+            std::fs::write(autosave_path(base, step), b"x").unwrap();
+        }
+        // the base save itself is not part of the autosave family
+        std::fs::write(&base_buf, b"x").unwrap();
+        assert_eq!(prune_autosaves(base, 2), 2);
+        let mut left: Vec<String> = std::fs::read_dir(&dir)
+            .unwrap()
+            .map(|e| e.unwrap().file_name().to_string_lossy().into_owned())
+            .collect();
+        left.sort();
+        assert_eq!(left, vec!["m.ltcp", "m.step00000003.ltcp", "m.step00000004.ltcp"]);
+        assert_eq!(prune_autosaves(base, 2), 0, "already at retention");
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

@@ -506,10 +506,49 @@ impl ForwardContext {
         use_warm: bool,
         track_residuals: bool,
     ) -> SolveStats {
+        self.forward_full_cold_rows(prop, cfg, bo, n_mid, iters, use_warm, track_residuals, &[], 0)
+    }
+
+    /// [`ForwardContext::forward_full`] with **per-row warm-start resets**,
+    /// the continuous-batching entry point. Batch rows listed in
+    /// `cold_rows` (each `row_elems` contiguous elements wide in every
+    /// state tensor) have their slice of the warm trajectory overwritten
+    /// with that row's slice of the freshly-embedded Z_{bo} before the mid
+    /// solve — exactly the initial iterate `MgritCore::solve` installs for
+    /// a cold solve. Since every kernel under Φ, restriction, prolongation
+    /// and FAS correction is batch-row-independent, a row that just joined
+    /// the batch then solves bitwise like the first decode step of a solo
+    /// run, while the remaining rows keep warm-chaining undisturbed. With
+    /// `cold_rows` empty this is `forward_full`; when no warm iterate is
+    /// live (or the solve runs serial) the resets are skipped/irrelevant.
+    #[allow(clippy::too_many_arguments)]
+    pub fn forward_full_cold_rows(
+        &mut self,
+        prop: &dyn Propagator,
+        cfg: &MgritConfig,
+        bo: usize,
+        n_mid: usize,
+        iters: Option<usize>,
+        use_warm: bool,
+        track_residuals: bool,
+        cold_rows: &[usize],
+        row_elems: usize,
+    ) -> SolveStats {
         let n_layers = prop.n_steps();
         if bo > 0 {
             // open buffers: serial, in place, one dispatch for the sweep
             prop.step_seq_into(0, 1.0, &mut self.ws.states[..=bo]);
+        }
+        if use_warm && self.warm_valid && !cold_rows.is_empty() && n_mid > 0 {
+            let (z0, rest) = self.ws.states[bo..=bo + n_mid].split_first_mut().unwrap();
+            let z0 = z0.data();
+            for t in rest.iter_mut() {
+                let td = t.data_mut();
+                for &r in cold_rows {
+                    td[r * row_elems..(r + 1) * row_elems]
+                        .copy_from_slice(&z0[r * row_elems..(r + 1) * row_elems]);
+                }
+            }
         }
         let mid = RangeProp::new(prop, bo, n_mid);
         let stats = self.forward_mid(&mid, cfg, bo, iters, use_warm, track_residuals);

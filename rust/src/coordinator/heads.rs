@@ -341,6 +341,32 @@ pub fn lm_infer_into(x: &Tensor, w_out: &[f32], pos: usize, vocab: usize, out: &
     }
 }
 
+/// LM-head logits at a **per-row** sequence position:
+/// `out[b·V .. (b+1)·V] = x[b, positions[b], :] @ w_out`. The
+/// continuous-batching decode kernel — concurrent sequences in one batch
+/// sit at different cursors, so each row projects its own position. Row
+/// `b`'s arithmetic is the identical single-row [`mm_into`] call that
+/// [`lm_infer_into`] makes at `pos = positions[b]`, which is what makes
+/// scheduler outputs bitwise comparable to solo decode runs.
+pub fn lm_infer_rows_into(
+    x: &Tensor,
+    w_out: &[f32],
+    positions: &[usize],
+    vocab: usize,
+    out: &mut [f32],
+) {
+    let (batch, seq, d) = (x.shape()[0], x.shape()[1], x.shape()[2]);
+    assert_eq!(positions.len(), batch, "lm_infer_rows_into: one position per batch row");
+    assert_eq!(out.len(), batch * vocab, "lm_infer_rows_into: logits buffer size mismatch");
+    let xd = x.data();
+    for b in 0..batch {
+        let pos = positions[b];
+        assert!(pos < seq, "lm_infer_rows_into: position {} outside seq {}", pos, seq);
+        let xr = &xd[(b * seq + pos) * d..(b * seq + pos + 1) * d];
+        mm_into(xr, w_out, 1, d, vocab, &mut out[b * vocab..(b + 1) * vocab], false);
+    }
+}
+
 /// Per-token logits for every row: `out[r·C .. (r+1)·C] = x[r, :] @ w`
 /// over all `B·S` rows — batched tagging prediction (w = w_cls) and
 /// masked-LM / teacher-forced prediction (w = w_out, C = vocab). One
@@ -436,6 +462,36 @@ mod tests {
         embed_bwd(&toks, &lam, b, s, d, &mut ge, &mut gp);
         assert_eq!(ge[2 * d], 2.0); // token 2 hit twice
         assert_eq!(gp[0], 1.0);
+    }
+
+    #[test]
+    fn lm_infer_rows_matches_single_position_kernel_bitwise() {
+        let (b, s, d, v) = (3, 4, 8, 6);
+        let mut rng = Rng::new(9);
+        let x = Tensor::randn(&mut rng, &[b, s, d], 0.7);
+        let w = rng.normal_vec(d * v, 0.3);
+        let positions = [2usize, 0, 3];
+        let mut per_row = vec![0.0f32; b * v];
+        lm_infer_rows_into(&x, &w, &positions, v, &mut per_row);
+        // every row must equal the single-position kernel at that row's
+        // position, bit for bit (the scheduler-parity contract)
+        let mut single = vec![0.0f32; b * v];
+        for (r, &pos) in positions.iter().enumerate() {
+            lm_infer_into(&x, &w, pos, v, &mut single);
+            assert_eq!(
+                per_row[r * v..(r + 1) * v]
+                    .iter()
+                    .map(|f| f.to_bits())
+                    .collect::<Vec<_>>(),
+                single[r * v..(r + 1) * v]
+                    .iter()
+                    .map(|f| f.to_bits())
+                    .collect::<Vec<_>>(),
+                "row {} at position {}",
+                r,
+                pos
+            );
+        }
     }
 
     #[test]

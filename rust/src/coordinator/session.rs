@@ -397,6 +397,7 @@ impl SessionBuilder {
             step,
             initial_loss,
             switched_at,
+            autosave: None,
         })
     }
 }
@@ -425,6 +426,17 @@ pub struct Session {
     step: usize,
     initial_loss: Option<f32>,
     switched_at: Option<usize>,
+    /// Periodic checkpointing during [`Session::train`] (`--save-every`).
+    autosave: Option<Autosave>,
+}
+
+/// Periodic-autosave policy: every `every` steps, write
+/// [`crate::checkpoint::autosave_path`]`(base, step)` and keep only the
+/// newest `keep` snapshots (`keep = 0` disables pruning).
+struct Autosave {
+    base: String,
+    every: usize,
+    keep: usize,
 }
 
 impl Session {
@@ -465,6 +477,16 @@ impl Session {
     /// a backend, worker count, or the XLA propagator.
     pub fn resume(path: &str) -> Result<Session> {
         Session::builder().resume(path).build()
+    }
+
+    /// Enable periodic autosave during [`Session::train`]: every `every`
+    /// steps (and at the final step) write a full checkpoint to
+    /// [`crate::checkpoint::autosave_path`]`(base, step)`, then prune the
+    /// family down to the newest `keep` snapshots (`keep = 0` keeps all).
+    /// A `serve --watch` process pointed at the same directory hot-reloads
+    /// each snapshot as it lands.
+    pub fn set_autosave(&mut self, base: &str, every: usize, keep: usize) {
+        self.autosave = Some(Autosave { base: base.to_string(), every: every.max(1), keep });
     }
 
     /// Write a full session checkpoint (config, parameters, optimizer
@@ -828,6 +850,14 @@ impl Session {
             if self.step % eval_every == 0 || self.step == steps {
                 let metric = self.evaluate(2);
                 report.evals.push(EvalRecord { step: self.step, metric });
+            }
+            if let Some(a) = &self.autosave {
+                if self.step % a.every == 0 || self.step == steps {
+                    self.save(&crate::checkpoint::autosave_path(&a.base, self.step))?;
+                    if a.keep > 0 {
+                        crate::checkpoint::prune_autosaves(&a.base, a.keep);
+                    }
+                }
             }
             report.curve.push(rec);
         }

@@ -34,6 +34,16 @@
 //! **allocation-free**, exactly like the training step: the token board,
 //! logits, top-k scratch and all solver storage persist across steps
 //! (pinned by `rust/tests/alloc_audit.rs`).
+//!
+//! Top-k sampling draws from **per-sequence RNG streams** ([`row_seed`]
+//! derives row `b`'s stream from `DecodeOptions::seed`), so one row's
+//! tokens never depend on how many other rows are sampling next to it —
+//! the property the continuous-batching scheduler ([`crate::serve`])
+//! builds on to keep each request reproducible independent of batch
+//! composition. The serve scheduler drives the session through the
+//! row-granular entry points ([`InferSession::forward_board`] with
+//! per-row warm-start resets, [`InferSession::logits_rows`] with per-row
+//! cursors, and [`InferSession::swap_checkpoint`] for hot-reload).
 
 use anyhow::{bail, ensure, Result};
 
@@ -55,8 +65,10 @@ pub struct DecodeOptions {
     /// Softmax temperature for top-k sampling (ignored when greedy);
     /// `T ≤ 0` is the argmax limit — it degenerates to greedy.
     pub temperature: f32,
-    /// Sampling-RNG seed; every `generate`/`translate` call reseeds, so a
+    /// Base sampling seed; every `generate`/`translate` call reseeds, so a
     /// call is a deterministic function of (checkpoint, inputs, options).
+    /// Each batch row samples from its own stream ([`row_seed`] mixes the
+    /// row index in), so a row's tokens are independent of its neighbours.
     pub seed: u64,
 }
 
@@ -74,8 +86,10 @@ pub struct InferSession {
     /// The shared train/infer forward core.
     ctx: ForwardContext,
     task: Task,
-    /// Sampling RNG (reseeded per decode call from `DecodeOptions::seed`).
-    rng: Rng,
+    /// Per-row sampling RNGs (reseeded per decode call from
+    /// `DecodeOptions::seed` via [`row_seed`]; the serve scheduler manages
+    /// its own per-request streams instead).
+    row_rngs: Vec<Rng>,
     /// Reusable logits scratch, sized for the largest head this task
     /// family projects (`B·S·max(V, C)` covers decode and predict).
     logits: Vec<f32>,
@@ -98,7 +112,12 @@ impl InferSession {
     /// Build from a session checkpoint, selecting the relaxation worker
     /// count (`> 1` → the threaded MGRIT backend, bitwise identical).
     pub fn from_checkpoint_with(path: &str, workers: usize) -> Result<InferSession> {
-        let ck = Checkpoint::read(path)?;
+        InferSession::from_checkpoint_parts(Checkpoint::read(path)?, workers)
+    }
+
+    /// Build from an in-memory checkpoint image (the hot-reload startup
+    /// path: `serve --watch DIR` loads the newest valid file itself).
+    pub fn from_checkpoint_parts(ck: Checkpoint, workers: usize) -> Result<InferSession> {
         let params = ParamStore::from_parts(
             ck.rc.model.clone(),
             ck.layers,
@@ -128,7 +147,7 @@ impl InferSession {
         let ctx = ForwardContext::new(backend, ws);
         let logits_len = m.batch * m.seq * m.vocab.max(m.n_classes);
         Ok(InferSession {
-            rng: Rng::new(0),
+            row_rngs: Vec::new(),
             logits: vec![0.0; logits_len],
             pooled: Vec::new(),
             board: Vec::new(),
@@ -232,7 +251,8 @@ impl InferSession {
             b,
             prompt_len
         );
-        self.rng = Rng::new(opts.seed);
+        self.row_rngs.clear();
+        self.row_rngs.extend((0..b).map(|bi| Rng::new(row_seed(opts.seed, bi))));
         out.clear();
         out.resize(b * s, 0);
         for bi in 0..b {
@@ -255,8 +275,13 @@ impl InferSession {
             );
             for bi in 0..b {
                 let lg = &self.logits[bi * vocab..(bi + 1) * vocab];
-                let tok =
-                    pick_token(lg, opts, &mut self.rng, &mut self.topk_idx, &mut self.topk_val);
+                let tok = pick_token(
+                    lg,
+                    opts,
+                    &mut self.row_rngs[bi],
+                    &mut self.topk_idx,
+                    &mut self.topk_val,
+                );
                 out[bi * s + p] = tok;
             }
         }
@@ -297,7 +322,8 @@ impl InferSession {
         let bos = (vocab - 1) as i32;
         // per-call determinism: start cold, warm-chain within the call
         self.ctx.clear_warm();
-        self.rng = Rng::new(opts.seed);
+        self.row_rngs.clear();
+        self.row_rngs.extend((0..b).map(|bi| Rng::new(row_seed(opts.seed, bi))));
         out.clear();
         out.resize(b * s, 0);
         let mut board = std::mem::take(&mut self.board);
@@ -319,8 +345,13 @@ impl InferSession {
             );
             for bi in 0..b {
                 let lg = &self.logits[bi * vocab..(bi + 1) * vocab];
-                let tok =
-                    pick_token(lg, opts, &mut self.rng, &mut self.topk_idx, &mut self.topk_val);
+                let tok = pick_token(
+                    lg,
+                    opts,
+                    &mut self.row_rngs[bi],
+                    &mut self.topk_idx,
+                    &mut self.topk_val,
+                );
                 out[bi * s + p] = tok;
                 if p + 1 < s {
                     board[bi * s + p + 1] = tok;
@@ -391,6 +422,137 @@ impl InferSession {
         self.predict_into(tokens, &mut out)?;
         Ok(out)
     }
+
+    // --- row-granular entry points for the continuous-batching scheduler
+    //     (`crate::serve`): the scheduler owns the token board and the
+    //     per-request cursors/RNGs; the session supplies the forward solve
+    //     and per-row logit projection ---
+
+    /// One batched forward over a caller-owned `[B, seq]` token board for
+    /// the causal LM head. Unlike [`InferSession::generate_into`] this does
+    /// **not** clear the warm trajectory — the scheduler chains warm starts
+    /// across decode steps of a long-lived batch and instead names the
+    /// rows whose occupant just changed in `cold_rows`: those rows' warm
+    /// iterate is reset to their fresh Z_0 (per-row cold start), so a
+    /// newly joined request solves exactly like its solo cold first step
+    /// while the neighbouring rows keep their warm parity.
+    pub fn forward_board(&mut self, board: &[i32], cold_rows: &[usize]) -> Result<()> {
+        ensure!(
+            self.task == Task::Lm,
+            "serve drives the causal LM head; task {:?} has no row-granular decode",
+            self.task
+        );
+        let m = &self.rc.model;
+        let (b, s, d) = (m.batch, m.seq, m.d_model);
+        ensure!(board.len() == b * s, "board has {} tokens, expected {}", board.len(), b * s);
+        for &r in cold_rows {
+            ensure!(r < b, "cold row {} outside batch {}", r, b);
+        }
+        heads::embed_state_into(
+            board,
+            None,
+            &self.params.w_emb,
+            &self.params.w_pos,
+            b,
+            s,
+            d,
+            self.ctx.ws.states[0].data_mut(),
+        );
+        let (bo, n_mid) = mid_range(&self.rc.model);
+        self.ctx.forward_full_cold_rows(
+            self.prop.as_ref(),
+            &self.rc.mgrit,
+            bo,
+            n_mid,
+            self.rc.mgrit.fwd_iters,
+            true,
+            false,
+            cold_rows,
+            s * d,
+        );
+        Ok(())
+    }
+
+    /// Project logits at a **per-row** position from the final state the
+    /// last [`InferSession::forward_board`] left in the workspace: row `b`
+    /// reads position `positions[b]`. Returns the `[B, vocab]` logits
+    /// slice (row-major, reusable scratch — valid until the next call).
+    pub fn logits_rows(&mut self, positions: &[usize]) -> Result<&[f32]> {
+        ensure!(
+            self.task == Task::Lm,
+            "serve drives the causal LM head; task {:?} has no row-granular decode",
+            self.task
+        );
+        let (b, vocab) = (self.rc.model.batch, self.rc.model.vocab);
+        ensure!(positions.len() == b, "positions has {} rows, expected {}", positions.len(), b);
+        let n_layers = self.rc.model.total_layers();
+        let x = self.ctx.ws.staged_head_view(n_layers, false);
+        heads::lm_infer_rows_into(
+            x,
+            &self.params.w_out,
+            positions,
+            vocab,
+            &mut self.logits[..b * vocab],
+        );
+        Ok(&self.logits[..b * vocab])
+    }
+
+    /// Drop the warm trajectory (all rows solve cold on the next forward).
+    pub fn reset_warm(&mut self) {
+        self.ctx.clear_warm();
+    }
+
+    /// Hot-swap the session's weights to another checkpoint **in place**
+    /// (no solver storage or scratch is reallocated). The new checkpoint
+    /// must describe the same model shape and task family; the warm
+    /// trajectory is dropped because it belongs to the old weights. The
+    /// serve loop calls this only between decode steps, so every request's
+    /// step-`p` tokens come from exactly one weight snapshot.
+    pub fn swap_checkpoint(&mut self, ck: &Checkpoint) -> Result<()> {
+        ensure!(
+            ck.rc.model == self.rc.model,
+            "hot-reload requires an identical model config (serving {}, checkpoint {})",
+            self.rc.name,
+            ck.rc.name
+        );
+        let new_task = Task::for_preset(&ck.rc.name)?;
+        ensure!(
+            new_task == self.task,
+            "hot-reload cannot change the task family ({:?} -> {:?})",
+            self.task,
+            new_task
+        );
+        {
+            let mut layers = self.params.layers.write().unwrap();
+            ensure!(
+                layers.len() == ck.layers.len(),
+                "layer count changed ({} -> {})",
+                layers.len(),
+                ck.layers.len()
+            );
+            for (dst, src) in layers.iter_mut().zip(ck.layers.iter()) {
+                ensure!(dst.len() == src.len(), "layer parameter size changed");
+                dst.copy_from_slice(src);
+            }
+        }
+        self.params.w_emb.copy_from_slice(&ck.w_emb);
+        self.params.w_pos.copy_from_slice(&ck.w_pos);
+        self.params.w_out.copy_from_slice(&ck.w_out);
+        self.params.w_cls.copy_from_slice(&ck.w_cls);
+        self.ctx.clear_warm();
+        Ok(())
+    }
+}
+
+/// Derive batch row `row`'s sampling stream from a base seed (SplitMix64
+/// finalizer over a golden-ratio row mix). Distinct rows get well-separated
+/// streams, and a row's stream never depends on how many rows exist — the
+/// property the serve scheduler's occupancy-independence guarantee rests on.
+pub fn row_seed(seed: u64, row: usize) -> u64 {
+    let mut z = seed ^ (row as u64).wrapping_mul(0x9E3779B97F4A7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+    z ^ (z >> 31)
 }
 
 /// Row-wise argmax of a `[rows, width]` logits grid into `out` (resized).
@@ -411,8 +573,9 @@ fn argmax_rows(logits: &[f32], width: usize, rows: usize, out: &mut Vec<i32>) {
 
 /// Select one token from a logits row: greedy argmax, or temperature
 /// softmax over the running top-k (maintained in the caller's reusable
-/// scratch — no per-call allocations once capacity ≥ k).
-fn pick_token(
+/// scratch — no per-call allocations once capacity ≥ k). Public because
+/// the serve scheduler samples from per-request RNG streams it owns.
+pub fn pick_token(
     logits: &[f32],
     opts: &DecodeOptions,
     rng: &mut Rng,

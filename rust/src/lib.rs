@@ -62,6 +62,11 @@
 //!   greedy/top-k autoregressive decoding (LM + Translate) and batched
 //!   classification/tagging prediction, allocation-free at steady state
 //!   like the training step (`rust/tests/alloc_audit.rs`).
+//! * [`serve::ServeLoop`] — a continuous-batching inference service on
+//!   top: bounded request queue with backpressure, dynamic batching
+//!   (join-mid-flight / early-retirement with per-row warm-start resets),
+//!   checkpoint hot-reload between decode steps, and queue/occupancy/
+//!   latency observability (`layertime serve` / `bench-serve`).
 //!
 //! ## Checkpoints ([`checkpoint`])
 //!
@@ -107,6 +112,7 @@ pub mod opt;
 pub mod parallel;
 pub mod reference;
 pub mod runtime;
+pub mod serve;
 pub mod tensor;
 pub mod util;
 
@@ -119,6 +125,7 @@ pub mod prelude {
         ThreadedMgrit, TrainReport,
     };
     pub use crate::infer::{DecodeOptions, InferSession};
+    pub use crate::serve::{GenerateRequest, RequestQueue, ServeLoop, ServeMetrics};
     pub use crate::tensor::Tensor;
     pub use crate::util::rng::Rng;
 }

@@ -2,9 +2,13 @@
 //!
 //! Subcommands:
 //!   train      run one training job (preset + overrides; --save/--resume
-//!              for full-session checkpoints, --report for JSON run logs)
+//!              for full-session checkpoints, --save-every/--keep for
+//!              periodic autosave + retention, --report for JSON run logs)
 //!   generate   batched autoregressive decoding from a checkpoint
 //!   predict    batched classification/tagging/LM prediction from a checkpoint
+//!   serve      continuous-batching inference service (file-request mode,
+//!              per-request sampling params, checkpoint hot-reload)
+//!   bench-serve  closed-loop load driver over the serve scheduler
 //!   compare    serial vs layer-parallel vs adaptive-switch from one init
 //!   simulate   performance-model a topology (layers × lp × dp × MGRIT)
 //!   lipschitz  estimate per-layer Lipschitz constants (Appendix B)
@@ -13,12 +17,17 @@
 //! Examples:
 //!   layertime train --preset mc --enc-layers 64 --cf 2 --steps 300
 //!   layertime train --preset gpt --steps 200 --save runs/gpt.ltcp
+//!   layertime train --preset gpt --steps 200 --save runs/gpt.ltcp --save-every 50 --keep 3
 //!   layertime train --resume runs/gpt.ltcp --steps 400
 //!   layertime generate --ckpt runs/gpt.ltcp --top-k 4 --max-new 16
 //!   layertime predict --ckpt runs/mc.ltcp --batches 8
+//!   layertime serve --ckpt runs/gpt.ltcp --requests reqs.json --metrics metrics.json
+//!   layertime serve --watch runs/ --requests - --out results.json
+//!   layertime bench-serve --ckpt runs/gpt.ltcp --count 64 --occupancy 8
 //!   layertime simulate --preset bert --lp 8 --dp 4
 
 use std::sync::Arc;
+use std::time::Duration;
 
 use anyhow::{anyhow, bail, Result};
 
@@ -29,13 +38,15 @@ use layertime::model::{Init, ParamStore};
 use layertime::ode::Propagator;
 use layertime::parallel::{DeviceModel, SimConfig, Simulator};
 use layertime::runtime::XlaEngine;
+use layertime::serve::{drive_load, requests_from_json, GenerateRequest, HotReload, ServeLoop};
+use layertime::util::bench::Stats;
 use layertime::util::cli::Args;
 use layertime::util::csv::CsvWriter;
 use layertime::util::json;
 use layertime::util::rng::Rng;
 use layertime::util::table::{f, i, Table};
 
-const USAGE: &str = "layertime <train|generate|predict|compare|simulate|lipschitz|info> [options]
+const USAGE: &str = "layertime <train|generate|predict|serve|bench-serve|compare|simulate|lipschitz|info> [options]
   common:     --preset {bert|mc|vit|mt|gpt}  --seed N
   model:      --enc-layers N --dec-layers N --batch N --buffer-open N --buffer-close N
   mgrit:      --cf N --levels N --fwd-iters {N|serial} --bwd-iters {N|serial}
@@ -44,10 +55,18 @@ const USAGE: &str = "layertime <train|generate|predict|compare|simulate|lipschit
   topology:   --lp N --dp N --device {v100|a100}
   checkpoint: --save PATH (full session), --resume PATH (continue bitwise;
               only --steps/--workers/--out/--report/--save apply on top),
-              --checkpoint PATH (weights-only, legacy)
+              --save-every N --keep K (periodic autosave next to --save PATH,
+              oldest pruned past K), --checkpoint PATH (weights-only, legacy)
   inference:  generate|predict --ckpt PATH [--workers N] [--fwd-iters {N|serial}]
               generate: --max-new N --top-k K --temperature F --seed N
               predict:  --batches N
+  serve:      --ckpt PATH and/or --watch DIR (hot-reload newest valid .ltcp)
+              --requests FILE|- (JSON: [{\"prompt\": [..], \"id\", \"max_new\",
+              \"top_k\", \"temperature\", \"seed\"}, ..] or {\"requests\": [..]})
+              --queue N (backpressure capacity) --feeders N (producer threads)
+              --reload-every N (poll cadence, steps) --out FILE --metrics FILE
+  bench-serve: --ckpt PATH --count N --occupancy N [--max-new N --top-k K
+              --temperature F --seed N --metrics FILE]
   output:     --out runs/NAME.csv --report runs/NAME.json";
 
 fn engine_from(args: &Args) -> Result<Option<Arc<XlaEngine>>> {
@@ -120,6 +139,20 @@ fn cmd_train(args: &Args) -> Result<()> {
         }
     };
     println!("backend: {}, objective: {}", run.backend_name(), run.objective_name());
+    if let Some(every) = args.get("save-every") {
+        let every: usize = every.parse().map_err(|_| anyhow!("--save-every expects a step count"))?;
+        let base = args.get("save").ok_or_else(|| {
+            anyhow!("--save-every needs --save PATH (the autosave base name and directory)")
+        })?;
+        let keep = args.get_usize("keep", 3);
+        run.set_autosave(base, every, keep);
+        println!(
+            "autosave: every {} step(s) next to {}, keeping the newest {}",
+            every.max(1),
+            base,
+            keep
+        );
+    }
     let report = run.train()?;
     let mut tbl = Table::new(&["step", "loss", "acc", "serial", "rho_fwd", "rho_bwd"]);
     for r in report.curve.iter().step_by((report.curve.len() / 20).max(1)) {
@@ -346,6 +379,177 @@ fn cmd_predict(args: &Args) -> Result<()> {
     predict_run(args, &mut inf)
 }
 
+/// Continuous-batching inference service in port-less file-request mode:
+/// requests come from a JSON file (or stdin with `--requests -`), feeder
+/// worker threads push them through the bounded queue (blocking under
+/// backpressure), the scheduler serves until everything drains, and the
+/// results/metrics land on stdout and optional JSON files. `--watch DIR`
+/// hot-reloads newer autosaves mid-stream.
+fn cmd_serve(args: &Args) -> Result<()> {
+    let workers = args.get_usize("workers", 1);
+    let mut watch: Option<HotReload> = args.get("watch").map(HotReload::new);
+    let mut inf = match args.get("ckpt") {
+        Some(path) => {
+            let inf = InferSession::from_checkpoint_with(path, workers)?;
+            println!("serving checkpoint {}", path);
+            inf
+        }
+        None => {
+            let hr = watch
+                .as_mut()
+                .ok_or_else(|| anyhow!("serve needs --ckpt PATH or --watch DIR"))?;
+            let (path, ck) = hr.poll().ok_or_else(|| {
+                anyhow!("--watch {}: no valid .ltcp checkpoint found", hr.dir().display())
+            })?;
+            println!("serving newest checkpoint {} from watch dir", path.display());
+            InferSession::from_checkpoint_parts(ck, workers)?
+        }
+    };
+    if let Some(v) = args.get("fwd-iters") {
+        inf.set_fwd_iters(if v == "serial" { None } else { Some(v.parse()?) });
+    }
+    let text = match args.get("requests") {
+        Some("-") => {
+            let mut t = String::new();
+            std::io::Read::read_to_string(&mut std::io::stdin(), &mut t)?;
+            t
+        }
+        Some(path) => std::fs::read_to_string(path)
+            .map_err(|e| anyhow!("reading requests file {}: {}", path, e))?,
+        None => bail!("serve runs in file-request mode: pass --requests FILE (or - for stdin)"),
+    };
+    let requests = requests_from_json(&text)?;
+    let mut srv = ServeLoop::new(inf, args.get_usize("queue", 64))?;
+    if let Some(hr) = watch {
+        srv.set_watch(hr, args.get_u64("reload-every", 64));
+    }
+    let n_feeders = args.get_usize("feeders", 1).max(1);
+    println!(
+        "serving {} request(s) on '{}' ({} slot(s), queue capacity {}, {} feeder thread(s))",
+        requests.len(),
+        srv.session().rc.name,
+        srv.session().rc.model.batch,
+        srv.queue().capacity(),
+        n_feeders
+    );
+    // feeder worker threads submit round-robin shards into the bounded
+    // queue (blocking under backpressure); a closer thread joins them and
+    // closes the queue so the serve loop knows when to exit
+    let mut shards: Vec<Vec<GenerateRequest>> = (0..n_feeders).map(|_| Vec::new()).collect();
+    for (i, req) in requests.into_iter().enumerate() {
+        shards[i % n_feeders].push(req);
+    }
+    let feeders: Vec<_> = shards
+        .into_iter()
+        .map(|shard| {
+            let q = srv.queue();
+            std::thread::spawn(move || {
+                for req in shard {
+                    if q.submit_blocking(req).is_err() {
+                        break;
+                    }
+                }
+            })
+        })
+        .collect();
+    let closer_q = srv.queue();
+    let closer = std::thread::spawn(move || {
+        for h in feeders {
+            h.join().ok();
+        }
+        closer_q.close();
+    });
+    srv.run(Duration::from_millis(50))?;
+    closer.join().ok();
+    let completed = srv.take_completed();
+    for c in completed.iter().take(4) {
+        println!(
+            "req {:>3}: {} | {}",
+            c.id,
+            fmt_tokens(&c.tokens[..c.prompt_len]),
+            fmt_tokens(&c.tokens[c.prompt_len..])
+        );
+    }
+    let qs = srv.queue().stats();
+    let met = &srv.metrics;
+    println!(
+        "completed {}/{} request(s): {:.1} tok/s decode, mean occupancy {:.2} (peak {}), {} reload(s)",
+        met.completed,
+        qs.submitted,
+        met.tokens_per_sec(),
+        met.mean_occupancy(),
+        met.peak_occupancy,
+        met.reloads
+    );
+    if let Some(path) = args.get("out") {
+        let j = json::obj(vec![(
+            "results",
+            json::arr(completed.iter().map(|c| c.to_json()).collect()),
+        )]);
+        std::fs::write(path, j.to_string_pretty())?;
+        println!("wrote {}", path);
+    }
+    if let Some(path) = args.get("metrics") {
+        std::fs::write(path, met.to_json(qs.submitted, qs.rejected).to_string_pretty())?;
+        println!("wrote {}", path);
+    }
+    Ok(())
+}
+
+/// Closed-loop load driver over the serve scheduler: `--count` synthetic
+/// requests with varied prompt lengths, held at `--occupancy` in-flight.
+fn cmd_bench_serve(args: &Args) -> Result<()> {
+    let inf = infer_from(args)?;
+    let m = inf.rc.model.clone();
+    let count = args.get_usize("count", 32).max(1);
+    let occupancy = args.get_usize("occupancy", m.batch).max(1);
+    let top_k = args.get_usize("top-k", 0);
+    let temperature = args.get_f32("temperature", 1.0);
+    let max_new = args.get_usize("max-new", 0);
+    let mut rng = Rng::new(args.get_u64("seed", 0) ^ 0xBE7C);
+    let requests: Vec<GenerateRequest> = (0..count)
+        .map(|i| {
+            // varied prompt lengths make retirements ragged — the load
+            // pattern continuous batching exists for
+            let plen = 1 + rng.range(m.seq / 2);
+            let prompt = (0..plen).map(|_| rng.range(m.vocab) as i32).collect();
+            GenerateRequest { id: i as u64, prompt, max_new, top_k, temperature, seed: i as u64 }
+        })
+        .collect();
+    let mut srv = ServeLoop::new(inf, occupancy)?;
+    let mut completed = Vec::new();
+    let t0 = std::time::Instant::now();
+    drive_load(&mut srv, &requests, occupancy, &mut completed)?;
+    let wall = t0.elapsed().as_secs_f64();
+    let met = &srv.metrics;
+    println!(
+        "bench-serve: {} request(s) at target occupancy {} ({})",
+        count,
+        occupancy,
+        if top_k == 0 { "greedy".to_string() } else { format!("top-{}", top_k) }
+    );
+    println!(
+        "  {} tokens in {:.3} s wall — {:.1} tok/s decode, mean occupancy {:.2} (peak {})",
+        met.tokens_generated,
+        wall,
+        met.tokens_per_sec(),
+        met.mean_occupancy(),
+        met.peak_occupancy
+    );
+    let lat: Vec<f64> = completed.iter().map(|c| c.latency).collect();
+    let ttft: Vec<f64> = completed.iter().map(|c| c.ttft).collect();
+    if !lat.is_empty() {
+        println!("  latency  {}", Stats::from_samples(lat).summary());
+        println!("  ttft     {}", Stats::from_samples(ttft).summary());
+    }
+    if let Some(path) = args.get("metrics") {
+        let qs = srv.queue().stats();
+        std::fs::write(path, met.to_json(qs.submitted, qs.rejected).to_string_pretty())?;
+        println!("wrote {}", path);
+    }
+    Ok(())
+}
+
 fn cmd_compare(args: &Args) -> Result<()> {
     let rc = run_config(args)?;
     let task = Task::for_preset(&rc.name)?;
@@ -490,6 +694,8 @@ fn main() -> Result<()> {
         "train" => cmd_train(&args),
         "generate" => cmd_generate(&args),
         "predict" => cmd_predict(&args),
+        "serve" => cmd_serve(&args),
+        "bench-serve" => cmd_bench_serve(&args),
         "compare" => cmd_compare(&args),
         "simulate" => cmd_simulate(&args),
         "lipschitz" => cmd_lipschitz(&args),

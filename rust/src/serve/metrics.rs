@@ -1,0 +1,219 @@
+//! Per-request and aggregate serving observability.
+//!
+//! [`ServeMetrics`] is updated inline by the scheduler: one
+//! [`ServeMetrics::record_step`] per decode step (occupancy, wall-clock,
+//! queue depth) plus time-to-first-token and latency samples at the
+//! per-request milestones. Sample vectors are **preallocated at a fixed
+//! cap** and stop growing past it (the aggregates keep counting), so
+//! recording never allocates at steady state — part of the contract
+//! pinned by `rust/tests/alloc_audit.rs`. The JSON report reuses
+//! [`Stats::from_samples`] for the latency distributions, matching the
+//! fields the bench harness emits.
+
+use std::time::Instant;
+
+use crate::util::bench::Stats;
+use crate::util::json::{self, Json};
+
+/// Aggregate serving counters + capped latency samples (see module docs).
+#[derive(Debug)]
+pub struct ServeMetrics {
+    /// Requests retired.
+    pub completed: u64,
+    /// Tokens emitted across all requests.
+    pub tokens_generated: u64,
+    /// Decode steps that ran a forward (occupancy ≥ 1).
+    pub decode_steps: u64,
+    /// Steps skipped because no slot was active.
+    pub idle_steps: u64,
+    /// Successful checkpoint hot-reloads.
+    pub reloads: u64,
+    /// Highest batch occupancy observed.
+    pub peak_occupancy: usize,
+    /// Highest queue depth observed at a step boundary.
+    pub peak_queue_depth: usize,
+    occupancy_sum: u64,
+    queue_depth_sum: u64,
+    /// Wall-clock spent inside decode steps (the tokens/sec denominator).
+    decode_secs: f64,
+    /// Capped sample vectors (preallocated; see module docs).
+    ttft: Vec<f64>,
+    latency: Vec<f64>,
+    step_secs: Vec<f64>,
+    cap: usize,
+    started: Instant,
+}
+
+impl ServeMetrics {
+    /// `cap` bounds every sample vector (aggregates are unbounded).
+    pub fn with_capacity(cap: usize) -> ServeMetrics {
+        ServeMetrics {
+            completed: 0,
+            tokens_generated: 0,
+            decode_steps: 0,
+            idle_steps: 0,
+            reloads: 0,
+            peak_occupancy: 0,
+            peak_queue_depth: 0,
+            occupancy_sum: 0,
+            queue_depth_sum: 0,
+            decode_secs: 0.0,
+            ttft: Vec::with_capacity(cap),
+            latency: Vec::with_capacity(cap),
+            step_secs: Vec::with_capacity(cap),
+            cap,
+            started: Instant::now(),
+        }
+    }
+
+    /// Record a request's time-to-first-token (seconds from submission).
+    pub fn push_ttft(&mut self, secs: f64) {
+        if self.ttft.len() < self.cap {
+            self.ttft.push(secs);
+        }
+    }
+
+    /// Record a retired request's total latency (seconds).
+    pub fn push_latency(&mut self, secs: f64) {
+        if self.latency.len() < self.cap {
+            self.latency.push(secs);
+        }
+    }
+
+    /// Record one decode step: how many slots were active, how long the
+    /// step took, and the queue depth left behind.
+    pub fn record_step(&mut self, occupancy: usize, took_secs: f64, queue_depth: usize) {
+        self.decode_steps += 1;
+        self.occupancy_sum += occupancy as u64;
+        self.peak_occupancy = self.peak_occupancy.max(occupancy);
+        self.queue_depth_sum += queue_depth as u64;
+        self.peak_queue_depth = self.peak_queue_depth.max(queue_depth);
+        self.decode_secs += took_secs;
+        if self.step_secs.len() < self.cap {
+            self.step_secs.push(took_secs);
+        }
+    }
+
+    /// Mean batch occupancy over decode steps (0 before the first step).
+    pub fn mean_occupancy(&self) -> f64 {
+        if self.decode_steps == 0 {
+            0.0
+        } else {
+            self.occupancy_sum as f64 / self.decode_steps as f64
+        }
+    }
+
+    /// Mean queue depth at step boundaries.
+    pub fn mean_queue_depth(&self) -> f64 {
+        if self.decode_steps == 0 {
+            0.0
+        } else {
+            self.queue_depth_sum as f64 / self.decode_steps as f64
+        }
+    }
+
+    /// Aggregate decode throughput: generated tokens per second of decode
+    /// wall-clock (0 before the first step).
+    pub fn tokens_per_sec(&self) -> f64 {
+        if self.decode_secs <= 0.0 {
+            0.0
+        } else {
+            self.tokens_generated as f64 / self.decode_secs
+        }
+    }
+
+    /// Seconds since the metrics (= the serve loop) started.
+    pub fn uptime_secs(&self) -> f64 {
+        self.started.elapsed().as_secs_f64()
+    }
+
+    fn dist_json(samples: &[f64]) -> Json {
+        if samples.is_empty() {
+            return Json::Null;
+        }
+        let st = Stats::from_samples(samples.to_vec());
+        json::obj(vec![
+            ("mean_ms", json::num(st.mean * 1e3)),
+            ("p50_ms", json::num(st.p50 * 1e3)),
+            ("p95_ms", json::num(st.p95 * 1e3)),
+            ("min_ms", json::num(st.min * 1e3)),
+            ("samples", json::int(st.samples as i64)),
+        ])
+    }
+
+    /// The metrics document `layertime serve --metrics FILE` writes.
+    /// Queue counters come from the caller (the queue owns them).
+    pub fn to_json(&self, submitted: u64, rejected: u64) -> Json {
+        json::obj(vec![
+            ("submitted", json::int(submitted as i64)),
+            ("rejected", json::int(rejected as i64)),
+            ("completed", json::int(self.completed as i64)),
+            ("tokens_generated", json::int(self.tokens_generated as i64)),
+            ("decode_steps", json::int(self.decode_steps as i64)),
+            ("idle_steps", json::int(self.idle_steps as i64)),
+            ("reloads", json::int(self.reloads as i64)),
+            ("mean_occupancy", json::num(self.mean_occupancy())),
+            ("peak_occupancy", json::int(self.peak_occupancy as i64)),
+            ("mean_queue_depth", json::num(self.mean_queue_depth())),
+            ("peak_queue_depth", json::int(self.peak_queue_depth as i64)),
+            ("tokens_per_sec", json::num(self.tokens_per_sec())),
+            ("uptime_secs", json::num(self.uptime_secs())),
+            ("ttft", ServeMetrics::dist_json(&self.ttft)),
+            ("latency", ServeMetrics::dist_json(&self.latency)),
+            ("step", ServeMetrics::dist_json(&self.step_secs)),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn aggregates_and_caps() {
+        let mut m = ServeMetrics::with_capacity(2);
+        m.record_step(2, 0.010, 1);
+        m.record_step(4, 0.030, 3);
+        m.record_step(3, 0.020, 2);
+        m.tokens_generated = 9;
+        assert_eq!(m.decode_steps, 3);
+        assert!((m.mean_occupancy() - 3.0).abs() < 1e-12);
+        assert_eq!(m.peak_occupancy, 4);
+        assert!((m.mean_queue_depth() - 2.0).abs() < 1e-12);
+        assert_eq!(m.peak_queue_depth, 3);
+        assert!((m.tokens_per_sec() - 9.0 / 0.060).abs() < 1e-6);
+        // sample vec capped at 2, aggregates kept counting
+        assert_eq!(m.step_secs.len(), 2);
+        for _ in 0..5 {
+            m.push_ttft(0.001);
+            m.push_latency(0.002);
+        }
+        assert_eq!(m.ttft.len(), 2);
+        assert_eq!(m.latency.len(), 2);
+    }
+
+    #[test]
+    fn json_shape_with_and_without_samples() {
+        let empty = ServeMetrics::with_capacity(4);
+        let j = empty.to_json(0, 0);
+        assert_eq!(j.get("ttft"), Some(&Json::Null), "no samples → null distribution");
+        assert_eq!(j.get("tokens_per_sec").unwrap().num(), Some(0.0));
+
+        let mut m = ServeMetrics::with_capacity(4);
+        m.push_ttft(0.004);
+        m.push_latency(0.040);
+        m.record_step(1, 0.010, 0);
+        m.completed = 1;
+        m.tokens_generated = 5;
+        let j = m.to_json(3, 1);
+        assert_eq!(j.get("submitted").unwrap().int(), Some(3));
+        assert_eq!(j.get("rejected").unwrap().int(), Some(1));
+        assert_eq!(j.get("completed").unwrap().int(), Some(1));
+        let ttft = j.get("ttft").unwrap();
+        assert!((ttft.get("p50_ms").unwrap().num().unwrap() - 4.0).abs() < 1e-9);
+        assert_eq!(ttft.get("samples").unwrap().int(), Some(1));
+        // the document round-trips through the writer
+        let text = j.to_string_pretty();
+        assert_eq!(&Json::parse(&text).unwrap(), &j);
+    }
+}

@@ -1,0 +1,282 @@
+//! Continuous-batching inference service on the shared forward core.
+//!
+//! The serve subsystem turns [`crate::infer::InferSession`]'s batched
+//! decode path into a multi-tenant serving loop: concurrent users submit
+//! [`GenerateRequest`]s (each with its own sampling params and seed) into
+//! a bounded [`RequestQueue`]; the [`ServeLoop`] scheduler packs them into
+//! the session's fixed `[B, seq]` decode slots **dynamically** — a new
+//! prompt joins the running batch at the next decode step, and finished
+//! sequences retire without stalling the rest.
+//!
+//! ## Why this composes with layer-parallel decoding
+//!
+//! Every kernel on the decode path (row-sliced matmul, per-row softmax /
+//! layer-norm, per-sequence attention, the MGRIT restriction /
+//! prolongation / FAS pointwise ops) is **batch-row independent**: row
+//! `r`'s outputs never read another row's data. The scheduler leans on
+//! that three ways:
+//!
+//! * **Join-mid-flight parity** — when a request is installed into a free
+//!   slot, the session resets just that slot's warm-start iterate
+//!   ([`crate::infer::InferSession::forward_board`]'s `cold_rows`), so the
+//!   newcomer solves exactly like its solo cold first step while the
+//!   neighbouring rows keep their warm-chained trajectories bit-for-bit.
+//! * **Early retirement** — a retired slot's stale board row keeps being
+//!   propagated (the batch shape is fixed) but cannot perturb active rows,
+//!   so nobody stalls and nobody's tokens change.
+//! * **Occupancy-independent sampling** — each slot samples from its own
+//!   [`crate::util::rng::Rng`] stream seeded by the request (`seed`), so
+//!   the same request yields identical tokens at batch occupancy 1 or 8
+//!   (pinned by `rust/tests/serve_parity.rs`).
+//!
+//! ## Hot-reload and observability
+//!
+//! A [`HotReload`] watcher polls a checkpoint directory between decode
+//! steps (never inside one), swapping to the newest **valid** `LTCP` file
+//! in place — files failing the FNV-1a checksum are remembered as bad and
+//! skipped, not fatal. The training side produces those files via
+//! `layertime train --save-every N --keep K` (see
+//! [`crate::coordinator::Session::set_autosave`]). [`ServeMetrics`]
+//! aggregates queue depth, batch occupancy, time-to-first-token and
+//! tokens/sec, serialized through [`crate::util::json`] (and fed as
+//! [`crate::util::bench::BenchLog`] rows by `layertime bench-serve`).
+//!
+//! The steady-state decode step is **allocation-free** like the training
+//! step (extended coverage in `rust/tests/alloc_audit.rs`): the board,
+//! per-slot cursors/RNGs, logits scratch and solver storage all persist,
+//! and the bounded queue never grows past its preallocated capacity.
+
+use std::fmt;
+
+use anyhow::{bail, ensure, Context, Result};
+
+use crate::util::json::{self, Json};
+
+mod metrics;
+mod queue;
+mod reload;
+mod scheduler;
+
+pub use metrics::ServeMetrics;
+pub use queue::{QueueStats, RequestQueue};
+pub use reload::HotReload;
+pub use scheduler::{drive_load, ServeLoop, StepOutcome};
+
+/// One user request: a prompt plus per-request sampling parameters.
+#[derive(Debug, Clone)]
+pub struct GenerateRequest {
+    /// Caller-chosen request id, echoed on the [`CompletedRequest`].
+    pub id: u64,
+    /// Prompt token ids; `1 ≤ len ≤ seq − 1` (the model window must leave
+    /// room for at least one generated position).
+    pub prompt: Vec<i32>,
+    /// Number of tokens to generate; `0` = fill the model window.
+    pub max_new: usize,
+    /// `0` = greedy argmax; `k > 0` = top-k sampling.
+    pub top_k: usize,
+    /// Softmax temperature for top-k (`T ≤ 0` degenerates to greedy).
+    pub temperature: f32,
+    /// Per-request sampling seed: the slot's RNG stream is
+    /// `Rng::new(seed)` regardless of which slot or batch the request
+    /// lands in, which is what makes outputs occupancy-independent.
+    pub seed: u64,
+}
+
+impl GenerateRequest {
+    /// A greedy request with default everything but the prompt.
+    pub fn greedy(id: u64, prompt: Vec<i32>) -> GenerateRequest {
+        GenerateRequest { id, prompt, max_new: 0, top_k: 0, temperature: 1.0, seed: id }
+    }
+}
+
+/// A finished request: prompt + generated tokens and per-request timings.
+#[derive(Debug, Clone)]
+pub struct CompletedRequest {
+    pub id: u64,
+    /// The full board row: prompt followed by the generated tokens.
+    pub tokens: Vec<i32>,
+    pub prompt_len: usize,
+    /// Number of generated positions (`tokens.len() − prompt_len`).
+    pub generated: usize,
+    /// Time-to-first-token, seconds from submission.
+    pub ttft: f64,
+    /// Total latency, seconds from submission to retirement.
+    pub latency: f64,
+}
+
+impl CompletedRequest {
+    /// JSON row: `{"id", "prompt_len", "generated", "tokens", "ttft_ms",
+    /// "latency_ms"}`.
+    pub fn to_json(&self) -> Json {
+        json::obj(vec![
+            ("id", json::int(self.id as i64)),
+            ("prompt_len", json::int(self.prompt_len as i64)),
+            ("generated", json::int(self.generated as i64)),
+            (
+                "tokens",
+                json::arr(self.tokens.iter().map(|&t| json::int(t as i64)).collect()),
+            ),
+            ("ttft_ms", json::num(self.ttft * 1e3)),
+            ("latency_ms", json::num(self.latency * 1e3)),
+        ])
+    }
+}
+
+/// Serve-side request rejection.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ServeError {
+    /// Backpressure: the queue is at its high-water mark.
+    QueueFull { capacity: usize },
+    /// The queue was closed (service shutting down).
+    Closed,
+    /// The request is malformed (empty or over-long prompt, …).
+    Invalid(String),
+}
+
+impl fmt::Display for ServeError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ServeError::QueueFull { capacity } => {
+                write!(f, "request queue full (capacity {}): backpressure, retry later", capacity)
+            }
+            ServeError::Closed => write!(f, "request queue closed"),
+            ServeError::Invalid(msg) => write!(f, "invalid request: {}", msg),
+        }
+    }
+}
+
+impl std::error::Error for ServeError {}
+
+/// Parse a request batch from JSON text: either a top-level array of
+/// request objects or `{"requests": [...]}`. Per-object fields: `prompt`
+/// (required, array of token ids), `id` (default: array index), `max_new`
+/// (default 0 = fill window), `top_k` (default 0 = greedy), `temperature`
+/// (default 1.0), `seed` (default: the id). This is the `layertime serve
+/// --requests FILE` file-request format (CI runs it without a network
+/// stack).
+pub fn requests_from_json(text: &str) -> Result<Vec<GenerateRequest>> {
+    let doc = Json::parse(text).context("parsing requests JSON")?;
+    let items = match doc.get("requests") {
+        Some(r) => r.arr().context("\"requests\" must be an array")?,
+        None => doc.arr().context("expected an array of requests or {\"requests\": [...]}")?,
+    };
+    let mut out = Vec::with_capacity(items.len());
+    for (i, item) in items.iter().enumerate() {
+        ensure!(item.obj().is_some(), "request {} is not an object", i);
+        let prompt_json = item
+            .get("prompt")
+            .with_context(|| format!("request {} is missing \"prompt\"", i))?;
+        let prompt_arr = prompt_json
+            .arr()
+            .with_context(|| format!("request {}: \"prompt\" must be an array", i))?;
+        let mut prompt = Vec::with_capacity(prompt_arr.len());
+        for t in prompt_arr {
+            let v = t
+                .int()
+                .with_context(|| format!("request {}: prompt tokens must be integers", i))?;
+            ensure!(v >= 0, "request {}: negative token id {}", i, v);
+            prompt.push(v as i32);
+        }
+        let id = match item.get("id") {
+            Some(v) => v.int().with_context(|| format!("request {}: bad \"id\"", i))? as u64,
+            None => i as u64,
+        };
+        let field_usize = |key: &str| -> Result<usize> {
+            match item.get(key) {
+                Some(v) => {
+                    let n = v.int().with_context(|| format!("request {}: bad \"{}\"", i, key))?;
+                    ensure!(n >= 0, "request {}: \"{}\" must be ≥ 0", i, key);
+                    Ok(n as usize)
+                }
+                None => Ok(0),
+            }
+        };
+        let max_new = field_usize("max_new")?;
+        let top_k = field_usize("top_k")?;
+        let temperature = match item.get("temperature") {
+            Some(v) => v
+                .num()
+                .with_context(|| format!("request {}: bad \"temperature\"", i))?
+                as f32,
+            None => 1.0,
+        };
+        let seed = match item.get("seed") {
+            Some(v) => v.int().with_context(|| format!("request {}: bad \"seed\"", i))? as u64,
+            None => id,
+        };
+        if prompt.is_empty() {
+            bail!("request {}: empty prompt", i);
+        }
+        out.push(GenerateRequest { id, prompt, max_new, top_k, temperature, seed });
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn requests_parse_with_defaults() {
+        let reqs = requests_from_json(r#"[{"prompt": [1, 2, 3]}]"#).unwrap();
+        assert_eq!(reqs.len(), 1);
+        assert_eq!(reqs[0].id, 0);
+        assert_eq!(reqs[0].prompt, vec![1, 2, 3]);
+        assert_eq!(reqs[0].max_new, 0);
+        assert_eq!(reqs[0].top_k, 0);
+        assert_eq!(reqs[0].temperature, 1.0);
+        assert_eq!(reqs[0].seed, 0, "seed defaults to the id");
+    }
+
+    #[test]
+    fn requests_parse_full_fields_and_wrapper() {
+        let text = r#"{"requests": [
+            {"id": 7, "prompt": [4], "max_new": 3, "top_k": 5, "temperature": 0.8, "seed": 99},
+            {"prompt": [1, 1]}
+        ]}"#;
+        let reqs = requests_from_json(text).unwrap();
+        assert_eq!(reqs.len(), 2);
+        assert_eq!(reqs[0].id, 7);
+        assert_eq!(reqs[0].max_new, 3);
+        assert_eq!(reqs[0].top_k, 5);
+        assert!((reqs[0].temperature - 0.8).abs() < 1e-6);
+        assert_eq!(reqs[0].seed, 99);
+        assert_eq!(reqs[1].id, 1, "unnumbered request takes its index");
+        assert_eq!(reqs[1].seed, 1);
+    }
+
+    #[test]
+    fn requests_reject_malformed_input() {
+        assert!(requests_from_json("{}").is_err(), "no requests key, not an array");
+        assert!(requests_from_json(r#"[{"prompt": []}]"#).is_err(), "empty prompt");
+        assert!(requests_from_json(r#"[{"prompt": [-1]}]"#).is_err(), "negative token");
+        assert!(requests_from_json(r#"[{"prompt": [1.5]}]"#).is_err(), "fractional token");
+        assert!(requests_from_json(r#"[{"id": 1}]"#).is_err(), "missing prompt");
+        assert!(requests_from_json("not json").is_err());
+    }
+
+    #[test]
+    fn completed_request_serializes() {
+        let done = CompletedRequest {
+            id: 3,
+            tokens: vec![1, 2, 9],
+            prompt_len: 2,
+            generated: 1,
+            ttft: 0.002,
+            latency: 0.010,
+        };
+        let j = done.to_json();
+        assert_eq!(j.get("id").unwrap().int(), Some(3));
+        assert_eq!(j.get("tokens").unwrap().arr().unwrap().len(), 3);
+        assert_eq!(j.get("generated").unwrap().int(), Some(1));
+        assert!((j.get("ttft_ms").unwrap().num().unwrap() - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn serve_errors_render() {
+        let e = ServeError::QueueFull { capacity: 8 };
+        assert!(e.to_string().contains("capacity 8"));
+        assert!(ServeError::Closed.to_string().contains("closed"));
+        assert!(ServeError::Invalid("x".into()).to_string().contains("x"));
+    }
+}

@@ -1,0 +1,258 @@
+//! Bounded MPSC request queue with backpressure.
+//!
+//! Producers (CLI feeder threads, the `bench-serve` load driver, tests)
+//! call [`RequestQueue::submit`] — non-blocking, rejecting with
+//! [`ServeError::QueueFull`] past the high-water mark — or
+//! [`RequestQueue::submit_blocking`], which waits for room. The single
+//! consumer is the [`super::ServeLoop`] scheduler, which pops at each
+//! decode-step boundary. The backing `VecDeque` is preallocated at the
+//! configured capacity and submissions are rejected before it would ever
+//! grow, so the queue performs **no allocations after construction** —
+//! part of the steady-state allocation-free contract pinned by
+//! `rust/tests/alloc_audit.rs`.
+
+use std::collections::VecDeque;
+use std::sync::{Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use super::{GenerateRequest, ServeError};
+
+/// Counters the queue keeps about its own traffic.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct QueueStats {
+    /// Accepted submissions.
+    pub submitted: u64,
+    /// Rejections due to backpressure.
+    pub rejected: u64,
+    /// Highest depth ever observed.
+    pub peak_depth: usize,
+}
+
+struct Inner {
+    q: VecDeque<(GenerateRequest, Instant)>,
+    closed: bool,
+    stats: QueueStats,
+}
+
+/// Bounded multi-producer request queue (see module docs).
+pub struct RequestQueue {
+    capacity: usize,
+    /// Longest admissible prompt (`seq − 1`: the window must leave room
+    /// for at least one generated token).
+    max_prompt: usize,
+    inner: Mutex<Inner>,
+    not_full: Condvar,
+    not_empty: Condvar,
+}
+
+impl RequestQueue {
+    pub fn new(capacity: usize, max_prompt: usize) -> RequestQueue {
+        assert!(capacity >= 1, "queue capacity must be ≥ 1");
+        assert!(max_prompt >= 1, "max_prompt must be ≥ 1");
+        RequestQueue {
+            capacity,
+            max_prompt,
+            inner: Mutex::new(Inner {
+                q: VecDeque::with_capacity(capacity),
+                closed: false,
+                stats: QueueStats::default(),
+            }),
+            not_full: Condvar::new(),
+            not_empty: Condvar::new(),
+        }
+    }
+
+    fn validate(&self, req: &GenerateRequest) -> Result<(), ServeError> {
+        if req.prompt.is_empty() {
+            return Err(ServeError::Invalid("empty prompt".to_string()));
+        }
+        if req.prompt.len() > self.max_prompt {
+            return Err(ServeError::Invalid(format!(
+                "prompt of {} tokens exceeds the window's {} admissible positions",
+                req.prompt.len(),
+                self.max_prompt
+            )));
+        }
+        Ok(())
+    }
+
+    /// Non-blocking submit: rejects with [`ServeError::QueueFull`] at the
+    /// high-water mark (backpressure — the caller decides whether to
+    /// retry, shed, or block via [`RequestQueue::submit_blocking`]).
+    pub fn submit(&self, req: GenerateRequest) -> Result<(), ServeError> {
+        self.validate(&req)?;
+        let mut inner = self.inner.lock().unwrap();
+        if inner.closed {
+            return Err(ServeError::Closed);
+        }
+        if inner.q.len() >= self.capacity {
+            inner.stats.rejected += 1;
+            return Err(ServeError::QueueFull { capacity: self.capacity });
+        }
+        inner.q.push_back((req, Instant::now()));
+        inner.stats.submitted += 1;
+        let depth = inner.q.len();
+        inner.stats.peak_depth = inner.stats.peak_depth.max(depth);
+        drop(inner);
+        self.not_empty.notify_one();
+        Ok(())
+    }
+
+    /// Blocking submit: waits until the queue has room (or is closed).
+    pub fn submit_blocking(&self, req: GenerateRequest) -> Result<(), ServeError> {
+        self.validate(&req)?;
+        let mut inner = self.inner.lock().unwrap();
+        loop {
+            if inner.closed {
+                return Err(ServeError::Closed);
+            }
+            if inner.q.len() < self.capacity {
+                inner.q.push_back((req, Instant::now()));
+                inner.stats.submitted += 1;
+                let depth = inner.q.len();
+                inner.stats.peak_depth = inner.stats.peak_depth.max(depth);
+                drop(inner);
+                self.not_empty.notify_one();
+                return Ok(());
+            }
+            inner = self.not_full.wait(inner).unwrap();
+        }
+    }
+
+    /// Non-blocking pop (scheduler side): the request and its submission
+    /// instant, or `None` when the queue is empty.
+    pub fn pop(&self) -> Option<(GenerateRequest, Instant)> {
+        let mut inner = self.inner.lock().unwrap();
+        let item = inner.q.pop_front();
+        if item.is_some() {
+            drop(inner);
+            self.not_full.notify_one();
+        }
+        item
+    }
+
+    /// Block until the queue is non-empty or closed, up to `timeout`.
+    /// Returns `true` when something is available to pop.
+    pub fn wait_nonempty(&self, timeout: Duration) -> bool {
+        let deadline = Instant::now() + timeout;
+        let mut inner = self.inner.lock().unwrap();
+        loop {
+            if !inner.q.is_empty() {
+                return true;
+            }
+            if inner.closed {
+                return false;
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return false;
+            }
+            let (guard, res) = self.not_empty.wait_timeout(inner, deadline - now).unwrap();
+            inner = guard;
+            if res.timed_out() && inner.q.is_empty() {
+                return false;
+            }
+        }
+    }
+
+    /// Close the queue: subsequent submits fail with
+    /// [`ServeError::Closed`]; already-queued requests still drain.
+    pub fn close(&self) {
+        let mut inner = self.inner.lock().unwrap();
+        inner.closed = true;
+        drop(inner);
+        self.not_empty.notify_all();
+        self.not_full.notify_all();
+    }
+
+    pub fn is_closed(&self) -> bool {
+        self.inner.lock().unwrap().closed
+    }
+
+    /// Current depth (queued, not yet scheduled).
+    pub fn depth(&self) -> usize {
+        self.inner.lock().unwrap().q.len()
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    pub fn stats(&self) -> QueueStats {
+        self.inner.lock().unwrap().stats
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    fn req(id: u64) -> GenerateRequest {
+        GenerateRequest::greedy(id, vec![1, 2])
+    }
+
+    #[test]
+    fn backpressure_rejects_past_capacity() {
+        let q = RequestQueue::new(2, 4);
+        q.submit(req(0)).unwrap();
+        q.submit(req(1)).unwrap();
+        let err = q.submit(req(2)).unwrap_err();
+        assert_eq!(err, ServeError::QueueFull { capacity: 2 });
+        assert_eq!(q.depth(), 2);
+        let st = q.stats();
+        assert_eq!(st.submitted, 2);
+        assert_eq!(st.rejected, 1);
+        assert_eq!(st.peak_depth, 2);
+        // popping frees a slot
+        let (popped, _) = q.pop().unwrap();
+        assert_eq!(popped.id, 0, "FIFO order");
+        q.submit(req(2)).unwrap();
+    }
+
+    #[test]
+    fn validation_rejects_bad_prompts() {
+        let q = RequestQueue::new(4, 3);
+        let empty = GenerateRequest::greedy(0, vec![]);
+        assert!(matches!(q.submit(empty), Err(ServeError::Invalid(_))));
+        let long = GenerateRequest::greedy(1, vec![0; 4]);
+        assert!(matches!(q.submit(long), Err(ServeError::Invalid(_))));
+        assert_eq!(q.stats().submitted, 0);
+    }
+
+    #[test]
+    fn close_stops_submissions_but_drains() {
+        let q = RequestQueue::new(4, 4);
+        q.submit(req(0)).unwrap();
+        q.close();
+        assert_eq!(q.submit(req(1)).unwrap_err(), ServeError::Closed);
+        assert!(q.is_closed());
+        assert!(q.pop().is_some(), "queued work still drains after close");
+        assert!(q.pop().is_none());
+        assert!(!q.wait_nonempty(Duration::from_millis(1)), "closed + empty = no wait");
+    }
+
+    #[test]
+    fn blocking_submit_wakes_on_pop() {
+        let q = Arc::new(RequestQueue::new(1, 4));
+        q.submit(req(0)).unwrap();
+        let q2 = Arc::clone(&q);
+        let t = std::thread::spawn(move || q2.submit_blocking(req(1)));
+        std::thread::sleep(Duration::from_millis(20));
+        assert!(q.pop().is_some());
+        t.join().unwrap().unwrap();
+        assert_eq!(q.pop().unwrap().0.id, 1);
+    }
+
+    #[test]
+    fn wait_nonempty_sees_concurrent_submit() {
+        let q = Arc::new(RequestQueue::new(2, 4));
+        let q2 = Arc::clone(&q);
+        let t = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(10));
+            q2.submit(req(0)).unwrap();
+        });
+        assert!(q.wait_nonempty(Duration::from_secs(5)));
+        t.join().unwrap();
+    }
+}

@@ -1,0 +1,154 @@
+//! Checkpoint hot-reload: watch a directory for newer `LTCP` files.
+//!
+//! The training side drops autosaves into a directory
+//! (`layertime train --save-every N --keep K`, named so lexicographic
+//! order equals chronological order — see
+//! [`crate::checkpoint::autosave_path`]); a long-running `serve` process
+//! polls that directory **between** decode steps and swaps to the newest
+//! valid checkpoint via
+//! [`crate::infer::InferSession::swap_checkpoint`]. Files that fail to
+//! read — truncated mid-write, FNV-1a checksum mismatch, wrong version —
+//! are remembered as bad and skipped on every later poll instead of
+//! taking the service down; an older valid file wins over a newer corrupt
+//! one.
+
+use std::path::{Path, PathBuf};
+use std::time::SystemTime;
+
+use crate::checkpoint::Checkpoint;
+
+/// Newest-first ordering key: modification time, then file name (the
+/// autosave naming embeds the zero-padded step, so the name breaks ties
+/// between files written within one timestamp granule).
+type FileKey = (SystemTime, String);
+
+/// Directory watcher for `*.ltcp` checkpoints (see module docs).
+pub struct HotReload {
+    dir: PathBuf,
+    /// Key of the checkpoint currently being served (never re-offered).
+    loaded: Option<FileKey>,
+    /// Files that failed to read — skipped forever (a rewritten file gets
+    /// a new mtime and therefore a new key).
+    bad: Vec<FileKey>,
+}
+
+impl HotReload {
+    pub fn new(dir: &str) -> HotReload {
+        HotReload { dir: PathBuf::from(dir), loaded: None, bad: Vec::new() }
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// Name of the currently loaded checkpoint file, if any.
+    pub fn loaded_name(&self) -> Option<&str> {
+        self.loaded.as_ref().map(|(_, n)| n.as_str())
+    }
+
+    /// How many files have been quarantined as unreadable.
+    pub fn bad_files(&self) -> usize {
+        self.bad.len()
+    }
+
+    /// Mark the most recently returned checkpoint as unusable after all
+    /// (e.g. it read fine but its model config doesn't match the serving
+    /// session): quarantine it and forget it was loaded, so the next poll
+    /// falls back to the next-best file.
+    pub fn reject_loaded(&mut self) {
+        if let Some(key) = self.loaded.take() {
+            self.bad.push(key);
+        }
+    }
+
+    /// Scan the directory and return the newest valid checkpoint that is
+    /// strictly newer than the one already loaded (`None` when nothing
+    /// newer and valid exists). Unreadable candidates are quarantined and
+    /// the scan falls through to older files.
+    pub fn poll(&mut self) -> Option<(PathBuf, Checkpoint)> {
+        let entries = std::fs::read_dir(&self.dir).ok()?;
+        let mut candidates: Vec<(FileKey, PathBuf)> = entries
+            .filter_map(|e| e.ok())
+            .filter_map(|e| {
+                let path = e.path();
+                let name = path.file_name()?.to_str()?.to_string();
+                if !name.ends_with(".ltcp") {
+                    return None;
+                }
+                let mtime = e.metadata().ok()?.modified().ok()?;
+                Some(((mtime, name), path))
+            })
+            .collect();
+        // newest first
+        candidates.sort_by(|a, b| b.0.cmp(&a.0));
+        for (key, path) in candidates {
+            if let Some(loaded) = &self.loaded {
+                if key <= *loaded {
+                    // everything from here on is older than what we serve
+                    return None;
+                }
+            }
+            if self.bad.contains(&key) {
+                continue;
+            }
+            match Checkpoint::read(&path.to_string_lossy()) {
+                Ok(ck) => {
+                    self.loaded = Some(key);
+                    return Some((path, ck));
+                }
+                Err(_) => {
+                    // truncated / checksum-failed / foreign file: skip it
+                    // now and forever, keep looking at older candidates
+                    self.bad.push(key);
+                }
+            }
+        }
+        None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp_dir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir()
+            .join(format!("layertime_reload_{}_{}", tag, std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    #[test]
+    fn empty_or_missing_dir_polls_none() {
+        let d = tmp_dir("empty");
+        let mut hr = HotReload::new(d.to_str().unwrap());
+        assert!(hr.poll().is_none());
+        let mut gone = HotReload::new("/nonexistent/layertime/watch/dir");
+        assert!(gone.poll().is_none());
+        let _ = std::fs::remove_dir_all(&d);
+    }
+
+    #[test]
+    fn corrupt_files_are_quarantined_not_fatal() {
+        let d = tmp_dir("corrupt");
+        std::fs::write(d.join("model.step00000001.ltcp"), b"not a checkpoint").unwrap();
+        let mut hr = HotReload::new(d.to_str().unwrap());
+        assert!(hr.poll().is_none(), "the only file is corrupt");
+        assert_eq!(hr.bad_files(), 1);
+        // a second poll doesn't re-read the quarantined file
+        assert!(hr.poll().is_none());
+        assert_eq!(hr.bad_files(), 1);
+        let _ = std::fs::remove_dir_all(&d);
+    }
+
+    #[test]
+    fn non_ltcp_files_are_ignored() {
+        let d = tmp_dir("ignore");
+        std::fs::write(d.join("notes.txt"), b"hello").unwrap();
+        let mut hr = HotReload::new(d.to_str().unwrap());
+        assert!(hr.poll().is_none());
+        assert_eq!(hr.bad_files(), 0);
+        let _ = std::fs::remove_dir_all(&d);
+    }
+}

@@ -1,0 +1,446 @@
+//! Dynamic-batch scheduler over the session's fixed decode slots.
+//!
+//! [`ServeLoop`] owns an [`InferSession`] and a `[B, seq]` token board.
+//! Each [`ServeLoop::step`] is one decode step for the whole batch:
+//!
+//! 1. (periodically) poll the [`super::HotReload`] watcher — weights only
+//!    ever swap **between** steps, so every request's step-`p` token comes
+//!    from exactly one checkpoint snapshot;
+//! 2. admit queued requests into free slots — each newcomer's board row is
+//!    rewritten (prompt + zeroed tail, exactly the solo layout) and named
+//!    in `cold_rows` so the forward resets just that row's warm iterate;
+//! 3. one batched forward ([`InferSession::forward_board`]) and a per-row
+//!    logit projection at each slot's own cursor
+//!    ([`InferSession::logits_rows`]);
+//! 4. per-slot token selection from the slot's own RNG stream
+//!    (`Rng::new(request.seed)` — slot- and occupancy-independent), then
+//!    retirement of slots that reached their budget.
+//!
+//! Because every forward/head kernel is batch-row independent (see
+//! `super` docs), an active row's token sequence is bitwise identical to
+//! running that request alone — pinned by `rust/tests/serve_parity.rs` —
+//! and the steady-state step performs no allocations — pinned by
+//! `rust/tests/alloc_audit.rs`.
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use anyhow::{ensure, Result};
+
+use crate::coordinator::Task;
+use crate::infer::{pick_token, DecodeOptions, InferSession};
+use crate::util::rng::Rng;
+
+use super::metrics::ServeMetrics;
+use super::queue::RequestQueue;
+use super::reload::HotReload;
+use super::{CompletedRequest, GenerateRequest, ServeError};
+
+/// What one scheduler step did.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StepOutcome {
+    /// No slot active (and nothing admitted): no forward ran.
+    Idle,
+    /// A forward ran; the payload is the batch occupancy (= tokens
+    /// emitted this step).
+    Decoded(usize),
+}
+
+/// One decode slot's bookkeeping (scalars only — installing a request
+/// into a slot never allocates).
+struct Slot {
+    active: bool,
+    id: u64,
+    /// The slot's private sampling stream, `Rng::new(request.seed)`.
+    rng: Rng,
+    opts: DecodeOptions,
+    /// Next board position to fill (logits are read at `cursor − 1`).
+    cursor: usize,
+    /// One past the last position this request may fill.
+    end: usize,
+    prompt_len: usize,
+    submitted_at: Instant,
+    /// Time-to-first-token, set when the first token lands.
+    ttft: Option<f64>,
+}
+
+impl Slot {
+    fn empty() -> Slot {
+        Slot {
+            active: false,
+            id: 0,
+            rng: Rng::new(0),
+            opts: DecodeOptions::default(),
+            cursor: 0,
+            end: 0,
+            prompt_len: 0,
+            submitted_at: Instant::now(),
+            ttft: None,
+        }
+    }
+}
+
+/// The continuous-batching serve loop (see module docs).
+pub struct ServeLoop {
+    session: InferSession,
+    queue: Arc<RequestQueue>,
+    slots: Vec<Slot>,
+    /// `[B, seq]` token board; active rows hold prompt + generated-so-far,
+    /// retired rows keep their stale tokens (row independence makes them
+    /// inert).
+    board: Vec<i32>,
+    /// Per-row logit positions for [`InferSession::logits_rows`].
+    positions: Vec<usize>,
+    /// Rows whose occupant changed this step (warm-iterate reset set).
+    cold_rows: Vec<usize>,
+    /// Shared top-k scratch (capacity grows to max k once, then reused).
+    topk_idx: Vec<usize>,
+    topk_val: Vec<f32>,
+    completed: Vec<CompletedRequest>,
+    pub metrics: ServeMetrics,
+    reload: Option<HotReload>,
+    reload_every: u64,
+    steps: u64,
+}
+
+impl ServeLoop {
+    /// Wrap a causal-LM session; `queue_capacity` is the backpressure
+    /// high-water mark. The session's warm state is dropped so the loop
+    /// starts from a clean, deterministic slate.
+    pub fn new(mut session: InferSession, queue_capacity: usize) -> Result<ServeLoop> {
+        ensure!(
+            session.task() == Task::Lm,
+            "serve drives the causal LM head; task {:?} cannot autoregress",
+            session.task()
+        );
+        let (b, s) = (session.rc.model.batch, session.rc.model.seq);
+        ensure!(s >= 2, "seq {} leaves no room to generate", s);
+        session.reset_warm();
+        let queue = Arc::new(RequestQueue::new(queue_capacity, s - 1));
+        Ok(ServeLoop {
+            queue,
+            slots: (0..b).map(|_| Slot::empty()).collect(),
+            board: vec![0; b * s],
+            positions: vec![0; b],
+            cold_rows: Vec::with_capacity(b),
+            topk_idx: Vec::new(),
+            topk_val: Vec::new(),
+            completed: Vec::new(),
+            metrics: ServeMetrics::with_capacity(4096),
+            reload: None,
+            reload_every: 0,
+            steps: 0,
+            session,
+        })
+    }
+
+    /// A handle for producers (feeder threads) to submit and close on.
+    pub fn queue(&self) -> Arc<RequestQueue> {
+        Arc::clone(&self.queue)
+    }
+
+    /// Convenience single-producer submit.
+    pub fn submit(&self, req: GenerateRequest) -> Result<(), ServeError> {
+        self.queue.submit(req)
+    }
+
+    /// Attach a checkpoint watcher, polled every `every` steps (and on
+    /// [`ServeLoop::reload_now`]). Pass the [`HotReload`] whose `poll`
+    /// already yielded the currently-served checkpoint so it isn't
+    /// immediately re-offered.
+    pub fn set_watch(&mut self, watch: HotReload, every: u64) {
+        self.reload = Some(watch);
+        self.reload_every = every.max(1);
+    }
+
+    /// Poll the watcher immediately (still a between-steps boundary).
+    /// Returns whether a newer checkpoint was swapped in. A checkpoint
+    /// that reads fine but doesn't match the serving model is quarantined
+    /// like a corrupt file.
+    pub fn reload_now(&mut self) -> bool {
+        let hr = match self.reload.as_mut() {
+            Some(h) => h,
+            None => return false,
+        };
+        match hr.poll() {
+            Some((_path, ck)) => match self.session.swap_checkpoint(&ck) {
+                Ok(()) => {
+                    self.metrics.reloads += 1;
+                    true
+                }
+                Err(_) => {
+                    hr.reject_loaded();
+                    false
+                }
+            },
+            None => false,
+        }
+    }
+
+    pub fn session(&self) -> &InferSession {
+        &self.session
+    }
+
+    /// Number of currently active slots.
+    pub fn active(&self) -> usize {
+        self.slots.iter().filter(|s| s.active).count()
+    }
+
+    /// Drain the requests completed since the last call.
+    pub fn take_completed(&mut self) -> Vec<CompletedRequest> {
+        std::mem::take(&mut self.completed)
+    }
+
+    /// Recover the session (e.g. to hand it back to other inference).
+    pub fn into_session(self) -> InferSession {
+        self.session
+    }
+
+    /// Install `req` into free slot `r`: rewrite the board row to
+    /// prompt + zeroed tail (the exact solo-decode layout, so the row's
+    /// cold first solve is bitwise the solo one) and reset the slot's
+    /// cursor, budget, and RNG stream.
+    fn install(&mut self, r: usize, req: GenerateRequest, submitted_at: Instant) {
+        let s = self.session.rc.model.seq;
+        let plen = req.prompt.len();
+        debug_assert!(plen >= 1 && plen < s, "queue validation admitted prompt_len {}", plen);
+        let row = &mut self.board[r * s..(r + 1) * s];
+        row[..plen].copy_from_slice(&req.prompt);
+        row[plen..].fill(0);
+        let cap = s - plen;
+        let gen = if req.max_new == 0 { cap } else { req.max_new.min(cap) };
+        self.slots[r] = Slot {
+            active: true,
+            id: req.id,
+            rng: Rng::new(req.seed),
+            opts: DecodeOptions { top_k: req.top_k, temperature: req.temperature, seed: req.seed },
+            cursor: plen,
+            end: plen + gen,
+            prompt_len: plen,
+            submitted_at,
+            ttft: None,
+        };
+    }
+
+    /// One decode step for the whole batch (see module docs for the
+    /// phases). Allocation-free once the top-k scratch is warm.
+    pub fn step(&mut self) -> Result<StepOutcome> {
+        self.steps += 1;
+        // 1. hot-reload poll — only ever here, between decode steps
+        if self.reload.is_some() && self.reload_every > 0 && self.steps % self.reload_every == 0
+        {
+            self.reload_now();
+        }
+        let (b, s, vocab) =
+            (self.session.rc.model.batch, self.session.rc.model.seq, self.session.rc.model.vocab);
+        // 2. admit queued requests into free slots
+        self.cold_rows.clear();
+        for r in 0..b {
+            if self.slots[r].active {
+                continue;
+            }
+            match self.queue.pop() {
+                Some((req, at)) => {
+                    self.install(r, req, at);
+                    self.cold_rows.push(r);
+                }
+                None => break,
+            }
+        }
+        // 3. per-row cursors; bail out before the forward if nobody is live
+        let mut occupancy = 0usize;
+        for (r, sl) in self.slots.iter().enumerate() {
+            self.positions[r] = if sl.active { sl.cursor - 1 } else { 0 };
+            if sl.active {
+                occupancy += 1;
+            }
+        }
+        if occupancy == 0 {
+            self.metrics.idle_steps += 1;
+            return Ok(StepOutcome::Idle);
+        }
+        let t0 = Instant::now();
+        self.session.forward_board(&self.board, &self.cold_rows)?;
+        let logits = self.session.logits_rows(&self.positions)?;
+        // 4. per-slot selection + retirement. Inlined (not helper methods)
+        // because `logits` keeps `self.session` borrowed; every other
+        // field access is disjoint.
+        for r in 0..b {
+            let sl = &mut self.slots[r];
+            if !sl.active {
+                continue;
+            }
+            let lg = &logits[r * vocab..(r + 1) * vocab];
+            let tok = pick_token(lg, &sl.opts, &mut sl.rng, &mut self.topk_idx, &mut self.topk_val);
+            self.board[r * s + sl.cursor] = tok;
+            sl.cursor += 1;
+            if sl.ttft.is_none() {
+                let t = sl.submitted_at.elapsed().as_secs_f64();
+                sl.ttft = Some(t);
+                self.metrics.push_ttft(t);
+            }
+            if sl.cursor >= sl.end {
+                sl.active = false;
+                let latency = sl.submitted_at.elapsed().as_secs_f64();
+                self.metrics.completed += 1;
+                self.metrics.push_latency(latency);
+                self.completed.push(CompletedRequest {
+                    id: sl.id,
+                    tokens: self.board[r * s..r * s + sl.cursor].to_vec(),
+                    prompt_len: sl.prompt_len,
+                    generated: sl.cursor - sl.prompt_len,
+                    ttft: sl.ttft.unwrap_or(latency),
+                    latency,
+                });
+            }
+        }
+        self.metrics.tokens_generated += occupancy as u64;
+        self.metrics.record_step(occupancy, t0.elapsed().as_secs_f64(), self.queue.depth());
+        Ok(StepOutcome::Decoded(occupancy))
+    }
+
+    /// Serve until the queue is closed **and** drained and every slot has
+    /// retired. While fully idle, blocks up to `idle_wait` for new work
+    /// (so a file-mode CLI run exits promptly once its feeders finish).
+    pub fn run(&mut self, idle_wait: Duration) -> Result<()> {
+        loop {
+            if self.active() == 0 && self.queue.depth() == 0 {
+                if self.queue.is_closed() {
+                    return Ok(());
+                }
+                if !self.queue.wait_nonempty(idle_wait) && self.queue.is_closed() {
+                    return Ok(());
+                }
+                continue;
+            }
+            self.step()?;
+        }
+    }
+}
+
+/// Closed-loop load driver shared by `layertime bench-serve` and the
+/// occupancy sweep in `benches/perf_hotpath.rs`: keep `target_occupancy`
+/// requests in flight (active + queued) until every request in `requests`
+/// has completed, appending results to `completed`.
+pub fn drive_load(
+    srv: &mut ServeLoop,
+    requests: &[GenerateRequest],
+    target_occupancy: usize,
+    completed: &mut Vec<CompletedRequest>,
+) -> Result<()> {
+    ensure!(target_occupancy >= 1, "target occupancy must be ≥ 1");
+    let total = requests.len();
+    let mut next = 0usize;
+    let mut done = 0usize;
+    while done < total {
+        while next < total && srv.active() + srv.queue.depth() < target_occupancy {
+            srv.queue
+                .submit(requests[next].clone())
+                .map_err(|e| anyhow::anyhow!("load driver submit failed: {}", e))?;
+            next += 1;
+        }
+        match srv.step()? {
+            StepOutcome::Idle => {
+                // only possible if everything in flight retired and the
+                // admission window is empty — the next loop refills it
+                ensure!(next < total || done == total, "load driver stalled idle");
+            }
+            StepOutcome::Decoded(_) => {}
+        }
+        let newly = srv.take_completed();
+        done += newly.len();
+        completed.extend(newly);
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets;
+    use crate::coordinator::Mgrit;
+    use crate::model::{Init, ParamStore};
+
+    fn tiny_lm_session() -> InferSession {
+        let mut rc = presets::by_name("gpt").unwrap();
+        presets::shrink_for_bench(&mut rc);
+        rc.model.n_dec_layers = 6;
+        rc.model.buffer_open = 1;
+        rc.model.buffer_close = 1;
+        let params = ParamStore::init(&rc.model, Init::Default, 3);
+        InferSession::from_parts(rc, params, Box::new(Mgrit)).unwrap()
+    }
+
+    #[test]
+    fn idle_step_runs_no_forward() {
+        let mut srv = ServeLoop::new(tiny_lm_session(), 4).unwrap();
+        assert_eq!(srv.step().unwrap(), StepOutcome::Idle);
+        assert_eq!(srv.metrics.idle_steps, 1);
+        assert_eq!(srv.metrics.decode_steps, 0);
+        assert_eq!(srv.session().core_builds(), 0, "idle steps must not touch the solver");
+    }
+
+    #[test]
+    fn single_request_completes_with_budget() {
+        let mut srv = ServeLoop::new(tiny_lm_session(), 4).unwrap();
+        let req = GenerateRequest { max_new: 3, ..GenerateRequest::greedy(7, vec![1, 2]) };
+        srv.submit(req).unwrap();
+        let mut steps = 0;
+        while srv.active() > 0 || srv.queue().depth() > 0 {
+            srv.step().unwrap();
+            steps += 1;
+            assert!(steps < 100, "request never retired");
+        }
+        let done = srv.take_completed();
+        assert_eq!(done.len(), 1);
+        let d = &done[0];
+        assert_eq!(d.id, 7);
+        assert_eq!(d.prompt_len, 2);
+        assert_eq!(d.generated, 3, "max_new bounds the budget");
+        assert_eq!(d.tokens.len(), 5);
+        assert_eq!(&d.tokens[..2], &[1, 2], "prompt echoed");
+        assert!(d.ttft > 0.0 && d.latency >= d.ttft);
+        assert_eq!(srv.metrics.completed, 1);
+        assert_eq!(srv.metrics.tokens_generated, 3);
+        assert_eq!(srv.metrics.peak_occupancy, 1);
+    }
+
+    #[test]
+    fn max_new_zero_fills_the_window() {
+        let mut srv = ServeLoop::new(tiny_lm_session(), 4).unwrap();
+        let s = srv.session().rc.model.seq;
+        srv.submit(GenerateRequest::greedy(0, vec![3])).unwrap();
+        while srv.active() > 0 || srv.queue().depth() > 0 {
+            srv.step().unwrap();
+        }
+        let done = srv.take_completed();
+        assert_eq!(done[0].tokens.len(), s);
+        assert_eq!(done[0].generated, s - 1);
+    }
+
+    #[test]
+    fn drive_load_completes_more_requests_than_slots() {
+        let mut srv = ServeLoop::new(tiny_lm_session(), 8).unwrap();
+        let b = srv.session().rc.model.batch;
+        let requests: Vec<GenerateRequest> = (0..2 * b as u64 + 1)
+            .map(|i| GenerateRequest { max_new: 2, ..GenerateRequest::greedy(i, vec![i as i32]) })
+            .collect();
+        let mut completed = Vec::new();
+        drive_load(&mut srv, &requests, b, &mut completed).unwrap();
+        assert_eq!(completed.len(), requests.len());
+        let mut ids: Vec<u64> = completed.iter().map(|c| c.id).collect();
+        ids.sort_unstable();
+        assert_eq!(ids, (0..2 * b as u64 + 1).collect::<Vec<_>>());
+        assert!(srv.metrics.peak_occupancy <= b);
+        assert!(srv.metrics.mean_occupancy() > 1.0, "slots should overlap in flight");
+    }
+
+    #[test]
+    fn serve_rejects_non_lm_sessions() {
+        let mut rc = presets::by_name("vit").unwrap();
+        presets::shrink_for_bench(&mut rc);
+        let params = ParamStore::init(&rc.model, Init::Default, 1);
+        let session = InferSession::from_parts(rc, params, Box::new(Mgrit)).unwrap();
+        assert!(ServeLoop::new(session, 4).is_err());
+    }
+}

@@ -29,7 +29,12 @@
 //! 5. the steady-state **batched decode loop** of an `InferSession`
 //!    (embed → full forward on the shared train/infer core → logits-only
 //!    head → token selection) allocates exactly zero times, for both the
-//!    greedy and the top-k sampling paths — the serving twin of pin 4.
+//!    greedy and the top-k sampling paths — the serving twin of pin 4;
+//! 6. the continuous-batching **serve scheduler step** (`ServeLoop::step`:
+//!    empty-queue admission poll, batched forward with per-row cursors,
+//!    per-slot greedy + top-k sampling, metrics recording) also allocates
+//!    exactly zero times once warm — the bounded queue, slot table, board,
+//!    and capped metrics samples are all preallocated.
 
 use std::alloc::{GlobalAlloc, Layout, System};
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -41,6 +46,7 @@ use layertime::coordinator::{
 use layertime::infer::{DecodeOptions, InferSession};
 use layertime::model::{Init, ParamStore};
 use layertime::ode::{shared_params, Propagator, RustPropagator};
+use layertime::serve::{GenerateRequest, ServeLoop};
 use layertime::tensor::Tensor;
 use layertime::util::rng::Rng;
 
@@ -267,10 +273,61 @@ fn audit_decode() {
     }
 }
 
+/// The serve pin: the continuous-batching scheduler's steady-state decode
+/// step — empty-queue admission poll, batched forward with per-row
+/// cursors, one greedy and one top-k slot sampling side by side, metrics
+/// recording — allocates exactly zero times. Retirement and reporting
+/// (which build per-request result rows) happen outside the audited
+/// window by construction: both requests fill the window, so no slot
+/// retires during the audited steps.
+fn audit_serve() {
+    let mut rc = presets::by_name("gpt").expect("gpt preset");
+    rc.model.vocab = 16;
+    rc.model.d_model = 16;
+    rc.model.n_heads = 2;
+    rc.model.d_ff = 32;
+    rc.model.seq = 8;
+    rc.model.batch = 2;
+    rc.model.n_classes = 4;
+    rc.model.n_dec_layers = 6;
+    rc.model.buffer_open = 1;
+    rc.model.buffer_close = 1;
+    rc.mgrit = MgritConfig { cf: 2, levels: 2, fwd_iters: Some(1), bwd_iters: Some(1), fcf: true };
+    let params = ParamStore::init(&rc.model, Init::Default, 5);
+    let inf = InferSession::from_parts(rc, params, Box::new(Mgrit)).expect("session");
+    let mut srv = ServeLoop::new(inf, 4).expect("serve loop");
+    // two window-filling requests (prompt 1, seq 8 → 7 decode steps each):
+    // one greedy slot and one top-k slot decode side by side
+    srv.submit(GenerateRequest::greedy(0, vec![1])).expect("submit");
+    srv.submit(GenerateRequest {
+        top_k: 4,
+        temperature: 0.9,
+        seed: 3,
+        ..GenerateRequest::greedy(1, vec![2])
+    })
+    .expect("submit");
+    // warm up: admission + cold-row install, core construction, top-k
+    // scratch sizing, first-token metrics samples
+    for _ in 0..3 {
+        srv.step().expect("serve step");
+    }
+    let before = ALLOCS.load(Ordering::SeqCst);
+    for _ in 0..3 {
+        srv.step().expect("serve step");
+    }
+    let delta = ALLOCS.load(Ordering::SeqCst) - before;
+    assert_eq!(delta, 0, "serve decode step allocated {} times at steady state", delta);
+    // drain: both requests retire and report past the audited window
+    while srv.active() > 0 {
+        srv.step().expect("serve step");
+    }
+    assert_eq!(srv.take_completed().len(), 2);
+}
+
 /// Single test (see module docs): the steady-state hot path is
 /// allocation-free — Φ, the solve context on both the single-threaded and
-/// the threaded (in-place sweep) backends, the entire train step, and the
-/// batched decode loop.
+/// the threaded (in-place sweep) backends, the entire train step, the
+/// batched decode loop, and the continuous-batching serve step.
 #[test]
 fn steady_state_hot_path_is_allocation_free() {
     audit_arch(Arch::Encoder);
@@ -280,4 +337,5 @@ fn steady_state_hot_path_is_allocation_free() {
     audit_solve_context(4);
     audit_train_step();
     audit_decode();
+    audit_serve();
 }
