@@ -11,7 +11,9 @@
 //!                       full-solve / train-step scaling over worker counts
 //!   batched decode    — InferSession autoregressive decode throughput
 //!                       (tokens/sec) across batch 1/8/32, serial vs MGRIT
-//!                       forward solves on the cached hierarchy
+//!                       forward solves on the cached hierarchy, plus the
+//!                       incremental KV-cached path (short prefill-bound
+//!                       vs long steady-state generations)
 //!
 //! Flags:
 //!   --json        write machine-readable results to BENCH_hotpath.json
@@ -278,9 +280,11 @@ fn main() -> anyhow::Result<()> {
     // --- batched decode throughput -------------------------------------------
     // One row = one full `generate` call on a decoder LM (8 layers, 1+1
     // buffers): seq/2 prompt positions, seq/2 generated positions, each
-    // needing a full forward. "serial" is the exact propagation baseline;
-    // "mgrit" runs 1 V-cycle per step on the cached hierarchy (the deep-
-    // stack acceleration path). tokens/sec = batch · generated / time.
+    // needing a full forward (incremental decode is forced OFF here so the
+    // rows keep measuring the historical per-token full-forward loop).
+    // "serial" is the exact propagation baseline; "mgrit" runs 1 V-cycle
+    // per step on the cached hierarchy (the deep-stack acceleration path).
+    // tokens/sec = batch · generated / time.
     {
         let mut rc = presets::gpt_small();
         presets::shrink_for_bench(&mut rc);
@@ -298,6 +302,7 @@ fn main() -> anyhow::Result<()> {
                 let params = ParamStore::init(&vrc.model, Init::Default, 0);
                 let seq = vrc.model.seq;
                 let mut inf = InferSession::from_parts(vrc, params, Box::new(Mgrit))?;
+                inf.set_incremental(false);
                 let plen = seq - gen_positions;
                 let prompts: Vec<i32> = vec![1; batch * plen];
                 let opts = DecodeOptions::default();
@@ -320,14 +325,55 @@ fn main() -> anyhow::Result<()> {
         }
     }
 
+    // --- incremental KV-cached decode ----------------------------------------
+    // The same decoder LM through the default decode path: one serial
+    // prefill forward, then one O(1) cached Φ sweep per token. "short"
+    // rows (2 generated positions) are prefill-dominated; "long" rows
+    // (seq/2 positions) approach the steady-state per-token cost, so the
+    // long-row gap to the serial-fwd rows above is what the cache buys.
+    {
+        let mut rc = presets::gpt_small();
+        presets::shrink_for_bench(&mut rc);
+        rc.model.n_dec_layers = 8;
+        rc.model.buffer_open = 1;
+        rc.model.buffer_close = 1;
+        rc.mgrit =
+            MgritConfig { cf: 2, levels: 2, fwd_iters: None, bwd_iters: Some(1), fcf: true };
+        let seq = rc.model.seq;
+        let plen = seq / 2;
+        for &batch in &[1usize, 8, 32] {
+            let mut vrc = rc.clone();
+            vrc.model.batch = batch;
+            let params = ParamStore::init(&vrc.model, Init::Default, 0);
+            let mut inf = InferSession::from_parts(vrc, params, Box::new(Mgrit))?;
+            let prompts: Vec<i32> = vec![1; batch * plen];
+            let mut out = Vec::new();
+            for &(tag, max_new) in &[("short", 2usize), ("long", seq - plen)] {
+                let opts = DecodeOptions { max_new, ..DecodeOptions::default() };
+                inf.generate_into(&prompts, plen, &opts, &mut out)?; // warm cache + scratch
+                let label =
+                    format!("cached decode ({} new tok, batch {}, {})", max_new, batch, tag);
+                let st = timed(&runner, &mut log, &label, || {
+                    inf.generate_into(&prompts, plen, &opts, &mut out).unwrap()
+                });
+                println!(
+                    "  -> {:.0} tokens/sec",
+                    (batch * max_new) as f64 / st.mean.max(1e-12)
+                );
+            }
+        }
+    }
+
     // --- serve scheduler occupancy sweep -------------------------------------
     // Continuous-batching throughput on the same decoder LM as the batched-
     // decode rows: a closed-loop driver keeps `occ` requests in flight
     // (active + queued) through the bounded queue, with ragged prompt
     // lengths so joins and retirements interleave. Every request generates
-    // exactly 4 tokens, so tokens/sec = requests · 4 / time; the gap to the
-    // batched-decode rows at the same effective batch is pure scheduler
-    // overhead (admission, per-slot sampling, metrics).
+    // exactly 4 tokens, so tokens/sec = requests · 4 / time; the loop runs
+    // the default incremental KV-cached decode (joins prefill, everything
+    // else is one cached sweep per token), so the gap to the cached-decode
+    // rows at the same effective batch is pure scheduler overhead
+    // (admission, per-slot sampling, metrics).
     {
         let mut rc = presets::gpt_small();
         presets::shrink_for_bench(&mut rc);

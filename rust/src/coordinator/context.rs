@@ -81,14 +81,28 @@ pub struct ForwardWorkspace {
     pub head: Tensor,
     /// Second ping-pong buffer for rolling (evaluation) forwards.
     pub pp: Tensor,
+    /// Single-position decode row state [B,1,D] — the incremental
+    /// (KV-cached) decode path's current row per batch slot.
+    pub row_cur: Tensor,
+    /// Ping-pong partner of `row_cur` for cached layer sweeps.
+    pub row_pp: Tensor,
 }
 
 impl ForwardWorkspace {
     pub fn new(n_layers: usize, state_shape: &[usize], head_shape: &[usize]) -> ForwardWorkspace {
+        // decode rows are one position wide; non-[B,S,D] head shapes (the
+        // linear-ODE test problems) never decode, so any shape serves
+        let row_shape: Vec<usize> = if head_shape.len() == 3 {
+            vec![head_shape[0], 1, head_shape[2]]
+        } else {
+            head_shape.to_vec()
+        };
         ForwardWorkspace {
             states: (0..=n_layers).map(|_| Tensor::zeros(state_shape)).collect(),
             head: Tensor::zeros(head_shape),
             pp: Tensor::zeros(state_shape),
+            row_cur: Tensor::zeros(&row_shape),
+            row_pp: Tensor::zeros(&row_shape),
         }
     }
 

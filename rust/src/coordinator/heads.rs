@@ -74,6 +74,33 @@ pub fn embed_state_into(
     }
 }
 
+/// Embed one token per batch row at a **per-row** board position into a
+/// `[B·D]` slice (fully overwritten): row `b` gets
+/// `w_emb[tokens[b]] + w_pos[positions[b]]` — bitwise the row
+/// [`embed_into`] writes at `(b, positions[b])`, which keeps the
+/// incremental decode step's `[B,1,D]` input identical to the full-board
+/// embedding it replaces.
+pub fn embed_rows_into(
+    tokens: &[i32],
+    positions: &[usize],
+    w_emb: &[f32],
+    w_pos: &[f32],
+    d: usize,
+    x: &mut [f32],
+) {
+    assert_eq!(tokens.len(), positions.len(), "embed_rows_into: one position per row");
+    assert_eq!(x.len(), tokens.len() * d, "embed_rows_into: destination size mismatch");
+    for (b, (&tok, &pos)) in tokens.iter().zip(positions).enumerate() {
+        let tok = tok as usize;
+        let out = &mut x[b * d..(b + 1) * d];
+        let emb = &w_emb[tok * d..(tok + 1) * d];
+        let pos = &w_pos[pos * d..(pos + 1) * d];
+        for i in 0..d {
+            out[i] = emb[i] + pos[i];
+        }
+    }
+}
+
 /// Scatter-add the embedding gradients: (g_emb, g_pos) += from λ_x
 /// (a `[B·S·D]` slice, so stacked-state halves pass without a copy).
 pub fn embed_bwd(
@@ -462,6 +489,27 @@ mod tests {
         embed_bwd(&toks, &lam, b, s, d, &mut ge, &mut gp);
         assert_eq!(ge[2 * d], 2.0); // token 2 hit twice
         assert_eq!(gp[0], 1.0);
+    }
+
+    #[test]
+    fn embed_rows_matches_full_board_rows_bitwise() {
+        let (b, s, d, v) = (3, 4, 4, 8);
+        let mut rng = Rng::new(17);
+        let we = rng.normal_vec(v * d, 1.0);
+        let wp = rng.normal_vec(s * d, 1.0);
+        let toks: Vec<i32> = (0..(b * s) as i32).map(|t| t % v as i32).collect();
+        let mut board = vec![0.0f32; b * s * d];
+        embed_into(&toks, &we, &wp, b, s, d, &mut board);
+        let positions = [2usize, 0, 3];
+        let row_toks: Vec<i32> = positions.iter().enumerate()
+            .map(|(r, &p)| toks[r * s + p]).collect();
+        let mut rows = vec![9.0f32; b * d];
+        embed_rows_into(&row_toks, &positions, &we, &wp, d, &mut rows);
+        for (r, &p) in positions.iter().enumerate() {
+            assert_eq!(&rows[r * d..(r + 1) * d],
+                       &board[(r * s + p) * d..(r * s + p + 1) * d],
+                       "row {} at position {}", r, p);
+        }
     }
 
     #[test]

@@ -2,7 +2,8 @@
 //! while the open/close "buffer" layers (paper Appendix B) are driven
 //! serially by the trainer outside this view.
 
-use crate::ode::{Propagator, StepCounters};
+use crate::ode::{CacheUnsupported, Propagator, StepCounters};
+use crate::reference::KvCache;
 use crate::tensor::Tensor;
 
 /// Layers [start, start+len) of `inner`, re-indexed from 0.
@@ -88,6 +89,46 @@ impl<'a> Propagator for RangeProp<'a> {
 
     fn theta_len(&self, layer: usize) -> usize {
         self.inner.theta_len(self.start + layer)
+    }
+
+    fn make_cache(&self) -> Option<KvCache> {
+        // the cache indexes *global* layers (layer0 offset), so the inner
+        // cache is correct for a sub-range view as-is
+        self.inner.make_cache()
+    }
+
+    fn step_cached(
+        &self,
+        layer: usize,
+        cache: &mut KvCache,
+        positions: &[usize],
+        cur: &Tensor,
+        out: &mut Tensor,
+    ) -> Result<(), CacheUnsupported> {
+        self.inner.step_cached(self.start + layer, cache, positions, cur, out)
+    }
+
+    fn step_to_cached(
+        &self,
+        lo: usize,
+        hi: usize,
+        cache: &mut KvCache,
+        positions: &[usize],
+        cur: &mut Tensor,
+        scratch: &mut Tensor,
+    ) -> Result<(), CacheUnsupported> {
+        self.inner.step_to_cached(self.start + lo, self.start + hi, cache, positions, cur,
+                                  scratch)
+    }
+
+    fn fill_cached(
+        &self,
+        layer: usize,
+        cache: &mut KvCache,
+        z: &Tensor,
+        positions: &[usize],
+    ) -> Result<(), CacheUnsupported> {
+        self.inner.fill_cached(self.start + layer, cache, z, positions)
     }
 
     fn counters(&self) -> &StepCounters {

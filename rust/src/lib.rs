@@ -61,12 +61,20 @@
 //!   kernels (`coordinator::heads::{lm,tag,cls}_infer_into`): batched
 //!   greedy/top-k autoregressive decoding (LM + Translate) and batched
 //!   classification/tagging prediction, allocation-free at steady state
-//!   like the training step (`rust/tests/alloc_audit.rs`).
+//!   like the training step (`rust/tests/alloc_audit.rs`). Decoding is
+//!   **incremental** by default: the prompt costs one exact serial
+//!   forward that also fills a per-layer append-only K/V cache
+//!   ([`reference::KvCache`] through the [`ode::Propagator`] cache
+//!   contract), then each further token is one O(1)-per-layer cached Φ
+//!   sweep on a single-position row state — bitwise identical to serial
+//!   full forwards (`rust/tests/decode_cache.rs`).
 //! * [`serve::ServeLoop`] — a continuous-batching inference service on
 //!   top: bounded request queue with backpressure, dynamic batching
-//!   (join-mid-flight / early-retirement with per-row warm-start resets),
-//!   checkpoint hot-reload between decode steps, and queue/occupancy/
-//!   latency observability (`layertime serve` / `bench-serve`).
+//!   (join-mid-flight / early-retirement with per-row warm-start and
+//!   cache-row resets; joins prefill, every other step is one cached
+//!   sweep), checkpoint hot-reload between decode steps, and queue/
+//!   occupancy/latency observability with a prefill/decode step split
+//!   (`layertime serve` / `bench-serve`).
 //!
 //! ## Checkpoints ([`checkpoint`])
 //!

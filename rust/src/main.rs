@@ -58,9 +58,11 @@ const USAGE: &str = "layertime <train|generate|predict|serve|bench-serve|compare
               --save-every N --keep K (periodic autosave next to --save PATH,
               oldest pruned past K), --checkpoint PATH (weights-only, legacy)
   inference:  generate|predict --ckpt PATH [--workers N] [--fwd-iters {N|serial}]
+              [--no-incremental (full forward per token instead of KV-cached decode)]
               generate: --max-new N --top-k K --temperature F --seed N
               predict:  --batches N
   serve:      --ckpt PATH and/or --watch DIR (hot-reload newest valid .ltcp)
+              [--no-incremental]
               --requests FILE|- (JSON: [{\"prompt\": [..], \"id\", \"max_new\",
               \"top_k\", \"temperature\", \"seed\"}, ..] or {\"requests\": [..]})
               --queue N (backpressure capacity) --feeders N (producer threads)
@@ -218,8 +220,11 @@ fn infer_from(args: &Args) -> Result<InferSession> {
     if let Some(v) = args.get("fwd-iters") {
         inf.set_fwd_iters(if v == "serial" { None } else { Some(v.parse()?) });
     }
+    if args.has_flag("no-incremental") {
+        inf.set_incremental(false);
+    }
     println!(
-        "checkpoint '{}' ({:?}): {} layers, backend {}, forward {}",
+        "checkpoint '{}' ({:?}): {} layers, backend {}, forward {}, {} decode",
         inf.rc.name,
         inf.task(),
         inf.rc.model.total_layers(),
@@ -229,7 +234,8 @@ fn infer_from(args: &Args) -> Result<InferSession> {
                 format!("mgrit cf={} L={} {} iter(s)", inf.rc.mgrit.cf, inf.rc.mgrit.levels, k)
             }
             None => "serial (exact)".into(),
-        }
+        },
+        if inf.incremental() { "incremental (KV-cached)" } else { "full-forward" }
     );
     Ok(inf)
 }
@@ -254,10 +260,11 @@ fn cmd_generate(args: &Args) -> Result<()> {
         }
         _ => {}
     }
-    let opts = DecodeOptions {
+    let mut opts = DecodeOptions {
         top_k: args.get_usize("top-k", 0),
         temperature: args.get_f32("temperature", 1.0),
         seed: args.get_u64("seed", 0),
+        max_new: 0,
     };
     // sample inputs from the task's deterministic data source
     let obj = Task::for_preset(&inf.rc.name)?.objective(&m, inf.rc.train.seed);
@@ -288,6 +295,9 @@ fn cmd_generate(args: &Args) -> Result<()> {
             for b in 0..m.batch {
                 prompts.extend_from_slice(&batch.tokens[b * m.seq..b * m.seq + plen]);
             }
+            // route the cap through the decode options so the session
+            // validates prompt_len + max_new against its window
+            opts.max_new = max_new;
             let out = inf.generate(&prompts, plen, &opts)?;
             println!(
                 "generated {} tokens per sequence ({} sequences, {}):",
@@ -408,6 +418,9 @@ fn cmd_serve(args: &Args) -> Result<()> {
     if let Some(v) = args.get("fwd-iters") {
         inf.set_fwd_iters(if v == "serial" { None } else { Some(v.parse()?) });
     }
+    if args.has_flag("no-incremental") {
+        inf.set_incremental(false);
+    }
     let text = match args.get("requests") {
         Some("-") => {
             let mut t = String::new();
@@ -473,12 +486,16 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let qs = srv.queue().stats();
     let met = &srv.metrics;
     println!(
-        "completed {}/{} request(s): {:.1} tok/s decode, mean occupancy {:.2} (peak {}), {} reload(s)",
+        "completed {}/{} request(s): {:.1} tok/s decode ({:.1} steady-state), mean occupancy \
+         {:.2} (peak {}), {} prefill / {} decode step(s), {} reload(s)",
         met.completed,
         qs.submitted,
         met.tokens_per_sec(),
+        met.decode_tokens_per_sec(),
         met.mean_occupancy(),
         met.peak_occupancy,
+        met.prefill_steps,
+        met.decode_steps - met.prefill_steps,
         met.reloads
     );
     if let Some(path) = args.get("out") {
@@ -529,10 +546,14 @@ fn cmd_bench_serve(args: &Args) -> Result<()> {
         if top_k == 0 { "greedy".to_string() } else { format!("top-{}", top_k) }
     );
     println!(
-        "  {} tokens in {:.3} s wall — {:.1} tok/s decode, mean occupancy {:.2} (peak {})",
+        "  {} tokens in {:.3} s wall — {:.1} tok/s decode ({:.1} steady-state over {} pure \
+         decode step(s), {} prefill), mean occupancy {:.2} (peak {})",
         met.tokens_generated,
         wall,
         met.tokens_per_sec(),
+        met.decode_tokens_per_sec(),
+        met.decode_steps - met.prefill_steps,
+        met.prefill_steps,
         met.mean_occupancy(),
         met.peak_occupancy
     );

@@ -19,6 +19,6 @@ mod rust_prop;
 mod xla_prop;
 
 pub use linear::LinearOde;
-pub use propagator::{Propagator, StepCounters};
+pub use propagator::{CacheUnsupported, Propagator, StepCounters};
 pub use rust_prop::{layer_hs, shared_params, RustPropagator, SharedParams};
 pub use xla_prop::XlaPropagator;

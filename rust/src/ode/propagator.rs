@@ -5,23 +5,32 @@
 //! shared Φ. Evaluation counters are atomics; parameter stores behind the
 //! implementations use `Arc<RwLock<..>>` (see [`super::SharedParams`]).
 
+use std::fmt;
 use std::sync::atomic::{AtomicU64, Ordering};
 
+use crate::reference::KvCache;
 use crate::tensor::Tensor;
 
 /// Φ-evaluation counters (feed the performance simulator and §Perf logs).
 ///
 /// Relaxed atomics: counts are statistics, not synchronization — workers
-/// bump them concurrently during threaded relaxation.
+/// bump them concurrently during threaded relaxation. `cached` counts
+/// incremental single-position decode steps separately from full-board
+/// `fwd` evaluations so tests can pin "no full solve per token".
 #[derive(Debug, Default)]
 pub struct StepCounters {
     fwd: AtomicU64,
     vjp: AtomicU64,
+    cached: AtomicU64,
 }
 
 impl Clone for StepCounters {
     fn clone(&self) -> StepCounters {
-        StepCounters { fwd: AtomicU64::new(self.fwd()), vjp: AtomicU64::new(self.vjp()) }
+        StepCounters {
+            fwd: AtomicU64::new(self.fwd()),
+            vjp: AtomicU64::new(self.vjp()),
+            cached: AtomicU64::new(self.cached()),
+        }
     }
 }
 
@@ -34,6 +43,10 @@ impl StepCounters {
         self.vjp.fetch_add(1, Ordering::Relaxed);
     }
 
+    pub fn count_cached(&self) {
+        self.cached.fetch_add(1, Ordering::Relaxed);
+    }
+
     pub fn fwd(&self) -> u64 {
         self.fwd.load(Ordering::Relaxed)
     }
@@ -42,11 +55,30 @@ impl StepCounters {
         self.vjp.load(Ordering::Relaxed)
     }
 
+    pub fn cached(&self) -> u64 {
+        self.cached.load(Ordering::Relaxed)
+    }
+
     pub fn reset(&self) {
         self.fwd.store(0, Ordering::Relaxed);
         self.vjp.store(0, Ordering::Relaxed);
+        self.cached.store(0, Ordering::Relaxed);
     }
 }
+
+/// Returned by the cached-decode contract when a propagator has no
+/// incremental step (the default): callers fall back to the full-board
+/// forward path.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct CacheUnsupported;
+
+impl fmt::Display for CacheUnsupported {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "propagator does not support incremental (KV-cached) decode")
+    }
+}
+
+impl std::error::Error for CacheUnsupported {}
 
 /// One discrete neural-ODE propagator Φ over layers 0..n_steps().
 ///
@@ -169,6 +201,77 @@ pub trait Propagator: Send + Sync {
     /// Flat parameter length of layer `layer`.
     fn theta_len(&self, layer: usize) -> usize;
 
+    // --- incremental (KV-cached) decode contract -----------------------
+    //
+    // Optional: the default implementations advertise no support
+    // (`make_cache` → None, the steps → Err(CacheUnsupported)), so
+    // `XlaPropagator` / `LinearOde` are untouched. `RustPropagator`
+    // overrides the whole family with a pooled-scratch zero-allocation
+    // path; `RangeProp` forwards with its layer offset.
+
+    /// Allocate a K/V cache sized for this propagator's decode path, or
+    /// `None` when incremental decode is unsupported (e.g. bidirectional
+    /// encoders, whose rows are not causal).
+    fn make_cache(&self) -> Option<KvCache> {
+        None
+    }
+
+    /// One cached Φ step at `layer`: `cur`/`out` hold the `[B, 1, d]`
+    /// newest-position rows (decoder half only for stacked models),
+    /// `positions[b]` is the board position being advanced. Appends the
+    /// layer's K/V column for the new position and fully overwrites
+    /// `out`. Bitwise identical to the same row of a full-board
+    /// [`Propagator::step_into`] given a cache populated from the same
+    /// history.
+    fn step_cached(
+        &self,
+        layer: usize,
+        cache: &mut KvCache,
+        positions: &[usize],
+        cur: &Tensor,
+        out: &mut Tensor,
+    ) -> Result<(), CacheUnsupported> {
+        let _ = (layer, cache, positions, cur, out);
+        Err(CacheUnsupported)
+    }
+
+    /// Cached rolling sweep over `[layer_lo, layer_hi)`: `cur` holds the
+    /// newest-position rows entering `layer_lo` and, on success, the rows
+    /// after `layer_hi`; `scratch` is a ping-pong buffer (contents
+    /// unspecified afterwards). Implementations amortize per-call
+    /// dispatch (parameter lock) across the sweep.
+    fn step_to_cached(
+        &self,
+        layer_lo: usize,
+        layer_hi: usize,
+        cache: &mut KvCache,
+        positions: &[usize],
+        cur: &mut Tensor,
+        scratch: &mut Tensor,
+    ) -> Result<(), CacheUnsupported> {
+        for layer in layer_lo..layer_hi {
+            self.step_cached(layer, cache, positions, cur, scratch)?;
+            std::mem::swap(cur, scratch);
+        }
+        Ok(())
+    }
+
+    /// Prefill: project layer `layer`'s K/V columns
+    /// `cache.len(b)..=positions[b]` (per row) out of the full-board
+    /// layer-input state `z` — called once per layer after an exact full
+    /// forward, followed by one `cache.commit(positions)`. Layers outside
+    /// the cached range are a no-op.
+    fn fill_cached(
+        &self,
+        layer: usize,
+        cache: &mut KvCache,
+        z: &Tensor,
+        positions: &[usize],
+    ) -> Result<(), CacheUnsupported> {
+        let _ = (layer, cache, z, positions);
+        Err(CacheUnsupported)
+    }
+
     /// Evaluation counters.
     fn counters(&self) -> &StepCounters;
 }
@@ -200,9 +303,15 @@ mod tests {
     fn clone_snapshots_counts() {
         let c = StepCounters::default();
         c.count_fwd();
+        c.count_cached();
         let d = c.clone();
         c.count_fwd();
+        c.count_cached();
         assert_eq!(d.fwd(), 1);
+        assert_eq!(d.cached(), 1);
         assert_eq!(c.fwd(), 2);
+        assert_eq!(c.cached(), 2);
+        c.reset();
+        assert_eq!(c.cached(), 0);
     }
 }

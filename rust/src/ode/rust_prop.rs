@@ -16,9 +16,9 @@
 
 use std::sync::{Arc, Mutex, RwLock};
 
-use super::propagator::{Propagator, StepCounters};
+use super::propagator::{CacheUnsupported, Propagator, StepCounters};
 use crate::config::{Arch, ModelConfig};
-use crate::reference::{self, RefDims, Scratch};
+use crate::reference::{self, KvCache, RefDims, Scratch};
 use crate::tensor::Tensor;
 
 /// Shared per-layer flat parameters (the trainer mutates through this Arc).
@@ -138,6 +138,49 @@ impl RustPropagator {
                 }
             }
         })
+    }
+
+    /// One cached Φ application with θ resolved: `z`/`out` are the
+    /// `[B, 1, d]` newest-position rows (decoder Y half only for the
+    /// stacked EncDec state). Appends the layer's K/V column at
+    /// `positions[b]` and fully overwrites `out`. Bidirectional layers
+    /// (encoders, EncDec layers below n_enc) have no incremental form — a
+    /// new position would rewrite every previous row — and report
+    /// `CacheUnsupported`.
+    fn apply_cached_into(
+        &self,
+        layer: usize,
+        theta: &[f32],
+        h: f32,
+        cache: &mut KvCache,
+        positions: &[usize],
+        z: &[f32],
+        out: &mut [f32],
+    ) -> Result<(), CacheUnsupported> {
+        let dm = RefDims { seq: 1, ..self.dims };
+        let cap = self.dims.seq;
+        match self.arch {
+            Arch::Encoder => Err(CacheUnsupported),
+            Arch::Decoder => {
+                let lv = cache.layer_mut(layer - cache.layer0());
+                self.with_scratch(|s| {
+                    reference::enc_step_fwd_cached(z, theta, h, &dm, cap, positions, lv.k, lv.v,
+                                                   out, s)
+                });
+                Ok(())
+            }
+            Arch::EncDec => {
+                if layer < self.n_enc {
+                    return Err(CacheUnsupported);
+                }
+                let lv = cache.layer_mut(layer - cache.layer0());
+                self.with_scratch(|s| {
+                    reference::dec_step_fwd_cached(z, theta, h, &dm, cap, positions, lv.k, lv.v,
+                                                   cap, cap, lv.ck, lv.cv, out, s)
+                });
+                Ok(())
+            }
+        }
     }
 
     /// One adjoint application with θ resolved (`out` fully overwritten);
@@ -365,6 +408,108 @@ impl Propagator for RustPropagator {
         self.theta_lens[layer]
     }
 
+    /// Decode cache sized for this model: one self-attention store per
+    /// causal layer (all layers for `Decoder`, the dec stack for
+    /// `EncDec`, which also carries the φ3 cross store for the frozen
+    /// encoder output). Encoders are bidirectional → `None`.
+    fn make_cache(&self) -> Option<KvCache> {
+        let hd = self.dims.d_model / self.dims.n_heads;
+        let (b, nh, seq) = (self.dims.batch, self.dims.n_heads, self.dims.seq);
+        match self.arch {
+            Arch::Encoder => None,
+            Arch::Decoder => Some(KvCache::new(self.n_steps, 0, b, nh, hd, seq, 0)),
+            Arch::EncDec => {
+                Some(KvCache::new(self.n_steps - self.n_enc, self.n_enc, b, nh, hd, seq, seq))
+            }
+        }
+    }
+
+    fn step_cached(
+        &self,
+        layer: usize,
+        cache: &mut KvCache,
+        positions: &[usize],
+        cur: &Tensor,
+        out: &mut Tensor,
+    ) -> Result<(), CacheUnsupported> {
+        self.counters.count_cached();
+        let params = self.params.read().unwrap();
+        self.apply_cached_into(layer, &params[layer], self.hs[layer], cache, positions,
+                               cur.data(), out.data_mut())
+    }
+
+    /// Cached sweep under a single read-lock acquisition — the per-token
+    /// decode hot path: one O(1) Φ application per layer, zero heap
+    /// allocations with a warm scratch pool.
+    fn step_to_cached(
+        &self,
+        layer_lo: usize,
+        layer_hi: usize,
+        cache: &mut KvCache,
+        positions: &[usize],
+        cur: &mut Tensor,
+        scratch: &mut Tensor,
+    ) -> Result<(), CacheUnsupported> {
+        let params = self.params.read().unwrap();
+        for layer in layer_lo..layer_hi {
+            self.counters.count_cached();
+            self.apply_cached_into(layer, &params[layer], self.hs[layer], cache, positions,
+                                   cur.data(), scratch.data_mut())?;
+            std::mem::swap(cur, scratch);
+        }
+        Ok(())
+    }
+
+    /// Prefill from the full-board layer-input state: projects the K/V
+    /// columns `cache.len(b)..=positions[b]` per row out of `z`, bitwise
+    /// what the cached steps would have appended walking those positions.
+    /// For `EncDec`, encoder layers are a no-op and the first fill pass
+    /// after a reset also primes each dec layer's φ3 cross store from the
+    /// (frozen) X half; the caller flips `set_cross_primed(true)` once
+    /// all layers are filled.
+    fn fill_cached(
+        &self,
+        layer: usize,
+        cache: &mut KvCache,
+        z: &Tensor,
+        positions: &[usize],
+    ) -> Result<(), CacheUnsupported> {
+        let (b, seq, d, nh) = (self.dims.batch, self.dims.seq, self.dims.d_model,
+                               self.dims.n_heads);
+        let params = self.params.read().unwrap();
+        let theta = &params[layer];
+        match self.arch {
+            Arch::Encoder => Err(CacheUnsupported),
+            Arch::Decoder => {
+                let p = reference::EncParams::view(theta, d, self.dims.d_ff);
+                let lv = cache.layer_mut(layer);
+                self.with_scratch(|s| {
+                    reference::fill_self_kv(z.data(), p.ln1_g, p.ln1_b, p.wk, p.wv, b, seq, d,
+                                            nh, seq, lv.lens, positions, lv.k, lv.v, s)
+                });
+                Ok(())
+            }
+            Arch::EncDec => {
+                if layer < self.n_enc {
+                    return Ok(()); // encoder layers hold no decode-time columns
+                }
+                let p = reference::DecParams::view(theta, d, self.dims.d_ff);
+                let (zx, zy) = z.data().split_at(z.len() / 2);
+                let prime = !cache.cross_primed();
+                let lv = cache.layer_mut(layer - self.n_enc);
+                self.with_scratch(|s| {
+                    reference::fill_self_kv(zy, p.enc.ln1_g, p.enc.ln1_b, p.enc.wk, p.enc.wv, b,
+                                            seq, d, nh, seq, lv.lens, positions, lv.k, lv.v, s);
+                    if prime {
+                        reference::fill_cross_kv(zx, p.ck, p.cv, b, seq, d, nh, seq, lv.ck,
+                                                 lv.cv, s);
+                    }
+                });
+                Ok(())
+            }
+        }
+    }
+
     fn counters(&self) -> &StepCounters {
         &self.counters
     }
@@ -518,6 +663,99 @@ mod tests {
         for o in outs {
             assert_eq!(o.data(), want.data());
         }
+    }
+
+    #[test]
+    fn cached_sweep_matches_full_forward_rows_bitwise() {
+        // The tentpole acceptance property at the propagator level: walk
+        // the board left to right with step_to_cached (one [B,1,d] row in,
+        // one O(1) sweep over all layers per position) and pin every
+        // produced row bitwise against the rows of a full-board
+        // step_seq_into over the same input. The cache columns consumed at
+        // position p were appended during positions < p's sweeps, so this
+        // is the real decode-loop induction, not a single-step check.
+        let model = tiny_model(Arch::Decoder);
+        let (b, s, d) = (model.batch, model.seq, model.d_model);
+        let mut rng = Rng::new(11);
+        let params = make_params(&model, &mut rng, 0.12);
+        let prop = RustPropagator::new(&model, 0.5, params);
+        let n = model.total_layers();
+
+        let z0 = Tensor::randn(&mut rng, &prop.state_shape(), 0.8);
+        let mut states: Vec<Tensor> =
+            (0..=n).map(|_| Tensor::zeros(&prop.state_shape())).collect();
+        states[0] = z0.clone();
+        prop.step_seq_into(0, 1.0, &mut states);
+
+        let mut cache = prop.make_cache().expect("decoder supports incremental decode");
+        let mut cur = Tensor::zeros(&[b, 1, d]);
+        let mut pp = Tensor::zeros(&[b, 1, d]);
+        for pos in 0..s {
+            for r in 0..b {
+                let src = (r * s + pos) * d;
+                cur.data_mut()[r * d..(r + 1) * d].copy_from_slice(&z0.data()[src..src + d]);
+            }
+            prop.step_to_cached(0, n, &mut cache, &[pos], &mut cur, &mut pp).unwrap();
+            cache.commit(&[pos]);
+            for r in 0..b {
+                let want = (r * s + pos) * d;
+                assert_eq!(&cur.data()[r * d..(r + 1) * d],
+                           &states[n].data()[want..want + d],
+                           "row {} position {}", r, pos);
+            }
+        }
+        assert_eq!(prop.counters().cached(), (s * n) as u64);
+    }
+
+    #[test]
+    fn cached_dec_sweep_matches_full_forward_y_rows_bitwise() {
+        // EncDec variant: prefill at position 0 (fill_cached over every
+        // layer from the full-forward intermediates + commit), then decode
+        // positions 1.. with cached sweeps over the dec stack only. The Y
+        // rows must match the full forward bitwise; the X half never moves
+        // through dec layers, so the cross store primed at prefill covers
+        // every step.
+        let model = tiny_model(Arch::EncDec);
+        let (s, d) = (model.seq, model.d_model);
+        let mut rng = Rng::new(12);
+        let params = make_params(&model, &mut rng, 0.12);
+        let prop = RustPropagator::new(&model, 0.5, params);
+        let n = model.total_layers();
+
+        let z0 = Tensor::randn(&mut rng, &prop.state_shape(), 0.8);
+        let mut states: Vec<Tensor> =
+            (0..=n).map(|_| Tensor::zeros(&prop.state_shape())).collect();
+        states[0] = z0.clone();
+        prop.step_seq_into(0, 1.0, &mut states);
+
+        let mut cache = prop.make_cache().expect("encdec supports incremental decode");
+        assert_eq!(cache.layer0(), model.n_enc_layers);
+        for l in 0..n {
+            prop.fill_cached(l, &mut cache, &states[l], &[0]).unwrap();
+        }
+        cache.set_cross_primed(true);
+        cache.commit(&[0]);
+
+        let half = z0.len() / 2;
+        let mut cur = Tensor::zeros(&[1, 1, d]);
+        let mut pp = Tensor::zeros(&[1, 1, d]);
+        for pos in 1..s {
+            let src = half + pos * d;
+            cur.data_mut().copy_from_slice(&z0.data()[src..src + d]);
+            prop.step_to_cached(model.n_enc_layers, n, &mut cache, &[pos], &mut cur, &mut pp)
+                .unwrap();
+            cache.commit(&[pos]);
+            assert_eq!(cur.data(), &states[n].data()[src..src + d], "Y position {}", pos);
+        }
+    }
+
+    #[test]
+    fn encoder_arch_has_no_decode_cache() {
+        let model = tiny_model(Arch::Encoder);
+        let mut rng = Rng::new(13);
+        let params = make_params(&model, &mut rng, 0.1);
+        let prop = RustPropagator::new(&model, 1.0, params);
+        assert!(prop.make_cache().is_none(), "bidirectional attention cannot decode in place");
     }
 
     #[test]

@@ -763,6 +763,286 @@ pub fn dec_step_bwd(
     )
 }
 
+// ---------------------------------------------------------------------------
+// incremental (KV-cached) decode kernels
+// ---------------------------------------------------------------------------
+//
+// One new position per batch row instead of the whole board. The cache
+// slabs are laid out [batch, n_heads, cap, head_dim] (pre-gathered per
+// head, see `crate::reference::KvCache`), so scoring streams one
+// contiguous [len, head_dim] slab per (row, head). Bitwise parity with
+// the full-board kernels rests on three properties pinned by the tests
+// below and in `tensor/ops.rs`:
+//
+// * `mm_into` accumulates each output element over k in ascending order
+//   (naive-loop bitwise), so projecting one row gives the same bits as
+//   that row inside a full-board projection, and a softmax row whose
+//   masked tail weights are exactly +0.0 contributes nothing to the
+//   ascending-k value accumulation;
+// * `mm_bt_into`'s dot depends only on the head_dim contraction, which
+//   is identical in both paths;
+// * layer-norm / GELU / bias are row-wise.
+
+/// Score one new query row per batch against cached K/V; for
+/// self-attention (`cross_len = None`) first project `append` and store
+/// it as column `positions[b]`, then attend over `positions[b] + 1`
+/// columns (the causal set). `out` is `[batch, d]`, fully overwritten.
+#[allow(clippy::too_many_arguments)]
+fn attention_fwd_cached(
+    zq: &[f32],
+    append: Option<&[f32]>,
+    wq: &[f32],
+    wk: &[f32],
+    wv: &[f32],
+    wo: &[f32],
+    batch: usize,
+    d: usize,
+    nh: usize,
+    cap: usize,
+    positions: &[usize],
+    cross_len: Option<usize>,
+    kcache: &mut [f32],
+    vcache: &mut [f32],
+    out: &mut [f32],
+    s: &mut Scratch,
+) {
+    let hd = d / nh;
+    let scale = 1.0 / (hd as f32).sqrt();
+
+    let mut q = s.take_any(batch * d);
+    mm_into(zq, wq, batch, d, d, &mut q, false);
+    if let Some(rows) = append {
+        let mut kn = s.take_any(batch * d);
+        let mut vn = s.take_any(batch * d);
+        mm_into(rows, wk, batch, d, d, &mut kn, false);
+        mm_into(rows, wv, batch, d, d, &mut vn, false);
+        for b in 0..batch {
+            for h in 0..nh {
+                let src = b * d + h * hd;
+                let dst = ((b * nh + h) * cap + positions[b]) * hd;
+                kcache[dst..dst + hd].copy_from_slice(&kn[src..src + hd]);
+                vcache[dst..dst + hd].copy_from_slice(&vn[src..src + hd]);
+            }
+        }
+        s.give(vn);
+        s.give(kn);
+    }
+
+    let mut merged = s.take(batch * d); // zeroed: head outputs accumulate
+    let mut scores = s.take_any(cap.max(1));
+    let mut oh = s.take_any(hd);
+    for b in 0..batch {
+        let len = cross_len.unwrap_or(positions[b] + 1);
+        for h in 0..nh {
+            let qh = &q[b * d + h * hd..b * d + (h + 1) * hd];
+            let base = (b * nh + h) * cap * hd;
+            let kh = &kcache[base..base + len * hd];
+            let vh = &vcache[base..base + len * hd];
+            let sc = &mut scores[..len];
+            mm_bt_into(qh, kh, 1, hd, len, sc, false);
+            sc.iter_mut().for_each(|x| *x *= scale);
+            masked_softmax(sc, 1, len, false);
+            mm_into(sc, vh, 1, len, hd, &mut oh, false);
+            // same add-into-zeroed accumulation as scatter_head_add
+            let mrow = &mut merged[b * d + h * hd..b * d + (h + 1) * hd];
+            for (m, &o) in mrow.iter_mut().zip(oh.iter()) {
+                *m += o;
+            }
+        }
+    }
+    mm_into(&merged, wo, batch, d, d, out, false);
+    s.give(oh);
+    s.give(scores);
+    s.give(merged);
+    s.give(q);
+}
+
+/// Cached encoder-family step on the single newest position per row:
+/// `x` holds the `[batch, d]` layer-input rows at `positions[b]`. The φ1
+/// K/V column for the new position is appended to the cache and the row
+/// advances exactly as it would inside a full causal
+/// [`enc_step_fwd_into`] board — bit for bit. `dm.seq` must be 1.
+#[allow(clippy::too_many_arguments)]
+pub fn enc_step_fwd_cached(
+    x: &[f32],
+    theta: &[f32],
+    h: f32,
+    dm: &RefDims,
+    cap: usize,
+    positions: &[usize],
+    kcache: &mut [f32],
+    vcache: &mut [f32],
+    out: &mut [f32],
+    s: &mut Scratch,
+) {
+    debug_assert_eq!(dm.seq, 1, "cached step advances one position per row");
+    let p = EncParams::view(theta, dm.d_model, dm.d_ff);
+    let n = dm.batch * dm.d_model;
+    let mut z = s.take_any(n);
+    layer_norm_fwd_into(x, p.ln1_g, p.ln1_b, dm.d_model, &mut z);
+    let mut a = s.take_any(n);
+    attention_fwd_cached(&z, Some(&z), p.wq, p.wk, p.wv, p.wo, dm.batch, dm.d_model, dm.n_heads,
+                         cap, positions, None, kcache, vcache, &mut a, s);
+    let mut u = s.take_any(n);
+    for i in 0..n {
+        u[i] = x[i] + a[i];
+    }
+    let mut m = s.take_any(n);
+    phi2_fwd(&u, &p, dm, &mut m, s);
+    for i in 0..n {
+        out[i] = x[i] + h * (a[i] + m[i]);
+    }
+    s.give(m);
+    s.give(u);
+    s.give(a);
+    s.give(z);
+}
+
+/// Cached decoder step (eq. 2) on the single newest position per row:
+/// φ1 appends to and scores against the decoder self-attention cache; φ3
+/// reads the primed cross-attention store (encoder K/V, filled once by
+/// [`fill_cross_kv`]). `dm.seq` must be 1.
+#[allow(clippy::too_many_arguments)]
+pub fn dec_step_fwd_cached(
+    y: &[f32],
+    theta: &[f32],
+    h: f32,
+    dm: &RefDims,
+    cap: usize,
+    positions: &[usize],
+    k_self: &mut [f32],
+    v_self: &mut [f32],
+    cross_cap: usize,
+    cross_len: usize,
+    k_cross: &mut [f32],
+    v_cross: &mut [f32],
+    out: &mut [f32],
+    s: &mut Scratch,
+) {
+    debug_assert_eq!(dm.seq, 1, "cached step advances one position per row");
+    let p = DecParams::view(theta, dm.d_model, dm.d_ff);
+    let n = dm.batch * dm.d_model;
+    // a = φ1(y): causal self-attention over the cached decoder columns
+    let mut z1 = s.take_any(n);
+    layer_norm_fwd_into(y, p.enc.ln1_g, p.enc.ln1_b, dm.d_model, &mut z1);
+    let mut a = s.take_any(n);
+    attention_fwd_cached(&z1, Some(&z1), p.enc.wq, p.enc.wk, p.enc.wv, p.enc.wo, dm.batch,
+                         dm.d_model, dm.n_heads, cap, positions, None, k_self, v_self, &mut a, s);
+    let mut u3 = s.take_any(n);
+    for i in 0..n {
+        u3[i] = y[i] + a[i];
+    }
+    // c = φ3(u3, X_enc): cross-attention against the primed encoder store
+    let mut z3 = s.take_any(n);
+    layer_norm_fwd_into(&u3, p.ln3_g, p.ln3_b, dm.d_model, &mut z3);
+    let mut c = s.take_any(n);
+    attention_fwd_cached(&z3, None, p.cq, p.ck, p.cv, p.co, dm.batch, dm.d_model, dm.n_heads,
+                         cross_cap, positions, Some(cross_len), k_cross, v_cross, &mut c, s);
+    let mut ybar = s.take_any(n);
+    for i in 0..n {
+        ybar[i] = a[i] + c[i];
+    }
+    let mut u2 = s.take_any(n);
+    for i in 0..n {
+        u2[i] = y[i] + ybar[i];
+    }
+    let mut m = s.take_any(n);
+    phi2_fwd(&u2, &p.enc, dm, &mut m, s);
+    for i in 0..n {
+        out[i] = y[i] + h * (ybar[i] + m[i]);
+    }
+    s.give(m);
+    s.give(u2);
+    s.give(ybar);
+    s.give(c);
+    s.give(z3);
+    s.give(u3);
+    s.give(a);
+    s.give(z1);
+}
+
+/// Prefill helper: project and store the φ1 K/V columns
+/// `from[b]..=to[b]` of one layer from its full-board input `x`
+/// (`[batch, seq, d]`). Row `b` with `from[b] > to[b]` is skipped. The
+/// per-row projections are bitwise what the full forward computes
+/// internally and what [`enc_step_fwd_cached`] /
+/// [`dec_step_fwd_cached`] would have appended.
+#[allow(clippy::too_many_arguments)]
+pub fn fill_self_kv(
+    x: &[f32],
+    ln_g: &[f32],
+    ln_b: &[f32],
+    wk: &[f32],
+    wv: &[f32],
+    batch: usize,
+    seq: usize,
+    d: usize,
+    nh: usize,
+    cap: usize,
+    from: &[usize],
+    to: &[usize],
+    kcache: &mut [f32],
+    vcache: &mut [f32],
+    s: &mut Scratch,
+) {
+    let hd = d / nh;
+    let mut z = s.take_any(d);
+    let mut kr = s.take_any(d);
+    let mut vr = s.take_any(d);
+    for b in 0..batch {
+        debug_assert!(to[b] < seq, "fill column beyond the board");
+        for t in from[b]..=to[b] {
+            let row = &x[(b * seq + t) * d..(b * seq + t + 1) * d];
+            layer_norm_fwd_into(row, ln_g, ln_b, d, &mut z);
+            mm_into(&z, wk, 1, d, d, &mut kr, false);
+            mm_into(&z, wv, 1, d, d, &mut vr, false);
+            for h in 0..nh {
+                let dst = ((b * nh + h) * cap + t) * hd;
+                kcache[dst..dst + hd].copy_from_slice(&kr[h * hd..(h + 1) * hd]);
+                vcache[dst..dst + hd].copy_from_slice(&vr[h * hd..(h + 1) * hd]);
+            }
+        }
+    }
+    s.give(vr);
+    s.give(kr);
+    s.give(z);
+}
+
+/// Prefill helper: project and store the φ3 cross-attention K/V of one
+/// decoder layer — every row, all `seq_enc` columns — from the **raw**
+/// encoder output (φ3 keys/values are not layer-normed, matching
+/// ref.py). Primed once per prefill, read-only afterwards.
+#[allow(clippy::too_many_arguments)]
+pub fn fill_cross_kv(
+    x_enc: &[f32],
+    ck: &[f32],
+    cv: &[f32],
+    batch: usize,
+    seq_enc: usize,
+    d: usize,
+    nh: usize,
+    cap: usize,
+    kcache: &mut [f32],
+    vcache: &mut [f32],
+    s: &mut Scratch,
+) {
+    let hd = d / nh;
+    let rows = batch * seq_enc;
+    let mut k = s.take_any(rows * d);
+    let mut v = s.take_any(rows * d);
+    mm_into(x_enc, ck, rows, d, d, &mut k, false);
+    mm_into(x_enc, cv, rows, d, d, &mut v, false);
+    for b in 0..batch {
+        for h in 0..nh {
+            let dst = (b * nh + h) * cap * hd;
+            gather_head(&k, b, seq_enc, d, h, hd, &mut kcache[dst..dst + seq_enc * hd]);
+            gather_head(&v, b, seq_enc, d, h, hd, &mut vcache[dst..dst + seq_enc * hd]);
+        }
+    }
+    s.give(v);
+    s.give(k);
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -851,6 +1131,138 @@ mod tests {
             assert_eq!(dxe, wdxe.data());
             assert_eq!(gt, wgt.as_slice());
         }
+    }
+
+    #[test]
+    fn cached_enc_step_matches_full_board_rows_bitwise() {
+        // Walk the board left to right with the cached kernel (each call
+        // appends its K/V column) and pin every advanced row against the
+        // same row of the full causal board step, bit for bit. Then pin
+        // the prefill path: fill_self_kv over all columns must land the
+        // exact column bits the appends did.
+        let dm = dims();
+        let (b, sq, d, nh, hd) = (dm.batch, dm.seq, dm.d_model, dm.n_heads, dm.head_dim());
+        let mut rng = Rng::new(7);
+        let mut s = Scratch::new();
+        let theta = rng.normal_vec(p_enc(&dm), 0.2);
+        let x = Tensor::randn(&mut rng, &[b, sq, d], 1.0);
+        let h = 0.4;
+        let want = enc_step_fwd(&x, &theta, h, &dm, true);
+
+        let dm1 = RefDims { seq: 1, ..dm };
+        let slab = b * nh * sq * hd;
+        let (mut kc, mut vc) = (vec![0.0; slab], vec![0.0; slab]);
+        let mut xrow = vec![0.0; b * d];
+        let mut out = vec![f32::NAN; b * d];
+        let mut positions = vec![0usize; b];
+        for pos in 0..sq {
+            for bi in 0..b {
+                let off = (bi * sq + pos) * d;
+                xrow[bi * d..(bi + 1) * d].copy_from_slice(&x.data()[off..off + d]);
+            }
+            positions.iter_mut().for_each(|p| *p = pos);
+            enc_step_fwd_cached(&xrow, &theta, h, &dm1, sq, &positions, &mut kc, &mut vc,
+                                &mut out, &mut s);
+            for bi in 0..b {
+                let off = (bi * sq + pos) * d;
+                assert_eq!(
+                    &out[bi * d..(bi + 1) * d],
+                    &want.data()[off..off + d],
+                    "cached row b={} pos={}",
+                    bi,
+                    pos
+                );
+            }
+        }
+
+        let (mut kf, mut vf) = (vec![0.0; slab], vec![0.0; slab]);
+        let p = EncParams::view(&theta, d, dm.d_ff);
+        let from = vec![0usize; b];
+        let to = vec![sq - 1; b];
+        fill_self_kv(x.data(), p.ln1_g, p.ln1_b, p.wk, p.wv, b, sq, d, nh, sq, &from, &to,
+                     &mut kf, &mut vf, &mut s);
+        assert_eq!(kf, kc, "prefilled K columns differ from appended ones");
+        assert_eq!(vf, vc, "prefilled V columns differ from appended ones");
+    }
+
+    #[test]
+    fn cached_dec_step_matches_full_board_rows_bitwise() {
+        let dm = dims();
+        let seq_enc = 5;
+        let (b, sq, d, nh, hd) = (dm.batch, dm.seq, dm.d_model, dm.n_heads, dm.head_dim());
+        let mut rng = Rng::new(8);
+        let mut s = Scratch::new();
+        let theta = rng.normal_vec(p_dec(&dm), 0.2);
+        let y = Tensor::randn(&mut rng, &[b, sq, d], 1.0);
+        let xe = Tensor::randn(&mut rng, &[b, seq_enc, d], 1.0);
+        let h = 0.6;
+        let want = dec_step_fwd(&y, &xe, &theta, h, &dm, seq_enc);
+
+        let dm1 = RefDims { seq: 1, ..dm };
+        let slab = b * nh * sq * hd;
+        let cslab = b * nh * seq_enc * hd;
+        let p = DecParams::view(&theta, d, dm.d_ff);
+        let (mut kc, mut vc) = (vec![0.0; slab], vec![0.0; slab]);
+        let (mut ck, mut cv) = (vec![0.0; cslab], vec![0.0; cslab]);
+        fill_cross_kv(xe.data(), p.ck, p.cv, b, seq_enc, d, nh, seq_enc, &mut ck, &mut cv, &mut s);
+
+        let mut yrow = vec![0.0; b * d];
+        let mut out = vec![f32::NAN; b * d];
+        let mut positions = vec![0usize; b];
+        for pos in 0..sq {
+            for bi in 0..b {
+                let off = (bi * sq + pos) * d;
+                yrow[bi * d..(bi + 1) * d].copy_from_slice(&y.data()[off..off + d]);
+            }
+            positions.iter_mut().for_each(|p| *p = pos);
+            dec_step_fwd_cached(&yrow, &theta, h, &dm1, sq, &positions, &mut kc, &mut vc,
+                                seq_enc, seq_enc, &mut ck, &mut cv, &mut out, &mut s);
+            for bi in 0..b {
+                let off = (bi * sq + pos) * d;
+                assert_eq!(
+                    &out[bi * d..(bi + 1) * d],
+                    &want.data()[off..off + d],
+                    "cached dec row b={} pos={}",
+                    bi,
+                    pos
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn cached_rows_are_batch_independent() {
+        // Append row 0 alone vs alongside a second, different row: row
+        // 0's output and cache columns must not change (the serve
+        // occupancy-independence contract at the kernel level).
+        let dm = RefDims { batch: 1, seq: 4, d_model: 8, n_heads: 2, d_ff: 16 };
+        let dm2 = RefDims { batch: 2, ..dm };
+        let (sq, d, nh, hd) = (dm.seq, dm.d_model, dm.n_heads, dm.head_dim());
+        let mut rng = Rng::new(9);
+        let mut s = Scratch::new();
+        let theta = rng.normal_vec(p_enc(&dm), 0.2);
+        let x = Tensor::randn(&mut rng, &[2, sq, d], 1.0);
+
+        let solo_slab = nh * sq * hd;
+        let (mut k1, mut v1) = (vec![0.0; solo_slab], vec![0.0; solo_slab]);
+        let (mut k2, mut v2) = (vec![0.0; 2 * solo_slab], vec![0.0; 2 * solo_slab]);
+        let dm1 = RefDims { seq: 1, ..dm };
+        let dm21 = RefDims { seq: 1, ..dm2 };
+        let mut out1 = vec![0.0; d];
+        let mut out2 = vec![0.0; 2 * d];
+        for pos in 0..sq {
+            let row0 = &x.data()[pos * d..(pos + 1) * d];
+            enc_step_fwd_cached(row0, &theta, 0.5, &dm1, sq, &[pos], &mut k1, &mut v1, &mut out1,
+                                &mut s);
+            let mut both = vec![0.0; 2 * d];
+            both[..d].copy_from_slice(row0);
+            both[d..].copy_from_slice(&x.data()[(sq + pos) * d..(sq + pos + 1) * d]);
+            enc_step_fwd_cached(&both, &theta, 0.5, &dm21, sq, &[pos, pos], &mut k2, &mut v2,
+                                &mut out2, &mut s);
+            assert_eq!(out1, out2[..d], "row 0 output depends on occupancy at pos {}", pos);
+        }
+        assert_eq!(k1, k2[..solo_slab], "row 0 K columns depend on the neighbour row");
+        assert_eq!(v1, v2[..solo_slab], "row 0 V columns depend on the neighbour row");
     }
 
     #[test]

@@ -1,0 +1,223 @@
+//! Append-only per-layer K/V column store for incremental decode.
+//!
+//! During autoregressive decode the board grows one position per step, so
+//! the only *new* attention work per layer is one query row. [`KvCache`]
+//! keeps the already-projected key/value vectors of every previous
+//! position so a cached step ([`super::enc_step_fwd_cached`] /
+//! [`super::dec_step_fwd_cached`]) scores the single new query against
+//! them and appends its own K/V column — O(1) projections per layer
+//! instead of a full-board re-forward.
+//!
+//! Layout: keys and values live **pre-gathered per head**,
+//! `[layers, batch, n_heads, seq_cap, head_dim]`, so the score kernel
+//! streams one contiguous `[len, head_dim]` slab per (row, head) with no
+//! gather pass. Encoder-decoder models additionally carry a cross-attention
+//! store (`[layers, batch, n_heads, cross_cap, head_dim]`) holding the
+//! φ3 keys/values projected from the frozen encoder output; it is primed
+//! once at prefill and read-only afterwards.
+//!
+//! Rows are batch slots and stay fully independent: `reset_row` forgets
+//! exactly one slot's columns (serve cold-join / retirement) without
+//! touching its neighbours, which is what keeps cached serve decode
+//! bitwise independent of occupancy, slot index, and join time. All
+//! storage is allocated once in [`KvCache::new`]; reset and append are
+//! allocation-free.
+
+/// Mutable per-layer view into the cache: self-attention K/V slabs
+/// (`[batch, n_heads, seq_cap, head_dim]`), the cross-attention slabs
+/// (empty when the model has no cross attention), and the per-row
+/// valid-column counts.
+pub struct LayerKv<'a> {
+    pub k: &'a mut [f32],
+    pub v: &'a mut [f32],
+    pub ck: &'a mut [f32],
+    pub cv: &'a mut [f32],
+    pub lens: &'a [usize],
+}
+
+/// Append-only K/V cache over the cached layer range of one model.
+#[derive(Debug, Clone)]
+pub struct KvCache {
+    n_layers: usize,
+    layer0: usize,
+    batch: usize,
+    n_heads: usize,
+    head_dim: usize,
+    seq_cap: usize,
+    cross_cap: usize,
+    k: Vec<f32>,
+    v: Vec<f32>,
+    ck: Vec<f32>,
+    cv: Vec<f32>,
+    len: Vec<usize>,
+    cross_primed: bool,
+}
+
+impl KvCache {
+    /// Allocate a cache for `n_layers` cached layers starting at global
+    /// layer index `layer0`. `cross_cap = 0` means no cross-attention
+    /// store (decoder-only models).
+    pub fn new(
+        n_layers: usize,
+        layer0: usize,
+        batch: usize,
+        n_heads: usize,
+        head_dim: usize,
+        seq_cap: usize,
+        cross_cap: usize,
+    ) -> KvCache {
+        let n = n_layers * batch * n_heads * seq_cap * head_dim;
+        let nc = n_layers * batch * n_heads * cross_cap * head_dim;
+        KvCache {
+            n_layers,
+            layer0,
+            batch,
+            n_heads,
+            head_dim,
+            seq_cap,
+            cross_cap,
+            k: vec![0.0; n],
+            v: vec![0.0; n],
+            ck: vec![0.0; nc],
+            cv: vec![0.0; nc],
+            len: vec![0; batch],
+            cross_primed: false,
+        }
+    }
+
+    /// Global layer index of cached layer 0.
+    pub fn layer0(&self) -> usize {
+        self.layer0
+    }
+
+    /// Number of cached layers.
+    pub fn n_layers(&self) -> usize {
+        self.n_layers
+    }
+
+    pub fn batch(&self) -> usize {
+        self.batch
+    }
+
+    pub fn n_heads(&self) -> usize {
+        self.n_heads
+    }
+
+    pub fn head_dim(&self) -> usize {
+        self.head_dim
+    }
+
+    /// Self-attention column capacity (the model window).
+    pub fn seq_cap(&self) -> usize {
+        self.seq_cap
+    }
+
+    /// Cross-attention column count (0 = decoder-only, no φ3 store).
+    pub fn cross_cap(&self) -> usize {
+        self.cross_cap
+    }
+
+    /// Whether the cross-attention store holds valid encoder projections.
+    pub fn cross_primed(&self) -> bool {
+        self.cross_primed
+    }
+
+    pub fn set_cross_primed(&mut self, primed: bool) {
+        self.cross_primed = primed;
+    }
+
+    /// Valid self-attention columns for batch row `r`.
+    pub fn len(&self, r: usize) -> usize {
+        self.len[r]
+    }
+
+    /// Per-row valid-column counts.
+    pub fn lens(&self) -> &[usize] {
+        &self.len
+    }
+
+    /// Forget row `r`'s columns (serve cold-join injection / retirement).
+    /// Storage is retained; neighbouring rows are untouched.
+    pub fn reset_row(&mut self, r: usize) {
+        self.len[r] = 0;
+    }
+
+    /// Forget every row and the cross store (weight swap, new decode).
+    pub fn reset_all(&mut self) {
+        self.len.iter_mut().for_each(|l| *l = 0);
+        self.cross_primed = false;
+    }
+
+    /// Mark columns `0..=positions[r]` valid for every row — called once
+    /// per decode step, after all layers have appended at `positions[r]`.
+    pub fn commit(&mut self, positions: &[usize]) {
+        debug_assert_eq!(positions.len(), self.batch);
+        for (l, &p) in self.len.iter_mut().zip(positions) {
+            debug_assert!(p < self.seq_cap);
+            *l = p + 1;
+        }
+    }
+
+    /// Split-borrow the slabs of cached layer `li` (local index).
+    pub fn layer_mut(&mut self, li: usize) -> LayerKv<'_> {
+        debug_assert!(li < self.n_layers);
+        let per = self.batch * self.n_heads * self.seq_cap * self.head_dim;
+        let cper = self.batch * self.n_heads * self.cross_cap * self.head_dim;
+        LayerKv {
+            k: &mut self.k[li * per..(li + 1) * per],
+            v: &mut self.v[li * per..(li + 1) * per],
+            ck: &mut self.ck[li * cper..(li + 1) * cper],
+            cv: &mut self.cv[li * cper..(li + 1) * cper],
+            lens: &self.len,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cache_rows_commit_and_reset_independently() {
+        let mut c = KvCache::new(3, 1, 4, 2, 8, 16, 0);
+        assert_eq!(c.layer0(), 1);
+        assert_eq!(c.n_layers(), 3);
+        assert_eq!(c.cross_cap(), 0);
+        assert!(c.lens().iter().all(|&l| l == 0));
+
+        c.commit(&[0, 3, 1, 0]);
+        assert_eq!(c.len(0), 1);
+        assert_eq!(c.len(1), 4);
+        c.reset_row(1);
+        assert_eq!(c.len(1), 0, "reset forgets exactly one row");
+        assert_eq!(c.len(2), 2, "neighbour rows untouched");
+
+        c.reset_all();
+        assert!(c.lens().iter().all(|&l| l == 0));
+    }
+
+    #[test]
+    fn layer_views_are_disjoint_slabs() {
+        let mut c = KvCache::new(2, 0, 1, 1, 4, 3, 5);
+        {
+            let l0 = c.layer_mut(0);
+            assert_eq!(l0.k.len(), 12);
+            assert_eq!(l0.ck.len(), 20);
+            l0.k.fill(1.0);
+            l0.ck.fill(2.0);
+        }
+        let l1 = c.layer_mut(1);
+        assert!(l1.k.iter().all(|&x| x == 0.0), "layer 1 untouched by layer 0 writes");
+        assert!(l1.ck.iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn cross_priming_flag_follows_reset() {
+        let mut c = KvCache::new(1, 0, 1, 1, 2, 2, 2);
+        assert!(!c.cross_primed());
+        c.set_cross_primed(true);
+        assert!(c.cross_primed());
+        c.reset_all();
+        assert!(!c.cross_primed(), "reset_all invalidates the cross store");
+    }
+}

@@ -14,14 +14,17 @@
 //! against central finite differences in `tests`.
 
 mod block;
+mod kvcache;
 mod math;
 mod params;
 mod scratch;
 
 pub use block::{
-    dec_step_bwd, dec_step_bwd_into, dec_step_fwd, dec_step_fwd_into, enc_step_bwd,
-    enc_step_bwd_into, enc_step_fwd, enc_step_fwd_into, RefDims,
+    dec_step_bwd, dec_step_bwd_into, dec_step_fwd, dec_step_fwd_cached, dec_step_fwd_into,
+    enc_step_bwd, enc_step_bwd_into, enc_step_fwd, enc_step_fwd_cached, enc_step_fwd_into,
+    fill_cross_kv, fill_self_kv, RefDims,
 };
+pub use kvcache::{KvCache, LayerKv};
 pub use math::{
     gelu, gelu_grad, layer_norm_bwd, layer_norm_fwd, layer_norm_fwd_into, layer_norm_fwd_stats,
 };

@@ -2,13 +2,18 @@
 //!
 //! [`ServeMetrics`] is updated inline by the scheduler: one
 //! [`ServeMetrics::record_step`] per decode step (occupancy, wall-clock,
-//! queue depth) plus time-to-first-token and latency samples at the
-//! per-request milestones. Sample vectors are **preallocated at a fixed
-//! cap** and stop growing past it (the aggregates keep counting), so
-//! recording never allocates at steady state — part of the contract
-//! pinned by `rust/tests/alloc_audit.rs`. The JSON report reuses
-//! [`Stats::from_samples`] for the latency distributions, matching the
-//! fields the bench harness emits.
+//! queue depth, and whether the step did **prefill** work — prompt ingest
+//! for joining requests — or was a pure **decode** step) plus
+//! time-to-first-token and latency samples at the per-request milestones.
+//! Prefill and decode steps keep separate step-time distributions and the
+//! report carries a decode-only tokens/sec next to the aggregate one, so
+//! the O(1) steady-state contract of the incremental decode path is
+//! observable instead of being averaged away under prompt ingests. Sample
+//! vectors are **preallocated at a fixed cap** and stop growing past it
+//! (the aggregates keep counting), so recording never allocates at steady
+//! state — part of the contract pinned by `rust/tests/alloc_audit.rs`.
+//! The JSON report reuses [`Stats::from_samples`] for the latency
+//! distributions, matching the fields the bench harness emits.
 
 use std::time::Instant;
 
@@ -24,6 +29,8 @@ pub struct ServeMetrics {
     pub tokens_generated: u64,
     /// Decode steps that ran a forward (occupancy ≥ 1).
     pub decode_steps: u64,
+    /// The subset of `decode_steps` that did prefill (prompt-ingest) work.
+    pub prefill_steps: u64,
     /// Steps skipped because no slot was active.
     pub idle_steps: u64,
     /// Successful checkpoint hot-reloads.
@@ -36,10 +43,16 @@ pub struct ServeMetrics {
     queue_depth_sum: u64,
     /// Wall-clock spent inside decode steps (the tokens/sec denominator).
     decode_secs: f64,
+    /// Wall-clock and tokens split by step kind (pure-decode steps only
+    /// feed the decode-only throughput).
+    decode_only_secs: f64,
+    decode_only_tokens: u64,
     /// Capped sample vectors (preallocated; see module docs).
     ttft: Vec<f64>,
     latency: Vec<f64>,
     step_secs: Vec<f64>,
+    prefill_step_secs: Vec<f64>,
+    decode_step_secs: Vec<f64>,
     cap: usize,
     started: Instant,
 }
@@ -51,6 +64,7 @@ impl ServeMetrics {
             completed: 0,
             tokens_generated: 0,
             decode_steps: 0,
+            prefill_steps: 0,
             idle_steps: 0,
             reloads: 0,
             peak_occupancy: 0,
@@ -58,9 +72,13 @@ impl ServeMetrics {
             occupancy_sum: 0,
             queue_depth_sum: 0,
             decode_secs: 0.0,
+            decode_only_secs: 0.0,
+            decode_only_tokens: 0,
             ttft: Vec::with_capacity(cap),
             latency: Vec::with_capacity(cap),
             step_secs: Vec::with_capacity(cap),
+            prefill_step_secs: Vec::with_capacity(cap),
+            decode_step_secs: Vec::with_capacity(cap),
             cap,
             started: Instant::now(),
         }
@@ -81,8 +99,10 @@ impl ServeMetrics {
     }
 
     /// Record one decode step: how many slots were active, how long the
-    /// step took, and the queue depth left behind.
-    pub fn record_step(&mut self, occupancy: usize, took_secs: f64, queue_depth: usize) {
+    /// step took, the queue depth left behind, and whether the step did
+    /// prefill (prompt-ingest) work or was a pure decode step.
+    pub fn record_step(&mut self, occupancy: usize, took_secs: f64, queue_depth: usize,
+                       prefill: bool) {
         self.decode_steps += 1;
         self.occupancy_sum += occupancy as u64;
         self.peak_occupancy = self.peak_occupancy.max(occupancy);
@@ -91,6 +111,18 @@ impl ServeMetrics {
         self.decode_secs += took_secs;
         if self.step_secs.len() < self.cap {
             self.step_secs.push(took_secs);
+        }
+        if prefill {
+            self.prefill_steps += 1;
+            if self.prefill_step_secs.len() < self.cap {
+                self.prefill_step_secs.push(took_secs);
+            }
+        } else {
+            self.decode_only_secs += took_secs;
+            self.decode_only_tokens += occupancy as u64;
+            if self.decode_step_secs.len() < self.cap {
+                self.decode_step_secs.push(took_secs);
+            }
         }
     }
 
@@ -122,6 +154,18 @@ impl ServeMetrics {
         }
     }
 
+    /// Steady-state decode throughput: tokens emitted by pure decode steps
+    /// per second of pure-decode wall-clock. Excludes prefill steps, so it
+    /// reflects the per-token cost the incremental path's O(1) contract is
+    /// about (0 before the first pure decode step).
+    pub fn decode_tokens_per_sec(&self) -> f64 {
+        if self.decode_only_secs <= 0.0 {
+            0.0
+        } else {
+            self.decode_only_tokens as f64 / self.decode_only_secs
+        }
+    }
+
     /// Seconds since the metrics (= the serve loop) started.
     pub fn uptime_secs(&self) -> f64 {
         self.started.elapsed().as_secs_f64()
@@ -150,6 +194,7 @@ impl ServeMetrics {
             ("completed", json::int(self.completed as i64)),
             ("tokens_generated", json::int(self.tokens_generated as i64)),
             ("decode_steps", json::int(self.decode_steps as i64)),
+            ("prefill_steps", json::int(self.prefill_steps as i64)),
             ("idle_steps", json::int(self.idle_steps as i64)),
             ("reloads", json::int(self.reloads as i64)),
             ("mean_occupancy", json::num(self.mean_occupancy())),
@@ -157,10 +202,13 @@ impl ServeMetrics {
             ("mean_queue_depth", json::num(self.mean_queue_depth())),
             ("peak_queue_depth", json::int(self.peak_queue_depth as i64)),
             ("tokens_per_sec", json::num(self.tokens_per_sec())),
+            ("decode_tokens_per_sec", json::num(self.decode_tokens_per_sec())),
             ("uptime_secs", json::num(self.uptime_secs())),
             ("ttft", ServeMetrics::dist_json(&self.ttft)),
             ("latency", ServeMetrics::dist_json(&self.latency)),
             ("step", ServeMetrics::dist_json(&self.step_secs)),
+            ("prefill_step", ServeMetrics::dist_json(&self.prefill_step_secs)),
+            ("decode_step", ServeMetrics::dist_json(&self.decode_step_secs)),
         ])
     }
 }
@@ -172,9 +220,9 @@ mod tests {
     #[test]
     fn aggregates_and_caps() {
         let mut m = ServeMetrics::with_capacity(2);
-        m.record_step(2, 0.010, 1);
-        m.record_step(4, 0.030, 3);
-        m.record_step(3, 0.020, 2);
+        m.record_step(2, 0.010, 1, true);
+        m.record_step(4, 0.030, 3, false);
+        m.record_step(3, 0.020, 2, false);
         m.tokens_generated = 9;
         assert_eq!(m.decode_steps, 3);
         assert!((m.mean_occupancy() - 3.0).abs() < 1e-12);
@@ -182,6 +230,12 @@ mod tests {
         assert!((m.mean_queue_depth() - 2.0).abs() < 1e-12);
         assert_eq!(m.peak_queue_depth, 3);
         assert!((m.tokens_per_sec() - 9.0 / 0.060).abs() < 1e-6);
+        // prefill vs pure-decode split: the decode-only throughput counts
+        // only the tokens and wall-clock of the non-prefill steps
+        assert_eq!(m.prefill_steps, 1);
+        assert_eq!(m.prefill_step_secs.len(), 1);
+        assert_eq!(m.decode_step_secs.len(), 2);
+        assert!((m.decode_tokens_per_sec() - 7.0 / 0.050).abs() < 1e-6);
         // sample vec capped at 2, aggregates kept counting
         assert_eq!(m.step_secs.len(), 2);
         for _ in 0..5 {
@@ -198,17 +252,23 @@ mod tests {
         let j = empty.to_json(0, 0);
         assert_eq!(j.get("ttft"), Some(&Json::Null), "no samples → null distribution");
         assert_eq!(j.get("tokens_per_sec").unwrap().num(), Some(0.0));
+        assert_eq!(j.get("decode_tokens_per_sec").unwrap().num(), Some(0.0));
 
         let mut m = ServeMetrics::with_capacity(4);
         m.push_ttft(0.004);
         m.push_latency(0.040);
-        m.record_step(1, 0.010, 0);
+        m.record_step(1, 0.010, 0, true);
+        m.record_step(1, 0.002, 0, false);
         m.completed = 1;
         m.tokens_generated = 5;
         let j = m.to_json(3, 1);
         assert_eq!(j.get("submitted").unwrap().int(), Some(3));
         assert_eq!(j.get("rejected").unwrap().int(), Some(1));
         assert_eq!(j.get("completed").unwrap().int(), Some(1));
+        assert_eq!(j.get("prefill_steps").unwrap().int(), Some(1));
+        assert_eq!(j.get("prefill_step").unwrap().get("samples").unwrap().int(), Some(1));
+        assert_eq!(j.get("decode_step").unwrap().get("samples").unwrap().int(), Some(1));
+        assert!((j.get("decode_tokens_per_sec").unwrap().num().unwrap() - 500.0).abs() < 1e-6);
         let ttft = j.get("ttft").unwrap();
         assert!((ttft.get("p50_ms").unwrap().num().unwrap() - 4.0).abs() < 1e-9);
         assert_eq!(ttft.get("samples").unwrap().int(), Some(1));

@@ -17,13 +17,16 @@
 //! that three ways:
 //!
 //! * **Join-mid-flight parity** — when a request is installed into a free
-//!   slot, the session resets just that slot's warm-start iterate
-//!   ([`crate::infer::InferSession::forward_board`]'s `cold_rows`), so the
-//!   newcomer solves exactly like its solo cold first step while the
-//!   neighbouring rows keep their warm-chained trajectories bit-for-bit.
+//!   slot, the session resets just that slot's warm-start iterate and
+//!   decode-cache row
+//!   ([`crate::infer::InferSession::forward_board_cached`]'s `cold_rows`),
+//!   so the newcomer solves exactly like its solo cold first step while
+//!   the neighbouring rows keep their warm-chained trajectories — and
+//!   their K/V cache columns — bit-for-bit.
 //! * **Early retirement** — a retired slot's stale board row keeps being
 //!   propagated (the batch shape is fixed) but cannot perturb active rows,
-//!   so nobody stalls and nobody's tokens change.
+//!   so nobody stalls and nobody's tokens change; the slot's cache row is
+//!   released for the next occupant.
 //! * **Occupancy-independent sampling** — each slot samples from its own
 //!   [`crate::util::rng::Rng`] stream seeded by the request (`seed`), so
 //!   the same request yields identical tokens at batch occupancy 1 or 8

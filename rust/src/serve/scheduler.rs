@@ -9,12 +9,18 @@
 //! 2. admit queued requests into free slots — each newcomer's board row is
 //!    rewritten (prompt + zeroed tail, exactly the solo layout) and named
 //!    in `cold_rows` so the forward resets just that row's warm iterate;
-//! 3. one batched forward ([`InferSession::forward_board`]) and a per-row
-//!    logit projection at each slot's own cursor
+//! 3. one batched forward — with incremental decode on (the session
+//!    default) via [`InferSession::forward_board_cached`]: a **prefill**
+//!    step (joiners present or the cache is stale) runs one exact
+//!    full-board forward that also ingests the missing K/V columns, and a
+//!    **steady** step is a single cached O(1)-per-layer Φ sweep; with it
+//!    off, every step is a full [`InferSession::forward_board`] — then a
+//!    per-row logit projection at each slot's own cursor
 //!    ([`InferSession::logits_rows`]);
 //! 4. per-slot token selection from the slot's own RNG stream
 //!    (`Rng::new(request.seed)` — slot- and occupancy-independent), then
-//!    retirement of slots that reached their budget.
+//!    retirement of slots that reached their budget (each retired row's
+//!    cache columns are released for the next occupant).
 //!
 //! Because every forward/head kernel is batch-row independent (see
 //! `super` docs), an active row's token sequence is bitwise identical to
@@ -93,6 +99,9 @@ pub struct ServeLoop {
     positions: Vec<usize>,
     /// Rows whose occupant changed this step (warm-iterate reset set).
     cold_rows: Vec<usize>,
+    /// Rows retired this step (their cache columns are released after the
+    /// selection loop drops the logits borrow).
+    retired: Vec<usize>,
     /// Shared top-k scratch (capacity grows to max k once, then reused).
     topk_idx: Vec<usize>,
     topk_val: Vec<f32>,
@@ -123,6 +132,7 @@ impl ServeLoop {
             board: vec![0; b * s],
             positions: vec![0; b],
             cold_rows: Vec::with_capacity(b),
+            retired: Vec::with_capacity(b),
             topk_idx: Vec::new(),
             topk_val: Vec::new(),
             completed: Vec::new(),
@@ -213,7 +223,14 @@ impl ServeLoop {
             active: true,
             id: req.id,
             rng: Rng::new(req.seed),
-            opts: DecodeOptions { top_k: req.top_k, temperature: req.temperature, seed: req.seed },
+            // max_new stays 0: the slot's own `end` budget bounds decoding
+            // (the session never sees a per-request cap on the serve path)
+            opts: DecodeOptions {
+                top_k: req.top_k,
+                temperature: req.temperature,
+                seed: req.seed,
+                max_new: 0,
+            },
             cursor: plen,
             end: plen + gen,
             prompt_len: plen,
@@ -260,8 +277,16 @@ impl ServeLoop {
             return Ok(StepOutcome::Idle);
         }
         let t0 = Instant::now();
-        self.session.forward_board(&self.board, &self.cold_rows)?;
+        let prefill = if self.session.incremental() {
+            self.session.forward_board_cached(&self.board, &self.positions, &self.cold_rows)?
+        } else {
+            // full-forward mode: label steps that ingested new prompts as
+            // prefill so the metrics split stays meaningful
+            self.session.forward_board(&self.board, &self.cold_rows)?;
+            !self.cold_rows.is_empty()
+        };
         let logits = self.session.logits_rows(&self.positions)?;
+        self.retired.clear();
         // 4. per-slot selection + retirement. Inlined (not helper methods)
         // because `logits` keeps `self.session` borrowed; every other
         // field access is disjoint.
@@ -292,10 +317,16 @@ impl ServeLoop {
                     ttft: sl.ttft.unwrap_or(latency),
                     latency,
                 });
+                self.retired.push(r);
             }
         }
+        // free retired rows' cache columns (after the logits borrow ends)
+        for &r in &self.retired {
+            self.session.release_row(r);
+        }
         self.metrics.tokens_generated += occupancy as u64;
-        self.metrics.record_step(occupancy, t0.elapsed().as_secs_f64(), self.queue.depth());
+        self.metrics
+            .record_step(occupancy, t0.elapsed().as_secs_f64(), self.queue.depth(), prefill);
         Ok(StepOutcome::Decoded(occupancy))
     }
 
@@ -416,6 +447,31 @@ mod tests {
         let done = srv.take_completed();
         assert_eq!(done[0].tokens.len(), s);
         assert_eq!(done[0].generated, s - 1);
+    }
+
+    #[test]
+    fn steps_split_into_prefill_and_decode() {
+        let mut srv = ServeLoop::new(tiny_lm_session(), 8).unwrap();
+        srv.submit(GenerateRequest { max_new: 4, ..GenerateRequest::greedy(1, vec![1, 2]) })
+            .unwrap();
+        srv.step().unwrap(); // the join makes this a prefill step
+        assert_eq!(srv.metrics.prefill_steps, 1);
+        srv.step().unwrap(); // warm cache, no joiners → pure decode
+        assert_eq!(srv.metrics.prefill_steps, 1);
+        assert_eq!(srv.metrics.decode_steps, 2);
+        // a mid-flight joiner forces another prefill step
+        srv.submit(GenerateRequest { max_new: 2, ..GenerateRequest::greedy(2, vec![3]) })
+            .unwrap();
+        srv.step().unwrap();
+        assert_eq!(srv.metrics.prefill_steps, 2);
+        let mut steps = 0;
+        while srv.active() > 0 {
+            srv.step().unwrap();
+            steps += 1;
+            assert!(steps < 100, "requests never retired");
+        }
+        assert!(srv.metrics.decode_tokens_per_sec() > 0.0, "pure decode steps must register");
+        assert_eq!(srv.take_completed().len(), 2);
     }
 
     #[test]

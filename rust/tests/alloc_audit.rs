@@ -27,14 +27,17 @@
 //!    gradients directly, and `StepWorkspace::clip_global` walks the
 //!    accumulators without a ref-list;
 //! 5. the steady-state **batched decode loop** of an `InferSession`
-//!    (embed → full forward on the shared train/infer core → logits-only
-//!    head → token selection) allocates exactly zero times, for both the
-//!    greedy and the top-k sampling paths — the serving twin of pin 4;
+//!    allocates exactly zero times, for both the greedy and the top-k
+//!    sampling paths and in **both decode modes** — the incremental
+//!    KV-cached path (serial prefill + O(1) cached Φ sweeps; cache slabs,
+//!    row state, and position/token scratch all persist) and the
+//!    historical full-forward-per-token path — the serving twin of pin 4;
 //! 6. the continuous-batching **serve scheduler step** (`ServeLoop::step`:
 //!    empty-queue admission poll, batched forward with per-row cursors,
 //!    per-slot greedy + top-k sampling, metrics recording) also allocates
-//!    exactly zero times once warm — the bounded queue, slot table, board,
-//!    and capped metrics samples are all preallocated.
+//!    exactly zero times once warm, again in both decode modes — the
+//!    bounded queue, slot table, board, retirement list, decode cache, and
+//!    capped metrics samples are all preallocated.
 
 use std::alloc::{GlobalAlloc, Layout, System};
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -232,9 +235,11 @@ fn audit_train_step() {
 
 /// The decode pin: the steady-state batched autoregressive decode loop of
 /// an `InferSession` allocates exactly zero times, greedy and top-k both.
-/// Runs the MGRIT forward (cached hierarchy) so the whole serving stack —
-/// embed, solve, logits head, selection — is covered.
-fn audit_decode() {
+/// `incremental = true` audits the KV-cached path (serial prefill + O(1)
+/// cached sweeps); `false` audits the historical full-forward loop on the
+/// MGRIT cached hierarchy — so the whole serving stack (embed, solve or
+/// cached sweep, logits head, selection) is covered in both modes.
+fn audit_decode(incremental: bool) {
     let mut rc = presets::by_name("gpt").expect("gpt preset");
     rc.model.vocab = 16;
     rc.model.d_model = 16;
@@ -249,14 +254,16 @@ fn audit_decode() {
     rc.mgrit = MgritConfig { cf: 2, levels: 2, fwd_iters: Some(1), bwd_iters: Some(1), fcf: true };
     let params = ParamStore::init(&rc.model, Init::Default, 5);
     let mut inf = InferSession::from_parts(rc.clone(), params, Box::new(Mgrit)).expect("session");
+    inf.set_incremental(incremental);
     let plen = rc.model.seq / 2;
     let prompts: Vec<i32> = vec![1; rc.model.batch * plen];
     let mut out = Vec::new();
     for (label, opts) in [
         ("greedy", DecodeOptions::default()),
-        ("top-k", DecodeOptions { top_k: 4, temperature: 0.9, seed: 3 }),
+        ("top-k", DecodeOptions { top_k: 4, temperature: 0.9, seed: 3, max_new: 0 }),
     ] {
         // warm up: out/scratch sizing, core + Φ scratch pool construction
+        // (and, incrementally, the one-time decode-cache slab build)
         for _ in 0..3 {
             inf.generate_into(&prompts, plen, &opts, &mut out).expect("decode");
         }
@@ -267,8 +274,8 @@ fn audit_decode() {
         let delta = ALLOCS.load(Ordering::SeqCst) - before;
         assert_eq!(
             delta, 0,
-            "{} decode allocated {} times over 3 steady-state generate calls",
-            label, delta
+            "{} decode (incremental={}) allocated {} times over 3 steady-state generate calls",
+            label, incremental, delta
         );
     }
 }
@@ -279,8 +286,9 @@ fn audit_decode() {
 /// recording — allocates exactly zero times. Retirement and reporting
 /// (which build per-request result rows) happen outside the audited
 /// window by construction: both requests fill the window, so no slot
-/// retires during the audited steps.
-fn audit_serve() {
+/// retires during the audited steps. Audited in both decode modes; with
+/// `incremental = true` the audited steps are pure cached O(1) sweeps.
+fn audit_serve(incremental: bool) {
     let mut rc = presets::by_name("gpt").expect("gpt preset");
     rc.model.vocab = 16;
     rc.model.d_model = 16;
@@ -294,7 +302,8 @@ fn audit_serve() {
     rc.model.buffer_close = 1;
     rc.mgrit = MgritConfig { cf: 2, levels: 2, fwd_iters: Some(1), bwd_iters: Some(1), fcf: true };
     let params = ParamStore::init(&rc.model, Init::Default, 5);
-    let inf = InferSession::from_parts(rc, params, Box::new(Mgrit)).expect("session");
+    let mut inf = InferSession::from_parts(rc, params, Box::new(Mgrit)).expect("session");
+    inf.set_incremental(incremental);
     let mut srv = ServeLoop::new(inf, 4).expect("serve loop");
     // two window-filling requests (prompt 1, seq 8 → 7 decode steps each):
     // one greedy slot and one top-k slot decode side by side
@@ -316,7 +325,11 @@ fn audit_serve() {
         srv.step().expect("serve step");
     }
     let delta = ALLOCS.load(Ordering::SeqCst) - before;
-    assert_eq!(delta, 0, "serve decode step allocated {} times at steady state", delta);
+    assert_eq!(
+        delta, 0,
+        "serve decode step (incremental={}) allocated {} times at steady state",
+        incremental, delta
+    );
     // drain: both requests retire and report past the audited window
     while srv.active() > 0 {
         srv.step().expect("serve step");
@@ -336,6 +349,8 @@ fn steady_state_hot_path_is_allocation_free() {
     audit_solve_context(2);
     audit_solve_context(4);
     audit_train_step();
-    audit_decode();
-    audit_serve();
+    audit_decode(true);
+    audit_decode(false);
+    audit_serve(true);
+    audit_serve(false);
 }
