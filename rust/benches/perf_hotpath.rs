@@ -1,4 +1,9 @@
 //! §Perf micro-benchmarks of the training hot path (EXPERIMENTS.md §Perf):
+//!   kernel layer      — scalar vs dispatched-SIMD rows per kernel
+//!                       (mm / mm_at / mm_bt / softmax / layernorm); the
+//!                       "(simd)" rows appear only in builds that actually
+//!                       dispatch vector kernels (`--features simd` on an
+//!                       AVX2 or NEON host)
 //!   Φ latency         — XLA/PJRT (Pallas) vs pure-Rust reference
 //!   Φ-VJP latency     — same, backward
 //!   buffer reuse      — step_into/adjoint_step_into vs allocating step
@@ -18,7 +23,8 @@
 //! Flags:
 //!   --json        write machine-readable results to BENCH_hotpath.json
 //!                 (ns/op per row) so the perf trajectory is tracked across PRs
-//!   --fast        1 warmup + 5 samples per row (CI smoke mode)
+//!   --fast        1 warmup + 5 samples per row, reduced kernel shape list
+//!                 (CI smoke mode — keeps the whole run under a minute)
 //!   --workers N   add worker count N to the threaded scaling sweep
 //!                 (default sweep: 1, 2, 4)
 //!
@@ -35,8 +41,11 @@ use layertime::model::{Init, ParamStore};
 use layertime::ode::{shared_params, LinearOde, Propagator, RustPropagator, XlaPropagator};
 use layertime::parallel::{exec, WorkerPool};
 use layertime::runtime::{Value, XlaEngine};
+use layertime::reference::layer_norm_fwd_into;
 use layertime::serve::{drive_load, GenerateRequest, ServeLoop};
-use layertime::tensor::Tensor;
+use layertime::tensor::{
+    mm_at_into, mm_bt_into, mm_into, set_force_scalar, simd_active, softmax_row, Tensor,
+};
 use layertime::util::bench::{BenchLog, BenchRunner, Stats};
 use layertime::util::rng::Rng;
 
@@ -75,6 +84,65 @@ fn main() -> anyhow::Result<()> {
         solver.forward(&z0, None, None, false)
     });
 
+    // --- kernel layer: scalar vs dispatched SIMD ------------------------------
+    // One row per kernel, shape, and mode: "(scalar)" forces the always-
+    // scalar kernels through the runtime kill switch; "(simd)" rows appear
+    // only when this build actually dispatches vector kernels (`--features
+    // simd` on an AVX2/NEON host), so the gap within a pair is the measured
+    // per-kernel SIMD speedup. `--fast` trims the shape list so the CI
+    // bench-smoke run stays under a minute.
+    {
+        // (m, k, n): square-ish GEMM, ragged tails, and the cached-decode
+        // single-query-row shape
+        let shapes: &[(usize, usize, usize)] = if fast {
+            &[(64, 64, 128), (1, 64, 256)]
+        } else {
+            &[(256, 64, 256), (64, 64, 192), (33, 48, 80), (1, 64, 512)]
+        };
+        let modes: &[(&str, bool)] =
+            if simd_active() { &[("scalar", true), ("simd", false)] } else { &[("scalar", true)] };
+        let mut rng = Rng::new(3);
+        for &(m, k, n) in shapes {
+            let a = rng.normal_vec(m * k, 1.0);
+            let b = rng.normal_vec(k * n, 1.0);
+            let bt = rng.normal_vec(n * k, 1.0);
+            let at: Vec<f32> = (0..k * m).map(|i| a[(i % m) * k + i / m]).collect();
+            let mut out = vec![0.0; m * n];
+            for &(tag, force) in modes {
+                set_force_scalar(force);
+                timed(&runner, &mut log, &format!("mm    {}x{}x{} ({})", m, k, n, tag), || {
+                    mm_into(&a, &b, m, k, n, &mut out, false)
+                });
+                timed(&runner, &mut log, &format!("mm_at {}x{}x{} ({})", m, k, n, tag), || {
+                    mm_at_into(&at, &b, k, m, n, &mut out, false)
+                });
+                timed(&runner, &mut log, &format!("mm_bt {}x{}x{} ({})", m, k, n, tag), || {
+                    mm_bt_into(&a, &bt, m, k, n, &mut out, false)
+                });
+            }
+        }
+        // row-wise kernels at a transformer-ish width
+        let d = if fast { 128 } else { 256 };
+        let rows = 64;
+        let x = rng.normal_vec(rows * d, 1.0);
+        let gain = rng.normal_vec(d, 0.2);
+        let bias = rng.normal_vec(d, 0.2);
+        let mut out = vec![0.0; rows * d];
+        for &(tag, force) in modes {
+            set_force_scalar(force);
+            timed(&runner, &mut log, &format!("softmax {}x{} ({})", rows, d, tag), || {
+                out.copy_from_slice(&x);
+                for r in out.chunks_exact_mut(d) {
+                    softmax_row(r);
+                }
+            });
+            timed(&runner, &mut log, &format!("layernorm {}x{} ({})", rows, d, tag), || {
+                layer_norm_fwd_into(&x, &gain, &bias, d, &mut out)
+            });
+        }
+        set_force_scalar(false);
+    }
+
     // --- rust reference Φ ---------------------------------------------------
     let mut model = presets::mc_tiny().model;
     model.vocab = 64;
@@ -103,6 +171,18 @@ fn main() -> anyhow::Result<()> {
     timed(&runner, &mut log, "Φ vjp  (adjoint_step_into)", || {
         rust_prop.adjoint_step_into(0, 1.0, &z, &ct, &mut out)
     });
+    // SIMD builds: the same Φ through the forced-scalar kernels, so the gap
+    // to the rows above is the end-to-end SIMD speedup on one layer step
+    if simd_active() {
+        set_force_scalar(true);
+        timed(&runner, &mut log, "Φ fwd  (step_into, forced scalar)", || {
+            rust_prop.step_into(0, 1.0, &z, &mut out)
+        });
+        timed(&runner, &mut log, "Φ vjp  (adjoint_step_into, forced scalar)", || {
+            rust_prop.adjoint_step_into(0, 1.0, &z, &ct, &mut out)
+        });
+        set_force_scalar(false);
+    }
 
     // --- XLA Φ (artifacts) --------------------------------------------------
     let dir = std::env::var("LAYERTIME_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
@@ -173,6 +253,12 @@ fn main() -> anyhow::Result<()> {
     rc.train.adaptive = false;
     let mut run = TrainRun::new(rc.clone(), Task::Tag, None)?;
     timed(&runner, &mut log, "full train step (8 layers, tiny, rust Φ)", || run.train_step());
+    if simd_active() {
+        set_force_scalar(true);
+        let mut run_scalar = TrainRun::new(rc.clone(), Task::Tag, None)?;
+        timed(&runner, &mut log, "full train step (forced scalar)", || run_scalar.train_step());
+        set_force_scalar(false);
+    }
 
     // --- persistent solve contexts: cached vs fresh hierarchies --------------
     // "cached ctx" is the steady-state path (cores + workspace reused across
@@ -360,6 +446,20 @@ fn main() -> anyhow::Result<()> {
                     "  -> {:.0} tokens/sec",
                     (batch * max_new) as f64 / st.mean.max(1e-12)
                 );
+                // SIMD builds: the same generation through the forced-scalar
+                // kernels — cached decode is the latency-critical consumer of
+                // the m = 1 kernel shapes, so track it under both modes
+                if simd_active() {
+                    set_force_scalar(true);
+                    let label = format!(
+                        "cached decode ({} new tok, batch {}, {}, forced scalar)",
+                        max_new, batch, tag
+                    );
+                    timed(&runner, &mut log, &label, || {
+                        inf.generate_into(&prompts, plen, &opts, &mut out).unwrap()
+                    });
+                    set_force_scalar(false);
+                }
             }
         }
     }

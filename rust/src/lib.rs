@@ -105,6 +105,18 @@
 //!
 //! A pure-Rust reference transformer ([`reference`]) mirrors the JAX model
 //! so every algorithm in the crate is testable without artifacts.
+//!
+//! ## Kernel layer ([`tensor`])
+//!
+//! The reference Φ bottoms out in hand-written f32 kernels: row-sliced
+//! matmul and its transposed variants, row softmax, LayerNorm, GELU — all
+//! on 32-byte-aligned backing stores ([`tensor::AlignedVec`]). Building
+//! with `--features simd` adds explicit 8-lane vector kernels (AVX2+FMA /
+//! NEON) behind a runtime dispatch ([`tensor::simd_active`]) that keeps
+//! `mm`/`mm_at` **bitwise identical** to the scalar kernels and bounds the
+//! reassociated kernels to shape-independent ulp-level drift, so the
+//! crate's bitwise pins (checkpoint resume, backend parity, cached decode)
+//! hold under the feature (`rust/tests/simd_parity.rs`).
 
 pub mod adaptive;
 pub mod analysis;

@@ -18,7 +18,7 @@
 //! workspace and exist for tests and one-off analysis calls. Matrix work
 //! runs on the blocked kernels in [`crate::tensor::ops`].
 
-use super::math::{gelu, gelu_grad, layer_norm_bwd, layer_norm_fwd_into, layer_norm_fwd_stats};
+use super::math::{gelu_grad, gelu_row, layer_norm_bwd, layer_norm_fwd_into, layer_norm_fwd_stats};
 use super::params::{DecGrads, DecParams, EncGrads, EncParams};
 use super::scratch::Scratch;
 use crate::tensor::{mm_at_into, mm_bt_into, mm_into, Tensor};
@@ -66,6 +66,11 @@ fn scatter_head_add(dst: &mut [f32], b: usize, s: usize, d: usize, h: usize, hd:
 }
 
 /// Row-wise softmax with optional causal mask; operates on [sq, sk].
+///
+/// The per-row normalization is the shared dispatched kernel
+/// [`crate::tensor::softmax_row`] (SIMD when active), whose output bits
+/// depend only on the row's contents — the invariant the cached-decode
+/// paths rely on.
 fn masked_softmax(scores: &mut [f32], sq: usize, sk: usize, causal: bool) {
     for qi in 0..sq {
         let row = &mut scores[qi * sk..(qi + 1) * sk];
@@ -78,14 +83,7 @@ fn masked_softmax(scores: &mut [f32], sq: usize, sk: usize, causal: bool) {
                 }
             }
         }
-        let max = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
-        let mut sum = 0.0;
-        for v in row.iter_mut() {
-            *v = (*v - max).exp();
-            sum += *v;
-        }
-        let inv = 1.0 / sum;
-        row.iter_mut().for_each(|v| *v *= inv);
+        crate::tensor::softmax_row(row);
     }
 }
 
@@ -356,8 +354,13 @@ fn phi2_fwd(u: &[f32], p: &EncParams, dm: &RefDims, out: &mut [f32], s: &mut Scr
     let mut hpre = s.take_any(r * f);
     mm_into(&z, p.w1, r, d, f, &mut hpre, false);
     add_bias_rows(&mut hpre, p.b1, f);
-    // gelu in place: hpre becomes hmid
-    hpre.iter_mut().for_each(|v| *v = gelu(*v));
+    // gelu in place, one f-length row at a time (the dispatched row
+    // kernel keeps element bits independent of the row count, so the
+    // cached single-position and full-sequence paths agree): hpre
+    // becomes hmid
+    for row in hpre.chunks_exact_mut(f) {
+        gelu_row(row);
+    }
     mm_into(&hpre, p.w2, r, f, d, out, false);
     add_bias_rows(out, p.b2, d);
     s.give(hpre);
@@ -382,8 +385,11 @@ fn phi2_bwd(
     mm_into(&z, p.w1, r, d, f, &mut hpre, false);
     add_bias_rows(&mut hpre, p.b1, f);
     let mut hmid = s.take_any(r * f);
-    for (hm, &hp) in hmid.iter_mut().zip(hpre.iter()) {
-        *hm = gelu(hp);
+    hmid.copy_from_slice(&hpre);
+    // same dispatched row-wise gelu as phi2_fwd: the recomputed hmid must
+    // match the forward pass bit for bit
+    for row in hmid.chunks_exact_mut(f) {
+        gelu_row(row);
     }
 
     // out = hmid @ w2 + b2
@@ -772,16 +778,29 @@ pub fn dec_step_bwd(
 // head, see `crate::reference::KvCache`), so scoring streams one
 // contiguous [len, head_dim] slab per (row, head). Bitwise parity with
 // the full-board kernels rests on three properties pinned by the tests
-// below and in `tensor/ops.rs`:
+// below, in `tensor/ops.rs`, and (for the SIMD kernels) in
+// `tests/simd_parity.rs`:
 //
 // * `mm_into` accumulates each output element over k in ascending order
-//   (naive-loop bitwise), so projecting one row gives the same bits as
-//   that row inside a full-board projection, and a softmax row whose
-//   masked tail weights are exactly +0.0 contributes nothing to the
-//   ascending-k value accumulation;
-// * `mm_bt_into`'s dot depends only on the head_dim contraction, which
-//   is identical in both paths;
-// * layer-norm / GELU / bias are row-wise.
+//   (naive-loop bitwise — the SIMD path uses separate mul/add roundings,
+//   never FMA, to preserve exactly this), so projecting one row gives
+//   the same bits as that row inside a full-board projection, and a
+//   softmax row whose masked tail weights are exactly +0.0 contributes
+//   nothing to the ascending-k value accumulation;
+// * `mm_bt_into`'s per-element value depends only on the head_dim
+//   contraction (ascending k; in the SIMD build one FMA chain per
+//   element, with the scalar-remainder columns using the identically
+//   rounded `f32::mul_add`), never on the row/column count — identical
+//   in both paths;
+// * layer-norm / GELU / softmax are dispatched *row-wise* kernels whose
+//   output bits depend only on the row contents (softmax additionally
+//   flushes `exp(-inf)` and sub-(-87) tails to exactly +0.0, keeping the
+//   masked-tail property above), and bias adds are element-wise.
+//
+// Scalar and SIMD builds may differ from each other on the reassociated
+// kernels (mm_bt/softmax/LN/GELU, ulp-bounded), but each build agrees
+// with itself across the cached and full-board paths — which is what
+// decode parity means.
 
 /// Score one new query row per batch against cached K/V; for
 /// self-attention (`cross_len = None`) first project `append` and store

@@ -1,5 +1,13 @@
 //! Scalar/row math for the reference transformer: LayerNorm (fwd + bwd)
 //! and tanh-approximate GELU (matching `jax.nn.gelu(approximate=True)`).
+//!
+//! The row-wise forward kernels (`layer_norm_fwd_*`, [`gelu_row`])
+//! dispatch to the SIMD implementations in `crate::tensor::simd` when
+//! `--features simd` is compiled in and the host supports it. Both are
+//! reassociating kernels (ulp-bounded vs scalar, pinned by
+//! `tests/simd_parity.rs`), but a row's output bits depend only on that
+//! row's contents — never on the row count — which is what incremental
+//! decode parity requires.
 
 pub const LN_EPS: f32 = 1e-5;
 
@@ -8,6 +16,19 @@ pub fn gelu(x: f32) -> f32 {
     const C: f32 = 0.7978845608; // sqrt(2/pi)
     const A: f32 = 0.044715;
     0.5 * x * (1.0 + (C * (x + A * x * x * x)).tanh())
+}
+
+/// GELU applied to a row in place (dispatched: SIMD when active, the
+/// scalar [`gelu`] loop otherwise).
+pub fn gelu_row(row: &mut [f32]) {
+    #[cfg(feature = "simd")]
+    if crate::tensor::simd_active() {
+        crate::tensor::simd::gelu_row(row);
+        return;
+    }
+    for v in row.iter_mut() {
+        *v = gelu(*v);
+    }
 }
 
 /// d gelu / dx for the tanh approximation.
@@ -19,19 +40,34 @@ pub fn gelu_grad(x: f32) -> f32 {
     0.5 * (1.0 + t) + 0.5 * x * (1.0 - t * t) * C * (1.0 + 3.0 * A * x * x)
 }
 
+/// One LayerNorm row: normalize `xr` into `or`, returning `(mu, inv)`.
+/// Dispatched: SIMD when active, scalar otherwise. Both `layer_norm_fwd_*`
+/// variants share this single row kernel so their output bits agree.
+fn ln_row(xr: &[f32], g: &[f32], b: &[f32], or: &mut [f32]) -> (f32, f32) {
+    #[cfg(feature = "simd")]
+    if crate::tensor::simd_active() {
+        return crate::tensor::simd::ln_row(xr, g, b, LN_EPS, or);
+    }
+    ln_row_scalar(xr, g, b, or)
+}
+
+fn ln_row_scalar(xr: &[f32], g: &[f32], b: &[f32], or: &mut [f32]) -> (f32, f32) {
+    let d = xr.len();
+    let mu = xr.iter().sum::<f32>() / d as f32;
+    let var = xr.iter().map(|v| (v - mu) * (v - mu)).sum::<f32>() / d as f32;
+    let inv = 1.0 / (var + LN_EPS).sqrt();
+    for i in 0..d {
+        or[i] = (xr[i] - mu) * inv * g[i] + b[i];
+    }
+    (mu, inv)
+}
+
 /// LayerNorm forward over rows of length `d`, no stats capture (the hot
 /// forward path — allocation-free).
 pub fn layer_norm_fwd_into(x: &[f32], g: &[f32], b: &[f32], d: usize, out: &mut [f32]) {
     let rows = x.len() / d;
     for r in 0..rows {
-        let xr = &x[r * d..(r + 1) * d];
-        let or = &mut out[r * d..(r + 1) * d];
-        let mu = xr.iter().sum::<f32>() / d as f32;
-        let var = xr.iter().map(|v| (v - mu) * (v - mu)).sum::<f32>() / d as f32;
-        let inv = 1.0 / (var + LN_EPS).sqrt();
-        for i in 0..d {
-            or[i] = (xr[i] - mu) * inv * g[i] + b[i];
-        }
+        ln_row(&x[r * d..(r + 1) * d], g, b, &mut out[r * d..(r + 1) * d]);
     }
 }
 
@@ -49,15 +85,7 @@ pub fn layer_norm_fwd_stats(
     stats.clear();
     stats.reserve(rows);
     for r in 0..rows {
-        let xr = &x[r * d..(r + 1) * d];
-        let or = &mut out[r * d..(r + 1) * d];
-        let mu = xr.iter().sum::<f32>() / d as f32;
-        let var = xr.iter().map(|v| (v - mu) * (v - mu)).sum::<f32>() / d as f32;
-        let inv = 1.0 / (var + LN_EPS).sqrt();
-        for i in 0..d {
-            or[i] = (xr[i] - mu) * inv * g[i] + b[i];
-        }
-        stats.push((mu, inv));
+        stats.push(ln_row(&x[r * d..(r + 1) * d], g, b, &mut out[r * d..(r + 1) * d]));
     }
 }
 

@@ -26,7 +26,8 @@ pub use block::{
 };
 pub use kvcache::{KvCache, LayerKv};
 pub use math::{
-    gelu, gelu_grad, layer_norm_bwd, layer_norm_fwd, layer_norm_fwd_into, layer_norm_fwd_stats,
+    gelu, gelu_grad, gelu_row, layer_norm_bwd, layer_norm_fwd, layer_norm_fwd_into,
+    layer_norm_fwd_stats,
 };
 pub use params::{DecGrads, DecParams, EncGrads, EncParams};
 pub use scratch::Scratch;

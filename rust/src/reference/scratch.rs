@@ -3,21 +3,28 @@
 //! Every Φ forward/backward needs a handful of temporaries (projections,
 //! attention scores, FFN activations, adjoint partials). Allocating them
 //! per call dominated the pre-optimization profile, so [`Scratch`] keeps a
-//! LIFO pool of `Vec<f32>` buffers (plus a small pool of LayerNorm stat
-//! vectors): `take(len)` pops a buffer, zero-fills it to `len`, and hands
-//! it out; `give` returns it. Because every Φ application requests the
-//! same buffer lengths in the same order, capacities stabilize after the
-//! first couple of calls and the steady state performs **zero heap
-//! allocations** (pinned by `rust/tests/alloc_audit.rs`).
+//! LIFO pool of buffers (plus a small pool of LayerNorm stat vectors):
+//! `take(len)` pops a buffer, zero-fills it to `len`, and hands it out;
+//! `give` returns it. Because every Φ application requests the same buffer
+//! lengths in the same order, capacities stabilize after the first couple
+//! of calls and the steady state performs **zero heap allocations**
+//! (pinned by `rust/tests/alloc_audit.rs`).
+//!
+//! Buffers are [`AlignedVec`]s — 32-byte-aligned backing stores so the
+//! SIMD kernels' eight-lane loads from buffer starts never split a cache
+//! line. `AlignedVec` derefs to `&[f32]` / `&mut [f32]`, so kernel call
+//! sites are unchanged.
 //!
 //! A `Scratch` is *not* shared across threads — each relaxation worker
 //! checks one out of the propagator's pool (see
 //! [`crate::ode::RustPropagator`]).
 
+use crate::tensor::AlignedVec;
+
 /// LIFO buffer pool for the Φ hot path.
 #[derive(Debug, Default)]
 pub struct Scratch {
-    bufs: Vec<Vec<f32>>,
+    bufs: Vec<AlignedVec>,
     stats: Vec<Vec<(f32, f32)>>,
 }
 
@@ -28,10 +35,9 @@ impl Scratch {
 
     /// Check out a zero-filled buffer of exactly `len` elements (for
     /// accumulation targets).
-    pub fn take(&mut self, len: usize) -> Vec<f32> {
+    pub fn take(&mut self, len: usize) -> AlignedVec {
         let mut v = self.bufs.pop().unwrap_or_default();
-        v.clear();
-        v.resize(len, 0.0);
+        v.resize_zeroed(len);
         v
     }
 
@@ -41,18 +47,14 @@ impl Scratch {
     /// is a determinism bug; the bitwise `_into`-vs-wrapper property tests
     /// catch such misuse because the wrappers run on a fresh (all-zero)
     /// workspace while the hot path sees recycled contents.
-    pub fn take_any(&mut self, len: usize) -> Vec<f32> {
+    pub fn take_any(&mut self, len: usize) -> AlignedVec {
         let mut v = self.bufs.pop().unwrap_or_default();
-        if v.len() > len {
-            v.truncate(len);
-        } else {
-            v.resize(len, 0.0);
-        }
+        v.resize_preserve(len);
         v
     }
 
     /// Return a buffer to the pool (its capacity is what gets reused).
-    pub fn give(&mut self, v: Vec<f32>) {
+    pub fn give(&mut self, v: AlignedVec) {
         self.bufs.push(v);
     }
 
@@ -82,9 +84,19 @@ mod tests {
         let ptr = a.as_ptr();
         s.give(a);
         let b = s.take(4);
-        assert_eq!(b, vec![0.0; 4], "reused buffer must be zeroed");
+        assert_eq!(&b[..], &[0.0; 4], "reused buffer must be zeroed");
         assert_eq!(b.as_ptr(), ptr, "same allocation must be reused");
         assert!(b.capacity() >= 4 && cap >= 8);
+    }
+
+    #[test]
+    fn buffers_are_32_byte_aligned() {
+        let mut s = Scratch::new();
+        for len in [1usize, 7, 8, 9, 33] {
+            let b = s.take(len);
+            assert_eq!(b.as_ptr() as usize % 32, 0, "len={}", len);
+            s.give(b);
+        }
     }
 
     #[test]
@@ -109,11 +121,11 @@ mod tests {
         // shrink: old contents retained (unspecified but deterministic)
         let b = s.take_any(4);
         assert_eq!(b.len(), 4);
-        assert_eq!(b, vec![3.0; 4]);
+        assert_eq!(&b[..], &[3.0; 4]);
         s.give(b);
         // grow: appended elements are zeroed, prefix retained
         let c = s.take_any(6);
-        assert_eq!(c, vec![3.0, 3.0, 3.0, 3.0, 0.0, 0.0]);
+        assert_eq!(&c[..], &[3.0, 3.0, 3.0, 3.0, 0.0, 0.0]);
     }
 
     #[test]

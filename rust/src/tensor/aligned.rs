@@ -1,0 +1,221 @@
+//! 32-byte-aligned f32 buffer for the SIMD kernel layer.
+//!
+//! [`AlignedVec`] is a growable f32 buffer whose backing store is always
+//! aligned to 32 bytes (one AVX2 `f32x8` register / half a cache line), so
+//! eight-lane loads from the start of a buffer never split a cache line.
+//! The SIMD kernels use unaligned load instructions throughout — alignment
+//! is a performance property, not a safety requirement — which keeps every
+//! kernel correct on arbitrary row offsets while the common case (buffer
+//! starts, packed panels) stays aligned.
+//!
+//! It is the backing store of [`crate::reference::Scratch`] pool buffers
+//! and [`crate::tensor::Tensor`], and of the per-thread packing panel used
+//! by the SIMD `mm_bt` kernel. The implementation avoids manual
+//! allocation: storage is a `Vec` of `#[repr(C, align(32))]` eight-float
+//! chunks, so capacity reuse, growth, and deallocation all inherit `Vec`'s
+//! (audited) behavior. `Deref<Target = [f32]>` lets every existing
+//! slice-shaped call site keep working unchanged.
+
+use std::fmt;
+use std::ops::{Deref, DerefMut};
+
+/// One 8-lane f32 register worth of storage, 32-byte aligned.
+#[derive(Clone, Copy)]
+#[repr(C, align(32))]
+struct Chunk([f32; 8]);
+
+const ZERO_CHUNK: Chunk = Chunk([0.0; 8]);
+
+/// Growable f32 buffer with a 32-byte-aligned backing store.
+///
+/// Semantically a `Vec<f32>` restricted to the operations the kernel layer
+/// needs; `len` is in f32 elements and need not be a multiple of 8 (the
+/// backing store rounds up internally).
+#[derive(Default)]
+pub struct AlignedVec {
+    chunks: Vec<Chunk>,
+    len: usize,
+}
+
+impl AlignedVec {
+    /// Empty buffer (does not allocate).
+    pub const fn new() -> AlignedVec {
+        AlignedVec { chunks: Vec::new(), len: 0 }
+    }
+
+    /// Buffer copied from a slice.
+    pub fn from_slice(src: &[f32]) -> AlignedVec {
+        let mut v = AlignedVec::new();
+        v.resize_zeroed(src.len());
+        v.copy_from_slice(src);
+        v
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Capacity in f32 elements (always a multiple of 8).
+    pub fn capacity(&self) -> usize {
+        self.chunks.capacity() * 8
+    }
+
+    /// Resize to `len` elements, all zero — `Vec::clear` +
+    /// `resize(len, 0.0)` semantics. Reuses capacity; only grows the
+    /// backing store when `len` exceeds it.
+    pub fn resize_zeroed(&mut self, len: usize) {
+        let nch = (len + 7) / 8; // usize::div_ceil needs Rust 1.73; crate pins 1.70
+        if self.chunks.len() < nch {
+            self.chunks.resize(nch, ZERO_CHUNK);
+        }
+        self.chunks[..nch].fill(ZERO_CHUNK);
+        self.len = len;
+        self.debug_check_alignment();
+    }
+
+    /// Resize to `len` elements preserving the prefix — `Vec::truncate` /
+    /// `Vec::resize(len, 0.0)` semantics: shrinking keeps the first `len`
+    /// elements, growing zero-fills the appended tail. (The tail must be
+    /// zeroed explicitly: the chunked backing store can hold stale data
+    /// beyond a previous logical length.)
+    pub fn resize_preserve(&mut self, len: usize) {
+        let old = self.len;
+        let nch = (len + 7) / 8; // usize::div_ceil needs Rust 1.73; crate pins 1.70
+        if self.chunks.len() < nch {
+            self.chunks.resize(nch, ZERO_CHUNK);
+        }
+        if len > old {
+            self.storage_mut()[old..len].fill(0.0);
+        }
+        self.len = len;
+        self.debug_check_alignment();
+    }
+
+    /// Copy out into a plain `Vec<f32>` (test/serialization paths).
+    pub fn to_vec(&self) -> Vec<f32> {
+        self.as_slice().to_vec()
+    }
+
+    pub fn as_slice(&self) -> &[f32] {
+        // Sound: `chunks` owns `chunks.len() * 8 >= self.len` initialized,
+        // contiguous f32s starting at a 32-byte-aligned address.
+        unsafe { std::slice::from_raw_parts(self.chunks.as_ptr().cast::<f32>(), self.len) }
+    }
+
+    pub fn as_mut_slice(&mut self) -> &mut [f32] {
+        unsafe { std::slice::from_raw_parts_mut(self.chunks.as_mut_ptr().cast::<f32>(), self.len) }
+    }
+
+    /// The full chunk-rounded storage (may extend past `len`).
+    fn storage_mut(&mut self) -> &mut [f32] {
+        let n = self.chunks.len() * 8;
+        unsafe { std::slice::from_raw_parts_mut(self.chunks.as_mut_ptr().cast::<f32>(), n) }
+    }
+
+    #[inline]
+    fn debug_check_alignment(&self) {
+        debug_assert_eq!(
+            self.chunks.as_ptr() as usize % 32,
+            0,
+            "AlignedVec backing store must be 32-byte aligned"
+        );
+    }
+}
+
+impl Deref for AlignedVec {
+    type Target = [f32];
+    #[inline]
+    fn deref(&self) -> &[f32] {
+        self.as_slice()
+    }
+}
+
+impl DerefMut for AlignedVec {
+    #[inline]
+    fn deref_mut(&mut self) -> &mut [f32] {
+        self.as_mut_slice()
+    }
+}
+
+impl Clone for AlignedVec {
+    fn clone(&self) -> AlignedVec {
+        AlignedVec::from_slice(self)
+    }
+}
+
+impl PartialEq for AlignedVec {
+    fn eq(&self, other: &AlignedVec) -> bool {
+        self.as_slice() == other.as_slice()
+    }
+}
+
+impl fmt::Debug for AlignedVec {
+    /// Debug-print as the logical slice (the chunked store is an
+    /// implementation detail).
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        fmt::Debug::fmt(self.as_slice(), f)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn starts_aligned_and_stays_aligned_across_growth() {
+        let mut v = AlignedVec::new();
+        for len in [1usize, 7, 8, 9, 31, 32, 33, 1000] {
+            v.resize_zeroed(len);
+            assert_eq!(v.len(), len);
+            assert_eq!(v.as_ptr() as usize % 32, 0, "len={}", len);
+            assert!(v.iter().all(|&x| x == 0.0));
+        }
+    }
+
+    #[test]
+    fn resize_zeroed_clears_previous_contents() {
+        let mut v = AlignedVec::new();
+        v.resize_zeroed(10);
+        v.iter_mut().for_each(|x| *x = 5.0);
+        v.resize_zeroed(6);
+        assert_eq!(&v[..], &[0.0; 6]);
+        // growth back within the old chunk footprint is zeroed too
+        v.resize_zeroed(10);
+        assert_eq!(&v[..], &[0.0; 10]);
+    }
+
+    #[test]
+    fn resize_preserve_matches_vec_truncate_then_resize() {
+        let mut v = AlignedVec::new();
+        v.resize_zeroed(8);
+        v.iter_mut().for_each(|x| *x = 3.0);
+        v.resize_preserve(4);
+        assert_eq!(&v[..], &[3.0; 4]);
+        // grow: prefix retained, tail zeroed even though the chunk still
+        // holds stale 3.0s past the old logical length
+        v.resize_preserve(6);
+        assert_eq!(&v[..], &[3.0, 3.0, 3.0, 3.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn from_slice_round_trips() {
+        let data = [1.0f32, 2.0, 3.0, 4.0, 5.0];
+        let v = AlignedVec::from_slice(&data);
+        assert_eq!(v.to_vec(), data.to_vec());
+        assert_eq!(v.clone(), v);
+    }
+
+    #[test]
+    fn capacity_is_reused_not_reallocated() {
+        let mut v = AlignedVec::new();
+        v.resize_zeroed(64);
+        let ptr = v.as_ptr();
+        v.resize_zeroed(8);
+        v.resize_preserve(64);
+        assert_eq!(v.as_ptr(), ptr, "shrink/regrow within capacity must not reallocate");
+    }
+}

@@ -1,12 +1,50 @@
 //! Host tensor substrate: a dense f32 tensor with the algebra the MGRIT
 //! engine needs (axpy/scale/norm), plus the small matmuls and reductions
 //! the pure-Rust reference transformer is built from.
+//!
+//! Backing stores ([`Tensor`], the [`crate::reference::Scratch`] arena)
+//! are [`AlignedVec`]s — 32-byte-aligned so SIMD `f32x8` loads from
+//! buffer starts never split a cache line. With `--features simd` the
+//! hot kernels (`mm_into` / `mm_at_into` / `mm_bt_into` / `softmax_row`)
+//! dispatch at runtime to the explicit-SIMD implementations in [`simd`]
+//! (AVX2+FMA on x86_64, NEON on aarch64); everywhere else they are the
+//! scalar kernels. See `ops.rs` for the numerical contracts.
 
+mod aligned;
 mod ops;
+#[cfg(feature = "simd")]
+pub(crate) mod simd;
 mod tensor;
 
+pub use aligned::AlignedVec;
 pub use ops::{
     matmul, matmul_at, matmul_at_into, matmul_bt, matmul_bt_into, matmul_into, mm_at_into,
-    mm_bt_into, mm_into, softmax_rows,
+    mm_at_into_scalar, mm_bt_into, mm_bt_into_scalar, mm_into, mm_into_scalar, softmax_row,
+    softmax_row_scalar, softmax_rows,
 };
 pub use tensor::Tensor;
+
+/// True when the runtime-dispatched SIMD kernels are in use: the `simd`
+/// feature is compiled in, the host supports them (AVX2+FMA / NEON), and
+/// [`set_force_scalar`] has not disabled them.
+#[cfg(feature = "simd")]
+pub fn simd_active() -> bool {
+    simd::simd_active()
+}
+
+/// Without `--features simd` the kernels are always scalar.
+#[cfg(not(feature = "simd"))]
+pub fn simd_active() -> bool {
+    false
+}
+
+/// Force the scalar kernels even when SIMD is compiled in and supported
+/// (scalar-vs-simd benches, parity tests). No-op without the feature.
+#[cfg(feature = "simd")]
+pub fn set_force_scalar(on: bool) {
+    simd::set_force_scalar(on);
+}
+
+/// No-op without `--features simd` (the kernels are already scalar).
+#[cfg(not(feature = "simd"))]
+pub fn set_force_scalar(_on: bool) {}

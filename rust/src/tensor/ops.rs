@@ -22,6 +22,23 @@
 //! reassociates the sum: results agree with the naive loop to relative
 //! rounding error, and IEEE specials (NaN/inf) still propagate.
 //!
+//! # SIMD dispatch (`--features simd`)
+//!
+//! With the `simd` feature compiled in, `mm_into` / `mm_at_into` /
+//! `mm_bt_into` / `softmax_rows` dispatch per call to the explicit-SIMD
+//! kernels in [`super::simd`] when [`super::simd_active`] is true
+//! (AVX2+FMA detected on x86_64, NEON on aarch64; probed once and cached).
+//! The dispatched kernels keep this module's numerical contracts:
+//! `mm_into` / `mm_at_into` stay **bitwise** identical to the naive
+//! ascending-k triple loop (the SIMD lanes use separate mul/add roundings,
+//! never FMA — incremental-decode parity depends on it), while `mm_bt_into`
+//! and `softmax_rows` may reassociate/fuse within their existing
+//! rounding-level contract (pinned against the scalar kernels by
+//! `tests/simd_parity.rs`). The `*_scalar` variants below are the
+//! always-scalar entry points those parity tests and the scalar-vs-simd
+//! benches compare against; without the feature (or on unsupported hosts)
+//! the public kernels *are* the scalar kernels.
+//!
 //! The Tensor-level wrappers (`matmul*`, `matmul*_into`) add shape checks;
 //! the `*_into` forms are the hot-path entry points used by
 //! [`crate::reference`].
@@ -30,7 +47,8 @@ use super::Tensor;
 
 /// out (+)= a[m,k] @ b[k,n] (row-major slices).
 ///
-/// Bitwise identical to the naive triple loop (ascending-k accumulation).
+/// Bitwise identical to the naive triple loop (ascending-k accumulation)
+/// in both the scalar and SIMD paths.
 pub fn mm_into(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, out: &mut [f32], acc: bool) {
     debug_assert_eq!(a.len(), m * k, "mm_into: a length");
     debug_assert_eq!(b.len(), k * n, "mm_into: b length");
@@ -41,6 +59,37 @@ pub fn mm_into(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, out: &mut [f3
     if m == 0 || n == 0 {
         return;
     }
+    #[cfg(feature = "simd")]
+    if super::simd_active() {
+        super::simd::mm_accum(a, b, m, k, n, out);
+        return;
+    }
+    mm_accum_scalar(a, b, m, k, n, out);
+}
+
+/// Always-scalar `mm_into` (the SIMD parity/bench baseline).
+pub fn mm_into_scalar(
+    a: &[f32],
+    b: &[f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    out: &mut [f32],
+    acc: bool,
+) {
+    debug_assert_eq!(a.len(), m * k, "mm_into: a length");
+    debug_assert_eq!(b.len(), k * n, "mm_into: b length");
+    debug_assert_eq!(out.len(), m * n, "mm_into: out length");
+    if !acc {
+        out.fill(0.0);
+    }
+    if m == 0 || n == 0 {
+        return;
+    }
+    mm_accum_scalar(a, b, m, k, n, out);
+}
+
+fn mm_accum_scalar(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, out: &mut [f32]) {
     // Four output rows per pass: one streamed read of b serves four rows
     // of a, quadrupling arithmetic intensity over row-at-a-time.
     let mut blocks = out.chunks_exact_mut(4 * n);
@@ -94,6 +143,37 @@ pub fn mm_at_into(a: &[f32], b: &[f32], k: usize, m: usize, n: usize, out: &mut 
     if m == 0 || n == 0 {
         return;
     }
+    #[cfg(feature = "simd")]
+    if super::simd_active() {
+        super::simd::mm_at_accum(a, b, k, m, n, out);
+        return;
+    }
+    mm_at_accum_scalar(a, b, k, m, n, out);
+}
+
+/// Always-scalar `mm_at_into` (the SIMD parity/bench baseline).
+pub fn mm_at_into_scalar(
+    a: &[f32],
+    b: &[f32],
+    k: usize,
+    m: usize,
+    n: usize,
+    out: &mut [f32],
+    acc: bool,
+) {
+    debug_assert_eq!(a.len(), k * m, "mm_at_into: a length");
+    debug_assert_eq!(b.len(), k * n, "mm_at_into: b length");
+    debug_assert_eq!(out.len(), m * n, "mm_at_into: out length");
+    if !acc {
+        out.fill(0.0);
+    }
+    if m == 0 || n == 0 {
+        return;
+    }
+    mm_at_accum_scalar(a, b, k, m, n, out);
+}
+
+fn mm_at_accum_scalar(a: &[f32], b: &[f32], k: usize, m: usize, n: usize, out: &mut [f32]) {
     let mut kk = 0;
     while kk + 4 <= k {
         let a0 = &a[kk * m..(kk + 1) * m];
@@ -156,6 +236,10 @@ fn dot_lanes(x: &[f32], y: &[f32]) -> f32 {
 
 /// out (+)= a @ bᵀ where a is [m,k], b is stored [n,k] → out [m,n]
 /// (attention scores / input-gradient helper).
+///
+/// Reassociating kernel: the SIMD path packs eight b-rows into a
+/// contiguous 32-byte-aligned panel and runs one FMA chain per element,
+/// which stays within the eight-lane rounding/NaN-mask contract above.
 pub fn mm_bt_into(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, out: &mut [f32], acc: bool) {
     debug_assert_eq!(a.len(), m * k, "mm_bt_into: a length");
     debug_assert_eq!(b.len(), n * k, "mm_bt_into: b length");
@@ -163,6 +247,40 @@ pub fn mm_bt_into(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, out: &mut 
     if !acc {
         out.fill(0.0);
     }
+    if m == 0 || n == 0 {
+        return;
+    }
+    #[cfg(feature = "simd")]
+    if super::simd_active() {
+        super::simd::mm_bt_accum(a, b, m, k, n, out);
+        return;
+    }
+    mm_bt_accum_scalar(a, b, m, k, n, out);
+}
+
+/// Always-scalar `mm_bt_into` (the SIMD parity/bench baseline).
+pub fn mm_bt_into_scalar(
+    a: &[f32],
+    b: &[f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    out: &mut [f32],
+    acc: bool,
+) {
+    debug_assert_eq!(a.len(), m * k, "mm_bt_into: a length");
+    debug_assert_eq!(b.len(), n * k, "mm_bt_into: b length");
+    debug_assert_eq!(out.len(), m * n, "mm_bt_into: out length");
+    if !acc {
+        out.fill(0.0);
+    }
+    if m == 0 || n == 0 {
+        return;
+    }
+    mm_bt_accum_scalar(a, b, m, k, n, out);
+}
+
+fn mm_bt_accum_scalar(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, out: &mut [f32]) {
     for i in 0..m {
         let arow = &a[i * k..(i + 1) * k];
         let orow = &mut out[i * n..(i + 1) * n];
@@ -235,17 +353,40 @@ pub fn softmax_rows(x: &mut Tensor) {
     let rows = x.len() / n;
     let d = x.data_mut();
     for r in 0..rows {
-        let row = &mut d[r * n..(r + 1) * n];
-        let max = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
-        let mut sum = 0.0;
-        for v in row.iter_mut() {
-            *v = (*v - max).exp();
-            sum += *v;
-        }
-        let inv = 1.0 / sum;
-        for v in row.iter_mut() {
-            *v *= inv;
-        }
+        softmax_row(&mut d[r * n..(r + 1) * n]);
+    }
+}
+
+/// Row softmax on a slice — the single softmax kernel behind
+/// `softmax_rows` and the reference block's masked attention softmax.
+///
+/// A row's output bits depend only on that row's contents (never on the
+/// row count or position), and trailing `exp(-inf) = 0` masked entries
+/// are additive identities under the ascending sum — the two properties
+/// incremental-decode parity rests on. The SIMD path keeps both: exact
+/// max reduction, a polynomial exp whose scalar tail mirrors the vector
+/// lanes bit for bit, a scalar ascending sum, and one rounding per
+/// element in the final scale.
+pub fn softmax_row(row: &mut [f32]) {
+    #[cfg(feature = "simd")]
+    if super::simd_active() {
+        super::simd::softmax_row(row);
+        return;
+    }
+    softmax_row_scalar(row);
+}
+
+/// Always-scalar row softmax (the SIMD parity/bench baseline).
+pub fn softmax_row_scalar(row: &mut [f32]) {
+    let max = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    let mut sum = 0.0;
+    for v in row.iter_mut() {
+        *v = (*v - max).exp();
+        sum += *v;
+    }
+    let inv = 1.0 / sum;
+    for v in row.iter_mut() {
+        *v *= inv;
     }
 }
 

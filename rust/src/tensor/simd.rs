@@ -1,0 +1,1056 @@
+//! Explicit SIMD kernels (`--features simd`): AVX2/FMA on x86_64, NEON on
+//! aarch64, runtime-detected with the scalar kernels in
+//! [`super::ops`] as the always-available fallback.
+//!
+//! # Dispatch
+//!
+//! CPU capability is probed **once** (`is_x86_feature_detected!` cached in
+//! a [`OnceLock`]) — the hot loop never re-runs cpuid. Hosts that are
+//! neither AVX2-x86_64 nor aarch64 silently report [`simd_active`] `==
+//! false` and take the scalar path; the feature flag never fails to
+//! compile. [`set_force_scalar`] is a runtime kill switch used by the
+//! parity tests and `perf_hotpath` to produce scalar-vs-simd rows from one
+//! process.
+//!
+//! # Numerical contracts (see `tensor/ops.rs` and the README)
+//!
+//! Two classes of kernel, matching the scalar layer's contracts:
+//!
+//! * **Bitwise** (`mm_accum`, `mm_at_accum`): vector lanes accumulate each
+//!   output element over `k` in ascending order with *separate* mul and
+//!   add roundings — never FMA — so every element is bit-identical to the
+//!   scalar/naive triple loop regardless of how rows and columns fall into
+//!   register tiles. Incremental-decode parity (`tests/decode_cache.rs`)
+//!   rests on this.
+//! * **Reassociated** (`mm_bt_accum`, `softmax_row`, `ln_row`,
+//!   `gelu_row`): free to fuse and regroup, pinned to the scalar kernels
+//!   by NaN-mask + bounded-ulp parity (`tests/simd_parity.rs`). Their one
+//!   hard invariant is *shape independence*: an element's bits depend only
+//!   on its own row/contraction inputs, never on row count, row length, or
+//!   tile position. `mm_bt_accum` therefore uses a single FMA chain per
+//!   element (packed eight-column panels; scalar `f32::mul_add` chains —
+//!   the same fused op — on remainder columns), and the transcendental
+//!   kernels evaluate vector-lane and scalar-tail elements through
+//!   *mirrored* polynomial code (`exp_v`/`exp_s`), so cached single-row
+//!   decode reproduces full-board rows bit for bit under SIMD too.
+//!
+//! # Cache-aware layout
+//!
+//! `mm_bt_accum` contracts along `k` with `b` stored row-major `[n, k]`:
+//! the scalar kernel streams `b` rows per output element, but eight-lane
+//! code would need a gather. Instead each eight-column tile of `b` is
+//! packed once into a 32-byte-aligned `[k, 8]` panel (a per-thread
+//! [`AlignedVec`] that stabilizes after warmup — zero steady-state
+//! allocations, audited by `tests/alloc_audit.rs`), and all `m` rows
+//! stream that panel contiguously.
+
+#![allow(clippy::too_many_arguments, clippy::excessive_precision)]
+
+use std::cell::RefCell;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::OnceLock;
+
+use super::aligned::AlignedVec;
+
+static FORCE_SCALAR: AtomicBool = AtomicBool::new(false);
+static HAVE_SIMD: OnceLock<bool> = OnceLock::new();
+
+/// One-time CPU capability probe (cached so hot loops never re-probe).
+fn have_simd() -> bool {
+    *HAVE_SIMD.get_or_init(|| {
+        #[cfg(target_arch = "x86_64")]
+        {
+            is_x86_feature_detected!("avx2") && is_x86_feature_detected!("fma")
+        }
+        #[cfg(target_arch = "aarch64")]
+        {
+            true // NEON is baseline on every aarch64 std target
+        }
+        #[cfg(not(any(target_arch = "x86_64", target_arch = "aarch64")))]
+        {
+            false
+        }
+    })
+}
+
+/// True when the SIMD kernels will actually run: the `simd` feature is
+/// compiled in, the CPU supports AVX2+FMA (or is aarch64/NEON), and the
+/// force-scalar override is off.
+#[inline]
+pub fn simd_active() -> bool {
+    have_simd() && !FORCE_SCALAR.load(Ordering::Relaxed)
+}
+
+/// Runtime kill switch: `set_force_scalar(true)` routes every dispatched
+/// kernel to the scalar path (for A/B benches and parity tests).
+pub fn set_force_scalar(on: bool) {
+    FORCE_SCALAR.store(on, Ordering::Relaxed);
+}
+
+// ---------------------------------------------------------------------------
+// eight-lane vector abstraction
+// ---------------------------------------------------------------------------
+
+/// Eight f32 lanes. Implementations are thin intrinsic wrappers; the
+/// kernels below are generic over this trait and monomorphized inside
+/// per-arch `#[target_feature]` entry points so everything inlines.
+///
+/// Safety: all methods require the implementation's CPU features to be
+/// present (guaranteed by dispatching through [`simd_active`]).
+#[cfg(any(target_arch = "x86_64", target_arch = "aarch64"))]
+trait V8: Copy {
+    unsafe fn splat(v: f32) -> Self;
+    unsafe fn load(p: *const f32) -> Self;
+    unsafe fn store(self, p: *mut f32);
+    unsafe fn add(self, o: Self) -> Self;
+    unsafe fn sub(self, o: Self) -> Self;
+    unsafe fn mul(self, o: Self) -> Self;
+    unsafe fn div(self, o: Self) -> Self;
+    /// Fused `self * m + acc` (single rounding).
+    unsafe fn fma(self, m: Self, acc: Self) -> Self;
+    unsafe fn min(self, o: Self) -> Self;
+    unsafe fn max(self, o: Self) -> Self;
+    unsafe fn floor(self) -> Self;
+    /// Per lane: `if self < bound { a } else { b }` (false for NaN).
+    unsafe fn blend_lt(self, bound: Self, a: Self, b: Self) -> Self;
+    /// Per lane: `if self.is_nan() { a } else { b }`.
+    unsafe fn blend_nan(self, a: Self, b: Self) -> Self;
+    /// `2^self` for integral `self` in `[-126, 127]` (exponent-bit trick).
+    unsafe fn pow2i(self) -> Self;
+    unsafe fn to_array(self) -> [f32; 8];
+}
+
+#[cfg(target_arch = "x86_64")]
+mod lanes {
+    use super::V8;
+    use std::arch::x86_64::*;
+
+    #[derive(Clone, Copy)]
+    pub(super) struct F32x8(__m256);
+
+    impl V8 for F32x8 {
+        #[inline(always)]
+        unsafe fn splat(v: f32) -> Self {
+            F32x8(_mm256_set1_ps(v))
+        }
+        #[inline(always)]
+        unsafe fn load(p: *const f32) -> Self {
+            F32x8(_mm256_loadu_ps(p))
+        }
+        #[inline(always)]
+        unsafe fn store(self, p: *mut f32) {
+            _mm256_storeu_ps(p, self.0)
+        }
+        #[inline(always)]
+        unsafe fn add(self, o: Self) -> Self {
+            F32x8(_mm256_add_ps(self.0, o.0))
+        }
+        #[inline(always)]
+        unsafe fn sub(self, o: Self) -> Self {
+            F32x8(_mm256_sub_ps(self.0, o.0))
+        }
+        #[inline(always)]
+        unsafe fn mul(self, o: Self) -> Self {
+            F32x8(_mm256_mul_ps(self.0, o.0))
+        }
+        #[inline(always)]
+        unsafe fn div(self, o: Self) -> Self {
+            F32x8(_mm256_div_ps(self.0, o.0))
+        }
+        #[inline(always)]
+        unsafe fn fma(self, m: Self, acc: Self) -> Self {
+            F32x8(_mm256_fmadd_ps(self.0, m.0, acc.0))
+        }
+        #[inline(always)]
+        unsafe fn min(self, o: Self) -> Self {
+            F32x8(_mm256_min_ps(self.0, o.0))
+        }
+        #[inline(always)]
+        unsafe fn max(self, o: Self) -> Self {
+            F32x8(_mm256_max_ps(self.0, o.0))
+        }
+        #[inline(always)]
+        unsafe fn floor(self) -> Self {
+            F32x8(_mm256_floor_ps(self.0))
+        }
+        #[inline(always)]
+        unsafe fn blend_lt(self, bound: Self, a: Self, b: Self) -> Self {
+            let mask = _mm256_cmp_ps::<_CMP_LT_OQ>(self.0, bound.0);
+            F32x8(_mm256_blendv_ps(b.0, a.0, mask))
+        }
+        #[inline(always)]
+        unsafe fn blend_nan(self, a: Self, b: Self) -> Self {
+            let mask = _mm256_cmp_ps::<_CMP_UNORD_Q>(self.0, self.0);
+            F32x8(_mm256_blendv_ps(b.0, a.0, mask))
+        }
+        #[inline(always)]
+        unsafe fn pow2i(self) -> Self {
+            let k = _mm256_cvtps_epi32(self.0);
+            let bits = _mm256_slli_epi32::<23>(_mm256_add_epi32(k, _mm256_set1_epi32(127)));
+            F32x8(_mm256_castsi256_ps(bits))
+        }
+        #[inline(always)]
+        unsafe fn to_array(self) -> [f32; 8] {
+            let mut out = [0.0f32; 8];
+            _mm256_storeu_ps(out.as_mut_ptr(), self.0);
+            out
+        }
+    }
+}
+
+#[cfg(target_arch = "aarch64")]
+mod lanes {
+    use super::V8;
+    use std::arch::aarch64::*;
+
+    /// Two NEON quads form one eight-lane vector.
+    #[derive(Clone, Copy)]
+    pub(super) struct F32x8(float32x4_t, float32x4_t);
+
+    impl V8 for F32x8 {
+        #[inline(always)]
+        unsafe fn splat(v: f32) -> Self {
+            F32x8(vdupq_n_f32(v), vdupq_n_f32(v))
+        }
+        #[inline(always)]
+        unsafe fn load(p: *const f32) -> Self {
+            F32x8(vld1q_f32(p), vld1q_f32(p.add(4)))
+        }
+        #[inline(always)]
+        unsafe fn store(self, p: *mut f32) {
+            vst1q_f32(p, self.0);
+            vst1q_f32(p.add(4), self.1);
+        }
+        #[inline(always)]
+        unsafe fn add(self, o: Self) -> Self {
+            F32x8(vaddq_f32(self.0, o.0), vaddq_f32(self.1, o.1))
+        }
+        #[inline(always)]
+        unsafe fn sub(self, o: Self) -> Self {
+            F32x8(vsubq_f32(self.0, o.0), vsubq_f32(self.1, o.1))
+        }
+        #[inline(always)]
+        unsafe fn mul(self, o: Self) -> Self {
+            F32x8(vmulq_f32(self.0, o.0), vmulq_f32(self.1, o.1))
+        }
+        #[inline(always)]
+        unsafe fn div(self, o: Self) -> Self {
+            F32x8(vdivq_f32(self.0, o.0), vdivq_f32(self.1, o.1))
+        }
+        #[inline(always)]
+        unsafe fn fma(self, m: Self, acc: Self) -> Self {
+            F32x8(vfmaq_f32(acc.0, self.0, m.0), vfmaq_f32(acc.1, self.1, m.1))
+        }
+        #[inline(always)]
+        unsafe fn min(self, o: Self) -> Self {
+            F32x8(vminq_f32(self.0, o.0), vminq_f32(self.1, o.1))
+        }
+        #[inline(always)]
+        unsafe fn max(self, o: Self) -> Self {
+            F32x8(vmaxq_f32(self.0, o.0), vmaxq_f32(self.1, o.1))
+        }
+        #[inline(always)]
+        unsafe fn floor(self) -> Self {
+            F32x8(vrndmq_f32(self.0), vrndmq_f32(self.1))
+        }
+        #[inline(always)]
+        unsafe fn blend_lt(self, bound: Self, a: Self, b: Self) -> Self {
+            let m0 = vcltq_f32(self.0, bound.0);
+            let m1 = vcltq_f32(self.1, bound.1);
+            F32x8(vbslq_f32(m0, a.0, b.0), vbslq_f32(m1, a.1, b.1))
+        }
+        #[inline(always)]
+        unsafe fn blend_nan(self, a: Self, b: Self) -> Self {
+            // vceqq(self, self) is the *ordered* mask: select b when
+            // ordered, a when NaN.
+            let o0 = vceqq_f32(self.0, self.0);
+            let o1 = vceqq_f32(self.1, self.1);
+            F32x8(vbslq_f32(o0, b.0, a.0), vbslq_f32(o1, b.1, a.1))
+        }
+        #[inline(always)]
+        unsafe fn pow2i(self) -> Self {
+            let bias = vdupq_n_s32(127);
+            let b0 = vshlq_n_s32::<23>(vaddq_s32(vcvtq_s32_f32(self.0), bias));
+            let b1 = vshlq_n_s32::<23>(vaddq_s32(vcvtq_s32_f32(self.1), bias));
+            F32x8(vreinterpretq_f32_s32(b0), vreinterpretq_f32_s32(b1))
+        }
+        #[inline(always)]
+        unsafe fn to_array(self) -> [f32; 8] {
+            let mut out = [0.0f32; 8];
+            vst1q_f32(out.as_mut_ptr(), self.0);
+            vst1q_f32(out.as_mut_ptr().add(4), self.1);
+            out
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// generic kernel bodies (monomorphized inside the per-arch entry points)
+// ---------------------------------------------------------------------------
+
+/// Fixed lane-reduction tree plus scalar tail — the same association as
+/// the scalar layer's `dot_lanes`.
+#[cfg(any(target_arch = "x86_64", target_arch = "aarch64"))]
+#[inline(always)]
+unsafe fn reduce_add_tree<V: V8>(v: V, tail: f32) -> f32 {
+    let l = v.to_array();
+    (((l[0] + l[1]) + (l[2] + l[3])) + ((l[4] + l[5]) + (l[6] + l[7]))) + tail
+}
+
+/// out += a[m,k] @ b[k,n] — bitwise identical to the scalar ascending-k
+/// kernel: per element, one mul rounding + one add rounding per k term,
+/// k ascending, independent of register-tile membership.
+#[cfg(any(target_arch = "x86_64", target_arch = "aarch64"))]
+#[inline(always)]
+unsafe fn mm_accum_v<V: V8>(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, out: &mut [f32]) {
+    let n8 = n - n % 8;
+    let ap = a.as_ptr();
+    let bp = b.as_ptr();
+    let op = out.as_mut_ptr();
+    let mut i = 0;
+    // 4-row × 16-column tiles: eight independent add chains keep the FPU
+    // pipeline full while every chain stays in scalar accumulation order.
+    while i + 4 <= m {
+        let (r0, r1, r2, r3) = (i * n, (i + 1) * n, (i + 2) * n, (i + 3) * n);
+        let (s0, s1, s2, s3) = (i * k, (i + 1) * k, (i + 2) * k, (i + 3) * k);
+        let mut j = 0;
+        while j + 16 <= n8 {
+            let mut c00 = V::load(op.add(r0 + j));
+            let mut c01 = V::load(op.add(r0 + j + 8));
+            let mut c10 = V::load(op.add(r1 + j));
+            let mut c11 = V::load(op.add(r1 + j + 8));
+            let mut c20 = V::load(op.add(r2 + j));
+            let mut c21 = V::load(op.add(r2 + j + 8));
+            let mut c30 = V::load(op.add(r3 + j));
+            let mut c31 = V::load(op.add(r3 + j + 8));
+            for kk in 0..k {
+                let b0 = V::load(bp.add(kk * n + j));
+                let b1 = V::load(bp.add(kk * n + j + 8));
+                let a0 = V::splat(*ap.add(s0 + kk));
+                let a1 = V::splat(*ap.add(s1 + kk));
+                let a2 = V::splat(*ap.add(s2 + kk));
+                let a3 = V::splat(*ap.add(s3 + kk));
+                // mul-then-add, not FMA: the bitwise contract needs one
+                // rounding per operation, like the scalar loop
+                c00 = c00.add(a0.mul(b0));
+                c01 = c01.add(a0.mul(b1));
+                c10 = c10.add(a1.mul(b0));
+                c11 = c11.add(a1.mul(b1));
+                c20 = c20.add(a2.mul(b0));
+                c21 = c21.add(a2.mul(b1));
+                c30 = c30.add(a3.mul(b0));
+                c31 = c31.add(a3.mul(b1));
+            }
+            c00.store(op.add(r0 + j));
+            c01.store(op.add(r0 + j + 8));
+            c10.store(op.add(r1 + j));
+            c11.store(op.add(r1 + j + 8));
+            c20.store(op.add(r2 + j));
+            c21.store(op.add(r2 + j + 8));
+            c30.store(op.add(r3 + j));
+            c31.store(op.add(r3 + j + 8));
+            j += 16;
+        }
+        while j + 8 <= n8 {
+            let mut c0 = V::load(op.add(r0 + j));
+            let mut c1 = V::load(op.add(r1 + j));
+            let mut c2 = V::load(op.add(r2 + j));
+            let mut c3 = V::load(op.add(r3 + j));
+            for kk in 0..k {
+                let bv = V::load(bp.add(kk * n + j));
+                c0 = c0.add(V::splat(*ap.add(s0 + kk)).mul(bv));
+                c1 = c1.add(V::splat(*ap.add(s1 + kk)).mul(bv));
+                c2 = c2.add(V::splat(*ap.add(s2 + kk)).mul(bv));
+                c3 = c3.add(V::splat(*ap.add(s3 + kk)).mul(bv));
+            }
+            c0.store(op.add(r0 + j));
+            c1.store(op.add(r1 + j));
+            c2.store(op.add(r2 + j));
+            c3.store(op.add(r3 + j));
+            j += 8;
+        }
+        for r in i..i + 4 {
+            for jj in n8..n {
+                let mut o = *op.add(r * n + jj);
+                for kk in 0..k {
+                    o += *ap.add(r * k + kk) * *bp.add(kk * n + jj);
+                }
+                *op.add(r * n + jj) = o;
+            }
+        }
+        i += 4;
+    }
+    while i < m {
+        let mut j = 0;
+        while j + 8 <= n8 {
+            let mut c0 = V::load(op.add(i * n + j));
+            for kk in 0..k {
+                c0 = c0.add(V::splat(*ap.add(i * k + kk)).mul(V::load(bp.add(kk * n + j))));
+            }
+            c0.store(op.add(i * n + j));
+            j += 8;
+        }
+        for jj in n8..n {
+            let mut o = *op.add(i * n + jj);
+            for kk in 0..k {
+                o += *ap.add(i * k + kk) * *bp.add(kk * n + jj);
+            }
+            *op.add(i * n + jj) = o;
+        }
+        i += 1;
+    }
+}
+
+/// out += aᵀ @ b with a stored [k,m], b [k,n] — same bitwise ascending-k
+/// contract as `mm_accum_v` (only the `a` indexing differs).
+#[cfg(any(target_arch = "x86_64", target_arch = "aarch64"))]
+#[inline(always)]
+unsafe fn mm_at_accum_v<V: V8>(
+    a: &[f32],
+    b: &[f32],
+    k: usize,
+    m: usize,
+    n: usize,
+    out: &mut [f32],
+) {
+    let n8 = n - n % 8;
+    let ap = a.as_ptr();
+    let bp = b.as_ptr();
+    let op = out.as_mut_ptr();
+    let mut i = 0;
+    while i + 4 <= m {
+        let (r0, r1, r2, r3) = (i * n, (i + 1) * n, (i + 2) * n, (i + 3) * n);
+        let mut j = 0;
+        while j + 16 <= n8 {
+            let mut c00 = V::load(op.add(r0 + j));
+            let mut c01 = V::load(op.add(r0 + j + 8));
+            let mut c10 = V::load(op.add(r1 + j));
+            let mut c11 = V::load(op.add(r1 + j + 8));
+            let mut c20 = V::load(op.add(r2 + j));
+            let mut c21 = V::load(op.add(r2 + j + 8));
+            let mut c30 = V::load(op.add(r3 + j));
+            let mut c31 = V::load(op.add(r3 + j + 8));
+            for kk in 0..k {
+                let b0 = V::load(bp.add(kk * n + j));
+                let b1 = V::load(bp.add(kk * n + j + 8));
+                let a0 = V::splat(*ap.add(kk * m + i));
+                let a1 = V::splat(*ap.add(kk * m + i + 1));
+                let a2 = V::splat(*ap.add(kk * m + i + 2));
+                let a3 = V::splat(*ap.add(kk * m + i + 3));
+                c00 = c00.add(a0.mul(b0));
+                c01 = c01.add(a0.mul(b1));
+                c10 = c10.add(a1.mul(b0));
+                c11 = c11.add(a1.mul(b1));
+                c20 = c20.add(a2.mul(b0));
+                c21 = c21.add(a2.mul(b1));
+                c30 = c30.add(a3.mul(b0));
+                c31 = c31.add(a3.mul(b1));
+            }
+            c00.store(op.add(r0 + j));
+            c01.store(op.add(r0 + j + 8));
+            c10.store(op.add(r1 + j));
+            c11.store(op.add(r1 + j + 8));
+            c20.store(op.add(r2 + j));
+            c21.store(op.add(r2 + j + 8));
+            c30.store(op.add(r3 + j));
+            c31.store(op.add(r3 + j + 8));
+            j += 16;
+        }
+        while j + 8 <= n8 {
+            let mut c0 = V::load(op.add(r0 + j));
+            let mut c1 = V::load(op.add(r1 + j));
+            let mut c2 = V::load(op.add(r2 + j));
+            let mut c3 = V::load(op.add(r3 + j));
+            for kk in 0..k {
+                let bv = V::load(bp.add(kk * n + j));
+                c0 = c0.add(V::splat(*ap.add(kk * m + i)).mul(bv));
+                c1 = c1.add(V::splat(*ap.add(kk * m + i + 1)).mul(bv));
+                c2 = c2.add(V::splat(*ap.add(kk * m + i + 2)).mul(bv));
+                c3 = c3.add(V::splat(*ap.add(kk * m + i + 3)).mul(bv));
+            }
+            c0.store(op.add(r0 + j));
+            c1.store(op.add(r1 + j));
+            c2.store(op.add(r2 + j));
+            c3.store(op.add(r3 + j));
+            j += 8;
+        }
+        for r in i..i + 4 {
+            for jj in n8..n {
+                let mut o = *op.add(r * n + jj);
+                for kk in 0..k {
+                    o += *ap.add(kk * m + r) * *bp.add(kk * n + jj);
+                }
+                *op.add(r * n + jj) = o;
+            }
+        }
+        i += 4;
+    }
+    while i < m {
+        let mut j = 0;
+        while j + 8 <= n8 {
+            let mut c0 = V::load(op.add(i * n + j));
+            for kk in 0..k {
+                c0 = c0.add(V::splat(*ap.add(kk * m + i)).mul(V::load(bp.add(kk * n + j))));
+            }
+            c0.store(op.add(i * n + j));
+            j += 8;
+        }
+        for jj in n8..n {
+            let mut o = *op.add(i * n + jj);
+            for kk in 0..k {
+                o += *ap.add(kk * m + i) * *bp.add(kk * n + jj);
+            }
+            *op.add(i * n + jj) = o;
+        }
+        i += 1;
+    }
+}
+
+/// out += a @ bᵀ with b stored [n,k] — packed-panel FMA. Reassociated
+/// relative to the scalar `dot_lanes` kernel (allowed: NaN-mask +
+/// ulp-bounded contract), but *shape-independent*: every output element is
+/// one fused chain over ascending k, whether it lands in a vector lane or
+/// the scalar `f32::mul_add` remainder, so cached single-row decode
+/// (m = 1, n = position count) matches full boards bitwise.
+#[cfg(any(target_arch = "x86_64", target_arch = "aarch64"))]
+#[inline(always)]
+unsafe fn mm_bt_accum_v<V: V8>(
+    a: &[f32],
+    b: &[f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    out: &mut [f32],
+    pack: &mut AlignedVec,
+) {
+    let n8 = n - n % 8;
+    let ap = a.as_ptr();
+    let bp = b.as_ptr();
+    let op = out.as_mut_ptr();
+    if n8 > 0 {
+        // [k, 8] panel: pack once per eight-column tile, stream it for
+        // every row of a (contiguous, 32-byte aligned).
+        pack.resize_preserve(k * 8);
+        let pp = pack.as_mut_ptr();
+        let mut j = 0;
+        while j < n8 {
+            for kk in 0..k {
+                for l in 0..8 {
+                    *pp.add(kk * 8 + l) = *bp.add((j + l) * k + kk);
+                }
+            }
+            let mut i = 0;
+            while i + 4 <= m {
+                let mut c0 = V::load(op.add(i * n + j));
+                let mut c1 = V::load(op.add((i + 1) * n + j));
+                let mut c2 = V::load(op.add((i + 2) * n + j));
+                let mut c3 = V::load(op.add((i + 3) * n + j));
+                for kk in 0..k {
+                    let pv = V::load(pp.add(kk * 8));
+                    c0 = V::splat(*ap.add(i * k + kk)).fma(pv, c0);
+                    c1 = V::splat(*ap.add((i + 1) * k + kk)).fma(pv, c1);
+                    c2 = V::splat(*ap.add((i + 2) * k + kk)).fma(pv, c2);
+                    c3 = V::splat(*ap.add((i + 3) * k + kk)).fma(pv, c3);
+                }
+                c0.store(op.add(i * n + j));
+                c1.store(op.add((i + 1) * n + j));
+                c2.store(op.add((i + 2) * n + j));
+                c3.store(op.add((i + 3) * n + j));
+                i += 4;
+            }
+            while i < m {
+                let mut c0 = V::load(op.add(i * n + j));
+                for kk in 0..k {
+                    c0 = V::splat(*ap.add(i * k + kk)).fma(V::load(pp.add(kk * 8)), c0);
+                }
+                c0.store(op.add(i * n + j));
+                i += 1;
+            }
+            j += 8;
+        }
+    }
+    // Remainder columns: scalar fused chains — f32::mul_add is the same
+    // single-rounding op as the vector FMA lanes, so these elements are
+    // bitwise identical to what a wider tile would have produced.
+    for jj in n8..n {
+        for i in 0..m {
+            let mut o = *op.add(i * n + jj);
+            for kk in 0..k {
+                o = (*ap.add(i * k + kk)).mul_add(*bp.add(jj * k + kk), o);
+            }
+            *op.add(i * n + jj) = o;
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// transcendental row kernels (mirrored vector/scalar polynomial paths)
+// ---------------------------------------------------------------------------
+
+const EXP_HI: f32 = 88.0; // keeps 2^k in range (k ≤ 127)
+const EXP_LO: f32 = -87.0; // below: flush to exactly 0.0 (masked-tail invariant)
+const LOG2E: f32 = std::f32::consts::LOG2_E;
+const EXP_C1: f32 = 0.693359375; // ln2 high part (exact in f32)
+const EXP_C2: f32 = -2.12194440e-4; // ln2 low part
+const EXP_P0: f32 = 1.9875691500e-4;
+const EXP_P1: f32 = 1.3981999507e-3;
+const EXP_P2: f32 = 8.3334519073e-3;
+const EXP_P3: f32 = 4.1665795894e-2;
+const EXP_P4: f32 = 1.6666665459e-1;
+const EXP_P5: f32 = 5.0000001201e-1;
+
+/// Scalar mirror of the vector `exp_v` polynomial: identical operations in
+/// identical order (`f32::mul_add` is the same fused op as the FMA lanes),
+/// so a tail element's bits match what a vector lane would produce. Used
+/// for row tails and sub-eight rows; **not** `f32::exp`.
+///
+/// Domain notes: `x < -87` flushes to exactly `0.0` (this is what keeps
+/// `-inf`-masked softmax tails exactly zero); `x` is clamped to `88.0`
+/// above (softmax feeds only `x ≤ 0`); NaN propagates.
+#[inline(always)]
+fn exp_s(x0: f32) -> f32 {
+    if x0.is_nan() {
+        return x0;
+    }
+    if x0 < EXP_LO {
+        return 0.0;
+    }
+    // identical to the vector path's max-then-min (NaN already returned)
+    let x = x0.clamp(EXP_LO, EXP_HI);
+    let t = x.mul_add(LOG2E, 0.5);
+    let k = t.floor();
+    let xr = k.mul_add(-EXP_C1, x);
+    let xr = k.mul_add(-EXP_C2, xr);
+    let mut y = EXP_P0;
+    y = y.mul_add(xr, EXP_P1);
+    y = y.mul_add(xr, EXP_P2);
+    y = y.mul_add(xr, EXP_P3);
+    y = y.mul_add(xr, EXP_P4);
+    y = y.mul_add(xr, EXP_P5);
+    let z = xr * xr;
+    let y = y.mul_add(z, xr) + 1.0;
+    y * f32::from_bits((((k as i32) + 127) << 23) as u32)
+}
+
+/// Eight-lane exp; bitwise mirror of [`exp_s`] per lane.
+#[cfg(any(target_arch = "x86_64", target_arch = "aarch64"))]
+#[inline(always)]
+unsafe fn exp_v<V: V8>(x0: V) -> V {
+    let lo = V::splat(EXP_LO);
+    let x = x0.max(lo).min(V::splat(EXP_HI));
+    let t = x.fma(V::splat(LOG2E), V::splat(0.5));
+    let k = t.floor();
+    let xr = k.fma(V::splat(-EXP_C1), x);
+    let xr = k.fma(V::splat(-EXP_C2), xr);
+    let mut y = V::splat(EXP_P0);
+    y = y.fma(xr, V::splat(EXP_P1));
+    y = y.fma(xr, V::splat(EXP_P2));
+    y = y.fma(xr, V::splat(EXP_P3));
+    y = y.fma(xr, V::splat(EXP_P4));
+    y = y.fma(xr, V::splat(EXP_P5));
+    let z = xr.mul(xr);
+    let y = y.fma(z, xr).add(V::splat(1.0));
+    let r = y.mul(k.pow2i());
+    let r = x0.blend_lt(lo, V::splat(0.0), r);
+    x0.blend_nan(x0, r)
+}
+
+const GELU_C: f32 = 0.7978845608; // sqrt(2/π) — same constants as math::gelu
+const GELU_A: f32 = 0.044715;
+
+/// tanh(u) = 1 − 2/(exp(2u) + 1) through the mirrored exp; saturates
+/// exactly at ±1 (exp flushes to 0 / the quotient underflows) and
+/// propagates NaN.
+#[inline(always)]
+fn tanh_s(u: f32) -> f32 {
+    1.0 - 2.0 / (exp_s(u + u) + 1.0)
+}
+
+#[inline(always)]
+fn gelu_s(x: f32) -> f32 {
+    let x3 = (x * x) * x;
+    let inner = GELU_A.mul_add(x3, x);
+    let th = tanh_s(GELU_C * inner);
+    (x * 0.5) * (1.0 + th)
+}
+
+#[cfg(any(target_arch = "x86_64", target_arch = "aarch64"))]
+#[inline(always)]
+unsafe fn tanh_v<V: V8>(u: V) -> V {
+    let e = exp_v::<V>(u.add(u));
+    V::splat(1.0).sub(V::splat(2.0).div(e.add(V::splat(1.0))))
+}
+
+#[cfg(any(target_arch = "x86_64", target_arch = "aarch64"))]
+#[inline(always)]
+unsafe fn gelu_v<V: V8>(x: V) -> V {
+    let x3 = x.mul(x).mul(x);
+    let inner = V::splat(GELU_A).fma(x3, x);
+    let th = tanh_v::<V>(V::splat(GELU_C).mul(inner));
+    x.mul(V::splat(0.5)).mul(V::splat(1.0).add(th))
+}
+
+/// In-place row softmax. Decode-cache parity requirements: max is exact
+/// under any grouping; exp uses mirrored vector/scalar paths so an
+/// element's bits are independent of row length; the sum is a scalar
+/// ascending pass so trailing exact-zero masked entries are additive
+/// identities; the final scale is one rounding per element.
+#[cfg(any(target_arch = "x86_64", target_arch = "aarch64"))]
+#[inline(always)]
+unsafe fn softmax_row_v<V: V8>(row: &mut [f32]) {
+    let n = row.len();
+    let n8 = n - n % 8;
+    let mut max = f32::NEG_INFINITY;
+    if n8 > 0 {
+        let p = row.as_ptr();
+        let mut vm = V::load(p);
+        let mut q = 8;
+        while q < n8 {
+            vm = vm.max(V::load(p.add(q)));
+            q += 8;
+        }
+        for l in vm.to_array() {
+            max = max.max(l);
+        }
+    }
+    for &v in &row[n8..] {
+        max = max.max(v);
+    }
+    {
+        let p = row.as_mut_ptr();
+        let vmax = V::splat(max);
+        let mut q = 0;
+        while q < n8 {
+            exp_v::<V>(V::load(p.add(q)).sub(vmax)).store(p.add(q));
+            q += 8;
+        }
+    }
+    for v in &mut row[n8..] {
+        *v = exp_s(*v - max);
+    }
+    let mut sum = 0.0f32;
+    for &v in row.iter() {
+        sum += v;
+    }
+    let inv = 1.0 / sum;
+    {
+        let p = row.as_mut_ptr();
+        let vinv = V::splat(inv);
+        let mut q = 0;
+        while q < n8 {
+            V::load(p.add(q)).mul(vinv).store(p.add(q));
+            q += 8;
+        }
+    }
+    for v in &mut row[n8..] {
+        *v *= inv;
+    }
+}
+
+/// One LayerNorm row: lane-parallel mean/variance reductions (fixed tree +
+/// scalar tail, like `dot_lanes`) and a fused normalize pass. Rows always
+/// span the full model width in every path, so the lane/tail split is the
+/// same for a given `d` everywhere — cached decode included. Returns
+/// `(mu, inv_sigma)` so the stats-capturing caller shares these exact bits.
+#[cfg(any(target_arch = "x86_64", target_arch = "aarch64"))]
+#[inline(always)]
+unsafe fn ln_row_v<V: V8>(
+    xr: &[f32],
+    g: &[f32],
+    b: &[f32],
+    eps: f32,
+    or: &mut [f32],
+) -> (f32, f32) {
+    let d = xr.len();
+    let d8 = d - d % 8;
+    let xp = xr.as_ptr();
+    let mut vs = V::splat(0.0);
+    let mut q = 0;
+    while q < d8 {
+        vs = vs.add(V::load(xp.add(q)));
+        q += 8;
+    }
+    let mut tail = 0.0f32;
+    for &v in &xr[d8..] {
+        tail += v;
+    }
+    let mu = reduce_add_tree(vs, tail) / d as f32;
+    let vmu = V::splat(mu);
+    let mut vv = V::splat(0.0);
+    q = 0;
+    while q < d8 {
+        let dv = V::load(xp.add(q)).sub(vmu);
+        vv = dv.fma(dv, vv);
+        q += 8;
+    }
+    let mut vtail = 0.0f32;
+    for &v in &xr[d8..] {
+        let dv = v - mu;
+        vtail = dv.mul_add(dv, vtail);
+    }
+    let var = reduce_add_tree(vv, vtail) / d as f32;
+    let inv = 1.0 / (var + eps).sqrt();
+    let vinv = V::splat(inv);
+    let gp = g.as_ptr();
+    let bp = b.as_ptr();
+    let op = or.as_mut_ptr();
+    q = 0;
+    while q < d8 {
+        let t = V::load(xp.add(q)).sub(vmu).mul(vinv);
+        t.fma(V::load(gp.add(q)), V::load(bp.add(q))).store(op.add(q));
+        q += 8;
+    }
+    for i in d8..d {
+        or[i] = ((xr[i] - mu) * inv).mul_add(g[i], b[i]);
+    }
+    (mu, inv)
+}
+
+/// In-place row GELU: vector body + mirrored scalar tail. Callers apply it
+/// per logical row (not to the flat buffer) so chunk boundaries — and thus
+/// element bits — are independent of the row count.
+#[cfg(any(target_arch = "x86_64", target_arch = "aarch64"))]
+#[inline(always)]
+unsafe fn gelu_row_v<V: V8>(row: &mut [f32]) {
+    let n8 = row.len() - row.len() % 8;
+    {
+        let p = row.as_mut_ptr();
+        let mut q = 0;
+        while q < n8 {
+            gelu_v::<V>(V::load(p.add(q))).store(p.add(q));
+            q += 8;
+        }
+    }
+    for v in &mut row[n8..] {
+        *v = gelu_s(*v);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// per-arch entry points (#[target_feature] wrappers so everything inlines)
+// ---------------------------------------------------------------------------
+
+#[cfg(any(target_arch = "x86_64", target_arch = "aarch64"))]
+mod entry {
+    use super::lanes::F32x8;
+    use super::*;
+
+    /// Generates the monomorphic `#[target_feature]` entry point for one
+    /// generic kernel: the feature attribute lets LLVM inline the whole
+    /// `#[inline(always)]` call tree (kernel body + intrinsic wrappers)
+    /// into a single vectorized function per architecture.
+    macro_rules! simd_entry {
+        ($(fn $name:ident / $generic:ident
+            ($($arg:ident: $ty:ty),*) $(-> $ret:ty)?;)*) => {
+            $(
+                #[cfg_attr(target_arch = "x86_64", target_feature(enable = "avx2,fma"))]
+                #[cfg_attr(target_arch = "aarch64", target_feature(enable = "neon"))]
+                pub(super) unsafe fn $name($($arg: $ty),*) $(-> $ret)? {
+                    $generic::<F32x8>($($arg),*)
+                }
+            )*
+        };
+    }
+
+    simd_entry! {
+        fn mm_accum / mm_accum_v
+            (a: &[f32], b: &[f32], m: usize, k: usize, n: usize, out: &mut [f32]);
+        fn mm_at_accum / mm_at_accum_v
+            (a: &[f32], b: &[f32], k: usize, m: usize, n: usize, out: &mut [f32]);
+        fn mm_bt_accum / mm_bt_accum_v
+            (
+                a: &[f32],
+                b: &[f32],
+                m: usize,
+                k: usize,
+                n: usize,
+                out: &mut [f32],
+                pack: &mut AlignedVec
+            );
+        fn softmax_row / softmax_row_v (row: &mut [f32]);
+        fn ln_row / ln_row_v
+            (xr: &[f32], g: &[f32], b: &[f32], eps: f32, or: &mut [f32]) -> (f32, f32);
+        fn gelu_row / gelu_row_v (row: &mut [f32]);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// crate-facing dispatched kernels (callers check `simd_active()` first)
+// ---------------------------------------------------------------------------
+
+#[cfg(any(target_arch = "x86_64", target_arch = "aarch64"))]
+thread_local! {
+    /// Per-thread mm_bt packing panel (each MGRIT relaxation worker packs
+    /// independently). Grows to the largest `k * 8` seen, then stays put —
+    /// zero allocations at steady state.
+    static PACK: RefCell<AlignedVec> = const { RefCell::new(AlignedVec::new()) };
+}
+
+/// out += a[m,k] @ b[k,n]. Caller guarantees `simd_active()`.
+pub(crate) fn mm_accum(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, out: &mut [f32]) {
+    #[cfg(any(target_arch = "x86_64", target_arch = "aarch64"))]
+    unsafe {
+        entry::mm_accum(a, b, m, k, n, out)
+    }
+    #[cfg(not(any(target_arch = "x86_64", target_arch = "aarch64")))]
+    {
+        let _ = (a, b, m, k, n, out);
+        unreachable!("simd_active() is false on this architecture")
+    }
+}
+
+/// out += aᵀ @ b (a stored [k,m]). Caller guarantees `simd_active()`.
+pub(crate) fn mm_at_accum(a: &[f32], b: &[f32], k: usize, m: usize, n: usize, out: &mut [f32]) {
+    #[cfg(any(target_arch = "x86_64", target_arch = "aarch64"))]
+    unsafe {
+        entry::mm_at_accum(a, b, k, m, n, out)
+    }
+    #[cfg(not(any(target_arch = "x86_64", target_arch = "aarch64")))]
+    {
+        let _ = (a, b, k, m, n, out);
+        unreachable!("simd_active() is false on this architecture")
+    }
+}
+
+/// out += a @ bᵀ (b stored [n,k]). Caller guarantees `simd_active()`.
+pub(crate) fn mm_bt_accum(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, out: &mut [f32]) {
+    #[cfg(any(target_arch = "x86_64", target_arch = "aarch64"))]
+    PACK.with(|p| unsafe { entry::mm_bt_accum(a, b, m, k, n, out, &mut p.borrow_mut()) });
+    #[cfg(not(any(target_arch = "x86_64", target_arch = "aarch64")))]
+    {
+        let _ = (a, b, m, k, n, out);
+        unreachable!("simd_active() is false on this architecture")
+    }
+}
+
+/// In-place softmax over one row. Caller guarantees `simd_active()`.
+pub(crate) fn softmax_row(row: &mut [f32]) {
+    #[cfg(any(target_arch = "x86_64", target_arch = "aarch64"))]
+    unsafe {
+        entry::softmax_row(row)
+    }
+    #[cfg(not(any(target_arch = "x86_64", target_arch = "aarch64")))]
+    {
+        let _ = row;
+        unreachable!("simd_active() is false on this architecture")
+    }
+}
+
+/// One LayerNorm row; returns `(mu, inv_sigma)`. Caller guarantees
+/// `simd_active()`.
+pub(crate) fn ln_row(xr: &[f32], g: &[f32], b: &[f32], eps: f32, or: &mut [f32]) -> (f32, f32) {
+    #[cfg(any(target_arch = "x86_64", target_arch = "aarch64"))]
+    unsafe {
+        entry::ln_row(xr, g, b, eps, or)
+    }
+    #[cfg(not(any(target_arch = "x86_64", target_arch = "aarch64")))]
+    {
+        let _ = (xr, g, b, eps, or);
+        unreachable!("simd_active() is false on this architecture")
+    }
+}
+
+/// In-place GELU over one row. Caller guarantees `simd_active()`.
+pub(crate) fn gelu_row(row: &mut [f32]) {
+    #[cfg(any(target_arch = "x86_64", target_arch = "aarch64"))]
+    unsafe {
+        entry::gelu_row(row)
+    }
+    #[cfg(not(any(target_arch = "x86_64", target_arch = "aarch64")))]
+    {
+        let _ = row;
+        unreachable!("simd_active() is false on this architecture")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// exp_s is a polynomial mirror, not libm exp — pin it to libm within
+    /// a few ulp across the softmax-relevant domain, plus the flush/NaN
+    /// special cases the decode-parity invariants depend on.
+    #[test]
+    fn exp_s_tracks_libm_and_flushes_masked_tails() {
+        assert_eq!(exp_s(f32::NEG_INFINITY), 0.0);
+        assert_eq!(exp_s(-1000.0), 0.0);
+        assert_eq!(exp_s(0.0), 1.0);
+        assert!(exp_s(f32::NAN).is_nan());
+        let mut x = -87.0f32;
+        while x <= 1.0 {
+            let got = exp_s(x);
+            let want = x.exp();
+            let tol = 4.0 * (want * f32::EPSILON).abs() + f32::MIN_POSITIVE;
+            assert!((got - want).abs() <= tol, "exp_s({x}) = {got}, libm {want}");
+            x += 0.317;
+        }
+    }
+
+    #[test]
+    fn gelu_s_tracks_scalar_gelu() {
+        // same tanh-approximate GELU, different tanh evaluation: agree to
+        // ~1e-6 absolute over the activation range and at saturation
+        let scalar = |x: f32| 0.5 * x * (1.0 + (GELU_C * (x + GELU_A * x * x * x)).tanh());
+        let mut x = -8.0f32;
+        while x <= 8.0 {
+            let (got, want) = (gelu_s(x), scalar(x));
+            assert!(
+                (got - want).abs() <= 2e-6 * (1.0 + want.abs()),
+                "gelu_s({x}) = {got}, scalar {want}"
+            );
+            x += 0.173;
+        }
+        assert_eq!(gelu_s(100.0), 100.0);
+        assert_eq!(gelu_s(-100.0), -0.0);
+        assert!(gelu_s(f32::NAN).is_nan());
+    }
+
+    /// On hosts where the vector path runs, every lane of the vector
+    /// kernels must mirror the scalar helpers bitwise — this is what makes
+    /// tail elements independent of row length.
+    #[test]
+    #[cfg(any(target_arch = "x86_64", target_arch = "aarch64"))]
+    fn vector_lanes_mirror_scalar_helpers_bitwise() {
+        if !simd_active() {
+            return; // non-AVX2 x86 host: nothing to compare
+        }
+        let inputs: Vec<f32> = vec![
+            -87.5, -87.0, -10.0, -1.0, -0.5, -0.0, 0.0, 0.25, 1.0, 3.5, 7.75, 87.9, 88.0, 100.0,
+            f32::NEG_INFINITY, f32::NAN,
+        ];
+        for chunk in inputs.chunks(8) {
+            let mut buf = [0.0f32; 8];
+            buf[..chunk.len()].copy_from_slice(chunk);
+            let mut got = [0.0f32; 8];
+            unsafe {
+                let v = exp_v::<lanes::F32x8>(V8::load(buf.as_ptr()));
+                v.store(got.as_mut_ptr());
+            }
+            for (i, &x) in buf.iter().enumerate() {
+                let want = exp_s(x);
+                assert_eq!(
+                    got[i].to_bits(),
+                    want.to_bits(),
+                    "exp lane {i} for input {x}: vector {} vs scalar {want}",
+                    got[i]
+                );
+            }
+            let mut gelu_got = buf;
+            unsafe {
+                let v = gelu_v::<lanes::F32x8>(V8::load(buf.as_ptr()));
+                v.store(gelu_got.as_mut_ptr());
+            }
+            for (i, &x) in buf.iter().enumerate() {
+                let want = gelu_s(x);
+                assert_eq!(gelu_got[i].to_bits(), want.to_bits(), "gelu lane {i} for input {x}");
+            }
+        }
+    }
+
+    // NOTE: no unit test toggles `set_force_scalar` — unit tests run on
+    // parallel threads in this binary, and block.rs pins bitwise equality
+    // between pairs of dispatched calls (a toggle landing between the two
+    // would flip the reassociated kernels' bits). The round-trip behavior
+    // is covered by tests/simd_parity.rs, where every test serializes on
+    // one dispatch mutex.
+}

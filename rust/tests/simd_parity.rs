@@ -1,0 +1,341 @@
+//! SIMD-vs-scalar kernel parity suite (the `--features simd` contract).
+//!
+//! Pins the two numerical contract classes of the dispatched kernel layer
+//! (see `tensor/ops.rs` and `tensor/simd.rs`):
+//!
+//! * **Bitwise** — `mm_into` / `mm_at_into` must equal the always-scalar
+//!   kernels bit for bit on every shape (the SIMD lanes use separate
+//!   mul/add roundings in ascending-k order, never FMA);
+//! * **Reassociated** — `mm_bt_into`, row softmax, LayerNorm, and GELU may
+//!   regroup/fuse, pinned by NaN-mask + bounded-ulp parity against the
+//!   scalar kernels, plus the *shape-independence* invariants incremental
+//!   decode rests on: an element's bits depend only on its own
+//!   row/contraction inputs, never on the row count or column count.
+//!
+//! Shapes are deliberately ragged (odd m/k/n, sub-lane rows, the cached
+//! m = 1 single-position decode shapes). Every test also passes without
+//! the feature (or on non-AVX2 hosts): the dispatched kernels *are* the
+//! scalar kernels there, so the comparisons hold trivially.
+//!
+//! Tests that flip the process-wide `set_force_scalar` switch — and the
+//! kernel comparisons that depend on it staying off — serialize on one
+//! mutex, because the test harness runs tests on parallel threads.
+
+use std::sync::Mutex;
+
+use layertime::config::{presets, Arch, MgritConfig};
+use layertime::coordinator::{Mgrit, Session, Task};
+use layertime::infer::{DecodeOptions, InferSession};
+use layertime::model::{Init, ParamStore};
+use layertime::reference::{gelu, gelu_row, layer_norm_fwd_into};
+use layertime::tensor::{
+    mm_at_into, mm_at_into_scalar, mm_bt_into, mm_bt_into_scalar, mm_into, mm_into_scalar,
+    set_force_scalar, softmax_row, softmax_row_scalar,
+};
+use layertime::util::proptest::forall;
+
+/// Serializes every test in this binary: `set_force_scalar` is process
+/// state, and the dispatched-vs-scalar comparisons assume it is off.
+static DISPATCH_LOCK: Mutex<()> = Mutex::new(());
+
+fn lock() -> std::sync::MutexGuard<'static, ()> {
+    DISPATCH_LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Bit patterns of a float slice — "bitwise equal" means equal here, which
+/// is stricter than `==` on f32 (it distinguishes -0.0 from +0.0 and does
+/// not equate NaNs away).
+fn bits(xs: &[f32]) -> Vec<u32> {
+    xs.iter().map(|x| x.to_bits()).collect()
+}
+
+/// Ragged shape sampler: sub-lane sizes, lane multiples, odd remainders,
+/// and the cached-decode m = 1 row shape all get coverage.
+fn ragged(rng: &mut layertime::util::rng::Rng) -> (usize, usize, usize) {
+    let pick = |rng: &mut layertime::util::rng::Rng| match rng.range(4) {
+        0 => 1 + rng.range(7),        // below one lane
+        1 => 8 * (1 + rng.range(3)),  // exact lanes
+        2 => 9 + rng.range(25),       // lanes + remainder
+        _ => 1,                       // single row/column (decode shape)
+    };
+    (pick(rng), pick(rng), pick(rng))
+}
+
+/// The kill switch round-trips, and forcing scalar makes the dispatched
+/// kernels literally the scalar kernels (pinned on mm_bt, the kernel whose
+/// two paths round differently, so the comparison is meaningful).
+#[test]
+fn force_scalar_round_trips_and_forces_the_scalar_kernels() {
+    let _g = lock();
+    let mut rng = layertime::util::rng::Rng::new(1);
+    let (m, k, n) = (5, 19, 13);
+    let a = rng.normal_vec(m * k, 1.0);
+    let bt = rng.normal_vec(n * k, 1.0);
+    let mut want = vec![0.0; m * n];
+    mm_bt_into_scalar(&a, &bt, m, k, n, &mut want, false);
+
+    set_force_scalar(true);
+    assert!(!layertime::tensor::simd_active(), "force_scalar must disable dispatch");
+    let mut got = vec![0.0; m * n];
+    mm_bt_into(&a, &bt, m, k, n, &mut got, false);
+    set_force_scalar(false);
+    assert_eq!(bits(&got), bits(&want), "forced-scalar dispatch must be the scalar kernel");
+}
+
+#[test]
+fn mm_and_mm_at_are_bitwise_identical_to_scalar() {
+    let _g = lock();
+    forall("simd-mm-bitwise", 60, |rng| {
+        let (m, k, n) = ragged(rng);
+        let a = rng.normal_vec(m * k, 1.0);
+        let b = rng.normal_vec(k * n, 1.0);
+        // accumulate on top of a shared non-zero base: acc = true is the
+        // hot-path mode and must stay bitwise too
+        let base = rng.normal_vec(m * n, 0.5);
+
+        let mut got = base.clone();
+        let mut want = base.clone();
+        mm_into(&a, &b, m, k, n, &mut got, true);
+        mm_into_scalar(&a, &b, m, k, n, &mut want, true);
+        assert_eq!(bits(&got), bits(&want), "mm_into m={} k={} n={}", m, k, n);
+
+        let mut at = vec![0.0; k * m];
+        for i in 0..m {
+            for j in 0..k {
+                at[j * m + i] = a[i * k + j];
+            }
+        }
+        let mut got = base.clone();
+        let mut want = base;
+        mm_at_into(&at, &b, k, m, n, &mut got, true);
+        mm_at_into_scalar(&at, &b, k, m, n, &mut want, true);
+        assert_eq!(bits(&got), bits(&want), "mm_at_into m={} k={} n={}", m, k, n);
+    });
+}
+
+#[test]
+fn mm_bt_matches_scalar_within_ulp_and_nan_mask() {
+    let _g = lock();
+    forall("simd-mm-bt-ulp", 60, |rng| {
+        let (m, k, n) = ragged(rng);
+        let mut a = rng.normal_vec(m * k, 1.0);
+        let mut bt = rng.normal_vec(n * k, 1.0);
+        if rng.range(3) == 0 {
+            // NaN/inf mask parity on a sprinkle of specials
+            a[rng.range(m * k)] = f32::NAN;
+            bt[rng.range(n * k)] = f32::INFINITY;
+        }
+        let mut got = vec![0.0; m * n];
+        let mut want = vec![0.0; m * n];
+        mm_bt_into(&a, &bt, m, k, n, &mut got, false);
+        mm_bt_into_scalar(&a, &bt, m, k, n, &mut want, false);
+        for (i, (x, y)) in got.iter().zip(&want).enumerate() {
+            assert_eq!(x.is_nan(), y.is_nan(), "mm_bt NaN mask at {} ({}x{}x{})", i, m, k, n);
+            if !y.is_nan() {
+                assert!(
+                    (x - y).abs() <= 1e-4 + 1e-4 * y.abs() || (x.is_infinite() && x == *y),
+                    "mm_bt[{i}] = {x} vs scalar {y} (m={m} k={k} n={n})"
+                );
+            }
+        }
+    });
+}
+
+/// The decode-cache invariant for attention scores: an element's bits
+/// depend only on its own (query row, key row) contraction — so a cached
+/// m = 1 step over a column prefix reproduces the full board bit for bit
+/// *within the same build* (scalar or SIMD).
+#[test]
+fn mm_bt_element_bits_are_independent_of_board_shape() {
+    let _g = lock();
+    forall("simd-mm-bt-shape-independence", 40, |rng| {
+        let (m, k, n) = ragged(rng);
+        let a = rng.normal_vec(m * k, 1.0);
+        let bt = rng.normal_vec(n * k, 1.0);
+        let mut full = vec![0.0; m * n];
+        mm_bt_into(&a, &bt, m, k, n, &mut full, false);
+
+        // single query row (the cached decode shape: m = 1)
+        let qi = rng.range(m);
+        let mut row = vec![0.0; n];
+        mm_bt_into(&a[qi * k..(qi + 1) * k], &bt, 1, k, n, &mut row, false);
+        assert_eq!(bits(&row), bits(&full[qi * n..(qi + 1) * n]), "m = 1 row {} diverged", qi);
+
+        // column prefix (the causal set grows one key at a time)
+        let nn = 1 + rng.range(n);
+        let mut prefix = vec![0.0; m * nn];
+        mm_bt_into(&a, &bt[..nn * k], m, k, nn, &mut prefix, false);
+        for i in 0..m {
+            assert_eq!(
+                bits(&prefix[i * nn..(i + 1) * nn]),
+                bits(&full[i * n..i * n + nn]),
+                "column prefix {} diverged on row {}",
+                nn,
+                i
+            );
+        }
+    });
+}
+
+/// Masked-softmax invariants: a row with an exact `-inf` tail produces
+/// exactly-zero tail weights and leaves the live prefix bitwise identical
+/// to softmax over the prefix alone — per build, the property that makes
+/// cached rows (length len) match full causal rows (length sk).
+#[test]
+fn softmax_masked_tail_is_exactly_zero_and_prefix_bitwise() {
+    let _g = lock();
+    forall("simd-softmax-masked-tail", 60, |rng| {
+        let n = 1 + rng.range(40);
+        let tail = rng.range(24);
+        let logits = rng.normal_vec(n, 3.0);
+
+        let mut prefix = logits.clone();
+        softmax_row(&mut prefix);
+
+        let mut padded = logits;
+        padded.resize(n + tail, f32::NEG_INFINITY);
+        softmax_row(&mut padded);
+
+        let msg = format!("live prefix diverged (n={} tail={})", n, tail);
+        assert_eq!(bits(&padded[..n]), bits(&prefix), "{}", msg);
+        for (j, &w) in padded[n..].iter().enumerate() {
+            assert_eq!(w.to_bits(), 0.0f32.to_bits(), "masked weight {} not exactly +0.0", n + j);
+        }
+    });
+}
+
+#[test]
+fn softmax_matches_scalar_within_ulp() {
+    let _g = lock();
+    forall("simd-softmax-ulp", 60, |rng| {
+        let n = 1 + rng.range(40);
+        let logits = rng.normal_vec(n, 4.0);
+        let mut got = logits.clone();
+        let mut want = logits;
+        softmax_row(&mut got);
+        softmax_row_scalar(&mut want);
+        let mut gsum = 0.0f64;
+        for (x, y) in got.iter().zip(&want) {
+            // weights live in [0, 1]; the polynomial exp is a few-ulp
+            // approximation of libm's
+            assert!((x - y).abs() <= 1e-5, "softmax weight {x} vs scalar {y} (n={n})");
+            gsum += *x as f64;
+        }
+        assert!((gsum - 1.0).abs() < 1e-4, "softmax row must normalize, got {gsum}");
+    });
+}
+
+/// LayerNorm + GELU: the dispatched rows must track the force-scalar rows
+/// within ulp bounds, and (for LN) row results must not depend on how many
+/// rows share one call — the cached single-row path uses the same kernel.
+#[test]
+fn layer_norm_and_gelu_match_scalar_within_ulp() {
+    let _g = lock();
+    forall("simd-ln-gelu-ulp", 40, |rng| {
+        let d = 1 + rng.range(48);
+        let rows = 1 + rng.range(4);
+        let x = rng.normal_vec(rows * d, 1.5);
+        let g: Vec<f32> = (0..d).map(|_| 1.0 + 0.3 * rng.normal()).collect();
+        let b = rng.normal_vec(d, 0.3);
+
+        let mut got = vec![0.0; rows * d];
+        layer_norm_fwd_into(&x, &g, &b, d, &mut got);
+
+        // single-row calls must reproduce the multi-row call bitwise
+        for r in 0..rows {
+            let mut one = vec![0.0; d];
+            layer_norm_fwd_into(&x[r * d..(r + 1) * d], &g, &b, d, &mut one);
+            assert_eq!(bits(&one), bits(&got[r * d..(r + 1) * d]), "LN row {} shape-dependent", r);
+        }
+
+        set_force_scalar(true);
+        let mut want = vec![0.0; rows * d];
+        layer_norm_fwd_into(&x, &g, &b, d, &mut want);
+        set_force_scalar(false);
+        for (i, (xv, yv)) in got.iter().zip(&want).enumerate() {
+            assert!(
+                (xv - yv).abs() <= 1e-4 + 1e-4 * yv.abs(),
+                "LN[{i}] = {xv} vs scalar {yv} (d={d})"
+            );
+        }
+
+        let mut row = rng.normal_vec(d, 2.0);
+        let want_gelu: Vec<f32> = row.iter().map(|&v| gelu(v)).collect();
+        gelu_row(&mut row);
+        for (i, (xv, yv)) in row.iter().zip(&want_gelu).enumerate() {
+            assert!(
+                (xv - yv).abs() <= 1e-5 * (1.0 + yv.abs()),
+                "gelu[{i}] = {xv} vs scalar {yv} (d={d})"
+            );
+        }
+    });
+}
+
+/// End-to-end rerun under whatever kernels this build dispatches to: a
+/// short `train_step` run stays finite, and cached decode stays bitwise
+/// identical to the full-forward loop (the `decode_cache.rs` contract,
+/// re-pinned here so `--features simd` CI exercises it with the SIMD
+/// kernels dispatched).
+#[test]
+fn train_step_and_cached_decode_run_under_dispatched_kernels() {
+    let _g = lock();
+
+    let mut rc = presets::by_name("mc").expect("mc preset");
+    rc.model.vocab = 16;
+    rc.model.d_model = 16;
+    rc.model.n_heads = 2;
+    rc.model.d_ff = 32;
+    rc.model.seq = 8;
+    rc.model.batch = 2;
+    rc.model.n_classes = 4;
+    rc.model.n_enc_layers = 4;
+    rc.model.buffer_open = 0;
+    rc.model.buffer_close = 0;
+    rc.mgrit = MgritConfig { cf: 2, levels: 2, fwd_iters: Some(1), bwd_iters: Some(1), fcf: true };
+    rc.train.probe_every = 0;
+    rc.train.adaptive = false;
+    rc.train.warmup = 0;
+    let mut s = Session::builder()
+        .config(rc)
+        .task(Task::Tag)
+        .backend(Box::new(Mgrit))
+        .build()
+        .expect("session");
+    for _ in 0..3 {
+        let rec = s.train_step();
+        assert!(rec.loss.is_finite(), "train_step loss diverged: {}", rec.loss);
+    }
+
+    let mut rc = presets::by_name("gpt").expect("gpt preset");
+    presets::shrink_for_bench(&mut rc);
+    rc.model.vocab = 16;
+    rc.model.d_model = 16;
+    rc.model.n_heads = 2;
+    rc.model.d_ff = 32;
+    rc.model.seq = 8;
+    rc.model.batch = 2;
+    rc.model.n_classes = 4;
+    rc.model.n_dec_layers = 6;
+    rc.model.buffer_open = 1;
+    rc.model.buffer_close = 1;
+    rc.mgrit = MgritConfig { cf: 2, levels: 2, fwd_iters: Some(1), bwd_iters: Some(1), fcf: true };
+    let params = ParamStore::init(&rc.model, Init::Default, 5);
+    assert_eq!(rc.model.arch, Arch::Decoder);
+    let mut inf = InferSession::from_parts(rc, params, Box::new(Mgrit)).expect("infer session");
+    inf.set_fwd_iters(None); // serial reference mode, like decode_cache.rs
+    let plen = inf.rc.model.seq / 2;
+    let prompts: Vec<i32> = (0..inf.rc.model.batch * plen).map(|i| (i % 7) as i32).collect();
+    for opts in [
+        DecodeOptions::default(),
+        DecodeOptions { top_k: 4, temperature: 0.8, seed: 9, max_new: 0 },
+    ] {
+        let cached = inf.generate(&prompts, plen, &opts).unwrap();
+        inf.set_incremental(false);
+        let full = inf.generate(&prompts, plen, &opts).unwrap();
+        inf.set_incremental(true);
+        assert_eq!(
+            cached, full,
+            "cached decode diverged from the full-forward loop under the dispatched kernels"
+        );
+    }
+}
