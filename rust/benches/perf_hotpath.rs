@@ -503,6 +503,7 @@ fn main() -> anyhow::Result<()> {
                         top_k: 8,
                         temperature: 0.9,
                         seed: next_id,
+                        deadline_ms: 0,
                     }
                 })
                 .collect()

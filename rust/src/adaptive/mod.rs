@@ -24,6 +24,11 @@ pub enum AdaptiveDecision {
     IncreaseIters,
     /// ρ ≥ 1 (or iteration budget exhausted): switch to serial training.
     SwitchSerial,
+    /// The divergence watchdog restored the last good autosave instead of
+    /// switching serial (see `coordinator::Session`'s rollback policy);
+    /// MGRIT inexactness is kept and the run replays from the restored
+    /// step. Recorded by [`AdaptiveController::record_rollback`].
+    Rollback,
 }
 
 impl AdaptiveDecision {
@@ -32,6 +37,7 @@ impl AdaptiveDecision {
             AdaptiveDecision::Keep => "keep",
             AdaptiveDecision::IncreaseIters => "increase_iters",
             AdaptiveDecision::SwitchSerial => "switch_serial",
+            AdaptiveDecision::Rollback => "rollback",
         }
     }
 }
@@ -206,6 +212,33 @@ impl AdaptiveController {
         decision
     }
 
+    /// Undo the batch-counter advance of one [`should_probe`] call. The
+    /// non-finite-step guard rewinds the RNG and replays a batch; without
+    /// this the replay would double-count the batch and shift the probe
+    /// cadence relative to a clean run. (If the anomalous batch was a
+    /// probe batch, its history record has already been appended and is
+    /// *not* popped — the replayed probe appends its own record, so an
+    /// anomaly on a probe step may leave a duplicate entry. Documented
+    /// behaviour: anomalies are rare and history is diagnostic.)
+    ///
+    /// [`should_probe`]: AdaptiveController::should_probe
+    pub fn rewind_batch(&mut self) {
+        self.step = self.step.saturating_sub(1);
+    }
+
+    /// Record an auto-rollback in the probe history (the Fig. 5 indicator
+    /// stream then shows *why* the loss curve jumps backwards). Does not
+    /// switch serial and does not touch the MGRIT config — the whole point
+    /// of rollback is to keep layer-parallel training running.
+    pub fn record_rollback(&mut self) {
+        self.push_history(ProbeRecord {
+            step: self.step,
+            rho_fwd: None,
+            rho_bwd: None,
+            decision: AdaptiveDecision::Rollback,
+        });
+    }
+
     /// Manual override: force serial from the next batch (used when an
     /// external signal — e.g. loss divergence — fires first).
     pub fn force_serial(&mut self, cfg: &mut MgritConfig) {
@@ -277,6 +310,31 @@ mod tests {
         assert_eq!(c.probe_iters(&m), (Some(2), Some(2)));
         let m2 = MgritConfig { fwd_iters: None, ..m };
         assert_eq!(c.probe_iters(&m2), (None, Some(2)));
+    }
+
+    #[test]
+    fn rewind_batch_undoes_one_probe_advance() {
+        let mut c = AdaptiveController::new(3);
+        assert!(!c.should_probe()); // step 1
+        assert!(!c.should_probe()); // step 2
+        c.rewind_batch(); // replayed batch: back to step 1
+        assert!(!c.should_probe()); // step 2 again
+        assert!(c.should_probe(), "cadence must be unshifted after a replay");
+        let mut z = AdaptiveController::new(3);
+        z.rewind_batch();
+        assert_eq!(z.batch_step(), 0, "rewind at step 0 saturates");
+    }
+
+    #[test]
+    fn rollback_is_recorded_without_switching_serial() {
+        let mut c = AdaptiveController::new(1);
+        let mut m = cfg();
+        c.record_rollback();
+        assert!(!c.is_serial(), "rollback must keep layer-parallel training");
+        assert_eq!(m.fwd_iters, Some(1), "rollback must not touch the MGRIT config");
+        assert_eq!(c.history().len(), 1);
+        assert_eq!(c.history()[0].decision, AdaptiveDecision::Rollback);
+        assert_eq!(c.history()[0].decision.as_str(), "rollback");
     }
 
     #[test]

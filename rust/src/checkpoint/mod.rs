@@ -26,7 +26,8 @@
 //!              u64 max_iters, u64 batch step, u8 switched,
 //!              u64 history_cap, u32 n records
 //!              per record: u64 step, (u8+f64) ρ_fwd, (u8+f64) ρ_bwd,
-//!                          u8 decision (0 keep / 1 grow / 2 serial)
+//!                          u8 decision (0 keep / 1 grow / 2 serial /
+//!                          3 rollback)
 //! optimizer    u64 t (bias-correction counter)
 //! tensor table u32 n entries; per entry u16 name-len + name + u64 count
 //!              then every payload (count × f32) in entry order
@@ -169,12 +170,36 @@ pub struct Checkpoint {
 
 impl Checkpoint {
     /// Serialize and write to `path` (parent directories are created).
+    ///
+    /// The write is **atomic**: bytes land in `{path}.tmp`, are fsynced,
+    /// and the file is renamed over `path` only then. A crash (or the
+    /// `checkpoint.partial_write` fault point) mid-save can therefore
+    /// never leave a truncated `*.ltcp` for `--resume` or the serve
+    /// hot-reload watcher to trip on — at worst a stale `.tmp` litters
+    /// the directory, which no reader matches.
     pub fn write(&self, path: &str) -> Result<()> {
         if let Some(dir) = std::path::Path::new(path).parent() {
             std::fs::create_dir_all(dir).ok();
         }
         let bytes = self.encode();
-        std::fs::write(path, bytes).with_context(|| format!("writing checkpoint {}", path))?;
+        let tmp = format!("{}.tmp", path);
+        {
+            use std::io::Write;
+            let mut f = std::fs::File::create(&tmp)
+                .with_context(|| format!("creating checkpoint temp {}", tmp))?;
+            if crate::faultpoint!("checkpoint.partial_write") {
+                // simulate a crash mid-save: half the bytes reach the temp
+                // file, the rename never happens, `path` is untouched
+                f.write_all(&bytes[..bytes.len() / 2])
+                    .with_context(|| format!("writing checkpoint temp {}", tmp))?;
+                f.sync_all().ok();
+                bail!("injected: checkpoint.partial_write (crash before rename)");
+            }
+            f.write_all(&bytes).with_context(|| format!("writing checkpoint temp {}", tmp))?;
+            f.sync_all().with_context(|| format!("fsyncing checkpoint temp {}", tmp))?;
+        }
+        std::fs::rename(&tmp, path)
+            .with_context(|| format!("renaming {} over checkpoint {}", tmp, path))?;
         Ok(())
     }
 
@@ -245,6 +270,7 @@ impl Checkpoint {
                 AdaptiveDecision::Keep => 0,
                 AdaptiveDecision::IncreaseIters => 1,
                 AdaptiveDecision::SwitchSerial => 2,
+                AdaptiveDecision::Rollback => 3,
             });
         }
         b.u64(self.opt_t);
@@ -333,6 +359,7 @@ impl Checkpoint {
                             0 => AdaptiveDecision::Keep,
                             1 => AdaptiveDecision::IncreaseIters,
                             2 => AdaptiveDecision::SwitchSerial,
+                            3 => AdaptiveDecision::Rollback,
                             d => bail!("unknown probe decision tag {}", d),
                         },
                     });
@@ -636,6 +663,25 @@ mod tests {
         left.sort();
         assert_eq!(left, vec!["m.ltcp", "m.step00000003.ltcp", "m.step00000004.ltcp"]);
         assert_eq!(prune_autosaves(base, 2), 0, "already at retention");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn write_is_atomic_and_leaves_no_temp() {
+        let dir = std::env::temp_dir().join(format!("layertime_atomic_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let path_buf = dir.join("ck.ltcp");
+        let path = path_buf.to_str().unwrap();
+        let ck = tiny_checkpoint();
+        ck.write(path).unwrap();
+        assert!(!std::path::Path::new(&format!("{}.tmp", path)).exists(), "temp must be renamed away");
+        assert_eq!(Checkpoint::read(path).unwrap().step, ck.step);
+        // overwriting an existing checkpoint goes through the same rename
+        let mut ck2 = ck.clone();
+        ck2.step = 43;
+        ck2.write(path).unwrap();
+        assert_eq!(Checkpoint::read(path).unwrap().step, 43);
+        assert!(!std::path::Path::new(&format!("{}.tmp", path)).exists());
         let _ = std::fs::remove_dir_all(&dir);
     }
 

@@ -54,6 +54,8 @@
 //! The backend is re-consulted per solve so pool replacement after a
 //! poisoned sweep still works with cached cores.
 
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+
 use crate::config::{MgritConfig, ModelConfig};
 use crate::mgrit::{accumulate_layer_grads, MgritCore, MgritSolver, SolveStats};
 use crate::ode::Propagator;
@@ -373,6 +375,21 @@ fn core_for<'a>(
     &mut slot.as_mut().unwrap().core
 }
 
+/// Render a caught sweep-panic payload for the fault-event log: typed
+/// [`crate::parallel::FabricError`] payloads (a dead halo sender), plain
+/// `&str`/`String` panics (a worker Φ panic), or an opaque marker.
+fn panic_detail(p: &(dyn std::any::Any + Send)) -> String {
+    if let Some(e) = p.downcast_ref::<crate::parallel::FabricError>() {
+        e.to_string()
+    } else if let Some(s) = p.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = p.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    }
+}
+
 /// Per-solve backend re-consultation, single-sourced for every entry
 /// point: fetch (or build) the cached core for one direction and re-attach
 /// the backend's *current* pool (a pool poisoned by a panicked sweep is
@@ -489,14 +506,44 @@ impl ForwardContext {
                 serial: true,
             };
         }
+        // policy 3 (see crate::fault): a panicked pooled sweep — a worker
+        // Φ panic or a typed `FabricError` halo failure — is caught here
+        // instead of unwinding into the session. The sweep retries once on
+        // the backend's rebuilt pool (the cached hierarchy survives a
+        // panic, pinned by `panicked_threaded_sweep_is_recovered_...`
+        // below); a second panic drops to the in-thread V-cycle schedule
+        // (`set_pool(None)` + one worker) — bitwise identical to the
+        // pooled sweep, unlike an exact serial solve. A third failure
+        // propagates: the poison is in Φ itself, not the execution layer.
+        let mut attempt = 0u32;
+        let stats = loop {
+            let core =
+                configured_core(&**backend, fwd, core_builds, n, cfg, ws.states[bo].shape());
+            if attempt == 2 {
+                core.set_pool(None);
+                core.set_workers(1);
+            }
+            let solver = MgritSolver::new(prop, cfg.clone());
+            // the previous solve's solution is still sitting in the
+            // workspace: warm-start from it directly, no stored copy (the
+            // core snapshots warm[1..=n] into its own storage before
+            // anything is written, so a panicked attempt never tears it)
+            let warm_ref: Option<&[Tensor]> =
+                if use_warm && *warm_valid { Some(&ws.states[bo..=bo + n]) } else { None };
+            match catch_unwind(AssertUnwindSafe(|| {
+                solver.forward_with(core, &ws.states[bo], mapped, warm_ref, track_residuals)
+            })) {
+                Ok(stats) => break stats,
+                Err(p) if attempt < 2 => {
+                    attempt += 1;
+                    let action =
+                        if attempt == 2 { "sweep_serial_fallback" } else { "sweep_retry" };
+                    crate::fault::record("pool.sweep", attempt as u64, action, panic_detail(&*p));
+                }
+                Err(p) => resume_unwind(p),
+            }
+        };
         let core = configured_core(&**backend, fwd, core_builds, n, cfg, ws.states[bo].shape());
-        let solver = MgritSolver::new(prop, cfg.clone());
-        // the previous solve's solution is still sitting in the workspace:
-        // warm-start from it directly, no stored copy (the core snapshots
-        // warm[1..=n] into its own storage before anything is written)
-        let warm_ref: Option<&[Tensor]> =
-            if use_warm && *warm_valid { Some(&ws.states[bo..=bo + n]) } else { None };
-        let stats = solver.forward_with(core, &ws.states[bo], mapped, warm_ref, track_residuals);
         core.solution_into(&mut ws.states[bo..=bo + n]);
         *warm_valid = use_warm;
         stats
@@ -723,10 +770,38 @@ impl SolveContext {
                 serial: true,
             };
         }
+        // policy-3 sweep retry, mirroring `ForwardContext::forward_mid`:
+        // retry the panicked adjoint sweep once on the rebuilt pool, then
+        // fall back to the in-thread V-cycle schedule, then propagate
+        let mut attempt = 0u32;
+        let stats = loop {
+            let core =
+                configured_core(&*fwd.backend, adj, adj_builds, n, cfg, states[bo].shape());
+            if attempt == 2 {
+                core.set_pool(None);
+                core.set_workers(1);
+            }
+            let solver = MgritSolver::new(prop, cfg.clone());
+            match catch_unwind(AssertUnwindSafe(|| {
+                solver.adjoint_with(
+                    core,
+                    &states[bo..=bo + n],
+                    &lams[bo + n],
+                    mapped,
+                    track_residuals,
+                )
+            })) {
+                Ok(stats) => break stats,
+                Err(p) if attempt < 2 => {
+                    attempt += 1;
+                    let action =
+                        if attempt == 2 { "sweep_serial_fallback" } else { "sweep_retry" };
+                    crate::fault::record("pool.sweep", attempt as u64, action, panic_detail(&*p));
+                }
+                Err(p) => resume_unwind(p),
+            }
+        };
         let core = configured_core(&*fwd.backend, adj, adj_builds, n, cfg, states[bo].shape());
-        let solver = MgritSolver::new(prop, cfg.clone());
-        let stats =
-            solver.adjoint_with(core, &states[bo..=bo + n], &lams[bo + n], mapped, track_residuals);
         core.solution_rev_into(&mut lams[bo..=bo + n]);
         stats
     }
@@ -1077,6 +1152,81 @@ mod tests {
             1,
             "panic recovery must reuse the cached hierarchy, not rebuild it"
         );
+    }
+
+    #[test]
+    fn forward_mid_absorbs_panicked_sweeps_and_stays_bitwise() {
+        // Policy 3 at the training entry point: the same class of injected
+        // sweep panic that re-raises from the standalone `forward` (test
+        // above) is absorbed by `forward_mid` — retried once on the
+        // rebuilt pool, and on a second panic run on the in-thread V-cycle
+        // schedule — with the solution bitwise identical to an unfaulted
+        // context's in both cases.
+        use std::panic::{catch_unwind, AssertUnwindSafe};
+        use std::sync::atomic::{AtomicU32, Ordering};
+
+        use crate::ode::StepCounters;
+
+        struct PanicTimes<'a> {
+            inner: &'a LinearOde,
+            remaining: AtomicU32,
+        }
+        impl PanicTimes<'_> {
+            fn take(&self) -> bool {
+                self.remaining
+                    .fetch_update(Ordering::SeqCst, Ordering::SeqCst, |v| v.checked_sub(1))
+                    .is_ok()
+            }
+        }
+        impl Propagator for PanicTimes<'_> {
+            fn n_steps(&self) -> usize {
+                self.inner.n_steps()
+            }
+            fn state_shape(&self) -> Vec<usize> {
+                self.inner.state_shape()
+            }
+            fn fine_h(&self, layer: usize) -> f32 {
+                self.inner.fine_h(layer)
+            }
+            fn step(&self, layer: usize, h_scale: f32, z: &Tensor) -> Tensor {
+                if self.take() {
+                    panic!("injected Φ panic");
+                }
+                self.inner.step(layer, h_scale, z)
+            }
+            fn adjoint_step(&self, layer: usize, h_scale: f32, z: &Tensor, lam: &Tensor) -> Tensor {
+                self.inner.adjoint_step(layer, h_scale, z, lam)
+            }
+            fn accumulate_grad(&self, layer: usize, z: &Tensor, lam: &Tensor, grad: &mut [f32]) {
+                self.inner.accumulate_grad(layer, z, lam, grad)
+            }
+            fn theta_len(&self, layer: usize) -> usize {
+                self.inner.theta_len(layer)
+            }
+            fn counters(&self) -> &StepCounters {
+                self.inner.counters()
+            }
+        }
+
+        let mut rng = Rng::new(11);
+        let ode = LinearOde::random_stable(&mut rng, 4, 32, 0.05);
+        let z0 = Tensor::randn(&mut rng, &[4, 1], 1.0);
+
+        let solve = |panics: u32| -> Vec<Vec<f32>> {
+            let mut ctx = tiny_ctx(Box::new(ThreadedMgrit::new(2)), 32, &[4, 1]);
+            ctx.fwd.ws.states[0].copy_from(&z0);
+            let prop = PanicTimes { inner: &ode, remaining: AtomicU32::new(panics) };
+            ctx.forward_mid(&prop, &cfg(4, 2), 0, Some(3), false, false);
+            ctx.fwd.ws.states[..=32].iter().map(|t| t.data().to_vec()).collect()
+        };
+
+        let clean = solve(0);
+        assert_eq!(solve(1), clean, "one panic: pool-rebuild retry must be bitwise clean");
+        assert_eq!(solve(2), clean, "two panics: in-thread fallback must be bitwise clean");
+
+        // a persistent Φ poison still propagates after both fallbacks
+        let r = catch_unwind(AssertUnwindSafe(|| solve(u32::MAX)));
+        assert!(r.is_err(), "a fault in Φ itself must not be swallowed forever");
     }
 
     #[test]

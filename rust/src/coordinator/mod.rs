@@ -46,6 +46,7 @@ pub use objective::{
 };
 pub use range::RangeProp;
 pub use session::{
-    EvalRecord, PropagatorKind, Session, SessionBuilder, StepRecord, TrainReport,
+    AnomalyKind, EvalRecord, PropagatorKind, Session, SessionBuilder, StepAnomaly, StepRecord,
+    TrainReport, MAX_ROLLBACKS, MAX_STEP_RETRIES,
 };
 pub use trainer::{Task, TrainRun};

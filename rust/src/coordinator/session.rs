@@ -27,6 +27,20 @@
 //! switch the run to serial (which also drops the now-stale warm-start
 //! iterate).
 //!
+//! ## Self-healing
+//!
+//! [`Session::train_step`] wraps the raw step in the recovery policies of
+//! [`crate::fault`]: a non-finite guard that skips the optimizer update
+//! (Adam's moments never see NaN) and replays the batch from a rewound
+//! RNG/step/controller snapshot, and a divergence watchdog that
+//! auto-rolls back to the newest successful autosave — restoring
+//! parameters, moments, RNG, controller and warm iterate in place — before
+//! falling back to the §3.2.3 serial switch. Every recovery is recorded as
+//! a typed [`StepAnomaly`] (surfaced via [`TrainReport`]) and mirrored
+//! into the global fault-event log. Autosave writes are atomic
+//! (tmp + fsync + rename, [`crate::checkpoint`]), and a *failed* autosave
+//! is a recorded event, not a dead run.
+//!
 //! ## Checkpointing
 //!
 //! [`Session::save`] writes a [`crate::checkpoint::Checkpoint`] capturing
@@ -90,6 +104,60 @@ impl StepRecord {
     }
 }
 
+/// Policy-1 cap: consecutive rewound attempts of one training step before
+/// the session escalates (serial switch for an adaptive MGRIT run, then
+/// giving the step up with the update skipped).
+pub const MAX_STEP_RETRIES: u32 = 3;
+
+/// Policy-2 cap: auto-rollbacks per session before the divergence watchdog
+/// falls back to the plain serial switch.
+pub const MAX_ROLLBACKS: u32 = 2;
+
+/// Classes of recovered training anomalies.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AnomalyKind {
+    /// The batch loss came back NaN/Inf.
+    NonFiniteLoss,
+    /// The global gradient norm came back NaN/Inf (loss still finite).
+    NonFiniteGrad,
+    /// The §3.2.3 divergence watchdog tripped on a finite loss.
+    Divergence,
+}
+
+impl AnomalyKind {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            AnomalyKind::NonFiniteLoss => "non_finite_loss",
+            AnomalyKind::NonFiniteGrad => "non_finite_grad",
+            AnomalyKind::Divergence => "divergence",
+        }
+    }
+}
+
+/// A training-step anomaly the session *recovered from* (a policy record,
+/// not an error): the optimizer update was skipped or rolled back instead
+/// of poisoning the Adam moments. Collected on [`Session`], surfaced
+/// through [`TrainReport::anomalies`], and mirrored into the global
+/// [`crate::fault`] event log.
+#[derive(Debug, Clone)]
+pub struct StepAnomaly {
+    /// Step counter at detection (the step whose attempt misbehaved).
+    pub step: usize,
+    pub kind: AnomalyKind,
+    /// Human-readable diagnostics (loss / grad-norm values, rollback target).
+    pub detail: String,
+}
+
+impl StepAnomaly {
+    pub fn to_json(&self) -> Json {
+        json::obj(vec![
+            ("step", json::int(self.step as i64)),
+            ("kind", json::s(self.kind.as_str())),
+            ("detail", json::s(&self.detail)),
+        ])
+    }
+}
+
 /// Validation record: metric is accuracy (or BLEU for Translate).
 #[derive(Debug, Clone)]
 pub struct EvalRecord {
@@ -127,6 +195,10 @@ pub struct TrainReport {
     pub phi_fwd: u64,
     pub phi_vjp: u64,
     pub switched_at: Option<usize>,
+    /// Every anomaly the self-healing policies recovered from, in order.
+    /// After a rollback the curve may hold duplicate step numbers (the
+    /// replayed span) — this list is how a reader tells the two runs apart.
+    pub anomalies: Vec<StepAnomaly>,
 }
 
 impl TrainReport {
@@ -147,6 +219,7 @@ impl TrainReport {
                 "switched_at",
                 self.switched_at.map(|s| json::int(s as i64)).unwrap_or(Json::Null),
             ),
+            ("anomalies", json::arr(self.anomalies.iter().map(|a| a.to_json()).collect())),
         ])
     }
 }
@@ -398,6 +471,10 @@ impl SessionBuilder {
             initial_loss,
             switched_at,
             autosave: None,
+            last_autosave: None,
+            consec_anomalies: 0,
+            rollbacks: 0,
+            anomalies: Vec::new(),
         })
     }
 }
@@ -428,6 +505,16 @@ pub struct Session {
     switched_at: Option<usize>,
     /// Periodic checkpointing during [`Session::train`] (`--save-every`).
     autosave: Option<Autosave>,
+    /// Path of the newest *successful* autosave — the policy-2 rollback
+    /// target.
+    last_autosave: Option<String>,
+    /// Consecutive rewound attempts of the current step (policy-1 cap).
+    consec_anomalies: u32,
+    /// Auto-rollbacks performed so far (policy-2 cap).
+    rollbacks: u32,
+    /// Every recovered anomaly, in order (also mirrored into the global
+    /// [`crate::fault`] event log).
+    anomalies: Vec<StepAnomaly>,
 }
 
 /// Periodic-autosave policy: every `every` steps, write
@@ -548,6 +635,23 @@ impl Session {
     /// the saved counter, not 0).
     pub fn step(&self) -> usize {
         self.step
+    }
+
+    /// Every anomaly the self-healing policies recovered from so far.
+    pub fn anomalies(&self) -> &[StepAnomaly] {
+        &self.anomalies
+    }
+
+    /// Auto-rollbacks performed so far (capped at [`MAX_ROLLBACKS`]).
+    pub fn rollback_count(&self) -> u32 {
+        self.rollbacks
+    }
+
+    /// Are the optimizer's Adam moments all finite? The self-healing
+    /// invariant chaos tests pin: no recovered anomaly may have leaked
+    /// NaN/Inf into the moment buffers.
+    pub fn moments_finite(&self) -> bool {
+        self.opt.moments_finite()
     }
 
     /// Adjust the total run length (`train` runs until this step count),
@@ -717,99 +821,305 @@ impl Session {
         (out.loss, acc, fstats.conv_factor(), bstats.conv_factor())
     }
 
-    /// One full training step (dp micro-batches + probe + update).
+    /// One full training step (dp micro-batches + probe + update), wrapped
+    /// in the self-healing policies of [`crate::fault`]:
+    ///
+    /// * **Non-finite guard (policy 1).** If the batch loss or the global
+    ///   gradient norm comes back NaN/Inf, the optimizer update is
+    ///   *skipped* — Adam's moments never see the poison — and the attempt
+    ///   is rewound (RNG stream, step counter, controller cadence) and the
+    ///   same batch replayed. Under an exact (serial) configuration the
+    ///   replay is bitwise identical to a run that never faulted; a
+    ///   warm-started MGRIT replay re-solves from the advanced iterate
+    ///   (same math, different warm start). After [`MAX_STEP_RETRIES`]
+    ///   consecutive anomalies an adaptive MGRIT run switches to serial
+    ///   and keeps retrying; a run with nowhere left to escalate emits the
+    ///   anomalous record with the update skipped — a typed
+    ///   [`StepAnomaly`] either way, never a panic or a poisoned moment.
+    /// * **Divergence watchdog (policy 2).** A finite loss above the
+    ///   §3.2.3 divergence threshold first tries an **auto-rollback**:
+    ///   restore the newest successful autosave in place
+    ///   ([`Session::set_autosave`]) and replay from there — bitwise
+    ///   identical to a run that never diverged. After [`MAX_ROLLBACKS`]
+    ///   rollbacks, or with no autosave available, it falls back to the
+    ///   original switch-to-serial escalation.
     pub fn train_step(&mut self) -> StepRecord {
-        self.step += 1;
-        let probe = self.controller.should_probe();
-        let dp = self.rc.dp_degree.max(1);
-        self.ctx.ws.zero_grads();
+        loop {
+            // policy-1 rewind snapshot: two scalar copies, no allocation
+            let (rng_state, rng_spare) = self.train_rng.state_parts();
+            self.step += 1;
+            let probe = self.controller.should_probe();
+            let dp = self.rc.dp_degree.max(1);
+            self.ctx.ws.zero_grads();
 
-        let mut loss_sum = 0.0f32;
-        let mut acc_sum = 0.0f32;
-        let (mut rho_f, mut rho_b) = (None, None);
-        for rep in 0..dp {
-            // gradient allreduce with replica semantics: each micro-batch
-            // sums into fresh zeroed accumulators (the running sum is
-            // parked in the dp scratch set meanwhile) and the per-replica
-            // totals are then added — bit-identical to v1 / distributed
-            // summation, unlike accumulating element updates in place
-            if rep > 0 {
-                self.ctx.ws.stash_grads();
+            let mut loss_sum = 0.0f32;
+            let mut acc_sum = 0.0f32;
+            let (mut rho_f, mut rho_b) = (None, None);
+            for rep in 0..dp {
+                // gradient allreduce with replica semantics: each micro-batch
+                // sums into fresh zeroed accumulators (the running sum is
+                // parked in the dp scratch set meanwhile) and the per-replica
+                // totals are then added — bit-identical to v1 / distributed
+                // summation, unlike accumulating element updates in place
+                if rep > 0 {
+                    self.ctx.ws.stash_grads();
+                }
+                let (l, a, rf, rb) = self.micro_batch(probe && rep == 0);
+                if rep > 0 {
+                    self.ctx.ws.fold_stashed_grads();
+                }
+                loss_sum += l;
+                acc_sum += a;
+                if rep == 0 {
+                    rho_f = rf;
+                    rho_b = rb;
+                }
             }
-            let (l, a, rf, rb) = self.micro_batch(probe && rep == 0);
-            if rep > 0 {
-                self.ctx.ws.fold_stashed_grads();
+            if dp > 1 {
+                self.ctx.ws.scale_grads(1.0 / dp as f32);
             }
-            loss_sum += l;
-            acc_sum += a;
-            if rep == 0 {
-                rho_f = rf;
-                rho_b = rb;
-            }
-        }
-        if dp > 1 {
-            self.ctx.ws.scale_grads(1.0 / dp as f32);
-        }
-        let loss = loss_sum / dp as f32;
-        let acc = acc_sum / dp as f32;
+            let mut loss = loss_sum / dp as f32;
+            let acc = acc_sum / dp as f32;
 
-        // adaptive controller (probe result + divergence watchdog)
-        if probe {
-            self.controller.observe(rho_f, rho_b, &mut self.rc.mgrit);
-            if self.controller.is_serial() && self.switched_at.is_none() {
+            // deterministic chaos hooks — one relaxed atomic load each when
+            // disarmed (rust/src/fault), inside the audited 0-alloc path
+            if crate::faultpoint!("train.nan_grad") {
+                if let Some(x) = self.ctx.ws.grads.first_mut().and_then(|g| g.iter_mut().next()) {
+                    *x = f32::NAN;
+                }
+            }
+            if crate::faultpoint!("train.loss_spike") {
+                loss = 1.0e6;
+            }
+
+            // clip straight from the workspace accumulators (the untouched
+            // head groups are full-size zeros, so including them changes
+            // neither the norm nor the updates); clip_global walks the
+            // accumulators directly — no per-step ref-list allocation. The
+            // returned pre-clip norm doubles as the policy-1 gradient
+            // health check: NaN/Inf anywhere in the accumulators
+            // propagates into it.
+            let gnorm = self.ctx.ws.clip_global(self.rc.train.grad_clip);
+
+            // --- policy 1: non-finite guard ------------------------------
+            if !loss.is_finite() || !gnorm.is_finite() {
+                match self.recover_non_finite(loss, acc, gnorm, rng_state, rng_spare) {
+                    Some(rec) => return rec, // gave the step up (update skipped)
+                    None => continue,        // rewound — replay the batch
+                }
+            }
+            self.consec_anomalies = 0;
+
+            // adaptive controller (probe result + divergence watchdog)
+            if probe {
+                self.controller.observe(rho_f, rho_b, &mut self.rc.mgrit);
+                if self.controller.is_serial() && self.switched_at.is_none() {
+                    self.switched_at = Some(self.step);
+                }
+            }
+            if self.initial_loss.is_none() {
+                self.initial_loss = Some(loss);
+            }
+            if self.rc.train.adaptive
+                && !self.controller.is_serial()
+                && loss > 3.0 * self.initial_loss.unwrap() + 1.0
+            {
+                // --- policy 2: watchdog — rollback first, serial second --
+                if self.try_rollback(loss) {
+                    continue; // replay from the restored snapshot
+                }
+                self.controller.force_serial(&mut self.rc.mgrit);
                 self.switched_at = Some(self.step);
             }
-        }
-        if self.initial_loss.is_none() {
-            self.initial_loss = Some(loss);
-        }
-        if self.rc.train.adaptive
-            && !self.controller.is_serial()
-            && (!loss.is_finite() || loss > 3.0 * self.initial_loss.unwrap() + 1.0)
-        {
-            self.controller.force_serial(&mut self.rc.mgrit);
-            self.switched_at = Some(self.step);
-        }
-        if self.controller.is_serial() {
-            // the switch is sticky: the warm iterate is dead memory (and
-            // would poison a later non-serial run restored from this
-            // session) and the cached hierarchies will never be solved on
-            // again — drop both at the switch, not lazily
-            self.ctx.clear_warm();
-            self.ctx.invalidate();
-        }
-
-        // clip + update straight from the workspace accumulators (the
-        // untouched head groups are full-size zeros, so including them
-        // changes neither the norm nor the updates); clip_global walks the
-        // accumulators directly — no per-step ref-list allocation
-        self.ctx.ws.clip_global(self.rc.train.grad_clip);
-        let lr = self.sched.at(self.step);
-        self.opt.begin_step();
-        {
-            // the only write-lock acquisition on the training path
-            let mut layers = self.params.layers.write().unwrap();
-            for (i, g) in self.ctx.ws.grads.iter().enumerate() {
-                self.opt.update(i, lr, &mut layers[i], g);
+            if self.controller.is_serial() {
+                // the switch is sticky: the warm iterate is dead memory (and
+                // would poison a later non-serial run restored from this
+                // session) and the cached hierarchies will never be solved on
+                // again — drop both at the switch, not lazily
+                self.ctx.clear_warm();
+                self.ctx.invalidate();
             }
-        }
-        let nl = self.rc.model.total_layers();
-        self.opt.update(nl, lr, &mut self.params.w_emb, &self.ctx.ws.g_emb);
-        self.opt.update(nl + 1, lr, &mut self.params.w_pos, &self.ctx.ws.g_pos);
-        self.opt.update(nl + 2, lr, &mut self.params.w_out, &self.ctx.ws.g_out);
-        self.opt.update(nl + 3, lr, &mut self.params.w_cls, &self.ctx.ws.g_cls);
 
-        StepRecord {
-            step: self.step,
+            let lr = self.sched.at(self.step);
+            self.opt.begin_step();
+            {
+                // the only write-lock acquisition on the training path
+                let mut layers = self.params.layers.write().unwrap();
+                for (i, g) in self.ctx.ws.grads.iter().enumerate() {
+                    self.opt.update(i, lr, &mut layers[i], g);
+                }
+            }
+            let nl = self.rc.model.total_layers();
+            self.opt.update(nl, lr, &mut self.params.w_emb, &self.ctx.ws.g_emb);
+            self.opt.update(nl + 1, lr, &mut self.params.w_pos, &self.ctx.ws.g_pos);
+            self.opt.update(nl + 2, lr, &mut self.params.w_out, &self.ctx.ws.g_out);
+            self.opt.update(nl + 3, lr, &mut self.params.w_cls, &self.ctx.ws.g_cls);
+
+            return StepRecord {
+                step: self.step,
+                loss,
+                acc,
+                lr,
+                serial: self.rc.mgrit.is_serial()
+                    || self.controller.is_serial()
+                    || self.ctx.backend().forces_exact(),
+                rho_fwd: rho_f,
+                rho_bwd: rho_b,
+            };
+        }
+    }
+
+    /// Policy 1: a non-finite loss or gradient norm was detected *before*
+    /// the optimizer update. Record the typed anomaly, then either rewind
+    /// the attempt (RNG stream, step counter, controller batch cadence) so
+    /// the caller replays it — escalating to the serial propagator once
+    /// the retry budget is spent — or, with nowhere left to escalate, give
+    /// the step up: `Some(record)` with the update skipped.
+    fn recover_non_finite(
+        &mut self,
+        loss: f32,
+        acc: f32,
+        gnorm: f32,
+        rng_state: u64,
+        rng_spare: Option<f32>,
+    ) -> Option<StepRecord> {
+        let step = self.step;
+        let kind =
+            if loss.is_finite() { AnomalyKind::NonFiniteGrad } else { AnomalyKind::NonFiniteLoss };
+        self.consec_anomalies += 1;
+        let detail =
+            format!("loss={} grad_norm={} attempt={}", loss, gnorm, self.consec_anomalies);
+        self.anomalies.push(StepAnomaly { step, kind, detail: detail.clone() });
+        crate::fault::record("train.step_anomaly", step as u64, "skipped_step", detail);
+        let escalate = self.consec_anomalies >= MAX_STEP_RETRIES;
+        if !escalate || (self.rc.train.adaptive && !self.controller.is_serial()) {
+            if escalate {
+                // the MGRIT solve itself may be the poison source — switch
+                // to the exact serial propagation and retry with a fresh
+                // budget
+                self.controller.force_serial(&mut self.rc.mgrit);
+                self.switched_at = Some(step);
+                self.ctx.clear_warm();
+                self.ctx.invalidate();
+                self.consec_anomalies = 0;
+                crate::fault::record(
+                    "train.step_anomaly",
+                    step as u64,
+                    "force_serial",
+                    "retry budget spent — switching to serial propagation".to_string(),
+                );
+            }
+            // rewind the attempt for replay
+            self.train_rng = Rng::from_parts(rng_state, rng_spare);
+            self.step -= 1;
+            self.controller.rewind_batch();
+            return None;
+        }
+        // nowhere left to escalate: the step counts (so the run
+        // terminates) but the update is skipped; later steps get their own
+        // retry budget
+        self.consec_anomalies = 0;
+        Some(StepRecord {
+            step,
             loss,
             acc,
-            lr,
+            lr: self.sched.at(step),
             serial: self.rc.mgrit.is_serial()
                 || self.controller.is_serial()
                 || self.ctx.backend().forces_exact(),
-            rho_fwd: rho_f,
-            rho_bwd: rho_b,
+            rho_fwd: None,
+            rho_bwd: None,
+        })
+    }
+
+    /// Policy 2: the divergence watchdog tripped on a finite loss. Restore
+    /// the newest successful autosave in place and let the caller replay
+    /// from it (`true`), or report that the caller should fall back to the
+    /// serial switch (`false`: no autosave yet, rollback cap reached, or
+    /// the snapshot failed to load).
+    fn try_rollback(&mut self, loss: f32) -> bool {
+        let step = self.step;
+        let path = match &self.last_autosave {
+            Some(p) if self.rollbacks < MAX_ROLLBACKS => p.clone(),
+            _ => return false,
+        };
+        match Checkpoint::read(&path).and_then(|c| self.restore_in_place(c)) {
+            Ok(()) => {
+                self.rollbacks += 1;
+                self.controller.record_rollback();
+                let detail = format!(
+                    "loss={} at step {} — restored {} (step {})",
+                    loss, step, path, self.step
+                );
+                self.anomalies.push(StepAnomaly {
+                    step,
+                    kind: AnomalyKind::Divergence,
+                    detail: detail.clone(),
+                });
+                crate::fault::record("train.watchdog", step as u64, "rollback", detail);
+                true
+            }
+            Err(e) => {
+                crate::fault::record(
+                    "train.watchdog",
+                    step as u64,
+                    "rollback_failed",
+                    e.to_string(),
+                );
+                false
+            }
         }
+    }
+
+    /// Restore every stateful piece of the session from a checkpoint, in
+    /// place — the rollback arm of the divergence watchdog. The same
+    /// recipe as [`SessionBuilder::resume`], but reusing the live solve
+    /// context and propagator (the layer slabs are shared through
+    /// [`ParamStore::layers`], so the propagator sees the restored θ
+    /// without a rebuild).
+    fn restore_in_place(&mut self, c: Checkpoint) -> Result<()> {
+        if c.rc.model.total_layers() != self.rc.model.total_layers()
+            || c.rc.model.d_model != self.rc.model.d_model
+        {
+            bail!("rollback checkpoint has a different model geometry");
+        }
+        self.rc = c.rc.clone();
+        *self.params.layers.write().unwrap() = c.layers;
+        self.params.w_emb = c.w_emb;
+        self.params.w_pos = c.w_pos;
+        self.params.w_out = c.w_out;
+        self.params.w_cls = c.w_cls;
+        self.opt.restore_moments(c.opt_m, c.opt_v, c.opt_t);
+        self.train_rng = Rng::from_parts(c.rng_state, c.rng_spare);
+        self.step = c.step;
+        self.initial_loss = c.initial_loss;
+        self.switched_at = c.switched_at;
+        self.warm_start = c.warm_start;
+        let cs = c.controller;
+        self.controller = AdaptiveController::restore(
+            cs.probe_every,
+            cs.rho_switch,
+            cs.rho_grow,
+            cs.max_iters,
+            cs.step,
+            cs.switched,
+            cs.history_cap,
+            cs.history,
+        );
+        // the cached hierarchies may have been built for controller-grown
+        // iteration counts — drop them together with the now-stale warm
+        // iterate, then re-seed the warm iterate from the snapshot (the
+        // exact resume recipe, so the replay is bitwise identical)
+        self.ctx.clear_warm();
+        self.ctx.invalidate();
+        if let Some(warm) = c.warm {
+            let (bo, n_mid) = mid_range(&self.rc.model);
+            for (dst, src) in self.ctx.fwd.ws.states[bo..=bo + n_mid].iter_mut().zip(&warm) {
+                dst.copy_from(src);
+            }
+            self.ctx.fwd.mark_warm();
+        }
+        Ok(())
     }
 
     /// Validation metric over `n_batches` fresh batches (exact forward).
@@ -851,11 +1161,35 @@ impl Session {
                 let metric = self.evaluate(2);
                 report.evals.push(EvalRecord { step: self.step, metric });
             }
-            if let Some(a) = &self.autosave {
-                if self.step % a.every == 0 || self.step == steps {
-                    self.save(&crate::checkpoint::autosave_path(&a.base, self.step))?;
-                    if a.keep > 0 {
-                        crate::checkpoint::prune_autosaves(&a.base, a.keep);
+            let due = match &self.autosave {
+                Some(a) if self.step % a.every == 0 || self.step == steps => {
+                    Some((a.base.clone(), a.keep))
+                }
+                _ => None,
+            };
+            if let Some((base, keep)) = due {
+                let path = crate::checkpoint::autosave_path(&base, self.step);
+                match self.save(&path) {
+                    Ok(()) => {
+                        // the newest good snapshot is the watchdog's
+                        // rollback target; pruning keeps the newest
+                        // `keep`, so it never deletes this one
+                        self.last_autosave = Some(path);
+                        if keep > 0 {
+                            crate::checkpoint::prune_autosaves(&base, keep);
+                        }
+                    }
+                    Err(e) => {
+                        // a failed snapshot must not kill a healthy run:
+                        // record the typed event and train on (the atomic
+                        // tmp+rename write protocol guarantees no partial
+                        // .ltcp file was left behind)
+                        crate::fault::record(
+                            "checkpoint.autosave",
+                            self.step as u64,
+                            "autosave_failed",
+                            e.to_string(),
+                        );
                     }
                 }
             }
@@ -867,6 +1201,7 @@ impl Session {
         report.phi_fwd = self.prop.counters().fwd();
         report.phi_vjp = self.prop.counters().vjp();
         report.switched_at = self.switched_at;
+        report.anomalies = self.anomalies.clone();
         Ok(report)
     }
 }

@@ -1,0 +1,337 @@
+//! Deterministic fault injection + fault-event observability.
+//!
+//! Long training and serving runs fail in ways that are hard to reproduce:
+//! a NaN gradient at step 40 000, a worker thread panicking mid-sweep, a
+//! crash between two autosave writes, a request that never finishes. The
+//! self-healing policies that handle those faults (see
+//! [`crate::coordinator::session`] and [`crate::serve`]) are only
+//! trustworthy if each fault class can be triggered *on demand, at an
+//! exact site and hit count*, and the recovery compared bitwise against a
+//! clean run. This module is that trigger.
+//!
+//! ## Fault points
+//!
+//! A *fault point* is a named site in the code guarded by the
+//! [`faultpoint!`] macro:
+//!
+//! ```ignore
+//! if crate::faultpoint!("pool.sweep_panic") {
+//!     panic!("injected: pool.sweep_panic");
+//! }
+//! ```
+//!
+//! The macro expands to a single **relaxed atomic load** when the registry
+//! is disarmed (the common case — `armed()` short-circuits before any
+//! lock, string, or hash is touched), so fault points may sit inside the
+//! zero-allocation hot paths pinned by `rust/tests/alloc_audit.rs`
+//! without perturbing them. Only when `--faults` armed the registry does a
+//! hit take the registry mutex to evaluate its trigger.
+//!
+//! ## Trigger specs
+//!
+//! `arm` parses a comma-separated spec string (the `--faults` CLI value):
+//!
+//! * `name@step=N` — fire exactly once, on the N-th hit of that site
+//!   (1-based; "step" counts *site hits*, which for once-per-train-step
+//!   sites equals the training step since arming).
+//! * `name@count=K` — fire on each of the first K hits.
+//! * `name` — shorthand for `name@count=1`.
+//!
+//! Hit counting is per-site and deterministic: the same binary, seed, and
+//! spec always fires at the same program point, which is what lets
+//! `rust/tests/chaos.rs` demand bitwise-identical recovery.
+//!
+//! ## Fault events
+//!
+//! Both *injected* faults and *organic* anomalies (a NaN loss the guard
+//! caught, a sweep retry, an autosave rollback, a request deadline) are
+//! recorded as typed [`FaultEvent`]s — always, armed or not — and
+//! surfaced as a `fault_events` array in `--report` and serve metrics
+//! JSON. Recording only happens on the (rare) anomaly paths, never on a
+//! clean step, so the disarmed hot path stays allocation-free.
+//!
+//! The registry is process-global (fault specs cross thread boundaries:
+//! a spec armed on the main thread must fire inside pool workers), so
+//! tests that arm it serialize on a shared lock and call [`reset`].
+
+use std::sync::atomic::{AtomicU32, Ordering};
+use std::sync::Mutex;
+
+use crate::util::json::{self, Json};
+
+/// Fast-path guard: non-zero while any fault spec is armed.
+static ARMED: AtomicU32 = AtomicU32::new(0);
+
+/// Slow-path state: armed specs + the event log. Only locked when a site
+/// is hit while armed, or on the anomaly/recovery paths.
+static REGISTRY: Mutex<Registry> = Mutex::new(Registry { specs: Vec::new(), events: Vec::new() });
+
+struct Registry {
+    specs: Vec<Spec>,
+    events: Vec<FaultEvent>,
+}
+
+/// When an armed fault point fires (see module docs).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Trigger {
+    /// Fire exactly once, on this 1-based hit.
+    AtHit(u64),
+    /// Fire on each of the first K hits.
+    FirstK(u64),
+}
+
+#[derive(Debug, Clone)]
+struct Spec {
+    name: String,
+    trigger: Trigger,
+    hits: u64,
+    fired: u64,
+}
+
+/// One observed fault — injected by the registry or organic (detected and
+/// handled by a self-healing policy). The `action` taxonomy is documented
+/// in the README's fault-tolerance section.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct FaultEvent {
+    /// Fault-point or policy name (e.g. `pool.sweep_panic`,
+    /// `train.step_anomaly`).
+    pub point: String,
+    /// Site hit count at injection, or the training step / serve decode
+    /// step the policy acted on.
+    pub at: u64,
+    /// What happened: `injected`, `skipped_step`, `rollback`,
+    /// `sweep_retry`, `sweep_serial_fallback`, `autosave_failed`,
+    /// `reload_quarantined`, `timeout`, ...
+    pub action: &'static str,
+    /// Free-form context (error text, file name, norm values).
+    pub detail: String,
+}
+
+impl FaultEvent {
+    pub fn to_json(&self) -> Json {
+        json::obj(vec![
+            ("point", json::s(&self.point)),
+            ("at", json::int(self.at as i64)),
+            ("action", json::s(self.action)),
+            ("detail", json::s(&self.detail)),
+        ])
+    }
+}
+
+fn lock() -> std::sync::MutexGuard<'static, Registry> {
+    // a panic while holding the lock (never on purpose — fault points fire
+    // *after* releasing it) must not wedge every later fault query
+    REGISTRY.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Is any fault spec armed? One relaxed atomic load — the entire cost of
+/// a disarmed fault point.
+#[inline(always)]
+pub fn armed() -> bool {
+    ARMED.load(Ordering::Relaxed) != 0
+}
+
+/// Guard a fault-injection site. Expands to `false` after a single
+/// relaxed atomic load when the registry is disarmed; when armed, counts
+/// a hit on `$name` and returns whether the site should inject its fault
+/// now. See [`crate::fault`] module docs.
+#[macro_export]
+macro_rules! faultpoint {
+    ($name:expr) => {
+        $crate::fault::armed() && $crate::fault::check($name)
+    };
+}
+
+/// Slow path of [`faultpoint!`]: count a hit on `name` and decide whether
+/// its armed trigger fires. Returns `false` for sites with no armed spec.
+pub fn check(name: &str) -> bool {
+    let mut reg = lock();
+    let Some(spec) = reg.specs.iter_mut().find(|s| s.name == name) else {
+        return false;
+    };
+    spec.hits += 1;
+    let fire = match spec.trigger {
+        Trigger::AtHit(n) => spec.hits == n,
+        Trigger::FirstK(k) => spec.hits <= k,
+    };
+    if fire {
+        spec.fired += 1;
+        let (point, at) = (spec.name.clone(), spec.hits);
+        reg.events.push(FaultEvent { point, at, action: "injected", detail: String::new() });
+    }
+    fire
+}
+
+/// Parse and arm a `--faults` spec string (see module docs for syntax).
+/// Replaces any previously armed specs; the event log is kept.
+pub fn arm(spec: &str) -> Result<(), String> {
+    let mut specs = Vec::new();
+    for part in spec.split(',').map(str::trim).filter(|s| !s.is_empty()) {
+        let (name, trigger) = match part.split_once('@') {
+            None => (part, Trigger::FirstK(1)),
+            Some((name, trig)) => {
+                let (key, val) = trig.split_once('=').ok_or_else(|| {
+                    format!("fault trigger '{}' must be step=N or count=K", trig)
+                })?;
+                let val: u64 = val
+                    .parse()
+                    .map_err(|_| format!("fault trigger '{}' needs an integer", trig))?;
+                match key {
+                    "step" => (name, Trigger::AtHit(val)),
+                    "count" => (name, Trigger::FirstK(val)),
+                    other => {
+                        return Err(format!(
+                            "unknown fault trigger '{}' (have: step=N, count=K)",
+                            other
+                        ))
+                    }
+                }
+            }
+        };
+        if name.is_empty() {
+            return Err(format!("empty fault-point name in '{}'", part));
+        }
+        specs.push(Spec { name: name.to_string(), trigger, hits: 0, fired: 0 });
+    }
+    if specs.is_empty() {
+        return Err("empty --faults spec".to_string());
+    }
+    let mut reg = lock();
+    reg.specs = specs;
+    ARMED.store(1, Ordering::Relaxed);
+    Ok(())
+}
+
+/// Disarm every spec and clear the event log (tests; a fresh `arm` call
+/// only replaces specs).
+pub fn reset() {
+    let mut reg = lock();
+    reg.specs.clear();
+    reg.events.clear();
+    ARMED.store(0, Ordering::Relaxed);
+}
+
+/// Record an organic fault event (anomaly detected, recovery action
+/// taken). Called from the rare anomaly paths only — never from a clean
+/// step — so the hot-path allocation audits are unaffected.
+pub fn record(point: &str, at: u64, action: &'static str, detail: String) {
+    let mut reg = lock();
+    reg.events.push(FaultEvent { point: point.to_string(), at, action, detail });
+}
+
+/// Snapshot of the event log, oldest first.
+pub fn events() -> Vec<FaultEvent> {
+    lock().events.clone()
+}
+
+/// The event log as a JSON array (the `fault_events` field of `--report`
+/// and serve metrics output).
+pub fn events_json() -> Json {
+    json::arr(lock().events.iter().map(|e| e.to_json()).collect())
+}
+
+/// How many times the named fault point actually fired (tests).
+pub fn fired(name: &str) -> u64 {
+    lock().specs.iter().find(|s| s.name == name).map(|s| s.fired).unwrap_or(0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // The registry is process-global; tests that arm it must not overlap.
+    // Unrelated unit tests in this binary may *record* organic events
+    // concurrently (sweep-retry tests and the like), so assertions filter
+    // the log by this module's own point names instead of counting
+    // globally.
+    static TEST_LOCK: Mutex<()> = Mutex::new(());
+
+    fn serial_test() -> std::sync::MutexGuard<'static, ()> {
+        TEST_LOCK.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    fn events_for(point: &str) -> Vec<FaultEvent> {
+        events().into_iter().filter(|e| e.point == point).collect()
+    }
+
+    #[test]
+    fn disarmed_faultpoints_are_inert() {
+        let _g = serial_test();
+        reset();
+        assert!(!armed());
+        assert!(!crate::faultpoint!("anything.at_all"));
+        assert!(events_for("anything.at_all").is_empty());
+    }
+
+    #[test]
+    fn at_hit_trigger_fires_exactly_once_on_the_nth_hit() {
+        let _g = serial_test();
+        reset();
+        arm("x.site@step=3").unwrap();
+        let fires: Vec<bool> = (0..5).map(|_| crate::faultpoint!("x.site")).collect();
+        assert_eq!(fires, vec![false, false, true, false, false]);
+        assert_eq!(fired("x.site"), 1);
+        let ev = events_for("x.site");
+        assert_eq!(ev.len(), 1);
+        assert_eq!(ev[0].at, 3);
+        assert_eq!(ev[0].action, "injected");
+        reset();
+    }
+
+    #[test]
+    fn count_trigger_fires_on_the_first_k_hits() {
+        let _g = serial_test();
+        reset();
+        arm("y.site@count=2").unwrap();
+        let fires: Vec<bool> = (0..4).map(|_| crate::faultpoint!("y.site")).collect();
+        assert_eq!(fires, vec![true, true, false, false]);
+        assert_eq!(fired("y.site"), 2);
+        reset();
+    }
+
+    #[test]
+    fn bare_name_means_count_one_and_specs_compose() {
+        let _g = serial_test();
+        reset();
+        arm("a.one, b.two@step=2").unwrap();
+        assert!(crate::faultpoint!("a.one"));
+        assert!(!crate::faultpoint!("a.one"));
+        assert!(!crate::faultpoint!("b.two"));
+        assert!(crate::faultpoint!("b.two"));
+        assert!(!crate::faultpoint!("unarmed.site"));
+        assert_eq!(events_for("a.one").len() + events_for("b.two").len(), 2);
+        reset();
+    }
+
+    #[test]
+    fn bad_specs_are_rejected() {
+        let _g = serial_test();
+        reset();
+        assert!(arm("").is_err());
+        assert!(arm("x@").is_err());
+        assert!(arm("x@step").is_err());
+        assert!(arm("x@step=abc").is_err());
+        assert!(arm("x@every=3").is_err());
+        assert!(arm("@step=1").is_err());
+        assert!(!armed(), "a rejected spec must not arm the registry");
+    }
+
+    #[test]
+    fn organic_events_are_recorded_even_disarmed() {
+        let _g = serial_test();
+        reset();
+        record("test.organic_probe", 7, "skipped_step", "loss=NaN".to_string());
+        let ev = events_for("test.organic_probe");
+        assert_eq!(ev.len(), 1);
+        assert_eq!(ev[0].action, "skipped_step");
+        let j = events_json();
+        let arr = j.arr().expect("events_json is an array");
+        let mine: Vec<_> = arr
+            .iter()
+            .filter(|e| e.get("point").and_then(|p| p.str()) == Some("test.organic_probe"))
+            .collect();
+        assert_eq!(mine.len(), 1);
+        assert_eq!(mine[0].get("at").unwrap().int(), Some(7));
+        reset();
+    }
+}

@@ -117,6 +117,27 @@
 //! reassociated kernels to shape-independent ulp-level drift, so the
 //! crate's bitwise pins (checkpoint resume, backend parity, cached decode)
 //! hold under the feature (`rust/tests/simd_parity.rs`).
+//!
+//! ## Fault tolerance ([`fault`])
+//!
+//! Long runs must survive infrastructure faults, not just detect them.
+//! A deterministic fault-injection registry ([`fault`], `--faults` CLI)
+//! guards named `faultpoint!` sites threaded through the kernel/forward
+//! layer, the pooled MGRIT sweeps, checkpoint I/O, and the serve
+//! scheduler — each site costs one relaxed atomic load while disarmed, so
+//! the zero-allocation audits are untouched. The self-healing policies it
+//! exercises: a non-finite loss/gradient guard that rewinds the RNG and
+//! replays the step instead of poisoning Adam moments; divergence-watchdog
+//! escalation from "switch serial" to auto-rollback onto the last good
+//! autosave; pooled-sweep panic containment that rebuilds the poisoned
+//! pool and retries once (then falls back to the in-thread V-cycle, still
+//! bitwise identical); atomic tmp+fsync+rename checkpoint writes; typed
+//! [`parallel::FabricError`] instead of mailbox panics; and serve-side
+//! per-request deadlines with typed `Timeout` outcomes plus graceful
+//! drain. Injected and organic anomalies alike land in a typed
+//! [`fault::FaultEvent`] log surfaced through `--report` and serve
+//! metrics JSON (`rust/tests/chaos.rs` pins recovery bitwise per fault
+//! class).
 
 pub mod adaptive;
 pub mod analysis;
@@ -124,6 +145,7 @@ pub mod checkpoint;
 pub mod config;
 pub mod coordinator;
 pub mod data;
+pub mod fault;
 pub mod infer;
 pub mod mgrit;
 pub mod model;
@@ -145,7 +167,9 @@ pub mod prelude {
         ThreadedMgrit, TrainReport,
     };
     pub use crate::infer::{DecodeOptions, InferSession};
-    pub use crate::serve::{GenerateRequest, RequestQueue, ServeLoop, ServeMetrics};
+    pub use crate::serve::{
+        CompletedRequest, GenerateRequest, RequestOutcome, RequestQueue, ServeLoop, ServeMetrics,
+    };
     pub use crate::tensor::Tensor;
     pub use crate::util::rng::Rng;
 }

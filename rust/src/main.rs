@@ -64,11 +64,15 @@ const USAGE: &str = "layertime <train|generate|predict|serve|bench-serve|compare
   serve:      --ckpt PATH and/or --watch DIR (hot-reload newest valid .ltcp)
               [--no-incremental]
               --requests FILE|- (JSON: [{\"prompt\": [..], \"id\", \"max_new\",
-              \"top_k\", \"temperature\", \"seed\"}, ..] or {\"requests\": [..]})
+              \"top_k\", \"temperature\", \"seed\", \"deadline_ms\"}, ..]
+              or {\"requests\": [..]})
               --queue N (backpressure capacity) --feeders N (producer threads)
               --reload-every N (poll cadence, steps) --out FILE --metrics FILE
   bench-serve: --ckpt PATH --count N --occupancy N [--max-new N --top-k K
               --temperature F --seed N --metrics FILE]
+  faults:     --faults 'name@step=N,name@count=K,name' (deterministic fault
+              injection, e.g. 'pool.sweep_panic@step=3'; events surface as
+              fault_events in --report / --metrics JSON)
   output:     --out runs/NAME.csv --report runs/NAME.json";
 
 fn engine_from(args: &Args) -> Result<Option<Arc<XlaEngine>>> {
@@ -194,7 +198,11 @@ fn cmd_train(args: &Args) -> Result<()> {
     }
     if let Some(path) = args.get("report") {
         // Fig. 4/5-style plots read this instead of scraping stdout
-        let j = json::obj(vec![("config", run.rc.to_json()), ("report", report.to_json())]);
+        let j = json::obj(vec![
+            ("config", run.rc.to_json()),
+            ("report", report.to_json()),
+            ("fault_events", layertime::fault::events_json()),
+        ]);
         std::fs::write(path, j.to_string_pretty())?;
         println!("wrote {}", path);
     }
@@ -486,10 +494,11 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let qs = srv.queue().stats();
     let met = &srv.metrics;
     println!(
-        "completed {}/{} request(s): {:.1} tok/s decode ({:.1} steady-state), mean occupancy \
-         {:.2} (peak {}), {} prefill / {} decode step(s), {} reload(s)",
+        "completed {}/{} request(s) ({} timeout(s)): {:.1} tok/s decode ({:.1} steady-state), \
+         mean occupancy {:.2} (peak {}), {} prefill / {} decode step(s), {} reload(s)",
         met.completed,
         qs.submitted,
+        met.timeouts,
         met.tokens_per_sec(),
         met.decode_tokens_per_sec(),
         met.mean_occupancy(),
@@ -530,7 +539,15 @@ fn cmd_bench_serve(args: &Args) -> Result<()> {
             // pattern continuous batching exists for
             let plen = 1 + rng.range(m.seq / 2);
             let prompt = (0..plen).map(|_| rng.range(m.vocab) as i32).collect();
-            GenerateRequest { id: i as u64, prompt, max_new, top_k, temperature, seed: i as u64 }
+            GenerateRequest {
+                id: i as u64,
+                prompt,
+                max_new,
+                top_k,
+                temperature,
+                seed: i as u64,
+                deadline_ms: 0,
+            }
         })
         .collect();
     let mut srv = ServeLoop::new(inf, occupancy)?;
@@ -711,6 +728,12 @@ fn cmd_info(args: &Args) -> Result<()> {
 fn main() -> Result<()> {
     let args = Args::from_env();
     let cmd = args.subcommand().unwrap_or("help").to_string();
+    if let Some(spec) = args.get("faults") {
+        // arm the deterministic fault-injection registry before any
+        // subsystem starts (chaos testing; see the fault module docs)
+        layertime::fault::arm(spec).map_err(|e| anyhow!("--faults: {}", e))?;
+        eprintln!("fault injection armed: {}", spec);
+    }
     match cmd.as_str() {
         "train" => cmd_train(&args),
         "generate" => cmd_generate(&args),

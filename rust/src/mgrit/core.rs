@@ -167,6 +167,15 @@ impl MgritCore {
         self.pool = pool;
     }
 
+    /// Override the relaxation worker count for the next solve. The
+    /// sweep-panic last-resort path (`set_pool(None)` + `set_workers(1)`)
+    /// runs the same V-cycle schedule entirely in-thread — bitwise
+    /// identical to the threaded sweeps, no threads to fail. A later
+    /// `set_pool(Some(..))` re-adopts that pool's count.
+    pub fn set_workers(&mut self, n: usize) {
+        self.workers = n.max(1);
+    }
+
     pub fn n_levels(&self) -> usize {
         self.levels.len()
     }

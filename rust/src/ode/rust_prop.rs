@@ -266,6 +266,13 @@ impl Propagator for RustPropagator {
         let h = self.hs[layer] * h_scale;
         let params = self.params.read().unwrap();
         self.apply_into(layer, &params[layer], h, z.data(), out.data_mut());
+        // deterministic chaos hook (one relaxed atomic load when disarmed,
+        // rust/src/fault): hits count Φ forward kernel evaluations, so
+        // `kernel.phi_nan@step=N` poisons the N-th evaluation's output —
+        // the session's non-finite guard must catch it before Adam does
+        if crate::faultpoint!("kernel.phi_nan") {
+            out.data_mut()[0] = f32::NAN;
+        }
     }
 
     /// Batched steps under a single read-lock acquisition (the v2
@@ -331,6 +338,11 @@ impl Propagator for RustPropagator {
             let h = self.hs[layer] * h_scale;
             let (head, tail) = states.split_at_mut(i);
             self.apply_into(layer, &params[layer], h, head[i - 1].data(), tail[0].data_mut());
+            // same chaos hook as `step_into`: hits share the Φ-evaluation
+            // counting, whichever sweep shape the evaluation runs in
+            if crate::faultpoint!("kernel.phi_nan") {
+                tail[0].data_mut()[0] = f32::NAN;
+            }
         }
     }
 

@@ -96,6 +96,13 @@ impl Optimizer {
         (&self.m, &self.v)
     }
 
+    /// Are all moment entries finite? The invariant the session's
+    /// non-finite guard protects: a skipped/rolled-back step must never
+    /// leak NaN/Inf into the Adam state (pinned by `rust/tests/chaos.rs`).
+    pub fn moments_finite(&self) -> bool {
+        self.m.iter().chain(self.v.iter()).all(|g| g.iter().all(|x| x.is_finite()))
+    }
+
     /// Restore moment state saved by [`Optimizer::moments`] plus the step
     /// counter. Group count and sizes must match this optimizer exactly
     /// (the checkpoint loader validates them against the model config

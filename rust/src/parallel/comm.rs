@@ -31,6 +31,32 @@ use std::sync::{Arc, Condvar, Mutex, MutexGuard};
 /// User tags must stay below it.
 pub const RETURN_BIT: u64 = 1 << 63;
 
+/// Typed fabric failure. Blocking on a message from a rank whose endpoint
+/// has dropped used to `assert!` inside the worker — an untyped panic the
+/// recovery layer could not tell apart from a genuine bug. Now the sweep
+/// executors receive through [`Endpoint::try_recv`], and a dead sender
+/// surfaces as this error through the sweep result, so the owner's
+/// failure path is pool-rebuild + retry (see
+/// [`crate::coordinator::ForwardContext`]) instead of process abort.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FabricError {
+    /// The sending rank's endpoint dropped with no matching message
+    /// queued — the peer panicked or was torn down mid-sweep.
+    DeadSender { from: usize, tag: u64 },
+}
+
+impl std::fmt::Display for FabricError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            FabricError::DeadSender { from, tag } => {
+                write!(f, "fabric sender rank {} dropped (tag {})", from, tag)
+            }
+        }
+    }
+}
+
+impl std::error::Error for FabricError {}
+
 /// A tagged message between ranks.
 #[derive(Debug)]
 pub struct Msg {
@@ -140,23 +166,30 @@ impl Endpoint {
         mb.cv.notify_all();
     }
 
-    /// Blocking receive of the next message matching (from, tag). Panics
-    /// if the sending rank's endpoint has dropped with no matching message
-    /// queued (the old channel-disconnect semantics; this is how a
-    /// panicked scoped-spawn slab unwinds its blocked right neighbour).
-    pub fn recv(&mut self, from: usize, tag: u64) -> Vec<f32> {
+    /// Blocking receive of the next message matching (from, tag). Returns
+    /// [`FabricError::DeadSender`] if the sending rank's endpoint has
+    /// dropped with no matching message queued (the channel-disconnect
+    /// condition; a panicked slab unwinds its blocked right neighbour this
+    /// way). A queued message is still deliverable after the sender dies.
+    pub fn try_recv(&mut self, from: usize, tag: u64) -> Result<Vec<f32>, FabricError> {
         let mb = &self.mesh.boxes[self.rank];
         let mut q = mb.lock();
         loop {
             if let Some(i) = q.iter().position(|m| m.from == from && m.tag == tag) {
-                return q.remove(i).expect("indexed message").data;
+                return Ok(q.remove(i).expect("indexed message").data);
             }
-            assert!(
-                self.mesh.alive[from].load(Ordering::SeqCst),
-                "fabric sender dropped"
-            );
+            if !self.mesh.alive[from].load(Ordering::SeqCst) {
+                return Err(FabricError::DeadSender { from, tag });
+            }
             q = mb.cv.wait(q).unwrap_or_else(|e| e.into_inner());
         }
+    }
+
+    /// Panicking wrapper of [`Endpoint::try_recv`] for call sites inside a
+    /// sweep body (the unwind carries the typed [`FabricError`] payload,
+    /// so `catch_unwind` callers can downcast it back out of the panic).
+    pub fn recv(&mut self, from: usize, tag: u64) -> Vec<f32> {
+        self.try_recv(from, tag).unwrap_or_else(|e| std::panic::panic_any(e))
     }
 
     /// Allocation-free (at steady state) send: fill the endpoint's
@@ -181,11 +214,25 @@ impl Endpoint {
     /// mail the transport buffer straight back to the sender so its next
     /// `send_scratch` reuses it. If `consume` panics (e.g. a poison-halo
     /// length check), the buffer is dropped with the unwind — the failed
-    /// sweep poisons the pool and the fabric is rebuilt anyway.
-    pub fn recv_scratch(&mut self, from: usize, tag: u64, consume: impl FnOnce(&[f32])) {
-        let data = self.recv(from, tag);
+    /// sweep poisons the pool and the fabric is rebuilt anyway. A dead
+    /// sender surfaces as a typed [`FabricError`] instead of the payload.
+    pub fn try_recv_scratch(
+        &mut self,
+        from: usize,
+        tag: u64,
+        consume: impl FnOnce(&[f32]),
+    ) -> Result<(), FabricError> {
+        let data = self.try_recv(from, tag)?;
         consume(&data);
         self.send(from, tag | RETURN_BIT, data);
+        Ok(())
+    }
+
+    /// Panicking wrapper of [`Endpoint::try_recv_scratch`] (typed
+    /// [`FabricError`] panic payload, like [`Endpoint::recv`]).
+    pub fn recv_scratch(&mut self, from: usize, tag: u64, consume: impl FnOnce(&[f32])) {
+        self.try_recv_scratch(from, tag, consume)
+            .unwrap_or_else(|e| std::panic::panic_any(e))
     }
 
     /// Sum-allreduce across all ranks (flat binary-tree reduce + broadcast).
@@ -270,17 +317,23 @@ mod tests {
     }
 
     #[test]
-    fn recv_from_dropped_sender_panics() {
+    fn recv_from_dropped_sender_is_a_typed_error() {
         let mut fabric = Fabric::new(2);
         let a = fabric.take(0);
         let mut b = fabric.take(1);
         a.send(1, 3, vec![9.0]);
         drop(a);
         // a queued message is still deliverable after the sender dies...
-        assert_eq!(b.recv(0, 3), vec![9.0]);
-        // ...but waiting for one that never arrives fails loudly
-        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| b.recv(0, 4)));
-        assert!(r.is_err(), "recv from a dead sender must panic, not hang");
+        assert_eq!(b.try_recv(0, 3), Ok(vec![9.0]));
+        // ...but waiting for one that never arrives is the typed error,
+        // not a hang and not an untyped panic
+        assert_eq!(b.try_recv(0, 4), Err(FabricError::DeadSender { from: 0, tag: 4 }));
+        // the panicking wrapper carries the same typed payload, so sweep
+        // owners can downcast it out of a caught unwind
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| b.recv(0, 5)));
+        let payload = r.expect_err("recv from a dead sender must panic, not hang");
+        let e = payload.downcast_ref::<FabricError>().expect("typed FabricError payload");
+        assert_eq!(*e, FabricError::DeadSender { from: 0, tag: 5 });
     }
 
     #[test]

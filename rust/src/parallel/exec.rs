@@ -371,7 +371,13 @@ where
 /// halo so its right neighbour — possibly blocked on the halo recv —
 /// fails the length check instead of deadlocking the sweep barrier; the
 /// chain unwinds rank by rank, the barrier completes, the pool is
-/// **poisoned**, and the original payload re-raises here.
+/// **poisoned**, and the original payload re-raises here. A dead-sender
+/// halo recv unwinds with a typed [`crate::parallel::FabricError`]
+/// payload (not an untyped assert), so the owner can downcast the caught
+/// panic and route it through pool-rebuild + retry
+/// ([`crate::coordinator::ForwardContext`]) instead of aborting. The
+/// `pool.sweep_panic` fault point (rank 0, counted per sweep) injects a
+/// deterministic slab panic for `rust/tests/chaos.rs`.
 pub fn pool_fc_relax_mut<T, F>(pool: &WorkerPool, w: &mut [T], g: Option<&[T]>, cf: usize, step: F)
 where
     T: RelaxState + 'static,
@@ -385,6 +391,12 @@ where
     let step_ref = &step;
     pool.run_sweep(active, &|rank: usize, ep: &mut Endpoint, ws: &mut Workspace| {
         let res = catch_unwind(AssertUnwindSafe(|| {
+            // deterministic chaos hook: one relaxed atomic load when
+            // disarmed (rust/src/fault). Counted on rank 0 only, so
+            // `pool.sweep_panic@step=N` means "the N-th pooled FCF sweep".
+            if rank == 0 && crate::faultpoint!("pool.sweep_panic") {
+                panic!("injected: pool.sweep_panic");
+            }
             let (vlo, vlen, cl) = slab_view(chunks, cf, active, rank);
             // SAFETY: slab_view windows are pairwise disjoint across the
             // active ranks of one sweep (see SharedGrid::window).

@@ -76,7 +76,7 @@ pub mod pool;
 pub mod simulator;
 pub mod topology;
 
-pub use comm::Fabric;
+pub use comm::{Fabric, FabricError};
 pub use exec::RelaxState;
 pub use pool::{WorkerPool, Workspace};
 pub use simulator::{DeviceModel, SimConfig, Simulator};

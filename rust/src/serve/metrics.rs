@@ -35,6 +35,9 @@ pub struct ServeMetrics {
     pub idle_steps: u64,
     /// Successful checkpoint hot-reloads.
     pub reloads: u64,
+    /// Requests retired early by their [`super::GenerateRequest::deadline_ms`]
+    /// budget (disjoint from `completed`).
+    pub timeouts: u64,
     /// Highest batch occupancy observed.
     pub peak_occupancy: usize,
     /// Highest queue depth observed at a step boundary.
@@ -67,6 +70,7 @@ impl ServeMetrics {
             prefill_steps: 0,
             idle_steps: 0,
             reloads: 0,
+            timeouts: 0,
             peak_occupancy: 0,
             peak_queue_depth: 0,
             occupancy_sum: 0,
@@ -197,6 +201,7 @@ impl ServeMetrics {
             ("prefill_steps", json::int(self.prefill_steps as i64)),
             ("idle_steps", json::int(self.idle_steps as i64)),
             ("reloads", json::int(self.reloads as i64)),
+            ("timeouts", json::int(self.timeouts as i64)),
             ("mean_occupancy", json::num(self.mean_occupancy())),
             ("peak_occupancy", json::int(self.peak_occupancy as i64)),
             ("mean_queue_depth", json::num(self.mean_queue_depth())),
@@ -209,6 +214,9 @@ impl ServeMetrics {
             ("step", ServeMetrics::dist_json(&self.step_secs)),
             ("prefill_step", ServeMetrics::dist_json(&self.prefill_step_secs)),
             ("decode_step", ServeMetrics::dist_json(&self.decode_step_secs)),
+            // injected + organic fault events since process start — the
+            // serve half of the `--report` fault_events surface
+            ("fault_events", crate::fault::events_json()),
         ])
     }
 }
@@ -265,6 +273,8 @@ mod tests {
         assert_eq!(j.get("submitted").unwrap().int(), Some(3));
         assert_eq!(j.get("rejected").unwrap().int(), Some(1));
         assert_eq!(j.get("completed").unwrap().int(), Some(1));
+        assert_eq!(j.get("timeouts").unwrap().int(), Some(0));
+        assert!(j.get("fault_events").unwrap().arr().is_some());
         assert_eq!(j.get("prefill_steps").unwrap().int(), Some(1));
         assert_eq!(j.get("prefill_step").unwrap().get("samples").unwrap().int(), Some(1));
         assert_eq!(j.get("decode_step").unwrap().get("samples").unwrap().int(), Some(1));

@@ -83,12 +83,45 @@ pub struct GenerateRequest {
     /// `Rng::new(seed)` regardless of which slot or batch the request
     /// lands in, which is what makes outputs occupancy-independent.
     pub seed: u64,
+    /// Per-request deadline in milliseconds from submission; `0` = none.
+    /// A request whose deadline expires before its next decode step is
+    /// retired early with [`RequestOutcome::Timeout`] — its tokens so far
+    /// are returned, and the neighbouring slots' outputs are untouched
+    /// (early retirement is already row-independent).
+    pub deadline_ms: u64,
 }
 
 impl GenerateRequest {
     /// A greedy request with default everything but the prompt.
     pub fn greedy(id: u64, prompt: Vec<i32>) -> GenerateRequest {
-        GenerateRequest { id, prompt, max_new: 0, top_k: 0, temperature: 1.0, seed: id }
+        GenerateRequest {
+            id,
+            prompt,
+            max_new: 0,
+            top_k: 0,
+            temperature: 1.0,
+            seed: id,
+            deadline_ms: 0,
+        }
+    }
+}
+
+/// How a request left the board.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RequestOutcome {
+    /// Ran to its token budget (or the model window).
+    Done,
+    /// Retired early because its [`GenerateRequest::deadline_ms`] expired;
+    /// `tokens` holds everything generated up to that point.
+    Timeout,
+}
+
+impl RequestOutcome {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            RequestOutcome::Done => "done",
+            RequestOutcome::Timeout => "timeout",
+        }
     }
 }
 
@@ -105,11 +138,14 @@ pub struct CompletedRequest {
     pub ttft: f64,
     /// Total latency, seconds from submission to retirement.
     pub latency: f64,
+    /// Whether the request ran to completion or was retired by its
+    /// deadline.
+    pub outcome: RequestOutcome,
 }
 
 impl CompletedRequest {
     /// JSON row: `{"id", "prompt_len", "generated", "tokens", "ttft_ms",
-    /// "latency_ms"}`.
+    /// "latency_ms", "outcome"}`.
     pub fn to_json(&self) -> Json {
         json::obj(vec![
             ("id", json::int(self.id as i64)),
@@ -121,6 +157,7 @@ impl CompletedRequest {
             ),
             ("ttft_ms", json::num(self.ttft * 1e3)),
             ("latency_ms", json::num(self.latency * 1e3)),
+            ("outcome", json::s(self.outcome.as_str())),
         ])
     }
 }
@@ -154,9 +191,9 @@ impl std::error::Error for ServeError {}
 /// request objects or `{"requests": [...]}`. Per-object fields: `prompt`
 /// (required, array of token ids), `id` (default: array index), `max_new`
 /// (default 0 = fill window), `top_k` (default 0 = greedy), `temperature`
-/// (default 1.0), `seed` (default: the id). This is the `layertime serve
-/// --requests FILE` file-request format (CI runs it without a network
-/// stack).
+/// (default 1.0), `seed` (default: the id), `deadline_ms` (default 0 =
+/// no deadline). This is the `layertime serve --requests FILE`
+/// file-request format (CI runs it without a network stack).
 pub fn requests_from_json(text: &str) -> Result<Vec<GenerateRequest>> {
     let doc = Json::parse(text).context("parsing requests JSON")?;
     let items = match doc.get("requests") {
@@ -207,10 +244,19 @@ pub fn requests_from_json(text: &str) -> Result<Vec<GenerateRequest>> {
             Some(v) => v.int().with_context(|| format!("request {}: bad \"seed\"", i))? as u64,
             None => id,
         };
+        let deadline_ms = match item.get("deadline_ms") {
+            Some(v) => {
+                let n =
+                    v.int().with_context(|| format!("request {}: bad \"deadline_ms\"", i))?;
+                ensure!(n >= 0, "request {}: \"deadline_ms\" must be ≥ 0", i);
+                n as u64
+            }
+            None => 0,
+        };
         if prompt.is_empty() {
             bail!("request {}: empty prompt", i);
         }
-        out.push(GenerateRequest { id, prompt, max_new, top_k, temperature, seed });
+        out.push(GenerateRequest { id, prompt, max_new, top_k, temperature, seed, deadline_ms });
     }
     Ok(out)
 }
@@ -229,12 +275,14 @@ mod tests {
         assert_eq!(reqs[0].top_k, 0);
         assert_eq!(reqs[0].temperature, 1.0);
         assert_eq!(reqs[0].seed, 0, "seed defaults to the id");
+        assert_eq!(reqs[0].deadline_ms, 0, "no deadline by default");
     }
 
     #[test]
     fn requests_parse_full_fields_and_wrapper() {
         let text = r#"{"requests": [
-            {"id": 7, "prompt": [4], "max_new": 3, "top_k": 5, "temperature": 0.8, "seed": 99},
+            {"id": 7, "prompt": [4], "max_new": 3, "top_k": 5, "temperature": 0.8,
+             "seed": 99, "deadline_ms": 250},
             {"prompt": [1, 1]}
         ]}"#;
         let reqs = requests_from_json(text).unwrap();
@@ -244,6 +292,7 @@ mod tests {
         assert_eq!(reqs[0].top_k, 5);
         assert!((reqs[0].temperature - 0.8).abs() < 1e-6);
         assert_eq!(reqs[0].seed, 99);
+        assert_eq!(reqs[0].deadline_ms, 250);
         assert_eq!(reqs[1].id, 1, "unnumbered request takes its index");
         assert_eq!(reqs[1].seed, 1);
     }
@@ -255,6 +304,10 @@ mod tests {
         assert!(requests_from_json(r#"[{"prompt": [-1]}]"#).is_err(), "negative token");
         assert!(requests_from_json(r#"[{"prompt": [1.5]}]"#).is_err(), "fractional token");
         assert!(requests_from_json(r#"[{"id": 1}]"#).is_err(), "missing prompt");
+        assert!(
+            requests_from_json(r#"[{"prompt": [1], "deadline_ms": -5}]"#).is_err(),
+            "negative deadline"
+        );
         assert!(requests_from_json("not json").is_err());
     }
 
@@ -267,12 +320,15 @@ mod tests {
             generated: 1,
             ttft: 0.002,
             latency: 0.010,
+            outcome: RequestOutcome::Done,
         };
         let j = done.to_json();
         assert_eq!(j.get("id").unwrap().int(), Some(3));
         assert_eq!(j.get("tokens").unwrap().arr().unwrap().len(), 3);
         assert_eq!(j.get("generated").unwrap().int(), Some(1));
         assert!((j.get("ttft_ms").unwrap().num().unwrap() - 2.0).abs() < 1e-9);
+        assert_eq!(j.get("outcome").unwrap().str(), Some("done"));
+        assert_eq!(RequestOutcome::Timeout.as_str(), "timeout");
     }
 
     #[test]

@@ -57,6 +57,12 @@ impl HotReload {
     /// falls back to the next-best file.
     pub fn reject_loaded(&mut self) {
         if let Some(key) = self.loaded.take() {
+            crate::fault::record(
+                "serve.reload",
+                0,
+                "reload_quarantined",
+                format!("{}: checkpoint incompatible with serving session", key.1),
+            );
             self.bad.push(key);
         }
     }
@@ -96,9 +102,15 @@ impl HotReload {
                     self.loaded = Some(key);
                     return Some((path, ck));
                 }
-                Err(_) => {
+                Err(e) => {
                     // truncated / checksum-failed / foreign file: skip it
                     // now and forever, keep looking at older candidates
+                    crate::fault::record(
+                        "serve.reload",
+                        0,
+                        "reload_quarantined",
+                        format!("{}: {}", key.1, e),
+                    );
                     self.bad.push(key);
                 }
             }

@@ -6,7 +6,11 @@
 //! 1. (periodically) poll the [`super::HotReload`] watcher — weights only
 //!    ever swap **between** steps, so every request's step-`p` token comes
 //!    from exactly one checkpoint snapshot;
-//! 2. admit queued requests into free slots — each newcomer's board row is
+//! 2. sweep per-request deadlines — a slot whose
+//!    [`GenerateRequest::deadline_ms`] budget expired retires immediately
+//!    with [`super::RequestOutcome::Timeout`] and its tokens so far (the
+//!    `serve.deadline` fault point forces this deterministically) — then
+//!    admit queued requests into free slots: each newcomer's board row is
 //!    rewritten (prompt + zeroed tail, exactly the solo layout) and named
 //!    in `cold_rows` so the forward resets just that row's warm iterate;
 //! 3. one batched forward — with incremental decode on (the session
@@ -40,7 +44,7 @@ use crate::util::rng::Rng;
 use super::metrics::ServeMetrics;
 use super::queue::RequestQueue;
 use super::reload::HotReload;
-use super::{CompletedRequest, GenerateRequest, ServeError};
+use super::{CompletedRequest, GenerateRequest, RequestOutcome, ServeError};
 
 /// What one scheduler step did.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -68,6 +72,8 @@ struct Slot {
     submitted_at: Instant,
     /// Time-to-first-token, set when the first token lands.
     ttft: Option<f64>,
+    /// Wall-clock budget in ms from submission; `0` = none.
+    deadline_ms: u64,
 }
 
 impl Slot {
@@ -82,6 +88,7 @@ impl Slot {
             prompt_len: 0,
             submitted_at: Instant::now(),
             ttft: None,
+            deadline_ms: 0,
         }
     }
 }
@@ -236,6 +243,7 @@ impl ServeLoop {
             prompt_len: plen,
             submitted_at,
             ttft: None,
+            deadline_ms: req.deadline_ms,
         };
     }
 
@@ -250,7 +258,46 @@ impl ServeLoop {
         }
         let (b, s, vocab) =
             (self.session.rc.model.batch, self.session.rc.model.seq, self.session.rc.model.vocab);
-        // 2. admit queued requests into free slots
+        // 2a. deadline sweep — a slot whose wall-clock budget expired
+        // retires *before* the forward with a typed Timeout outcome and
+        // whatever it generated so far; its row frees for admission this
+        // very step. Row independence means nobody else's tokens move.
+        // The `serve.deadline` fault point forces expiry on demand.
+        for r in 0..b {
+            let sl = &mut self.slots[r];
+            if !sl.active || sl.deadline_ms == 0 {
+                continue;
+            }
+            let elapsed_ms = sl.submitted_at.elapsed().as_millis() as u64;
+            if crate::faultpoint!("serve.deadline") || elapsed_ms >= sl.deadline_ms {
+                sl.active = false;
+                let latency = sl.submitted_at.elapsed().as_secs_f64();
+                self.metrics.timeouts += 1;
+                self.metrics.push_latency(latency);
+                self.completed.push(CompletedRequest {
+                    id: sl.id,
+                    tokens: self.board[r * s..r * s + sl.cursor].to_vec(),
+                    prompt_len: sl.prompt_len,
+                    generated: sl.cursor - sl.prompt_len,
+                    ttft: sl.ttft.unwrap_or(latency),
+                    latency,
+                    outcome: RequestOutcome::Timeout,
+                });
+                crate::fault::record(
+                    "serve.deadline",
+                    self.steps,
+                    "timeout",
+                    format!(
+                        "request {} exceeded {}ms; returning {} generated tokens",
+                        sl.id,
+                        sl.deadline_ms,
+                        sl.cursor - sl.prompt_len
+                    ),
+                );
+                self.session.release_row(r);
+            }
+        }
+        // 2b. admit queued requests into free slots
         self.cold_rows.clear();
         for r in 0..b {
             if self.slots[r].active {
@@ -316,6 +363,7 @@ impl ServeLoop {
                     generated: sl.cursor - sl.prompt_len,
                     ttft: sl.ttft.unwrap_or(latency),
                     latency,
+                    outcome: RequestOutcome::Done,
                 });
                 self.retired.push(r);
             }
@@ -333,6 +381,12 @@ impl ServeLoop {
     /// Serve until the queue is closed **and** drained and every slot has
     /// retired. While fully idle, blocks up to `idle_wait` for new work
     /// (so a file-mode CLI run exits promptly once its feeders finish).
+    ///
+    /// This is the graceful-drain path: after
+    /// [`RequestQueue::close`] new submissions are rejected with
+    /// [`ServeError::Closed`] while every request already queued or on the
+    /// board runs to completion (or its deadline), so no accepted work is
+    /// dropped on shutdown.
     pub fn run(&mut self, idle_wait: Duration) -> Result<()> {
         loop {
             if self.active() == 0 && self.queue.depth() == 0 {
@@ -489,6 +543,28 @@ mod tests {
         assert_eq!(ids, (0..2 * b as u64 + 1).collect::<Vec<_>>());
         assert!(srv.metrics.peak_occupancy <= b);
         assert!(srv.metrics.mean_occupancy() > 1.0, "slots should overlap in flight");
+    }
+
+    #[test]
+    fn expired_deadline_retires_request_with_typed_timeout() {
+        let mut srv = ServeLoop::new(tiny_lm_session(), 4).unwrap();
+        let req = GenerateRequest {
+            max_new: 5,
+            deadline_ms: 1,
+            ..GenerateRequest::greedy(9, vec![1, 2])
+        };
+        srv.submit(req).unwrap();
+        srv.step().unwrap(); // admits + decodes one token
+        std::thread::sleep(Duration::from_millis(5)); // let the 1 ms budget lapse
+        srv.step().unwrap(); // deadline sweep retires the slot
+        let done = srv.take_completed();
+        assert_eq!(done.len(), 1);
+        assert_eq!(done[0].outcome, RequestOutcome::Timeout);
+        assert_eq!(done[0].generated, 1, "tokens so far come back with the timeout");
+        assert_eq!(&done[0].tokens[..2], &[1, 2]);
+        assert_eq!(srv.metrics.timeouts, 1);
+        assert_eq!(srv.metrics.completed, 0, "timeouts are not counted as completions");
+        assert_eq!(srv.active(), 0, "the slot is free for the next occupant");
     }
 
     #[test]

@@ -38,6 +38,14 @@
 //!    exactly zero times once warm, again in both decode modes — the
 //!    bounded queue, slot table, board, retirement list, decode cache, and
 //!    capped metrics samples are all preallocated.
+//!
+//! Every audited path now crosses **disarmed `faultpoint!` sites**
+//! ([`layertime::fault`]): the kernel layer (`kernel.phi_nan`), the pooled
+//! sweeps (`pool.sweep_panic`), the train step (`train.nan_grad`,
+//! `train.loss_spike`), and the serve scheduler (`serve.deadline`). The
+//! audit runs with the registry disarmed — its entire cost is one relaxed
+//! atomic load per site — so the zero-allocation pins above double as the
+//! zero-cost-when-disarmed acceptance criterion of the fault harness.
 
 use std::alloc::{GlobalAlloc, Layout, System};
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -343,6 +351,10 @@ fn audit_serve(incremental: bool) {
 /// batched decode loop, and the continuous-batching serve step.
 #[test]
 fn steady_state_hot_path_is_allocation_free() {
+    assert!(
+        !layertime::fault::armed(),
+        "the audit measures the disarmed fast path: one relaxed atomic load per fault point"
+    );
     audit_arch(Arch::Encoder);
     audit_arch(Arch::EncDec);
     audit_solve_context(1);

@@ -1,0 +1,354 @@
+//! Chaos acceptance for the fault-injection harness (`--faults`) and the
+//! self-healing policies it exercises. The contract, per fault class:
+//! recovery is either **bitwise identical** to a run that never faulted
+//! (step records, final parameters, served tokens) or a **documented
+//! typed error/event** — never a poisoned Adam moment, a torn `.ltcp`
+//! file, or a process abort.
+//!
+//! The fault registry is process-global (specs must cross pool-thread
+//! boundaries), so every test here serializes on one lock and resets the
+//! registry on entry and exit.
+
+use std::sync::Mutex;
+
+use layertime::checkpoint::{autosave_path, Checkpoint};
+use layertime::config::{presets, MgritConfig, OptKind, RunConfig};
+use layertime::coordinator::{AnomalyKind, Mgrit, Session, StepRecord, Task};
+use layertime::fault;
+use layertime::infer::InferSession;
+use layertime::model::{Init, ParamStore};
+use layertime::serve::{
+    CompletedRequest, GenerateRequest, HotReload, RequestOutcome, RequestQueue, ServeError,
+    ServeLoop,
+};
+
+static CHAOS_LOCK: Mutex<()> = Mutex::new(());
+
+/// Serialize on the shared lock and start from a clean (disarmed, empty
+/// event log) registry.
+fn chaos_guard() -> std::sync::MutexGuard<'static, ()> {
+    let g = CHAOS_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    fault::reset();
+    g
+}
+
+fn has_event(point: &str, action: &str) -> bool {
+    fault::events().iter().any(|e| e.point == point && e.action == action)
+}
+
+fn tmp_dir(tag: &str) -> std::path::PathBuf {
+    let d = std::env::temp_dir().join(format!("lt_chaos_{}_{}", tag, std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+/// Exact-propagation training config (serial fwd/bwd, Adam, fixed
+/// controller): the configuration under which a policy-1 rewind+replay is
+/// pinned bitwise (no warm iterate to advance on the faulted attempt).
+fn serial_rc(steps: usize) -> RunConfig {
+    let mut rc = presets::by_name("mc").unwrap();
+    presets::shrink_for_bench(&mut rc);
+    rc.mgrit = MgritConfig { cf: 2, levels: 2, fwd_iters: None, bwd_iters: None, fcf: true };
+    rc.train.steps = steps;
+    rc.train.opt = OptKind::Adam;
+    rc.train.adaptive = false;
+    rc.train.eval_every = 1000;
+    rc
+}
+
+/// MGRIT-both-directions config for the pooled-sweep fault classes.
+fn mgrit_rc(steps: usize) -> RunConfig {
+    let mut rc = serial_rc(steps);
+    rc.mgrit = MgritConfig { cf: 2, levels: 2, fwd_iters: Some(1), bwd_iters: Some(1), fcf: true };
+    rc
+}
+
+type RecBits = (usize, u32, u32, u32, bool, Option<u64>, Option<u64>);
+
+fn bits(r: &StepRecord) -> RecBits {
+    (
+        r.step,
+        r.loss.to_bits(),
+        r.acc.to_bits(),
+        r.lr.to_bits(),
+        r.serial,
+        r.rho_fwd.map(f64::to_bits),
+        r.rho_bwd.map(f64::to_bits),
+    )
+}
+
+fn params_bits(s: &Session) -> Vec<Vec<u32>> {
+    let mut out: Vec<Vec<u32>> = s
+        .params
+        .layers
+        .read()
+        .unwrap()
+        .iter()
+        .map(|l| l.iter().map(|x| x.to_bits()).collect())
+        .collect();
+    for g in [&s.params.w_emb, &s.params.w_pos, &s.params.w_out, &s.params.w_cls] {
+        out.push(g.iter().map(|x| x.to_bits()).collect());
+    }
+    out
+}
+
+fn run_steps(rc: &RunConfig, workers: usize, n: usize) -> (Session, Vec<RecBits>) {
+    let mut s =
+        Session::builder().config(rc.clone()).task(Task::Tag).workers(workers).build().unwrap();
+    let recs = (0..n).map(|_| bits(&s.train_step())).collect();
+    (s, recs)
+}
+
+// --- policy 1: non-finite guard ----------------------------------------
+
+#[test]
+fn nan_gradient_step_is_skipped_and_replayed_bitwise() {
+    let _g = chaos_guard();
+    let rc = serial_rc(6);
+    let (clean, clean_recs) = run_steps(&rc, 1, 6);
+
+    fault::arm("train.nan_grad@step=2").unwrap();
+    let (hurt, hurt_recs) = run_steps(&rc, 1, 6);
+
+    assert_eq!(fault::fired("train.nan_grad"), 1);
+    assert_eq!(clean_recs, hurt_recs, "the replayed run must be bitwise clean");
+    assert_eq!(params_bits(&clean), params_bits(&hurt), "final parameters must match bitwise");
+    assert!(hurt.moments_finite(), "Adam moments must never see the NaN");
+    let an = hurt.anomalies();
+    assert_eq!(an.len(), 1, "one typed anomaly for the one injected fault");
+    assert!(matches!(an[0].kind, AnomalyKind::NonFiniteGrad));
+    assert_eq!(an[0].step, 2);
+    assert!(has_event("train.step_anomaly", "skipped_step"));
+    fault::reset();
+}
+
+#[test]
+fn kernel_nan_is_caught_before_the_optimizer_and_replayed_bitwise() {
+    let _g = chaos_guard();
+    let rc = serial_rc(5);
+    let (clean, clean_recs) = run_steps(&rc, 1, 5);
+
+    // poison the very first Φ forward evaluation: the NaN propagates
+    // through loss and/or gradients and must be caught by the same guard
+    fault::arm("kernel.phi_nan@step=1").unwrap();
+    let (hurt, hurt_recs) = run_steps(&rc, 1, 5);
+
+    assert_eq!(fault::fired("kernel.phi_nan"), 1);
+    assert_eq!(clean_recs, hurt_recs, "the replayed run must be bitwise clean");
+    assert_eq!(params_bits(&clean), params_bits(&hurt));
+    assert!(hurt.moments_finite());
+    assert_eq!(hurt.anomalies().len(), 1);
+    assert_eq!(hurt.anomalies()[0].step, 1);
+    fault::reset();
+}
+
+// --- policy 3: pooled-sweep panic recovery -----------------------------
+
+#[test]
+fn single_sweep_panic_retries_on_a_rebuilt_pool_bitwise() {
+    let _g = chaos_guard();
+    let rc = mgrit_rc(4);
+    let (clean, clean_recs) = run_steps(&rc, 2, 4);
+
+    fault::arm("pool.sweep_panic@step=3").unwrap();
+    let (hurt, hurt_recs) = run_steps(&rc, 2, 4);
+
+    assert_eq!(fault::fired("pool.sweep_panic"), 1);
+    assert_eq!(clean_recs, hurt_recs, "the retried sweep must be bitwise clean");
+    assert_eq!(params_bits(&clean), params_bits(&hurt));
+    assert!(has_event("pool.sweep", "sweep_retry"));
+    assert!(!has_event("pool.sweep", "sweep_serial_fallback"), "one panic needs no fallback");
+    assert!(hurt.anomalies().is_empty(), "a recovered sweep is not a training anomaly");
+    fault::reset();
+}
+
+#[test]
+fn double_sweep_panic_falls_back_in_thread_bitwise() {
+    let _g = chaos_guard();
+    let rc = mgrit_rc(4);
+    let (clean, clean_recs) = run_steps(&rc, 2, 4);
+
+    // the first pooled sweep panics, its retry panics again (count=2), and
+    // the in-thread V-cycle fallback — no pooled sweeps, so no more hits —
+    // finishes the solve bitwise identically
+    fault::arm("pool.sweep_panic@count=2").unwrap();
+    let (hurt, hurt_recs) = run_steps(&rc, 2, 4);
+
+    assert_eq!(fault::fired("pool.sweep_panic"), 2);
+    assert_eq!(clean_recs, hurt_recs, "the in-thread fallback must be bitwise clean");
+    assert_eq!(params_bits(&clean), params_bits(&hurt));
+    assert!(has_event("pool.sweep", "sweep_retry"));
+    assert!(has_event("pool.sweep", "sweep_serial_fallback"));
+    fault::reset();
+}
+
+// --- policy 2: divergence watchdog auto-rollback ------------------------
+
+#[test]
+fn divergence_rollback_restores_the_autosave_and_replays_bitwise() {
+    let _g = chaos_guard();
+    let dir = tmp_dir("rollback");
+    let base = dir.join("model.ltcp").to_str().unwrap().to_string();
+    let mut rc = mgrit_rc(8);
+    rc.train.adaptive = true; // the watchdog only arms on adaptive runs
+    rc.train.probe_every = 100; // but keep the controller from switching
+
+    let mut clean =
+        Session::builder().config(rc.clone()).task(Task::Tag).workers(1).build().unwrap();
+    let clean_report = clean.train().unwrap();
+
+    let mut hurt =
+        Session::builder().config(rc).task(Task::Tag).workers(1).build().unwrap();
+    hurt.set_autosave(&base, 2, 0);
+    // a finite 1e6 loss at step 5 trips the watchdog; the newest autosave
+    // (step 4 — byte-identical to the clean run's state there, nothing
+    // fired earlier) is restored in place and steps 5.. replay cleanly
+    fault::arm("train.loss_spike@step=5").unwrap();
+    let hurt_report = hurt.train().unwrap();
+
+    assert_eq!(fault::fired("train.loss_spike"), 1);
+    assert_eq!(hurt.rollback_count(), 1);
+    let a: Vec<RecBits> = clean_report.curve.iter().map(bits).collect();
+    let b: Vec<RecBits> = hurt_report.curve.iter().map(bits).collect();
+    assert_eq!(a, b, "the rolled-back run's curve must be bitwise clean");
+    assert_eq!(params_bits(&clean), params_bits(&hurt));
+    assert_eq!(hurt_report.anomalies.len(), 1);
+    assert!(matches!(hurt_report.anomalies[0].kind, AnomalyKind::Divergence));
+    assert!(has_event("train.watchdog", "rollback"));
+    let _ = std::fs::remove_dir_all(&dir);
+    fault::reset();
+}
+
+// --- checkpoint fault classes -------------------------------------------
+
+#[test]
+fn partial_autosave_write_leaves_no_torn_checkpoint_and_training_continues() {
+    let _g = chaos_guard();
+    let dir = tmp_dir("autosave");
+    let base = dir.join("model.ltcp").to_str().unwrap().to_string();
+    let mut s = Session::builder().config(serial_rc(6)).task(Task::Tag).build().unwrap();
+    s.set_autosave(&base, 2, 0);
+
+    // the first autosave (step 2) crashes mid-write: half the bytes reach
+    // the .tmp file and the rename never happens
+    fault::arm("checkpoint.partial_write").unwrap();
+    let report = s.train().unwrap();
+
+    assert_eq!(fault::fired("checkpoint.partial_write"), 1);
+    assert_eq!(report.curve.len(), 6, "a failed snapshot must not kill a healthy run");
+    assert!(has_event("checkpoint.autosave", "autosave_failed"));
+    assert!(
+        !std::path::Path::new(&autosave_path(&base, 2)).exists(),
+        "the torn write must not produce a .ltcp file"
+    );
+    let mut ltcp = 0;
+    for e in std::fs::read_dir(&dir).unwrap() {
+        let p = e.unwrap().path();
+        if p.extension().and_then(|x| x.to_str()) == Some("ltcp") {
+            ltcp += 1;
+            Checkpoint::read(p.to_str().unwrap())
+                .expect("every surviving .ltcp must read back clean");
+        }
+    }
+    assert_eq!(ltcp, 2, "the step-4 and step-6 autosaves still landed");
+    let _ = std::fs::remove_dir_all(&dir);
+    fault::reset();
+}
+
+#[test]
+fn corrupt_hot_reload_candidate_is_quarantined_with_a_typed_event() {
+    let _g = chaos_guard();
+    let dir = tmp_dir("reload");
+    let mut s = Session::builder().config(serial_rc(2)).task(Task::Tag).build().unwrap();
+    s.train_step();
+    let good = dir.join("model.step00000001.ltcp");
+    s.save(good.to_str().unwrap()).unwrap();
+    // a lexicographically/mtime newer file that is torn garbage
+    std::fs::write(dir.join("model.step00000002.ltcp"), b"torn garbage").unwrap();
+
+    let mut hr = HotReload::new(dir.to_str().unwrap());
+    let (path, _ck) = hr.poll().expect("the watcher must fall back to the older valid file");
+    assert!(path.to_string_lossy().ends_with("model.step00000001.ltcp"));
+    assert_eq!(hr.bad_files(), 1);
+    assert!(has_event("serve.reload", "reload_quarantined"));
+    let _ = std::fs::remove_dir_all(&dir);
+    fault::reset();
+}
+
+// --- serve fault classes -------------------------------------------------
+
+#[test]
+fn queue_overflow_and_close_are_typed_backpressure_not_fatal() {
+    let _g = chaos_guard();
+    let q = RequestQueue::new(2, 4);
+    q.submit(GenerateRequest::greedy(0, vec![1])).unwrap();
+    q.submit(GenerateRequest::greedy(1, vec![1])).unwrap();
+    assert_eq!(
+        q.submit(GenerateRequest::greedy(2, vec![1])).unwrap_err(),
+        ServeError::QueueFull { capacity: 2 }
+    );
+    q.close();
+    assert_eq!(q.submit(GenerateRequest::greedy(3, vec![1])).unwrap_err(), ServeError::Closed);
+    // graceful drain: work accepted before close is still served
+    assert!(q.pop().is_some() && q.pop().is_some());
+    assert!(q.pop().is_none());
+    assert_eq!(q.stats().rejected, 1);
+}
+
+fn lm_session() -> InferSession {
+    let mut rc = presets::by_name("gpt").unwrap();
+    presets::shrink_for_bench(&mut rc);
+    rc.model.n_dec_layers = 6;
+    rc.model.buffer_open = 1;
+    rc.model.buffer_close = 1;
+    rc.model.batch = 2;
+    let params = ParamStore::init(&rc.model, Init::Default, 5);
+    InferSession::from_parts(rc, params, Box::new(Mgrit)).unwrap()
+}
+
+#[test]
+fn injected_deadline_times_out_one_request_without_touching_its_neighbor() {
+    let _g = chaos_guard();
+    let victim = GenerateRequest {
+        max_new: 5,
+        deadline_ms: 60_000, // never expires for real — only by injection
+        ..GenerateRequest::greedy(1, vec![1, 2])
+    };
+    let bystander = GenerateRequest { max_new: 5, ..GenerateRequest::greedy(2, vec![3, 4]) };
+    let run_pair = |victim: &GenerateRequest, bystander: &GenerateRequest| {
+        let mut srv = ServeLoop::new(lm_session(), 4).unwrap();
+        srv.submit(victim.clone()).unwrap();
+        srv.submit(bystander.clone()).unwrap();
+        let mut guard = 0;
+        while srv.active() > 0 || srv.queue().depth() > 0 {
+            srv.step().unwrap();
+            guard += 1;
+            assert!(guard < 200, "serve loop failed to drain");
+        }
+        let mut done: Vec<CompletedRequest> = srv.take_completed();
+        done.sort_by_key(|d| d.id);
+        (done, srv.metrics.timeouts)
+    };
+
+    let (clean, clean_timeouts) = run_pair(&victim, &bystander);
+    assert_eq!(clean_timeouts, 0);
+    assert!(clean.iter().all(|c| c.outcome == RequestOutcome::Done));
+
+    // the deadline sweep's first armed hit (step 2, after one token
+    // landed) retires the victim with a typed Timeout
+    fault::arm("serve.deadline").unwrap();
+    let (hurt, hurt_timeouts) = run_pair(&victim, &bystander);
+    assert_eq!(hurt_timeouts, 1);
+    assert_eq!(hurt[0].outcome, RequestOutcome::Timeout);
+    assert_eq!(hurt[0].generated, 1, "the one token decoded before expiry comes back");
+    assert_eq!(
+        hurt[0].tokens[..],
+        clean[0].tokens[..hurt[0].tokens.len()],
+        "a timed-out request returns a prefix of its clean tokens"
+    );
+    assert_eq!(hurt[1].outcome, RequestOutcome::Done);
+    assert_eq!(hurt[1].tokens, clean[1].tokens, "the neighbour's tokens must not move");
+    assert!(has_event("serve.deadline", "timeout"));
+    fault::reset();
+}
