@@ -3,9 +3,21 @@
 //! the data-parallel degree. Each curve is convex — too little dp wastes
 //! data-parallel efficiency, too much dp makes the gradient allreduce
 //! dominate and gives up layer parallelism. 64-layer GPT analogue.
+//!
+//! A second section grounds the model on this testbed: every worker split
+//! of a small real training config is **executed** (concurrent replica
+//! lanes × threaded relaxation workers) and timed next to the simulator's
+//! prediction from a measured-Φ calibration — the measured-vs-simulated
+//! column is the model error behind the `--workers` auto-split heuristic.
 
-use layertime::parallel::{DeviceModel, SimConfig, Simulator};
+use layertime::config::{presets, MgritConfig};
+use layertime::coordinator::{Session, Task};
+use layertime::ode::{shared_params, Propagator, RustPropagator};
+use layertime::parallel::{worker_splits, DeviceModel, SimConfig, Simulator};
+use layertime::tensor::Tensor;
+use layertime::util::bench::BenchRunner;
 use layertime::util::csv::CsvWriter;
+use layertime::util::rng::Rng;
 use layertime::util::table::{f, Table};
 
 fn main() {
@@ -63,4 +75,99 @@ fn main() {
     println!("\nseries written to bench_out/fig9_dp_lp.csv");
     println!("paper shape check: each curve is convex with an interior optimum —");
     println!("layer-parallelism adds speedup beyond pure data-parallel.");
+
+    // --- measured vs simulated on this testbed -------------------------------
+    // Every worker split of a small real config is executed (dp replica
+    // lanes × lp relaxation workers, the same machinery `--dp-workers`
+    // drives) and timed next to the simulator's prediction from a
+    // measured-Φ calibration. The error column is the model error behind
+    // the auto-split heuristic; the simulator omits the optimizer and
+    // loss-head cost, so a steady positive bias is expected — what matters
+    // for the split choice is the *relative* ordering across splits.
+    println!("\nMeasured vs simulated batch time (tiny 8-layer config, this machine)\n");
+    let mut rc = presets::mc_tiny();
+    presets::shrink_for_bench(&mut rc);
+    rc.model.n_enc_layers = 8;
+    rc.mgrit = MgritConfig { cf: 2, levels: 2, fwd_iters: Some(1), bwd_iters: Some(1), fcf: true };
+    rc.train.adaptive = false;
+    rc.train.probe_every = 0;
+    rc.dp_degree = 4;
+    let m = rc.model.clone();
+
+    // calibrate: per-sample Φ time on this shape (one layer step over the
+    // full batch, divided by batch) — the simulator's device-model input
+    let mut rng = Rng::new(17);
+    let params = shared_params(vec![rng.normal_vec(m.p_enc(), 0.02); 1]);
+    let prop = RustPropagator::new(&m, 1.0, params);
+    let z = Tensor::randn(&mut rng, &prop.state_shape(), 1.0);
+    let mut out = Tensor::zeros(&prop.state_shape());
+    let runner = BenchRunner::new(2, 10);
+    let phi_st = runner.report("Φ calibration (one layer step, full batch)", || {
+        prop.step_into(0, 1.0, &z, &mut out)
+    });
+    let phi_per_sample = phi_st.mean / m.batch as f64;
+    let flops_per_sample = 12.0 * (m.seq * m.d_model * m.d_model) as f64
+        + 4.0 * (m.seq * m.seq * m.d_model) as f64
+        + 4.0 * (m.seq * m.d_model * m.d_ff) as f64;
+
+    let mut csv2 = CsvWriter::create(
+        "bench_out/fig9_dp_lp_measured.csv",
+        &["workers", "dp_lanes", "lp", "measured_s", "simulated_s", "model_error_pct"],
+    )
+    .unwrap();
+    let mut tbl2 =
+        Table::new(&["workers", "dp lanes", "lp", "measured s", "simulated s", "error %"]);
+    for workers in [1usize, 2, 4] {
+        for t in worker_splits(workers, rc.dp_degree) {
+            let sim = Simulator::new(SimConfig {
+                n_layers: m.parallel_layers().max(1),
+                cf: rc.mgrit.cf,
+                levels: rc.mgrit.levels,
+                fwd_iters: rc.mgrit.fwd_iters,
+                bwd_iters: rc.mgrit.bwd_iters,
+                fcf: rc.mgrit.fcf,
+                lp: t.lp,
+                dp: t.dp,
+                flops_per_sample_step: flops_per_sample,
+                batch: m.batch * rc.dp_degree,
+                state_bytes: (m.seq * m.d_model * 4) as f64,
+                param_bytes: (m.total_layers() * m.p_enc() * 4) as f64,
+                device: DeviceModel::cpu_measured(phi_per_sample, flops_per_sample),
+            });
+            let simulated = sim.batch_time().total;
+            let mut run = Session::builder()
+                .config(rc.clone())
+                .task(Task::Tag)
+                .workers(workers)
+                .dp_workers(t.dp)
+                .build()
+                .unwrap();
+            run.train_step(); // cores, pools, and fabric built outside the timing
+            let st = runner.report(
+                &format!("train step (workers {}, dp lanes {}, lp {})", workers, t.dp, t.lp),
+                || run.train_step(),
+            );
+            let err = 100.0 * (st.mean - simulated) / simulated.max(1e-12);
+            tbl2.row(vec![
+                workers.to_string(),
+                t.dp.to_string(),
+                t.lp.to_string(),
+                f(st.mean, 5),
+                f(simulated, 5),
+                f(err, 1),
+            ]);
+            csv2.row(&[
+                workers.to_string(),
+                t.dp.to_string(),
+                t.lp.to_string(),
+                st.mean.to_string(),
+                simulated.to_string(),
+                err.to_string(),
+            ])
+            .unwrap();
+        }
+    }
+    tbl2.print();
+    csv2.flush().unwrap();
+    println!("\nmeasured-vs-simulated series written to bench_out/fig9_dp_lp_measured.csv");
 }

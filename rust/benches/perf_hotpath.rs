@@ -363,6 +363,37 @@ fn main() -> anyhow::Result<()> {
         }
     }
 
+    // --- dp×lp composed topology: full train step across the grid ------------
+    // Real data parallelism: `dp` replica lanes run concurrently on the dp
+    // scheduler pool, each driving an `lp`-worker relaxation pool, gradients
+    // reduced through the fabric in the pinned ascending order. Every cell
+    // trains bitwise identically (dp_parity.rs); these rows record how
+    // wall-clock moves across the composed grid — the measured counterpart
+    // of fig9's simulated convex dp-vs-lp tradeoff. Global batch scales
+    // with dp (each replica samples its own micro-batch), so same-dp rows
+    // are directly comparable and cross-dp rows show the weak-scaling cost.
+    {
+        for &dp in &[1usize, 2, 4] {
+            for &lp in &[1usize, 2, 4] {
+                let mut grc = rc.clone();
+                grc.dp_degree = dp;
+                let mut run_g = layertime::coordinator::Session::builder()
+                    .config(grc)
+                    .task(Task::Tag)
+                    .workers(dp * lp)
+                    .dp_workers(dp)
+                    .build()?;
+                run_g.train_step(); // build cores, pools, and fabric outside the timing
+                timed(
+                    &runner,
+                    &mut log,
+                    &format!("full train step dp×lp (dp {}, lp {})", dp, lp),
+                    || run_g.train_step(),
+                );
+            }
+        }
+    }
+
     // --- batched decode throughput -------------------------------------------
     // One row = one full `generate` call on a decoder LM (8 layers, 1+1
     // buffers): seq/2 prompt positions, seq/2 generated positions, each

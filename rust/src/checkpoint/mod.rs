@@ -11,11 +11,11 @@
 //! first post-resume solve warm-starts exactly like the uninterrupted
 //! run's would have.
 //!
-//! ## File format (version 1, all integers little-endian)
+//! ## File format (version 2, all integers little-endian)
 //!
 //! ```text
 //! magic        b"LTCP"
-//! version      u32                  (= 1)
+//! version      u32                  (= 2)
 //! config       u32 len + RunConfig JSON (utf-8; u64 seed as string)
 //! run state    u64 step
 //!              u8 flag + f32        initial_loss    (divergence watchdog)
@@ -38,8 +38,11 @@
 //! model config on read**: `param.layer.{i}` (length
 //! [`crate::config::ModelConfig::layer_theta_len`]), `param.{emb,pos,out,cls}`,
 //! `opt.{m,v}.{g}` for every optimizer group (layers…, emb, pos, out, cls),
-//! and optionally `warm.{j}` for the `parallel_layers() + 1` mid-range
-//! states (each of `state_shape()` element count). Any missing, reordered,
+//! and optionally `warm.{j}` for the
+//! `dp_degree.max(1) × (parallel_layers() + 1)` mid-range warm states —
+//! replica-major, so replica `r`'s iterate is the contiguous run
+//! `warm.{r·(P+1)} .. warm.{(r+1)·(P+1) - 1}` (each of `state_shape()`
+//! element count). Any missing, reordered,
 //! unknown, or wrongly-sized entry is a hard error, as are a bad magic,
 //! an unknown version, a truncated file, or a checksum mismatch.
 //!
@@ -49,7 +52,10 @@
 //! contract changes; readers reject versions they don't know (no silent
 //! best-effort decoding of foreign layouts). New *optional* tensor-table
 //! entries may be added within a version only if absence keeps old files
-//! readable (the warm-start section works this way).
+//! readable (the warm-start section works this way). Version 2 widened
+//! the warm section from one iterate to one per data-parallel replica
+//! when `--dp` replicas started executing concurrently, each with its own
+//! warm-start chain.
 
 use anyhow::{bail, Context, Result};
 
@@ -61,7 +67,7 @@ use crate::util::json::Json;
 /// File magic ("LayerTime CheckPoint").
 pub const MAGIC: &[u8; 4] = b"LTCP";
 /// Current format version.
-pub const VERSION: u32 = 1;
+pub const VERSION: u32 = 2;
 
 /// Autosave file name for step `step` next to the base save path:
 /// `run.ltcp` → `run.step00000040.ltcp`. The step is zero-padded so
@@ -163,8 +169,10 @@ pub struct Checkpoint {
     pub w_pos: Vec<f32>,
     pub w_out: Vec<f32>,
     pub w_cls: Vec<f32>,
-    /// Mid-range warm-start iterate `Z_{bo}..Z_{bo+n_mid}` when the saved
-    /// session held a valid one (`None` otherwise).
+    /// Mid-range warm-start iterates when the saved session held valid
+    /// ones (`None` otherwise): replica-major, `dp_degree.max(1)`
+    /// contiguous runs of `parallel_layers() + 1` states — replica `r`'s
+    /// `Z_{bo}..Z_{bo+n_mid}` occupies `warm[r·(P+1)..(r+1)·(P+1)]`.
     pub warm: Option<Vec<Tensor>>,
 }
 
@@ -407,11 +415,12 @@ impl Checkpoint {
         let state_shape = rc.model.state_shape();
         let state_elems: usize = state_shape.iter().product();
         if n_warm != 0 {
-            if n_warm != rc.model.parallel_layers() + 1 {
+            let want_warm = rc.dp_degree.max(1) * (rc.model.parallel_layers() + 1);
+            if n_warm != want_warm {
                 bail!(
-                    "warm-start section has {} states, config requires {} (parallel_layers + 1)",
+                    "warm-start section has {} states, config requires {} (dp × (parallel_layers + 1))",
                     n_warm,
-                    rc.model.parallel_layers() + 1
+                    want_warm
                 );
             }
             for (j, (name, count)) in
@@ -763,5 +772,30 @@ mod tests {
         let mut ck = tiny_checkpoint();
         ck.warm = None;
         assert!(Checkpoint::decode(&ck.encode()).unwrap().warm.is_none());
+    }
+
+    #[test]
+    fn dp_checkpoints_carry_one_warm_iterate_per_replica() {
+        // dp = 2: the warm section is replica-major, 2 × (P + 1) states
+        let mut ck = tiny_checkpoint();
+        ck.rc.dp_degree = 2;
+        let per = ck.rc.model.parallel_layers() + 1;
+        let shape = ck.rc.model.state_shape();
+        let elems: usize = shape.iter().product();
+        ck.warm = Some(
+            (0..2 * per)
+                .map(|j| Tensor::from_vec(vec![j as f32; elems], &shape))
+                .collect(),
+        );
+        let back = Checkpoint::decode(&ck.encode()).unwrap();
+        let warm = back.warm.unwrap();
+        assert_eq!(warm.len(), 2 * per);
+        // replica 1's run starts at index P + 1, values untouched
+        assert_eq!(warm[per].data()[0], per as f32);
+        // a single-replica-sized warm section no longer matches dp = 2
+        let mut short = ck.clone();
+        short.warm.as_mut().unwrap().truncate(per);
+        let err = Checkpoint::decode(&short.encode()).unwrap_err().to_string();
+        assert!(err.contains("warm-start section"), "{}", err);
     }
 }

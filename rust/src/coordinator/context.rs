@@ -302,6 +302,54 @@ impl StepWorkspace {
             }
         }
     }
+
+    /// Total flat length of one replica's gradient payload (layers then
+    /// the four head groups) — the `comm::Fabric` allreduce message size.
+    pub fn flat_grad_len(&self) -> usize {
+        self.grads.iter().map(|g| g.len()).sum::<usize>()
+            + self.g_emb.len()
+            + self.g_pos.len()
+            + self.g_out.len()
+            + self.g_cls.len()
+    }
+
+    /// Append every gradient accumulator to `buf` as one flat payload:
+    /// `grads[0..n]`, then `g_emb`, `g_pos`, `g_out`, `g_cls`. The wire
+    /// format of the dp gradient reduction — written into a recycled
+    /// [`crate::parallel::comm::Endpoint::send_scratch`] buffer, so the
+    /// steady state allocates nothing.
+    pub fn write_grads_flat(&self, buf: &mut Vec<f32>) {
+        for g in self.grads.iter() {
+            buf.extend_from_slice(g);
+        }
+        buf.extend_from_slice(&self.g_emb);
+        buf.extend_from_slice(&self.g_pos);
+        buf.extend_from_slice(&self.g_out);
+        buf.extend_from_slice(&self.g_cls);
+    }
+
+    /// Fold another replica's flat payload (the [`StepWorkspace::write_grads_flat`]
+    /// layout) into these accumulators: `primary = primary + incoming` per
+    /// element — the running sum stays on the left, the same association
+    /// as [`StepWorkspace::fold_stashed_grads`]'s `stashed + fresh`, so a
+    /// replica-ascending sequence of folds reproduces the serial dp loop's
+    /// summation order bitwise.
+    pub fn fold_grads_flat(&mut self, flat: &[f32]) {
+        assert_eq!(flat.len(), self.flat_grad_len(), "dp gradient payload length mismatch");
+        let mut off = 0usize;
+        for g in self.grads.iter_mut() {
+            for (a, &b) in g.iter_mut().zip(&flat[off..off + g.len()]) {
+                *a += b;
+            }
+            off += g.len();
+        }
+        for g in [&mut self.g_emb, &mut self.g_pos, &mut self.g_out, &mut self.g_cls] {
+            for (a, &b) in g.iter_mut().zip(&flat[off..off + g.len()]) {
+                *a += b;
+            }
+            off += g.len();
+        }
+    }
 }
 
 /// Stage the loss head's input for workspace state `idx`: stacked EncDec
@@ -1079,6 +1127,63 @@ mod tests {
         ws.grads[0][0] = 2.0;
         ws.fold_stashed_grads();
         assert_eq!(ws.grads[0][0], 3.0);
+    }
+
+    #[test]
+    fn flat_grad_fold_matches_stash_fold_bitwise() {
+        // the fabric wire fold (flat payload, running sum on the left)
+        // must reproduce the serial dp stash/fold association bitwise,
+        // with values chosen so f32 addition order is observable
+        let vals = [
+            [1.0e8f32, 0.125, -7.5],
+            [1.0f32, 3.0e-8, 0.25],
+            [-1.0e8f32, 7.0e-8, 2.5],
+        ];
+        let fill = |ws: &mut StepWorkspace, v: [f32; 3]| {
+            ws.grads[0][0] = v[0];
+            ws.grads[1][1] = v[1];
+            ws.g_emb[0] = v[2];
+            ws.g_out[0] = v[0] * 0.5;
+        };
+        // serial dp loop: stash the running sum, compute fresh, fold
+        let mut serial = StepWorkspace::new(2, &[2, 1], &[2, 1], &[1, 2], [1, 1, 1, 1]);
+        serial.zero_grads();
+        fill(&mut serial, vals[0]);
+        for &v in &vals[1..] {
+            serial.stash_grads();
+            fill(&mut serial, v);
+            serial.fold_stashed_grads();
+        }
+        // sharded dp: replica 0 folds flat payloads in ascending order
+        let mut r0 = StepWorkspace::new(2, &[2, 1], &[2, 1], &[1, 2], [1, 1, 1, 1]);
+        r0.zero_grads();
+        fill(&mut r0, vals[0]);
+        assert_eq!(r0.flat_grad_len(), 1 + 2 + 4);
+        let mut flat = Vec::new();
+        for &v in &vals[1..] {
+            let mut rep = StepWorkspace::new(2, &[2, 1], &[2, 1], &[1, 2], [1, 1, 1, 1]);
+            rep.zero_grads();
+            fill(&mut rep, v);
+            flat.clear();
+            rep.write_grads_flat(&mut flat);
+            assert_eq!(flat.len(), rep.flat_grad_len());
+            r0.fold_grads_flat(&flat);
+        }
+        for (a, b) in serial.grads.iter().zip(r0.grads.iter()) {
+            for (x, y) in a.iter().zip(b.iter()) {
+                assert_eq!(x.to_bits(), y.to_bits());
+            }
+        }
+        for (a, b) in [
+            (&serial.g_emb, &r0.g_emb),
+            (&serial.g_pos, &r0.g_pos),
+            (&serial.g_out, &r0.g_out),
+            (&serial.g_cls, &r0.g_cls),
+        ] {
+            for (x, y) in a.iter().zip(b.iter()) {
+                assert_eq!(x.to_bits(), y.to_bits());
+            }
+        }
     }
 
     #[test]

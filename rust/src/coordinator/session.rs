@@ -52,10 +52,20 @@
 //! identically** to the uninterrupted original — pinned by
 //! `rust/tests/checkpoint_roundtrip.rs`.
 //!
-//! Data parallelism is executed as `dp` sequential micro-batches with
-//! gradient averaging — bit-identical math to distributed replicas (the
-//! *time* dimension of dp lives in `parallel::simulator`; this box has one
-//! core, DESIGN.md §Substitutions).
+//! ## Data parallelism
+//!
+//! `--dp N` runs N real concurrent replicas: each [`Replica`] owns a full
+//! `SolveContext` (its own MGRIT hierarchies, workspaces and relaxation
+//! backend/pool) plus an endpoint on a dp-wide gradient [`Fabric`].
+//! `--dp-workers D` (or the simulator-scored auto-split of `--workers`)
+//! picks how many replica *lanes* run at once on the session's scheduler
+//! [`WorkerPool`]; batches are pre-sampled on the coordinator thread in
+//! ascending replica order and gradients are folded back into replica 0
+//! in the same strictly left-associated ascending order the serialized
+//! stash/fold scratch used — so every lane count (including 1) trains
+//! **bitwise identically** (pinned by `rust/tests/dp_parity.rs`). See
+//! `parallel/mod.rs` §"DP×LP execution" for the rank layout and split
+//! rules.
 
 use std::sync::Arc;
 
@@ -67,11 +77,15 @@ use crate::config::{presets, Arch, RunConfig};
 use crate::model::{Init, ParamStore};
 use crate::ode::{Propagator, RustPropagator, XlaPropagator};
 use crate::opt::{Decay, LrSchedule, Optimizer};
+use crate::parallel::comm::Endpoint;
+use crate::parallel::{
+    auto_split, slab_range, DeviceModel, Fabric, SimConfig, Simulator, WorkerPool, Workspace,
+};
 use crate::runtime::XlaEngine;
 use crate::util::json::{self, Json};
 use crate::util::rng::Rng;
 
-use super::backend::{backend_for_workers, Backend, Mgrit};
+use super::backend::{backend_for_workers, Backend, Mgrit, Serial};
 use super::context::{mid_range, ForwardWorkspace, SolveContext, StepWorkspace};
 use super::heads;
 use super::objective::{EvalAccum, Objective, TrainBatch};
@@ -243,6 +257,7 @@ pub struct SessionBuilder {
     propagator: PropagatorKind,
     params: Option<ParamStore>,
     workers: Option<usize>,
+    dp_workers: Option<usize>,
     warm_start: bool,
     resume: Option<String>,
 }
@@ -294,8 +309,23 @@ impl SessionBuilder {
     }
 
     /// Convenience backend selection: `n > 1` → `ThreadedMgrit { n }`.
+    /// When the config has `dp_degree > 1` the budget is split across the
+    /// two axes (see [`SessionBuilder::dp_workers`]); a bare `.workers(n)`
+    /// lets the simulator's auto-split heuristic pick the split.
     pub fn workers(mut self, n: usize) -> Self {
         self.workers = Some(n);
+        self
+    }
+
+    /// Concurrent replica lanes for data parallelism: how many of the
+    /// session's `dp_degree` replicas run their micro-batches at the same
+    /// time (clamped to `1..=dp`). With `.workers(n)` the per-replica
+    /// relaxation budget becomes `max(n / dp_workers, 1)`. Default: the
+    /// simulator-scored auto-split of the worker budget
+    /// ([`crate::parallel::auto_split`]) when `dp > 1`, else 1. Purely an
+    /// execution choice — every value trains bitwise identically.
+    pub fn dp_workers(mut self, n: usize) -> Self {
+        self.dp_workers = Some(n);
         self
     }
 
@@ -353,14 +383,29 @@ impl SessionBuilder {
             (None, Some(t)) => t.objective(&rc.model, rc.train.seed),
             (None, None) => Task::for_preset(&rc.name)?.objective(&rc.model, rc.train.seed),
         };
-        let backend: Box<dyn Backend> = match (self.backend, self.workers) {
+        // split the worker budget across the dp×lp axes: `dp_workers`
+        // concurrent replica lanes, each driving an lp-worker relaxation
+        // backend (explicit .dp_workers, or the simulator's convex
+        // auto-split of a bare .workers budget)
+        let dp = rc.dp_degree.max(1);
+        let (backend, dp_workers): (Box<dyn Backend>, usize) = match (self.backend, self.workers) {
             (Some(_), Some(_)) => {
                 bail!("SessionBuilder: .backend(..) and .workers(..) are both set — pick one \
                        (workers is shorthand for selecting Mgrit/ThreadedMgrit)")
             }
-            (Some(b), None) => b,
-            (None, Some(n)) => backend_for_workers(n),
-            (None, None) => Box::new(Mgrit),
+            (Some(b), None) => (b, self.dp_workers.unwrap_or(1).clamp(1, dp)),
+            (None, Some(n)) => {
+                let n = n.max(1);
+                let d = match self.dp_workers {
+                    Some(d) => d.clamp(1, dp),
+                    None if dp > 1 && n > 1 => {
+                        auto_split(n, dp, |dw, lw| split_cost(&rc, dw, lw)).dp
+                    }
+                    None => 1,
+                };
+                (backend_for_workers((n / d).max(1)), d)
+            }
+            (None, None) => (Box::new(Mgrit), self.dp_workers.unwrap_or(1).clamp(1, dp)),
         };
         let params = match &ck {
             Some(c) => ParamStore::from_parts(
@@ -411,15 +456,37 @@ impl SessionBuilder {
         let theta_lens: Vec<usize> = (0..n_layers).map(|l| prop.theta_len(l)).collect();
         let head_shape = [rc.model.batch, rc.model.seq, rc.model.d_model];
         let state_shape = prop.state_shape();
-        let fwd_ws = ForwardWorkspace::new(n_layers, &state_shape, &head_shape);
-        let ws = StepWorkspace::new(
-            n_layers,
-            &state_shape,
-            &head_shape,
-            &theta_lens,
-            [params.w_emb.len(), params.w_pos.len(), params.w_out.len(), params.w_cls.len()],
-        );
-        let mut ctx = SolveContext::new(backend, fwd_ws, ws);
+        let head_sizes =
+            [params.w_emb.len(), params.w_pos.len(), params.w_out.len(), params.w_cls.len()];
+        // one replica per dp degree, each with a full solve context and —
+        // when dp > 1 — an endpoint on the dp-wide gradient fabric
+        let mut fabric = if dp > 1 { Some(Fabric::new(dp)) } else { None };
+        let mut backends: Vec<Box<dyn Backend>> =
+            (1..dp).map(|_| replica_backend(backend.as_ref())).collect();
+        backends.insert(0, backend);
+        let mut replicas: Vec<Replica> = backends
+            .into_iter()
+            .enumerate()
+            .map(|(r, b)| Replica {
+                ctx: SolveContext::new(
+                    b,
+                    ForwardWorkspace::new(n_layers, &state_shape, &head_shape),
+                    StepWorkspace::new(
+                        n_layers,
+                        &state_shape,
+                        &head_shape,
+                        &theta_lens,
+                        head_sizes,
+                    ),
+                ),
+                batch: TrainBatch::default(),
+                ep: fabric.as_mut().map(|f| f.take(r)),
+                loss: 0.0,
+                acc: 0.0,
+                rho_f: None,
+                rho_b: None,
+            })
+            .collect();
         // checkpoint restore: every stateful piece beyond params/config
         let (mut train_rng, mut step, mut initial_loss, mut switched_at, mut warm_start) =
             (Rng::new(seed.wrapping_mul(2) + 1), 0usize, None, None, self.warm_start);
@@ -434,12 +501,18 @@ impl SessionBuilder {
                 warm_start = c.warm_start;
                 if let Some(warm) = c.warm {
                     let (bo, n_mid) = mid_range(&rc.model);
-                    // Checkpoint::read validated count and element sizes
-                    // against the config's state shape
-                    for (dst, src) in ctx.fwd.ws.states[bo..=bo + n_mid].iter_mut().zip(&warm) {
-                        dst.copy_from(src);
+                    // Checkpoint::read validated the replica-major count
+                    // (dp × (n_mid + 1)) and element sizes against the
+                    // config's state shape
+                    let per = n_mid + 1;
+                    for (r, rep) in replicas.iter_mut().enumerate() {
+                        let src = &warm[r * per..(r + 1) * per];
+                        for (dst, s) in rep.ctx.fwd.ws.states[bo..=bo + n_mid].iter_mut().zip(src)
+                        {
+                            dst.copy_from(s);
+                        }
+                        rep.ctx.fwd.mark_warm();
                     }
-                    ctx.fwd.mark_warm();
                 }
                 let cs = c.controller;
                 AdaptiveController::restore(
@@ -458,8 +531,9 @@ impl SessionBuilder {
             rc,
             params,
             objective,
-            batch_buf: TrainBatch::default(),
-            ctx,
+            replicas,
+            dp_workers,
+            dp_pool: None,
             prop,
             opt,
             sched,
@@ -484,15 +558,18 @@ pub struct Session {
     pub rc: RunConfig,
     pub params: ParamStore,
     objective: Box<dyn Objective>,
-    /// Long-lived batch buffer, refilled in place by
-    /// `Objective::sample_into` every micro-batch/eval batch (taken out of
-    /// the session during the batch body to keep the borrows disjoint —
-    /// a pointer move, not an allocation).
-    batch_buf: TrainBatch,
-    /// Persistent solve state: the shared train/infer forward core (with
-    /// both cached MGRIT hierarchies and the warm-start iterate) plus the
-    /// training step workspace.
-    ctx: SolveContext,
+    /// The dp data-parallel replicas (always ≥ 1). Replica 0 is the
+    /// coordinator: probes, the gradient fold, the optimizer read and
+    /// evaluation all go through it; replicas 1.. mirror its solve
+    /// strategy with their own contexts, batch buffers and fabric
+    /// endpoints. Each replica's batch buffer is long-lived and refilled
+    /// in place by `Objective::sample_into` every step.
+    replicas: Vec<Replica>,
+    /// Concurrent replica lanes (`--dp-workers`, clamped to `1..=dp`).
+    dp_workers: usize,
+    /// Lazily-created scheduler pool dispatching the replica lanes when
+    /// `dp_workers > 1`; rebuilt if a panicked lane poisoned it.
+    dp_pool: Option<Arc<WorkerPool>>,
     prop: Box<dyn Propagator>,
     opt: Optimizer,
     sched: LrSchedule,
@@ -526,6 +603,194 @@ struct Autosave {
     keep: usize,
 }
 
+/// Mailbox tag for the per-replica flat gradient payloads of one training
+/// step. High bit-space so it can never collide with the halo/allreduce
+/// tags of other fabrics; only `DP_GRAD_TAG` and its scratch-return twin
+/// (`RETURN_BIT | DP_GRAD_TAG`) are ever in flight on the dp fabric.
+const DP_GRAD_TAG: u64 = 1 << 40;
+
+/// One data-parallel replica: its own solve context (cached MGRIT
+/// hierarchies, forward + step workspaces, relaxation backend/pool), its
+/// own long-lived batch buffer, and — when `dp > 1` — an endpoint on the
+/// session's dp-wide gradient [`Fabric`]. Replica 0 is the coordinator:
+/// §3.2.3 probes run on it, the gradient fold sums replicas 1.. into its
+/// accumulators in ascending order (the serialized stash/fold
+/// association, kept bitwise), and evaluation/optimizer reads go through
+/// it.
+struct Replica {
+    ctx: SolveContext,
+    batch: TrainBatch,
+    ep: Option<Endpoint>,
+    loss: f32,
+    acc: f32,
+    rho_f: Option<f64>,
+    rho_b: Option<f64>,
+}
+
+/// The shared-read environment of one training step's micro-batches:
+/// everything [`run_micro_batch`] needs besides the replica's own mutable
+/// state. Every field is a `Sync` shared reference (or a scalar), so one
+/// `MicroEnv` is borrowed concurrently by all replica lanes.
+struct MicroEnv<'a> {
+    rc: &'a RunConfig,
+    prop: &'a dyn Propagator,
+    objective: &'a dyn Objective,
+    params: &'a ParamStore,
+    /// Configured (fwd, bwd) iteration budgets.
+    iters: (Option<usize>, Option<usize>),
+    /// Controller-probe (fwd, bwd) budgets (replica 0 on probe steps).
+    probe_iters: (Option<usize>, Option<usize>),
+    warm_start: bool,
+}
+
+/// One replica micro-batch on a pre-sampled batch: embed → full forward
+/// on the shared train/infer core → objective loss head → adjoint solve →
+/// parameter gradients (no update). Gradients *accumulate* into the
+/// replica's own `StepWorkspace` (zeroed by the caller); states/λ live in
+/// its workspaces — zero heap allocations at steady state, per replica.
+/// Returns (loss, acc, rho_fwd, rho_bwd).
+fn run_micro_batch(
+    env: &MicroEnv<'_>,
+    ctx: &mut SolveContext,
+    batch: &TrainBatch,
+    probe: bool,
+) -> (f32, f32, Option<f64>, Option<f64>) {
+    let m = &env.rc.model;
+    let n_layers = m.total_layers();
+    let (bo, n_mid) = mid_range(m);
+    let stacked = m.arch == Arch::EncDec;
+
+    // --- forward (the shared train/infer core) -----------------------
+    heads::embed_state_into(
+        &batch.tokens,
+        batch.tgt_in.as_deref(),
+        &env.params.w_emb,
+        &env.params.w_pos,
+        m.batch,
+        m.seq,
+        m.d_model,
+        ctx.fwd.ws.states[0].data_mut(),
+    );
+    let fwd_iters = if probe { env.probe_iters.0 } else { env.iters.0 };
+    let fstats =
+        ctx.fwd.forward_full(env.prop, &env.rc.mgrit, bo, n_mid, fwd_iters, env.warm_start, probe);
+
+    // --- loss head (workspace-reusing: cotangent into ws.lam_head,
+    //     head gradients straight into the step accumulators) --------
+    let out = {
+        let (x_final, sink) = ctx.head_view_and_sink(n_layers, stacked);
+        env.objective.loss_into(x_final, env.params, batch, m, sink)
+    };
+    let acc = out.correct / out.denom;
+
+    // --- adjoint ---------------------------------------------------------
+    {
+        // seed λ_N: lift the head cotangent into the state shape
+        let StepWorkspace { lams, lam_head, .. } = &mut ctx.ws;
+        let lam_n = &mut lams[n_layers];
+        if stacked {
+            let half = lam_n.len() / 2;
+            let d = lam_n.data_mut();
+            d[..half].fill(0.0);
+            d[half..].copy_from_slice(lam_head.data());
+        } else {
+            lam_n.copy_from(lam_head);
+        }
+    }
+    {
+        // close buffers: serial adjoint + grads
+        let states = &ctx.fwd.ws.states;
+        let StepWorkspace { lams, grads, .. } = &mut ctx.ws;
+        for l in ((bo + n_mid)..n_layers).rev() {
+            let (lam_lo, lam_hi) = lams.split_at_mut(l + 1);
+            env.prop.accumulate_grad(l, &states[l], &lam_hi[0], &mut grads[l]);
+            env.prop.adjoint_step_into(l, 1.0, &states[l], &lam_hi[0], &mut lam_lo[l]);
+        }
+    }
+    // backend adjoint solve + mid-range gradients on the cached cores
+    let bwd_iters = if probe { env.probe_iters.1 } else { env.iters.1 };
+    let mid = super::range::RangeProp::new(env.prop, bo, n_mid);
+    let bstats = ctx.adjoint_mid(&mid, &env.rc.mgrit, bo, bwd_iters, probe);
+    ctx.gradients_mid(&mid, bo);
+    {
+        // open buffers
+        let states = &ctx.fwd.ws.states;
+        let StepWorkspace { lams, grads, .. } = &mut ctx.ws;
+        for l in (0..bo).rev() {
+            let (lam_lo, lam_hi) = lams.split_at_mut(l + 1);
+            env.prop.accumulate_grad(l, &states[l], &lam_hi[0], &mut grads[l]);
+            env.prop.adjoint_step_into(l, 1.0, &states[l], &lam_hi[0], &mut lam_lo[l]);
+        }
+    }
+
+    // --- embedding gradients ----------------------------------------------
+    {
+        let StepWorkspace { lams, g_emb, g_pos, .. } = &mut ctx.ws;
+        let lam0 = lams[0].data();
+        if stacked {
+            let half = lam0.len() / 2;
+            heads::embed_bwd(&batch.tokens, &lam0[..half], m.batch, m.seq, m.d_model, g_emb, g_pos);
+            heads::embed_bwd(
+                batch.tgt_in.as_ref().unwrap(),
+                &lam0[half..],
+                m.batch,
+                m.seq,
+                m.d_model,
+                g_emb,
+                g_pos,
+            );
+        } else {
+            heads::embed_bwd(&batch.tokens, lam0, m.batch, m.seq, m.d_model, g_emb, g_pos);
+        }
+    }
+    (out.loss, acc, fstats.conv_factor(), bstats.conv_factor())
+}
+
+/// A sibling execution backend for replicas 1..dp, mirroring replica 0's
+/// strategy: each replica owns its backend — and so its own relaxation
+/// pool — so replica solves run concurrently and a panicked sweep poisons
+/// only its own replica group's pool (policy-3 containment then rebuilds
+/// that one pool; the other replicas never notice).
+fn replica_backend(main: &dyn Backend) -> Box<dyn Backend> {
+    if main.forces_exact() {
+        Box::new(Serial)
+    } else {
+        backend_for_workers(main.workers())
+    }
+}
+
+/// Simulated cost of running this config's dp micro-batches as `d`
+/// concurrent replica lanes × `lp` relaxation workers per lane — the
+/// auto-split scoring behind a bare `--workers` budget (paper Fig. 9's
+/// convex dp-vs-lp tradeoff, via the [`Simulator`]). Only *relative* cost
+/// matters here; the Φ time is a nominal constant. The choice is an
+/// execution detail: any split trains bitwise identically.
+fn split_cost(rc: &RunConfig, d: usize, lp: usize) -> f64 {
+    let m = &rc.model;
+    let flops_per_sample = 12.0 * (m.seq * m.d_model * m.d_model) as f64
+        + 4.0 * (m.seq * m.seq * m.d_model) as f64
+        + 4.0 * (m.seq * m.d_model * m.d_ff) as f64;
+    let dp = rc.dp_degree.max(1);
+    let sim = Simulator::new(SimConfig {
+        n_layers: m.parallel_layers().max(1),
+        cf: rc.mgrit.cf,
+        levels: rc.mgrit.levels,
+        fwd_iters: rc.mgrit.fwd_iters,
+        bwd_iters: rc.mgrit.bwd_iters,
+        fcf: rc.mgrit.fcf,
+        lp,
+        dp: d,
+        flops_per_sample_step: flops_per_sample,
+        // the step's total work is dp micro-batches; the simulator's dp
+        // axis splits it over the d lanes
+        batch: m.batch * dp,
+        state_bytes: (m.seq * m.d_model * 4) as f64,
+        param_bytes: (m.total_layers() * m.p_enc() * 4) as f64,
+        device: DeviceModel::cpu_measured(1.0e-4, flops_per_sample),
+    });
+    sim.batch_time().total
+}
+
 impl Session {
     /// Start assembling a session.
     pub fn builder() -> SessionBuilder {
@@ -538,6 +803,7 @@ impl Session {
             propagator: PropagatorKind::Rust,
             params: None,
             workers: None,
+            dp_workers: None,
             warm_start: true,
             resume: None,
         }
@@ -582,8 +848,17 @@ impl Session {
     /// continues bitwise identically.
     pub fn save(&self, path: &str) -> Result<()> {
         let (bo, n_mid) = self.mid_range();
-        let warm = if self.ctx.has_warm() {
-            Some(self.ctx.fwd.ws.states[bo..=bo + n_mid].to_vec())
+        // warm flags move in lockstep across replicas (forward_full sets
+        // them together, the serial switch clears them together); the
+        // all-or-nothing gather keeps an impossible partially-warm
+        // session safely cold on resume. Layout: replica-major flat,
+        // dp × (n_mid + 1) states.
+        let warm = if self.replicas.iter().all(|r| r.ctx.has_warm()) {
+            let mut w = Vec::with_capacity(self.replicas.len() * (n_mid + 1));
+            for rep in &self.replicas {
+                w.extend(rep.ctx.fwd.ws.states[bo..=bo + n_mid].iter().cloned());
+            }
+            Some(w)
         } else {
             None
         };
@@ -626,9 +901,29 @@ impl Session {
         self.objective.name()
     }
 
-    /// The active backend's short name.
+    /// The active backend's short name (replica 0's; siblings mirror it).
     pub fn backend_name(&self) -> &'static str {
-        self.ctx.backend().name()
+        self.ctx().backend().name()
+    }
+
+    /// Replica 0's solve context — the coordinator context that holds the
+    /// folded gradients and the warm iterate the accessors report on.
+    fn ctx(&self) -> &SolveContext {
+        &self.replicas[0].ctx
+    }
+
+    /// The lane scheduler pool, rebuilt if missing, wrongly sized, or
+    /// poisoned by a panicked lane (the owner-rebuilds protocol the
+    /// relaxation backends use for their own pools).
+    fn dp_pool_handle(&mut self, lanes: usize) -> Arc<WorkerPool> {
+        match &self.dp_pool {
+            Some(p) if p.size() == lanes && !p.is_poisoned() => p.clone(),
+            _ => {
+                let p = Arc::new(WorkerPool::new(lanes));
+                self.dp_pool = Some(p.clone());
+                p
+            }
+        }
     }
 
     /// Completed optimizer steps (checkpoint-resumed sessions start from
@@ -668,19 +963,22 @@ impl Session {
     /// solve context has built so far (2 at steady state — one per solve
     /// direction — plus explicit rebuilds on cf/levels changes).
     pub fn solve_core_builds(&self) -> u64 {
-        self.ctx.core_builds()
+        self.ctx().core_builds()
     }
 
-    /// Drop the cached MGRIT hierarchies; the next solve rebuilds them.
-    /// The explicit-rebuild hook for out-of-band solver-geometry changes
-    /// (and the "fresh ctx" benchmark baseline).
+    /// Drop the cached MGRIT hierarchies (every replica's); the next solve
+    /// rebuilds them. The explicit-rebuild hook for out-of-band
+    /// solver-geometry changes (and the "fresh ctx" benchmark baseline).
     pub fn invalidate_solve_context(&mut self) {
-        self.ctx.invalidate();
+        for rep in &mut self.replicas {
+            rep.ctx.invalidate();
+        }
     }
 
-    /// Is a TorchBraid-style warm-start iterate currently held?
+    /// Is a TorchBraid-style warm-start iterate currently held? (The flags
+    /// move in lockstep across replicas; replica 0 answers for all.)
     pub fn has_warm_iterate(&self) -> bool {
-        self.ctx.has_warm()
+        self.ctx().has_warm()
     }
 
     fn mid_range(&self) -> (usize, usize) {
@@ -688,7 +986,8 @@ impl Session {
     }
 
     /// Embed a batch into the propagator's state shape, written straight
-    /// into the forward workspace's Z_0 buffer (no allocation).
+    /// into replica 0's forward workspace Z_0 buffer (no allocation) —
+    /// the evaluation path; training embeds inside [`run_micro_batch`].
     fn embed_into(&mut self, tokens: &[i32], tgt_in: Option<&[i32]>) {
         let m = &self.rc.model;
         heads::embed_state_into(
@@ -699,126 +998,8 @@ impl Session {
             m.batch,
             m.seq,
             m.d_model,
-            self.ctx.fwd.ws.states[0].data_mut(),
+            self.replicas[0].ctx.fwd.ws.states[0].data_mut(),
         );
-    }
-
-    /// One micro-batch: forward, loss, adjoint, gradients (no update).
-    /// Every state/adjoint/gradient lives in the solve context's
-    /// workspaces; gradients *accumulate* there (zeroed once per training
-    /// step, so dp micro-batches sum naturally). Returns
-    /// (loss, acc, rho_fwd, rho_bwd).
-    fn micro_batch(&mut self, probe: bool) -> (f32, f32, Option<f64>, Option<f64>) {
-        let m = self.rc.model.clone();
-        let n_layers = m.total_layers();
-        let (bo, n_mid) = self.mid_range();
-        let stacked = m.arch == Arch::EncDec;
-
-        // --- sample a batch (into the session's long-lived buffer) ------
-        let mut batch = std::mem::take(&mut self.batch_buf);
-        self.objective.sample_into(&mut self.train_rng, &m, &mut batch);
-
-        // --- forward (the shared train/infer core) -----------------------
-        self.embed_into(&batch.tokens, batch.tgt_in.as_deref());
-        let fwd_iters = if probe {
-            self.controller.probe_iters(&self.rc.mgrit).0
-        } else {
-            self.rc.mgrit.fwd_iters
-        };
-        let fstats = self.ctx.fwd.forward_full(
-            self.prop.as_ref(),
-            &self.rc.mgrit,
-            bo,
-            n_mid,
-            fwd_iters,
-            self.warm_start,
-            probe,
-        );
-
-        // --- loss head (workspace-reusing: cotangent into ws.lam_head,
-        //     head gradients straight into the step accumulators) --------
-        let out = {
-            let (x_final, sink) = self.ctx.head_view_and_sink(n_layers, stacked);
-            self.objective.loss_into(x_final, &self.params, &batch, &m, sink)
-        };
-        let acc = out.correct / out.denom;
-
-        // --- adjoint ---------------------------------------------------------
-        {
-            // seed λ_N: lift the head cotangent into the state shape
-            let StepWorkspace { lams, lam_head, .. } = &mut self.ctx.ws;
-            let lam_n = &mut lams[n_layers];
-            if stacked {
-                let half = lam_n.len() / 2;
-                let d = lam_n.data_mut();
-                d[..half].fill(0.0);
-                d[half..].copy_from_slice(lam_head.data());
-            } else {
-                lam_n.copy_from(lam_head);
-            }
-        }
-        {
-            // close buffers: serial adjoint + grads
-            let states = &self.ctx.fwd.ws.states;
-            let StepWorkspace { lams, grads, .. } = &mut self.ctx.ws;
-            for l in ((bo + n_mid)..n_layers).rev() {
-                let (lam_lo, lam_hi) = lams.split_at_mut(l + 1);
-                self.prop.accumulate_grad(l, &states[l], &lam_hi[0], &mut grads[l]);
-                self.prop.adjoint_step_into(l, 1.0, &states[l], &lam_hi[0], &mut lam_lo[l]);
-            }
-        }
-        // backend adjoint solve + mid-range gradients on the cached cores
-        let bwd_iters = if probe {
-            self.controller.probe_iters(&self.rc.mgrit).1
-        } else {
-            self.rc.mgrit.bwd_iters
-        };
-        let mid = super::range::RangeProp::new(self.prop.as_ref(), bo, n_mid);
-        let bstats = self.ctx.adjoint_mid(&mid, &self.rc.mgrit, bo, bwd_iters, probe);
-        self.ctx.gradients_mid(&mid, bo);
-        {
-            // open buffers
-            let states = &self.ctx.fwd.ws.states;
-            let StepWorkspace { lams, grads, .. } = &mut self.ctx.ws;
-            for l in (0..bo).rev() {
-                let (lam_lo, lam_hi) = lams.split_at_mut(l + 1);
-                self.prop.accumulate_grad(l, &states[l], &lam_hi[0], &mut grads[l]);
-                self.prop.adjoint_step_into(l, 1.0, &states[l], &lam_hi[0], &mut lam_lo[l]);
-            }
-        }
-
-        // --- embedding gradients ----------------------------------------------
-        {
-            let StepWorkspace { lams, g_emb, g_pos, .. } = &mut self.ctx.ws;
-            let lam0 = lams[0].data();
-            if stacked {
-                let half = lam0.len() / 2;
-                heads::embed_bwd(
-                    &batch.tokens,
-                    &lam0[..half],
-                    m.batch,
-                    m.seq,
-                    m.d_model,
-                    g_emb,
-                    g_pos,
-                );
-                heads::embed_bwd(
-                    batch.tgt_in.as_ref().unwrap(),
-                    &lam0[half..],
-                    m.batch,
-                    m.seq,
-                    m.d_model,
-                    g_emb,
-                    g_pos,
-                );
-            } else {
-                heads::embed_bwd(&batch.tokens, lam0, m.batch, m.seq, m.d_model, g_emb, g_pos);
-            }
-        }
-        // hand the batch buffer back for the next micro-batch (the head
-        // gradients were already accumulated by loss_into)
-        self.batch_buf = batch;
-        (out.loss, acc, fstats.conv_factor(), bstats.conv_factor())
     }
 
     /// One full training step (dp micro-batches + probe + update), wrapped
@@ -850,41 +1031,97 @@ impl Session {
             self.step += 1;
             let probe = self.controller.should_probe();
             let dp = self.rc.dp_degree.max(1);
-            self.ctx.ws.zero_grads();
+            let probe_iters = self.controller.probe_iters(&self.rc.mgrit);
+            let lanes = self.dp_workers.min(dp).max(1);
+            let pool = if lanes > 1 { Some(self.dp_pool_handle(lanes)) } else { None };
 
+            {
+                // pre-sample every replica's batch on the coordinator
+                // thread in ascending replica order — the exact train_rng
+                // consumption of the serialized micro-batch loop, so the
+                // record stream stays bitwise for any lane count
+                let Session { rc, objective, train_rng, replicas, .. } = self;
+                for rep in replicas.iter_mut() {
+                    objective.sample_into(train_rng, &rc.model, &mut rep.batch);
+                    rep.ctx.ws.zero_grads();
+                }
+            }
+
+            {
+                let Session { rc, prop, objective, params, replicas, warm_start, .. } = self;
+                let env = MicroEnv {
+                    rc,
+                    prop: prop.as_ref(),
+                    objective: objective.as_ref(),
+                    params,
+                    iters: (rc.mgrit.fwd_iters, rc.mgrit.bwd_iters),
+                    probe_iters,
+                    warm_start: *warm_start,
+                };
+                // replica lanes mutate disjoint `Replica`s concurrently:
+                // lane `l` exclusively owns the contiguous slab_range of
+                // replica indices, so the raw-pointer shares never alias
+                struct Lanes(*mut Replica);
+                unsafe impl Sync for Lanes {}
+                let share = Lanes(replicas.as_mut_ptr());
+                let run_lane = |lane: usize| {
+                    let (lo, hi) = slab_range(dp, lanes, lane);
+                    for r in lo..hi {
+                        let rep: &mut Replica = unsafe { &mut *share.0.add(r) };
+                        let Replica { ctx, batch, ep, loss, acc, rho_f, rho_b } = rep;
+                        let (l, a, rf, rb) = run_micro_batch(&env, ctx, batch, probe && r == 0);
+                        *loss = l;
+                        *acc = a;
+                        *rho_f = rf;
+                        *rho_b = rb;
+                        if r > 0 {
+                            // ship this replica's flat gradient payload to
+                            // the coordinator (recycled scratch buffer —
+                            // the previous step's fold mailed it back)
+                            let ep = ep.as_mut().expect("dp > 1 replicas carry an endpoint");
+                            ep.send_scratch(0, DP_GRAD_TAG, |buf| ctx.ws.write_grads_flat(buf));
+                        }
+                    }
+                };
+                match &pool {
+                    Some(p) => p.run_sweep(
+                        lanes,
+                        &|lane: usize, _ep: &mut Endpoint, _ws: &mut Workspace| run_lane(lane),
+                    ),
+                    None => run_lane(0),
+                }
+                if dp > 1 {
+                    // fold in strictly ascending replica order — the same
+                    // left-associated sum `(((g0 + g1) + g2) + …)` the
+                    // serialized stash/fold scratch pinned, so sharded dp
+                    // stays bitwise against serial dp
+                    let (r0, _) = replicas.split_first_mut().unwrap();
+                    let Replica { ctx: ctx0, ep: ep0, .. } = r0;
+                    let ep0 = ep0.as_mut().expect("replica 0 carries an endpoint");
+                    for r in 1..dp {
+                        ep0.recv_scratch(r, DP_GRAD_TAG, |flat| ctx0.ws.fold_grads_flat(flat));
+                    }
+                    ctx0.ws.scale_grads(1.0 / dp as f32);
+                }
+            }
+
+            // loss/acc averages in the same ascending replica order as the
+            // serialized loop (f32 sums are order-sensitive)
             let mut loss_sum = 0.0f32;
             let mut acc_sum = 0.0f32;
-            let (mut rho_f, mut rho_b) = (None, None);
-            for rep in 0..dp {
-                // gradient allreduce with replica semantics: each micro-batch
-                // sums into fresh zeroed accumulators (the running sum is
-                // parked in the dp scratch set meanwhile) and the per-replica
-                // totals are then added — bit-identical to v1 / distributed
-                // summation, unlike accumulating element updates in place
-                if rep > 0 {
-                    self.ctx.ws.stash_grads();
-                }
-                let (l, a, rf, rb) = self.micro_batch(probe && rep == 0);
-                if rep > 0 {
-                    self.ctx.ws.fold_stashed_grads();
-                }
-                loss_sum += l;
-                acc_sum += a;
-                if rep == 0 {
-                    rho_f = rf;
-                    rho_b = rb;
-                }
+            for rep in &self.replicas {
+                loss_sum += rep.loss;
+                acc_sum += rep.acc;
             }
-            if dp > 1 {
-                self.ctx.ws.scale_grads(1.0 / dp as f32);
-            }
+            let (rho_f, rho_b) = (self.replicas[0].rho_f, self.replicas[0].rho_b);
             let mut loss = loss_sum / dp as f32;
             let acc = acc_sum / dp as f32;
 
             // deterministic chaos hooks — one relaxed atomic load each when
             // disarmed (rust/src/fault), inside the audited 0-alloc path
             if crate::faultpoint!("train.nan_grad") {
-                if let Some(x) = self.ctx.ws.grads.first_mut().and_then(|g| g.iter_mut().next()) {
+                let ws = &mut self.replicas[0].ctx.ws;
+                if let Some(x) = ws.grads.first_mut().and_then(|g| g.iter_mut().next()) {
                     *x = f32::NAN;
                 }
             }
@@ -899,7 +1136,7 @@ impl Session {
             // returned pre-clip norm doubles as the policy-1 gradient
             // health check: NaN/Inf anywhere in the accumulators
             // propagates into it.
-            let gnorm = self.ctx.ws.clip_global(self.rc.train.grad_clip);
+            let gnorm = self.replicas[0].ctx.ws.clip_global(self.rc.train.grad_clip);
 
             // --- policy 1: non-finite guard ------------------------------
             if !loss.is_finite() || !gnorm.is_finite() {
@@ -932,28 +1169,32 @@ impl Session {
                 self.switched_at = Some(self.step);
             }
             if self.controller.is_serial() {
-                // the switch is sticky: the warm iterate is dead memory (and
-                // would poison a later non-serial run restored from this
-                // session) and the cached hierarchies will never be solved on
-                // again — drop both at the switch, not lazily
-                self.ctx.clear_warm();
-                self.ctx.invalidate();
+                // the switch is sticky: the warm iterates are dead memory
+                // (and would poison a later non-serial run restored from
+                // this session) and the cached hierarchies will never be
+                // solved on again — drop both at the switch, not lazily,
+                // in every replica (keeping the warm flags in lockstep)
+                for rep in &mut self.replicas {
+                    rep.ctx.clear_warm();
+                    rep.ctx.invalidate();
+                }
             }
 
             let lr = self.sched.at(self.step);
             self.opt.begin_step();
             {
-                // the only write-lock acquisition on the training path
+                // the only write-lock acquisition on the training path;
+                // the optimizer reads replica 0's folded accumulators
                 let mut layers = self.params.layers.write().unwrap();
-                for (i, g) in self.ctx.ws.grads.iter().enumerate() {
+                for (i, g) in self.replicas[0].ctx.ws.grads.iter().enumerate() {
                     self.opt.update(i, lr, &mut layers[i], g);
                 }
             }
             let nl = self.rc.model.total_layers();
-            self.opt.update(nl, lr, &mut self.params.w_emb, &self.ctx.ws.g_emb);
-            self.opt.update(nl + 1, lr, &mut self.params.w_pos, &self.ctx.ws.g_pos);
-            self.opt.update(nl + 2, lr, &mut self.params.w_out, &self.ctx.ws.g_out);
-            self.opt.update(nl + 3, lr, &mut self.params.w_cls, &self.ctx.ws.g_cls);
+            self.opt.update(nl, lr, &mut self.params.w_emb, &self.replicas[0].ctx.ws.g_emb);
+            self.opt.update(nl + 1, lr, &mut self.params.w_pos, &self.replicas[0].ctx.ws.g_pos);
+            self.opt.update(nl + 2, lr, &mut self.params.w_out, &self.replicas[0].ctx.ws.g_out);
+            self.opt.update(nl + 3, lr, &mut self.params.w_cls, &self.replicas[0].ctx.ws.g_cls);
 
             return StepRecord {
                 step: self.step,
@@ -962,7 +1203,7 @@ impl Session {
                 lr,
                 serial: self.rc.mgrit.is_serial()
                     || self.controller.is_serial()
-                    || self.ctx.backend().forces_exact(),
+                    || self.ctx().backend().forces_exact(),
                 rho_fwd: rho_f,
                 rho_bwd: rho_b,
             };
@@ -999,8 +1240,10 @@ impl Session {
                 // budget
                 self.controller.force_serial(&mut self.rc.mgrit);
                 self.switched_at = Some(step);
-                self.ctx.clear_warm();
-                self.ctx.invalidate();
+                for rep in &mut self.replicas {
+                    rep.ctx.clear_warm();
+                    rep.ctx.invalidate();
+                }
                 self.consec_anomalies = 0;
                 crate::fault::record(
                     "train.step_anomaly",
@@ -1026,7 +1269,7 @@ impl Session {
             lr: self.sched.at(step),
             serial: self.rc.mgrit.is_serial()
                 || self.controller.is_serial()
-                || self.ctx.backend().forces_exact(),
+                || self.ctx().backend().forces_exact(),
             rho_fwd: None,
             rho_bwd: None,
         })
@@ -1083,6 +1326,9 @@ impl Session {
         {
             bail!("rollback checkpoint has a different model geometry");
         }
+        if c.rc.dp_degree.max(1) != self.replicas.len() {
+            bail!("rollback checkpoint has a different dp degree");
+        }
         self.rc = c.rc.clone();
         *self.params.layers.write().unwrap() = c.layers;
         self.params.w_emb = c.w_emb;
@@ -1108,16 +1354,23 @@ impl Session {
         );
         // the cached hierarchies may have been built for controller-grown
         // iteration counts — drop them together with the now-stale warm
-        // iterate, then re-seed the warm iterate from the snapshot (the
-        // exact resume recipe, so the replay is bitwise identical)
-        self.ctx.clear_warm();
-        self.ctx.invalidate();
+        // iterates, then re-seed every replica's warm iterate from the
+        // snapshot's replica-major warm section (the exact resume recipe,
+        // so the replay is bitwise identical)
+        for rep in &mut self.replicas {
+            rep.ctx.clear_warm();
+            rep.ctx.invalidate();
+        }
         if let Some(warm) = c.warm {
             let (bo, n_mid) = mid_range(&self.rc.model);
-            for (dst, src) in self.ctx.fwd.ws.states[bo..=bo + n_mid].iter_mut().zip(&warm) {
-                dst.copy_from(src);
+            let per = n_mid + 1;
+            for (r, rep) in self.replicas.iter_mut().enumerate() {
+                let src = &warm[r * per..(r + 1) * per];
+                for (dst, s) in rep.ctx.fwd.ws.states[bo..=bo + n_mid].iter_mut().zip(src) {
+                    dst.copy_from(s);
+                }
+                rep.ctx.fwd.mark_warm();
             }
-            self.ctx.fwd.mark_warm();
         }
         Ok(())
     }
@@ -1134,16 +1387,16 @@ impl Session {
         let mut rng = Rng::new(self.val_rng_seed);
         let mut acc = EvalAccum::default();
         for _ in 0..n_batches {
-            let mut batch = std::mem::take(&mut self.batch_buf);
+            let mut batch = std::mem::take(&mut self.replicas[0].batch);
             self.objective.sample_into(&mut rng, &m, &mut batch);
             self.embed_into(&batch.tokens, batch.tgt_in.as_deref());
             {
-                let ForwardWorkspace { states, pp, .. } = &mut self.ctx.fwd.ws;
+                let ForwardWorkspace { states, pp, .. } = &mut self.replicas[0].ctx.fwd.ws;
                 self.prop.step_to_into(0, n_layers, 1.0, &mut states[0], pp);
             }
-            let x_final = self.ctx.fwd.ws.staged_head_view(0, stacked);
+            let x_final = self.replicas[0].ctx.fwd.ws.staged_head_view(0, stacked);
             self.objective.eval_batch(x_final, &self.params, &batch, &m, &mut acc);
-            self.batch_buf = batch;
+            self.replicas[0].batch = batch;
         }
         self.objective.metric(&acc)
     }

@@ -52,9 +52,13 @@ const USAGE: &str = "layertime <train|generate|predict|serve|bench-serve|compare
   mgrit:      --cf N --levels N --fwd-iters {N|serial} --bwd-iters {N|serial}
   training:   --steps N --lr F --no-adaptive --artifacts DIR (use AOT/PJRT Φ)
   backend:    --workers N (N>1 selects the ThreadedMgrit backend)
+              --dp-workers D (concurrent replica lanes, clamped to 1..=dp;
+              each lane drives workers/D relaxation workers; default:
+              simulator auto-split of --workers across dp x lp)
   topology:   --lp N --dp N --device {v100|a100}
   checkpoint: --save PATH (full session), --resume PATH (continue bitwise;
-              only --steps/--workers/--out/--report/--save apply on top),
+              only --steps/--workers/--dp-workers/--out/--report/--save
+              apply on top),
               --save-every N --keep K (periodic autosave next to --save PATH,
               oldest pruned past K), --checkpoint PATH (weights-only, legacy)
   inference:  generate|predict --ckpt PATH [--workers N] [--fwd-iters {N|serial}]
@@ -97,12 +101,21 @@ fn run_config(args: &Args) -> Result<layertime::config::RunConfig> {
 fn cmd_train(args: &Args) -> Result<()> {
     let engine = engine_from(args)?;
     let workers = args.get_usize("workers", 1);
+    let dp_workers: Option<usize> = match args.get("dp-workers") {
+        Some(v) => Some(
+            v.parse().map_err(|_| anyhow!("--dp-workers expects a replica-lane count"))?,
+        ),
+        None => None,
+    };
     let mut run = match args.get("resume") {
         Some(path) => {
             // the checkpoint carries config + parameters + all run state;
             // only execution choices and the run length apply on top
-            let mut run =
-                Session::builder().resume(path).engine(engine).workers(workers).build()?;
+            let mut b = Session::builder().resume(path).engine(engine).workers(workers);
+            if let Some(d) = dp_workers {
+                b = b.dp_workers(d);
+            }
+            let mut run = b.build()?;
             if args.get("steps").is_some() {
                 run.set_total_steps(args.get_usize("steps", run.rc.train.steps));
             }
@@ -141,7 +154,12 @@ fn cmd_train(args: &Args) -> Result<()> {
                 rc.train.steps,
                 workers
             );
-            Session::builder().config(rc).task(task).engine(engine).workers(workers).build()?
+            let mut b =
+                Session::builder().config(rc).task(task).engine(engine).workers(workers);
+            if let Some(d) = dp_workers {
+                b = b.dp_workers(d);
+            }
+            b.build()?
         }
     };
     println!("backend: {}, objective: {}", run.backend_name(), run.objective_name());

@@ -236,7 +236,14 @@ impl Endpoint {
     }
 
     /// Sum-allreduce across all ranks (flat binary-tree reduce + broadcast).
-    /// Deterministic reduction order regardless of arrival order.
+    /// Deterministic reduction order regardless of arrival order — but the
+    /// *tree* order `(x0+x1)+(x2+x3)` differs from the left-associated
+    /// rank-ascending chain the dp gradient fold pins, and every rank
+    /// allocates fresh `Vec`s per call.
+    #[deprecated(
+        note = "allocates per call and reduces in tree order; hot loops use \
+                allreduce_sum_into (scratch-recycling, rank-ascending chain)"
+    )]
     pub fn allreduce_sum(&mut self, tag: u64, mut data: Vec<f32>) -> Vec<f32> {
         let n = self.n_ranks;
         // reduce to rank 0 over a binary tree
@@ -272,6 +279,56 @@ impl Endpoint {
             gap /= 2;
         }
         data
+    }
+
+    /// In-place sum-allreduce over the recycled-scratch transport: after
+    /// the call every rank's `data` holds the strictly **left-associated,
+    /// rank-ascending** sum `(((x_0 + x_1) + x_2) + …) + x_{n-1}` — the
+    /// exact association the dp gradient stash/fold scratch pins, so a
+    /// fabric reduction of replica gradients is bitwise identical to the
+    /// serial replica loop.
+    ///
+    /// Topology: an ascending chain. Rank `r > 0` first receives the
+    /// running sum of ranks `0..r` from rank `r-1` and folds it *under*
+    /// its own contribution (`running + own`, running sum on the left);
+    /// every rank but the last forwards the new running sum to `r+1`; the
+    /// last rank holds the total and broadcasts it to all peers on
+    /// `tag + 1`. All payloads travel through [`Endpoint::send_scratch`] /
+    /// [`Endpoint::recv_scratch`], so steady state allocates nothing and
+    /// return-tag traffic stays out of the counters. Uses tags `tag` and
+    /// `tag + 1`; both must stay below [`RETURN_BIT`].
+    ///
+    /// Every rank of the fabric must call this concurrently from its own
+    /// thread (one endpoint per thread) — like MPI_Allreduce, it is a
+    /// collective, not a local operation.
+    pub fn allreduce_sum_into(&mut self, tag: u64, data: &mut [f32]) {
+        debug_assert_eq!(tag & RETURN_BIT, 0, "user tags must not set RETURN_BIT");
+        let n = self.n_ranks;
+        if n <= 1 {
+            return;
+        }
+        let r = self.rank;
+        if r > 0 {
+            // fold the 0..r running sum under our contribution: running
+            // sum stays on the left, preserving the serial fold order
+            self.recv_scratch(r - 1, tag, |run| {
+                assert_eq!(run.len(), data.len(), "allreduce payload length mismatch");
+                for (a, &b) in data.iter_mut().zip(run) {
+                    *a = b + *a;
+                }
+            });
+        }
+        if r < n - 1 {
+            self.send_scratch(r + 1, tag, |buf| buf.extend_from_slice(data));
+            self.recv_scratch(n - 1, tag + 1, |total| {
+                assert_eq!(total.len(), data.len(), "allreduce payload length mismatch");
+                data.copy_from_slice(total);
+            });
+        } else {
+            for peer in 0..n - 1 {
+                self.send_scratch(peer, tag + 1, |buf| buf.extend_from_slice(data));
+            }
+        }
     }
 }
 
@@ -368,6 +425,7 @@ mod tests {
     }
 
     #[test]
+    #[allow(deprecated)]
     fn allreduce_sums_across_threads() {
         for n in [1usize, 2, 3, 4, 7, 8] {
             let mut fabric = Fabric::new(n);
@@ -390,5 +448,99 @@ mod tests {
                 assert_eq!(r[1], n as f32);
             }
         }
+    }
+
+    #[test]
+    fn allreduce_into_sums_across_threads_over_repeated_rounds() {
+        for n in [1usize, 2, 3, 4, 7, 8] {
+            let mut fabric = Fabric::new(n);
+            let eps = fabric.take_all();
+            let results: Vec<Vec<Vec<f32>>> = thread::scope(|s| {
+                let handles: Vec<_> = eps
+                    .into_iter()
+                    .map(|mut ep| {
+                        s.spawn(move || {
+                            // several rounds through the same endpoint:
+                            // pins the loan-reclaim cycle across calls
+                            (0..3u32)
+                                .map(|round| {
+                                    let mut v =
+                                        vec![ep.rank as f32 + 1.0, round as f32];
+                                    ep.allreduce_sum_into(200, &mut v);
+                                    v
+                                })
+                                .collect()
+                        })
+                    })
+                    .collect();
+                handles.into_iter().map(|h| h.join().unwrap()).collect()
+            });
+            let want_sum: f32 = (1..=n).map(|r| r as f32).sum();
+            for per_rank in &results {
+                for (round, v) in per_rank.iter().enumerate() {
+                    assert_eq!(v[0], want_sum, "n={}", n);
+                    assert_eq!(v[1], (n * round) as f32);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn allreduce_into_is_bitwise_left_associated_in_rank_order() {
+        // contributions chosen so f32 addition order is observable:
+        // (((x0+x1)+x2)+x3) differs from the tree order (x0+x1)+(x2+x3)
+        let xs: Vec<f32> = vec![1.0e8, -1.0e8 + 1.0, 3.0e-8, 7.0e-8, 0.25, 1.0e8, -1.0e8, 0.125];
+        for n in [2usize, 3, 4, 7, 8] {
+            let serial = {
+                let mut acc = xs[0];
+                for &x in &xs[1..n] {
+                    acc += x;
+                }
+                acc
+            };
+            let mut fabric = Fabric::new(n);
+            let eps = fabric.take_all();
+            let results: Vec<f32> = thread::scope(|s| {
+                let handles: Vec<_> = eps
+                    .into_iter()
+                    .map(|mut ep| {
+                        let x = xs[ep.rank];
+                        s.spawn(move || {
+                            let mut v = vec![x];
+                            ep.allreduce_sum_into(300, &mut v);
+                            v[0]
+                        })
+                    })
+                    .collect();
+                handles.into_iter().map(|h| h.join().unwrap()).collect()
+            });
+            for r in &results {
+                assert_eq!(r.to_bits(), serial.to_bits(), "n={}", n);
+            }
+        }
+    }
+
+    #[test]
+    fn allreduce_into_recycles_buffers_and_counts_payloads_only() {
+        let n = 4usize;
+        let mut fabric = Fabric::new(n);
+        let counters = fabric.counters.clone();
+        let eps = fabric.take_all();
+        let rounds = 5u64;
+        thread::scope(|s| {
+            for mut ep in eps {
+                s.spawn(move || {
+                    for _ in 0..rounds {
+                        let mut v = vec![ep.rank as f32; 6];
+                        ep.allreduce_sum_into(400, &mut v);
+                    }
+                });
+            }
+        });
+        // per round: n-1 chain hops + n-1 broadcast sends, nothing for the
+        // recycled return traffic
+        let payload_msgs = rounds * 2 * (n as u64 - 1);
+        assert_eq!(counters.messages.load(Ordering::Relaxed), payload_msgs);
+        assert_eq!(counters.bytes.load(Ordering::Relaxed), payload_msgs * 6 * 4);
     }
 }

@@ -1,11 +1,13 @@
 //! Layer-×-data parallel runtime and performance model.
 //!
 //! * [`comm`] — channel-based message fabric between ranks (the GPU-aware
-//!   MPI substitute): typed sends, tree allreduce, byte/message counters,
-//!   and the recycled-scratch send path that keeps steady-state halo
-//!   exchange allocation-free.
-//! * [`topology`] — the lp×dp device grid and contiguous layer-slab
-//!   assignment (paper Fig. 2's distribution of F_k across devices).
+//!   MPI substitute): typed sends, chain/tree allreduce, byte/message
+//!   counters, and the recycled-scratch send path that keeps steady-state
+//!   halo exchange allocation-free.
+//! * [`topology`] — the lp×dp device grid, contiguous layer-slab
+//!   assignment (paper Fig. 2's distribution of F_k across devices), and
+//!   the `--workers` budget split across the two axes
+//!   ([`topology::worker_splits`] / [`topology::auto_split`]).
 //! * [`exec`] — real multi-worker execution of the F/C-relaxation phases
 //!   over OS threads with halo exchange, bitwise identical to the
 //!   single-threaded engine. Since the Session API v2 redesign this is the
@@ -69,6 +71,41 @@
 //! The pre-refactor staged executors (slab `to_vec` + stitch) are kept in
 //! [`exec`] as the independently-derived parity oracle and the
 //! `perf_hotpath` "staged" baseline.
+//!
+//! # DP×LP execution: rank layout, replica summation, worker split
+//!
+//! Since the real-DP pass, `--dp N` replicas actually run concurrently
+//! (paper §4.2 / Fig. 9's multiplicative composition) instead of as a
+//! serial micro-batch loop:
+//!
+//! **Rank layout.** The logical grid is [`Topology`]'s
+//! `rank = dp_idx * lp + lp_idx`. Physically, each replica is one
+//! [`crate::coordinator::SolveContext`] (own MGRIT slab hierarchy, own
+//! `StepWorkspace`, own relaxation backend/pool of `lp` workers) plus one
+//! [`comm::Endpoint`] on a dp-wide gradient fabric. Replica lanes are
+//! dispatched onto a dp scheduler [`WorkerPool`] via the same
+//! zero-allocation `run_sweep` generation-bump path the relaxation
+//! workers use; each lane runs `ceil(dp / lanes)`-ish replicas
+//! ([`topology::slab_range`] over replica indices).
+//!
+//! **Fixed replica-summation order.** f32 addition is not associative, so
+//! the gradient reduction pins a *strictly left-associated, replica-
+//! ascending* sum `(((g_0 + g_1) + g_2) + …)` — the same association the
+//! serial dp stash/fold scratch used. Lanes ship each replica's flat
+//! gradient payload to replica 0's endpoint (`send_scratch`, recycled
+//! buffers); the coordinator folds them in ascending replica order. The
+//! general collective [`comm::Endpoint::allreduce_sum_into`] pins the
+//! identical chain order for one-endpoint-per-thread callers. Result:
+//! sharded dp is **bitwise identical** to serial dp (`dp_parity.rs`).
+//!
+//! **`--dp-workers` split rules.** `--workers W` is the total thread
+//! budget. With `--dp-workers D` (clamped to `1..=dp`, `D | W` not
+//! required but `lp = max(W / D, 1)`), D replica lanes each drive an
+//! lp-worker relaxation pool. Without it, [`topology::auto_split`]
+//! scores every divisor split `D × (W/D)` with the [`Simulator`]'s
+//! convex dp-vs-lp tradeoff (replica waves × modeled batch time) and
+//! picks the cheapest. The split is execution-only: it never changes
+//! math, checkpoints, or `StepRecord` streams — only wall-clock.
 
 pub mod comm;
 pub mod exec;
@@ -80,4 +117,4 @@ pub use comm::{Fabric, FabricError};
 pub use exec::RelaxState;
 pub use pool::{WorkerPool, Workspace};
 pub use simulator::{DeviceModel, SimConfig, Simulator};
-pub use topology::{slab_partition, slab_range, Topology};
+pub use topology::{auto_split, slab_partition, slab_range, worker_splits, Topology};

@@ -42,6 +42,46 @@ impl Topology {
     }
 }
 
+/// All ways to split a `--workers` budget across the dp×lp grid: every
+/// divisor `D` of `workers` with `D <= dp` yields the candidate
+/// `Topology { lp: workers / D, dp: D }` (D concurrent replica lanes,
+/// each driving `workers / D` relaxation workers). Ascending in `D`, so
+/// the all-layer-parallel split comes first. `dp = 0` is treated as 1.
+pub fn worker_splits(workers: usize, dp: usize) -> Vec<Topology> {
+    let workers = workers.max(1);
+    let dp = dp.max(1);
+    (1..=workers.min(dp))
+        .filter(|d| workers % d == 0)
+        .map(|d| Topology { lp: workers / d, dp: d })
+        .collect()
+}
+
+/// Pick the worker split minimizing `cost(dp_workers, lp_workers)` over
+/// [`worker_splits`] — the auto-split heuristic behind `--workers` when no
+/// explicit `--dp-workers` is given. The session's cost closure consults
+/// [`crate::parallel::Simulator`]: replica waves × modeled batch time, the
+/// convex dp-vs-lp tradeoff of paper Fig. 9. Ties keep the earliest (most
+/// layer-parallel) candidate. The choice is an *execution* detail: any
+/// split produces bitwise-identical training, only wall-clock differs.
+pub fn auto_split(
+    workers: usize,
+    dp: usize,
+    mut cost: impl FnMut(usize, usize) -> f64,
+) -> Topology {
+    let mut best: Option<(Topology, f64)> = None;
+    for t in worker_splits(workers, dp) {
+        let c = cost(t.dp, t.lp);
+        let better = match best {
+            None => true,
+            Some((_, bc)) => c < bc,
+        };
+        if better {
+            best = Some((t, c));
+        }
+    }
+    best.map(|(t, _)| t).expect("worker_splits is never empty")
+}
+
 /// Contiguous partition of `n_items` over `parts` owners: the first
 /// `n_items % parts` owners get one extra. Returns (start, end) per owner.
 pub fn slab_partition(n_items: usize, parts: usize) -> Vec<(usize, usize)> {
@@ -96,6 +136,49 @@ mod tests {
                 (sizes.iter().min().unwrap(), sizes.iter().max().unwrap());
             assert!(max - min <= 1);
         });
+    }
+
+    #[test]
+    fn worker_splits_enumerate_divisor_grids() {
+        // 8 workers, dp=4: D ∈ {1, 2, 4}
+        assert_eq!(
+            worker_splits(8, 4),
+            vec![
+                Topology { lp: 8, dp: 1 },
+                Topology { lp: 4, dp: 2 },
+                Topology { lp: 2, dp: 4 },
+            ]
+        );
+        // dp caps the replica-lane count even with more divisors available
+        assert_eq!(
+            worker_splits(8, 2),
+            vec![Topology { lp: 8, dp: 1 }, Topology { lp: 4, dp: 2 }]
+        );
+        // degenerate budgets still yield the serial grid
+        assert_eq!(worker_splits(1, 4), vec![Topology { lp: 1, dp: 1 }]);
+        assert_eq!(worker_splits(0, 0), vec![Topology { lp: 1, dp: 1 }]);
+        // prime budgets: only the two extremes
+        assert_eq!(
+            worker_splits(7, 7),
+            vec![Topology { lp: 7, dp: 1 }, Topology { lp: 1, dp: 7 }]
+        );
+        // every candidate spends the whole budget
+        for t in worker_splits(12, 6) {
+            assert_eq!(t.lp * t.dp, 12);
+        }
+    }
+
+    #[test]
+    fn auto_split_minimizes_cost_and_breaks_ties_toward_lp() {
+        // cost favoring maximal dp lanes
+        let t = auto_split(8, 4, |d, _l| -(d as f64));
+        assert_eq!(t, Topology { lp: 2, dp: 4 });
+        // cost favoring maximal lp
+        let t = auto_split(8, 4, |_d, l| -(l as f64));
+        assert_eq!(t, Topology { lp: 8, dp: 1 });
+        // flat cost: tie keeps the first (most layer-parallel) candidate
+        let t = auto_split(8, 4, |_d, _l| 1.0);
+        assert_eq!(t, Topology { lp: 8, dp: 1 });
     }
 
     #[test]

@@ -25,7 +25,11 @@
 //!    refills the session's long-lived `TrainBatch`, `Objective::loss_into`
 //!    writes into the workspace's cotangent buffer and accumulates head
 //!    gradients directly, and `StepWorkspace::clip_global` walks the
-//!    accumulators without a ref-list;
+//!    accumulators without a ref-list — and the **sharded data-parallel**
+//!    step holds the same pin: concurrent replica lanes on the dp
+//!    scheduler pool, per-replica contexts and batches refilled in place,
+//!    flat gradient payloads on the fabric's recycled send scratch, and
+//!    the ascending fold into replica 0's accumulators;
 //! 5. the steady-state **batched decode loop** of an `InferSession`
 //!    allocates exactly zero times, for both the greedy and the top-k
 //!    sampling paths and in **both decode modes** — the incremental
@@ -241,6 +245,55 @@ fn audit_train_step() {
     }
 }
 
+/// The sharded-dp pin: a steady-state data-parallel `train_step` —
+/// `dp_workers` concurrent replica lanes dispatched on the dp scheduler
+/// pool, each lane solving its replica's micro-batch and shipping the flat
+/// gradient payload to replica 0 over the fabric, folded in ascending
+/// replica order — allocates exactly zero times. Warmup covers the lane
+/// pool spawn, the fabric's send/recv scratch sizing, and every replica's
+/// core + warm-iterate construction.
+fn audit_train_step_dp(workers: usize, dp_workers: usize) {
+    let mut rc = presets::by_name("mc").expect("mc preset");
+    rc.model.vocab = 16;
+    rc.model.d_model = 16;
+    rc.model.n_heads = 2;
+    rc.model.d_ff = 32;
+    rc.model.seq = 8;
+    rc.model.batch = 2;
+    rc.model.n_classes = 4;
+    rc.model.n_enc_layers = 8;
+    rc.model.buffer_open = 0;
+    rc.model.buffer_close = 0;
+    rc.mgrit = MgritConfig { cf: 2, levels: 2, fwd_iters: Some(1), bwd_iters: Some(1), fcf: true };
+    rc.train.probe_every = 0;
+    rc.train.adaptive = false;
+    rc.train.warmup = 0;
+    rc.dp_degree = 2;
+    let mut s = Session::builder()
+        .config(rc)
+        .task(Task::Tag)
+        .workers(workers)
+        .dp_workers(dp_workers)
+        .build()
+        .expect("session");
+
+    for _ in 0..4 {
+        s.train_step();
+    }
+
+    for step in 0..3 {
+        let before = ALLOCS.load(Ordering::SeqCst);
+        s.train_step();
+        let delta = ALLOCS.load(Ordering::SeqCst) - before;
+        assert_eq!(
+            delta, 0,
+            "sharded-dp train_step (workers={}, dp_workers={}) allocated {} times at steady \
+             state (step {})",
+            workers, dp_workers, delta, step
+        );
+    }
+}
+
 /// The decode pin: the steady-state batched autoregressive decode loop of
 /// an `InferSession` allocates exactly zero times, greedy and top-k both.
 /// `incremental = true` audits the KV-cached path (serial prefill + O(1)
@@ -361,6 +414,8 @@ fn steady_state_hot_path_is_allocation_free() {
     audit_solve_context(2);
     audit_solve_context(4);
     audit_train_step();
+    audit_train_step_dp(2, 2);
+    audit_train_step_dp(4, 2);
     audit_decode(true);
     audit_decode(false);
     audit_serve(true);

@@ -1,0 +1,191 @@
+//! Data-parallel parity: the acceptance property of the real-DP pass.
+//!
+//! `--dp N` replicas may execute on any worker split — one serial lane
+//! (`--dp-workers 1`, the old micro-batch loop order), several concurrent
+//! replica lanes, or the simulator auto-split — and every split must
+//! produce **bitwise-identical** training: the same `StepRecord` stream,
+//! the same final parameters, the same checkpoint bytes. The pinned
+//! replica-summation order (strictly left-associated, replica-ascending —
+//! see `parallel/mod.rs` §"DP×LP execution") is what makes this hold for
+//! f32 gradients.
+//!
+//! The chaos case extends policy 3 to replica groups: a pooled-sweep
+//! panic inside ONE replica's layer-parallel pool is retried on a rebuilt
+//! pool without perturbing the other replicas' lanes, and the whole run
+//! stays bitwise clean.
+//!
+//! The fault registry is process-global, so every test here serializes on
+//! one lock and resets the registry on entry and exit (same discipline as
+//! `chaos.rs`).
+
+use std::sync::Mutex;
+
+use layertime::config::{presets, MgritConfig, RunConfig};
+use layertime::coordinator::{Session, StepRecord, Task};
+use layertime::fault;
+use layertime::parallel::worker_splits;
+
+static DP_LOCK: Mutex<()> = Mutex::new(());
+
+fn guard() -> std::sync::MutexGuard<'static, ()> {
+    let g = DP_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    fault::reset();
+    g
+}
+
+/// The `mc` preset at parity-test scale with `dp` data-parallel replicas.
+fn dp_rc(seed: u64, dp: usize, fwd: Option<usize>, bwd: Option<usize>) -> RunConfig {
+    let mut rc = presets::by_name("mc").unwrap();
+    rc.model.vocab = 16;
+    rc.model.d_model = 16;
+    rc.model.n_heads = 2;
+    rc.model.d_ff = 32;
+    rc.model.seq = 8;
+    rc.model.batch = 2;
+    rc.model.n_classes = 4;
+    rc.model.n_enc_layers = 8;
+    rc.model.buffer_open = 0;
+    rc.model.buffer_close = 0;
+    rc.mgrit = MgritConfig { cf: 2, levels: 2, fwd_iters: fwd, bwd_iters: bwd, fcf: true };
+    rc.train.steps = 3;
+    rc.train.eval_every = 100;
+    rc.train.probe_every = 0;
+    rc.train.adaptive = false;
+    rc.train.warmup = 0;
+    rc.train.seed = seed;
+    rc.dp_degree = dp;
+    rc
+}
+
+type RecBits = (usize, u32, u32, u32, bool, Option<u64>, Option<u64>);
+
+fn bits(r: &StepRecord) -> RecBits {
+    (
+        r.step,
+        r.loss.to_bits(),
+        r.acc.to_bits(),
+        r.lr.to_bits(),
+        r.serial,
+        r.rho_fwd.map(f64::to_bits),
+        r.rho_bwd.map(f64::to_bits),
+    )
+}
+
+fn params_bits(s: &Session) -> Vec<Vec<u32>> {
+    let mut out: Vec<Vec<u32>> = s
+        .params
+        .layers
+        .read()
+        .unwrap()
+        .iter()
+        .map(|l| l.iter().map(|x| x.to_bits()).collect())
+        .collect();
+    for g in [&s.params.w_emb, &s.params.w_pos, &s.params.w_out, &s.params.w_cls] {
+        out.push(g.iter().map(|x| x.to_bits()).collect());
+    }
+    out
+}
+
+/// Train `steps` steps on a given worker split. `dp_workers = None` takes
+/// the simulator auto-split path.
+fn run_split(
+    rc: &RunConfig,
+    workers: usize,
+    dp_workers: Option<usize>,
+    steps: usize,
+) -> (Session, Vec<RecBits>) {
+    let mut b = Session::builder().config(rc.clone()).task(Task::Tag).workers(workers);
+    if let Some(d) = dp_workers {
+        b = b.dp_workers(d);
+    }
+    let mut s = b.build().unwrap();
+    let recs = (0..steps).map(|_| bits(&s.train_step())).collect();
+    (s, recs)
+}
+
+#[test]
+fn sharded_dp_matches_serial_dp_bitwise() {
+    let _g = guard();
+    for dp in [1usize, 2, 4] {
+        let rc = dp_rc(11 + dp as u64, dp, Some(2), Some(1));
+        // serial-dp reference: one replica lane folding in ascending order
+        let (base_s, base) = run_split(&rc, 2, Some(1), 3);
+        let base_params = params_bits(&base_s);
+        for workers in [2usize, 4, 8] {
+            // every divisor split the CLI can reach, plus the auto-split
+            let mut lanes: Vec<Option<usize>> =
+                worker_splits(workers, dp).iter().map(|t| Some(t.dp)).collect();
+            lanes.push(None);
+            for d in lanes {
+                let (s, recs) = run_split(&rc, workers, d, 3);
+                let tag = format!("dp={} workers={} dp_workers={:?}", dp, workers, d);
+                assert_eq!(base, recs, "{}: StepRecord stream must be bitwise identical", tag);
+                assert_eq!(
+                    base_params,
+                    params_bits(&s),
+                    "{}: final parameters must be bitwise identical",
+                    tag
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn exact_mode_dp_is_split_invariant_too() {
+    let _g = guard();
+    // serial propagation (no MGRIT iterations, no warm iterate): the fold
+    // order is the only thing that could diverge — pin it there as well
+    let rc = dp_rc(5, 2, None, None);
+    let (a_s, a) = run_split(&rc, 2, Some(1), 3);
+    let (b_s, b) = run_split(&rc, 2, Some(2), 3);
+    assert_eq!(a, b);
+    assert_eq!(params_bits(&a_s), params_bits(&b_s));
+}
+
+#[test]
+fn dp_checkpoint_bytes_are_split_invariant() {
+    let _g = guard();
+    let dir = std::env::temp_dir().join(format!("lt_dp_parity_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    let rc = dp_rc(23, 2, Some(2), Some(1));
+    let (mut serial, _) = run_split(&rc, 4, Some(1), 3);
+    let (mut sharded, _) = run_split(&rc, 4, Some(2), 3);
+    let p1 = dir.join("serial.ltcp");
+    let p2 = dir.join("sharded.ltcp");
+    serial.save(p1.to_str().unwrap()).unwrap();
+    sharded.save(p2.to_str().unwrap()).unwrap();
+    let b1 = std::fs::read(&p1).unwrap();
+    let b2 = std::fs::read(&p2).unwrap();
+    assert_eq!(
+        b1, b2,
+        "checkpoints (params, moments, RNG, replica-major warm section) must be byte-identical \
+         across worker splits"
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn replica_group_sweep_panic_recovers_bitwise() {
+    let _g = guard();
+    // workers=4, dp=2, dp-workers=2: two concurrent replica lanes, each
+    // driving a 2-worker relaxation pool. The injected panic lands in ONE
+    // replica's pooled FCF sweep (whichever lane reaches the process-global
+    // fault counter third); policy 3 retries that replica's sweep on a
+    // rebuilt pool while the other lane is untouched.
+    let rc = dp_rc(31, 2, Some(1), Some(1));
+    let (clean_s, clean) = run_split(&rc, 4, Some(2), 4);
+
+    fault::arm("pool.sweep_panic@step=3").unwrap();
+    let (hurt_s, hurt) = run_split(&rc, 4, Some(2), 4);
+
+    assert_eq!(fault::fired("pool.sweep_panic"), 1);
+    assert!(
+        fault::events().iter().any(|e| e.point == "pool.sweep" && e.action == "sweep_retry"),
+        "the recovery must surface as a typed sweep_retry event"
+    );
+    assert_eq!(clean, hurt, "the retried replica sweep must be bitwise clean");
+    assert_eq!(params_bits(&clean_s), params_bits(&hurt_s));
+    fault::reset();
+}
